@@ -1,0 +1,168 @@
+//! End-to-end system driver (the EXPERIMENTS.md validation run): start the
+//! coordinator as a real TCP service, drive it with concurrent clients
+//! over the wire — batched inserts, top-k queries — and report throughput,
+//! latency percentiles, batching efficiency, and backend (XLA artifacts
+//! when present and matching, else native).
+//!
+//! ```bash
+//! make artifacts   # optional: enables the XLA sketching backend
+//! cargo run --release --example e2e_service [-- --corpus 2000 --queries 200 --clients 8]
+//! ```
+
+use cabin::coordinator::client::Client;
+use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use cabin::data::synth::SynthSpec;
+use cabin::util::cli::Args;
+use cabin::util::timer::{LatencyStats, Stopwatch};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    let corpus_n = args.usize_or("corpus", 2000);
+    let queries_n = args.usize_or("queries", 200);
+    let clients = args.usize_or("clients", 8);
+    let k = args.usize_or("k", 10);
+
+    // Corpus matches the AOT artifact configuration (n=4096, c=64,
+    // d=1024, seed=42) so the XLA backend engages when artifacts exist.
+    let mut spec = SynthSpec::small_demo();
+    spec.dim = 4096;
+    spec.num_categories = 64;
+    spec.num_points = corpus_n;
+    let ds = spec.generate(5);
+    let mut qspec = spec.clone();
+    qspec.num_points = queries_n;
+    let queries = qspec.generate(6);
+
+    let config = CoordinatorConfig {
+        input_dim: 4096,
+        num_categories: 64,
+        sketch_dim: 1024,
+        seed: 42,
+        num_shards: 4,
+        batcher: BatcherConfig {
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 4096,
+        },
+        use_xla: !args.flag("no-xla"),
+        heatmap_limit: 4096,
+    };
+    let coordinator = Arc::new(Coordinator::new(config));
+    let server = Arc::clone(&coordinator);
+    let (addr_tx, addr_rx) = std::sync::mpsc::sync_channel(1);
+    let server_thread = std::thread::spawn(move || {
+        server
+            .serve("127.0.0.1:0", |addr| {
+                let _ = addr_tx.send(addr);
+            })
+            .unwrap();
+    });
+    let addr = addr_rx.recv().expect("server bound");
+    println!("[e2e] coordinator listening on {addr}");
+
+    // ---- phase 1: concurrent ingest over TCP ----
+    // ids are assigned by the coordinator in *arrival* order (interleaved
+    // across clients), so keep the dataset-index → id mapping per insert.
+    let sw = Stopwatch::start();
+    let chunk = ds.len().div_ceil(clients);
+    let insert_lat = std::sync::Mutex::new(LatencyStats::new());
+    let id_pairs: Vec<(usize, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = ds
+            .points
+            .chunks(chunk)
+            .enumerate()
+            .map(|(ci, part)| {
+                let insert_lat = &insert_lat;
+                s.spawn(move || {
+                    let mut c = Client::connect(&addr.to_string()).unwrap();
+                    let mut out = Vec::with_capacity(part.len());
+                    for (off, p) in part.iter().enumerate() {
+                        let t = Stopwatch::start();
+                        let id = c.insert(p.clone()).unwrap();
+                        insert_lat.lock().unwrap().record(t.elapsed_secs());
+                        out.push((ci * chunk + off, id));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let mut id_of = vec![usize::MAX; ds.len()];
+    for (idx, id) in id_pairs {
+        id_of[idx] = id;
+    }
+    let ingest_secs = sw.elapsed_secs();
+    let ins = insert_lat.lock().unwrap().summary();
+    println!(
+        "[e2e] ingest: {} vectors, {} clients, {:.3}s → {:.0} inserts/s  (p50 {:.2} ms, p99 {:.2} ms)",
+        ds.len(),
+        clients,
+        ingest_secs,
+        ds.len() as f64 / ingest_secs,
+        ins.p50 * 1e3,
+        ins.p99 * 1e3
+    );
+    println!(
+        "[e2e] batching: mean flushed batch = {:.1}",
+        coordinator.metrics.mean_batch_size()
+    );
+
+    // ---- phase 2: concurrent queries + recall vs brute force ----
+    let sw = Stopwatch::start();
+    let qchunk = queries.len().div_ceil(clients);
+    let results: Vec<(usize, Vec<usize>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = queries
+            .points
+            .chunks(qchunk)
+            .enumerate()
+            .map(|(ci, part)| {
+                s.spawn(move || {
+                    let mut c = Client::connect(&addr.to_string()).unwrap();
+                    let mut out = Vec::new();
+                    for (qi, p) in part.iter().enumerate() {
+                        let hits = c.query(p.clone(), k).unwrap();
+                        out.push((ci * qchunk + qi, hits.iter().map(|h| h.id).collect()));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let query_secs = sw.elapsed_secs();
+    println!(
+        "[e2e] queries: {} in {:.3}s → {:.0} queries/s ({:.2} ms mean)",
+        queries.len(),
+        query_secs,
+        queries.len() as f64 / query_secs,
+        1e3 * query_secs / queries.len() as f64
+    );
+
+    let mut hits_at_k = 0usize;
+    for (qi, ids) in &results {
+        let best = (0..ds.len())
+            .min_by_key(|&i| queries.points[*qi].hamming(&ds.points[i]))
+            .unwrap();
+        if ids.contains(&id_of[best]) {
+            hits_at_k += 1;
+        }
+    }
+    println!(
+        "[e2e] recall@{k} of true nearest neighbour: {}/{} = {:.1}%",
+        hits_at_k,
+        queries.len(),
+        100.0 * hits_at_k as f64 / queries.len() as f64
+    );
+
+    // ---- phase 3: service stats + shutdown ----
+    let mut admin = Client::connect(&addr.to_string()).unwrap();
+    for (name, v) in admin.stats().unwrap() {
+        println!("[e2e] stat {name} = {v:.2}");
+    }
+    admin.shutdown().unwrap();
+    server_thread.join().unwrap();
+    println!("[e2e] clean shutdown — OK");
+}

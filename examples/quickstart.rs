@@ -1,0 +1,75 @@
+//! Quickstart: sketch categorical vectors with Cabin, estimate Hamming
+//! distances with Cham, compare against ground truth.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cabin::data::synth::SynthSpec;
+use cabin::sketch::{cham, recommended_dim, CabinSketcher};
+
+fn main() {
+    // A synthetic categorical dataset: 10k dimensions, ≤64 categories,
+    // ~99% sparse — the regime the paper targets.
+    let mut spec = SynthSpec::small_demo();
+    spec.num_points = 200;
+    let ds = spec.generate(7);
+    println!(
+        "dataset: {} points, dim {}, sparsity {:.2}%, max density s = {}",
+        ds.len(),
+        ds.dim(),
+        100.0 * ds.sparsity(),
+        ds.max_density()
+    );
+
+    // Theorem 2's dimension for δ=0.1 — and the much smaller d that works
+    // in practice (the paper's own observation).
+    let d_theory = recommended_dim(ds.max_density(), 0.1);
+    let d = 512;
+    println!("sketch dim: theory suggests {d_theory}, using {d} (practical)");
+
+    let sketcher = CabinSketcher::new(ds.dim(), ds.num_categories(), d, 42);
+    let sketches = sketcher.sketch_dataset(&ds, 4);
+
+    // Memory: label-encoded sparse vs packed binary sketches.
+    let orig_bytes: usize = ds.points.iter().map(|p| p.nnz() * 6).sum();
+    let sketch_bytes: usize = sketches.iter().map(|s| s.memory_bytes()).sum();
+    println!(
+        "memory: {} original → {} sketched ({:.1}x smaller)",
+        cabin::util::human_bytes(orig_bytes),
+        cabin::util::human_bytes(sketch_bytes),
+        orig_bytes as f64 / sketch_bytes as f64
+    );
+
+    // Estimate a few pairwise distances and compare with the truth.
+    println!("\n pair     truth   Cham estimate   |error|");
+    let mut total_rel = 0.0;
+    let mut count = 0;
+    for i in 0..6 {
+        for j in (i + 1)..6 {
+            let truth = ds.points[i].hamming(&ds.points[j]) as f64;
+            let est = cham::estimate_hamming(&sketches[i], &sketches[j], sketcher.config());
+            println!(
+                " ({i},{j})   {truth:>6.0}   {est:>12.1}   {:>7.1}",
+                (est - truth).abs()
+            );
+            if truth > 0.0 {
+                total_rel += (est - truth).abs() / truth;
+                count += 1;
+            }
+        }
+    }
+    println!(
+        "\nmean relative error over {count} pairs: {:.1}%",
+        100.0 * total_rel / count as f64
+    );
+
+    // The sketches also estimate binary-level similarity measures.
+    let (a, b) = (&sketches[0], &sketches[1]);
+    println!(
+        "bonus estimators — inner product: {:.1}, cosine: {:.3}, jaccard: {:.3}",
+        cham::estimate_inner_product(a, b),
+        cham::estimate_cosine(a, b),
+        cham::estimate_jaccard(a, b)
+    );
+}

@@ -1,0 +1,90 @@
+//! Similarity search through the coordinator (in-process): build a corpus,
+//! insert it through the dynamic batcher, run top-k queries, and check the
+//! results against brute-force categorical Hamming distance.
+//!
+//! ```bash
+//! cargo run --release --example similarity_search
+//! ```
+
+use cabin::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+use cabin::data::synth::SynthSpec;
+use cabin::util::timer::Stopwatch;
+
+fn stats(coordinator: &Coordinator) -> Vec<(String, f64)> {
+    match coordinator.handle_request(Request::Stats) {
+        Response::Stats { fields } => fields,
+        _ => Vec::new(),
+    }
+}
+
+fn main() {
+    let mut spec = SynthSpec::small_demo();
+    spec.num_points = 500;
+    spec.dim = 4096;
+    spec.num_categories = 64;
+    let ds = spec.generate(11);
+
+    let config = CoordinatorConfig {
+        input_dim: ds.dim(),
+        num_categories: ds.num_categories(),
+        sketch_dim: 1024,
+        seed: 42,
+        num_shards: 4,
+        ..Default::default()
+    };
+    let coordinator = Coordinator::new(config);
+
+    // Ingest the corpus through the batcher.
+    let sw = Stopwatch::start();
+    for p in &ds.points {
+        match coordinator.handle_request(Request::Insert { vec: p.clone() }) {
+            Response::Inserted { .. } => {}
+            other => panic!("insert failed: {other:?}"),
+        }
+    }
+    let ingest = sw.elapsed_secs();
+    println!(
+        "ingested {} vectors in {:.3}s ({:.0}/s), mean batch {:.1}",
+        ds.len(),
+        ingest,
+        ds.len() as f64 / ingest,
+        coordinator.metrics.mean_batch_size()
+    );
+
+    // Query: for held-out probes, compare coordinator top-k with brute force.
+    let mut spec2 = spec.clone();
+    spec2.num_points = 20;
+    let probes = spec2.generate(99);
+    let mut agree = 0;
+    let k = 5;
+    let sw = Stopwatch::start();
+    for probe in &probes.points {
+        let hits = match coordinator.handle_request(Request::Query {
+            vec: probe.clone(),
+            k,
+        }) {
+            Response::Hits { hits } => hits,
+            other => panic!("query failed: {other:?}"),
+        };
+        // brute force over the original corpus
+        let best = (0..ds.len())
+            .min_by_key(|&i| probe.hamming(&ds.points[i]))
+            .unwrap();
+        // estimated top-k containing the true best counts as agreement
+        if hits.iter().any(|h| h.id == best) {
+            agree += 1;
+        }
+    }
+    let qtime = sw.elapsed_secs();
+    println!(
+        "queries: {} in {:.3}s ({:.1} ms each); true-NN in estimated top-{k}: {}/{}",
+        probes.len(),
+        qtime,
+        1e3 * qtime / probes.len() as f64,
+        agree,
+        probes.len()
+    );
+    for (name, v) in stats(&coordinator) {
+        println!("  stat {name} = {v:.2}");
+    }
+}

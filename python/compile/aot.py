@@ -1,0 +1,159 @@
+"""AOT pipeline: lower the L2 graphs to HLO **text** + sidecar tables.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 (behind the rust `xla` crate) rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs under --out-dir (default ../artifacts):
+    cabin_sketch.hlo.txt      (m, n) i32           -> (m, d) f32
+    cham_allpairs.hlo.txt     (mp, d) f32          -> (mp, mp) f32
+    cham_cross.hlo.txt        (mq, d), (mc, d) f32 -> (mq, mc) f32
+    sketch_allpairs.hlo.txt   (m, n) i32           -> (m, m) f32
+    pi_<n>_<d>.u32            little-endian u32 pi table (sidecar)
+    psi_<c>.u8                psi table (sidecar)
+    manifest.json             shapes/dtypes/seed for the rust loader
+
+Run via `make artifacts`; python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import prng
+from .model import CabinModel
+
+# Default artifact configuration — mirrored by rust runtime::artifacts.
+DEFAULTS = dict(
+    n=4096,  # input dimension
+    c=64,  # categories
+    d=1024,  # sketch dimension (MXU-aligned; paper uses 1000 natively)
+    m=64,  # sketch batch
+    mp=256,  # all-pairs batch
+    mq=64,  # query batch
+    mc=512,  # corpus shard batch
+    seed=42,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path).
+
+    `as_hlo_text(True)` = print_large_constants: without it the printer
+    elides the baked psi/pi tables as `{...}` and the text parser on the
+    rust side silently zero-fills them (all-zero sketches). Pinned by
+    tests/test_aot.py::test_constants_are_printed_in_full.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_all(cfg: dict) -> dict:
+    """Lower every artifact; returns {name: hlo_text}."""
+    model = CabinModel(cfg["n"], cfg["c"], cfg["d"], cfg["seed"])
+    i32 = jnp.int32
+    f32 = jnp.float32
+    u_spec = jax.ShapeDtypeStruct((cfg["m"], cfg["n"]), i32)
+    s_spec = jax.ShapeDtypeStruct((cfg["mp"], cfg["d"]), f32)
+    q_spec = jax.ShapeDtypeStruct((cfg["mq"], cfg["d"]), f32)
+    c_spec = jax.ShapeDtypeStruct((cfg["mc"], cfg["d"]), f32)
+
+    def tup(fn):
+        # return_tuple=True at the XlaComputation level expects the jax fn
+        # output pytree; wrap to a 1-tuple for a stable calling convention.
+        return lambda *a: (fn(*a),)
+
+    arts = {}
+    arts["cabin_sketch"] = to_hlo_text(
+        jax.jit(tup(model.cabin_sketch)).lower(u_spec)
+    )
+    arts["cham_allpairs"] = to_hlo_text(
+        jax.jit(tup(CabinModel.cham_allpairs)).lower(s_spec)
+    )
+    arts["cham_cross"] = to_hlo_text(
+        jax.jit(tup(CabinModel.cham_cross)).lower(q_spec, c_spec)
+    )
+    arts["sketch_allpairs"] = to_hlo_text(
+        jax.jit(tup(model.sketch_and_allpairs)).lower(u_spec)
+    )
+    return arts
+
+
+def write_sidecars(cfg: dict, out_dir: str) -> dict:
+    pi = prng.derive_pi(cfg["seed"], cfg["n"], cfg["d"])
+    psi = prng.derive_psi_matrix(cfg["seed"], cfg["n"], cfg["c"])
+    pi_name = f"pi_{cfg['n']}_{cfg['d']}.u32"
+    psi_name = f"psi_{cfg['n']}_{cfg['c']}.u8"
+    with open(os.path.join(out_dir, pi_name), "wb") as f:
+        f.write(pi.astype("<u4").tobytes())
+    with open(os.path.join(out_dir, psi_name), "wb") as f:
+        f.write(psi.astype("u1").tobytes())  # row-major (n, c+1)
+    return {"pi": pi_name, "psi": psi_name}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    for k, v in DEFAULTS.items():
+        ap.add_argument(f"--{k}", type=int, default=v)
+    args = ap.parse_args()
+    cfg = {k: getattr(args, k) for k in DEFAULTS}
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    arts = lower_all(cfg)
+    entries = {}
+    for name, text in arts.items():
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        entries[name] = {"hlo": path, "bytes": len(text)}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    sidecars = write_sidecars(cfg, args.out_dir)
+    manifest = {
+        "config": cfg,
+        "sidecars": sidecars,
+        "artifacts": {
+            "cabin_sketch": {
+                **entries["cabin_sketch"],
+                "inputs": [["i32", [cfg["m"], cfg["n"]]]],
+                "outputs": [["f32", [cfg["m"], cfg["d"]]]],
+            },
+            "cham_allpairs": {
+                **entries["cham_allpairs"],
+                "inputs": [["f32", [cfg["mp"], cfg["d"]]]],
+                "outputs": [["f32", [cfg["mp"], cfg["mp"]]]],
+            },
+            "cham_cross": {
+                **entries["cham_cross"],
+                "inputs": [
+                    ["f32", [cfg["mq"], cfg["d"]]],
+                    ["f32", [cfg["mc"], cfg["d"]]],
+                ],
+                "outputs": [["f32", [cfg["mq"], cfg["mc"]]]],
+            },
+            "sketch_allpairs": {
+                **entries["sketch_allpairs"],
+                "inputs": [["i32", [cfg["m"], cfg["n"]]]],
+                "outputs": [["f32", [cfg["m"], cfg["m"]]]],
+            },
+        },
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json (seed={cfg['seed']}, n={cfg['n']}, d={cfg['d']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Everything here is straight-line jnp with no tiling tricks; pytest compares
+the kernels (and the AOT artifacts, via rust integration tests) against
+these functions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def binem_ref(u: jnp.ndarray, psi_matrix: jnp.ndarray) -> jnp.ndarray:
+    """BinEm (per-attribute psi): categorical (m, n) int32 -> (m, n) f32.
+
+    psi_matrix is (n, c+1) with psi[:, 0] = 0, so missing features stay 0.
+    """
+    table = psi_matrix.astype(jnp.float32)
+    n = table.shape[0]
+    return table[jnp.arange(n)[None, :], u]
+
+
+def binsketch_ref(u_bin: jnp.ndarray, p_onehot: jnp.ndarray) -> jnp.ndarray:
+    """BinSketch as a clamped matmul: (m, n) f32 x (n, d) f32 -> (m, d) f32.
+
+    S[m, j] = min(1, sum_i u'[m, i] * P[i, j]) == OR over the pi-preimage.
+    """
+    return jnp.minimum(u_bin @ p_onehot, 1.0)
+
+
+def cabin_ref(u: jnp.ndarray, psi_matrix: jnp.ndarray, p_onehot: jnp.ndarray) -> jnp.ndarray:
+    """Full Cabin pipeline reference."""
+    return binsketch_ref(binem_ref(u, psi_matrix), p_onehot)
+
+
+def binhamming_stats_ref(wu, wv, ip, d: int):
+    """Occupancy-inversion BinHamming from scalar/array stats.
+
+    est(x) = ln(1 - x/d) / ln(1 - 1/d);  h = 2*est(union) - est(wu) - est(wv)
+    Mirrors rust `sketch::cham::binhamming_from_stats`.
+    """
+    df = jnp.float32(d)
+    ln_ratio = jnp.log1p(-1.0 / df)
+
+    def est(x):
+        x = jnp.clip(x, 0.0, df - 1.0)
+        return jnp.log1p(-x / df) / ln_ratio
+
+    union = wu + wv - ip
+    h = 2.0 * est(union) - est(wu) - est(wv)
+    return jnp.maximum(h, 0.0)
+
+
+def cham_allpairs_ref(s: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs categorical Hamming estimates from a sketch matrix.
+
+    s: (m, d) f32 0/1. Returns (m, m) f32 with entry (i, j) =
+    2 * BinHamming(s_i, s_j)  (the x2 undoes BinEm's halving).
+    """
+    m, d = s.shape
+    w = jnp.sum(s, axis=1)  # (m,)
+    g = s @ s.T  # (m, m) bitwise inner products
+    h = binhamming_stats_ref(w[:, None], w[None, :], g, d)
+    return 2.0 * h
+
+
+def cham_cross_ref(sq: jnp.ndarray, sc: jnp.ndarray) -> jnp.ndarray:
+    """Query x corpus Hamming estimates: (mq, d), (mc, d) -> (mq, mc)."""
+    d = sq.shape[1]
+    wq = jnp.sum(sq, axis=1)
+    wc = jnp.sum(sc, axis=1)
+    g = sq @ sc.T
+    return 2.0 * binhamming_stats_ref(wq[:, None], wc[None, :], g, d)

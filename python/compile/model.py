@@ -1,0 +1,67 @@
+"""L2: the JAX compute graph composing BinEm (lookup) with the L1 kernels.
+
+Build-time only — lowered once by ``aot.py`` to HLO text and never imported
+at runtime. psi and pi are baked as HLO constants (psi is c+1 bytes, pi is
+n int32s — both tiny in text form; the n x d one-hot is *never*
+materialised, see kernels/binsketch.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import binsketch as binsketch_k
+from .kernels import cham as cham_k
+from . import prng
+
+
+class CabinModel:
+    """Holds the baked mappings for one (n, c, d, seed) configuration."""
+
+    def __init__(self, n: int, c: int, d: int, seed: int) -> None:
+        self.n = n
+        self.c = c
+        self.d = d
+        self.seed = seed
+        # Per-attribute psi (the library default — see rust sketch::binem
+        # for why the paper's shared table breaks Lemma 2's independence).
+        self.psi = prng.derive_psi_matrix(seed, n, c)  # (n, c+1) u8
+        self.pi = prng.derive_pi(seed, n, d)  # (n,) u32
+
+    # ---- L2 graph pieces -------------------------------------------------
+
+    def binem(self, u: jnp.ndarray) -> jnp.ndarray:
+        """(m, n) int32 categorical -> (m, n) f32 binary.
+
+        u'[m, i] = psi[i, u[m, i]];  psi[:, 0] = 0 keeps missing at 0.
+        """
+        table = jnp.asarray(self.psi, dtype=jnp.float32)  # (n, c+1)
+        n = table.shape[0]
+        return table[jnp.arange(n)[None, :], u]
+
+    def cabin_sketch(self, u: jnp.ndarray) -> jnp.ndarray:
+        """Full Cabin: (m, n) int32 -> (m, d) f32 0/1 sketches."""
+        u_bin = self.binem(u)
+        pi = jnp.asarray(self.pi.astype("int32"))
+        return binsketch_k.binsketch(u_bin, pi, d=self.d)
+
+    @staticmethod
+    def cham_allpairs(s: jnp.ndarray) -> jnp.ndarray:
+        """(m, d) f32 sketches -> (m, m) f32 estimated categorical HDs."""
+        w = jnp.sum(s, axis=1, keepdims=True)
+        return cham_k.cham_allpairs(s, w)
+
+    @staticmethod
+    def cham_cross(sq: jnp.ndarray, sc: jnp.ndarray) -> jnp.ndarray:
+        """(mq, d) x (mc, d) -> (mq, mc) estimated categorical HDs."""
+        wq = jnp.sum(sq, axis=1, keepdims=True)
+        wc = jnp.sum(sc, axis=1, keepdims=True)
+        return cham_k.cham_cross(sq, sc, wq, wc)
+
+    def sketch_and_allpairs(self, u: jnp.ndarray) -> jnp.ndarray:
+        """End-to-end: categorical batch -> all-pairs HD estimates.
+
+        The fully fused artifact: both Pallas kernels lower into one HLO
+        module; XLA keeps the intermediate sketch on-device.
+        """
+        return self.cham_allpairs(self.cabin_sketch(u))

@@ -1,0 +1,79 @@
+"""SplitMix64 — bit-identical port of ``rust/src/util/rng.rs``.
+
+The attribute mapping pi and the category mapping psi are derived from
+splitmix64 streams with fixed stream tags. The SAME derivation runs in rust
+(`sketch::mappings`) and here, so the AOT-baked constants in the HLO
+artifacts agree exactly with the rust native path. ``python/tests/
+test_prng.py`` pins the shared vectors; ``rust/src/util/rng.rs`` pins them
+on the rust side.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+# Stream tags — keep in sync with rust/src/sketch/mappings.rs.
+PSI_STREAM = 0x5049_5053_4954_0001
+PI_STREAM = 0x5049_5F4D_4150_0002
+
+
+class SplitMix64:
+    """Steele–Lea–Flood splittable PRNG finalizer."""
+
+    def __init__(self, seed: int) -> None:
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+
+def derive_psi(seed: int, num_categories: int) -> np.ndarray:
+    """psi table over {0..c}: psi[0] = 0, psi[v] in {0,1}."""
+    sm = SplitMix64(seed ^ PSI_STREAM)
+    table = np.zeros(num_categories + 1, dtype=np.uint8)
+    for v in range(1, num_categories + 1):
+        table[v] = sm.next_u64() & 1
+    return table
+
+
+def mix64_np(z: np.ndarray) -> np.ndarray:
+    """Vectorised stateless mix64 — port of rust ``util::rng::mix64``."""
+    with np.errstate(over="ignore"):
+        z = (z.astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15)) & np.uint64(MASK64)
+        z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & np.uint64(MASK64)
+        z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & np.uint64(MASK64)
+        return z ^ (z >> np.uint64(31))
+
+
+def derive_psi_matrix(seed: int, n: int, c: int) -> np.ndarray:
+    """Per-attribute psi table, the default BinEm mode (see rust
+    ``sketch::binem``): psi[i, v] = bit(mix64(seed ^ (i << 20) ^ v)) for
+    v >= 1, psi[i, 0] = 0. Shape (n, c+1) uint8 — bit-identical to the rust
+    ``BinEm::psi`` PerAttribute path."""
+    i = np.arange(n, dtype=np.uint64)[:, None]
+    v = np.arange(c + 1, dtype=np.uint64)[None, :]
+    keys = np.uint64(seed) ^ (i << np.uint64(20)) ^ v
+    bits = (mix64_np(keys) & np.uint64(1)).astype(np.uint8)
+    bits[:, 0] = 0
+    return bits
+
+
+def derive_pi(seed: int, n: int, d: int) -> np.ndarray:
+    """pi table over {0..n-1} with values in {0..d-1}."""
+    assert d > 0
+    sm = SplitMix64(seed ^ PI_STREAM)
+    return np.array([sm.next_u64() % d for _ in range(n)], dtype=np.uint32)
+
+
+def pi_one_hot(pi: np.ndarray, d: int, dtype=np.float32) -> np.ndarray:
+    """pi as a one-hot matrix P in {0,1}^{n x d}: P[i, pi[i]] = 1."""
+    n = pi.shape[0]
+    p = np.zeros((n, d), dtype=dtype)
+    p[np.arange(n), pi] = 1
+    return p

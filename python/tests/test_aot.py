@@ -1,0 +1,90 @@
+"""AOT pipeline smoke: every artifact lowers to parseable HLO text with the
+right parameter shapes, and sidecars round-trip."""
+
+import json
+import os
+import re
+
+import numpy as np
+import pytest
+
+from compile import aot, prng
+
+SMALL = dict(n=256, c=8, d=64, m=4, mp=8, mq=4, mc=8, seed=5)
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    return aot.lower_all(SMALL)
+
+
+def test_all_artifacts_lower(lowered):
+    assert set(lowered) == {
+        "cabin_sketch",
+        "cham_allpairs",
+        "cham_cross",
+        "sketch_allpairs",
+    }
+    for name, text in lowered.items():
+        assert text.startswith("HloModule"), name
+        assert "ROOT" in text, name
+
+
+def test_hlo_parameter_shapes(lowered):
+    # cabin_sketch takes s32[4,256], yields a tuple with f32[4,64]
+    text = lowered["cabin_sketch"]
+    assert re.search(r"parameter\(0\)", text)
+    assert "s32[4,256]" in text
+    assert "f32[4,64]" in text
+    text = lowered["cham_cross"]
+    assert "f32[4,64]" in text and "f32[8,64]" in text
+
+
+def test_constants_are_printed_in_full(lowered):
+    # regression: the default printer elides large constants as `{...}`
+    # and the rust-side text parser zero-fills them — every constant must
+    # be materialised in the text.
+    for name, text in lowered.items():
+        assert "constant({...})" not in text, name
+
+
+def test_constants_are_compact(lowered):
+    # the π constant is n ints and ψ is n×(c+1) bits — HLO text must stay
+    # manageable (the design avoids baking the n×d one-hot, which would be
+    # n·d floats).
+    for name, text in lowered.items():
+        assert len(text) < 4_000_000, (name, len(text))
+
+
+def test_sidecars_roundtrip(tmp_path):
+    d = str(tmp_path)
+    names = aot.write_sidecars(SMALL, d)
+    pi = np.fromfile(os.path.join(d, names["pi"]), dtype="<u4")
+    assert pi.shape == (SMALL["n"],)
+    assert np.array_equal(pi, prng.derive_pi(SMALL["seed"], SMALL["n"], SMALL["d"]))
+    psi = np.fromfile(os.path.join(d, names["psi"]), dtype="u1").reshape(
+        SMALL["n"], SMALL["c"] + 1
+    )
+    assert np.array_equal(
+        psi, prng.derive_psi_matrix(SMALL["seed"], SMALL["n"], SMALL["c"])
+    )
+
+
+def test_manifest_written_by_default_build():
+    # `make artifacts` must have produced a coherent manifest (skip if the
+    # artifacts haven't been built in this checkout yet).
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts/ not built")
+    with open(path) as f:
+        m = json.load(f)
+    assert set(m["artifacts"]) == {
+        "cabin_sketch",
+        "cham_allpairs",
+        "cham_cross",
+        "sketch_allpairs",
+    }
+    cfg = m["config"]
+    for a in m["artifacts"].values():
+        assert os.path.exists(os.path.join(os.path.dirname(path), a["hlo"]))
+    assert cfg["d"] % 256 == 0  # MXU-aligned artifact dimension

@@ -1,0 +1,147 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/densities/seeds; the CORE correctness signal of
+the python side."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import prng
+from compile.kernels import ref
+from compile.kernels.binsketch import binsketch
+from compile.kernels.cham import cham_allpairs, cham_cross
+
+
+def random_binary(rng, m, n, density):
+    x = (rng.random((m, n)) < density).astype(np.float32)
+    return x
+
+
+def random_sketch(rng, m, d, density):
+    return (rng.random((m, d)) < density).astype(np.float32)
+
+
+# ---------------------------------------------------------------- binsketch
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    m=st.sampled_from([8, 16, 32]),
+    n=st.sampled_from([256, 512, 1024]),
+    d=st.sampled_from([64, 128, 256]),
+    density=st.floats(0.001, 0.2),
+)
+def test_binsketch_matches_ref(seed, m, n, d, density):
+    rng = np.random.default_rng(seed)
+    u = random_binary(rng, m, n, density)
+    pi = prng.derive_pi(seed, n, d).astype(np.int32)
+    out = np.asarray(binsketch(jnp.asarray(u), jnp.asarray(pi), d=d))
+    p = prng.pi_one_hot(pi, d)
+    expect = np.asarray(ref.binsketch_ref(jnp.asarray(u), jnp.asarray(p)))
+    np.testing.assert_allclose(out, expect, atol=1e-6)
+
+
+def test_binsketch_is_binary_and_or_semantics():
+    rng = np.random.default_rng(0)
+    u = random_binary(rng, 8, 512, 0.1)
+    pi = prng.derive_pi(1, 512, 128).astype(np.int32)
+    out = np.asarray(binsketch(jnp.asarray(u), jnp.asarray(pi), d=128))
+    assert set(np.unique(out)).issubset({0.0, 1.0})
+    # OR semantics: bin j set iff some i with pi[i]=j has u[i]=1
+    for row in range(8):
+        for j in range(128):
+            expect = np.any(u[row, pi == j] > 0)
+            assert bool(out[row, j]) == bool(expect)
+
+
+def test_binsketch_block_shapes_dont_matter():
+    rng = np.random.default_rng(3)
+    u = random_binary(rng, 16, 1024, 0.05)
+    pi = prng.derive_pi(9, 1024, 256).astype(np.int32)
+    a = np.asarray(binsketch(jnp.asarray(u), jnp.asarray(pi), d=256, bm=8, bd=64, bk=128))
+    b = np.asarray(binsketch(jnp.asarray(u), jnp.asarray(pi), d=256, bm=16, bd=256, bk=512))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------- cham
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    m=st.sampled_from([64, 128]),
+    d=st.sampled_from([256, 512]),
+    density=st.floats(0.01, 0.4),
+)
+def test_cham_allpairs_matches_ref(seed, m, d, density):
+    rng = np.random.default_rng(seed)
+    s = random_sketch(rng, m, d, density)
+    w = s.sum(axis=1, keepdims=True).astype(np.float32)
+    out = np.asarray(cham_allpairs(jnp.asarray(s), jnp.asarray(w)))
+    expect = np.asarray(ref.cham_allpairs_ref(jnp.asarray(s)))
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-3)
+
+
+def test_cham_allpairs_diagonal_zero_symmetric():
+    rng = np.random.default_rng(5)
+    s = random_sketch(rng, 64, 256, 0.1)
+    w = s.sum(axis=1, keepdims=True).astype(np.float32)
+    out = np.asarray(cham_allpairs(jnp.asarray(s), jnp.asarray(w)))
+    np.testing.assert_allclose(np.diag(out), 0.0, atol=1e-3)
+    np.testing.assert_allclose(out, out.T, rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    mq=st.sampled_from([32, 64]),
+    mc=st.sampled_from([128, 256]),
+    d=st.sampled_from([256, 512]),
+)
+def test_cham_cross_matches_ref(seed, mq, mc, d):
+    rng = np.random.default_rng(seed)
+    sq = random_sketch(rng, mq, d, 0.08)
+    sc = random_sketch(rng, mc, d, 0.08)
+    wq = sq.sum(axis=1, keepdims=True).astype(np.float32)
+    wc = sc.sum(axis=1, keepdims=True).astype(np.float32)
+    out = np.asarray(cham_cross(jnp.asarray(sq), jnp.asarray(sc), jnp.asarray(wq), jnp.asarray(wc)))
+    expect = np.asarray(ref.cham_cross_ref(jnp.asarray(sq), jnp.asarray(sc)))
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-3)
+
+
+def test_cham_estimates_true_hamming_end_to_end():
+    """Statistical end-to-end check mirroring Theorem 2: estimate of the
+    binary Hamming distance from BinSketch sketches is close to truth."""
+    rng = np.random.default_rng(11)
+    n, d, density, m = 8192, 1024, 0.02, 16
+    u = random_binary(rng, m, n, density)
+    pi = prng.derive_pi(4, n, d).astype(np.int32)
+    s = np.asarray(binsketch(jnp.asarray(u), jnp.asarray(pi), d=d))
+    w = s.sum(axis=1, keepdims=True).astype(np.float32)
+    # scale=1.0: estimate binary HD directly (no BinEm halving here)
+    from compile.kernels.cham import cham_allpairs as cap
+
+    est = np.asarray(cap(jnp.asarray(s), jnp.asarray(w), scale=1.0))
+    for i in range(m):
+        for j in range(i + 1, m):
+            truth = np.sum(u[i] != u[j])
+            tol = 11 * np.sqrt(max(u[i].sum(), u[j].sum()) * np.log(6 / 0.01))
+            assert abs(est[i, j] - truth) < tol, (i, j, est[i, j], truth)
+
+
+def test_saturated_sketch_is_finite():
+    s = np.ones((8, 64), dtype=np.float32)
+    w = s.sum(axis=1, keepdims=True)
+    out = np.asarray(cham_allpairs(jnp.asarray(s), jnp.asarray(w), bm=8, bk=64))
+    assert np.all(np.isfinite(out))
+
+
+@pytest.mark.parametrize("bad_m", [7, 9])
+def test_shape_mismatch_raises(bad_m):
+    s = np.ones((bad_m, 64), dtype=np.float32)
+    w = s.sum(axis=1, keepdims=True)
+    with pytest.raises(AssertionError):
+        cham_allpairs(jnp.asarray(s), jnp.asarray(w), bm=4, bk=64)

@@ -1,0 +1,91 @@
+"""L2 model correctness: CabinModel graphs vs pure-jnp oracles, and the
+statistical contracts (Lemma 1/2/4 shapes) of the baked mappings."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import prng
+from compile.model import CabinModel
+from compile.kernels import ref
+
+
+def random_categorical(rng, m, n, c, density):
+    u = np.zeros((m, n), dtype=np.int32)
+    for r in range(m):
+        idx = rng.choice(n, size=density, replace=False)
+        u[r, idx] = rng.integers(1, c + 1, size=density)
+    return u
+
+
+def test_binem_matches_ref_and_preserves_missing():
+    rng = np.random.default_rng(0)
+    model = CabinModel(n=512, c=16, d=128, seed=42)
+    u = random_categorical(rng, 8, 512, 16, 40)
+    out = np.asarray(model.binem(jnp.asarray(u)))
+    expect = np.asarray(ref.binem_ref(jnp.asarray(u), jnp.asarray(model.psi)))
+    np.testing.assert_array_equal(out, expect)
+    # missing stays zero
+    assert np.all(out[u == 0] == 0)
+    # set bits only where psi[i, value] == 1
+    m, n = u.shape
+    for r in range(m):
+        for i in np.nonzero(u[r])[0]:
+            assert out[r, i] == model.psi[i, u[r, i]]
+
+
+def test_cabin_sketch_matches_ref():
+    rng = np.random.default_rng(1)
+    model = CabinModel(n=1024, c=8, d=256, seed=7)
+    u = random_categorical(rng, 16, 1024, 8, 60)
+    out = np.asarray(model.cabin_sketch(jnp.asarray(u)))
+    p = prng.pi_one_hot(model.pi, 256)
+    expect = np.asarray(
+        ref.cabin_ref(jnp.asarray(u), jnp.asarray(model.psi), jnp.asarray(p))
+    )
+    np.testing.assert_allclose(out, expect, atol=1e-6)
+    assert set(np.unique(out)).issubset({0.0, 1.0})
+
+
+def test_sketch_weight_bounded_lemma1():
+    rng = np.random.default_rng(2)
+    model = CabinModel(n=2048, c=32, d=512, seed=3)
+    density = 100
+    u = random_categorical(rng, 8, 2048, 32, density)
+    s = np.asarray(model.cabin_sketch(jnp.asarray(u)))
+    weights = s.sum(axis=1)
+    assert np.all(weights <= density)
+    # E[weight] ≈ density/2 (Lemma 1b + few collisions at d=512)
+    assert 0.3 * density < weights.mean() < 0.7 * density
+
+
+def test_sketch_and_allpairs_consistent_with_stages():
+    rng = np.random.default_rng(3)
+    model = CabinModel(n=1024, c=8, d=256, seed=9)
+    u = random_categorical(rng, 16, 1024, 8, 50)
+    fused = np.asarray(model.sketch_and_allpairs(jnp.asarray(u)))
+    s = model.cabin_sketch(jnp.asarray(u))
+    staged = np.asarray(CabinModel.cham_allpairs(s))
+    np.testing.assert_allclose(fused, staged, rtol=1e-5, atol=1e-3)
+
+
+def test_allpairs_estimates_track_truth():
+    rng = np.random.default_rng(4)
+    n, c, d = 4096, 16, 1024
+    model = CabinModel(n=n, c=c, d=d, seed=11)
+    density = 120
+    u = random_categorical(rng, 8, n, c, density)
+    est = np.asarray(model.sketch_and_allpairs(jnp.asarray(u)))
+    for i in range(8):
+        for j in range(i + 1, 8):
+            truth = np.sum(u[i] != u[j])
+            assert abs(est[i, j] - truth) < 0.3 * truth + 40, (i, j, est[i, j], truth)
+
+
+def test_cham_cross_matches_allpairs_blocks():
+    rng = np.random.default_rng(5)
+    model = CabinModel(n=512, c=8, d=128, seed=13)
+    u = random_categorical(rng, 32, 512, 8, 30)
+    s = model.cabin_sketch(jnp.asarray(u))
+    ap = np.asarray(CabinModel.cham_allpairs(s))
+    cross = np.asarray(CabinModel.cham_cross(s[:8], s))
+    np.testing.assert_allclose(cross, ap[:8], rtol=1e-5, atol=1e-3)

@@ -1,0 +1,92 @@
+"""Cross-language PRNG contract: these exact values are also pinned in
+rust/src/util/rng.rs and rust/src/sketch/mappings.rs. If either side
+changes, the AOT artifacts and the rust native path silently diverge —
+these tests are the tripwire."""
+
+import numpy as np
+
+from compile import prng
+
+
+def test_splitmix_known_vectors_seed0():
+    sm = prng.SplitMix64(0)
+    assert sm.next_u64() == 0xE220A8397B1DCDAF
+    assert sm.next_u64() == 0x6E789E6AA1B965F4
+    assert sm.next_u64() == 0x06C45D188009454F
+
+
+def test_splitmix_known_vector_seed42():
+    sm = prng.SplitMix64(42)
+    assert sm.next_u64() == 0xBDD732262FEB6E95
+
+
+def test_psi_structure():
+    t = prng.derive_psi(42, 8)
+    assert t.shape == (9,)
+    assert t[0] == 0
+    assert set(np.unique(t)).issubset({0, 1})
+    # deterministic
+    assert np.array_equal(t, prng.derive_psi(42, 8))
+
+
+def test_psi_matches_stream():
+    t = prng.derive_psi(7, 16)
+    sm = prng.SplitMix64(7 ^ prng.PSI_STREAM)
+    for v in t[1:]:
+        assert v == (sm.next_u64() & 1)
+
+
+def test_pi_structure_and_determinism():
+    pi = prng.derive_pi(7, 1000, 64)
+    assert pi.shape == (1000,)
+    assert pi.max() < 64
+    assert np.array_equal(pi, prng.derive_pi(7, 1000, 64))
+    assert not np.array_equal(pi, prng.derive_pi(8, 1000, 64))
+
+
+def test_pi_matches_stream():
+    pi = prng.derive_pi(3, 50, 17)
+    sm = prng.SplitMix64(3 ^ prng.PI_STREAM)
+    for v in pi:
+        assert v == sm.next_u64() % 17
+
+
+def test_pi_roughly_uniform():
+    pi = prng.derive_pi(1, 10000, 100)
+    counts = np.bincount(pi, minlength=100)
+    assert counts.min() > 50 and counts.max() < 170
+
+
+def test_psi_matrix_pinned_cross_language():
+    """Same matrix is pinned in rust sketch::binem tests."""
+    m = prng.derive_psi_matrix(42, 8, 5)
+    expect = np.array(
+        [
+            [0, 0, 0, 1, 1, 1],
+            [0, 1, 0, 1, 0, 0],
+            [0, 1, 1, 0, 0, 0],
+            [0, 0, 0, 1, 1, 0],
+            [0, 0, 1, 0, 1, 1],
+            [0, 1, 1, 0, 0, 1],
+            [0, 1, 0, 0, 1, 0],
+            [0, 1, 1, 1, 0, 1],
+        ],
+        dtype=np.uint8,
+    )
+    assert np.array_equal(m, expect)
+
+
+def test_psi_matrix_missing_column_zero():
+    m = prng.derive_psi_matrix(7, 100, 12)
+    assert m.shape == (100, 13)
+    assert np.all(m[:, 0] == 0)
+    # roughly balanced bits elsewhere
+    frac = m[:, 1:].mean()
+    assert 0.4 < frac < 0.6
+
+
+def test_one_hot():
+    pi = np.array([2, 0, 2], dtype=np.uint32)
+    p = prng.pi_one_hot(pi, 3)
+    expect = np.array([[0, 0, 1], [1, 0, 0], [0, 0, 1]], dtype=np.float32)
+    assert np.array_equal(p, expect)

@@ -1,0 +1,60 @@
+//! L3 hot-path benchmarks: Cabin sketching and Cham estimation.
+//! Backs the §Perf log in EXPERIMENTS.md and the Figure 2/Table 3 scale
+//! arguments (per-point sketch cost, per-pair estimate cost).
+
+use cabin::bench::{black_box, Bench};
+use cabin::data::synth::SynthSpec;
+use cabin::sketch::{cham, BitVec, CabinSketcher, SketchConfig};
+
+fn main() {
+    let mut b = Bench::from_env("cham");
+
+    // --- sketching throughput (per-point cost) ---
+    let mut spec = SynthSpec::small_demo();
+    spec.num_points = 2000;
+    spec.dim = 100_000;
+    spec.mean_density = 400.0;
+    spec.max_density = 871; // NYTimes twin regime
+    let ds = spec.generate(3);
+    for d in [256usize, 1024, 4096] {
+        let sk = CabinSketcher::from_config(SketchConfig::new(ds.dim(), ds.num_categories(), d, 7));
+        let mut buf = BitVec::zeros(d);
+        b.bench_with_throughput(&format!("sketch/nytimes-twin/d{d}"), Some(ds.len() as f64), || {
+            for p in &ds.points {
+                sk.sketch_into(p, &mut buf);
+                black_box(buf.count_ones());
+            }
+        });
+    }
+
+    // --- pairwise estimate cost (the all-pairs inner loop) ---
+    for d in [1000usize, 1024, 4096] {
+        let sk = CabinSketcher::from_config(SketchConfig::new(ds.dim(), ds.num_categories(), d, 7));
+        let sketches: Vec<BitVec> = ds.points.iter().take(256).map(|p| sk.sketch(p)).collect();
+        let cfg = *sk.config();
+        let pairs = (sketches.len() * (sketches.len() - 1) / 2) as f64;
+        b.bench_with_throughput(&format!("estimate/allpairs-256/d{d}"), Some(pairs), || {
+            let mut acc = 0.0;
+            for i in 0..sketches.len() {
+                for j in (i + 1)..sketches.len() {
+                    acc += cham::estimate_hamming(&sketches[i], &sketches[j], &cfg);
+                }
+            }
+            black_box(acc);
+        });
+    }
+
+    // --- exact categorical HD for contrast (the "78 ms vs 570 µs" axis) ---
+    let pairs = (200 * 199 / 2) as f64;
+    b.bench_with_throughput("exact/allpairs-200/full-dim", Some(pairs), || {
+        let mut acc = 0usize;
+        for i in 0..200 {
+            for j in (i + 1)..200 {
+                acc += ds.points[i].hamming(&ds.points[j]);
+            }
+        }
+        black_box(acc);
+    });
+
+    b.finish();
+}

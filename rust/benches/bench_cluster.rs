@@ -1,0 +1,33 @@
+//! Clustering benchmarks (Figure 10's workload): k-mode on full
+//! categorical data vs binary k-mode on Cabin sketches, plus k-means on an
+//! LSA embedding for the real-valued lane.
+
+use cabin::baselines::by_key;
+use cabin::bench::{black_box, Bench};
+use cabin::cluster::{kmeans, kmode, kmode_binary};
+use cabin::data::registry::DatasetSpec;
+
+fn main() {
+    let mut b = Bench::from_env("cluster");
+    let spec = DatasetSpec::by_key("nytimes").unwrap();
+    let ds = spec.synth_spec(300).generate(42);
+    let k = 5;
+    let iters = 15;
+
+    b.bench_with_throughput("kmode/full-dim/300pts", Some(ds.len() as f64), || {
+        black_box(kmode(&ds, k, iters, 7).cost);
+    });
+
+    let red = by_key("cabin").unwrap().reduce(&ds, 1000, 7);
+    let bits = red.as_bits().unwrap().to_vec();
+    b.bench_with_throughput("kmode/cabin-d1000/300pts", Some(ds.len() as f64), || {
+        black_box(kmode_binary(&bits, k, iters, 7).cost);
+    });
+
+    let lsa = by_key("lsa").unwrap().reduce(&ds, 100, 7).to_matrix();
+    b.bench_with_throughput("kmeans/lsa-d100/300pts", Some(ds.len() as f64), || {
+        black_box(kmeans(&lsa, k, iters, 7).cost);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,88 @@
+//! Coordinator benchmarks: batcher ingest throughput (by batch policy) and
+//! query scatter/gather latency as the corpus grows.
+
+use cabin::bench::{black_box, Bench};
+use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request, Response};
+use cabin::data::synth::SynthSpec;
+use std::time::Duration;
+
+fn make_coordinator(max_batch: usize, delay_ms: u64, shards: usize) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        input_dim: 4096,
+        num_categories: 64,
+        sketch_dim: 1024,
+        seed: 42,
+        num_shards: shards,
+        batcher: BatcherConfig {
+            max_batch,
+            max_delay: Duration::from_millis(delay_ms),
+            queue_cap: 8192,
+        },
+        use_xla: false, // isolate the native L3 path; XLA lane in bench_heatmap
+        heatmap_limit: 10_000,
+    })
+}
+
+fn main() {
+    let mut b = Bench::from_env("coordinator");
+    let mut spec = SynthSpec::small_demo();
+    spec.dim = 4096;
+    spec.num_categories = 64;
+    spec.num_points = 1000;
+    let ds = spec.generate(3);
+
+    // ingest throughput under different batching policies (concurrent
+    // producers so batches can actually form)
+    for (max_batch, delay_ms) in [(1usize, 0u64), (16, 1), (64, 2)] {
+        let c = make_coordinator(max_batch, delay_ms, 4);
+        let mut offset = 0usize;
+        b.bench_with_throughput(
+            &format!("ingest/batch{max_batch}-delay{delay_ms}ms"),
+            Some(200.0),
+            || {
+                let chunk: Vec<_> = (0..200).map(|i| ds.points[(offset + i) % ds.len()].clone()).collect();
+                offset += 200;
+                let c_ref = &c;
+                std::thread::scope(|s| {
+                    for part in chunk.chunks(25) {
+                        s.spawn(move || {
+                            for p in part {
+                                match c_ref.handle_request(Request::Insert { vec: p.clone() }) {
+                                    Response::Inserted { .. } => {}
+                                    other => panic!("{other:?}"),
+                                }
+                            }
+                        });
+                    }
+                });
+            },
+        );
+        println!(
+            "    (mean flushed batch size: {:.1})",
+            c.metrics.mean_batch_size()
+        );
+    }
+
+    // query latency vs corpus size and shard count
+    for (corpus, shards) in [(500usize, 1usize), (500, 4), (1000, 4)] {
+        let c = make_coordinator(64, 1, shards);
+        for p in ds.points.iter().cycle().take(corpus) {
+            c.handle_request(Request::Insert { vec: p.clone() });
+        }
+        let mut qi = 0usize;
+        b.bench_with_throughput(
+            &format!("query/top10/corpus{corpus}/shards{shards}"),
+            Some(1.0),
+            || {
+                let q = &ds.points[qi % ds.len()];
+                qi += 1;
+                match c.handle_request(Request::Query { vec: q.clone(), k: 10 }) {
+                    Response::Hits { hits } => black_box(hits.len()),
+                    other => panic!("{other:?}"),
+                };
+            },
+        );
+    }
+
+    b.finish();
+}

@@ -1,0 +1,71 @@
+//! Heatmap generation benchmarks (Figure 11 / Table 4 workload, §5.5's
+//! 136× claim): exact full-dimensional vs native sketch fast-path vs the
+//! XLA fused kernel (when artifacts are present).
+
+use cabin::analysis::heatmap::Heatmap;
+use cabin::bench::{black_box, Bench};
+use cabin::data::synth::SynthSpec;
+use cabin::runtime::XlaEngine;
+use cabin::sketch::{CabinSketcher, SketchConfig};
+
+fn main() {
+    let mut b = Bench::from_env("heatmap");
+
+    // BrainCell-twin regime scaled down: very high dimension, low density.
+    let mut spec = SynthSpec::small_demo();
+    spec.num_points = 256;
+    spec.dim = 200_000;
+    spec.mean_density = 500.0;
+    spec.max_density = 1051;
+    let ds = spec.generate(9);
+    let entries = (ds.len() * ds.len()) as f64;
+
+    b.bench_with_throughput("exact/256pts/200k-dim", Some(entries), || {
+        black_box(Heatmap::exact(&ds).values[10]);
+    });
+
+    let d = 1024;
+    let sk = CabinSketcher::from_config(SketchConfig::new(ds.dim(), ds.num_categories(), d, 7));
+    let sketches = sk.sketch_dataset(&ds, cabin::util::parallel::default_threads());
+    // §Perf before/after: naive (3 logs/pair, static blocks) vs optimized
+    // (precomputed inversions + striped rows).
+    b.bench_with_throughput("native-naive/256pts/d1024", Some(entries), || {
+        black_box(Heatmap::from_sketches_naive(&sketches, 2.0).values[10]);
+    });
+    b.bench_with_throughput("native-sketch/256pts/d1024", Some(entries), || {
+        black_box(Heatmap::from_sketches_occupancy(&sketches, 2.0).values[10]);
+    });
+    // single-thread lanes isolate the per-pair cost from scheduling
+    let big: Vec<_> = (0..2000.min(ds.len() * 8))
+        .map(|i| sketches[i % sketches.len()].clone())
+        .collect();
+    let e_big = (big.len() * big.len()) as f64;
+    b.bench_with_throughput("native-sketch/2000pts/d1024", Some(e_big), || {
+        black_box(Heatmap::from_sketches_occupancy(&big, 2.0).values[10]);
+    });
+
+    // XLA path (single-threaded PJRT CPU; main-thread use is fine here).
+    if let Some(engine) = XlaEngine::try_default() {
+        let dd = engine.manifest.d;
+        let skx = CabinSketcher::from_config(SketchConfig::new(
+            ds.dim(),
+            ds.num_categories(),
+            dd,
+            engine.manifest.seed,
+        ));
+        let sketches_mp: Vec<_> = ds
+            .points
+            .iter()
+            .take(engine.manifest.mp)
+            .map(|p| skx.sketch(p))
+            .collect();
+        let e2 = (sketches_mp.len() * sketches_mp.len()) as f64;
+        b.bench_with_throughput("xla-allpairs/256pts/d1024", Some(e2), || {
+            black_box(engine.cham_allpairs(&sketches_mp).unwrap()[10]);
+        });
+    } else {
+        println!("[bench_heatmap] artifacts missing — skipping xla lane (run `make artifacts`)");
+    }
+
+    b.finish();
+}

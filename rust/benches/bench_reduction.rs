@@ -1,0 +1,31 @@
+//! Dimensionality-reduction timing per method (the Table 3 / Figure 2
+//! workload at bench scale): one lane per method on a KOS-twin sample.
+
+use cabin::baselines::{by_key, ALL_KEYS};
+use cabin::bench::{black_box, Bench, BenchConfig};
+use cabin::data::registry::DatasetSpec;
+
+fn main() {
+    let mut b = Bench::new(
+        "reduction",
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            min_secs: 0.2,
+            max_secs: 20.0,
+        },
+    );
+    let spec = DatasetSpec::by_key("kos").unwrap();
+    let ds = spec.synth_spec(200).generate(42);
+    let d = 256;
+    for key in ALL_KEYS {
+        // NNMF/LDA/VAE are slow by design — they get fewer iterations via
+        // the max_secs cap; that is the point of the comparison.
+        let r = by_key(key).unwrap();
+        b.bench_with_throughput(&format!("{key}/kos200/d{d}"), Some(ds.len() as f64), || {
+            black_box(r.reduce(&ds, d, 7).len());
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,38 @@
+//! Analysis harnesses behind the paper's evaluation figures:
+//! RMSE (Figure 3), box-plot variance analysis (Figures 4–5),
+//! heatmaps + MAE (Figures 11–12, Table 4).
+
+pub mod heatmap;
+pub mod rmse;
+pub mod stats;
+pub mod variance;
+
+use std::io::Write;
+
+/// Write a CSV file under `results/` (creating the directory).
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> std::io::Result<String> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{name}.csv");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn csv_writer_roundtrip() {
+        let p = super::write_csv(
+            "test_csv_writer",
+            "a,b",
+            &["1,2".to_string(), "3,4".to_string()],
+        )
+        .unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(content, "a,b\n1,2\n3,4\n");
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,101 @@
+//! RMSE of Hamming-distance estimation (paper Subsection 5.2, Figure 3):
+//! `RMSE = sqrt( Σ_{u,v} HE(u,v)² / N )` over all pairs of a sample, where
+//! `HE = HD(u,v) − estimate from sketches`.
+
+use crate::baselines::Reduced;
+use crate::data::CategoricalDataset;
+use crate::util::parallel;
+
+/// All-pairs RMSE of a reduced representation against the true categorical
+/// Hamming distances. Parallel over the first index.
+pub fn rmse(ds: &CategoricalDataset, red: &Reduced) -> f64 {
+    let n = ds.len();
+    assert_eq!(red.len(), n);
+    if n < 2 {
+        return 0.0;
+    }
+    let threads = parallel::default_threads();
+    let partial: Vec<f64> = parallel::par_map(n, threads, |i| {
+        let mut acc = 0.0;
+        for j in (i + 1)..n {
+            let truth = ds.points[i].hamming(&ds.points[j]) as f64;
+            let est = red.estimate_hamming(i, j);
+            let e = truth - est;
+            acc += e * e;
+        }
+        acc
+    });
+    let total: f64 = partial.iter().sum();
+    let pairs = (n * (n - 1) / 2) as f64;
+    (total / pairs).sqrt()
+}
+
+/// Mean absolute error over all pairs (Table 4's MAE).
+pub fn mae(ds: &CategoricalDataset, red: &Reduced) -> f64 {
+    let n = ds.len();
+    assert_eq!(red.len(), n);
+    if n < 2 {
+        return 0.0;
+    }
+    let threads = parallel::default_threads();
+    let partial: Vec<f64> = parallel::par_map(n, threads, |i| {
+        let mut acc = 0.0;
+        for j in (i + 1)..n {
+            let truth = ds.points[i].hamming(&ds.points[j]) as f64;
+            acc += (truth - red.estimate_hamming(i, j)).abs();
+        }
+        acc
+    });
+    let total: f64 = partial.iter().sum();
+    total / (n * (n - 1) / 2) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::by_key;
+    use crate::data::synth::SynthSpec;
+
+    fn sample_ds() -> CategoricalDataset {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 40;
+        spec.dim = 3000;
+        spec.mean_density = 80.0;
+        spec.max_density = 120;
+        spec.generate(19)
+    }
+
+    #[test]
+    fn cabin_rmse_decreases_with_dim() {
+        let ds = sample_ds();
+        let r = by_key("cabin").unwrap();
+        let rmse_small = rmse(&ds, &r.reduce(&ds, 64, 3));
+        let rmse_large = rmse(&ds, &r.reduce(&ds, 1024, 3));
+        assert!(
+            rmse_large < rmse_small,
+            "rmse larger dim {} !< smaller {}",
+            rmse_large,
+            rmse_small
+        );
+    }
+
+    #[test]
+    fn cabin_beats_hlsh_at_moderate_dim() {
+        // The headline qualitative claim of Figure 3.
+        let ds = sample_ds();
+        let d = 256;
+        let cabin = rmse(&ds, &by_key("cabin").unwrap().reduce(&ds, d, 5));
+        let hlsh = rmse(&ds, &by_key("hlsh").unwrap().reduce(&ds, d, 5));
+        assert!(cabin < hlsh, "cabin {} !< hlsh {}", cabin, hlsh);
+    }
+
+    #[test]
+    fn mae_leq_rmse() {
+        let ds = sample_ds();
+        let red = by_key("cabin").unwrap().reduce(&ds, 128, 1);
+        let m = mae(&ds, &red);
+        let r = rmse(&ds, &red);
+        assert!(m <= r + 1e-9, "mae {} > rmse {}", m, r);
+        assert!(m >= 0.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Box-plot statistics (five-number summaries) for the variance-analysis
+//! figures (4–5), plus simple mean/std helpers.
+
+use crate::util::timer::percentile;
+
+/// Five-number summary + mean, the data behind one box in a box plot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub std_dev: f64,
+    pub count: usize,
+}
+
+impl BoxStats {
+    pub fn from_samples(samples: &[f64]) -> BoxStats {
+        if samples.is_empty() {
+            return BoxStats::default();
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / s.len() as f64;
+        BoxStats {
+            min: s[0],
+            q1: percentile(&s, 0.25),
+            median: percentile(&s, 0.5),
+            q3: percentile(&s, 0.75),
+            max: s[s.len() - 1],
+            mean,
+            std_dev: var.sqrt(),
+            count: s.len(),
+        }
+    }
+
+    /// Interquartile range.
+    pub fn iqr(&self) -> f64 {
+        self.q3 - self.q1
+    }
+
+    pub fn csv_row(&self, label: &str) -> String {
+        format!(
+            "{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}",
+            label, self.count, self.min, self.q1, self.median, self.q3, self.max, self.mean,
+            self.std_dev
+        )
+    }
+
+    pub const CSV_HEADER: &'static str = "label,count,min,q1,median,q3,max,mean,std";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_numbers() {
+        let s: Vec<f64> = (1..=9).map(|x| x as f64).collect();
+        let b = BoxStats::from_samples(&s);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 9.0);
+        assert_eq!(b.median, 5.0);
+        assert_eq!(b.q1, 3.0);
+        assert_eq!(b.q3, 7.0);
+        assert_eq!(b.mean, 5.0);
+        assert_eq!(b.iqr(), 4.0);
+    }
+
+    #[test]
+    fn empty_is_default() {
+        let b = BoxStats::from_samples(&[]);
+        assert_eq!(b.count, 0);
+        assert_eq!(b.median, 0.0);
+    }
+
+    #[test]
+    fn csv_row_format() {
+        let b = BoxStats::from_samples(&[1.0, 2.0, 3.0]);
+        let row = b.csv_row("x");
+        assert!(row.starts_with("x,3,"));
+        assert_eq!(row.split(',').count(), BoxStats::CSV_HEADER.split(',').count());
+    }
+}

@@ -1,0 +1,132 @@
+//! Variance analysis of the two Cabin stages (paper Subsection 5.3,
+//! Figures 4–5): repeat the random embedding many times for fixed inputs
+//! and box-plot the Hamming errors.
+
+use super::stats::BoxStats;
+use crate::baselines::{by_key, Reduced};
+use crate::data::CategoricalDataset;
+use crate::sketch::{BinEm, PsiMode};
+use crate::util::parallel;
+
+/// Figure 4 (top row): signed errors `HD(u,v) − 2·HD(BinEm(u),BinEm(v))`
+/// for one fixed pair over `trials` independent ψ draws.
+pub fn binem_pair_errors(
+    ds: &CategoricalDataset,
+    i: usize,
+    j: usize,
+    trials: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let truth = ds.points[i].hamming(&ds.points[j]) as f64;
+    parallel::par_map(trials, parallel::default_threads(), |t| {
+        let be = BinEm::new(ds.dim(), ds.num_categories(), PsiMode::PerAttribute, seed + t as u64);
+        let e = be.encode(&ds.points[i]).xor_count(&be.encode(&ds.points[j])) as f64;
+        truth - 2.0 * e
+    })
+}
+
+/// Figure 4 (bottom row): for each of `runs` independent ψ draws, the
+/// average *absolute* error over all pairs of the sample.
+pub fn binem_avg_abs_errors(ds: &CategoricalDataset, runs: usize, seed: u64) -> Vec<f64> {
+    let n = ds.len();
+    let pairs = (n * (n - 1) / 2) as f64;
+    parallel::par_map(runs, parallel::default_threads(), |t| {
+        let be = BinEm::new(ds.dim(), ds.num_categories(), PsiMode::PerAttribute, seed + t as u64);
+        let encs: Vec<_> = ds.points.iter().map(|p| be.encode(p)).collect();
+        let mut total = 0.0;
+        for a in 0..n {
+            for b in (a + 1)..n {
+                let truth = ds.points[a].hamming(&ds.points[b]) as f64;
+                total += (truth - 2.0 * encs[a].xor_count(&encs[b]) as f64).abs();
+            }
+        }
+        total / pairs
+    })
+}
+
+/// Figure 5: per-method signed errors for one fixed pair over `trials`
+/// independent draws of the *second-stage* compressor (methods: the
+/// discrete reducer keys).
+pub fn stage2_pair_errors(
+    ds: &CategoricalDataset,
+    method: &str,
+    dim: usize,
+    i: usize,
+    j: usize,
+    trials: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let truth = ds.points[i].hamming(&ds.points[j]) as f64;
+    let reducer = by_key(method).unwrap_or_else(|| panic!("unknown method {method}"));
+    // Sub-sample the dataset to just the pair: reducers that fit global
+    // structure (kt) still behave; sketching methods are per-point anyway.
+    let pair_ds = CategoricalDataset::new(
+        &ds.name,
+        ds.dim(),
+        ds.num_categories(),
+        vec![ds.points[i].clone(), ds.points[j].clone()],
+    );
+    (0..trials)
+        .map(|t| {
+            let red: Reduced = reducer.reduce(&pair_ds, dim, seed + t as u64);
+            truth - red.estimate_hamming(0, 1)
+        })
+        .collect()
+}
+
+/// Convenience: box-stats of a signed-error sample.
+pub fn error_box(samples: &[f64]) -> BoxStats {
+    BoxStats::from_samples(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn ds() -> CategoricalDataset {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 12;
+        spec.dim = 2500;
+        spec.mean_density = 70.0;
+        spec.max_density = 100;
+        spec.generate(29)
+    }
+
+    #[test]
+    fn binem_errors_centred_at_zero() {
+        // Figure 4's finding: BinEm errors distribute around 0.
+        let ds = ds();
+        let errs = binem_pair_errors(&ds, 0, 1, 400, 7);
+        let b = error_box(&errs);
+        let truth = ds.points[0].hamming(&ds.points[1]) as f64;
+        assert!(b.mean.abs() < 0.1 * truth, "mean {} truth {}", b.mean, truth);
+        // both signs occur
+        assert!(b.min < 0.0 && b.max > 0.0);
+    }
+
+    #[test]
+    fn binem_avg_abs_error_is_consistent() {
+        // Figure 4 bottom: small variance across runs.
+        let ds = ds();
+        let errs = binem_avg_abs_errors(&ds, 30, 3);
+        let b = error_box(&errs);
+        assert!(b.count == 30);
+        assert!(b.std_dev < 0.25 * b.mean + 1e-9, "std {} mean {}", b.std_dev, b.mean);
+    }
+
+    #[test]
+    fn stage2_binsketch_lowest_spread() {
+        // Figure 5's finding: BinSketch (cabin) has smaller IQR than FH at
+        // moderate dimension.
+        let ds = ds();
+        let cabin = error_box(&stage2_pair_errors(&ds, "cabin", 256, 0, 1, 120, 11));
+        let fh = error_box(&stage2_pair_errors(&ds, "fh", 256, 0, 1, 120, 11));
+        assert!(
+            cabin.iqr() <= fh.iqr() * 1.2,
+            "cabin iqr {} fh iqr {}",
+            cabin.iqr(),
+            fh.iqr()
+        );
+    }
+}

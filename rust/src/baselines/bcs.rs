@@ -1,0 +1,121 @@
+//! Binary Compression Scheme (BCS) [Pratap–Kulkarni–Sohony, IEEE BigData
+//! 2018], applied on a BinEm embedding (per the Table 2 footnote: "BCS and
+//! H-LSH are applied on a BinEm embedding").
+//!
+//! BCS randomly partitions the `n` coordinates into `d` buckets and each
+//! sketch bit is the **parity** (sum mod 2) of its bucket. A coordinate
+//! where `u'` and `v'` differ flips the corresponding sketch-bit parity, so
+//! a sketch bit differs iff an *odd* number of differing coordinates landed
+//! in its bucket:
+//!
+//! `P[bit differs] = (1 − (1 − 2/d)^h) / 2`, `h = HD(u',v')`,
+//!
+//! inverted to `ĥ' = ln(1 − 2·hs/d) / ln(1 − 2/d)` (`hs` = sketch Hamming
+//! distance), and `ĥ = 2·ĥ'` undoes BinEm's halving. Saturation (`hs ≥ d/2`)
+//! clamps — exactly the regime where Figure 3 shows BCS's RMSE blowing up
+//! at small `d`.
+
+use super::{DimReducer, Reduced};
+use crate::data::CategoricalDataset;
+use crate::sketch::mappings::derive_pi;
+use crate::sketch::{BinEm, BitVec, PsiMode};
+use crate::util::parallel;
+
+pub struct Bcs;
+
+impl DimReducer for Bcs {
+    fn key(&self) -> &'static str {
+        "bcs"
+    }
+
+    fn name(&self) -> &'static str {
+        "BCS [34]"
+    }
+
+    fn reduce(&self, ds: &CategoricalDataset, dim: usize, seed: u64) -> Reduced {
+        let binem = BinEm::new(ds.dim(), ds.num_categories(), PsiMode::PerAttribute, seed);
+        let pi = derive_pi(seed.wrapping_add(0xBC5), ds.dim(), dim);
+        let mut sketches: Vec<BitVec> = vec![BitVec::zeros(dim); ds.len()];
+        parallel::par_chunks_mut(&mut sketches, parallel::default_threads(), |start, chunk| {
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let p = &ds.points[start + off];
+                // parity accumulate
+                for i in binem.encode_ones(p) {
+                    let b = pi[i] as usize;
+                    if slot.get(b) {
+                        slot.clear(b);
+                    } else {
+                        slot.set(b);
+                    }
+                }
+            }
+        });
+        let d = dim as f64;
+        Reduced::Binary {
+            sketches,
+            estimator: Box::new(move |a, b| {
+                let hs = a.xor_count(b) as f64;
+                let ratio = (1.0 - 2.0 * hs / d).max(1.0 / d); // clamp at saturation
+                let h_prime = ratio.ln() / (1.0 - 2.0 / d).ln();
+                2.0 * h_prime
+            }),
+        }
+    }
+
+    fn is_discrete(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn parity_sketch_is_deterministic() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 8;
+        let ds = spec.generate(2);
+        let a = Bcs.reduce(&ds, 64, 3);
+        let b = Bcs.reduce(&ds, 64, 3);
+        assert!((a.estimate_hamming(0, 1) - b.estimate_hamming(0, 1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimates_reasonable_at_large_dim() {
+        // With d ≫ h, few parity collisions: estimate ≈ truth.
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 16;
+        spec.mean_density = 40.0;
+        spec.max_density = 60;
+        let ds = spec.generate(5);
+        let red = Bcs.reduce(&ds, 4096, 9);
+        let mut rel = 0.0;
+        let mut cnt = 0;
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                let t = ds.points[i].hamming(&ds.points[j]) as f64;
+                if t < 10.0 {
+                    continue;
+                }
+                rel += (red.estimate_hamming(i, j) - t).abs() / t;
+                cnt += 1;
+            }
+        }
+        assert!(rel / (cnt as f64) < 0.5, "rel {}", rel / cnt as f64);
+    }
+
+    #[test]
+    fn saturation_is_finite() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 4;
+        let ds = spec.generate(7);
+        let red = Bcs.reduce(&ds, 8, 1); // tiny d → saturation likely
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!(red.estimate_hamming(i, j).is_finite());
+            }
+        }
+    }
+}

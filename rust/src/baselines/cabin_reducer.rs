@@ -1,0 +1,89 @@
+//! Cabin wrapped in the [`DimReducer`] interface so the paper-table
+//! harnesses compare it uniformly against the baselines.
+
+use super::{DimReducer, Reduced};
+use crate::data::CategoricalDataset;
+use crate::sketch::{cham, CabinSketcher, Estimator, SketchConfig};
+use crate::util::parallel;
+
+/// Cabin as a baseline-harness method.
+pub struct CabinReducer {
+    pub estimator: Estimator,
+}
+
+impl Default for CabinReducer {
+    fn default() -> Self {
+        Self {
+            estimator: Estimator::OccupancyInversion,
+        }
+    }
+}
+
+impl CabinReducer {
+    /// Variant using the Algorithm-2 formula exactly as printed (ablation A1).
+    pub fn literal() -> Self {
+        Self {
+            estimator: Estimator::PaperLiteral,
+        }
+    }
+}
+
+impl DimReducer for CabinReducer {
+    fn key(&self) -> &'static str {
+        match self.estimator {
+            Estimator::OccupancyInversion => "cabin",
+            Estimator::PaperLiteral => "cabin-lit",
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self.estimator {
+            Estimator::OccupancyInversion => "Cabin (ours)",
+            Estimator::PaperLiteral => "Cabin (literal Alg.2)",
+        }
+    }
+
+    fn reduce(&self, ds: &CategoricalDataset, dim: usize, seed: u64) -> Reduced {
+        let cfg = SketchConfig::new(ds.dim(), ds.num_categories(), dim, seed)
+            .with_estimator(self.estimator);
+        let sk = CabinSketcher::from_config(cfg);
+        let sketches = sk.sketch_dataset(ds, parallel::default_threads());
+        let cfg_copy = *sk.config();
+        Reduced::Binary {
+            sketches,
+            estimator: Box::new(move |a, b| cham::estimate_hamming(a, b, &cfg_copy)),
+        }
+    }
+
+    fn is_discrete(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn estimates_track_truth() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 30;
+        let ds = spec.generate(3);
+        let red = CabinReducer::default().reduce(&ds, 512, 7);
+        let mut total_rel = 0.0;
+        let mut cnt = 0;
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                let t = ds.points[i].hamming(&ds.points[j]) as f64;
+                if t == 0.0 {
+                    continue;
+                }
+                total_rel += (red.estimate_hamming(i, j) - t).abs() / t;
+                cnt += 1;
+            }
+        }
+        let mean_rel = total_rel / cnt as f64;
+        assert!(mean_rel < 0.30, "mean rel err {}", mean_rel);
+    }
+}

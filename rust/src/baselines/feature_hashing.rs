@@ -1,0 +1,107 @@
+//! Feature Hashing [Weinberger et al., ICML 2009] on the BinEm embedding.
+//!
+//! `FH(u')_j = Σ_{i : h(i)=j} σ(i)·u'_i` with a sign hash σ ∈ {±1}. FH is
+//! an unbiased inner-product/ℓ₂ sketch, so the natural Hamming estimator on
+//! binary inputs is `ĥ' = ‖FH(u') − FH(v')‖²` (since `‖u'−v'‖² = HD(u',v')`
+//! for binary vectors), then ×2 for BinEm. The estimator is unbiased but
+//! its variance at small `d` is what Figure 3's FH curves show.
+
+use super::{DimReducer, Reduced};
+use crate::data::CategoricalDataset;
+use crate::sketch::{BinEm, PsiMode};
+use crate::util::parallel;
+use crate::util::rng::mix64;
+
+pub struct FeatureHashing;
+
+impl DimReducer for FeatureHashing {
+    fn key(&self) -> &'static str {
+        "fh"
+    }
+
+    fn name(&self) -> &'static str {
+        "Feature Hashing [41]"
+    }
+
+    fn reduce(&self, ds: &CategoricalDataset, dim: usize, seed: u64) -> Reduced {
+        let binem = BinEm::new(ds.dim(), ds.num_categories(), PsiMode::PerAttribute, seed);
+        let hash_seed = seed ^ 0xFEA7;
+        let mut sketches: Vec<Vec<f64>> = vec![vec![0.0; dim]; ds.len()];
+        parallel::par_chunks_mut(&mut sketches, parallel::default_threads(), |start, chunk| {
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let p = &ds.points[start + off];
+                for i in binem.encode_ones(p) {
+                    let h = mix64(hash_seed ^ (i as u64));
+                    let bucket = (h % dim as u64) as usize;
+                    let sign = if (h >> 63) == 1 { 1.0 } else { -1.0 };
+                    slot[bucket] += sign;
+                }
+            }
+        });
+        Reduced::Discrete {
+            sketches,
+            estimator: Box::new(|a, b| {
+                let l2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                2.0 * l2
+            }),
+        }
+    }
+
+    fn is_discrete(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn unbiased_over_seeds() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 2;
+        spec.dim = 1500;
+        spec.mean_density = 100.0;
+        spec.max_density = 150;
+        let ds = spec.generate(9);
+        let truth = ds.points[0].hamming(&ds.points[1]) as f64;
+        let trials = 300;
+        let mut sum = 0.0;
+        for s in 0..trials {
+            sum += FeatureHashing.reduce(&ds, 256, s).estimate_hamming(0, 1);
+        }
+        let mean = sum / trials as f64;
+        assert!(
+            (mean - truth).abs() < 0.12 * truth,
+            "mean {} truth {}",
+            mean,
+            truth
+        );
+    }
+
+    #[test]
+    fn sketch_entries_are_integers() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 5;
+        let ds = spec.generate(3);
+        if let Reduced::Discrete { sketches, .. } = FeatureHashing.reduce(&ds, 64, 1) {
+            for s in &sketches {
+                for &v in s {
+                    assert_eq!(v, v.round(), "non-integer FH entry {v}");
+                }
+            }
+        } else {
+            panic!("FH must be Discrete");
+        }
+    }
+
+    #[test]
+    fn identical_points_zero_distance() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 3;
+        let ds = spec.generate(4);
+        let red = FeatureHashing.reduce(&ds, 128, 2);
+        assert_eq!(red.estimate_hamming(1, 1), 0.0);
+    }
+}

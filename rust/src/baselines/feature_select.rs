@@ -1,0 +1,182 @@
+//! Supervised feature selection — χ² [Liu & Setiono 1995] and mutual
+//! information [Peng–Long–Ding 2005]. The paper cites these as the
+//! *labelled* alternatives its unsupervised method replaces (Section 1,
+//! "Unsupervised" bullet); we include them for the ablation comparing
+//! supervised selection against Cabin when labels happen to exist.
+//!
+//! Both score each feature against a label vector and keep the top `d`.
+
+use crate::data::CategoricalDataset;
+
+/// χ² statistic of feature `f` (binarised: present/absent) vs labels.
+pub fn chi2_scores(ds: &CategoricalDataset, labels: &[usize]) -> Vec<f64> {
+    assert_eq!(labels.len(), ds.len());
+    let num_classes = labels.iter().copied().max().map(|m| m + 1).unwrap_or(1);
+    let m = ds.len() as f64;
+    let mut class_sizes = vec![0usize; num_classes];
+    for &l in labels {
+        class_sizes[l] += 1;
+    }
+    // observed present-count per (feature,class)
+    let mut present: std::collections::HashMap<u32, Vec<usize>> = Default::default();
+    for (i, p) in ds.points.iter().enumerate() {
+        for &(f, _) in p.entries() {
+            present.entry(f).or_insert_with(|| vec![0; num_classes])[labels[i]] += 1;
+        }
+    }
+    let mut scores = vec![0.0f64; ds.dim()];
+    for (&f, counts) in &present {
+        let total_present: usize = counts.iter().sum();
+        let mut chi = 0.0;
+        for c in 0..num_classes {
+            let expected_p = total_present as f64 * class_sizes[c] as f64 / m;
+            let expected_a = (m - total_present as f64) * class_sizes[c] as f64 / m;
+            let obs_p = counts[c] as f64;
+            let obs_a = class_sizes[c] as f64 - obs_p;
+            if expected_p > 0.0 {
+                chi += (obs_p - expected_p).powi(2) / expected_p;
+            }
+            if expected_a > 0.0 {
+                chi += (obs_a - expected_a).powi(2) / expected_a;
+            }
+        }
+        scores[f as usize] = chi;
+    }
+    scores
+}
+
+/// Mutual information of feature presence vs labels (nats).
+pub fn mutual_info_scores(ds: &CategoricalDataset, labels: &[usize]) -> Vec<f64> {
+    assert_eq!(labels.len(), ds.len());
+    let num_classes = labels.iter().copied().max().map(|m| m + 1).unwrap_or(1);
+    let m = ds.len() as f64;
+    let mut class_sizes = vec![0usize; num_classes];
+    for &l in labels {
+        class_sizes[l] += 1;
+    }
+    let mut present: std::collections::HashMap<u32, Vec<usize>> = Default::default();
+    for (i, p) in ds.points.iter().enumerate() {
+        for &(f, _) in p.entries() {
+            present.entry(f).or_insert_with(|| vec![0; num_classes])[labels[i]] += 1;
+        }
+    }
+    let mut scores = vec![0.0f64; ds.dim()];
+    for (&f, counts) in &present {
+        let total_present: usize = counts.iter().sum();
+        let p_x1 = total_present as f64 / m;
+        let p_x0 = 1.0 - p_x1;
+        let mut mi = 0.0;
+        for c in 0..num_classes {
+            let p_c = class_sizes[c] as f64 / m;
+            let p_1c = counts[c] as f64 / m;
+            let p_0c = p_c - p_1c;
+            if p_1c > 0.0 && p_x1 > 0.0 {
+                mi += p_1c * (p_1c / (p_x1 * p_c)).ln();
+            }
+            if p_0c > 0.0 && p_x0 > 0.0 {
+                mi += p_0c * (p_0c / (p_x0 * p_c)).ln();
+            }
+        }
+        scores[f as usize] = mi.max(0.0);
+    }
+    scores
+}
+
+/// Keep the `d` best-scoring features; returns sorted feature ids.
+pub fn select_top(scores: &[f64], d: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(d);
+    idx.sort_unstable();
+    idx
+}
+
+/// Project a dataset onto selected features (relabelled 0..d).
+pub fn project(ds: &CategoricalDataset, selected: &[usize]) -> CategoricalDataset {
+    let pos: std::collections::HashMap<u32, u32> = selected
+        .iter()
+        .enumerate()
+        .map(|(new, &old)| (old as u32, new as u32))
+        .collect();
+    let points = ds
+        .points
+        .iter()
+        .map(|p| {
+            let pairs = p
+                .entries()
+                .iter()
+                .filter_map(|&(i, v)| pos.get(&i).map(|&ni| (ni, v)))
+                .collect();
+            crate::data::CatVector::from_pairs(selected.len(), pairs)
+        })
+        .collect();
+    CategoricalDataset::new(
+        &format!("{}-sel{}", ds.name, selected.len()),
+        selected.len(),
+        ds.num_categories(),
+        points,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn discriminative_features_score_high() {
+        // Build a dataset where feature 0 is present exactly for class 1.
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 40;
+        spec.dim = 100;
+        let (mut ds, labels) = spec.generate_labeled(3);
+        for (i, p) in ds.points.iter_mut().enumerate() {
+            let mut pairs: Vec<(u32, u16)> = p.entries().to_vec();
+            pairs.retain(|&(f, _)| f != 0);
+            if labels[i] == 1 {
+                pairs.push((0, 1));
+            }
+            *p = crate::data::CatVector::from_pairs(100, pairs);
+        }
+        let chi = chi2_scores(&ds, &labels);
+        let mi = mutual_info_scores(&ds, &labels);
+        // feature 0 should be at/near the top in both
+        let rank = |scores: &[f64]| {
+            let mut better = 0;
+            for (f, &s) in scores.iter().enumerate() {
+                if f != 0 && s > scores[0] {
+                    better += 1;
+                }
+            }
+            better
+        };
+        assert!(rank(&chi) <= 3, "chi2 rank {}", rank(&chi));
+        assert!(rank(&mi) <= 3, "mi rank {}", rank(&mi));
+    }
+
+    #[test]
+    fn select_and_project() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 10;
+        spec.dim = 50;
+        let (ds, labels) = spec.generate_labeled(5);
+        let scores = chi2_scores(&ds, &labels);
+        let sel = select_top(&scores, 8);
+        assert_eq!(sel.len(), 8);
+        assert!(sel.windows(2).all(|w| w[0] < w[1]));
+        let proj = project(&ds, &sel);
+        assert_eq!(proj.dim(), 8);
+        assert_eq!(proj.len(), 10);
+    }
+
+    #[test]
+    fn uninformative_labels_give_flat_scores() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 30;
+        spec.dim = 60;
+        let ds = spec.generate(8);
+        let labels = vec![0usize; 30]; // single class: no information
+        let mi = mutual_info_scores(&ds, &labels);
+        assert!(mi.iter().all(|&s| s.abs() < 1e-9));
+    }
+}

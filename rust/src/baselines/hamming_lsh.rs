@@ -1,0 +1,111 @@
+//! Hamming-LSH [Gionis–Indyk–Motwani, VLDB'99] as the paper implements it
+//! (Section 5, "Reproducibility details"): randomly sample `d` coordinates
+//! of the BinEm embedding, compute the Hamming distance restricted to the
+//! sample, and scale by `n/d` (then ×2 to undo BinEm's halving).
+//!
+//! This is the fastest method in Figure 2/Table 3 (it touches only `d`
+//! coordinates) but the highest-variance estimator at high sparsity — most
+//! sampled coordinates are zero in both vectors, carrying no signal —
+//! which is exactly the RMSE behaviour Figure 3 reports.
+
+use super::{DimReducer, Reduced};
+use crate::data::CategoricalDataset;
+use crate::sketch::{BinEm, BitVec, PsiMode};
+use crate::util::parallel;
+use crate::util::rng::Xoshiro256;
+
+pub struct HammingLsh;
+
+impl DimReducer for HammingLsh {
+    fn key(&self) -> &'static str {
+        "hlsh"
+    }
+
+    fn name(&self) -> &'static str {
+        "Hamming-LSH [12]"
+    }
+
+    fn reduce(&self, ds: &CategoricalDataset, dim: usize, seed: u64) -> Reduced {
+        let n = ds.dim();
+        let dim = dim.min(n);
+        let binem = BinEm::new(n, ds.num_categories(), PsiMode::PerAttribute, seed);
+        let mut rng = Xoshiro256::new(seed ^ 0x1f5a);
+        let mut sample = rng.sample_indices(n, dim);
+        sample.sort_unstable();
+        let mut sketches: Vec<BitVec> = vec![BitVec::zeros(dim); ds.len()];
+        let sample_ref = &sample;
+        parallel::par_chunks_mut(&mut sketches, parallel::default_threads(), |start, chunk| {
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let p = &ds.points[start + off];
+                // walk the sorted nonzeros against the sorted sample
+                for &(idx, val) in p.entries() {
+                    if let Ok(pos) = sample_ref.binary_search(&(idx as usize)) {
+                        if binem.psi(idx as usize, val) == 1 {
+                            slot.set(pos);
+                        }
+                    }
+                }
+            }
+        });
+        let scale = n as f64 / dim as f64;
+        Reduced::Binary {
+            sketches,
+            estimator: Box::new(move |a, b| 2.0 * scale * a.xor_count(b) as f64),
+        }
+    }
+
+    fn is_discrete(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn unbiased_but_high_variance() {
+        // Average over many seeds ≈ truth (unbiasedness of coordinate
+        // sampling), which is all the paper's implementation promises.
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 2;
+        spec.dim = 2000;
+        spec.mean_density = 150.0;
+        spec.max_density = 200;
+        let ds = spec.generate(4);
+        let truth = ds.points[0].hamming(&ds.points[1]) as f64;
+        let mut sum = 0.0;
+        let trials = 300;
+        for s in 0..trials {
+            let red = HammingLsh.reduce(&ds, 200, s);
+            sum += red.estimate_hamming(0, 1);
+        }
+        let mean = sum / trials as f64;
+        assert!(
+            (mean - truth).abs() < 0.15 * truth,
+            "mean {} truth {}",
+            mean,
+            truth
+        );
+    }
+
+    #[test]
+    fn full_sample_has_only_binem_noise() {
+        // dim = n ⇒ the only error is BinEm's (×2 halving noise).
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 2;
+        spec.dim = 500;
+        spec.mean_density = 60.0;
+        spec.max_density = 80;
+        let ds = spec.generate(6);
+        let truth = ds.points[0].hamming(&ds.points[1]) as f64;
+        let mut sum = 0.0;
+        let trials = 200;
+        for s in 0..trials {
+            sum += HammingLsh.reduce(&ds, 500, s).estimate_hamming(0, 1);
+        }
+        let mean = sum / trials as f64;
+        assert!((mean - truth).abs() < 0.1 * truth, "mean {} truth {}", mean, truth);
+    }
+}

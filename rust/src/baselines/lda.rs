@@ -1,0 +1,145 @@
+//! Latent Dirichlet Allocation [Blei–Ng–Jordan 2003] via collapsed Gibbs
+//! sampling [Griffiths & Steyvers 2004]. The embedding of a document is its
+//! smoothed topic proportion vector θ̂ (m × k).
+//!
+//! Cost per sweep is Θ(total tokens × k) — with the paper's d up to 3000
+//! topics this is the "441× slower than Cabin on NYTimes" row of Table 3.
+
+use super::{DimReducer, Reduced};
+use crate::data::CategoricalDataset;
+use crate::linalg::Matrix;
+use crate::util::rng::Xoshiro256;
+
+pub struct Lda {
+    pub sweeps: usize,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl Default for Lda {
+    fn default() -> Self {
+        Self {
+            sweeps: 30,
+            alpha: 0.1,
+            beta: 0.01,
+        }
+    }
+}
+
+impl DimReducer for Lda {
+    fn key(&self) -> &'static str {
+        "lda"
+    }
+
+    fn name(&self) -> &'static str {
+        "LDA [6]"
+    }
+
+    fn reduce(&self, ds: &CategoricalDataset, dim: usize, seed: u64) -> Reduced {
+        let k = dim.max(1);
+        let vocab = ds.dim();
+        let m = ds.len();
+        let mut rng = Xoshiro256::new(seed ^ 0x1da);
+
+        // token stream: (doc, word) with multiplicity = categorical value
+        // capped (BoW counts are the categories).
+        let mut doc_of = Vec::new();
+        let mut word_of = Vec::new();
+        for (d, p) in ds.points.iter().enumerate() {
+            for &(w, v) in p.entries() {
+                for _ in 0..(v as usize).min(4) {
+                    doc_of.push(d as u32);
+                    word_of.push(w);
+                }
+            }
+        }
+        let tokens = doc_of.len();
+        let mut z: Vec<u32> = (0..tokens).map(|_| rng.gen_range(k as u64) as u32).collect();
+
+        let mut n_dk = vec![0u32; m * k];
+        let mut n_kw = vec![0u32; k * vocab];
+        let mut n_k = vec![0u32; k];
+        for t in 0..tokens {
+            let (d, w, topic) = (doc_of[t] as usize, word_of[t] as usize, z[t] as usize);
+            n_dk[d * k + topic] += 1;
+            n_kw[topic * vocab + w] += 1;
+            n_k[topic] += 1;
+        }
+
+        let vb = vocab as f64 * self.beta;
+        let mut probs = vec![0.0f64; k];
+        for _sweep in 0..self.sweeps {
+            for t in 0..tokens {
+                let (d, w) = (doc_of[t] as usize, word_of[t] as usize);
+                let old = z[t] as usize;
+                n_dk[d * k + old] -= 1;
+                n_kw[old * vocab + w] -= 1;
+                n_k[old] -= 1;
+                for (topic, p) in probs.iter_mut().enumerate() {
+                    *p = (n_dk[d * k + topic] as f64 + self.alpha)
+                        * (n_kw[topic * vocab + w] as f64 + self.beta)
+                        / (n_k[topic] as f64 + vb);
+                }
+                let new = rng.discrete(&probs);
+                z[t] = new as u32;
+                n_dk[d * k + new] += 1;
+                n_kw[new * vocab + w] += 1;
+                n_k[new] += 1;
+            }
+        }
+
+        // θ̂_dk = (n_dk + α) / (n_d + kα)
+        let mut emb = Matrix::zeros(m, k);
+        for d in 0..m {
+            let nd: f64 = (0..k).map(|t| n_dk[d * k + t] as f64).sum();
+            for t in 0..k {
+                emb.set(
+                    d,
+                    t,
+                    (n_dk[d * k + t] as f64 + self.alpha) / (nd + k as f64 * self.alpha),
+                );
+            }
+        }
+        Reduced::Real { embedding: emb }
+    }
+
+    fn is_discrete(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{kmeans, metrics::purity};
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn theta_rows_are_distributions() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 20;
+        spec.dim = 300;
+        let ds = spec.generate(3);
+        let red = Lda { sweeps: 5, ..Default::default() }.reduce(&ds, 4, 1);
+        let m = red.to_matrix();
+        for r in 0..m.rows {
+            let s: f64 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "row {r} sums {s}");
+            assert!(m.row(r).iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn recovers_topic_structure() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 60;
+        spec.topics = 3;
+        spec.topic_sharpness = 0.95;
+        spec.dim = 600;
+        let (ds, labels) = spec.generate_labeled(17);
+        let red = Lda { sweeps: 40, ..Default::default() }.reduce(&ds, 3, 5);
+        let res = kmeans(&red.to_matrix(), 3, 40, 7);
+        let p = purity(&labels, &res.assignments);
+        assert!(p > 0.65, "purity {p}");
+    }
+}

@@ -1,0 +1,141 @@
+//! Non-negative matrix factorisation [Lee & Seung, NIPS 2000] with
+//! multiplicative updates minimising ‖A − WH‖²_F.
+//!
+//! `W ← W ⊙ (A Hᵀ) ⊘ (W H Hᵀ)`, `H ← H ⊙ (Wᵀ A) ⊘ (Wᵀ W H)`.
+//!
+//! The embedding is `W` (m × k). NNMF is the slowest baseline in Table 3
+//! (10⁴× slower than Cabin on PubMed) — each iteration costs two dense
+//! m×n×k products; our implementation keeps `A` sparse but the iteration
+//! count × density still dominates, faithfully reproducing the gap's shape.
+
+use super::{DimReducer, Reduced};
+use crate::data::CategoricalDataset;
+use crate::linalg::sparse::Csr;
+use crate::linalg::Matrix;
+use crate::util::rng::Xoshiro256;
+
+pub struct Nnmf {
+    pub iters: usize,
+}
+
+impl Default for Nnmf {
+    fn default() -> Self {
+        Self { iters: 60 }
+    }
+}
+
+impl DimReducer for Nnmf {
+    fn key(&self) -> &'static str {
+        "nnmf"
+    }
+
+    fn name(&self) -> &'static str {
+        "NNMF [24]"
+    }
+
+    fn reduce(&self, ds: &CategoricalDataset, dim: usize, seed: u64) -> Reduced {
+        let a = Csr::from_dataset(ds);
+        let (m, n) = (a.rows, a.cols);
+        let k = dim.min(m.min(n)).max(1);
+        let mut rng = Xoshiro256::new(seed ^ 0x27f);
+        // |randn| init, scaled to the data magnitude
+        let scale = (a.values.iter().sum::<f64>() / (m * n) as f64 / k as f64)
+            .sqrt()
+            .max(1e-3);
+        let mut w = Matrix::randn(m, k, &mut rng);
+        let mut h = Matrix::randn(k, n, &mut rng);
+        for v in w.data.iter_mut() {
+            *v = v.abs() * scale + 1e-6;
+        }
+        for v in h.data.iter_mut() {
+            *v = v.abs() * scale + 1e-6;
+        }
+        const EPS: f64 = 1e-9;
+        for _ in 0..self.iters {
+            // H update: H ⊙ (Wᵀ A) ⊘ (Wᵀ W H)
+            let wta = a.matmul_t_dense(&w).transpose(); // k × n  (AᵀW)ᵀ
+            let wtw = w.transpose().matmul(&w); // k × k
+            let wtwh = wtw.matmul(&h); // k × n
+            for i in 0..h.data.len() {
+                h.data[i] *= wta.data[i] / (wtwh.data[i] + EPS);
+            }
+            // W update: W ⊙ (A Hᵀ) ⊘ (W H Hᵀ)
+            let aht = a.matmul_dense(&h.transpose()); // m × k
+            let hht = h.matmul(&h.transpose()); // k × k
+            let whht = w.matmul(&hht); // m × k
+            for i in 0..w.data.len() {
+                w.data[i] *= aht.data[i] / (whht.data[i] + EPS);
+            }
+        }
+        Reduced::Real { embedding: w }
+    }
+
+    fn is_discrete(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn small_ds() -> CategoricalDataset {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 30;
+        spec.dim = 200;
+        spec.mean_density = 20.0;
+        spec.max_density = 30;
+        spec.generate(13)
+    }
+
+    #[test]
+    fn factors_are_nonnegative() {
+        let ds = small_ds();
+        let red = Nnmf { iters: 20 }.reduce(&ds, 6, 2);
+        let m = red.to_matrix();
+        assert!(m.data.iter().all(|&v| v >= 0.0));
+        assert_eq!(m.rows, 30);
+        assert_eq!(m.cols, 6);
+    }
+
+    #[test]
+    fn objective_decreases() {
+        let ds = small_ds();
+        let a = Csr::from_dataset(&ds).to_dense();
+        let err = |iters: usize| -> f64 {
+            // reconstruct with the H refit implicitly by running the whole
+            // factorisation; monotonicity of MU guarantees less error for
+            // more iterations given identical init (same seed).
+            let red = Nnmf { iters }.reduce(&ds, 6, 4);
+            let w = red.to_matrix();
+            // refit H by one least-squares-ish MU pass is overkill; instead
+            // compare via projection residual ‖A‖² − ‖Wᵀ A‖²/‖W‖² proxy.
+            // Simpler: measure clustering-free reconstruction via
+            // col-space proxy: sum of squared row norms of A − W (W⁺A).
+            // For the test, use the fact that MU monotonically decreases
+            // ‖A − WH‖; we re-derive H for this W with 5 MU steps.
+            let mut rng = Xoshiro256::new(99);
+            let mut h = Matrix::randn(6, a.cols, &mut rng);
+            for v in h.data.iter_mut() {
+                *v = v.abs() * 0.1 + 1e-6;
+            }
+            for _ in 0..30 {
+                let wta = w.transpose().matmul(&a);
+                let wtwh = w.transpose().matmul(&w).matmul(&h);
+                for i in 0..h.data.len() {
+                    h.data[i] *= wta.data[i] / (wtwh.data[i] + 1e-9);
+                }
+            }
+            let recon = w.matmul(&h);
+            let mut e = 0.0;
+            for i in 0..a.data.len() {
+                e += (a.data[i] - recon.data[i]).powi(2);
+            }
+            e
+        };
+        let e5 = err(5);
+        let e50 = err(50);
+        assert!(e50 <= e5 * 1.05, "e5 {e5} e50 {e50}");
+    }
+}

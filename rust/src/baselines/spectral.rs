@@ -1,0 +1,191 @@
+//! Spectral baselines: PCA, LSA [11], and MCA [5].
+//!
+//! * **LSA** — truncated SVD of the raw (label-encoded) data matrix; sketch
+//!   = `U_k Σ_k` row scores. Runs on the CSR path so high-dimensional twins
+//!   don't densify.
+//! * **PCA** — same but column-centered first (centering densifies, which
+//!   is the paper's observed OOM driver for PCA at BrainCell scale; we
+//!   center implicitly to keep memory honest but the FLOPs equivalent).
+//! * **MCA** — correspondence analysis of the one-hot indicator matrix
+//!   `Z ∈ {0,1}^{m × n·c}`: row-profile normalisation then truncated SVD.
+//!   The `n·c` blow-up is the reason Table 3 reports MCA OOM on the three
+//!   big datasets.
+//!
+//! None of these estimate Hamming distance (the paper's point); they
+//! participate in the clustering and timing experiments.
+
+use super::{DimReducer, Reduced};
+use crate::data::CategoricalDataset;
+use crate::linalg::sparse::{sparse_randomized_svd, Csr};
+use crate::linalg::Matrix;
+
+fn scores_from_svd(svd: crate::linalg::Svd) -> Matrix {
+    // embedding = U_k Σ_k
+    let mut u = svd.u;
+    for c in 0..svd.s.len().min(u.cols) {
+        for r in 0..u.rows {
+            let v = u.get(r, c) * svd.s[c];
+            u.set(r, c, v);
+        }
+    }
+    u
+}
+
+pub struct Lsa;
+
+impl DimReducer for Lsa {
+    fn key(&self) -> &'static str {
+        "lsa"
+    }
+
+    fn name(&self) -> &'static str {
+        "LSA [11]"
+    }
+
+    fn reduce(&self, ds: &CategoricalDataset, dim: usize, seed: u64) -> Reduced {
+        let a = Csr::from_dataset(ds);
+        let k = dim.min(ds.len().saturating_sub(1)).max(1);
+        let svd = sparse_randomized_svd(&a, k, 8, 2, seed);
+        Reduced::Real {
+            embedding: scores_from_svd(svd),
+        }
+    }
+
+    fn is_discrete(&self) -> bool {
+        false
+    }
+}
+
+pub struct Pca;
+
+impl DimReducer for Pca {
+    fn key(&self) -> &'static str {
+        "pca"
+    }
+
+    fn name(&self) -> &'static str {
+        "PCA"
+    }
+
+    fn reduce(&self, ds: &CategoricalDataset, dim: usize, seed: u64) -> Reduced {
+        // Implicit centering: run the randomized range finder on (A − 1μᵀ)
+        // by operating densely on the *projected* side only. For the repro
+        // scales (≤ a few thousand points) we densify the sample matrix —
+        // faithful to sklearn's PCA which densifies too (its OOM mode).
+        let a = Csr::from_dataset(ds).to_dense();
+        let mut centered = a;
+        let mu = centered.col_means();
+        centered.sub_row_vector(&mu);
+        let k = dim.min(ds.len().saturating_sub(1)).max(1);
+        let svd = crate::linalg::randomized_svd(&centered, k, 8, 2, seed);
+        Reduced::Real {
+            embedding: scores_from_svd(svd),
+        }
+    }
+
+    fn is_discrete(&self) -> bool {
+        false
+    }
+}
+
+pub struct Mca;
+
+impl DimReducer for Mca {
+    fn key(&self) -> &'static str {
+        "mca"
+    }
+
+    fn name(&self) -> &'static str {
+        "MCA [5]"
+    }
+
+    fn reduce(&self, ds: &CategoricalDataset, dim: usize, seed: u64) -> Reduced {
+        // Indicator matrix Z (m × n·c), row-normalised to profiles, then
+        // truncated SVD. Column masses are folded in approximately via
+        // 1/√(colsum) scaling (full CA weighting without densifying).
+        let z = Csr::one_hot_from_dataset(ds);
+        let mut colsum = vec![0.0f64; z.cols];
+        for r in 0..z.rows {
+            let rg = z.row_range(r);
+            for (&c, &v) in z.indices[rg.clone()].iter().zip(&z.values[rg]) {
+                colsum[c as usize] += v;
+            }
+        }
+        // scale values: v / (rowlen · √colsum)
+        let mut scaled = z.clone();
+        for r in 0..scaled.rows {
+            let rg = scaled.row_range(r);
+            let rowlen: f64 = scaled.values[rg.clone()].iter().sum();
+            let rg2 = scaled.row_range(r);
+            let inv_row = if rowlen > 0.0 { 1.0 / rowlen } else { 0.0 };
+            for k in rg2 {
+                let c = scaled.indices[k] as usize;
+                let cs = colsum[c];
+                scaled.values[k] *= inv_row / cs.max(1e-12).sqrt();
+            }
+        }
+        let k = dim.min(ds.len().saturating_sub(1)).max(1);
+        let svd = sparse_randomized_svd(&scaled, k, 8, 2, seed);
+        Reduced::Real {
+            embedding: scores_from_svd(svd),
+        }
+    }
+
+    fn is_discrete(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{kmeans, metrics::purity};
+    use crate::data::synth::SynthSpec;
+
+    fn topic_ds() -> (CategoricalDataset, Vec<usize>) {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 60;
+        spec.topics = 3;
+        spec.topic_sharpness = 0.95;
+        spec.dim = 800;
+        spec.generate_labeled(21)
+    }
+
+    #[test]
+    fn lsa_embedding_clusters_topics() {
+        let (ds, labels) = topic_ds();
+        let red = Lsa.reduce(&ds, 8, 3);
+        let m = red.to_matrix();
+        let res = kmeans(&m, 3, 40, 7);
+        let p = purity(&labels, &res.assignments);
+        assert!(p > 0.7, "purity {p}");
+    }
+
+    #[test]
+    fn pca_embedding_shape() {
+        let (ds, _) = topic_ds();
+        let red = Pca.reduce(&ds, 5, 1);
+        let m = red.to_matrix();
+        assert_eq!(m.rows, 60);
+        assert_eq!(m.cols, 5);
+        // components carry decreasing variance
+        let var = |c: usize| -> f64 {
+            let mean: f64 = (0..m.rows).map(|r| m.get(r, c)).sum::<f64>() / m.rows as f64;
+            (0..m.rows)
+                .map(|r| (m.get(r, c) - mean).powi(2))
+                .sum::<f64>()
+        };
+        assert!(var(0) >= var(4));
+    }
+
+    #[test]
+    fn mca_runs_on_one_hot() {
+        let (ds, labels) = topic_ds();
+        let red = Mca.reduce(&ds, 6, 5);
+        let m = red.to_matrix();
+        assert_eq!(m.rows, 60);
+        let res = kmeans(&m, 3, 40, 7);
+        let p = purity(&labels, &res.assignments);
+        assert!(p > 0.55, "purity {p}");
+    }
+}

@@ -1,0 +1,235 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage in a `[[bench]] harness = false` target:
+//!
+//! ```ignore
+//! let mut b = cabin::bench::Bench::from_env("bench_cham");
+//! b.bench("cham/allpairs/2000x1000", || { ...work... });
+//! b.finish();
+//! ```
+//!
+//! The harness warms up, then runs timed iterations until both a minimum
+//! iteration count and a minimum measurement time are reached, and reports
+//! mean/p50/p95 plus throughput when provided. Results are also appended to
+//! `results/bench_<name>.csv` so the paper-table drivers can consume them.
+
+use crate::util::timer::{LatencyStats, Stopwatch, Summary};
+use std::io::Write;
+
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_secs: f64,
+    /// Overall wall-clock cap per benchmark (e.g. DNS cut-off in repro runs).
+    pub max_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            min_secs: 0.5,
+            max_secs: 30.0,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast profile for CI / `--fast` runs.
+    pub fn fast() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 2,
+            max_iters: 20,
+            min_secs: 0.05,
+            max_secs: 5.0,
+        }
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub throughput_units: Option<f64>,
+}
+
+pub struct Bench {
+    pub suite: String,
+    pub config: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(suite: &str, config: BenchConfig) -> Self {
+        Self {
+            suite: suite.to_string(),
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Honour `CABIN_BENCH_FAST=1` (used by `cargo bench` in CI).
+    pub fn from_env(suite: &str) -> Self {
+        let cfg = if std::env::var("CABIN_BENCH_FAST").ok().as_deref() == Some("1") {
+            BenchConfig::fast()
+        } else {
+            BenchConfig::default()
+        };
+        Self::new(suite, cfg)
+    }
+
+    /// Time `f` repeatedly; returns mean seconds per iteration.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> f64 {
+        self.bench_with_throughput(name, None, f)
+    }
+
+    /// Like [`Bench::bench`] but reports `units/sec` (e.g. points, pairs).
+    pub fn bench_with_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        mut f: F,
+    ) -> f64 {
+        for _ in 0..self.config.warmup_iters {
+            f();
+        }
+        let mut stats = LatencyStats::new();
+        let total = Stopwatch::start();
+        let mut iters = 0usize;
+        loop {
+            let sw = Stopwatch::start();
+            f();
+            stats.record(sw.elapsed_secs());
+            iters += 1;
+            let t = total.elapsed_secs();
+            let enough = iters >= self.config.min_iters && t >= self.config.min_secs;
+            let capped = iters >= self.config.max_iters || t >= self.config.max_secs;
+            if enough || capped {
+                break;
+            }
+        }
+        let summary = stats.summary();
+        println!(
+            "{:<52} {}",
+            format!("{}/{}", self.suite, name),
+            summary.format_line(units)
+        );
+        let mean = summary.mean;
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary,
+            throughput_units: units,
+        });
+        mean
+    }
+
+    /// Write accumulated results to `results/bench_<suite>.csv`.
+    pub fn finish(&self) {
+        if self.results.is_empty() {
+            return;
+        }
+        let _ = std::fs::create_dir_all("results");
+        let path = format!("results/bench_{}.csv", self.suite);
+        let mut out = String::from("name,iters,mean_s,p50_s,p95_s,p99_s,max_s,thrpt_per_s\n");
+        for r in &self.results {
+            let thrpt = match r.throughput_units {
+                Some(u) if r.summary.mean > 0.0 => format!("{:.3}", u / r.summary.mean),
+                _ => String::new(),
+            };
+            out.push_str(&format!(
+                "{},{},{:.9},{:.9},{:.9},{:.9},{:.9},{}\n",
+                r.name,
+                r.summary.count,
+                r.summary.mean,
+                r.summary.p50,
+                r.summary.p95,
+                r.summary.p99,
+                r.summary.max,
+                thrpt
+            ));
+        }
+        if let Ok(mut f) = std::fs::File::create(&path) {
+            let _ = f.write_all(out.as_bytes());
+        }
+        println!("[bench] wrote {}", path);
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Time a single closure once (used by the repro drivers where algorithms
+/// are too slow to iterate, mirroring the paper's one-shot DR timings).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let v = f();
+    (v, sw.elapsed_secs())
+}
+
+/// Run `f` with a wall-clock budget; `None` means it exceeded the budget
+/// (the paper's "DNS — did not stop"). The closure is run on a worker
+/// thread; on timeout the thread is left to finish in the background
+/// (detached) — callers should only use this at process scope.
+pub fn time_budgeted<T: Send + 'static, F: FnOnce() -> T + Send + 'static>(
+    budget_secs: f64,
+    f: F,
+) -> Option<(T, f64)> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let sw = Stopwatch::start();
+        let v = f();
+        let _ = tx.send((v, sw.elapsed_secs()));
+    });
+    rx.recv_timeout(std::time::Duration::from_secs_f64(budget_secs))
+        .ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bench::new(
+            "testsuite",
+            BenchConfig {
+                warmup_iters: 1,
+                min_iters: 3,
+                max_iters: 5,
+                min_secs: 0.0,
+                max_secs: 1.0,
+            },
+        );
+        let mut count = 0usize;
+        b.bench("noop", || {
+            count += 1;
+        });
+        assert!(count >= 3);
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].summary.count >= 3);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, t) = time_once(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn budget_times_out() {
+        let r = time_budgeted(0.05, || {
+            std::thread::sleep(std::time::Duration::from_millis(500));
+            1
+        });
+        assert!(r.is_none());
+        let r = time_budgeted(5.0, || 7);
+        assert_eq!(r.unwrap().0, 7);
+    }
+}

@@ -1,0 +1,313 @@
+//! k-mode clustering (Huang, DMKD 1998) — k-means analogue under Hamming
+//! distance for categorical data. Used twice in the reproduction:
+//!
+//! * on the **full-dimensional** dataset to produce the ground-truth
+//!   clustering (the paper's protocol), and
+//! * on **binary sketches** ([`kmode_binary`]) where the mode is the
+//!   majority bit per position.
+//!
+//! Both use k-means++-style seeding driven by a shared seed so every
+//! method is initialised from the same points (paper Section 5.4).
+
+use crate::data::{CatVector, CategoricalDataset};
+use crate::sketch::BitVec;
+use crate::util::parallel;
+use crate::util::rng::Xoshiro256;
+use std::collections::HashMap;
+
+/// Result of a clustering run.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    pub assignments: Vec<usize>,
+    pub iterations: usize,
+    /// Sum of point-to-centre Hamming distances at convergence.
+    pub cost: f64,
+}
+
+/// k-means++ seeding under an arbitrary distance oracle: picks `k` point
+/// indices. Shared by the categorical and binary variants (and by k-means,
+/// so every method sees the same initial centres for the same seed).
+pub fn kpp_indices<D: Fn(usize, usize) -> f64>(
+    n: usize,
+    k: usize,
+    dist: D,
+    rng: &mut Xoshiro256,
+) -> Vec<usize> {
+    assert!(k >= 1 && n >= k);
+    let mut centres = Vec::with_capacity(k);
+    centres.push(rng.usize_in(0, n));
+    let mut d2: Vec<f64> = (0..n).map(|i| dist(i, centres[0]).powi(2)).collect();
+    while centres.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.usize_in(0, n)
+        } else {
+            let mut r = rng.next_f64() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                r -= w;
+                if r <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        centres.push(next);
+        for i in 0..n {
+            let nd = dist(i, next).powi(2);
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    centres
+}
+
+/// k-mode over categorical vectors. Lloyd-style alternation:
+/// assign → recompute per-attribute modes → repeat.
+pub fn kmode(ds: &CategoricalDataset, k: usize, max_iters: usize, seed: u64) -> Clustering {
+    let n = ds.len();
+    assert!(n >= k && k >= 1);
+    let mut rng = Xoshiro256::new(seed);
+    let init = kpp_indices(
+        n,
+        k,
+        |i, j| ds.points[i].hamming(&ds.points[j]) as f64,
+        &mut rng,
+    );
+    let mut centres: Vec<CatVector> = init.iter().map(|&i| ds.points[i].clone()).collect();
+    let mut assign = vec![usize::MAX; n];
+    let threads = parallel::default_threads();
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // assignment step (parallel)
+        let new_assign: Vec<usize> = {
+            let centres = &centres;
+            parallel::par_map(n, threads, |i| {
+                let mut best = (usize::MAX, 0usize);
+                for (c, centre) in centres.iter().enumerate() {
+                    let d = ds.points[i].hamming(centre);
+                    if d < best.0 {
+                        best = (d, c);
+                    }
+                }
+                best.1
+            })
+        };
+        let changed = new_assign
+            .iter()
+            .zip(&assign)
+            .filter(|(a, b)| a != b)
+            .count();
+        assign = new_assign;
+        if changed == 0 && it > 0 {
+            break;
+        }
+        // update step: per-cluster per-attribute mode over *present* values;
+        // an attribute goes into the mode only if its most frequent value
+        // (counting "missing" as a value) is non-missing.
+        let mut counts: Vec<HashMap<(u32, u16), usize>> = vec![HashMap::new(); k];
+        let mut sizes = vec![0usize; k];
+        for (i, &c) in assign.iter().enumerate() {
+            sizes[c] += 1;
+            for &(attr, val) in ds.points[i].entries() {
+                *counts[c].entry((attr, val)).or_insert(0) += 1;
+            }
+        }
+        for c in 0..k {
+            if sizes[c] == 0 {
+                // empty cluster: reseed from the farthest point
+                let far = (0..n)
+                    .max_by_key(|&i| ds.points[i].hamming(&centres[assign[i]]))
+                    .unwrap();
+                centres[c] = ds.points[far].clone();
+                continue;
+            }
+            // best value per attribute
+            let mut best: HashMap<u32, (u16, usize)> = HashMap::new();
+            for (&(attr, val), &cnt) in &counts[c] {
+                let e = best.entry(attr).or_insert((val, cnt));
+                if cnt > e.1 || (cnt == e.1 && val < e.0) {
+                    *e = (val, cnt);
+                }
+            }
+            let mut pairs: Vec<(u32, u16)> = best
+                .into_iter()
+                // value wins over "missing" iff present in > half the pts
+                .filter(|&(_, (_, cnt))| 2 * cnt > sizes[c])
+                .map(|(attr, (val, _))| (attr, val))
+                .collect();
+            pairs.sort_unstable_by_key(|&(a, _)| a);
+            centres[c] = CatVector::from_pairs(ds.dim(), pairs);
+        }
+    }
+    let cost = (0..n)
+        .map(|i| ds.points[i].hamming(&centres[assign[i]]) as f64)
+        .sum();
+    Clustering {
+        assignments: assign,
+        iterations,
+        cost,
+    }
+}
+
+/// k-mode over binary sketches: distance = Hamming on bits, mode = majority
+/// bit. This is what "clustering the Cabin sketches" means.
+pub fn kmode_binary(points: &[BitVec], k: usize, max_iters: usize, seed: u64) -> Clustering {
+    let n = points.len();
+    assert!(n >= k && k >= 1);
+    let d = points[0].len();
+    let mut rng = Xoshiro256::new(seed);
+    let init = kpp_indices(n, k, |i, j| points[i].xor_count(&points[j]) as f64, &mut rng);
+    let mut centres: Vec<BitVec> = init.iter().map(|&i| points[i].clone()).collect();
+    let mut assign = vec![usize::MAX; n];
+    let threads = parallel::default_threads();
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        let new_assign: Vec<usize> = {
+            let centres = &centres;
+            parallel::par_map(n, threads, |i| {
+                let mut best = (usize::MAX, 0usize);
+                for (c, centre) in centres.iter().enumerate() {
+                    let dist = points[i].xor_count(centre);
+                    if dist < best.0 {
+                        best = (dist, c);
+                    }
+                }
+                best.1
+            })
+        };
+        let changed = new_assign
+            .iter()
+            .zip(&assign)
+            .filter(|(a, b)| a != b)
+            .count();
+        assign = new_assign;
+        if changed == 0 && it > 0 {
+            break;
+        }
+        // majority bit per position
+        let mut ones = vec![vec![0usize; d]; k];
+        let mut sizes = vec![0usize; k];
+        for (i, &c) in assign.iter().enumerate() {
+            sizes[c] += 1;
+            for b in points[i].iter_ones() {
+                ones[c][b] += 1;
+            }
+        }
+        for c in 0..k {
+            if sizes[c] == 0 {
+                let far = (0..n)
+                    .max_by_key(|&i| points[i].xor_count(&centres[assign[i]]))
+                    .unwrap();
+                centres[c] = points[far].clone();
+                continue;
+            }
+            let mut centre = BitVec::zeros(d);
+            for (b, &cnt) in ones[c].iter().enumerate() {
+                if 2 * cnt > sizes[c] {
+                    centre.set(b);
+                }
+            }
+            centres[c] = centre;
+        }
+    }
+    let cost = (0..n)
+        .map(|i| points[i].xor_count(&centres[assign[i]]) as f64)
+        .sum();
+    Clustering {
+        assignments: assign,
+        iterations,
+        cost,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::metrics::purity;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn kpp_returns_distinct_indices_mostly() {
+        let mut rng = Xoshiro256::new(1);
+        let pts: Vec<f64> = vec![0.0, 0.1, 5.0, 5.1, 10.0, 10.1];
+        let idx = kpp_indices(6, 3, |i, j| (pts[i] - pts[j]).abs(), &mut rng);
+        assert_eq!(idx.len(), 3);
+        // should pick one from each well-separated pair
+        let mut groups: Vec<usize> = idx.iter().map(|&i| i / 2).collect();
+        groups.sort_unstable();
+        groups.dedup();
+        assert_eq!(groups.len(), 3, "idx {:?}", idx);
+    }
+
+    #[test]
+    fn kmode_recovers_planted_clusters() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 90;
+        spec.topics = 3;
+        spec.topic_sharpness = 0.95;
+        spec.dim = 2000;
+        let (ds, labels) = spec.generate_labeled(11);
+        let res = kmode(&ds, 3, 30, 7);
+        let p = purity(&labels, &res.assignments);
+        assert!(p > 0.8, "purity {}", p);
+        assert!(res.iterations >= 2);
+    }
+
+    #[test]
+    fn kmode_binary_recovers_planted_bits() {
+        // three bit-prototypes with small noise
+        let mut rng = Xoshiro256::new(3);
+        let d = 256;
+        let protos: Vec<BitVec> = (0..3)
+            .map(|_| BitVec::from_indices(d, rng.sample_indices(d, 60)))
+            .collect();
+        let mut pts = Vec::new();
+        let mut truth = Vec::new();
+        for i in 0..90 {
+            let c = i % 3;
+            truth.push(c);
+            let mut p = protos[c].clone();
+            for _ in 0..6 {
+                let b = rng.usize_in(0, d);
+                if p.get(b) {
+                    p.clear(b);
+                } else {
+                    p.set(b);
+                }
+            }
+            pts.push(p);
+        }
+        let res = kmode_binary(&pts, 3, 30, 5);
+        let p = purity(&truth, &res.assignments);
+        assert!(p > 0.9, "purity {}", p);
+    }
+
+    #[test]
+    fn cost_is_consistent() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 40;
+        let ds = spec.generate(2);
+        let res = kmode(&ds, 4, 10, 1);
+        assert!(res.cost >= 0.0);
+        assert_eq!(res.assignments.len(), 40);
+        assert!(res.assignments.iter().all(|&a| a < 4));
+    }
+
+    #[test]
+    fn k_equals_n_perfect() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 5;
+        let ds = spec.generate(4);
+        let res = kmode(&ds, 5, 10, 3);
+        let mut sorted = res.assignments.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 5); // every point its own cluster
+        assert_eq!(res.cost, 0.0);
+    }
+}

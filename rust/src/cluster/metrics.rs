@@ -1,0 +1,175 @@
+//! Clustering quality metrics (paper Subsection 3.2): purity index,
+//! normalised mutual information, adjusted Rand index.
+
+/// Contingency table between two labelings.
+fn contingency(truth: &[usize], pred: &[usize]) -> (Vec<Vec<usize>>, Vec<usize>, Vec<usize>) {
+    assert_eq!(truth.len(), pred.len());
+    let kt = truth.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    let kp = pred.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    let mut table = vec![vec![0usize; kp]; kt];
+    for (&t, &p) in truth.iter().zip(pred) {
+        table[t][p] += 1;
+    }
+    let a: Vec<usize> = table.iter().map(|row| row.iter().sum()).collect();
+    let mut b = vec![0usize; kp];
+    for row in &table {
+        for (j, &v) in row.iter().enumerate() {
+            b[j] += v;
+        }
+    }
+    (table, a, b)
+}
+
+/// Purity index: `1/m · Σ_j max_i |ω_i ∩ c_j|` ∈ [0,1].
+pub fn purity(truth: &[usize], pred: &[usize]) -> f64 {
+    if truth.is_empty() {
+        return 0.0;
+    }
+    let (table, _, b) = contingency(truth, pred);
+    let kp = b.len();
+    let mut total = 0usize;
+    for j in 0..kp {
+        let best = table.iter().map(|row| row[j]).max().unwrap_or(0);
+        total += best;
+    }
+    total as f64 / truth.len() as f64
+}
+
+/// Normalised mutual information: `I(Ω;C) / √(H(Ω)·H(C))` ∈ [0,1].
+/// (The paper prints the un-normalised MI formula but calls it NMI and
+/// reports values in [0,1]; we use the standard √-normalised variant.)
+pub fn normalized_mutual_information(truth: &[usize], pred: &[usize]) -> f64 {
+    let m = truth.len();
+    if m == 0 {
+        return 0.0;
+    }
+    let (table, a, b) = contingency(truth, pred);
+    let mf = m as f64;
+    let mut mi = 0.0;
+    for (i, row) in table.iter().enumerate() {
+        for (j, &nij) in row.iter().enumerate() {
+            if nij == 0 {
+                continue;
+            }
+            let nij = nij as f64;
+            mi += nij / mf * ((mf * nij) / (a[i] as f64 * b[j] as f64)).ln();
+        }
+    }
+    let h = |counts: &[usize]| -> f64 {
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / mf;
+                -p * p.ln()
+            })
+            .sum()
+    };
+    let (ht, hp) = (h(&a), h(&b));
+    if ht <= 0.0 || hp <= 0.0 {
+        // one side is a single cluster: MI is 0; conventionally NMI = 1 if
+        // both are single identical clusters, else 0.
+        return if ht == hp { 1.0 } else { 0.0 };
+    }
+    (mi / (ht * hp).sqrt()).clamp(0.0, 1.0)
+}
+
+fn comb2(n: usize) -> f64 {
+    let n = n as f64;
+    n * (n - 1.0) / 2.0
+}
+
+/// Adjusted Rand index ∈ [-1,1].
+pub fn adjusted_rand_index(truth: &[usize], pred: &[usize]) -> f64 {
+    let m = truth.len();
+    if m < 2 {
+        return 1.0;
+    }
+    let (table, a, b) = contingency(truth, pred);
+    let sum_ij: f64 = table
+        .iter()
+        .flat_map(|row| row.iter())
+        .map(|&v| comb2(v))
+        .sum();
+    let sum_a: f64 = a.iter().map(|&v| comb2(v)).sum();
+    let sum_b: f64 = b.iter().map(|&v| comb2(v)).sum();
+    let total = comb2(m);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0; // degenerate: both labelings trivial
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_clustering_scores_one() {
+        let t = vec![0, 0, 1, 1, 2, 2];
+        assert!((purity(&t, &t) - 1.0).abs() < 1e-12);
+        assert!((normalized_mutual_information(&t, &t) - 1.0).abs() < 1e-9);
+        assert!((adjusted_rand_index(&t, &t) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permuted_labels_still_perfect() {
+        let t = vec![0, 0, 1, 1, 2, 2];
+        let p = vec![2, 2, 0, 0, 1, 1];
+        assert!((purity(&t, &p) - 1.0).abs() < 1e-12);
+        assert!((normalized_mutual_information(&t, &p) - 1.0).abs() < 1e-9);
+        assert!((adjusted_rand_index(&t, &p) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_labels_score_low() {
+        // alternating truth vs "split in half" pred
+        let t: Vec<usize> = (0..100).map(|i| i % 2).collect();
+        let p: Vec<usize> = (0..100).map(|i| (i >= 50) as usize).collect();
+        let ari = adjusted_rand_index(&t, &p);
+        assert!(ari.abs() < 0.05, "ari {}", ari);
+        let nmi = normalized_mutual_information(&t, &p);
+        assert!(nmi < 0.05, "nmi {}", nmi);
+    }
+
+    #[test]
+    fn purity_hand_example() {
+        // Manning IR book example: clusters x=[A A A A A B], o=[A B B B B C],
+        // d=[A A C C C C] → purity = (5+4+3)/17
+        let truth = vec![
+            0, 0, 0, 0, 0, 1, // cluster 0
+            0, 1, 1, 1, 1, 2, // cluster 1
+            0, 0, 2, 2, 2, // cluster 2 (5 items)
+        ];
+        let pred = vec![0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1, 2, 2, 2, 2, 2];
+        let p = purity(&truth, &pred);
+        assert!((p - 12.0 / 17.0).abs() < 1e-9, "purity {}", p);
+    }
+
+    #[test]
+    fn ari_known_value() {
+        // sklearn doc example: ARI([0,0,1,1],[0,0,1,2]) = 0.5714285714
+        let ari = adjusted_rand_index(&[0, 0, 1, 1], &[0, 0, 1, 2]);
+        assert!((ari - 0.5714285714285714).abs() < 1e-9, "ari {}", ari);
+    }
+
+    #[test]
+    fn nmi_symmetry() {
+        let t = vec![0, 0, 1, 1, 2, 2, 2];
+        let p = vec![0, 1, 1, 1, 0, 2, 2];
+        let a = normalized_mutual_information(&t, &p);
+        let b = normalized_mutual_information(&p, &t);
+        assert!((a - b).abs() < 1e-12);
+        assert!(a > 0.0 && a < 1.0);
+    }
+
+    #[test]
+    fn single_cluster_degenerate() {
+        let t = vec![0, 0, 0];
+        let p = vec![0, 0, 0];
+        assert_eq!(normalized_mutual_information(&t, &p), 1.0);
+        assert_eq!(adjusted_rand_index(&t, &p), 1.0);
+    }
+}

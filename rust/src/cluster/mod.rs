@@ -1,0 +1,19 @@
+//! Clustering substrate for the paper's evaluation (Figures 6–10).
+//!
+//! * [`kmode`] — Huang's k-mode for categorical / Hamming data (the paper's
+//!   ground-truth producer and the algorithm run on discrete sketches).
+//! * [`kmeans`] — Lloyd's k-means with k-means++ seeding (run on the
+//!   real-valued baselines' sketches, exactly as the paper does).
+//! * [`metrics`] — purity index, NMI, ARI (Subsection 3.2).
+//!
+//! Both algorithms accept a shared seed so all methods start from the same
+//! initial centre *indices*, mirroring the paper's "same random seed for all
+//! baselines" protocol.
+
+pub mod kmeans;
+pub mod kmode;
+pub mod metrics;
+
+pub use kmeans::kmeans;
+pub use kmode::{kmode, kmode_binary};
+pub use metrics::{adjusted_rand_index, normalized_mutual_information, purity};

@@ -1,0 +1,318 @@
+//! Dynamic batcher: the serving-path component that turns a stream of
+//! single-vector inserts into sketching batches.
+//!
+//! Flush policy (vLLM-style): a batch is dispatched when it reaches
+//! `max_batch` items OR the oldest queued item has waited `max_delay`.
+//! The queue is bounded (`queue_cap`); submitters block when it is full —
+//! backpressure propagates to the TCP layer.
+//!
+//! The backend is pluggable: the XLA engine (fixed-batch AOT artifact,
+//! padded) when the corpus configuration matches the artifacts, else the
+//! native fused sketcher.
+
+use super::metrics::Metrics;
+use super::store::ShardedStore;
+use crate::data::CatVector;
+use crate::runtime::XlaHandle;
+use crate::sketch::{BitVec, CabinSketcher};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 4096,
+        }
+    }
+}
+
+/// Which sketching backend executes a flushed batch.
+pub enum SketchBackend {
+    Native(CabinSketcher),
+    /// XLA artifact path (thread-confined worker); falls back to the
+    /// bundled native sketcher for oversize batches or worker errors.
+    Xla(XlaHandle, CabinSketcher),
+}
+
+impl SketchBackend {
+    pub fn sketch_batch(&self, batch: &[CatVector], metrics: &Metrics) -> Vec<BitVec> {
+        match self {
+            SketchBackend::Native(sk) => {
+                metrics.native_batches.fetch_add(1, Ordering::Relaxed);
+                batch.iter().map(|p| sk.sketch(p)).collect()
+            }
+            SketchBackend::Xla(handle, fallback) => {
+                if batch.len() <= handle.manifest.m {
+                    match handle.cabin_sketch(batch.to_vec()) {
+                        Ok(s) => {
+                            metrics.xla_batches.fetch_add(1, Ordering::Relaxed);
+                            return s;
+                        }
+                        Err(e) => eprintln!("[batcher] xla failed, native fallback: {e:#}"),
+                    }
+                }
+                metrics.native_batches.fetch_add(1, Ordering::Relaxed);
+                batch.iter().map(|p| fallback.sketch(p)).collect()
+            }
+        }
+    }
+
+    pub fn sketcher(&self) -> &CabinSketcher {
+        match self {
+            SketchBackend::Native(sk) => sk,
+            SketchBackend::Xla(_, sk) => sk,
+        }
+    }
+}
+
+struct Pending {
+    vec: CatVector,
+    enqueued: Instant,
+    reply: SyncSender<usize>,
+}
+
+/// Handle used by connection threads to submit inserts.
+#[derive(Clone)]
+pub struct BatchSubmitter {
+    tx: SyncSender<Pending>,
+}
+
+impl BatchSubmitter {
+    /// Blocking submit; returns the assigned global id once the batch the
+    /// item landed in has been flushed.
+    pub fn insert(&self, vec: CatVector) -> anyhow::Result<usize> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Pending {
+                vec,
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("batcher stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("batcher dropped reply"))
+    }
+
+    /// Non-blocking submit (used by load generators to observe
+    /// backpressure). Err(vec) when the queue is full.
+    pub fn try_insert_nowait(&self, vec: CatVector) -> Result<Receiver<usize>, CatVector> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        match self.tx.try_send(Pending {
+            vec,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        }) {
+            Ok(()) => Ok(reply_rx),
+            Err(TrySendError::Full(p)) | Err(TrySendError::Disconnected(p)) => Err(p.vec),
+        }
+    }
+}
+
+/// The batcher worker. Owns the backend and writes into the store.
+pub struct Batcher {
+    pub submitter: BatchSubmitter,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(
+        config: BatcherConfig,
+        backend: SketchBackend,
+        store: Arc<ShardedStore>,
+        metrics: Arc<Metrics>,
+    ) -> Batcher {
+        let (tx, rx) = sync_channel::<Pending>(config.queue_cap);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("cabin-batcher".into())
+            .spawn(move || run_loop(config, backend, store, metrics, rx, stop2))
+            .expect("spawn batcher");
+        Batcher {
+            submitter: BatchSubmitter { tx },
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn run_loop(
+    config: BatcherConfig,
+    backend: SketchBackend,
+    store: Arc<ShardedStore>,
+    metrics: Arc<Metrics>,
+    rx: Receiver<Pending>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut pending: Vec<Pending> = Vec::with_capacity(config.max_batch);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            flush(&backend, &store, &metrics, &mut pending);
+            return;
+        }
+        // Wait for the first item (with timeout so we notice stop).
+        if pending.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(p) => pending.push(p),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    flush(&backend, &store, &metrics, &mut pending);
+                    return;
+                }
+            }
+        }
+        // Accumulate until size or deadline.
+        let deadline = pending[0].enqueued + config.max_delay;
+        while pending.len() < config.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(p) => pending.push(p),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        flush(&backend, &store, &metrics, &mut pending);
+    }
+}
+
+fn flush(
+    backend: &SketchBackend,
+    store: &ShardedStore,
+    metrics: &Metrics,
+    pending: &mut Vec<Pending>,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let batch: Vec<CatVector> = pending.iter().map(|p| p.vec.clone()).collect();
+    let sketches = backend.sketch_batch(&batch, metrics);
+    let ids = store.insert_batch(sketches);
+    metrics.batches_flushed.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .batch_items
+        .fetch_add(pending.len() as u64, Ordering::Relaxed);
+    for (p, id) in pending.drain(..).zip(ids) {
+        metrics.record_insert_latency(p.enqueued.elapsed().as_secs_f64());
+        let _ = p.reply.send(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SketchConfig;
+    use crate::util::rng::Xoshiro256;
+
+    fn setup(max_batch: usize, delay_ms: u64) -> (Batcher, Arc<ShardedStore>, Arc<Metrics>) {
+        let store = Arc::new(ShardedStore::new(2, 128));
+        let metrics = Arc::new(Metrics::new());
+        let sk = CabinSketcher::from_config(SketchConfig::new(500, 8, 128, 7));
+        let b = Batcher::start(
+            BatcherConfig {
+                max_batch,
+                max_delay: Duration::from_millis(delay_ms),
+                queue_cap: 256,
+            },
+            SketchBackend::Native(sk),
+            store.clone(),
+            metrics.clone(),
+        );
+        (b, store, metrics)
+    }
+
+    #[test]
+    fn inserts_assign_unique_ids() {
+        let (mut b, store, _m) = setup(8, 2);
+        let mut rng = Xoshiro256::new(1);
+        let mut ids = Vec::new();
+        for _ in 0..20 {
+            let v = CatVector::random(500, 20, 8, &mut rng);
+            ids.push(b.submitter.insert(v).unwrap());
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 20);
+        assert_eq!(store.len(), 20);
+        b.shutdown();
+    }
+
+    #[test]
+    fn batches_form_under_concurrency() {
+        let (mut b, _store, metrics) = setup(16, 20);
+        let mut rng = Xoshiro256::new(2);
+        let vecs: Vec<CatVector> = (0..64).map(|_| CatVector::random(500, 30, 8, &mut rng)).collect();
+        std::thread::scope(|s| {
+            for chunk in vecs.chunks(8) {
+                let sub = b.submitter.clone();
+                s.spawn(move || {
+                    for v in chunk {
+                        sub.insert(v.clone()).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(metrics.batch_items.load(Ordering::Relaxed), 64);
+        // with 8 concurrent producers and 20ms delay, batching must occur
+        assert!(
+            metrics.mean_batch_size() > 1.5,
+            "mean batch {}",
+            metrics.mean_batch_size()
+        );
+        b.shutdown();
+    }
+
+    #[test]
+    fn sketches_match_native_path() {
+        let (mut b, store, _m) = setup(4, 1);
+        let mut rng = Xoshiro256::new(3);
+        let sk = CabinSketcher::from_config(SketchConfig::new(500, 8, 128, 7));
+        let v = CatVector::random(500, 25, 8, &mut rng);
+        let id = b.submitter.insert(v.clone()).unwrap();
+        let stored = store.get(id).unwrap();
+        assert_eq!(stored, sk.sketch(&v));
+        b.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let (mut b, store, _m) = setup(1000, 10_000); // never flush by policy
+        let mut rng = Xoshiro256::new(4);
+        let sub = b.submitter.clone();
+        let h = std::thread::spawn(move || {
+            sub.insert(CatVector::random(500, 10, 8, &mut rng)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        b.shutdown(); // must flush the waiting item
+        h.join().unwrap();
+        assert_eq!(store.len(), 1);
+    }
+}

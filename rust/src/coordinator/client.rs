@@ -1,0 +1,79 @@
+//! Blocking TCP client for the coordinator — used by the examples, the
+//! end-to-end integration test and the load-generating bench.
+
+use super::protocol::{Hit, Request, Response};
+use crate::data::CatVector;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        writeln!(self.writer, "{}", req.to_json_line())?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("server closed connection");
+        }
+        Response::from_json_line(line.trim())
+    }
+
+    pub fn insert(&mut self, vec: CatVector) -> Result<usize> {
+        match self.call(&Request::Insert { vec })? {
+            Response::Inserted { id } => Ok(id),
+            Response::Error { message } => bail!("insert failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn query(&mut self, vec: CatVector, k: usize) -> Result<Vec<Hit>> {
+        match self.call(&Request::Query { vec, k })? {
+            Response::Hits { hits } => Ok(hits),
+            Response::Error { message } => bail!("query failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn distance(&mut self, a: usize, b: usize) -> Result<f64> {
+        match self.call(&Request::Distance { a, b })? {
+            Response::Distance { dist } => Ok(dist),
+            Response::Error { message } => bail!("distance failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<Vec<(String, f64)>> {
+        match self.call(&Request::Stats)? {
+            Response::Stats { fields } => Ok(fields),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call(&Request::Shutdown)? {
+            Response::ShuttingDown => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+}

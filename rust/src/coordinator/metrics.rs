@@ -1,0 +1,109 @@
+//! Service metrics: lock-free counters + mutex-guarded latency samples.
+
+use crate::util::timer::LatencyStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub inserts: AtomicU64,
+    pub queries: AtomicU64,
+    pub distances: AtomicU64,
+    pub heatmaps: AtomicU64,
+    pub batches_flushed: AtomicU64,
+    pub batch_items: AtomicU64,
+    pub errors: AtomicU64,
+    pub xla_batches: AtomicU64,
+    pub native_batches: AtomicU64,
+    insert_latency: Mutex<LatencyStats>,
+    query_latency: Mutex<LatencyStats>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_insert_latency(&self, secs: f64) {
+        self.insert_latency.lock().unwrap().record(secs);
+    }
+
+    pub fn record_query_latency(&self, secs: f64) {
+        self.query_latency.lock().unwrap().record(secs);
+    }
+
+    /// Snapshot as flat (name, value) pairs for the Stats response.
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let mut out: Vec<(String, f64)> = vec![
+            ("inserts".into(), self.inserts.load(Ordering::Relaxed) as f64),
+            ("queries".into(), self.queries.load(Ordering::Relaxed) as f64),
+            (
+                "distances".into(),
+                self.distances.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "heatmaps".into(),
+                self.heatmaps.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "batches_flushed".into(),
+                self.batches_flushed.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "batch_items".into(),
+                self.batch_items.load(Ordering::Relaxed) as f64,
+            ),
+            ("errors".into(), self.errors.load(Ordering::Relaxed) as f64),
+            (
+                "xla_batches".into(),
+                self.xla_batches.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "native_batches".into(),
+                self.native_batches.load(Ordering::Relaxed) as f64,
+            ),
+        ];
+        let ins = self.insert_latency.lock().unwrap().summary();
+        let q = self.query_latency.lock().unwrap().summary();
+        out.push(("insert_p50_ms".into(), ins.p50 * 1e3));
+        out.push(("insert_p99_ms".into(), ins.p99 * 1e3));
+        out.push(("query_p50_ms".into(), q.p50 * 1e3));
+        out.push(("query_p99_ms".into(), q.p99 * 1e3));
+        out
+    }
+
+    /// Mean flushed batch size — the batching-efficiency signal used by the
+    /// coordinator bench.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches_flushed.load(Ordering::Relaxed) as f64;
+        if b == 0.0 {
+            0.0
+        } else {
+            self.batch_items.load(Ordering::Relaxed) as f64 / b
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_snapshot() {
+        let m = Metrics::new();
+        m.inserts.fetch_add(3, Ordering::Relaxed);
+        m.batches_flushed.fetch_add(2, Ordering::Relaxed);
+        m.batch_items.fetch_add(10, Ordering::Relaxed);
+        m.record_insert_latency(0.002);
+        let snap = m.snapshot();
+        let get = |k: &str| snap.iter().find(|(n, _)| n == k).unwrap().1;
+        assert_eq!(get("inserts"), 3.0);
+        assert_eq!(m.mean_batch_size(), 5.0);
+        assert!(get("insert_p50_ms") > 1.0);
+    }
+
+    #[test]
+    fn empty_batch_size_zero() {
+        assert_eq!(Metrics::new().mean_batch_size(), 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 coordinator — a streaming *sketch service* around the Cabin/Cham
+//! pipeline, shaped like a serving system: requests arrive over TCP as
+//! line-delimited JSON, inserts flow through a deadline/size dynamic
+//! batcher into the sketching backend (AOT/XLA when artifacts match the
+//! dataset configuration, native bit-packed otherwise), sketches land in
+//! density-balanced shards, and queries scatter/gather across shards for
+//! top-k by estimated Hamming distance.
+//!
+//! ```text
+//!  TCP conn ─┐                        ┌─ shard 0 (sketches, ids)
+//!  TCP conn ─┼─ protocol ─ batcher ───┼─ shard 1        ─┐
+//!  TCP conn ─┘      │        │        └─ shard S-1       ├─ router (top-k merge)
+//!                 metrics   backend (XLA | native)      ─┘
+//! ```
+//!
+//! Backpressure: the batcher queue is bounded; when full, submitters block
+//! (TCP reads pause → kernel backpressure to clients).
+
+pub mod batcher;
+pub mod client;
+pub mod metrics;
+pub mod protocol;
+pub mod router;
+pub mod server;
+pub mod store;
+
+pub use batcher::{BatcherConfig, SketchBackend};
+pub use protocol::{Request, Response};
+pub use server::{Coordinator, CoordinatorConfig};

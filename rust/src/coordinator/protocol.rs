@@ -1,0 +1,350 @@
+//! Wire protocol: one JSON object per line, both directions.
+//!
+//! Requests (`op` discriminates):
+//! ```text
+//! {"op":"insert",  "vec":[0,3,0,…]}             → {"ok":true,"id":17}
+//! {"op":"insert_sparse","dim":4096,"idx":[…],"val":[…]}
+//! {"op":"query",   "vec":[…], "k":5}            → {"ok":true,"hits":[{"id":3,"dist":41.2},…]}
+//! {"op":"distance","a":3,"b":9}                 → {"ok":true,"dist":57.9}
+//! {"op":"heatmap"}                              → {"ok":true,"n":…,"values":[…]}  (small corpora)
+//! {"op":"stats"}                                → {"ok":true, counters…}
+//! {"op":"ping"} / {"op":"shutdown"}
+//! ```
+//! Errors: `{"ok":false,"error":"…"}`.
+
+use crate::data::CatVector;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Insert { vec: CatVector },
+    Query { vec: CatVector, k: usize },
+    Distance { a: usize, b: usize },
+    Heatmap,
+    Stats,
+    Ping,
+    Shutdown,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hit {
+    pub id: usize,
+    pub dist: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Inserted { id: usize },
+    Hits { hits: Vec<Hit> },
+    Distance { dist: f64 },
+    Heatmap { n: usize, values: Vec<f64> },
+    Stats { fields: Vec<(String, f64)> },
+    Pong,
+    ShuttingDown,
+    Error { message: String },
+}
+
+fn parse_vec(obj: &Json, expected_dim: usize) -> Result<CatVector> {
+    if let Some(arr) = obj.get("vec").and_then(|v| v.as_arr()) {
+        let dense: Vec<u16> = arr.iter().map(|x| x.as_f64().unwrap_or(0.0) as u16).collect();
+        if dense.len() != expected_dim {
+            bail!("vector dim {} != corpus dim {}", dense.len(), expected_dim);
+        }
+        return Ok(CatVector::from_dense(&dense));
+    }
+    // sparse form
+    let dim = obj.req_usize("dim")?;
+    if dim != expected_dim {
+        bail!("vector dim {} != corpus dim {}", dim, expected_dim);
+    }
+    let idx = obj.req_arr("idx")?;
+    let val = obj.req_arr("val")?;
+    if idx.len() != val.len() {
+        bail!("idx/val length mismatch");
+    }
+    let pairs = idx
+        .iter()
+        .zip(val)
+        .map(|(i, v)| {
+            (
+                i.as_f64().unwrap_or(0.0) as u32,
+                v.as_f64().unwrap_or(0.0) as u16,
+            )
+        })
+        .collect();
+    Ok(CatVector::from_pairs(dim, pairs))
+}
+
+impl Request {
+    pub fn from_json_line(line: &str, expected_dim: usize) -> Result<Request> {
+        let obj = crate::util::json::parse(line)?;
+        let op = obj.req_str("op")?;
+        Ok(match op {
+            "insert" | "insert_sparse" => Request::Insert {
+                vec: parse_vec(&obj, expected_dim)?,
+            },
+            "query" => Request::Query {
+                vec: parse_vec(&obj, expected_dim)?,
+                k: obj.get("k").and_then(|k| k.as_usize()).unwrap_or(10),
+            },
+            "distance" => Request::Distance {
+                a: obj.req_usize("a")?,
+                b: obj.req_usize("b")?,
+            },
+            "heatmap" => Request::Heatmap,
+            "stats" => Request::Stats,
+            "ping" => Request::Ping,
+            "shutdown" => Request::Shutdown,
+            other => bail!("unknown op '{other}'"),
+        })
+    }
+
+    /// Serialise (used by the client library).
+    pub fn to_json_line(&self) -> String {
+        match self {
+            Request::Insert { vec } => {
+                // sparse form keeps high-dim requests small on the wire
+                let (idx, val): (Vec<f64>, Vec<f64>) = vec
+                    .entries()
+                    .iter()
+                    .map(|&(i, v)| (i as f64, v as f64))
+                    .unzip();
+                Json::obj(vec![
+                    ("op", Json::Str("insert_sparse".into())),
+                    ("dim", Json::Num(vec.dim() as f64)),
+                    ("idx", Json::from_f64s(&idx)),
+                    ("val", Json::from_f64s(&val)),
+                ])
+                .to_string()
+            }
+            Request::Query { vec, k } => {
+                let (idx, val): (Vec<f64>, Vec<f64>) = vec
+                    .entries()
+                    .iter()
+                    .map(|&(i, v)| (i as f64, v as f64))
+                    .unzip();
+                Json::obj(vec![
+                    ("op", Json::Str("query".into())),
+                    ("dim", Json::Num(vec.dim() as f64)),
+                    ("idx", Json::from_f64s(&idx)),
+                    ("val", Json::from_f64s(&val)),
+                    ("k", Json::Num(*k as f64)),
+                ])
+                .to_string()
+            }
+            Request::Distance { a, b } => Json::obj(vec![
+                ("op", Json::Str("distance".into())),
+                ("a", Json::Num(*a as f64)),
+                ("b", Json::Num(*b as f64)),
+            ])
+            .to_string(),
+            Request::Heatmap => r#"{"op":"heatmap"}"#.to_string(),
+            Request::Stats => r#"{"op":"stats"}"#.to_string(),
+            Request::Ping => r#"{"op":"ping"}"#.to_string(),
+            Request::Shutdown => r#"{"op":"shutdown"}"#.to_string(),
+        }
+    }
+}
+
+impl Response {
+    pub fn to_json_line(&self) -> String {
+        match self {
+            Response::Inserted { id } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(*id as f64)),
+            ])
+            .to_string(),
+            Response::Hits { hits } => {
+                let arr = hits
+                    .iter()
+                    .map(|h| {
+                        Json::obj(vec![
+                            ("id", Json::Num(h.id as f64)),
+                            ("dist", Json::Num(h.dist)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![("ok", Json::Bool(true)), ("hits", Json::Arr(arr))]).to_string()
+            }
+            Response::Distance { dist } => {
+                Json::obj(vec![("ok", Json::Bool(true)), ("dist", Json::Num(*dist))]).to_string()
+            }
+            Response::Heatmap { n, values } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("n", Json::Num(*n as f64)),
+                ("values", Json::from_f64s(values)),
+            ])
+            .to_string(),
+            Response::Stats { fields } => {
+                let mut pairs = vec![("ok", Json::Bool(true))];
+                let owned: Vec<(String, Json)> = fields
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                    .collect();
+                let mut obj = std::collections::BTreeMap::new();
+                for (k, v) in pairs.drain(..) {
+                    obj.insert(k.to_string(), v);
+                }
+                for (k, v) in owned {
+                    obj.insert(k, v);
+                }
+                Json::Obj(obj).to_string()
+            }
+            Response::Pong => r#"{"ok":true,"pong":true}"#.to_string(),
+            Response::ShuttingDown => r#"{"ok":true,"shutdown":true}"#.to_string(),
+            Response::Error { message } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(message.clone())),
+            ])
+            .to_string(),
+        }
+    }
+
+    pub fn from_json_line(line: &str) -> Result<Response> {
+        let obj = crate::util::json::parse(line)?;
+        let ok = obj.get("ok").and_then(|b| b.as_bool()).unwrap_or(false);
+        if !ok {
+            return Ok(Response::Error {
+                message: obj
+                    .get("error")
+                    .and_then(|e| e.as_str())
+                    .unwrap_or("unknown")
+                    .to_string(),
+            });
+        }
+        if let Some(id) = obj.get("id").and_then(|v| v.as_usize()) {
+            return Ok(Response::Inserted { id });
+        }
+        if let Some(hits) = obj.get("hits").and_then(|v| v.as_arr()) {
+            return Ok(Response::Hits {
+                hits: hits
+                    .iter()
+                    .map(|h| Hit {
+                        id: h.get("id").and_then(|v| v.as_usize()).unwrap_or(0),
+                        dist: h.get("dist").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    })
+                    .collect(),
+            });
+        }
+        if let Some(dist) = obj.get("dist").and_then(|v| v.as_f64()) {
+            return Ok(Response::Distance { dist });
+        }
+        if let (Some(n), Some(values)) = (
+            obj.get("n").and_then(|v| v.as_usize()),
+            obj.get("values").and_then(|v| v.as_arr()),
+        ) {
+            return Ok(Response::Heatmap {
+                n,
+                values: values.iter().filter_map(|x| x.as_f64()).collect(),
+            });
+        }
+        if obj.get("pong").is_some() {
+            return Ok(Response::Pong);
+        }
+        if obj.get("shutdown").is_some() {
+            return Ok(Response::ShuttingDown);
+        }
+        // stats: everything numeric except ok
+        if let Json::Obj(m) = &obj {
+            let fields = m
+                .iter()
+                .filter(|(k, _)| k.as_str() != "ok")
+                .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                .collect::<Vec<_>>();
+            if !fields.is_empty() {
+                return Ok(Response::Stats { fields });
+            }
+        }
+        bail!("unrecognised response: {line}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_insert() {
+        let v = CatVector::from_dense(&[0, 3, 0, 0, 9]);
+        let req = Request::Insert { vec: v };
+        let line = req.to_json_line();
+        let back = Request::from_json_line(&line, 5).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn request_roundtrip_query() {
+        let v = CatVector::from_dense(&[1, 0, 2]);
+        let req = Request::Query { vec: v, k: 7 };
+        let back = Request::from_json_line(&req.to_json_line(), 3).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn dense_insert_form_accepted() {
+        let r = Request::from_json_line(r#"{"op":"insert","vec":[0,2,0,1]}"#, 4).unwrap();
+        match r {
+            Request::Insert { vec } => {
+                assert_eq!(vec.nnz(), 2);
+                assert_eq!(vec.get(1), 2);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        assert!(Request::from_json_line(r#"{"op":"insert","vec":[1,2]}"#, 3).is_err());
+        assert!(
+            Request::from_json_line(r#"{"op":"insert_sparse","dim":9,"idx":[0],"val":[1]}"#, 3)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        assert!(Request::from_json_line(r#"{"op":"frobnicate"}"#, 3).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        for resp in [
+            Response::Inserted { id: 42 },
+            Response::Hits {
+                hits: vec![
+                    Hit { id: 1, dist: 2.5 },
+                    Hit { id: 9, dist: 11.0 },
+                ],
+            },
+            Response::Distance { dist: 3.25 },
+            Response::Pong,
+            Response::ShuttingDown,
+            Response::Error {
+                message: "nope".into(),
+            },
+            Response::Heatmap {
+                n: 2,
+                values: vec![0.0, 1.0, 1.0, 0.0],
+            },
+        ] {
+            let line = resp.to_json_line();
+            let back = Response::from_json_line(&line).unwrap();
+            assert_eq!(back, resp, "line {line}");
+        }
+    }
+
+    #[test]
+    fn stats_roundtrip() {
+        let resp = Response::Stats {
+            fields: vec![("inserts".into(), 5.0), ("queries".into(), 2.0)],
+        };
+        let back = Response::from_json_line(&resp.to_json_line()).unwrap();
+        match back {
+            Response::Stats { fields } => {
+                assert!(fields.contains(&("inserts".to_string(), 5.0)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Query router: scatter a query sketch to every shard, compute local
+//! top-k by estimated Hamming distance (occupancy-inversion Cham), merge.
+
+use super::store::{Shard, ShardedStore};
+use crate::coordinator::protocol::Hit;
+use crate::sketch::cham::binhamming_from_stats;
+use crate::sketch::BitVec;
+
+/// Local top-k on one shard. Returns (id, estimated categorical HD).
+fn shard_topk(shard: &Shard, query: &BitVec, wq: f64, k: usize, d: usize) -> Vec<Hit> {
+    let mut hits: Vec<Hit> = Vec::with_capacity(shard.ids.len().min(k + 1));
+    for (id, sk) in shard.ids.iter().zip(&shard.sketches) {
+        let ip = query.and_count(sk) as f64;
+        let dist = 2.0 * binhamming_from_stats(wq, sk.count_ones() as f64, ip, d);
+        // keep a bounded sorted buffer (k is small; insertion sort wins)
+        if hits.len() < k {
+            hits.push(Hit { id: *id, dist });
+            hits.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
+        } else if dist < hits[k - 1].dist {
+            hits[k - 1] = Hit { id: *id, dist };
+            hits.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
+        }
+    }
+    hits
+}
+
+/// Scatter/gather top-k across all shards (parallel, one thread per shard).
+pub fn topk(store: &ShardedStore, query: &BitVec, k: usize) -> Vec<Hit> {
+    let d = store.sketch_dim();
+    let wq = query.count_ones() as f64;
+    let partials = store.par_map_shards(|shard| shard_topk(shard, query, wq, k, d));
+    let mut merged: Vec<Hit> = partials.into_iter().flatten().collect();
+    merged.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+    merged.truncate(k);
+    merged
+}
+
+/// Estimated distance between two stored points.
+pub fn distance(store: &ShardedStore, a: usize, b: usize) -> Option<f64> {
+    let (sa, sb) = (store.get(a)?, store.get(b)?);
+    Some(2.0 * binhamming_from_stats(
+        sa.count_ones() as f64,
+        sb.count_ones() as f64,
+        sa.and_count(&sb) as f64,
+        store.sketch_dim(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn store_with(points: &[BitVec]) -> ShardedStore {
+        let store = ShardedStore::new(3, points[0].len());
+        for p in points.chunks(4) {
+            store.insert_batch(p.to_vec());
+        }
+        store
+    }
+
+    #[test]
+    fn topk_finds_the_planted_neighbour() {
+        let mut rng = Xoshiro256::new(1);
+        let d = 256;
+        let mut pts: Vec<BitVec> = (0..40)
+            .map(|_| BitVec::from_indices(d, rng.sample_indices(d, 40)))
+            .collect();
+        // plant a near-duplicate of the query at id 7
+        let query = BitVec::from_indices(d, rng.sample_indices(d, 40));
+        let mut near = query.clone();
+        near.set(0);
+        pts[7] = near;
+        let store = store_with(&pts);
+        let hits = topk(&store, &query, 5);
+        assert_eq!(hits.len(), 5);
+        assert_eq!(hits[0].id, 7, "{hits:?}");
+        // results sorted ascending
+        for w in hits.windows(2) {
+            assert!(w[0].dist <= w[1].dist);
+        }
+    }
+
+    #[test]
+    fn topk_k_larger_than_corpus() {
+        let mut rng = Xoshiro256::new(2);
+        let pts: Vec<BitVec> = (0..3)
+            .map(|_| BitVec::from_indices(64, rng.sample_indices(64, 10)))
+            .collect();
+        let store = store_with(&pts);
+        let hits = topk(&store, &pts[0], 10);
+        assert_eq!(hits.len(), 3);
+    }
+
+    #[test]
+    fn router_never_drops_or_duplicates() {
+        let mut rng = Xoshiro256::new(3);
+        let pts: Vec<BitVec> = (0..25)
+            .map(|_| BitVec::from_indices(128, rng.sample_indices(128, 20)))
+            .collect();
+        let store = store_with(&pts);
+        let hits = topk(&store, &pts[0], 25);
+        let mut ids: Vec<usize> = hits.iter().map(|h| h.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn distance_self_is_zero() {
+        let mut rng = Xoshiro256::new(4);
+        let pts: Vec<BitVec> = (0..4)
+            .map(|_| BitVec::from_indices(128, rng.sample_indices(128, 25)))
+            .collect();
+        let store = store_with(&pts);
+        assert_eq!(distance(&store, 0, 0), Some(0.0));
+        assert!(distance(&store, 0, 99).is_none());
+        let d01 = distance(&store, 0, 1).unwrap();
+        let d10 = distance(&store, 1, 0).unwrap();
+        assert!((d01 - d10).abs() < 1e-9);
+    }
+}

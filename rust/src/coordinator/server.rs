@@ -1,0 +1,346 @@
+//! The coordinator service: TCP accept loop, per-connection threads,
+//! request dispatch to batcher/router/store.
+
+use super::batcher::{Batcher, BatcherConfig, SketchBackend};
+use super::metrics::Metrics;
+use super::protocol::{Request, Response};
+use super::router;
+use super::store::ShardedStore;
+use crate::runtime::XlaHandle;
+use crate::sketch::{CabinSketcher, SketchConfig};
+use crate::util::timer::Stopwatch;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Corpus configuration (must match incoming vectors).
+    pub input_dim: usize,
+    pub num_categories: u16,
+    pub sketch_dim: usize,
+    pub seed: u64,
+    pub num_shards: usize,
+    pub batcher: BatcherConfig,
+    /// Prefer the XLA artifacts when they match (n, c, d, seed).
+    pub use_xla: bool,
+    /// Refuse heatmap requests above this corpus size (they are O(n²)).
+    pub heatmap_limit: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            input_dim: 4096,
+            num_categories: 64,
+            sketch_dim: 1024,
+            seed: 42,
+            num_shards: 4,
+            batcher: BatcherConfig::default(),
+            use_xla: true,
+            heatmap_limit: 4096,
+        }
+    }
+}
+
+/// The running service (in-process handle). `serve` binds a TCP listener;
+/// `handle_request` is also callable directly (examples, tests, benches).
+pub struct Coordinator {
+    pub config: CoordinatorConfig,
+    pub store: Arc<ShardedStore>,
+    pub metrics: Arc<Metrics>,
+    batcher: Batcher,
+    sketcher: CabinSketcher,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    pub fn new(config: CoordinatorConfig) -> Coordinator {
+        let store = Arc::new(ShardedStore::new(config.num_shards, config.sketch_dim));
+        let metrics = Arc::new(Metrics::new());
+        let sk_cfg = SketchConfig::new(
+            config.input_dim,
+            config.num_categories,
+            config.sketch_dim,
+            config.seed,
+        );
+        let native = CabinSketcher::from_config(sk_cfg);
+        let backend = if config.use_xla {
+            match XlaHandle::try_default() {
+                Some(handle)
+                    if handle.manifest.n == config.input_dim
+                        && handle.manifest.c == config.num_categories
+                        && handle.manifest.d == config.sketch_dim
+                        && handle.manifest.seed == config.seed =>
+                {
+                    eprintln!("[coordinator] XLA backend active");
+                    // π from the sidecar so native fallback is bit-identical
+                    let native_xla = handle
+                        .native_equivalent()
+                        .unwrap_or_else(|_| native.clone());
+                    SketchBackend::Xla(handle, native_xla)
+                }
+                Some(handle) => {
+                    eprintln!(
+                        "[coordinator] artifacts present but config mismatch (artifact n={} d={} seed={}), using native",
+                        handle.manifest.n, handle.manifest.d, handle.manifest.seed
+                    );
+                    SketchBackend::Native(native.clone())
+                }
+                None => SketchBackend::Native(native.clone()),
+            }
+        } else {
+            SketchBackend::Native(native.clone())
+        };
+        let sketcher = backend.sketcher().clone();
+        let batcher = Batcher::start(config.batcher, backend, store.clone(), metrics.clone());
+        Coordinator {
+            config,
+            store,
+            metrics,
+            batcher,
+            sketcher,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Dispatch one request (thread-safe).
+    pub fn handle_request(&self, req: Request) -> Response {
+        match req {
+            Request::Ping => Response::Pong,
+            Request::Shutdown => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                Response::ShuttingDown
+            }
+            Request::Insert { vec } => {
+                let sw = Stopwatch::start();
+                self.metrics.inserts.fetch_add(1, Ordering::Relaxed);
+                match self.batcher.submitter.insert(vec) {
+                    Ok(id) => {
+                        let _ = sw;
+                        Response::Inserted { id }
+                    }
+                    Err(e) => {
+                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        Response::Error {
+                            message: format!("{e:#}"),
+                        }
+                    }
+                }
+            }
+            Request::Query { vec, k } => {
+                let sw = Stopwatch::start();
+                self.metrics.queries.fetch_add(1, Ordering::Relaxed);
+                let q = self.sketcher.sketch(&vec);
+                let hits = router::topk(&self.store, &q, k);
+                self.metrics.record_query_latency(sw.elapsed_secs());
+                Response::Hits { hits }
+            }
+            Request::Distance { a, b } => {
+                self.metrics.distances.fetch_add(1, Ordering::Relaxed);
+                match router::distance(&self.store, a, b) {
+                    Some(dist) => Response::Distance { dist },
+                    None => Response::Error {
+                        message: "unknown id".into(),
+                    },
+                }
+            }
+            Request::Heatmap => {
+                self.metrics.heatmaps.fetch_add(1, Ordering::Relaxed);
+                let snap = self.store.snapshot_ordered();
+                if snap.len() > self.config.heatmap_limit {
+                    return Response::Error {
+                        message: format!(
+                            "corpus {} exceeds heatmap limit {}",
+                            snap.len(),
+                            self.config.heatmap_limit
+                        ),
+                    };
+                }
+                let sketches: Vec<_> = snap.into_iter().map(|(_, s)| s).collect();
+                let hm = crate::analysis::heatmap::Heatmap::from_sketches_occupancy(&sketches, 2.0);
+                Response::Heatmap {
+                    n: hm.n,
+                    values: hm.values,
+                }
+            }
+            Request::Stats => Response::Stats {
+                fields: self.metrics.snapshot(),
+            },
+        }
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Serve on `addr` ("127.0.0.1:0" for an ephemeral port). Returns the
+    /// bound address through `on_bound` and blocks until a Shutdown
+    /// request arrives.
+    pub fn serve<F: FnOnce(std::net::SocketAddr)>(self: &Arc<Self>, addr: &str, on_bound: F) -> Result<()> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true)?;
+        on_bound(listener.local_addr()?);
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.is_shutdown() {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let me = Arc::clone(self);
+                    conns.push(std::thread::spawn(move || {
+                        let _ = me.handle_connection(stream);
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => {
+                    eprintln!("[coordinator] accept error: {e}");
+                    break;
+                }
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+        Ok(())
+    }
+
+    fn handle_connection(&self, stream: TcpStream) -> Result<()> {
+        stream.set_nodelay(true).ok();
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = reader.read_line(&mut line)?;
+            if n == 0 {
+                return Ok(()); // client hung up
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let resp = match Request::from_json_line(trimmed, self.config.input_dim) {
+                Ok(req) => {
+                    let is_shutdown = matches!(req, Request::Shutdown);
+                    let r = self.handle_request(req);
+                    if is_shutdown {
+                        writeln!(writer, "{}", r.to_json_line())?;
+                        return Ok(());
+                    }
+                    r
+                }
+                Err(e) => {
+                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    Response::Error {
+                        message: format!("{e:#}"),
+                    }
+                }
+            };
+            writeln!(writer, "{}", resp.to_json_line())?;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CatVector;
+    use crate::util::rng::Xoshiro256;
+
+    fn test_config() -> CoordinatorConfig {
+        CoordinatorConfig {
+            input_dim: 600,
+            num_categories: 10,
+            sketch_dim: 128,
+            seed: 5,
+            num_shards: 2,
+            use_xla: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn insert_then_query_roundtrip() {
+        let c = Coordinator::new(test_config());
+        let mut rng = Xoshiro256::new(1);
+        let vecs: Vec<CatVector> = (0..12)
+            .map(|_| CatVector::random(600, 40, 10, &mut rng))
+            .collect();
+        for v in &vecs {
+            match c.handle_request(Request::Insert { vec: v.clone() }) {
+                Response::Inserted { .. } => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        // query with an inserted vector: itself must be the top hit
+        match c.handle_request(Request::Query {
+            vec: vecs[3].clone(),
+            k: 3,
+        }) {
+            Response::Hits { hits } => {
+                assert_eq!(hits.len(), 3);
+                assert!(hits[0].dist < 1e-9, "{hits:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn distance_and_stats() {
+        let c = Coordinator::new(test_config());
+        let mut rng = Xoshiro256::new(2);
+        let a = CatVector::random(600, 40, 10, &mut rng);
+        let b = CatVector::random(600, 40, 10, &mut rng);
+        let ida = match c.handle_request(Request::Insert { vec: a.clone() }) {
+            Response::Inserted { id } => id,
+            _ => panic!(),
+        };
+        let idb = match c.handle_request(Request::Insert { vec: b.clone() }) {
+            Response::Inserted { id } => id,
+            _ => panic!(),
+        };
+        let truth = a.hamming(&b) as f64;
+        match c.handle_request(Request::Distance { a: ida, b: idb }) {
+            Response::Distance { dist } => {
+                assert!((dist - truth).abs() < 0.5 * truth + 30.0, "{dist} vs {truth}");
+            }
+            other => panic!("{other:?}"),
+        }
+        match c.handle_request(Request::Stats) {
+            Response::Stats { fields } => {
+                let get = |k: &str| fields.iter().find(|(n, _)| n == k).unwrap().1;
+                assert_eq!(get("inserts"), 2.0);
+                assert_eq!(get("distances"), 1.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn heatmap_limit_enforced() {
+        let mut cfg = test_config();
+        cfg.heatmap_limit = 2;
+        let c = Coordinator::new(cfg);
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..3 {
+            c.handle_request(Request::Insert {
+                vec: CatVector::random(600, 20, 10, &mut rng),
+            });
+        }
+        match c.handle_request(Request::Heatmap) {
+            Response::Error { message } => assert!(message.contains("limit")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_flag() {
+        let c = Coordinator::new(test_config());
+        assert!(!c.is_shutdown());
+        assert_eq!(c.handle_request(Request::Shutdown), Response::ShuttingDown);
+        assert!(c.is_shutdown());
+    }
+}

@@ -1,0 +1,241 @@
+//! Sharded in-memory sketch store.
+//!
+//! Sketches are spread across `S` shards. Placement is *least-loaded*
+//! (size-balanced) so scatter/gather query work divides evenly; ids are
+//! global and never reused. Each shard keeps the packed sketches
+//! contiguously for cache-friendly scans.
+
+use crate::sketch::BitVec;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+pub struct Shard {
+    pub ids: Vec<usize>,
+    pub sketches: Vec<BitVec>,
+}
+
+pub struct ShardedStore {
+    shards: Vec<RwLock<Shard>>,
+    next_id: AtomicUsize,
+    sketch_dim: usize,
+}
+
+impl ShardedStore {
+    pub fn new(num_shards: usize, sketch_dim: usize) -> Self {
+        Self {
+            shards: (0..num_shards.max(1))
+                .map(|_| {
+                    RwLock::new(Shard {
+                        ids: Vec::new(),
+                        sketches: Vec::new(),
+                    })
+                })
+                .collect(),
+            next_id: AtomicUsize::new(0),
+            sketch_dim,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn sketch_dim(&self) -> usize {
+        self.sketch_dim
+    }
+
+    pub fn len(&self) -> usize {
+        self.next_id.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert a batch of sketches; returns their assigned global ids.
+    /// The whole batch lands on the currently least-loaded shard (cheap
+    /// balancing with batch locality).
+    pub fn insert_batch(&self, sketches: Vec<BitVec>) -> Vec<usize> {
+        let k = sketches.len();
+        let ids: Vec<usize> = (0..k)
+            .map(|_| self.next_id.fetch_add(1, Ordering::Relaxed))
+            .collect();
+        let target = self
+            .shards
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| s.read().unwrap().ids.len())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let mut shard = self.shards[target].write().unwrap();
+        shard.ids.extend_from_slice(&ids);
+        shard.sketches.extend(sketches);
+        ids
+    }
+
+    /// Fetch a sketch by global id (linear over shards, binary-search-free:
+    /// ids within a shard are appended in order but batches interleave, so
+    /// we scan — distance lookups are rare relative to queries).
+    pub fn get(&self, id: usize) -> Option<BitVec> {
+        for shard in &self.shards {
+            let s = shard.read().unwrap();
+            if let Some(pos) = s.ids.iter().position(|&x| x == id) {
+                return Some(s.sketches[pos].clone());
+            }
+        }
+        None
+    }
+
+    /// Run `f` over every shard (read-locked) and collect results.
+    pub fn map_shards<T, F: Fn(&Shard) -> T>(&self, f: F) -> Vec<T> {
+        self.shards
+            .iter()
+            .map(|s| f(&s.read().unwrap()))
+            .collect()
+    }
+
+    /// Parallel scatter over shards with per-shard worker threads.
+    pub fn par_map_shards<T: Send, F: Fn(&Shard) -> T + Sync>(&self, f: F) -> Vec<T> {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter()
+                .map(|s| {
+                    let f = &f;
+                    scope.spawn(move || f(&s.read().unwrap()))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    /// All sketches in id order (testing/heatmaps on small corpora).
+    pub fn snapshot_ordered(&self) -> Vec<(usize, BitVec)> {
+        let mut all: Vec<(usize, BitVec)> = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let s = shard.read().unwrap();
+            all.extend(s.ids.iter().copied().zip(s.sketches.iter().cloned()));
+        }
+        all.sort_by_key(|&(id, _)| id);
+        all
+    }
+
+    /// Shard occupancy (balance diagnostics / rebalance tests).
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.map_shards(|s| s.ids.len())
+    }
+
+    /// Rebalance: move whole trailing runs from over-full to under-full
+    /// shards until max-min ≤ tolerance. Returns number of moved sketches.
+    pub fn rebalance(&self, tolerance: usize) -> usize {
+        let mut moved = 0;
+        loop {
+            let sizes = self.shard_sizes();
+            let (max_i, &max_v) = sizes
+                .iter()
+                .enumerate()
+                .max_by_key(|&(_, v)| *v)
+                .unwrap();
+            let (min_i, &min_v) = sizes
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, v)| *v)
+                .unwrap();
+            if max_v <= min_v + tolerance.max(1) {
+                return moved;
+            }
+            let take = (max_v - min_v) / 2;
+            // lock ordering by index avoids deadlock
+            let (lo, hi) = (max_i.min(min_i), max_i.max(min_i));
+            let (first, second) = (self.shards[lo].write().unwrap(), self.shards[hi].write().unwrap());
+            let (mut src, mut dst) = if max_i == lo { (first, second) } else { (second, first) };
+            for _ in 0..take {
+                if let (Some(id), Some(sk)) = (src.ids.pop(), src.sketches.pop()) {
+                    dst.ids.push(id);
+                    dst.sketches.push(sk);
+                    moved += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn sk(rng: &mut Xoshiro256, d: usize) -> BitVec {
+        BitVec::from_indices(d, rng.sample_indices(d, d / 8))
+    }
+
+    #[test]
+    fn ids_are_unique_and_dense() {
+        let store = ShardedStore::new(4, 64);
+        let mut rng = Xoshiro256::new(1);
+        let mut all_ids = Vec::new();
+        for _ in 0..10 {
+            let batch: Vec<BitVec> = (0..5).map(|_| sk(&mut rng, 64)).collect();
+            all_ids.extend(store.insert_batch(batch));
+        }
+        all_ids.sort_unstable();
+        assert_eq!(all_ids, (0..50).collect::<Vec<_>>());
+        assert_eq!(store.len(), 50);
+    }
+
+    #[test]
+    fn get_retrieves_inserted() {
+        let store = ShardedStore::new(3, 32);
+        let mut rng = Xoshiro256::new(2);
+        let a = sk(&mut rng, 32);
+        let b = sk(&mut rng, 32);
+        let ids = store.insert_batch(vec![a.clone(), b.clone()]);
+        assert_eq!(store.get(ids[0]).unwrap(), a);
+        assert_eq!(store.get(ids[1]).unwrap(), b);
+        assert!(store.get(999).is_none());
+    }
+
+    #[test]
+    fn balancing_across_shards() {
+        let store = ShardedStore::new(4, 16);
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..16 {
+            store.insert_batch(vec![sk(&mut rng, 16)]);
+        }
+        let sizes = store.shard_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 16);
+        assert!(sizes.iter().all(|&s| s == 4), "{sizes:?}");
+    }
+
+    #[test]
+    fn rebalance_conserves_and_levels() {
+        let store = ShardedStore::new(2, 16);
+        let mut rng = Xoshiro256::new(4);
+        // imbalance: one big batch to one shard
+        store.insert_batch((0..20).map(|_| sk(&mut rng, 16)).collect());
+        let before: usize = store.shard_sizes().iter().sum();
+        let moved = store.rebalance(1);
+        let after = store.shard_sizes();
+        assert_eq!(after.iter().sum::<usize>(), before);
+        assert!(moved > 0);
+        assert!((after[0] as i64 - after[1] as i64).abs() <= 2, "{after:?}");
+        // everything still retrievable
+        let snap = store.snapshot_ordered();
+        assert_eq!(snap.len(), 20);
+        for w in snap.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn par_map_matches_map() {
+        let store = ShardedStore::new(4, 16);
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..8 {
+            store.insert_batch(vec![sk(&mut rng, 16)]);
+        }
+        let a = store.map_shards(|s| s.ids.len());
+        let b = store.par_map_shards(|s| s.ids.len());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,152 @@
+//! Parser for the UCI Bag-of-Words `docword.*.txt` format [26], so the real
+//! Table 1 corpora can be dropped in when network access exists.
+//!
+//! Format:
+//! ```text
+//! D            # number of documents
+//! W            # vocabulary size
+//! NNZ          # number of (doc, word, count) triples
+//! docID wordID count
+//! ...
+//! ```
+//! IDs are 1-based. Counts become categorical values, capped at the
+//! dataset's category bound (the paper treats word frequencies as
+//! categories).
+
+use super::categorical::{CatVector, CategoricalDataset};
+use anyhow::{Context, Result, bail};
+use std::io::{BufRead, BufReader};
+
+/// Load a `docword` file. `max_points` truncates to the first N documents
+/// (the paper subsamples NYTimes/PubMed to 10k points the same way).
+pub fn load_docword(
+    path: &str,
+    category_cap: u16,
+    max_points: Option<usize>,
+) -> Result<CategoricalDataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path))?;
+    let mut lines = BufReader::new(f).lines();
+
+    let mut header = |what: &str| -> Result<usize> {
+        lines
+            .next()
+            .transpose()?
+            .with_context(|| format!("missing header line: {}", what))?
+            .trim()
+            .parse::<usize>()
+            .with_context(|| format!("bad header {}", what))
+    };
+    let n_docs = header("D")?;
+    let vocab = header("W")?;
+    let _nnz = header("NNZ")?;
+    if vocab == 0 || n_docs == 0 {
+        bail!("empty docword file");
+    }
+
+    let keep = max_points.unwrap_or(n_docs).min(n_docs);
+    let mut buf: Vec<Vec<(u32, u16)>> = vec![Vec::new(); keep];
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let mut it = t.split_ascii_whitespace();
+        let doc: usize = it.next().context("doc id")?.parse()?;
+        let word: usize = it.next().context("word id")?.parse()?;
+        let count: u64 = it.next().context("count")?.parse()?;
+        if doc == 0 || doc > n_docs || word == 0 || word > vocab {
+            bail!("id out of range: doc={} word={}", doc, word);
+        }
+        if doc > keep {
+            continue;
+        }
+        let v = count.min(category_cap as u64).max(1) as u16;
+        buf[doc - 1].push((word as u32 - 1, v));
+    }
+
+    let points: Vec<CatVector> = buf
+        .into_iter()
+        .map(|pairs| CatVector::from_pairs(vocab, pairs))
+        .collect();
+    let name = std::path::Path::new(path)
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "docword".into());
+    Ok(CategoricalDataset::new(&name, vocab, category_cap, points))
+}
+
+/// Write a dataset in `docword` format (used to round-trip-test the parser
+/// and to export synthetic twins for external tools).
+pub fn save_docword(ds: &CategoricalDataset, path: &str) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let nnz: usize = ds.points.iter().map(|p| p.nnz()).sum();
+    writeln!(f, "{}", ds.len())?;
+    writeln!(f, "{}", ds.dim())?;
+    writeln!(f, "{}", nnz)?;
+    for (di, p) in ds.points.iter().enumerate() {
+        for &(w, v) in p.entries() {
+            writeln!(f, "{} {} {}", di + 1, w + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn roundtrip() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 20;
+        spec.dim = 500;
+        let ds = spec.generate(9);
+        let path = std::env::temp_dir().join("cabin_test_docword.txt");
+        let path = path.to_str().unwrap();
+        save_docword(&ds, path).unwrap();
+        let back = load_docword(path, spec.num_categories, None).unwrap();
+        assert_eq!(back.len(), ds.len());
+        assert_eq!(back.dim(), ds.dim());
+        for (a, b) in ds.points.iter().zip(back.points.iter()) {
+            assert_eq!(a, b);
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn truncation() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 10;
+        spec.dim = 200;
+        let ds = spec.generate(2);
+        let path = std::env::temp_dir().join("cabin_test_docword2.txt");
+        let path = path.to_str().unwrap();
+        save_docword(&ds, path).unwrap();
+        let back = load_docword(path, spec.num_categories, Some(4)).unwrap();
+        assert_eq!(back.len(), 4);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn category_cap_applies() {
+        let dir = std::env::temp_dir().join("cabin_test_docword3.txt");
+        let path = dir.to_str().unwrap();
+        std::fs::write(path, "1\n5\n2\n1 1 999\n1 3 2\n").unwrap();
+        let ds = load_docword(path, 10, None).unwrap();
+        assert_eq!(ds.points[0].get(0), 10); // capped
+        assert_eq!(ds.points[0].get(2), 2);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let dir = std::env::temp_dir().join("cabin_test_docword4.txt");
+        let path = dir.to_str().unwrap();
+        std::fs::write(path, "1\n5\n1\n9 1 1\n").unwrap(); // doc out of range
+        assert!(load_docword(path, 10, None).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

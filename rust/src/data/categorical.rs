@@ -1,0 +1,283 @@
+//! Label-encoded categorical vectors (`u ∈ {0,1,…,c}^n`), stored sparsely.
+//!
+//! `0` encodes a *missing* feature (paper Section 1). With the paper's
+//! datasets at 92–99.9% sparsity, a sorted `(index, value)` list is the only
+//! sensible representation; Hamming distance is a sorted merge over the two
+//! nonzero lists — `O(nnz(u) + nnz(v))` instead of `O(n)`.
+
+use crate::util::rng::Xoshiro256;
+
+/// A sparse categorical vector. Invariants: entries sorted by index,
+/// indices unique and `< dim`, values `≥ 1` (zero = missing = absent).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CatVector {
+    dim: usize,
+    entries: Vec<(u32, u16)>,
+}
+
+impl CatVector {
+    /// Build from raw (index, value) pairs; sorts, deduplicates (last value
+    /// wins) and drops zeros.
+    pub fn from_pairs(dim: usize, mut pairs: Vec<(u32, u16)>) -> Self {
+        pairs.retain(|&(i, v)| v != 0 && (i as usize) < dim);
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        pairs.dedup_by(|a, b| {
+            if a.0 == b.0 {
+                b.1 = a.1; // keep the later pair's value in `b` (retained)
+                true
+            } else {
+                false
+            }
+        });
+        Self { dim, entries: pairs }
+    }
+
+    /// Build from a dense slice of category labels (0 = missing).
+    pub fn from_dense(values: &[u16]) -> Self {
+        let entries = values
+            .iter()
+            .enumerate()
+            .filter(|&(_, &v)| v != 0)
+            .map(|(i, &v)| (i as u32, v))
+            .collect();
+        Self {
+            dim: values.len(),
+            entries,
+        }
+    }
+
+    pub fn to_dense(&self) -> Vec<u16> {
+        let mut out = vec![0u16; self.dim];
+        for &(i, v) in &self.entries {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Density = number of non-missing features (paper's Hamming weight).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Sparsity as a fraction in [0,1].
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / self.dim.max(1) as f64
+    }
+
+    #[inline]
+    pub fn entries(&self) -> &[(u32, u16)] {
+        &self.entries
+    }
+
+    /// Value at index `i` (0 if missing). Binary search.
+    pub fn get(&self, i: usize) -> u16 {
+        match self.entries.binary_search_by_key(&(i as u32), |&(j, _)| j) {
+            Ok(pos) => self.entries[pos].1,
+            Err(_) => 0,
+        }
+    }
+
+    /// Exact Hamming distance (the paper's categorical HD):
+    /// `HD(u,v) = |{i : u_i ≠ v_i}|`, counting missing-vs-present as 1.
+    pub fn hamming(&self, other: &CatVector) -> usize {
+        debug_assert_eq!(self.dim, other.dim);
+        let (a, b) = (&self.entries, &other.entries);
+        let (mut i, mut j, mut d) = (0usize, 0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            match a[i].0.cmp(&b[j].0) {
+                std::cmp::Ordering::Less => {
+                    d += 1;
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    d += 1;
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    if a[i].1 != b[j].1 {
+                        d += 1;
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        d + (a.len() - i) + (b.len() - j)
+    }
+
+    /// Number of coordinates where both are present and equal (used by
+    /// k-mode distance decompositions and tests).
+    pub fn matches(&self, other: &CatVector) -> usize {
+        let (a, b) = (&self.entries, &other.entries);
+        let (mut i, mut j, mut m) = (0usize, 0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            match a[i].0.cmp(&b[j].0) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    if a[i].1 == b[j].1 {
+                        m += 1;
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        m
+    }
+
+    /// Random vector with `nnz` nonzeros and values in `1..=c`.
+    pub fn random(dim: usize, nnz: usize, c: u16, rng: &mut Xoshiro256) -> Self {
+        let idx = rng.sample_indices(dim, nnz.min(dim));
+        let pairs = idx
+            .into_iter()
+            .map(|i| (i as u32, 1 + rng.gen_range(c as u64) as u16))
+            .collect();
+        Self::from_pairs(dim, pairs)
+    }
+}
+
+/// A collection of categorical vectors with shared dimension/category count.
+#[derive(Clone, Debug)]
+pub struct CategoricalDataset {
+    pub name: String,
+    pub points: Vec<CatVector>,
+    dim: usize,
+    num_categories: u16,
+}
+
+impl CategoricalDataset {
+    pub fn new(name: &str, dim: usize, num_categories: u16, points: Vec<CatVector>) -> Self {
+        debug_assert!(points.iter().all(|p| p.dim() == dim));
+        Self {
+            name: name.to_string(),
+            points,
+            dim,
+            num_categories,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_categories(&self) -> u16 {
+        self.num_categories
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Max density over the dataset — the `s` in Theorem 2.
+    pub fn max_density(&self) -> usize {
+        self.points.iter().map(|p| p.nnz()).max().unwrap_or(0)
+    }
+
+    pub fn mean_density(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|p| p.nnz()).sum::<usize>() as f64 / self.points.len() as f64
+    }
+
+    /// Dataset sparsity = smallest per-vector sparsity (paper Section 1).
+    pub fn sparsity(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.sparsity())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Random sample of `k` points (without replacement).
+    pub fn sample(&self, k: usize, rng: &mut Xoshiro256) -> CategoricalDataset {
+        let idx = rng.sample_indices(self.len(), k.min(self.len()));
+        CategoricalDataset::new(
+            &format!("{}-sample{}", self.name, k),
+            self.dim,
+            self.num_categories,
+            idx.into_iter().map(|i| self.points[i].clone()).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_pairs_normalises() {
+        let v = CatVector::from_pairs(10, vec![(3, 2), (1, 5), (3, 7), (4, 0), (99, 1)]);
+        assert_eq!(v.entries(), &[(1, 5), (3, 7)]);
+        assert_eq!(v.get(3), 7);
+        assert_eq!(v.get(4), 0);
+        assert_eq!(v.nnz(), 2);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let d = vec![0u16, 3, 0, 0, 9, 1];
+        let v = CatVector::from_dense(&d);
+        assert_eq!(v.to_dense(), d);
+        assert_eq!(v.nnz(), 3);
+        assert!((v.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hamming_matches_dense_definition() {
+        let u = CatVector::from_dense(&[4, 0, 2, 0, 0, 1, 0, 2, 0, 0, 3, 1, 0, 4]);
+        let v = CatVector::from_dense(&[4, 1, 0, 0, 0, 1, 0, 3, 0, 0, 3, 0, 0, 4]);
+        let du = u.to_dense();
+        let dv = v.to_dense();
+        let expect = du.iter().zip(&dv).filter(|(a, b)| a != b).count();
+        assert_eq!(u.hamming(&v), expect);
+        assert_eq!(v.hamming(&u), expect);
+        assert_eq!(u.hamming(&u), 0);
+    }
+
+    #[test]
+    fn hamming_counts_missing_vs_present() {
+        let u = CatVector::from_dense(&[1, 0, 0]);
+        let v = CatVector::from_dense(&[0, 0, 2]);
+        assert_eq!(u.hamming(&v), 2);
+    }
+
+    #[test]
+    fn matches_counts_agreements() {
+        let u = CatVector::from_dense(&[1, 2, 0, 3]);
+        let v = CatVector::from_dense(&[1, 5, 0, 3]);
+        assert_eq!(u.matches(&v), 2);
+    }
+
+    #[test]
+    fn random_vector_has_requested_shape() {
+        let mut rng = Xoshiro256::new(1);
+        let v = CatVector::random(1000, 50, 7, &mut rng);
+        assert_eq!(v.nnz(), 50);
+        assert!(v.entries().iter().all(|&(i, c)| (i as usize) < 1000 && (1..=7).contains(&c)));
+    }
+
+    #[test]
+    fn dataset_stats() {
+        let mut rng = Xoshiro256::new(2);
+        let pts = (0..10)
+            .map(|i| CatVector::random(100, 5 + i, 3, &mut rng))
+            .collect();
+        let ds = CategoricalDataset::new("t", 100, 3, pts);
+        assert_eq!(ds.max_density(), 14);
+        assert!((ds.mean_density() - 9.5).abs() < 1e-12);
+        assert!((ds.sparsity() - (1.0 - 0.14)).abs() < 1e-9);
+        let s = ds.sample(4, &mut rng);
+        assert_eq!(s.len(), 4);
+    }
+}

@@ -1,0 +1,11 @@
+//! Categorical-data substrate: vector representation, dataset containers,
+//! the UCI bag-of-words on-disk format, and synthetic *statistical twins*
+//! of the paper's six datasets (Table 1) for offline reproduction.
+
+pub mod bow;
+pub mod categorical;
+pub mod registry;
+pub mod synth;
+
+pub use categorical::{CatVector, CategoricalDataset};
+pub use registry::{DatasetSpec, TABLE1};

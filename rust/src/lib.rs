@@ -1,0 +1,55 @@
+//! # cabin — Efficient Binary Embedding of Categorical Data using BinSketch
+//!
+//! A full reproduction of Verma, Pratap & Bera, *"Efficient Binary Embedding
+//! of Categorical Data using BinSketch"* (2021): the **Cabin** sketching
+//! algorithm (categorical → low-dimensional binary) and the **Cham**
+//! Hamming-distance estimator, together with every substrate the paper's
+//! evaluation depends on — eleven baseline dimensionality-reduction methods,
+//! k-mode/k-means clustering with purity/NMI/ARI scoring, RMSE/heatmap/MAE
+//! analysis harnesses, synthetic statistical twins of the paper's six
+//! datasets, and a streaming sketch *service* (dynamic batching, sharding,
+//! top-k routing) whose compute hot path can run either natively (bit-packed
+//! popcount) or through AOT-compiled JAX/Pallas artifacts via PJRT.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3** (this crate): coordinator + native library. See [`coordinator`],
+//!   [`runtime`], [`sketch`].
+//! * **L2** `python/compile/model.py`: JAX graph (BinEm lookup + kernel
+//!   calls), AOT-lowered to HLO text at build time.
+//! * **L1** `python/compile/kernels/`: Pallas kernels — blocked
+//!   sketch-matmul and the fused all-pairs gram+estimator.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries don't inherit the cargo rpath to
+//! # // libxla_extension; the same snippet runs in examples/quickstart.rs.
+//! use cabin::sketch::{CabinSketcher, cham};
+//! use cabin::data::CategoricalDataset;
+//!
+//! // 10_000-dim categorical vectors with ≤ 64 categories, density ≈ 100.
+//! let ds = cabin::data::synth::SynthSpec::small_demo().generate(42);
+//! let sk = CabinSketcher::new(ds.dim(), ds.num_categories(), 256, 7);
+//! let a = sk.sketch(&ds.points[0]);
+//! let b = sk.sketch(&ds.points[1]);
+//! let est = cham::estimate_hamming(&a, &b, sk.config());
+//! let truth = ds.points[0].hamming(&ds.points[1]) as f64;
+//! assert!((est - truth).abs() <= 0.35 * truth + 32.0);
+//! ```
+
+pub mod analysis;
+pub mod baselines;
+pub mod bench;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod repro;
+pub mod runtime;
+pub mod sketch;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,247 @@
+//! Row-major dense matrix with a blocked, thread-parallel matmul.
+
+use crate::util::parallel;
+use crate::util::rng::Xoshiro256;
+
+/// Row-major `rows × cols` matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Standard-normal random matrix (for randomized SVD / VAE init).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Xoshiro256) -> Self {
+        Self {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal()).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other` — blocked, parallel over row stripes of the output.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        let threads = parallel::default_threads().min(m.max(1));
+        let rows_per = m.div_ceil(threads).max(1);
+        let a = &self.data;
+        let b = &other.data;
+        std::thread::scope(|s| {
+            for (ti, chunk) in out.data.chunks_mut(rows_per * n).enumerate() {
+                let r0 = ti * rows_per;
+                s.spawn(move || {
+                    for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
+                        let r = r0 + ri;
+                        // ikj loop: stream rows of b, accumulate into out_row
+                        for kk in 0..k {
+                            let aval = a[r * k + kk];
+                            if aval == 0.0 {
+                                continue;
+                            }
+                            let brow = &b[kk * n..(kk + 1) * n];
+                            for (o, &bv) in out_row.iter_mut().zip(brow) {
+                                *o += aval * bv;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|r| dot(self.row(r), x))
+            .collect()
+    }
+
+    /// Mean of each column (for PCA centering).
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut m = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for (mc, &v) in m.iter_mut().zip(self.row(r)) {
+                *mc += v;
+            }
+        }
+        let inv = 1.0 / self.rows.max(1) as f64;
+        for v in m.iter_mut() {
+            *v *= inv;
+        }
+        m
+    }
+
+    /// Subtract a row vector from every row.
+    pub fn sub_row_vector(&mut self, v: &[f64]) {
+        assert_eq!(v.len(), self.cols);
+        for r in 0..self.rows {
+            for (x, &m) in self.row_mut(r).iter_mut().zip(v) {
+                *x -= m;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let n = a.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        let mut rng = Xoshiro256::new(1);
+        let a = Matrix::randn(17, 23, &mut rng);
+        let b = Matrix::randn(23, 9, &mut rng);
+        let c = a.matmul(&b);
+        for r in 0..17 {
+            for cc in 0..9 {
+                let mut s = 0.0;
+                for k in 0..23 {
+                    s += a.get(r, k) * b.get(k, cc);
+                }
+                assert!((c.get(r, cc) - s).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256::new(2);
+        let a = Matrix::randn(40, 70, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().get(3, 7), a.get(7, 3));
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Xoshiro256::new(3);
+        let a = Matrix::randn(11, 13, &mut rng);
+        let x: Vec<f64> = (0..13).map(|i| i as f64).collect();
+        let xm = Matrix::from_vec(13, 1, x.clone());
+        let via_mm = a.matmul(&xm);
+        let via_mv = a.matvec(&x);
+        for i in 0..11 {
+            assert!((via_mm.get(i, 0) - via_mv[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn centering() {
+        let mut a = Matrix::from_rows(vec![vec![1.0, 10.0], vec![3.0, 20.0]]);
+        let m = a.col_means();
+        assert_eq!(m, vec![2.0, 15.0]);
+        a.sub_row_vector(&m);
+        assert_eq!(a.col_means(), vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense + sparse linear-algebra substrate.
+//!
+//! No BLAS/LAPACK is available offline, so the spectral baselines
+//! (PCA/LSA/MCA) and factorisation baselines (NNMF, VAE) run on this
+//! from-scratch kit: a row-major [`Matrix`], a blocked parallel matmul,
+//! thin QR (modified Gram–Schmidt with re-orthogonalisation), randomized
+//! truncated SVD (Halko–Martinsson–Tropp), CSR sparse matrices for the
+//! one-hot/MCA paths, and an Adam optimiser for the VAE.
+
+pub mod matrix;
+pub mod opt;
+pub mod sparse;
+pub mod svd;
+
+pub use matrix::Matrix;
+pub use sparse::Csr;
+pub use svd::{randomized_svd, Svd};

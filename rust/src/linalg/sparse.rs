@@ -1,0 +1,317 @@
+//! CSR sparse matrices — the representation behind the one-hot encoding
+//! ablation (A3) and the MCA baseline's indicator matrix, where densifying
+//! would reproduce exactly the OOM failure mode the paper reports.
+
+use super::matrix::Matrix;
+use crate::data::CategoricalDataset;
+
+/// Compressed sparse row matrix (f64 values).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    pub fn from_triplets(rows: usize, cols: usize, mut t: Vec<(u32, u32, f64)>) -> Self {
+        t.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(t.len());
+        let mut values = Vec::with_capacity(t.len());
+        for &(r, c, v) in &t {
+            assert!((r as usize) < rows && (c as usize) < cols);
+            indptr[r as usize + 1] += 1;
+            indices.push(c);
+            values.push(v);
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        Self {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Categorical dataset → label-encoded sparse matrix (value = category).
+    pub fn from_dataset(ds: &CategoricalDataset) -> Self {
+        let mut t = Vec::new();
+        for (r, p) in ds.points.iter().enumerate() {
+            for &(c, v) in p.entries() {
+                t.push((r as u32, c, v as f64));
+            }
+        }
+        Self::from_triplets(ds.len(), ds.dim(), t)
+    }
+
+    /// Categorical dataset → **one-hot** indicator matrix of dimension
+    /// `n·(c+1)` (the blow-up the paper's introduction warns about; used by
+    /// the MCA baseline and ablation A3).
+    pub fn one_hot_from_dataset(ds: &CategoricalDataset) -> Self {
+        let c = ds.num_categories() as usize;
+        let cols = ds.dim().checked_mul(c).expect("one-hot dimension overflow");
+        let mut t = Vec::new();
+        for (r, p) in ds.points.iter().enumerate() {
+            for &(i, v) in p.entries() {
+                let col = i as usize * c + (v as usize - 1);
+                t.push((r as u32, col as u32, 1.0));
+            }
+        }
+        Self::from_triplets(ds.len(), cols, t)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn row_range(&self, r: usize) -> std::ops::Range<usize> {
+        self.indptr[r]..self.indptr[r + 1]
+    }
+
+    /// `self · x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|r| {
+                let rg = self.row_range(r);
+                self.indices[rg.clone()]
+                    .iter()
+                    .zip(&self.values[rg])
+                    .map(|(&c, &v)| v * x[c as usize])
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// `selfᵀ · x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            let rg = self.row_range(r);
+            for (&c, &v) in self.indices[rg.clone()].iter().zip(&self.values[rg]) {
+                out[c as usize] += v * xr;
+            }
+        }
+        out
+    }
+
+    /// `self · B` for dense `B` (cols × k) → dense (rows × k).
+    pub fn matmul_dense(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows);
+        let k = b.cols;
+        let mut out = Matrix::zeros(self.rows, k);
+        for r in 0..self.rows {
+            let rg = self.row_range(r);
+            let orow = out.row_mut(r);
+            for (&c, &v) in self.indices[rg.clone()].iter().zip(&self.values[rg]) {
+                let brow = b.row(c as usize);
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += v * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ · B` for dense `B` (rows × k) → dense (cols × k).
+    pub fn matmul_t_dense(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.rows, b.rows);
+        let k = b.cols;
+        let mut out = Matrix::zeros(self.cols, k);
+        for r in 0..self.rows {
+            let rg = self.row_range(r);
+            let brow = b.row(r);
+            for (&c, &v) in self.indices[rg.clone()].iter().zip(&self.values[rg]) {
+                let orow = out.row_mut(c as usize);
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += v * bv;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let rg = self.row_range(r);
+            for (&c, &v) in self.indices[rg.clone()].iter().zip(&self.values[rg]) {
+                m.set(r, c as usize, v);
+            }
+        }
+        m
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.indices.len() * 4 + self.values.len() * 8 + self.indptr.len() * 8
+    }
+}
+
+/// Randomized truncated SVD over a CSR matrix (same HMT scheme as the dense
+/// version but all products go through the sparse kernels — this is what
+/// lets LSA run on the 100k-dim twins without densifying).
+pub fn sparse_randomized_svd(
+    a: &Csr,
+    k: usize,
+    oversample: usize,
+    power_iters: usize,
+    seed: u64,
+) -> super::svd::Svd {
+    use super::svd::{jacobi_eigh, thin_qr_q, Svd};
+    use crate::util::rng::Xoshiro256;
+    let (m, n) = (a.rows, a.cols);
+    let k = k.min(m.min(n));
+    let l = (k + oversample).min(m.min(n)).max(1);
+    let mut rng = Xoshiro256::new(seed);
+    let omega = Matrix::randn(n, l, &mut rng);
+    let mut y = a.matmul_dense(&omega);
+    for _ in 0..power_iters {
+        y = thin_qr_q(&y);
+        let z = a.matmul_t_dense(&y);
+        let zq = thin_qr_q(&z);
+        y = a.matmul_dense(&zq);
+    }
+    let q = thin_qr_q(&y); // m × l
+    let b = a.matmul_t_dense(&q).transpose(); // l × n  (B = Qᵀ A)
+    let bbt = b.matmul(&b.transpose());
+    let (evals, evecs) = jacobi_eigh(&bbt, 60);
+    let mut s: Vec<f64> = evals.iter().take(k).map(|&e| e.max(0.0).sqrt()).collect();
+    let mut ub_k = Matrix::zeros(b.rows, k);
+    for c in 0..k {
+        for r in 0..b.rows {
+            ub_k.set(r, c, evecs.get(r, c));
+        }
+    }
+    let u = q.matmul(&ub_k);
+    let mut v = b.transpose().matmul(&ub_k);
+    for c in 0..k {
+        let inv = if s[c] > 1e-12 { 1.0 / s[c] } else { 0.0 };
+        for r in 0..n {
+            let val = v.get(r, c) * inv;
+            v.set(r, c, val);
+        }
+    }
+    while s.len() < k {
+        s.push(0.0);
+    }
+    Svd { u, s, v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn triplets_and_dense_agree() {
+        let t = vec![(0u32, 1u32, 2.0), (1, 0, 3.0), (1, 2, 4.0)];
+        let a = Csr::from_triplets(2, 3, t);
+        let d = a.to_dense();
+        assert_eq!(d.get(0, 1), 2.0);
+        assert_eq!(d.get(1, 0), 3.0);
+        assert_eq!(d.get(1, 2), 4.0);
+        assert_eq!(d.get(0, 0), 0.0);
+        assert_eq!(a.nnz(), 3);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Xoshiro256::new(1);
+        let mut t = Vec::new();
+        for _ in 0..60 {
+            t.push((
+                rng.gen_range(10) as u32,
+                rng.gen_range(15) as u32,
+                rng.next_f64(),
+            ));
+        }
+        t.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        t.dedup_by_key(|&mut (r, c, _)| (r, c));
+        let a = Csr::from_triplets(10, 15, t);
+        let d = a.to_dense();
+        let x: Vec<f64> = (0..15).map(|i| i as f64 * 0.5).collect();
+        let (sv, dv) = (a.matvec(&x), d.matvec(&x));
+        for i in 0..10 {
+            assert!((sv[i] - dv[i]).abs() < 1e-9);
+        }
+        let y: Vec<f64> = (0..10).map(|i| 1.0 - i as f64).collect();
+        let st = a.matvec_t(&y);
+        let dt = d.transpose().matvec(&y);
+        for i in 0..15 {
+            assert!((st[i] - dt[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn matmul_dense_matches() {
+        let mut rng = Xoshiro256::new(2);
+        let t = vec![(0u32, 0u32, 1.0), (0, 4, 2.0), (2, 3, -1.5)];
+        let a = Csr::from_triplets(3, 5, t);
+        let b = Matrix::randn(5, 4, &mut rng);
+        let s = a.matmul_dense(&b);
+        let d = a.to_dense().matmul(&b);
+        for i in 0..s.data.len() {
+            assert!((s.data[i] - d.data[i]).abs() < 1e-9);
+        }
+        let bt = Matrix::randn(3, 4, &mut rng);
+        let st = a.matmul_t_dense(&bt);
+        let dt = a.to_dense().transpose().matmul(&bt);
+        for i in 0..st.data.len() {
+            assert!((st.data[i] - dt.data[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn one_hot_blowup_dimensions() {
+        let mut spec = SynthSpec::small_demo();
+        spec.num_points = 10;
+        spec.dim = 100;
+        spec.num_categories = 8;
+        spec.max_density = 20;
+        spec.mean_density = 10.0;
+        let ds = spec.generate(3);
+        let oh = Csr::one_hot_from_dataset(&ds);
+        assert_eq!(oh.cols, 100 * 8); // the c× blow-up
+        // every row has exactly nnz ones
+        for (r, p) in ds.points.iter().enumerate() {
+            assert_eq!(oh.row_range(r).len(), p.nnz());
+        }
+    }
+
+    #[test]
+    fn sparse_svd_matches_dense_svd_values() {
+        let mut rng = Xoshiro256::new(5);
+        let u = Matrix::randn(25, 2, &mut rng);
+        let v = Matrix::randn(2, 18, &mut rng);
+        let dense = u.matmul(&v);
+        let mut t = Vec::new();
+        for r in 0..25 {
+            for c in 0..18 {
+                t.push((r as u32, c as u32, dense.get(r, c)));
+            }
+        }
+        let csr = Csr::from_triplets(25, 18, t);
+        let s1 = sparse_randomized_svd(&csr, 2, 5, 2, 9);
+        let s2 = super::super::svd::randomized_svd(&dense, 2, 5, 2, 9);
+        for i in 0..2 {
+            assert!(
+                (s1.s[i] - s2.s[i]).abs() < 1e-6 * s2.s[0].max(1.0),
+                "{:?} vs {:?}",
+                s1.s,
+                s2.s
+            );
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Thin QR + randomized truncated SVD (Halko–Martinsson–Tropp 2011).
+//!
+//! `randomized_svd(A, k, oversample, power_iters)`:
+//! 1. `Y = (A Aᵀ)^q A Ω` for a Gaussian `Ω ∈ R^{n×(k+p)}` (power iterations
+//!    sharpen the spectrum),
+//! 2. thin QR of `Y` gives an orthonormal range basis `Q`,
+//! 3. SVD of the small `B = Qᵀ A` via one-sided Jacobi on `B Bᵀ`.
+//!
+//! Accuracy is more than enough for the PCA/LSA/MCA *baselines* — the paper
+//! itself only uses them as comparison points.
+
+use super::matrix::{dot, norm2, Matrix};
+use crate::util::rng::Xoshiro256;
+
+/// Truncated SVD result: `A ≈ U diag(s) Vᵀ` with `U: m×k`, `V: n×k`.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f64>,
+    pub v: Matrix,
+}
+
+/// Thin QR via modified Gram–Schmidt with one re-orthogonalisation pass.
+/// Returns Q (m×k) with orthonormal columns; rank-deficient columns are
+/// replaced with zeros (harmless for the randomized-range use).
+pub fn thin_qr_q(a: &Matrix) -> Matrix {
+    let (m, k) = (a.rows, a.cols);
+    // work in column-major for column ops
+    let mut cols: Vec<Vec<f64>> = (0..k)
+        .map(|c| (0..m).map(|r| a.get(r, c)).collect())
+        .collect();
+    for j in 0..k {
+        for _pass in 0..2 {
+            for i in 0..j {
+                let proj = dot(&cols[j], &cols[i]);
+                let (ci, cj) = if i < j {
+                    let (lo, hi) = cols.split_at_mut(j);
+                    (&lo[i], &mut hi[0])
+                } else {
+                    unreachable!()
+                };
+                for (x, &y) in cj.iter_mut().zip(ci.iter()) {
+                    *x -= proj * y;
+                }
+            }
+        }
+        let nrm = norm2(&cols[j]);
+        if nrm > 1e-12 {
+            let inv = 1.0 / nrm;
+            for x in cols[j].iter_mut() {
+                *x *= inv;
+            }
+        } else {
+            for x in cols[j].iter_mut() {
+                *x = 0.0;
+            }
+        }
+    }
+    let mut q = Matrix::zeros(m, k);
+    for (c, col) in cols.iter().enumerate() {
+        for (r, &v) in col.iter().enumerate() {
+            q.set(r, c, v);
+        }
+    }
+    q
+}
+
+/// Eigendecomposition of a small symmetric PSD matrix via cyclic Jacobi.
+/// Returns (eigenvalues desc, eigenvectors as columns).
+pub fn jacobi_eigh(a: &Matrix, max_sweeps: usize) -> (Vec<f64>, Matrix) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Matrix::zeros(n, n);
+    for i in 0..n {
+        v.set(i, i, 1.0);
+    }
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m.get(p, q).abs();
+            }
+        }
+        if off < 1e-11 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-14 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,q of m
+                for i in 0..n {
+                    let mip = m.get(i, p);
+                    let miq = m.get(i, q);
+                    m.set(i, p, c * mip - s * miq);
+                    m.set(i, q, s * mip + c * miq);
+                }
+                for i in 0..n {
+                    let mpi = m.get(p, i);
+                    let mqi = m.get(q, i);
+                    m.set(p, i, c * mpi - s * mqi);
+                    m.set(q, i, s * mpi + c * mqi);
+                }
+                for i in 0..n {
+                    let vip = v.get(i, p);
+                    let viq = v.get(i, q);
+                    v.set(i, p, c * vip - s * viq);
+                    v.set(i, q, s * vip + c * viq);
+                }
+            }
+        }
+    }
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals: Vec<f64> = pairs.iter().map(|&(val, _)| val.max(0.0)).collect();
+    let mut vecs = Matrix::zeros(n, n);
+    for (new_c, &(_, old_c)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            vecs.set(r, new_c, v.get(r, old_c));
+        }
+    }
+    (vals, vecs)
+}
+
+/// Randomized truncated SVD. `a` is accessed via matmuls only.
+pub fn randomized_svd(a: &Matrix, k: usize, oversample: usize, power_iters: usize, seed: u64) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let k = k.min(m.min(n));
+    let l = (k + oversample).min(m.min(n)).max(1);
+    let mut rng = Xoshiro256::new(seed);
+    let omega = Matrix::randn(n, l, &mut rng);
+    let mut y = a.matmul(&omega); // m × l
+    let at = a.transpose();
+    for _ in 0..power_iters {
+        // re-orthonormalise between powers for stability
+        y = thin_qr_q(&y);
+        let z = at.matmul(&y); // n × l
+        let zq = thin_qr_q(&z);
+        y = a.matmul(&zq);
+    }
+    let q = thin_qr_q(&y); // m × l, orthonormal columns
+    let b = q.transpose().matmul(a); // l × n
+    // SVD of small B via eigh(B Bᵀ): B = Ub S Vᵀ, B Bᵀ = Ub S² Ubᵀ
+    let bbt = b.matmul(&b.transpose()); // l × l
+    let (evals, evecs) = jacobi_eigh(&bbt, 60);
+    let mut s: Vec<f64> = evals.iter().take(k).map(|&e| e.max(0.0).sqrt()).collect();
+    // U = Q · Ub[:, :k]
+    let mut ub_k = Matrix::zeros(b.rows, k);
+    for c in 0..k {
+        for r in 0..b.rows {
+            ub_k.set(r, c, evecs.get(r, c));
+        }
+    }
+    let u = q.matmul(&ub_k); // m × k
+    // V = Bᵀ Ub S⁻¹
+    let mut v = b.transpose().matmul(&ub_k); // n × k
+    for c in 0..k {
+        let inv = if s[c] > 1e-12 { 1.0 / s[c] } else { 0.0 };
+        for r in 0..n {
+            let val = v.get(r, c) * inv;
+            v.set(r, c, val);
+        }
+    }
+    while s.len() < k {
+        s.push(0.0);
+    }
+    Svd { u, s, v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qr_orthonormal_columns() {
+        let mut rng = Xoshiro256::new(1);
+        let a = Matrix::randn(50, 8, &mut rng);
+        let q = thin_qr_q(&a);
+        for i in 0..8 {
+            let ci: Vec<f64> = (0..50).map(|r| q.get(r, i)).collect();
+            assert!((norm2(&ci) - 1.0).abs() < 1e-8, "col {} norm", i);
+            for j in (i + 1)..8 {
+                let cj: Vec<f64> = (0..50).map(|r| q.get(r, j)).collect();
+                assert!(dot(&ci, &cj).abs() < 1e-8, "cols {} {}", i, j);
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_recovers_diagonal() {
+        let a = Matrix::from_rows(vec![
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ]);
+        let (vals, _) = jacobi_eigh(&a, 30);
+        assert!((vals[0] - 3.0).abs() < 1e-9);
+        assert!((vals[1] - 2.0).abs() < 1e-9);
+        assert!((vals[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // eigenvalues of [[2,1],[1,2]] are 3 and 1
+        let a = Matrix::from_rows(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (vals, vecs) = jacobi_eigh(&a, 30);
+        assert!((vals[0] - 3.0).abs() < 1e-9);
+        assert!((vals[1] - 1.0).abs() < 1e-9);
+        // eigenvector for 3 is (1,1)/√2 up to sign
+        let ratio = vecs.get(0, 0) / vecs.get(1, 0);
+        assert!((ratio - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn svd_reconstructs_low_rank() {
+        // A = outer products of 3 random rank-1 terms; rank-3 SVD must
+        // reconstruct it nearly exactly.
+        let mut rng = Xoshiro256::new(7);
+        let u = Matrix::randn(40, 3, &mut rng);
+        let v = Matrix::randn(3, 30, &mut rng);
+        let a = u.matmul(&v);
+        let svd = randomized_svd(&a, 3, 6, 2, 11);
+        // reconstruct
+        let mut us = svd.u.clone();
+        for c in 0..3 {
+            for r in 0..40 {
+                let val = us.get(r, c) * svd.s[c];
+                us.set(r, c, val);
+            }
+        }
+        let recon = us.matmul(&svd.v.transpose());
+        let mut err = 0.0;
+        for i in 0..a.data.len() {
+            err += (a.data[i] - recon.data[i]).powi(2);
+        }
+        let rel = err.sqrt() / a.frobenius_norm();
+        assert!(rel < 1e-6, "rel err {}", rel);
+    }
+
+    #[test]
+    fn svd_singular_values_ordered() {
+        let mut rng = Xoshiro256::new(9);
+        let a = Matrix::randn(30, 20, &mut rng);
+        let svd = randomized_svd(&a, 5, 5, 2, 3);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9, "not sorted: {:?}", svd.s);
+        }
+        assert!(svd.s[0] > 0.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! `cabin-sketch` — the coordinator binary.
+//!
+//! ```text
+//! cabin-sketch serve   [--addr 127.0.0.1:7878] [--dim 4096] [--categories 64]
+//!                      [--sketch-dim 1024] [--seed 42] [--shards 4]
+//!                      [--no-xla] [--max-batch 64] [--max-delay-ms 2]
+//! cabin-sketch sketch  --input docword.txt [--sketch-dim 1000] [--out sketches.bin]
+//! cabin-sketch repro   <table1|table3|table4|fig2..fig12|ablation-*|all> [options]
+//! cabin-sketch info    # artifact + environment report
+//! ```
+//!
+//! See DESIGN.md for the experiment index and README.md for a tour.
+
+use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use cabin::util::cli::Args;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "serve" => cmd_serve(&args),
+        "sketch" => cmd_sketch(&args),
+        "repro" => cmd_repro(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "cabin-sketch — Cabin/Cham categorical sketching service\n\
+         \n\
+         commands:\n\
+           serve    run the sketch service (TCP line-JSON protocol)\n\
+           sketch   one-shot: sketch a UCI docword file to packed binary\n\
+           repro    regenerate a paper table/figure (see DESIGN.md §4)\n\
+           info     report artifacts, backend and configuration\n\
+         \n\
+         repro ids: table1 table3 table4 fig2 fig3 fig4 fig5 fig6 fig7 fig8\n\
+                    fig9 fig10 fig11 fig12 ablation-estimator ablation-psi\n\
+                    ablation-onehot all\n\
+         common options: --datasets kos,nips,... --points N --dims 100,500\n\
+                    --dim 1000 --seed 42 --budget-secs 120"
+    );
+}
+
+fn coordinator_config(args: &Args) -> CoordinatorConfig {
+    CoordinatorConfig {
+        input_dim: args.usize_or("dim", 4096),
+        num_categories: args.usize_or("categories", 64) as u16,
+        sketch_dim: args.usize_or("sketch-dim", 1024),
+        seed: args.u64_or("seed", 42),
+        num_shards: args.usize_or("shards", 4),
+        batcher: BatcherConfig {
+            max_batch: args.usize_or("max-batch", 64),
+            max_delay: Duration::from_millis(args.u64_or("max-delay-ms", 2)),
+            queue_cap: args.usize_or("queue-cap", 4096),
+        },
+        use_xla: !args.flag("no-xla"),
+        heatmap_limit: args.usize_or("heatmap-limit", 4096),
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let coordinator = Arc::new(Coordinator::new(coordinator_config(args)));
+    println!(
+        "[serve] corpus dim={} c={} sketch d={} shards={} — listening",
+        coordinator.config.input_dim,
+        coordinator.config.num_categories,
+        coordinator.config.sketch_dim,
+        coordinator.config.num_shards
+    );
+    coordinator.serve(&addr, |bound| println!("[serve] bound {bound}"))
+}
+
+fn cmd_sketch(args: &Args) -> anyhow::Result<()> {
+    use cabin::sketch::{CabinSketcher, SketchConfig};
+    use std::io::Write;
+    let input = args
+        .str_opt("input")
+        .ok_or_else(|| anyhow::anyhow!("--input <docword.txt> required"))?;
+    let d = args.usize_or("sketch-dim", 1000);
+    let seed = args.u64_or("seed", 42);
+    let cap = args.usize_or("categories", u16::MAX as usize) as u16;
+    let max_points = args.str_opt("points").and_then(|p| p.parse().ok());
+    let ds = cabin::data::bow::load_docword(input, cap, max_points)?;
+    println!(
+        "[sketch] {}: {} points, dim {}, density ≤ {}",
+        ds.name,
+        ds.len(),
+        ds.dim(),
+        ds.max_density()
+    );
+    let cfg = SketchConfig::new(ds.dim(), ds.num_categories(), d, seed);
+    let sk = CabinSketcher::from_config(cfg);
+    let sketches = sk.sketch_dataset(&ds, cabin::util::parallel::default_threads());
+    let out = args.str_or("out", "sketches.bin");
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&out)?);
+    // header: magic, d, count — then packed u64 words per sketch
+    f.write_all(b"CABN")?;
+    f.write_all(&(d as u64).to_le_bytes())?;
+    f.write_all(&(sketches.len() as u64).to_le_bytes())?;
+    for s in &sketches {
+        for w in s.words() {
+            f.write_all(&w.to_le_bytes())?;
+        }
+    }
+    println!(
+        "[sketch] wrote {} ({} per point)",
+        out,
+        cabin::util::human_bytes(d.div_ceil(8))
+    );
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    cabin::repro::run(id, args)
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    println!("cabin-sketch {}", env!("CARGO_PKG_VERSION"));
+    println!("threads: {}", cabin::util::parallel::default_threads());
+    match cabin::runtime::XlaEngine::try_default() {
+        Some(engine) => {
+            println!("xla: available (platform {})", engine.platform());
+            let m = &engine.manifest;
+            println!(
+                "artifacts: n={} c={} d={} seed={} batches: sketch {}, allpairs {}, cross {}x{}",
+                m.n, m.c, m.d, m.seed, m.m, m.mp, m.mq, m.mc
+            );
+            println!("sidecars validated: π and ψ match native derivations");
+        }
+        None => println!("xla: artifacts not found (native path only) — run `make artifacts`"),
+    }
+    let _ = args;
+    Ok(())
+}

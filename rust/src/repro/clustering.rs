@@ -1,0 +1,179 @@
+//! Figures 6–10: clustering quality (purity / NMI / ARI) and speed.
+//!
+//! Protocol (paper Section 5.4): ground truth = k-mode on the *full*
+//! categorical data; each method reduces to dimension d and is clustered —
+//! k-mode (binary variant) for discrete sketches, k-means for real-valued
+//! embeddings — from the same seeded initial centres; quality is scored
+//! against the ground truth.
+
+use crate::analysis::write_csv;
+use crate::baselines::{by_key, Reduced};
+use crate::bench::{time_budgeted, time_once};
+use crate::cluster::{
+    adjusted_rand_index, kmeans, kmode, kmode_binary, normalized_mutual_information, purity,
+};
+use crate::data::CategoricalDataset;
+use crate::util::cli::Args;
+use anyhow::Result;
+use std::sync::Arc;
+
+fn cluster_reduced(red: &Reduced, k: usize, iters: usize, seed: u64) -> Vec<usize> {
+    if let Some(bits) = red.as_bits() {
+        kmode_binary(bits, k, iters, seed).assignments
+    } else {
+        kmeans(&red.to_matrix(), k, iters, seed).assignments
+    }
+}
+
+/// Figures 6, 7, 8 (and the quality part of 9): per dataset × dimension ×
+/// method, all three quality metrics in one CSV.
+pub fn fig678_quality(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 42);
+    let k = args.usize_or("k", 5);
+    let iters = args.usize_or("cluster-iters", 25);
+    let dims = super::dims(args);
+    let methods = args.str_list_or(
+        "methods",
+        &["cabin", "bcs", "hlsh", "fh", "sh", "lsa", "pca", "lda", "nnmf"],
+    );
+    let budget = super::budget_secs(args);
+    let mut csv = Vec::new();
+    for spec in super::selected_specs(args) {
+        let ds = Arc::new(super::load(spec, args));
+        let truth = kmode(&ds, k, iters, seed).assignments;
+        for &dim in &dims {
+            for m in &methods {
+                if super::speed::oom_guard(m, &ds, dim).is_some() {
+                    csv.push(format!("{},{},{},OOM,OOM,OOM", spec.key, dim, m));
+                    continue;
+                }
+                let reducer = match by_key(m) {
+                    Some(r) => r,
+                    None => continue,
+                };
+                let ds2 = Arc::clone(&ds);
+                let m_owned = m.clone();
+                let result = time_budgeted(budget, move || {
+                    let red = by_key(&m_owned).unwrap().reduce(&ds2, dim, seed);
+                    cluster_reduced(&red, k, iters, seed)
+                });
+                drop(reducer);
+                match result {
+                    Some((assign, _)) => {
+                        let p = purity(&truth, &assign);
+                        let nmi = normalized_mutual_information(&truth, &assign);
+                        let ari = adjusted_rand_index(&truth, &assign);
+                        println!(
+                            "[fig678] {} d={} {}: purity={:.3} nmi={:.3} ari={:.3}",
+                            spec.key, dim, m, p, nmi, ari
+                        );
+                        csv.push(format!(
+                            "{},{},{},{:.4},{:.4},{:.4}",
+                            spec.key, dim, m, p, nmi, ari
+                        ));
+                    }
+                    None => {
+                        println!("[fig678] {} d={} {}: DNS", spec.key, dim, m);
+                        csv.push(format!("{},{},{},DNS,DNS,DNS", spec.key, dim, m));
+                    }
+                }
+            }
+        }
+    }
+    let path = write_csv("fig678", "dataset,dim,method,purity,nmi,ari", &csv)?;
+    println!("[fig678] wrote {path} (fig6=purity, fig7=nmi, fig8=ari)");
+    Ok(())
+}
+
+/// Figure 9: the NIPS-twin clustering across all three metrics.
+pub fn fig9_nips(args: &Args) -> Result<()> {
+    let mut forced = args.clone();
+    forced
+        .options
+        .insert("datasets".to_string(), "nips".to_string());
+    fig678_quality(&forced)
+}
+
+/// Figure 10: clustering wall-time on the full-dimension data vs on the
+/// 1000-dimension Cabin sketches.
+pub fn fig10_speedup(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 42);
+    let k = args.usize_or("k", 5);
+    let iters = args.usize_or("cluster-iters", 25);
+    let dim = args.usize_or("dim", 1000);
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for spec in super::selected_specs(args) {
+        let ds: CategoricalDataset = super::load(spec, args);
+        let (_, t_full) = time_once(|| kmode(&ds, k, iters, seed));
+        let red = by_key("cabin").unwrap().reduce(&ds, dim, seed);
+        let (_, t_sketch_cluster) = time_once(|| {
+            let bits = red.as_bits().unwrap();
+            kmode_binary(bits, k, iters, seed)
+        });
+        let speedup = t_full / t_sketch_cluster.max(1e-9);
+        rows.push((
+            spec.name.to_string(),
+            vec![
+                format!("{:.3}s", t_full),
+                format!("{:.3}s", t_sketch_cluster),
+                format!("{:.1}x", speedup),
+            ],
+        ));
+        csv.push(format!(
+            "{},{:.6},{:.6},{:.3}",
+            spec.key, t_full, t_sketch_cluster, speedup
+        ));
+    }
+    super::print_table(
+        &format!("Figure 10 — clustering time: full data vs {dim}-d Cabin sketches"),
+        &["dataset", "full", "sketch", "speedup"],
+        &rows,
+    );
+    let path = write_csv("fig10", "dataset,full_secs,sketch_secs,speedup", &csv)?;
+    println!("[fig10] wrote {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig678_small() {
+        let args = Args::parse(
+            [
+                "--datasets", "kos", "--points", "36", "--dims", "64", "--methods",
+                "cabin,lsa", "--k", "3", "--cluster-iters", "8", "--budget-secs", "60",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        fig678_quality(&args).unwrap();
+        let content = std::fs::read_to_string("results/fig678.csv").unwrap();
+        assert!(content.contains("cabin"));
+        assert!(content.contains("lsa"));
+        // cabin purity at moderate dim should be decent
+        for line in content.lines().skip(1) {
+            let f: Vec<&str> = line.split(',').collect();
+            if f[2] == "cabin" {
+                let p: f64 = f[3].parse().unwrap();
+                assert!(p > 0.4, "cabin purity {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig10_small() {
+        let args = Args::parse(
+            [
+                "--datasets", "kos", "--points", "30", "--dim", "128", "--k", "3",
+                "--cluster-iters", "5",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        fig10_speedup(&args).unwrap();
+        assert!(std::path::Path::new("results/fig10.csv").exists());
+    }
+}

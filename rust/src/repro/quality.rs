@@ -1,0 +1,145 @@
+//! Figure 3 (RMSE vs dimension), Table 4 (heatmap MAE), Figures 11–12
+//! (heatmaps, exact vs estimated vs per-method error maps).
+
+use crate::analysis::heatmap::Heatmap;
+use crate::analysis::rmse::rmse;
+use crate::analysis::write_csv;
+use crate::baselines::{by_key, DISCRETE_KEYS};
+use crate::util::cli::Args;
+use anyhow::Result;
+
+/// Figure 3: all-pairs RMSE of the discrete-sketch methods per dataset and
+/// reduced dimension.
+pub fn fig3_rmse(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 42);
+    let dims = super::dims(args);
+    let methods = args.str_list_or("methods", &DISCRETE_KEYS);
+    let budget = super::budget_secs(args);
+    let mut csv = Vec::new();
+    for spec in super::selected_specs(args) {
+        let ds = std::sync::Arc::new(super::load(spec, args));
+        for &dim in &dims {
+            let mut cells = Vec::new();
+            for key in &methods {
+                // OOM/DNS handling mirrors the paper (KT OOMs on the big
+                // datasets; Figure 3 notes it couldn't finish on Enron).
+                let cell = if super::speed::oom_guard(key, &ds, dim).is_some() {
+                    "OOM".to_string()
+                } else {
+                    let ds2 = std::sync::Arc::clone(&ds);
+                    let key2 = key.clone();
+                    match crate::bench::time_budgeted(budget, move || {
+                        let red = by_key(&key2).expect("method").reduce(&ds2, dim, seed);
+                        rmse(&ds2, &red)
+                    }) {
+                        Some((e, _)) => format!("{:.3}", e),
+                        None => "DNS".to_string(),
+                    }
+                };
+                cells.push(cell);
+            }
+            println!("[fig3] {} d={}: {}", spec.key, dim, cells.join(" "));
+            csv.push(format!("{},{},{}", spec.key, dim, cells.join(",")));
+        }
+    }
+    let path = write_csv("fig3", &format!("dataset,dim,{}", methods.join(",")), &csv)?;
+    println!("[fig3] wrote {path}");
+    Ok(())
+}
+
+/// Table 4 + Figures 11/12: heatmaps on the BrainCell twin (or --datasets),
+/// MAE per method, PGM renderings of exact / estimated / error maps.
+pub fn table4_mae(args: &Args) -> Result<()> {
+    heatmap_suite(args, false)
+}
+
+pub fn fig11_heatmaps(args: &Args) -> Result<()> {
+    heatmap_suite(args, true)
+}
+
+pub fn fig12_error_heatmaps(args: &Args) -> Result<()> {
+    heatmap_suite(args, true)
+}
+
+fn heatmap_suite(args: &Args, write_images: bool) -> Result<()> {
+    let seed = args.u64_or("seed", 42);
+    let dim = args.usize_or("dim", 1000);
+    let methods = args.str_list_or("methods", &["cabin", "bcs", "hlsh", "fh", "sh"]);
+    let specs = {
+        let sel = args.str_list_or("datasets", &["braincell"]);
+        sel
+    };
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for key in &specs {
+        let spec = match crate::data::registry::DatasetSpec::by_key(key) {
+            Some(s) => s,
+            None => continue,
+        };
+        let ds = super::load(spec, args);
+        let exact = Heatmap::exact(&ds);
+        if write_images {
+            exact.write_pgm(&format!("results/fig11_{}_exact.pgm", spec.key))?;
+        }
+        let mut cells = Vec::new();
+        for m in &methods {
+            let red = by_key(m).expect("method").reduce(&ds, dim, seed);
+            let est = Heatmap::estimated(&red);
+            let mae = est.mae_vs(&exact);
+            cells.push(format!("{:.2}", mae));
+            csv.push(format!("{},{},{:.6}", spec.key, m, mae));
+            if write_images {
+                est.write_pgm(&format!("results/fig11_{}_{}.pgm", spec.key, m))?;
+                est.error_vs(&exact)
+                    .write_pgm(&format!("results/fig12_{}_{}_error.pgm", spec.key, m))?;
+            }
+        }
+        rows.push((spec.name.to_string(), cells));
+    }
+    let mut header = vec!["dataset"];
+    header.extend(methods.iter().map(|s| s.as_str()));
+    super::print_table(
+        &format!("Table 4 — heatmap MAE at d={dim} (lower is better)"),
+        &header,
+        &rows,
+    );
+    let path = write_csv("table4", "dataset,method,mae", &csv)?;
+    println!("[table4] wrote {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_args(extra: &[&str]) -> Args {
+        let mut v = vec!["--datasets", "kos", "--points", "40", "--dims", "64,128"];
+        v.extend_from_slice(extra);
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn fig3_runs_and_cabin_wins_vs_hlsh() {
+        fig3_rmse(&small_args(&["--methods", "cabin,hlsh"])).unwrap();
+        let content = std::fs::read_to_string("results/fig3.csv").unwrap();
+        let last = content.lines().last().unwrap();
+        let f: Vec<&str> = last.split(',').collect();
+        let cabin: f64 = f[2].parse().unwrap();
+        let hlsh: f64 = f[3].parse().unwrap();
+        assert!(cabin < hlsh, "cabin {cabin} hlsh {hlsh}");
+    }
+
+    #[test]
+    fn table4_runs_small() {
+        let args = Args::parse(
+            [
+                "--datasets", "kos", "--points", "30", "--dim", "128", "--methods", "cabin,fh",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        table4_mae(&args).unwrap();
+        let content = std::fs::read_to_string("results/table4.csv").unwrap();
+        assert!(content.lines().count() >= 3);
+    }
+}

@@ -1,0 +1,119 @@
+//! Figures 4–5: variance analysis of the two Cabin stages (box plots as
+//! five-number summaries in CSV + console).
+
+use crate::analysis::stats::BoxStats;
+use crate::analysis::variance::{binem_avg_abs_errors, binem_pair_errors, stage2_pair_errors};
+use crate::analysis::write_csv;
+use crate::util::cli::Args;
+use crate::util::rng::Xoshiro256;
+use anyhow::Result;
+
+/// Figure 4: BinEm variance — single-pair signed errors (top row) and
+/// per-run average absolute errors (bottom row), on two dataset twins.
+pub fn fig4_binem(args: &Args) -> Result<()> {
+    let trials = args.usize_or("trials", 1000);
+    let runs = args.usize_or("runs", 100);
+    let seed = args.u64_or("seed", 42);
+    let mut csv = Vec::new();
+    for spec in super::selected_specs(args).iter().take(2) {
+        let ds = super::load(spec, args);
+        let mut rng = Xoshiro256::new(seed);
+        let i = rng.usize_in(0, ds.len());
+        let j = (i + 1 + rng.usize_in(0, ds.len() - 1)) % ds.len();
+        let pair_errs = binem_pair_errors(&ds, i, j, trials, seed);
+        let pair_box = BoxStats::from_samples(&pair_errs);
+        let avg_errs = binem_avg_abs_errors(&ds.sample(40.min(ds.len()), &mut rng), runs, seed);
+        let avg_box = BoxStats::from_samples(&avg_errs);
+        println!(
+            "[fig4] {} pair({},{}) truth={} signed-err box: {}",
+            spec.key,
+            i,
+            j,
+            ds.points[i].hamming(&ds.points[j]),
+            pair_box.csv_row("pair")
+        );
+        println!("[fig4] {} avg-abs-err box: {}", spec.key, avg_box.csv_row("avg"));
+        csv.push(format!("{},{}", spec.key, pair_box.csv_row("pair")));
+        csv.push(format!("{},{}", spec.key, avg_box.csv_row("avg")));
+    }
+    let path = write_csv("fig4", &format!("dataset,{}", BoxStats::CSV_HEADER), &csv)?;
+    println!("[fig4] wrote {path}");
+    Ok(())
+}
+
+/// Figure 5: second-stage compressor error box plots on one random pair
+/// (paper uses Enron) across reduced dimensions.
+pub fn fig5_stage2(args: &Args) -> Result<()> {
+    let trials = args.usize_or("trials", 300);
+    let seed = args.u64_or("seed", 42);
+    let dims = args.usize_list_or("dims", &[200, 500, 1000, 2000]);
+    let methods = args.str_list_or("methods", &["cabin", "bcs", "hlsh", "fh", "sh"]);
+    let key = args
+        .str_list_or("datasets", &["enron"])
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "enron".into());
+    let spec = crate::data::registry::DatasetSpec::by_key(&key)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {key}"))?;
+    let ds = super::load(spec, args);
+    let mut rng = Xoshiro256::new(seed);
+    let i = rng.usize_in(0, ds.len());
+    let j = (i + 1 + rng.usize_in(0, ds.len() - 1)) % ds.len();
+    println!(
+        "[fig5] {} pair ({}, {}), truth HD = {}",
+        spec.key,
+        i,
+        j,
+        ds.points[i].hamming(&ds.points[j])
+    );
+    let mut csv = Vec::new();
+    for &dim in &dims {
+        for m in &methods {
+            let errs = stage2_pair_errors(&ds, m, dim, i, j, trials, seed);
+            let b = BoxStats::from_samples(&errs);
+            println!("[fig5] d={dim} {m}: {}", b.csv_row(m));
+            csv.push(format!("{},{},{}", dim, m, b.csv_row(m)));
+        }
+    }
+    let path = write_csv(
+        "fig5",
+        &format!("dim,method,{}", BoxStats::CSV_HEADER),
+        &csv,
+    )?;
+    println!("[fig5] wrote {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_small() {
+        let args = Args::parse(
+            [
+                "--datasets", "kos", "--points", "20", "--trials", "50", "--runs", "10",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        fig4_binem(&args).unwrap();
+        assert!(std::path::Path::new("results/fig4.csv").exists());
+    }
+
+    #[test]
+    fn fig5_small() {
+        let args = Args::parse(
+            [
+                "--datasets", "kos", "--points", "16", "--trials", "20", "--dims", "64",
+                "--methods", "cabin,fh",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        fig5_stage2(&args).unwrap();
+        let content = std::fs::read_to_string("results/fig5.csv").unwrap();
+        assert!(content.contains("cabin"));
+        assert!(content.contains("fh"));
+    }
+}

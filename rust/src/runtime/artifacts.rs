@@ -1,0 +1,223 @@
+//! Artifact manifest + sidecar handling.
+//!
+//! `manifest.json` (written by aot.py) records the fixed shapes each HLO
+//! module was lowered with, plus the (n, c, d, seed) configuration; the
+//! sidecars carry the π table (u32 LE) and the per-attribute ψ matrix
+//! (u8, row-major (n, c+1)). [`Manifest::validate_against_native`] checks
+//! the sidecars agree bit-for-bit with the rust derivations — the tripwire
+//! for cross-language drift.
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_file: String,
+    /// (dtype, shape) per input, e.g. ("i32", [64, 4096]).
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: String,
+    /// Input dimension n.
+    pub n: usize,
+    /// Category bound c.
+    pub c: u16,
+    /// Sketch dimension d.
+    pub d: usize,
+    /// Shared seed for ψ/π.
+    pub seed: u64,
+    /// Batch sizes: sketch batch m, all-pairs mp, query mq, corpus mc.
+    pub m: usize,
+    pub mp: usize,
+    pub mq: usize,
+    pub mc: usize,
+    pub pi_file: String,
+    pub psi_file: String,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn shapes(v: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    let mut out = Vec::new();
+    for item in v.as_arr().context("expected array of [dtype, shape]")? {
+        let pair = item.as_arr().context("expected [dtype, shape]")?;
+        let dtype = pair
+            .first()
+            .and_then(|d| d.as_str())
+            .context("dtype")?
+            .to_string();
+        let shape = pair
+            .get(1)
+            .and_then(|s| s.as_arr())
+            .context("shape")?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        out.push((dtype, shape));
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path}"))?;
+        let root = json::parse(&text)?;
+        let cfg = root.get("config").context("manifest: config")?;
+        let sidecars = root.get("sidecars").context("manifest: sidecars")?;
+        let arts = match root.get("artifacts") {
+            Some(Json::Obj(m)) => m,
+            _ => bail!("manifest: artifacts object missing"),
+        };
+        let mut artifacts = Vec::new();
+        for (name, spec) in arts {
+            artifacts.push(ArtifactSpec {
+                name: name.clone(),
+                hlo_file: spec.req_str("hlo")?.to_string(),
+                inputs: shapes(spec.get("inputs").context("inputs")?)?,
+                outputs: shapes(spec.get("outputs").context("outputs")?)?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_string(),
+            n: cfg.req_usize("n")?,
+            c: cfg.req_usize("c")? as u16,
+            d: cfg.req_usize("d")?,
+            seed: cfg.req_usize("seed")? as u64,
+            m: cfg.req_usize("m")?,
+            mp: cfg.req_usize("mp")?,
+            mq: cfg.req_usize("mq")?,
+            mc: cfg.req_usize("mc")?,
+            pi_file: sidecars.req_str("pi")?.to_string(),
+            psi_file: sidecars.req_str("psi")?.to_string(),
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Option<String> {
+        self.artifact(name).map(|a| format!("{}/{}", self.dir, a.hlo_file))
+    }
+
+    /// Load the π sidecar (u32 little-endian).
+    pub fn load_pi(&self) -> Result<Vec<u32>> {
+        let path = format!("{}/{}", self.dir, self.pi_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("read {path}"))?;
+        if bytes.len() != self.n * 4 {
+            bail!("pi sidecar wrong size: {} != {}", bytes.len(), self.n * 4);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Load the ψ matrix sidecar (row-major (n, c+1) u8).
+    pub fn load_psi_matrix(&self) -> Result<Vec<u8>> {
+        let path = format!("{}/{}", self.dir, self.psi_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("read {path}"))?;
+        let expect = self.n * (self.c as usize + 1);
+        if bytes.len() != expect {
+            bail!("psi sidecar wrong size: {} != {}", bytes.len(), expect);
+        }
+        Ok(bytes)
+    }
+
+    /// Verify the sidecars equal the rust-side derivations bit-for-bit.
+    pub fn validate_against_native(&self) -> Result<()> {
+        let pi = self.load_pi()?;
+        let native_pi = crate::sketch::mappings::derive_pi(self.seed, self.n, self.d);
+        if pi != native_pi {
+            bail!("pi sidecar diverges from rust derivation");
+        }
+        let psi = self.load_psi_matrix()?;
+        let be = crate::sketch::BinEm::new(
+            self.n,
+            self.c,
+            crate::sketch::PsiMode::PerAttribute,
+            self.seed,
+        );
+        let cw = self.c as usize + 1;
+        for i in (0..self.n).step_by((self.n / 257).max(1)) {
+            for v in 0..=self.c {
+                if psi[i * cw + v as usize] != be.psi(i, v) {
+                    bail!("psi sidecar diverges at ({}, {})", i, v);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a fake manifest dir for parser tests (no XLA involved).
+    fn fake_dir() -> String {
+        let dir = std::env::temp_dir().join(format!("cabin_manifest_{}", std::process::id()));
+        let dir_s = dir.to_str().unwrap().to_string();
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+            "config": {"n": 16, "c": 3, "d": 8, "m": 2, "mp": 4, "mq": 2, "mc": 4, "seed": 5},
+            "sidecars": {"pi": "pi.u32", "psi": "psi.u8"},
+            "artifacts": {
+                "cabin_sketch": {"hlo": "cs.hlo.txt", "inputs": [["i32", [2, 16]]], "outputs": [["f32", [2, 8]]]}
+            }
+        }"#;
+        std::fs::write(format!("{dir_s}/manifest.json"), manifest).unwrap();
+        // sidecars from the native derivations
+        let pi = crate::sketch::mappings::derive_pi(5, 16, 8);
+        let mut pi_bytes = Vec::new();
+        for v in &pi {
+            pi_bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(format!("{dir_s}/pi.u32"), pi_bytes).unwrap();
+        let be = crate::sketch::BinEm::new(16, 3, crate::sketch::PsiMode::PerAttribute, 5);
+        let mut psi_bytes = Vec::new();
+        for i in 0..16 {
+            for v in 0..=3u16 {
+                psi_bytes.push(be.psi(i, v));
+            }
+        }
+        std::fs::write(format!("{dir_s}/psi.u8"), psi_bytes).unwrap();
+        dir_s
+    }
+
+    #[test]
+    fn parse_and_validate() {
+        let dir = fake_dir();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n, 16);
+        assert_eq!(m.d, 8);
+        assert_eq!(m.artifact("cabin_sketch").unwrap().inputs[0].1, vec![2, 16]);
+        assert!(m.artifact("nope").is_none());
+        m.validate_against_native().unwrap();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn corrupted_sidecar_detected() {
+        let dir = fake_dir();
+        // flip a pi byte
+        let p = format!("{dir}/pi.u32");
+        let mut b = std::fs::read(&p).unwrap();
+        b[0] ^= 1;
+        std::fs::write(&p, b).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.validate_against_native().is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/cabin").is_err());
+    }
+}

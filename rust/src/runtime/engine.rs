@@ -1,0 +1,211 @@
+//! The XLA execution engine: one PJRT CPU client, one compiled executable
+//! per artifact, typed batch entry points.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`, with the
+//! outputs unwrapped via `to_tuple1()` (aot.py lowers with
+//! `return_tuple=True`).
+
+use super::artifacts::Manifest;
+use crate::data::CatVector;
+use crate::sketch::BitVec;
+use anyhow::{bail, Context, Result};
+use std::sync::Mutex;
+
+/// Compiled executables for the artifact set. `execute` takes `&self` but
+/// the underlying PJRT executable is not documented thread-safe, so calls
+/// are serialised through a mutex — the coordinator batches upstream of
+/// this anyway.
+pub struct XlaEngine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    lock: Mutex<()>,
+    exe_cabin_sketch: xla::PjRtLoadedExecutable,
+    exe_cham_allpairs: xla::PjRtLoadedExecutable,
+    exe_cham_cross: xla::PjRtLoadedExecutable,
+    exe_sketch_allpairs: xla::PjRtLoadedExecutable,
+}
+
+impl XlaEngine {
+    /// Load + compile everything in `dir`. Fails if artifacts are missing
+    /// or the sidecars diverge from the native derivations.
+    pub fn load(dir: &str) -> Result<XlaEngine> {
+        let manifest = Manifest::load(dir)?;
+        manifest
+            .validate_against_native()
+            .context("sidecar validation")?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest
+                .hlo_path(name)
+                .with_context(|| format!("artifact {name} missing from manifest"))?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compile {name}"))
+        };
+        Ok(XlaEngine {
+            exe_cabin_sketch: compile("cabin_sketch")?,
+            exe_cham_allpairs: compile("cham_allpairs")?,
+            exe_cham_cross: compile("cham_cross")?,
+            exe_sketch_allpairs: compile("sketch_allpairs")?,
+            client,
+            lock: Mutex::new(()),
+            manifest,
+        })
+    }
+
+    /// Convenience: try the default location, None if unavailable.
+    pub fn try_default() -> Option<XlaEngine> {
+        for dir in ["artifacts", "../artifacts"] {
+            if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+                match Self::load(dir) {
+                    Ok(e) => return Some(e),
+                    Err(err) => {
+                        eprintln!("[runtime] artifacts at {dir} unusable: {err:#}");
+                        return None;
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run_f32(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+        expect_len: usize,
+    ) -> Result<Vec<f32>> {
+        let _guard = self.lock.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?
+            .to_literal_sync()?;
+        let out = lit.to_tuple1()?; // aot.py lowers return_tuple=True, 1-tuple
+        let v = out.to_vec::<f32>()?;
+        if v.len() != expect_len {
+            bail!("output length {} != expected {}", v.len(), expect_len);
+        }
+        Ok(v)
+    }
+
+    /// Densify a categorical vector batch into the artifact's (m, n) i32
+    /// layout, padding missing rows with all-zeros (estimates for padding
+    /// rows are discarded by callers).
+    fn densify(&self, batch: &[CatVector]) -> Result<xla::Literal> {
+        let (m, n) = (self.manifest.m, self.manifest.n);
+        if batch.len() > m {
+            bail!("batch {} exceeds artifact batch size {}", batch.len(), m);
+        }
+        let mut flat = vec![0i32; m * n];
+        for (r, p) in batch.iter().enumerate() {
+            if p.dim() != n {
+                bail!("vector dim {} != artifact n {}", p.dim(), n);
+            }
+            for &(i, v) in p.entries() {
+                flat[r * n + i as usize] = v as i32;
+            }
+        }
+        Ok(xla::Literal::vec1(&flat).reshape(&[m as i64, n as i64])?)
+    }
+
+    fn sketch_matrix_literal(&self, sketches: &[BitVec], rows: usize) -> Result<xla::Literal> {
+        let d = self.manifest.d;
+        if sketches.len() > rows {
+            bail!("batch {} exceeds artifact rows {}", sketches.len(), rows);
+        }
+        let mut flat = vec![0f32; rows * d];
+        for (r, s) in sketches.iter().enumerate() {
+            if s.len() != d {
+                bail!("sketch dim {} != artifact d {}", s.len(), d);
+            }
+            for b in s.iter_ones() {
+                flat[r * d + b] = 1.0;
+            }
+        }
+        Ok(xla::Literal::vec1(&flat).reshape(&[rows as i64, d as i64])?)
+    }
+
+    /// Run the `cabin_sketch` artifact on ≤ m categorical vectors; returns
+    /// one packed sketch per input.
+    pub fn cabin_sketch(&self, batch: &[CatVector]) -> Result<Vec<BitVec>> {
+        let (m, d) = (self.manifest.m, self.manifest.d);
+        let lit = self.densify(batch)?;
+        let out = self.run_f32(&self.exe_cabin_sketch, &[lit], m * d)?;
+        Ok(batch
+            .iter()
+            .enumerate()
+            .map(|(r, _)| BitVec::from_f32s(&out[r * d..(r + 1) * d]))
+            .collect())
+    }
+
+    /// Run `cham_allpairs` on ≤ mp sketches; returns the (len × len)
+    /// estimate matrix (padding rows stripped).
+    pub fn cham_allpairs(&self, sketches: &[BitVec]) -> Result<Vec<f64>> {
+        let mp = self.manifest.mp;
+        let k = sketches.len();
+        let lit = self.sketch_matrix_literal(sketches, mp)?;
+        let out = self.run_f32(&self.exe_cham_allpairs, &[lit], mp * mp)?;
+        let mut res = vec![0.0f64; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                res[i * k + j] = out[i * mp + j] as f64;
+            }
+        }
+        Ok(res)
+    }
+
+    /// Run `cham_cross`: queries (≤ mq) × corpus shard (≤ mc).
+    pub fn cham_cross(&self, queries: &[BitVec], corpus: &[BitVec]) -> Result<Vec<f64>> {
+        let (mq, mc) = (self.manifest.mq, self.manifest.mc);
+        let lq = self.sketch_matrix_literal(queries, mq)?;
+        let lc = self.sketch_matrix_literal(corpus, mc)?;
+        let out = self.run_f32(&self.exe_cham_cross, &[lq, lc], mq * mc)?;
+        let (nq, nc) = (queries.len(), corpus.len());
+        let mut res = vec![0.0f64; nq * nc];
+        for i in 0..nq {
+            for j in 0..nc {
+                res[i * nc + j] = out[i * mc + j] as f64;
+            }
+        }
+        Ok(res)
+    }
+
+    /// Fused end-to-end artifact: categorical batch → all-pairs estimates.
+    pub fn sketch_allpairs(&self, batch: &[CatVector]) -> Result<Vec<f64>> {
+        let m = self.manifest.m;
+        let lit = self.densify(batch)?;
+        let out = self.run_f32(&self.exe_sketch_allpairs, &[lit], m * m)?;
+        let k = batch.len();
+        let mut res = vec![0.0f64; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                res[i * k + j] = out[i * m + j] as f64;
+            }
+        }
+        Ok(res)
+    }
+
+    /// Native sketcher configured identically to the artifacts (π from the
+    /// sidecar, ψ recomputed — validated equal at load).
+    pub fn native_equivalent(&self) -> Result<crate::sketch::CabinSketcher> {
+        let cfg = crate::sketch::SketchConfig::new(
+            self.manifest.n,
+            self.manifest.c,
+            self.manifest.d,
+            self.manifest.seed,
+        );
+        let pi = self.manifest.load_pi()?;
+        Ok(crate::sketch::CabinSketcher::with_tables(cfg, pi))
+    }
+}
+
+// Integration tests that need real artifacts live in
+// rust/tests/integration_runtime.rs (skipped when artifacts/ is absent).

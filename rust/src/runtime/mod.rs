@@ -1,0 +1,20 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the `xla` crate's PJRT
+//! CPU client. Python never runs here; the HLO text is the only interface.
+//!
+//! * [`artifacts`] — manifest + sidecar (π/ψ) parsing and validation
+//!   against the rust-side derivations.
+//! * [`engine`] — compile-once executable cache + typed entry points
+//!   (sketch a batch, all-pairs estimates, query×corpus estimates).
+//!
+//! Everything degrades gracefully: if `artifacts/` is absent the engine
+//! reports unavailable and callers (coordinator, benches) use the native
+//! bit-packed path, which is estimator-identical by construction.
+
+pub mod artifacts;
+pub mod engine;
+pub mod worker;
+
+pub use artifacts::Manifest;
+pub use engine::XlaEngine;
+pub use worker::XlaHandle;

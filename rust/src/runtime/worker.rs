@@ -1,0 +1,126 @@
+//! Thread-confined XLA worker (actor pattern).
+//!
+//! The `xla` crate's PJRT handles are `Rc`/raw-pointer based — not `Send`.
+//! [`XlaHandle`] spawns a dedicated thread that owns the [`XlaEngine`] and
+//! services jobs over a channel, giving the rest of the coordinator a
+//! `Send + Sync + Clone` interface.
+
+use super::artifacts::Manifest;
+use super::engine::XlaEngine;
+use crate::data::CatVector;
+use crate::sketch::BitVec;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+enum Job {
+    SketchBatch(Vec<CatVector>, SyncSender<Result<Vec<BitVec>>>),
+    AllPairs(Vec<BitVec>, SyncSender<Result<Vec<f64>>>),
+    Cross(Vec<BitVec>, Vec<BitVec>, SyncSender<Result<Vec<f64>>>),
+    SketchAllPairs(Vec<CatVector>, SyncSender<Result<Vec<f64>>>),
+}
+
+/// Cloneable, thread-safe handle to the XLA worker thread.
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: SyncSender<Job>,
+    pub manifest: Manifest,
+}
+
+impl XlaHandle {
+    /// Spawn the worker; loads + compiles the artifacts on the worker
+    /// thread and reports the manifest (or the load error) back.
+    pub fn spawn(dir: &str) -> Result<XlaHandle> {
+        let (tx, rx) = sync_channel::<Job>(64);
+        let (ready_tx, ready_rx) = sync_channel::<Result<Manifest>>(1);
+        let dir = dir.to_string();
+        std::thread::Builder::new()
+            .name("cabin-xla".into())
+            .spawn(move || worker_loop(&dir, rx, ready_tx))
+            .map_err(|e| anyhow!("spawn xla worker: {e}"))?;
+        let manifest = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("xla worker died during load"))??;
+        Ok(XlaHandle { tx, manifest })
+    }
+
+    /// Try the default artifact locations.
+    pub fn try_default() -> Option<XlaHandle> {
+        for dir in ["artifacts", "../artifacts"] {
+            if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+                match Self::spawn(dir) {
+                    Ok(h) => return Some(h),
+                    Err(e) => {
+                        eprintln!("[runtime] artifacts at {dir} unusable: {e:#}");
+                        return None;
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    fn call<T>(&self, make: impl FnOnce(SyncSender<Result<T>>) -> Job) -> Result<T> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| anyhow!("xla worker stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow!("xla worker dropped reply"))?
+    }
+
+    pub fn cabin_sketch(&self, batch: Vec<CatVector>) -> Result<Vec<BitVec>> {
+        self.call(|tx| Job::SketchBatch(batch, tx))
+    }
+
+    pub fn cham_allpairs(&self, sketches: Vec<BitVec>) -> Result<Vec<f64>> {
+        self.call(|tx| Job::AllPairs(sketches, tx))
+    }
+
+    pub fn cham_cross(&self, q: Vec<BitVec>, c: Vec<BitVec>) -> Result<Vec<f64>> {
+        self.call(|tx| Job::Cross(q, c, tx))
+    }
+
+    pub fn sketch_allpairs(&self, batch: Vec<CatVector>) -> Result<Vec<f64>> {
+        self.call(|tx| Job::SketchAllPairs(batch, tx))
+    }
+
+    /// Native sketcher configured identically to the artifacts.
+    pub fn native_equivalent(&self) -> Result<crate::sketch::CabinSketcher> {
+        let cfg = crate::sketch::SketchConfig::new(
+            self.manifest.n,
+            self.manifest.c,
+            self.manifest.d,
+            self.manifest.seed,
+        );
+        let pi = self.manifest.load_pi()?;
+        Ok(crate::sketch::CabinSketcher::with_tables(cfg, pi))
+    }
+}
+
+fn worker_loop(dir: &str, rx: Receiver<Job>, ready: SyncSender<Result<Manifest>>) {
+    let engine = match XlaEngine::load(dir) {
+        Ok(e) => {
+            let _ = ready.send(Ok(e.manifest.clone()));
+            e
+        }
+        Err(err) => {
+            let _ = ready.send(Err(err));
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::SketchBatch(batch, reply) => {
+                let _ = reply.send(engine.cabin_sketch(&batch));
+            }
+            Job::AllPairs(sketches, reply) => {
+                let _ = reply.send(engine.cham_allpairs(&sketches));
+            }
+            Job::Cross(q, c, reply) => {
+                let _ = reply.send(engine.cham_cross(&q, &c));
+            }
+            Job::SketchAllPairs(batch, reply) => {
+                let _ = reply.send(engine.sketch_allpairs(&batch));
+            }
+        }
+    }
+}

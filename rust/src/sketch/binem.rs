@@ -1,0 +1,239 @@
+//! **BinEm** — stage 1 of Cabin (Algorithm 1, lines 6–13): a random binary
+//! encoding of a categorical vector that *preserves dimension* and halves
+//! Hamming distances in expectation (Lemma 2: `HD(u,v) = 2·E[HD(u',v')]`).
+//!
+//! Two ψ modes:
+//!
+//! * [`PsiMode::Shared`] — the construction as *printed* in the paper: one
+//!   mapping ψ : {1,…,c} → {0,1} applied at every position (Figure 1). Two
+//!   coordinates holding the same pair of values reuse the same coin flips,
+//!   which correlates the per-coordinate indicators `W'_i` that Lemma 2's
+//!   Chernoff step treats as independent. On BoW-like data, where most
+//!   values equal 1, a single coin (ψ(1)) then controls the majority of all
+//!   coordinates and the per-draw variance explodes (ablation A2 measures
+//!   this; Figure 4's tight box plots are unreachable in this mode).
+//! * [`PsiMode::PerAttribute`] — **the default**: an independent ψ_i per
+//!   coordinate, `ψ_i(v) = bit(mix64(seed, i, v))`. This is the
+//!   construction under which the paper's stated analysis (independent
+//!   `W'_i`) and its empirical variance results actually hold, at the cost
+//!   of one hash per nonzero instead of a table lookup. The python AOT
+//!   side bakes the identical table (`prng.derive_psi_matrix`).
+
+use super::bitvec::BitVec;
+use super::mappings::derive_psi;
+use crate::data::CatVector;
+use crate::util::rng::mix64;
+
+/// How the category mapping ψ is instantiated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PsiMode {
+    /// Single shared ψ over category values (the paper's construction).
+    Shared,
+    /// Independent ψ per attribute position (ablation extension).
+    PerAttribute,
+}
+
+/// The BinEm encoder.
+#[derive(Clone, Debug)]
+pub struct BinEm {
+    dim: usize,
+    mode: PsiMode,
+    seed: u64,
+    /// ψ table for `Shared` mode; `table[v] ∈ {0,1}`, `table[0] = 0`.
+    psi_table: Vec<u8>,
+}
+
+impl BinEm {
+    pub fn new(dim: usize, num_categories: u16, mode: PsiMode, seed: u64) -> Self {
+        Self {
+            dim,
+            mode,
+            seed,
+            psi_table: match mode {
+                PsiMode::Shared => derive_psi(seed, num_categories),
+                PsiMode::PerAttribute => Vec::new(),
+            },
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn mode(&self) -> PsiMode {
+        self.mode
+    }
+
+    /// ψ applied to value `v` at position `i` (position ignored in Shared
+    /// mode). Returns 0 for missing values by construction.
+    #[inline]
+    pub fn psi(&self, i: usize, v: u16) -> u8 {
+        if v == 0 {
+            return 0;
+        }
+        match self.mode {
+            PsiMode::Shared => {
+                // values beyond the table (shouldn't happen with correct c)
+                // hash deterministically instead of panicking
+                *self
+                    .psi_table
+                    .get(v as usize)
+                    .unwrap_or(&((mix64(self.seed ^ v as u64) & 1) as u8))
+            }
+            PsiMode::PerAttribute => {
+                (mix64(self.seed ^ ((i as u64) << 20) ^ v as u64) & 1) as u8
+            }
+        }
+    }
+
+    /// Materialise `u' = BinEm(u) ∈ {0,1}^n` as a packed bit vector.
+    /// Used by the analysis experiments (Figures 4–5) and the baselines
+    /// that operate on BinEm embeddings (BCS, Hamming-LSH).
+    pub fn encode(&self, u: &CatVector) -> BitVec {
+        debug_assert_eq!(u.dim(), self.dim);
+        let mut out = BitVec::zeros(self.dim);
+        for &(i, v) in u.entries() {
+            if self.psi(i as usize, v) == 1 {
+                out.set(i as usize);
+            }
+        }
+        out
+    }
+
+    /// Iterate the positions of set bits in `BinEm(u)` without
+    /// materialising the n-bit vector — the fused Cabin hot path.
+    pub fn encode_ones<'a>(&'a self, u: &'a CatVector) -> impl Iterator<Item = usize> + 'a {
+        u.entries()
+            .iter()
+            .filter(move |&&(i, v)| self.psi(i as usize, v) == 1)
+            .map(|&(i, _)| i as usize)
+    }
+
+    /// The ψ table (Shared mode); exposed for the AOT artifact check.
+    pub fn psi_table(&self) -> &[u8] {
+        &self.psi_table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn zero_preservation_lemma1a() {
+        // Lemma 1(a): nonzeros of u' ⊆ nonzeros of u.
+        let mut rng = Xoshiro256::new(3);
+        let u = CatVector::random(500, 40, 9, &mut rng);
+        let be = BinEm::new(500, 9, PsiMode::Shared, 11);
+        let u1 = be.encode(&u);
+        assert!(u1.count_ones() <= u.nnz());
+        for i in u1.iter_ones() {
+            assert_ne!(u.get(i), 0, "bit set where u missing");
+        }
+    }
+
+    #[test]
+    fn expectation_lemma1b() {
+        // Lemma 1(b): E[|u'|] = nnz(u)/2, over independent ψ draws.
+        let mut rng = Xoshiro256::new(5);
+        let u = CatVector::random(2000, 200, 50, &mut rng);
+        let trials = 400;
+        let mut total = 0usize;
+        for s in 0..trials {
+            let be = BinEm::new(2000, 50, PsiMode::Shared, s as u64);
+            total += be.encode(&u).count_ones();
+        }
+        let mean = total as f64 / trials as f64;
+        let expect = u.nnz() as f64 / 2.0;
+        assert!(
+            (mean - expect).abs() < 0.05 * expect,
+            "mean {} expect {}",
+            mean,
+            expect
+        );
+    }
+
+    #[test]
+    fn hamming_halving_lemma2() {
+        // Lemma 2(a): E[HD(u',v')] = HD(u,v)/2.
+        let mut rng = Xoshiro256::new(6);
+        let u = CatVector::random(3000, 150, 20, &mut rng);
+        let v = CatVector::random(3000, 150, 20, &mut rng);
+        let h = u.hamming(&v) as f64;
+        let trials = 500;
+        for mode in [PsiMode::Shared, PsiMode::PerAttribute] {
+            let mut total = 0usize;
+            for s in 0..trials {
+                let be = BinEm::new(3000, 20, mode, 1000 + s as u64);
+                total += be.encode(&u).xor_count(&be.encode(&v));
+            }
+            let mean = total as f64 / trials as f64;
+            assert!(
+                (mean - h / 2.0).abs() < 0.05 * h,
+                "{:?}: mean {} expect {}",
+                mode,
+                mean,
+                h / 2.0
+            );
+        }
+    }
+
+    #[test]
+    fn equal_coordinates_never_differ() {
+        // First observation in Lemma 2's proof: u_i = v_i ⇒ u'_i = v'_i.
+        let u = CatVector::from_dense(&[4, 0, 2, 2, 0, 7]);
+        let v = CatVector::from_dense(&[4, 0, 2, 3, 1, 7]);
+        for mode in [PsiMode::Shared, PsiMode::PerAttribute] {
+            for seed in 0..50 {
+                let be = BinEm::new(6, 9, mode, seed);
+                let (a, b) = (be.encode(&u), be.encode(&v));
+                for i in [0usize, 1, 2, 5] {
+                    assert_eq!(a.get(i), b.get(i), "seed {} i {}", seed, i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_ones_matches_encode() {
+        let mut rng = Xoshiro256::new(9);
+        let u = CatVector::random(800, 60, 12, &mut rng);
+        for mode in [PsiMode::Shared, PsiMode::PerAttribute] {
+            let be = BinEm::new(800, 12, mode, 77);
+            let full = be.encode(&u);
+            let ones: Vec<usize> = be.encode_ones(&u).collect();
+            assert_eq!(ones, full.iter_ones().collect::<Vec<_>>());
+        }
+    }
+
+    /// Cross-language contract: python/tests/test_prng.py pins the same
+    /// matrix from prng.derive_psi_matrix(42, 8, 5).
+    #[test]
+    fn per_attribute_psi_matches_python() {
+        let expect: [[u8; 6]; 8] = [
+            [0, 0, 0, 1, 1, 1],
+            [0, 1, 0, 1, 0, 0],
+            [0, 1, 1, 0, 0, 0],
+            [0, 0, 0, 1, 1, 0],
+            [0, 0, 1, 0, 1, 1],
+            [0, 1, 1, 0, 0, 1],
+            [0, 1, 0, 0, 1, 0],
+            [0, 1, 1, 1, 0, 1],
+        ];
+        let be = BinEm::new(8, 5, PsiMode::PerAttribute, 42);
+        for i in 0..8 {
+            for v in 0..=5u16 {
+                assert_eq!(be.psi(i, v), expect[i][v as usize], "i={} v={}", i, v);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let u = CatVector::from_dense(&[1, 2, 3, 0, 5]);
+        let a = BinEm::new(5, 5, PsiMode::Shared, 1).encode(&u);
+        let b = BinEm::new(5, 5, PsiMode::Shared, 1).encode(&u);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,162 @@
+//! **BinSketch** — stage 2 of Cabin (Algorithm 1, lines 14–21): OR-fold a
+//! sparse binary vector into `d` bins through the random attribute mapping
+//! π (Pratap–Bera–Revanuru, ICDM 2019).
+//!
+//! `ũ[j] = ⋁_{i : π(i)=j} u'[i]`
+
+use super::bitvec::BitVec;
+use super::mappings::derive_pi;
+
+/// The BinSketch compressor for `n`-bit inputs to `d`-bit sketches.
+#[derive(Clone, Debug)]
+pub struct BinSketch {
+    n: usize,
+    d: usize,
+    pi: Vec<u32>,
+}
+
+impl BinSketch {
+    pub fn new(n: usize, d: usize, seed: u64) -> Self {
+        Self {
+            n,
+            d,
+            pi: derive_pi(seed, n, d),
+        }
+    }
+
+    /// Build with an explicit π table (e.g. loaded from an AOT sidecar).
+    pub fn with_pi(n: usize, d: usize, pi: Vec<u32>) -> Self {
+        assert_eq!(pi.len(), n);
+        assert!(pi.iter().all(|&b| (b as usize) < d));
+        Self { n, d, pi }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.n
+    }
+
+    pub fn sketch_dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn pi(&self, i: usize) -> usize {
+        self.pi[i] as usize
+    }
+
+    pub fn pi_table(&self) -> &[u32] {
+        &self.pi
+    }
+
+    /// Compress a full binary vector.
+    pub fn compress(&self, u: &BitVec) -> BitVec {
+        debug_assert_eq!(u.len(), self.n);
+        let mut out = BitVec::zeros(self.d);
+        for i in u.iter_ones() {
+            out.set(self.pi[i] as usize);
+        }
+        out
+    }
+
+    /// Compress from an iterator of set-bit positions (fused path — never
+    /// materialises the n-bit intermediate).
+    pub fn compress_ones<I: IntoIterator<Item = usize>>(&self, ones: I) -> BitVec {
+        let mut out = BitVec::zeros(self.d);
+        for i in ones {
+            out.set(self.pi[i] as usize);
+        }
+        out
+    }
+
+    /// Compress into a caller-provided buffer (allocation-free hot path;
+    /// the buffer is zeroed first).
+    pub fn compress_ones_into<I: IntoIterator<Item = usize>>(&self, ones: I, out: &mut BitVec) {
+        debug_assert_eq!(out.len(), self.d);
+        out.zero_out();
+        for i in ones {
+            out.set(self.pi[i] as usize);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_binary(rng: &mut Xoshiro256, n: usize, ones: usize) -> BitVec {
+        BitVec::from_indices(n, rng.sample_indices(n, ones))
+    }
+
+    #[test]
+    fn definition_matches_naive_or() {
+        let mut rng = Xoshiro256::new(1);
+        let n = 500;
+        let d = 64;
+        let bs = BinSketch::new(n, d, 42);
+        let u = random_binary(&mut rng, n, 40);
+        let sk = bs.compress(&u);
+        // naive: per output bin, OR over preimage
+        for j in 0..d {
+            let any = (0..n).any(|i| bs.pi(i) == j && u.get(i));
+            assert_eq!(sk.get(j), any, "bin {}", j);
+        }
+    }
+
+    #[test]
+    fn sketch_weight_bounded_by_input_weight() {
+        let mut rng = Xoshiro256::new(2);
+        for _ in 0..20 {
+            let u = random_binary(&mut rng, 1000, 100);
+            let bs = BinSketch::new(1000, 256, rng.next_u64());
+            assert!(bs.compress(&u).count_ones() <= u.count_ones());
+        }
+    }
+
+    #[test]
+    fn fused_paths_agree() {
+        let mut rng = Xoshiro256::new(3);
+        let u = random_binary(&mut rng, 2000, 150);
+        let bs = BinSketch::new(2000, 128, 7);
+        let a = bs.compress(&u);
+        let b = bs.compress_ones(u.iter_ones());
+        let mut c = BitVec::zeros(128);
+        bs.compress_ones_into(u.iter_ones(), &mut c);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn expected_occupancy_matches_balls_in_bins() {
+        // E[|ũ|] = d(1 − (1−1/d)^a) for a random π.
+        let mut rng = Xoshiro256::new(4);
+        let (n, d, a) = (5000usize, 200usize, 300usize);
+        let u = random_binary(&mut rng, n, a);
+        let trials = 300;
+        let mut total = 0usize;
+        for s in 0..trials {
+            total += BinSketch::new(n, d, s as u64).compress(&u).count_ones();
+        }
+        let mean = total as f64 / trials as f64;
+        let expect = d as f64 * (1.0 - (1.0 - 1.0 / d as f64).powi(a as i32));
+        assert!(
+            (mean - expect).abs() < 0.02 * expect,
+            "mean {} expect {}",
+            mean,
+            expect
+        );
+    }
+
+    #[test]
+    fn with_pi_validates() {
+        let bs = BinSketch::with_pi(4, 2, vec![0, 1, 1, 0]);
+        let u = BitVec::from_indices(4, [1]);
+        assert_eq!(bs.compress(&u), BitVec::from_indices(2, [1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_pi_rejects_out_of_range() {
+        BinSketch::with_pi(2, 2, vec![0, 5]);
+    }
+}

@@ -1,0 +1,293 @@
+//! Packed bit-vector substrate: the representation of every binary sketch.
+//!
+//! Sketches are `d`-bit vectors stored as `u64` words. All pairwise
+//! statistics the estimators need — Hamming weight, Hamming distance,
+//! bitwise inner product, union size — are word-parallel popcounts, which is
+//! exactly the "faster bitwise operators" advantage the paper claims for
+//! binary sketches (Section 1). The 4-way unrolled kernels here are the
+//! native hot path measured in EXPERIMENTS.md §Perf.
+
+/// A fixed-length packed bit vector.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    bits: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    /// All-zeros vector of `bits` bits.
+    pub fn zeros(bits: usize) -> Self {
+        Self {
+            bits,
+            words: vec![0u64; bits.div_ceil(64)],
+        }
+    }
+
+    /// Build from an iterator of set-bit positions.
+    pub fn from_indices<I: IntoIterator<Item = usize>>(bits: usize, idx: I) -> Self {
+        let mut v = Self::zeros(bits);
+        for i in idx {
+            v.set(i);
+        }
+        v
+    }
+
+    /// Build from a 0/1 byte slice (test/interop convenience).
+    pub fn from_bytes01(bytes: &[u8]) -> Self {
+        let mut v = Self::zeros(bytes.len());
+        for (i, &b) in bytes.iter().enumerate() {
+            if b != 0 {
+                v.set(i);
+            }
+        }
+        v
+    }
+
+    /// Build from f32 0/1 values (XLA artifact outputs).
+    pub fn from_f32s(vals: &[f32]) -> Self {
+        let mut v = Self::zeros(vals.len());
+        for (i, &x) in vals.iter().enumerate() {
+            if x >= 0.5 {
+                v.set(i);
+            }
+        }
+        v
+    }
+
+    /// Expand into f32 0/1 values (XLA artifact inputs).
+    pub fn to_f32s(&self) -> Vec<f32> {
+        (0..self.bits)
+            .map(|i| if self.get(i) { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bits
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.bits);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.bits);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.bits);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Reset to all zeros without reallocating (hot-path reuse).
+    pub fn zero_out(&mut self) {
+        for w in self.words.iter_mut() {
+            *w = 0;
+        }
+    }
+
+    /// Hamming weight `|u|`.
+    #[inline]
+    pub fn count_ones(&self) -> usize {
+        // 4-way unroll: lets the compiler keep four popcnt chains in flight.
+        let mut c0 = 0u64;
+        let mut c1 = 0u64;
+        let mut c2 = 0u64;
+        let mut c3 = 0u64;
+        let chunks = self.words.chunks_exact(4);
+        let rem = chunks.remainder();
+        for ch in chunks {
+            c0 += ch[0].count_ones() as u64;
+            c1 += ch[1].count_ones() as u64;
+            c2 += ch[2].count_ones() as u64;
+            c3 += ch[3].count_ones() as u64;
+        }
+        let mut total = c0 + c1 + c2 + c3;
+        for w in rem {
+            total += w.count_ones() as u64;
+        }
+        total as usize
+    }
+
+    /// Bitwise inner product `⟨u,v⟩ = |u ∧ v|`.
+    #[inline]
+    pub fn and_count(&self, other: &BitVec) -> usize {
+        debug_assert_eq!(self.bits, other.bits);
+        binop_popcount(&self.words, &other.words, |a, b| a & b)
+    }
+
+    /// Hamming distance `|u ⊕ v|`.
+    #[inline]
+    pub fn xor_count(&self, other: &BitVec) -> usize {
+        debug_assert_eq!(self.bits, other.bits);
+        binop_popcount(&self.words, &other.words, |a, b| a ^ b)
+    }
+
+    /// Union size `|u ∨ v|`.
+    #[inline]
+    pub fn or_count(&self, other: &BitVec) -> usize {
+        debug_assert_eq!(self.bits, other.bits);
+        binop_popcount(&self.words, &other.words, |a, b| a | b)
+    }
+
+    /// In-place OR (sketch merging in the coordinator).
+    pub fn or_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.bits, other.bits);
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a |= b;
+        }
+    }
+
+    /// Iterate set-bit positions in increasing order.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let tz = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + tz)
+                }
+            })
+        })
+    }
+
+    /// Memory in bytes (paper's space-saving argument; Section 1 point (i)).
+    pub fn memory_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+#[inline]
+fn binop_popcount(a: &[u64], b: &[u64], op: fn(u64, u64) -> u64) -> usize {
+    let mut c0 = 0u64;
+    let mut c1 = 0u64;
+    let mut c2 = 0u64;
+    let mut c3 = 0u64;
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut i = 0;
+    while i + 4 <= n {
+        c0 += op(a[i], b[i]).count_ones() as u64;
+        c1 += op(a[i + 1], b[i + 1]).count_ones() as u64;
+        c2 += op(a[i + 2], b[i + 2]).count_ones() as u64;
+        c3 += op(a[i + 3], b[i + 3]).count_ones() as u64;
+        i += 4;
+    }
+    let mut total = c0 + c1 + c2 + c3;
+    while i < n {
+        total += op(a[i], b[i]).count_ones() as u64;
+        i += 1;
+    }
+    total as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_bitvec(rng: &mut Xoshiro256, bits: usize, p: f64) -> BitVec {
+        let mut v = BitVec::zeros(bits);
+        for i in 0..bits {
+            if rng.bernoulli(p) {
+                v.set(i);
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn set_get_clear() {
+        let mut v = BitVec::zeros(130);
+        assert!(!v.get(129));
+        v.set(129);
+        v.set(0);
+        v.set(64);
+        assert!(v.get(129) && v.get(0) && v.get(64));
+        assert_eq!(v.count_ones(), 3);
+        v.clear(64);
+        assert!(!v.get(64));
+        assert_eq!(v.count_ones(), 2);
+    }
+
+    #[test]
+    fn pairwise_ops_match_naive() {
+        let mut rng = Xoshiro256::new(4);
+        for bits in [1usize, 63, 64, 65, 200, 1000, 1024] {
+            let a = random_bitvec(&mut rng, bits, 0.3);
+            let b = random_bitvec(&mut rng, bits, 0.3);
+            let mut and_n = 0;
+            let mut xor_n = 0;
+            let mut or_n = 0;
+            for i in 0..bits {
+                let (x, y) = (a.get(i), b.get(i));
+                and_n += (x && y) as usize;
+                xor_n += (x != y) as usize;
+                or_n += (x || y) as usize;
+            }
+            assert_eq!(a.and_count(&b), and_n, "bits={}", bits);
+            assert_eq!(a.xor_count(&b), xor_n, "bits={}", bits);
+            assert_eq!(a.or_count(&b), or_n, "bits={}", bits);
+            // identity: |u| + |v| = |u∧v| + |u∨v|
+            assert_eq!(a.count_ones() + b.count_ones(), and_n + or_n);
+        }
+    }
+
+    #[test]
+    fn iter_ones_matches_get() {
+        let mut rng = Xoshiro256::new(8);
+        let v = random_bitvec(&mut rng, 300, 0.2);
+        let ones: Vec<usize> = v.iter_ones().collect();
+        let expect: Vec<usize> = (0..300).filter(|&i| v.get(i)).collect();
+        assert_eq!(ones, expect);
+    }
+
+    #[test]
+    fn from_indices_and_bytes() {
+        let v = BitVec::from_indices(10, [1, 3, 3, 9]);
+        assert_eq!(v.count_ones(), 3);
+        let w = BitVec::from_bytes01(&[0, 1, 0, 1, 0, 0, 0, 0, 0, 1]);
+        assert_eq!(v, w);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let v = BitVec::from_indices(70, [0, 5, 69]);
+        let f = v.to_f32s();
+        assert_eq!(f.len(), 70);
+        assert_eq!(BitVec::from_f32s(&f), v);
+    }
+
+    #[test]
+    fn or_assign_merges() {
+        let mut a = BitVec::from_indices(100, [1, 2]);
+        let b = BitVec::from_indices(100, [2, 99]);
+        a.or_assign(&b);
+        assert_eq!(a, BitVec::from_indices(100, [1, 2, 99]));
+    }
+
+    #[test]
+    fn memory_is_packed() {
+        // 1000 bits → 16 words → 128 bytes, vs 4000 bytes for f32 (the
+        // paper's 32× space argument).
+        let v = BitVec::zeros(1000);
+        assert_eq!(v.memory_bytes(), 128);
+    }
+}

@@ -1,0 +1,207 @@
+//! **Cabin** — the full sketching pipeline (Algorithm 1): BinEm ∘ BinSketch,
+//! fused into one pass over the nonzeros of the input vector.
+
+use super::binem::{BinEm, PsiMode};
+use super::binsketch::BinSketch;
+use super::bitvec::BitVec;
+use super::cham::Estimator;
+use crate::data::{CatVector, CategoricalDataset};
+use crate::util::parallel;
+
+/// Everything needed to (re)construct a sketcher and to interpret sketches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SketchConfig {
+    /// Input dimension `n`.
+    pub input_dim: usize,
+    /// Largest category label `c`.
+    pub num_categories: u16,
+    /// Sketch dimension `d`.
+    pub sketch_dim: usize,
+    /// Seed for both ψ and π streams.
+    pub seed: u64,
+    /// ψ instantiation (paper: Shared).
+    pub psi_mode: PsiMode,
+    /// Which BinHamming estimator Cham uses.
+    pub estimator: Estimator,
+}
+
+impl SketchConfig {
+    pub fn new(input_dim: usize, num_categories: u16, sketch_dim: usize, seed: u64) -> Self {
+        Self {
+            input_dim,
+            num_categories,
+            sketch_dim,
+            seed,
+            psi_mode: PsiMode::PerAttribute,
+            estimator: Estimator::OccupancyInversion,
+        }
+    }
+
+    pub fn with_psi_mode(mut self, m: PsiMode) -> Self {
+        self.psi_mode = m;
+        self
+    }
+
+    pub fn with_estimator(mut self, e: Estimator) -> Self {
+        self.estimator = e;
+        self
+    }
+}
+
+/// The Cabin sketcher. Construction derives ψ and π; [`CabinSketcher::sketch`]
+/// is then a single pass over the input's nonzeros:
+/// `for (i,v) in u: if ψ(v)=1 { ũ[π(i)] = 1 }`.
+#[derive(Clone, Debug)]
+pub struct CabinSketcher {
+    config: SketchConfig,
+    binem: BinEm,
+    binsketch: BinSketch,
+}
+
+impl CabinSketcher {
+    pub fn new(input_dim: usize, num_categories: u16, sketch_dim: usize, seed: u64) -> Self {
+        Self::from_config(SketchConfig::new(input_dim, num_categories, sketch_dim, seed))
+    }
+
+    pub fn from_config(config: SketchConfig) -> Self {
+        Self {
+            binem: BinEm::new(
+                config.input_dim,
+                config.num_categories,
+                config.psi_mode,
+                config.seed,
+            ),
+            binsketch: BinSketch::new(config.input_dim, config.sketch_dim, config.seed),
+            config,
+        }
+    }
+
+    /// Build with an explicit π table (AOT sidecar path).
+    pub fn with_tables(config: SketchConfig, pi: Vec<u32>) -> Self {
+        Self {
+            binem: BinEm::new(
+                config.input_dim,
+                config.num_categories,
+                config.psi_mode,
+                config.seed,
+            ),
+            binsketch: BinSketch::with_pi(config.input_dim, config.sketch_dim, pi),
+            config,
+        }
+    }
+
+    pub fn config(&self) -> &SketchConfig {
+        &self.config
+    }
+
+    pub fn binem(&self) -> &BinEm {
+        &self.binem
+    }
+
+    pub fn binsketch(&self) -> &BinSketch {
+        &self.binsketch
+    }
+
+    /// `Cabin(u)` — the fused one-pass sketch. `O(nnz(u))`.
+    pub fn sketch(&self, u: &CatVector) -> BitVec {
+        self.binsketch.compress_ones(self.binem.encode_ones(u))
+    }
+
+    /// Allocation-free variant for the serving hot path.
+    pub fn sketch_into(&self, u: &CatVector, out: &mut BitVec) {
+        self.binsketch
+            .compress_ones_into(self.binem.encode_ones(u), out);
+    }
+
+    /// Two-stage (unfused) reference: materialise `u' = BinEm(u)` then
+    /// compress. Used by tests to show fused == staged, and by the analysis
+    /// experiments that need `u'` itself.
+    pub fn sketch_staged(&self, u: &CatVector) -> (BitVec, BitVec) {
+        let u1 = self.binem.encode(u);
+        let sk = self.binsketch.compress(&u1);
+        (u1, sk)
+    }
+
+    /// Sketch an entire dataset in parallel.
+    pub fn sketch_dataset(&self, ds: &CategoricalDataset, threads: usize) -> Vec<BitVec> {
+        let mut out: Vec<BitVec> = vec![BitVec::zeros(self.config.sketch_dim); ds.len()];
+        parallel::par_chunks_mut(&mut out, threads, |start, chunk| {
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                self.sketch_into(&ds.points[start + off], slot);
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn fused_equals_staged() {
+        let mut rng = Xoshiro256::new(10);
+        for seed in 0..10u64 {
+            let u = CatVector::random(2000, 120, 30, &mut rng);
+            let sk = CabinSketcher::new(2000, 30, 256, seed);
+            let fused = sk.sketch(&u);
+            let (_, staged) = sk.sketch_staged(&u);
+            assert_eq!(fused, staged, "seed {}", seed);
+        }
+    }
+
+    #[test]
+    fn sparsity_halving_lemma4() {
+        // Lemma 4: E[ones(Cabin(u))] ≤ nnz(u)/2.
+        let mut rng = Xoshiro256::new(11);
+        let u = CatVector::random(5000, 400, 40, &mut rng);
+        let trials = 200;
+        let mut total = 0usize;
+        for s in 0..trials {
+            total += CabinSketcher::new(5000, 40, 1000, s).sketch(&u).count_ones();
+        }
+        let mean = total as f64 / trials as f64;
+        assert!(
+            mean <= u.nnz() as f64 / 2.0 + 3.0,
+            "mean {} vs T/2 {}",
+            mean,
+            u.nnz() / 2
+        );
+    }
+
+    #[test]
+    fn sketch_into_reuses_buffer() {
+        let mut rng = Xoshiro256::new(12);
+        let u = CatVector::random(1000, 50, 10, &mut rng);
+        let v = CatVector::random(1000, 50, 10, &mut rng);
+        let sk = CabinSketcher::new(1000, 10, 128, 1);
+        let mut buf = BitVec::zeros(128);
+        sk.sketch_into(&u, &mut buf);
+        assert_eq!(buf, sk.sketch(&u));
+        sk.sketch_into(&v, &mut buf); // no residue from u
+        assert_eq!(buf, sk.sketch(&v));
+    }
+
+    #[test]
+    fn dataset_parallel_matches_serial() {
+        let mut rng = Xoshiro256::new(13);
+        let pts = (0..40)
+            .map(|_| CatVector::random(500, 30, 8, &mut rng))
+            .collect();
+        let ds = CategoricalDataset::new("t", 500, 8, pts);
+        let sk = CabinSketcher::new(500, 8, 64, 5);
+        let par = sk.sketch_dataset(&ds, 4);
+        for (i, p) in ds.points.iter().enumerate() {
+            assert_eq!(par[i], sk.sketch(p));
+        }
+    }
+
+    #[test]
+    fn identical_inputs_identical_sketches() {
+        let u = CatVector::from_dense(&[1, 0, 2, 3, 0, 0, 4]);
+        let sk = CabinSketcher::new(7, 4, 16, 99);
+        assert_eq!(sk.sketch(&u), sk.sketch(&u.clone()));
+        assert_eq!(sk.sketch(&u).len(), 16);
+    }
+}

@@ -1,0 +1,294 @@
+//! **Cham** — estimating the original categorical Hamming distance from two
+//! Cabin sketches (Algorithm 2): `Cham(ũ,ṽ) = 2·BinHamming(ũ,ṽ)`.
+//!
+//! ## The two BinHamming variants
+//!
+//! The printed Algorithm 2 box gives
+//! `h̃ = (1/ln D)·(D^{|ũ|} + D^{|ṽ|} + ⟨ũ,ṽ⟩/d − 1)` with `D = 1 − 1/d`,
+//! which is a garbled transcription (see DESIGN.md §1): with `â` denoting
+//! the occupancy inversion `ln(1−|ũ|/d)/ln D`, the identity
+//! `D^â = 1 − |ũ|/d` shows the printed inner expression equals
+//! `1 − |ũ∨ṽ|/d`, i.e. the quantity whose log yields the union-size
+//! estimate — the box dropped the inversions. We therefore implement:
+//!
+//! * [`Estimator::OccupancyInversion`] (canonical): invert three
+//!   balls-in-bins occupancies,
+//!   `ĥ = 2·est(|ũ∨ṽ|) − est(|ũ|) − est(|ṽ|)` where
+//!   `est(x) = ln(1−x/d)/ln(1−1/d)`. This is the estimator BinSketch's own
+//!   analysis (paper's Lemma 3 ← [33, Appendix B]) concentrates.
+//! * [`Estimator::PaperLiteral`]: the formula exactly as printed. Accurate
+//!   only when `|ũ| ≪ d` (first-order regime); kept for the ablation
+//!   (`repro ablation-estimator`) and fidelity.
+//!
+//! Besides Hamming, BinSketch sketches support inner-product / cosine /
+//! Jaccard estimation of the *binary* BinEm embeddings; those estimators
+//! are provided too (the paper cites this as a reason for choosing
+//! BinSketch over alternatives).
+
+use super::bitvec::BitVec;
+use super::cabin::SketchConfig;
+
+/// Which BinHamming formula to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Estimator {
+    /// Occupancy-inversion (canonical; matches BinSketch's analysis).
+    OccupancyInversion,
+    /// The Algorithm-2 box exactly as printed in the paper.
+    PaperLiteral,
+}
+
+/// Invert the expected bin occupancy: the number of balls `a` that makes
+/// `E[occupied] = d(1 − D^a)` equal `occ`. Saturation (`occ ≥ d`) clamps to
+/// the max invertible occupancy (d-1 bins ⇒ finite estimate).
+#[inline]
+pub fn invert_occupancy(occ: f64, d: usize) -> f64 {
+    let df = d as f64;
+    let ln_d_ratio = (1.0 - 1.0 / df).ln(); // ln D < 0
+    let occ = occ.min(df - 1.0).max(0.0);
+    (1.0 - occ / df).ln() / ln_d_ratio
+}
+
+/// BinHamming via occupancy inversion: estimates `HD(u',v')` of the binary
+/// pre-images from sketches `ũ,ṽ`.
+pub fn binhamming_occupancy(su: &BitVec, sv: &BitVec) -> f64 {
+    let d = su.len();
+    debug_assert_eq!(d, sv.len());
+    let wu = su.count_ones() as f64;
+    let wv = sv.count_ones() as f64;
+    let ip = su.and_count(sv) as f64;
+    let union = wu + wv - ip;
+    let a_hat = invert_occupancy(wu, d);
+    let b_hat = invert_occupancy(wv, d);
+    let u_hat = invert_occupancy(union, d);
+    (2.0 * u_hat - a_hat - b_hat).max(0.0)
+}
+
+/// BinHamming exactly as printed in Algorithm 2 of the paper.
+pub fn binhamming_literal(su: &BitVec, sv: &BitVec) -> f64 {
+    let d = su.len() as f64;
+    let big_d = 1.0 - 1.0 / d;
+    let wu = su.count_ones() as f64;
+    let wv = sv.count_ones() as f64;
+    let ip = su.and_count(sv) as f64;
+    let inner = big_d.powf(wu) + big_d.powf(wv) + ip / d - 1.0;
+    // ln D < 0; for disjoint sparse sketches inner < 1 ⇒ positive estimate.
+    (1.0 / big_d.ln()) * inner
+}
+
+/// `Cham(ũ,ṽ)` — the categorical Hamming-distance estimate (Algorithm 2):
+/// twice the binary estimate, per Lemma 2's halving.
+pub fn estimate_hamming(su: &BitVec, sv: &BitVec, cfg: &SketchConfig) -> f64 {
+    2.0 * match cfg.estimator {
+        Estimator::OccupancyInversion => binhamming_occupancy(su, sv),
+        Estimator::PaperLiteral => binhamming_literal(su, sv),
+    }
+}
+
+/// Estimated inner product `⟨u',v'⟩` of the binary BinEm embeddings.
+pub fn estimate_inner_product(su: &BitVec, sv: &BitVec) -> f64 {
+    let d = su.len();
+    let wu = su.count_ones() as f64;
+    let wv = sv.count_ones() as f64;
+    let ip = su.and_count(sv) as f64;
+    let a_hat = invert_occupancy(wu, d);
+    let b_hat = invert_occupancy(wv, d);
+    let u_hat = invert_occupancy(wu + wv - ip, d);
+    (a_hat + b_hat - u_hat).max(0.0)
+}
+
+/// Estimated cosine similarity of the binary BinEm embeddings.
+pub fn estimate_cosine(su: &BitVec, sv: &BitVec) -> f64 {
+    let d = su.len();
+    let a_hat = invert_occupancy(su.count_ones() as f64, d);
+    let b_hat = invert_occupancy(sv.count_ones() as f64, d);
+    if a_hat <= 0.0 || b_hat <= 0.0 {
+        return 0.0;
+    }
+    (estimate_inner_product(su, sv) / (a_hat * b_hat).sqrt()).clamp(0.0, 1.0)
+}
+
+/// Estimated Jaccard similarity of the binary BinEm embeddings.
+pub fn estimate_jaccard(su: &BitVec, sv: &BitVec) -> f64 {
+    let d = su.len();
+    let wu = su.count_ones() as f64;
+    let wv = sv.count_ones() as f64;
+    let ip = su.and_count(sv) as f64;
+    let union_hat = invert_occupancy(wu + wv - ip, d);
+    if union_hat <= 0.0 {
+        return 0.0;
+    }
+    (estimate_inner_product(su, sv) / union_hat).clamp(0.0, 1.0)
+}
+
+/// Scalar form of the estimator used by the L1/L2 kernels: given row
+/// weights and the gram entry over an f32 0/1 sketch matrix. This is the
+/// exact function `python/compile/kernels/cham.py` computes; the rust
+/// runtime tests pin both against [`binhamming_occupancy`].
+#[inline]
+pub fn binhamming_from_stats(wu: f64, wv: f64, ip: f64, d: usize) -> f64 {
+    let a_hat = invert_occupancy(wu, d);
+    let b_hat = invert_occupancy(wv, d);
+    let u_hat = invert_occupancy(wu + wv - ip, d);
+    (2.0 * u_hat - a_hat - b_hat).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::binsketch::BinSketch;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_binary(rng: &mut Xoshiro256, n: usize, ones: usize) -> BitVec {
+        BitVec::from_indices(n, rng.sample_indices(n, ones))
+    }
+
+    #[test]
+    fn occupancy_inversion_inverts() {
+        // est(E[occ(a)]) == a for the expected occupancy curve.
+        for d in [128usize, 1000] {
+            for a in [0usize, 1, 10, 50, 100] {
+                let df = d as f64;
+                let occ = df * (1.0 - (1.0 - 1.0 / df).powi(a as i32));
+                let back = invert_occupancy(occ, d);
+                assert!((back - a as f64).abs() < 1e-6, "d={} a={} back={}", d, a, back);
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_is_finite() {
+        let d = 64;
+        let v = invert_occupancy(64.0, d);
+        assert!(v.is_finite() && v > 0.0);
+        assert!(invert_occupancy(-3.0, d) == 0.0);
+    }
+
+    #[test]
+    fn binhamming_accurate_on_sparse_inputs() {
+        // End-to-end over BinSketch: estimate HD(u',v') within Theorem-2-ish
+        // additive error.
+        let mut rng = Xoshiro256::new(20);
+        let n = 20_000;
+        let s = 300; // density
+        let d = 4096;
+        for trial in 0..5u64 {
+            let u = random_binary(&mut rng, n, s);
+            let v = random_binary(&mut rng, n, s);
+            let truth = u.xor_count(&v) as f64;
+            let bs = BinSketch::new(n, d, 100 + trial);
+            let est = binhamming_occupancy(&bs.compress(&u), &bs.compress(&v));
+            let tol = 11.0 * (s as f64 * (6.0f64 / 0.01).ln()).sqrt(); // Thm 2 at δ=0.01
+            assert!(
+                (est - truth).abs() < tol,
+                "trial {}: est {} truth {} tol {}",
+                trial,
+                est,
+                truth,
+                tol
+            );
+        }
+    }
+
+    #[test]
+    fn identical_sketches_estimate_zero() {
+        let mut rng = Xoshiro256::new(21);
+        let u = random_binary(&mut rng, 1000, 80);
+        let bs = BinSketch::new(1000, 256, 5);
+        let s = bs.compress(&u);
+        assert_eq!(binhamming_occupancy(&s, &s), 0.0);
+        assert!(estimate_jaccard(&s, &s) > 0.99);
+        assert!(estimate_cosine(&s, &s) > 0.99);
+    }
+
+    #[test]
+    fn literal_formula_is_garbled_but_log_restores_it() {
+        // The printed Algorithm-2 box (no log) yields large *negative*
+        // "distances" on sparse sketches — it cannot be what the authors
+        // ran. Restoring the dropped log turns the inner expression into
+        // the union-occupancy estimate (ablation A1's finding).
+        let mut rng = Xoshiro256::new(22);
+        let u = random_binary(&mut rng, 50_000, 40);
+        let v = random_binary(&mut rng, 50_000, 40);
+        let bs = BinSketch::new(50_000, 8192, 9);
+        let (su, sv) = (bs.compress(&u), bs.compress(&v));
+        let truth = u.xor_count(&v) as f64;
+        let occ = binhamming_occupancy(&su, &sv);
+        let lit = binhamming_literal(&su, &sv);
+        assert!(lit < 0.0, "printed formula should be nonsensical: {}", lit);
+        assert!((occ - truth).abs() < 0.2 * truth + 10.0, "occ {} truth {}", occ, truth);
+        // log-restored inner expression = union-size estimate
+        let d = 8192f64;
+        let inner = 1.0 - (su.or_count(&sv) as f64) / d;
+        let union_est = inner.ln() / (1.0 - 1.0 / d).ln();
+        let union_truth = u.or_count(&v) as f64;
+        assert!(
+            (union_est - union_truth).abs() < 0.15 * union_truth,
+            "union est {} truth {}",
+            union_est,
+            union_truth
+        );
+    }
+
+    #[test]
+    fn literal_degrades_when_dense() {
+        // At |ũ| ~ d/2 the printed formula underestimates badly; the
+        // inversion stays accurate. This is ablation A1's one-line summary.
+        let mut rng = Xoshiro256::new(23);
+        let n = 20_000;
+        let d = 512;
+        let u = random_binary(&mut rng, n, 400);
+        let v = random_binary(&mut rng, n, 400);
+        let truth = u.xor_count(&v) as f64;
+        let bs = BinSketch::new(n, d, 3);
+        let (su, sv) = (bs.compress(&u), bs.compress(&v));
+        let occ_err = (binhamming_occupancy(&su, &sv) - truth).abs();
+        let lit_err = (binhamming_literal(&su, &sv) - truth).abs();
+        assert!(occ_err < lit_err, "occ_err {} lit_err {}", occ_err, lit_err);
+        assert!(occ_err / truth < 0.25, "occ rel err {}", occ_err / truth);
+    }
+
+    #[test]
+    fn inner_product_estimate() {
+        let mut rng = Xoshiro256::new(24);
+        let n = 10_000;
+        // construct overlapping vectors with known ip
+        let base = rng.sample_indices(n, 300);
+        let u = BitVec::from_indices(n, base[..200].iter().copied());
+        let v = BitVec::from_indices(n, base[100..300].iter().copied());
+        let truth = u.and_count(&v) as f64; // 100
+        let bs = BinSketch::new(n, 4096, 11);
+        let est = estimate_inner_product(&bs.compress(&u), &bs.compress(&v));
+        assert!((est - truth).abs() < 25.0, "est {} truth {}", est, truth);
+    }
+
+    #[test]
+    fn stats_form_matches_bitvec_form() {
+        let mut rng = Xoshiro256::new(25);
+        let u = random_binary(&mut rng, 5000, 200);
+        let v = random_binary(&mut rng, 5000, 200);
+        let bs = BinSketch::new(5000, 1024, 13);
+        let (su, sv) = (bs.compress(&u), bs.compress(&v));
+        let direct = binhamming_occupancy(&su, &sv);
+        let via_stats = binhamming_from_stats(
+            su.count_ones() as f64,
+            sv.count_ones() as f64,
+            su.and_count(&sv) as f64,
+            1024,
+        );
+        assert!((direct - via_stats).abs() < 1e-9);
+    }
+
+    #[test]
+    fn estimator_symmetry() {
+        let mut rng = Xoshiro256::new(26);
+        let u = random_binary(&mut rng, 3000, 150);
+        let v = random_binary(&mut rng, 3000, 100);
+        let bs = BinSketch::new(3000, 512, 1);
+        let (su, sv) = (bs.compress(&u), bs.compress(&v));
+        // symmetric up to f.p. association order
+        assert!(
+            (binhamming_occupancy(&su, &sv) - binhamming_occupancy(&sv, &su)).abs() < 1e-9
+        );
+        assert!((binhamming_literal(&su, &sv) - binhamming_literal(&sv, &su)).abs() < 1e-9);
+    }
+}

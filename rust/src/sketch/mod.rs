@@ -1,0 +1,62 @@
+//! The paper's contribution: **Cabin** (categorical → binary sketch) and
+//! **Cham** (Hamming-distance estimation from sketches), built on
+//! **BinEm** (random binary encoding, Lemma 1–2) and **BinSketch**
+//! (Pratap–Bera–Revanuru ICDM'19).
+//!
+//! Pipeline (Algorithm 1 of the paper):
+//!
+//! ```text
+//!   u ∈ {0,…,c}^n  --BinEm(ψ)-->  u' ∈ {0,1}^n  --BinSketch(π)-->  ũ ∈ {0,1}^d
+//! ```
+//!
+//! and estimation (Algorithm 2): `Cham(ũ,ṽ) = 2·BinHamming(ũ,ṽ)`.
+//!
+//! The native implementation fuses both stages into a single pass over the
+//! nonzeros of `u` (`CabinSketcher::sketch`), which is the coordinator's
+//! CPU hot path; the JAX/Pallas AOT path (see `runtime`) computes the same
+//! function as a masked matmul and is bit-identical because ψ and π are
+//! derived from the same splitmix64 streams (see `mappings`).
+
+pub mod binem;
+pub mod binsketch;
+pub mod bitvec;
+pub mod cabin;
+pub mod cham;
+pub mod mappings;
+
+pub use binem::{BinEm, PsiMode};
+pub use binsketch::BinSketch;
+pub use bitvec::BitVec;
+pub use cabin::{CabinSketcher, SketchConfig};
+pub use cham::{Estimator, estimate_hamming};
+
+/// Recommended sketch dimension from Theorem 2: `d = s·sqrt((s/2)·ln(6/δ))`
+/// where `s` is an upper bound on vector density and `δ` the error
+/// probability. The paper observes (and we confirm — see EXPERIMENTS.md F3)
+/// that far smaller `d` works in practice.
+pub fn recommended_dim(density_bound: usize, delta: f64) -> usize {
+    let s = density_bound as f64;
+    let d = s * (s / 2.0 * (6.0 / delta).ln()).sqrt();
+    (d.ceil() as usize).max(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recommended_dim_scales_with_density() {
+        let d1 = recommended_dim(100, 0.1);
+        let d2 = recommended_dim(400, 0.1);
+        // d ∝ s^{3/2}: quadrupling s multiplies d by 8
+        let ratio = d2 as f64 / d1 as f64;
+        assert!((ratio - 8.0).abs() < 0.1, "ratio {}", ratio);
+    }
+
+    #[test]
+    fn recommended_dim_reasonable_values() {
+        // s=457 (KOS density), δ=0.1 → ~ 457·sqrt(228.5·4.09) ≈ 13_900
+        let d = recommended_dim(457, 0.1);
+        assert!(d > 10_000 && d < 20_000, "d={}", d);
+    }
+}

@@ -1,0 +1,129 @@
+//! Property-testing substrate (proptest is unavailable offline).
+//!
+//! [`PropRunner`] drives a property over many seeded random cases and, on
+//! failure, retries with "shrunk" size parameters to report the smallest
+//! failing scale it can find. Generators are plain closures over
+//! [`crate::util::rng::Xoshiro256`], so properties stay readable:
+//!
+//! ```no_run
+//! use cabin::testing::PropRunner;
+//! PropRunner::new("addition commutes", 64).run(|rng, _size| {
+//!     let a = rng.gen_range(1000) as i64;
+//!     let b = rng.gen_range(1000) as i64;
+//!     if a + b != b + a { return Err(format!("{a} {b}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256;
+
+pub struct PropRunner {
+    pub name: String,
+    pub cases: usize,
+    pub base_seed: u64,
+    /// Max "size" hint passed to the property; shrinking lowers this.
+    pub max_size: usize,
+}
+
+impl PropRunner {
+    pub fn new(name: &str, cases: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            cases,
+            base_seed: 0xCAB1_0000,
+            max_size: 256,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.base_seed = seed;
+        self
+    }
+
+    pub fn with_max_size(mut self, s: usize) -> Self {
+        self.max_size = s;
+        self
+    }
+
+    /// Run the property. `prop(rng, size)` returns `Err(msg)` to fail the
+    /// case. Panics with a reproduction line on failure.
+    pub fn run<F>(&self, prop: F)
+    where
+        F: Fn(&mut Xoshiro256, usize) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            // sizes sweep small → large so early failures are small already
+            let size = 1 + (self.max_size * (case + 1)) / self.cases;
+            let mut rng = Xoshiro256::new(seed);
+            if let Err(msg) = prop(&mut rng, size) {
+                // shrink: halve size until it passes, report last failure
+                let mut fail_size = size;
+                let mut fail_msg = msg;
+                let mut s = size / 2;
+                while s >= 1 {
+                    let mut rng = Xoshiro256::new(seed);
+                    match prop(&mut rng, s) {
+                        Err(m) => {
+                            fail_size = s;
+                            fail_msg = m;
+                            s /= 2;
+                        }
+                        Ok(()) => break,
+                    }
+                }
+                panic!(
+                    "property '{}' failed: case={} seed={:#x} size={} — {}",
+                    self.name, case, seed, fail_size, fail_msg
+                );
+            }
+        }
+    }
+}
+
+/// Assert two f64 are within `atol + rtol*|expected|`.
+pub fn assert_close(actual: f64, expected: f64, atol: f64, rtol: f64, ctx: &str) {
+    let tol = atol + rtol * expected.abs();
+    assert!(
+        (actual - expected).abs() <= tol,
+        "{}: |{} - {}| > {}",
+        ctx,
+        actual,
+        expected,
+        tol
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        PropRunner::new("trivial", 32).run(|rng, size| {
+            let v = rng.gen_range(size as u64 + 1);
+            if (v as usize) <= size {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_context() {
+        PropRunner::new("always fails", 4).run(|_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_assertion() {
+        assert_close(1.0001, 1.0, 0.0, 1e-3, "ok");
+    }
+
+    #[test]
+    #[should_panic]
+    fn close_assertion_fails() {
+        assert_close(2.0, 1.0, 0.1, 0.1, "must fail");
+    }
+}

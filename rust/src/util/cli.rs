@@ -1,0 +1,146 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Grammar: `prog <subcommand...> [--key value | --flag] [positional...]`.
+//! Values may also be attached with `=`: `--dim=1000`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments in order (subcommands are usually the first few).
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` pairs; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.options
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else {
+                    // value-follows unless next token is another option or absent
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.options.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.options.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.str_opt(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.str_opt(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.str_opt(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated usize list, e.g. `--dims 100,500,1000`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.str_opt(key) {
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Comma-separated string list.
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.str_opt(key) {
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| t.trim().to_string())
+                .collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["repro", "fig3", "--dim", "1000", "--fast", "--seed=9"]);
+        assert_eq!(a.positional, vec!["repro", "fig3"]);
+        assert_eq!(a.usize_or("dim", 0), 1000);
+        assert!(a.flag("fast"));
+        assert_eq!(a.u64_or("seed", 0), 9);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // `--fast repro` — "repro" is consumed as the value of --fast; users
+        // must order flags last or use `--fast=true`. Documented behaviour.
+        let a = parse(&["--fast=true", "repro"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["repro"]);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--dims", "100,200 ,300"]);
+        assert_eq!(a.usize_list_or("dims", &[]), vec![100, 200, 300]);
+        assert_eq!(a.usize_list_or("absent", &[5]), vec![5]);
+        let b = parse(&["--sets", "kos,nips"]);
+        assert_eq!(b.str_list_or("sets", &[]), vec!["kos", "nips"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.str_or("x", "d"), "d");
+        assert_eq!(a.f64_or("y", 1.5), 1.5);
+        assert!(!a.flag("z"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Offline utility substrates.
+//!
+//! This environment builds without network access, so the crates one would
+//! normally reach for (`rand`, `serde`/`serde_json`, `clap`, `rayon`,
+//! `indicatif`) are unavailable. Each submodule is a small, fully-tested
+//! replacement for the subset of functionality this project needs:
+//!
+//! * [`rng`] — splitmix64 / xoshiro256** PRNG, distributions, sampling.
+//!   The stream is bit-identical to the python implementation in
+//!   `python/compile/prng.py` so π/ψ agree across layers.
+//! * [`json`] — minimal JSON value model, parser and serializer (the
+//!   coordinator wire protocol).
+//! * [`cli`] — argument parser for the `cabin-sketch` binary.
+//! * [`parallel`] — scoped data-parallel helpers over `std::thread`.
+//! * [`timer`] — stopwatch + latency summaries (mean/p50/p95/p99).
+
+pub mod cli;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod timer;
+
+/// Format a byte count for humans (`12.3 MiB`).
+pub fn human_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", b, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn human_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2} s", secs)
+    } else {
+        format!("{:.1} min", secs / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(17), "17 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(human_duration(0.5e-9 * 2.0), "1.0 ns");
+        assert!(human_duration(0.002).ends_with("ms"));
+        assert!(human_duration(5.0).ends_with(" s"));
+        assert!(human_duration(600.0).ends_with("min"));
+    }
+}

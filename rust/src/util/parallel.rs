@@ -1,0 +1,168 @@
+//! Scoped data-parallel helpers over `std::thread` (no `rayon` offline).
+//!
+//! The analysis harnesses (all-pairs matrices, RMSE sweeps) and the blocked
+//! matmul use [`par_chunks_mut`] / [`par_ranges`]; the coordinator uses its
+//! own long-lived worker threads (see `coordinator::shard`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default (cores, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(32)
+}
+
+/// Run `f(range)` over `[0, n)` split into `threads` contiguous ranges.
+pub fn par_ranges<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        f(0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo..hi));
+        }
+    });
+}
+
+/// Dynamic work-stealing-ish loop: workers atomically grab indices. Use for
+/// uneven per-item costs (e.g. per-baseline timing where some items DNS).
+pub fn par_dynamic<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Split a mutable slice into `threads` contiguous chunks processed in
+/// parallel; `f(chunk_start_index, chunk)`.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut start = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let f = &f;
+            let begin = start;
+            s.spawn(move || f(begin, head));
+            rest = tail;
+            start += take;
+        }
+    });
+}
+
+/// Parallel map collecting results in order.
+pub fn par_map<T: Send, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+    T: Default + Clone,
+{
+    let mut out = vec![T::default(); n];
+    par_chunks_mut(&mut out, threads, |start, chunk| {
+        for (off, slot) in chunk.iter_mut().enumerate() {
+            *slot = f(start + off);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn ranges_cover_everything_once() {
+        let hits = AtomicU64::new(0);
+        let sum = AtomicU64::new(0);
+        par_ranges(1000, 7, |r| {
+            for i in r {
+                hits.fetch_add(1, Ordering::Relaxed);
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn dynamic_covers_everything_once() {
+        let sum = AtomicU64::new(0);
+        par_dynamic(501, 5, |i| {
+            sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 501 * 502 / 2);
+    }
+
+    #[test]
+    fn chunks_mut_writes_disjoint() {
+        let mut v = vec![0usize; 100];
+        par_chunks_mut(&mut v, 3, |start, chunk| {
+            for (off, x) in chunk.iter_mut().enumerate() {
+                *x = start + off;
+            }
+        });
+        assert_eq!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_in_order() {
+        let v = par_map(50, 4, |i| i * i);
+        assert_eq!(v[7], 49);
+        assert_eq!(v.len(), 50);
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        par_ranges(0, 4, |_| panic!("should not run"));
+        let v: Vec<usize> = par_map(1, 8, |i| i);
+        assert_eq!(v, vec![0]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Wall-clock timing + latency summaries (criterion is unavailable offline;
+//! `bench.rs` builds on this module).
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Online latency accumulator: stores samples, summarises on demand.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub std_dev: f64,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn summary(&self) -> Summary {
+        if self.samples.is_empty() {
+            return Summary::default();
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            count: n,
+            mean,
+            min: s[0],
+            max: s[n - 1],
+            p50: percentile(&s, 0.50),
+            p95: percentile(&s, 0.95),
+            p99: percentile(&s, 0.99),
+            std_dev: var.sqrt(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile over a *sorted* slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+impl Summary {
+    pub fn format_line(&self, unit_per_sec: Option<f64>) -> String {
+        let base = format!(
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.count,
+            super::human_duration(self.mean),
+            super::human_duration(self.p50),
+            super::human_duration(self.p95),
+            super::human_duration(self.p99),
+            super::human_duration(self.max),
+        );
+        match unit_per_sec {
+            Some(units) if self.mean > 0.0 => {
+                format!("{base} thrpt={:.1}/s", units / self.mean)
+            }
+            _ => base,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let s: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert!((percentile(&s, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&s, 1.0) - 100.0).abs() < 1e-12);
+        assert!((percentile(&s, 0.5) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_basic() {
+        let mut st = LatencyStats::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            st.record(v);
+        }
+        let s = st.summary();
+        assert_eq!(s.count, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!(s.std_dev > 1.0 && s.std_dev < 1.2);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = LatencyStats::new().summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.elapsed_secs() >= 0.002);
+    }
+}

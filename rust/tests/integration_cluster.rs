@@ -1,0 +1,69 @@
+//! Full clustering pipeline (Figures 6–10 protocol) on a topic-structured
+//! twin: ground truth from full-dimensional k-mode, Cabin sketches cluster
+//! almost as well, and the sketch path is faster.
+
+use cabin::baselines::by_key;
+use cabin::cluster::{kmode, kmode_binary, normalized_mutual_information, purity};
+use cabin::data::synth::SynthSpec;
+use cabin::util::timer::Stopwatch;
+
+fn topic_twin(points: usize) -> cabin::data::CategoricalDataset {
+    let mut spec = SynthSpec::small_demo();
+    spec.num_points = points;
+    spec.dim = 20_000;
+    spec.topics = 4;
+    spec.topic_sharpness = 0.9;
+    spec.mean_density = 120.0;
+    spec.max_density = 200;
+    spec.generate(33)
+}
+
+#[test]
+fn cabin_clustering_matches_ground_truth() {
+    let ds = topic_twin(80);
+    let k = 4;
+    let truth = kmode(&ds, k, 20, 7).assignments;
+    let red = by_key("cabin").unwrap().reduce(&ds, 1000, 7);
+    let ours = kmode_binary(red.as_bits().unwrap(), k, 20, 7).assignments;
+    let p = purity(&truth, &ours);
+    let nmi = normalized_mutual_information(&truth, &ours);
+    assert!(p > 0.75, "purity {p}");
+    assert!(nmi > 0.4, "nmi {nmi}");
+}
+
+#[test]
+fn sketch_clustering_is_faster_figure10_shape() {
+    let ds = topic_twin(100);
+    let k = 4;
+    let sw = Stopwatch::start();
+    let _ = kmode(&ds, k, 15, 7);
+    let t_full = sw.elapsed_secs();
+    let red = by_key("cabin").unwrap().reduce(&ds, 1000, 7);
+    let bits = red.as_bits().unwrap();
+    let sw = Stopwatch::start();
+    let _ = kmode_binary(bits, k, 15, 7);
+    let t_sketch = sw.elapsed_secs();
+    assert!(
+        t_sketch < t_full,
+        "sketch clustering {t_sketch}s !< full {t_full}s"
+    );
+}
+
+#[test]
+fn quality_improves_with_sketch_dimension() {
+    let ds = topic_twin(60);
+    let k = 4;
+    let truth = kmode(&ds, k, 20, 7).assignments;
+    let score = |d: usize| {
+        let red = by_key("cabin").unwrap().reduce(&ds, d, 7);
+        let a = kmode_binary(red.as_bits().unwrap(), k, 20, 7).assignments;
+        purity(&truth, &a)
+    };
+    let lo = score(32);
+    let hi = score(2048);
+    assert!(
+        hi >= lo - 0.05,
+        "purity should not degrade with dimension: d=32 {lo} vs d=2048 {hi}"
+    );
+    assert!(hi > 0.7, "purity at d=2048 too low: {hi}");
+}

@@ -1,0 +1,174 @@
+//! End-to-end service test: coordinator over real TCP — concurrent
+//! clients, insert/query/distance/stats/heatmap/shutdown.
+
+use cabin::coordinator::client::Client;
+use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use cabin::data::{CatVector, synth::SynthSpec};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn start_server(dim: usize) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let config = CoordinatorConfig {
+        input_dim: dim,
+        num_categories: 16,
+        sketch_dim: 256,
+        seed: 5,
+        num_shards: 3,
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_delay: Duration::from_millis(1),
+            queue_cap: 512,
+        },
+        use_xla: false,
+        heatmap_limit: 128,
+    };
+    let coordinator = Arc::new(Coordinator::new(config));
+    let (tx, rx) = std::sync::mpsc::sync_channel(1);
+    let server = Arc::clone(&coordinator);
+    let handle = std::thread::spawn(move || {
+        server
+            .serve("127.0.0.1:0", |addr| {
+                let _ = tx.send(addr);
+            })
+            .unwrap();
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn twin(dim: usize, n: usize, seed: u64) -> Vec<CatVector> {
+    let mut spec = SynthSpec::small_demo();
+    spec.dim = dim;
+    spec.num_categories = 16;
+    spec.num_points = n;
+    spec.generate(seed).points
+}
+
+#[test]
+fn tcp_end_to_end() {
+    let (addr, server) = start_server(800);
+    let pts = twin(800, 30, 1);
+
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.ping().unwrap();
+
+    let mut ids = Vec::new();
+    for p in &pts {
+        ids.push(c.insert(p.clone()).unwrap());
+    }
+    assert_eq!(ids.len(), 30);
+
+    // query with an inserted point: itself is the nearest hit
+    let hits = c.query(pts[4].clone(), 3).unwrap();
+    assert_eq!(hits.len(), 3);
+    assert!(hits[0].dist < 1e-9, "{hits:?}");
+    assert_eq!(hits[0].id, ids[4]);
+
+    // distance symmetric, self-zero
+    let d01 = c.distance(ids[0], ids[1]).unwrap();
+    let d10 = c.distance(ids[1], ids[0]).unwrap();
+    assert!((d01 - d10).abs() < 1e-9);
+    assert_eq!(c.distance(ids[2], ids[2]).unwrap(), 0.0);
+
+    // stats reflect traffic
+    let stats = c.stats().unwrap();
+    let get = |k: &str| stats.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap();
+    assert_eq!(get("inserts"), 30.0);
+    assert_eq!(get("queries"), 1.0);
+
+    c.shutdown().unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn tcp_concurrent_clients() {
+    let (addr, server) = start_server(600);
+    let pts = twin(600, 48, 2);
+    std::thread::scope(|s| {
+        for chunk in pts.chunks(12) {
+            s.spawn(move || {
+                let mut c = Client::connect(&addr.to_string()).unwrap();
+                for p in chunk {
+                    c.insert(p.clone()).unwrap();
+                }
+            });
+        }
+    });
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let stats = c.stats().unwrap();
+    let inserts = stats.iter().find(|(n, _)| n == "inserts").unwrap().1;
+    assert_eq!(inserts, 48.0);
+    // concurrent inserts should have produced real batches
+    let batches = stats.iter().find(|(n, _)| n == "batches_flushed").unwrap().1;
+    assert!(batches <= 48.0);
+    c.shutdown().unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn malformed_requests_get_errors_not_disconnects() {
+    use std::io::{BufRead, BufReader, Write};
+    let (addr, server) = start_server(100);
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    for bad in [
+        "not json at all",
+        r#"{"op":"unknown-op"}"#,
+        r#"{"op":"insert","vec":[1,2]}"#, // wrong dim
+        r#"{"op":"distance","a":0}"#,     // missing field
+    ] {
+        writeln!(w, "{bad}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false"), "line: {line}");
+    }
+    // connection still usable
+    writeln!(w, r#"{{"op":"ping"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"));
+    writeln!(w, r#"{{"op":"shutdown"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn heatmap_over_tcp_matches_native() {
+    let (addr, server) = start_server(500);
+    let pts = twin(500, 10, 3);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    for p in &pts {
+        c.insert(p.clone()).unwrap();
+    }
+    match c
+        .call(&cabin::coordinator::Request::Heatmap)
+        .unwrap()
+    {
+        cabin::coordinator::Response::Heatmap { n, values } => {
+            assert_eq!(n, 10);
+            assert_eq!(values.len(), 100);
+            // symmetric, zero diagonal
+            for i in 0..n {
+                assert_eq!(values[i * n + i], 0.0);
+                for j in 0..n {
+                    assert!((values[i * n + j] - values[j * n + i]).abs() < 1e-9);
+                }
+            }
+            // estimates track the categorical truth loosely
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let truth = pts[i].hamming(&pts[j]) as f64;
+                    let est = values[i * n + j];
+                    assert!(
+                        (est - truth).abs() < 0.5 * truth + 40.0,
+                        "({i},{j}): {est} vs {truth}"
+                    );
+                }
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+    c.shutdown().unwrap();
+    server.join().unwrap();
+}

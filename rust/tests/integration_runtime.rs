@@ -1,0 +1,124 @@
+//! XLA runtime integration: the AOT artifacts produce *exactly* the same
+//! sketches as the native path, and kernel estimates match the rust
+//! estimator to f32 tolerance. Skipped (with a loud message) when
+//! `artifacts/` has not been built.
+
+use cabin::data::CatVector;
+use cabin::runtime::XlaEngine;
+use cabin::sketch::cham;
+use cabin::util::rng::Xoshiro256;
+
+fn engine_or_skip() -> Option<XlaEngine> {
+    match XlaEngine::try_default() {
+        Some(e) => Some(e),
+        None => {
+            eprintln!("SKIP: artifacts/ not found — run `make artifacts` first");
+            None
+        }
+    }
+}
+
+fn random_batch(engine: &XlaEngine, k: usize, seed: u64) -> Vec<CatVector> {
+    let m = &engine.manifest;
+    let mut rng = Xoshiro256::new(seed);
+    (0..k)
+        .map(|_| CatVector::random(m.n, 50 + rng.gen_range(100) as usize, m.c, &mut rng))
+        .collect()
+}
+
+#[test]
+fn xla_sketches_bit_identical_to_native() {
+    let Some(engine) = engine_or_skip() else { return };
+    let native = engine.native_equivalent().unwrap();
+    let batch = random_batch(&engine, 8, 1);
+    let xla = engine.cabin_sketch(&batch).unwrap();
+    for (p, x) in batch.iter().zip(&xla) {
+        let n = native.sketch(p);
+        assert_eq!(&n, x, "XLA and native sketches diverge");
+    }
+}
+
+#[test]
+fn xla_allpairs_matches_native_estimator() {
+    let Some(engine) = engine_or_skip() else { return };
+    let native = engine.native_equivalent().unwrap();
+    let batch = random_batch(&engine, 12, 2);
+    let sketches: Vec<_> = batch.iter().map(|p| native.sketch(p)).collect();
+    let est = engine.cham_allpairs(&sketches).unwrap();
+    let k = sketches.len();
+    for i in 0..k {
+        for j in 0..k {
+            let expect = if i == j {
+                0.0
+            } else {
+                2.0 * cham::binhamming_occupancy(&sketches[i], &sketches[j])
+            };
+            let got = est[i * k + j];
+            assert!(
+                (got - expect).abs() < 1e-2 * expect.max(1.0),
+                "({i},{j}): xla {got} native {expect}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_cross_matches_native_estimator() {
+    let Some(engine) = engine_or_skip() else { return };
+    let native = engine.native_equivalent().unwrap();
+    let queries: Vec<_> = random_batch(&engine, 4, 3)
+        .iter()
+        .map(|p| native.sketch(p))
+        .collect();
+    let corpus: Vec<_> = random_batch(&engine, 16, 4)
+        .iter()
+        .map(|p| native.sketch(p))
+        .collect();
+    let est = engine.cham_cross(&queries, &corpus).unwrap();
+    for (qi, q) in queries.iter().enumerate() {
+        for (ci, c) in corpus.iter().enumerate() {
+            let expect = 2.0 * cham::binhamming_occupancy(q, c);
+            let got = est[qi * corpus.len() + ci];
+            assert!(
+                (got - expect).abs() < 1e-2 * expect.max(1.0),
+                "({qi},{ci}): {got} vs {expect}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_fused_pipeline_matches_two_stage() {
+    let Some(engine) = engine_or_skip() else { return };
+    let batch = random_batch(&engine, 8, 5);
+    let fused = engine.sketch_allpairs(&batch).unwrap();
+    let sketches = engine.cabin_sketch(&batch).unwrap();
+    let staged = engine.cham_allpairs(&sketches).unwrap();
+    let k = batch.len();
+    for i in 0..k * k {
+        assert!(
+            (fused[i] - staged[i]).abs() < 1e-2 * staged[i].max(1.0),
+            "fused[{i}]={} staged={}",
+            fused[i],
+            staged[i]
+        );
+    }
+    // and the estimates track the categorical ground truth
+    for i in 0..k {
+        for j in (i + 1)..k {
+            let truth = batch[i].hamming(&batch[j]) as f64;
+            let got = fused[i * k + j];
+            assert!(
+                (got - truth).abs() < 0.35 * truth + 40.0,
+                "({i},{j}): estimate {got} truth {truth}"
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_sidecars_validate() {
+    let Some(engine) = engine_or_skip() else { return };
+    engine.manifest.validate_against_native().unwrap();
+    assert_eq!(engine.manifest.d % 256, 0, "artifact d should be MXU-tiled");
+}

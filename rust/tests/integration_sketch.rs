@@ -1,0 +1,91 @@
+//! End-to-end sketch accuracy on the Table 1 dataset twins: Theorem-2-level
+//! estimation error, sparsity preservation (Lemma 4), memory claims.
+
+use cabin::baselines::by_key;
+use cabin::data::registry::DatasetSpec;
+use cabin::sketch::{cham, CabinSketcher, SketchConfig};
+
+#[test]
+fn cham_accuracy_on_kos_twin() {
+    let spec = DatasetSpec::by_key("kos").unwrap();
+    let ds = spec.synth_spec(60).generate(42);
+    let s = ds.max_density();
+    let d = 2048;
+    let sk = CabinSketcher::from_config(SketchConfig::new(ds.dim(), ds.num_categories(), d, 7));
+    let sketches = sk.sketch_dataset(&ds, 4);
+    let bound = 11.0 * ((s as f64) * (7.0f64 / 0.05).ln()).sqrt();
+    let mut violations = 0;
+    let mut pairs = 0;
+    for i in 0..ds.len() {
+        for j in (i + 1)..ds.len() {
+            let truth = ds.points[i].hamming(&ds.points[j]) as f64;
+            let est = cham::estimate_hamming(&sketches[i], &sketches[j], sk.config());
+            pairs += 1;
+            if (est - truth).abs() > bound {
+                violations += 1;
+            }
+        }
+    }
+    assert!(
+        (violations as f64) < 0.05 * pairs as f64,
+        "{violations}/{pairs} pairs violate the Theorem-2 bound {bound:.1}"
+    );
+}
+
+#[test]
+fn sparsity_preserved_lemma4_on_all_twins() {
+    for key in ["kos", "nips", "pubmed"] {
+        let spec = DatasetSpec::by_key(key).unwrap();
+        let ds = spec.synth_spec(40).generate(11);
+        let sk =
+            CabinSketcher::from_config(SketchConfig::new(ds.dim(), ds.num_categories(), 1024, 3));
+        for p in &ds.points {
+            let s = sk.sketch(p);
+            assert!(
+                s.count_ones() <= p.nnz(),
+                "{key}: sketch weight {} > nnz {}",
+                s.count_ones(),
+                p.nnz()
+            );
+        }
+    }
+}
+
+#[test]
+fn sketch_memory_beats_dense_representation() {
+    // Section 1's space argument: d-bit sketches vs n×f32.
+    let spec = DatasetSpec::by_key("nytimes").unwrap();
+    let ds = spec.synth_spec(20).generate(5);
+    let sk = CabinSketcher::from_config(SketchConfig::new(ds.dim(), ds.num_categories(), 1000, 1));
+    let sketch_bytes = sk.sketch(&ds.points[0]).memory_bytes();
+    let dense_f32_bytes = ds.dim() * 4;
+    assert!(sketch_bytes * 1000 < dense_f32_bytes, "{sketch_bytes} vs {dense_f32_bytes}");
+    // and 32x vs a real-valued sketch of the same dimension
+    assert!(sketch_bytes <= 1000 / 8 + 8);
+}
+
+#[test]
+fn rmse_improves_with_dimension_on_enron_twin() {
+    let spec = DatasetSpec::by_key("enron").unwrap();
+    let ds = spec.synth_spec(50).generate(9);
+    let r = by_key("cabin").unwrap();
+    let e_small = cabin::analysis::rmse::rmse(&ds, &r.reduce(&ds, 128, 3));
+    let e_mid = cabin::analysis::rmse::rmse(&ds, &r.reduce(&ds, 512, 3));
+    let e_large = cabin::analysis::rmse::rmse(&ds, &r.reduce(&ds, 2048, 3));
+    assert!(e_large < e_mid && e_mid < e_small, "{e_small} {e_mid} {e_large}");
+}
+
+#[test]
+fn figure3_shape_cabin_best_discrete_method_at_moderate_dim() {
+    let spec = DatasetSpec::by_key("kos").unwrap();
+    let ds = spec.synth_spec(50).generate(21);
+    let d = 512;
+    let cabin_rmse = cabin::analysis::rmse::rmse(&ds, &by_key("cabin").unwrap().reduce(&ds, d, 5));
+    for other in ["hlsh", "sh", "kt"] {
+        let r = cabin::analysis::rmse::rmse(&ds, &by_key(other).unwrap().reduce(&ds, d, 5));
+        assert!(
+            cabin_rmse < r,
+            "cabin {cabin_rmse} !< {other} {r} at d={d}"
+        );
+    }
+}

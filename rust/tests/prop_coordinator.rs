@@ -1,0 +1,180 @@
+//! Property tests over coordinator invariants: store conservation,
+//! router correctness vs brute force, batcher id uniqueness.
+
+use cabin::coordinator::router;
+use cabin::coordinator::store::ShardedStore;
+use cabin::sketch::{cham, BitVec};
+use cabin::testing::PropRunner;
+
+fn random_sketches(
+    rng: &mut cabin::util::rng::Xoshiro256,
+    n: usize,
+    d: usize,
+) -> Vec<BitVec> {
+    (0..n)
+        .map(|_| {
+            let ones = 1 + rng.gen_range((d / 4) as u64) as usize;
+            BitVec::from_indices(d, rng.sample_indices(d, ones))
+        })
+        .collect()
+}
+
+#[test]
+fn prop_store_never_loses_points() {
+    PropRunner::new("store conservation", 64).run(|rng, size| {
+        let shards = 1 + rng.gen_range(6) as usize;
+        let store = ShardedStore::new(shards, 64);
+        let total = 1 + size / 2;
+        let mut inserted = 0;
+        while inserted < total {
+            let sz = 1 + rng.gen_range(7) as usize;
+            let batch = random_sketches(rng, sz, 64);
+            inserted += batch.len();
+            store.insert_batch(batch);
+        }
+        if store.len() != inserted {
+            return Err(format!("len {} != inserted {}", store.len(), inserted));
+        }
+        let snap = store.snapshot_ordered();
+        if snap.len() != inserted {
+            return Err("snapshot lost points".into());
+        }
+        // ids dense and unique
+        for (expect, (id, _)) in snap.iter().enumerate() {
+            if *id != expect {
+                return Err(format!("id gap at {expect}: {id}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rebalance_conserves_everything() {
+    PropRunner::new("rebalance conservation", 48).run(|rng, size| {
+        let store = ShardedStore::new(3, 32);
+        let n = 4 + size / 2;
+        let all = random_sketches(rng, n, 32);
+        // single-shard-pressure insert pattern
+        store.insert_batch(all.clone());
+        store.rebalance(1);
+        let snap = store.snapshot_ordered();
+        if snap.len() != n {
+            return Err(format!("lost points: {} != {n}", snap.len()));
+        }
+        for (i, (_, sk)) in snap.iter().enumerate() {
+            if sk != &all[i] {
+                return Err(format!("sketch {i} corrupted by rebalance"));
+            }
+        }
+        let sizes = store.shard_sizes();
+        let (max, min) = (
+            *sizes.iter().max().unwrap() as i64,
+            *sizes.iter().min().unwrap() as i64,
+        );
+        if max - min > (n as i64 / 2) + 2 {
+            return Err(format!("still imbalanced: {sizes:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_router_topk_matches_bruteforce() {
+    PropRunner::new("router == brute force", 48).run(|rng, size| {
+        let d = 128;
+        let n = 3 + size / 3;
+        let store = ShardedStore::new(3, d);
+        let pts = random_sketches(rng, n, d);
+        for chunk in pts.chunks(4) {
+            store.insert_batch(chunk.to_vec());
+        }
+        let q = random_sketches(rng, 1, d).pop().unwrap();
+        let k = 1 + rng.gen_range(n as u64) as usize;
+        let hits = router::topk(&store, &q, k);
+        // brute force over the same estimator
+        let mut brute: Vec<(usize, f64)> = pts
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                (
+                    i,
+                    2.0 * cham::binhamming_from_stats(
+                        q.count_ones() as f64,
+                        s.count_ones() as f64,
+                        q.and_count(s) as f64,
+                        d,
+                    ),
+                )
+            })
+            .collect();
+        brute.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        brute.truncate(k);
+        if hits.len() != brute.len() {
+            return Err(format!("k mismatch {} vs {}", hits.len(), brute.len()));
+        }
+        for (h, (bi, bd)) in hits.iter().zip(&brute) {
+            // distances must match exactly; ids may differ only on ties
+            if (h.dist - bd).abs() > 1e-9 {
+                return Err(format!("dist mismatch {} vs {} (ids {} {})", h.dist, bd, h.id, bi));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_ids_unique_under_concurrency() {
+    use cabin::coordinator::batcher::{Batcher, BatcherConfig, SketchBackend};
+    use cabin::coordinator::metrics::Metrics;
+    use cabin::data::CatVector;
+    use cabin::sketch::{CabinSketcher, SketchConfig};
+    use std::sync::Arc;
+
+    PropRunner::new("batcher id uniqueness", 8).run(|rng, size| {
+        let store = Arc::new(ShardedStore::new(2, 64));
+        let metrics = Arc::new(Metrics::new());
+        let sk = CabinSketcher::from_config(SketchConfig::new(300, 8, 64, 1));
+        let mut batcher = Batcher::start(
+            BatcherConfig {
+                max_batch: 1 + size / 16,
+                max_delay: std::time::Duration::from_millis(1),
+                queue_cap: 128,
+            },
+            SketchBackend::Native(sk),
+            store.clone(),
+            metrics,
+        );
+        let n_threads = 4;
+        let per_thread = 8;
+        let vecs: Vec<CatVector> = (0..n_threads * per_thread)
+            .map(|_| CatVector::random(300, 15, 8, rng))
+            .collect();
+        let ids: Vec<usize> = std::thread::scope(|s| {
+            let handles: Vec<_> = vecs
+                .chunks(per_thread)
+                .map(|chunk| {
+                    let sub = batcher.submitter.clone();
+                    s.spawn(move || {
+                        chunk
+                            .iter()
+                            .map(|v| sub.insert(v.clone()).unwrap())
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        batcher.shutdown();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != ids.len() {
+            return Err("duplicate ids assigned".into());
+        }
+        if store.len() != ids.len() {
+            return Err(format!("store {} != inserts {}", store.len(), ids.len()));
+        }
+        Ok(())
+    });
+}

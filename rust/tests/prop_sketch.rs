@@ -1,0 +1,198 @@
+//! Property tests over the sketch pipeline invariants (substrate:
+//! `cabin::testing::PropRunner` — proptest is unavailable offline).
+
+use cabin::data::CatVector;
+use cabin::sketch::{cham, BinEm, BinSketch, BitVec, CabinSketcher, PsiMode, SketchConfig};
+use cabin::testing::PropRunner;
+
+fn random_cat(rng: &mut cabin::util::rng::Xoshiro256, size: usize) -> (CatVector, usize, u16) {
+    let dim = 50 + size * 10;
+    let c = 1 + rng.gen_range(30) as u16;
+    let nnz = rng.gen_range((dim / 2) as u64) as usize;
+    (CatVector::random(dim, nnz, c, rng), dim, c)
+}
+
+#[test]
+fn prop_cabin_weight_bounded_by_nnz() {
+    // |Cabin(u)|₁ ≤ nnz(u): OR-folding and ψ-masking can only lose ones.
+    PropRunner::new("cabin weight ≤ nnz", 128).run(|rng, size| {
+        let (u, dim, c) = random_cat(rng, size);
+        let d = 8 + rng.gen_range(512) as usize;
+        let sk = CabinSketcher::new(dim, c, d, rng.next_u64());
+        let s = sk.sketch(&u);
+        if s.count_ones() <= u.nnz() {
+            Ok(())
+        } else {
+            Err(format!("weight {} > nnz {}", s.count_ones(), u.nnz()))
+        }
+    });
+}
+
+#[test]
+fn prop_binem_zero_preservation() {
+    // BinEm never sets a bit where the input is missing (Lemma 1a).
+    PropRunner::new("binem zero preservation", 96).run(|rng, size| {
+        let (u, dim, c) = random_cat(rng, size);
+        for mode in [PsiMode::Shared, PsiMode::PerAttribute] {
+            let be = BinEm::new(dim, c, mode, rng.next_u64());
+            let enc = be.encode(&u);
+            for i in enc.iter_ones() {
+                if u.get(i) == 0 {
+                    return Err(format!("{mode:?}: bit {i} set on missing attr"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_equal_inputs_equal_sketches() {
+    PropRunner::new("determinism", 64).run(|rng, size| {
+        let (u, dim, c) = random_cat(rng, size);
+        let seed = rng.next_u64();
+        let a = CabinSketcher::new(dim, c, 64, seed).sketch(&u);
+        let b = CabinSketcher::new(dim, c, 64, seed).sketch(&u);
+        if a == b {
+            Ok(())
+        } else {
+            Err("same seed, different sketch".into())
+        }
+    });
+}
+
+#[test]
+fn prop_fused_equals_staged() {
+    PropRunner::new("fused == staged", 96).run(|rng, size| {
+        let (u, dim, c) = random_cat(rng, size);
+        let sk = CabinSketcher::new(dim, c, 32 + size, rng.next_u64());
+        let fused = sk.sketch(&u);
+        let (_, staged) = sk.sketch_staged(&u);
+        if fused == staged {
+            Ok(())
+        } else {
+            Err("fused != staged".into())
+        }
+    });
+}
+
+#[test]
+fn prop_estimator_symmetry_and_identity() {
+    PropRunner::new("cham symmetry/identity", 96).run(|rng, size| {
+        let d = 64 + size;
+        let na = rng.gen_range(d as u64 / 2) as usize;
+        let nb = rng.gen_range(d as u64 / 2) as usize;
+        let a = BitVec::from_indices(d, rng.sample_indices(d, na));
+        let b = BitVec::from_indices(d, rng.sample_indices(d, nb));
+        let ab = cham::binhamming_occupancy(&a, &b);
+        let ba = cham::binhamming_occupancy(&b, &a);
+        if (ab - ba).abs() > 1e-9 {
+            return Err(format!("asymmetric: {ab} vs {ba}"));
+        }
+        if cham::binhamming_occupancy(&a, &a) != 0.0 {
+            return Err("self-distance nonzero".into());
+        }
+        if !ab.is_finite() || ab < 0.0 {
+            return Err(format!("invalid estimate {ab}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_estimator_monotone_in_inner_product() {
+    // Fixing weights, the estimate decreases as ⟨ũ,ṽ⟩ grows.
+    PropRunner::new("estimator monotonicity", 64).run(|rng, size| {
+        let d = 256 + size;
+        let wu = 10.0 + rng.gen_range(60) as f64;
+        let wv = 10.0 + rng.gen_range(60) as f64;
+        let max_ip = wu.min(wv);
+        let mut last = f64::INFINITY;
+        let mut ip = 0.0;
+        while ip <= max_ip {
+            let h = cham::binhamming_from_stats(wu, wv, ip, d);
+            if h > last + 1e-9 {
+                return Err(format!("not monotone at ip={ip}: {h} > {last}"));
+            }
+            last = h;
+            ip += 1.0;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_binsketch_or_homomorphism() {
+    // sketch(u ∨ v) == sketch(u) ∨ sketch(v) — OR-folding commutes with OR.
+    PropRunner::new("binsketch OR homomorphism", 96).run(|rng, size| {
+        let n = 100 + size * 4;
+        let d = 16 + size / 2;
+        let bs = BinSketch::new(n, d, rng.next_u64());
+        let u = BitVec::from_indices(n, rng.sample_indices(n, n / 10));
+        let v = BitVec::from_indices(n, rng.sample_indices(n, n / 10));
+        let mut uv = u.clone();
+        uv.or_assign(&v);
+        let mut lhs = bs.compress(&u);
+        lhs.or_assign(&bs.compress(&v));
+        if bs.compress(&uv) == lhs {
+            Ok(())
+        } else {
+            Err("OR homomorphism violated".into())
+        }
+    });
+}
+
+#[test]
+fn prop_lemma2_expectation_statistical() {
+    // Averaged over ψ seeds, 2·HD(u',v') tracks HD(u,v) within 4σ.
+    PropRunner::new("lemma2 expectation", 12).run(|rng, _size| {
+        let dim = 3000;
+        let c = 16;
+        let u = CatVector::random(dim, 200, c, rng);
+        let v = CatVector::random(dim, 200, c, rng);
+        let truth = u.hamming(&v) as f64;
+        let trials = 200;
+        let mut total = 0.0;
+        for s in 0..trials {
+            let be = BinEm::new(dim, c, PsiMode::PerAttribute, rng.next_u64() ^ s);
+            total += 2.0 * be.encode(&u).xor_count(&be.encode(&v)) as f64;
+        }
+        let mean = total / trials as f64;
+        // Var(2·HD') = 4·h/4 = h per trial ⇒ σ_mean = sqrt(h/trials)
+        let sigma = (truth / trials as f64).sqrt().max(1e-9);
+        if (mean - truth).abs() < 4.0 * sigma * 2.0 + 2.0 {
+            Ok(())
+        } else {
+            Err(format!("mean {mean} truth {truth} σ {sigma}"))
+        }
+    });
+}
+
+#[test]
+fn prop_cham_theorem2_bound_statistical() {
+    // |Cham − HD| ≤ 11·sqrt(s·ln(7/δ)) with δ=0.05 must hold in the vast
+    // majority of cases; allow isolated near-boundary failures by testing
+    // the 95th percentile behaviour across cases.
+    let mut violations = 0;
+    let cases = 60;
+    let mut rng = cabin::util::rng::Xoshiro256::new(0xCAB2);
+    for case in 0..cases {
+        let dim = 10_000;
+        let c = 32;
+        let s = 150;
+        let u = CatVector::random(dim, s, c, &mut rng);
+        let v = CatVector::random(dim, s, c, &mut rng);
+        let cfg = SketchConfig::new(dim, c, 2048, case as u64);
+        let sk = CabinSketcher::from_config(cfg);
+        let est = cham::estimate_hamming(&sk.sketch(&u), &sk.sketch(&v), sk.config());
+        let truth = u.hamming(&v) as f64;
+        let bound = 11.0 * ((s as f64) * (7.0f64 / 0.05).ln()).sqrt();
+        if (est - truth).abs() > bound {
+            violations += 1;
+        }
+    }
+    assert!(
+        violations <= 3,
+        "Theorem 2 bound violated in {violations}/{cases} cases"
+    );
+}

@@ -1,6 +1,7 @@
 //! End-to-end system driver (the EXPERIMENTS.md validation run): start the
 //! coordinator as a real TCP service, drive it with concurrent clients
-//! over the wire — batched inserts, top-k queries — and report throughput,
+//! over the wire — batched inserts, single and batched top-k queries — and
+//! report throughput,
 //! latency percentiles, batching efficiency, and backend (XLA artifacts
 //! when present and matching, else native).
 //!
@@ -156,6 +157,45 @@ fn main() {
         queries.len(),
         100.0 * hits_at_k as f64 / queries.len() as f64
     );
+
+    // ---- phase 2b: the same queries, one batched round-trip per client ----
+    let sw = Stopwatch::start();
+    let batched: Vec<(usize, Vec<usize>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = queries
+            .points
+            .chunks(qchunk)
+            .enumerate()
+            .map(|(ci, part)| {
+                s.spawn(move || {
+                    let mut c = Client::connect(&addr.to_string()).unwrap();
+                    c.query_batch(part.to_vec(), k)
+                        .unwrap()
+                        .into_iter()
+                        .enumerate()
+                        .map(|(qi, hits)| {
+                            (ci * qchunk + qi, hits.iter().map(|h| h.id).collect())
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let batch_secs = sw.elapsed_secs();
+    println!(
+        "[e2e] batched queries: {} in {:.3}s → {:.0} queries/s ({:.2}× the single-query path)",
+        queries.len(),
+        batch_secs,
+        queries.len() as f64 / batch_secs,
+        query_secs / batch_secs
+    );
+    // the batched path must return exactly what the single-query path did
+    let mut single_sorted = results.clone();
+    single_sorted.sort_by_key(|r| r.0);
+    let mut batch_sorted = batched;
+    batch_sorted.sort_by_key(|r| r.0);
+    assert_eq!(single_sorted, batch_sorted, "batched ≠ single results");
+    println!("[e2e] batched results identical to single-query results — OK");
 
     // ---- phase 3: service stats + shutdown ----
     let mut admin = Client::connect(&addr.to_string()).unwrap();

@@ -1,5 +1,6 @@
-//! Coordinator benchmarks: batcher ingest throughput (by batch policy) and
-//! query scatter/gather latency as the corpus grows.
+//! Coordinator benchmarks: batcher ingest throughput (by batch policy),
+//! batched vs single-query scatter/gather, and query latency as the corpus
+//! grows. The isolated shard-scan kernel comparison lives in `bench_topk`.
 
 use cabin::bench::{black_box, Bench};
 use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request, Response};
@@ -60,6 +61,30 @@ fn main() {
         println!(
             "    (mean flushed batch size: {:.1})",
             c.metrics.mean_batch_size()
+        );
+    }
+
+    // batched vs single-query scatter/gather: one shard visit (and one
+    // |q̃| precompute) per batch instead of per query
+    for batch in [16usize, 64] {
+        let c = make_coordinator(64, 1, 4);
+        for p in ds.points.iter().cycle().take(1000) {
+            c.handle_request(Request::Insert { vec: p.clone() });
+        }
+        let mut qi = 0usize;
+        b.bench_with_throughput(
+            &format!("query_batch/top10/corpus1000/batch{batch}"),
+            Some(batch as f64),
+            || {
+                let vecs: Vec<_> = (0..batch)
+                    .map(|i| ds.points[(qi + i) % ds.len()].clone())
+                    .collect();
+                qi += batch;
+                match c.handle_request(Request::QueryBatch { vecs, k: 10 }) {
+                    Response::HitsBatch { results } => black_box(results.len()),
+                    other => panic!("{other:?}"),
+                };
+            },
         );
     }
 

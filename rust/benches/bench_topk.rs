@@ -1,0 +1,116 @@
+//! Shard-scan top-k benchmarks: the seed's per-sketch `Vec<BitVec>` layout
+//! with a sort-on-every-insert candidate buffer vs the contiguous
+//! [`SketchMatrix`] arena scanned with the bounded-heap [`TopK`] kernel,
+//! plus the end-to-end sharded router path. Corpus is ≥100k sketches
+//! (downscaled under `CABIN_BENCH_FAST=1` so CI stays quick); throughput
+//! is reported in candidates/sec.
+
+use cabin::bench::{black_box, Bench};
+use cabin::coordinator::store::ShardedStore;
+use cabin::coordinator::{router, TopK};
+use cabin::sketch::bitvec::and_count_words;
+use cabin::sketch::cham::binhamming_from_stats;
+use cabin::sketch::{BitVec, SketchMatrix};
+use cabin::util::rng::Xoshiro256;
+
+const DIM: usize = 1024;
+
+/// The seed kernel, verbatim layout: one heap-boxed `BitVec` per
+/// candidate, weight recomputed per candidate, and a bounded buffer that
+/// re-sorts on every accepted insertion. (Comparator upgraded to
+/// `total_cmp` so the baseline cannot panic; the cost is identical.)
+fn seed_scan(sketches: &[BitVec], query: &BitVec, wq: f64, k: usize) -> Vec<(usize, f64)> {
+    let mut hits: Vec<(usize, f64)> = Vec::with_capacity(k + 1);
+    for (id, sk) in sketches.iter().enumerate() {
+        let ip = query.and_count(sk) as f64;
+        let dist = 2.0 * binhamming_from_stats(wq, sk.count_ones() as f64, ip, DIM);
+        if hits.len() < k {
+            hits.push((id, dist));
+            hits.sort_by(|a, b| a.1.total_cmp(&b.1));
+        } else if dist < hits[k - 1].1 {
+            hits[k - 1] = (id, dist);
+            hits.sort_by(|a, b| a.1.total_cmp(&b.1));
+        }
+    }
+    hits
+}
+
+/// The arena kernel: borrowed `&[u64]` rows, cached row weights, bounded
+/// max-heap selection — zero per-candidate allocations.
+fn arena_scan(m: &SketchMatrix, query: &BitVec, wq: f64, k: usize) -> Vec<(usize, f64)> {
+    let mut best = TopK::new(k);
+    let qw = query.words();
+    for (i, row) in m.rows().enumerate() {
+        let ip = and_count_words(qw, row) as f64;
+        best.offer(i, 2.0 * binhamming_from_stats(wq, m.weight(i) as f64, ip, DIM));
+    }
+    best.into_sorted_hits()
+        .into_iter()
+        .map(|h| (h.id, h.dist))
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::from_env("topk");
+    let n: usize = if std::env::var("CABIN_BENCH_FAST").ok().as_deref() == Some("1") {
+        20_000
+    } else {
+        100_000
+    };
+    let mut rng = Xoshiro256::new(7);
+    println!("[bench_topk] building {n}-sketch corpus (d={DIM})");
+    let sketches: Vec<BitVec> = (0..n)
+        .map(|_| BitVec::from_indices(DIM, rng.sample_indices(DIM, 128)))
+        .collect();
+    let arena = SketchMatrix::from_sketches(&sketches);
+    let queries: Vec<BitVec> = (0..16)
+        .map(|_| BitVec::from_indices(DIM, rng.sample_indices(DIM, 128)))
+        .collect();
+
+    // sanity: both kernels must select identical (id, dist) sets
+    for q in &queries {
+        let wq = q.count_ones() as f64;
+        assert_eq!(seed_scan(&sketches, q, wq, 10), arena_scan(&arena, q, wq, 10));
+    }
+
+    for k in [10usize, 100] {
+        let mut qi = 0usize;
+        b.bench_with_throughput(&format!("scan/seed-vec-sort/{n}/k{k}"), Some(n as f64), || {
+            let q = &queries[qi % queries.len()];
+            qi += 1;
+            black_box(seed_scan(&sketches, q, q.count_ones() as f64, k).len());
+        });
+        let mut qi = 0usize;
+        b.bench_with_throughput(&format!("scan/arena-heap/{n}/k{k}"), Some(n as f64), || {
+            let q = &queries[qi % queries.len()];
+            qi += 1;
+            black_box(arena_scan(&arena, q, q.count_ones() as f64, k).len());
+        });
+    }
+
+    // end-to-end router path: 4 arena shards, parallel scatter/gather
+    let store = ShardedStore::new(4, DIM);
+    for chunk in sketches.chunks(1024) {
+        store.insert_batch(chunk.to_vec());
+    }
+    let mut qi = 0usize;
+    b.bench_with_throughput(&format!("router/topk/{n}/4shards/k10"), Some(n as f64), || {
+        let q = &queries[qi % queries.len()];
+        qi += 1;
+        black_box(router::topk(&store, q, 10).len());
+    });
+    let mut qi = 0usize;
+    b.bench_with_throughput(
+        &format!("router/topk_batch/{n}/4shards/k10/batch16"),
+        Some(16.0 * n as f64),
+        || {
+            let qs: Vec<BitVec> = (0..16)
+                .map(|i| queries[(qi + i) % queries.len()].clone())
+                .collect();
+            qi += 16;
+            black_box(router::topk_batch(&store, &qs, 10).len());
+        },
+    );
+
+    b.finish();
+}

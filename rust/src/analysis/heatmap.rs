@@ -8,7 +8,8 @@
 
 use crate::baselines::Reduced;
 use crate::data::CategoricalDataset;
-use crate::sketch::BitVec;
+use crate::sketch::bitvec::and_count_words;
+use crate::sketch::{BitVec, SketchMatrix};
 use crate::util::parallel;
 
 /// Send+Sync wrapper for the striped-row writer (rows are disjoint).
@@ -68,9 +69,16 @@ impl Heatmap {
         h
     }
 
-    /// Fast path for binary sketches — the native hot loop benched in
-    /// §Perf. Two optimizations over [`Heatmap::from_sketches_naive`]
-    /// (kept as the measured baseline):
+    /// Fast path for binary sketches: packs them into a contiguous
+    /// [`SketchMatrix`] arena and scans that. Kept as the slice-of-BitVecs
+    /// entry point for callers that haven't materialised an arena yet.
+    pub fn from_sketches_occupancy(sketches: &[BitVec], scale: f64) -> Heatmap {
+        Self::from_matrix_occupancy(&SketchMatrix::from_sketches(sketches), scale)
+    }
+
+    /// All-pairs estimated-Hamming heatmap over a sketch arena — the native
+    /// hot loop benched in §Perf. Three optimizations over
+    /// [`Heatmap::from_sketches_naive`] (kept as the measured baseline):
     ///
     /// 1. the per-point occupancy inversions `est(|ũ|)` are precomputed
     ///    (one `ln` per *point*), so the pair loop performs a single `ln`
@@ -78,13 +86,16 @@ impl Heatmap {
     ///    dominate at d ≤ 4096;
     /// 2. work is scheduled dynamically over rows (upper-triangle rows
     ///    shrink with i; static row blocks leave the first thread with
-    ///    ~2× the work of the last).
-    pub fn from_sketches_occupancy(sketches: &[BitVec], scale: f64) -> Heatmap {
-        let n = sketches.len();
-        let d = sketches.first().map(|s| s.len()).unwrap_or(0);
+    ///    ~2× the work of the last);
+    /// 3. the pair loop reads borrowed `&[u64]` arena rows and the arena's
+    ///    cached row weights — one contiguous allocation, no per-sketch
+    ///    pointer chase.
+    pub fn from_matrix_occupancy(m: &SketchMatrix, scale: f64) -> Heatmap {
+        let n = m.len();
+        let d = m.bits();
         let df = d as f64;
         let inv_ln_ratio = 1.0 / (1.0 - 1.0 / df).ln();
-        let weights: Vec<f64> = sketches.iter().map(|s| s.count_ones() as f64).collect();
+        let weights: Vec<f64> = (0..n).map(|i| m.weight(i) as f64).collect();
         // est(w_i) precomputed: ĥ = 2·est(union) − est(w_i) − est(w_j)
         let est_w: Vec<f64> = weights
             .iter()
@@ -108,10 +119,10 @@ impl Heatmap {
                         let row = unsafe {
                             std::slice::from_raw_parts_mut(vp.0.add(i * n), n)
                         };
-                        let si = &sketches[i];
+                        let si = m.row(i);
                         let (wi, ei) = (weights[i], est_w[i]);
                         for (j, slot) in row.iter_mut().enumerate().skip(i + 1) {
-                            let ip = si.and_count(&sketches[j]) as usize as f64;
+                            let ip = and_count_words(si, m.row(j)) as f64;
                             let union = (wi + weights[j] - ip).min(df - 1.0).max(0.0);
                             let est_union = (1.0 - union / df).ln() * inv_ln_ratio;
                             let h = 2.0 * est_union - ei - est_w[j];
@@ -294,6 +305,18 @@ mod tests {
                 naive.values[i]
             );
         }
+    }
+
+    #[test]
+    fn matrix_scan_matches_slice_entry_point() {
+        let ds = ds();
+        let cfg = SketchConfig::new(ds.dim(), ds.num_categories(), 512, 5);
+        let sk = CabinSketcher::from_config(cfg);
+        let sketches = sk.sketch_dataset(&ds, 4);
+        let via_slice = Heatmap::from_sketches_occupancy(&sketches, 2.0);
+        let via_matrix =
+            Heatmap::from_matrix_occupancy(&SketchMatrix::from_sketches(&sketches), 2.0);
+        assert_eq!(via_slice.values, via_matrix.values);
     }
 
     #[test]

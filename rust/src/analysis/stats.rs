@@ -22,7 +22,7 @@ impl BoxStats {
             return BoxStats::default();
         }
         let mut s = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         let mean = s.iter().sum::<f64>() / s.len() as f64;
         let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / s.len() as f64;
         BoxStats {

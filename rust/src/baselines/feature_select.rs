@@ -85,7 +85,7 @@ pub fn mutual_info_scores(ds: &CategoricalDataset, labels: &[usize]) -> Vec<f64>
 /// Keep the `d` best-scoring features; returns sorted feature ids.
 pub fn select_top(scores: &[f64], d: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
     idx.truncate(d);
     idx.sort_unstable();
     idx

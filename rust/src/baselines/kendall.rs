@@ -114,7 +114,7 @@ impl DimReducer for KendallTau {
                 (score, f)
             })
             .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         let mut selected: Vec<usize> = scored.into_iter().take(dim).map(|(_, f)| f).collect();
         selected.sort_unstable();
 

@@ -65,8 +65,7 @@ pub fn kmeans(x: &Matrix, k: usize, max_iters: usize, seed: u64) -> Clustering {
                 let far = (0..n)
                     .max_by(|&a, &b| {
                         sq_dist(x.row(a), &centres[assign[a]])
-                            .partial_cmp(&sq_dist(x.row(b), &centres[assign[b]]))
-                            .unwrap()
+                            .total_cmp(&sq_dist(x.row(b), &centres[assign[b]]))
                     })
                     .unwrap();
                 centres[c] = x.row(far).to_vec();

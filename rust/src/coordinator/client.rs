@@ -48,6 +48,15 @@ impl Client {
         }
     }
 
+    /// Batched top-k: one round-trip, one scatter/gather for all `vecs`.
+    pub fn query_batch(&mut self, vecs: Vec<CatVector>, k: usize) -> Result<Vec<Vec<Hit>>> {
+        match self.call(&Request::QueryBatch { vecs, k })? {
+            Response::HitsBatch { results } => Ok(results),
+            Response::Error { message } => bail!("query_batch failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
     pub fn distance(&mut self, a: usize, b: usize) -> Result<f64> {
         match self.call(&Request::Distance { a, b })? {
             Response::Distance { dist } => Ok(dist),

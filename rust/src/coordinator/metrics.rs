@@ -8,6 +8,7 @@ use std::sync::Mutex;
 pub struct Metrics {
     pub inserts: AtomicU64,
     pub queries: AtomicU64,
+    pub query_batches: AtomicU64,
     pub distances: AtomicU64,
     pub heatmaps: AtomicU64,
     pub batches_flushed: AtomicU64,
@@ -37,6 +38,10 @@ impl Metrics {
         let mut out: Vec<(String, f64)> = vec![
             ("inserts".into(), self.inserts.load(Ordering::Relaxed) as f64),
             ("queries".into(), self.queries.load(Ordering::Relaxed) as f64),
+            (
+                "query_batches".into(),
+                self.query_batches.load(Ordering::Relaxed) as f64,
+            ),
             (
                 "distances".into(),
                 self.distances.load(Ordering::Relaxed) as f64,

@@ -3,18 +3,39 @@
 //! line-delimited JSON, inserts flow through a deadline/size dynamic
 //! batcher into the sketching backend (AOT/XLA when artifacts match the
 //! dataset configuration, native bit-packed otherwise), sketches land in
-//! density-balanced shards, and queries scatter/gather across shards for
-//! top-k by estimated Hamming distance.
+//! point-balanced shard **arenas** (least-loaded by atomically reserved
+//! size), and queries — single or batched — scatter/gather across shards
+//! for top-k by estimated Hamming distance.
 //!
 //! ```text
-//!  TCP conn ─┐                        ┌─ shard 0 (sketches, ids)
-//!  TCP conn ─┼─ protocol ─ batcher ───┼─ shard 1        ─┐
-//!  TCP conn ─┘      │        │        └─ shard S-1       ├─ router (top-k merge)
-//!                 metrics   backend (XLA | native)      ─┘
+//!  TCP conn ─┐                        ┌─ shard 0 ─ SketchMatrix arena ┐
+//!  TCP conn ─┼─ protocol ─ batcher ───┼─ shard 1 ─ (row-major u64     ├─ router
+//!  TCP conn ─┘      │        │        └─ shard S-1  + weight cache)   ┘  (heap top-k,
+//!                 metrics   backend (XLA | native)                       merge)
+//!                    │
+//!                 id index: id → (shard, row), O(1) get/distance
 //! ```
+//!
+//! Storage layout: each shard owns a [`crate::sketch::SketchMatrix`] — one
+//! contiguous row-major `u64` arena plus a cached per-row Hamming weight —
+//! so a shard scan is a linear walk over one allocation. The per-shard
+//! top-k runs on the bounded max-heap in [`topk`] (one comparison per
+//! candidate against the current k-th best, no per-candidate allocation),
+//! and a dense global id index resolves `get`/`distance` lookups in O(1).
+//! `query_batch` requests amortise shard lock acquisition, worker spawn and
+//! per-query `|q̃|` precomputation across a whole batch of queries.
+//!
+//! Robustness: `k == 0` and malformed batch elements are rejected at the
+//! protocol layer with error responses; the top-k kernel itself treats
+//! `k == 0` as "no hits" and orders distances with `f64::total_cmp`, so a
+//! NaN estimate can neither panic a shard worker nor corrupt the merge.
 //!
 //! Backpressure: the batcher queue is bounded; when full, submitters block
 //! (TCP reads pause → kernel backpressure to clients).
+//!
+//! Benches: `bench_coordinator` (ingest policies, single + batched query
+//! scatter/gather) and `bench_topk` (arena+heap shard scan vs the seed's
+//! `Vec<BitVec>` insertion-sort scan).
 
 pub mod batcher;
 pub mod client;
@@ -23,7 +44,9 @@ pub mod protocol;
 pub mod router;
 pub mod server;
 pub mod store;
+pub mod topk;
 
 pub use batcher::{BatcherConfig, SketchBackend};
 pub use protocol::{Request, Response};
 pub use server::{Coordinator, CoordinatorConfig};
+pub use topk::TopK;

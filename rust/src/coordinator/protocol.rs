@@ -5,12 +5,21 @@
 //! {"op":"insert",  "vec":[0,3,0,…]}             → {"ok":true,"id":17}
 //! {"op":"insert_sparse","dim":4096,"idx":[…],"val":[…]}
 //! {"op":"query",   "vec":[…], "k":5}            → {"ok":true,"hits":[{"id":3,"dist":41.2},…]}
+//! {"op":"query_batch","k":5,"dim":4096,          ("dim" optional: validated
+//!  "queries":[{"idx":[…],"val":[…]} | {"vec":[…]},…]}  when present)
+//!                                               → {"ok":true,"results":[[{"id":…,"dist":…},…],…]}
 //! {"op":"distance","a":3,"b":9}                 → {"ok":true,"dist":57.9}
 //! {"op":"heatmap"}                              → {"ok":true,"n":…,"values":[…]}  (small corpora)
 //! {"op":"stats"}                                → {"ok":true, counters…}
 //! {"op":"ping"} / {"op":"shutdown"}
 //! ```
 //! Errors: `{"ok":false,"error":"…"}`.
+//!
+//! Validation happens here, before anything reaches the router: `k == 0`
+//! is rejected with an error response (the seed let it through and the
+//! top-k kernel underflowed `hits[k - 1]`, killing the shard worker — and,
+//! via the scatter/gather `join().unwrap()`, the whole connection), and
+//! `query_batch` elements are dimension-checked individually.
 
 use crate::data::CatVector;
 use crate::util::json::Json;
@@ -20,6 +29,7 @@ use anyhow::{bail, Result};
 pub enum Request {
     Insert { vec: CatVector },
     Query { vec: CatVector, k: usize },
+    QueryBatch { vecs: Vec<CatVector>, k: usize },
     Distance { a: usize, b: usize },
     Heatmap,
     Stats,
@@ -37,6 +47,7 @@ pub struct Hit {
 pub enum Response {
     Inserted { id: usize },
     Hits { hits: Vec<Hit> },
+    HitsBatch { results: Vec<Vec<Hit>> },
     Distance { dist: f64 },
     Heatmap { n: usize, values: Vec<f64> },
     Stats { fields: Vec<(String, f64)> },
@@ -45,19 +56,20 @@ pub enum Response {
     Error { message: String },
 }
 
-fn parse_vec(obj: &Json, expected_dim: usize) -> Result<CatVector> {
-    if let Some(arr) = obj.get("vec").and_then(|v| v.as_arr()) {
-        let dense: Vec<u16> = arr.iter().map(|x| x.as_f64().unwrap_or(0.0) as u16).collect();
-        if dense.len() != expected_dim {
-            bail!("vector dim {} != corpus dim {}", dense.len(), expected_dim);
-        }
-        return Ok(CatVector::from_dense(&dense));
+/// Dense `"vec": [..]` array → [`CatVector`]; length must equal the corpus
+/// dimension.
+fn parse_dense(arr: &[Json], expected_dim: usize) -> Result<CatVector> {
+    let dense: Vec<u16> = arr.iter().map(|x| x.as_f64().unwrap_or(0.0) as u16).collect();
+    if dense.len() != expected_dim {
+        bail!("vector dim {} != corpus dim {}", dense.len(), expected_dim);
     }
-    // sparse form
-    let dim = obj.req_usize("dim")?;
-    if dim != expected_dim {
-        bail!("vector dim {} != corpus dim {}", dim, expected_dim);
-    }
+    Ok(CatVector::from_dense(&dense))
+}
+
+/// Sparse `"idx"`/`"val"` arrays → [`CatVector`] with an already-validated
+/// `dim` — shared by the single-request sparse form and `query_batch`
+/// elements so coercion and validation cannot drift between them.
+fn parse_sparse_pairs(obj: &Json, dim: usize) -> Result<CatVector> {
     let idx = obj.req_arr("idx")?;
     let val = obj.req_arr("val")?;
     if idx.len() != val.len() {
@@ -76,6 +88,27 @@ fn parse_vec(obj: &Json, expected_dim: usize) -> Result<CatVector> {
     Ok(CatVector::from_pairs(dim, pairs))
 }
 
+fn parse_vec(obj: &Json, expected_dim: usize) -> Result<CatVector> {
+    if let Some(arr) = obj.get("vec").and_then(|v| v.as_arr()) {
+        return parse_dense(arr, expected_dim);
+    }
+    // sparse form
+    let dim = obj.req_usize("dim")?;
+    if dim != expected_dim {
+        bail!("vector dim {} != corpus dim {}", dim, expected_dim);
+    }
+    parse_sparse_pairs(obj, dim)
+}
+
+/// Parse and validate the `k` field (default 10, must be ≥ 1).
+fn parse_k(obj: &Json) -> Result<usize> {
+    let k = obj.get("k").and_then(|k| k.as_usize()).unwrap_or(10);
+    if k == 0 {
+        bail!("k must be >= 1");
+    }
+    Ok(k)
+}
+
 impl Request {
     pub fn from_json_line(line: &str, expected_dim: usize) -> Result<Request> {
         let obj = crate::util::json::parse(line)?;
@@ -86,8 +119,36 @@ impl Request {
             },
             "query" => Request::Query {
                 vec: parse_vec(&obj, expected_dim)?,
-                k: obj.get("k").and_then(|k| k.as_usize()).unwrap_or(10),
+                k: parse_k(&obj)?,
             },
+            "query_batch" => {
+                let k = parse_k(&obj)?;
+                let queries = obj.req_arr("queries")?;
+                // the top-level `dim` is advisory — sparse elements are
+                // corpus-dimensional by definition, dense elements carry
+                // their own length. Validate it when present on a
+                // non-empty batch (it is vacuous on an empty one:
+                // serializers emit 0 with no first vector to read it
+                // from), never require it.
+                if let Some(dim) = obj.get("dim").and_then(|v| v.as_usize()) {
+                    if !queries.is_empty() && dim != expected_dim {
+                        bail!("vector dim {} != corpus dim {}", dim, expected_dim);
+                    }
+                }
+                let vecs = queries
+                    .iter()
+                    .enumerate()
+                    .map(|(qi, q)| {
+                        if let Some(arr) = q.get("vec").and_then(|v| v.as_arr()) {
+                            parse_dense(arr, expected_dim)
+                        } else {
+                            parse_sparse_pairs(q, expected_dim)
+                        }
+                        .map_err(|e| e.context(format!("query {qi}")))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Request::QueryBatch { vecs, k }
+            }
             "distance" => Request::Distance {
                 a: obj.req_usize("a")?,
                 b: obj.req_usize("b")?,
@@ -133,6 +194,30 @@ impl Request {
                 ])
                 .to_string()
             }
+            Request::QueryBatch { vecs, k } => {
+                let dim = vecs.first().map(|v| v.dim()).unwrap_or(0);
+                let queries: Vec<Json> = vecs
+                    .iter()
+                    .map(|vec| {
+                        let (idx, val): (Vec<f64>, Vec<f64>) = vec
+                            .entries()
+                            .iter()
+                            .map(|&(i, v)| (i as f64, v as f64))
+                            .unzip();
+                        Json::obj(vec![
+                            ("idx", Json::from_f64s(&idx)),
+                            ("val", Json::from_f64s(&val)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("op", Json::Str("query_batch".into())),
+                    ("dim", Json::Num(dim as f64)),
+                    ("k", Json::Num(*k as f64)),
+                    ("queries", Json::Arr(queries)),
+                ])
+                .to_string()
+            }
             Request::Distance { a, b } => Json::obj(vec![
                 ("op", Json::Str("distance".into())),
                 ("a", Json::Num(*a as f64)),
@@ -166,6 +251,25 @@ impl Response {
                     })
                     .collect();
                 Json::obj(vec![("ok", Json::Bool(true)), ("hits", Json::Arr(arr))]).to_string()
+            }
+            Response::HitsBatch { results } => {
+                let arr = results
+                    .iter()
+                    .map(|hits| {
+                        Json::Arr(
+                            hits.iter()
+                                .map(|h| {
+                                    Json::obj(vec![
+                                        ("id", Json::Num(h.id as f64)),
+                                        ("dist", Json::Num(h.dist)),
+                                    ])
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect();
+                Json::obj(vec![("ok", Json::Bool(true)), ("results", Json::Arr(arr))])
+                    .to_string()
             }
             Response::Distance { dist } => {
                 Json::obj(vec![("ok", Json::Bool(true)), ("dist", Json::Num(*dist))]).to_string()
@@ -216,14 +320,24 @@ impl Response {
         if let Some(id) = obj.get("id").and_then(|v| v.as_usize()) {
             return Ok(Response::Inserted { id });
         }
+        let parse_hits = |hits: &[Json]| -> Vec<Hit> {
+            hits.iter()
+                .map(|h| Hit {
+                    id: h.get("id").and_then(|v| v.as_usize()).unwrap_or(0),
+                    dist: h.get("dist").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                })
+                .collect()
+        };
         if let Some(hits) = obj.get("hits").and_then(|v| v.as_arr()) {
             return Ok(Response::Hits {
-                hits: hits
+                hits: parse_hits(hits),
+            });
+        }
+        if let Some(results) = obj.get("results").and_then(|v| v.as_arr()) {
+            return Ok(Response::HitsBatch {
+                results: results
                     .iter()
-                    .map(|h| Hit {
-                        id: h.get("id").and_then(|v| v.as_usize()).unwrap_or(0),
-                        dist: h.get("dist").and_then(|v| v.as_f64()).unwrap_or(0.0),
-                    })
+                    .map(|hits| parse_hits(hits.as_arr().unwrap_or(&[])))
                     .collect(),
             });
         }
@@ -282,6 +396,69 @@ mod tests {
     }
 
     #[test]
+    fn request_roundtrip_query_batch() {
+        let vecs = vec![
+            CatVector::from_dense(&[1, 0, 2]),
+            CatVector::from_dense(&[0, 3, 0]),
+        ];
+        let req = Request::QueryBatch { vecs, k: 4 };
+        let back = Request::from_json_line(&req.to_json_line(), 3).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn k_zero_rejected_at_protocol_layer() {
+        // Regression: k == 0 used to reach the top-k kernel and underflow
+        // hits[k - 1], panicking the coordinator's shard workers.
+        let q = r#"{"op":"query","dim":3,"idx":[0],"val":[1],"k":0}"#;
+        let err = Request::from_json_line(q, 3).unwrap_err();
+        assert!(err.to_string().contains("k must be >= 1"), "{err:#}");
+        let qb = r#"{"op":"query_batch","dim":3,"k":0,"queries":[{"idx":[0],"val":[1]}]}"#;
+        assert!(Request::from_json_line(qb, 3).is_err());
+    }
+
+    #[test]
+    fn query_batch_empty_roundtrips() {
+        // an empty batch serializes dim 0 (no first vector to read it
+        // from) and must still parse — the reply is simply no results
+        let req = Request::QueryBatch {
+            vecs: Vec::new(),
+            k: 2,
+        };
+        let back = Request::from_json_line(&req.to_json_line(), 3).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn query_batch_accepts_dense_elements() {
+        let q = r#"{"op":"query_batch","dim":3,"k":2,"queries":[{"vec":[1,0,2]},{"idx":[1],"val":[3]}]}"#;
+        match Request::from_json_line(q, 3).unwrap() {
+            Request::QueryBatch { vecs, k: 2 } => {
+                assert_eq!(vecs[0], CatVector::from_dense(&[1, 0, 2]));
+                assert_eq!(vecs[1], CatVector::from_pairs(3, vec![(1, 3)]));
+            }
+            other => panic!("{other:?}"),
+        }
+        // an all-dense batch needs no top-level dim at all (mirrors the
+        // single-query dense form)
+        let no_dim = r#"{"op":"query_batch","k":2,"queries":[{"vec":[1,0,2]}]}"#;
+        assert!(Request::from_json_line(no_dim, 3).is_ok());
+    }
+
+    #[test]
+    fn query_batch_validates_per_query() {
+        // wrong corpus dim
+        let bad_dim = r#"{"op":"query_batch","dim":9,"k":2,"queries":[{"idx":[0],"val":[1]}]}"#;
+        assert!(Request::from_json_line(bad_dim, 3).is_err());
+        // ragged idx/val inside one element
+        let ragged = r#"{"op":"query_batch","dim":3,"k":2,"queries":[{"idx":[0,1],"val":[1]}]}"#;
+        assert!(Request::from_json_line(ragged, 3).is_err());
+        // missing idx
+        let missing = r#"{"op":"query_batch","dim":3,"k":2,"queries":[{"val":[1]}]}"#;
+        assert!(Request::from_json_line(missing, 3).is_err());
+    }
+
+    #[test]
     fn dense_insert_form_accepted() {
         let r = Request::from_json_line(r#"{"op":"insert","vec":[0,2,0,1]}"#, 4).unwrap();
         match r {
@@ -315,6 +492,13 @@ mod tests {
                 hits: vec![
                     Hit { id: 1, dist: 2.5 },
                     Hit { id: 9, dist: 11.0 },
+                ],
+            },
+            Response::HitsBatch {
+                results: vec![
+                    vec![Hit { id: 3, dist: 0.5 }],
+                    vec![],
+                    vec![Hit { id: 0, dist: 1.0 }, Hit { id: 8, dist: 4.5 }],
                 ],
             },
             Response::Distance { dist: 3.25 },

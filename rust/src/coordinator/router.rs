@@ -1,49 +1,105 @@
 //! Query router: scatter a query sketch to every shard, compute local
-//! top-k by estimated Hamming distance (occupancy-inversion Cham), merge.
+//! top-k by estimated Hamming distance (occupancy-inversion Cham) over the
+//! shard's contiguous arena, merge.
+//!
+//! The per-shard scan borrows arena rows as `&[u64]` and feeds them to the
+//! word-slice popcount kernels — no clone, no pointer chase — and selects
+//! with the bounded heap in [`super::topk`]: one comparison against the
+//! current k-th-best per candidate, O(log k) only on improvement.
+//! Candidate weights come from the arena's per-row cache, so each
+//! candidate costs exactly one popcount pass (the AND with the query).
+//!
+//! [`topk_batch`] amortises the scatter: one shard-lock acquisition and one
+//! set of spawned workers serve a whole batch of queries, with per-query
+//! `|q̃|` precomputed once.
 
 use super::store::{Shard, ShardedStore};
+use super::topk::TopK;
 use crate::coordinator::protocol::Hit;
+use crate::sketch::bitvec::and_count_words;
 use crate::sketch::cham::binhamming_from_stats;
 use crate::sketch::BitVec;
 
-/// Local top-k on one shard. Returns (id, estimated categorical HD).
+/// Local top-k on one shard. Returns (id, estimated categorical HD),
+/// ascending. `k == 0` returns empty.
 fn shard_topk(shard: &Shard, query: &BitVec, wq: f64, k: usize, d: usize) -> Vec<Hit> {
-    let mut hits: Vec<Hit> = Vec::with_capacity(shard.ids.len().min(k + 1));
-    for (id, sk) in shard.ids.iter().zip(&shard.sketches) {
-        let ip = query.and_count(sk) as f64;
-        let dist = 2.0 * binhamming_from_stats(wq, sk.count_ones() as f64, ip, d);
-        // keep a bounded sorted buffer (k is small; insertion sort wins)
-        if hits.len() < k {
-            hits.push(Hit { id: *id, dist });
-            hits.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
-        } else if dist < hits[k - 1].dist {
-            hits[k - 1] = Hit { id: *id, dist };
-            hits.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
-        }
+    let mut best = TopK::new(k);
+    let query_words = query.words();
+    for (row, &id) in shard.ids.iter().enumerate() {
+        let ip = and_count_words(query_words, shard.rows.row(row)) as f64;
+        let dist = 2.0 * binhamming_from_stats(wq, shard.rows.weight(row) as f64, ip, d);
+        best.offer(id, dist);
     }
-    hits
+    best.into_sorted_hits()
 }
 
-/// Scatter/gather top-k across all shards (parallel, one thread per shard).
-pub fn topk(store: &ShardedStore, query: &BitVec, k: usize) -> Vec<Hit> {
-    let d = store.sketch_dim();
-    let wq = query.count_ones() as f64;
-    let partials = store.par_map_shards(|shard| shard_topk(shard, query, wq, k, d));
+/// Merge per-shard partials for one query: ascending by `(dist, id)` under
+/// the NaN-total order, deduplicated by id, truncated to `k`.
+///
+/// The dedup covers a scatter racing a `rebalance`: shard workers take
+/// their shard locks independently, so a row moved between shards mid-
+/// scatter can be scanned by both workers. Its distance is bitwise
+/// identical in both (same words, same cached weight, same query), so the
+/// duplicates are adjacent after the sort. (The symmetric race — the row
+/// scanned by neither worker — means an in-flight query can transiently
+/// miss a mid-move candidate; it is never duplicated or corrupted.)
+fn merge(partials: Vec<Vec<Hit>>, k: usize) -> Vec<Hit> {
     let mut merged: Vec<Hit> = partials.into_iter().flatten().collect();
-    merged.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+    merged.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id)));
+    merged.dedup_by(|a, b| a.id == b.id);
     merged.truncate(k);
     merged
 }
 
-/// Estimated distance between two stored points.
+/// Scatter/gather top-k across all shards (parallel, one thread per shard).
+/// `k == 0` is a no-op returning no hits — never a panic.
+pub fn topk(store: &ShardedStore, query: &BitVec, k: usize) -> Vec<Hit> {
+    if k == 0 {
+        return Vec::new();
+    }
+    let d = store.sketch_dim();
+    let wq = query.count_ones() as f64;
+    let partials = store.par_map_shards(|shard| shard_topk(shard, query, wq, k, d));
+    merge(partials, k)
+}
+
+/// Batched scatter/gather: every shard worker answers all queries in one
+/// visit, so shard lock acquisition, thread spawn and the `|q̃|`
+/// precomputation are paid once per batch instead of once per query.
+/// Returns one ascending hit list per query, in query order.
+pub fn topk_batch(store: &ShardedStore, queries: &[BitVec], k: usize) -> Vec<Vec<Hit>> {
+    if k == 0 || queries.is_empty() {
+        return queries.iter().map(|_| Vec::new()).collect();
+    }
+    let d = store.sketch_dim();
+    let wqs: Vec<f64> = queries.iter().map(|q| q.count_ones() as f64).collect();
+    // per_shard[s][q] = shard s's top-k for query q
+    let mut per_shard: Vec<Vec<Vec<Hit>>> = store.par_map_shards(|shard| {
+        queries
+            .iter()
+            .zip(&wqs)
+            .map(|(q, &wq)| shard_topk(shard, q, wq, k, d))
+            .collect()
+    });
+    (0..queries.len())
+        .map(|qi| {
+            // move each shard's partial out rather than cloning it
+            merge(
+                per_shard
+                    .iter_mut()
+                    .map(|shard| std::mem::take(&mut shard[qi]))
+                    .collect(),
+                k,
+            )
+        })
+        .collect()
+}
+
+/// Estimated distance between two stored points — O(1) id resolution via
+/// the store's index, computed on borrowed arena rows.
 pub fn distance(store: &ShardedStore, a: usize, b: usize) -> Option<f64> {
-    let (sa, sb) = (store.get(a)?, store.get(b)?);
-    Some(2.0 * binhamming_from_stats(
-        sa.count_ones() as f64,
-        sb.count_ones() as f64,
-        sa.and_count(&sb) as f64,
-        store.sketch_dim(),
-    ))
+    let (wa, wb, ip) = store.pair_stats(a, b)?;
+    Some(2.0 * binhamming_from_stats(wa as f64, wb as f64, ip as f64, store.sketch_dim()))
 }
 
 #[cfg(test)]
@@ -93,6 +149,21 @@ mod tests {
     }
 
     #[test]
+    fn topk_k_zero_returns_empty_not_panic() {
+        // Regression: the seed kernel indexed hits[k - 1] and underflowed,
+        // killing the shard worker and the coordinator with it.
+        let mut rng = Xoshiro256::new(6);
+        let pts: Vec<BitVec> = (0..10)
+            .map(|_| BitVec::from_indices(64, rng.sample_indices(64, 10)))
+            .collect();
+        let store = store_with(&pts);
+        assert!(topk(&store, &pts[0], 0).is_empty());
+        let batched = topk_batch(&store, &pts[..3], 0);
+        assert_eq!(batched.len(), 3);
+        assert!(batched.iter().all(|h| h.is_empty()));
+    }
+
+    #[test]
     fn router_never_drops_or_duplicates() {
         let mut rng = Xoshiro256::new(3);
         let pts: Vec<BitVec> = (0..25)
@@ -103,6 +174,25 @@ mod tests {
         let mut ids: Vec<usize> = hits.iter().map(|h| h.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batched_queries_match_single_queries() {
+        let mut rng = Xoshiro256::new(5);
+        let d = 128;
+        let pts: Vec<BitVec> = (0..30)
+            .map(|_| BitVec::from_indices(d, rng.sample_indices(d, 20)))
+            .collect();
+        let store = store_with(&pts);
+        let queries: Vec<BitVec> = (0..7)
+            .map(|_| BitVec::from_indices(d, rng.sample_indices(d, 20)))
+            .collect();
+        let batched = topk_batch(&store, &queries, 4);
+        assert_eq!(batched.len(), queries.len());
+        for (q, batch_hits) in queries.iter().zip(&batched) {
+            let single = topk(&store, q, 4);
+            assert_eq!(&single, batch_hits);
+        }
     }
 
     #[test]
@@ -117,5 +207,38 @@ mod tests {
         let d01 = distance(&store, 0, 1).unwrap();
         let d10 = distance(&store, 1, 0).unwrap();
         assert!((d01 - d10).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_dedups_a_row_seen_by_two_shards() {
+        // mid-rebalance a moved row can be scanned by both its old and new
+        // shard; both see identical (id, dist) and the merge must keep one
+        let partials = vec![
+            vec![Hit { id: 4, dist: 1.5 }, Hit { id: 0, dist: 2.0 }],
+            vec![Hit { id: 4, dist: 1.5 }, Hit { id: 9, dist: 3.0 }],
+        ];
+        let merged = merge(partials, 3);
+        let ids: Vec<usize> = merged.iter().map(|h| h.id).collect();
+        assert_eq!(ids, vec![4, 0, 9]);
+    }
+
+    #[test]
+    fn merge_is_nan_safe() {
+        // Adversarial partials containing NaN distances must merge without
+        // panicking, with NaN ordered after every finite hit.
+        let partials = vec![
+            vec![
+                Hit { id: 0, dist: 2.0 },
+                Hit {
+                    id: 1,
+                    dist: f64::NAN,
+                },
+            ],
+            vec![Hit { id: 2, dist: 1.0 }],
+        ];
+        let merged = merge(partials, 3);
+        assert_eq!(merged[0].id, 2);
+        assert_eq!(merged[1].id, 0);
+        assert!(merged[2].dist.is_nan());
     }
 }

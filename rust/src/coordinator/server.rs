@@ -138,6 +138,18 @@ impl Coordinator {
                 self.metrics.record_query_latency(sw.elapsed_secs());
                 Response::Hits { hits }
             }
+            Request::QueryBatch { vecs, k } => {
+                let sw = Stopwatch::start();
+                let n = vecs.len();
+                self.metrics.queries.fetch_add(n as u64, Ordering::Relaxed);
+                self.metrics.query_batches.fetch_add(1, Ordering::Relaxed);
+                let qs: Vec<_> = vecs.iter().map(|v| self.sketcher.sketch(v)).collect();
+                let results = router::topk_batch(&self.store, &qs, k);
+                // per-query latency, so single and batched queries compare
+                self.metrics
+                    .record_query_latency(sw.elapsed_secs() / n.max(1) as f64);
+                Response::HitsBatch { results }
+            }
             Request::Distance { a, b } => {
                 self.metrics.distances.fetch_add(1, Ordering::Relaxed);
                 match router::distance(&self.store, a, b) {
@@ -149,18 +161,22 @@ impl Coordinator {
             }
             Request::Heatmap => {
                 self.metrics.heatmaps.fetch_add(1, Ordering::Relaxed);
-                let snap = self.store.snapshot_ordered();
-                if snap.len() > self.config.heatmap_limit {
+                // id-ordered arena snapshot: the all-pairs scan runs over
+                // borrowed rows, no per-sketch BitVec in the hot loop. The
+                // size guard runs on the snapshot itself (store.len()
+                // counts allocated ids, including batches still in flight,
+                // and checking before snapshotting would race inserts).
+                let matrix = self.store.snapshot_matrix();
+                if matrix.len() > self.config.heatmap_limit {
                     return Response::Error {
                         message: format!(
                             "corpus {} exceeds heatmap limit {}",
-                            snap.len(),
+                            matrix.len(),
                             self.config.heatmap_limit
                         ),
                     };
                 }
-                let sketches: Vec<_> = snap.into_iter().map(|(_, s)| s).collect();
-                let hm = crate::analysis::heatmap::Heatmap::from_sketches_occupancy(&sketches, 2.0);
+                let hm = crate::analysis::heatmap::Heatmap::from_matrix_occupancy(&matrix, 2.0);
                 Response::Heatmap {
                     n: hm.n,
                     values: hm.values,
@@ -284,6 +300,50 @@ mod tests {
                 assert_eq!(hits.len(), 3);
                 assert!(hits[0].dist < 1e-9, "{hits:?}");
             }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn batched_query_matches_single_queries() {
+        let c = Coordinator::new(test_config());
+        let mut rng = Xoshiro256::new(7);
+        let vecs: Vec<CatVector> = (0..10)
+            .map(|_| CatVector::random(600, 40, 10, &mut rng))
+            .collect();
+        for v in &vecs {
+            c.handle_request(Request::Insert { vec: v.clone() });
+        }
+        let probes: Vec<CatVector> = vecs[..4].to_vec();
+        let batched = match c.handle_request(Request::QueryBatch {
+            vecs: probes.clone(),
+            k: 3,
+        }) {
+            Response::HitsBatch { results } => results,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(batched.len(), 4);
+        for (probe, hits) in probes.iter().zip(&batched) {
+            match c.handle_request(Request::Query {
+                vec: probe.clone(),
+                k: 3,
+            }) {
+                Response::Hits { hits: single } => assert_eq!(&single, hits),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn query_k_zero_in_process_returns_empty() {
+        // The protocol layer rejects k == 0 on the wire; a programmatic
+        // request must degrade to "no hits", never a panic.
+        let c = Coordinator::new(test_config());
+        let mut rng = Xoshiro256::new(8);
+        let v = CatVector::random(600, 40, 10, &mut rng);
+        c.handle_request(Request::Insert { vec: v.clone() });
+        match c.handle_request(Request::Query { vec: v, k: 0 }) {
+            Response::Hits { hits } => assert!(hits.is_empty()),
             other => panic!("{other:?}"),
         }
     }

@@ -1,22 +1,51 @@
-//! Sharded in-memory sketch store.
+//! Sharded in-memory sketch store over contiguous arenas.
 //!
-//! Sketches are spread across `S` shards. Placement is *least-loaded*
-//! (size-balanced) so scatter/gather query work divides evenly; ids are
-//! global and never reused. Each shard keeps the packed sketches
-//! contiguously for cache-friendly scans.
+//! Each shard owns a [`SketchMatrix`]: one row-major `u64` word arena per
+//! shard (plus a cached per-row Hamming weight), so a shard scan walks a
+//! single allocation instead of chasing one heap pointer per sketch.
+//! Placement is least-loaded by *reserved* point counts: each batch picks
+//! the shard with the smallest atomic counter and bumps it by the batch
+//! size before placing a single row. The reservation is visible to every
+//! later scan immediately, so a single client's inserts spread evenly
+//! across variable-size batches and concurrent batchers cannot pile onto
+//! one shard the way the old read-then-write scan (which only observed a
+//! shard's size after its batch fully landed) allowed.
+//!
+//! A global id index (`id → (shard, row)`, dense because ids are assigned
+//! by a monotone counter and never reused) makes [`ShardedStore::get`] and
+//! [`ShardedStore::pair_stats`] O(1) instead of a linear scan over every
+//! shard.
+//!
+//! Lock order (deadlock freedom): the id index is always acquired *before*
+//! any shard lock, and multiple shard locks are always acquired in
+//! ascending shard order. Scan paths (`map_shards`/`par_map_shards`) touch
+//! only shard locks.
 
-use crate::sketch::BitVec;
+use crate::sketch::bitvec::and_count_words;
+use crate::sketch::{BitVec, SketchMatrix};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::RwLock;
 
+/// `(shard, row)` index entry; `VACANT` marks an id whose batch is still
+/// being placed (visible only to concurrent readers mid-insert).
+type Slot = (u32, u32);
+const VACANT: Slot = (u32::MAX, u32::MAX);
+
 pub struct Shard {
     pub ids: Vec<usize>,
-    pub sketches: Vec<BitVec>,
+    pub rows: SketchMatrix,
 }
 
 pub struct ShardedStore {
     shards: Vec<RwLock<Shard>>,
+    /// Dense id → (shard, row). Guarded by its own lock; see the module
+    /// docs for the global lock order.
+    index: RwLock<Vec<Slot>>,
     next_id: AtomicUsize,
+    /// Reserved per-shard point counts (see module docs): bumped at
+    /// placement time, before the rows land, and kept exact by
+    /// `rebalance`. Placement heuristic only — `shard_sizes` is truth.
+    reserved: Vec<AtomicUsize>,
     sketch_dim: usize,
 }
 
@@ -27,11 +56,13 @@ impl ShardedStore {
                 .map(|_| {
                     RwLock::new(Shard {
                         ids: Vec::new(),
-                        sketches: Vec::new(),
+                        rows: SketchMatrix::new(sketch_dim),
                     })
                 })
                 .collect(),
+            index: RwLock::new(Vec::new()),
             next_id: AtomicUsize::new(0),
+            reserved: (0..num_shards.max(1)).map(|_| AtomicUsize::new(0)).collect(),
             sketch_dim,
         }
     }
@@ -52,38 +83,95 @@ impl ShardedStore {
         self.len() == 0
     }
 
-    /// Insert a batch of sketches; returns their assigned global ids.
-    /// The whole batch lands on the currently least-loaded shard (cheap
-    /// balancing with batch locality).
+    /// Insert a batch of sketches; returns their assigned global ids. The
+    /// batch lands on the shard with the fewest *reserved* points, and the
+    /// batch size is reserved before any row is placed — so variable-size
+    /// batches stay point-balanced (not merely batch-count-balanced) and
+    /// concurrent batchers steer away from each other immediately instead
+    /// of all observing the same stale minimum.
     pub fn insert_batch(&self, sketches: Vec<BitVec>) -> Vec<usize> {
         let k = sketches.len();
-        let ids: Vec<usize> = (0..k)
-            .map(|_| self.next_id.fetch_add(1, Ordering::Relaxed))
-            .collect();
+        if k == 0 {
+            return Vec::new();
+        }
+        let start = self.next_id.fetch_add(k, Ordering::Relaxed);
+        let ids: Vec<usize> = (start..start + k).collect();
         let target = self
-            .shards
+            .reserved
             .iter()
             .enumerate()
-            .min_by_key(|(_, s)| s.read().unwrap().ids.len())
+            .min_by_key(|(_, r)| r.load(Ordering::Relaxed))
             .map(|(i, _)| i)
             .unwrap_or(0);
+        self.reserved[target].fetch_add(k, Ordering::Relaxed);
+        let mut index = self.index.write().unwrap();
+        if index.len() < start + k {
+            index.resize(start + k, VACANT);
+        }
         let mut shard = self.shards[target].write().unwrap();
-        shard.ids.extend_from_slice(&ids);
-        shard.sketches.extend(sketches);
+        for (offset, sketch) in sketches.iter().enumerate() {
+            let row = shard.rows.len() as u32;
+            shard.ids.push(start + offset);
+            shard.rows.push(sketch);
+            index[start + offset] = (target as u32, row);
+        }
         ids
     }
 
-    /// Fetch a sketch by global id (linear over shards, binary-search-free:
-    /// ids within a shard are appended in order but batches interleave, so
-    /// we scan — distance lookups are rare relative to queries).
-    pub fn get(&self, id: usize) -> Option<BitVec> {
-        for shard in &self.shards {
-            let s = shard.read().unwrap();
-            if let Some(pos) = s.ids.iter().position(|&x| x == id) {
-                return Some(s.sketches[pos].clone());
-            }
+    /// Resolve an id to its current `(shard, row)` in O(1).
+    pub fn locate(&self, id: usize) -> Option<(usize, usize)> {
+        let index = self.index.read().unwrap();
+        match index.get(id) {
+            Some(&(s, r)) if (s, r) != VACANT => Some((s as usize, r as usize)),
+            _ => None,
         }
-        None
+    }
+
+    /// Fetch a sketch by global id — an index lookup plus one row copy,
+    /// O(1) in the corpus size.
+    pub fn get(&self, id: usize) -> Option<BitVec> {
+        let index = self.index.read().unwrap();
+        match index.get(id) {
+            Some(&(s, r)) if (s, r) != VACANT => {
+                let shard = self.shards[s as usize].read().unwrap();
+                Some(shard.rows.row_bitvec(r as usize))
+            }
+            _ => None,
+        }
+    }
+
+    /// Pairwise estimator inputs `(|ũ|, |ṽ|, ⟨ũ,ṽ⟩)` for two stored ids,
+    /// computed on borrowed arena rows — no sketch is cloned.
+    pub fn pair_stats(&self, a: usize, b: usize) -> Option<(usize, usize, usize)> {
+        let index = self.index.read().unwrap();
+        let &(sa, ra) = index.get(a)?;
+        let &(sb, rb) = index.get(b)?;
+        if (sa, ra) == VACANT || (sb, rb) == VACANT {
+            return None;
+        }
+        let (sa, ra, sb, rb) = (sa as usize, ra as usize, sb as usize, rb as usize);
+        if sa == sb {
+            let shard = self.shards[sa].read().unwrap();
+            return Some((
+                shard.rows.weight(ra),
+                shard.rows.weight(rb),
+                and_count_words(shard.rows.row(ra), shard.rows.row(rb)),
+            ));
+        }
+        // distinct shards: acquire read locks in ascending shard order
+        let (lo, hi) = (sa.min(sb), sa.max(sb));
+        let first = self.shards[lo].read().unwrap();
+        let second = self.shards[hi].read().unwrap();
+        let (shard_a, shard_b) = if sa == lo {
+            (&first, &second)
+        } else {
+            (&second, &first)
+        };
+        Some((
+            shard_a.rows.weight(ra),
+            shard_b.rows.weight(rb),
+            and_count_words(shard_a.rows.row(ra), shard_b.rows.row(rb)),
+        ))
     }
 
     /// Run `f` over every shard (read-locked) and collect results.
@@ -110,14 +198,46 @@ impl ShardedStore {
     }
 
     /// All sketches in id order (testing/heatmaps on small corpora).
+    ///
+    /// Holds the index read lock for the duration: a concurrent rebalance
+    /// (which holds the index *write* lock for every move) can therefore
+    /// never shuttle a row from an already-read shard into a
+    /// not-yet-read one mid-walk — no duplicated or dropped rows.
     pub fn snapshot_ordered(&self) -> Vec<(usize, BitVec)> {
+        let _index = self.index.read().unwrap();
         let mut all: Vec<(usize, BitVec)> = Vec::with_capacity(self.len());
         for shard in &self.shards {
             let s = shard.read().unwrap();
-            all.extend(s.ids.iter().copied().zip(s.sketches.iter().cloned()));
+            all.extend(
+                s.ids
+                    .iter()
+                    .enumerate()
+                    .map(|(row, &id)| (id, s.rows.row_bitvec(row))),
+            );
         }
         all.sort_by_key(|&(id, _)| id);
         all
+    }
+
+    /// Id-ordered snapshot packed into one arena — the input the all-pairs
+    /// analysis paths scan directly. Rows are copied arena-to-arena with
+    /// their cached weights: no per-row `BitVec` allocation, no popcount.
+    /// Same consistency protocol as [`ShardedStore::snapshot_ordered`]:
+    /// index read lock first, then all shard read locks in ascending order.
+    pub fn snapshot_matrix(&self) -> SketchMatrix {
+        let _index = self.index.read().unwrap();
+        let guards: Vec<_> = self.shards.iter().map(|s| s.read().unwrap()).collect();
+        let n: usize = guards.iter().map(|g| g.ids.len()).sum();
+        let mut order: Vec<(usize, usize, usize)> = Vec::with_capacity(n);
+        for (si, g) in guards.iter().enumerate() {
+            order.extend(g.ids.iter().enumerate().map(|(ri, &id)| (id, si, ri)));
+        }
+        order.sort_unstable_by_key(|&(id, _, _)| id);
+        let mut m = SketchMatrix::with_row_capacity(self.sketch_dim, order.len());
+        for (_, si, ri) in order {
+            m.push_row(guards[si].rows.row(ri), guards[si].rows.weight(ri) as u32);
+        }
+        m
     }
 
     /// Shard occupancy (balance diagnostics / rebalance tests).
@@ -126,10 +246,14 @@ impl ShardedStore {
     }
 
     /// Rebalance: move whole trailing runs from over-full to under-full
-    /// shards until max-min ≤ tolerance. Returns number of moved sketches.
+    /// shards until max-min ≤ tolerance, keeping the id index consistent.
+    /// Returns number of moved sketches.
     pub fn rebalance(&self, tolerance: usize) -> usize {
         let mut moved = 0;
         loop {
+            // index lock first (global lock order), so lookups never see a
+            // half-moved row.
+            let mut index = self.index.write().unwrap();
             let sizes = self.shard_sizes();
             let (max_i, &max_v) = sizes
                 .iter()
@@ -145,17 +269,29 @@ impl ShardedStore {
                 return moved;
             }
             let take = (max_v - min_v) / 2;
-            // lock ordering by index avoids deadlock
+            // shard locks in ascending order (see module docs)
             let (lo, hi) = (max_i.min(min_i), max_i.max(min_i));
-            let (first, second) = (self.shards[lo].write().unwrap(), self.shards[hi].write().unwrap());
-            let (mut src, mut dst) = if max_i == lo { (first, second) } else { (second, first) };
+            let (first, second) = (
+                self.shards[lo].write().unwrap(),
+                self.shards[hi].write().unwrap(),
+            );
+            let (mut src, mut dst) = if max_i == lo {
+                (first, second)
+            } else {
+                (second, first)
+            };
+            let mut moved_here = 0;
             for _ in 0..take {
-                if let (Some(id), Some(sk)) = (src.ids.pop(), src.sketches.pop()) {
-                    dst.ids.push(id);
-                    dst.sketches.push(sk);
-                    moved += 1;
-                }
+                let Some(id) = src.ids.pop() else { break };
+                src.rows.move_last_row_to(&mut dst.rows);
+                dst.ids.push(id);
+                index[id] = (min_i as u32, (dst.ids.len() - 1) as u32);
+                moved_here += 1;
             }
+            // keep the placement reservations exact across moves
+            self.reserved[max_i].fetch_sub(moved_here, Ordering::Relaxed);
+            self.reserved[min_i].fetch_add(moved_here, Ordering::Relaxed);
+            moved += moved_here;
         }
     }
 }
@@ -193,6 +329,28 @@ mod tests {
         assert_eq!(store.get(ids[0]).unwrap(), a);
         assert_eq!(store.get(ids[1]).unwrap(), b);
         assert!(store.get(999).is_none());
+        assert!(store.locate(ids[0]).is_some());
+        assert!(store.locate(999).is_none());
+    }
+
+    #[test]
+    fn pair_stats_match_bitvec_ops() {
+        let store = ShardedStore::new(3, 128);
+        let mut rng = Xoshiro256::new(7);
+        let pts: Vec<BitVec> = (0..9).map(|_| sk(&mut rng, 128)).collect();
+        let mut ids = Vec::new();
+        for p in pts.chunks(2) {
+            ids.extend(store.insert_batch(p.to_vec()));
+        }
+        for i in 0..pts.len() {
+            for j in 0..pts.len() {
+                let (wa, wb, ip) = store.pair_stats(ids[i], ids[j]).unwrap();
+                assert_eq!(wa, pts[i].count_ones());
+                assert_eq!(wb, pts[j].count_ones());
+                assert_eq!(ip, pts[i].and_count(&pts[j]));
+            }
+        }
+        assert!(store.pair_stats(0, 999).is_none());
     }
 
     #[test]
@@ -208,10 +366,72 @@ mod tests {
     }
 
     #[test]
+    fn single_client_batches_spread() {
+        // Regression for the seed's least-loaded scan, which observed a
+        // shard's size only after its batch fully landed: a sequence of
+        // equal-size batches from one client must stripe across shards.
+        let store = ShardedStore::new(3, 16);
+        let mut rng = Xoshiro256::new(9);
+        for _ in 0..9 {
+            store.insert_batch((0..4).map(|_| sk(&mut rng, 16)).collect());
+        }
+        assert_eq!(store.shard_sizes(), vec![12, 12, 12]);
+    }
+
+    #[test]
+    fn variable_size_batches_stay_point_balanced() {
+        // The dynamic batcher interleaves deadline flushes (tiny) with
+        // size flushes (large). Placement must balance *points*, not
+        // batch counts — batch-count round-robin would send every large
+        // batch to one shard here (diff 60), reservation keeps the gap
+        // within one max batch.
+        let store = ShardedStore::new(2, 16);
+        let mut rng = Xoshiro256::new(10);
+        for _ in 0..10 {
+            store.insert_batch(vec![sk(&mut rng, 16)]);
+            store.insert_batch((0..7).map(|_| sk(&mut rng, 16)).collect());
+        }
+        let sizes = store.shard_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 80);
+        let (max, min) = (*sizes.iter().max().unwrap(), *sizes.iter().min().unwrap());
+        assert!(max - min <= 7, "{sizes:?}");
+    }
+
+    #[test]
+    fn concurrent_inserters_stay_balanced() {
+        // Regression for the racy read-then-write placement: concurrent
+        // batchers used to observe the same "least-loaded" shard and all
+        // pile onto it. Reservations are bumped before rows land, so later
+        // scans steer away immediately.
+        let store = ShardedStore::new(4, 32);
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let store = &store;
+                scope.spawn(move || {
+                    let mut rng = Xoshiro256::new(100 + t);
+                    for _ in 0..6 {
+                        store.insert_batch((0..4).map(|_| sk(&mut rng, 32)).collect());
+                    }
+                });
+            }
+        });
+        let sizes = store.shard_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 8 * 6 * 4);
+        let (max, min) = (
+            *sizes.iter().max().unwrap(),
+            *sizes.iter().min().unwrap(),
+        );
+        // 48 batches over 4 shards: reservation keeps occupancy level to
+        // within a batch or two (a simultaneous-scan tie can double-place
+        // one round; the next scans correct it).
+        assert!(max - min <= 8, "{sizes:?}");
+    }
+
+    #[test]
     fn rebalance_conserves_and_levels() {
         let store = ShardedStore::new(2, 16);
         let mut rng = Xoshiro256::new(4);
-        // imbalance: one big batch to one shard
+        // imbalance: one big batch lands on a single shard
         store.insert_batch((0..20).map(|_| sk(&mut rng, 16)).collect());
         let before: usize = store.shard_sizes().iter().sum();
         let moved = store.rebalance(1);
@@ -224,6 +444,39 @@ mod tests {
         assert_eq!(snap.len(), 20);
         for w in snap.windows(2) {
             assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn rebalance_keeps_index_consistent() {
+        let store = ShardedStore::new(3, 64);
+        let mut rng = Xoshiro256::new(5);
+        let pts: Vec<BitVec> = (0..30).map(|_| sk(&mut rng, 64)).collect();
+        let ids = store.insert_batch(pts.clone());
+        store.rebalance(1);
+        // O(1) lookups must still resolve every id to its (possibly moved)
+        // row, and return the original sketch.
+        for (id, pt) in ids.iter().zip(&pts) {
+            assert_eq!(store.get(*id).as_ref(), Some(pt), "id {id}");
+            let (s, r) = store.locate(*id).unwrap();
+            // the shard's own id column agrees with the index
+            let shard_ids = store.map_shards(|sh| sh.ids.clone());
+            assert_eq!(shard_ids[s][r], *id);
+        }
+    }
+
+    #[test]
+    fn snapshot_matrix_is_id_ordered() {
+        let store = ShardedStore::new(3, 48);
+        let mut rng = Xoshiro256::new(6);
+        let pts: Vec<BitVec> = (0..11).map(|_| sk(&mut rng, 48)).collect();
+        for p in pts.chunks(3) {
+            store.insert_batch(p.to_vec());
+        }
+        let m = store.snapshot_matrix();
+        assert_eq!(m.len(), 11);
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(m.row_bitvec(i), *p, "row {i}");
         }
     }
 

@@ -1,0 +1,187 @@
+//! Bounded top-k selection over a stream of (id, distance) candidates.
+//!
+//! A binary max-heap of capacity `k` keyed by `(dist, id)` under
+//! [`f64::total_cmp`]: the root is the *worst* retained hit, so each
+//! candidate costs one comparison against the root and — only when it
+//! beats it — an O(log k) sift. This replaces the seed's
+//! sort-on-every-insert buffer (O(k log k) per accepted candidate) and
+//! performs zero allocations per candidate: the heap's backing storage is
+//! reserved up front.
+//!
+//! `total_cmp` makes the kernel NaN-safe: a NaN distance is ordered after
+//! every finite value, so it can never displace a real hit, never wins a
+//! tie, and never panics a shard worker the way
+//! `partial_cmp(..).unwrap()` did.
+
+use super::protocol::Hit;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry ordered by `(dist, id)` ascending-lexicographic; the
+/// `BinaryHeap` max-orientation then keeps the worst candidate at the root.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    dist: f64,
+    id: usize,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.dist
+            .total_cmp(&other.dist)
+            .then_with(|| self.id.cmp(&other.id))
+    }
+}
+
+/// Bounded top-k accumulator (smallest `k` by `(dist, id)`).
+pub struct TopK {
+    k: usize,
+    heap: BinaryHeap<Entry>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            heap: BinaryHeap::with_capacity(k),
+        }
+    }
+
+    /// Offer one candidate. `k == 0` accepts nothing (and never panics).
+    #[inline]
+    pub fn offer(&mut self, id: usize, dist: f64) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(Entry { dist, id });
+        } else if let Some(mut worst) = self.heap.peek_mut() {
+            let candidate = Entry { dist, id };
+            if candidate < *worst {
+                *worst = candidate; // sifts down when the guard drops
+            }
+        }
+    }
+
+    /// Current number of retained hits.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drain into hits sorted ascending by `(dist, id)`.
+    pub fn into_sorted_hits(self) -> Vec<Hit> {
+        self.heap
+            .into_sorted_vec()
+            .into_iter()
+            .map(|e| Hit {
+                id: e.id,
+                dist: e.dist,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_the_k_smallest_sorted() {
+        let mut t = TopK::new(3);
+        for (id, d) in [(0, 9.0), (1, 2.0), (2, 7.0), (3, 1.0), (4, 8.0), (5, 3.0)] {
+            t.offer(id, d);
+        }
+        let hits = t.into_sorted_hits();
+        let got: Vec<(usize, f64)> = hits.iter().map(|h| (h.id, h.dist)).collect();
+        assert_eq!(got, vec![(3, 1.0), (1, 2.0), (5, 3.0)]);
+    }
+
+    #[test]
+    fn k_zero_accepts_nothing() {
+        let mut t = TopK::new(0);
+        t.offer(1, 0.5);
+        t.offer(2, f64::NAN);
+        assert!(t.is_empty());
+        assert!(t.into_sorted_hits().is_empty());
+    }
+
+    #[test]
+    fn fewer_candidates_than_k() {
+        let mut t = TopK::new(10);
+        t.offer(7, 4.0);
+        t.offer(3, 1.0);
+        let hits = t.into_sorted_hits();
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].id, 3);
+    }
+
+    #[test]
+    fn ties_break_by_id() {
+        let mut t = TopK::new(2);
+        for id in [9, 4, 6, 1] {
+            t.offer(id, 5.0);
+        }
+        let ids: Vec<usize> = t.into_sorted_hits().iter().map(|h| h.id).collect();
+        assert_eq!(ids, vec![1, 4]);
+    }
+
+    #[test]
+    fn nan_candidates_never_displace_real_hits() {
+        let mut t = TopK::new(2);
+        t.offer(0, 3.0);
+        t.offer(1, 1.0);
+        t.offer(2, f64::NAN); // heap full of finite hits: NaN must lose
+        t.offer(3, f64::NAN);
+        let hits = t.into_sorted_hits();
+        let ids: Vec<usize> = hits.iter().map(|h| h.id).collect();
+        assert_eq!(ids, vec![1, 0]);
+        assert!(hits.iter().all(|h| h.dist.is_finite()));
+    }
+
+    #[test]
+    fn nan_sorts_last_when_underfull() {
+        // With room to spare a NaN is retained but ordered after every
+        // finite distance — the response stays well-formed either way.
+        let mut t = TopK::new(3);
+        t.offer(0, f64::NAN);
+        t.offer(1, 2.0);
+        let hits = t.into_sorted_hits();
+        assert_eq!(hits[0].id, 1);
+        assert!(hits[1].dist.is_nan());
+    }
+
+    #[test]
+    fn matches_full_sort_on_random_stream() {
+        let mut rng = crate::util::rng::Xoshiro256::new(11);
+        for k in [1usize, 4, 16] {
+            let cands: Vec<(usize, f64)> = (0..200)
+                .map(|id| (id, (rng.gen_range(1000) as f64) / 10.0))
+                .collect();
+            let mut t = TopK::new(k);
+            for &(id, d) in &cands {
+                t.offer(id, d);
+            }
+            let mut brute = cands.clone();
+            brute.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+            brute.truncate(k);
+            let got: Vec<(usize, f64)> =
+                t.into_sorted_hits().iter().map(|h| (h.id, h.dist)).collect();
+            assert_eq!(got, brute, "k={k}");
+        }
+    }
+}

@@ -7,9 +7,13 @@
 //! evaluation depends on — eleven baseline dimensionality-reduction methods,
 //! k-mode/k-means clustering with purity/NMI/ARI scoring, RMSE/heatmap/MAE
 //! analysis harnesses, synthetic statistical twins of the paper's six
-//! datasets, and a streaming sketch *service* (dynamic batching, sharding,
-//! top-k routing) whose compute hot path can run either natively (bit-packed
-//! popcount) or through AOT-compiled JAX/Pallas artifacts via PJRT.
+//! datasets, and a streaming sketch *service* — dynamic insert batching,
+//! point-balanced sharding over contiguous bit-packed sketch arenas
+//! ([`sketch::SketchMatrix`]) with an O(1) id → (shard, row) index, and
+//! single or batched top-k routing via a bounded-heap scan
+//! ([`coordinator::TopK`]) — whose compute hot path can run either natively
+//! (bit-packed popcount over borrowed `&[u64]` arena rows) or through
+//! AOT-compiled JAX/Pallas artifacts via PJRT.
 //!
 //! ## Architecture (three layers)
 //!

@@ -120,7 +120,7 @@ pub fn jacobi_eigh(a: &Matrix, max_sweeps: usize) -> (Vec<f64>, Matrix) {
         }
     }
     let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
-    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
     let vals: Vec<f64> = pairs.iter().map(|&(val, _)| val.max(0.0)).collect();
     let mut vecs = Matrix::zeros(n, n);
     for (new_c, &(_, old_c)) in pairs.iter().enumerate() {

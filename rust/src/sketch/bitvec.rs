@@ -6,6 +6,15 @@
 //! exactly the "faster bitwise operators" advantage the paper claims for
 //! binary sketches (Section 1). The 4-way unrolled kernels here are the
 //! native hot path measured in EXPERIMENTS.md §Perf.
+//!
+//! The kernels come in two layers: free functions over raw `&[u64]` word
+//! slices ([`popcount_words`], [`and_count_words`], [`xor_count_words`],
+//! [`or_count_words`]) — these are what arena scans over
+//! [`crate::sketch::matrix::SketchMatrix`] rows call, with no `BitVec`
+//! construction or cloning — and the [`BitVec`] methods, which are thin
+//! wrappers over the same word kernels. Operand word-length mismatches are
+//! a hard error in every build profile: truncating to the shorter slice
+//! would silently mask dimension-mismatch bugs.
 
 /// A fixed-length packed bit vector.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -30,6 +39,21 @@ impl BitVec {
             v.set(i);
         }
         v
+    }
+
+    /// Reassemble from a packed word buffer (arena row views). The caller
+    /// guarantees the tail bits beyond `bits` are zero — rows copied out of
+    /// a [`crate::sketch::matrix::SketchMatrix`] satisfy this because they
+    /// were packed from `BitVec`s in the first place.
+    pub fn from_words(bits: usize, words: Vec<u64>) -> Self {
+        assert_eq!(
+            words.len(),
+            bits.div_ceil(64),
+            "word buffer length {} does not match {} bits",
+            words.len(),
+            bits
+        );
+        Self { bits, words }
     }
 
     /// Build from a 0/1 byte slice (test/interop convenience).
@@ -103,45 +127,28 @@ impl BitVec {
     /// Hamming weight `|u|`.
     #[inline]
     pub fn count_ones(&self) -> usize {
-        // 4-way unroll: lets the compiler keep four popcnt chains in flight.
-        let mut c0 = 0u64;
-        let mut c1 = 0u64;
-        let mut c2 = 0u64;
-        let mut c3 = 0u64;
-        let chunks = self.words.chunks_exact(4);
-        let rem = chunks.remainder();
-        for ch in chunks {
-            c0 += ch[0].count_ones() as u64;
-            c1 += ch[1].count_ones() as u64;
-            c2 += ch[2].count_ones() as u64;
-            c3 += ch[3].count_ones() as u64;
-        }
-        let mut total = c0 + c1 + c2 + c3;
-        for w in rem {
-            total += w.count_ones() as u64;
-        }
-        total as usize
+        popcount_words(&self.words)
     }
 
     /// Bitwise inner product `⟨u,v⟩ = |u ∧ v|`.
     #[inline]
     pub fn and_count(&self, other: &BitVec) -> usize {
         debug_assert_eq!(self.bits, other.bits);
-        binop_popcount(&self.words, &other.words, |a, b| a & b)
+        and_count_words(&self.words, &other.words)
     }
 
     /// Hamming distance `|u ⊕ v|`.
     #[inline]
     pub fn xor_count(&self, other: &BitVec) -> usize {
         debug_assert_eq!(self.bits, other.bits);
-        binop_popcount(&self.words, &other.words, |a, b| a ^ b)
+        xor_count_words(&self.words, &other.words)
     }
 
     /// Union size `|u ∨ v|`.
     #[inline]
     pub fn or_count(&self, other: &BitVec) -> usize {
         debug_assert_eq!(self.bits, other.bits);
-        binop_popcount(&self.words, &other.words, |a, b| a | b)
+        or_count_words(&self.words, &other.words)
     }
 
     /// In-place OR (sketch merging in the coordinator).
@@ -174,14 +181,64 @@ impl BitVec {
     }
 }
 
+/// Hamming weight of a word slice (4-way unroll: lets the compiler keep
+/// four popcnt chains in flight).
 #[inline]
-fn binop_popcount(a: &[u64], b: &[u64], op: fn(u64, u64) -> u64) -> usize {
+pub fn popcount_words(words: &[u64]) -> usize {
     let mut c0 = 0u64;
     let mut c1 = 0u64;
     let mut c2 = 0u64;
     let mut c3 = 0u64;
-    let n = a.len().min(b.len());
-    let (a, b) = (&a[..n], &b[..n]);
+    let chunks = words.chunks_exact(4);
+    let rem = chunks.remainder();
+    for ch in chunks {
+        c0 += ch[0].count_ones() as u64;
+        c1 += ch[1].count_ones() as u64;
+        c2 += ch[2].count_ones() as u64;
+        c3 += ch[3].count_ones() as u64;
+    }
+    let mut total = c0 + c1 + c2 + c3;
+    for w in rem {
+        total += w.count_ones() as u64;
+    }
+    total as usize
+}
+
+/// `|a ∧ b|` over raw word slices. Panics on length mismatch.
+#[inline]
+pub fn and_count_words(a: &[u64], b: &[u64]) -> usize {
+    binop_popcount(a, b, |a, b| a & b)
+}
+
+/// `|a ⊕ b|` over raw word slices. Panics on length mismatch.
+#[inline]
+pub fn xor_count_words(a: &[u64], b: &[u64]) -> usize {
+    binop_popcount(a, b, |a, b| a ^ b)
+}
+
+/// `|a ∨ b|` over raw word slices. Panics on length mismatch.
+#[inline]
+pub fn or_count_words(a: &[u64], b: &[u64]) -> usize {
+    binop_popcount(a, b, |a, b| a | b)
+}
+
+#[inline]
+fn binop_popcount(a: &[u64], b: &[u64], op: fn(u64, u64) -> u64) -> usize {
+    // Length mismatch is a dimension bug at the call site; truncating to
+    // min(len) here would return a plausible-looking count and hide it, so
+    // it is a hard error in release builds too.
+    assert_eq!(
+        a.len(),
+        b.len(),
+        "bitvec word-length mismatch: {} vs {} words — operands come from different dimensions",
+        a.len(),
+        b.len()
+    );
+    let n = a.len();
+    let mut c0 = 0u64;
+    let mut c1 = 0u64;
+    let mut c2 = 0u64;
+    let mut c3 = 0u64;
     let mut i = 0;
     while i + 4 <= n {
         c0 += op(a[i], b[i]).count_ones() as u64;
@@ -281,6 +338,49 @@ mod tests {
         let b = BitVec::from_indices(100, [2, 99]);
         a.or_assign(&b);
         assert_eq!(a, BitVec::from_indices(100, [1, 2, 99]));
+    }
+
+    #[test]
+    fn word_kernels_match_methods() {
+        let mut rng = Xoshiro256::new(9);
+        let a = random_bitvec(&mut rng, 500, 0.3);
+        let b = random_bitvec(&mut rng, 500, 0.3);
+        assert_eq!(popcount_words(a.words()), a.count_ones());
+        assert_eq!(and_count_words(a.words(), b.words()), a.and_count(&b));
+        assert_eq!(xor_count_words(a.words(), b.words()), a.xor_count(&b));
+        assert_eq!(or_count_words(a.words(), b.words()), a.or_count(&b));
+    }
+
+    #[test]
+    #[should_panic(expected = "word-length mismatch")]
+    fn and_count_rejects_mismatched_dims() {
+        // 64 bits = 1 word vs 128 bits = 2 words: must panic, not truncate.
+        let a = BitVec::from_indices(64, [0, 5]);
+        let b = BitVec::from_indices(128, [0, 5, 100]);
+        let _ = a.and_count(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "word-length mismatch")]
+    fn xor_count_rejects_mismatched_dims() {
+        let a = BitVec::zeros(64);
+        let b = BitVec::zeros(256);
+        let _ = a.xor_count(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "word-length mismatch")]
+    fn or_count_rejects_mismatched_dims() {
+        let a = BitVec::zeros(192);
+        let b = BitVec::zeros(64);
+        let _ = a.or_count(&b);
+    }
+
+    #[test]
+    fn from_words_roundtrip() {
+        let v = BitVec::from_indices(130, [0, 64, 129]);
+        let w = BitVec::from_words(130, v.words().to_vec());
+        assert_eq!(v, w);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Contiguous bit-packed sketch arena.
+//!
+//! A [`SketchMatrix`] stores `n` sketches of `bits` bits each as one
+//! row-major `u64` word arena: a single allocation per shard instead of the
+//! one-heap-box-per-sketch layout of `Vec<BitVec>`. Scans borrow rows as
+//! `&[u64]` views ([`SketchMatrix::row`]) and feed them straight into the
+//! word-slice popcount kernels in [`crate::sketch::bitvec`], so the query
+//! hot path never clones a sketch or chases a per-sketch pointer — this is
+//! the layout that lets the coordinator's top-k scan run at the
+//! word-parallel popcount speed the paper's Section 1 argues for.
+//!
+//! Each row's Hamming weight is cached at insertion time (`weights`): the
+//! Cham estimator needs `|ṽ|` for every candidate, and recomputing it per
+//! query per candidate would double the popcount work of a scan.
+
+use super::bitvec::{popcount_words, BitVec};
+
+/// Row-major arena of fixed-width packed bit rows with cached row weights.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SketchMatrix {
+    bits: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+    weights: Vec<u32>,
+}
+
+impl SketchMatrix {
+    /// Empty arena for `bits`-bit sketches.
+    pub fn new(bits: usize) -> Self {
+        Self::with_row_capacity(bits, 0)
+    }
+
+    /// Empty arena with space reserved for `rows` sketches.
+    pub fn with_row_capacity(bits: usize, rows: usize) -> Self {
+        let words_per_row = bits.div_ceil(64);
+        Self {
+            bits,
+            words_per_row,
+            words: Vec::with_capacity(words_per_row * rows),
+            weights: Vec::with_capacity(rows),
+        }
+    }
+
+    /// Pack a slice of sketches into one arena (analysis / all-pairs paths).
+    /// All sketches must share a dimension.
+    pub fn from_sketches(sketches: &[BitVec]) -> Self {
+        let bits = sketches.first().map(|s| s.len()).unwrap_or(0);
+        let mut m = Self::with_row_capacity(bits, sketches.len());
+        for s in sketches {
+            m.push(s);
+        }
+        m
+    }
+
+    /// Sketch dimension in bits.
+    #[inline]
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Words per row (`bits.div_ceil(64)`).
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    /// Append a sketch as a new row. Panics on dimension mismatch — the
+    /// same hard-error policy as the word kernels.
+    pub fn push(&mut self, sketch: &BitVec) {
+        assert_eq!(
+            sketch.len(),
+            self.bits,
+            "sketch dim {} does not match arena dim {}",
+            sketch.len(),
+            self.bits
+        );
+        self.words.extend_from_slice(sketch.words());
+        self.weights.push(popcount_words(sketch.words()) as u32);
+    }
+
+    /// Append a row directly from a packed word slice with its
+    /// precomputed weight (arena-to-arena copies, e.g. store snapshots —
+    /// skips the `BitVec` round-trip and the popcount). The caller
+    /// guarantees `weight` is the slice's true Hamming weight and the tail
+    /// bits beyond `bits` are zero.
+    pub fn push_row(&mut self, words: &[u64], weight: u32) {
+        assert_eq!(
+            words.len(),
+            self.words_per_row,
+            "row has {} words, arena rows have {}",
+            words.len(),
+            self.words_per_row
+        );
+        self.words.extend_from_slice(words);
+        self.weights.push(weight);
+    }
+
+    /// Borrowed word view of row `i` — the zero-copy scan path.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u64] {
+        &self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    /// Cached Hamming weight of row `i`.
+    #[inline]
+    pub fn weight(&self, i: usize) -> usize {
+        self.weights[i] as usize
+    }
+
+    /// Copy row `i` back out as an owned [`BitVec`] (lookup responses).
+    pub fn row_bitvec(&self, i: usize) -> BitVec {
+        BitVec::from_words(self.bits, self.row(i).to_vec())
+    }
+
+    /// Iterate rows as borrowed word slices.
+    pub fn rows(&self) -> impl Iterator<Item = &[u64]> + '_ {
+        (0..self.len()).map(move |i| self.row(i))
+    }
+
+    /// Move this arena's last row to the end of `dst` (shard rebalancing:
+    /// no per-row allocation). Returns `false` when empty.
+    pub fn move_last_row_to(&mut self, dst: &mut SketchMatrix) -> bool {
+        assert_eq!(
+            self.bits, dst.bits,
+            "cannot move a {}-bit row into a {}-bit arena",
+            self.bits, dst.bits
+        );
+        let Some(w) = self.weights.pop() else {
+            return false;
+        };
+        let offset = self.words.len() - self.words_per_row;
+        dst.words.extend_from_slice(&self.words[offset..]);
+        self.words.truncate(offset);
+        dst.weights.push(w);
+        true
+    }
+
+    /// Arena memory footprint in bytes (words + weight cache).
+    pub fn memory_bytes(&self) -> usize {
+        self.words.len() * 8 + self.weights.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::bitvec::and_count_words;
+    use crate::util::rng::Xoshiro256;
+
+    fn sk(rng: &mut Xoshiro256, d: usize, ones: usize) -> BitVec {
+        BitVec::from_indices(d, rng.sample_indices(d, ones))
+    }
+
+    #[test]
+    fn push_row_roundtrip() {
+        let mut rng = Xoshiro256::new(1);
+        let d = 200;
+        let sketches: Vec<BitVec> = (0..17).map(|_| sk(&mut rng, d, 30)).collect();
+        let m = SketchMatrix::from_sketches(&sketches);
+        assert_eq!(m.len(), 17);
+        assert_eq!(m.bits(), d);
+        assert_eq!(m.words_per_row(), d.div_ceil(64));
+        for (i, s) in sketches.iter().enumerate() {
+            assert_eq!(m.row(i), s.words(), "row {i}");
+            assert_eq!(m.weight(i), s.count_ones(), "weight {i}");
+            assert_eq!(m.row_bitvec(i), *s, "bitvec {i}");
+        }
+    }
+
+    #[test]
+    fn row_kernels_match_bitvec_ops() {
+        let mut rng = Xoshiro256::new(2);
+        let d = 130; // non-multiple of 64: exercises the tail word
+        let sketches: Vec<BitVec> = (0..6).map(|_| sk(&mut rng, d, 25)).collect();
+        let m = SketchMatrix::from_sketches(&sketches);
+        for i in 0..m.len() {
+            for j in 0..m.len() {
+                assert_eq!(
+                    and_count_words(m.row(i), m.row(j)),
+                    sketches[i].and_count(&sketches[j])
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rows_iterator_visits_all() {
+        let mut rng = Xoshiro256::new(3);
+        let sketches: Vec<BitVec> = (0..5).map(|_| sk(&mut rng, 64, 10)).collect();
+        let m = SketchMatrix::from_sketches(&sketches);
+        let collected: Vec<&[u64]> = m.rows().collect();
+        assert_eq!(collected.len(), 5);
+        for (r, s) in collected.iter().zip(&sketches) {
+            assert_eq!(*r, s.words());
+        }
+    }
+
+    #[test]
+    fn move_last_row_transfers_words_and_weight() {
+        let mut rng = Xoshiro256::new(4);
+        let d = 96;
+        let a_rows: Vec<BitVec> = (0..4).map(|_| sk(&mut rng, d, 20)).collect();
+        let mut a = SketchMatrix::from_sketches(&a_rows);
+        let mut b = SketchMatrix::new(d);
+        assert!(a.move_last_row_to(&mut b));
+        assert!(a.move_last_row_to(&mut b));
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 2);
+        // moved in pop order: b holds rows 3 then 2
+        assert_eq!(b.row_bitvec(0), a_rows[3]);
+        assert_eq!(b.row_bitvec(1), a_rows[2]);
+        assert_eq!(b.weight(0), a_rows[3].count_ones());
+        // survivors untouched
+        assert_eq!(a.row_bitvec(0), a_rows[0]);
+        assert_eq!(a.row_bitvec(1), a_rows[1]);
+        // drain to empty, then refuse
+        assert!(a.move_last_row_to(&mut b));
+        assert!(a.move_last_row_to(&mut b));
+        assert!(!a.move_last_row_to(&mut b));
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn push_row_matches_push() {
+        let mut rng = Xoshiro256::new(8);
+        let d = 200;
+        let s = sk(&mut rng, d, 30);
+        let mut a = SketchMatrix::new(d);
+        a.push(&s);
+        let mut b = SketchMatrix::new(d);
+        b.push_row(a.row(0), a.weight(0) as u32);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "arena rows have")]
+    fn push_row_rejects_wrong_width() {
+        let mut m = SketchMatrix::new(128);
+        m.push_row(&[0u64], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match arena dim")]
+    fn push_rejects_wrong_dimension() {
+        let mut m = SketchMatrix::new(128);
+        m.push(&BitVec::zeros(64));
+    }
+
+    #[test]
+    fn empty_and_memory() {
+        let m = SketchMatrix::new(1024);
+        assert!(m.is_empty());
+        assert_eq!(m.memory_bytes(), 0);
+        let mut m2 = SketchMatrix::new(1000);
+        m2.push(&BitVec::zeros(1000));
+        // 16 words + one u32 weight
+        assert_eq!(m2.memory_bytes(), 16 * 8 + 4);
+    }
+}

@@ -23,12 +23,14 @@ pub mod bitvec;
 pub mod cabin;
 pub mod cham;
 pub mod mappings;
+pub mod matrix;
 
 pub use binem::{BinEm, PsiMode};
 pub use binsketch::BinSketch;
 pub use bitvec::BitVec;
 pub use cabin::{CabinSketcher, SketchConfig};
 pub use cham::{Estimator, estimate_hamming};
+pub use matrix::SketchMatrix;
 
 /// Recommended sketch dimension from Theorem 2: `d = s·sqrt((s/2)·ln(6/δ))`
 /// where `s` is an upper bound on vector density and `δ` the error

@@ -188,7 +188,7 @@ impl Zipf {
         let u = rng.next_f64();
         match self
             .cdf
-            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
+            .binary_search_by(|p| p.total_cmp(&u))
         {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),

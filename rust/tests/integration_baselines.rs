@@ -32,7 +32,7 @@ fn discrete_methods_rmse_ordering_figure3() {
         .iter()
         .map(|k| (k.to_string(), rmse(&ds, &by_key(k).unwrap().reduce(&ds, d, 5))))
         .collect();
-    scores.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    scores.sort_by(|a, b| a.1.total_cmp(&b.1));
     println!("{scores:?}");
     let rank_of_cabin = scores.iter().position(|(k, _)| k == "cabin").unwrap();
     assert!(rank_of_cabin <= 1, "cabin ranked {rank_of_cabin}: {scores:?}");

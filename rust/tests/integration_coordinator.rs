@@ -172,3 +172,70 @@ fn heatmap_over_tcp_matches_native() {
     c.shutdown().unwrap();
     server.join().unwrap();
 }
+
+#[test]
+fn k_zero_over_the_wire_is_an_error_not_a_crash() {
+    // Regression: a remote "query" with k == 0 used to reach the top-k
+    // kernel, underflow hits[k - 1], and panic the shard workers — taking
+    // the scatter/gather join() and the whole coordinator with it. The
+    // protocol layer must reject it with an error response and keep
+    // serving.
+    use std::io::{BufRead, BufReader, Write};
+    let (addr, server) = start_server(800);
+    let pts = twin(800, 8, 3);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    for p in &pts {
+        c.insert(p.clone()).unwrap();
+    }
+
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    for bad in [
+        r#"{"op":"query","dim":800,"idx":[0],"val":[1],"k":0}"#,
+        r#"{"op":"query_batch","dim":800,"k":0,"queries":[{"idx":[0],"val":[1]}]}"#,
+    ] {
+        writeln!(w, "{bad}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false"), "line: {line}");
+        assert!(line.contains("k must be >= 1"), "line: {line}");
+    }
+    // same connection — and the service — still answer real queries
+    writeln!(w, r#"{{"op":"ping"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"), "line: {line}");
+
+    let hits = c.query(pts[0].clone(), 3).unwrap();
+    assert_eq!(hits.len(), 3);
+    c.shutdown().unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn query_batch_over_the_wire() {
+    let (addr, server) = start_server(700);
+    let pts = twin(700, 20, 4);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let mut ids = Vec::new();
+    for p in &pts {
+        ids.push(c.insert(p.clone()).unwrap());
+    }
+
+    // one round-trip answers all queries; each probe's own id comes first
+    let results = c.query_batch(pts[..5].to_vec(), 3).unwrap();
+    assert_eq!(results.len(), 5);
+    for (qi, hits) in results.iter().enumerate() {
+        assert_eq!(hits.len(), 3);
+        assert_eq!(hits[0].id, ids[qi], "query {qi}: {hits:?}");
+        assert!(hits[0].dist < 1e-9, "query {qi}: {hits:?}");
+    }
+    // batched answers must agree with the single-query path
+    for (qi, hits) in results.iter().enumerate() {
+        let single = c.query(pts[qi].clone(), 3).unwrap();
+        assert_eq!(&single, hits, "query {qi}");
+    }
+    c.shutdown().unwrap();
+    server.join().unwrap();
+}

@@ -108,7 +108,7 @@ fn prop_router_topk_matches_bruteforce() {
                 )
             })
             .collect();
-        brute.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        brute.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
         brute.truncate(k);
         if hits.len() != brute.len() {
             return Err(format!("k mismatch {} vs {}", hits.len(), brute.len()));

@@ -1,0 +1,146 @@
+//! Concurrency soak: top-k queries and O(1) distance lookups racing
+//! batched inserts and rebalances on the arena store. The invariants under
+//! fire: no id is ever lost, no query result contains a duplicate or
+//! unsorted hit, every settled id resolves to the sketch that was
+//! inserted under it, and shard occupancy stays level.
+
+use cabin::coordinator::router;
+use cabin::coordinator::store::ShardedStore;
+use cabin::sketch::BitVec;
+use cabin::util::rng::Xoshiro256;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+const DIM: usize = 128;
+
+fn sketch(rng: &mut Xoshiro256) -> BitVec {
+    let ones = 1 + rng.gen_range((DIM / 4) as u64) as usize;
+    BitVec::from_indices(DIM, rng.sample_indices(DIM, ones))
+}
+
+#[test]
+fn soak_queries_and_lookups_race_inserts_and_rebalance() {
+    let store = ShardedStore::new(4, DIM);
+    let done = AtomicBool::new(false);
+    // ground truth: id → sketch, recorded by the inserters
+    let truth: Mutex<Vec<(usize, BitVec)>> = Mutex::new(Vec::new());
+
+    const INSERTERS: u64 = 4;
+    const BATCHES_PER_INSERTER: usize = 12;
+    const BATCH: usize = 8;
+    let total = INSERTERS as usize * BATCHES_PER_INSERTER * BATCH;
+
+    std::thread::scope(|s| {
+        // batched inserters
+        for t in 0..INSERTERS {
+            let store = &store;
+            let truth = &truth;
+            s.spawn(move || {
+                let mut rng = Xoshiro256::new(1000 + t);
+                for _ in 0..BATCHES_PER_INSERTER {
+                    let batch: Vec<BitVec> = (0..BATCH).map(|_| sketch(&mut rng)).collect();
+                    let ids = store.insert_batch(batch.clone());
+                    let mut tr = truth.lock().unwrap();
+                    tr.extend(ids.into_iter().zip(batch));
+                    drop(tr);
+                    std::thread::yield_now();
+                }
+            });
+        }
+        // query threads: results must stay well-formed mid-churn
+        for t in 0..2u64 {
+            let store = &store;
+            let done = &done;
+            s.spawn(move || {
+                let mut rng = Xoshiro256::new(2000 + t);
+                while !done.load(Ordering::Relaxed) {
+                    let q = sketch(&mut rng);
+                    let hits = router::topk(store, &q, 5);
+                    let mut ids: Vec<usize> = hits.iter().map(|h| h.id).collect();
+                    for w in hits.windows(2) {
+                        assert!(
+                            w[0].dist <= w[1].dist || w[1].dist.is_nan(),
+                            "unsorted hits: {hits:?}"
+                        );
+                    }
+                    ids.sort_unstable();
+                    ids.dedup();
+                    assert_eq!(ids.len(), hits.len(), "duplicate hit ids: {hits:?}");
+                }
+            });
+        }
+        // distance-lookup thread: may race a half-placed batch (None) but
+        // must never panic or return nonsense for settled ids
+        {
+            let store = &store;
+            let done = &done;
+            s.spawn(move || {
+                let mut rng = Xoshiro256::new(3000);
+                while !done.load(Ordering::Relaxed) {
+                    let n = store.len();
+                    if n >= 2 {
+                        let a = rng.gen_range(n as u64) as usize;
+                        let b = rng.gen_range(n as u64) as usize;
+                        if let Some(d) = router::distance(store, a, b) {
+                            assert!(d >= 0.0, "negative distance {d} for ({a},{b})");
+                        }
+                        if let Some(d) = router::distance(store, a, a) {
+                            assert!(d.abs() < 1e-9, "self-distance {d} for id {a}");
+                        }
+                    }
+                }
+            });
+        }
+        // rebalance thread: periodically levels mid-insert
+        {
+            let store = &store;
+            let done = &done;
+            s.spawn(move || {
+                while !done.load(Ordering::Relaxed) {
+                    store.rebalance(2);
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            });
+        }
+        // inserter threads are the first INSERTERS spawns; rather than
+        // track handles, poll until every insert has landed, then stop the
+        // churn threads.
+        while store.len() < total {
+            std::thread::yield_now();
+        }
+        done.store(true, Ordering::Relaxed);
+    });
+
+    // no lost ids: dense, unique, fully retrievable
+    assert_eq!(store.len(), total);
+    let snap = store.snapshot_ordered();
+    assert_eq!(snap.len(), total, "snapshot lost points");
+    for (expect, (id, _)) in snap.iter().enumerate() {
+        assert_eq!(*id, expect, "id gap at {expect}");
+    }
+    // every id still resolves (O(1) path) to exactly the inserted sketch
+    let truth = truth.into_inner().unwrap();
+    assert_eq!(truth.len(), total);
+    for (id, expected) in &truth {
+        assert_eq!(
+            store.get(*id).as_ref(),
+            Some(expected),
+            "id {id} lost or corrupted"
+        );
+    }
+    // a full-corpus query drops and duplicates nothing
+    let mut rng = Xoshiro256::new(42);
+    let hits = router::topk(&store, &sketch(&mut rng), total);
+    let mut ids: Vec<usize> = hits.iter().map(|h| h.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..total).collect::<Vec<_>>());
+    // level shard sizes after a final rebalance
+    store.rebalance(1);
+    let sizes = store.shard_sizes();
+    assert_eq!(sizes.iter().sum::<usize>(), total);
+    let (max, min) = (
+        *sizes.iter().max().unwrap() as i64,
+        *sizes.iter().min().unwrap() as i64,
+    );
+    assert!(max - min <= 2, "shards not level after rebalance: {sizes:?}");
+}

@@ -11,7 +11,7 @@
 //! ```
 
 use cabin::coordinator::client::Client;
-use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, IndexConfig};
 use cabin::data::synth::SynthSpec;
 use cabin::util::cli::Args;
 use cabin::util::timer::{LatencyStats, Stopwatch};
@@ -49,7 +49,14 @@ fn main() {
         },
         use_xla: !args.flag("no-xla"),
         heatmap_limit: 4096,
+        // --index on|off|auto (default auto: the LSH candidate path kicks
+        // in once shards outgrow the exact-scan sweet spot)
+        index: IndexConfig {
+            mode: IndexConfig::mode_from_str_or_warn(&args.str_or("index", "auto"), "e2e"),
+            ..Default::default()
+        },
     };
+    println!("[e2e] index mode: {:?}", config.index.mode);
     let coordinator = Arc::new(Coordinator::new(config));
     let server = Arc::clone(&coordinator);
     let (addr_tx, addr_rx) = std::sync::mpsc::sync_channel(1);

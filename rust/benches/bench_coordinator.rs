@@ -3,7 +3,9 @@
 //! grows. The isolated shard-scan kernel comparison lives in `bench_topk`.
 
 use cabin::bench::{black_box, Bench};
-use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request, Response};
+use cabin::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, IndexConfig, IndexMode, Request, Response,
+};
 use cabin::data::synth::SynthSpec;
 use std::time::Duration;
 
@@ -21,6 +23,13 @@ fn make_coordinator(max_batch: usize, delay_ms: u64, shards: usize) -> Coordinat
         },
         use_xla: false, // isolate the native L3 path; XLA lane in bench_heatmap
         heatmap_limit: 10_000,
+        // Off, not Auto: Auto still *maintains* shard indexes on every
+        // insert, which would tax the ingest numbers. The indexed-vs-full
+        // query comparison lives in bench_index.
+        index: IndexConfig {
+            mode: IndexMode::Off,
+            ..Default::default()
+        },
     })
 }
 

@@ -1,0 +1,140 @@
+//! Sublinear vs exhaustive top-k: the per-shard multi-probe Hamming-LSH
+//! candidate path against the full arena heap scan, on a ≥100k-sketch
+//! clustered corpus (downscaled under `CABIN_BENCH_FAST=1`). Also reports
+//! recall@10 of the indexed path against the full scan — the bench refuses
+//! to run a configuration whose recall gate (≥ 0.9) fails, so the speed
+//! numbers can never come from a broken index.
+
+use cabin::bench::{black_box, Bench};
+use cabin::coordinator::router::{self, QueryOpts};
+use cabin::coordinator::store::ShardedStore;
+use cabin::coordinator::IndexCounters;
+use cabin::index::{IndexConfig, IndexMode};
+use cabin::sketch::BitVec;
+use cabin::util::rng::Xoshiro256;
+use std::sync::atomic::Ordering;
+
+const DIM: usize = 1024;
+const ONES: usize = 128;
+
+fn random_sketch(rng: &mut Xoshiro256) -> BitVec {
+    BitVec::from_indices(DIM, rng.sample_indices(DIM, ONES))
+}
+
+fn perturb(center: &BitVec, flips: usize, rng: &mut Xoshiro256) -> BitVec {
+    let mut v = center.clone();
+    for _ in 0..flips {
+        let i = rng.gen_range(DIM as u64) as usize;
+        if v.get(i) {
+            v.clear(i);
+        } else {
+            v.set(i);
+        }
+    }
+    v
+}
+
+fn main() {
+    let mut b = Bench::from_env("index");
+    let fast = std::env::var("CABIN_BENCH_FAST").ok().as_deref() == Some("1");
+    let n: usize = if fast { 20_000 } else { 100_000 };
+    let cluster_size = 20usize;
+    let centers_n = n / (2 * cluster_size); // half the corpus is clustered
+    let mut rng = Xoshiro256::new(7);
+
+    println!("[bench_index] building {n}-sketch corpus (d={DIM}, {centers_n} clusters)");
+    let centers: Vec<BitVec> = (0..centers_n).map(|_| random_sketch(&mut rng)).collect();
+    let mut corpus: Vec<BitVec> = Vec::with_capacity(n);
+    for c in &centers {
+        for _ in 0..cluster_size {
+            corpus.push(perturb(c, 12, &mut rng));
+        }
+    }
+    while corpus.len() < n {
+        corpus.push(random_sketch(&mut rng));
+    }
+
+    let cfg = IndexConfig {
+        mode: IndexMode::On,
+        ..Default::default()
+    };
+    let store = ShardedStore::with_index(4, DIM, &cfg, 42);
+    for chunk in corpus.chunks(1024) {
+        store.insert_batch(chunk.to_vec());
+    }
+    let queries: Vec<BitVec> = (0..32)
+        .map(|i| perturb(&centers[(i * 37) % centers.len()], 6, &mut rng))
+        .collect();
+
+    // ---- recall gate: indexed top-10 vs full-scan top-10 ----
+    let k = 10usize;
+    let counters = IndexCounters::default();
+    let opts = QueryOpts::indexed(0, Some(&counters));
+    let (mut hit, mut total) = (0usize, 0usize);
+    for q in &queries {
+        let exact: Vec<usize> = router::topk(&store, q, k).iter().map(|h| h.id).collect();
+        let indexed: Vec<usize> = router::topk_with(&store, q, k, &opts)
+            .iter()
+            .map(|h| h.id)
+            .collect();
+        total += exact.len();
+        hit += exact.iter().filter(|id| indexed.contains(*id)).count();
+    }
+    let recall = hit as f64 / total as f64;
+    let scanned_frac = counters.reranked.load(Ordering::Relaxed) as f64
+        / (queries.len() as f64 * n as f64);
+    println!(
+        "[bench_index] recall@{k} = {recall:.4} ({hit}/{total}); candidates reranked: {:.2}% of corpus/query; fallbacks: {}",
+        100.0 * scanned_frac,
+        counters.fallbacks.load(Ordering::Relaxed)
+    );
+    assert!(
+        recall >= 0.9,
+        "recall gate failed: {recall:.3} < 0.9 — not benching a broken index"
+    );
+
+    // ---- throughput: full scan vs indexed ----
+    for k in [10usize, 100] {
+        let mut qi = 0usize;
+        b.bench_with_throughput(
+            &format!("router/full-scan/{n}/4shards/k{k}"),
+            Some(n as f64),
+            || {
+                let q = &queries[qi % queries.len()];
+                qi += 1;
+                black_box(router::topk(&store, q, k).len());
+            },
+        );
+        let mut qi = 0usize;
+        let bench_opts = QueryOpts::indexed(0, None);
+        b.bench_with_throughput(
+            &format!("router/lsh-indexed/{n}/4shards/k{k}"),
+            Some(n as f64),
+            || {
+                let q = &queries[qi % queries.len()];
+                qi += 1;
+                black_box(router::topk_with(&store, q, k, &bench_opts).len());
+            },
+        );
+    }
+
+    // ---- batched scatter on both paths ----
+    let batch: Vec<BitVec> = queries[..16].to_vec();
+    b.bench_with_throughput(
+        &format!("router/full-scan-batch16/{n}/k10"),
+        Some(16.0 * n as f64),
+        || {
+            black_box(router::topk_batch(&store, &batch, 10).len());
+        },
+    );
+    let bench_opts = QueryOpts::indexed(0, None);
+    b.bench_with_throughput(
+        &format!("router/lsh-indexed-batch16/{n}/k10"),
+        Some(16.0 * n as f64),
+        || {
+            black_box(router::topk_batch_with(&store, &batch, 10, &bench_opts).len());
+        },
+    );
+
+    b.finish();
+}

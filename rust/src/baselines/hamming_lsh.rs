@@ -10,6 +10,7 @@
 
 use super::{DimReducer, Reduced};
 use crate::data::CategoricalDataset;
+use crate::index::SortedSample;
 use crate::sketch::{BinEm, BitVec, PsiMode};
 use crate::util::parallel;
 use crate::util::rng::Xoshiro256;
@@ -30,8 +31,8 @@ impl DimReducer for HammingLsh {
         let dim = dim.min(n);
         let binem = BinEm::new(n, ds.num_categories(), PsiMode::PerAttribute, seed);
         let mut rng = Xoshiro256::new(seed ^ 0x1f5a);
-        let mut sample = rng.sample_indices(n, dim);
-        sample.sort_unstable();
+        // shared bit-sampling helper (also the LSH index's band primitive)
+        let sample = SortedSample::draw(&mut rng, n, dim);
         let mut sketches: Vec<BitVec> = vec![BitVec::zeros(dim); ds.len()];
         let sample_ref = &sample;
         parallel::par_chunks_mut(&mut sketches, parallel::default_threads(), |start, chunk| {
@@ -39,7 +40,7 @@ impl DimReducer for HammingLsh {
                 let p = &ds.points[start + off];
                 // walk the sorted nonzeros against the sorted sample
                 for &(idx, val) in p.entries() {
-                    if let Ok(pos) = sample_ref.binary_search(&(idx as usize)) {
+                    if let Some(pos) = sample_ref.rank_of(idx as usize) {
                         if binem.psi(idx as usize, val) == 1 {
                             slot.set(pos);
                         }

@@ -72,6 +72,19 @@ impl Client {
         }
     }
 
+    /// Fetch one named stats field. A field the server did not report is a
+    /// protocol-level `Err` — never a panic — so callers can probe for
+    /// version-dependent counters safely.
+    ///
+    /// Each call is a full `stats` round trip; to read several fields from
+    /// one consistent snapshot, call [`Client::stats`] once and look fields
+    /// up with [`super::metrics::stats_field`].
+    pub fn stat(&mut self, name: &str) -> Result<f64> {
+        let fields = self.stats()?;
+        super::metrics::stats_field(&fields, name)
+            .ok_or_else(|| anyhow::anyhow!("stats field '{name}' missing from response"))
+    }
+
     pub fn ping(&mut self) -> Result<()> {
         match self.call(&Request::Ping)? {
             Response::Pong => Ok(()),

@@ -4,6 +4,27 @@ use crate::util::timer::LatencyStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// LSH-index traffic counters, recorded by the router's indexed scan path
+/// (`coordinator::router::topk_with`). All lock-free; one instance lives
+/// inside [`Metrics`] but the struct is independently constructible for
+/// direct router callers and tests.
+#[derive(Default)]
+pub struct IndexCounters {
+    /// Bucket probes issued (exact + multi-probe, summed over bands).
+    pub probes: AtomicU64,
+    /// Candidate rows generated (post-dedup, pre-rerank).
+    pub candidates: AtomicU64,
+    /// Candidates actually reranked with the exact Cham estimate.
+    pub reranked: AtomicU64,
+    /// Shard scans that fell back to the full heap scan — either because
+    /// the candidate set could not guarantee `k` hits (recall-side
+    /// trigger) or because it covered more than half the shard and a
+    /// rerank would cost more than the scan (cost-side trigger).
+    pub fallbacks: AtomicU64,
+    /// Shard scans answered from the index (no fallback).
+    pub indexed_scans: AtomicU64,
+}
+
 #[derive(Default)]
 pub struct Metrics {
     pub inserts: AtomicU64,
@@ -16,8 +37,16 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub xla_batches: AtomicU64,
     pub native_batches: AtomicU64,
+    pub index: IndexCounters,
     insert_latency: Mutex<LatencyStats>,
     query_latency: Mutex<LatencyStats>,
+}
+
+/// Non-panicking lookup in a `(name, value)` stats snapshot. Use this —
+/// never `find(..).unwrap()` — anywhere a missing field must surface as an
+/// error (or `None`) instead of a panic.
+pub fn stats_field(fields: &[(String, f64)], name: &str) -> Option<f64> {
+    fields.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
 }
 
 impl Metrics {
@@ -67,6 +96,26 @@ impl Metrics {
                 "native_batches".into(),
                 self.native_batches.load(Ordering::Relaxed) as f64,
             ),
+            (
+                "index_probes".into(),
+                self.index.probes.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "index_candidates".into(),
+                self.index.candidates.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "index_reranked".into(),
+                self.index.reranked.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "index_fallbacks".into(),
+                self.index.fallbacks.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "index_indexed_scans".into(),
+                self.index.indexed_scans.load(Ordering::Relaxed) as f64,
+            ),
         ];
         let ins = self.insert_latency.lock().unwrap().summary();
         let q = self.query_latency.lock().unwrap().summary();
@@ -101,10 +150,36 @@ mod tests {
         m.batch_items.fetch_add(10, Ordering::Relaxed);
         m.record_insert_latency(0.002);
         let snap = m.snapshot();
-        let get = |k: &str| snap.iter().find(|(n, _)| n == k).unwrap().1;
+        let get = |k: &str| {
+            stats_field(&snap, k).unwrap_or_else(|| panic!("stats field '{k}' missing"))
+        };
         assert_eq!(get("inserts"), 3.0);
         assert_eq!(m.mean_batch_size(), 5.0);
         assert!(get("insert_p50_ms") > 1.0);
+    }
+
+    #[test]
+    fn index_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.index.probes.fetch_add(24, Ordering::Relaxed);
+        m.index.candidates.fetch_add(7, Ordering::Relaxed);
+        m.index.reranked.fetch_add(7, Ordering::Relaxed);
+        m.index.fallbacks.fetch_add(1, Ordering::Relaxed);
+        m.index.indexed_scans.fetch_add(3, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert_eq!(stats_field(&snap, "index_probes"), Some(24.0));
+        assert_eq!(stats_field(&snap, "index_candidates"), Some(7.0));
+        assert_eq!(stats_field(&snap, "index_reranked"), Some(7.0));
+        assert_eq!(stats_field(&snap, "index_fallbacks"), Some(1.0));
+        assert_eq!(stats_field(&snap, "index_indexed_scans"), Some(3.0));
+    }
+
+    #[test]
+    fn stats_field_is_total_not_panicking() {
+        let fields = vec![("inserts".to_string(), 2.0)];
+        assert_eq!(stats_field(&fields, "inserts"), Some(2.0));
+        assert_eq!(stats_field(&fields, "no_such_field"), None);
+        assert_eq!(stats_field(&[], "anything"), None);
     }
 
     #[test]

@@ -5,15 +5,18 @@
 //! dataset configuration, native bit-packed otherwise), sketches land in
 //! point-balanced shard **arenas** (least-loaded by atomically reserved
 //! size), and queries — single or batched — scatter/gather across shards
-//! for top-k by estimated Hamming distance.
+//! for top-k by estimated Hamming distance, either by full arena scan or
+//! sublinearly through per-shard multi-probe Hamming-LSH candidate
+//! indexes ([`crate::index`]).
 //!
 //! ```text
 //!  TCP conn ─┐                        ┌─ shard 0 ─ SketchMatrix arena ┐
 //!  TCP conn ─┼─ protocol ─ batcher ───┼─ shard 1 ─ (row-major u64     ├─ router
-//!  TCP conn ─┘      │        │        └─ shard S-1  + weight cache)   ┘  (heap top-k,
-//!                 metrics   backend (XLA | native)                       merge)
-//!                    │
-//!                 id index: id → (shard, row), O(1) get/distance
+//!  TCP conn ─┘      │        │        └─ shard S-1  + weight cache    ┘  (heap top-k,
+//!                 metrics   backend        │         + LshIndex)         merge)
+//!                    │      (XLA | native) └─ L banded bucket tables:
+//!                 id index: id → (shard, row)  candidates → Cham rerank
+//!                           O(1) get/distance  (full-scan fallback)
 //! ```
 //!
 //! Storage layout: each shard owns a [`crate::sketch::SketchMatrix`] — one
@@ -24,6 +27,20 @@
 //! and a dense global id index resolves `get`/`distance` lookups in O(1).
 //! `query_batch` requests amortise shard lock acquisition, worker spawn and
 //! per-query `|q̃|` precomputation across a whole batch of queries.
+//!
+//! Index layer: when [`crate::index::IndexConfig`] enables it (`on`, or
+//! `auto` once a shard is large enough), each shard also carries an
+//! [`crate::index::LshIndex`] — `L` bands of `b` sampled sketch-bit
+//! positions hashed into bucket tables, maintained incrementally under
+//! the same shard lock: inserts append, and every rebalance move mirrors
+//! its trailing-row pop/append into the two indexes (O(L)). The router
+//! gathers bucket candidates (multi-probing the lowest-confidence bits),
+//! reranks them with the exact Cham estimate on borrowed arena rows, and
+//! falls back to the full heap scan whenever the candidate set cannot
+//! guarantee `k` hits or covers most of the shard anyway — so the index
+//! can never shrink a result set and never costs more than a small
+//! constant over the scan. Traffic is observable via the `index_*`
+//! counters and the `index_cfg_*` fields of the `stats` response.
 //!
 //! Robustness: `k == 0` and malformed batch elements are rejected at the
 //! protocol layer with error responses; the top-k kernel itself treats
@@ -47,6 +64,11 @@ pub mod store;
 pub mod topk;
 
 pub use batcher::{BatcherConfig, SketchBackend};
+pub use metrics::{stats_field, IndexCounters, Metrics};
 pub use protocol::{Request, Response};
 pub use server::{Coordinator, CoordinatorConfig};
 pub use topk::TopK;
+
+// The index knobs travel with the coordinator config; re-export them so
+// service users need only one import path.
+pub use crate::index::{IndexConfig, IndexMode};

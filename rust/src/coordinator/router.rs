@@ -1,36 +1,141 @@
 //! Query router: scatter a query sketch to every shard, compute local
-//! top-k by estimated Hamming distance (occupancy-inversion Cham) over the
-//! shard's contiguous arena, merge.
+//! top-k by estimated Hamming distance (occupancy-inversion Cham), merge.
 //!
-//! The per-shard scan borrows arena rows as `&[u64]` and feeds them to the
-//! word-slice popcount kernels — no clone, no pointer chase — and selects
-//! with the bounded heap in [`super::topk`]: one comparison against the
-//! current k-th-best per candidate, O(log k) only on improvement.
-//! Candidate weights come from the arena's per-row cache, so each
-//! candidate costs exactly one popcount pass (the AND with the query).
+//! Two per-shard scan paths, chosen by [`QueryOpts`]:
+//!
+//! * **Full scan** — walk the shard's contiguous arena. Rows are borrowed
+//!   as `&[u64]` and fed to the word-slice popcount kernels — no clone, no
+//!   pointer chase — and selected with the bounded heap in [`super::topk`]:
+//!   one comparison against the current k-th-best per candidate, O(log k)
+//!   only on improvement. Candidate weights come from the arena's per-row
+//!   cache, so each candidate costs exactly one popcount pass.
+//! * **Indexed** — when the shard carries an [`crate::index::LshIndex`]
+//!   and holds at least `min_rows_for_index` rows, gather candidate rows
+//!   from the index's banded multi-probe buckets and rerank only those
+//!   with the exact Cham estimate (same borrowed-row kernel). If the
+//!   candidate set cannot guarantee `min(k, rows)` hits — or covers more
+//!   than half the shard, where reranking would cost more than scanning —
+//!   the shard *falls back* to the full scan, so an indexed query never
+//!   returns fewer hits than an unindexed one and never pays more than a
+//!   small constant over the scan: the index can only trade recall inside
+//!   the top-k, never result count.
 //!
 //! [`topk_batch`] amortises the scatter: one shard-lock acquisition and one
 //! set of spawned workers serve a whole batch of queries, with per-query
 //! `|q̃|` precomputed once.
 
+use super::metrics::IndexCounters;
 use super::store::{Shard, ShardedStore};
 use super::topk::TopK;
 use crate::coordinator::protocol::Hit;
 use crate::sketch::bitvec::and_count_words;
 use crate::sketch::cham::binhamming_from_stats;
 use crate::sketch::BitVec;
+use std::sync::atomic::Ordering;
 
-/// Local top-k on one shard. Returns (id, estimated categorical HD),
-/// ascending. `k == 0` returns empty.
-fn shard_topk(shard: &Shard, query: &BitVec, wq: f64, k: usize, d: usize) -> Vec<Hit> {
+/// Per-query routing options: whether (and from what shard size) to use
+/// the shard LSH indexes, and where to record index traffic.
+#[derive(Clone, Copy)]
+pub struct QueryOpts<'a> {
+    /// Use a shard's index only when it holds at least this many rows.
+    /// `usize::MAX` never uses the index (the pre-index behaviour), `0`
+    /// always does. Derive from `IndexConfig::min_rows_for_index()`.
+    pub min_rows_for_index: usize,
+    /// Index counters to record probe/candidate/fallback traffic into.
+    pub counters: Option<&'a IndexCounters>,
+}
+
+impl<'a> QueryOpts<'a> {
+    /// Full-scan only — the exact, O(corpus) path.
+    pub fn full_scan() -> Self {
+        Self {
+            min_rows_for_index: usize::MAX,
+            counters: None,
+        }
+    }
+
+    /// Use shard indexes wherever present on shards with ≥ `min_rows`
+    /// rows, recording traffic into `counters` when provided.
+    pub fn indexed(min_rows: usize, counters: Option<&'a IndexCounters>) -> Self {
+        Self {
+            min_rows_for_index: min_rows,
+            counters,
+        }
+    }
+}
+
+/// Cham-score the given arena rows of one shard against the query and keep
+/// the best `k` — the single scoring kernel shared by the full scan (all
+/// rows) and the indexed rerank (candidate rows), so the two paths can
+/// never drift in distance semantics.
+fn score_rows(
+    shard: &Shard,
+    rows: impl Iterator<Item = usize>,
+    query_words: &[u64],
+    wq: f64,
+    k: usize,
+    d: usize,
+) -> Vec<Hit> {
     let mut best = TopK::new(k);
-    let query_words = query.words();
-    for (row, &id) in shard.ids.iter().enumerate() {
+    for row in rows {
         let ip = and_count_words(query_words, shard.rows.row(row)) as f64;
         let dist = 2.0 * binhamming_from_stats(wq, shard.rows.weight(row) as f64, ip, d);
-        best.offer(id, dist);
+        best.offer(shard.ids[row], dist);
     }
     best.into_sorted_hits()
+}
+
+/// Local top-k on one shard (full scan). Returns (id, estimated
+/// categorical HD), ascending. `k == 0` returns empty.
+fn shard_topk(shard: &Shard, query: &BitVec, wq: f64, k: usize, d: usize) -> Vec<Hit> {
+    score_rows(shard, 0..shard.ids.len(), query.words(), wq, k, d)
+}
+
+/// Local top-k on one shard through the LSH index when present and
+/// warranted: generate candidates, rerank them with the exact Cham
+/// estimate on borrowed arena rows, and fall back to the full heap scan
+/// whenever the candidate set cannot guarantee `min(k, rows)` hits — or
+/// covers more than half the shard, where candidate generation plus a
+/// near-full rerank would be strictly slower than the plain arena walk
+/// (duplicate-heavy or single-cluster corpora collapse into one bucket).
+fn shard_topk_with(
+    shard: &Shard,
+    query: &BitVec,
+    wq: f64,
+    k: usize,
+    d: usize,
+    opts: &QueryOpts,
+) -> Vec<Hit> {
+    let rows = shard.ids.len();
+    if let Some(ix) = shard.index.as_ref() {
+        if rows >= opts.min_rows_for_index {
+            let (cands, probes) = ix.candidates(query.words());
+            if let Some(c) = opts.counters {
+                c.probes.fetch_add(probes as u64, Ordering::Relaxed);
+                c.candidates.fetch_add(cands.len() as u64, Ordering::Relaxed);
+            }
+            let covers_k = cands.len() >= k.min(rows);
+            let beats_scan = cands.len() * 2 <= rows;
+            if covers_k && beats_scan {
+                if let Some(c) = opts.counters {
+                    c.indexed_scans.fetch_add(1, Ordering::Relaxed);
+                    c.reranked.fetch_add(cands.len() as u64, Ordering::Relaxed);
+                }
+                return score_rows(
+                    shard,
+                    cands.iter().map(|&r| r as usize),
+                    query.words(),
+                    wq,
+                    k,
+                    d,
+                );
+            }
+            if let Some(c) = opts.counters {
+                c.fallbacks.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    shard_topk(shard, query, wq, k, d)
 }
 
 /// Merge per-shard partials for one query: ascending by `(dist, id)` under
@@ -51,23 +156,40 @@ fn merge(partials: Vec<Vec<Hit>>, k: usize) -> Vec<Hit> {
     merged
 }
 
-/// Scatter/gather top-k across all shards (parallel, one thread per shard).
-/// `k == 0` is a no-op returning no hits — never a panic.
+/// Scatter/gather top-k across all shards (parallel, one thread per shard),
+/// full-scan only. `k == 0` is a no-op returning no hits — never a panic.
 pub fn topk(store: &ShardedStore, query: &BitVec, k: usize) -> Vec<Hit> {
+    topk_with(store, query, k, &QueryOpts::full_scan())
+}
+
+/// Scatter/gather top-k with explicit routing options (the coordinator's
+/// entry point: index on/auto/off comes in through `opts`).
+pub fn topk_with(store: &ShardedStore, query: &BitVec, k: usize, opts: &QueryOpts) -> Vec<Hit> {
     if k == 0 {
         return Vec::new();
     }
     let d = store.sketch_dim();
     let wq = query.count_ones() as f64;
-    let partials = store.par_map_shards(|shard| shard_topk(shard, query, wq, k, d));
+    let partials = store.par_map_shards(|shard| shard_topk_with(shard, query, wq, k, d, opts));
     merge(partials, k)
 }
 
 /// Batched scatter/gather: every shard worker answers all queries in one
 /// visit, so shard lock acquisition, thread spawn and the `|q̃|`
 /// precomputation are paid once per batch instead of once per query.
-/// Returns one ascending hit list per query, in query order.
+/// Returns one ascending hit list per query, in query order. Full-scan
+/// only; the coordinator uses [`topk_batch_with`].
 pub fn topk_batch(store: &ShardedStore, queries: &[BitVec], k: usize) -> Vec<Vec<Hit>> {
+    topk_batch_with(store, queries, k, &QueryOpts::full_scan())
+}
+
+/// Batched scatter/gather with explicit routing options.
+pub fn topk_batch_with(
+    store: &ShardedStore,
+    queries: &[BitVec],
+    k: usize,
+    opts: &QueryOpts,
+) -> Vec<Vec<Hit>> {
     if k == 0 || queries.is_empty() {
         return queries.iter().map(|_| Vec::new()).collect();
     }
@@ -78,7 +200,7 @@ pub fn topk_batch(store: &ShardedStore, queries: &[BitVec], k: usize) -> Vec<Vec
         queries
             .iter()
             .zip(&wqs)
-            .map(|(q, &wq)| shard_topk(shard, q, wq, k, d))
+            .map(|(q, &wq)| shard_topk_with(shard, q, wq, k, d, opts))
             .collect()
     });
     (0..queries.len())
@@ -207,6 +329,104 @@ mod tests {
         let d01 = distance(&store, 0, 1).unwrap();
         let d10 = distance(&store, 1, 0).unwrap();
         assert!((d01 - d10).abs() < 1e-9);
+    }
+
+    fn indexed_store_with(points: &[BitVec]) -> ShardedStore {
+        let cfg = crate::index::IndexConfig {
+            mode: crate::index::IndexMode::On,
+            ..Default::default()
+        };
+        let store = ShardedStore::with_index(3, points[0].len(), &cfg, 17);
+        for p in points.chunks(4) {
+            store.insert_batch(p.to_vec());
+        }
+        store
+    }
+
+    #[test]
+    fn indexed_topk_finds_the_planted_neighbour() {
+        let mut rng = Xoshiro256::new(31);
+        let d = 256;
+        let mut pts: Vec<BitVec> = (0..60)
+            .map(|_| BitVec::from_indices(d, rng.sample_indices(d, 40)))
+            .collect();
+        let query = BitVec::from_indices(d, rng.sample_indices(d, 40));
+        let mut near = query.clone();
+        near.set(0);
+        pts[13] = near;
+        let store = indexed_store_with(&pts);
+        let hits = topk_with(&store, &query, 5, &QueryOpts::indexed(0, None));
+        assert_eq!(hits.len(), 5, "fallback must guarantee k hits");
+        assert_eq!(hits[0].id, 13, "{hits:?}");
+        for w in hits.windows(2) {
+            assert!(w[0].dist <= w[1].dist);
+        }
+    }
+
+    #[test]
+    fn indexed_fallback_guarantees_full_result_count() {
+        // k larger than any plausible candidate set: every shard must fall
+        // back and the indexed path must return exactly min(k, n) hits.
+        let mut rng = Xoshiro256::new(32);
+        let pts: Vec<BitVec> = (0..25)
+            .map(|_| BitVec::from_indices(128, rng.sample_indices(128, 20)))
+            .collect();
+        let store = indexed_store_with(&pts);
+        let counters = IndexCounters::default();
+        let opts = QueryOpts::indexed(0, Some(&counters));
+        let hits = topk_with(&store, &pts[0], 25, &opts);
+        let mut ids: Vec<usize> = hits.iter().map(|h| h.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..25).collect::<Vec<_>>());
+        assert!(counters.probes.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn indexed_batch_matches_indexed_single() {
+        let mut rng = Xoshiro256::new(33);
+        let d = 256;
+        let pts: Vec<BitVec> = (0..40)
+            .map(|_| BitVec::from_indices(d, rng.sample_indices(d, 40)))
+            .collect();
+        let store = indexed_store_with(&pts);
+        let opts = QueryOpts::indexed(0, None);
+        let queries: Vec<BitVec> = pts[..6].to_vec();
+        let batched = topk_batch_with(&store, &queries, 4, &opts);
+        for (q, batch_hits) in queries.iter().zip(&batched) {
+            assert_eq!(&topk_with(&store, q, 4, &opts), batch_hits);
+        }
+    }
+
+    #[test]
+    fn min_rows_threshold_gates_the_index_path() {
+        let mut rng = Xoshiro256::new(34);
+        let pts: Vec<BitVec> = (0..30)
+            .map(|_| BitVec::from_indices(128, rng.sample_indices(128, 20)))
+            .collect();
+        let store = indexed_store_with(&pts);
+        // threshold above every shard size → pure full scan, no counters
+        let counters = IndexCounters::default();
+        let opts = QueryOpts::indexed(1_000_000, Some(&counters));
+        let gated = topk_with(&store, &pts[0], 5, &opts);
+        assert_eq!(gated, topk(&store, &pts[0], 5));
+        assert_eq!(counters.probes.load(Ordering::Relaxed), 0);
+        assert_eq!(counters.fallbacks.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn counters_account_every_indexed_shard_scan() {
+        let mut rng = Xoshiro256::new(35);
+        let pts: Vec<BitVec> = (0..45)
+            .map(|_| BitVec::from_indices(256, rng.sample_indices(256, 40)))
+            .collect();
+        let store = indexed_store_with(&pts);
+        let counters = IndexCounters::default();
+        let opts = QueryOpts::indexed(0, Some(&counters));
+        let _ = topk_with(&store, &pts[7], 3, &opts);
+        let scans = counters.indexed_scans.load(Ordering::Relaxed)
+            + counters.fallbacks.load(Ordering::Relaxed);
+        assert_eq!(scans, store.num_shards() as u64);
+        assert!(counters.probes.load(Ordering::Relaxed) >= scans);
     }
 
     #[test]

@@ -6,6 +6,7 @@ use super::metrics::Metrics;
 use super::protocol::{Request, Response};
 use super::router;
 use super::store::ShardedStore;
+use crate::index::IndexConfig;
 use crate::runtime::XlaHandle;
 use crate::sketch::{CabinSketcher, SketchConfig};
 use crate::util::timer::Stopwatch;
@@ -28,6 +29,9 @@ pub struct CoordinatorConfig {
     pub use_xla: bool,
     /// Refuse heatmap requests above this corpus size (they are O(n²)).
     pub heatmap_limit: usize,
+    /// Sublinear query path: per-shard multi-probe Hamming-LSH candidate
+    /// indexes (auto / on / off, plus banding parameters).
+    pub index: IndexConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -41,6 +45,7 @@ impl Default for CoordinatorConfig {
             batcher: BatcherConfig::default(),
             use_xla: true,
             heatmap_limit: 4096,
+            index: IndexConfig::default(),
         }
     }
 }
@@ -57,8 +62,17 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    pub fn new(config: CoordinatorConfig) -> Coordinator {
-        let store = Arc::new(ShardedStore::new(config.num_shards, config.sketch_dim));
+    pub fn new(mut config: CoordinatorConfig) -> Coordinator {
+        // Pin the index knobs to what the shards will actually build
+        // (band_bits clamps to min(64, sketch_dim), bands to ≥ 1), so the
+        // `index_cfg_*` stats fields always describe the live indexes.
+        config.index = config.index.normalized(config.sketch_dim);
+        let store = Arc::new(ShardedStore::with_index(
+            config.num_shards,
+            config.sketch_dim,
+            &config.index,
+            config.seed,
+        ));
         let metrics = Arc::new(Metrics::new());
         let sk_cfg = SketchConfig::new(
             config.input_dim,
@@ -106,6 +120,15 @@ impl Coordinator {
         }
     }
 
+    /// Routing options for this coordinator's query path: index usage per
+    /// the configured mode, traffic recorded into the service metrics.
+    fn query_opts(&self) -> router::QueryOpts<'_> {
+        router::QueryOpts::indexed(
+            self.config.index.min_rows_for_index(),
+            Some(&self.metrics.index),
+        )
+    }
+
     /// Dispatch one request (thread-safe).
     pub fn handle_request(&self, req: Request) -> Response {
         match req {
@@ -134,7 +157,7 @@ impl Coordinator {
                 let sw = Stopwatch::start();
                 self.metrics.queries.fetch_add(1, Ordering::Relaxed);
                 let q = self.sketcher.sketch(&vec);
-                let hits = router::topk(&self.store, &q, k);
+                let hits = router::topk_with(&self.store, &q, k, &self.query_opts());
                 self.metrics.record_query_latency(sw.elapsed_secs());
                 Response::Hits { hits }
             }
@@ -144,7 +167,7 @@ impl Coordinator {
                 self.metrics.queries.fetch_add(n as u64, Ordering::Relaxed);
                 self.metrics.query_batches.fetch_add(1, Ordering::Relaxed);
                 let qs: Vec<_> = vecs.iter().map(|v| self.sketcher.sketch(v)).collect();
-                let results = router::topk_batch(&self.store, &qs, k);
+                let results = router::topk_batch_with(&self.store, &qs, k, &self.query_opts());
                 // per-query latency, so single and batched queries compare
                 self.metrics
                     .record_query_latency(sw.elapsed_secs() / n.max(1) as f64);
@@ -182,9 +205,12 @@ impl Coordinator {
                     values: hm.values,
                 }
             }
-            Request::Stats => Response::Stats {
-                fields: self.metrics.snapshot(),
-            },
+            Request::Stats => {
+                // traffic counters plus the (read-only) index configuration
+                let mut fields = self.metrics.snapshot();
+                fields.extend(self.config.index.stats_fields());
+                Response::Stats { fields }
+            }
         }
     }
 
@@ -371,12 +397,66 @@ mod tests {
         }
         match c.handle_request(Request::Stats) {
             Response::Stats { fields } => {
-                let get = |k: &str| fields.iter().find(|(n, _)| n == k).unwrap().1;
+                // total lookup (None on absence), not find(..).unwrap()
+                let get = |k: &str| {
+                    super::super::metrics::stats_field(&fields, k)
+                        .unwrap_or_else(|| panic!("stats field '{k}' missing: {fields:?}"))
+                };
                 assert_eq!(get("inserts"), 2.0);
                 assert_eq!(get("distances"), 1.0);
+                // the index configuration rides along in every Stats reply
+                assert_eq!(get("index_cfg_bands"), 8.0);
+                assert!(get("index_cfg_mode") >= 0.0);
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn index_on_serves_queries_and_counts_traffic() {
+        use crate::index::{IndexConfig, IndexMode};
+        let cfg = CoordinatorConfig {
+            index: IndexConfig {
+                mode: IndexMode::On,
+                ..Default::default()
+            },
+            ..test_config()
+        };
+        let c = Coordinator::new(cfg);
+        let mut rng = Xoshiro256::new(9);
+        let vecs: Vec<CatVector> = (0..20)
+            .map(|_| CatVector::random(600, 40, 10, &mut rng))
+            .collect();
+        let mut ids = Vec::new();
+        for v in &vecs {
+            match c.handle_request(Request::Insert { vec: v.clone() }) {
+                Response::Inserted { id } => ids.push(id),
+                other => panic!("{other:?}"),
+            }
+        }
+        // an inserted vector sketches identically → collides in every band
+        // → it is always its own top hit, indexed or fallen back
+        for (i, v) in vecs.iter().enumerate().take(5) {
+            match c.handle_request(Request::Query {
+                vec: v.clone(),
+                k: 3,
+            }) {
+                Response::Hits { hits } => {
+                    assert_eq!(hits.len(), 3);
+                    assert_eq!(hits[0].id, ids[i], "{hits:?}");
+                    assert!(hits[0].dist < 1e-9, "{hits:?}");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // every shard scan went through the index path (mode = On)
+        let m = &c.metrics.index;
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(m.probes.load(Relaxed) > 0);
+        assert_eq!(
+            m.indexed_scans.load(Relaxed) + m.fallbacks.load(Relaxed),
+            5 * c.store.num_shards() as u64
+        );
     }
 
     #[test]

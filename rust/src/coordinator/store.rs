@@ -21,6 +21,7 @@
 //! ascending shard order. Scan paths (`map_shards`/`par_map_shards`) touch
 //! only shard locks.
 
+use crate::index::{IndexConfig, LshIndex};
 use crate::sketch::bitvec::and_count_words;
 use crate::sketch::{BitVec, SketchMatrix};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -34,6 +35,10 @@ const VACANT: Slot = (u32::MAX, u32::MAX);
 pub struct Shard {
     pub ids: Vec<usize>,
     pub rows: SketchMatrix,
+    /// Optional per-shard LSH candidate index over `rows` (None when the
+    /// store was built without indexing). Guarded by the same shard lock
+    /// as the arena, so index and rows can never be observed out of step.
+    pub index: Option<LshIndex>,
 }
 
 pub struct ShardedStore {
@@ -51,12 +56,33 @@ pub struct ShardedStore {
 
 impl ShardedStore {
     pub fn new(num_shards: usize, sketch_dim: usize) -> Self {
+        Self::build(num_shards, sketch_dim, None)
+    }
+
+    /// A store whose shards each carry an [`LshIndex`] (unless the config's
+    /// mode is `Off`). All shards derive their band samples from the same
+    /// `seed`, so a rebuilt or rebalanced shard buckets rows exactly like a
+    /// freshly grown one.
+    pub fn with_index(
+        num_shards: usize,
+        sketch_dim: usize,
+        cfg: &IndexConfig,
+        seed: u64,
+    ) -> Self {
+        let index = cfg.enabled().then(|| (*cfg, seed));
+        Self::build(num_shards, sketch_dim, index)
+    }
+
+    fn build(num_shards: usize, sketch_dim: usize, index: Option<(IndexConfig, u64)>) -> Self {
         Self {
             shards: (0..num_shards.max(1))
                 .map(|_| {
                     RwLock::new(Shard {
                         ids: Vec::new(),
                         rows: SketchMatrix::new(sketch_dim),
+                        index: index
+                            .as_ref()
+                            .map(|(cfg, seed)| LshIndex::new(cfg, sketch_dim, *seed)),
                     })
                 })
                 .collect(),
@@ -113,6 +139,10 @@ impl ShardedStore {
             let row = shard.rows.len() as u32;
             shard.ids.push(start + offset);
             shard.rows.push(sketch);
+            // mirror the arena append into the LSH index (same write lock)
+            if let Some(ix) = shard.index.as_mut() {
+                ix.insert(row as usize, sketch.words());
+            }
             index[start + offset] = (target as u32, row);
         }
         ids
@@ -280,12 +310,30 @@ impl ShardedStore {
             } else {
                 (second, first)
             };
+            // Split the guards into disjoint field borrows so the LSH
+            // indexes can be maintained against the arenas in the same
+            // pass. Each move pops src's *trailing* row and appends it to
+            // dst, so existing row positions in both arenas are untouched:
+            // the indexes follow along incrementally — O(L) per moved row
+            // (`remove_last` + `insert`), not an O(rows · L) rebuild —
+            // all under the write locks, so no reader can observe an
+            // index out of step with its arena.
+            let src = &mut *src;
+            let dst = &mut *dst;
             let mut moved_here = 0;
             for _ in 0..take {
                 let Some(id) = src.ids.pop() else { break };
                 src.rows.move_last_row_to(&mut dst.rows);
                 dst.ids.push(id);
-                index[id] = (min_i as u32, (dst.ids.len() - 1) as u32);
+                let new_row = dst.rows.len() - 1;
+                let words = dst.rows.row(new_row);
+                if let Some(ix) = src.index.as_mut() {
+                    ix.remove_last(words);
+                }
+                if let Some(ix) = dst.index.as_mut() {
+                    ix.insert(new_row, words);
+                }
+                index[id] = (min_i as u32, new_row as u32);
                 moved_here += 1;
             }
             // keep the placement reservations exact across moves
@@ -477,6 +525,77 @@ mod tests {
         assert_eq!(m.len(), 11);
         for (i, p) in pts.iter().enumerate() {
             assert_eq!(m.row_bitvec(i), *p, "row {i}");
+        }
+    }
+
+    fn on_cfg() -> IndexConfig {
+        IndexConfig {
+            mode: crate::index::IndexMode::On,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn indexed_store_mirrors_every_insert() {
+        let store = ShardedStore::with_index(3, 128, &on_cfg(), 7);
+        let mut rng = Xoshiro256::new(21);
+        for _ in 0..6 {
+            store.insert_batch((0..5).map(|_| sk(&mut rng, 128)).collect());
+        }
+        for (rows, ix_len) in
+            store.map_shards(|s| (s.ids.len(), s.index.as_ref().map(|ix| ix.len())))
+        {
+            assert_eq!(ix_len, Some(rows), "index out of step with arena");
+        }
+    }
+
+    #[test]
+    fn index_off_builds_no_shard_indexes() {
+        let off = IndexConfig {
+            mode: crate::index::IndexMode::Off,
+            ..Default::default()
+        };
+        let store = ShardedStore::with_index(2, 64, &off, 7);
+        assert!(store
+            .map_shards(|s| s.index.is_none())
+            .into_iter()
+            .all(|none| none));
+        // plain `new` likewise
+        let plain = ShardedStore::new(2, 64);
+        assert!(plain
+            .map_shards(|s| s.index.is_none())
+            .into_iter()
+            .all(|none| none));
+    }
+
+    #[test]
+    fn rebalance_keeps_shard_indexes_consistent() {
+        let store = ShardedStore::with_index(2, 128, &on_cfg(), 5);
+        let mut rng = Xoshiro256::new(22);
+        // one big batch lands on a single shard → rebalance must move rows
+        let pts: Vec<BitVec> = (0..40).map(|_| sk(&mut rng, 128)).collect();
+        store.insert_batch(pts.clone());
+        assert!(store.rebalance(1) > 0);
+        // incrementally maintained indexes track the post-move arenas...
+        for (shard_rows, ix_len) in
+            store.map_shards(|s| (s.ids.len(), s.index.as_ref().map(|ix| ix.len())))
+        {
+            assert_eq!(ix_len, Some(shard_rows));
+        }
+        // ...and every moved row is still findable through its new shard's
+        // index (an exact-duplicate query must collide in every band).
+        for (i, p) in pts.iter().enumerate() {
+            let (s, r) = store.locate(i).unwrap();
+            let found = store.map_shards(|sh| {
+                sh.index
+                    .as_ref()
+                    .map(|ix| ix.candidates(p.words()).0)
+                    .unwrap_or_default()
+            });
+            assert!(
+                found[s].binary_search(&(r as u32)).is_ok(),
+                "id {i} missing from shard {s} index after rebalance"
+            );
         }
     }
 

@@ -1,0 +1,394 @@
+//! The banded multi-probe bit-sampling LSH index over packed sketch rows.
+//!
+//! One [`LshIndex`] serves one [`SketchMatrix`] arena (a coordinator
+//! shard): `L` bands, each holding an independent [`SortedSample`] of `b`
+//! sketch-bit positions and a `key → rows` bucket table. Row identifiers
+//! are *positional* (the arena row number), which keeps insertion O(L);
+//! rebalance moves always pop an arena's trailing row, so the index
+//! follows them with [`LshIndex::remove_last`] + [`LshIndex::insert`] —
+//! O(L) per move — and [`LshIndex::rebuild`] remains as a bulk fallback
+//! (see `coordinator::store`).
+//!
+//! Multi-probe: each band also maintains per-sampled-bit set counts over
+//! the indexed rows. At query time the `probes` extra buckets per band are
+//! the single-bit flips of the query key at the *lowest-confidence* bits —
+//! the sampled positions whose empirical set-frequency is closest to 1/2.
+//! Those bits split the corpus most evenly, so they are precisely the bits
+//! a true near neighbour is most likely to land on the other side of;
+//! flipping them first buys the most recall per extra bucket probe
+//! (the standard multi-probe LSH argument, specialised to binary keys).
+
+use super::config::IndexConfig;
+use super::sample::SortedSample;
+use crate::sketch::SketchMatrix;
+use crate::util::rng::{mix64, Xoshiro256};
+use std::collections::HashMap;
+
+/// One band: an independent bit sample, its bucket table, and the per-bit
+/// set counts that drive multi-probe ordering.
+#[derive(Debug)]
+struct Band {
+    sample: SortedSample,
+    /// `ones[j]` = number of indexed rows whose sampled bit `j` is set.
+    ones: Vec<u32>,
+    /// Band key → arena row numbers (insertion order within a bucket).
+    table: HashMap<u64, Vec<u32>>,
+}
+
+impl Band {
+    fn clear(&mut self) {
+        self.table.clear();
+        for c in self.ones.iter_mut() {
+            *c = 0;
+        }
+    }
+}
+
+/// Banded multi-probe Hamming-LSH index over one sketch arena.
+#[derive(Debug)]
+pub struct LshIndex {
+    bands: Vec<Band>,
+    probes: usize,
+    rows: usize,
+}
+
+impl LshIndex {
+    /// Build an empty index for `sketch_bits`-bit rows. The band samples
+    /// are derived deterministically from `seed`, so every shard of a
+    /// store (and a rebuilt index) samples the same positions.
+    pub fn new(cfg: &IndexConfig, sketch_bits: usize, seed: u64) -> Self {
+        let cfg = cfg.normalized(sketch_bits);
+        let bands = (0..cfg.bands)
+            .map(|i| {
+                let mut rng = Xoshiro256::new(mix64(seed ^ 0xB175_A3C0 ^ ((i as u64) << 20)));
+                let sample = SortedSample::draw(&mut rng, sketch_bits.max(1), cfg.band_bits);
+                Band {
+                    ones: vec![0; sample.len()],
+                    table: HashMap::new(),
+                    sample,
+                }
+            })
+            .collect();
+        Self {
+            bands,
+            probes: cfg.probes,
+            rows: 0,
+        }
+    }
+
+    /// Number of indexed rows.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Number of bands (`L`).
+    pub fn num_bands(&self) -> usize {
+        self.bands.len()
+    }
+
+    /// Index the packed words of arena row `row`. Rows must be inserted in
+    /// arena order (`row == len()`), mirroring `SketchMatrix::push`.
+    pub fn insert(&mut self, row: usize, words: &[u64]) {
+        debug_assert_eq!(row, self.rows, "index rows must mirror arena order");
+        for band in &mut self.bands {
+            let key = band.sample.key_of_words(words);
+            let mut set = key;
+            while set != 0 {
+                band.ones[set.trailing_zeros() as usize] += 1;
+                set &= set - 1;
+            }
+            band.table.entry(key).or_default().push(row as u32);
+        }
+        self.rows += 1;
+    }
+
+    /// Un-index the most recently indexed row (`len() - 1`), given its
+    /// packed words — the exact inverse of [`LshIndex::insert`]. Rebalance
+    /// moves pop an arena's *trailing* row, so trailing removal is the
+    /// only removal shape the store ever needs, and it keeps a move
+    /// O(L) instead of an O(rows · L) rebuild.
+    pub fn remove_last(&mut self, words: &[u64]) {
+        debug_assert!(self.rows > 0, "remove_last on an empty index");
+        let row = (self.rows - 1) as u32;
+        for band in &mut self.bands {
+            let key = band.sample.key_of_words(words);
+            let mut set = key;
+            while set != 0 {
+                band.ones[set.trailing_zeros() as usize] -= 1;
+                set &= set - 1;
+            }
+            if let Some(bucket) = band.table.get_mut(&key) {
+                if let Some(pos) = bucket.iter().rposition(|&r| r == row) {
+                    bucket.swap_remove(pos);
+                }
+                if bucket.is_empty() {
+                    band.table.remove(&key);
+                }
+            }
+        }
+        self.rows -= 1;
+    }
+
+    /// Drop every bucket and re-index the arena from scratch (bulk
+    /// reconstruction). The band samples are retained, so a rebuilt index
+    /// answers queries identically to one grown incrementally over the
+    /// same rows.
+    pub fn rebuild(&mut self, matrix: &SketchMatrix) {
+        for band in &mut self.bands {
+            band.clear();
+        }
+        self.rows = 0;
+        for (row, words) in matrix.rows().enumerate() {
+            self.insert(row, words);
+        }
+    }
+
+    /// Candidate arena rows for a query's packed words: the union of the
+    /// exact bucket per band plus up to `probes` lowest-confidence
+    /// single-bit-flip buckets per band. Returns the sorted, deduplicated
+    /// candidate rows and the number of bucket probes issued.
+    pub fn candidates(&self, query_words: &[u64]) -> (Vec<u32>, usize) {
+        let mut out: Vec<u32> = Vec::new();
+        let mut probes_issued = 0usize;
+        let total = self.rows as f64;
+        for band in &self.bands {
+            let key = band.sample.key_of_words(query_words);
+            probes_issued += 1;
+            if let Some(bucket) = band.table.get(&key) {
+                out.extend_from_slice(bucket);
+            }
+            if self.probes == 0 || band.sample.is_empty() {
+                continue;
+            }
+            // flip order: ascending margin |p̂ - 1/2| of each sampled bit's
+            // empirical set-frequency — least-informative bits first, ties
+            // by ascending bit rank. `probes` is small, so repeated linear
+            // minimum scans over ≤ 64 counters beat sorting (and allocate
+            // nothing on the query hot path); `chosen` marks picked bits.
+            let take = self.probes.min(band.sample.len());
+            let mut chosen: u64 = 0;
+            for _ in 0..take {
+                let mut best_j = 0usize;
+                let mut best_margin = f64::INFINITY;
+                for (j, &c) in band.ones.iter().enumerate() {
+                    if (chosen >> j) & 1 == 1 {
+                        continue;
+                    }
+                    let p = if self.rows == 0 { 0.0 } else { c as f64 / total };
+                    let margin = (p - 0.5).abs();
+                    if margin < best_margin {
+                        best_margin = margin;
+                        best_j = j;
+                    }
+                }
+                chosen |= 1u64 << best_j;
+                probes_issued += 1;
+                if let Some(bucket) = band.table.get(&(key ^ (1u64 << best_j))) {
+                    out.extend_from_slice(bucket);
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        (out, probes_issued)
+    }
+
+    /// Rough memory footprint in bytes (buckets + counters + samples).
+    pub fn memory_bytes(&self) -> usize {
+        self.bands
+            .iter()
+            .map(|b| {
+                b.table
+                    .values()
+                    .map(|v| 8 + v.len() * 4)
+                    .sum::<usize>()
+                    + b.ones.len() * 4
+                    + b.sample.len() * 8
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::config::IndexMode;
+    use crate::sketch::BitVec;
+
+    const DIM: usize = 256;
+
+    fn cfg() -> IndexConfig {
+        IndexConfig {
+            mode: IndexMode::On,
+            ..Default::default()
+        }
+    }
+
+    fn random_rows(seed: u64, n: usize, ones: usize) -> Vec<BitVec> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| BitVec::from_indices(DIM, rng.sample_indices(DIM, ones)))
+            .collect()
+    }
+
+    fn flip_bits(v: &BitVec, flips: &[usize]) -> BitVec {
+        let mut out = v.clone();
+        for &i in flips {
+            if out.get(i) {
+                out.clear(i);
+            } else {
+                out.set(i);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn exact_duplicates_always_collide() {
+        let rows = random_rows(1, 60, 40);
+        let mut ix = LshIndex::new(&cfg(), DIM, 9);
+        for (i, r) in rows.iter().enumerate() {
+            ix.insert(i, r.words());
+        }
+        assert_eq!(ix.len(), 60);
+        for (i, r) in rows.iter().enumerate() {
+            let (cands, probes) = ix.candidates(r.words());
+            assert!(
+                cands.binary_search(&(i as u32)).is_ok(),
+                "row {i} missing from its own candidates"
+            );
+            // exact probe per band plus `probes` flips per band
+            assert_eq!(probes, ix.num_bands() * (1 + cfg().probes));
+        }
+    }
+
+    #[test]
+    fn near_neighbour_is_generated_as_candidate() {
+        // 2 flipped bits of 256: per-band collision ≈ (1 - 16/256)^2 ≈ 0.88,
+        // all-8-bands miss ≈ 5e-8 — deterministic seeds make this stable.
+        let rows = random_rows(2, 400, 40);
+        let mut ix = LshIndex::new(&cfg(), DIM, 5);
+        for (i, r) in rows.iter().enumerate() {
+            ix.insert(i, r.words());
+        }
+        let query = flip_bits(&rows[123], &[1, 130]);
+        let (cands, _) = ix.candidates(query.words());
+        assert!(
+            cands.binary_search(&123).is_ok(),
+            "near neighbour not generated ({} candidates)",
+            cands.len()
+        );
+    }
+
+    #[test]
+    fn rebuild_matches_incremental_build() {
+        let rows = random_rows(3, 120, 30);
+        let matrix = SketchMatrix::from_sketches(&rows);
+        let mut incremental = LshIndex::new(&cfg(), DIM, 7);
+        for (i, r) in rows.iter().enumerate() {
+            incremental.insert(i, r.words());
+        }
+        let mut rebuilt = LshIndex::new(&cfg(), DIM, 7);
+        rebuilt.rebuild(&matrix);
+        assert_eq!(rebuilt.len(), incremental.len());
+        for q in random_rows(4, 10, 30) {
+            assert_eq!(
+                incremental.candidates(q.words()),
+                rebuilt.candidates(q.words())
+            );
+        }
+        // rebuilding twice is idempotent
+        rebuilt.rebuild(&matrix);
+        assert_eq!(rebuilt.len(), rows.len());
+    }
+
+    #[test]
+    fn remove_last_is_the_exact_inverse_of_insert() {
+        let rows = random_rows(9, 40, 30);
+        let mut full = LshIndex::new(&cfg(), DIM, 3);
+        for (i, r) in rows.iter().enumerate() {
+            full.insert(i, r.words());
+        }
+        // un-index the trailing 15 rows in reverse insertion order
+        for r in rows[25..].iter().rev() {
+            full.remove_last(r.words());
+        }
+        assert_eq!(full.len(), 25);
+        let mut prefix = LshIndex::new(&cfg(), DIM, 3);
+        for (i, r) in rows[..25].iter().enumerate() {
+            prefix.insert(i, r.words());
+        }
+        // identical candidates AND probe counts (the multi-probe order is
+        // driven by the per-bit counters, which must roll back exactly)
+        for q in random_rows(10, 6, 30) {
+            assert_eq!(full.candidates(q.words()), prefix.candidates(q.words()));
+        }
+        // drain to empty and regrow — still consistent
+        for r in rows[..25].iter().rev() {
+            full.remove_last(r.words());
+        }
+        assert!(full.is_empty());
+        full.insert(0, rows[3].words());
+        assert_eq!(full.candidates(rows[3].words()).0, vec![0]);
+    }
+
+    #[test]
+    fn more_probes_generate_a_superset() {
+        let rows = random_rows(5, 300, 40);
+        let base = IndexConfig {
+            probes: 0,
+            ..cfg()
+        };
+        let probed = IndexConfig {
+            probes: 4,
+            ..cfg()
+        };
+        let mut a = LshIndex::new(&base, DIM, 13);
+        let mut b = LshIndex::new(&probed, DIM, 13);
+        for (i, r) in rows.iter().enumerate() {
+            a.insert(i, r.words());
+            b.insert(i, r.words());
+        }
+        for q in random_rows(6, 8, 40) {
+            let (small, p0) = a.candidates(q.words());
+            let (large, p4) = b.candidates(q.words());
+            assert!(p4 > p0);
+            for c in &small {
+                assert!(large.binary_search(c).is_ok(), "probing lost candidate {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_index_yields_no_candidates() {
+        let ix = LshIndex::new(&cfg(), DIM, 1);
+        let q = random_rows(7, 1, 40).pop().unwrap();
+        let (cands, probes) = ix.candidates(q.words());
+        assert!(cands.is_empty());
+        assert!(probes >= ix.num_bands());
+        assert!(ix.is_empty());
+        // 8 bands × 16 sampled bits × (4-byte counter + 8-byte position)
+        assert_eq!(ix.memory_bytes(), 8 * 16 * (4 + 8));
+    }
+
+    #[test]
+    fn oversized_band_bits_are_clamped_not_fatal() {
+        let wide = IndexConfig {
+            band_bits: 500,
+            bands: 2,
+            ..cfg()
+        };
+        let mut ix = LshIndex::new(&wide, 96, 3);
+        let mut rng = Xoshiro256::new(8);
+        let v = BitVec::from_indices(96, rng.sample_indices(96, 20));
+        ix.insert(0, v.words());
+        let (cands, _) = ix.candidates(v.words());
+        assert_eq!(cands, vec![0]);
+    }
+}

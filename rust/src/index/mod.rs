@@ -1,0 +1,48 @@
+//! Sublinear candidate generation: a banded, multi-probe bit-sampling
+//! Hamming-LSH index over [`crate::sketch::SketchMatrix`] rows.
+//!
+//! The paper's `hlsh` baseline (Section 5; Gionis–Indyk–Motwani bit
+//! sampling) is an *estimator* — sample coordinates, scale the restricted
+//! Hamming distance. The same primitive composes with Cabin sketches as a
+//! *search index*: because sketches are binary and Cham is monotone-ish in
+//! sketch Hamming distance, rows whose sampled sketch bits agree with the
+//! query's are exactly the rows likely to be close, and the sparse-binary
+//! analyses of arXiv:1910.04658 / arXiv:1612.06057 say a handful of sampled
+//! bits already carry most of the pairwise signal.
+//!
+//! Layout:
+//!
+//! ```text
+//!   band 0: b sampled bit positions ── key(ũ) ∈ {0,1}^b ──► bucket table
+//!   band 1: independent sample      ── …                 ──► bucket table
+//!   …        (L bands total; a row lands in one bucket per band)
+//! ```
+//!
+//! Querying looks up the query's key in every band, plus `probes`
+//! *multi-probe* buckets per band obtained by flipping the query key's
+//! lowest-confidence sampled bits — the bits whose empirical set-frequency
+//! over the indexed rows is closest to 1/2, i.e. the bits most likely to
+//! differ in a true near neighbour. The union of inspected buckets is the
+//! candidate set; the caller reranks candidates with the exact Cham
+//! estimate (see `coordinator::router`) and falls back to a full scan when
+//! the candidate set is too small to guarantee `k` hits or too large to
+//! beat the scan.
+//!
+//! Maintenance contract: the index lives next to its arena inside a shard
+//! (same lock) and is maintained incrementally — inserts append, and
+//! rebalance moves (which always pop an arena's trailing row) are mirrored
+//! with a trailing-row removal plus an append, O(L) each. Bulk
+//! reconstruction (`LshIndex::rebuild`) exists for recovery paths; the
+//! serving paths never need it (see `coordinator::store`).
+//!
+//! Submodules: [`config`] (tuning knobs + wire-stats view), [`sample`]
+//! (the sorted-coordinate-sample helper shared with the `hlsh` baseline),
+//! [`lsh`] (the index proper).
+
+pub mod config;
+pub mod lsh;
+pub mod sample;
+
+pub use config::{IndexConfig, IndexMode};
+pub use lsh::LshIndex;
+pub use sample::SortedSample;

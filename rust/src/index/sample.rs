@@ -1,0 +1,131 @@
+//! Sorted coordinate samples — the bit-sampling primitive shared by the
+//! `hlsh` estimator baseline ([`crate::baselines::hamming_lsh`]) and the
+//! LSH index bands ([`super::lsh`]).
+//!
+//! Both users draw `k` distinct positions from a universe of `n`
+//! coordinates and keep them sorted: the baseline walks a vector's sorted
+//! nonzeros against the sample with binary search ([`SortedSample::rank_of`]),
+//! the index gathers the sampled bits of a packed sketch row into a bucket
+//! key ([`SortedSample::key_of_words`]). Keeping one implementation stops
+//! the sampling/walk logic drifting between the two.
+
+use crate::util::rng::Xoshiro256;
+
+/// `k` distinct coordinate positions in ascending order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SortedSample {
+    positions: Vec<usize>,
+}
+
+impl SortedSample {
+    /// Draw `k` distinct positions uniformly from `[0, universe)` (clamped
+    /// to the universe size) and sort them.
+    pub fn draw(rng: &mut Xoshiro256, universe: usize, k: usize) -> Self {
+        let mut positions = rng.sample_indices(universe, k.min(universe));
+        positions.sort_unstable();
+        Self { positions }
+    }
+
+    /// Wrap explicit positions (sorted and deduplicated here).
+    pub fn from_positions(mut positions: Vec<usize>) -> Self {
+        positions.sort_unstable();
+        positions.dedup();
+        Self { positions }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    /// The sampled positions, ascending.
+    #[inline]
+    pub fn positions(&self) -> &[usize] {
+        &self.positions
+    }
+
+    /// Rank of `position` within the sample, if sampled — the sorted-sample
+    /// walk: callers iterate their sparse nonzeros and binary-search each
+    /// one here instead of materialising a dense membership table.
+    #[inline]
+    pub fn rank_of(&self, position: usize) -> Option<usize> {
+        self.positions.binary_search(&position).ok()
+    }
+
+    /// Gather the sampled bits of a packed bit row (`u64` words, LSB
+    /// first — the [`crate::sketch::BitVec`] / [`crate::sketch::SketchMatrix`]
+    /// layout) into a key: sample rank `j` becomes key bit `j`. Requires
+    /// `len() <= 64`.
+    #[inline]
+    pub fn key_of_words(&self, words: &[u64]) -> u64 {
+        debug_assert!(self.positions.len() <= 64, "band key must fit a u64");
+        let mut key = 0u64;
+        for (j, &pos) in self.positions.iter().enumerate() {
+            key |= ((words[pos >> 6] >> (pos & 63)) & 1) << j;
+        }
+        key
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::BitVec;
+
+    #[test]
+    fn draw_is_sorted_distinct_and_clamped() {
+        let mut rng = Xoshiro256::new(3);
+        let s = SortedSample::draw(&mut rng, 100, 20);
+        assert_eq!(s.len(), 20);
+        for w in s.positions().windows(2) {
+            assert!(w[0] < w[1], "{:?}", s.positions());
+        }
+        // k > universe clamps instead of panicking
+        let t = SortedSample::draw(&mut rng, 5, 64);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.positions(), &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rank_of_matches_membership() {
+        let s = SortedSample::from_positions(vec![9, 2, 40, 2, 17]);
+        assert_eq!(s.positions(), &[2, 9, 17, 40]);
+        assert_eq!(s.rank_of(2), Some(0));
+        assert_eq!(s.rank_of(17), Some(2));
+        assert_eq!(s.rank_of(40), Some(3));
+        assert_eq!(s.rank_of(3), None);
+        assert_eq!(s.rank_of(41), None);
+    }
+
+    #[test]
+    fn key_of_words_matches_bit_reads() {
+        let mut rng = Xoshiro256::new(7);
+        let bits = 200;
+        let v = BitVec::from_indices(bits, rng.sample_indices(bits, 60));
+        let s = SortedSample::draw(&mut rng, bits, 24);
+        let key = s.key_of_words(v.words());
+        for (j, &pos) in s.positions().iter().enumerate() {
+            assert_eq!((key >> j) & 1 == 1, v.get(pos), "rank {j} pos {pos}");
+        }
+        // unsampled high key bits stay zero
+        assert_eq!(key >> s.len(), 0);
+    }
+
+    #[test]
+    fn identical_rows_share_keys_differing_rows_usually_do_not() {
+        let mut rng = Xoshiro256::new(11);
+        let bits = 256;
+        let a = BitVec::from_indices(bits, rng.sample_indices(bits, 64));
+        let b = BitVec::from_indices(bits, rng.sample_indices(bits, 64));
+        let s = SortedSample::draw(&mut rng, bits, 32);
+        assert_eq!(s.key_of_words(a.words()), s.key_of_words(a.words()));
+        // two random 64/256 rows disagree on ~32 sampled bits of 32
+        // positions with overwhelming probability
+        assert_ne!(s.key_of_words(a.words()), s.key_of_words(b.words()));
+    }
+}

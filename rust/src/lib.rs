@@ -11,9 +11,12 @@
 //! point-balanced sharding over contiguous bit-packed sketch arenas
 //! ([`sketch::SketchMatrix`]) with an O(1) id → (shard, row) index, and
 //! single or batched top-k routing via a bounded-heap scan
-//! ([`coordinator::TopK`]) — whose compute hot path can run either natively
-//! (bit-packed popcount over borrowed `&[u64]` arena rows) or through
-//! AOT-compiled JAX/Pallas artifacts via PJRT.
+//! ([`coordinator::TopK`]) or, sublinearly, via per-shard banded
+//! multi-probe Hamming-LSH candidate generation ([`index::LshIndex`]) with
+//! exact Cham reranking and guaranteed full-scan fallback — whose compute
+//! hot path can run either natively (bit-packed popcount over borrowed
+//! `&[u64]` arena rows) or through AOT-compiled JAX/Pallas artifacts via
+//! PJRT.
 //!
 //! ## Architecture (three layers)
 //!
@@ -48,6 +51,7 @@ pub mod bench;
 pub mod cluster;
 pub mod coordinator;
 pub mod data;
+pub mod index;
 pub mod linalg;
 pub mod repro;
 pub mod runtime;

@@ -4,6 +4,9 @@
 //! cabin-sketch serve   [--addr 127.0.0.1:7878] [--dim 4096] [--categories 64]
 //!                      [--sketch-dim 1024] [--seed 42] [--shards 4]
 //!                      [--no-xla] [--max-batch 64] [--max-delay-ms 2]
+//!                      [--index auto|on|off] [--index-bands 8]
+//!                      [--index-band-bits 16] [--index-probes 2]
+//!                      [--index-auto-min-rows 1024]
 //! cabin-sketch sketch  --input docword.txt [--sketch-dim 1000] [--out sketches.bin]
 //! cabin-sketch repro   <table1|table3|table4|fig2..fig12|ablation-*|all> [options]
 //! cabin-sketch info    # artifact + environment report
@@ -11,7 +14,7 @@
 //!
 //! See DESIGN.md for the experiment index and README.md for a tour.
 
-use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, IndexConfig};
 use cabin::util::cli::Args;
 use std::sync::Arc;
 use std::time::Duration;
@@ -74,6 +77,18 @@ fn coordinator_config(args: &Args) -> CoordinatorConfig {
         },
         use_xla: !args.flag("no-xla"),
         heatmap_limit: args.usize_or("heatmap-limit", 4096),
+        index: index_config(args),
+    }
+}
+
+fn index_config(args: &Args) -> IndexConfig {
+    let defaults = IndexConfig::default();
+    IndexConfig {
+        mode: IndexConfig::mode_from_str_or_warn(&args.str_or("index", "auto"), "serve"),
+        bands: args.usize_or("index-bands", defaults.bands),
+        band_bits: args.usize_or("index-band-bits", defaults.band_bits),
+        probes: args.usize_or("index-probes", defaults.probes),
+        auto_min_rows: args.usize_or("index-auto-min-rows", defaults.auto_min_rows),
     }
 }
 
@@ -81,11 +96,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7878");
     let coordinator = Arc::new(Coordinator::new(coordinator_config(args)));
     println!(
-        "[serve] corpus dim={} c={} sketch d={} shards={} — listening",
+        "[serve] corpus dim={} c={} sketch d={} shards={} index={:?} — listening",
         coordinator.config.input_dim,
         coordinator.config.num_categories,
         coordinator.config.sketch_dim,
-        coordinator.config.num_shards
+        coordinator.config.num_shards,
+        coordinator.config.index.mode
     );
     coordinator.serve(&addr, |bound| println!("[serve] bound {bound}"))
 }

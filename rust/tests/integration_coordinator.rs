@@ -2,7 +2,7 @@
 //! clients, insert/query/distance/stats/heatmap/shutdown.
 
 use cabin::coordinator::client::Client;
-use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, IndexConfig};
 use cabin::data::{CatVector, synth::SynthSpec};
 use std::sync::Arc;
 use std::time::Duration;
@@ -21,6 +21,7 @@ fn start_server(dim: usize) -> (std::net::SocketAddr, std::thread::JoinHandle<()
         },
         use_xla: false,
         heatmap_limit: 128,
+        index: IndexConfig::default(),
     };
     let coordinator = Arc::new(Coordinator::new(config));
     let (tx, rx) = std::sync::mpsc::sync_channel(1);
@@ -69,11 +70,13 @@ fn tcp_end_to_end() {
     assert!((d01 - d10).abs() < 1e-9);
     assert_eq!(c.distance(ids[2], ids[2]).unwrap(), 0.0);
 
-    // stats reflect traffic
-    let stats = c.stats().unwrap();
-    let get = |k: &str| stats.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap();
-    assert_eq!(get("inserts"), 30.0);
-    assert_eq!(get("queries"), 1.0);
+    // stats reflect traffic (single-field fetch: a missing field is an
+    // error from the client helper, never a panic)
+    assert_eq!(c.stat("inserts").unwrap(), 30.0);
+    assert_eq!(c.stat("queries").unwrap(), 1.0);
+    // index configuration is reported read-only alongside the counters
+    assert_eq!(c.stat("index_cfg_bands").unwrap(), 8.0);
+    assert!(c.stat("no_such_field").is_err());
 
     c.shutdown().unwrap();
     server.join().unwrap();
@@ -94,12 +97,9 @@ fn tcp_concurrent_clients() {
         }
     });
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let stats = c.stats().unwrap();
-    let inserts = stats.iter().find(|(n, _)| n == "inserts").unwrap().1;
-    assert_eq!(inserts, 48.0);
+    assert_eq!(c.stat("inserts").unwrap(), 48.0);
     // concurrent inserts should have produced real batches
-    let batches = stats.iter().find(|(n, _)| n == "batches_flushed").unwrap().1;
-    assert!(batches <= 48.0);
+    assert!(c.stat("batches_flushed").unwrap() <= 48.0);
     c.shutdown().unwrap();
     server.join().unwrap();
 }

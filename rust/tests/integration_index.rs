@@ -1,0 +1,215 @@
+//! Wire-protocol coverage for the LSH index subsystem: queries through a
+//! real TCP coordinator with the index on, off, and racing a store
+//! rebalance (whose row moves are mirrored into the per-shard indexes
+//! under their write locks — responses must stay well-formed throughout).
+
+use cabin::coordinator::client::Client;
+use cabin::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, IndexConfig, IndexMode,
+};
+use cabin::data::{synth::SynthSpec, CatVector};
+use cabin::sketch::BitVec;
+use cabin::util::rng::Xoshiro256;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIM: usize = 700;
+const SKETCH_DIM: usize = 256;
+
+fn start_server(
+    mode: IndexMode,
+) -> (
+    std::net::SocketAddr,
+    std::thread::JoinHandle<()>,
+    Arc<Coordinator>,
+) {
+    let config = CoordinatorConfig {
+        input_dim: DIM,
+        num_categories: 16,
+        sketch_dim: SKETCH_DIM,
+        seed: 5,
+        num_shards: 3,
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_delay: Duration::from_millis(1),
+            queue_cap: 512,
+        },
+        use_xla: false,
+        heatmap_limit: 128,
+        index: IndexConfig {
+            mode,
+            ..Default::default()
+        },
+    };
+    let coordinator = Arc::new(Coordinator::new(config));
+    let (tx, rx) = std::sync::mpsc::sync_channel(1);
+    let server = Arc::clone(&coordinator);
+    let handle = std::thread::spawn(move || {
+        server
+            .serve("127.0.0.1:0", |addr| {
+                let _ = tx.send(addr);
+            })
+            .unwrap();
+    });
+    (rx.recv().unwrap(), handle, coordinator)
+}
+
+fn twin(n: usize, seed: u64) -> Vec<CatVector> {
+    let mut spec = SynthSpec::small_demo();
+    spec.dim = DIM;
+    spec.num_categories = 16;
+    spec.num_points = n;
+    spec.generate(seed).points
+}
+
+#[test]
+fn index_on_over_the_wire() {
+    let (addr, server, coordinator) = start_server(IndexMode::On);
+    let pts = twin(40, 1);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let mut ids = Vec::new();
+    for p in &pts {
+        ids.push(c.insert(p.clone()).unwrap());
+    }
+
+    // an inserted vector sketches identically, collides in every band,
+    // and must come back as its own nearest hit
+    for qi in [0usize, 7, 19, 33] {
+        let hits = c.query(pts[qi].clone(), 3).unwrap();
+        assert_eq!(hits.len(), 3, "query {qi}: {hits:?}");
+        assert_eq!(hits[0].id, ids[qi], "query {qi}: {hits:?}");
+        assert!(hits[0].dist < 1e-9, "query {qi}: {hits:?}");
+        for w in hits.windows(2) {
+            assert!(w[0].dist <= w[1].dist, "unsorted: {hits:?}");
+        }
+    }
+
+    // the batched path shares the indexed scan
+    let results = c.query_batch(pts[..4].to_vec(), 3).unwrap();
+    for (qi, hits) in results.iter().enumerate() {
+        assert_eq!(hits[0].id, ids[qi], "batch query {qi}: {hits:?}");
+    }
+
+    // traffic counters: every shard scan of every query went through the
+    // index path (mode = On ⇒ indexed_scans + fallbacks covers them all).
+    // One stats round-trip = one consistent snapshot for the sums below.
+    let queries = 4 + 4; // single + batched
+    let shards = coordinator.store.num_shards() as f64;
+    let snap = c.stats().unwrap();
+    let get = |k: &str| {
+        cabin::coordinator::stats_field(&snap, k)
+            .unwrap_or_else(|| panic!("stats field '{k}' missing"))
+    };
+    assert!(get("index_probes") > 0.0);
+    assert_eq!(
+        get("index_indexed_scans") + get("index_fallbacks"),
+        queries as f64 * shards
+    );
+    assert_eq!(get("index_cfg_mode"), 2.0); // On
+    // candidates generated and reranked are consistent
+    assert!(get("index_reranked") <= get("index_candidates"));
+
+    c.shutdown().unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn index_off_never_touches_the_index_path() {
+    let (addr, server, _coordinator) = start_server(IndexMode::Off);
+    let pts = twin(25, 2);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let mut ids = Vec::new();
+    for p in &pts {
+        ids.push(c.insert(p.clone()).unwrap());
+    }
+    let hits = c.query(pts[6].clone(), 4).unwrap();
+    assert_eq!(hits.len(), 4);
+    assert_eq!(hits[0].id, ids[6]);
+    assert!(hits[0].dist < 1e-9);
+    // off ⇒ zero index traffic, and the config advertises it (one
+    // snapshot, one round trip)
+    let snap = c.stats().unwrap();
+    let get = |k: &str| {
+        cabin::coordinator::stats_field(&snap, k)
+            .unwrap_or_else(|| panic!("stats field '{k}' missing"))
+    };
+    assert_eq!(get("index_probes"), 0.0);
+    assert_eq!(get("index_indexed_scans"), 0.0);
+    assert_eq!(get("index_fallbacks"), 0.0);
+    assert_eq!(get("index_cfg_mode"), 0.0); // Off
+    c.shutdown().unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn indexed_queries_stay_wellformed_mid_rebalance() {
+    let (addr, server, coordinator) = start_server(IndexMode::On);
+    let pts = twin(30, 3);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let mut ids = Vec::new();
+    for p in &pts {
+        ids.push(c.insert(p.clone()).unwrap());
+    }
+
+    // churn thread: repeatedly unbalance the store with big direct batches
+    // (a whole batch lands on one shard) and rebalance it back — every
+    // rebalance move updates both affected shard indexes in place
+    let done = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let store = &coordinator.store;
+        let done_ref = &done;
+        s.spawn(move || {
+            let mut rng = Xoshiro256::new(99);
+            // bounded churn: enough rounds to overlap all queries, small
+            // enough that the corpus (and thus query time) stays bounded
+            for round in 0..200 {
+                if done_ref.load(Ordering::Relaxed) {
+                    break;
+                }
+                let filler: Vec<BitVec> = (0..60)
+                    .map(|_| {
+                        BitVec::from_indices(SKETCH_DIM, rng.sample_indices(SKETCH_DIM, 40))
+                    })
+                    .collect();
+                store.insert_batch(filler);
+                let _ = store.rebalance(1);
+                if round % 8 == 0 {
+                    std::thread::yield_now();
+                }
+            }
+        });
+
+        // query under churn: responses must stay well-formed (k hits,
+        // ascending, no duplicate ids) even while indexes are rebuilt
+        let mut qc = Client::connect(&addr.to_string()).unwrap();
+        for round in 0..40 {
+            let qi = round % pts.len();
+            let hits = qc.query(pts[qi].clone(), 5).unwrap();
+            assert!(hits.len() <= 5);
+            for w in hits.windows(2) {
+                assert!(
+                    w[0].dist <= w[1].dist || w[1].dist.is_nan(),
+                    "unsorted mid-rebalance: {hits:?}"
+                );
+            }
+            let mut seen: Vec<usize> = hits.iter().map(|h| h.id).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), hits.len(), "duplicate ids: {hits:?}");
+        }
+        done.store(true, Ordering::Relaxed);
+    });
+
+    // settled state: every original point is again its own nearest hit
+    // through the maintained indexes
+    coordinator.store.rebalance(1);
+    for qi in [0usize, 11, 29] {
+        let hits = c.query(pts[qi].clone(), 1).unwrap();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].id, ids[qi], "query {qi} after churn: {hits:?}");
+        assert!(hits[0].dist < 1e-9);
+    }
+    c.shutdown().unwrap();
+    server.join().unwrap();
+}

@@ -1,11 +1,14 @@
-//! Concurrency soak: top-k queries and O(1) distance lookups racing
-//! batched inserts and rebalances on the arena store. The invariants under
-//! fire: no id is ever lost, no query result contains a duplicate or
-//! unsorted hit, every settled id resolves to the sketch that was
-//! inserted under it, and shard occupancy stays level.
+//! Concurrency soak: top-k queries (full-scan *and* LSH-indexed) and O(1)
+//! distance lookups racing batched inserts and rebalances on the arena
+//! store. The invariants under fire: no id is ever lost, no query result
+//! contains a duplicate or unsorted hit, every settled id resolves to the
+//! sketch that was inserted under it, shard occupancy stays level, and the
+//! per-shard LSH indexes (appended by inserts, remove-last/append-updated
+//! by rebalance moves) never desync from their arenas.
 
-use cabin::coordinator::router;
+use cabin::coordinator::router::{self, QueryOpts};
 use cabin::coordinator::store::ShardedStore;
+use cabin::index::{IndexConfig, IndexMode};
 use cabin::sketch::BitVec;
 use cabin::util::rng::Xoshiro256;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -20,7 +23,13 @@ fn sketch(rng: &mut Xoshiro256) -> BitVec {
 
 #[test]
 fn soak_queries_and_lookups_race_inserts_and_rebalance() {
-    let store = ShardedStore::new(4, DIM);
+    // indexed store: the soak then also exercises incremental index
+    // appends racing rebalance-move index updates
+    let cfg = IndexConfig {
+        mode: IndexMode::On,
+        ..Default::default()
+    };
+    let store = ShardedStore::with_index(4, DIM, &cfg, 13);
     let done = AtomicBool::new(false);
     // ground truth: id → sketch, recorded by the inserters
     let truth: Mutex<Vec<(usize, BitVec)>> = Mutex::new(Vec::new());
@@ -47,15 +56,21 @@ fn soak_queries_and_lookups_race_inserts_and_rebalance() {
                 }
             });
         }
-        // query threads: results must stay well-formed mid-churn
+        // query threads (one full-scan, one through the LSH indexes):
+        // results must stay well-formed mid-churn
         for t in 0..2u64 {
             let store = &store;
             let done = &done;
             s.spawn(move || {
                 let mut rng = Xoshiro256::new(2000 + t);
+                let opts = if t == 0 {
+                    QueryOpts::full_scan()
+                } else {
+                    QueryOpts::indexed(0, None)
+                };
                 while !done.load(Ordering::Relaxed) {
                     let q = sketch(&mut rng);
-                    let hits = router::topk(store, &q, 5);
+                    let hits = router::topk_with(store, &q, 5, &opts);
                     let mut ids: Vec<usize> = hits.iter().map(|h| h.id).collect();
                     for w in hits.windows(2) {
                         assert!(
@@ -128,12 +143,21 @@ fn soak_queries_and_lookups_race_inserts_and_rebalance() {
             "id {id} lost or corrupted"
         );
     }
-    // a full-corpus query drops and duplicates nothing
+    // a full-corpus query drops and duplicates nothing — on both paths
+    // (indexed falls back per shard whenever candidates cannot cover k)
     let mut rng = Xoshiro256::new(42);
-    let hits = router::topk(&store, &sketch(&mut rng), total);
-    let mut ids: Vec<usize> = hits.iter().map(|h| h.id).collect();
-    ids.sort_unstable();
-    assert_eq!(ids, (0..total).collect::<Vec<_>>());
+    let probe = sketch(&mut rng);
+    for opts in [QueryOpts::full_scan(), QueryOpts::indexed(0, None)] {
+        let hits = router::topk_with(&store, &probe, total, &opts);
+        let mut ids: Vec<usize> = hits.iter().map(|h| h.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..total).collect::<Vec<_>>());
+    }
+    // settled indexes mirror their arenas exactly
+    for (rows, ix_len) in store.map_shards(|s| (s.ids.len(), s.index.as_ref().map(|ix| ix.len())))
+    {
+        assert_eq!(ix_len, Some(rows), "index desynced from arena");
+    }
     // level shard sizes after a final rebalance
     store.rebalance(1);
     let sizes = store.shard_sizes();

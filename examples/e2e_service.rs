@@ -55,6 +55,7 @@ fn main() {
             mode: IndexConfig::mode_from_str_or_warn(&args.str_or("index", "auto"), "e2e"),
             ..Default::default()
         },
+        persist: Default::default(),
     };
     println!("[e2e] index mode: {:?}", config.index.mode);
     let coordinator = Arc::new(Coordinator::new(config));

@@ -30,6 +30,8 @@ fn make_coordinator(max_batch: usize, delay_ms: u64, shards: usize) -> Coordinat
             mode: IndexMode::Off,
             ..Default::default()
         },
+        // in-memory: persistence overhead is measured in bench_persist
+        persist: Default::default(),
     })
 }
 

@@ -1,0 +1,178 @@
+//! Persistence benchmarks: what the WAL costs on the ingest path (per
+//! fsync policy), what a snapshot rotation costs, and how fast recovery is
+//! from a pure WAL vs from a snapshot + empty tail — the numbers that
+//! justify `wal+snapshot` as the `--data-dir` default.
+
+use cabin::bench::{black_box, Bench};
+use cabin::coordinator::store::ShardedStore;
+use cabin::index::{IndexConfig, IndexMode};
+use cabin::persist::{FsyncPolicy, PersistConfig, PersistCounters, PersistMode};
+use cabin::sketch::BitVec;
+use cabin::testing::TempDir;
+use cabin::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+const DIM: usize = 1024;
+const BATCH: usize = 64;
+
+fn corpus(n: usize) -> Vec<BitVec> {
+    let mut rng = Xoshiro256::new(7);
+    (0..n)
+        .map(|_| BitVec::from_indices(DIM, rng.sample_indices(DIM, 128)))
+        .collect()
+}
+
+fn no_index() -> IndexConfig {
+    IndexConfig {
+        mode: IndexMode::Off,
+        ..Default::default()
+    }
+}
+
+fn durable_cfg(dir: &TempDir, mode: PersistMode, fsync: FsyncPolicy, every: u64) -> PersistConfig {
+    PersistConfig {
+        mode,
+        data_dir: Some(dir.path().to_path_buf()),
+        fsync,
+        snapshot_every: every,
+    }
+}
+
+fn open(cfg: &PersistConfig) -> ShardedStore {
+    ShardedStore::open_durable(4, DIM, &no_index(), 7, cfg, Arc::new(PersistCounters::default()))
+        .map(|(store, _)| store)
+        .unwrap()
+}
+
+fn ingest(store: &ShardedStore, pts: &[BitVec]) {
+    for chunk in pts.chunks(BATCH) {
+        black_box(store.insert_batch(chunk.to_vec()));
+    }
+}
+
+fn main() {
+    let mut b = Bench::from_env("persist");
+    let fast = std::env::var("CABIN_BENCH_FAST").ok().as_deref() == Some("1");
+    let n: usize = if fast { 4_000 } else { 40_000 };
+    let pts = corpus(n);
+    println!("[bench_persist] {n}-sketch corpus, d={DIM}, batches of {BATCH}");
+
+    // ingest cost by persistence mode: the WAL tax and the fsync tax.
+    // Every iteration gets a fresh data dir (recovery of a stale one
+    // would otherwise pollute the measurement).
+    b.bench_with_throughput(&format!("ingest/off/{n}"), Some(n as f64), || {
+        let store = ShardedStore::with_index(4, DIM, &no_index(), 7);
+        ingest(&store, &pts);
+    });
+    b.bench_with_throughput(
+        &format!("ingest/wal-fsync-never/{n}"),
+        Some(n as f64),
+        || {
+            let dir = TempDir::new("bench-wal-never");
+            let store = open(&durable_cfg(&dir, PersistMode::Wal, FsyncPolicy::Never, 0));
+            ingest(&store, &pts);
+        },
+    );
+    b.bench_with_throughput(
+        &format!("ingest/wal-fsync-always/{n}"),
+        Some(n as f64),
+        || {
+            let dir = TempDir::new("bench-wal-always");
+            let store = open(&durable_cfg(&dir, PersistMode::Wal, FsyncPolicy::Always, 0));
+            ingest(&store, &pts);
+        },
+    );
+    b.bench_with_throughput(
+        &format!("ingest/wal+snapshot/{n}"),
+        Some(n as f64),
+        || {
+            let dir = TempDir::new("bench-wal-snap");
+            let store = open(&durable_cfg(
+                &dir,
+                PersistMode::WalSnapshot,
+                FsyncPolicy::Never,
+                (n / 2) as u64, // one mid-stream rotation
+            ));
+            ingest(&store, &pts);
+        },
+    );
+
+    // a full snapshot rotation of the loaded store, in isolation
+    {
+        let dir = TempDir::new("bench-rotate");
+        let cfg = durable_cfg(&dir, PersistMode::WalSnapshot, FsyncPolicy::Never, 0);
+        let store = open(&cfg);
+        ingest(&store, &pts);
+        b.bench_with_throughput(&format!("snapshot/rotate/{n}"), Some(n as f64), || {
+            black_box(store.persist_snapshot().unwrap());
+        });
+    }
+
+    // recovery: replaying a pure WAL vs loading a snapshot + empty tail
+    {
+        let wal_dir = TempDir::new("bench-recover-wal");
+        let cfg = durable_cfg(&wal_dir, PersistMode::Wal, FsyncPolicy::Never, 0);
+        {
+            let store = open(&cfg);
+            ingest(&store, &pts);
+        }
+        b.bench_with_throughput(&format!("recover/wal/{n}"), Some(n as f64), || {
+            let store = open(&cfg);
+            assert_eq!(store.len(), n);
+            black_box(store.len());
+        });
+
+        let snap_dir = TempDir::new("bench-recover-snap");
+        let cfg = durable_cfg(&snap_dir, PersistMode::WalSnapshot, FsyncPolicy::Never, 0);
+        {
+            let store = open(&cfg);
+            ingest(&store, &pts);
+            store.persist_snapshot().unwrap();
+        }
+        b.bench_with_throughput(&format!("recover/snapshot/{n}"), Some(n as f64), || {
+            let store = open(&cfg);
+            assert_eq!(store.len(), n);
+            black_box(store.len());
+        });
+
+        // recovery with the LSH index on: adds the bulk rebuild cost
+        let ix_dir = TempDir::new("bench-recover-indexed");
+        let on = IndexConfig {
+            mode: IndexMode::On,
+            ..Default::default()
+        };
+        let cfg = durable_cfg(&ix_dir, PersistMode::WalSnapshot, FsyncPolicy::Never, 0);
+        {
+            let (store, _) = ShardedStore::open_durable(
+                4,
+                DIM,
+                &on,
+                7,
+                &cfg,
+                Arc::new(PersistCounters::default()),
+            )
+            .unwrap();
+            ingest(&store, &pts);
+            store.persist_snapshot().unwrap();
+        }
+        b.bench_with_throughput(
+            &format!("recover/snapshot-indexed/{n}"),
+            Some(n as f64),
+            || {
+                let (store, _) = ShardedStore::open_durable(
+                    4,
+                    DIM,
+                    &on,
+                    7,
+                    &cfg,
+                    Arc::new(PersistCounters::default()),
+                )
+                .unwrap();
+                assert_eq!(store.len(), n);
+                black_box(store.len());
+            },
+        );
+    }
+
+    b.finish();
+}

@@ -85,6 +85,27 @@ impl Client {
             .ok_or_else(|| anyhow::anyhow!("stats field '{name}' missing from response"))
     }
 
+    /// Fsync every shard WAL on the server (durable servers only) — after
+    /// this returns, every acknowledged insert is on disk even under
+    /// `--fsync never`.
+    pub fn flush(&mut self) -> Result<()> {
+        match self.call(&Request::Flush)? {
+            Response::Flushed => Ok(()),
+            Response::Error { message } => bail!("flush failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Force a snapshot rotation now (durable servers only); returns the
+    /// new live generation.
+    pub fn snapshot(&mut self) -> Result<u64> {
+        match self.call(&Request::Snapshot)? {
+            Response::Snapshotted { generation } => Ok(generation),
+            Response::Error { message } => bail!("snapshot failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
     pub fn ping(&mut self) -> Result<()> {
         match self.call(&Request::Ping)? {
             Response::Pong => Ok(()),

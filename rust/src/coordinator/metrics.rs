@@ -1,8 +1,9 @@
 //! Service metrics: lock-free counters + mutex-guarded latency samples.
 
+use crate::persist::PersistCounters;
 use crate::util::timer::LatencyStats;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// LSH-index traffic counters, recorded by the router's indexed scan path
 /// (`coordinator::router::topk_with`). All lock-free; one instance lives
@@ -38,6 +39,11 @@ pub struct Metrics {
     pub xla_batches: AtomicU64,
     pub native_batches: AtomicU64,
     pub index: IndexCounters,
+    /// Persistence traffic (WAL records/bytes, snapshots, recovery time).
+    /// Arc-shared with the store's [`crate::persist::Persistence`] handle,
+    /// which is what actually updates it — the snapshot below surfaces the
+    /// values as `persist_*` stats fields.
+    pub persist: Arc<PersistCounters>,
     insert_latency: Mutex<LatencyStats>,
     query_latency: Mutex<LatencyStats>,
 }
@@ -116,6 +122,26 @@ impl Metrics {
                 "index_indexed_scans".into(),
                 self.index.indexed_scans.load(Ordering::Relaxed) as f64,
             ),
+            (
+                "persist_wal_records".into(),
+                self.persist.wal_records.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "persist_wal_bytes".into(),
+                self.persist.wal_bytes.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "persist_snapshots".into(),
+                self.persist.snapshots.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "persist_recovery_ms".into(),
+                self.persist.recovery_ms.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "persist_generation".into(),
+                self.persist.generation.load(Ordering::Relaxed) as f64,
+            ),
         ];
         let ins = self.insert_latency.lock().unwrap().summary();
         let q = self.query_latency.lock().unwrap().summary();
@@ -172,6 +198,22 @@ mod tests {
         assert_eq!(stats_field(&snap, "index_reranked"), Some(7.0));
         assert_eq!(stats_field(&snap, "index_fallbacks"), Some(1.0));
         assert_eq!(stats_field(&snap, "index_indexed_scans"), Some(3.0));
+    }
+
+    #[test]
+    fn persist_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.persist.wal_records.fetch_add(12, Ordering::Relaxed);
+        m.persist.wal_bytes.fetch_add(4096, Ordering::Relaxed);
+        m.persist.snapshots.fetch_add(2, Ordering::Relaxed);
+        m.persist.recovery_ms.store(57, Ordering::Relaxed);
+        m.persist.generation.store(2, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert_eq!(stats_field(&snap, "persist_wal_records"), Some(12.0));
+        assert_eq!(stats_field(&snap, "persist_wal_bytes"), Some(4096.0));
+        assert_eq!(stats_field(&snap, "persist_snapshots"), Some(2.0));
+        assert_eq!(stats_field(&snap, "persist_recovery_ms"), Some(57.0));
+        assert_eq!(stats_field(&snap, "persist_generation"), Some(2.0));
     }
 
     #[test]

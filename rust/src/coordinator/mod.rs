@@ -14,9 +14,10 @@
 //!  TCP conn ─┼─ protocol ─ batcher ───┼─ shard 1 ─ (row-major u64     ├─ router
 //!  TCP conn ─┘      │        │        └─ shard S-1  + weight cache    ┘  (heap top-k,
 //!                 metrics   backend        │         + LshIndex)         merge)
-//!                    │      (XLA | native) └─ L banded bucket tables:
-//!                 id index: id → (shard, row)  candidates → Cham rerank
-//!                           O(1) get/distance  (full-scan fallback)
+//!                    │      (XLA | native) │         + WAL ──────────► data dir:
+//!                 id index: id → (shard, row)  L banded bucket tables   MANIFEST
+//!                           O(1) get/distance  candidates → Cham rerank snap-G-*
+//!                                              (full-scan fallback)     wal-G-*
 //! ```
 //!
 //! Storage layout: each shard owns a [`crate::sketch::SketchMatrix`] — one
@@ -42,17 +43,41 @@
 //! constant over the scan. Traffic is observable via the `index_*`
 //! counters and the `index_cfg_*` fields of the `stats` response.
 //!
+//! Persistence layer ([`crate::persist`], optional via
+//! `CoordinatorConfig.persist` / `--data-dir`): each shard's arena is
+//! backed by an append-only WAL — length-prefixed, checksummed records
+//! appended *under the same shard write lock that mutates the arena*, so
+//! log order equals mutation order and every shard recovers independently
+//! — plus periodic stop-the-world snapshot rotations (full arena + id
+//! column + cached weights per shard, committed by an atomic `MANIFEST`
+//! rename, old generation GC'd after). The WAL batch is committed before
+//! the batcher acknowledges an insert: with `fsync = always`, an
+//! acknowledged insert survives `kill -9`. Recovery invariants: the
+//! configuration fingerprint (`sketch_dim`/`seed`/`num_shards`) must match
+//! or startup hard-errors (foreign sketches would corrupt every Cham
+//! estimate); a torn WAL tail drops only the partial final record (and is
+//! truncated to a frame boundary); per-shard LSH indexes are bulk-rebuilt
+//! with [`crate::index::LshIndex::rebuild`] over the recovered arenas and
+//! answer queries identically to their pre-crash incremental selves. The
+//! wire protocol gains `flush` (fsync all WALs now) and `snapshot` (force
+//! a rotation) ops, `Shutdown` flushes before acknowledging, and
+//! `persist_*` counters ride along in `stats`.
+//!
 //! Robustness: `k == 0` and malformed batch elements are rejected at the
 //! protocol layer with error responses; the top-k kernel itself treats
 //! `k == 0` as "no hits" and orders distances with `f64::total_cmp`, so a
 //! NaN estimate can neither panic a shard worker nor corrupt the merge.
+//! Shard lock acquisition is poison-recovering throughout `store.rs`: a
+//! panicking worker thread (the arena's panic-safe mutation ordering keeps
+//! the shard readable) can no longer brick every subsequent request.
 //!
 //! Backpressure: the batcher queue is bounded; when full, submitters block
 //! (TCP reads pause → kernel backpressure to clients).
 //!
 //! Benches: `bench_coordinator` (ingest policies, single + batched query
-//! scatter/gather) and `bench_topk` (arena+heap shard scan vs the seed's
-//! `Vec<BitVec>` insertion-sort scan).
+//! scatter/gather), `bench_topk` (arena+heap shard scan vs the seed's
+//! `Vec<BitVec>` insertion-sort scan) and `bench_persist` (WAL/fsync
+//! ingest tax, snapshot rotation, WAL-vs-snapshot recovery time).
 
 pub mod batcher;
 pub mod client;
@@ -69,6 +94,7 @@ pub use protocol::{Request, Response};
 pub use server::{Coordinator, CoordinatorConfig};
 pub use topk::TopK;
 
-// The index knobs travel with the coordinator config; re-export them so
-// service users need only one import path.
+// The index and persistence knobs travel with the coordinator config;
+// re-export them so service users need only one import path.
 pub use crate::index::{IndexConfig, IndexMode};
+pub use crate::persist::{FsyncPolicy, PersistConfig, PersistMode};

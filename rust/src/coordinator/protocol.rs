@@ -11,8 +11,13 @@
 //! {"op":"distance","a":3,"b":9}                 → {"ok":true,"dist":57.9}
 //! {"op":"heatmap"}                              → {"ok":true,"n":…,"values":[…]}  (small corpora)
 //! {"op":"stats"}                                → {"ok":true, counters…}
+//! {"op":"flush"}                                → {"ok":true,"flushed":true}       (fsync all WALs)
+//! {"op":"snapshot"}                             → {"ok":true,"snapshot_generation":3}
 //! {"op":"ping"} / {"op":"shutdown"}
 //! ```
+//!
+//! `flush` and `snapshot` require the server to run with persistence
+//! enabled (`--data-dir`); otherwise they answer with an error response.
 //! Errors: `{"ok":false,"error":"…"}`.
 //!
 //! Validation happens here, before anything reaches the router: `k == 0`
@@ -33,6 +38,10 @@ pub enum Request {
     Distance { a: usize, b: usize },
     Heatmap,
     Stats,
+    /// Fsync every shard WAL (durable servers only).
+    Flush,
+    /// Force a snapshot rotation now (durable servers only).
+    Snapshot,
     Ping,
     Shutdown,
 }
@@ -51,6 +60,10 @@ pub enum Response {
     Distance { dist: f64 },
     Heatmap { n: usize, values: Vec<f64> },
     Stats { fields: Vec<(String, f64)> },
+    /// All WALs flushed and fsynced.
+    Flushed,
+    /// Snapshot rotation completed; the new live generation.
+    Snapshotted { generation: u64 },
     Pong,
     ShuttingDown,
     Error { message: String },
@@ -155,6 +168,8 @@ impl Request {
             },
             "heatmap" => Request::Heatmap,
             "stats" => Request::Stats,
+            "flush" => Request::Flush,
+            "snapshot" => Request::Snapshot,
             "ping" => Request::Ping,
             "shutdown" => Request::Shutdown,
             other => bail!("unknown op '{other}'"),
@@ -226,6 +241,8 @@ impl Request {
             .to_string(),
             Request::Heatmap => r#"{"op":"heatmap"}"#.to_string(),
             Request::Stats => r#"{"op":"stats"}"#.to_string(),
+            Request::Flush => r#"{"op":"flush"}"#.to_string(),
+            Request::Snapshot => r#"{"op":"snapshot"}"#.to_string(),
             Request::Ping => r#"{"op":"ping"}"#.to_string(),
             Request::Shutdown => r#"{"op":"shutdown"}"#.to_string(),
         }
@@ -295,6 +312,12 @@ impl Response {
                 }
                 Json::Obj(obj).to_string()
             }
+            Response::Flushed => r#"{"ok":true,"flushed":true}"#.to_string(),
+            Response::Snapshotted { generation } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("snapshot_generation", Json::Num(*generation as f64)),
+            ])
+            .to_string(),
             Response::Pong => r#"{"ok":true,"pong":true}"#.to_string(),
             Response::ShuttingDown => r#"{"ok":true,"shutdown":true}"#.to_string(),
             Response::Error { message } => Json::obj(vec![
@@ -358,6 +381,16 @@ impl Response {
         }
         if obj.get("shutdown").is_some() {
             return Ok(Response::ShuttingDown);
+        }
+        if obj.get("flushed").is_some() {
+            return Ok(Response::Flushed);
+        }
+        // before the stats fallback: a snapshot reply is itself a numeric
+        // field and would otherwise be swallowed as a one-field Stats
+        if let Some(generation) = obj.get("snapshot_generation").and_then(|v| v.as_usize()) {
+            return Ok(Response::Snapshotted {
+                generation: generation as u64,
+            });
         }
         // stats: everything numeric except ok
         if let Json::Obj(m) = &obj {
@@ -485,6 +518,18 @@ mod tests {
     }
 
     #[test]
+    fn flush_and_snapshot_ops_roundtrip() {
+        for req in [Request::Flush, Request::Snapshot] {
+            let back = Request::from_json_line(&req.to_json_line(), 3).unwrap();
+            assert_eq!(back, req);
+        }
+        // a snapshot reply must parse as Snapshotted, not a one-field Stats
+        let back =
+            Response::from_json_line(r#"{"ok":true,"snapshot_generation":9}"#).unwrap();
+        assert_eq!(back, Response::Snapshotted { generation: 9 });
+    }
+
+    #[test]
     fn response_roundtrips() {
         for resp in [
             Response::Inserted { id: 42 },
@@ -502,6 +547,8 @@ mod tests {
                 ],
             },
             Response::Distance { dist: 3.25 },
+            Response::Flushed,
+            Response::Snapshotted { generation: 4 },
             Response::Pong,
             Response::ShuttingDown,
             Response::Error {

@@ -7,6 +7,7 @@ use super::protocol::{Request, Response};
 use super::router;
 use super::store::ShardedStore;
 use crate::index::IndexConfig;
+use crate::persist::PersistConfig;
 use crate::runtime::XlaHandle;
 use crate::sketch::{CabinSketcher, SketchConfig};
 use crate::util::timer::Stopwatch;
@@ -32,6 +33,10 @@ pub struct CoordinatorConfig {
     /// Sublinear query path: per-shard multi-probe Hamming-LSH candidate
     /// indexes (auto / on / off, plus banding parameters).
     pub index: IndexConfig,
+    /// Crash-safe persistence: per-shard WAL + periodic snapshots under a
+    /// data dir (off / wal / wal+snapshot, fsync policy, auto-snapshot
+    /// interval). Off by default — see [`crate::persist`].
+    pub persist: PersistConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -46,6 +51,7 @@ impl Default for CoordinatorConfig {
             use_xla: true,
             heatmap_limit: 4096,
             index: IndexConfig::default(),
+            persist: PersistConfig::default(),
         }
     }
 }
@@ -62,18 +68,63 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    pub fn new(mut config: CoordinatorConfig) -> Coordinator {
+    /// Infallible construction for in-memory configurations; panics with
+    /// the recovery error when persistence is enabled and the data dir
+    /// cannot be recovered (use [`Coordinator::try_new`] to handle it).
+    pub fn new(config: CoordinatorConfig) -> Coordinator {
+        Self::try_new(config).unwrap_or_else(|e| panic!("coordinator startup failed: {e:#}"))
+    }
+
+    /// Build the coordinator, recovering the persisted corpus (newest
+    /// snapshot + WAL tail, fingerprint-checked) when `config.persist` is
+    /// enabled.
+    pub fn try_new(mut config: CoordinatorConfig) -> Result<Coordinator> {
+        // A persistence mode without a data dir is a configuration error,
+        // not a silent fall-back to in-memory: the caller asked for
+        // durability and would otherwise lose the corpus on restart
+        // without any hint.
+        if config.persist.mode != crate::persist::PersistMode::Off
+            && config.persist.data_dir.is_none()
+        {
+            anyhow::bail!(
+                "persist mode {:?} requires a data_dir (CoordinatorConfig.persist.data_dir / \
+                 --data-dir)",
+                config.persist.mode
+            );
+        }
         // Pin the index knobs to what the shards will actually build
         // (band_bits clamps to min(64, sketch_dim), bands to ≥ 1), so the
         // `index_cfg_*` stats fields always describe the live indexes.
         config.index = config.index.normalized(config.sketch_dim);
-        let store = Arc::new(ShardedStore::with_index(
-            config.num_shards,
-            config.sketch_dim,
-            &config.index,
-            config.seed,
-        ));
         let metrics = Arc::new(Metrics::new());
+        let store = if config.persist.enabled() {
+            let (store, report) = ShardedStore::open_durable(
+                config.num_shards,
+                config.sketch_dim,
+                &config.index,
+                config.seed,
+                &config.persist,
+                metrics.persist.clone(),
+            )?;
+            eprintln!(
+                "[coordinator] recovered {} sketches (generation {}, {} snapshot rows + {} \
+                 WAL records, {} torn tail(s) dropped) in {} ms",
+                store.len(),
+                report.generation,
+                report.snapshot_rows,
+                report.replayed_records,
+                report.truncated_tails,
+                report.recovery_ms
+            );
+            Arc::new(store)
+        } else {
+            Arc::new(ShardedStore::with_index(
+                config.num_shards,
+                config.sketch_dim,
+                &config.index,
+                config.seed,
+            ))
+        };
         let sk_cfg = SketchConfig::new(
             config.input_dim,
             config.num_categories,
@@ -110,14 +161,14 @@ impl Coordinator {
         };
         let sketcher = backend.sketcher().clone();
         let batcher = Batcher::start(config.batcher, backend, store.clone(), metrics.clone());
-        Coordinator {
+        Ok(Coordinator {
             config,
             store,
             metrics,
             batcher,
             sketcher,
             shutdown: Arc::new(AtomicBool::new(false)),
-        }
+        })
     }
 
     /// Routing options for this coordinator's query path: index usage per
@@ -134,9 +185,35 @@ impl Coordinator {
         match req {
             Request::Ping => Response::Pong,
             Request::Shutdown => {
+                // graceful-shutdown flush: whatever reached the store is
+                // fsynced before the shutdown is acknowledged (the batcher
+                // drains its own queue on coordinator drop)
+                if self.store.persistence().is_some() {
+                    if let Err(e) = self.store.persist_flush() {
+                        eprintln!("[coordinator] shutdown flush failed: {e:#}");
+                    }
+                }
                 self.shutdown.store(true, Ordering::SeqCst);
                 Response::ShuttingDown
             }
+            Request::Flush => match self.store.persist_flush() {
+                Ok(()) => Response::Flushed,
+                Err(e) => {
+                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    Response::Error {
+                        message: format!("{e:#}"),
+                    }
+                }
+            },
+            Request::Snapshot => match self.store.persist_snapshot() {
+                Ok(generation) => Response::Snapshotted { generation },
+                Err(e) => {
+                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    Response::Error {
+                        message: format!("{e:#}"),
+                    }
+                }
+            },
             Request::Insert { vec } => {
                 let sw = Stopwatch::start();
                 self.metrics.inserts.fetch_add(1, Ordering::Relaxed);
@@ -206,9 +283,11 @@ impl Coordinator {
                 }
             }
             Request::Stats => {
-                // traffic counters plus the (read-only) index configuration
+                // traffic counters plus the (read-only) index and
+                // persistence configuration
                 let mut fields = self.metrics.snapshot();
                 fields.extend(self.config.index.stats_fields());
+                fields.extend(self.config.persist.stats_fields());
                 Response::Stats { fields }
             }
         }
@@ -245,6 +324,13 @@ impl Coordinator {
         }
         for c in conns {
             let _ = c.join();
+        }
+        // belt-and-braces: the Shutdown request already flushed, but late
+        // connection work may have appended since
+        if self.store.persistence().is_some() {
+            if let Err(e) = self.store.persist_flush() {
+                eprintln!("[coordinator] final flush failed: {e:#}");
+            }
         }
         Ok(())
     }
@@ -482,5 +568,103 @@ mod tests {
         assert!(!c.is_shutdown());
         assert_eq!(c.handle_request(Request::Shutdown), Response::ShuttingDown);
         assert!(c.is_shutdown());
+    }
+
+    #[test]
+    fn persist_mode_without_data_dir_is_a_config_error_not_a_silent_fallback() {
+        use crate::persist::{PersistConfig, PersistMode};
+        let cfg = CoordinatorConfig {
+            persist: PersistConfig {
+                mode: PersistMode::Wal,
+                data_dir: None,
+                ..Default::default()
+            },
+            ..test_config()
+        };
+        let err = Coordinator::try_new(cfg).unwrap_err().to_string();
+        assert!(err.contains("data_dir"), "{err}");
+    }
+
+    #[test]
+    fn flush_and_snapshot_require_persistence() {
+        let c = Coordinator::new(test_config());
+        for req in [Request::Flush, Request::Snapshot] {
+            match c.handle_request(req) {
+                Response::Error { message } => {
+                    assert!(message.contains("persistence"), "{message}")
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn durable_coordinator_recovers_its_corpus() {
+        use crate::persist::{FsyncPolicy, PersistConfig, PersistMode};
+        use crate::testing::TempDir;
+        let dir = TempDir::new("server-durable");
+        let cfg = || CoordinatorConfig {
+            persist: PersistConfig {
+                mode: PersistMode::WalSnapshot,
+                data_dir: Some(dir.path().to_path_buf()),
+                fsync: FsyncPolicy::Never,
+                snapshot_every: 0, // manual snapshots only
+            },
+            ..test_config()
+        };
+        let mut rng = Xoshiro256::new(17);
+        let vecs: Vec<CatVector> = (0..10)
+            .map(|_| CatVector::random(600, 40, 10, &mut rng))
+            .collect();
+        let (ids, pre_hits) = {
+            let c = Coordinator::try_new(cfg()).unwrap();
+            let mut ids = Vec::new();
+            for v in &vecs {
+                match c.handle_request(Request::Insert { vec: v.clone() }) {
+                    Response::Inserted { id } => ids.push(id),
+                    other => panic!("{other:?}"),
+                }
+            }
+            // half the corpus is snapshotted, half stays WAL-tail-only
+            match c.handle_request(Request::Snapshot) {
+                Response::Snapshotted { generation } => assert_eq!(generation, 1),
+                other => panic!("{other:?}"),
+            }
+            for v in &vecs[5..] {
+                c.handle_request(Request::Insert { vec: v.clone() });
+            }
+            assert_eq!(c.handle_request(Request::Flush), Response::Flushed);
+            let hits = match c.handle_request(Request::Query {
+                vec: vecs[3].clone(),
+                k: 5,
+            }) {
+                Response::Hits { hits } => hits,
+                other => panic!("{other:?}"),
+            };
+            (ids, hits)
+        };
+        // second coordinator over the same data dir: the corpus is back
+        let c = Coordinator::try_new(cfg()).unwrap();
+        assert_eq!(c.store.len(), 15);
+        match c.handle_request(Request::Query {
+            vec: vecs[3].clone(),
+            k: 5,
+        }) {
+            Response::Hits { hits } => {
+                assert_eq!(hits, pre_hits, "recovered top-k must match pre-crash");
+                assert_eq!(hits[0].id, ids[3]);
+                assert!(hits[0].dist < 1e-9);
+            }
+            other => panic!("{other:?}"),
+        }
+        // persist_* stats surface the recovery
+        match c.handle_request(Request::Stats) {
+            Response::Stats { fields } => {
+                let get = |k: &str| super::super::metrics::stats_field(&fields, k).unwrap();
+                assert_eq!(get("persist_generation"), 1.0);
+                assert_eq!(get("persist_cfg_mode"), 2.0);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

@@ -16,7 +16,9 @@
 //! exact Cham reranking and guaranteed full-scan fallback — whose compute
 //! hot path can run either natively (bit-packed popcount over borrowed
 //! `&[u64]` arena rows) or through AOT-compiled JAX/Pallas artifacts via
-//! PJRT.
+//! PJRT, and whose corpus can be made crash-durable ([`persist`]:
+//! per-shard checksummed WALs + snapshot generations + fingerprint-checked
+//! warm recovery, so a restart never re-sketches the corpus).
 //!
 //! ## Architecture (three layers)
 //!
@@ -53,6 +55,7 @@ pub mod coordinator;
 pub mod data;
 pub mod index;
 pub mod linalg;
+pub mod persist;
 pub mod repro;
 pub mod runtime;
 pub mod sketch;

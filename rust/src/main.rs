@@ -7,6 +7,8 @@
 //!                      [--index auto|on|off] [--index-bands 8]
 //!                      [--index-band-bits 16] [--index-probes 2]
 //!                      [--index-auto-min-rows 1024]
+//!                      [--data-dir DIR] [--persist off|wal|wal+snapshot]
+//!                      [--fsync always|never] [--snapshot-every 50000]
 //! cabin-sketch sketch  --input docword.txt [--sketch-dim 1000] [--out sketches.bin]
 //! cabin-sketch repro   <table1|table3|table4|fig2..fig12|ablation-*|all> [options]
 //! cabin-sketch info    # artifact + environment report
@@ -14,7 +16,9 @@
 //!
 //! See DESIGN.md for the experiment index and README.md for a tour.
 
-use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, IndexConfig};
+use cabin::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, IndexConfig, PersistConfig, PersistMode,
+};
 use cabin::util::cli::Args;
 use std::sync::Arc;
 use std::time::Duration;
@@ -59,7 +63,9 @@ fn print_help() {
                     fig9 fig10 fig11 fig12 ablation-estimator ablation-psi\n\
                     ablation-onehot all\n\
          common options: --datasets kos,nips,... --points N --dims 100,500\n\
-                    --dim 1000 --seed 42 --budget-secs 120"
+                    --dim 1000 --seed 42 --budget-secs 120\n\
+         serve persistence: --data-dir DIR [--persist off|wal|wal+snapshot]\n\
+                    [--fsync always|never] [--snapshot-every 50000]"
     );
 }
 
@@ -78,6 +84,7 @@ fn coordinator_config(args: &Args) -> CoordinatorConfig {
         use_xla: !args.flag("no-xla"),
         heatmap_limit: args.usize_or("heatmap-limit", 4096),
         index: index_config(args),
+        persist: persist_config(args),
     }
 }
 
@@ -92,9 +99,31 @@ fn index_config(args: &Args) -> IndexConfig {
     }
 }
 
+/// Persistence flags: `--data-dir DIR` turns durability on (default mode
+/// `wal+snapshot`); `--persist`, `--fsync` and `--snapshot-every` refine
+/// it. `--persist wal` without `--data-dir` is a configuration error the
+/// coordinator reports at startup (it needs somewhere to write).
+fn persist_config(args: &Args) -> PersistConfig {
+    let data_dir = args.str_opt("data-dir").map(std::path::PathBuf::from);
+    let defaults = PersistConfig::default();
+    let mode = match args.str_opt("persist") {
+        Some(s) => PersistConfig::mode_from_str_or_warn(s, "serve"),
+        None if data_dir.is_some() => PersistMode::WalSnapshot,
+        None => PersistMode::Off,
+    };
+    PersistConfig {
+        mode,
+        data_dir,
+        fsync: PersistConfig::fsync_from_str_or_warn(&args.str_or("fsync", "always"), "serve"),
+        snapshot_every: args.u64_or("snapshot-every", defaults.snapshot_every),
+    }
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7878");
-    let coordinator = Arc::new(Coordinator::new(coordinator_config(args)));
+    let config = coordinator_config(args);
+    // (a persist mode without --data-dir is rejected inside try_new)
+    let coordinator = Arc::new(Coordinator::try_new(config)?);
     println!(
         "[serve] corpus dim={} c={} sketch d={} shards={} index={:?} — listening",
         coordinator.config.input_dim,
@@ -103,6 +132,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         coordinator.config.num_shards,
         coordinator.config.index.mode
     );
+    match (
+        &coordinator.config.persist.data_dir,
+        coordinator.store.persistence(),
+    ) {
+        (Some(dir), Some(p)) => println!(
+            "[serve] persistence {:?} at {} (generation {}, {} sketches recovered)",
+            coordinator.config.persist.mode,
+            dir.display(),
+            p.generation(),
+            coordinator.store.len()
+        ),
+        _ => println!("[serve] persistence off (corpus is in-memory only)"),
+    }
     coordinator.serve(&addr, |bound| println!("[serve] bound {bound}"))
 }
 

@@ -1,0 +1,226 @@
+//! The data-dir manifest: which snapshot generation is live, and the
+//! configuration fingerprint the persisted sketches were built under.
+//!
+//! The manifest is the commit point of the snapshot protocol: recovery
+//! reads `MANIFEST` first and everything else (snapshot files, WAL
+//! segments) is addressed by the generation it names, so a crash anywhere
+//! in a snapshot rotation leaves either the old or the new generation
+//! fully intact — never a mix. It is written via tmp-file + rename for the
+//! same reason.
+//!
+//! The fingerprint (`sketch_dim`, `seed`, `num_shards`) is checked on
+//! every recovery and a mismatch is a *hard, descriptive error*: sketches
+//! are meaningful only under the π/ψ mappings derived from `seed` at
+//! `sketch_dim`, and rows are addressed per shard — silently loading a
+//! corpus persisted under any other mapping would corrupt every Cham
+//! estimate the coordinator serves. `seed` is stored as a string because
+//! the wire JSON model is f64-backed and a u64 seed must roundtrip
+//! exactly.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+const VERSION: u32 = 1;
+
+/// The store configuration a data dir was persisted under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fingerprint {
+    pub sketch_dim: usize,
+    pub seed: u64,
+    pub num_shards: usize,
+}
+
+impl Fingerprint {
+    /// Hard-error unless `self` (from disk) matches `expect` (the live
+    /// config), naming every mismatched field.
+    pub fn check(&self, expect: &Fingerprint) -> Result<()> {
+        let mut diffs = Vec::new();
+        if self.sketch_dim != expect.sketch_dim {
+            diffs.push(format!(
+                "sketch_dim: persisted {} vs configured {}",
+                self.sketch_dim, expect.sketch_dim
+            ));
+        }
+        if self.seed != expect.seed {
+            diffs.push(format!(
+                "seed: persisted {} vs configured {}",
+                self.seed, expect.seed
+            ));
+        }
+        if self.num_shards != expect.num_shards {
+            diffs.push(format!(
+                "num_shards: persisted {} vs configured {}",
+                self.num_shards, expect.num_shards
+            ));
+        }
+        if diffs.is_empty() {
+            Ok(())
+        } else {
+            bail!(
+                "persisted data was written under a different configuration ({}); \
+                 refusing to load — sketches from another sketch_dim/seed mapping or \
+                 shard layout would silently corrupt every distance estimate. Point \
+                 --data-dir at a fresh directory or restore the original configuration",
+                diffs.join("; ")
+            )
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub generation: u64,
+    pub fingerprint: Fingerprint,
+}
+
+pub fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("MANIFEST")
+}
+
+/// Snapshot file for `(generation, shard)`.
+pub fn snap_path(dir: &Path, generation: u64, shard: usize) -> PathBuf {
+    dir.join(format!("snap-{generation}-shard-{shard}.bin"))
+}
+
+/// WAL segment for `(generation, shard)` — records since that generation's
+/// snapshot cut.
+pub fn wal_path(dir: &Path, generation: u64, shard: usize) -> PathBuf {
+    dir.join(format!("wal-{generation}-shard-{shard}.log"))
+}
+
+impl Manifest {
+    /// Write atomically (tmp + rename + dir sync best-effort).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let json = Json::obj(vec![
+            ("version", Json::Num(VERSION as f64)),
+            ("generation", Json::Num(self.generation as f64)),
+            (
+                "sketch_dim",
+                Json::Num(self.fingerprint.sketch_dim as f64),
+            ),
+            ("seed", Json::Str(self.fingerprint.seed.to_string())),
+            (
+                "num_shards",
+                Json::Num(self.fingerprint.num_shards as f64),
+            ),
+        ]);
+        let path = manifest_path(dir);
+        let tmp = dir.join("MANIFEST.tmp");
+        {
+            // write + fsync before the rename: the manifest is the commit
+            // point of the snapshot protocol, so its *contents* must be
+            // durable before the directory entry can name it — otherwise a
+            // power loss could surface a zero-length MANIFEST and strand
+            // the whole data dir
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("create {}", tmp.display()))?;
+            f.write_all(json.to_string().as_bytes())
+                .with_context(|| format!("write {}", tmp.display()))?;
+            f.sync_all()
+                .with_context(|| format!("fsync {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("rename manifest into place: {}", path.display()))?;
+        sync_dir(dir);
+        Ok(())
+    }
+
+    /// Load the manifest, or `None` when the dir has never been persisted
+    /// to (no `MANIFEST`).
+    pub fn load(dir: &Path) -> Result<Option<Manifest>> {
+        let path = manifest_path(dir);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("read {}", path.display())),
+        };
+        let obj = crate::util::json::parse(&text)
+            .with_context(|| format!("parse {}", path.display()))?;
+        let version = obj.req_usize("version")? as u32;
+        if version != VERSION {
+            bail!("{}: unsupported manifest version {version}", path.display());
+        }
+        let seed: u64 = obj
+            .req_str("seed")?
+            .parse()
+            .with_context(|| format!("{}: seed is not a u64", path.display()))?;
+        Ok(Some(Manifest {
+            generation: obj.req_usize("generation")? as u64,
+            fingerprint: Fingerprint {
+                sketch_dim: obj.req_usize("sketch_dim")?,
+                seed,
+                num_shards: obj.req_usize("num_shards")?,
+            },
+        }))
+    }
+}
+
+/// Best-effort directory fsync so renames survive power loss on Linux.
+pub fn sync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::TempDir;
+
+    fn fp() -> Fingerprint {
+        Fingerprint {
+            sketch_dim: 1024,
+            // beyond f64's 2^53 integer range: must roundtrip exactly
+            seed: (1u64 << 60) + 3,
+            num_shards: 4,
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips() {
+        let dir = TempDir::new("manifest-roundtrip");
+        let m = Manifest {
+            generation: 7,
+            fingerprint: fp(),
+        };
+        m.save(dir.path()).unwrap();
+        let back = Manifest::load(dir.path()).unwrap().unwrap();
+        assert_eq!(back, m);
+        assert!(!dir.path().join("MANIFEST.tmp").exists());
+    }
+
+    #[test]
+    fn missing_manifest_is_none() {
+        let dir = TempDir::new("manifest-missing");
+        assert!(Manifest::load(dir.path()).unwrap().is_none());
+    }
+
+    #[test]
+    fn fingerprint_mismatch_names_every_field() {
+        let persisted = fp();
+        let mut live = fp();
+        live.sketch_dim = 512;
+        live.num_shards = 8;
+        let err = persisted.check(&live).unwrap_err().to_string();
+        assert!(err.contains("sketch_dim"), "{err}");
+        assert!(err.contains("num_shards"), "{err}");
+        assert!(!err.contains("seed:"), "{err}");
+        let mut seeded = fp();
+        seeded.seed = 9;
+        let err = persisted.check(&seeded).unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
+        persisted.check(&fp()).unwrap();
+    }
+
+    #[test]
+    fn paths_embed_generation_and_shard() {
+        let d = Path::new("/data");
+        assert_eq!(
+            snap_path(d, 3, 1),
+            PathBuf::from("/data/snap-3-shard-1.bin")
+        );
+        assert_eq!(wal_path(d, 0, 2), PathBuf::from("/data/wal-0-shard-2.log"));
+    }
+}

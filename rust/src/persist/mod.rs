@@ -1,0 +1,514 @@
+//! Durable storage for the coordinator's sketch corpus: per-shard
+//! write-ahead logs + periodic full-arena snapshots + a manifest, so a
+//! restarted coordinator warm-loads the corpus it had instead of
+//! re-sketching it — which is exactly the cost BinSketch exists to avoid.
+//!
+//! Layout of a data dir at generation `G`:
+//!
+//! ```text
+//!   MANIFEST                  commit point: {generation, fingerprint}
+//!   snap-G-shard-{0..S}.bin   full arena snapshot at the generation cut
+//!   wal-G-shard-{0..S}.log    every mutation since that cut, in order
+//! ```
+//!
+//! Write path: the store appends WAL records *under the shard write lock*
+//! (so log order = arena order) and commits once per batch before the
+//! batch is acknowledged; with [`FsyncPolicy::Always`] an acknowledged
+//! insert therefore survives `kill -9`. Snapshot rotation is
+//! stop-the-world (it holds the store's id-index read lock, which blocks
+//! inserts and rebalances): write `snap-(G+1)-*` durably → create empty
+//! `wal-(G+1)-*` → write `MANIFEST(G+1)` (the commit point) → swap the
+//! live writers → GC generation `G`. A crash on either side of the
+//! manifest rename recovers a complete generation — never a mix.
+//!
+//! Recovery (see [`recovery`]): load the manifest, hard-error on a
+//! configuration-fingerprint mismatch, load each shard's snapshot, replay
+//! its WAL tail (dropping at most one torn trailing record), and hand the
+//! shard states to the store, which bulk-rebuilds the per-shard LSH
+//! indexes via the existing [`crate::index::LshIndex::rebuild`] path.
+//!
+//! Known limits (ROADMAP "Open items"): snapshots are stop-the-world and
+//! full, not incremental; WAL commit errors after an insert was accepted
+//! are logged loudly but not yet propagated to the client; there is no
+//! background WAL compaction between snapshots.
+
+pub mod manifest;
+pub mod recovery;
+pub mod snapshot;
+pub mod wal;
+
+pub use manifest::Fingerprint;
+pub use recovery::RecoveryReport;
+pub use snapshot::ShardState;
+
+use crate::sketch::SketchMatrix;
+use anyhow::{Context, Result};
+use manifest::{snap_path, sync_dir, wal_path, Manifest};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use wal::WalWriter;
+
+/// What gets persisted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PersistMode {
+    /// No persistence: the corpus lives and dies with the process.
+    Off,
+    /// WAL only: every mutation is logged; recovery replays the full log.
+    Wal,
+    /// WAL + periodic snapshots: recovery loads the newest snapshot and
+    /// replays only the log tail past it.
+    WalSnapshot,
+}
+
+/// When WAL commits reach the disk platter, not just the OS page cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Flush to the OS per batch; fsync only on explicit `flush`/shutdown.
+    /// Survives process crashes, not host power loss.
+    Never,
+    /// `fdatasync` once per committed batch, before the batch is
+    /// acknowledged — acknowledged inserts survive `kill -9` and power
+    /// loss.
+    Always,
+}
+
+/// Persistence knobs, carried by `CoordinatorConfig`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PersistConfig {
+    pub mode: PersistMode,
+    /// Where the manifest, snapshots and WAL segments live. Required for
+    /// any mode other than [`PersistMode::Off`].
+    pub data_dir: Option<PathBuf>,
+    pub fsync: FsyncPolicy,
+    /// Auto-snapshot after this many WAL records (inserts + rebalance
+    /// moves) since the last cut; `0` disables auto-snapshotting (the
+    /// `snapshot` wire op still works). Only meaningful under
+    /// [`PersistMode::WalSnapshot`].
+    pub snapshot_every: u64,
+}
+
+impl Default for PersistConfig {
+    fn default() -> Self {
+        Self {
+            mode: PersistMode::Off,
+            data_dir: None,
+            fsync: FsyncPolicy::Always,
+            snapshot_every: 50_000,
+        }
+    }
+}
+
+impl PersistConfig {
+    /// Whether the store should open a [`Persistence`] at all.
+    pub fn enabled(&self) -> bool {
+        self.mode != PersistMode::Off && self.data_dir.is_some()
+    }
+
+    /// Parse a CLI mode string (`off` | `wal` | `wal+snapshot`).
+    pub fn mode_from_str(s: &str) -> Option<PersistMode> {
+        match s {
+            "off" => Some(PersistMode::Off),
+            "wal" => Some(PersistMode::Wal),
+            "wal+snapshot" | "wal-snapshot" | "snapshot" => Some(PersistMode::WalSnapshot),
+            _ => None,
+        }
+    }
+
+    /// CLI-friendly variant: unknown strings warn and fall back to
+    /// `wal+snapshot` (the safe-and-complete default for a `--data-dir`).
+    pub fn mode_from_str_or_warn(s: &str, context: &str) -> PersistMode {
+        Self::mode_from_str(s).unwrap_or_else(|| {
+            eprintln!(
+                "[{context}] unknown --persist '{s}' (want off|wal|wal+snapshot), \
+                 using wal+snapshot"
+            );
+            PersistMode::WalSnapshot
+        })
+    }
+
+    /// Parse a CLI fsync string (`always` | `never`), warning and falling
+    /// back to `always` (the durable default) on anything else.
+    pub fn fsync_from_str_or_warn(s: &str, context: &str) -> FsyncPolicy {
+        match s {
+            "always" => FsyncPolicy::Always,
+            "never" | "off" => FsyncPolicy::Never,
+            other => {
+                eprintln!(
+                    "[{context}] unknown --fsync '{other}' (want always|never), using always"
+                );
+                FsyncPolicy::Always
+            }
+        }
+    }
+
+    /// Read-only configuration view merged into the `stats` response
+    /// (`persist_cfg_*`, mirroring `index_cfg_*`).
+    pub fn stats_fields(&self) -> Vec<(String, f64)> {
+        let mode = match self.mode {
+            PersistMode::Off => 0.0,
+            PersistMode::Wal => 1.0,
+            PersistMode::WalSnapshot => 2.0,
+        };
+        let fsync = match self.fsync {
+            FsyncPolicy::Never => 0.0,
+            FsyncPolicy::Always => 1.0,
+        };
+        vec![
+            ("persist_cfg_mode".into(), mode),
+            ("persist_cfg_fsync".into(), fsync),
+            (
+                "persist_cfg_snapshot_every".into(),
+                self.snapshot_every as f64,
+            ),
+        ]
+    }
+}
+
+/// Lock-free persistence traffic counters. One instance is shared (via
+/// `Arc`) between `coordinator::Metrics` — which surfaces them as
+/// `persist_*` stats fields — and the [`Persistence`] handle that updates
+/// them.
+#[derive(Debug, Default)]
+pub struct PersistCounters {
+    /// WAL records appended (inserts + rebalance moves) since startup.
+    pub wal_records: AtomicU64,
+    /// WAL bytes appended since startup.
+    pub wal_bytes: AtomicU64,
+    /// Snapshot rotations completed since startup.
+    pub snapshots: AtomicU64,
+    /// Wall-clock of the startup recovery pass, in milliseconds.
+    pub recovery_ms: AtomicU64,
+    /// Live snapshot generation.
+    pub generation: AtomicU64,
+}
+
+/// Poison-recovering mutex lock: a WAL writer is plain buffered-file
+/// state, so a panicking holder leaves nothing logically torn that the
+/// frame checksums would not catch — recover the guard instead of letting
+/// one crashed worker thread brick every subsequent request.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The live persistence handle owned by the store: one WAL writer per
+/// shard plus the snapshot/rotation machinery.
+pub struct Persistence {
+    dir: PathBuf,
+    mode: PersistMode,
+    fsync: FsyncPolicy,
+    snapshot_every: u64,
+    fingerprint: Fingerprint,
+    /// Records appended since the last snapshot cut (drives auto-snapshot).
+    records_since_snapshot: AtomicU64,
+    wals: Vec<Mutex<WalWriter>>,
+    /// Shared with `coordinator::Metrics`; also the single home of the
+    /// live generation (`counters.generation`), so the stats field and the
+    /// snapshot/WAL file addressing can never disagree.
+    counters: std::sync::Arc<PersistCounters>,
+}
+
+impl Persistence {
+    /// Recover `cfg.data_dir` (initialising it on first use) and open the
+    /// per-shard WAL writers for append. Returns the handle, the
+    /// recovered shard states for the store to adopt, and the recovery
+    /// report.
+    pub fn open(
+        cfg: &PersistConfig,
+        fingerprint: Fingerprint,
+        counters: std::sync::Arc<PersistCounters>,
+    ) -> Result<(Persistence, Vec<ShardState>, RecoveryReport)> {
+        anyhow::ensure!(
+            cfg.enabled(),
+            "Persistence::open requires mode != off and a data_dir"
+        );
+        let dir = cfg.data_dir.clone().expect("enabled() implies data_dir");
+        let sw = crate::util::timer::Stopwatch::start();
+        let (states, mut report) = recovery::recover(&dir, &fingerprint)?;
+        report.recovery_ms = (sw.elapsed_secs() * 1e3).round() as u64;
+        let wals = (0..fingerprint.num_shards)
+            .map(|si| {
+                WalWriter::open_append(&wal_path(&dir, report.generation, si), cfg.fsync)
+                    .map(Mutex::new)
+                    .with_context(|| format!("opening WAL for shard {si}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        counters.recovery_ms.store(report.recovery_ms, Ordering::Relaxed);
+        counters.generation.store(report.generation, Ordering::Relaxed);
+        let p = Persistence {
+            dir,
+            mode: cfg.mode,
+            fsync: cfg.fsync,
+            snapshot_every: cfg.snapshot_every,
+            fingerprint,
+            // a restart with a fat WAL tail counts it toward the next
+            // auto-snapshot, so replay cost cannot grow without bound
+            // across repeated crashes
+            records_since_snapshot: AtomicU64::new(report.replayed_records as u64),
+            wals,
+            counters,
+        };
+        Ok((p, states, report))
+    }
+
+    pub fn data_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn mode(&self) -> PersistMode {
+        self.mode
+    }
+
+    /// Live snapshot generation.
+    pub fn generation(&self) -> u64 {
+        self.counters.generation.load(Ordering::Relaxed)
+    }
+
+    /// Lock shard `i`'s WAL writer. The store takes this while holding the
+    /// shard's write lock (the WAL mutex is a strict leaf in the lock
+    /// order: id index → shard locks ascending → WAL mutexes ascending).
+    pub fn wal_guard(&self, shard: usize) -> MutexGuard<'_, WalWriter> {
+        lock_recover(&self.wals[shard])
+    }
+
+    /// Account a committed append batch (records + frame bytes) toward the
+    /// traffic counters and the auto-snapshot trigger.
+    pub fn note_appended(&self, records: u64, bytes: u64) {
+        self.counters.wal_records.fetch_add(records, Ordering::Relaxed);
+        self.counters.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.records_since_snapshot
+            .fetch_add(records, Ordering::Relaxed);
+    }
+
+    /// Whether the auto-snapshot threshold has been crossed (read-only
+    /// probe; the store's trigger path uses
+    /// [`Persistence::try_claim_auto_snapshot`]).
+    pub fn should_auto_snapshot(&self) -> bool {
+        self.mode == PersistMode::WalSnapshot
+            && self.snapshot_every > 0
+            && self.records_since_snapshot.load(Ordering::Relaxed) >= self.snapshot_every
+    }
+
+    /// Atomically claim the auto-snapshot trigger: returns `true` for
+    /// exactly one caller per threshold crossing, resetting the record
+    /// counter in the same step. Two consequences: concurrent inserters
+    /// cannot both run a (stop-the-world, full-corpus) rotation for the
+    /// same crossing, and a *failed* rotation is naturally deferred for a
+    /// full further interval — the store degrades to WAL-only instead of
+    /// re-attempting on every batch (disk-full being the classic way a
+    /// rotation starts failing persistently).
+    pub fn try_claim_auto_snapshot(&self) -> bool {
+        self.mode == PersistMode::WalSnapshot
+            && self.snapshot_every > 0
+            && self
+                .records_since_snapshot
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    (v >= self.snapshot_every).then_some(0)
+                })
+                .is_ok()
+    }
+
+    /// Flush + fsync every shard WAL (regardless of fsync policy) — the
+    /// `flush` wire op and graceful shutdown.
+    pub fn flush_all(&self) -> Result<()> {
+        for (si, wal) in self.wals.iter().enumerate() {
+            lock_recover(wal)
+                .sync()
+                .with_context(|| format!("fsync WAL for shard {si}"))?;
+        }
+        Ok(())
+    }
+
+    /// Rotate to a new snapshot generation. The caller
+    /// ([`crate::coordinator::store::ShardedStore::persist_snapshot`])
+    /// holds the id-index read lock, every shard read lock, and passes in
+    /// every WAL guard — so no record can be appended anywhere during the
+    /// rotation and the snapshot cut is exact.
+    ///
+    /// Crash-safety ordering: durable snapshots → empty next-generation
+    /// WAL files → manifest rename (the commit point) → writer swap → GC.
+    pub fn write_snapshot(
+        &self,
+        shards: &[(&[usize], &SketchMatrix)],
+        wal_guards: &mut [MutexGuard<'_, WalWriter>],
+    ) -> Result<u64> {
+        assert_eq!(shards.len(), self.wals.len());
+        assert_eq!(wal_guards.len(), self.wals.len());
+        let old = self.generation();
+        let new = old + 1;
+        for (si, (ids, rows)) in shards.iter().enumerate() {
+            snapshot::write_shard(
+                &snap_path(&self.dir, new, si),
+                self.fingerprint.sketch_dim,
+                si,
+                ids,
+                rows,
+            )
+            .with_context(|| format!("snapshotting shard {si} at generation {new}"))?;
+        }
+        let mut fresh = Vec::with_capacity(self.wals.len());
+        for (si, guard) in wal_guards.iter_mut().enumerate() {
+            // flush the old segment so the pre-commit state stays whole if
+            // the manifest write below fails and we keep appending to it
+            guard.commit()?;
+            fresh.push(WalWriter::create(&wal_path(&self.dir, new, si), self.fsync)?);
+        }
+        sync_dir(&self.dir);
+        Manifest {
+            generation: new,
+            fingerprint: self.fingerprint,
+        }
+        .save(&self.dir)?;
+        // Commit point passed: swap the live writers (retiring the old
+        // ones so their Drop skips a pointless fsync of a segment the GC
+        // below removes), then GC generation `old` (best-effort —
+        // leftovers are swept by the next recovery).
+        for (guard, writer) in wal_guards.iter_mut().zip(fresh) {
+            guard.retire();
+            **guard = writer;
+        }
+        self.records_since_snapshot.store(0, Ordering::Relaxed);
+        self.counters.snapshots.fetch_add(1, Ordering::Relaxed);
+        self.counters.generation.store(new, Ordering::Relaxed);
+        for si in 0..self.wals.len() {
+            let _ = std::fs::remove_file(wal_path(&self.dir, old, si));
+            if old > 0 {
+                let _ = std::fs::remove_file(snap_path(&self.dir, old, si));
+            }
+        }
+        Ok(new)
+    }
+}
+
+impl Drop for Persistence {
+    fn drop(&mut self) {
+        // graceful-teardown durability; hard kills are covered by the
+        // commit-per-batch protocol
+        let _ = self.flush_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::TempDir;
+    use std::sync::Arc;
+
+    fn cfg(dir: &TempDir, mode: PersistMode) -> PersistConfig {
+        PersistConfig {
+            mode,
+            data_dir: Some(dir.path().to_path_buf()),
+            fsync: FsyncPolicy::Never,
+            snapshot_every: 4,
+        }
+    }
+
+    fn fp() -> Fingerprint {
+        Fingerprint {
+            sketch_dim: 64,
+            seed: 7,
+            num_shards: 2,
+        }
+    }
+
+    #[test]
+    fn open_initialises_and_reopens() {
+        let dir = TempDir::new("persist-open");
+        let counters = Arc::new(PersistCounters::default());
+        let (p, states, report) =
+            Persistence::open(&cfg(&dir, PersistMode::Wal), fp(), counters.clone()).unwrap();
+        assert_eq!(states.len(), 2);
+        assert_eq!(report.generation, 0);
+        assert_eq!(p.generation(), 0);
+        // append through the guards, then reopen and observe the records
+        {
+            let mut w = p.wal_guard(0);
+            w.append_insert(0, &[0b1011]);
+            w.commit().unwrap();
+        }
+        p.note_appended(1, 37);
+        assert_eq!(counters.wal_records.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.wal_bytes.load(Ordering::Relaxed), 37);
+        drop(p);
+        let counters2 = Arc::new(PersistCounters::default());
+        let (_, states, report) =
+            Persistence::open(&cfg(&dir, PersistMode::Wal), fp(), counters2).unwrap();
+        assert_eq!(report.replayed_records, 1);
+        assert_eq!(states[0].ids, vec![0]);
+        assert_eq!(states[0].rows.weight(0), 3);
+    }
+
+    #[test]
+    fn open_rejects_disabled_config() {
+        let err = Persistence::open(
+            &PersistConfig::default(),
+            fp(),
+            Arc::new(PersistCounters::default()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("data_dir"), "{err:#}");
+    }
+
+    #[test]
+    fn auto_snapshot_trigger_counts_records() {
+        let dir = TempDir::new("persist-trigger");
+        let counters = Arc::new(PersistCounters::default());
+        let (p, _, _) =
+            Persistence::open(&cfg(&dir, PersistMode::WalSnapshot), fp(), counters).unwrap();
+        assert!(!p.should_auto_snapshot());
+        p.note_appended(3, 100);
+        assert!(!p.should_auto_snapshot());
+        assert!(!p.try_claim_auto_snapshot(), "below-threshold claim must not reset");
+        assert!(!p.should_auto_snapshot());
+        p.note_appended(1, 40);
+        assert!(p.should_auto_snapshot());
+        // the claim is exclusive per crossing and resets the counter
+        assert!(p.try_claim_auto_snapshot());
+        assert!(!p.try_claim_auto_snapshot());
+        assert!(!p.should_auto_snapshot());
+        p.note_appended(4, 160);
+        assert!(p.should_auto_snapshot());
+        // Wal-only mode never auto-snapshots
+        let dir2 = TempDir::new("persist-trigger-wal");
+        let (p2, _, _) = Persistence::open(
+            &cfg(&dir2, PersistMode::Wal),
+            fp(),
+            Arc::new(PersistCounters::default()),
+        )
+        .unwrap();
+        p2.note_appended(100, 1000);
+        assert!(!p2.should_auto_snapshot());
+    }
+
+    #[test]
+    fn mode_and_fsync_strings_parse() {
+        assert_eq!(PersistConfig::mode_from_str("off"), Some(PersistMode::Off));
+        assert_eq!(PersistConfig::mode_from_str("wal"), Some(PersistMode::Wal));
+        assert_eq!(
+            PersistConfig::mode_from_str("wal+snapshot"),
+            Some(PersistMode::WalSnapshot)
+        );
+        assert_eq!(PersistConfig::mode_from_str("sideways"), None);
+        assert_eq!(
+            PersistConfig::mode_from_str_or_warn("sideways", "test"),
+            PersistMode::WalSnapshot
+        );
+        assert_eq!(
+            PersistConfig::fsync_from_str_or_warn("never", "test"),
+            FsyncPolicy::Never
+        );
+        assert_eq!(
+            PersistConfig::fsync_from_str_or_warn("bogus", "test"),
+            FsyncPolicy::Always
+        );
+    }
+
+    #[test]
+    fn stats_fields_use_cfg_prefix() {
+        let fields = PersistConfig::default().stats_fields();
+        assert!(fields.iter().all(|(n, _)| n.starts_with("persist_cfg_")));
+        assert!(fields
+            .iter()
+            .any(|(n, v)| n == "persist_cfg_mode" && *v == 0.0));
+    }
+}

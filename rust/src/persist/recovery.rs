@@ -1,0 +1,476 @@
+//! Warm-restart recovery: newest valid snapshot + WAL tail replay.
+//!
+//! Per shard, recovery is `state = snapshot(generation) ⊕ replay(wal
+//! segment of that generation)`: the snapshot (if the live generation is
+//! > 0) seeds the arena, and the WAL records append/pop it forward in the
+//! exact order the live store mutated it — `Insert`/`MoveIn` push a row,
+//! `MoveOut` pops the trailing row, mirroring the only mutation shapes
+//! [`crate::coordinator::store::ShardedStore`] ever performs. Because
+//! every record was logged under its shard's write lock, no cross-shard
+//! ordering is needed: replaying each shard independently reproduces the
+//! pre-crash `ids`/`rows`/weights/shard-sizes state exactly.
+//!
+//! Failure policy:
+//! * missing manifest → fresh dir: initialise generation 0 and start empty;
+//! * fingerprint mismatch → hard, descriptive error (see
+//!   [`super::manifest::Fingerprint::check`]);
+//! * missing or corrupt *snapshot* named by the manifest → hard error (the
+//!   manifest is only advanced after its snapshot files are durable, so
+//!   this means external damage, not a crash);
+//! * torn *WAL tail* (the stop point is followed by no complete valid
+//!   frame — the signature of a crash mid-append) → the partial final
+//!   record is dropped and the file truncated to the valid prefix, never
+//!   fatal;
+//! * corrupt frame in the *middle* of a WAL (complete valid frames exist
+//!   past the bad one — bit rot inside a committed region, not a tear) →
+//!   hard error: truncating there would silently destroy acknowledged
+//!   records that are still intact on disk.
+
+use super::manifest::{snap_path, wal_path, Fingerprint, Manifest};
+use super::snapshot::{self, ShardState};
+use super::wal::{read_wal, WalRecord};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// What a recovery pass did — logged at startup and surfaced through the
+/// `persist_*` stats counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryReport {
+    /// Live snapshot generation after recovery.
+    pub generation: u64,
+    /// Rows loaded from snapshot files.
+    pub snapshot_rows: usize,
+    /// WAL records replayed on top of the snapshots.
+    pub replayed_records: usize,
+    /// WAL segments whose torn/corrupt tail was dropped and truncated.
+    pub truncated_tails: usize,
+    /// Rows dropped because their id was recovered in two shards — the
+    /// signature of a crash between a rebalance move's destination
+    /// (`MoveIn`) and source (`MoveOut`) commits. Copies are
+    /// bit-identical, so exactly one survives.
+    pub duplicate_rows_dropped: usize,
+    /// Wall-clock of the recovery pass, in milliseconds.
+    pub recovery_ms: u64,
+}
+
+/// Recover every shard's state from `dir`, initialising the dir on first
+/// use. `recovery_ms` is left at 0 — the caller owns the clock.
+pub fn recover(dir: &Path, expect: &Fingerprint) -> Result<(Vec<ShardState>, RecoveryReport)> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create data dir {}", dir.display()))?;
+    let manifest = match Manifest::load(dir)? {
+        Some(m) => {
+            m.fingerprint.check(expect)?;
+            m
+        }
+        None => {
+            let m = Manifest {
+                generation: 0,
+                fingerprint: *expect,
+            };
+            m.save(dir)?;
+            m
+        }
+    };
+    let generation = manifest.generation;
+    let words_per_row = expect.sketch_dim.div_ceil(64);
+    let mut report = RecoveryReport {
+        generation,
+        ..Default::default()
+    };
+    let mut shards = Vec::with_capacity(expect.num_shards);
+    for si in 0..expect.num_shards {
+        let mut state = if generation > 0 {
+            snapshot::load_shard(&snap_path(dir, generation, si), expect.sketch_dim, si)
+                .with_context(|| {
+                    format!("loading generation-{generation} snapshot for shard {si}")
+                })?
+        } else {
+            ShardState {
+                ids: Vec::new(),
+                rows: crate::sketch::SketchMatrix::new(expect.sketch_dim),
+            }
+        };
+        report.snapshot_rows += state.ids.len();
+        let wal_file = wal_path(dir, generation, si);
+        if wal_file.exists() {
+            let replay = read_wal(&wal_file, words_per_row)
+                .with_context(|| format!("reading WAL {}", wal_file.display()))?;
+            for rec in &replay.records {
+                match rec {
+                    WalRecord::Insert { id, words } | WalRecord::MoveIn { id, words } => {
+                        let weight = crate::sketch::bitvec::popcount_words(words) as u32;
+                        state.rows.push_row(words, weight);
+                        state.ids.push(*id as usize);
+                    }
+                    WalRecord::MoveOut => {
+                        if state.ids.pop().is_none() || !state.rows.pop_row() {
+                            bail!(
+                                "WAL {}: MoveOut on an empty shard — log does not \
+                                 match the snapshot it extends",
+                                wal_file.display()
+                            );
+                        }
+                    }
+                }
+            }
+            report.replayed_records += replay.records.len();
+            if replay.valid_frames_beyond_tear {
+                bail!(
+                    "WAL {}: corrupt frame at byte {} with intact records after it — this \
+                     is mid-file damage, not a crash tear; refusing to truncate away \
+                     acknowledged records. Repair or remove the file to proceed",
+                    wal_file.display(),
+                    replay.valid_len
+                );
+            }
+            if replay.truncated {
+                // drop the torn tail so appends resume at a frame boundary
+                std::fs::OpenOptions::new()
+                    .write(true)
+                    .open(&wal_file)
+                    .and_then(|f| f.set_len(replay.valid_len))
+                    .with_context(|| format!("truncating torn tail of {}", wal_file.display()))?;
+                report.truncated_tails += 1;
+            }
+        } else if generation > 0 {
+            // Rotation creates every wal-G segment durably *before* the
+            // manifest names generation G, so at G > 0 the file must
+            // exist; its absence is external damage, and treating it as
+            // an empty log would silently drop every post-snapshot
+            // record. (At generation 0 a missing segment is normal: the
+            // writers are only created after first recovery.)
+            bail!(
+                "WAL segment {} is missing for live generation {generation} — refusing to \
+                 treat it as empty; restore the file or remove the data dir to start fresh",
+                wal_file.display()
+            );
+        }
+        shards.push(state);
+    }
+    dedup_recovered_ids(&mut shards, expect.sketch_dim, &mut report);
+    gc_stale_generations(dir, generation);
+    Ok((shards, report))
+}
+
+/// Drop all-but-one copy of any id recovered in two places. A crash
+/// between a rebalance move's destination commit (`MoveIn`, committed
+/// first) and source commit (`MoveOut`) persists the row in both shards'
+/// logs; the copies are bit-identical by construction, so the first
+/// occurrence wins. Left in place, a duplicate would inflate
+/// `snapshot_ordered`/`snapshot_matrix`/shard sizes forever (and be
+/// re-serialized into every future snapshot generation).
+fn dedup_recovered_ids(shards: &mut [ShardState], sketch_dim: usize, report: &mut RecoveryReport) {
+    let mut seen = std::collections::HashSet::new();
+    for state in shards.iter_mut() {
+        let fresh: Vec<bool> = state.ids.iter().map(|id| seen.insert(*id)).collect();
+        if fresh.iter().all(|&f| f) {
+            continue;
+        }
+        let kept = fresh.iter().filter(|&&f| f).count();
+        let mut ids = Vec::with_capacity(kept);
+        let mut rows = crate::sketch::SketchMatrix::with_row_capacity(sketch_dim, kept);
+        for (row, (&id, &keep)) in state.ids.iter().zip(&fresh).enumerate() {
+            if keep {
+                ids.push(id);
+                rows.push_row(state.rows.row(row), state.rows.weight(row) as u32);
+            }
+        }
+        report.duplicate_rows_dropped += state.ids.len() - kept;
+        *state = ShardState { ids, rows };
+    }
+}
+
+/// Remove snapshot/WAL files of any generation other than the live one.
+/// Rotation GCs its own predecessor, but a crash between the manifest
+/// commit and that GC loop would otherwise leak a full corpus image per
+/// crash; recovery is the natural sweep point (no rotation can be in
+/// flight). Future-generation orphans (crash after writing `snap-(G+1)`
+/// but before the manifest commit) are swept too — recovery at `G` proves
+/// they never became live. Best-effort: a leftover file is waste, not
+/// corruption.
+fn gc_stale_generations(dir: &Path, live: u64) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let generation = name
+            .strip_prefix("snap-")
+            .or_else(|| name.strip_prefix("wal-"))
+            .and_then(|rest| rest.split('-').next())
+            .and_then(|g| g.parse::<u64>().ok());
+        if let Some(g) = generation {
+            if g != live {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::wal::WalWriter;
+    use crate::persist::FsyncPolicy;
+    use crate::sketch::{BitVec, SketchMatrix};
+    use crate::testing::TempDir;
+    use crate::util::rng::Xoshiro256;
+
+    const DIM: usize = 128;
+
+    fn fp(num_shards: usize) -> Fingerprint {
+        Fingerprint {
+            sketch_dim: DIM,
+            seed: 11,
+            num_shards,
+        }
+    }
+
+    fn sk(rng: &mut Xoshiro256) -> BitVec {
+        BitVec::from_indices(DIM, rng.sample_indices(DIM, 20))
+    }
+
+    #[test]
+    fn fresh_dir_initialises_generation_zero() {
+        let dir = TempDir::new("recover-fresh");
+        let (shards, report) = recover(dir.path(), &fp(3)).unwrap();
+        assert_eq!(shards.len(), 3);
+        assert!(shards.iter().all(|s| s.ids.is_empty()));
+        assert_eq!(report.generation, 0);
+        assert_eq!(report.replayed_records, 0);
+        // manifest written: a second recovery agrees
+        let (_, again) = recover(dir.path(), &fp(3)).unwrap();
+        assert_eq!(again.generation, 0);
+    }
+
+    #[test]
+    fn wal_replay_reproduces_insert_and_move_sequences() {
+        let dir = TempDir::new("recover-replay");
+        let f = fp(2);
+        recover(dir.path(), &f).unwrap(); // init manifest
+        let mut rng = Xoshiro256::new(1);
+        let rows: Vec<BitVec> = (0..4).map(|_| sk(&mut rng)).collect();
+        // shard 0: insert a, b, then move b out; shard 1: receives b
+        let mut w0 = WalWriter::create(&wal_path(dir.path(), 0, 0), FsyncPolicy::Never).unwrap();
+        w0.append_insert(0, rows[0].words());
+        w0.append_insert(1, rows[1].words());
+        w0.append_move_out();
+        w0.commit().unwrap();
+        drop(w0);
+        let mut w1 = WalWriter::create(&wal_path(dir.path(), 0, 1), FsyncPolicy::Never).unwrap();
+        w1.append_insert(2, rows[2].words());
+        w1.append_move_in(1, rows[1].words());
+        w1.commit().unwrap();
+        drop(w1);
+        let (shards, report) = recover(dir.path(), &f).unwrap();
+        assert_eq!(report.replayed_records, 5);
+        assert_eq!(shards[0].ids, vec![0]);
+        assert_eq!(shards[0].rows.row_bitvec(0), rows[0]);
+        assert_eq!(shards[1].ids, vec![2, 1]);
+        assert_eq!(shards[1].rows.row_bitvec(0), rows[2]);
+        assert_eq!(shards[1].rows.row_bitvec(1), rows[1]);
+        // weights were recomputed correctly on replay
+        assert_eq!(shards[1].rows.weight(1), rows[1].count_ones());
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_hard_error() {
+        let dir = TempDir::new("recover-fp");
+        recover(dir.path(), &fp(2)).unwrap();
+        let mut other = fp(2);
+        other.seed = 12;
+        let err = recover(dir.path(), &other).unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
+        let mut shards = fp(2);
+        shards.num_shards = 4;
+        let err = recover(dir.path(), &shards).unwrap_err().to_string();
+        assert!(err.contains("num_shards"), "{err}");
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_non_fatal() {
+        let dir = TempDir::new("recover-torn");
+        let f = fp(1);
+        recover(dir.path(), &f).unwrap();
+        let mut rng = Xoshiro256::new(2);
+        let rows: Vec<BitVec> = (0..3).map(|_| sk(&mut rng)).collect();
+        let path = wal_path(dir.path(), 0, 0);
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        for (i, r) in rows.iter().enumerate() {
+            w.append_insert(i as u64, r.words());
+        }
+        w.commit().unwrap();
+        drop(w);
+        let full = std::fs::metadata(&path).unwrap().len();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(full - 3)
+            .unwrap();
+        let (shards, report) = recover(dir.path(), &f).unwrap();
+        assert_eq!(report.truncated_tails, 1);
+        assert_eq!(report.replayed_records, 2);
+        assert_eq!(shards[0].ids, vec![0, 1]);
+        // the file was truncated to a frame boundary: recovering again is
+        // clean and appending resumes safely
+        let (_, again) = recover(dir.path(), &f).unwrap();
+        assert_eq!(again.truncated_tails, 0);
+        assert_eq!(again.replayed_records, 2);
+    }
+
+    #[test]
+    fn snapshot_plus_wal_tail_compose() {
+        let dir = TempDir::new("recover-compose");
+        let f = fp(1);
+        recover(dir.path(), &f).unwrap();
+        let mut rng = Xoshiro256::new(3);
+        let snap_rows: Vec<BitVec> = (0..5).map(|_| sk(&mut rng)).collect();
+        let tail_row = sk(&mut rng);
+        // generation-2 snapshot with ids 10..15, then a WAL insert of id 99
+        let m = SketchMatrix::from_sketches(&snap_rows);
+        let ids: Vec<usize> = (10..15).collect();
+        snapshot::write_shard(&snap_path(dir.path(), 2, 0), DIM, 0, &ids, &m).unwrap();
+        Manifest {
+            generation: 2,
+            fingerprint: f,
+        }
+        .save(dir.path())
+        .unwrap();
+        let mut w = WalWriter::create(&wal_path(dir.path(), 2, 0), FsyncPolicy::Never).unwrap();
+        w.append_insert(99, tail_row.words());
+        w.append_move_out();
+        w.append_move_out();
+        w.commit().unwrap();
+        drop(w);
+        let (shards, report) = recover(dir.path(), &f).unwrap();
+        assert_eq!(report.generation, 2);
+        assert_eq!(report.snapshot_rows, 5);
+        assert_eq!(report.replayed_records, 3);
+        // snapshot(10..15) + push(99) + pop + pop = ids [10, 11, 12, 13]
+        assert_eq!(shards[0].ids, vec![10, 11, 12, 13]);
+        assert_eq!(shards[0].rows.len(), 4);
+        assert_eq!(shards[0].rows.row_bitvec(3), snap_rows[3]);
+    }
+
+    #[test]
+    fn duplicated_id_from_crashed_move_is_deduped() {
+        // Simulate a crash between a rebalance's dst commit (MoveIn
+        // durable) and src commit (MoveOut lost): id 1 exists in both
+        // shards' logs. Recovery must keep exactly one copy.
+        let dir = TempDir::new("recover-dup");
+        let f = fp(2);
+        recover(dir.path(), &f).unwrap();
+        let mut rng = Xoshiro256::new(11);
+        let rows: Vec<BitVec> = (0..3).map(|_| sk(&mut rng)).collect();
+        let mut w0 = WalWriter::create(&wal_path(dir.path(), 0, 0), FsyncPolicy::Never).unwrap();
+        w0.append_insert(0, rows[0].words());
+        w0.append_insert(1, rows[1].words());
+        // the MoveOut for id 1 never reached the log
+        w0.commit().unwrap();
+        drop(w0);
+        let mut w1 = WalWriter::create(&wal_path(dir.path(), 0, 1), FsyncPolicy::Never).unwrap();
+        w1.append_insert(2, rows[2].words());
+        w1.append_move_in(1, rows[1].words());
+        w1.commit().unwrap();
+        drop(w1);
+        let (shards, report) = recover(dir.path(), &f).unwrap();
+        assert_eq!(report.duplicate_rows_dropped, 1);
+        // first occurrence (shard 0) wins; shard 1's copy is dropped
+        assert_eq!(shards[0].ids, vec![0, 1]);
+        assert_eq!(shards[1].ids, vec![2]);
+        assert_eq!(shards[1].rows.len(), 1);
+        assert_eq!(shards[1].rows.row_bitvec(0), rows[2]);
+        let total: usize = shards.iter().map(|s| s.ids.len()).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn missing_wal_segment_at_live_generation_is_a_hard_error() {
+        let dir = TempDir::new("recover-missing-wal");
+        let f = fp(1);
+        recover(dir.path(), &f).unwrap();
+        let mut rng = Xoshiro256::new(12);
+        let m = SketchMatrix::from_sketches(&[sk(&mut rng)]);
+        snapshot::write_shard(&snap_path(dir.path(), 1, 0), DIM, 0, &[5], &m).unwrap();
+        Manifest {
+            generation: 1,
+            fingerprint: f,
+        }
+        .save(dir.path())
+        .unwrap();
+        // snapshot exists but wal-1-shard-0.log does not
+        let err = recover(dir.path(), &f).unwrap_err().to_string();
+        assert!(err.contains("missing for live generation 1"), "{err}");
+        // creating an (empty) segment clears the condition
+        drop(WalWriter::create(&wal_path(dir.path(), 1, 0), FsyncPolicy::Never).unwrap());
+        let (shards, _) = recover(dir.path(), &f).unwrap();
+        assert_eq!(shards[0].ids, vec![5]);
+    }
+
+    #[test]
+    fn mid_file_wal_corruption_is_a_hard_error_not_a_truncation() {
+        let dir = TempDir::new("recover-midfile");
+        let f = fp(1);
+        recover(dir.path(), &f).unwrap();
+        let mut rng = Xoshiro256::new(8);
+        let rows: Vec<BitVec> = (0..4).map(|_| sk(&mut rng)).collect();
+        let path = wal_path(dir.path(), 0, 0);
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        for (i, r) in rows.iter().enumerate() {
+            w.append_insert(i as u64, r.words());
+        }
+        w.commit().unwrap();
+        drop(w);
+        // damage the SECOND frame: frames 3 and 4 are intact past it
+        let mut bytes = std::fs::read(&path).unwrap();
+        let frame = 12 + 1 + 8 + (DIM / 64) * 8;
+        bytes[frame + 12 + 2] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = recover(dir.path(), &f).unwrap_err().to_string();
+        assert!(err.contains("mid-file damage"), "{err}");
+        // and the file was NOT truncated — the intact records are still there
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), bytes.len() as u64);
+    }
+
+    #[test]
+    fn stale_generations_are_swept_at_recovery() {
+        let dir = TempDir::new("recover-gc");
+        let f = fp(1);
+        recover(dir.path(), &f).unwrap(); // live generation 0
+        // simulate a crash-during-rotation leftover: an orphan future-gen
+        // snapshot + wal pair that never became live
+        let orphan_snap = snap_path(dir.path(), 1, 0);
+        let orphan_wal = wal_path(dir.path(), 1, 0);
+        std::fs::write(&orphan_snap, b"orphan").unwrap();
+        std::fs::write(&orphan_wal, b"orphan").unwrap();
+        recover(dir.path(), &f).unwrap();
+        assert!(!orphan_snap.exists(), "stale snapshot not swept");
+        assert!(!orphan_wal.exists(), "stale wal not swept");
+        // the live generation's files survive the sweep
+        let mut w = WalWriter::create(&wal_path(dir.path(), 0, 0), FsyncPolicy::Never).unwrap();
+        let mut rng = Xoshiro256::new(9);
+        w.append_insert(0, sk(&mut rng).words());
+        w.commit().unwrap();
+        drop(w);
+        let (shards, _) = recover(dir.path(), &f).unwrap();
+        assert_eq!(shards[0].ids, vec![0]);
+        assert!(wal_path(dir.path(), 0, 0).exists());
+    }
+
+    #[test]
+    fn missing_snapshot_for_live_generation_is_hard_error() {
+        let dir = TempDir::new("recover-missing-snap");
+        let f = fp(1);
+        Manifest {
+            generation: 3,
+            fingerprint: f,
+        }
+        .save(dir.path())
+        .unwrap();
+        let err = recover(dir.path(), &f).unwrap_err().to_string();
+        assert!(err.contains("generation-3"), "{err}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Full per-shard arena snapshots.
+//!
+//! A snapshot file captures one shard completely: its id column plus the
+//! [`SketchMatrix`] rows *with their cached weights*, so loading a
+//! snapshot never re-popcounts the arena. Layout (little-endian):
+//!
+//! ```text
+//!   "CBSP" [u32 version][u64 sketch_dim][u64 shard_index][u64 row_count]
+//!   row_count × ([u64 id][u32 weight][words_per_row × u64])
+//!   [u64 fnv1a64(everything after the magic, before this field)]
+//! ```
+//!
+//! Files are written to a `.tmp` sibling, fsynced, then renamed into
+//! place, so a crash mid-snapshot can never leave a half-written file
+//! under the live name; the trailing checksum rejects bit rot and torn
+//! renames on crash-prone filesystems. The embedded `sketch_dim` and
+//! `shard_index` are cross-checked on load — a snapshot can never be
+//! applied to the wrong shard or a differently-configured store.
+
+use super::wal::fnv1a64;
+use crate::sketch::SketchMatrix;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"CBSP";
+const VERSION: u32 = 1;
+
+/// One shard's recovered state: the id column and the packed arena. Also
+/// the shape recovery hands back to [`crate::coordinator::store`] for both
+/// snapshot-loaded and WAL-replayed shards.
+#[derive(Debug, Default)]
+pub struct ShardState {
+    pub ids: Vec<usize>,
+    pub rows: SketchMatrix,
+}
+
+/// Write one shard's snapshot atomically (`path.tmp` + rename).
+pub fn write_shard(
+    path: &Path,
+    sketch_dim: usize,
+    shard_index: usize,
+    ids: &[usize],
+    rows: &SketchMatrix,
+) -> Result<()> {
+    assert_eq!(ids.len(), rows.len(), "id column out of step with arena");
+    let words_per_row = rows.words_per_row();
+    let mut body =
+        Vec::with_capacity(4 + 8 + 8 + 8 + ids.len() * (12 + words_per_row * 8));
+    body.extend_from_slice(&VERSION.to_le_bytes());
+    body.extend_from_slice(&(sketch_dim as u64).to_le_bytes());
+    body.extend_from_slice(&(shard_index as u64).to_le_bytes());
+    body.extend_from_slice(&(ids.len() as u64).to_le_bytes());
+    for (row, &id) in ids.iter().enumerate() {
+        body.extend_from_slice(&(id as u64).to_le_bytes());
+        body.extend_from_slice(&(rows.weight(row) as u32).to_le_bytes());
+        for w in rows.row(row) {
+            body.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    let checksum = fnv1a64(&body);
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create snapshot {}", tmp.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&body)?;
+        f.write_all(&checksum.to_le_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename snapshot into place: {}", path.display()))?;
+    Ok(())
+}
+
+/// Load and validate one shard's snapshot.
+pub fn load_shard(path: &Path, sketch_dim: usize, shard_index: usize) -> Result<ShardState> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open snapshot {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    if buf.len() < 4 + 28 + 8 || &buf[..4] != MAGIC {
+        bail!("snapshot {}: bad magic or truncated header", path.display());
+    }
+    let body = &buf[4..buf.len() - 8];
+    let want = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    if fnv1a64(body) != want {
+        bail!("snapshot {}: checksum mismatch (torn or corrupt)", path.display());
+    }
+    let version = u32::from_le_bytes(body[0..4].try_into().unwrap());
+    if version != VERSION {
+        bail!("snapshot {}: unsupported version {version}", path.display());
+    }
+    let dim = u64::from_le_bytes(body[4..12].try_into().unwrap()) as usize;
+    let shard = u64::from_le_bytes(body[12..20].try_into().unwrap()) as usize;
+    let n = u64::from_le_bytes(body[20..28].try_into().unwrap()) as usize;
+    if dim != sketch_dim {
+        bail!(
+            "snapshot {}: sketch_dim {dim} does not match store sketch_dim {sketch_dim}",
+            path.display()
+        );
+    }
+    if shard != shard_index {
+        bail!(
+            "snapshot {}: written for shard {shard}, loaded as shard {shard_index}",
+            path.display()
+        );
+    }
+    let words_per_row = sketch_dim.div_ceil(64);
+    let row_bytes = 12 + words_per_row * 8;
+    if body.len() != 28 + n * row_bytes {
+        bail!(
+            "snapshot {}: body is {} bytes, expected {} for {n} rows",
+            path.display(),
+            body.len(),
+            28 + n * row_bytes
+        );
+    }
+    let mut ids = Vec::with_capacity(n);
+    let mut rows = SketchMatrix::with_row_capacity(sketch_dim, n);
+    let mut words = vec![0u64; words_per_row];
+    for r in 0..n {
+        let at = 28 + r * row_bytes;
+        ids.push(u64::from_le_bytes(body[at..at + 8].try_into().unwrap()) as usize);
+        let weight = u32::from_le_bytes(body[at + 8..at + 12].try_into().unwrap());
+        for (wi, chunk) in body[at + 12..at + row_bytes].chunks_exact(8).enumerate() {
+            words[wi] = u64::from_le_bytes(chunk.try_into().unwrap());
+        }
+        rows.push_row(&words, weight);
+    }
+    Ok(ShardState { ids, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::BitVec;
+    use crate::testing::TempDir;
+    use crate::util::rng::Xoshiro256;
+
+    fn arena(seed: u64, n: usize, dim: usize) -> (Vec<usize>, SketchMatrix) {
+        let mut rng = Xoshiro256::new(seed);
+        let sketches: Vec<BitVec> = (0..n)
+            .map(|_| BitVec::from_indices(dim, rng.sample_indices(dim, dim / 6)))
+            .collect();
+        let ids = (0..n).map(|i| i * 3 + 1).collect();
+        (ids, SketchMatrix::from_sketches(&sketches))
+    }
+
+    #[test]
+    fn snapshot_roundtrips_ids_rows_and_weights() {
+        let dir = TempDir::new("snap-roundtrip");
+        let path = dir.path().join("snap-1-shard-2.bin");
+        let (ids, rows) = arena(1, 13, 130); // non-multiple-of-64 dim
+        write_shard(&path, 130, 2, &ids, &rows).unwrap();
+        let loaded = load_shard(&path, 130, 2).unwrap();
+        assert_eq!(loaded.ids, ids);
+        assert_eq!(loaded.rows, rows); // rows + cached weights, exactly
+    }
+
+    #[test]
+    fn empty_shard_roundtrips() {
+        let dir = TempDir::new("snap-empty");
+        let path = dir.path().join("snap.bin");
+        write_shard(&path, 64, 0, &[], &SketchMatrix::new(64)).unwrap();
+        let loaded = load_shard(&path, 64, 0).unwrap();
+        assert!(loaded.ids.is_empty());
+        assert!(loaded.rows.is_empty());
+    }
+
+    #[test]
+    fn wrong_dim_or_shard_is_a_described_error() {
+        let dir = TempDir::new("snap-mismatch");
+        let path = dir.path().join("snap.bin");
+        let (ids, rows) = arena(2, 4, 128);
+        write_shard(&path, 128, 1, &ids, &rows).unwrap();
+        let err = load_shard(&path, 256, 1).unwrap_err();
+        assert!(err.to_string().contains("sketch_dim"), "{err:#}");
+        let err = load_shard(&path, 128, 0).unwrap_err();
+        assert!(err.to_string().contains("shard"), "{err:#}");
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let dir = TempDir::new("snap-corrupt");
+        let path = dir.path().join("snap.bin");
+        let (ids, rows) = arena(3, 6, 64);
+        write_shard(&path, 64, 0, &ids, &rows).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_shard(&path, 64, 0).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err:#}");
+    }
+
+    #[test]
+    fn no_tmp_file_left_behind() {
+        let dir = TempDir::new("snap-tmp");
+        let path = dir.path().join("snap.bin");
+        let (ids, rows) = arena(4, 3, 64);
+        write_shard(&path, 64, 0, &ids, &rows).unwrap();
+        assert!(path.exists());
+        assert!(!path.with_extension("tmp").exists());
+    }
+}

@@ -146,6 +146,17 @@ impl SketchMatrix {
         true
     }
 
+    /// Drop the arena's trailing row (WAL `MoveOut` replay — the
+    /// recovery-side mirror of [`SketchMatrix::move_last_row_to`] when the
+    /// destination shard replays its own log). Returns `false` when empty.
+    pub fn pop_row(&mut self) -> bool {
+        if self.weights.pop().is_none() {
+            return false;
+        }
+        self.words.truncate(self.words.len() - self.words_per_row);
+        true
+    }
+
     /// Arena memory footprint in bytes (words + weight cache).
     pub fn memory_bytes(&self) -> usize {
         self.words.len() * 8 + self.weights.len() * 4
@@ -229,6 +240,22 @@ mod tests {
         assert!(a.move_last_row_to(&mut b));
         assert!(!a.move_last_row_to(&mut b));
         assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn pop_row_is_the_inverse_of_push() {
+        let mut rng = Xoshiro256::new(9);
+        let d = 96;
+        let rows: Vec<BitVec> = (0..3).map(|_| sk(&mut rng, d, 20)).collect();
+        let mut m = SketchMatrix::from_sketches(&rows);
+        assert!(m.pop_row());
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.row_bitvec(1), rows[1]);
+        assert_eq!(m.memory_bytes(), 2 * (2 * 8 + 4));
+        assert!(m.pop_row());
+        assert!(m.pop_row());
+        assert!(!m.pop_row());
+        assert!(m.is_empty());
     }
 
     #[test]

@@ -16,6 +16,39 @@
 //! ```
 
 use crate::util::rng::Xoshiro256;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A unique scratch directory under the system temp dir, removed on drop
+/// (`tempfile` is unavailable offline). Uniqueness comes from the process
+/// id plus a process-wide counter, so concurrent tests and concurrent test
+/// processes never collide.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(label: &str) -> TempDir {
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "cabin-{label}-{}-{}",
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
 
 pub struct PropRunner {
     pub name: String,
@@ -114,6 +147,18 @@ mod tests {
     #[should_panic(expected = "property 'always fails'")]
     fn failing_property_panics_with_context() {
         PropRunner::new("always fails", 4).run(|_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn temp_dirs_are_unique_and_cleaned_up() {
+        let a = TempDir::new("t");
+        let b = TempDir::new("t");
+        assert_ne!(a.path(), b.path());
+        std::fs::write(a.path().join("f"), b"x").unwrap();
+        let kept = a.path().to_path_buf();
+        drop(a);
+        assert!(!kept.exists());
+        assert!(b.path().exists());
     }
 
     #[test]

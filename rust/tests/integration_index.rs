@@ -41,6 +41,7 @@ fn start_server(
             mode,
             ..Default::default()
         },
+        persist: Default::default(),
     };
     let coordinator = Arc::new(Coordinator::new(config));
     let (tx, rx) = std::sync::mpsc::sync_channel(1);

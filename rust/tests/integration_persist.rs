@@ -1,0 +1,283 @@
+//! Crash-recovery integration: snapshot + WAL persistence round-trips.
+//!
+//! The central invariant (the PR's acceptance bar): ingest a corpus,
+//! hard-stop the store mid-stream (no graceful teardown — `mem::forget`
+//! skips every Drop), recover a fresh store from the data dir, and
+//! `get`/top-k/shard layout match the pre-crash store *exactly*, including
+//! with the LSH index enabled (the indexes are deterministically
+//! bulk-rebuilt over the recovered arenas).
+
+use cabin::coordinator::client::Client;
+use cabin::coordinator::router::{self, QueryOpts};
+use cabin::coordinator::store::ShardedStore;
+use cabin::coordinator::{Coordinator, CoordinatorConfig};
+use cabin::index::{IndexConfig, IndexMode};
+use cabin::persist::manifest::wal_path;
+use cabin::persist::{FsyncPolicy, PersistConfig, PersistCounters, PersistMode};
+use cabin::sketch::{BitVec, SketchMatrix};
+use cabin::testing::TempDir;
+use cabin::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+const DIM: usize = 256;
+
+fn sketch(rng: &mut Xoshiro256) -> BitVec {
+    BitVec::from_indices(DIM, rng.sample_indices(DIM, 40))
+}
+
+fn persist_cfg(dir: &TempDir, mode: PersistMode, snapshot_every: u64) -> PersistConfig {
+    PersistConfig {
+        mode,
+        data_dir: Some(dir.path().to_path_buf()),
+        fsync: FsyncPolicy::Never,
+        snapshot_every,
+    }
+}
+
+fn indexed_on() -> IndexConfig {
+    IndexConfig {
+        mode: IndexMode::On,
+        ..Default::default()
+    }
+}
+
+fn open(
+    dir: &TempDir,
+    mode: PersistMode,
+    snapshot_every: u64,
+    index: &IndexConfig,
+) -> ShardedStore {
+    let (store, _) = ShardedStore::open_durable(
+        3,
+        DIM,
+        index,
+        21,
+        &persist_cfg(dir, mode, snapshot_every),
+        Arc::new(PersistCounters::default()),
+    )
+    .unwrap();
+    store
+}
+
+/// Per-shard `(ids, arena)` image — `SketchMatrix` equality covers rows
+/// *and* cached weights.
+fn shard_image(store: &ShardedStore) -> Vec<(Vec<usize>, SketchMatrix)> {
+    store.map_shards(|s| (s.ids.clone(), s.rows.clone()))
+}
+
+#[test]
+fn hard_stop_recovery_matches_pre_crash_store_exactly() {
+    let dir = TempDir::new("persist-hard-stop");
+    let mut rng = Xoshiro256::new(1);
+    // clustered corpus so the indexed path actually answers from buckets
+    let centers: Vec<BitVec> = (0..6).map(|_| sketch(&mut rng)).collect();
+    let mut corpus: Vec<BitVec> = Vec::new();
+    for c in &centers {
+        for _ in 0..15 {
+            let mut p = c.clone();
+            let flip = rng.gen_range(DIM as u64) as usize;
+            if p.get(flip) {
+                p.clear(flip);
+            } else {
+                p.set(flip);
+            }
+            corpus.push(p);
+        }
+    }
+    let queries: Vec<BitVec> = (0..8).map(|_| sketch(&mut rng)).collect();
+
+    let store = open(&dir, PersistMode::WalSnapshot, 0, &indexed_on());
+    for chunk in corpus[..60].chunks(10) {
+        store.insert_batch(chunk.to_vec());
+    }
+    store.rebalance(1);
+    store.persist_snapshot().unwrap(); // generation 1: snapshot mid-stream
+    for chunk in corpus[60..].chunks(10) {
+        store.insert_batch(chunk.to_vec());
+    }
+    store.rebalance(1); // WAL-tail moves on top of the snapshot
+
+    let pre_len = store.len();
+    let pre_sizes = store.shard_sizes();
+    let pre_image = shard_image(&store);
+    let pre_snapshot = store.snapshot_ordered();
+    let opts_indexed = QueryOpts::indexed(0, None);
+    let opts_scan = QueryOpts::full_scan();
+    let pre_topk: Vec<_> = queries
+        .iter()
+        .map(|q| {
+            (
+                router::topk_with(&store, q, 10, &opts_indexed),
+                router::topk_with(&store, q, 10, &opts_scan),
+            )
+        })
+        .collect();
+
+    // hard stop: no Drop runs, nothing is flushed beyond the per-batch
+    // commits the store already performed before "acknowledging"
+    std::mem::forget(store);
+
+    let recovered = open(&dir, PersistMode::WalSnapshot, 0, &indexed_on());
+    assert_eq!(recovered.len(), pre_len);
+    assert_eq!(recovered.shard_sizes(), pre_sizes);
+    assert_eq!(shard_image(&recovered), pre_image, "ids/rows/weights differ");
+    assert_eq!(recovered.snapshot_ordered(), pre_snapshot);
+    for (id, expected) in &pre_snapshot {
+        assert_eq!(recovered.get(*id).as_ref(), Some(expected), "id {id}");
+    }
+    // top-k identical pre/post — indexed and full-scan paths both
+    for (q, (indexed, scan)) in queries.iter().zip(&pre_topk) {
+        assert_eq!(&router::topk_with(&recovered, q, 10, &opts_indexed), indexed);
+        assert_eq!(&router::topk_with(&recovered, q, 10, &opts_scan), scan);
+    }
+    // recovered LSH indexes mirror their arenas
+    for (rows, ix_len) in
+        recovered.map_shards(|s| (s.ids.len(), s.index.as_ref().map(|ix| ix.len())))
+    {
+        assert_eq!(ix_len, Some(rows));
+    }
+}
+
+#[test]
+fn rebalance_heavy_wal_replay_reproduces_exact_layout() {
+    let dir = TempDir::new("persist-rebalance");
+    let mut rng = Xoshiro256::new(2);
+    let store = open(&dir, PersistMode::Wal, 0, &IndexConfig::default());
+    // one big batch lands on a single shard, then rebalance scatters it:
+    // recovery must replay the MoveOut/MoveIn pairs, not just inserts
+    store.insert_batch((0..40).map(|_| sketch(&mut rng)).collect());
+    assert!(store.rebalance(1) > 0);
+    store.insert_batch((0..5).map(|_| sketch(&mut rng)).collect());
+    let pre_image = shard_image(&store);
+    let pre_sizes = store.shard_sizes();
+    std::mem::forget(store);
+
+    let recovered = open(&dir, PersistMode::Wal, 0, &IndexConfig::default());
+    assert_eq!(recovered.shard_sizes(), pre_sizes);
+    assert_eq!(shard_image(&recovered), pre_image);
+}
+
+#[test]
+fn truncated_wal_tail_drops_only_the_partial_record() {
+    let dir = TempDir::new("persist-torn");
+    let mut rng = Xoshiro256::new(3);
+    let pts: Vec<BitVec> = (0..7).map(|_| sketch(&mut rng)).collect();
+    // single shard so the whole corpus shares one WAL file
+    let open_one_shard = || {
+        ShardedStore::open_durable(
+            1,
+            DIM,
+            &IndexConfig::default(),
+            21,
+            &persist_cfg(&dir, PersistMode::Wal, 0),
+            Arc::new(PersistCounters::default()),
+        )
+        .unwrap()
+    };
+    {
+        let (store, _) = open_one_shard();
+        for p in &pts {
+            store.insert_batch(vec![p.clone()]);
+        }
+    } // graceful drop: file fully flushed
+    let wal = wal_path(dir.path(), 0, 0);
+    let full = std::fs::metadata(&wal).unwrap().len();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&wal)
+        .unwrap()
+        .set_len(full - 9) // tear the last frame mid-payload
+        .unwrap();
+
+    let (recovered, report) = open_one_shard();
+    assert_eq!(report.truncated_tails, 1);
+    assert_eq!(report.replayed_records, 6);
+    assert_eq!(recovered.len(), 6, "only the torn final record is lost");
+    for (i, p) in pts[..6].iter().enumerate() {
+        assert_eq!(recovered.get(i).as_ref(), Some(p), "id {i}");
+    }
+    assert!(recovered.get(6).is_none());
+    // the store keeps appending cleanly past the repaired boundary
+    let ids = recovered.insert_batch(vec![pts[6].clone()]);
+    assert_eq!(ids, vec![6]);
+    std::mem::forget(recovered);
+    let (again, report) = open_one_shard();
+    assert_eq!(report.truncated_tails, 0, "tail was repaired on first recovery");
+    assert_eq!(again.len(), 7);
+    assert_eq!(again.get(6).as_ref(), Some(&pts[6]));
+}
+
+#[test]
+fn wire_level_restart_serves_the_recovered_corpus() {
+    use cabin::data::{synth::SynthSpec, CatVector};
+
+    let dir = TempDir::new("persist-wire");
+    let mut spec = SynthSpec::small_demo();
+    spec.dim = 600;
+    spec.num_categories = 16;
+    spec.num_points = 24;
+    let pts: Vec<CatVector> = spec.generate(4).points;
+
+    let config = || CoordinatorConfig {
+        input_dim: 600,
+        num_categories: 16,
+        sketch_dim: 128,
+        seed: 5,
+        num_shards: 2,
+        use_xla: false,
+        persist: PersistConfig {
+            mode: PersistMode::WalSnapshot,
+            data_dir: Some(dir.path().to_path_buf()),
+            fsync: FsyncPolicy::Never,
+            snapshot_every: 0,
+        },
+        ..Default::default()
+    };
+    let serve = |config: CoordinatorConfig| {
+        let coordinator = Arc::new(Coordinator::try_new(config).unwrap());
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        let server = Arc::clone(&coordinator);
+        let handle = std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", |addr| {
+                    let _ = tx.send(addr);
+                })
+                .unwrap();
+        });
+        (rx.recv().unwrap(), handle)
+    };
+
+    // first life: ingest, snapshot mid-stream, flush, graceful shutdown
+    let (ids, pre_hits) = {
+        let (addr, server) = serve(config());
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let mut ids = Vec::new();
+        for p in &pts[..12] {
+            ids.push(c.insert(p.clone()).unwrap());
+        }
+        assert_eq!(c.snapshot().unwrap(), 1);
+        for p in &pts[12..] {
+            ids.push(c.insert(p.clone()).unwrap());
+        }
+        c.flush().unwrap();
+        let hits = c.query(pts[7].clone(), 5).unwrap();
+        assert_eq!(hits[0].id, ids[7]);
+        c.shutdown().unwrap();
+        server.join().unwrap();
+        (ids, hits)
+    };
+
+    // second life: same data dir, corpus is back and identically ranked
+    let (addr, server) = serve(config());
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    assert_eq!(c.query(pts[7].clone(), 5).unwrap(), pre_hits);
+    let d = c.distance(ids[0], ids[23]).unwrap();
+    assert!(d.is_finite());
+    assert_eq!(c.distance(ids[23], ids[23]).unwrap(), 0.0);
+    assert_eq!(c.stat("persist_generation").unwrap(), 1.0);
+    assert!(c.stat("persist_recovery_ms").unwrap() >= 0.0);
+    // snapshot works in the second life too and bumps the generation
+    assert_eq!(c.snapshot().unwrap(), 2);
+    c.shutdown().unwrap();
+    server.join().unwrap();
+}

@@ -35,9 +35,16 @@ fn soak_queries_and_lookups_race_inserts_and_rebalance() {
     let truth: Mutex<Vec<(usize, BitVec)>> = Mutex::new(Vec::new());
 
     const INSERTERS: u64 = 4;
-    const BATCHES_PER_INSERTER: usize = 12;
     const BATCH: usize = 8;
-    let total = INSERTERS as usize * BATCHES_PER_INSERTER * BATCH;
+    // quick shape in the tier-1 gate; the scheduled soak lane sets
+    // CABIN_SOAK=1 for a longer churn window
+    let batches_per_inserter: usize =
+        if std::env::var("CABIN_SOAK").ok().as_deref() == Some("1") {
+            80
+        } else {
+            12
+        };
+    let total = INSERTERS as usize * batches_per_inserter * BATCH;
 
     std::thread::scope(|s| {
         // batched inserters
@@ -46,7 +53,7 @@ fn soak_queries_and_lookups_race_inserts_and_rebalance() {
             let truth = &truth;
             s.spawn(move || {
                 let mut rng = Xoshiro256::new(1000 + t);
-                for _ in 0..BATCHES_PER_INSERTER {
+                for _ in 0..batches_per_inserter {
                     let batch: Vec<BitVec> = (0..BATCH).map(|_| sketch(&mut rng)).collect();
                     let ids = store.insert_batch(batch.clone());
                     let mut tr = truth.lock().unwrap();

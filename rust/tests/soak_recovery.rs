@@ -1,0 +1,135 @@
+//! Crash-recovery soak: `kill -9` the real server binary mid-ingest and
+//! verify that every *acknowledged* insert survives the restart.
+//!
+//! This is the durability contract end-to-end: the store WAL-commits each
+//! batch before the batcher acknowledges it, so an insert whose response
+//! reached the client must be recoverable — even though the process dies
+//! with no teardown whatsoever. (With `--fsync always` the same holds
+//! across power loss; a SIGKILL alone cannot lose OS-buffered writes, so
+//! the test is deterministic either way.)
+//!
+//! One quick round runs in the tier-1 gate; the scheduled CI soak lane
+//! sets `CABIN_SOAK=1` for more rounds with a larger corpus.
+
+use cabin::coordinator::client::Client;
+use cabin::data::CatVector;
+use cabin::testing::TempDir;
+use cabin::util::rng::Xoshiro256;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+
+const DIM: usize = 400;
+
+/// Kills the child on drop so a failing assert can't leak a server.
+struct ServerProc {
+    child: Child,
+    pub addr: String,
+}
+
+impl ServerProc {
+    fn spawn(data_dir: &std::path::Path) -> ServerProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_cabin"))
+            .args([
+                "serve",
+                "--addr",
+                "127.0.0.1:0",
+                "--dim",
+                "400",
+                "--categories",
+                "8",
+                "--sketch-dim",
+                "128",
+                "--seed",
+                "3",
+                "--shards",
+                "2",
+                "--no-xla=true",
+                "--max-delay-ms",
+                "1",
+                "--fsync",
+                "always",
+                "--data-dir",
+            ])
+            .arg(data_dir)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn cabin serve");
+        // `serve` prints "[serve] bound <addr>" once the listener is up
+        let stdout = child.stdout.take().expect("child stdout");
+        let mut lines = BufReader::new(stdout).lines();
+        let addr = loop {
+            let line = lines
+                .next()
+                .expect("server exited before binding")
+                .expect("read server stdout");
+            if let Some(bound) = line.strip_prefix("[serve] bound ") {
+                break bound.trim().to_string();
+            }
+        };
+        // drain the rest of stdout in the background so the child can
+        // never block on a full pipe
+        std::thread::spawn(move || for _ in lines {});
+        ServerProc { child, addr }
+    }
+
+    /// Hard stop: SIGKILL, no shutdown request, no flush.
+    fn kill9(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        self.kill9();
+    }
+}
+
+#[test]
+fn kill9_mid_ingest_then_restart_recovers_every_acked_insert() {
+    let soak = std::env::var("CABIN_SOAK").ok().as_deref() == Some("1");
+    let (rounds, per_round) = if soak { (4, 120) } else { (1, 40) };
+    let dir = TempDir::new("soak-recovery");
+    let mut rng = Xoshiro256::new(99);
+    // (id, vector) pairs whose insert was acknowledged before a kill
+    let mut acked: Vec<(usize, CatVector)> = Vec::new();
+
+    for round in 0..rounds {
+        let mut server = ServerProc::spawn(dir.path());
+        let mut c = Client::connect(&server.addr).expect("connect");
+        // every previously-acked insert must already be back
+        for (id, v) in &acked {
+            let hits = c.query(v.clone(), 1).expect("query recovered corpus");
+            assert_eq!(hits[0].id, *id, "round {round}: id {id} lost after kill -9");
+            assert!(
+                hits[0].dist < 1e-9,
+                "round {round}: id {id} corrupted (dist {})",
+                hits[0].dist
+            );
+        }
+        // ingest this round's batch; record each ack
+        for _ in 0..per_round {
+            let v = CatVector::random(DIM, 50, 8, &mut rng);
+            let id = c.insert(v.clone()).expect("insert");
+            acked.push((id, v));
+        }
+        // mid-stream hard stop: some queued-but-unacked work may exist in
+        // the batcher; acked work must survive regardless
+        server.kill9();
+    }
+
+    // final life: everything ever acknowledged is present and exact
+    let mut server = ServerProc::spawn(dir.path());
+    let mut c = Client::connect(&server.addr).expect("connect final");
+    assert_eq!(acked.len(), rounds * per_round);
+    for (id, v) in &acked {
+        let hits = c.query(v.clone(), 1).expect("query final corpus");
+        assert_eq!(hits[0].id, *id, "id {id} lost in final recovery");
+        assert!(hits[0].dist < 1e-9);
+        assert_eq!(c.distance(*id, *id).unwrap(), 0.0);
+    }
+    assert_eq!(c.stat("persist_cfg_mode").unwrap(), 2.0);
+    let _ = c.shutdown();
+    let _ = server.child.wait();
+}

@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Bench trajectory tooling for CI.
+
+Two subcommands, stdlib only:
+
+  report  — collect the CSVs the cabin bench harness writes to
+            rust/results/bench_<suite>.csv into one machine-readable
+            BENCH_*.json (per-bench suite, name, corpus size, wall-ms,
+            throughput).
+
+  check   — compare a PR's BENCH_pr.json against the committed
+            BENCH_baseline.json and fail (exit 1) on regressions beyond
+            --max-regression (default 25%) on p50 wall time. A baseline
+            marked "provisional": true (or with no benches) records the
+            trajectory without gating, and prints the JSON to commit as
+            the real baseline.
+
+Wall times are compared on p50, not mean, to damp CI runner noise.
+"""
+
+import argparse
+import csv
+import json
+import re
+import sys
+from pathlib import Path
+
+SCHEMA = 1
+
+
+def parse_corpus(name: str) -> int:
+    """Best-effort corpus size from a bench name.
+
+    Bench names embed their scale as 'corpus1000', a path segment like
+    '/20000' or '/20000x1024', or a trailing '/100k'.
+    """
+    m = re.search(r"corpus(\d+)", name)
+    if m:
+        return int(m.group(1))
+    m = re.search(r"/(\d+)k(?:/|$)", name)
+    if m:
+        return int(m.group(1)) * 1000
+    m = re.search(r"/(\d+)(?:x\d+)?(?:/|$)", name)
+    if m:
+        return int(m.group(1))
+    return 0
+
+
+def cmd_report(args: argparse.Namespace) -> int:
+    csv_dir = Path(args.csv_dir)
+    benches = []
+    for path in sorted(csv_dir.glob("bench_*.csv")):
+        suite = path.stem.removeprefix("bench_")
+        with path.open(newline="") as fh:
+            for row in csv.DictReader(fh):
+                wall_ms = float(row["p50_s"]) * 1e3
+                thrpt = row.get("thrpt_per_s", "")
+                benches.append(
+                    {
+                        "suite": suite,
+                        "name": row["name"],
+                        "corpus": parse_corpus(row["name"]),
+                        "iters": int(row["iters"]),
+                        "wall_ms": round(wall_ms, 4),
+                        "mean_ms": round(float(row["mean_s"]) * 1e3, 4),
+                        "throughput_per_s": float(thrpt) if thrpt else None,
+                    }
+                )
+    if not benches:
+        print(f"error: no bench_*.csv files under {csv_dir}", file=sys.stderr)
+        return 1
+    doc = {"schema": SCHEMA, "provisional": False, "benches": benches}
+    out = Path(args.out)
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"[bench_gate] wrote {out} ({len(benches)} benches)")
+    return 0
+
+
+def load(path: str) -> dict:
+    with open(path) as fh:
+        doc = json.load(fh)
+    if doc.get("schema") != SCHEMA:
+        raise SystemExit(f"{path}: unsupported schema {doc.get('schema')!r}")
+    return doc
+
+
+def cmd_check(args: argparse.Namespace) -> int:
+    current = load(args.current)
+    baseline = load(args.baseline)
+    cur = {(b["suite"], b["name"]): b for b in current["benches"]}
+    base = {(b["suite"], b["name"]): b for b in baseline["benches"]}
+
+    if baseline.get("provisional") or not base:
+        print(
+            "[bench_gate] baseline is provisional/empty — recording the "
+            "trajectory without gating. To arm the regression gate, commit "
+            f"{args.current} as {args.baseline} from a trusted run."
+        )
+        width = max((len(f"{s}/{n}") for s, n in cur), default=0)
+        for (suite, name), b in sorted(cur.items()):
+            print(f"  {f'{suite}/{name}':<{width}}  {b['wall_ms']:>10.3f} ms")
+        return 0
+
+    failures = []
+    print(f"[bench_gate] comparing {len(cur)} benches against {len(base)} baseline entries")
+    for key in sorted(cur):
+        suite_name = "/".join(key)
+        if key not in base:
+            print(f"  NEW      {suite_name} ({cur[key]['wall_ms']:.3f} ms, no baseline)")
+            continue
+        b, c = base[key]["wall_ms"], cur[key]["wall_ms"]
+        ratio = c / b if b > 0 else float("inf")
+        status = "ok"
+        if ratio > 1 + args.max_regression:
+            status = "REGRESSED"
+            failures.append((suite_name, b, c, ratio))
+        print(f"  {status:<8} {suite_name}  {b:.3f} -> {c:.3f} ms  ({ratio - 1:+.1%})")
+    for key in sorted(set(base) - set(cur)):
+        print(f"  MISSING  {'/'.join(key)} (in baseline, not in this run)")
+
+    if failures:
+        print(
+            f"\n[bench_gate] FAIL: {len(failures)} bench(es) regressed more than "
+            f"{args.max_regression:.0%} vs {args.baseline}:",
+            file=sys.stderr,
+        )
+        for name, b, c, ratio in failures:
+            print(f"  {name}: {b:.3f} ms → {c:.3f} ms ({ratio:.2f}x)", file=sys.stderr)
+        return 1
+    print("[bench_gate] OK: no regressions beyond the threshold")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    rep = sub.add_parser("report", help="CSV dir -> BENCH json")
+    rep.add_argument("--csv-dir", default="rust/results")
+    rep.add_argument("--out", default="BENCH_pr.json")
+    rep.set_defaults(fn=cmd_report)
+    chk = sub.add_parser("check", help="gate a BENCH json against the baseline")
+    chk.add_argument("--current", default="BENCH_pr.json")
+    chk.add_argument("--baseline", default="BENCH_baseline.json")
+    chk.add_argument("--max-regression", type=float, default=0.25)
+    chk.set_defaults(fn=cmd_check)
+    args = ap.parse_args()
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -56,6 +56,7 @@ fn main() {
             ..Default::default()
         },
         persist: Default::default(),
+        ..Default::default()
     };
     println!("[e2e] index mode: {:?}", config.index.mode);
     let coordinator = Arc::new(Coordinator::new(config));

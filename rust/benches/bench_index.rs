@@ -68,8 +68,8 @@ fn main() {
 
     // ---- recall gate: indexed top-10 vs full-scan top-10 ----
     let k = 10usize;
-    let counters = IndexCounters::default();
-    let opts = QueryOpts::indexed(0, Some(&counters));
+    let counters = std::sync::Arc::new(IndexCounters::default());
+    let opts = QueryOpts::indexed(0, Some(counters.clone()));
     let (mut hit, mut total) = (0usize, 0usize);
     for q in &queries {
         let exact: Vec<usize> = router::topk(&store, q, k).iter().map(|h| h.id).collect();

@@ -1,12 +1,15 @@
 //! Persistence benchmarks: what the WAL costs on the ingest path (per
-//! fsync policy), what a snapshot rotation costs, and how fast recovery is
-//! from a pure WAL vs from a snapshot + empty tail — the numbers that
-//! justify `wal+snapshot` as the `--data-dir` default.
+//! fsync policy), what group commit buys back under concurrent ingest,
+//! what a snapshot rotation costs, and how fast recovery is from a pure
+//! WAL vs from a snapshot + empty tail — the numbers that justify
+//! `wal+snapshot` as the `--data-dir` default and ~1 ms as the
+//! `--commit-window-us` default.
 
 use cabin::bench::{black_box, Bench};
 use cabin::coordinator::store::ShardedStore;
+use cabin::coordinator::ExecutorConfig;
 use cabin::index::{IndexConfig, IndexMode};
-use cabin::persist::{FsyncPolicy, PersistConfig, PersistCounters, PersistMode};
+use cabin::persist::{Fingerprint, FsyncPolicy, PersistConfig, PersistCounters, PersistMode};
 use cabin::sketch::BitVec;
 use cabin::testing::TempDir;
 use cabin::util::rng::Xoshiro256;
@@ -14,6 +17,7 @@ use std::sync::Arc;
 
 const DIM: usize = 1024;
 const BATCH: usize = 64;
+const SHARDS: usize = 4;
 
 fn corpus(n: usize) -> Vec<BitVec> {
     let mut rng = Xoshiro256::new(7);
@@ -29,19 +33,38 @@ fn no_index() -> IndexConfig {
     }
 }
 
+fn fingerprint() -> Fingerprint {
+    Fingerprint {
+        sketch_dim: DIM,
+        seed: 7,
+        num_shards: SHARDS,
+        input_dim: 4 * DIM,
+        num_categories: 64,
+    }
+}
+
 fn durable_cfg(dir: &TempDir, mode: PersistMode, fsync: FsyncPolicy, every: u64) -> PersistConfig {
     PersistConfig {
         mode,
         data_dir: Some(dir.path().to_path_buf()),
         fsync,
         snapshot_every: every,
+        // per-batch commits by default: the group-commit lanes set their
+        // own window explicitly so the two policies are benched apart
+        commit_window_us: 0,
     }
 }
 
 fn open(cfg: &PersistConfig) -> ShardedStore {
-    ShardedStore::open_durable(4, DIM, &no_index(), 7, cfg, Arc::new(PersistCounters::default()))
-        .map(|(store, _)| store)
-        .unwrap()
+    ShardedStore::open_durable(
+        fingerprint(),
+        &no_index(),
+        cfg,
+        Arc::new(PersistCounters::default()),
+        &ExecutorConfig::default(),
+    )
+    .map(|(store, _)| store)
+    .unwrap()
 }
 
 fn ingest(store: &ShardedStore, pts: &[BitVec]) {
@@ -61,7 +84,7 @@ fn main() {
     // Every iteration gets a fresh data dir (recovery of a stale one
     // would otherwise pollute the measurement).
     b.bench_with_throughput(&format!("ingest/off/{n}"), Some(n as f64), || {
-        let store = ShardedStore::with_index(4, DIM, &no_index(), 7);
+        let store = ShardedStore::with_index(SHARDS, DIM, &no_index(), 7);
         ingest(&store, &pts);
     });
     b.bench_with_throughput(
@@ -96,6 +119,52 @@ fn main() {
             ingest(&store, &pts);
         },
     );
+
+    // Group-commit coalescing under concurrent ingest: T writer threads
+    // race batches into a durable fsync=always store, per-batch commits
+    // vs a 1 ms commit window (one fsync per touched shard per window).
+    // The window lane's throughput gain over per-batch IS the amortised
+    // fsync tax.
+    let writers = 4usize;
+    for (label, window_us) in [("per-batch", 0u64), ("window-1ms", 1_000)] {
+        b.bench_with_throughput(
+            &format!("ingest-concurrent/{writers}w/{label}/{n}"),
+            Some(n as f64),
+            || {
+                let dir = TempDir::new("bench-group-commit");
+                let cfg = PersistConfig {
+                    commit_window_us: window_us,
+                    ..durable_cfg(&dir, PersistMode::Wal, FsyncPolicy::Always, 0)
+                };
+                let store = open(&cfg);
+                let counters = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+                std::thread::scope(|scope| {
+                    for w in 0..writers {
+                        let store = &store;
+                        let counters = counters.clone();
+                        let pts = &pts;
+                        scope.spawn(move || {
+                            // interleave: writer w takes batches w, w+T, ...
+                            for chunk in pts.chunks(BATCH).skip(w).step_by(writers) {
+                                store
+                                    .try_insert_batch(chunk.to_vec())
+                                    .expect("durable ingest");
+                                counters.fetch_add(
+                                    chunk.len(),
+                                    std::sync::atomic::Ordering::Relaxed,
+                                );
+                            }
+                        });
+                    }
+                });
+                assert_eq!(
+                    counters.load(std::sync::atomic::Ordering::Relaxed),
+                    pts.len()
+                );
+                black_box(store.len());
+            },
+        );
+    }
 
     // a full snapshot rotation of the loaded store, in isolation
     {
@@ -144,12 +213,11 @@ fn main() {
         let cfg = durable_cfg(&ix_dir, PersistMode::WalSnapshot, FsyncPolicy::Never, 0);
         {
             let (store, _) = ShardedStore::open_durable(
-                4,
-                DIM,
+                fingerprint(),
                 &on,
-                7,
                 &cfg,
                 Arc::new(PersistCounters::default()),
+                &ExecutorConfig::default(),
             )
             .unwrap();
             ingest(&store, &pts);
@@ -160,12 +228,11 @@ fn main() {
             Some(n as f64),
             || {
                 let (store, _) = ShardedStore::open_durable(
-                    4,
-                    DIM,
+                    fingerprint(),
                     &on,
-                    7,
                     &cfg,
                     Arc::new(PersistCounters::default()),
+                    &ExecutorConfig::default(),
                 )
                 .unwrap();
                 assert_eq!(store.len(), n);

@@ -1,0 +1,135 @@
+//! Router serving-path benchmarks: the two tentpole optimisations, each
+//! measured against the path it replaced.
+//!
+//! * **Scatter**: the persistent shard-executor (long-lived worker per
+//!   shard, bounded queues) vs the old per-request scoped-spawn scatter
+//!   (`ShardedStore::par_map_shards`, kept exactly for this comparison) —
+//!   the per-request thread-spawn tax, most visible at small k / high QPS.
+//! * **Scoring**: batch-major blocked scanning (one arena pass per shard
+//!   per batch, L1 tiles × 8-way unrolled multi-query popcount) vs the
+//!   scalar per-query heap scan (Q independent arena passes).
+//!
+//! `topk_batch/Q64` at the large corpus is the acceptance lane: it runs
+//! the production path (executor + blocked kernels) against
+//! `scoped-scalar/Q64`, the pre-PR baseline reproduced verbatim below.
+
+use cabin::bench::{black_box, Bench};
+use cabin::coordinator::protocol::Hit;
+use cabin::coordinator::router;
+use cabin::coordinator::store::ShardedStore;
+use cabin::coordinator::TopK;
+use cabin::sketch::bitvec::and_count_words;
+use cabin::sketch::cham::binhamming_from_stats;
+use cabin::sketch::BitVec;
+use cabin::util::rng::Xoshiro256;
+
+const DIM: usize = 1024;
+const SHARDS: usize = 4;
+const Q: usize = 64;
+
+fn corpus(n: usize) -> Vec<BitVec> {
+    let mut rng = Xoshiro256::new(11);
+    (0..n)
+        .map(|_| BitVec::from_indices(DIM, rng.sample_indices(DIM, 128)))
+        .collect()
+}
+
+/// The pre-executor, pre-blocking serving path, verbatim: scoped-spawn
+/// scatter + scalar per-query heap scan.
+fn scoped_scalar_topk_batch(store: &ShardedStore, queries: &[BitVec], k: usize) -> Vec<Vec<Hit>> {
+    let d = store.sketch_dim();
+    let wqs: Vec<f64> = queries.iter().map(|q| q.count_ones() as f64).collect();
+    let mut per_shard: Vec<Vec<Vec<Hit>>> = store.par_map_shards(|shard| {
+        queries
+            .iter()
+            .zip(&wqs)
+            .map(|(q, &wq)| {
+                let mut best = TopK::new(k);
+                for row in 0..shard.ids.len() {
+                    let ip = and_count_words(q.words(), shard.rows.row(row)) as f64;
+                    let dist =
+                        2.0 * binhamming_from_stats(wq, shard.rows.weight(row) as f64, ip, d);
+                    best.offer(shard.ids[row], dist);
+                }
+                best.into_sorted_hits()
+            })
+            .collect()
+    });
+    (0..queries.len())
+        .map(|qi| {
+            let mut merged: Vec<Hit> = per_shard
+                .iter_mut()
+                .flat_map(|shard| std::mem::take(&mut shard[qi]))
+                .collect();
+            merged.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id)));
+            merged.dedup_by(|a, b| a.id == b.id);
+            merged.truncate(k);
+            merged
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::from_env("router");
+    let fast = std::env::var("CABIN_BENCH_FAST").ok().as_deref() == Some("1");
+    let sizes: &[usize] = if fast { &[20_000] } else { &[100_000, 1_000_000] };
+
+    for &n in sizes {
+        let pts = corpus(n);
+        let store = ShardedStore::new(SHARDS, DIM);
+        for chunk in pts.chunks(1024) {
+            store.insert_batch(chunk.to_vec());
+        }
+        drop(pts); // the arena owns the corpus now; halve peak memory at 1M
+        let mut rng = Xoshiro256::new(5);
+        let queries: Vec<BitVec> = (0..Q)
+            .map(|_| BitVec::from_indices(DIM, rng.sample_indices(DIM, 128)))
+            .collect();
+        let k = 10usize;
+        println!("[bench_router] corpus {n} x {DIM} bits, {SHARDS} shards, Q={Q}, k={k}");
+
+        // correctness gate before timing anything: the production path
+        // must equal the baseline bit for bit
+        assert_eq!(
+            router::topk_batch(&store, &queries, k),
+            scoped_scalar_topk_batch(&store, &queries, k),
+            "blocked/executor path diverged from the scalar baseline"
+        );
+
+        // ---- batched: Q queries per call ----
+        b.bench_with_throughput(
+            &format!("topk_batch/executor-blocked/Q{Q}/{n}"),
+            Some((n * Q) as f64),
+            || {
+                black_box(router::topk_batch(&store, &queries, k));
+            },
+        );
+        b.bench_with_throughput(
+            &format!("topk_batch/scoped-scalar/Q{Q}/{n}"),
+            Some((n * Q) as f64),
+            || {
+                black_box(scoped_scalar_topk_batch(&store, &queries, k));
+            },
+        );
+
+        // ---- single query: the scatter tax dominates at small work ----
+        let mut qi = 0usize;
+        b.bench_with_throughput(&format!("topk/executor/{n}"), Some(n as f64), || {
+            let q = &queries[qi % Q];
+            qi += 1;
+            black_box(router::topk(&store, q, k));
+        });
+        let mut qi = 0usize;
+        b.bench_with_throughput(&format!("topk/scoped-spawn/{n}"), Some(n as f64), || {
+            let q = &queries[qi % Q];
+            qi += 1;
+            black_box(scoped_scalar_topk_batch(
+                &store,
+                std::slice::from_ref(q),
+                k,
+            ));
+        });
+    }
+
+    b.finish();
+}

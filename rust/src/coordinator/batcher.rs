@@ -76,10 +76,15 @@ impl SketchBackend {
     }
 }
 
+/// A submitted insert's reply: the assigned id, or the durability error
+/// that prevented the ack (WAL commit failure — the rows may be in memory
+/// but were NOT committed, so the client must not be told they are safe).
+pub type InsertReply = Result<usize, String>;
+
 struct Pending {
     vec: CatVector,
     enqueued: Instant,
-    reply: SyncSender<usize>,
+    reply: SyncSender<InsertReply>,
 }
 
 /// Handle used by connection threads to submit inserts.
@@ -90,7 +95,8 @@ pub struct BatchSubmitter {
 
 impl BatchSubmitter {
     /// Blocking submit; returns the assigned global id once the batch the
-    /// item landed in has been flushed.
+    /// item landed in has been flushed *and* (on durable stores) its WAL
+    /// commit landed. A durability failure comes back as `Err`, not an id.
     pub fn insert(&self, vec: CatVector) -> anyhow::Result<usize> {
         let (reply_tx, reply_rx) = sync_channel(1);
         self.tx
@@ -102,12 +108,13 @@ impl BatchSubmitter {
             .map_err(|_| anyhow::anyhow!("batcher stopped"))?;
         reply_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("batcher dropped reply"))
+            .map_err(|_| anyhow::anyhow!("batcher dropped reply"))?
+            .map_err(|msg| anyhow::anyhow!(msg))
     }
 
     /// Non-blocking submit (used by load generators to observe
     /// backpressure). Err(vec) when the queue is full.
-    pub fn try_insert_nowait(&self, vec: CatVector) -> Result<Receiver<usize>, CatVector> {
+    pub fn try_insert_nowait(&self, vec: CatVector) -> Result<Receiver<InsertReply>, CatVector> {
         let (reply_tx, reply_rx) = sync_channel(1);
         match self.tx.try_send(Pending {
             vec,
@@ -215,14 +222,26 @@ fn flush(
     }
     let batch: Vec<CatVector> = pending.iter().map(|p| p.vec.clone()).collect();
     let sketches = backend.sketch_batch(&batch, metrics);
-    let ids = store.insert_batch(sketches);
     metrics.batches_flushed.fetch_add(1, Ordering::Relaxed);
     metrics
         .batch_items
         .fetch_add(pending.len() as u64, Ordering::Relaxed);
-    for (p, id) in pending.drain(..).zip(ids) {
-        metrics.record_insert_latency(p.enqueued.elapsed().as_secs_f64());
-        let _ = p.reply.send(id);
+    // Durability gate: a WAL commit failure must surface on every ack of
+    // this batch (the rows may be scannable in memory, but telling the
+    // client "inserted" would promise crash-durability that was not met).
+    match store.try_insert_batch(sketches) {
+        Ok(ids) => {
+            for (p, id) in pending.drain(..).zip(ids) {
+                metrics.record_insert_latency(p.enqueued.elapsed().as_secs_f64());
+                let _ = p.reply.send(Ok(id));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for p in pending.drain(..) {
+                let _ = p.reply.send(Err(msg.clone()));
+            }
+        }
     }
 }
 

@@ -1,0 +1,306 @@
+//! Persistent shard-executor runtime: one long-lived worker thread per
+//! shard, fed by a bounded MPSC work queue.
+//!
+//! Before this runtime, every `topk`/`topk_batch` scatter spawned
+//! `num_shards` fresh OS threads via `std::thread::scope` — thread
+//! creation, stack setup and teardown on the latency path of *every*
+//! query. Here the workers are spawned once, own their shard for scanning
+//! (each holds an `Arc` of its shard's lock, so the executor has no back
+//! reference to the store), and serve jobs for the life of the store:
+//!
+//! ```text
+//!   scatter_gather(make)            worker 0 ── recv job ── read-lock shard 0 ── job(&shard)
+//!     ├─ queue job per shard ─────► worker 1 ── …                                    │
+//!     └─ gather (mpsc, by index) ◄──────────────────────── send (shard_idx, result) ─┘
+//! ```
+//!
+//! Invariants and behaviour:
+//!
+//! * **Bounded queues**: each worker's queue holds at most `queue_cap`
+//!   jobs; a full queue blocks the submitter (backpressure, mirroring the
+//!   batcher's bounded-queue policy).
+//! * **Graceful drain**: dropping the executor closes every queue sender;
+//!   workers finish all *queued* jobs (an `mpsc` receiver keeps yielding
+//!   buffered messages after disconnection) and then exit, and the drop
+//!   joins them. No queued job is lost on shutdown.
+//! * **Panic containment**: a panicking job is caught (`catch_unwind`) so
+//!   the worker survives and keeps serving its shard — one bad query must
+//!   not wedge every later scatter the way a dead worker with a bounded
+//!   queue would. The *caller* of the scatter still observes the failure:
+//!   its gather channel sender dies with the job, so the gather panics
+//!   with a descriptive message instead of hanging (the pre-executor
+//!   scoped-spawn path propagated panics via `join().unwrap()`; this
+//!   keeps that contract without sacrificing the worker).
+//! * **Observability**: queue depth and busy-worker gauges plus job and
+//!   scatter totals land in [`ExecutorCounters`], surfaced as
+//!   `executor_*` fields of the `stats` response.
+//!
+//! Lock discipline: a worker takes exactly one lock — its own shard's
+//! read lock, via the store's poison-recovering `read_l` — and the
+//! submitter takes none, so the executor adds no edges to the store's
+//! lock-order graph.
+
+use super::metrics::ExecutorCounters;
+use super::store::Shard;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, PoisonError, RwLock};
+
+/// A unit of shard work: runs on the shard's worker thread with the shard
+/// read-locked.
+pub type ShardJob = Box<dyn FnOnce(&Shard) + Send>;
+
+/// Executor construction knobs, carried by `CoordinatorConfig`.
+#[derive(Clone, Debug)]
+pub struct ExecutorConfig {
+    /// Per-shard work-queue bound; submitters block when it is full.
+    pub queue_cap: usize,
+    /// Where to record queue/busy/job traffic (Arc-shared with
+    /// `coordinator::Metrics`).
+    pub counters: Arc<ExecutorCounters>,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        Self {
+            queue_cap: 1024,
+            counters: Arc::new(ExecutorCounters::default()),
+        }
+    }
+}
+
+struct Worker {
+    tx: Option<SyncSender<ShardJob>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The persistent per-shard worker pool. Owned by the store; all serving
+/// scans go through [`ShardExecutor::scatter_gather`].
+pub struct ShardExecutor {
+    workers: Vec<Worker>,
+    counters: Arc<ExecutorCounters>,
+}
+
+impl ShardExecutor {
+    /// Spawn one worker per shard. Each worker holds its own `Arc` of the
+    /// shard lock, so the executor's lifetime is independent of the
+    /// store struct that owns it.
+    pub fn start(shards: &[Arc<RwLock<Shard>>], config: &ExecutorConfig) -> ShardExecutor {
+        let counters = config.counters.clone();
+        let workers = shards
+            .iter()
+            .enumerate()
+            .map(|(si, shard)| {
+                let (tx, rx) = sync_channel::<ShardJob>(config.queue_cap.max(1));
+                let shard = Arc::clone(shard);
+                let counters = counters.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("cabin-shard-{si}"))
+                    .spawn(move || worker_loop(si, shard, rx, counters))
+                    .expect("spawn shard worker");
+                Worker {
+                    tx: Some(tx),
+                    handle: Some(handle),
+                }
+            })
+            .collect();
+        ShardExecutor { workers, counters }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn counters(&self) -> &Arc<ExecutorCounters> {
+        &self.counters
+    }
+
+    /// Queue one job on shard `si`'s worker. Blocks while the queue is
+    /// full (backpressure). Panics if the worker is gone, which can only
+    /// happen after the executor started shutting down.
+    pub fn submit(&self, si: usize, job: ShardJob) {
+        let tx = self.workers[si]
+            .tx
+            .as_ref()
+            .expect("executor is shutting down");
+        self.counters.queue_depth.fetch_add(1, Ordering::Relaxed);
+        if tx.send(job).is_err() {
+            self.counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            panic!("shard {si} worker exited with jobs outstanding");
+        }
+    }
+
+    /// Scatter one job per shard and gather the results in shard order.
+    /// `make(si)` builds shard `si`'s job; the job runs under that shard's
+    /// read lock on its persistent worker. Blocks until every shard has
+    /// answered. Panics (after collecting what it can) if a shard's job
+    /// panicked — the same contract the scoped-spawn scatter had via
+    /// `join().unwrap()`.
+    pub fn scatter_gather<T, F>(&self, mut make: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnMut(usize) -> Box<dyn FnOnce(&Shard) -> T + Send>,
+    {
+        self.counters.scatters.fetch_add(1, Ordering::Relaxed);
+        let n = self.workers.len();
+        let (tx, rx): (_, Receiver<(usize, T)>) = channel();
+        for si in 0..n {
+            let job = make(si);
+            let tx = tx.clone();
+            self.submit(
+                si,
+                Box::new(move |shard| {
+                    // if `job` panics, `tx` is dropped without sending and
+                    // the gather below notices the missing slot
+                    let result = job(shard);
+                    let _ = tx.send((si, result));
+                }),
+            );
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            match rx.recv() {
+                Ok((si, result)) => slots[si] = Some(result),
+                Err(_) => break, // a job panicked; fall through to the check
+            }
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(si, slot)| {
+                slot.unwrap_or_else(|| panic!("shard {si} scan job panicked mid-scatter"))
+            })
+            .collect()
+    }
+}
+
+impl Drop for ShardExecutor {
+    fn drop(&mut self) {
+        // Close every queue first so all workers begin draining in
+        // parallel, then join them.
+        for w in &mut self.workers {
+            w.tx = None;
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    si: usize,
+    shard: Arc<RwLock<Shard>>,
+    rx: Receiver<ShardJob>,
+    counters: Arc<ExecutorCounters>,
+) {
+    // recv yields every queued job even after all senders are dropped —
+    // this loop IS the graceful drain.
+    while let Ok(job) = rx.recv() {
+        counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        counters.busy_workers.fetch_add(1, Ordering::Relaxed);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            let guard = shard.read().unwrap_or_else(PoisonError::into_inner);
+            job(&guard);
+        }));
+        counters.busy_workers.fetch_sub(1, Ordering::Relaxed);
+        counters.jobs.fetch_add(1, Ordering::Relaxed);
+        if outcome.is_err() {
+            eprintln!("[executor] shard {si} job panicked (worker recovered)");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SketchMatrix;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    fn shards(n: usize) -> Vec<Arc<RwLock<Shard>>> {
+        (0..n)
+            .map(|_| {
+                Arc::new(RwLock::new(Shard {
+                    ids: Vec::new(),
+                    rows: SketchMatrix::new(64),
+                    index: None,
+                }))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scatter_gather_returns_in_shard_order() {
+        let shards = shards(4);
+        let ex = ShardExecutor::start(&shards, &ExecutorConfig::default());
+        let out = ex.scatter_gather(|si| Box::new(move |_s: &Shard| si * 10));
+        assert_eq!(out, vec![0, 10, 20, 30]);
+        assert_eq!(ex.counters().scatters.load(Ordering::Relaxed), 1);
+        assert_eq!(ex.counters().jobs.load(Ordering::Relaxed), 4);
+        assert_eq!(ex.counters().queue_depth.load(Ordering::Relaxed), 0);
+        assert_eq!(ex.counters().busy_workers.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn drop_drains_every_queued_job() {
+        let shards = shards(2);
+        let ex = ShardExecutor::start(&shards, &ExecutorConfig::default());
+        let ran = Arc::new(AtomicUsize::new(0));
+        // queue slow jobs directly (no gather) and drop the executor
+        // immediately: shutdown must finish them, not abandon them
+        for si in 0..2 {
+            for _ in 0..5 {
+                let ran = ran.clone();
+                ex.submit(
+                    si,
+                    Box::new(move |_s| {
+                        std::thread::sleep(Duration::from_millis(2));
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    }),
+                );
+            }
+        }
+        drop(ex);
+        assert_eq!(ran.load(Ordering::SeqCst), 10, "queued jobs lost on drop");
+    }
+
+    #[test]
+    fn worker_survives_a_panicking_job() {
+        let shards = shards(1);
+        let ex = ShardExecutor::start(&shards, &ExecutorConfig::default());
+        // the scatter must propagate the panic to the caller...
+        let poisoned = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            ex.scatter_gather(|_si| Box::new(|_s: &Shard| -> usize { panic!("bad job") }));
+        }));
+        assert!(poisoned.is_err());
+        // ...and the worker must keep serving afterwards
+        let out = ex.scatter_gather(|si| Box::new(move |_s: &Shard| si + 7));
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn concurrent_scatters_share_the_workers() {
+        let shards = shards(3);
+        let ex = Arc::new(ShardExecutor::start(&shards, &ExecutorConfig::default()));
+        std::thread::scope(|scope| {
+            for t in 0..8usize {
+                let ex = ex.clone();
+                scope.spawn(move || {
+                    for _ in 0..20 {
+                        let out = ex.scatter_gather(|si| Box::new(move |_s: &Shard| si + t));
+                        assert_eq!(out, vec![t, t + 1, t + 2]);
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            ex.counters().jobs.load(Ordering::Relaxed),
+            8 * 20 * 3,
+            "every job accounted"
+        );
+    }
+}

@@ -5,6 +5,24 @@ use crate::util::timer::LatencyStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+/// Shard-executor runtime counters, updated by
+/// [`crate::coordinator::executor::ShardExecutor`]. `queue_depth` and
+/// `busy_workers` are gauges (current values), the rest are monotone.
+/// Arc-shared between [`Metrics`] and the store's executor, mirroring the
+/// [`PersistCounters`] pattern.
+#[derive(Debug, Default)]
+pub struct ExecutorCounters {
+    /// Jobs currently sitting in shard work queues (gauge).
+    pub queue_depth: AtomicU64,
+    /// Shard workers currently executing a job (gauge).
+    pub busy_workers: AtomicU64,
+    /// Jobs executed since startup.
+    pub jobs: AtomicU64,
+    /// Scatter/gather rounds served since startup (one per routed query
+    /// or query batch).
+    pub scatters: AtomicU64,
+}
+
 /// LSH-index traffic counters, recorded by the router's indexed scan path
 /// (`coordinator::router::topk_with`). All lock-free; one instance lives
 /// inside [`Metrics`] but the struct is independently constructible for
@@ -38,7 +56,13 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub xla_batches: AtomicU64,
     pub native_batches: AtomicU64,
-    pub index: IndexCounters,
+    /// Index traffic. Arc-shared so the router's per-shard executor jobs
+    /// (long-lived worker threads, `'static` closures) can record into it
+    /// without borrowing `Metrics`.
+    pub index: Arc<IndexCounters>,
+    /// Shard-executor runtime traffic (queue depth, busy workers, jobs).
+    /// Arc-shared with the store's executor, which is what updates it.
+    pub executor: Arc<ExecutorCounters>,
     /// Persistence traffic (WAL records/bytes, snapshots, recovery time).
     /// Arc-shared with the store's [`crate::persist::Persistence`] handle,
     /// which is what actually updates it — the snapshot below surfaces the
@@ -123,6 +147,22 @@ impl Metrics {
                 self.index.indexed_scans.load(Ordering::Relaxed) as f64,
             ),
             (
+                "executor_queue_depth".into(),
+                self.executor.queue_depth.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "executor_busy_workers".into(),
+                self.executor.busy_workers.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "executor_jobs".into(),
+                self.executor.jobs.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "executor_scatters".into(),
+                self.executor.scatters.load(Ordering::Relaxed) as f64,
+            ),
+            (
                 "persist_wal_records".into(),
                 self.persist.wal_records.load(Ordering::Relaxed) as f64,
             ),
@@ -141,6 +181,10 @@ impl Metrics {
             (
                 "persist_generation".into(),
                 self.persist.generation.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "persist_group_commits".into(),
+                self.persist.group_commits.load(Ordering::Relaxed) as f64,
             ),
         ];
         let ins = self.insert_latency.lock().unwrap().summary();
@@ -201,6 +245,20 @@ mod tests {
     }
 
     #[test]
+    fn executor_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.executor.queue_depth.store(3, Ordering::Relaxed);
+        m.executor.busy_workers.store(2, Ordering::Relaxed);
+        m.executor.jobs.fetch_add(40, Ordering::Relaxed);
+        m.executor.scatters.fetch_add(10, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert_eq!(stats_field(&snap, "executor_queue_depth"), Some(3.0));
+        assert_eq!(stats_field(&snap, "executor_busy_workers"), Some(2.0));
+        assert_eq!(stats_field(&snap, "executor_jobs"), Some(40.0));
+        assert_eq!(stats_field(&snap, "executor_scatters"), Some(10.0));
+    }
+
+    #[test]
     fn persist_counters_surface_in_snapshot() {
         let m = Metrics::new();
         m.persist.wal_records.fetch_add(12, Ordering::Relaxed);
@@ -208,12 +266,14 @@ mod tests {
         m.persist.snapshots.fetch_add(2, Ordering::Relaxed);
         m.persist.recovery_ms.store(57, Ordering::Relaxed);
         m.persist.generation.store(2, Ordering::Relaxed);
+        m.persist.group_commits.fetch_add(5, Ordering::Relaxed);
         let snap = m.snapshot();
         assert_eq!(stats_field(&snap, "persist_wal_records"), Some(12.0));
         assert_eq!(stats_field(&snap, "persist_wal_bytes"), Some(4096.0));
         assert_eq!(stats_field(&snap, "persist_snapshots"), Some(2.0));
         assert_eq!(stats_field(&snap, "persist_recovery_ms"), Some(57.0));
         assert_eq!(stats_field(&snap, "persist_generation"), Some(2.0));
+        assert_eq!(stats_field(&snap, "persist_group_commits"), Some(5.0));
     }
 
     #[test]

@@ -10,14 +10,14 @@
 //! indexes ([`crate::index`]).
 //!
 //! ```text
-//!  TCP conn ─┐                        ┌─ shard 0 ─ SketchMatrix arena ┐
-//!  TCP conn ─┼─ protocol ─ batcher ───┼─ shard 1 ─ (row-major u64     ├─ router
-//!  TCP conn ─┘      │        │        └─ shard S-1  + weight cache    ┘  (heap top-k,
-//!                 metrics   backend        │         + LshIndex)         merge)
-//!                    │      (XLA | native) │         + WAL ──────────► data dir:
-//!                 id index: id → (shard, row)  L banded bucket tables   MANIFEST
-//!                           O(1) get/distance  candidates → Cham rerank snap-G-*
-//!                                              (full-scan fallback)     wal-G-*
+//!  TCP conn ─┐                        ┌─ shard 0 ─ worker 0 ─ SketchMatrix arena ┐
+//!  TCP conn ─┼─ protocol ─ batcher ───┼─ shard 1 ─ worker 1 ─ (row-major u64     ├─ router
+//!  TCP conn ─┘      │        │        └─ shard S-1 worker S-1 + weight cache     ┘  (blocked
+//!                 metrics   backend     (executor: bounded     + LshIndex)          tile top-k,
+//!                    │      (XLA | native)  MPSC queues)       + WAL ───────────►   merge)
+//!                 id index: id → (shard, row)  L banded bucket tables   data dir: MANIFEST
+//!                           O(1) get/distance  candidates → Cham rerank snap-G-* wal-G-*
+//!                                              (full-scan fallback)     + group-commit thread
 //! ```
 //!
 //! Storage layout: each shard owns a [`crate::sketch::SketchMatrix`] — one
@@ -26,8 +26,19 @@
 //! top-k runs on the bounded max-heap in [`topk`] (one comparison per
 //! candidate against the current k-th best, no per-candidate allocation),
 //! and a dense global id index resolves `get`/`distance` lookups in O(1).
-//! `query_batch` requests amortise shard lock acquisition, worker spawn and
-//! per-query `|q̃|` precomputation across a whole batch of queries.
+//!
+//! Scan runtime ([`executor`]): every query scatter runs on a persistent
+//! shard-executor — one long-lived worker thread per shard behind a
+//! bounded MPSC work queue, spawned once at store construction. No
+//! serving path spawns threads per request; queue-depth/busy-worker
+//! gauges surface as `executor_*` stats fields. Scans are *batch-major*:
+//! a `query_batch` ships the whole query block to each worker, which
+//! walks its arena once in L1-sized row tiles, scoring every query
+//! against each tile via the 8-way unrolled multi-query popcount kernels
+//! ([`crate::sketch::SketchMatrix::tile_and_counts`]) — so a Q-query
+//! batch pays one arena pass, one scatter and one `|q̃|` precomputation
+//! instead of Q of each. Single queries are the Q = 1 case of the same
+//! path.
 //!
 //! Index layer: when [`crate::index::IndexConfig`] enables it (`on`, or
 //! `auto` once a shard is large enough), each shard also carries an
@@ -52,9 +63,20 @@
 //! column + cached weights per shard, committed by an atomic `MANIFEST`
 //! rename, old generation GC'd after). The WAL batch is committed before
 //! the batcher acknowledges an insert: with `fsync = always`, an
-//! acknowledged insert survives `kill -9`. Recovery invariants: the
-//! configuration fingerprint (`sketch_dim`/`seed`/`num_shards`) must match
-//! or startup hard-errors (foreign sketches would corrupt every Cham
+//! acknowledged insert survives `kill -9`. With a group-commit window
+//! configured (`--commit-window-us`, default 1 ms; engaged under
+//! `--fsync always`, where there is an fsync to amortise) the fsync
+//! itself moves off the ack critical path: appends still happen under
+//! the shard lock,
+//! but a dedicated group-commit thread coalesces every batch landing in
+//! the same window into one fsync per touched shard, and each
+//! `insert_batch` blocks until its window's commit lands — same
+//! "acked ⇒ survives kill -9" contract, amortised fsyncs. A WAL commit
+//! *failure* is propagated through the batcher to the client as an insert
+//! error on the wire (never a logged-warning-plus-ack). Recovery
+//! invariants: the configuration fingerprint (`input_dim`/
+//! `num_categories`/`sketch_dim`/`seed`/`num_shards`) must match or
+//! startup hard-errors (foreign sketches would corrupt every Cham
 //! estimate); a torn WAL tail drops only the partial final record (and is
 //! truncated to a frame boundary); per-shard LSH indexes are bulk-rebuilt
 //! with [`crate::index::LshIndex::rebuild`] over the recovered arenas and
@@ -76,11 +98,14 @@
 //!
 //! Benches: `bench_coordinator` (ingest policies, single + batched query
 //! scatter/gather), `bench_topk` (arena+heap shard scan vs the seed's
-//! `Vec<BitVec>` insertion-sort scan) and `bench_persist` (WAL/fsync
-//! ingest tax, snapshot rotation, WAL-vs-snapshot recovery time).
+//! `Vec<BitVec>` insertion-sort scan), `bench_router` (executor vs
+//! scoped-spawn scatter, blocked vs scalar batch scoring) and
+//! `bench_persist` (WAL/fsync ingest tax, group-commit coalescing,
+//! snapshot rotation, WAL-vs-snapshot recovery time).
 
 pub mod batcher;
 pub mod client;
+pub mod executor;
 pub mod metrics;
 pub mod protocol;
 pub mod router;
@@ -89,7 +114,8 @@ pub mod store;
 pub mod topk;
 
 pub use batcher::{BatcherConfig, SketchBackend};
-pub use metrics::{stats_field, IndexCounters, Metrics};
+pub use executor::{ExecutorConfig, ShardExecutor};
+pub use metrics::{stats_field, ExecutorCounters, IndexCounters, Metrics};
 pub use protocol::{Request, Response};
 pub use server::{Coordinator, CoordinatorConfig};
 pub use topk::TopK;

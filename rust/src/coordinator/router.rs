@@ -1,51 +1,71 @@
-//! Query router: scatter a query sketch to every shard, compute local
-//! top-k by estimated Hamming distance (occupancy-inversion Cham), merge.
+//! Query router: scatter a query batch to every shard over the store's
+//! persistent executor, compute local top-k by estimated Hamming distance
+//! (occupancy-inversion Cham), merge.
+//!
+//! Execution model: one job per shard is queued on the store's
+//! [`crate::coordinator::executor::ShardExecutor`] — long-lived workers,
+//! no thread spawned per request — and each job answers *all* queries of
+//! the batch in one shard visit (`topk` is the Q = 1 case of the same
+//! path, so single and batched queries can never drift).
 //!
 //! Two per-shard scan paths, chosen by [`QueryOpts`]:
 //!
-//! * **Full scan** — walk the shard's contiguous arena. Rows are borrowed
-//!   as `&[u64]` and fed to the word-slice popcount kernels — no clone, no
-//!   pointer chase — and selected with the bounded heap in [`super::topk`]:
-//!   one comparison against the current k-th-best per candidate, O(log k)
-//!   only on improvement. Candidate weights come from the arena's per-row
-//!   cache, so each candidate costs exactly one popcount pass.
+//! * **Blocked full scan** — walk the shard's contiguous arena in tiles
+//!   of [`crate::sketch::SketchMatrix::tile_rows`] rows (sized to keep a
+//!   tile resident in L1), scoring every query of the batch against each
+//!   tile via the 8-way unrolled multi-query kernel
+//!   ([`SketchMatrix::tile_and_counts`]) before moving to the next tile:
+//!   batch-major, so a Q-query batch streams the arena once instead of Q
+//!   times. Candidates feed the bounded heap in [`super::topk`] (one
+//!   comparison against the current k-th-best per candidate); candidate
+//!   weights come from the arena's per-row cache.
 //! * **Indexed** — when the shard carries an [`crate::index::LshIndex`]
 //!   and holds at least `min_rows_for_index` rows, gather candidate rows
-//!   from the index's banded multi-probe buckets and rerank only those
-//!   with the exact Cham estimate (same borrowed-row kernel). If the
-//!   candidate set cannot guarantee `min(k, rows)` hits — or covers more
-//!   than half the shard, where reranking would cost more than scanning —
-//!   the shard *falls back* to the full scan, so an indexed query never
-//!   returns fewer hits than an unindexed one and never pays more than a
-//!   small constant over the scan: the index can only trade recall inside
-//!   the top-k, never result count.
+//!   from the index's banded multi-probe buckets per query and rerank
+//!   only those with the exact Cham estimate, via the same unrolled
+//!   kernel in its gathered form ([`SketchMatrix::gather_and_counts`]).
+//!   Queries whose candidate set cannot guarantee `min(k, rows)` hits —
+//!   or covers more than half the shard, where reranking would cost more
+//!   than scanning — *fall back* and join the blocked full scan of the
+//!   remaining batch, so an indexed query never returns fewer hits than
+//!   an unindexed one.
 //!
-//! [`topk_batch`] amortises the scatter: one shard-lock acquisition and one
-//! set of spawned workers serve a whole batch of queries, with per-query
-//! `|q̃|` precomputed once.
+//! Both paths produce bit-for-bit the distances of the scalar
+//! `and_count_words` kernel (integer popcounts; the blocked kernels only
+//! change traversal order per query, not offer order), so indexed rerank,
+//! blocked scan and the pre-blocking scalar scan agree exactly.
+//!
+//! [`topk_batch`] amortises the scatter: one executor job per shard and
+//! one arena pass serve a whole batch of queries, with per-query `|q̃|`
+//! precomputed once.
 
 use super::metrics::IndexCounters;
 use super::store::{Shard, ShardedStore};
 use super::topk::TopK;
 use crate::coordinator::protocol::Hit;
-use crate::sketch::bitvec::and_count_words;
 use crate::sketch::cham::binhamming_from_stats;
-use crate::sketch::BitVec;
+use crate::sketch::{BitVec, SketchMatrix};
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 /// Per-query routing options: whether (and from what shard size) to use
-/// the shard LSH indexes, and where to record index traffic.
-#[derive(Clone, Copy)]
-pub struct QueryOpts<'a> {
+/// the shard LSH indexes, and where to record index traffic. Counters are
+/// `Arc`-shared (not borrowed) because the scan jobs run on the store's
+/// persistent worker threads, which outlive any caller's stack frame.
+// No derived Default: it would yield `min_rows_for_index = 0` ("always
+// use the index"), the opposite of the safe [`QueryOpts::full_scan`]
+// neutral. Construct explicitly.
+#[derive(Clone)]
+pub struct QueryOpts {
     /// Use a shard's index only when it holds at least this many rows.
     /// `usize::MAX` never uses the index (the pre-index behaviour), `0`
     /// always does. Derive from `IndexConfig::min_rows_for_index()`.
     pub min_rows_for_index: usize,
     /// Index counters to record probe/candidate/fallback traffic into.
-    pub counters: Option<&'a IndexCounters>,
+    pub counters: Option<Arc<IndexCounters>>,
 }
 
-impl<'a> QueryOpts<'a> {
+impl QueryOpts {
     /// Full-scan only — the exact, O(corpus) path.
     pub fn full_scan() -> Self {
         Self {
@@ -56,7 +76,7 @@ impl<'a> QueryOpts<'a> {
 
     /// Use shard indexes wherever present on shards with ≥ `min_rows`
     /// rows, recording traffic into `counters` when provided.
-    pub fn indexed(min_rows: usize, counters: Option<&'a IndexCounters>) -> Self {
+    pub fn indexed(min_rows: usize, counters: Option<Arc<IndexCounters>>) -> Self {
         Self {
             min_rows_for_index: min_rows,
             counters,
@@ -64,78 +84,120 @@ impl<'a> QueryOpts<'a> {
     }
 }
 
-/// Cham-score the given arena rows of one shard against the query and keep
-/// the best `k` — the single scoring kernel shared by the full scan (all
-/// rows) and the indexed rerank (candidate rows), so the two paths can
-/// never drift in distance semantics.
-fn score_rows(
-    shard: &Shard,
-    rows: impl Iterator<Item = usize>,
-    query_words: &[u64],
-    wq: f64,
+/// Everything a shard scan job needs, bundled once per request and
+/// `Arc`-shared across the per-shard executor jobs.
+struct ScatterCtx {
+    queries: Vec<BitVec>,
+    /// Per-query `|q̃|`, precomputed once per request.
+    wqs: Vec<f64>,
     k: usize,
     d: usize,
-) -> Vec<Hit> {
-    let mut best = TopK::new(k);
-    for row in rows {
-        let ip = and_count_words(query_words, shard.rows.row(row)) as f64;
-        let dist = 2.0 * binhamming_from_stats(wq, shard.rows.weight(row) as f64, ip, d);
-        best.offer(shard.ids[row], dist);
+    opts: QueryOpts,
+}
+
+#[inline]
+fn cham_dist(wq: f64, weight: usize, ip: usize, d: usize) -> f64 {
+    2.0 * binhamming_from_stats(wq, weight as f64, ip as f64, d)
+}
+
+/// Blocked batch-major full scan: all `sel` queries of the batch against
+/// every arena row, tile by tile — each tile of rows is pulled into cache
+/// once and scored against the whole query block via the 8-way unrolled
+/// multi-query kernel. Appends each query's hits into its heap in arena
+/// row order (the same offer order as a scalar per-query walk, so results
+/// are bit-for-bit identical to the pre-blocking path).
+fn blocked_full_scan(shard: &Shard, ctx: &ScatterCtx, sel: &[usize], heaps: &mut [TopK]) {
+    debug_assert_eq!(sel.len(), heaps.len());
+    let rows: &SketchMatrix = &shard.rows;
+    let n = rows.len();
+    if n == 0 || sel.is_empty() {
+        return;
+    }
+    let qwords: Vec<&[u64]> = sel.iter().map(|&qi| ctx.queries[qi].words()).collect();
+    let tile = rows.tile_rows();
+    let mut counts = vec![0usize; tile * qwords.len()];
+    let mut start = 0;
+    while start < n {
+        let end = (start + tile).min(n);
+        let len = end - start;
+        let counts = &mut counts[..len * qwords.len()];
+        rows.tile_and_counts(&qwords, start, end, counts);
+        for (si, (&qi, heap)) in sel.iter().zip(heaps.iter_mut()).enumerate() {
+            let wq = ctx.wqs[qi];
+            let base = si * len;
+            for i in 0..len {
+                let row = start + i;
+                let dist = cham_dist(wq, rows.weight(row), counts[base + i], ctx.d);
+                heap.offer(shard.ids[row], dist);
+            }
+        }
+        start = end;
+    }
+}
+
+/// Indexed rerank of one query's candidate rows, via the gathered form of
+/// the same unrolled kernel the blocked scan uses.
+fn rerank_candidates(shard: &Shard, ctx: &ScatterCtx, qi: usize, cands: &[u32]) -> Vec<Hit> {
+    let mut counts = vec![0usize; cands.len()];
+    shard
+        .rows
+        .gather_and_counts(ctx.queries[qi].words(), cands, &mut counts);
+    let mut best = TopK::new(ctx.k);
+    for (&row, &ip) in cands.iter().zip(&counts) {
+        let dist = cham_dist(ctx.wqs[qi], shard.rows.weight(row as usize), ip, ctx.d);
+        best.offer(shard.ids[row as usize], dist);
     }
     best.into_sorted_hits()
 }
 
-/// Local top-k on one shard (full scan). Returns (id, estimated
-/// categorical HD), ascending. `k == 0` returns empty.
-fn shard_topk(shard: &Shard, query: &BitVec, wq: f64, k: usize, d: usize) -> Vec<Hit> {
-    score_rows(shard, 0..shard.ids.len(), query.words(), wq, k, d)
-}
-
-/// Local top-k on one shard through the LSH index when present and
-/// warranted: generate candidates, rerank them with the exact Cham
-/// estimate on borrowed arena rows, and fall back to the full heap scan
-/// whenever the candidate set cannot guarantee `min(k, rows)` hits — or
-/// covers more than half the shard, where candidate generation plus a
-/// near-full rerank would be strictly slower than the plain arena walk
-/// (duplicate-heavy or single-cluster corpora collapse into one bucket).
-fn shard_topk_with(
-    shard: &Shard,
-    query: &BitVec,
-    wq: f64,
-    k: usize,
-    d: usize,
-    opts: &QueryOpts,
-) -> Vec<Hit> {
+/// One shard's answers for every query of the batch: route each query
+/// through the LSH index when present and warranted, and run one blocked
+/// full scan over the batch of queries that fell back (or all of them,
+/// with the index off). Returns per-query ascending hit lists.
+fn shard_topk_batch(shard: &Shard, ctx: &ScatterCtx) -> Vec<Vec<Hit>> {
+    let q = ctx.queries.len();
     let rows = shard.ids.len();
-    if let Some(ix) = shard.index.as_ref() {
-        if rows >= opts.min_rows_for_index {
-            let (cands, probes) = ix.candidates(query.words());
-            if let Some(c) = opts.counters {
-                c.probes.fetch_add(probes as u64, Ordering::Relaxed);
-                c.candidates.fetch_add(cands.len() as u64, Ordering::Relaxed);
-            }
-            let covers_k = cands.len() >= k.min(rows);
-            let beats_scan = cands.len() * 2 <= rows;
-            if covers_k && beats_scan {
-                if let Some(c) = opts.counters {
-                    c.indexed_scans.fetch_add(1, Ordering::Relaxed);
-                    c.reranked.fetch_add(cands.len() as u64, Ordering::Relaxed);
+    let mut results: Vec<Option<Vec<Hit>>> = (0..q).map(|_| None).collect();
+    let mut full_scan: Vec<usize> = Vec::new();
+    let opts = &ctx.opts;
+    match shard.index.as_ref() {
+        Some(ix) if rows >= opts.min_rows_for_index => {
+            for qi in 0..q {
+                let (cands, probes) = ix.candidates(ctx.queries[qi].words());
+                if let Some(c) = opts.counters.as_ref() {
+                    c.probes.fetch_add(probes as u64, Ordering::Relaxed);
+                    c.candidates
+                        .fetch_add(cands.len() as u64, Ordering::Relaxed);
                 }
-                return score_rows(
-                    shard,
-                    cands.iter().map(|&r| r as usize),
-                    query.words(),
-                    wq,
-                    k,
-                    d,
-                );
-            }
-            if let Some(c) = opts.counters {
-                c.fallbacks.fetch_add(1, Ordering::Relaxed);
+                let covers_k = cands.len() >= ctx.k.min(rows);
+                let beats_scan = cands.len() * 2 <= rows;
+                if covers_k && beats_scan {
+                    if let Some(c) = opts.counters.as_ref() {
+                        c.indexed_scans.fetch_add(1, Ordering::Relaxed);
+                        c.reranked.fetch_add(cands.len() as u64, Ordering::Relaxed);
+                    }
+                    results[qi] = Some(rerank_candidates(shard, ctx, qi, &cands));
+                } else {
+                    if let Some(c) = opts.counters.as_ref() {
+                        c.fallbacks.fetch_add(1, Ordering::Relaxed);
+                    }
+                    full_scan.push(qi);
+                }
             }
         }
+        _ => full_scan.extend(0..q),
     }
-    shard_topk(shard, query, wq, k, d)
+    if !full_scan.is_empty() {
+        let mut heaps: Vec<TopK> = full_scan.iter().map(|_| TopK::new(ctx.k)).collect();
+        blocked_full_scan(shard, ctx, &full_scan, &mut heaps);
+        for (&qi, heap) in full_scan.iter().zip(heaps) {
+            results[qi] = Some(heap.into_sorted_hits());
+        }
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("every query routed to exactly one scan path"))
+        .collect()
 }
 
 /// Merge per-shard partials for one query: ascending by `(dist, id)` under
@@ -156,29 +218,26 @@ fn merge(partials: Vec<Vec<Hit>>, k: usize) -> Vec<Hit> {
     merged
 }
 
-/// Scatter/gather top-k across all shards (parallel, one thread per shard),
+/// Scatter/gather top-k across all shards (persistent executor workers),
 /// full-scan only. `k == 0` is a no-op returning no hits — never a panic.
 pub fn topk(store: &ShardedStore, query: &BitVec, k: usize) -> Vec<Hit> {
     topk_with(store, query, k, &QueryOpts::full_scan())
 }
 
 /// Scatter/gather top-k with explicit routing options (the coordinator's
-/// entry point: index on/auto/off comes in through `opts`).
+/// entry point: index on/auto/off comes in through `opts`). The Q = 1
+/// case of [`topk_batch_with`] — one code path, no drift.
 pub fn topk_with(store: &ShardedStore, query: &BitVec, k: usize, opts: &QueryOpts) -> Vec<Hit> {
-    if k == 0 {
-        return Vec::new();
-    }
-    let d = store.sketch_dim();
-    let wq = query.count_ones() as f64;
-    let partials = store.par_map_shards(|shard| shard_topk_with(shard, query, wq, k, d, opts));
-    merge(partials, k)
+    topk_batch_with(store, std::slice::from_ref(query), k, opts)
+        .pop()
+        .unwrap_or_default()
 }
 
 /// Batched scatter/gather: every shard worker answers all queries in one
-/// visit, so shard lock acquisition, thread spawn and the `|q̃|`
-/// precomputation are paid once per batch instead of once per query.
-/// Returns one ascending hit list per query, in query order. Full-scan
-/// only; the coordinator uses [`topk_batch_with`].
+/// visit over the blocked batch kernels, so the scatter, the arena pass
+/// and the per-query `|q̃|` precomputation are paid once per batch instead
+/// of once per query. Returns one ascending hit list per query, in query
+/// order. Full-scan only; the coordinator uses [`topk_batch_with`].
 pub fn topk_batch(store: &ShardedStore, queries: &[BitVec], k: usize) -> Vec<Vec<Hit>> {
     topk_batch_with(store, queries, k, &QueryOpts::full_scan())
 }
@@ -193,15 +252,17 @@ pub fn topk_batch_with(
     if k == 0 || queries.is_empty() {
         return queries.iter().map(|_| Vec::new()).collect();
     }
-    let d = store.sketch_dim();
-    let wqs: Vec<f64> = queries.iter().map(|q| q.count_ones() as f64).collect();
+    let ctx = Arc::new(ScatterCtx {
+        queries: queries.to_vec(),
+        wqs: queries.iter().map(|q| q.count_ones() as f64).collect(),
+        k,
+        d: store.sketch_dim(),
+        opts: opts.clone(),
+    });
     // per_shard[s][q] = shard s's top-k for query q
-    let mut per_shard: Vec<Vec<Vec<Hit>>> = store.par_map_shards(|shard| {
-        queries
-            .iter()
-            .zip(&wqs)
-            .map(|(q, &wq)| shard_topk_with(shard, q, wq, k, d, opts))
-            .collect()
+    let mut per_shard: Vec<Vec<Vec<Hit>>> = store.scatter_gather(|_si| {
+        let ctx = Arc::clone(&ctx);
+        Box::new(move |shard: &Shard| shard_topk_batch(shard, &ctx))
     });
     (0..queries.len())
         .map(|qi| {
@@ -237,6 +298,24 @@ mod tests {
         store
     }
 
+    /// The pre-blocking reference: scalar per-query heap scan over every
+    /// shard (scoped-spawn scatter). The executor + blocked kernels must
+    /// reproduce this bit for bit.
+    fn scalar_reference_topk(store: &ShardedStore, query: &BitVec, k: usize) -> Vec<Hit> {
+        use crate::sketch::bitvec::and_count_words;
+        let d = store.sketch_dim();
+        let wq = query.count_ones() as f64;
+        let partials = store.par_map_shards(|shard| {
+            let mut best = TopK::new(k);
+            for row in 0..shard.ids.len() {
+                let ip = and_count_words(query.words(), shard.rows.row(row));
+                best.offer(shard.ids[row], cham_dist(wq, shard.rows.weight(row), ip, d));
+            }
+            best.into_sorted_hits()
+        });
+        merge(partials, k)
+    }
+
     #[test]
     fn topk_finds_the_planted_neighbour() {
         let mut rng = Xoshiro256::new(1);
@@ -256,6 +335,25 @@ mod tests {
         // results sorted ascending
         for w in hits.windows(2) {
             assert!(w[0].dist <= w[1].dist);
+        }
+    }
+
+    #[test]
+    fn blocked_executor_scan_matches_scalar_reference_exactly() {
+        let mut rng = Xoshiro256::new(7);
+        let d = 130; // ragged tail word in every row
+        let pts: Vec<BitVec> = (0..53) // ragged final tile on every shard
+            .map(|_| BitVec::from_indices(d, rng.sample_indices(d, 25)))
+            .collect();
+        let store = store_with(&pts);
+        for k in [1, 3, 25, 100] {
+            for q in pts.iter().take(6) {
+                assert_eq!(
+                    topk(&store, q, k),
+                    scalar_reference_topk(&store, q, k),
+                    "k={k}"
+                );
+            }
         }
     }
 
@@ -372,8 +470,8 @@ mod tests {
             .map(|_| BitVec::from_indices(128, rng.sample_indices(128, 20)))
             .collect();
         let store = indexed_store_with(&pts);
-        let counters = IndexCounters::default();
-        let opts = QueryOpts::indexed(0, Some(&counters));
+        let counters = Arc::new(IndexCounters::default());
+        let opts = QueryOpts::indexed(0, Some(counters.clone()));
         let hits = topk_with(&store, &pts[0], 25, &opts);
         let mut ids: Vec<usize> = hits.iter().map(|h| h.id).collect();
         ids.sort_unstable();
@@ -405,8 +503,8 @@ mod tests {
             .collect();
         let store = indexed_store_with(&pts);
         // threshold above every shard size → pure full scan, no counters
-        let counters = IndexCounters::default();
-        let opts = QueryOpts::indexed(1_000_000, Some(&counters));
+        let counters = Arc::new(IndexCounters::default());
+        let opts = QueryOpts::indexed(1_000_000, Some(counters.clone()));
         let gated = topk_with(&store, &pts[0], 5, &opts);
         assert_eq!(gated, topk(&store, &pts[0], 5));
         assert_eq!(counters.probes.load(Ordering::Relaxed), 0);
@@ -420,8 +518,8 @@ mod tests {
             .map(|_| BitVec::from_indices(256, rng.sample_indices(256, 40)))
             .collect();
         let store = indexed_store_with(&pts);
-        let counters = IndexCounters::default();
-        let opts = QueryOpts::indexed(0, Some(&counters));
+        let counters = Arc::new(IndexCounters::default());
+        let opts = QueryOpts::indexed(0, Some(counters.clone()));
         let _ = topk_with(&store, &pts[7], 3, &opts);
         let scans = counters.indexed_scans.load(Ordering::Relaxed)
             + counters.fallbacks.load(Ordering::Relaxed);

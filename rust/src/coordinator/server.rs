@@ -2,12 +2,13 @@
 //! request dispatch to batcher/router/store.
 
 use super::batcher::{Batcher, BatcherConfig, SketchBackend};
+use super::executor::ExecutorConfig;
 use super::metrics::Metrics;
 use super::protocol::{Request, Response};
 use super::router;
 use super::store::ShardedStore;
 use crate::index::IndexConfig;
-use crate::persist::PersistConfig;
+use crate::persist::{Fingerprint, PersistConfig};
 use crate::runtime::XlaHandle;
 use crate::sketch::{CabinSketcher, SketchConfig};
 use crate::util::timer::Stopwatch;
@@ -35,8 +36,12 @@ pub struct CoordinatorConfig {
     pub index: IndexConfig,
     /// Crash-safe persistence: per-shard WAL + periodic snapshots under a
     /// data dir (off / wal / wal+snapshot, fsync policy, auto-snapshot
-    /// interval). Off by default — see [`crate::persist`].
+    /// interval, group-commit window). Off by default — see
+    /// [`crate::persist`].
     pub persist: PersistConfig,
+    /// Per-shard executor work-queue bound: how many scan jobs may wait on
+    /// one shard worker before submitters block (backpressure).
+    pub executor_queue: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -52,6 +57,7 @@ impl Default for CoordinatorConfig {
             heatmap_limit: 4096,
             index: IndexConfig::default(),
             persist: PersistConfig::default(),
+            executor_queue: 1024,
         }
     }
 }
@@ -97,14 +103,25 @@ impl Coordinator {
         // `index_cfg_*` stats fields always describe the live indexes.
         config.index = config.index.normalized(config.sketch_dim);
         let metrics = Arc::new(Metrics::new());
+        // the store's persistent shard workers report into the service
+        // metrics (executor_* stats fields)
+        let exec = ExecutorConfig {
+            queue_cap: config.executor_queue,
+            counters: metrics.executor.clone(),
+        };
         let store = if config.persist.enabled() {
             let (store, report) = ShardedStore::open_durable(
-                config.num_shards,
-                config.sketch_dim,
+                Fingerprint {
+                    sketch_dim: config.sketch_dim,
+                    seed: config.seed,
+                    num_shards: config.num_shards.max(1),
+                    input_dim: config.input_dim,
+                    num_categories: config.num_categories,
+                },
                 &config.index,
-                config.seed,
                 &config.persist,
                 metrics.persist.clone(),
+                &exec,
             )?;
             eprintln!(
                 "[coordinator] recovered {} sketches (generation {}, {} snapshot rows + {} \
@@ -118,11 +135,12 @@ impl Coordinator {
             );
             Arc::new(store)
         } else {
-            Arc::new(ShardedStore::with_index(
+            Arc::new(ShardedStore::with_runtime(
                 config.num_shards,
                 config.sketch_dim,
                 &config.index,
                 config.seed,
+                &exec,
             ))
         };
         let sk_cfg = SketchConfig::new(
@@ -172,11 +190,12 @@ impl Coordinator {
     }
 
     /// Routing options for this coordinator's query path: index usage per
-    /// the configured mode, traffic recorded into the service metrics.
-    fn query_opts(&self) -> router::QueryOpts<'_> {
+    /// the configured mode, traffic recorded into the service metrics
+    /// (Arc-shared — the scan jobs run on the store's persistent workers).
+    fn query_opts(&self) -> router::QueryOpts {
         router::QueryOpts::indexed(
             self.config.index.min_rows_for_index(),
-            Some(&self.metrics.index),
+            Some(self.metrics.index.clone()),
         )
     }
 
@@ -599,6 +618,100 @@ mod tests {
     }
 
     #[test]
+    fn executor_serves_queries_and_reports_stats() {
+        // no serving path spawns threads per request: the scatter totals
+        // must line up exactly with the executor's job counters
+        let c = Coordinator::new(test_config());
+        let mut rng = Xoshiro256::new(21);
+        for _ in 0..6 {
+            c.handle_request(Request::Insert {
+                vec: CatVector::random(600, 40, 10, &mut rng),
+            });
+        }
+        for _ in 0..3 {
+            c.handle_request(Request::Query {
+                vec: CatVector::random(600, 40, 10, &mut rng),
+                k: 2,
+            });
+        }
+        c.handle_request(Request::QueryBatch {
+            vecs: (0..4)
+                .map(|_| CatVector::random(600, 40, 10, &mut rng))
+                .collect(),
+            k: 2,
+        });
+        match c.handle_request(Request::Stats) {
+            Response::Stats { fields } => {
+                let get = |k: &str| {
+                    super::super::metrics::stats_field(&fields, k)
+                        .unwrap_or_else(|| panic!("stats field '{k}' missing"))
+                };
+                // 3 single queries + 1 batch = 4 scatters, each one job
+                // per shard (2 shards in test_config)
+                assert_eq!(get("executor_scatters"), 4.0);
+                assert_eq!(get("executor_jobs"), 8.0);
+                assert_eq!(get("executor_queue_depth"), 0.0);
+                assert_eq!(get("executor_busy_workers"), 0.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wal_commit_failure_is_a_client_visible_insert_error() {
+        use crate::persist::{FsyncPolicy, PersistConfig, PersistMode};
+        use crate::testing::TempDir;
+        let dir = TempDir::new("server-commit-fail");
+        let cfg = CoordinatorConfig {
+            persist: PersistConfig {
+                mode: PersistMode::Wal,
+                data_dir: Some(dir.path().to_path_buf()),
+                fsync: FsyncPolicy::Never,
+                ..PersistConfig::default()
+            },
+            ..test_config()
+        };
+        let c = Coordinator::try_new(cfg).unwrap();
+        let mut rng = Xoshiro256::new(33);
+        // a clean insert acks normally
+        match c.handle_request(Request::Insert {
+            vec: CatVector::random(600, 40, 10, &mut rng),
+        }) {
+            Response::Inserted { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        // inject a commit failure on every shard (placement is
+        // least-loaded, so the next insert may land anywhere)
+        let p = c.store.persistence().unwrap();
+        for si in 0..c.store.num_shards() {
+            p.wal_guard(si).fail_next_commit("injected disk failure");
+        }
+        match c.handle_request(Request::Insert {
+            vec: CatVector::random(600, 40, 10, &mut rng),
+        }) {
+            Response::Error { message } => {
+                assert!(message.contains("not acknowledged as durable"), "{message}");
+            }
+            other => panic!("durability failure must not ack: {other:?}"),
+        }
+        assert_eq!(c.metrics.errors.load(Ordering::Relaxed), 1);
+        // consume the injection still armed on the shard the failing
+        // insert did NOT land on (placement is least-loaded, so the next
+        // insert would otherwise trip it and this test would flake on
+        // placement order)
+        for si in 0..c.store.num_shards() {
+            let _ = p.wal_guard(si).commit();
+        }
+        // the writer retries its pending frames: service recovers
+        match c.handle_request(Request::Insert {
+            vec: CatVector::random(600, 40, 10, &mut rng),
+        }) {
+            Response::Inserted { .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn durable_coordinator_recovers_its_corpus() {
         use crate::persist::{FsyncPolicy, PersistConfig, PersistMode};
         use crate::testing::TempDir;
@@ -609,6 +722,7 @@ mod tests {
                 data_dir: Some(dir.path().to_path_buf()),
                 fsync: FsyncPolicy::Never,
                 snapshot_every: 0, // manual snapshots only
+                ..PersistConfig::default()
             },
             ..test_config()
         };

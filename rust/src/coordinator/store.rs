@@ -28,12 +28,32 @@
 //! before the batcher acknowledges the insert: with `fsync = always`,
 //! acknowledged inserts survive `kill -9`.
 //!
+//! Scan execution: every serving-path scatter runs on the store's
+//! persistent [`ShardExecutor`] — one long-lived worker thread per shard
+//! behind a bounded work queue ([`ShardedStore::scatter_gather`]), spawned
+//! once at store construction instead of per request. The old per-request
+//! scoped-spawn scatter survives only as [`ShardedStore::par_map_shards`],
+//! kept as the comparison baseline for `bench_router` and as a
+//! scoped-borrow convenience for tests; no serving path uses it.
+//!
+//! Group commit (see [`crate::persist`]): when the persist config sets a
+//! commit window (and `fsync = always` — the policy with a per-commit
+//! fsync to amortise), `insert_batch` appends its WAL frames under the shard
+//! lock as always but leaves the fsync to the group-commit thread, which
+//! coalesces every batch that lands in the same window into one
+//! fsync per touched shard. The ack (the batch call returning, and with
+//! it the batcher's client reply) still waits for the window's commit —
+//! "acked ⇒ survives kill -9" is preserved — and a commit *failure* now
+//! surfaces to the caller through [`ShardedStore::try_insert_batch`]
+//! instead of being logged and silently acked.
+//!
 //! Lock order (deadlock freedom): the id index is always acquired *before*
 //! any shard lock, multiple shard locks are always acquired in ascending
 //! shard order, and the per-shard WAL mutexes are strict leaves acquired
 //! after their shard's lock (in ascending order when more than one is
-//! held). Scan paths (`map_shards`/`par_map_shards`) touch only shard
-//! locks.
+//! held). Scan paths (`map_shards`/`par_map_shards`/executor workers)
+//! touch only shard locks, and the group-commit thread touches only WAL
+//! mutexes.
 //!
 //! Poison recovery: every lock acquisition in this file routes through
 //! [`read_l`]/[`write_l`], which recover a poisoned guard instead of
@@ -45,6 +65,7 @@
 //! element contributes nothing and its id simply stays `VACANT`), so a
 //! recovered guard always observes a readable shard.
 
+use super::executor::{ExecutorConfig, ShardExecutor};
 use crate::index::{IndexConfig, LshIndex};
 use crate::persist::{Fingerprint, PersistConfig, PersistCounters, Persistence, RecoveryReport};
 use crate::sketch::bitvec::and_count_words;
@@ -78,7 +99,10 @@ pub struct Shard {
 }
 
 pub struct ShardedStore {
-    shards: Vec<RwLock<Shard>>,
+    /// Shard locks are `Arc`-shared with the executor's worker threads
+    /// (each worker owns a clone of its shard's lock), so the executor
+    /// needs no back reference to the store.
+    shards: Vec<Arc<RwLock<Shard>>>,
     /// Dense id → (shard, row). Guarded by its own lock; see the module
     /// docs for the global lock order.
     index: RwLock<Vec<Slot>>,
@@ -90,11 +114,13 @@ pub struct ShardedStore {
     sketch_dim: usize,
     /// WAL + snapshot machinery; `None` for a purely in-memory store.
     persist: Option<Persistence>,
+    /// Persistent per-shard scan workers; all serving scatters run here.
+    executor: ShardExecutor,
 }
 
 impl ShardedStore {
     pub fn new(num_shards: usize, sketch_dim: usize) -> Self {
-        Self::build(num_shards, sketch_dim, None)
+        Self::build(num_shards, sketch_dim, None, &ExecutorConfig::default())
     }
 
     /// A store whose shards each carry an [`LshIndex`] (unless the config's
@@ -107,51 +133,73 @@ impl ShardedStore {
         cfg: &IndexConfig,
         seed: u64,
     ) -> Self {
-        let index = cfg.enabled().then(|| (*cfg, seed));
-        Self::build(num_shards, sketch_dim, index)
+        Self::with_runtime(num_shards, sketch_dim, cfg, seed, &ExecutorConfig::default())
     }
 
-    fn build(num_shards: usize, sketch_dim: usize, index: Option<(IndexConfig, u64)>) -> Self {
+    /// Full in-memory constructor: index config plus executor knobs
+    /// (queue bound, shared counters) — what the coordinator uses so the
+    /// `executor_*` stats fields track this store's workers.
+    pub fn with_runtime(
+        num_shards: usize,
+        sketch_dim: usize,
+        cfg: &IndexConfig,
+        seed: u64,
+        exec: &ExecutorConfig,
+    ) -> Self {
+        let index = cfg.enabled().then(|| (*cfg, seed));
+        Self::build(num_shards, sketch_dim, index, exec)
+    }
+
+    fn build(
+        num_shards: usize,
+        sketch_dim: usize,
+        index: Option<(IndexConfig, u64)>,
+        exec: &ExecutorConfig,
+    ) -> Self {
+        let shards: Vec<Arc<RwLock<Shard>>> = (0..num_shards.max(1))
+            .map(|_| {
+                Arc::new(RwLock::new(Shard {
+                    ids: Vec::new(),
+                    rows: SketchMatrix::new(sketch_dim),
+                    index: index
+                        .as_ref()
+                        .map(|(cfg, seed)| LshIndex::new(cfg, sketch_dim, *seed)),
+                }))
+            })
+            .collect();
+        let executor = ShardExecutor::start(&shards, exec);
         Self {
-            shards: (0..num_shards.max(1))
-                .map(|_| {
-                    RwLock::new(Shard {
-                        ids: Vec::new(),
-                        rows: SketchMatrix::new(sketch_dim),
-                        index: index
-                            .as_ref()
-                            .map(|(cfg, seed)| LshIndex::new(cfg, sketch_dim, *seed)),
-                    })
-                })
-                .collect(),
+            shards,
             index: RwLock::new(Vec::new()),
             next_id: AtomicUsize::new(0),
             reserved: (0..num_shards.max(1)).map(|_| AtomicUsize::new(0)).collect(),
             sketch_dim,
             persist: None,
+            executor,
         }
     }
 
     /// Open a durable store: recover `persist_cfg.data_dir` (hard error on
     /// a configuration-fingerprint mismatch — sketches persisted under a
-    /// different `sketch_dim`/`seed` mapping or shard layout would corrupt
-    /// every Cham estimate), bulk-rebuild the per-shard LSH indexes over
-    /// the recovered arenas, and keep WAL-logging every mutation from here
-    /// on. `counters` is shared with `coordinator::Metrics` so the
-    /// `persist_*` stats fields track this store's traffic.
+    /// different `input_dim`/`num_categories`/`sketch_dim`/`seed` mapping
+    /// or shard layout would corrupt every Cham estimate), bulk-rebuild
+    /// the per-shard LSH indexes over the recovered arenas, and keep
+    /// WAL-logging every mutation from here on. `counters` is shared with
+    /// `coordinator::Metrics` so the `persist_*` stats fields track this
+    /// store's traffic; likewise `exec.counters` for the `executor_*`
+    /// fields.
     pub fn open_durable(
-        num_shards: usize,
-        sketch_dim: usize,
+        fingerprint: Fingerprint,
         index_cfg: &IndexConfig,
-        seed: u64,
         persist_cfg: &PersistConfig,
         counters: Arc<PersistCounters>,
+        exec: &ExecutorConfig,
     ) -> anyhow::Result<(Self, RecoveryReport)> {
         let fingerprint = Fingerprint {
-            sketch_dim,
-            seed,
-            num_shards: num_shards.max(1),
+            num_shards: fingerprint.num_shards.max(1),
+            ..fingerprint
         };
+        let (sketch_dim, seed) = (fingerprint.sketch_dim, fingerprint.seed);
         let (persistence, parts, report) =
             Persistence::open(persist_cfg, fingerprint, counters)?;
         let index_enabled = index_cfg.enabled();
@@ -174,12 +222,13 @@ impl ShardedStore {
                 next_id = next_id.max(id + 1);
             }
             reserved.push(AtomicUsize::new(part.ids.len()));
-            shards.push(RwLock::new(Shard {
+            shards.push(Arc::new(RwLock::new(Shard {
                 ids: part.ids,
                 rows: part.rows,
                 index: lsh,
-            }));
+            })));
         }
+        let executor = ShardExecutor::start(&shards, exec);
         Ok((
             Self {
                 shards,
@@ -188,6 +237,7 @@ impl ShardedStore {
                 reserved,
                 sketch_dim,
                 persist: Some(persistence),
+                executor,
             },
             report,
         ))
@@ -214,20 +264,52 @@ impl ShardedStore {
         self.len() == 0
     }
 
-    /// Insert a batch of sketches; returns their assigned global ids. The
-    /// batch lands on the shard with the fewest *reserved* points, and the
-    /// batch size is reserved before any row is placed — so variable-size
-    /// batches stay point-balanced (not merely batch-count-balanced) and
-    /// concurrent batchers steer away from each other immediately instead
-    /// of all observing the same stale minimum.
+    /// Insert a batch of sketches; returns their assigned global ids. A
+    /// durability (WAL commit) failure is logged but the ids are still
+    /// returned — callers that must surface durability errors (the
+    /// batcher's ack path) use [`ShardedStore::try_insert_batch`].
+    pub fn insert_batch(&self, sketches: Vec<BitVec>) -> Vec<usize> {
+        let (ids, commit_err) = self.insert_batch_inner(sketches);
+        if let Some(e) = commit_err {
+            eprintln!("[persist] WAL commit failed (rows are in memory but NOT durable): {e:#}");
+        }
+        ids
+    }
+
+    /// As [`ShardedStore::insert_batch`], but a WAL commit failure is an
+    /// `Err` instead of a log line: the rows were placed in memory (and
+    /// will be scannable until the process dies) but the durability
+    /// contract was not met, so the caller must *not* acknowledge the
+    /// insert as durable. The batcher routes this error to the waiting
+    /// client as an insert error on the wire.
+    pub fn try_insert_batch(&self, sketches: Vec<BitVec>) -> anyhow::Result<Vec<usize>> {
+        let (ids, commit_err) = self.insert_batch_inner(sketches);
+        match commit_err {
+            None => Ok(ids),
+            Some(e) => Err(e.context(
+                "insert placed in memory but its WAL commit failed — not acknowledged as durable",
+            )),
+        }
+    }
+
+    /// Insert a batch of sketches; returns their assigned global ids plus
+    /// any WAL commit error. The batch lands on the shard with the fewest
+    /// *reserved* points, and the batch size is reserved before any row is
+    /// placed — so variable-size batches stay point-balanced (not merely
+    /// batch-count-balanced) and concurrent batchers steer away from each
+    /// other immediately instead of all observing the same stale minimum.
     ///
     /// When the store is durable, each placed row is WAL-logged under the
-    /// shard write lock and the batch is committed (per the fsync policy)
-    /// before this returns — i.e. before the batcher can acknowledge it.
-    pub fn insert_batch(&self, sketches: Vec<BitVec>) -> Vec<usize> {
+    /// shard write lock and the batch is committed before this returns —
+    /// i.e. before the batcher can acknowledge it. With a group-commit
+    /// window configured the commit is performed by the group-commit
+    /// thread (one fsync per touched shard per window, coalescing every
+    /// batch that lands in the window); this call then blocks until its
+    /// window's commit lands, so the ack ordering is unchanged.
+    fn insert_batch_inner(&self, sketches: Vec<BitVec>) -> (Vec<usize>, Option<anyhow::Error>) {
         let k = sketches.len();
         if k == 0 {
-            return Vec::new();
+            return (Vec::new(), None);
         }
         let start = self.next_id.fetch_add(k, Ordering::Relaxed);
         let ids: Vec<usize> = (start..start + k).collect();
@@ -243,14 +325,18 @@ impl ShardedStore {
         // The WAL guard outlives the index/shard locks below: records are
         // appended (buffered) under the shard write lock so log order is
         // arena order, but the commit — an fdatasync under `fsync =
-        // always` — runs after both locks are released, holding only this
-        // shard's WAL mutex. Disk latency therefore never blocks readers
-        // or other shards' inserts, the ack (this function returning)
-        // still happens after the commit, and a snapshot rotation still
-        // cannot cut between append and commit because it needs this very
-        // guard. (Readers can observe rows whose batch is not yet
-        // committed — read-uncommitted for queries, commit-before-ack for
-        // writers.)
+        // always` — runs after both locks are released. On the
+        // synchronous path it runs under this very guard, so a snapshot
+        // rotation cannot cut between append and commit. On the
+        // group-commit path the guard is dropped before the committer
+        // thread flushes, so a rotation CAN interleave — safely, because
+        // `write_snapshot` commits every writer's pending frames (under
+        // all WAL guards) before cutting the generation, and the window's
+        // later commit on the fresh segment is then a no-op. Either way
+        // disk latency never blocks readers or other shards' inserts, and
+        // the ack (this function returning) happens after the commit.
+        // (Readers can observe rows whose batch is not yet committed —
+        // read-uncommitted for queries, commit-before-ack for writers.)
         let mut wal = {
             let mut index = write_l(&self.index);
             if index.len() < start + k {
@@ -279,17 +365,35 @@ impl ShardedStore {
             }
             wal
         };
-        if let Some(w) = wal.as_deref_mut() {
-            if let Err(e) = w.commit() {
-                eprintln!("[persist] WAL commit failed for shard {target}: {e}");
-            }
-        }
-        drop(wal);
+        let mut commit_err: Option<anyhow::Error> = None;
         if let Some(p) = &self.persist {
+            if p.group_commit_enabled() {
+                // Group commit: the frames stay buffered in the writer.
+                // Release the WAL mutex FIRST (the committer needs it to
+                // flush this shard), then register in the open window and
+                // block until that window's commit lands — the ack still
+                // happens after the commit, just one fsync per window
+                // instead of one per batch.
+                drop(wal);
+                commit_err = p
+                    .group_commit_wait(target)
+                    .err()
+                    .map(|msg| anyhow::anyhow!("group commit for shard {target}: {msg}"));
+            } else {
+                if let Some(w) = wal.as_deref_mut() {
+                    if let Err(e) = w.commit() {
+                        let e = anyhow::Error::new(e);
+                        commit_err = Some(e.context(format!("WAL commit for shard {target}")));
+                    }
+                }
+                drop(wal);
+            }
             p.note_appended(k as u64, wal_bytes);
             self.maybe_auto_snapshot();
+        } else {
+            drop(wal);
         }
-        ids
+        (ids, commit_err)
     }
 
     /// Resolve an id to its current `(shard, row)` in O(1).
@@ -353,7 +457,29 @@ impl ShardedStore {
         self.shards.iter().map(|s| f(&read_l(s))).collect()
     }
 
-    /// Parallel scatter over shards with per-shard worker threads.
+    /// Parallel scatter over the *persistent* shard executor: `make(si)`
+    /// builds shard `si`'s job, which runs read-locked on that shard's
+    /// long-lived worker thread; results come back in shard order. This is
+    /// the serving scatter — no thread is spawned per request.
+    pub fn scatter_gather<T, F>(&self, make: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnMut(usize) -> Box<dyn FnOnce(&Shard) -> T + Send>,
+    {
+        self.executor.scatter_gather(make)
+    }
+
+    /// The store's executor runtime (counters, worker count).
+    pub fn executor(&self) -> &ShardExecutor {
+        &self.executor
+    }
+
+    /// Scoped-spawn scatter: spawns one OS thread per shard for this call.
+    /// Superseded by [`ShardedStore::scatter_gather`] on every serving
+    /// path; kept as the measured baseline in `bench_router` and as a
+    /// borrow-friendly convenience for tests (its closures may borrow the
+    /// caller's stack, which the persistent executor's `'static` jobs
+    /// cannot).
     pub fn par_map_shards<T: Send, F: Fn(&Shard) -> T + Sync>(&self, f: F) -> Vec<T> {
         std::thread::scope(|scope| {
             let handles: Vec<_> = self
@@ -397,7 +523,7 @@ impl ShardedStore {
     /// index read lock first, then all shard read locks in ascending order.
     pub fn snapshot_matrix(&self) -> SketchMatrix {
         let _index = read_l(&self.index);
-        let guards: Vec<_> = self.shards.iter().map(read_l).collect();
+        let guards: Vec<_> = self.shards.iter().map(|s| read_l(s)).collect();
         let n: usize = guards.iter().map(|g| g.ids.len()).sum();
         let mut order: Vec<(usize, usize, usize)> = Vec::with_capacity(n);
         for (si, g) in guards.iter().enumerate() {
@@ -428,7 +554,7 @@ impl ShardedStore {
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("persistence is disabled on this store"))?;
         let _index = read_l(&self.index);
-        let guards: Vec<_> = self.shards.iter().map(read_l).collect();
+        let guards: Vec<_> = self.shards.iter().map(|s| read_l(s)).collect();
         let views: Vec<(&[usize], &SketchMatrix)> = guards
             .iter()
             .map(|g| (g.ids.as_slice(), &g.rows))
@@ -512,6 +638,12 @@ impl ShardedStore {
                     (second, first)
                 }
             });
+            // Under group commit the source writer may already hold a
+            // concurrent insert batch's uncommitted frames (appended
+            // before we took this mutex, awaiting the window flush). Mark
+            // where OUR frames start so a failed destination commit can
+            // rewind exactly the move-outs and nothing else.
+            let src_mark = wals.as_ref().map(|(src_w, _)| src_w.pending_watermark());
             // Split the guards into disjoint field borrows so the LSH
             // indexes can be maintained against the arenas in the same
             // pass. Each move pops src's *trailing* row and appends it to
@@ -551,7 +683,10 @@ impl ShardedStore {
             // If the destination commit FAILS, the paired MoveOuts must be
             // discarded, not left pending: a later commit on the source
             // shard would otherwise make them durable alone and re-open
-            // exactly that loss window.
+            // exactly that loss window. The rewind is to OUR watermark,
+            // not a full clear — frames buffered before it belong to a
+            // concurrent group-commit insert batch whose ack depends on
+            // them reaching the file.
             if let Some((mut src_w, mut dst_w)) = wals {
                 match dst_w.commit() {
                     Ok(()) => {
@@ -560,7 +695,7 @@ impl ShardedStore {
                         }
                     }
                     Err(e) => {
-                        src_w.discard_pending();
+                        src_w.rewind_pending_to(src_mark.unwrap_or(0));
                         eprintln!(
                             "[persist] rebalance destination WAL commit failed \
                              (paired move-outs discarded; rows recover as duplicates \
@@ -857,6 +992,154 @@ mod tests {
     }
 
     #[test]
+    fn scatter_gather_matches_map_and_counts_jobs() {
+        let store = ShardedStore::new(4, 16);
+        let mut rng = Xoshiro256::new(15);
+        for _ in 0..10 {
+            store.insert_batch(vec![sk(&mut rng, 16)]);
+        }
+        let a = store.map_shards(|s| s.ids.len());
+        let b = store.scatter_gather(|_si| Box::new(|s: &Shard| s.ids.len()));
+        assert_eq!(a, b);
+        let counters = store.executor().counters();
+        assert_eq!(counters.scatters.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.jobs.load(Ordering::Relaxed), 4);
+        assert_eq!(counters.queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn scatter_gather_races_inserts_without_losing_or_duplicating_hits() {
+        // Executor lifecycle under load: scatters interleave with raw
+        // inserts; every scan must see each id at most once (no shard
+        // visits a row twice) and must always see the pre-inserted prefix
+        // (append-only arenas: a row, once placed, is visible to every
+        // later scan).
+        let store = Arc::new(ShardedStore::new(3, 64));
+        let mut rng = Xoshiro256::new(16);
+        let baseline: Vec<BitVec> = (0..30).map(|_| sk(&mut rng, 64)).collect();
+        let base_ids = store.insert_batch(baseline);
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            let writer = {
+                let store = store.clone();
+                let stop = stop.clone();
+                scope.spawn(move || {
+                    let mut rng = Xoshiro256::new(17);
+                    while !stop.load(Ordering::SeqCst) {
+                        store.insert_batch((0..3).map(|_| sk(&mut rng, 64)).collect());
+                    }
+                })
+            };
+            for _ in 0..50 {
+                let seen: Vec<Vec<usize>> =
+                    store.scatter_gather(|_si| Box::new(|s: &Shard| s.ids.clone()));
+                let mut all: Vec<usize> = seen.into_iter().flatten().collect();
+                let total = all.len();
+                all.sort_unstable();
+                all.dedup();
+                assert_eq!(all.len(), total, "a scatter saw an id twice");
+                for id in &base_ids {
+                    assert!(all.binary_search(id).is_ok(), "id {id} lost mid-scatter");
+                }
+            }
+            stop.store(true, Ordering::SeqCst);
+            writer.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn group_commit_coalesces_and_survives_reopen() {
+        let dir = TempDir::new("store-group-commit");
+        let cfg = PersistConfig {
+            commit_window_us: 2_000,
+            // group commit only engages with an fsync to amortise
+            fsync: FsyncPolicy::Always,
+            ..durable_cfg(&dir, PersistMode::Wal, 0)
+        };
+        let counters = Arc::new(PersistCounters::default());
+        let expected = {
+            let (store, _) = ShardedStore::open_durable(
+                fp(2, 64, 5),
+                &IndexConfig::default(),
+                &cfg,
+                counters.clone(),
+                &ExecutorConfig::default(),
+            )
+            .unwrap();
+            let store = Arc::new(store);
+            std::thread::scope(|scope| {
+                for t in 0..4u64 {
+                    let store = store.clone();
+                    scope.spawn(move || {
+                        let mut rng = Xoshiro256::new(70 + t);
+                        for _ in 0..6 {
+                            store
+                                .try_insert_batch((0..2).map(|_| sk(&mut rng, 64)).collect())
+                                .unwrap();
+                        }
+                    });
+                }
+            });
+            assert_eq!(store.len(), 4 * 6 * 2);
+            assert!(
+                counters.group_commits.load(Ordering::Relaxed) >= 1,
+                "group-commit thread never flushed a window"
+            );
+            store.snapshot_ordered()
+        };
+        // every acked (try_insert_batch returned Ok) insert is recoverable
+        let (recovered, _) = ShardedStore::open_durable(
+            fp(2, 64, 5),
+            &IndexConfig::default(),
+            &cfg,
+            Arc::new(PersistCounters::default()),
+            &ExecutorConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(recovered.snapshot_ordered(), expected);
+    }
+
+    #[test]
+    fn wal_commit_failure_surfaces_through_try_insert_batch() {
+        let dir = TempDir::new("store-commit-fail");
+        // exercise both the synchronous path and the group-commit path
+        for window_us in [0u64, 1_000] {
+            let cfg = PersistConfig {
+                commit_window_us: window_us,
+                // Always so the window>0 lane actually runs group commit
+                fsync: FsyncPolicy::Always,
+                ..durable_cfg(&dir, PersistMode::Wal, 0)
+            };
+            let sub = TempDir::new(&format!("store-commit-fail-{window_us}"));
+            let cfg = PersistConfig {
+                data_dir: Some(sub.path().to_path_buf()),
+                ..cfg
+            };
+            let (store, _) = ShardedStore::open_durable(
+                fp(1, 64, 5),
+                &IndexConfig::default(),
+                &cfg,
+                Arc::new(PersistCounters::default()),
+                &ExecutorConfig::default(),
+            )
+            .unwrap();
+            let mut rng = Xoshiro256::new(80);
+            // a clean insert first, so the failure below is unambiguous
+            store.try_insert_batch(vec![sk(&mut rng, 64)]).unwrap();
+            let p = store.persistence().unwrap();
+            p.wal_guard(0).fail_next_commit("injected disk failure");
+            let insert = store.try_insert_batch(vec![sk(&mut rng, 64)]);
+            let err = insert.unwrap_err().to_string();
+            assert!(err.contains("not acknowledged as durable"), "window={window_us}: {err}");
+            // the injection is one-shot: the WAL writer retries its still-
+            // pending frames on the next commit and the store recovers
+            store.try_insert_batch(vec![sk(&mut rng, 64)]).unwrap();
+            // rows were placed in memory despite the failed ack
+            assert_eq!(store.len(), 3, "window={window_us}");
+        }
+    }
+
+    #[test]
     fn poisoned_shard_lock_recovers_instead_of_bricking() {
         // Regression: every shard access used read()/write().unwrap(), so
         // one panicking worker (here: a dimension-mismatched sketch hitting
@@ -894,6 +1177,19 @@ mod tests {
             data_dir: Some(dir.path().to_path_buf()),
             fsync: FsyncPolicy::Never,
             snapshot_every,
+            // synchronous commits: these tests pin down the non-group-commit
+            // path (the group-commit tests below opt in explicitly)
+            commit_window_us: 0,
+        }
+    }
+
+    fn fp(num_shards: usize, sketch_dim: usize, seed: u64) -> Fingerprint {
+        Fingerprint {
+            sketch_dim,
+            seed,
+            num_shards,
+            input_dim: sketch_dim * 4,
+            num_categories: 8,
         }
     }
 
@@ -906,12 +1202,11 @@ mod tests {
         let pts: Vec<BitVec> = (0..18).map(|_| sk(&mut rng, 128)).collect();
         let before = {
             let (store, report) = ShardedStore::open_durable(
-                3,
-                128,
+                fp(3, 128, 9),
                 &IndexConfig::default(),
-                9,
                 &cfg,
                 counters.clone(),
+                &ExecutorConfig::default(),
             )
             .unwrap();
             assert_eq!(report.generation, 0);
@@ -923,12 +1218,11 @@ mod tests {
             (store.snapshot_ordered(), store.shard_sizes())
         };
         let (store, report) = ShardedStore::open_durable(
-            3,
-            128,
+            fp(3, 128, 9),
             &IndexConfig::default(),
-            9,
             &cfg,
             Arc::new(PersistCounters::default()),
+            &ExecutorConfig::default(),
         )
         .unwrap();
         assert_eq!(report.replayed_records, 18);
@@ -945,23 +1239,38 @@ mod tests {
     fn fingerprint_mismatch_refuses_to_open() {
         let dir = TempDir::new("store-fp");
         let cfg = durable_cfg(&dir, PersistMode::Wal, 0);
-        let open = |shards, dim, seed| {
+        let open = |fingerprint| {
             ShardedStore::open_durable(
-                shards,
-                dim,
+                fingerprint,
                 &IndexConfig::default(),
-                seed,
                 &cfg,
                 Arc::new(PersistCounters::default()),
+                &ExecutorConfig::default(),
             )
         };
-        open(2, 64, 7).unwrap();
-        let err = open(2, 128, 7).unwrap_err().to_string();
+        open(fp(2, 64, 7)).unwrap();
+        let err = open(fp(2, 128, 7)).unwrap_err().to_string();
         assert!(err.contains("sketch_dim"), "{err}");
-        let err = open(4, 64, 7).unwrap_err().to_string();
+        let err = open(fp(4, 64, 7)).unwrap_err().to_string();
         assert!(err.contains("num_shards"), "{err}");
-        let err = open(2, 64, 8).unwrap_err().to_string();
+        let err = open(fp(2, 64, 8)).unwrap_err().to_string();
         assert!(err.contains("seed"), "{err}");
+        // the extended fingerprint: corpus-shape drift under an identical
+        // seed is a hard error too, not silent corruption at query time
+        let err = open(Fingerprint {
+            input_dim: 999,
+            ..fp(2, 64, 7)
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("input_dim"), "{err}");
+        let err = open(Fingerprint {
+            num_categories: 5,
+            ..fp(2, 64, 7)
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("num_categories"), "{err}");
     }
 
     #[test]
@@ -972,12 +1281,11 @@ mod tests {
         let cfg = durable_cfg(&dir, PersistMode::WalSnapshot, 4);
         let counters = Arc::new(PersistCounters::default());
         let (store, _) = ShardedStore::open_durable(
-            1,
-            64,
+            fp(1, 64, 3),
             &IndexConfig::default(),
-            3,
             &cfg,
             counters.clone(),
+            &ExecutorConfig::default(),
         )
         .unwrap();
         let mut rng = Xoshiro256::new(50);
@@ -1018,12 +1326,11 @@ mod tests {
         let mut rng = Xoshiro256::new(41);
         let before = {
             let (store, _) = ShardedStore::open_durable(
-                2,
-                64,
+                fp(2, 64, 3),
                 &IndexConfig::default(),
-                3,
                 &cfg,
                 counters.clone(),
+                &ExecutorConfig::default(),
             )
             .unwrap();
             for _ in 0..5 {
@@ -1040,12 +1347,11 @@ mod tests {
             store.snapshot_ordered()
         };
         let (store, report) = ShardedStore::open_durable(
-            2,
-            64,
+            fp(2, 64, 3),
             &IndexConfig::default(),
-            3,
             &cfg,
             Arc::new(PersistCounters::default()),
+            &ExecutorConfig::default(),
         )
         .unwrap();
         assert!(report.generation >= 1);

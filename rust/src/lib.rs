@@ -10,15 +10,23 @@
 //! datasets, and a streaming sketch *service* — dynamic insert batching,
 //! point-balanced sharding over contiguous bit-packed sketch arenas
 //! ([`sketch::SketchMatrix`]) with an O(1) id → (shard, row) index, and
-//! single or batched top-k routing via a bounded-heap scan
-//! ([`coordinator::TopK`]) or, sublinearly, via per-shard banded
-//! multi-probe Hamming-LSH candidate generation ([`index::LshIndex`]) with
-//! exact Cham reranking and guaranteed full-scan fallback — whose compute
+//! single or batched top-k routing executed on a persistent shard-executor
+//! runtime ([`coordinator::executor`]: one long-lived worker thread per
+//! shard behind bounded work queues — no per-request thread spawning) with
+//! batch-major blocked scoring (L1-tiled multi-query 8-way-unrolled
+//! popcount kernels feeding a bounded heap, [`coordinator::TopK`]) or,
+//! sublinearly, per-shard banded multi-probe Hamming-LSH candidate
+//! generation ([`index::LshIndex`]) with exact Cham reranking through the
+//! same gathered kernel and guaranteed full-scan fallback — whose compute
 //! hot path can run either natively (bit-packed popcount over borrowed
 //! `&[u64]` arena rows) or through AOT-compiled JAX/Pallas artifacts via
 //! PJRT, and whose corpus can be made crash-durable ([`persist`]:
-//! per-shard checksummed WALs + snapshot generations + fingerprint-checked
-//! warm recovery, so a restart never re-sketches the corpus).
+//! per-shard checksummed WALs with group-committed fsyncs — one per
+//! commit window per touched shard, acks released when their window
+//! lands, commit failures surfaced to the client as insert errors — plus
+//! snapshot generations and full-fingerprint-checked warm recovery, so a
+//! restart never re-sketches the corpus and never loads one persisted
+//! under a different corpus shape).
 //!
 //! ## Architecture (three layers)
 //!

@@ -4,11 +4,13 @@
 //! cabin-sketch serve   [--addr 127.0.0.1:7878] [--dim 4096] [--categories 64]
 //!                      [--sketch-dim 1024] [--seed 42] [--shards 4]
 //!                      [--no-xla] [--max-batch 64] [--max-delay-ms 2]
+//!                      [--executor-queue 1024]
 //!                      [--index auto|on|off] [--index-bands 8]
 //!                      [--index-band-bits 16] [--index-probes 2]
 //!                      [--index-auto-min-rows 1024]
 //!                      [--data-dir DIR] [--persist off|wal|wal+snapshot]
 //!                      [--fsync always|never] [--snapshot-every 50000]
+//!                      [--commit-window-us 1000]
 //! cabin-sketch sketch  --input docword.txt [--sketch-dim 1000] [--out sketches.bin]
 //! cabin-sketch repro   <table1|table3|table4|fig2..fig12|ablation-*|all> [options]
 //! cabin-sketch info    # artifact + environment report
@@ -64,8 +66,16 @@ fn print_help() {
                     ablation-onehot all\n\
          common options: --datasets kos,nips,... --points N --dims 100,500\n\
                     --dim 1000 --seed 42 --budget-secs 120\n\
+         serve runtime: --executor-queue N (per-shard scan-queue bound; scan\n\
+                    workers are persistent — one thread per shard, no\n\
+                    per-request spawning)\n\
          serve persistence: --data-dir DIR [--persist off|wal|wal+snapshot]\n\
-                    [--fsync always|never] [--snapshot-every 50000]"
+                    [--fsync always|never] [--snapshot-every 50000]\n\
+                    [--commit-window-us N] (group-commit window: insert\n\
+                    fsyncs coalesce across batches within the window; acks\n\
+                    wait for their window's flush; 0 = commit per batch;\n\
+                    engaged under --fsync always, where an fsync exists\n\
+                    to amortise)"
     );
 }
 
@@ -85,6 +95,7 @@ fn coordinator_config(args: &Args) -> CoordinatorConfig {
         heatmap_limit: args.usize_or("heatmap-limit", 4096),
         index: index_config(args),
         persist: persist_config(args),
+        executor_queue: args.usize_or("executor-queue", 1024),
     }
 }
 
@@ -116,6 +127,7 @@ fn persist_config(args: &Args) -> PersistConfig {
         data_dir,
         fsync: PersistConfig::fsync_from_str_or_warn(&args.str_or("fsync", "always"), "serve"),
         snapshot_every: args.u64_or("snapshot-every", defaults.snapshot_every),
+        commit_window_us: args.u64_or("commit-window-us", defaults.commit_window_us),
     }
 }
 

@@ -8,20 +8,28 @@
 //! fully intact — never a mix. It is written via tmp-file + rename for the
 //! same reason.
 //!
-//! The fingerprint (`sketch_dim`, `seed`, `num_shards`) is checked on
-//! every recovery and a mismatch is a *hard, descriptive error*: sketches
-//! are meaningful only under the π/ψ mappings derived from `seed` at
-//! `sketch_dim`, and rows are addressed per shard — silently loading a
-//! corpus persisted under any other mapping would corrupt every Cham
-//! estimate the coordinator serves. `seed` is stored as a string because
-//! the wire JSON model is f64-backed and a u64 seed must roundtrip
-//! exactly.
+//! The fingerprint (`input_dim`, `num_categories`, `sketch_dim`, `seed`,
+//! `num_shards`) is checked on every recovery and a mismatch is a *hard,
+//! descriptive error*: sketches are meaningful only under the π/ψ
+//! mappings derived from `seed` over an `input_dim`-dimensional,
+//! `num_categories`-valued corpus at `sketch_dim`, and rows are addressed
+//! per shard — silently loading a corpus persisted under any other
+//! mapping would corrupt every Cham estimate the coordinator serves.
+//! (`input_dim`/`num_categories` drift under an identical seed used to be
+//! undetected: the π mapping tables differ in *shape*, so recovered
+//! sketches would compare against freshly-sketched queries from a
+//! different embedding — manifest version 2 closes that hole.) `seed` is
+//! stored as a string because the wire JSON model is f64-backed and a u64
+//! seed must roundtrip exactly.
 
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
-const VERSION: u32 = 1;
+/// Version 2 extended the fingerprint with `input_dim`/`num_categories`.
+/// Version-1 dirs cannot be verified against the live corpus shape, so
+/// they are refused with a descriptive error rather than half-checked.
+const VERSION: u32 = 2;
 
 /// The store configuration a data dir was persisted under.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,6 +37,10 @@ pub struct Fingerprint {
     pub sketch_dim: usize,
     pub seed: u64,
     pub num_shards: usize,
+    /// Corpus dimensionality the π mapping was derived for.
+    pub input_dim: usize,
+    /// Category alphabet size the ψ mapping was derived for.
+    pub num_categories: u16,
 }
 
 impl Fingerprint {
@@ -52,6 +64,18 @@ impl Fingerprint {
             diffs.push(format!(
                 "num_shards: persisted {} vs configured {}",
                 self.num_shards, expect.num_shards
+            ));
+        }
+        if self.input_dim != expect.input_dim {
+            diffs.push(format!(
+                "input_dim: persisted {} vs configured {}",
+                self.input_dim, expect.input_dim
+            ));
+        }
+        if self.num_categories != expect.num_categories {
+            diffs.push(format!(
+                "num_categories: persisted {} vs configured {}",
+                self.num_categories, expect.num_categories
             ));
         }
         if diffs.is_empty() {
@@ -104,6 +128,14 @@ impl Manifest {
                 "num_shards",
                 Json::Num(self.fingerprint.num_shards as f64),
             ),
+            (
+                "input_dim",
+                Json::Num(self.fingerprint.input_dim as f64),
+            ),
+            (
+                "num_categories",
+                Json::Num(self.fingerprint.num_categories as f64),
+            ),
         ]);
         let path = manifest_path(dir);
         let tmp = dir.join("MANIFEST.tmp");
@@ -139,6 +171,15 @@ impl Manifest {
         let obj = crate::util::json::parse(&text)
             .with_context(|| format!("parse {}", path.display()))?;
         let version = obj.req_usize("version")? as u32;
+        if version == 1 {
+            bail!(
+                "{}: manifest version 1 predates the full configuration fingerprint \
+                 (no input_dim/num_categories), so the persisted corpus cannot be \
+                 verified against this server's corpus shape — re-ingest into a fresh \
+                 --data-dir",
+                path.display()
+            );
+        }
         if version != VERSION {
             bail!("{}: unsupported manifest version {version}", path.display());
         }
@@ -152,6 +193,8 @@ impl Manifest {
                 sketch_dim: obj.req_usize("sketch_dim")?,
                 seed,
                 num_shards: obj.req_usize("num_shards")?,
+                input_dim: obj.req_usize("input_dim")?,
+                num_categories: obj.req_usize("num_categories")? as u16,
             },
         }))
     }
@@ -175,6 +218,8 @@ mod tests {
             // beyond f64's 2^53 integer range: must roundtrip exactly
             seed: (1u64 << 60) + 3,
             num_shards: 4,
+            input_dim: 4096,
+            num_categories: 64,
         }
     }
 
@@ -211,7 +256,27 @@ mod tests {
         seeded.seed = 9;
         let err = persisted.check(&seeded).unwrap_err().to_string();
         assert!(err.contains("seed"), "{err}");
+        // corpus-shape drift under an identical seed is detected too
+        let mut shaped = fp();
+        shaped.input_dim = 100;
+        shaped.num_categories = 3;
+        let err = persisted.check(&shaped).unwrap_err().to_string();
+        assert!(err.contains("input_dim"), "{err}");
+        assert!(err.contains("num_categories"), "{err}");
         persisted.check(&fp()).unwrap();
+    }
+
+    #[test]
+    fn version_1_manifest_is_refused_descriptively() {
+        let dir = TempDir::new("manifest-v1");
+        std::fs::write(
+            manifest_path(dir.path()),
+            r#"{"version":1,"generation":0,"sketch_dim":64,"seed":"7","num_shards":2}"#,
+        )
+        .unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("version 1"), "{err}");
+        assert!(err.contains("fresh --data-dir"), "{err}");
     }
 
     #[test]

@@ -14,7 +14,30 @@
 //! Write path: the store appends WAL records *under the shard write lock*
 //! (so log order = arena order) and commits once per batch before the
 //! batch is acknowledged; with [`FsyncPolicy::Always`] an acknowledged
-//! insert therefore survives `kill -9`. Snapshot rotation is
+//! insert therefore survives `kill -9`.
+//!
+//! Group commit (`commit_window_us > 0` — the default — under
+//! `fsync = always`; with `fsync = never` a commit is a buffered write
+//! with nothing to amortise, so those stores keep the synchronous
+//! per-batch path): the per-batch
+//! commit is delegated to a dedicated group-commit thread. An insert
+//! batch appends its frames (buffered in the writer, under the shard
+//! lock), registers its shard in the current *commit window*, and blocks
+//! until that window is flushed; the committer holds each window open for
+//! the configured duration (or until a batch cap), then commits every
+//! dirty shard's WAL once — so concurrent batches landing in the same
+//! window share one write + fsync per touched shard instead of paying one
+//! each. Acks are released only when their window's flush lands, which
+//! preserves the "acked ⇒ survives kill -9" contract, and a flush
+//! *failure* is handed back to every batch of that window — the store
+//! surfaces it through `try_insert_batch` and the batcher turns it into a
+//! client-visible insert error. Rebalance keeps its synchronous
+//! dst-before-src commit ordering (the lost-row crash window depends on
+//! that order, which a shared window fsync could not guarantee); a
+//! rebalance commit flushing early frames of an open insert window is
+//! harmless — the window's own commit then finds them already on disk.
+//!
+//! Snapshot rotation is
 //! stop-the-world (it holds the store's id-index read lock, which blocks
 //! inserts and rebalances): write `snap-(G+1)-*` durably → create empty
 //! `wal-(G+1)-*` → write `MANIFEST(G+1)` (the commit point) → swap the
@@ -28,9 +51,8 @@
 //! indexes via the existing [`crate::index::LshIndex::rebuild`] path.
 //!
 //! Known limits (ROADMAP "Open items"): snapshots are stop-the-world and
-//! full, not incremental; WAL commit errors after an insert was accepted
-//! are logged loudly but not yet propagated to the client; there is no
-//! background WAL compaction between snapshots.
+//! full, not incremental; there is no background WAL compaction between
+//! snapshots.
 
 pub mod manifest;
 pub mod recovery;
@@ -44,9 +66,11 @@ pub use snapshot::ShardState;
 use crate::sketch::SketchMatrix;
 use anyhow::{Context, Result};
 use manifest::{snap_path, sync_dir, wal_path, Manifest};
+use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 use wal::WalWriter;
 
 /// What gets persisted.
@@ -86,6 +110,17 @@ pub struct PersistConfig {
     /// `snapshot` wire op still works). Only meaningful under
     /// [`PersistMode::WalSnapshot`].
     pub snapshot_every: u64,
+    /// Group-commit window in microseconds (`--commit-window-us`): insert
+    /// WAL commits from every batch landing within one window coalesce
+    /// into a single write + fsync per touched shard, performed by the
+    /// group-commit thread; each batch's ack waits for its window's
+    /// flush. `0` commits synchronously on the insert path (the
+    /// pre-group-commit behaviour). Default 1000 (≈1 ms). Only engaged
+    /// under [`FsyncPolicy::Always`] — with `fsync = never` a commit is a
+    /// buffered write with nothing to amortise, so holding acks for a
+    /// window would be pure added latency and the synchronous path is
+    /// kept.
+    pub commit_window_us: u64,
 }
 
 impl Default for PersistConfig {
@@ -95,6 +130,7 @@ impl Default for PersistConfig {
             data_dir: None,
             fsync: FsyncPolicy::Always,
             snapshot_every: 50_000,
+            commit_window_us: 1_000,
         }
     }
 }
@@ -161,6 +197,10 @@ impl PersistConfig {
                 "persist_cfg_snapshot_every".into(),
                 self.snapshot_every as f64,
             ),
+            (
+                "persist_cfg_commit_window_us".into(),
+                self.commit_window_us as f64,
+            ),
         ]
     }
 }
@@ -181,6 +221,10 @@ pub struct PersistCounters {
     pub recovery_ms: AtomicU64,
     /// Live snapshot generation.
     pub generation: AtomicU64,
+    /// Commit windows flushed by the group-commit thread since startup
+    /// (each window = one write + fsync per dirty shard, shared by every
+    /// batch that landed in the window).
+    pub group_commits: AtomicU64,
 }
 
 /// Poison-recovering mutex lock: a WAL writer is plain buffered-file
@@ -191,8 +235,180 @@ fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// How many batches a commit window accepts before it is flushed early
+/// (the "~1 ms or N batches" bound on window occupancy).
+const COMMIT_WINDOW_MAX_BATCHES: u64 = 256;
+
+/// How many failed windows are remembered for late waiters. Waiters wake
+/// on every flush, so in practice an entry is read within one window of
+/// being pushed; the cap only bounds pathological pile-ups.
+const COMMIT_FAILURES_KEPT: usize = 256;
+
+/// Group-commit bookkeeping shared between submitters (insert batches),
+/// waiters and the committer thread.
+struct GcInner {
+    /// The window currently accepting batches; tickets are its epoch.
+    open_epoch: u64,
+    /// Every window with epoch ≤ `completed` has been flushed (attempted).
+    completed: u64,
+    /// Shards with frames awaiting the open window's flush.
+    dirty: Vec<bool>,
+    /// Batches registered in the open window.
+    pending_batches: u64,
+    /// `(epoch, per-shard errors)` for windows whose flush failed on at
+    /// least one shard. Attribution is per shard: a batch whose own
+    /// shard committed cleanly must ack even when a sibling shard's
+    /// flush in the same window failed.
+    failures: VecDeque<(u64, Vec<(usize, String)>)>,
+    stop: bool,
+}
+
+struct GcShared {
+    inner: Mutex<GcInner>,
+    /// Signals the committer: work arrived (or stop was requested).
+    work: Condvar,
+    /// Signals waiters: a window completed.
+    done: Condvar,
+    window: Duration,
+}
+
+impl GcShared {
+    fn lock(&self) -> MutexGuard<'_, GcInner> {
+        lock_recover(&self.inner)
+    }
+}
+
+/// The group-commit thread handle. Dropping it drains: the committer
+/// flushes every registered-but-unflushed window, completes all waiters,
+/// and exits; the drop joins it.
+struct GroupCommitter {
+    shared: Arc<GcShared>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GroupCommitter {
+    fn start(
+        num_shards: usize,
+        window: Duration,
+        wals: Arc<Vec<Mutex<WalWriter>>>,
+        counters: Arc<PersistCounters>,
+    ) -> GroupCommitter {
+        let shared = Arc::new(GcShared {
+            inner: Mutex::new(GcInner {
+                // the open window is strictly ahead of `completed`, so a
+                // fresh waiter can never observe its window as already
+                // flushed
+                open_epoch: 1,
+                completed: 0,
+                dirty: vec![false; num_shards],
+                pending_batches: 0,
+                failures: VecDeque::new(),
+                stop: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            window,
+        });
+        let thread_shared = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("cabin-group-commit".into())
+            .spawn(move || committer_loop(&thread_shared, &wals, &counters))
+            .expect("spawn group-commit thread");
+        GroupCommitter {
+            shared,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for GroupCommitter {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.lock();
+            g.stop = true;
+            self.shared.work.notify_all();
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The group-commit loop. Windows are numbered by epoch: `open_epoch` is
+/// the window batches currently register in (they read it as their
+/// ticket, under the same lock that sets their dirty flag), and a window
+/// is *closed* by incrementing `open_epoch` — also under the lock — so a
+/// batch's frames are always appended before its window closes, which
+/// means the flush that follows the close is guaranteed to see them.
+fn committer_loop(shared: &GcShared, wals: &[Mutex<WalWriter>], counters: &PersistCounters) {
+    let mut g = shared.lock();
+    loop {
+        // wait for work (or stop)
+        while g.pending_batches == 0 && !g.stop {
+            g = shared.work.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+        if g.pending_batches == 0 {
+            break; // stopping with nothing left to flush
+        }
+        // hold the window open to coalesce — unless stopping (drain now)
+        // or the batch cap is hit
+        if !g.stop {
+            let deadline = Instant::now() + shared.window;
+            while !g.stop && g.pending_batches < COMMIT_WINDOW_MAX_BATCHES {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = shared
+                    .work
+                    .wait_timeout(g, deadline - now)
+                    .unwrap_or_else(PoisonError::into_inner);
+                g = guard;
+            }
+        }
+        // close the window
+        let epoch = g.open_epoch;
+        g.open_epoch += 1;
+        g.pending_batches = 0;
+        let dirty: Vec<usize> = g
+            .dirty
+            .iter()
+            .enumerate()
+            .filter_map(|(si, &d)| d.then_some(si))
+            .collect();
+        for d in g.dirty.iter_mut() {
+            *d = false;
+        }
+        drop(g);
+        // flush outside the bookkeeping lock: one commit per dirty shard.
+        // Only the WAL mutexes are taken, one at a time — no store locks,
+        // so this can never deadlock against inserts or rotations.
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        for &si in &dirty {
+            if let Err(e) = lock_recover(&wals[si]).commit() {
+                failed.push((si, format!("shard {si}: {e}")));
+            }
+        }
+        counters.group_commits.fetch_add(1, Ordering::Relaxed);
+        g = shared.lock();
+        g.completed = epoch;
+        if !failed.is_empty() {
+            g.failures.push_back((epoch, failed));
+            while g.failures.len() > COMMIT_FAILURES_KEPT {
+                g.failures.pop_front();
+            }
+        }
+        shared.done.notify_all();
+    }
+    // no unflushed window can remain (a registered batch keeps the loop
+    // flushing), but wake any racing waiter so nobody hangs on shutdown
+    g.stop = true;
+    drop(g);
+    shared.done.notify_all();
+}
+
 /// The live persistence handle owned by the store: one WAL writer per
-/// shard plus the snapshot/rotation machinery.
+/// shard plus the snapshot/rotation and group-commit machinery.
 pub struct Persistence {
     dir: PathBuf,
     mode: PersistMode,
@@ -201,7 +417,12 @@ pub struct Persistence {
     fingerprint: Fingerprint,
     /// Records appended since the last snapshot cut (drives auto-snapshot).
     records_since_snapshot: AtomicU64,
-    wals: Vec<Mutex<WalWriter>>,
+    /// Arc-shared with the group-commit thread (it flushes through the
+    /// same mutexes the store appends under).
+    wals: Arc<Vec<Mutex<WalWriter>>>,
+    /// The group-commit thread; `None` when `commit_window_us == 0`
+    /// (synchronous per-batch commits).
+    group: Option<GroupCommitter>,
     /// Shared with `coordinator::Metrics`; also the single home of the
     /// live generation (`counters.generation`), so the stats field and the
     /// snapshot/WAL file addressing can never disagree.
@@ -226,15 +447,30 @@ impl Persistence {
         let sw = crate::util::timer::Stopwatch::start();
         let (states, mut report) = recovery::recover(&dir, &fingerprint)?;
         report.recovery_ms = (sw.elapsed_secs() * 1e3).round() as u64;
-        let wals = (0..fingerprint.num_shards)
-            .map(|si| {
-                WalWriter::open_append(&wal_path(&dir, report.generation, si), cfg.fsync)
-                    .map(Mutex::new)
-                    .with_context(|| format!("opening WAL for shard {si}"))
-            })
-            .collect::<Result<Vec<_>>>()?;
+        let wals: Arc<Vec<Mutex<WalWriter>>> = Arc::new(
+            (0..fingerprint.num_shards)
+                .map(|si| {
+                    WalWriter::open_append(&wal_path(&dir, report.generation, si), cfg.fsync)
+                        .map(Mutex::new)
+                        .with_context(|| format!("opening WAL for shard {si}"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        );
         counters.recovery_ms.store(report.recovery_ms, Ordering::Relaxed);
         counters.generation.store(report.generation, Ordering::Relaxed);
+        // The committer only exists where it has something to amortise:
+        // an fdatasync per commit. Under `fsync = never` a commit is a
+        // buffered write, so holding acks for a window would be pure
+        // added latency — those stores keep the synchronous per-batch
+        // path regardless of the window setting.
+        let group = (cfg.commit_window_us > 0 && cfg.fsync == FsyncPolicy::Always).then(|| {
+            GroupCommitter::start(
+                fingerprint.num_shards,
+                Duration::from_micros(cfg.commit_window_us),
+                wals.clone(),
+                counters.clone(),
+            )
+        });
         let p = Persistence {
             dir,
             mode: cfg.mode,
@@ -246,9 +482,63 @@ impl Persistence {
             // across repeated crashes
             records_since_snapshot: AtomicU64::new(report.replayed_records as u64),
             wals,
+            group,
             counters,
         };
         Ok((p, states, report))
+    }
+
+    /// Whether insert commits go through the group-commit thread (a
+    /// commit window is configured) rather than synchronously on the
+    /// insert path.
+    pub fn group_commit_enabled(&self) -> bool {
+        self.group.is_some()
+    }
+
+    /// Register `shard`'s pending WAL frames in the open commit window
+    /// and block until that window's flush lands; `Err` carries the
+    /// window's flush failure. The caller must NOT hold the shard's WAL
+    /// mutex (the committer needs it to flush).
+    ///
+    /// Correctness of the ticket: the dirty flag and the epoch read
+    /// happen under one lock acquisition, and the committer closes a
+    /// window (increments `open_epoch`) under the same lock *before*
+    /// flushing — so frames appended before this call are always covered
+    /// by the flush of the returned epoch (or an earlier one; a WAL
+    /// commit is idempotent over already-written frames).
+    pub fn group_commit_wait(&self, shard: usize) -> std::result::Result<(), String> {
+        let gc = self
+            .group
+            .as_ref()
+            .expect("group_commit_wait requires an enabled group committer");
+        let epoch = {
+            let mut g = gc.shared.lock();
+            g.dirty[shard] = true;
+            g.pending_batches += 1;
+            gc.shared.work.notify_all();
+            g.open_epoch
+        };
+        let mut g = gc.shared.lock();
+        loop {
+            if g.completed >= epoch {
+                // fail only if THIS shard's flush failed in the window —
+                // a sibling shard's failure must not veto a durable ack
+                let mine = g
+                    .failures
+                    .iter()
+                    .find(|(e, _)| *e == epoch)
+                    .and_then(|(_, shards)| shards.iter().find(|(si, _)| *si == shard))
+                    .map(|(_, msg)| msg.clone());
+                return match mine {
+                    Some(msg) => Err(msg),
+                    None => Ok(()),
+                };
+            }
+            if g.stop {
+                return Err("persistence shut down before the commit window flushed".into());
+            }
+            g = gc.shared.done.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
     }
 
     pub fn data_dir(&self) -> &Path {
@@ -382,8 +672,11 @@ impl Persistence {
 
 impl Drop for Persistence {
     fn drop(&mut self) {
-        // graceful-teardown durability; hard kills are covered by the
-        // commit-per-batch protocol
+        // drain + join the group-commit thread first (it flushes any open
+        // window and completes its waiters), then the belt-and-braces
+        // graceful-teardown fsync; hard kills are covered by the
+        // commit-per-window protocol
+        self.group = None;
         let _ = self.flush_all();
     }
 }
@@ -400,6 +693,7 @@ mod tests {
             data_dir: Some(dir.path().to_path_buf()),
             fsync: FsyncPolicy::Never,
             snapshot_every: 4,
+            commit_window_us: 0, // group-commit tests opt in explicitly
         }
     }
 
@@ -408,6 +702,8 @@ mod tests {
             sketch_dim: 64,
             seed: 7,
             num_shards: 2,
+            input_dim: 4096,
+            num_categories: 16,
         }
     }
 
@@ -510,5 +806,107 @@ mod tests {
         assert!(fields
             .iter()
             .any(|(n, v)| n == "persist_cfg_mode" && *v == 0.0));
+        assert!(fields
+            .iter()
+            .any(|(n, v)| n == "persist_cfg_commit_window_us" && *v == 1000.0));
+    }
+
+    fn group_cfg(dir: &TempDir, window_us: u64) -> PersistConfig {
+        PersistConfig {
+            commit_window_us: window_us,
+            // group commit only engages where there is an fsync to amortise
+            fsync: FsyncPolicy::Always,
+            ..cfg(dir, PersistMode::Wal)
+        }
+    }
+
+    #[test]
+    fn group_commit_flushes_registered_batches() {
+        let dir = TempDir::new("persist-group");
+        let counters = Arc::new(PersistCounters::default());
+        let (p, _, _) = Persistence::open(&group_cfg(&dir, 500), fp(), counters.clone()).unwrap();
+        assert!(p.group_commit_enabled());
+        {
+            let mut w = p.wal_guard(0);
+            w.append_insert(0, &[0b111]);
+        } // drop the guard BEFORE waiting — the committer needs it
+        p.group_commit_wait(0).unwrap();
+        assert!(counters.group_commits.load(Ordering::Relaxed) >= 1);
+        drop(p);
+        // the frames reached the file through the committer, not drop
+        let replay = wal::read_wal(&wal_path(dir.path(), 0, 0), 1).unwrap();
+        assert_eq!(replay.records.len(), 1);
+        // window 0 ⇒ no committer; fsync=never likewise (nothing to amortise)
+        let dir2 = TempDir::new("persist-group-off");
+        let (p2, _, _) = Persistence::open(
+            &group_cfg(&dir2, 0),
+            fp(),
+            Arc::new(PersistCounters::default()),
+        )
+        .unwrap();
+        assert!(!p2.group_commit_enabled());
+        let dir3 = TempDir::new("persist-group-never");
+        let (p3, _, _) = Persistence::open(
+            &PersistConfig {
+                fsync: FsyncPolicy::Never,
+                ..group_cfg(&dir3, 500)
+            },
+            fp(),
+            Arc::new(PersistCounters::default()),
+        )
+        .unwrap();
+        assert!(!p3.group_commit_enabled());
+    }
+
+    #[test]
+    fn sibling_shard_failure_does_not_veto_a_clean_shards_ack() {
+        // two batches in ONE window (long window, racing waiters): shard
+        // 1's flush fails, shard 0's succeeds — only shard 1's waiter may
+        // see the error
+        let dir = TempDir::new("persist-group-sibling");
+        let counters = Arc::new(PersistCounters::default());
+        let (p, _, _) =
+            Persistence::open(&group_cfg(&dir, 100_000), fp(), counters).unwrap();
+        {
+            let mut w0 = p.wal_guard(0);
+            w0.append_insert(0, &[0b1]);
+        }
+        {
+            let mut w1 = p.wal_guard(1);
+            w1.append_insert(1, &[0b10]);
+            w1.fail_next_commit("sibling fault");
+        }
+        std::thread::scope(|s| {
+            let ok = s.spawn(|| p.group_commit_wait(0));
+            let bad = s.spawn(|| p.group_commit_wait(1));
+            let ok = ok.join().unwrap();
+            let bad = bad.join().unwrap();
+            assert!(ok.is_ok(), "clean shard vetoed by sibling: {ok:?}");
+            let err = bad.unwrap_err();
+            assert!(err.contains("sibling fault"), "{err}");
+        });
+    }
+
+    #[test]
+    fn group_commit_failure_reaches_the_waiter_and_later_windows_recover() {
+        let dir = TempDir::new("persist-group-fail");
+        let counters = Arc::new(PersistCounters::default());
+        let (p, _, _) = Persistence::open(&group_cfg(&dir, 500), fp(), counters).unwrap();
+        {
+            let mut w = p.wal_guard(1);
+            w.append_insert(3, &[0b1]);
+            w.fail_next_commit("window fault");
+        }
+        let err = p.group_commit_wait(1).unwrap_err();
+        assert!(err.contains("window fault"), "{err}");
+        // the frames stayed pending; the next window retries and succeeds
+        {
+            let mut w = p.wal_guard(1);
+            w.append_insert(4, &[0b10]);
+        }
+        p.group_commit_wait(1).unwrap();
+        drop(p);
+        let replay = wal::read_wal(&wal_path(dir.path(), 0, 1), 1).unwrap();
+        assert_eq!(replay.records.len(), 2, "both records recovered");
     }
 }

@@ -225,6 +225,8 @@ mod tests {
             sketch_dim: DIM,
             seed: 11,
             num_shards,
+            input_dim: 1000,
+            num_categories: 12,
         }
     }
 

@@ -83,6 +83,12 @@ pub struct WalWriter {
     file_len: u64,
     /// Whether every byte written to the file has been `fdatasync`ed.
     synced: bool,
+    /// Test-support fault injection: when set, the next [`WalWriter::commit`]
+    /// fails with this message *before* touching the file (frames stay
+    /// pending, exactly like a real I/O error). One-shot — consumed by
+    /// that commit. This is how the commit-error propagation path (store →
+    /// batcher → wire) is exercised without real disk faults.
+    inject_commit_error: Option<String>,
 }
 
 impl WalWriter {
@@ -101,6 +107,7 @@ impl WalWriter {
             pending: Vec::new(),
             file_len: 0,
             synced: true,
+            inject_commit_error: None,
         })
     }
 
@@ -117,6 +124,7 @@ impl WalWriter {
             pending: Vec::new(),
             file_len,
             synced: true,
+            inject_commit_error: None,
         })
     }
 
@@ -190,11 +198,24 @@ impl WalWriter {
         }
     }
 
+    /// Arm a one-shot commit failure (see `inject_commit_error`): the next
+    /// [`WalWriter::commit`] returns this message as an I/O error with the
+    /// frames left pending, exactly like a real disk fault. Test support
+    /// for the durability-error propagation path.
+    pub fn fail_next_commit(&mut self, msg: &str) {
+        self.inject_commit_error = Some(msg.to_string());
+    }
+
     /// Make everything appended so far crash-durable per the fsync policy:
     /// write to the file always, `fdatasync` under
     /// [`FsyncPolicy::Always`]. The store calls this once per batch,
-    /// before acknowledging it.
+    /// before acknowledging it (directly, or through the group-commit
+    /// thread when a commit window is configured).
     pub fn commit(&mut self) -> std::io::Result<()> {
+        if let Some(msg) = self.inject_commit_error.take() {
+            // io::Error::other — stable since 1.74, the crate MSRV
+            return Err(std::io::Error::other(msg));
+        }
         self.write_pending()?;
         if self.fsync == FsyncPolicy::Always && !self.synced {
             self.file.sync_data()?;
@@ -215,13 +236,24 @@ impl WalWriter {
         Ok(())
     }
 
-    /// Drop the uncommitted frames without writing them. The rebalance
-    /// path uses this when the *destination* commit fails: the paired
-    /// `MoveOut`s must then never become durable on their own (a later
-    /// commit on the source shard would otherwise flush them, and a crash
-    /// would leave the moved rows absent from both logs).
-    pub fn discard_pending(&mut self) {
-        self.pending.clear();
+    /// Byte length of the pending (uncommitted) frame buffer — a
+    /// watermark for [`WalWriter::rewind_pending_to`]. Stable while the
+    /// caller holds this writer's mutex (appends are the only mutation).
+    pub fn pending_watermark(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Drop every pending frame appended after `watermark`, keeping the
+    /// frames buffered before it. The rebalance path uses this when the
+    /// *destination* commit fails: the paired `MoveOut`s must then never
+    /// become durable on their own (a later commit on the source shard
+    /// would otherwise flush them, and a crash would leave the moved rows
+    /// absent from both logs) — but frames buffered *before* the
+    /// watermark by a concurrent group-commit insert batch are someone
+    /// else's acked-pending data and must survive the rewind.
+    pub fn rewind_pending_to(&mut self, watermark: usize) {
+        debug_assert!(watermark <= self.pending.len());
+        self.pending.truncate(watermark);
     }
 
     /// Mark this writer's segment as abandoned (snapshot rotation GCs it
@@ -482,6 +514,48 @@ mod tests {
         assert!(replay.truncated);
         assert!(!replay.valid_frames_beyond_tear);
         assert_eq!(replay.records.len(), 1);
+    }
+
+    #[test]
+    fn rewind_pending_drops_only_frames_past_the_watermark() {
+        // the rebalance failure path: an insert batch's frames are already
+        // pending (group commit), then move-outs are appended and must be
+        // rewound alone — the insert frames stay and commit later
+        let dir = TempDir::new("wal-rewind");
+        let path = dir.path().join("shard-0.wal");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        w.append_insert(0, &[7, 8]); // concurrent batch's acked-pending frame
+        let mark = w.pending_watermark();
+        w.append_move_out();
+        w.append_move_out();
+        w.rewind_pending_to(mark);
+        w.commit().unwrap();
+        drop(w);
+        let replay = read_wal(&path, 2).unwrap();
+        assert_eq!(
+            replay.records,
+            vec![WalRecord::Insert {
+                id: 0,
+                words: vec![7, 8],
+            }]
+        );
+    }
+
+    #[test]
+    fn injected_commit_failure_is_one_shot_and_preserves_frames() {
+        let dir = TempDir::new("wal-inject");
+        let path = dir.path().join("shard-0.wal");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        w.append_insert(0, &[1, 2]);
+        w.fail_next_commit("synthetic fault");
+        let err = w.commit().unwrap_err();
+        assert!(err.to_string().contains("synthetic fault"));
+        // frames stayed pending; the retry lands them intact
+        w.commit().unwrap();
+        drop(w);
+        let replay = read_wal(&path, 2).unwrap();
+        assert_eq!(replay.records.len(), 1);
+        assert!(!replay.truncated);
     }
 
     #[test]

@@ -222,6 +222,24 @@ pub fn or_count_words(a: &[u64], b: &[u64]) -> usize {
     binop_popcount(a, b, |a, b| a | b)
 }
 
+/// `|a ∧ b|`, 8-way unrolled — the per-row inner step of the blocked
+/// batch-scoring kernels in [`crate::sketch::matrix`]. Exactly equal to
+/// [`and_count_words`] on every input (integer popcounts commute with any
+/// unroll order); the wider unroll exists to keep eight popcnt chains in
+/// flight when a query row is replayed against a whole arena tile.
+/// Panics on length mismatch.
+#[inline]
+pub fn and_count_words8(a: &[u64], b: &[u64]) -> usize {
+    binop_popcount8(a, b, |a, b| a & b)
+}
+
+/// `|a ⊕ b|`, 8-way unrolled — see [`and_count_words8`]. Exactly equal to
+/// [`xor_count_words`] on every input. Panics on length mismatch.
+#[inline]
+pub fn xor_count_words8(a: &[u64], b: &[u64]) -> usize {
+    binop_popcount8(a, b, |a, b| a ^ b)
+}
+
 #[inline]
 fn binop_popcount(a: &[u64], b: &[u64], op: fn(u64, u64) -> u64) -> usize {
     // Length mismatch is a dimension bug at the call site; truncating to
@@ -248,6 +266,46 @@ fn binop_popcount(a: &[u64], b: &[u64], op: fn(u64, u64) -> u64) -> usize {
         i += 4;
     }
     let mut total = c0 + c1 + c2 + c3;
+    while i < n {
+        total += op(a[i], b[i]).count_ones() as u64;
+        i += 1;
+    }
+    total as usize
+}
+
+#[inline]
+fn binop_popcount8(a: &[u64], b: &[u64], op: fn(u64, u64) -> u64) -> usize {
+    // Same hard-error policy as binop_popcount: a length mismatch is a
+    // dimension bug at the call site, never a truncation.
+    assert_eq!(
+        a.len(),
+        b.len(),
+        "bitvec word-length mismatch: {} vs {} words — operands come from different dimensions",
+        a.len(),
+        b.len()
+    );
+    let n = a.len();
+    let mut c0 = 0u64;
+    let mut c1 = 0u64;
+    let mut c2 = 0u64;
+    let mut c3 = 0u64;
+    let mut c4 = 0u64;
+    let mut c5 = 0u64;
+    let mut c6 = 0u64;
+    let mut c7 = 0u64;
+    let mut i = 0;
+    while i + 8 <= n {
+        c0 += op(a[i], b[i]).count_ones() as u64;
+        c1 += op(a[i + 1], b[i + 1]).count_ones() as u64;
+        c2 += op(a[i + 2], b[i + 2]).count_ones() as u64;
+        c3 += op(a[i + 3], b[i + 3]).count_ones() as u64;
+        c4 += op(a[i + 4], b[i + 4]).count_ones() as u64;
+        c5 += op(a[i + 5], b[i + 5]).count_ones() as u64;
+        c6 += op(a[i + 6], b[i + 6]).count_ones() as u64;
+        c7 += op(a[i + 7], b[i + 7]).count_ones() as u64;
+        i += 8;
+    }
+    let mut total = (c0 + c1 + c2 + c3) + (c4 + c5 + c6 + c7);
     while i < n {
         total += op(a[i], b[i]).count_ones() as u64;
         i += 1;
@@ -349,6 +407,35 @@ mod tests {
         assert_eq!(and_count_words(a.words(), b.words()), a.and_count(&b));
         assert_eq!(xor_count_words(a.words(), b.words()), a.xor_count(&b));
         assert_eq!(or_count_words(a.words(), b.words()), a.or_count(&b));
+    }
+
+    #[test]
+    fn unrolled8_kernels_match_scalar_exactly() {
+        // Word counts straddling every 8-way unroll boundary, including
+        // the ragged tails (1..7 trailing words) and the empty slice.
+        let mut rng = Xoshiro256::new(11);
+        for bits in [1usize, 63, 64, 65, 7 * 64, 8 * 64, 9 * 64, 511, 513, 1000, 1024] {
+            let a = random_bitvec(&mut rng, bits, 0.4);
+            let b = random_bitvec(&mut rng, bits, 0.4);
+            assert_eq!(
+                and_count_words8(a.words(), b.words()),
+                and_count_words(a.words(), b.words()),
+                "bits={bits}"
+            );
+            assert_eq!(
+                xor_count_words8(a.words(), b.words()),
+                xor_count_words(a.words(), b.words()),
+                "bits={bits}"
+            );
+        }
+        assert_eq!(and_count_words8(&[], &[]), 0);
+        assert_eq!(xor_count_words8(&[], &[]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "word-length mismatch")]
+    fn and_count8_rejects_mismatched_dims() {
+        let _ = and_count_words8(&[0u64; 2], &[0u64; 3]);
     }
 
     #[test]

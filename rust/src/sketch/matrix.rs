@@ -13,7 +13,7 @@
 //! Cham estimator needs `|ṽ|` for every candidate, and recomputing it per
 //! query per candidate would double the popcount work of a scan.
 
-use super::bitvec::{popcount_words, BitVec};
+use super::bitvec::{and_count_words8, popcount_words, xor_count_words8, BitVec};
 
 /// Row-major arena of fixed-width packed bit rows with cached row weights.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -161,6 +161,102 @@ impl SketchMatrix {
     pub fn memory_bytes(&self) -> usize {
         self.words.len() * 8 + self.weights.len() * 4
     }
+
+    /// Rows per scoring tile such that one tile of this arena's rows stays
+    /// within ~32 KiB (comfortably inside L1 alongside the query block).
+    /// Always ≥ 8 so tiny rows still amortise the per-tile bookkeeping,
+    /// and capped at 512 so the per-tile count buffer stays small.
+    #[inline]
+    pub fn tile_rows(&self) -> usize {
+        const TILE_BYTES: usize = 32 * 1024;
+        (TILE_BYTES / (self.words_per_row * 8).max(1)).clamp(8, 512)
+    }
+
+    /// Blocked multi-query scoring: `|q ∧ row|` for every query in
+    /// `queries` against every arena row in `[row_start, row_end)`,
+    /// written to `out[qi * tile_len + i]` where `i` indexes rows within
+    /// the tile and `tile_len = row_end - row_start`.
+    ///
+    /// Row-major over the tile with the queries replayed per row: each row
+    /// is pulled into cache once and scored against all Q queries (the
+    /// 8-way unrolled kernel keeps the popcnt chains busy), instead of Q
+    /// independent passes each streaming the whole arena. Bit-for-bit
+    /// identical to calling [`crate::sketch::bitvec::and_count_words`] per
+    /// (query, row) pair — integer popcounts, no reassociation concerns.
+    ///
+    /// Panics if any query's word length differs from this arena's row
+    /// width, or if `out` is not exactly `queries.len() * tile_len`.
+    pub fn tile_and_counts(
+        &self,
+        queries: &[&[u64]],
+        row_start: usize,
+        row_end: usize,
+        out: &mut [usize],
+    ) {
+        self.tile_counts(queries, row_start, row_end, out, and_count_words8)
+    }
+
+    /// Blocked multi-query Hamming kernel: as [`SketchMatrix::tile_and_counts`]
+    /// but computing `|q ⊕ row|` — the raw Hamming-distance counterpart,
+    /// identical to the scalar [`crate::sketch::bitvec::xor_count_words`].
+    pub fn tile_xor_counts(
+        &self,
+        queries: &[&[u64]],
+        row_start: usize,
+        row_end: usize,
+        out: &mut [usize],
+    ) {
+        self.tile_counts(queries, row_start, row_end, out, xor_count_words8)
+    }
+
+    #[inline]
+    fn tile_counts(
+        &self,
+        queries: &[&[u64]],
+        row_start: usize,
+        row_end: usize,
+        out: &mut [usize],
+        kernel: fn(&[u64], &[u64]) -> usize,
+    ) {
+        assert!(
+            row_start <= row_end && row_end <= self.len(),
+            "tile [{row_start}, {row_end}) out of bounds for {} rows",
+            self.len()
+        );
+        let tile_len = row_end - row_start;
+        assert_eq!(
+            out.len(),
+            queries.len() * tile_len,
+            "count buffer holds {} slots, tile needs {} queries x {} rows",
+            out.len(),
+            queries.len(),
+            tile_len
+        );
+        for i in 0..tile_len {
+            let row = self.row(row_start + i);
+            for (qi, q) in queries.iter().enumerate() {
+                out[qi * tile_len + i] = kernel(q, row);
+            }
+        }
+    }
+
+    /// Gathered single-query scoring: `|q ∧ row|` for each (possibly
+    /// non-contiguous) arena row in `rows` — the indexed-rerank shape,
+    /// sharing the same unrolled kernel as the contiguous tiles so the
+    /// rerank and full-scan paths cannot drift. Panics if `out` is not
+    /// exactly `rows.len()`.
+    pub fn gather_and_counts(&self, query: &[u64], rows: &[u32], out: &mut [usize]) {
+        assert_eq!(
+            out.len(),
+            rows.len(),
+            "count buffer holds {} slots for {} gathered rows",
+            out.len(),
+            rows.len()
+        );
+        for (slot, &r) in out.iter_mut().zip(rows) {
+            *slot = and_count_words8(query, self.row(r as usize));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -282,6 +378,76 @@ mod tests {
     fn push_rejects_wrong_dimension() {
         let mut m = SketchMatrix::new(128);
         m.push(&BitVec::zeros(64));
+    }
+
+    #[test]
+    fn tile_kernels_match_scalar_pairwise() {
+        use crate::sketch::bitvec::{and_count_words, xor_count_words};
+        let mut rng = Xoshiro256::new(10);
+        let d = 130; // ragged tail word
+        let sketches: Vec<BitVec> = (0..23).map(|_| sk(&mut rng, d, 30)).collect();
+        let m = SketchMatrix::from_sketches(&sketches);
+        let queries: Vec<BitVec> = (0..5).map(|_| sk(&mut rng, d, 25)).collect();
+        let qwords: Vec<&[u64]> = queries.iter().map(|q| q.words()).collect();
+        // ragged final tile: 23 rows in tiles of 10
+        for start in (0..m.len()).step_by(10) {
+            let end = (start + 10).min(m.len());
+            let n = end - start;
+            let mut and_out = vec![0usize; qwords.len() * n];
+            let mut xor_out = vec![0usize; qwords.len() * n];
+            m.tile_and_counts(&qwords, start, end, &mut and_out);
+            m.tile_xor_counts(&qwords, start, end, &mut xor_out);
+            for (qi, q) in queries.iter().enumerate() {
+                for i in 0..n {
+                    assert_eq!(
+                        and_out[qi * n + i],
+                        and_count_words(q.words(), m.row(start + i)),
+                        "and q{qi} row{}",
+                        start + i
+                    );
+                    assert_eq!(
+                        xor_out[qi * n + i],
+                        xor_count_words(q.words(), m.row(start + i)),
+                        "xor q{qi} row{}",
+                        start + i
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_counts_match_scalar() {
+        use crate::sketch::bitvec::and_count_words;
+        let mut rng = Xoshiro256::new(11);
+        let d = 200;
+        let sketches: Vec<BitVec> = (0..12).map(|_| sk(&mut rng, d, 40)).collect();
+        let m = SketchMatrix::from_sketches(&sketches);
+        let q = sk(&mut rng, d, 35);
+        let rows: Vec<u32> = vec![7, 0, 11, 3, 3];
+        let mut out = vec![0usize; rows.len()];
+        m.gather_and_counts(q.words(), &rows, &mut out);
+        for (i, &r) in rows.iter().enumerate() {
+            assert_eq!(out[i], and_count_words(q.words(), m.row(r as usize)));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "count buffer")]
+    fn tile_counts_rejects_wrong_buffer_size() {
+        let m = SketchMatrix::from_sketches(&[BitVec::zeros(64), BitVec::zeros(64)]);
+        let q = BitVec::zeros(64);
+        let mut out = vec![0usize; 1]; // needs 2
+        m.tile_and_counts(&[q.words()], 0, 2, &mut out);
+    }
+
+    #[test]
+    fn tile_rows_is_bounded() {
+        // tiny rows: capped at 512; huge rows: floored at 8
+        assert_eq!(SketchMatrix::new(64).tile_rows(), 512);
+        assert_eq!(SketchMatrix::new(1 << 20).tile_rows(), 8);
+        // 1024-bit rows = 128 B → 256 rows per 32 KiB tile
+        assert_eq!(SketchMatrix::new(1024).tile_rows(), 256);
     }
 
     #[test]

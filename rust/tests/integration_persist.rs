@@ -10,10 +10,10 @@
 use cabin::coordinator::client::Client;
 use cabin::coordinator::router::{self, QueryOpts};
 use cabin::coordinator::store::ShardedStore;
-use cabin::coordinator::{Coordinator, CoordinatorConfig};
+use cabin::coordinator::{Coordinator, CoordinatorConfig, ExecutorConfig};
 use cabin::index::{IndexConfig, IndexMode};
 use cabin::persist::manifest::wal_path;
-use cabin::persist::{FsyncPolicy, PersistConfig, PersistCounters, PersistMode};
+use cabin::persist::{Fingerprint, FsyncPolicy, PersistConfig, PersistCounters, PersistMode};
 use cabin::sketch::{BitVec, SketchMatrix};
 use cabin::testing::TempDir;
 use cabin::util::rng::Xoshiro256;
@@ -31,6 +31,20 @@ fn persist_cfg(dir: &TempDir, mode: PersistMode, snapshot_every: u64) -> Persist
         data_dir: Some(dir.path().to_path_buf()),
         fsync: FsyncPolicy::Never,
         snapshot_every,
+        // synchronous commits: these tests pin the per-batch commit path
+        // (the group-commit window is exercised by the wire test below
+        // and the store/persist unit tests)
+        commit_window_us: 0,
+    }
+}
+
+fn fingerprint(num_shards: usize) -> Fingerprint {
+    Fingerprint {
+        sketch_dim: DIM,
+        seed: 21,
+        num_shards,
+        input_dim: 2048,
+        num_categories: 32,
     }
 }
 
@@ -48,12 +62,11 @@ fn open(
     index: &IndexConfig,
 ) -> ShardedStore {
     let (store, _) = ShardedStore::open_durable(
-        3,
-        DIM,
+        fingerprint(3),
         index,
-        21,
         &persist_cfg(dir, mode, snapshot_every),
         Arc::new(PersistCounters::default()),
+        &ExecutorConfig::default(),
     )
     .unwrap();
     store
@@ -165,12 +178,11 @@ fn truncated_wal_tail_drops_only_the_partial_record() {
     // single shard so the whole corpus shares one WAL file
     let open_one_shard = || {
         ShardedStore::open_durable(
-            1,
-            DIM,
+            fingerprint(1),
             &IndexConfig::default(),
-            21,
             &persist_cfg(&dir, PersistMode::Wal, 0),
             Arc::new(PersistCounters::default()),
+            &ExecutorConfig::default(),
         )
         .unwrap()
     };
@@ -228,8 +240,11 @@ fn wire_level_restart_serves_the_recovered_corpus() {
         persist: PersistConfig {
             mode: PersistMode::WalSnapshot,
             data_dir: Some(dir.path().to_path_buf()),
-            fsync: FsyncPolicy::Never,
+            // fsync=always + a window: exercise the group-commit ack path
+            // over the wire (group commit only engages under `always`)
+            fsync: FsyncPolicy::Always,
             snapshot_every: 0,
+            commit_window_us: 1_000,
         },
         ..Default::default()
     };

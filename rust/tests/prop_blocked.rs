@@ -1,0 +1,129 @@
+//! Property tests for the blocked batch-scoring kernels: on random Q×N
+//! tiles — including ragged tail tiles and ragged tail words — the
+//! blocked multi-query kernels must be *bit-for-bit* identical to the
+//! scalar `and_count_words`/`xor_count_words` path, and the routed top-k
+//! built on them must equal a scalar per-query reference scan exactly
+//! (same ids, same bitwise distances, same tie order).
+
+use cabin::coordinator::router;
+use cabin::coordinator::store::ShardedStore;
+use cabin::coordinator::TopK;
+use cabin::sketch::bitvec::{and_count_words, xor_count_words};
+use cabin::sketch::cham::binhamming_from_stats;
+use cabin::sketch::{BitVec, SketchMatrix};
+use cabin::util::rng::Xoshiro256;
+
+fn random_sketch(rng: &mut Xoshiro256, d: usize, ones: usize) -> BitVec {
+    BitVec::from_indices(d, rng.sample_indices(d, ones.min(d)))
+}
+
+#[test]
+fn tile_kernels_equal_scalar_on_random_shapes() {
+    let mut rng = Xoshiro256::new(404);
+    // dimensions exercising every unroll tail: sub-word, word-aligned,
+    // 8-word-aligned, and ragged beyond both boundaries
+    for &d in &[40usize, 64, 65, 448, 512, 520, 1000] {
+        for &n in &[1usize, 7, 33, 64, 97] {
+            for &q in &[1usize, 2, 5] {
+                let rows: Vec<BitVec> =
+                    (0..n).map(|_| random_sketch(&mut rng, d, d / 6 + 1)).collect();
+                let m = SketchMatrix::from_sketches(&rows);
+                let queries: Vec<BitVec> =
+                    (0..q).map(|_| random_sketch(&mut rng, d, d / 5 + 1)).collect();
+                let qwords: Vec<&[u64]> = queries.iter().map(|x| x.words()).collect();
+                // tile size straddling the row count → ragged tail tile
+                let tile = (n / 2 + 1).max(1);
+                let mut start = 0;
+                while start < n {
+                    let end = (start + tile).min(n);
+                    let len = end - start;
+                    let mut and_out = vec![0usize; q * len];
+                    let mut xor_out = vec![0usize; q * len];
+                    m.tile_and_counts(&qwords, start, end, &mut and_out);
+                    m.tile_xor_counts(&qwords, start, end, &mut xor_out);
+                    for (qi, query) in queries.iter().enumerate() {
+                        for i in 0..len {
+                            let scalar_and = and_count_words(query.words(), m.row(start + i));
+                            let scalar_xor = xor_count_words(query.words(), m.row(start + i));
+                            assert_eq!(
+                                and_out[qi * len + i],
+                                scalar_and,
+                                "and d={d} n={n} q={qi} row={}",
+                                start + i
+                            );
+                            assert_eq!(
+                                xor_out[qi * len + i],
+                                scalar_xor,
+                                "xor d={d} n={n} q={qi} row={}",
+                                start + i
+                            );
+                        }
+                    }
+                    start = end;
+                }
+                // gathered (indexed-rerank) form: a scrambled row subset
+                let gathered: Vec<u32> =
+                    (0..n as u32).rev().filter(|r| r % 3 != 1).collect();
+                let mut out = vec![0usize; gathered.len()];
+                for query in &queries {
+                    m.gather_and_counts(query.words(), &gathered, &mut out);
+                    for (i, &r) in gathered.iter().enumerate() {
+                        assert_eq!(
+                            out[i],
+                            and_count_words(query.words(), m.row(r as usize)),
+                            "gather d={d} n={n} row={r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scalar per-query reference: the exact arithmetic of the pre-blocking
+/// router scan, offered in the same row order per shard.
+fn reference_topk_batch(
+    store: &ShardedStore,
+    queries: &[BitVec],
+    k: usize,
+) -> Vec<Vec<cabin::coordinator::protocol::Hit>> {
+    let d = store.sketch_dim();
+    queries
+        .iter()
+        .map(|query| {
+            let wq = query.count_ones() as f64;
+            let partials = store.par_map_shards(|shard| {
+                let mut best = TopK::new(k);
+                for row in 0..shard.ids.len() {
+                    let ip = and_count_words(query.words(), shard.rows.row(row)) as f64;
+                    let dist =
+                        2.0 * binhamming_from_stats(wq, shard.rows.weight(row) as f64, ip, d);
+                    best.offer(shard.ids[row], dist);
+                }
+                best.into_sorted_hits()
+            });
+            let mut merged: Vec<_> = partials.into_iter().flatten().collect();
+            merged.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id)));
+            merged.dedup_by(|a, b| a.id == b.id);
+            merged.truncate(k);
+            merged
+        })
+        .collect()
+}
+
+#[test]
+fn routed_blocked_topk_equals_scalar_reference() {
+    let mut rng = Xoshiro256::new(405);
+    let d = 330; // ragged tail word; tile_rows ≫ per-shard rows is fine
+    let store = ShardedStore::new(3, d);
+    let pts: Vec<BitVec> = (0..87).map(|_| random_sketch(&mut rng, d, 60)).collect();
+    for chunk in pts.chunks(9) {
+        store.insert_batch(chunk.to_vec());
+    }
+    let queries: Vec<BitVec> = (0..11).map(|_| random_sketch(&mut rng, d, 55)).collect();
+    for k in [1usize, 4, 87, 200] {
+        let blocked = router::topk_batch(&store, &queries, k);
+        let reference = reference_topk_batch(&store, &queries, k);
+        assert_eq!(blocked, reference, "k={k}");
+    }
+}

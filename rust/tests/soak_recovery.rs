@@ -27,7 +27,7 @@ struct ServerProc {
 }
 
 impl ServerProc {
-    fn spawn(data_dir: &std::path::Path) -> ServerProc {
+    fn spawn(data_dir: &std::path::Path, extra_args: &[&str]) -> ServerProc {
         let mut child = Command::new(env!("CARGO_BIN_EXE_cabin"))
             .args([
                 "serve",
@@ -48,8 +48,9 @@ impl ServerProc {
                 "1",
                 "--fsync",
                 "always",
-                "--data-dir",
             ])
+            .args(extra_args)
+            .arg("--data-dir")
             .arg(data_dir)
             .stdout(Stdio::piped())
             .stderr(Stdio::null())
@@ -86,17 +87,19 @@ impl Drop for ServerProc {
     }
 }
 
-#[test]
-fn kill9_mid_ingest_then_restart_recovers_every_acked_insert() {
-    let soak = std::env::var("CABIN_SOAK").ok().as_deref() == Some("1");
-    let (rounds, per_round) = if soak { (4, 120) } else { (1, 40) };
-    let dir = TempDir::new("soak-recovery");
+/// The durability contract, per commit mode: `window_us(round)` selects
+/// the `--commit-window-us` each server life runs with, so the soak covers
+/// both the synchronous per-batch commit path and group commit (where the
+/// ack waits for the window's coalesced fsync — an acked insert must
+/// survive `kill -9` identically in both).
+fn soak_rounds(dir: &TempDir, rounds: usize, per_round: usize, window_us: &dyn Fn(usize) -> u64) {
     let mut rng = Xoshiro256::new(99);
     // (id, vector) pairs whose insert was acknowledged before a kill
     let mut acked: Vec<(usize, CatVector)> = Vec::new();
 
     for round in 0..rounds {
-        let mut server = ServerProc::spawn(dir.path());
+        let window = window_us(round).to_string();
+        let mut server = ServerProc::spawn(dir.path(), &["--commit-window-us", window.as_str()]);
         let mut c = Client::connect(&server.addr).expect("connect");
         // every previously-acked insert must already be back
         for (id, v) in &acked {
@@ -120,7 +123,9 @@ fn kill9_mid_ingest_then_restart_recovers_every_acked_insert() {
     }
 
     // final life: everything ever acknowledged is present and exact
-    let mut server = ServerProc::spawn(dir.path());
+    let final_window = window_us(rounds).to_string();
+    let mut server =
+        ServerProc::spawn(dir.path(), &["--commit-window-us", final_window.as_str()]);
     let mut c = Client::connect(&server.addr).expect("connect final");
     assert_eq!(acked.len(), rounds * per_round);
     for (id, v) in &acked {
@@ -130,6 +135,35 @@ fn kill9_mid_ingest_then_restart_recovers_every_acked_insert() {
         assert_eq!(c.distance(*id, *id).unwrap(), 0.0);
     }
     assert_eq!(c.stat("persist_cfg_mode").unwrap(), 2.0);
+    assert_eq!(
+        c.stat("persist_cfg_commit_window_us").unwrap(),
+        window_us(rounds) as f64
+    );
     let _ = c.shutdown();
     let _ = server.child.wait();
+}
+
+#[test]
+fn kill9_mid_ingest_then_restart_recovers_every_acked_insert() {
+    let soak = std::env::var("CABIN_SOAK").ok().as_deref() == Some("1");
+    let (rounds, per_round) = if soak { (4, 120) } else { (1, 40) };
+    let dir = TempDir::new("soak-recovery");
+    // synchronous per-batch commits: the pre-group-commit contract
+    soak_rounds(&dir, rounds, per_round, &|_round| 0);
+}
+
+#[test]
+fn kill9_with_group_commit_recovers_every_acked_insert() {
+    let soak = std::env::var("CABIN_SOAK").ok().as_deref() == Some("1");
+    let (rounds, per_round) = if soak { (4, 120) } else { (1, 40) };
+    let dir = TempDir::new("soak-recovery-group");
+    // alternate window sizes across lives: the recovered corpus must be
+    // indifferent to the commit mode that wrote (or re-reads) it
+    soak_rounds(&dir, rounds, per_round, &|round| {
+        if round % 2 == 0 {
+            2_000
+        } else {
+            500
+        }
+    });
 }

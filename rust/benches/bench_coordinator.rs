@@ -32,6 +32,7 @@ fn make_coordinator(max_batch: usize, delay_ms: u64, shards: usize) -> Coordinat
         },
         // in-memory: persistence overhead is measured in bench_persist
         persist: Default::default(),
+        ..Default::default()
     })
 }
 

@@ -52,6 +52,7 @@ fn durable_cfg(dir: &TempDir, mode: PersistMode, fsync: FsyncPolicy, every: u64)
         // per-batch commits by default: the group-commit lanes set their
         // own window explicitly so the two policies are benched apart
         commit_window_us: 0,
+        wal_max_bytes: 0,
     }
 }
 

@@ -1,0 +1,161 @@
+//! Replication benchmarks: what a follower costs and what a replica buys.
+//!
+//! * **Catch-up lag** — wall time for a fresh follower to bootstrap from
+//!   a live primary and reach per-shard seq parity, from a pure WAL
+//!   (generation 0: every frame ships) and from a snapshot (one arena
+//!   transfer + an empty tail) — the two ends of the
+//!   `--wal-max-bytes`/`snapshot_every` trade-off a follower fleet cares
+//!   about.
+//! * **Replica serving** — `query_batch` throughput answered entirely by
+//!   the replica's own store + LSH indexes (the read fan-out the
+//!   subsystem exists to provide).
+//!
+//! Fast mode (`CABIN_BENCH_FAST=1`, the CI lane) runs a 10k-row corpus;
+//! the full run uses 100k.
+
+use cabin::bench::{black_box, Bench};
+use cabin::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+use cabin::data::CatVector;
+use cabin::persist::{FsyncPolicy, PersistConfig, PersistMode};
+use cabin::sketch::BitVec;
+use cabin::testing::TempDir;
+use cabin::util::rng::Xoshiro256;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+const INPUT_DIM: usize = 512;
+const CATS: u16 = 8;
+const SKETCH_DIM: usize = 256;
+const SHARDS: usize = 4;
+const Q: usize = 64;
+
+fn config(dir: &TempDir) -> CoordinatorConfig {
+    CoordinatorConfig {
+        input_dim: INPUT_DIM,
+        num_categories: CATS,
+        sketch_dim: SKETCH_DIM,
+        seed: 9,
+        num_shards: SHARDS,
+        use_xla: false,
+        persist: PersistConfig {
+            mode: PersistMode::WalSnapshot,
+            data_dir: Some(dir.path().to_path_buf()),
+            fsync: FsyncPolicy::Never,
+            snapshot_every: 0, // rotations only where the bench forces them
+            commit_window_us: 0,
+            wal_max_bytes: 0,
+        },
+        ..Default::default()
+    }
+}
+
+fn serve(config: CoordinatorConfig) -> (SocketAddr, Arc<Coordinator>) {
+    let coordinator = Arc::new(Coordinator::try_new(config).unwrap());
+    let (tx, rx) = std::sync::mpsc::sync_channel(1);
+    let server = Arc::clone(&coordinator);
+    // detached on purpose: the bench process exit tears the server down
+    let _ = std::thread::spawn(move || {
+        server
+            .serve("127.0.0.1:0", |addr| {
+                let _ = tx.send(addr);
+            })
+            .unwrap();
+    });
+    (rx.recv().unwrap(), coordinator)
+}
+
+/// Block until the follower's durable seqs match `target` on every shard.
+fn await_parity(follower: &Coordinator, target: &[u64]) {
+    let p = follower.store.persistence().unwrap();
+    loop {
+        if (0..SHARDS).all(|si| p.committed_seq(si) >= target[si]) {
+            return;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+/// One full follower life: bootstrap + catch up to `target`, then drop.
+fn follower_catchup(primary: SocketAddr, target: &[u64]) {
+    let dir = TempDir::new("bench-repl-follower");
+    let follower = Coordinator::try_new(CoordinatorConfig {
+        replicate_from: Some(primary.to_string()),
+        repl_poll_ms: 1,
+        ..config(&dir)
+    })
+    .unwrap();
+    await_parity(&follower, target);
+}
+
+fn main() {
+    let fast = std::env::var("CABIN_BENCH_FAST").ok().as_deref() == Some("1");
+    let n: usize = if fast { 10_000 } else { 100_000 };
+    let mut b = Bench::from_env("repl");
+
+    let p_dir = TempDir::new("bench-repl-primary");
+    let (addr, primary) = serve(config(&p_dir));
+    // bulk-ingest through the store (the WAL sees the same frames the
+    // wire path would write; the bench measures shipping, not sketching)
+    let mut rng = Xoshiro256::new(5);
+    let mut batch = Vec::with_capacity(512);
+    for _ in 0..n {
+        batch.push(BitVec::from_indices(
+            SKETCH_DIM,
+            rng.sample_indices(SKETCH_DIM, 32),
+        ));
+        if batch.len() == 512 {
+            primary.store.insert_batch(std::mem::take(&mut batch));
+        }
+    }
+    if !batch.is_empty() {
+        primary.store.insert_batch(batch);
+    }
+    let p = primary.store.persistence().unwrap();
+    let target: Vec<u64> = (0..SHARDS).map(|si| p.committed_seq(si)).collect();
+    assert_eq!(target.iter().sum::<u64>(), n as u64);
+
+    // generation 0: the whole corpus ships as WAL frames
+    b.bench_with_throughput(&format!("catchup_wal/{n}"), Some(n as f64), || {
+        follower_catchup(addr, &target);
+    });
+
+    // after a rotation the same corpus ships as one snapshot payload
+    primary.store.persist_snapshot().unwrap();
+    b.bench_with_throughput(&format!("catchup_snapshot/{n}"), Some(n as f64), || {
+        follower_catchup(addr, &target);
+    });
+
+    // replica serving: a caught-up follower answers batched top-k alone
+    let f_dir = TempDir::new("bench-repl-serving");
+    let follower = Coordinator::try_new(CoordinatorConfig {
+        replicate_from: Some(addr.to_string()),
+        repl_poll_ms: 1,
+        ..config(&f_dir)
+    })
+    .unwrap();
+    await_parity(&follower, &target);
+    let mut rng = Xoshiro256::new(6);
+    let queries: Vec<CatVector> = (0..Q)
+        .map(|_| CatVector::random(INPUT_DIM, 40, CATS, &mut rng))
+        .collect();
+    b.bench_with_throughput(
+        &format!("replica_query_batch/{n}/Q{Q}"),
+        Some(Q as f64),
+        || {
+            let resp = follower.handle_request(Request::QueryBatch {
+                vecs: queries.clone(),
+                k: 10,
+            });
+            match resp {
+                Response::HitsBatch { results } => {
+                    assert_eq!(results.len(), Q);
+                    black_box(&results);
+                }
+                other => panic!("{other:?}"),
+            }
+        },
+    );
+
+    b.finish();
+}

@@ -6,12 +6,26 @@
 //! The queue is bounded (`queue_cap`); submitters block when it is full —
 //! backpressure propagates to the TCP layer.
 //!
+//! Ack-wait pipelining: a flushed batch is *placed*
+//! ([`crate::coordinator::store::ShardedStore::begin_insert_batch`]) on
+//! the batcher thread, but its durability wait — the group-commit window
+//! flush under `--fsync always` — and the client replies are handed to a
+//! dedicated completion thread as an `(items, ids, ticket)` job. The
+//! batcher thread therefore sketches batch N+1 while batch N's fsync
+//! window is in flight, so a single client's insert stream can saturate a
+//! commit window instead of serialising on it. The completion channel is
+//! FIFO and the completion thread settles jobs in order, so replies keep
+//! batch order (and with it per-client insert order); it is also bounded,
+//! so a stalled disk backpressures the batcher rather than queueing
+//! unacked batches without limit. A WAL commit failure still reaches
+//! every waiter of exactly the failed batch as an insert error.
+//!
 //! The backend is pluggable: the XLA engine (fixed-batch AOT artifact,
 //! padded) when the corpus configuration matches the artifacts, else the
 //! native fused sketcher.
 
 use super::metrics::Metrics;
-use super::store::ShardedStore;
+use super::store::{InsertTicket, ShardedStore};
 use crate::data::CatVector;
 use crate::runtime::XlaHandle;
 use crate::sketch::{BitVec, CabinSketcher};
@@ -19,6 +33,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// How many placed-but-unacked batches may wait on the completion thread
+/// before the batcher blocks (a stalled disk must backpressure ingest,
+/// not queue unacked work without bound).
+const ACK_PIPELINE_DEPTH: usize = 64;
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
@@ -127,11 +146,20 @@ impl BatchSubmitter {
     }
 }
 
+/// A placed batch awaiting its durability wait + client replies, handed
+/// from the batcher thread to the completion thread.
+struct AckJob {
+    items: Vec<Pending>,
+    ids: Vec<usize>,
+    ticket: InsertTicket,
+}
+
 /// The batcher worker. Owns the backend and writes into the store.
 pub struct Batcher {
     pub submitter: BatchSubmitter,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
+    ack_handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Batcher {
@@ -142,22 +170,35 @@ impl Batcher {
         metrics: Arc<Metrics>,
     ) -> Batcher {
         let (tx, rx) = sync_channel::<Pending>(config.queue_cap);
+        let (ack_tx, ack_rx) = sync_channel::<AckJob>(ACK_PIPELINE_DEPTH);
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let ack_store = store.clone();
+        let ack_metrics = metrics.clone();
+        let ack_handle = std::thread::Builder::new()
+            .name("cabin-batcher-ack".into())
+            .spawn(move || ack_loop(ack_store, ack_metrics, ack_rx))
+            .expect("spawn batcher ack thread");
         let handle = std::thread::Builder::new()
             .name("cabin-batcher".into())
-            .spawn(move || run_loop(config, backend, store, metrics, rx, stop2))
+            .spawn(move || run_loop(config, backend, store, metrics, rx, ack_tx, stop2))
             .expect("spawn batcher");
         Batcher {
             submitter: BatchSubmitter { tx },
             stop,
             handle: Some(handle),
+            ack_handle: Some(ack_handle),
         }
     }
 
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        // run_loop drains + flushes, then drops its ack sender; the ack
+        // loop settles every queued job and exits — no reply is lost
         if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.ack_handle.take() {
             let _ = h.join();
         }
     }
@@ -175,12 +216,13 @@ fn run_loop(
     store: Arc<ShardedStore>,
     metrics: Arc<Metrics>,
     rx: Receiver<Pending>,
+    ack_tx: SyncSender<AckJob>,
     stop: Arc<AtomicBool>,
 ) {
     let mut pending: Vec<Pending> = Vec::with_capacity(config.max_batch);
     loop {
         if stop.load(Ordering::SeqCst) {
-            flush(&backend, &store, &metrics, &mut pending);
+            flush(&backend, &store, &metrics, &mut pending, &ack_tx);
             return;
         }
         // Wait for the first item (with timeout so we notice stop).
@@ -189,7 +231,7 @@ fn run_loop(
                 Ok(p) => pending.push(p),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    flush(&backend, &store, &metrics, &mut pending);
+                    flush(&backend, &store, &metrics, &mut pending, &ack_tx);
                     return;
                 }
             }
@@ -207,15 +249,21 @@ fn run_loop(
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        flush(&backend, &store, &metrics, &mut pending);
+        flush(&backend, &store, &metrics, &mut pending, &ack_tx);
     }
 }
 
+/// Sketch + place the accumulated batch, then hand the durability wait
+/// and the replies to the completion thread. Replies stay in batch order
+/// (the channel is FIFO and [`ack_loop`] settles jobs in order), and the
+/// batcher is free to sketch the next batch while this one's commit
+/// window is still in flight.
 fn flush(
     backend: &SketchBackend,
     store: &ShardedStore,
     metrics: &Metrics,
     pending: &mut Vec<Pending>,
+    ack_tx: &SyncSender<AckJob>,
 ) {
     if pending.is_empty() {
         return;
@@ -226,19 +274,46 @@ fn flush(
     metrics
         .batch_items
         .fetch_add(pending.len() as u64, Ordering::Relaxed);
-    // Durability gate: a WAL commit failure must surface on every ack of
-    // this batch (the rows may be scannable in memory, but telling the
-    // client "inserted" would promise crash-durability that was not met).
-    match store.try_insert_batch(sketches) {
-        Ok(ids) => {
-            for (p, id) in pending.drain(..).zip(ids) {
+    let (ids, ticket) = store.begin_insert_batch(sketches);
+    let job = AckJob {
+        items: std::mem::take(pending),
+        ids,
+        ticket,
+    };
+    if let Err(std::sync::mpsc::SendError(job)) = ack_tx.send(job) {
+        // completion thread gone (shutdown race): settle inline so no
+        // submitter is left waiting forever
+        settle(store, metrics, job);
+    }
+}
+
+/// The completion thread: settles each placed batch's durability ticket
+/// and releases its replies, in FIFO batch order.
+fn ack_loop(store: Arc<ShardedStore>, metrics: Arc<Metrics>, rx: Receiver<AckJob>) {
+    while let Ok(job) = rx.recv() {
+        settle(&store, &metrics, job);
+    }
+}
+
+/// Settle one batch: wait out its commit (window flush under group
+/// commit), then reply to every submitter. Durability gate: a WAL commit
+/// failure must surface on every ack of this batch — the rows may be
+/// scannable in memory, but telling the client "inserted" would promise
+/// crash-durability that was not met.
+fn settle(store: &ShardedStore, metrics: &Metrics, job: AckJob) {
+    match store.finish_insert_batch(job.ticket) {
+        Ok(()) => {
+            for (p, id) in job.items.into_iter().zip(job.ids) {
                 metrics.record_insert_latency(p.enqueued.elapsed().as_secs_f64());
                 let _ = p.reply.send(Ok(id));
             }
         }
         Err(e) => {
+            let e = e.context(
+                "insert placed in memory but its WAL commit failed — not acknowledged as durable",
+            );
             let msg = format!("{e:#}");
-            for p in pending.drain(..) {
+            for p in job.items {
                 let _ = p.reply.send(Err(msg.clone()));
             }
         }
@@ -319,6 +394,88 @@ mod tests {
         let stored = store.get(id).unwrap();
         assert_eq!(stored, sk.sketch(&v));
         b.shutdown();
+    }
+
+    #[test]
+    fn pipelined_acks_hold_under_a_group_commit_window() {
+        // durable store, fsync=always, long-ish window: batches are placed
+        // by the batcher thread and acked by the completion thread while
+        // later batches sketch — every ack must still arrive, carry a
+        // unique id, and be crash-recoverable
+        use crate::coordinator::ExecutorConfig;
+        use crate::index::IndexConfig;
+        use crate::persist::{
+            Fingerprint, FsyncPolicy, PersistConfig, PersistCounters, PersistMode,
+        };
+        use crate::testing::TempDir;
+        let dir = TempDir::new("batcher-pipeline");
+        let fp = Fingerprint {
+            sketch_dim: 128,
+            seed: 7,
+            num_shards: 2,
+            input_dim: 500,
+            num_categories: 8,
+        };
+        let cfg = PersistConfig {
+            mode: PersistMode::Wal,
+            data_dir: Some(dir.path().to_path_buf()),
+            fsync: FsyncPolicy::Always,
+            snapshot_every: 0,
+            commit_window_us: 2_000,
+            wal_max_bytes: 0,
+        };
+        let open = || {
+            let (store, _) = ShardedStore::open_durable(
+                fp,
+                &IndexConfig::default(),
+                &cfg,
+                Arc::new(PersistCounters::default()),
+                &ExecutorConfig::default(),
+            )
+            .unwrap();
+            Arc::new(store)
+        };
+        let store = open();
+        let metrics = Arc::new(Metrics::new());
+        let sk = CabinSketcher::from_config(SketchConfig::new(500, 8, 128, 7));
+        let mut b = Batcher::start(
+            BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+                queue_cap: 256,
+            },
+            SketchBackend::Native(sk),
+            store.clone(),
+            metrics.clone(),
+        );
+        let mut ids = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..6u64)
+                .map(|t| {
+                    let sub = b.submitter.clone();
+                    s.spawn(move || {
+                        let mut rng = Xoshiro256::new(40 + t);
+                        (0..5)
+                            .map(|_| {
+                                sub.insert(CatVector::random(500, 20, 8, &mut rng)).unwrap()
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                ids.extend(h.join().unwrap());
+            }
+        });
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 30, "every insert must ack exactly once");
+        assert_eq!(store.len(), 30);
+        b.shutdown();
+        drop(store);
+        // acked ⇒ recoverable, through the pipelined window path too
+        let back = open();
+        assert_eq!(back.len(), 30);
     }
 
     #[test]

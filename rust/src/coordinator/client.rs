@@ -106,6 +106,18 @@ impl Client {
         }
     }
 
+    /// Promote a read-replica to writable (replicas only): stops its
+    /// puller and returns the per-shard applied WAL sequences at the
+    /// moment replication stopped. Idempotent — promoting an already
+    /// writable replica just reports its sequences again.
+    pub fn promote(&mut self) -> Result<Vec<u64>> {
+        match self.call(&Request::Promote)? {
+            Response::Promoted { applied_seqs } => Ok(applied_seqs),
+            Response::Error { message } => bail!("promote failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
     pub fn ping(&mut self) -> Result<()> {
         match self.call(&Request::Ping)? {
             Response::Pong => Ok(()),

@@ -1,6 +1,7 @@
 //! Service metrics: lock-free counters + mutex-guarded latency samples.
 
 use crate::persist::PersistCounters;
+use crate::replica::ReplCounters;
 use crate::util::timer::LatencyStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -68,6 +69,11 @@ pub struct Metrics {
     /// which is what actually updates it — the snapshot below surfaces the
     /// values as `persist_*` stats fields.
     pub persist: Arc<PersistCounters>,
+    /// Replication traffic (`repl_*` stats fields). Arc-shared with the
+    /// primary-side shipper and/or the follower's puller runtime —
+    /// whichever of the two this server runs (a promoted replica may have
+    /// been both).
+    pub repl: Arc<ReplCounters>,
     insert_latency: Mutex<LatencyStats>,
     query_latency: Mutex<LatencyStats>,
 }
@@ -187,6 +193,7 @@ impl Metrics {
                 self.persist.group_commits.load(Ordering::Relaxed) as f64,
             ),
         ];
+        out.extend(self.repl.stats_fields());
         let ins = self.insert_latency.lock().unwrap().summary();
         let q = self.query_latency.lock().unwrap().summary();
         out.push(("insert_p50_ms".into(), ins.p50 * 1e3));
@@ -274,6 +281,20 @@ mod tests {
         assert_eq!(stats_field(&snap, "persist_recovery_ms"), Some(57.0));
         assert_eq!(stats_field(&snap, "persist_generation"), Some(2.0));
         assert_eq!(stats_field(&snap, "persist_group_commits"), Some(5.0));
+    }
+
+    #[test]
+    fn repl_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.repl.frames_shipped.fetch_add(11, Ordering::Relaxed);
+        m.repl.frames_applied.fetch_add(4, Ordering::Relaxed);
+        m.repl.record_shard(0, 4, 7);
+        let snap = m.snapshot();
+        assert_eq!(stats_field(&snap, "repl_frames_shipped"), Some(11.0));
+        assert_eq!(stats_field(&snap, "repl_frames_applied"), Some(4.0));
+        assert_eq!(stats_field(&snap, "repl_applied_seq_shard0"), Some(4.0));
+        assert_eq!(stats_field(&snap, "repl_lag_shard0"), Some(7.0));
+        assert_eq!(stats_field(&snap, "repl_caught_up"), Some(0.0));
     }
 
     #[test]

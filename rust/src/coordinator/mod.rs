@@ -85,6 +85,31 @@
 //! a rotation) ops, `Shutdown` flushes before acknowledging, and
 //! `persist_*` counters ride along in `stats`.
 //!
+//! Replication layer ([`crate::replica`], `serve --replicate-from`):
+//! because every arena mutation is a WAL frame appended under its
+//! shard's lock, the log *is* the corpus — so read scale-out is log
+//! shipping. Frames carry implicit monotonic per-shard sequence numbers
+//! (position + the manifest-v3 per-shard `base_seqs`); a primary serves
+//! `repl_snapshot` (verbatim snapshot arenas + seq anchoring) and
+//! `repl_wal_tail{shard, from_seq}` (checksummed raw frame ranges) on
+//! the same TCP protocol, retaining each rotated-out WAL segment for one
+//! generation so followers can lag across a rotation. A follower
+//! bootstraps those files into its own data dir, recovers through the
+//! ordinary persistence path, applies the live tail continuously
+//! (mirroring the frames into its own WAL before advancing its cursor),
+//! serves single/batched queries bit-identically to the primary from its
+//! own arenas + LSH indexes, rejects `insert` with a redirect, and is
+//! flipped writable by the `promote` op — after which inserts continue
+//! the primary's id/sequence line. Catch-up is observable as
+//! `repl_*` stats (per-shard applied seq + lag, caught-up/diverged
+//! gauges) and comparable across nodes via `persist_next_seq_shard{i}`.
+//!
+//! Ingest pipelining: the batcher *places* a batch (rows + WAL frames +
+//! group-commit registration) and hands the fsync-window wait plus the
+//! client replies to a completion thread, so it sketches batch N+1 while
+//! batch N's window is in flight — replies stay in batch order and the
+//! "acked ⇒ survives kill -9" contract is untouched (see [`batcher`]).
+//!
 //! Robustness: `k == 0` and malformed batch elements are rejected at the
 //! protocol layer with error responses; the top-k kernel itself treats
 //! `k == 0` as "no hits" and orders distances with `f64::total_cmp`, so a
@@ -120,7 +145,9 @@ pub use protocol::{Request, Response};
 pub use server::{Coordinator, CoordinatorConfig};
 pub use topk::TopK;
 
-// The index and persistence knobs travel with the coordinator config;
-// re-export them so service users need only one import path.
+// The index, persistence and replication knobs travel with the
+// coordinator config; re-export them so service users need only one
+// import path.
 pub use crate::index::{IndexConfig, IndexMode};
 pub use crate::persist::{FsyncPolicy, PersistConfig, PersistMode};
+pub use crate::replica::{ReplCounters, ReplicaConfig};

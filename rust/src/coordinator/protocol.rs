@@ -13,12 +13,22 @@
 //! {"op":"stats"}                                → {"ok":true, counters…}
 //! {"op":"flush"}                                → {"ok":true,"flushed":true}       (fsync all WALs)
 //! {"op":"snapshot"}                             → {"ok":true,"snapshot_generation":3}
+//! {"op":"promote"}                              → {"ok":true,"promoted":true,
+//!                                                  "applied_seqs":["812","790"]}   (replicas only)
 //! {"op":"ping"} / {"op":"shutdown"}
 //! ```
 //!
 //! `flush` and `snapshot` require the server to run with persistence
 //! enabled (`--data-dir`); otherwise they answer with an error response.
-//! Errors: `{"ok":false,"error":"…"}`.
+//! `promote` requires a replica (`serve --replicate-from`): it stops the
+//! puller and flips the replica writable, returning the per-shard applied
+//! WAL sequences. Errors: `{"ok":false,"error":"…"}`.
+//!
+//! Two further ops — `repl_snapshot` and `repl_wal_tail` — belong to the
+//! replication sub-protocol: their replies are a JSON header line
+//! followed by *raw binary payload bytes*, which this enum cannot
+//! represent, so the server routes them before request parsing (see
+//! [`crate::replica::shipper`]).
 //!
 //! Validation happens here, before anything reaches the router: `k == 0`
 //! is rejected with an error response (the seed let it through and the
@@ -42,6 +52,9 @@ pub enum Request {
     Flush,
     /// Force a snapshot rotation now (durable servers only).
     Snapshot,
+    /// Flip a caught-up replica writable (replicas only): stop pulling
+    /// from the primary and start accepting inserts.
+    Promote,
     Ping,
     Shutdown,
 }
@@ -64,6 +77,9 @@ pub enum Response {
     Flushed,
     /// Snapshot rotation completed; the new live generation.
     Snapshotted { generation: u64 },
+    /// Replica promoted to writable; per-shard applied WAL sequences at
+    /// the moment the puller stopped.
+    Promoted { applied_seqs: Vec<u64> },
     Pong,
     ShuttingDown,
     Error { message: String },
@@ -170,6 +186,7 @@ impl Request {
             "stats" => Request::Stats,
             "flush" => Request::Flush,
             "snapshot" => Request::Snapshot,
+            "promote" => Request::Promote,
             "ping" => Request::Ping,
             "shutdown" => Request::Shutdown,
             other => bail!("unknown op '{other}'"),
@@ -243,6 +260,7 @@ impl Request {
             Request::Stats => r#"{"op":"stats"}"#.to_string(),
             Request::Flush => r#"{"op":"flush"}"#.to_string(),
             Request::Snapshot => r#"{"op":"snapshot"}"#.to_string(),
+            Request::Promote => r#"{"op":"promote"}"#.to_string(),
             Request::Ping => r#"{"op":"ping"}"#.to_string(),
             Request::Shutdown => r#"{"op":"shutdown"}"#.to_string(),
         }
@@ -318,6 +336,22 @@ impl Response {
                 ("snapshot_generation", Json::Num(*generation as f64)),
             ])
             .to_string(),
+            Response::Promoted { applied_seqs } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("promoted", Json::Bool(true)),
+                // strings: seqs are u64 and must roundtrip exactly
+                // through the f64-backed JSON model (like manifest seqs)
+                (
+                    "applied_seqs",
+                    Json::Arr(
+                        applied_seqs
+                            .iter()
+                            .map(|s| Json::Str(s.to_string()))
+                            .collect(),
+                    ),
+                ),
+            ])
+            .to_string(),
             Response::Pong => r#"{"ok":true,"pong":true}"#.to_string(),
             Response::ShuttingDown => r#"{"ok":true,"shutdown":true}"#.to_string(),
             Response::Error { message } => Json::obj(vec![
@@ -384,6 +418,16 @@ impl Response {
         }
         if obj.get("flushed").is_some() {
             return Ok(Response::Flushed);
+        }
+        if obj.get("promoted").is_some() {
+            let applied_seqs = obj
+                .get("applied_seqs")
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|s| s.as_str().and_then(|s| s.parse::<u64>().ok()))
+                .collect();
+            return Ok(Response::Promoted { applied_seqs });
         }
         // before the stats fallback: a snapshot reply is itself a numeric
         // field and would otherwise be swallowed as a one-field Stats
@@ -519,7 +563,7 @@ mod tests {
 
     #[test]
     fn flush_and_snapshot_ops_roundtrip() {
-        for req in [Request::Flush, Request::Snapshot] {
+        for req in [Request::Flush, Request::Snapshot, Request::Promote] {
             let back = Request::from_json_line(&req.to_json_line(), 3).unwrap();
             assert_eq!(back, req);
         }
@@ -527,6 +571,16 @@ mod tests {
         let back =
             Response::from_json_line(r#"{"ok":true,"snapshot_generation":9}"#).unwrap();
         assert_eq!(back, Response::Snapshotted { generation: 9 });
+    }
+
+    #[test]
+    fn promoted_response_roundtrips_exact_seqs() {
+        // beyond f64's 2^53 integer range: the string encoding must hold
+        let resp = Response::Promoted {
+            applied_seqs: vec![(1u64 << 55) + 1, 0, 42],
+        };
+        let back = Response::from_json_line(&resp.to_json_line()).unwrap();
+        assert_eq!(back, resp);
     }
 
     #[test]
@@ -549,6 +603,9 @@ mod tests {
             Response::Distance { dist: 3.25 },
             Response::Flushed,
             Response::Snapshotted { generation: 4 },
+            Response::Promoted {
+                applied_seqs: vec![3, 9],
+            },
             Response::Pong,
             Response::ShuttingDown,
             Response::Error {

@@ -9,6 +9,7 @@ use super::router;
 use super::store::ShardedStore;
 use crate::index::IndexConfig;
 use crate::persist::{Fingerprint, PersistConfig};
+use crate::replica::{self, ReplicaConfig, ReplicaRuntime};
 use crate::runtime::XlaHandle;
 use crate::sketch::{CabinSketcher, SketchConfig};
 use crate::util::timer::Stopwatch;
@@ -17,6 +18,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -42,6 +44,13 @@ pub struct CoordinatorConfig {
     /// Per-shard executor work-queue bound: how many scan jobs may wait on
     /// one shard worker before submitters block (backpressure).
     pub executor_queue: usize,
+    /// Replica mode (`serve --replicate-from <addr>`): bootstrap from and
+    /// continuously replicate this primary, serving reads only until
+    /// promoted. Requires persistence (the shipped log lives in the local
+    /// data dir). `None` = ordinary writable server.
+    pub replicate_from: Option<String>,
+    /// Follower poll interval once caught up (`--repl-poll-ms`).
+    pub repl_poll_ms: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -58,6 +67,8 @@ impl Default for CoordinatorConfig {
             index: IndexConfig::default(),
             persist: PersistConfig::default(),
             executor_queue: 1024,
+            replicate_from: None,
+            repl_poll_ms: 2,
         }
     }
 }
@@ -70,6 +81,9 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     batcher: Batcher,
     sketcher: CabinSketcher,
+    /// Follower runtime (`--replicate-from`): gates inserts until
+    /// promotion and owns the puller thread. `None` on a primary.
+    replica: Option<Arc<ReplicaRuntime>>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -109,15 +123,32 @@ impl Coordinator {
             queue_cap: config.executor_queue,
             counters: metrics.executor.clone(),
         };
+        let fingerprint = Fingerprint {
+            sketch_dim: config.sketch_dim,
+            seed: config.seed,
+            num_shards: config.num_shards.max(1),
+            input_dim: config.input_dim,
+            num_categories: config.num_categories,
+        };
+        // Replica bootstrap runs BEFORE the store opens: it materialises
+        // the primary's newest snapshot + manifest anchoring into the
+        // data dir (unless one is already there — restart → resume), and
+        // the ordinary recovery path below then loads it like any other
+        // durable corpus.
+        if let Some(primary) = &config.replicate_from {
+            anyhow::ensure!(
+                config.persist.enabled(),
+                "--replicate-from requires persistence (--data-dir): the shipped log and \
+                 snapshots live in the replica's own data dir"
+            );
+            let dir = config.persist.data_dir.clone().expect("enabled() implies data_dir");
+            let boot = replica::bootstrap(primary, &fingerprint, &dir)
+                .with_context(|| format!("bootstrapping replica from {primary}"))?;
+            eprintln!("[coordinator] replica bootstrap: {}", boot.describe());
+        }
         let store = if config.persist.enabled() {
             let (store, report) = ShardedStore::open_durable(
-                Fingerprint {
-                    sketch_dim: config.sketch_dim,
-                    seed: config.seed,
-                    num_shards: config.num_shards.max(1),
-                    input_dim: config.input_dim,
-                    num_categories: config.num_categories,
-                },
+                fingerprint,
                 &config.index,
                 &config.persist,
                 metrics.persist.clone(),
@@ -179,12 +210,26 @@ impl Coordinator {
         };
         let sketcher = backend.sketcher().clone();
         let batcher = Batcher::start(config.batcher, backend, store.clone(), metrics.clone());
+        // the puller starts only after the store recovered the
+        // bootstrapped state — it resumes from the recovered applied seqs
+        let replica = config.replicate_from.as_ref().map(|primary| {
+            ReplicaRuntime::start(
+                store.clone(),
+                ReplicaConfig {
+                    primary: primary.clone(),
+                    poll: Duration::from_millis(config.repl_poll_ms.max(1)),
+                    ..ReplicaConfig::default()
+                },
+                metrics.repl.clone(),
+            )
+        });
         Ok(Coordinator {
             config,
             store,
             metrics,
             batcher,
             sketcher,
+            replica,
             shutdown: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -234,6 +279,19 @@ impl Coordinator {
                 }
             },
             Request::Insert { vec } => {
+                // read-replica gate: writes are redirected until promotion
+                if let Some(r) = &self.replica {
+                    if !r.is_writable() {
+                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        return Response::Error {
+                            message: format!(
+                                "read-only replica: writes go to the primary at {} \
+                                 (or `promote` this replica)",
+                                r.primary()
+                            ),
+                        };
+                    }
+                }
                 let sw = Stopwatch::start();
                 self.metrics.inserts.fetch_add(1, Ordering::Relaxed);
                 match self.batcher.submitter.insert(vec) {
@@ -301,12 +359,55 @@ impl Coordinator {
                     values: hm.values,
                 }
             }
+            Request::Promote => match &self.replica {
+                Some(r) => match r.promote() {
+                    Ok(applied_seqs) => {
+                        eprintln!(
+                            "[coordinator] promoted to writable at applied seqs {applied_seqs:?}"
+                        );
+                        Response::Promoted { applied_seqs }
+                    }
+                    Err(e) => {
+                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        Response::Error {
+                            message: format!("{e:#}"),
+                        }
+                    }
+                },
+                None => {
+                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    Response::Error {
+                        message: "not a replica (this server was started without \
+                                  --replicate-from)"
+                            .into(),
+                    }
+                }
+            },
             Request::Stats => {
                 // traffic counters plus the (read-only) index and
                 // persistence configuration
                 let mut fields = self.metrics.snapshot();
                 fields.extend(self.config.index.stats_fields());
                 fields.extend(self.config.persist.stats_fields());
+                if let Some(p) = self.store.persistence() {
+                    // live gauges that only the persistence handle knows:
+                    // the size-trigger/operator WAL gauge, and per-shard
+                    // durable seq horizons — the same field a follower
+                    // reports, so "caught up" is one comparison
+                    fields.push(("persist_wal_live_bytes".into(), p.wal_live_bytes() as f64));
+                    for si in 0..self.store.num_shards() {
+                        fields.push((
+                            format!("persist_next_seq_shard{si}"),
+                            p.committed_seq(si) as f64,
+                        ));
+                    }
+                }
+                let role = match &self.replica {
+                    None => 0.0,
+                    Some(r) if !r.is_writable() => 1.0,
+                    Some(_) => 2.0, // promoted
+                };
+                fields.push(("repl_role".into(), role));
                 Response::Stats { fields }
             }
         }
@@ -367,6 +468,15 @@ impl Coordinator {
             }
             let trimmed = line.trim();
             if trimmed.is_empty() {
+                continue;
+            }
+            // replication sub-protocol (repl_snapshot / repl_wal_tail):
+            // replies are a JSON header line + raw payload bytes, which
+            // the Response enum cannot carry — route them before request
+            // parsing. Any durable server can ship (a follower can feed
+            // further followers); a non-durable one answers an error line.
+            if replica::shipper::try_handle(trimmed, &self.store, &self.metrics.repl, &mut writer)?
+            {
                 continue;
             }
             let resp = match Request::from_json_line(trimmed, self.config.input_dim) {
@@ -614,6 +724,69 @@ mod tests {
                 }
                 other => panic!("{other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn promote_requires_a_replica() {
+        let c = Coordinator::new(test_config());
+        match c.handle_request(Request::Promote) {
+            Response::Error { message } => {
+                assert!(message.contains("--replicate-from"), "{message}")
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn replicate_from_requires_a_data_dir() {
+        let cfg = CoordinatorConfig {
+            replicate_from: Some("127.0.0.1:1".into()),
+            ..test_config()
+        };
+        let err = Coordinator::try_new(cfg).unwrap_err().to_string();
+        assert!(err.contains("--data-dir"), "{err}");
+    }
+
+    #[test]
+    fn stats_report_wal_live_bytes_and_next_seqs() {
+        use crate::persist::{FsyncPolicy, PersistConfig, PersistMode};
+        use crate::testing::TempDir;
+        let dir = TempDir::new("server-seq-stats");
+        let cfg = CoordinatorConfig {
+            persist: PersistConfig {
+                mode: PersistMode::Wal,
+                data_dir: Some(dir.path().to_path_buf()),
+                fsync: FsyncPolicy::Never,
+                ..PersistConfig::default()
+            },
+            ..test_config()
+        };
+        let c = Coordinator::try_new(cfg).unwrap();
+        let mut rng = Xoshiro256::new(44);
+        for _ in 0..3 {
+            match c.handle_request(Request::Insert {
+                vec: CatVector::random(600, 40, 10, &mut rng),
+            }) {
+                Response::Inserted { .. } => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        match c.handle_request(Request::Stats) {
+            Response::Stats { fields } => {
+                let get = |k: &str| {
+                    super::super::metrics::stats_field(&fields, k)
+                        .unwrap_or_else(|| panic!("stats field '{k}' missing"))
+                };
+                assert!(get("persist_wal_live_bytes") > 0.0);
+                // 2 shards: both per-shard seq horizons present, summing
+                // to the 3 inserted frames
+                let total = get("persist_next_seq_shard0") + get("persist_next_seq_shard1");
+                assert_eq!(total, 3.0);
+                assert_eq!(get("repl_role"), 0.0);
+                assert_eq!(get("repl_frames_shipped"), 0.0);
+            }
+            other => panic!("{other:?}"),
         }
     }
 

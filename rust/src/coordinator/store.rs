@@ -67,9 +67,11 @@
 
 use super::executor::{ExecutorConfig, ShardExecutor};
 use crate::index::{IndexConfig, LshIndex};
+use crate::persist::wal::WalRecord;
 use crate::persist::{Fingerprint, PersistConfig, PersistCounters, Persistence, RecoveryReport};
-use crate::sketch::bitvec::and_count_words;
+use crate::sketch::bitvec::{and_count_words, popcount_words};
 use crate::sketch::{BitVec, SketchMatrix};
+use anyhow::Context;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
@@ -116,6 +118,38 @@ pub struct ShardedStore {
     persist: Option<Persistence>,
     /// Persistent per-shard scan workers; all serving scatters run here.
     executor: ShardExecutor,
+}
+
+/// The durability half of a split insert: produced by
+/// [`ShardedStore::begin_insert_batch`] (rows placed, frames appended,
+/// commit started), settled by [`ShardedStore::finish_insert_batch`]
+/// (window waited, traffic accounted, auto-snapshot probed). Letting the
+/// two run on different threads is what overlaps the batcher's sketching
+/// with the in-flight fsync window.
+#[must_use = "an unsettled insert ticket skips the durability wait and the ack gate"]
+pub struct InsertTicket {
+    /// Shard the batch landed on.
+    target: usize,
+    /// Rows placed (0 = empty batch, nothing to settle).
+    records: u64,
+    /// WAL bytes appended for those rows.
+    wal_bytes: u64,
+    /// Group-commit window still owed a wait, when one was registered.
+    window_epoch: Option<u64>,
+    /// Synchronous-commit failure already observed at begin time.
+    sync_err: Option<anyhow::Error>,
+}
+
+impl InsertTicket {
+    fn empty() -> InsertTicket {
+        InsertTicket {
+            target: 0,
+            records: 0,
+            wal_bytes: 0,
+            window_epoch: None,
+            sync_err: None,
+        }
+    }
 }
 
 impl ShardedStore {
@@ -293,23 +327,32 @@ impl ShardedStore {
     }
 
     /// Insert a batch of sketches; returns their assigned global ids plus
-    /// any WAL commit error. The batch lands on the shard with the fewest
-    /// *reserved* points, and the batch size is reserved before any row is
-    /// placed — so variable-size batches stay point-balanced (not merely
+    /// any WAL commit error — [`ShardedStore::begin_insert_batch`]
+    /// followed inline by [`ShardedStore::finish_insert_batch`].
+    fn insert_batch_inner(&self, sketches: Vec<BitVec>) -> (Vec<usize>, Option<anyhow::Error>) {
+        let (ids, ticket) = self.begin_insert_batch(sketches);
+        (ids, self.finish_insert_batch(ticket).err())
+    }
+
+    /// Placement half of a pipelined insert: place the rows in memory,
+    /// append their WAL frames, and *start* the commit — synchronously
+    /// (the error lands in the ticket) when no commit window is
+    /// configured, or by registering in the open group-commit window
+    /// without waiting for it. The returned ticket must be settled with
+    /// [`ShardedStore::finish_insert_batch`] before the batch may be
+    /// acknowledged; splitting the two lets the batcher sketch batch N+1
+    /// while batch N's fsync window is in flight (the ack-wait moves to a
+    /// completion thread, see [`crate::coordinator::batcher`]).
+    ///
+    /// The batch lands on the shard with the fewest *reserved* points,
+    /// and the batch size is reserved before any row is placed — so
+    /// variable-size batches stay point-balanced (not merely
     /// batch-count-balanced) and concurrent batchers steer away from each
     /// other immediately instead of all observing the same stale minimum.
-    ///
-    /// When the store is durable, each placed row is WAL-logged under the
-    /// shard write lock and the batch is committed before this returns —
-    /// i.e. before the batcher can acknowledge it. With a group-commit
-    /// window configured the commit is performed by the group-commit
-    /// thread (one fsync per touched shard per window, coalescing every
-    /// batch that lands in the window); this call then blocks until its
-    /// window's commit lands, so the ack ordering is unchanged.
-    fn insert_batch_inner(&self, sketches: Vec<BitVec>) -> (Vec<usize>, Option<anyhow::Error>) {
+    pub fn begin_insert_batch(&self, sketches: Vec<BitVec>) -> (Vec<usize>, InsertTicket) {
         let k = sketches.len();
         if k == 0 {
-            return (Vec::new(), None);
+            return (Vec::new(), InsertTicket::empty());
         }
         let start = self.next_id.fetch_add(k, Ordering::Relaxed);
         let ids: Vec<usize> = (start..start + k).collect();
@@ -334,7 +377,8 @@ impl ShardedStore {
         // all WAL guards) before cutting the generation, and the window's
         // later commit on the fresh segment is then a no-op. Either way
         // disk latency never blocks readers or other shards' inserts, and
-        // the ack (this function returning) happens after the commit.
+        // the ack (the ticket settling in `finish_insert_batch`) happens
+        // after the commit.
         // (Readers can observe rows whose batch is not yet committed —
         // read-uncommitted for queries, commit-before-ack for writers.)
         let mut wal = {
@@ -365,35 +409,70 @@ impl ShardedStore {
             }
             wal
         };
-        let mut commit_err: Option<anyhow::Error> = None;
+        let mut ticket = InsertTicket {
+            target,
+            records: k as u64,
+            wal_bytes,
+            window_epoch: None,
+            sync_err: None,
+        };
         if let Some(p) = &self.persist {
             if p.group_commit_enabled() {
                 // Group commit: the frames stay buffered in the writer.
                 // Release the WAL mutex FIRST (the committer needs it to
-                // flush this shard), then register in the open window and
-                // block until that window's commit lands — the ack still
-                // happens after the commit, just one fsync per window
-                // instead of one per batch.
+                // flush this shard), then register in the open window —
+                // the wait for that window's flush is the ticket's, so
+                // the ack still happens after the commit, just off this
+                // thread when the caller pipelines.
                 drop(wal);
-                commit_err = p
-                    .group_commit_wait(target)
-                    .err()
-                    .map(|msg| anyhow::anyhow!("group commit for shard {target}: {msg}"));
+                ticket.window_epoch = Some(p.group_commit_register(target));
             } else {
                 if let Some(w) = wal.as_deref_mut() {
                     if let Err(e) = w.commit() {
                         let e = anyhow::Error::new(e);
-                        commit_err = Some(e.context(format!("WAL commit for shard {target}")));
+                        ticket.sync_err = Some(e.context(format!("WAL commit for shard {target}")));
                     }
                 }
                 drop(wal);
             }
-            p.note_appended(k as u64, wal_bytes);
-            self.maybe_auto_snapshot();
         } else {
             drop(wal);
         }
-        (ids, commit_err)
+        (ids, ticket)
+    }
+
+    /// Settle a [`ShardedStore::begin_insert_batch`] ticket: wait for the
+    /// batch's commit window (when one was registered), account the WAL
+    /// traffic, and run the auto-snapshot trigger. `Err` means the rows
+    /// are in memory but the durability contract was not met — the caller
+    /// must not acknowledge the batch as durable. Must be called with no
+    /// store locks held (a triggered auto-snapshot takes them all).
+    pub fn finish_insert_batch(&self, ticket: InsertTicket) -> anyhow::Result<()> {
+        let InsertTicket {
+            target,
+            records,
+            wal_bytes,
+            window_epoch,
+            sync_err,
+        } = ticket;
+        if records == 0 {
+            return Ok(());
+        }
+        let mut commit_err = sync_err;
+        if let Some(p) = &self.persist {
+            if let Some(epoch) = window_epoch {
+                commit_err = p
+                    .group_commit_wait_epoch(target, epoch)
+                    .err()
+                    .map(|msg| anyhow::anyhow!("group commit for shard {target}: {msg}"));
+            }
+            p.note_appended(records, wal_bytes);
+            self.maybe_auto_snapshot();
+        }
+        match commit_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
     }
 
     /// Resolve an id to its current `(shard, row)` in O(1).
@@ -573,6 +652,120 @@ impl ShardedStore {
         p.flush_all()
     }
 
+    /// Apply a chunk of replicated WAL frames to `shard` — the follower
+    /// side of log shipping (see [`crate::replica`]). `records` must be
+    /// the decoded view of `raw_frames` (the follower validates the
+    /// shipped bytes with [`crate::persist::wal::scan_frames`], which is
+    /// also the transfer-integrity check: every frame is length-prefixed
+    /// and checksummed).
+    ///
+    /// Mirrors each record into the arena / id column / per-shard LSH
+    /// index / global id index exactly as the primary's mutators did —
+    /// under the same lock order (id index → shard → WAL mutex) — then
+    /// appends the raw bytes verbatim to this store's own WAL and commits
+    /// them synchronously, so both logs stay byte-identical
+    /// position-for-position and an applied chunk survives a follower
+    /// restart through the ordinary recovery path.
+    ///
+    /// An infeasible chunk (a `MoveOut` against an empty arena — the
+    /// signature of divergence, not transfer damage) is rejected *before
+    /// any mutation*, so a failed apply leaves the shard untouched. A WAL
+    /// commit failure leaves the frames writer-pending: they are counted
+    /// by [`Persistence::next_seq`] (so the puller does not re-request
+    /// and double-apply them) and retried by the next chunk's commit.
+    ///
+    /// Cross-shard note: a rebalance move ships as independent `MoveIn`
+    /// (destination log) and `MoveOut` (source log) frames, and the two
+    /// shards' streams apply independently — so during catch-up a
+    /// follower may transiently hold a moved row in both shards (MoveIn
+    /// applied first: the duplicate-copies state crash recovery already
+    /// tolerates) or, for up to one poll cycle, in *neither* (MoveOut
+    /// applied first: the row's id resolves VACANT and a replica read in
+    /// that window misses it — a state the primary itself never exposes,
+    /// since it moves rows under both shard locks; see the ROADMAP
+    /// cross-shard-ordering item). The `MoveOut` only clears the
+    /// id-index entry if it still points at the popped row, so the index
+    /// never aliases a wrong row either way.
+    pub fn apply_replicated(
+        &self,
+        shard: usize,
+        raw_frames: &[u8],
+        records: &[WalRecord],
+    ) -> anyhow::Result<()> {
+        let p = self
+            .persist
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("replication apply requires a durable store"))?;
+        anyhow::ensure!(shard < self.shards.len(), "shard {shard} out of range");
+        if records.is_empty() {
+            return Ok(());
+        }
+        let mut index = write_l(&self.index);
+        let mut guard = write_l(&self.shards[shard]);
+        let sh = &mut *guard;
+        // feasibility pre-pass: reject divergent chunks before mutating
+        let mut simulated = sh.rows.len();
+        for rec in records {
+            match rec {
+                WalRecord::Insert { .. } | WalRecord::MoveIn { .. } => simulated += 1,
+                WalRecord::MoveOut => {
+                    anyhow::ensure!(
+                        simulated > 0,
+                        "replicated MoveOut against an empty shard {shard} — \
+                         follower has diverged from the primary's log"
+                    );
+                    simulated -= 1;
+                }
+            }
+        }
+        let mut wal = p.wal_guard(shard);
+        for rec in records {
+            match rec {
+                WalRecord::Insert { id, words } | WalRecord::MoveIn { id, words } => {
+                    let id = *id as usize;
+                    let row = sh.rows.len();
+                    let weight = popcount_words(words) as u32;
+                    sh.rows.push_row(words, weight);
+                    sh.ids.push(id);
+                    if let Some(ix) = sh.index.as_mut() {
+                        ix.insert(row, words);
+                    }
+                    if index.len() <= id {
+                        index.resize(id + 1, VACANT);
+                    }
+                    index[id] = (shard as u32, row as u32);
+                    self.next_id.fetch_max(id + 1, Ordering::Relaxed);
+                    self.reserved[shard].fetch_add(1, Ordering::Relaxed);
+                }
+                WalRecord::MoveOut => {
+                    let id = sh.ids.pop().expect("pre-pass guarantees a non-empty shard");
+                    let row = sh.rows.len() - 1;
+                    if let Some(ix) = sh.index.as_mut() {
+                        ix.remove_last(sh.rows.row(row));
+                    }
+                    sh.rows.pop_row();
+                    // the paired MoveIn may already have re-homed this id
+                    if index.get(id) == Some(&(shard as u32, row as u32)) {
+                        index[id] = VACANT;
+                    }
+                    self.reserved[shard].fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        }
+        wal.append_raw(raw_frames, records.len() as u64);
+        // commit outside the shard/index locks (mirroring the primary's
+        // insert path): a disk flush must not block this replica's readers
+        drop(guard);
+        drop(index);
+        let commit = wal
+            .commit()
+            .with_context(|| format!("committing replicated frames for shard {shard}"));
+        drop(wal);
+        p.note_appended(records.len() as u64, raw_frames.len() as u64);
+        self.maybe_auto_snapshot();
+        commit
+    }
+
     /// Rotate a snapshot if the auto-snapshot threshold was crossed. Must
     /// be called with no store locks held (snapshotting takes them all).
     /// The claim is atomic: one rotation per threshold crossing even under
@@ -695,7 +888,9 @@ impl ShardedStore {
                         }
                     }
                     Err(e) => {
-                        src_w.rewind_pending_to(src_mark.unwrap_or(0));
+                        if let Some(mark) = src_mark {
+                            src_w.rewind_pending_to(mark);
+                        }
                         eprintln!(
                             "[persist] rebalance destination WAL commit failed \
                              (paired move-outs discarded; rows recover as duplicates \
@@ -1180,6 +1375,7 @@ mod tests {
             // synchronous commits: these tests pin down the non-group-commit
             // path (the group-commit tests below opt in explicitly)
             commit_window_us: 0,
+            wal_max_bytes: 0,
         }
     }
 
@@ -1191,6 +1387,177 @@ mod tests {
             input_dim: sketch_dim * 4,
             num_categories: 8,
         }
+    }
+
+    #[test]
+    fn apply_replicated_mirrors_a_primary_log_exactly() {
+        use crate::persist::wal::read_wal_tail;
+        let p_dir = TempDir::new("store-repl-primary");
+        let f_dir = TempDir::new("store-repl-follower");
+        let cfg_p = durable_cfg(&p_dir, PersistMode::Wal, 0);
+        let cfg_f = durable_cfg(&f_dir, PersistMode::Wal, 0);
+        let (primary, _) = ShardedStore::open_durable(
+            fp(2, 128, 9),
+            &on_cfg(),
+            &cfg_p,
+            Arc::new(PersistCounters::default()),
+            &ExecutorConfig::default(),
+        )
+        .unwrap();
+        let mut rng = Xoshiro256::new(60);
+        // one big batch lands on one shard, then rebalance emits moves —
+        // the follower must replay inserts AND MoveOut/MoveIn pairs
+        primary.insert_batch((0..24).map(|_| sk(&mut rng, 128)).collect());
+        primary.insert_batch((0..4).map(|_| sk(&mut rng, 128)).collect());
+        assert!(primary.rebalance(1) > 0);
+        let (follower, _) = ShardedStore::open_durable(
+            fp(2, 128, 9),
+            &on_cfg(),
+            &cfg_f,
+            Arc::new(PersistCounters::default()),
+            &ExecutorConfig::default(),
+        )
+        .unwrap();
+        let wpr = 128usize.div_ceil(64);
+        for si in 0..2 {
+            let path = crate::persist::manifest::wal_path(p_dir.path(), 0, si);
+            // ship in two chunks to exercise sequenced application
+            let total = read_wal_tail(&path, wpr, 0, usize::MAX, u64::MAX).unwrap().file_frames;
+            let mut at = 0u64;
+            while at < total {
+                let chunk = read_wal_tail(&path, wpr, at, 400, u64::MAX).unwrap();
+                assert!(chunk.frames > 0);
+                let replay = crate::persist::wal::scan_frames(&chunk.bytes, wpr);
+                assert!(!replay.truncated);
+                follower.apply_replicated(si, &chunk.bytes, &replay.records).unwrap();
+                at += chunk.frames;
+            }
+            assert_eq!(follower.persistence().unwrap().next_seq(si), total);
+        }
+        // bit-identical corpus, shard layout, and O(1) lookups
+        assert_eq!(follower.snapshot_ordered(), primary.snapshot_ordered());
+        assert_eq!(follower.shard_sizes(), primary.shard_sizes());
+        assert_eq!(follower.len(), primary.len());
+        for id in 0..primary.len() {
+            assert_eq!(follower.get(id), primary.get(id), "id {id}");
+            assert_eq!(follower.locate(id), primary.locate(id), "id {id}");
+        }
+        // the follower's own WAL is byte-identical: a restart recovers it
+        drop(follower);
+        let (reopened, report) = ShardedStore::open_durable(
+            fp(2, 128, 9),
+            &on_cfg(),
+            &cfg_f,
+            Arc::new(PersistCounters::default()),
+            &ExecutorConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(report.replayed_records as u64, {
+            let p = primary.persistence().unwrap();
+            p.next_seq(0) + p.next_seq(1)
+        });
+        assert_eq!(reopened.snapshot_ordered(), primary.snapshot_ordered());
+    }
+
+    #[test]
+    fn apply_replicated_rejects_divergent_chunks_without_mutating() {
+        let dir = TempDir::new("store-repl-diverge");
+        let (store, _) = ShardedStore::open_durable(
+            fp(1, 64, 5),
+            &IndexConfig::default(),
+            &durable_cfg(&dir, PersistMode::Wal, 0),
+            Arc::new(PersistCounters::default()),
+            &ExecutorConfig::default(),
+        )
+        .unwrap();
+        let mut rng = Xoshiro256::new(61);
+        let row = sk(&mut rng, 64);
+        let records = vec![
+            WalRecord::Insert {
+                id: 0,
+                words: row.words().to_vec(),
+            },
+            WalRecord::MoveOut,
+            WalRecord::MoveOut, // one pop too many
+        ];
+        let err = store.apply_replicated(0, &[], &records).unwrap_err();
+        assert!(err.to_string().contains("diverged"), "{err:#}");
+        // rejected before any mutation: the shard is untouched
+        assert_eq!(store.shard_sizes(), vec![0]);
+        assert_eq!(store.persistence().unwrap().next_seq(0), 0);
+    }
+
+    #[test]
+    fn begin_finish_split_matches_the_inline_path() {
+        // in-memory: the ticket is trivially settled
+        let store = ShardedStore::new(2, 64);
+        let mut rng = Xoshiro256::new(62);
+        let (ids, ticket) = store.begin_insert_batch(vec![sk(&mut rng, 64), sk(&mut rng, 64)]);
+        assert_eq!(ids, vec![0, 1]);
+        store.finish_insert_batch(ticket).unwrap();
+        let (ids, ticket) = store.begin_insert_batch(Vec::new());
+        assert!(ids.is_empty());
+        store.finish_insert_batch(ticket).unwrap();
+        // durable, synchronous commits: a commit fault surfaces at finish
+        let dir = TempDir::new("store-begin-finish");
+        let (store, _) = ShardedStore::open_durable(
+            fp(1, 64, 5),
+            &IndexConfig::default(),
+            &durable_cfg(&dir, PersistMode::Wal, 0),
+            Arc::new(PersistCounters::default()),
+            &ExecutorConfig::default(),
+        )
+        .unwrap();
+        store.persistence().unwrap().wal_guard(0).fail_next_commit("split fault");
+        let (ids, ticket) = store.begin_insert_batch(vec![sk(&mut rng, 64)]);
+        assert_eq!(ids, vec![0]);
+        let err = store.finish_insert_batch(ticket).unwrap_err();
+        assert!(err.to_string().contains("split fault"), "{err:#}");
+        // the frames stayed pending; the next batch's commit lands both
+        let (_, ticket) = store.begin_insert_batch(vec![sk(&mut rng, 64)]);
+        store.finish_insert_batch(ticket).unwrap();
+        assert_eq!(store.persistence().unwrap().committed_seq(0), 2);
+    }
+
+    #[test]
+    fn wal_max_bytes_rotates_through_the_store_trigger() {
+        let dir = TempDir::new("store-bytes-rotate");
+        let cfg = PersistConfig {
+            snapshot_every: 0, // only the size trigger may fire
+            wal_max_bytes: 512,
+            ..durable_cfg(&dir, PersistMode::WalSnapshot, 0)
+        };
+        let counters = Arc::new(PersistCounters::default());
+        let (store, _) = ShardedStore::open_durable(
+            fp(1, 64, 5),
+            &IndexConfig::default(),
+            &cfg,
+            counters.clone(),
+            &ExecutorConfig::default(),
+        )
+        .unwrap();
+        let mut rng = Xoshiro256::new(63);
+        // 29-byte frames: ~18 inserts cross 512 live bytes
+        for _ in 0..30 {
+            store.insert_batch(vec![sk(&mut rng, 64)]);
+        }
+        assert!(
+            counters.snapshots.load(Ordering::Relaxed) >= 1,
+            "size trigger never rotated"
+        );
+        assert!(store.persistence().unwrap().generation() >= 1);
+        // everything still recoverable after the rotation(s)
+        let before = store.snapshot_ordered();
+        drop(store);
+        let (back, _) = ShardedStore::open_durable(
+            fp(1, 64, 5),
+            &IndexConfig::default(),
+            &cfg,
+            Arc::new(PersistCounters::default()),
+            &ExecutorConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(back.snapshot_ordered(), before);
     }
 
     #[test]

@@ -26,7 +26,15 @@
 //! lands, commit failures surfaced to the client as insert errors — plus
 //! snapshot generations and full-fingerprint-checked warm recovery, so a
 //! restart never re-sketches the corpus and never loads one persisted
-//! under a different corpus shape).
+//! under a different corpus shape), and whose reads scale out through
+//! log-shipping replication ([`replica`]: every WAL frame carries a
+//! monotonic per-shard sequence anchored by the manifest, a primary
+//! ships snapshot arenas + checksummed frame ranges over the same wire
+//! protocol, and a follower bootstraps through the ordinary recovery
+//! path, applies the tail continuously into its own store + WAL, serves
+//! bit-identical reads while rejecting writes with a redirect, and can
+//! be promoted writable when the primary dies — losing nothing the
+//! primary had acked and shipped).
 //!
 //! ## Architecture (three layers)
 //!
@@ -64,6 +72,7 @@ pub mod data;
 pub mod index;
 pub mod linalg;
 pub mod persist;
+pub mod replica;
 pub mod repro;
 pub mod runtime;
 pub mod sketch;

@@ -10,7 +10,8 @@
 //!                      [--index-auto-min-rows 1024]
 //!                      [--data-dir DIR] [--persist off|wal|wal+snapshot]
 //!                      [--fsync always|never] [--snapshot-every 50000]
-//!                      [--commit-window-us 1000]
+//!                      [--commit-window-us 1000] [--wal-max-bytes 0]
+//!                      [--replicate-from HOST:PORT] [--repl-poll-ms 2]
 //! cabin-sketch sketch  --input docword.txt [--sketch-dim 1000] [--out sketches.bin]
 //! cabin-sketch repro   <table1|table3|table4|fig2..fig12|ablation-*|all> [options]
 //! cabin-sketch info    # artifact + environment report
@@ -75,7 +76,21 @@ fn print_help() {
                     fsyncs coalesce across batches within the window; acks\n\
                     wait for their window's flush; 0 = commit per batch;\n\
                     engaged under --fsync always, where an fsync exists\n\
-                    to amortise)"
+                    to amortise)\n\
+                    [--wal-max-bytes N] (size-triggered auto-snapshot:\n\
+                    rotate when the live WAL segments exceed N bytes — the\n\
+                    persist_wal_live_bytes stats gauge; 0 = off; bounds\n\
+                    replay and follower-bootstrap cost independently of\n\
+                    --snapshot-every)\n\
+         serve replication: --replicate-from HOST:PORT (+ --data-dir; run as\n\
+                    a read replica of that primary: bootstrap from its\n\
+                    newest snapshot, apply its WAL stream continuously,\n\
+                    serve query/query_batch/distance/stats with results\n\
+                    bit-identical to the primary's, reject inserts with a\n\
+                    redirect; the corpus flags must match the primary's.\n\
+                    The `promote` wire op flips a caught-up replica\n\
+                    writable — e.g. after killing a dead primary)\n\
+                    [--repl-poll-ms N] (idle tail-poll interval)"
     );
 }
 
@@ -96,6 +111,8 @@ fn coordinator_config(args: &Args) -> CoordinatorConfig {
         index: index_config(args),
         persist: persist_config(args),
         executor_queue: args.usize_or("executor-queue", 1024),
+        replicate_from: args.str_opt("replicate-from").map(str::to_string),
+        repl_poll_ms: args.u64_or("repl-poll-ms", 2),
     }
 }
 
@@ -128,6 +145,7 @@ fn persist_config(args: &Args) -> PersistConfig {
         fsync: PersistConfig::fsync_from_str_or_warn(&args.str_or("fsync", "always"), "serve"),
         snapshot_every: args.u64_or("snapshot-every", defaults.snapshot_every),
         commit_window_us: args.u64_or("commit-window-us", defaults.commit_window_us),
+        wal_max_bytes: args.u64_or("wal-max-bytes", defaults.wal_max_bytes),
     }
 }
 
@@ -156,6 +174,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             coordinator.store.len()
         ),
         _ => println!("[serve] persistence off (corpus is in-memory only)"),
+    }
+    if let Some(primary) = &coordinator.config.replicate_from {
+        println!("[serve] read replica of {primary} — inserts are rejected until `promote`");
     }
     coordinator.serve(&addr, |bound| println!("[serve] bound {bound}"))
 }

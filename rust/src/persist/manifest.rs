@@ -21,15 +21,30 @@
 //! different embedding — manifest version 2 closes that hole.) `seed` is
 //! stored as a string because the wire JSON model is f64-backed and a u64
 //! seed must roundtrip exactly.
+//!
+//! Version 3 adds `base_seqs`: the per-shard WAL sequence number of the
+//! first frame of this generation's segment — equivalently, the count of
+//! frames absorbed into the snapshot cut. Frame `j` of
+//! `wal-G-shard-i.log` therefore has the globally monotonic sequence
+//! `base_seqs[i] + j`, which is what replication (see [`crate::replica`])
+//! uses to address follower catch-up positions. When a rotation retains
+//! the previous generation's WAL segments for follower catch-up, their
+//! anchoring rides along as `prev_generation`/`prev_base_seqs` — recorded
+//! rather than re-derived, so a retained file that silently lost an
+//! unsynced tail (power loss) can be *detected* against its expected
+//! frame count instead of mislabelling sequences. Like the seeds, the
+//! seqs are stored as strings so they roundtrip exactly through the
+//! f64-backed JSON model.
 
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
-/// Version 2 extended the fingerprint with `input_dim`/`num_categories`.
-/// Version-1 dirs cannot be verified against the live corpus shape, so
-/// they are refused with a descriptive error rather than half-checked.
-const VERSION: u32 = 2;
+/// Version 3 added per-shard WAL base sequence numbers. Version 2 (no
+/// `base_seqs`) cannot anchor a follower's catch-up position, and version
+/// 1 cannot even be verified against the live corpus shape — both are
+/// refused with a descriptive error rather than half-loaded.
+const VERSION: u32 = 3;
 
 /// The store configuration a data dir was persisted under.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -96,6 +111,14 @@ impl Fingerprint {
 pub struct Manifest {
     pub generation: u64,
     pub fingerprint: Fingerprint,
+    /// Per-shard WAL sequence of this generation's first frame (frames
+    /// absorbed into the snapshot cut). Length == `num_shards`.
+    pub base_seqs: Vec<u64>,
+    /// Retained previous generation's anchoring `(generation, per-shard
+    /// base seqs)` — present from the first rotation on. Recovery
+    /// validates the retained files against it before the shipper may
+    /// serve them.
+    pub prev: Option<(u64, Vec<u64>)>,
 }
 
 pub fn manifest_path(dir: &Path) -> PathBuf {
@@ -116,7 +139,22 @@ pub fn wal_path(dir: &Path, generation: u64, shard: usize) -> PathBuf {
 impl Manifest {
     /// Write atomically (tmp + rename + dir sync best-effort).
     pub fn save(&self, dir: &Path) -> Result<()> {
-        let json = Json::obj(vec![
+        assert_eq!(
+            self.base_seqs.len(),
+            self.fingerprint.num_shards,
+            "manifest base_seqs arity out of step with num_shards"
+        );
+        if let Some((_, prev_bases)) = &self.prev {
+            assert_eq!(
+                prev_bases.len(),
+                self.fingerprint.num_shards,
+                "manifest prev_base_seqs arity out of step with num_shards"
+            );
+        }
+        let seq_strings = |seqs: &[u64]| {
+            Json::Arr(seqs.iter().map(|s| Json::Str(s.to_string())).collect())
+        };
+        let mut pairs = vec![
             ("version", Json::Num(VERSION as f64)),
             ("generation", Json::Num(self.generation as f64)),
             (
@@ -136,7 +174,13 @@ impl Manifest {
                 "num_categories",
                 Json::Num(self.fingerprint.num_categories as f64),
             ),
-        ]);
+            ("base_seqs", seq_strings(&self.base_seqs)),
+        ];
+        if let Some((prev_generation, prev_bases)) = &self.prev {
+            pairs.push(("prev_generation", Json::Num(*prev_generation as f64)));
+            pairs.push(("prev_base_seqs", seq_strings(prev_bases)));
+        }
+        let json = Json::obj(pairs);
         let path = manifest_path(dir);
         let tmp = dir.join("MANIFEST.tmp");
         {
@@ -180,6 +224,14 @@ impl Manifest {
                 path.display()
             );
         }
+        if version == 2 {
+            bail!(
+                "{}: manifest version 2 predates per-shard WAL sequence numbering \
+                 (no base_seqs), so replication catch-up positions cannot be anchored \
+                 for this data dir — re-ingest into a fresh --data-dir",
+                path.display()
+            );
+        }
         if version != VERSION {
             bail!("{}: unsupported manifest version {version}", path.display());
         }
@@ -187,15 +239,43 @@ impl Manifest {
             .req_str("seed")?
             .parse()
             .with_context(|| format!("{}: seed is not a u64", path.display()))?;
+        let fingerprint = Fingerprint {
+            sketch_dim: obj.req_usize("sketch_dim")?,
+            seed,
+            num_shards: obj.req_usize("num_shards")?,
+            input_dim: obj.req_usize("input_dim")?,
+            num_categories: obj.req_usize("num_categories")? as u16,
+        };
+        let seq_vec = |key: &str| -> Result<Vec<u64>> {
+            let seqs = obj
+                .req_arr(key)?
+                .iter()
+                .map(|s| {
+                    s.as_str().and_then(|s| s.parse::<u64>().ok()).ok_or_else(|| {
+                        anyhow::anyhow!("{}: {key} entry is not a u64", path.display())
+                    })
+                })
+                .collect::<Result<Vec<u64>>>()?;
+            if seqs.len() != fingerprint.num_shards {
+                bail!(
+                    "{}: {key} has {} entries for {} shards — manifest is corrupt",
+                    path.display(),
+                    seqs.len(),
+                    fingerprint.num_shards
+                );
+            }
+            Ok(seqs)
+        };
+        let base_seqs = seq_vec("base_seqs")?;
+        let prev = match obj.get("prev_generation").and_then(|v| v.as_usize()) {
+            Some(prev_generation) => Some((prev_generation as u64, seq_vec("prev_base_seqs")?)),
+            None => None,
+        };
         Ok(Some(Manifest {
             generation: obj.req_usize("generation")? as u64,
-            fingerprint: Fingerprint {
-                sketch_dim: obj.req_usize("sketch_dim")?,
-                seed,
-                num_shards: obj.req_usize("num_shards")?,
-                input_dim: obj.req_usize("input_dim")?,
-                num_categories: obj.req_usize("num_categories")? as u16,
-            },
+            fingerprint,
+            base_seqs,
+            prev,
         }))
     }
 }
@@ -226,14 +306,22 @@ mod tests {
     #[test]
     fn manifest_roundtrips() {
         let dir = TempDir::new("manifest-roundtrip");
-        let m = Manifest {
+        let mut m = Manifest {
             generation: 7,
             fingerprint: fp(),
+            // beyond f64's 2^53 integer range: must roundtrip exactly
+            base_seqs: vec![0, 41, (1u64 << 55) + 9, 7],
+            prev: None,
         };
         m.save(dir.path()).unwrap();
         let back = Manifest::load(dir.path()).unwrap().unwrap();
         assert_eq!(back, m);
         assert!(!dir.path().join("MANIFEST.tmp").exists());
+        // retained-segment anchoring rides along when present
+        m.prev = Some((6, vec![0, 40, (1u64 << 55), 7]));
+        m.save(dir.path()).unwrap();
+        let back = Manifest::load(dir.path()).unwrap().unwrap();
+        assert_eq!(back, m);
     }
 
     #[test]
@@ -277,6 +365,45 @@ mod tests {
         let err = Manifest::load(dir.path()).unwrap_err().to_string();
         assert!(err.contains("version 1"), "{err}");
         assert!(err.contains("fresh --data-dir"), "{err}");
+    }
+
+    #[test]
+    fn version_2_manifest_is_refused_descriptively() {
+        let dir = TempDir::new("manifest-v2");
+        std::fs::write(
+            manifest_path(dir.path()),
+            r#"{"version":2,"generation":1,"sketch_dim":64,"seed":"7","num_shards":2,"input_dim":100,"num_categories":4}"#,
+        )
+        .unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("version 2"), "{err}");
+        assert!(err.contains("base_seqs"), "{err}");
+        assert!(err.contains("fresh --data-dir"), "{err}");
+    }
+
+    #[test]
+    fn base_seqs_arity_mismatch_is_refused() {
+        let dir = TempDir::new("manifest-arity");
+        let mut m = Manifest {
+            generation: 1,
+            fingerprint: fp(), // 4 shards
+            base_seqs: vec![1, 2, 3, 4],
+            prev: None,
+        };
+        m.save(dir.path()).unwrap();
+        Manifest::load(dir.path()).unwrap().unwrap();
+        // hand-damage the array on disk: loading must refuse, not index OOB
+        let text = std::fs::read_to_string(manifest_path(dir.path()))
+            .unwrap()
+            .replace(r#""1","2","3","4""#, r#""1","2""#);
+        std::fs::write(manifest_path(dir.path()), text).unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("2 entries for 4 shards"), "{err}");
+        m.base_seqs = vec![0; 3];
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = m.save(dir.path());
+        }));
+        assert!(panicked.is_err(), "saving a malformed manifest must assert");
     }
 
     #[test]

@@ -44,6 +44,20 @@
 //! live writers → GC generation `G`. A crash on either side of the
 //! manifest rename recovers a complete generation — never a mix.
 //!
+//! Sequence numbers + retention (replication, see [`crate::replica`]):
+//! every WAL frame carries an implicit monotonic per-shard sequence —
+//! frame `j` of `wal-G-shard-i` is sequence `base_seqs[i] + j`, where the
+//! manifest (v3) records each generation's per-shard base. Rotation
+//! advances the bases by the frames the cut absorbed, and *retains the
+//! previous generation's WAL segments* for exactly one generation so a
+//! follower that lags across a rotation can still be served the frames
+//! the new snapshot already absorbed; two-generations-old segments are
+//! GC'd. Rotation can be size-triggered too: with `--wal-max-bytes` set,
+//! crossing that live-segment size claims a rotation exactly like the
+//! record-count trigger (and a failed rotation likewise backs off a full
+//! interval), bounding replay and follower-bootstrap cost independently
+//! of `snapshot_every`.
+//!
 //! Recovery (see [`recovery`]): load the manifest, hard-error on a
 //! configuration-fingerprint mismatch, load each shard's snapshot, replay
 //! its WAL tail (dropping at most one torn trailing record), and hand the
@@ -71,7 +85,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
-use wal::WalWriter;
+use wal::{read_wal, WalWriter};
 
 /// What gets persisted.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -121,6 +135,14 @@ pub struct PersistConfig {
     /// window would be pure added latency and the synchronous path is
     /// kept.
     pub commit_window_us: u64,
+    /// Size-triggered auto-snapshot (`--wal-max-bytes`): rotate when the
+    /// live WAL segments' total on-disk size crosses this many bytes —
+    /// the same number `stats` surfaces as `persist_wal_live_bytes`, so
+    /// operators and the trigger read one gauge. `0` (the default)
+    /// disables the size trigger; the record-count trigger
+    /// (`snapshot_every`) is independent and either can fire. Only
+    /// meaningful under [`PersistMode::WalSnapshot`].
+    pub wal_max_bytes: u64,
 }
 
 impl Default for PersistConfig {
@@ -131,6 +153,7 @@ impl Default for PersistConfig {
             fsync: FsyncPolicy::Always,
             snapshot_every: 50_000,
             commit_window_us: 1_000,
+            wal_max_bytes: 0,
         }
     }
 }
@@ -200,6 +223,10 @@ impl PersistConfig {
             (
                 "persist_cfg_commit_window_us".into(),
                 self.commit_window_us as f64,
+            ),
+            (
+                "persist_cfg_wal_max_bytes".into(),
+                self.wal_max_bytes as f64,
             ),
         ]
     }
@@ -407,6 +434,24 @@ fn committer_loop(shared: &GcShared, wals: &[Mutex<WalWriter>], counters: &Persi
     shared.done.notify_all();
 }
 
+/// Per-shard WAL sequence anchoring — one consistent view of the live
+/// generation, its per-shard base sequences, and the retained previous
+/// segment's anchoring (if any). Mutated only by snapshot rotation, under
+/// one lock, so the replication shipper can never observe a generation
+/// paired with another generation's bases.
+#[derive(Clone, Debug)]
+pub struct SeqView {
+    /// Live snapshot generation (addresses `wal-G-shard-*`).
+    pub generation: u64,
+    /// Sequence of each live segment's first frame.
+    pub base_seqs: Vec<u64>,
+    /// Retained previous segment: `(generation, per-shard base seqs)`.
+    /// Served to followers that lag across one rotation; `None` right
+    /// after first startup of a fresh dir, or when the retained files
+    /// were damaged/missing at recovery.
+    pub prev: Option<(u64, Vec<u64>)>,
+}
+
 /// The live persistence handle owned by the store: one WAL writer per
 /// shard plus the snapshot/rotation and group-commit machinery.
 pub struct Persistence {
@@ -414,9 +459,20 @@ pub struct Persistence {
     mode: PersistMode,
     fsync: FsyncPolicy,
     snapshot_every: u64,
+    /// Size-triggered rotation threshold (`0` = off); see
+    /// [`PersistConfig::wal_max_bytes`].
+    wal_max_bytes: u64,
+    /// Live-byte floor the size trigger must cross. Starts at
+    /// `wal_max_bytes`; a claim raises it by a full interval above the
+    /// observed size (so a *failed* rotation is deferred, mirroring the
+    /// record trigger's reset-on-claim), and a successful rotation resets
+    /// it to `wal_max_bytes` alongside the now-empty segments.
+    bytes_floor: AtomicU64,
     fingerprint: Fingerprint,
     /// Records appended since the last snapshot cut (drives auto-snapshot).
     records_since_snapshot: AtomicU64,
+    /// WAL sequence anchoring (see [`SeqView`]).
+    seq: Mutex<SeqView>,
     /// Arc-shared with the group-commit thread (it flushes through the
     /// same mutexes the store appends under).
     wals: Arc<Vec<Mutex<WalWriter>>>,
@@ -427,6 +483,32 @@ pub struct Persistence {
     /// live generation (`counters.generation`), so the stats field and the
     /// snapshot/WAL file addressing can never disagree.
     counters: std::sync::Arc<PersistCounters>,
+}
+
+/// Validate the retained previous-generation WAL segments against the
+/// anchoring the manifest *recorded* for them: every file must exist,
+/// parse cleanly, and hold exactly `live base − prev base` frames.
+/// Recording (not re-deriving) the anchoring is load-bearing: a retained
+/// file that silently lost an unsynced tail to a power loss would
+/// otherwise shift every frame's inferred sequence and ship mislabelled
+/// history. Best-effort — retention is a follower-catch-up convenience,
+/// so any mismatch just disables it (`None`) rather than failing
+/// recovery.
+fn validate_retained_segment(
+    dir: &Path,
+    recorded: Option<(u64, Vec<u64>)>,
+    base_seqs: &[u64],
+    words_per_row: usize,
+) -> Option<(u64, Vec<u64>)> {
+    let (prev_gen, prev_bases) = recorded?;
+    for (si, (&base, &prev_base)) in base_seqs.iter().zip(&prev_bases).enumerate() {
+        let replay = read_wal(&wal_path(dir, prev_gen, si), words_per_row).ok()?;
+        let expected = base.checked_sub(prev_base)?;
+        if replay.truncated || replay.records.len() as u64 != expected {
+            return None; // damaged retention: never ship questionable frames
+        }
+    }
+    Some((prev_gen, prev_bases))
 }
 
 impl Persistence {
@@ -450,14 +532,28 @@ impl Persistence {
         let wals: Arc<Vec<Mutex<WalWriter>>> = Arc::new(
             (0..fingerprint.num_shards)
                 .map(|si| {
-                    WalWriter::open_append(&wal_path(&dir, report.generation, si), cfg.fsync)
-                        .map(Mutex::new)
-                        .with_context(|| format!("opening WAL for shard {si}"))
+                    WalWriter::open_append(
+                        &wal_path(&dir, report.generation, si),
+                        cfg.fsync,
+                        report.wal_frames.get(si).copied().unwrap_or(0),
+                    )
+                    .map(Mutex::new)
+                    .with_context(|| format!("opening WAL for shard {si}"))
                 })
                 .collect::<Result<Vec<_>>>()?,
         );
         counters.recovery_ms.store(report.recovery_ms, Ordering::Relaxed);
         counters.generation.store(report.generation, Ordering::Relaxed);
+        let seq = SeqView {
+            generation: report.generation,
+            base_seqs: report.base_seqs.clone(),
+            prev: validate_retained_segment(
+                &dir,
+                report.retained_prev.clone(),
+                &report.base_seqs,
+                fingerprint.sketch_dim.div_ceil(64),
+            ),
+        };
         // The committer only exists where it has something to amortise:
         // an fdatasync per commit. Under `fsync = never` a commit is a
         // buffered write, so holding acks for a window would be pure
@@ -476,11 +572,14 @@ impl Persistence {
             mode: cfg.mode,
             fsync: cfg.fsync,
             snapshot_every: cfg.snapshot_every,
+            wal_max_bytes: cfg.wal_max_bytes,
+            bytes_floor: AtomicU64::new(cfg.wal_max_bytes),
             fingerprint,
             // a restart with a fat WAL tail counts it toward the next
             // auto-snapshot, so replay cost cannot grow without bound
             // across repeated crashes
             records_since_snapshot: AtomicU64::new(report.replayed_records as u64),
+            seq: Mutex::new(seq),
             wals,
             group,
             counters,
@@ -495,10 +594,12 @@ impl Persistence {
         self.group.is_some()
     }
 
-    /// Register `shard`'s pending WAL frames in the open commit window
-    /// and block until that window's flush lands; `Err` carries the
-    /// window's flush failure. The caller must NOT hold the shard's WAL
-    /// mutex (the committer needs it to flush).
+    /// Register `shard`'s pending WAL frames in the open commit window,
+    /// returning the window epoch to pass to
+    /// [`Persistence::group_commit_wait_epoch`]. The register/wait split
+    /// exists for the batcher's ack-wait pipelining: the batcher thread
+    /// registers batch N and hands the wait to a completion thread, so it
+    /// can sketch batch N+1 while N's fsync window is in flight.
     ///
     /// Correctness of the ticket: the dirty flag and the epoch read
     /// happen under one lock acquisition, and the committer closes a
@@ -506,18 +607,31 @@ impl Persistence {
     /// flushing — so frames appended before this call are always covered
     /// by the flush of the returned epoch (or an earlier one; a WAL
     /// commit is idempotent over already-written frames).
-    pub fn group_commit_wait(&self, shard: usize) -> std::result::Result<(), String> {
+    pub fn group_commit_register(&self, shard: usize) -> u64 {
         let gc = self
             .group
             .as_ref()
-            .expect("group_commit_wait requires an enabled group committer");
-        let epoch = {
-            let mut g = gc.shared.lock();
-            g.dirty[shard] = true;
-            g.pending_batches += 1;
-            gc.shared.work.notify_all();
-            g.open_epoch
-        };
+            .expect("group_commit_register requires an enabled group committer");
+        let mut g = gc.shared.lock();
+        g.dirty[shard] = true;
+        g.pending_batches += 1;
+        gc.shared.work.notify_all();
+        g.open_epoch
+    }
+
+    /// Block until window `epoch`'s flush lands; `Err` carries this
+    /// shard's flush failure (a sibling shard's failure in the same
+    /// window does not veto). The caller must NOT hold the shard's WAL
+    /// mutex (the committer needs it to flush).
+    pub fn group_commit_wait_epoch(
+        &self,
+        shard: usize,
+        epoch: u64,
+    ) -> std::result::Result<(), String> {
+        let gc = self
+            .group
+            .as_ref()
+            .expect("group_commit_wait_epoch requires an enabled group committer");
         let mut g = gc.shared.lock();
         loop {
             if g.completed >= epoch {
@@ -541,6 +655,13 @@ impl Persistence {
         }
     }
 
+    /// Register-and-wait convenience: the synchronous (non-pipelined)
+    /// group-commit ack path.
+    pub fn group_commit_wait(&self, shard: usize) -> std::result::Result<(), String> {
+        let epoch = self.group_commit_register(shard);
+        self.group_commit_wait_epoch(shard, epoch)
+    }
+
     pub fn data_dir(&self) -> &Path {
         &self.dir
     }
@@ -552,6 +673,97 @@ impl Persistence {
     /// Live snapshot generation.
     pub fn generation(&self) -> u64 {
         self.counters.generation.load(Ordering::Relaxed)
+    }
+
+    /// The configuration fingerprint this data dir is anchored to.
+    pub fn fingerprint(&self) -> &Fingerprint {
+        &self.fingerprint
+    }
+
+    /// Words per sketch row — the WAL frame-payload shape.
+    pub fn words_per_row(&self) -> usize {
+        self.fingerprint.sketch_dim.div_ceil(64)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.wals.len()
+    }
+
+    /// One consistent view of `(generation, base_seqs, retained prev)` —
+    /// rotation swaps all three under the same lock, so the replication
+    /// shipper can address segment files race-free (it re-checks
+    /// [`Persistence::generation`] after reading a file and retries on a
+    /// rotation that slid under it).
+    pub fn seq_view(&self) -> SeqView {
+        lock_recover(&self.seq).clone()
+    }
+
+    /// Durable sequence horizon of `shard`: the sequence the next frame
+    /// *landed in the file* will get. Frames still pending in the writer
+    /// are excluded — replication only ever ships landed frames, so a
+    /// follower can never get ahead of the primary's crash-surviving
+    /// state.
+    pub fn committed_seq(&self, shard: usize) -> u64 {
+        loop {
+            let (generation, base) = {
+                let s = lock_recover(&self.seq);
+                (s.generation, s.base_seqs[shard])
+            };
+            let frames = lock_recover(&self.wals[shard]).file_frames();
+            // re-read under the seq lock: an interleaved rotation would
+            // pair the old base with the new (reset) frame count
+            if lock_recover(&self.seq).generation == generation {
+                return base + frames;
+            }
+        }
+    }
+
+    /// Crash-surviving sequence horizon of `shard` under the configured
+    /// fsync policy — the horizon replication ships against. With
+    /// `fsync = always` only fdatasync-covered frames count (frames
+    /// write_all'd but not yet synced could be revoked by a power loss,
+    /// and a follower holding revoked frames would read as diverged
+    /// after the primary restarts); with `fsync = never` the policy's
+    /// own contract is kill -9 survival, for which landed-in-file is the
+    /// horizon.
+    pub fn durable_seq(&self, shard: usize) -> u64 {
+        loop {
+            let (generation, base) = {
+                let s = lock_recover(&self.seq);
+                (s.generation, s.base_seqs[shard])
+            };
+            let frames = lock_recover(&self.wals[shard]).durable_frames();
+            if lock_recover(&self.seq).generation == generation {
+                return base + frames;
+            }
+        }
+    }
+
+    /// Applied sequence horizon of `shard` *including* writer-pending
+    /// frames — the follower's catch-up cursor (a chunk whose commit
+    /// failed is applied in memory and retried by the next commit, so it
+    /// must not be re-requested and double-applied).
+    pub fn next_seq(&self, shard: usize) -> u64 {
+        loop {
+            let (generation, base) = {
+                let s = lock_recover(&self.seq);
+                (s.generation, s.base_seqs[shard])
+            };
+            let frames = {
+                let w = lock_recover(&self.wals[shard]);
+                w.file_frames() + w.pending_frames()
+            };
+            if lock_recover(&self.seq).generation == generation {
+                return base + frames;
+            }
+        }
+    }
+
+    /// Total on-disk size of the live WAL segments — the
+    /// `persist_wal_live_bytes` stats gauge and the `--wal-max-bytes`
+    /// size-trigger input (one number for both, by design).
+    pub fn wal_live_bytes(&self) -> u64 {
+        self.wals.iter().map(|w| lock_recover(w).file_len()).sum()
     }
 
     /// Lock shard `i`'s WAL writer. The store takes this while holding the
@@ -570,32 +782,59 @@ impl Persistence {
             .fetch_add(records, Ordering::Relaxed);
     }
 
-    /// Whether the auto-snapshot threshold has been crossed (read-only
-    /// probe; the store's trigger path uses
-    /// [`Persistence::try_claim_auto_snapshot`]).
+    /// Whether an auto-snapshot threshold has been crossed — the record
+    /// count (`snapshot_every`) or the live-segment size
+    /// (`wal_max_bytes`); either can fire independently. Read-only probe;
+    /// the store's trigger path uses
+    /// [`Persistence::try_claim_auto_snapshot`].
     pub fn should_auto_snapshot(&self) -> bool {
-        self.mode == PersistMode::WalSnapshot
-            && self.snapshot_every > 0
+        if self.mode != PersistMode::WalSnapshot {
+            return false;
+        }
+        if self.snapshot_every > 0
             && self.records_since_snapshot.load(Ordering::Relaxed) >= self.snapshot_every
+        {
+            return true;
+        }
+        self.wal_max_bytes > 0
+            && self.wal_live_bytes() >= self.bytes_floor.load(Ordering::Relaxed)
     }
 
     /// Atomically claim the auto-snapshot trigger: returns `true` for
-    /// exactly one caller per threshold crossing, resetting the record
-    /// counter in the same step. Two consequences: concurrent inserters
-    /// cannot both run a (stop-the-world, full-corpus) rotation for the
-    /// same crossing, and a *failed* rotation is naturally deferred for a
-    /// full further interval — the store degrades to WAL-only instead of
-    /// re-attempting on every batch (disk-full being the classic way a
-    /// rotation starts failing persistently).
+    /// exactly one caller per threshold crossing, resetting that
+    /// trigger's basis in the same step (the record counter to 0, or the
+    /// byte floor a full interval above the observed size). Two
+    /// consequences: concurrent inserters cannot both run a
+    /// (stop-the-world, full-corpus) rotation for the same crossing, and
+    /// a *failed* rotation is naturally deferred for a full further
+    /// interval — the store degrades to WAL-only instead of re-attempting
+    /// on every batch (disk-full being the classic way a rotation starts
+    /// failing persistently). A *successful* rotation resets both bases
+    /// outright.
     pub fn try_claim_auto_snapshot(&self) -> bool {
-        self.mode == PersistMode::WalSnapshot
-            && self.snapshot_every > 0
+        if self.mode != PersistMode::WalSnapshot {
+            return false;
+        }
+        if self.snapshot_every > 0
             && self
                 .records_since_snapshot
                 .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
                     (v >= self.snapshot_every).then_some(0)
                 })
                 .is_ok()
+        {
+            return true;
+        }
+        if self.wal_max_bytes > 0 {
+            let live = self.wal_live_bytes();
+            return self
+                .bytes_floor
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |floor| {
+                    (live >= floor).then_some(live + self.wal_max_bytes)
+                })
+                .is_ok();
+        }
+        false
     }
 
     /// Flush + fsync every shard WAL (regardless of fsync policy) — the
@@ -616,7 +855,11 @@ impl Persistence {
     /// rotation and the snapshot cut is exact.
     ///
     /// Crash-safety ordering: durable snapshots → empty next-generation
-    /// WAL files → manifest rename (the commit point) → writer swap → GC.
+    /// WAL files → manifest rename (the commit point) → seq/writer swap →
+    /// GC. The old generation's WAL segments are *retained* (not GC'd)
+    /// for one generation so a follower that lagged across this rotation
+    /// can still be shipped the frames the new snapshot absorbed; the
+    /// two-generations-old segments expire instead.
     pub fn write_snapshot(
         &self,
         shards: &[(&[usize], &SketchMatrix)],
@@ -644,25 +887,48 @@ impl Persistence {
             fresh.push(WalWriter::create(&wal_path(&self.dir, new, si), self.fsync)?);
         }
         sync_dir(&self.dir);
+        // The new bases absorb every frame the cut captured. The caller
+        // holds every shard lock and every WAL guard, so no frame can
+        // land anywhere between the `commit()` above and this read.
+        let old_bases: Vec<u64> = {
+            let s = lock_recover(&self.seq);
+            s.base_seqs.clone()
+        };
+        let new_bases: Vec<u64> = old_bases
+            .iter()
+            .zip(wal_guards.iter())
+            .map(|(base, guard)| base + guard.file_frames())
+            .collect();
         Manifest {
             generation: new,
             fingerprint: self.fingerprint,
+            base_seqs: new_bases.clone(),
+            prev: Some((old, old_bases.clone())),
         }
         .save(&self.dir)?;
-        // Commit point passed: swap the live writers (retiring the old
-        // ones so their Drop skips a pointless fsync of a segment the GC
-        // below removes), then GC generation `old` (best-effort —
-        // leftovers are swept by the next recovery).
+        // Commit point passed: publish the new seq anchoring (one lock —
+        // the shipper can never see `new` paired with the old bases),
+        // swap the live writers (retiring the old ones so their Drop
+        // skips a pointless fsync of a now-frozen retained segment), then
+        // GC (best-effort — leftovers are swept by the next recovery).
+        {
+            let mut s = lock_recover(&self.seq);
+            s.prev = Some((old, old_bases));
+            s.base_seqs = new_bases;
+            s.generation = new;
+        }
         for (guard, writer) in wal_guards.iter_mut().zip(fresh) {
             guard.retire();
             **guard = writer;
         }
         self.records_since_snapshot.store(0, Ordering::Relaxed);
+        self.bytes_floor.store(self.wal_max_bytes, Ordering::Relaxed);
         self.counters.snapshots.fetch_add(1, Ordering::Relaxed);
         self.counters.generation.store(new, Ordering::Relaxed);
         for si in 0..self.wals.len() {
-            let _ = std::fs::remove_file(wal_path(&self.dir, old, si));
+            // wal(old) is follower-catch-up retention; wal(old-1) expires
             if old > 0 {
+                let _ = std::fs::remove_file(wal_path(&self.dir, old - 1, si));
                 let _ = std::fs::remove_file(snap_path(&self.dir, old, si));
             }
         }
@@ -694,6 +960,7 @@ mod tests {
             fsync: FsyncPolicy::Never,
             snapshot_every: 4,
             commit_window_us: 0, // group-commit tests opt in explicitly
+            wal_max_bytes: 0,
         }
     }
 
@@ -774,6 +1041,148 @@ mod tests {
         .unwrap();
         p2.note_appended(100, 1000);
         assert!(!p2.should_auto_snapshot());
+    }
+
+    #[test]
+    fn sequence_numbers_advance_and_survive_reopen() {
+        let dir = TempDir::new("persist-seq");
+        let (p, _, _) = Persistence::open(
+            &cfg(&dir, PersistMode::Wal),
+            fp(),
+            Arc::new(PersistCounters::default()),
+        )
+        .unwrap();
+        assert_eq!(p.committed_seq(0), 0);
+        assert_eq!(p.next_seq(0), 0);
+        {
+            let mut w = p.wal_guard(0);
+            w.append_insert(0, &[0b1]);
+            w.append_insert(1, &[0b10]);
+        }
+        // appended-but-uncommitted frames count toward next_seq only
+        assert_eq!(p.committed_seq(0), 0);
+        assert_eq!(p.next_seq(0), 2);
+        p.wal_guard(0).commit().unwrap();
+        assert_eq!(p.committed_seq(0), 2);
+        assert_eq!(p.next_seq(0), 2);
+        assert_eq!(p.committed_seq(1), 0, "shard 1 untouched");
+        let view = p.seq_view();
+        assert_eq!(view.generation, 0);
+        assert_eq!(view.base_seqs, vec![0, 0]);
+        assert!(view.prev.is_none());
+        drop(p);
+        let (p, _, _) = Persistence::open(
+            &cfg(&dir, PersistMode::Wal),
+            fp(),
+            Arc::new(PersistCounters::default()),
+        )
+        .unwrap();
+        assert_eq!(p.committed_seq(0), 2, "seqs must survive a restart");
+    }
+
+    #[test]
+    fn rotation_advances_bases_and_retains_one_generation() {
+        let dir = TempDir::new("persist-rotate-seq");
+        let (p, _, _) = Persistence::open(
+            &cfg(&dir, PersistMode::WalSnapshot),
+            fp(),
+            Arc::new(PersistCounters::default()),
+        )
+        .unwrap();
+        {
+            let mut w = p.wal_guard(0);
+            w.append_insert(0, &[0b1]);
+            w.append_insert(1, &[0b11]);
+            w.commit().unwrap();
+        }
+        {
+            let mut w = p.wal_guard(1);
+            w.append_insert(2, &[0b111]);
+            w.commit().unwrap();
+        }
+        let rotate = |p: &Persistence| {
+            let empty = SketchMatrix::new(64);
+            let views: Vec<(&[usize], &SketchMatrix)> = vec![(&[], &empty), (&[], &empty)];
+            let mut guards: Vec<_> = (0..2).map(|si| p.wal_guard(si)).collect();
+            p.write_snapshot(&views, &mut guards).unwrap()
+        };
+        assert_eq!(rotate(&p), 1);
+        let view = p.seq_view();
+        assert_eq!(view.generation, 1);
+        assert_eq!(view.base_seqs, vec![2, 1], "bases absorb the cut frames");
+        assert_eq!(view.prev, Some((0, vec![0, 0])));
+        // seqs continue across the rotation (fresh segment, same line)
+        assert_eq!(p.committed_seq(0), 2);
+        {
+            let mut w = p.wal_guard(0);
+            w.append_insert(3, &[0b1]);
+            w.commit().unwrap();
+        }
+        assert_eq!(p.committed_seq(0), 3);
+        // generation-0 segments are retained for follower catch-up …
+        assert!(wal_path(dir.path(), 0, 0).exists());
+        assert!(wal_path(dir.path(), 0, 1).exists());
+        // … and a reopen re-anchors them
+        drop(p);
+        let (p, _, _) = Persistence::open(
+            &cfg(&dir, PersistMode::WalSnapshot),
+            fp(),
+            Arc::new(PersistCounters::default()),
+        )
+        .unwrap();
+        assert_eq!(p.seq_view().prev, Some((0, vec![0, 0])));
+        assert_eq!(p.committed_seq(0), 3);
+        // a second rotation expires generation 0 and retains generation 1
+        assert_eq!(rotate(&p), 2);
+        assert!(!wal_path(dir.path(), 0, 0).exists(), "gen-0 wal must expire");
+        assert!(wal_path(dir.path(), 1, 0).exists(), "gen-1 wal retained");
+        assert_eq!(p.seq_view().prev, Some((1, vec![2, 1])));
+    }
+
+    #[test]
+    fn wal_max_bytes_triggers_and_defers_like_the_record_trigger() {
+        let dir = TempDir::new("persist-bytes-trigger");
+        let config = PersistConfig {
+            snapshot_every: 0, // isolate the size trigger
+            wal_max_bytes: 64,
+            ..cfg(&dir, PersistMode::WalSnapshot)
+        };
+        let (p, _, _) =
+            Persistence::open(&config, fp(), Arc::new(PersistCounters::default())).unwrap();
+        assert!(!p.should_auto_snapshot());
+        assert!(!p.try_claim_auto_snapshot(), "below the floor: no claim");
+        {
+            let mut w = p.wal_guard(0);
+            for id in 0..4u64 {
+                w.append_insert(id, &[id]);
+            }
+            w.commit().unwrap(); // 4 × 29-byte frames = 116 live bytes
+        }
+        assert!(p.wal_live_bytes() >= 64);
+        assert!(p.should_auto_snapshot());
+        // the claim is exclusive and raises the floor by a full interval
+        assert!(p.try_claim_auto_snapshot());
+        assert!(!p.try_claim_auto_snapshot());
+        assert!(!p.should_auto_snapshot());
+        // as if the rotation failed: only another interval of growth
+        // re-arms the trigger
+        {
+            let mut w = p.wal_guard(0);
+            for id in 4..7u64 {
+                w.append_insert(id, &[id]);
+            }
+            w.commit().unwrap();
+        }
+        assert!(p.should_auto_snapshot());
+        assert!(p.try_claim_auto_snapshot());
+        // a successful rotation resets the floor with the fresh segments
+        let empty = SketchMatrix::new(64);
+        let views: Vec<(&[usize], &SketchMatrix)> = vec![(&[], &empty), (&[], &empty)];
+        let mut guards: Vec<_> = (0..2).map(|si| p.wal_guard(si)).collect();
+        p.write_snapshot(&views, &mut guards).unwrap();
+        drop(guards);
+        assert_eq!(p.wal_live_bytes(), 0);
+        assert!(!p.should_auto_snapshot());
     }
 
     #[test]

@@ -34,7 +34,7 @@ use std::path::Path;
 
 /// What a recovery pass did — logged at startup and surfaced through the
 /// `persist_*` stats counters.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct RecoveryReport {
     /// Live snapshot generation after recovery.
     pub generation: u64,
@@ -51,6 +51,17 @@ pub struct RecoveryReport {
     pub duplicate_rows_dropped: usize,
     /// Wall-clock of the recovery pass, in milliseconds.
     pub recovery_ms: u64,
+    /// Per-shard WAL base sequence of the live generation (manifest v3):
+    /// the sequence of its segment's first frame.
+    pub base_seqs: Vec<u64>,
+    /// Per-shard frame count of the live segment's valid prefix — the
+    /// next frame landed in shard `i` gets sequence
+    /// `base_seqs[i] + wal_frames[i]`.
+    pub wal_frames: Vec<u64>,
+    /// Retained previous segment's anchoring as recorded by the manifest
+    /// (`prev_generation`/`prev_base_seqs`); the persistence layer
+    /// validates the files against it before the shipper may serve them.
+    pub retained_prev: Option<(u64, Vec<u64>)>,
 }
 
 /// Recover every shard's state from `dir`, initialising the dir on first
@@ -67,6 +78,8 @@ pub fn recover(dir: &Path, expect: &Fingerprint) -> Result<(Vec<ShardState>, Rec
             let m = Manifest {
                 generation: 0,
                 fingerprint: *expect,
+                base_seqs: vec![0; expect.num_shards],
+                prev: None,
             };
             m.save(dir)?;
             m
@@ -76,6 +89,8 @@ pub fn recover(dir: &Path, expect: &Fingerprint) -> Result<(Vec<ShardState>, Rec
     let words_per_row = expect.sketch_dim.div_ceil(64);
     let mut report = RecoveryReport {
         generation,
+        base_seqs: manifest.base_seqs.clone(),
+        retained_prev: manifest.prev.clone(),
         ..Default::default()
     };
     let mut shards = Vec::with_capacity(expect.num_shards);
@@ -92,6 +107,7 @@ pub fn recover(dir: &Path, expect: &Fingerprint) -> Result<(Vec<ShardState>, Rec
             }
         };
         report.snapshot_rows += state.ids.len();
+        let mut shard_frames = 0u64;
         let wal_file = wal_path(dir, generation, si);
         if wal_file.exists() {
             let replay = read_wal(&wal_file, words_per_row)
@@ -115,6 +131,7 @@ pub fn recover(dir: &Path, expect: &Fingerprint) -> Result<(Vec<ShardState>, Rec
                 }
             }
             report.replayed_records += replay.records.len();
+            shard_frames = replay.records.len() as u64;
             if replay.valid_frames_beyond_tear {
                 bail!(
                     "WAL {}: corrupt frame at byte {} with intact records after it — this \
@@ -146,6 +163,7 @@ pub fn recover(dir: &Path, expect: &Fingerprint) -> Result<(Vec<ShardState>, Rec
                 wal_file.display()
             );
         }
+        report.wal_frames.push(shard_frames);
         shards.push(state);
     }
     dedup_recovered_ids(&mut shards, expect.sketch_dim, &mut report);
@@ -181,8 +199,12 @@ fn dedup_recovered_ids(shards: &mut [ShardState], sketch_dim: usize, report: &mu
     }
 }
 
-/// Remove snapshot/WAL files of any generation other than the live one.
-/// Rotation GCs its own predecessor, but a crash between the manifest
+/// Remove snapshot/WAL files of any generation other than the live one —
+/// except the *previous* generation's WAL segments, which snapshot
+/// rotation deliberately retains for one generation so a lagging
+/// replication follower can still be served the frames the newest
+/// snapshot already absorbed (see [`crate::replica`]). Rotation GCs its
+/// own two-generations-old predecessor, but a crash between the manifest
 /// commit and that GC loop would otherwise leak a full corpus image per
 /// crash; recovery is the natural sweep point (no rotation can be in
 /// flight). Future-generation orphans (crash after writing `snap-(G+1)`
@@ -196,13 +218,15 @@ fn gc_stale_generations(dir: &Path, live: u64) {
     for entry in entries.flatten() {
         let name = entry.file_name();
         let Some(name) = name.to_str() else { continue };
+        let is_wal = name.starts_with("wal-");
         let generation = name
             .strip_prefix("snap-")
             .or_else(|| name.strip_prefix("wal-"))
             .and_then(|rest| rest.split('-').next())
             .and_then(|g| g.parse::<u64>().ok());
         if let Some(g) = generation {
-            if g != live {
+            let retained_for_followers = is_wal && live > 0 && g == live - 1;
+            if g != live && !retained_for_followers {
                 let _ = std::fs::remove_file(entry.path());
             }
         }
@@ -242,9 +266,41 @@ mod tests {
         assert!(shards.iter().all(|s| s.ids.is_empty()));
         assert_eq!(report.generation, 0);
         assert_eq!(report.replayed_records, 0);
+        assert_eq!(report.base_seqs, vec![0, 0, 0]);
+        assert_eq!(report.wal_frames, vec![0, 0, 0]);
         // manifest written: a second recovery agrees
         let (_, again) = recover(dir.path(), &fp(3)).unwrap();
         assert_eq!(again.generation, 0);
+    }
+
+    #[test]
+    fn previous_generation_wal_is_retained_for_followers() {
+        // live generation 2: wal-1 (previous) is follower-catch-up
+        // retention and must survive the sweep; wal-0 and snap-1 must not
+        let dir = TempDir::new("recover-retention");
+        let f = fp(1);
+        recover(dir.path(), &f).unwrap();
+        let mut rng = Xoshiro256::new(13);
+        let m = SketchMatrix::from_sketches(&[sk(&mut rng)]);
+        snapshot::write_shard(&snap_path(dir.path(), 2, 0), DIM, 0, &[0], &m).unwrap();
+        Manifest {
+            generation: 2,
+            fingerprint: f,
+            base_seqs: vec![1],
+            prev: None,
+        }
+        .save(dir.path())
+        .unwrap();
+        for g in [0u64, 1, 2] {
+            drop(WalWriter::create(&wal_path(dir.path(), g, 0), FsyncPolicy::Never).unwrap());
+        }
+        snapshot::write_shard(&snap_path(dir.path(), 1, 0), DIM, 0, &[0], &m).unwrap();
+        recover(dir.path(), &f).unwrap();
+        assert!(wal_path(dir.path(), 2, 0).exists(), "live wal swept");
+        assert!(wal_path(dir.path(), 1, 0).exists(), "retained wal swept");
+        assert!(!wal_path(dir.path(), 0, 0).exists(), "expired wal kept");
+        assert!(!snap_path(dir.path(), 1, 0).exists(), "stale snap kept");
+        assert!(snap_path(dir.path(), 2, 0).exists(), "live snap swept");
     }
 
     #[test]
@@ -338,6 +394,8 @@ mod tests {
         Manifest {
             generation: 2,
             fingerprint: f,
+            base_seqs: vec![5],
+            prev: None,
         }
         .save(dir.path())
         .unwrap();
@@ -351,6 +409,9 @@ mod tests {
         assert_eq!(report.generation, 2);
         assert_eq!(report.snapshot_rows, 5);
         assert_eq!(report.replayed_records, 3);
+        // seq anchoring: the segment's 3 frames carry seqs 5, 6, 7
+        assert_eq!(report.base_seqs, vec![5]);
+        assert_eq!(report.wal_frames, vec![3]);
         // snapshot(10..15) + push(99) + pop + pop = ids [10, 11, 12, 13]
         assert_eq!(shards[0].ids, vec![10, 11, 12, 13]);
         assert_eq!(shards[0].rows.len(), 4);
@@ -400,6 +461,8 @@ mod tests {
         Manifest {
             generation: 1,
             fingerprint: f,
+            base_seqs: vec![1],
+            prev: None,
         }
         .save(dir.path())
         .unwrap();
@@ -469,6 +532,8 @@ mod tests {
         Manifest {
             generation: 3,
             fingerprint: f,
+            base_seqs: vec![0],
+            prev: None,
         }
         .save(dir.path())
         .unwrap();

@@ -22,6 +22,17 @@
 //! the partial final record, never the log ([`read_wal`] reports the valid
 //! prefix length so recovery can truncate before appending again).
 //!
+//! Sequence numbers (replication, see [`crate::replica`]): every frame of
+//! a shard's log carries an implicit monotonic per-shard sequence number —
+//! its position in the shard's total frame history. The manifest records
+//! each generation's per-shard *base* sequence (frames absorbed into the
+//! snapshot cut), so frame `j` of segment `wal-G-shard-i` has sequence
+//! `base_seqs[i] + j`. Nothing in the on-disk frame format changes; the
+//! writer merely counts the frames it lands in the file
+//! ([`WalWriter::file_frames`]), and [`read_wal_tail`] serves a
+//! checksummed byte range of frames by position for the primary-side
+//! shipper.
+//!
 //! Appended frames are buffered *in memory* (not in an OS-level buffered
 //! writer) and reach the file only when [`WalWriter::commit`] runs, so no
 //! record can spill to the OS — let alone the platter — before its batch
@@ -76,11 +87,22 @@ pub struct WalWriter {
     /// Frames appended since the last commit — nothing here can reach the
     /// OS (or survive a crash) until `commit` writes it out.
     pending: Vec<u8>,
+    /// Frame count of `pending` (sequence-number bookkeeping).
+    pending_frames: u64,
     /// Bytes successfully written to the file (the last good frame
     /// boundary). A failed `write_all` rewinds to this length before any
     /// retry, so a partial write can never leave garbage *between* valid
     /// frames — which recovery would refuse as mid-file corruption.
     file_len: u64,
+    /// Frames successfully written to the file. Together with the
+    /// manifest's per-shard base sequence this addresses every frame:
+    /// the next landed frame gets sequence `base + file_frames`.
+    file_frames: u64,
+    /// Frames covered by the last successful `fdatasync` — the power-loss
+    /// durability horizon under [`FsyncPolicy::Always`]. Replication
+    /// ships no frame beyond [`WalWriter::durable_frames`], so a follower
+    /// can never hold frames a primary power loss could revoke.
+    synced_frames: u64,
     /// Whether every byte written to the file has been `fdatasync`ed.
     synced: bool,
     /// Test-support fault injection: when set, the next [`WalWriter::commit`]
@@ -105,7 +127,10 @@ impl WalWriter {
             path: path.to_path_buf(),
             fsync,
             pending: Vec::new(),
+            pending_frames: 0,
             file_len: 0,
+            file_frames: 0,
+            synced_frames: 0,
             synced: true,
             inject_commit_error: None,
         })
@@ -113,8 +138,13 @@ impl WalWriter {
 
     /// Open for appending after recovery. The caller (recovery) has
     /// already truncated any torn tail, so appending continues from the
-    /// last valid frame boundary.
-    pub fn open_append(path: &Path, fsync: FsyncPolicy) -> std::io::Result<WalWriter> {
+    /// last valid frame boundary; `file_frames` is the frame count of
+    /// that valid prefix (recovery just replayed it, so it knows).
+    pub fn open_append(
+        path: &Path,
+        fsync: FsyncPolicy,
+        file_frames: u64,
+    ) -> std::io::Result<WalWriter> {
         let mut file = OpenOptions::new().create(true).write(true).open(path)?;
         let file_len = file.seek(SeekFrom::End(0))?;
         Ok(WalWriter {
@@ -122,7 +152,11 @@ impl WalWriter {
             path: path.to_path_buf(),
             fsync,
             pending: Vec::new(),
+            pending_frames: 0,
             file_len,
+            file_frames,
+            // the recovered prefix IS the crash-surviving state
+            synced_frames: file_frames,
             synced: true,
             inject_commit_error: None,
         })
@@ -148,6 +182,7 @@ impl WalWriter {
         }
         let checksum = fnv1a64(&self.pending[payload_at..]);
         self.pending[payload_at - 8..payload_at].copy_from_slice(&checksum.to_le_bytes());
+        self.pending_frames += 1;
         12 + body
     }
 
@@ -168,6 +203,16 @@ impl WalWriter {
         self.append(KIND_MOVE_IN, Some(id), words)
     }
 
+    /// Append `count` pre-encoded frames verbatim (replication: a follower
+    /// mirrors the primary's shipped frame bytes into its own log, so both
+    /// logs stay byte-identical position-for-position). The caller must
+    /// have validated the frames — [`scan_frames`] on the shipped chunk —
+    /// since nothing re-checks them here.
+    pub fn append_raw(&mut self, frames: &[u8], count: u64) {
+        self.pending.extend_from_slice(frames);
+        self.pending_frames += count;
+    }
+
     /// Write the pending frames to the file in one shot. On failure the
     /// frames stay pending and the file is rewound to the last good frame
     /// boundary, so a retry cannot interleave torn bytes with valid
@@ -179,6 +224,8 @@ impl WalWriter {
         match self.file.write_all(&self.pending) {
             Ok(()) => {
                 self.file_len += self.pending.len() as u64;
+                self.file_frames += self.pending_frames;
+                self.pending_frames = 0;
                 self.pending.clear();
                 // don't let one huge rebalance batch pin megabytes forever
                 if self.pending.capacity() > 1 << 20 {
@@ -220,6 +267,7 @@ impl WalWriter {
         if self.fsync == FsyncPolicy::Always && !self.synced {
             self.file.sync_data()?;
             self.synced = true;
+            self.synced_frames = self.file_frames;
         }
         Ok(())
     }
@@ -232,18 +280,22 @@ impl WalWriter {
         if !self.synced {
             self.file.sync_data()?;
             self.synced = true;
+            self.synced_frames = self.file_frames;
         }
         Ok(())
     }
 
-    /// Byte length of the pending (uncommitted) frame buffer — a
-    /// watermark for [`WalWriter::rewind_pending_to`]. Stable while the
-    /// caller holds this writer's mutex (appends are the only mutation).
-    pub fn pending_watermark(&self) -> usize {
-        self.pending.len()
+    /// Pending (uncommitted) buffer position — a watermark for
+    /// [`WalWriter::rewind_pending_to`]. Stable while the caller holds
+    /// this writer's mutex (appends are the only mutation).
+    pub fn pending_watermark(&self) -> PendingMark {
+        PendingMark {
+            bytes: self.pending.len(),
+            frames: self.pending_frames,
+        }
     }
 
-    /// Drop every pending frame appended after `watermark`, keeping the
+    /// Drop every pending frame appended after `mark`, keeping the
     /// frames buffered before it. The rebalance path uses this when the
     /// *destination* commit fails: the paired `MoveOut`s must then never
     /// become durable on their own (a later commit on the source shard
@@ -251,18 +303,60 @@ impl WalWriter {
     /// absent from both logs) — but frames buffered *before* the
     /// watermark by a concurrent group-commit insert batch are someone
     /// else's acked-pending data and must survive the rewind.
-    pub fn rewind_pending_to(&mut self, watermark: usize) {
-        debug_assert!(watermark <= self.pending.len());
-        self.pending.truncate(watermark);
+    pub fn rewind_pending_to(&mut self, mark: PendingMark) {
+        debug_assert!(mark.bytes <= self.pending.len());
+        debug_assert!(mark.frames <= self.pending_frames);
+        self.pending.truncate(mark.bytes);
+        self.pending_frames = mark.frames;
     }
 
-    /// Mark this writer's segment as abandoned (snapshot rotation GCs it
-    /// immediately after the swap): discard pending frames and suppress
-    /// the drop-time fsync.
+    /// Frames landed in the file so far (committed, crash-visible). The
+    /// next landed frame gets sequence `manifest base + file_frames`.
+    pub fn file_frames(&self) -> u64 {
+        self.file_frames
+    }
+
+    /// Crash-surviving frame horizon under this writer's fsync policy:
+    /// with `always`, only fdatasync-covered frames count (a power loss
+    /// revokes anything later); with `never`, the policy's own contract
+    /// is kill -9 survival, for which landed-in-file is enough. This is
+    /// the horizon replication ships against.
+    pub fn durable_frames(&self) -> u64 {
+        match self.fsync {
+            FsyncPolicy::Always => self.synced_frames,
+            FsyncPolicy::Never => self.file_frames,
+        }
+    }
+
+    /// Frames buffered but not yet written to the file.
+    pub fn pending_frames(&self) -> u64 {
+        self.pending_frames
+    }
+
+    /// Bytes landed in the file so far — the live segment's on-disk size
+    /// (`persist_wal_live_bytes`, and the `--wal-max-bytes` auto-snapshot
+    /// trigger's input).
+    pub fn file_len(&self) -> u64 {
+        self.file_len
+    }
+
+    /// Mark this writer's segment as frozen at a snapshot rotation (it is
+    /// retained one generation for follower catch-up, then GC'd): discard
+    /// pending frames and suppress the drop-time fsync.
     pub fn retire(&mut self) {
         self.pending.clear();
+        self.pending_frames = 0;
         self.synced = true;
     }
+}
+
+/// Opaque position in a writer's pending buffer (bytes + frames), taken
+/// with [`WalWriter::pending_watermark`] and restored with
+/// [`WalWriter::rewind_pending_to`].
+#[derive(Clone, Copy, Debug)]
+pub struct PendingMark {
+    bytes: usize,
+    frames: u64,
 }
 
 impl Drop for WalWriter {
@@ -292,49 +386,43 @@ pub struct WalReplay {
     pub valid_frames_beyond_tear: bool,
 }
 
-/// Whether a complete valid frame parses at byte offset `at`.
-fn valid_frame_at(buf: &[u8], at: usize, row_payload: usize) -> bool {
+/// Validate the frame at byte offset `at`: complete, a legal payload
+/// size, checksum-valid, and a known kind. Returns its total length
+/// (header + payload) — the single source of frame-validity truth shared
+/// by [`scan_frames`], [`read_wal_tail`] and the mid-file-damage probe.
+fn frame_len_at(buf: &[u8], at: usize, row_payload: usize) -> Option<usize> {
     if at + 12 > buf.len() {
-        return false;
+        return None; // torn frame header (or clean EOF when at == len)
     }
     let len = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
     if (len != 1 && len != row_payload) || at + 12 + len > buf.len() {
-        return false;
+        return None; // impossible payload size, or torn payload
     }
     let payload = &buf[at + 12..at + 12 + len];
     let want = u64::from_le_bytes(buf[at + 4..at + 12].try_into().unwrap());
-    fnv1a64(payload) == want
-        && matches!(
-            (payload[0], len == row_payload),
-            (KIND_INSERT, true) | (KIND_MOVE_IN, true) | (KIND_MOVE_OUT, false)
-        )
+    if fnv1a64(payload) != want {
+        return None; // checksum mismatch
+    }
+    matches!(
+        (payload[0], len == row_payload),
+        (KIND_INSERT, true) | (KIND_MOVE_IN, true) | (KIND_MOVE_OUT, false)
+    )
+    .then_some(12 + len)
 }
 
-/// Scan a WAL file, stopping (not failing) at the first torn or corrupt
-/// frame. `words_per_row` fixes the only legal payload sizes, so a frame
-/// with any other length is corruption by construction.
-pub fn read_wal(path: &Path, words_per_row: usize) -> std::io::Result<WalReplay> {
-    let mut buf = Vec::new();
-    File::open(path)?.read_to_end(&mut buf)?;
+/// Decode a frame buffer, stopping (not failing) at the first torn or
+/// corrupt frame. `words_per_row` fixes the only legal payload sizes, so
+/// a frame with any other length is corruption by construction. Used on
+/// WAL files (via [`read_wal`]) and on replication chunks a follower
+/// received off the wire — the frame checksums are the transfer-integrity
+/// check, and a short final frame simply stays un-applied and is
+/// re-requested.
+pub fn scan_frames(buf: &[u8], words_per_row: usize) -> WalReplay {
     let row_payload = 1 + 8 + words_per_row * 8;
     let mut records = Vec::new();
     let mut pos = 0usize;
-    loop {
-        if pos + 12 > buf.len() {
-            break; // torn frame header (or clean EOF when pos == len)
-        }
-        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
-        let want = u64::from_le_bytes(buf[pos + 4..pos + 12].try_into().unwrap());
-        if len != 1 && len != row_payload {
-            break; // impossible payload size: corrupt tail
-        }
-        if pos + 12 + len > buf.len() {
-            break; // torn payload
-        }
-        let payload = &buf[pos + 12..pos + 12 + len];
-        if fnv1a64(payload) != want {
-            break; // checksum mismatch: corrupt tail
-        }
+    while let Some(frame_len) = frame_len_at(buf, pos, row_payload) {
+        let payload = &buf[pos + 12..pos + frame_len];
         let decode_row = |payload: &[u8]| {
             let id = u64::from_le_bytes(payload[1..9].try_into().unwrap());
             let words = payload[9..]
@@ -344,27 +432,84 @@ pub fn read_wal(path: &Path, words_per_row: usize) -> std::io::Result<WalReplay>
             (id, words)
         };
         match payload[0] {
-            KIND_INSERT if len == row_payload => {
+            KIND_INSERT => {
                 let (id, words) = decode_row(payload);
                 records.push(WalRecord::Insert { id, words });
             }
-            KIND_MOVE_IN if len == row_payload => {
+            KIND_MOVE_IN => {
                 let (id, words) = decode_row(payload);
                 records.push(WalRecord::MoveIn { id, words });
             }
-            KIND_MOVE_OUT if len == 1 => records.push(WalRecord::MoveOut),
-            _ => break, // unknown kind or kind/size mismatch: corrupt tail
+            _ => records.push(WalRecord::MoveOut),
         }
-        pos += 12 + len;
+        pos += frame_len;
     }
     let truncated = pos < buf.len();
-    let valid_frames_beyond_tear =
-        truncated && (pos + 1..buf.len()).any(|at| valid_frame_at(&buf, at, row_payload));
-    Ok(WalReplay {
+    let valid_frames_beyond_tear = truncated
+        && (pos + 1..buf.len()).any(|at| frame_len_at(buf, at, row_payload).is_some());
+    WalReplay {
         records,
         valid_len: pos as u64,
         truncated,
         valid_frames_beyond_tear,
+    }
+}
+
+/// Scan a WAL file — [`scan_frames`] over its contents.
+pub fn read_wal(path: &Path, words_per_row: usize) -> std::io::Result<WalReplay> {
+    let mut buf = Vec::new();
+    File::open(path)?.read_to_end(&mut buf)?;
+    Ok(scan_frames(&buf, words_per_row))
+}
+
+/// A frame range served to a follower: raw frame bytes (still
+/// length-prefixed and checksummed — the follower validates them with
+/// [`scan_frames`]) plus position bookkeeping.
+pub struct WalTail {
+    /// Raw bytes of the served frames (a whole-frame prefix starting at
+    /// frame index `skip`).
+    pub bytes: Vec<u8>,
+    /// Frames in `bytes`.
+    pub frames: u64,
+    /// Total valid frames in the file — `base + file_frames` is the
+    /// segment's live sequence horizon.
+    pub file_frames: u64,
+}
+
+/// Read frames `[skip, …)` of a WAL file, bounded by `max_bytes` (always
+/// at least one frame when any is available past `skip` and `max_frames`
+/// allows it) and by `max_frames` — the shipper passes the shard's
+/// durable-frame horizon there, so frames written but not yet fsynced are
+/// never served. Counts the file's full valid-frame total even after the
+/// budgets are exhausted, so the caller can report the file horizon.
+/// Concurrent appends are safe: a frame is either wholly present and
+/// checksum-valid or the scan stops before it.
+pub fn read_wal_tail(
+    path: &Path,
+    words_per_row: usize,
+    skip: u64,
+    max_bytes: usize,
+    max_frames: u64,
+) -> std::io::Result<WalTail> {
+    let mut buf = Vec::new();
+    File::open(path)?.read_to_end(&mut buf)?;
+    let row_payload = 1 + 8 + words_per_row * 8;
+    let mut pos = 0usize;
+    let mut file_frames = 0u64;
+    let mut bytes = Vec::new();
+    let mut frames = 0u64;
+    while let Some(frame_len) = frame_len_at(&buf, pos, row_payload) {
+        if file_frames >= skip && bytes.len() < max_bytes && frames < max_frames {
+            bytes.extend_from_slice(&buf[pos..pos + frame_len]);
+            frames += 1;
+        }
+        file_frames += 1;
+        pos += frame_len;
+    }
+    Ok(WalTail {
+        bytes,
+        frames,
+        file_frames,
     })
 }
 
@@ -441,9 +586,11 @@ mod tests {
             .unwrap()
             .set_len(replay.valid_len)
             .unwrap();
-        let mut w = WalWriter::open_append(&path, FsyncPolicy::Never).unwrap();
+        let mut w = WalWriter::open_append(&path, FsyncPolicy::Never, 1).unwrap();
+        assert_eq!(w.file_frames(), 1);
         w.append_insert(2, &[5, 6]);
         w.commit().unwrap();
+        assert_eq!(w.file_frames(), 2);
         drop(w);
         let replay = read_wal(&path, 2).unwrap();
         assert!(!replay.truncated);
@@ -568,6 +715,166 @@ mod tests {
         assert!(replay.records.is_empty());
         assert!(!replay.truncated);
         assert_eq!(replay.valid_len, 0);
+    }
+
+    #[test]
+    fn frame_counters_track_appends_and_commits() {
+        let dir = TempDir::new("wal-frames");
+        let path = dir.path().join("shard-0.wal");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        assert_eq!((w.file_frames(), w.pending_frames()), (0, 0));
+        w.append_insert(0, &[1, 2]);
+        w.append_move_out();
+        assert_eq!((w.file_frames(), w.pending_frames()), (0, 2));
+        w.commit().unwrap();
+        assert_eq!((w.file_frames(), w.pending_frames()), (2, 0));
+        assert_eq!(w.file_len(), std::fs::metadata(&path).unwrap().len());
+        w.append_insert(1, &[3, 4]);
+        let mark = w.pending_watermark();
+        w.append_move_out();
+        w.rewind_pending_to(mark);
+        assert_eq!(w.pending_frames(), 1);
+        w.commit().unwrap();
+        assert_eq!(w.file_frames(), 3);
+    }
+
+    #[test]
+    fn durable_frames_track_the_fsync_horizon() {
+        let dir = TempDir::new("wal-durable");
+        let path = dir.path().join("shard-0.wal");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Always).unwrap();
+        w.append_insert(0, &[1]);
+        assert_eq!(w.durable_frames(), 0, "pending frames are not durable");
+        w.commit().unwrap();
+        assert_eq!(w.durable_frames(), 1);
+        // a failed commit leaves the horizon untouched; the retry advances it
+        w.append_insert(1, &[2]);
+        w.fail_next_commit("fault");
+        assert!(w.commit().is_err());
+        assert_eq!(w.durable_frames(), 1);
+        w.commit().unwrap();
+        assert_eq!(w.durable_frames(), 2);
+        drop(w);
+        // reopen: the recovered prefix is the crash-surviving state
+        let w = WalWriter::open_append(&path, FsyncPolicy::Always, 2).unwrap();
+        assert_eq!(w.durable_frames(), 2);
+        // under `never`, landed-in-file is the policy's own contract
+        let mut n = WalWriter::create(&dir.path().join("n.wal"), FsyncPolicy::Never).unwrap();
+        n.append_insert(0, &[1]);
+        n.commit().unwrap();
+        assert_eq!(n.durable_frames(), 1);
+    }
+
+    #[test]
+    fn read_wal_tail_honours_the_frame_budget() {
+        // the shipper caps tails at the durable horizon via max_frames
+        let dir = TempDir::new("wal-tail-budget");
+        let path = dir.path().join("shard-0.wal");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        for id in 0..4u64 {
+            w.append_insert(id, &[id]);
+        }
+        w.commit().unwrap();
+        drop(w);
+        let tail = read_wal_tail(&path, 1, 1, usize::MAX, 2).unwrap();
+        assert_eq!((tail.frames, tail.file_frames), (2, 4));
+        let replay = scan_frames(&tail.bytes, 1);
+        assert_eq!(replay.records.len(), 2);
+        assert_eq!(
+            replay.records[0],
+            WalRecord::Insert {
+                id: 1,
+                words: vec![1],
+            }
+        );
+        let tail = read_wal_tail(&path, 1, 0, usize::MAX, 0).unwrap();
+        assert_eq!((tail.frames, tail.file_frames), (0, 4));
+    }
+
+    #[test]
+    fn append_raw_mirrors_shipped_frames_exactly() {
+        // a follower appends the primary's frame bytes verbatim: both
+        // files must be byte-identical and replay identically
+        let dir = TempDir::new("wal-raw");
+        let primary = dir.path().join("primary.wal");
+        let mut w = WalWriter::create(&primary, FsyncPolicy::Never).unwrap();
+        w.append_insert(3, &[0xAA, 0xBB]);
+        w.append_move_out();
+        w.commit().unwrap();
+        drop(w);
+        let tail = read_wal_tail(&primary, 2, 0, usize::MAX, u64::MAX).unwrap();
+        assert_eq!(tail.frames, 2);
+        assert_eq!(tail.file_frames, 2);
+        let follower = dir.path().join("follower.wal");
+        let mut f = WalWriter::create(&follower, FsyncPolicy::Never).unwrap();
+        f.append_raw(&tail.bytes, tail.frames);
+        assert_eq!(f.pending_frames(), 2);
+        f.commit().unwrap();
+        assert_eq!(f.file_frames(), 2);
+        drop(f);
+        assert_eq!(
+            std::fs::read(&primary).unwrap(),
+            std::fs::read(&follower).unwrap()
+        );
+        let replay = read_wal(&follower, 2).unwrap();
+        assert_eq!(replay.records.len(), 2);
+    }
+
+    #[test]
+    fn read_wal_tail_skips_and_bounds() {
+        let dir = TempDir::new("wal-tail");
+        let path = dir.path().join("shard-0.wal");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        for id in 0..5u64 {
+            w.append_insert(id, &[id + 1]);
+        }
+        w.commit().unwrap();
+        drop(w);
+        let frame = 12 + 1 + 8 + 8;
+        // skip 2, unbounded: frames 2..5
+        let tail = read_wal_tail(&path, 1, 2, usize::MAX, u64::MAX).unwrap();
+        assert_eq!((tail.frames, tail.file_frames), (3, 5));
+        let replay = scan_frames(&tail.bytes, 1);
+        assert!(!replay.truncated);
+        assert_eq!(
+            replay.records[0],
+            WalRecord::Insert {
+                id: 2,
+                words: vec![3],
+            }
+        );
+        // a 1-byte budget still serves exactly one whole frame
+        let tail = read_wal_tail(&path, 1, 0, 1, u64::MAX).unwrap();
+        assert_eq!(tail.frames, 1);
+        assert_eq!(tail.bytes.len(), frame);
+        assert_eq!(tail.file_frames, 5, "budget must not hide the horizon");
+        // a budget of two frames serves two
+        let tail = read_wal_tail(&path, 1, 1, 2 * frame, u64::MAX).unwrap();
+        assert_eq!(tail.frames, 2);
+        // skip at/past the end: nothing to serve, horizon still reported
+        let tail = read_wal_tail(&path, 1, 5, usize::MAX, u64::MAX).unwrap();
+        assert_eq!((tail.frames, tail.file_frames), (0, 5));
+        let tail = read_wal_tail(&path, 1, 99, usize::MAX, u64::MAX).unwrap();
+        assert_eq!((tail.frames, tail.file_frames), (0, 5));
+    }
+
+    #[test]
+    fn scan_frames_on_a_short_transfer_keeps_the_valid_prefix() {
+        // a chunk cut mid-frame (connection drop) applies only whole
+        // frames; the remainder is re-requested by sequence
+        let dir = TempDir::new("wal-shortxfer");
+        let path = dir.path().join("shard-0.wal");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        w.append_insert(0, &[7]);
+        w.append_insert(1, &[8]);
+        w.commit().unwrap();
+        drop(w);
+        let tail = read_wal_tail(&path, 1, 0, usize::MAX, u64::MAX).unwrap();
+        let cut = &tail.bytes[..tail.bytes.len() - 4];
+        let replay = scan_frames(cut, 1);
+        assert!(replay.truncated);
+        assert_eq!(replay.records.len(), 1);
+        assert_eq!(replay.valid_len, (12 + 1 + 8 + 8) as u64);
     }
 
     #[test]

@@ -1,0 +1,513 @@
+//! Follower runtime: snapshot bootstrap, the WAL-tail puller thread, and
+//! promotion.
+//!
+//! A follower is an ordinary durable coordinator whose corpus arrives
+//! over the wire instead of through the batcher: bootstrap materialises
+//! the primary's newest snapshot (+ manifest anchoring) into the local
+//! `--data-dir`, the ordinary recovery path loads it, and the puller
+//! thread then applies live frames continuously via
+//! [`crate::coordinator::store::ShardedStore::apply_replicated`]. Every
+//! applied chunk is mirrored into the follower's own WAL before its
+//! cursor advances, so follower restarts resume from a consistent prefix
+//! with no re-shipping of already-applied history.
+
+use super::{seq_field, ReplCounters, ReplicaConfig};
+use crate::coordinator::store::ShardedStore;
+use crate::persist::manifest::{snap_path, sync_dir, wal_path, Manifest};
+use crate::persist::wal::scan_frames;
+use crate::persist::{snapshot, Fingerprint, FsyncPolicy};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Per-syscall socket timeout for the replication client. A silently
+/// dead primary (host power-off, network partition — no FIN/RST ever
+/// arrives) must surface as an I/O error the puller can retry, because
+/// `promote` and shutdown JOIN the puller thread: an unbounded blocking
+/// read would hang failover exactly when it is needed. Timeouts are
+/// per-read, so a large snapshot transfer just has to keep making
+/// progress, not finish within the window.
+const IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Blocking client for the replication sub-protocol: JSON header lines
+/// followed by raw payload bytes (see [`super::shipper`]).
+pub struct ReplClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// A fetched `repl_snapshot`: the primary's seq anchoring plus verbatim
+/// snapshot-file bytes per shard (empty at generation 0).
+pub struct SnapshotBundle {
+    pub generation: u64,
+    pub base_seqs: Vec<u64>,
+    pub fingerprint: Fingerprint,
+    pub shards: Vec<Vec<u8>>,
+}
+
+/// A fetched `repl_wal_tail` answer.
+pub enum TailChunk {
+    /// Raw frame bytes (re-validated locally frame-by-frame) plus the
+    /// primary's durable horizon for lag accounting.
+    Frames {
+        bytes: Vec<u8>,
+        frames: u64,
+        live_seq: u64,
+    },
+    /// The primary rotated past our position: only a fresh snapshot can
+    /// re-seed this follower.
+    SnapshotNeeded,
+    /// We hold frames the primary never wrote; replication must halt.
+    Diverged { message: String },
+}
+
+impl ReplClient {
+    pub fn connect(addr: &str) -> Result<ReplClient> {
+        use std::net::ToSocketAddrs;
+        let target = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolve {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{addr} resolved to no address"))?;
+        let stream = TcpStream::connect_timeout(&target, IO_TIMEOUT)
+            .with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+        stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+        Ok(ReplClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    /// Send one request line, read one header line.
+    fn round_trip(&mut self, line: &str) -> Result<Json> {
+        writeln!(self.writer, "{line}")?;
+        let mut reply = String::new();
+        if self.reader.read_line(&mut reply)? == 0 {
+            bail!("primary closed the connection");
+        }
+        crate::util::json::parse(reply.trim()).context("parsing replication header")
+    }
+
+    fn read_payload(&mut self, len: usize) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; len];
+        self.reader
+            .read_exact(&mut buf)
+            .context("reading replication payload")?;
+        Ok(buf)
+    }
+
+    /// Fetch the primary's newest snapshot bundle.
+    pub fn fetch_snapshot(&mut self) -> Result<SnapshotBundle> {
+        let header = self.round_trip(r#"{"op":"repl_snapshot"}"#)?;
+        if !header.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
+            bail!(
+                "repl_snapshot refused: {}",
+                header.get("error").and_then(|e| e.as_str()).unwrap_or("?")
+            );
+        }
+        let fingerprint = Fingerprint {
+            sketch_dim: header.req_usize("sketch_dim")?,
+            seed: header
+                .req_str("seed")?
+                .parse()
+                .context("primary seed is not a u64")?,
+            num_shards: header.req_usize("num_shards")?,
+            input_dim: header.req_usize("input_dim")?,
+            num_categories: header.req_usize("num_categories")? as u16,
+        };
+        let base_seqs = header
+            .req_arr("base_seqs")?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .and_then(|s| s.parse::<u64>().ok())
+                    .ok_or_else(|| anyhow::anyhow!("base_seqs entry is not a u64"))
+            })
+            .collect::<Result<Vec<u64>>>()?;
+        let sizes: Vec<usize> = header
+            .req_arr("shard_bytes")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        if sizes.len() != fingerprint.num_shards || base_seqs.len() != fingerprint.num_shards {
+            bail!("repl_snapshot header arity does not match num_shards");
+        }
+        let mut shards = Vec::with_capacity(sizes.len());
+        for len in sizes {
+            shards.push(self.read_payload(len)?);
+        }
+        Ok(SnapshotBundle {
+            generation: header.req_usize("generation")? as u64,
+            base_seqs,
+            fingerprint,
+            shards,
+        })
+    }
+
+    /// Fetch a shard's WAL tail starting at `from_seq`.
+    pub fn fetch_tail(
+        &mut self,
+        shard: usize,
+        from_seq: u64,
+        max_bytes: usize,
+    ) -> Result<TailChunk> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("repl_wal_tail".into())),
+            ("shard", Json::Num(shard as f64)),
+            ("from_seq", Json::Str(from_seq.to_string())),
+            ("max_bytes", Json::Num(max_bytes as f64)),
+        ]);
+        let header = self.round_trip(&req.to_string())?;
+        if !header.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
+            let message = header
+                .get("error")
+                .and_then(|e| e.as_str())
+                .unwrap_or("?")
+                .to_string();
+            if header.get("snapshot_needed").is_some() {
+                return Ok(TailChunk::SnapshotNeeded);
+            }
+            if header.get("diverged").is_some() {
+                return Ok(TailChunk::Diverged { message });
+            }
+            bail!("repl_wal_tail refused: {message}");
+        }
+        let frames = header.req_usize("frames")? as u64;
+        let bytes = self.read_payload(header.req_usize("bytes")?)?;
+        Ok(TailChunk::Frames {
+            bytes,
+            frames,
+            live_seq: seq_field(&header, "live_seq")?,
+        })
+    }
+}
+
+/// What a bootstrap pass did — logged at follower startup.
+pub struct BootstrapReport {
+    /// An existing local manifest was found: no shipping happened, the
+    /// ordinary recovery path resumes from the local prefix.
+    pub resumed: bool,
+    pub generation: u64,
+    /// Snapshot payload bytes written (0 when resumed or at generation 0).
+    pub snapshot_bytes: u64,
+}
+
+impl BootstrapReport {
+    pub fn describe(&self) -> String {
+        if self.resumed {
+            format!(
+                "resuming from the local data dir (generation {})",
+                self.generation
+            )
+        } else {
+            format!(
+                "seeded from primary snapshot generation {} ({} payload bytes)",
+                self.generation, self.snapshot_bytes
+            )
+        }
+    }
+}
+
+/// Atomic file materialisation (tmp + rename; the caller dir-syncs once).
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {} into place", path.display()))?;
+    Ok(())
+}
+
+/// Seed `data_dir` from the primary's newest snapshot, unless a local
+/// manifest already exists (restart → resume). Ordering makes a killed
+/// bootstrap harmless: snapshot and (empty) WAL files land first, each
+/// validated after the transfer, and the local MANIFEST — the commit
+/// point the recovery path keys on — is written last. No manifest ⇒ the
+/// next start simply re-bootstraps over the leftovers.
+pub fn bootstrap(primary: &str, expect: &Fingerprint, data_dir: &Path) -> Result<BootstrapReport> {
+    std::fs::create_dir_all(data_dir)
+        .with_context(|| format!("create replica data dir {}", data_dir.display()))?;
+    if let Some(m) = Manifest::load(data_dir)? {
+        // fingerprint-checked here for a clear startup error; recovery
+        // re-checks identically either way
+        m.fingerprint.check(expect)?;
+        return Ok(BootstrapReport {
+            resumed: true,
+            generation: m.generation,
+            snapshot_bytes: 0,
+        });
+    }
+    let mut client = ReplClient::connect(primary)
+        .with_context(|| format!("connecting to replication primary {primary}"))?;
+    let bundle = client.fetch_snapshot()?;
+    bundle
+        .fingerprint
+        .check(expect)
+        .context("primary's corpus configuration does not match this replica's flags")?;
+    if bundle.shards.len() != expect.num_shards {
+        bail!(
+            "primary shipped {} snapshot shards for {} configured shards",
+            bundle.shards.len(),
+            expect.num_shards
+        );
+    }
+    let mut snapshot_bytes = 0u64;
+    if bundle.generation > 0 {
+        for (si, bytes) in bundle.shards.iter().enumerate() {
+            let path = snap_path(data_dir, bundle.generation, si);
+            write_atomic(&path, bytes)?;
+            // validate BEFORE committing the manifest: a damaged transfer
+            // must re-bootstrap on the next start, not wedge recovery
+            snapshot::load_shard(&path, expect.sketch_dim, si)
+                .with_context(|| format!("validating shipped snapshot for shard {si}"))?;
+            snapshot_bytes += bytes.len() as u64;
+        }
+        for si in 0..expect.num_shards {
+            // recovery at generation > 0 requires the live segment to
+            // exist; it starts empty and the puller fills it
+            crate::persist::wal::WalWriter::create(
+                &wal_path(data_dir, bundle.generation, si),
+                FsyncPolicy::Never,
+            )
+            .with_context(|| format!("creating empty WAL segment for shard {si}"))?;
+        }
+    }
+    Manifest {
+        generation: bundle.generation,
+        fingerprint: *expect,
+        base_seqs: bundle.base_seqs,
+        // no retained segment: a fresh follower bootstraps at the cut
+        prev: None,
+    }
+    .save(data_dir)?;
+    sync_dir(data_dir);
+    Ok(BootstrapReport {
+        resumed: false,
+        generation: bundle.generation,
+        snapshot_bytes,
+    })
+}
+
+/// The live follower runtime: the puller thread plus the writable flag
+/// the server's insert gate reads. Dropping it stops and joins the
+/// puller.
+pub struct ReplicaRuntime {
+    primary: String,
+    writable: AtomicBool,
+    stop: Arc<AtomicBool>,
+    store: Arc<ShardedStore>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ReplicaRuntime {
+    /// Spawn the puller over an already-recovered (bootstrapped) store.
+    pub fn start(
+        store: Arc<ShardedStore>,
+        cfg: ReplicaConfig,
+        counters: Arc<ReplCounters>,
+    ) -> Arc<ReplicaRuntime> {
+        assert!(
+            store.persistence().is_some(),
+            "a replica store must be durable (the shipped log lives in its data dir)"
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let primary = cfg.primary.clone();
+        let thread_store = store.clone();
+        let thread_stop = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("cabin-replica-pull".into())
+            .spawn(move || puller_loop(&thread_store, &cfg, &counters, &thread_stop))
+            .expect("spawn replica puller");
+        Arc::new(ReplicaRuntime {
+            primary,
+            writable: AtomicBool::new(false),
+            stop,
+            store,
+            handle: Mutex::new(Some(handle)),
+        })
+    }
+
+    /// The primary this replica follows (used by the insert redirect).
+    pub fn primary(&self) -> &str {
+        &self.primary
+    }
+
+    /// Whether promotion has made this replica writable.
+    pub fn is_writable(&self) -> bool {
+        self.writable.load(Ordering::SeqCst)
+    }
+
+    /// Stop replication, flush every applied frame durable, and flip
+    /// writable; returns the per-shard applied (now durable) sequences.
+    /// A flush failure is an `Err` and leaves the replica READ-ONLY —
+    /// promoting would otherwise report sequences a crash could revoke,
+    /// silently breaking the "promoted node loses no acked insert"
+    /// contract. The operator can retry `promote` once the disk recovers.
+    /// Idempotent on success — a second promote just reports the
+    /// sequences again.
+    pub fn promote(&self) -> anyhow::Result<Vec<u64>> {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = super::lock_recover(&self.handle).take() {
+            let _ = h.join();
+        }
+        let p = self
+            .store
+            .persistence()
+            .expect("replica stores are durable (asserted at start)");
+        p.flush_all()
+            .context("flushing applied frames before promotion; replica remains read-only")?;
+        let seqs = (0..self.store.num_shards()).map(|si| p.committed_seq(si)).collect();
+        self.writable.store(true, Ordering::SeqCst);
+        Ok(seqs)
+    }
+}
+
+impl Drop for ReplicaRuntime {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = super::lock_recover(&self.handle).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Sleep in small slices so stop/drop stays responsive.
+fn sleep_unless_stop(stop: &AtomicBool, total: Duration) {
+    let slice = Duration::from_millis(20);
+    let mut left = total;
+    while !stop.load(Ordering::Relaxed) && left > Duration::ZERO {
+        let step = left.min(slice);
+        std::thread::sleep(step);
+        left = left.saturating_sub(step);
+    }
+}
+
+/// The puller: per-shard tail requests from the local applied seq, apply,
+/// repeat; reconnect with backoff on transport errors; halt loudly on
+/// divergence. Gap handling is positional — a short/torn transfer applies
+/// only whole frames and the next request re-asks from the advanced
+/// cursor, so nothing is ever skipped or double-applied.
+fn puller_loop(
+    store: &ShardedStore,
+    cfg: &ReplicaConfig,
+    counters: &ReplCounters,
+    stop: &AtomicBool,
+) {
+    let Some(p) = store.persistence() else {
+        return; // unreachable: start() asserts durability
+    };
+    let num_shards = store.num_shards();
+    let wpr = p.words_per_row();
+    let min_wait = cfg.poll.max(Duration::from_millis(10));
+    let mut reconnect_wait = min_wait;
+    while !stop.load(Ordering::Relaxed) {
+        let mut client = match ReplClient::connect(&cfg.primary) {
+            Ok(c) => {
+                counters.connects.fetch_add(1, Ordering::Relaxed);
+                reconnect_wait = min_wait;
+                c
+            }
+            Err(_) => {
+                counters.stalls.fetch_add(1, Ordering::Relaxed);
+                sleep_unless_stop(stop, reconnect_wait);
+                reconnect_wait = (reconnect_wait * 2).min(Duration::from_secs(1));
+                continue;
+            }
+        };
+        'session: while !stop.load(Ordering::Relaxed) {
+            let mut progressed = false;
+            let mut all_caught_up = true;
+            for shard in 0..num_shards {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let from = p.next_seq(shard);
+                match client.fetch_tail(shard, from, cfg.max_bytes) {
+                    Ok(TailChunk::Frames {
+                        bytes,
+                        frames,
+                        live_seq,
+                    }) => {
+                        if frames > 0 {
+                            let replay = scan_frames(&bytes, wpr);
+                            let valid = &bytes[..replay.valid_len as usize];
+                            if replay.records.is_empty() {
+                                // nothing whole arrived; re-request later
+                                counters.stalls.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                let n = replay.records.len() as u64;
+                                match store.apply_replicated(shard, valid, &replay.records) {
+                                    Ok(()) => {
+                                        counters.frames_applied.fetch_add(n, Ordering::Relaxed);
+                                        let b = valid.len() as u64;
+                                        counters.bytes_applied.fetch_add(b, Ordering::Relaxed);
+                                        progressed = true;
+                                    }
+                                    Err(e) => {
+                                        // commit-side failures are retried by the
+                                        // next chunk's commit (next_seq counts the
+                                        // pending frames); infeasible chunks keep
+                                        // erroring visibly here
+                                        eprintln!(
+                                            "[replica] applying shard {shard} frames at seq \
+                                             {from} failed: {e:#}"
+                                        );
+                                        counters.stalls.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                        }
+                        let applied = p.next_seq(shard);
+                        let lag = live_seq.saturating_sub(applied);
+                        counters.record_shard(shard, applied, lag);
+                        if lag > 0 {
+                            all_caught_up = false;
+                        }
+                    }
+                    Ok(TailChunk::SnapshotNeeded) => {
+                        all_caught_up = false;
+                        counters.stalls.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "[replica] shard {shard}: the primary rotated past our position \
+                             (seq {from}); this follower must be re-seeded — restart it \
+                             with a fresh --data-dir"
+                        );
+                        sleep_unless_stop(stop, Duration::from_secs(1));
+                    }
+                    Ok(TailChunk::Diverged { message }) => {
+                        counters.diverged.store(1, Ordering::Relaxed);
+                        counters.caught_up.store(0, Ordering::Relaxed);
+                        eprintln!(
+                            "[replica] DIVERGED from the primary — replication halted; \
+                             this replica keeps serving its last consistent prefix: \
+                             {message}"
+                        );
+                        return;
+                    }
+                    Err(e) => {
+                        counters.stalls.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("[replica] tail fetch failed (will reconnect): {e:#}");
+                        break 'session;
+                    }
+                }
+            }
+            counters
+                .caught_up
+                .store(u64::from(all_caught_up), Ordering::Relaxed);
+            if !progressed {
+                sleep_unless_stop(stop, cfg.poll);
+            }
+        }
+    }
+}

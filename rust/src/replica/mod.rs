@@ -1,0 +1,267 @@
+//! Replication: WAL shipping, follower catch-up, and read-replica
+//! serving — the multi-node layer over the [`crate::persist`] stack.
+//!
+//! The observation (ROADMAP, and the streaming-sketch literature): once
+//! the sketch corpus is an append-only per-shard log, scaling reads is
+//! *log shipping*, not re-sketching. A follower that holds the same
+//! snapshot + WAL prefix as the primary holds the same arenas
+//! byte-for-byte, so it answers `query`/`query_batch`/`distance` with
+//! results bit-identical to the primary's — the serving tier fans out
+//! without the corpus ever being sketched twice.
+//!
+//! ```text
+//!   primary (serve --data-dir A)                follower (serve --data-dir B
+//!   ┌────────────────────────────┐                        --replicate-from P)
+//!   │ shards + WAL + snapshots   │   repl_snapshot   ┌───────────────────────┐
+//!   │  [shipper: serves the two  │ ───────────────►  │ bootstrap: write      │
+//!   │   repl_* wire ops from the │  snapshot arenas  │ snap/wal/MANIFEST,    │
+//!   │   same TCP protocol]       │                   │ recover via the       │
+//!   │                            │  repl_wal_tail    │ ordinary persist path │
+//!   │ seq anchoring: manifest v3 │ {shard,from_seq}  │ [puller thread:       │
+//!   │ base_seqs + implicit frame │ ───────────────►  │  apply frames, mirror │
+//!   │ position = per-shard seq   │  checksummed raw  │  into own WAL, track  │
+//!   └────────────────────────────┘  frame bytes      │  applied seq/lag]     │
+//!                                                    └───────────────────────┘
+//!                                    `promote` stops the puller, flips writable
+//! ```
+//!
+//! **Sequence numbers.** Every WAL frame has an implicit monotonic
+//! per-shard sequence: its position in the shard's total frame history.
+//! The manifest (v3) anchors each generation with per-shard `base_seqs`
+//! (frames absorbed into the snapshot cut), so frame `j` of
+//! `wal-G-shard-i` is sequence `base_seqs[i] + j` — the on-disk frame
+//! format is unchanged, and a follower's catch-up position is just a
+//! `(shard, seq)` pair. Only frames within the primary's
+//! *crash-surviving horizon* are ever shipped — never writer-pending
+//! ones, and under `fsync = always` never frames written but not yet
+//! fdatasync'd (a power loss could revoke those, and a follower holding
+//! revoked frames would wrongly read as diverged) — so a follower can
+//! never get ahead of what the primary's own restart would recover.
+//!
+//! **Catch-up protocol.** The follower pulls `repl_wal_tail{shard,
+//! from_seq}` per shard, validates each frame's checksum
+//! ([`crate::persist::wal::scan_frames`] — also the transfer-integrity
+//! check), applies the valid prefix through
+//! [`crate::coordinator::store::ShardedStore::apply_replicated`] (arena +
+//! LSH index + id index under the primary's exact lock order), mirrors
+//! the raw bytes into its *own* WAL, and re-requests from its advanced
+//! applied seq — a short or torn transfer is therefore re-requested as a
+//! gap, never applied twice and never half-applied. If the follower lags
+//! across a snapshot rotation, the primary serves the *retained*
+//! previous-generation segment (rotation keeps exactly one); a follower
+//! more than one rotation behind gets `snapshot_needed` and must be
+//! re-seeded (operator action: restart it with a fresh `--data-dir`). A
+//! `from_seq` beyond the primary's durable horizon means the follower has
+//! frames the primary never wrote — divergence — and replication halts
+//! loudly rather than guessing.
+//!
+//! **Bootstrap and restarts.** Bootstrap fetches `repl_snapshot` (the
+//! primary's snapshot arenas + manifest anchoring, fingerprint-checked
+//! against the follower's own configuration), writes the files into the
+//! local data dir, and commits the local MANIFEST *last* — a follower
+//! killed mid-bootstrap left no manifest and simply re-bootstraps, while
+//! one killed after it resumes through the ordinary recovery path and
+//! continues pulling from its recovered applied seqs. Because applied
+//! chunks are committed to the follower's own WAL before its cursor
+//! advances, a follower crash at any point resumes at a consistent
+//! prefix.
+//!
+//! **Serving and promotion.** A follower serves reads from its own
+//! `ShardedStore` + LSH indexes and rejects `insert` with a descriptive
+//! redirect to the primary. `promote` stops the puller, flushes every
+//! applied frame durable (a flush failure errors and leaves the replica
+//! read-only rather than overstating its durable state), and flips the
+//! replica writable — inserts then continue the id/seq line the primary
+//! established. Promotion is local: it asserts nothing about the
+//! (possibly dead) primary beyond what was already applied, which is
+//! exactly the durable prefix the primary acked and shipped. During
+//! catch-up (not after parity) a cross-shard rebalance move can be
+//! transiently visible as a duplicated — or, for one poll cycle, a
+//! missing — row on the replica, since its two frames travel in
+//! independent per-shard streams (ROADMAP item).
+//!
+//! Observability: `repl_*` stats fields (shipped frames/bytes on the
+//! primary; applied frames/bytes, per-shard applied seq and lag, and
+//! role/caught-up/diverged gauges on the follower) via [`ReplCounters`],
+//! plus `persist_next_seq_shard{i}` on any durable server — the same
+//! field on both sides, so "caught up" is one comparison.
+
+pub mod follower;
+pub mod shipper;
+
+pub use follower::{bootstrap, ReplicaRuntime};
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Wire field carrying an exact u64 sequence: string-encoded (the JSON
+/// model is f64-backed and seqs must roundtrip exactly), with a plain
+/// number accepted for hand-written requests.
+pub(crate) fn seq_field(obj: &Json, key: &str) -> anyhow::Result<u64> {
+    match obj.get(key) {
+        Some(Json::Str(s)) => s
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("field '{key}' is not a u64")),
+        Some(Json::Num(n)) if *n >= 0.0 => Ok(*n as u64),
+        _ => anyhow::bail!("missing/invalid sequence field '{key}'"),
+    }
+}
+
+/// Follower-side knobs, derived from `serve --replicate-from` flags.
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    /// Primary address (`host:port`) to bootstrap from and pull tails of.
+    pub primary: String,
+    /// Idle poll interval once caught up (`--repl-poll-ms`).
+    pub poll: Duration,
+    /// Per-tail-request byte budget; the primary always serves at least
+    /// one frame, so this bounds chunk memory without stalling.
+    pub max_bytes: usize,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        Self {
+            primary: String::new(),
+            poll: Duration::from_millis(2),
+            max_bytes: 1 << 20,
+        }
+    }
+}
+
+/// Lock-free replication traffic counters plus per-shard catch-up gauges.
+/// One instance is Arc-shared between `coordinator::Metrics` (which
+/// surfaces them as `repl_*` stats fields) and whichever side updates
+/// them: the shipper (primary) or the puller runtime (follower).
+#[derive(Debug, Default)]
+pub struct ReplCounters {
+    /// Primary side: `repl_snapshot` requests served.
+    pub snapshots_served: AtomicU64,
+    /// Primary side: `repl_wal_tail` requests served.
+    pub tails_served: AtomicU64,
+    /// Primary side: WAL frames shipped to followers.
+    pub frames_shipped: AtomicU64,
+    /// Primary side: WAL payload bytes shipped to followers.
+    pub bytes_shipped: AtomicU64,
+    /// Follower side: frames applied to the local store.
+    pub frames_applied: AtomicU64,
+    /// Follower side: frame bytes applied to the local store.
+    pub bytes_applied: AtomicU64,
+    /// Follower side: connections established to the primary.
+    pub connects: AtomicU64,
+    /// Follower side: apply/transport stalls (snapshot_needed, apply
+    /// errors, connection failures) — a rising value with zero lag
+    /// movement is the "operator, look here" signal.
+    pub stalls: AtomicU64,
+    /// Follower side gauge: 1 once divergence was detected (replication
+    /// halts; reads keep serving the last consistent prefix).
+    pub diverged: AtomicU64,
+    /// Follower side gauge: 1 while the last full sweep found every shard
+    /// at zero lag.
+    pub caught_up: AtomicU64,
+    /// Per-shard `(applied_seq, lag)` gauges, sized on first update.
+    per_shard: Mutex<Vec<(u64, u64)>>,
+}
+
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl ReplCounters {
+    /// Record shard `i`'s applied-seq and lag gauges (follower side).
+    pub fn record_shard(&self, shard: usize, applied_seq: u64, lag: u64) {
+        let mut g = lock_recover(&self.per_shard);
+        if g.len() <= shard {
+            g.resize(shard + 1, (0, 0));
+        }
+        g[shard] = (applied_seq, lag);
+    }
+
+    /// Flat `repl_*` stats fields, merged into the `stats` response by
+    /// `coordinator::Metrics::snapshot`.
+    pub fn stats_fields(&self) -> Vec<(String, f64)> {
+        let mut out: Vec<(String, f64)> = vec![
+            (
+                "repl_snapshots_served".into(),
+                self.snapshots_served.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "repl_tails_served".into(),
+                self.tails_served.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "repl_frames_shipped".into(),
+                self.frames_shipped.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "repl_bytes_shipped".into(),
+                self.bytes_shipped.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "repl_frames_applied".into(),
+                self.frames_applied.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "repl_bytes_applied".into(),
+                self.bytes_applied.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "repl_connects".into(),
+                self.connects.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "repl_stalls".into(),
+                self.stalls.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "repl_diverged".into(),
+                self.diverged.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "repl_caught_up".into(),
+                self.caught_up.load(Ordering::Relaxed) as f64,
+            ),
+        ];
+        for (si, (applied, lag)) in lock_recover(&self.per_shard).iter().enumerate() {
+            out.push((format!("repl_applied_seq_shard{si}"), *applied as f64));
+            out.push((format!("repl_lag_shard{si}"), *lag as f64));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_surface_per_shard_gauges() {
+        let c = ReplCounters::default();
+        c.frames_shipped.fetch_add(7, Ordering::Relaxed);
+        c.record_shard(1, 42, 3);
+        let fields = c.stats_fields();
+        let get = |k: &str| {
+            fields
+                .iter()
+                .find(|(n, _)| n == k)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("field '{k}' missing"))
+        };
+        assert_eq!(get("repl_frames_shipped"), 7.0);
+        assert_eq!(get("repl_applied_seq_shard0"), 0.0, "shard 0 backfilled");
+        assert_eq!(get("repl_applied_seq_shard1"), 42.0);
+        assert_eq!(get("repl_lag_shard1"), 3.0);
+        assert!(fields.iter().all(|(n, _)| n.starts_with("repl_")));
+        // overwrite, not accumulate: these are gauges
+        c.record_shard(1, 50, 0);
+        let fields = c.stats_fields();
+        let lag = fields
+            .iter()
+            .find(|(n, _)| n == "repl_lag_shard1")
+            .unwrap()
+            .1;
+        assert_eq!(lag, 0.0);
+    }
+}

@@ -1,0 +1,314 @@
+//! Primary-side replication shipper: serves the `repl_snapshot` and
+//! `repl_wal_tail` wire ops.
+//!
+//! Both ops reply with a JSON header *line* followed by raw binary
+//! payload bytes (exactly `bytes`/`shard_bytes` long), which the ordinary
+//! `Request`/`Response` enums cannot represent — the server therefore
+//! routes `repl_*` lines here before request parsing. The payloads are
+//! self-checking: snapshot payloads are verbatim snapshot files (magic +
+//! trailing checksum), WAL payloads are verbatim frame bytes
+//! (length-prefixed, per-frame checksums), so transfer integrity needs no
+//! extra framing.
+//!
+//! Rotation races: a snapshot rotation can slide under a shipping request
+//! (its files GC'd mid-read, its bases re-anchored). Every serve path
+//! therefore captures one consistent [`Persistence::seq_view`], reads the
+//! files it addresses, and retries when the live generation moved —
+//! never blocking rotation, never serving a generation's file against
+//! another generation's bases.
+
+use super::{seq_field, ReplCounters};
+use crate::coordinator::store::ShardedStore;
+use crate::persist::manifest::{snap_path, wal_path};
+use crate::persist::wal::read_wal_tail;
+use crate::persist::Persistence;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::io::Write;
+use std::sync::atomic::Ordering;
+
+/// Retries against a rotation sliding under a serve path. Rotations take
+/// milliseconds and are at least a full snapshot interval apart, so two
+/// in one request is already pathological; eight means something is
+/// rewriting the data dir under us and we should error out.
+const ROTATION_RACE_RETRIES: usize = 8;
+
+/// A consistent snapshot bundle: the generation's arenas plus the seq
+/// anchoring a follower needs to start pulling the tail.
+pub struct SnapshotPayload {
+    pub generation: u64,
+    pub base_seqs: Vec<u64>,
+    /// Verbatim `snap-G-shard-i.bin` file bytes (empty at generation 0 —
+    /// a fresh primary has no snapshot and the follower starts empty).
+    pub shards: Vec<Vec<u8>>,
+}
+
+/// Assemble a consistent [`SnapshotPayload`] from the live data dir.
+///
+/// The whole payload is buffered in memory so the generation re-check
+/// can reject a mid-read rotation before a single byte reaches the wire;
+/// at very large corpora that is one full corpus image per concurrent
+/// bootstrap, and streaming shard-by-shard (sizes first, re-check last)
+/// is the known follow-on (ROADMAP).
+pub fn snapshot_payload(p: &Persistence) -> Result<SnapshotPayload> {
+    let num_shards = p.num_shards();
+    for _ in 0..ROTATION_RACE_RETRIES {
+        let view = p.seq_view();
+        let mut shards = Vec::with_capacity(num_shards);
+        if view.generation > 0 {
+            let mut raced = false;
+            for si in 0..num_shards {
+                match std::fs::read(snap_path(p.data_dir(), view.generation, si)) {
+                    Ok(bytes) => shards.push(bytes),
+                    Err(_) => {
+                        raced = true; // rotation GC'd this generation
+                        break;
+                    }
+                }
+            }
+            if raced {
+                continue;
+            }
+        } else {
+            shards = vec![Vec::new(); num_shards];
+        }
+        if p.generation() == view.generation {
+            return Ok(SnapshotPayload {
+                generation: view.generation,
+                base_seqs: view.base_seqs,
+                shards,
+            });
+        }
+    }
+    bail!("snapshot payload raced repeated rotations; ask again")
+}
+
+/// One `repl_wal_tail` answer.
+pub enum Tail {
+    /// Frames `[from_seq, from_seq + frames)` as raw bytes; `live_seq` is
+    /// the shard's durable sequence horizon for lag accounting.
+    Frames {
+        from_seq: u64,
+        frames: u64,
+        bytes: Vec<u8>,
+        live_seq: u64,
+    },
+    /// `from_seq` predates every segment still on disk: the follower
+    /// lagged more than one rotation and must re-seed from a snapshot.
+    SnapshotNeeded { base_seq: u64 },
+    /// `from_seq` is beyond the primary's durable horizon: the follower
+    /// holds frames this primary never wrote. Divergence — not served.
+    Diverged { live_seq: u64 },
+}
+
+/// Serve a shard's WAL tail starting at `from_seq`, from the live segment
+/// or the one retained previous-generation segment.
+pub fn wal_tail(p: &Persistence, shard: usize, from_seq: u64, max_bytes: usize) -> Result<Tail> {
+    anyhow::ensure!(
+        shard < p.num_shards(),
+        "shard {shard} out of range (0..{})",
+        p.num_shards()
+    );
+    let wpr = p.words_per_row();
+    for _ in 0..ROTATION_RACE_RETRIES {
+        let view = p.seq_view();
+        let base = view.base_seqs[shard];
+        if from_seq >= base {
+            // ship only up to the crash-surviving horizon: frames
+            // write_all'd but not yet fsynced could be revoked by a
+            // primary power loss, and a follower holding revoked frames
+            // would wrongly read as diverged afterwards. (The horizon is
+            // an absolute seq, monotone across rotations, so computing it
+            // before the file read can only under-serve, never over.)
+            let durable_seq = p.durable_seq(shard);
+            if from_seq > durable_seq {
+                return Ok(Tail::Diverged {
+                    live_seq: durable_seq,
+                });
+            }
+            let path = wal_path(p.data_dir(), view.generation, shard);
+            let budget = durable_seq - from_seq;
+            let Ok(tail) = read_wal_tail(&path, wpr, from_seq - base, max_bytes, budget) else {
+                continue; // rotation swapped the live segment under us
+            };
+            if p.generation() != view.generation {
+                continue;
+            }
+            return Ok(Tail::Frames {
+                from_seq,
+                frames: tail.frames,
+                bytes: tail.bytes,
+                live_seq: durable_seq,
+            });
+        }
+        if let Some((prev_gen, prev_bases)) = &view.prev {
+            let prev_base = prev_bases[shard];
+            if from_seq >= prev_base {
+                // the retained segment is frozen — fully committed and
+                // fsynced by the rotation that retired it, so every frame
+                // is within the durable horizon and no re-check is needed;
+                // it may expire under us, which downgrades to re-seed
+                let path = wal_path(p.data_dir(), *prev_gen, shard);
+                match read_wal_tail(&path, wpr, from_seq - prev_base, max_bytes, u64::MAX) {
+                    Ok(tail) if tail.frames > 0 => {
+                        return Ok(Tail::Frames {
+                            from_seq,
+                            frames: tail.frames,
+                            bytes: tail.bytes,
+                            live_seq: p.durable_seq(shard),
+                        });
+                    }
+                    _ => return Ok(Tail::SnapshotNeeded { base_seq: base }),
+                }
+            }
+        }
+        return Ok(Tail::SnapshotNeeded { base_seq: base });
+    }
+    bail!("wal tail raced repeated rotations; ask again")
+}
+
+fn seq_strings(seqs: &[u64]) -> Json {
+    Json::Arr(seqs.iter().map(|s| Json::Str(s.to_string())).collect())
+}
+
+fn write_error<W: Write>(
+    writer: &mut W,
+    message: &str,
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let mut pairs = vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(message.to_string())),
+    ];
+    pairs.extend(extra);
+    writeln!(writer, "{}", Json::obj(pairs))
+}
+
+/// Route one protocol line if it is a replication op. Returns `Ok(false)`
+/// untouched when it is not (the caller then parses it as an ordinary
+/// request); `Ok(true)` after writing a complete reply (header line +
+/// payload bytes, or an error line). Transport failures bubble as
+/// `io::Error` like any connection write.
+pub fn try_handle<W: Write>(
+    line: &str,
+    store: &ShardedStore,
+    counters: &ReplCounters,
+    writer: &mut W,
+) -> std::io::Result<bool> {
+    // cheap pre-filter: every repl op value starts with this marker, and
+    // no other protocol field carries a string beginning `repl_`
+    if !line.contains("\"repl_") {
+        return Ok(false);
+    }
+    let Ok(obj) = crate::util::json::parse(line) else {
+        return Ok(false); // malformed JSON: let the normal path report it
+    };
+    let op = match obj.get("op").and_then(|o| o.as_str()) {
+        Some(op) if op.starts_with("repl_") => op.to_string(),
+        _ => return Ok(false),
+    };
+    let Some(p) = store.persistence() else {
+        write_error(
+            writer,
+            "replication requires persistence on the serving side (start it with --data-dir)",
+            Vec::new(),
+        )?;
+        return Ok(true);
+    };
+    match op.as_str() {
+        "repl_snapshot" => match snapshot_payload(p) {
+            Ok(payload) => {
+                let fp = p.fingerprint();
+                let shard_bytes: Vec<usize> = payload.shards.iter().map(|b| b.len()).collect();
+                let header = Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("generation", Json::Num(payload.generation as f64)),
+                    ("num_shards", Json::Num(fp.num_shards as f64)),
+                    ("sketch_dim", Json::Num(fp.sketch_dim as f64)),
+                    ("seed", Json::Str(fp.seed.to_string())),
+                    ("input_dim", Json::Num(fp.input_dim as f64)),
+                    ("num_categories", Json::Num(fp.num_categories as f64)),
+                    ("base_seqs", seq_strings(&payload.base_seqs)),
+                    ("shard_bytes", Json::from_usizes(&shard_bytes)),
+                ]);
+                writeln!(writer, "{header}")?;
+                for shard in &payload.shards {
+                    writer.write_all(shard)?;
+                }
+                writer.flush()?;
+                counters.snapshots_served.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => write_error(writer, &format!("{e:#}"), Vec::new())?,
+        },
+        "repl_wal_tail" => {
+            let (shard, from_seq) = match (obj.req_usize("shard"), seq_field(&obj, "from_seq")) {
+                (Ok(shard), Ok(from_seq)) => (shard, from_seq),
+                (Err(e), _) | (_, Err(e)) => {
+                    write_error(writer, &format!("{e:#}"), Vec::new())?;
+                    return Ok(true);
+                }
+            };
+            let max_bytes = obj
+                .get("max_bytes")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(1 << 20)
+                .max(1);
+            match wal_tail(p, shard, from_seq, max_bytes) {
+                Ok(Tail::Frames {
+                    from_seq,
+                    frames,
+                    bytes,
+                    live_seq,
+                }) => {
+                    let header = Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("shard", Json::Num(shard as f64)),
+                        ("from_seq", Json::Str(from_seq.to_string())),
+                        ("frames", Json::Num(frames as f64)),
+                        ("bytes", Json::Num(bytes.len() as f64)),
+                        ("live_seq", Json::Str(live_seq.to_string())),
+                    ]);
+                    writeln!(writer, "{header}")?;
+                    writer.write_all(&bytes)?;
+                    writer.flush()?;
+                    counters.tails_served.fetch_add(1, Ordering::Relaxed);
+                    counters.frames_shipped.fetch_add(frames, Ordering::Relaxed);
+                    counters
+                        .bytes_shipped
+                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                }
+                Ok(Tail::SnapshotNeeded { base_seq }) => write_error(
+                    writer,
+                    &format!(
+                        "from_seq {from_seq} predates every retained segment of shard \
+                         {shard} (live base {base_seq}); re-seed this follower from a \
+                         fresh repl_snapshot"
+                    ),
+                    vec![
+                        ("snapshot_needed", Json::Bool(true)),
+                        ("base_seq", Json::Str(base_seq.to_string())),
+                    ],
+                )?,
+                Ok(Tail::Diverged { live_seq }) => write_error(
+                    writer,
+                    &format!(
+                        "from_seq {from_seq} is beyond shard {shard}'s durable horizon \
+                         {live_seq} — the follower holds frames this primary never \
+                         wrote (diverged)"
+                    ),
+                    vec![
+                        ("diverged", Json::Bool(true)),
+                        ("live_seq", Json::Str(live_seq.to_string())),
+                    ],
+                )?,
+                Err(e) => write_error(writer, &format!("{e:#}"), Vec::new())?,
+            }
+        }
+        other => write_error(
+            writer,
+            &format!("unknown replication op '{other}'"),
+            Vec::new(),
+        )?,
+    }
+    Ok(true)
+}

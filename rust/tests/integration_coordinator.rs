@@ -23,6 +23,7 @@ fn start_server(dim: usize) -> (std::net::SocketAddr, std::thread::JoinHandle<()
         heatmap_limit: 128,
         index: IndexConfig::default(),
         persist: Default::default(),
+        ..Default::default()
     };
     let coordinator = Arc::new(Coordinator::new(config));
     let (tx, rx) = std::sync::mpsc::sync_channel(1);

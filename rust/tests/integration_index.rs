@@ -42,6 +42,7 @@ fn start_server(
             ..Default::default()
         },
         persist: Default::default(),
+        ..Default::default()
     };
     let coordinator = Arc::new(Coordinator::new(config));
     let (tx, rx) = std::sync::mpsc::sync_channel(1);

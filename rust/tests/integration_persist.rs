@@ -35,6 +35,7 @@ fn persist_cfg(dir: &TempDir, mode: PersistMode, snapshot_every: u64) -> Persist
         // (the group-commit window is exercised by the wire test below
         // and the store/persist unit tests)
         commit_window_us: 0,
+        wal_max_bytes: 0,
     }
 }
 
@@ -245,6 +246,7 @@ fn wire_level_restart_serves_the_recovered_corpus() {
             fsync: FsyncPolicy::Always,
             snapshot_every: 0,
             commit_window_us: 1_000,
+            wal_max_bytes: 0,
         },
         ..Default::default()
     };

@@ -1,0 +1,294 @@
+//! Replication integration: primary + follower coordinators in one
+//! process, talking over real TCP.
+//!
+//! Covers the full follower lifecycle — snapshot bootstrap, WAL-tail
+//! catch-up to seq parity, bit-identical read serving, the read-only
+//! insert redirect, promotion to writable, restart-resume without
+//! re-bootstrapping, and the retained-previous-segment serve path a
+//! follower needs when it lags across a snapshot rotation. The
+//! two-*process* lanes (kill -9 the real binary, promote the survivor)
+//! live in `soak_recovery.rs`.
+
+use cabin::coordinator::client::Client;
+use cabin::coordinator::{Coordinator, CoordinatorConfig};
+use cabin::data::CatVector;
+use cabin::persist::{FsyncPolicy, PersistConfig, PersistMode};
+use cabin::replica::shipper::{self, Tail};
+use cabin::testing::TempDir;
+use cabin::util::rng::Xoshiro256;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const DIM: usize = 600;
+const CATS: u16 = 10;
+const SHARDS: usize = 2;
+
+fn base_config(dir: &TempDir) -> CoordinatorConfig {
+    CoordinatorConfig {
+        input_dim: DIM,
+        num_categories: CATS,
+        sketch_dim: 128,
+        seed: 5,
+        num_shards: SHARDS,
+        use_xla: false,
+        persist: PersistConfig {
+            mode: PersistMode::WalSnapshot,
+            data_dir: Some(dir.path().to_path_buf()),
+            fsync: FsyncPolicy::Never,
+            snapshot_every: 0, // rotations only where a test forces them
+            commit_window_us: 0,
+            wal_max_bytes: 0,
+        },
+        ..Default::default()
+    }
+}
+
+fn follower_config(dir: &TempDir, primary: SocketAddr) -> CoordinatorConfig {
+    CoordinatorConfig {
+        replicate_from: Some(primary.to_string()),
+        repl_poll_ms: 1,
+        ..base_config(dir)
+    }
+}
+
+fn serve(config: CoordinatorConfig) -> (SocketAddr, Arc<Coordinator>, std::thread::JoinHandle<()>) {
+    let coordinator = Arc::new(Coordinator::try_new(config).unwrap());
+    let (tx, rx) = std::sync::mpsc::sync_channel(1);
+    let server = Arc::clone(&coordinator);
+    let handle = std::thread::spawn(move || {
+        server
+            .serve("127.0.0.1:0", |addr| {
+                let _ = tx.send(addr);
+            })
+            .unwrap();
+    });
+    (rx.recv().unwrap(), coordinator, handle)
+}
+
+fn vectors(seed: u64, n: usize) -> Vec<CatVector> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| CatVector::random(DIM, 40, CATS, &mut rng)).collect()
+}
+
+/// Poll both servers' `persist_next_seq_shard{i}` stats until they agree
+/// on every shard (the definition of catch-up parity).
+fn wait_for_parity(primary: &mut Client, follower: &mut Client) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let mut equal = true;
+        for si in 0..SHARDS {
+            let field = format!("persist_next_seq_shard{si}");
+            if primary.stat(&field).unwrap() != follower.stat(&field).unwrap() {
+                equal = false;
+                break;
+            }
+        }
+        if equal {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "follower never reached seq parity with the primary"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn follower_bootstraps_catches_up_and_serves_identical_reads() {
+    let p_dir = TempDir::new("repl-primary");
+    let f_dir = TempDir::new("repl-follower");
+    let (p_addr, _primary, p_handle) = serve(base_config(&p_dir));
+    let mut pc = Client::connect(&p_addr.to_string()).unwrap();
+    let pts = vectors(1, 40);
+    // half before a snapshot (bootstrap path), half after (tail path)
+    for v in &pts[..20] {
+        pc.insert(v.clone()).unwrap();
+    }
+    assert_eq!(pc.snapshot().unwrap(), 1);
+    for v in &pts[20..] {
+        pc.insert(v.clone()).unwrap();
+    }
+    let (f_addr, follower, f_handle) = serve(follower_config(&f_dir, p_addr));
+    let mut fc = Client::connect(&f_addr.to_string()).unwrap();
+    wait_for_parity(&mut pc, &mut fc);
+    // read-replica role and catch-up visible in stats
+    assert_eq!(fc.stat("repl_role").unwrap(), 1.0);
+    assert!(fc.stat("repl_frames_applied").unwrap() >= 20.0);
+    assert_eq!(fc.stat("repl_diverged").unwrap(), 0.0);
+    assert!(pc.stat("repl_frames_shipped").unwrap() >= 20.0);
+    assert!(pc.stat("repl_snapshots_served").unwrap() >= 1.0);
+    // batched reads are bit-identical to the primary's
+    let probes: Vec<CatVector> = pts[..8].to_vec();
+    let from_primary = pc.query_batch(probes.clone(), 5).unwrap();
+    let from_follower = fc.query_batch(probes, 5).unwrap();
+    assert_eq!(from_primary, from_follower);
+    // distance agrees too (same ids resolve on both sides)
+    assert_eq!(fc.distance(3, 3).unwrap(), 0.0);
+    assert_eq!(pc.distance(3, 17).unwrap(), fc.distance(3, 17).unwrap());
+    // writes are rejected with a redirect naming the primary
+    let err = fc.insert(pts[0].clone()).unwrap_err().to_string();
+    assert!(err.contains("read-only replica"), "{err}");
+    assert!(err.contains(&p_addr.to_string()), "{err}");
+    // live inserts keep flowing through the tail
+    let extra = vectors(2, 5);
+    let mut extra_ids = Vec::new();
+    for v in &extra {
+        extra_ids.push(pc.insert(v.clone()).unwrap());
+    }
+    wait_for_parity(&mut pc, &mut fc);
+    for (v, id) in extra.iter().zip(&extra_ids) {
+        let hits = fc.query(v.clone(), 1).unwrap();
+        assert_eq!(hits[0].id, *id);
+        assert!(hits[0].dist < 1e-9);
+    }
+    fc.shutdown().unwrap();
+    f_handle.join().unwrap();
+    drop(follower);
+    pc.shutdown().unwrap();
+    p_handle.join().unwrap();
+}
+
+#[test]
+fn follower_restart_resumes_and_promotion_flips_writable() {
+    let p_dir = TempDir::new("repl-promote-primary");
+    let f_dir = TempDir::new("repl-promote-follower");
+    let (p_addr, _primary, p_handle) = serve(base_config(&p_dir));
+    let mut pc = Client::connect(&p_addr.to_string()).unwrap();
+    let pts = vectors(3, 30);
+    for v in &pts[..18] {
+        pc.insert(v.clone()).unwrap();
+    }
+    // first follower life: bootstrap + parity, then graceful shutdown
+    {
+        let (f_addr, _f, f_handle) = serve(follower_config(&f_dir, p_addr));
+        let mut fc = Client::connect(&f_addr.to_string()).unwrap();
+        wait_for_parity(&mut pc, &mut fc);
+        fc.shutdown().unwrap();
+        f_handle.join().unwrap();
+    }
+    // primary keeps moving while the follower is down
+    for v in &pts[18..] {
+        pc.insert(v.clone()).unwrap();
+    }
+    // second follower life over the SAME dir: resume (no re-bootstrap:
+    // the primary serves no second snapshot), catch up, then promote
+    let (f_addr, _f, f_handle) = serve(follower_config(&f_dir, p_addr));
+    let mut fc = Client::connect(&f_addr.to_string()).unwrap();
+    wait_for_parity(&mut pc, &mut fc);
+    assert_eq!(
+        pc.stat("repl_snapshots_served").unwrap(),
+        1.0,
+        "a resumed follower must not re-bootstrap"
+    );
+    let applied = fc.promote().unwrap();
+    assert_eq!(applied.len(), SHARDS);
+    assert_eq!(applied.iter().sum::<u64>(), 30, "30 insert frames applied");
+    assert_eq!(fc.stat("repl_role").unwrap(), 2.0);
+    // promoted: inserts continue the primary's id line
+    let novel = vectors(4, 3);
+    let id = fc.insert(novel[0].clone()).unwrap();
+    assert_eq!(id, 30);
+    let hits = fc.query(novel[0].clone(), 1).unwrap();
+    assert_eq!(hits[0].id, id);
+    assert!(hits[0].dist < 1e-9);
+    // promote is idempotent
+    assert_eq!(fc.promote().unwrap().len(), SHARDS);
+    // pre-promotion corpus still served exactly
+    for (i, v) in pts.iter().enumerate() {
+        let hits = fc.query(v.clone(), 1).unwrap();
+        assert_eq!(hits[0].id, i, "id {i} lost across promotion");
+        assert!(hits[0].dist < 1e-9);
+    }
+    fc.shutdown().unwrap();
+    f_handle.join().unwrap();
+    pc.shutdown().unwrap();
+    p_handle.join().unwrap();
+}
+
+#[test]
+fn lagging_followers_are_served_from_the_retained_segment() {
+    // shipper-level determinism (no scheduler dependence): rotate the
+    // primary, then ask for seqs the live segment no longer covers
+    let p_dir = TempDir::new("repl-retention");
+    let (p_addr, primary, p_handle) = serve(base_config(&p_dir));
+    let mut pc = Client::connect(&p_addr.to_string()).unwrap();
+    for v in &vectors(5, 12) {
+        pc.insert(v.clone()).unwrap();
+    }
+    assert_eq!(pc.snapshot().unwrap(), 1);
+    let p = primary.store.persistence().unwrap();
+    let wpr = p.words_per_row();
+    for si in 0..SHARDS {
+        let absorbed = p.seq_view().base_seqs[si];
+        if absorbed == 0 {
+            continue; // this shard had no pre-rotation frames
+        }
+        // from_seq 0 predates the live base → retained gen-0 segment
+        match shipper::wal_tail(p, si, 0, usize::MAX).unwrap() {
+            Tail::Frames { frames, bytes, live_seq, .. } => {
+                assert_eq!(frames, absorbed, "whole retained segment served");
+                assert_eq!(live_seq, p.committed_seq(si));
+                let replay = cabin::persist::wal::scan_frames(&bytes, wpr);
+                assert_eq!(replay.records.len() as u64, frames);
+                assert!(!replay.truncated);
+            }
+            _ => panic!("retained segment not served for shard {si}"),
+        }
+    }
+    // a second rotation expires generation 0: now seq 0 needs a snapshot
+    for v in &vectors(6, 4) {
+        pc.insert(v.clone()).unwrap();
+    }
+    assert_eq!(pc.snapshot().unwrap(), 2);
+    let needs_snapshot = (0..SHARDS).any(|si| {
+        p.seq_view().prev.as_ref().is_some_and(|(_, bases)| bases[si] > 0)
+            && matches!(
+                shipper::wal_tail(p, si, 0, usize::MAX).unwrap(),
+                Tail::SnapshotNeeded { .. }
+            )
+    });
+    assert!(needs_snapshot, "expired history must demand a re-seed");
+    // beyond the durable horizon = divergence, never served
+    match shipper::wal_tail(p, 0, 1 << 40, 4096).unwrap() {
+        Tail::Diverged { live_seq } => assert!(live_seq < 1 << 40),
+        _ => panic!("a follower ahead of the primary must read as diverged"),
+    }
+    pc.shutdown().unwrap();
+    p_handle.join().unwrap();
+}
+
+#[test]
+fn repl_ops_and_replicas_fail_descriptively_without_persistence() {
+    // a non-durable server cannot ship (no WAL to ship); the replica
+    // client surfaces the server's error line
+    let dir = TempDir::new("repl-nondurable");
+    let cfg = CoordinatorConfig {
+        persist: PersistConfig::default(), // off
+        ..base_config(&dir)
+    };
+    let (addr, _c, handle) = serve(cfg);
+    let mut rc = cabin::replica::follower::ReplClient::connect(&addr.to_string()).unwrap();
+    let err = rc.fetch_snapshot().unwrap_err().to_string();
+    assert!(err.contains("--data-dir"), "{err}");
+    let err = rc.fetch_tail(0, 0, 4096).unwrap_err().to_string();
+    assert!(err.contains("--data-dir"), "{err}");
+    // a mismatched replica configuration is refused at bootstrap with the
+    // offending fields named
+    let f_dir = TempDir::new("repl-mismatch");
+    let durable_dir = TempDir::new("repl-mismatch-primary");
+    let (p_addr, _p, p_handle) = serve(base_config(&durable_dir));
+    let bad = CoordinatorConfig {
+        seed: 999,
+        ..follower_config(&f_dir, p_addr)
+    };
+    let err = Coordinator::try_new(bad).unwrap_err();
+    assert!(format!("{err:#}").contains("seed"), "{err:#}");
+    let mut pc = Client::connect(&p_addr.to_string()).unwrap();
+    pc.shutdown().unwrap();
+    p_handle.join().unwrap();
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.shutdown().unwrap();
+    handle.join().unwrap();
+}

@@ -28,11 +28,17 @@ struct ServerProc {
 
 impl ServerProc {
     fn spawn(data_dir: &std::path::Path, extra_args: &[&str]) -> ServerProc {
+        Self::spawn_at(data_dir, "127.0.0.1:0", extra_args)
+    }
+
+    /// As [`ServerProc::spawn`], with an explicit bind address — a
+    /// restarted primary must come back on the port its follower targets.
+    fn spawn_at(data_dir: &std::path::Path, addr: &str, extra_args: &[&str]) -> ServerProc {
         let mut child = Command::new(env!("CARGO_BIN_EXE_cabin"))
             .args([
                 "serve",
                 "--addr",
-                "127.0.0.1:0",
+                addr,
                 "--dim",
                 "400",
                 "--categories",
@@ -166,4 +172,148 @@ fn kill9_with_group_commit_recovers_every_acked_insert() {
             500
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// Two-process replication lanes: a real follower process replicating a
+// real primary process, with kill -9 on both sides.
+
+const SHARDS: usize = 2;
+
+/// Ingest `n` vectors through `threads` concurrent clients, returning
+/// every acknowledged `(id, vector)` pair.
+fn acked_ingest(addr: &str, threads: usize, n: usize, seed: u64) -> Vec<(usize, CatVector)> {
+    let acked = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let acked = &acked;
+            s.spawn(move || {
+                let mut c = Client::connect(addr).expect("connect ingest");
+                let mut rng = Xoshiro256::new(seed + t as u64);
+                for _ in 0..n / threads {
+                    let v = CatVector::random(DIM, 50, 8, &mut rng);
+                    let id = c.insert(v.clone()).expect("insert");
+                    acked.lock().unwrap().push((id, v));
+                }
+            });
+        }
+    });
+    acked.into_inner().unwrap()
+}
+
+/// Poll both servers until their per-shard durable seq horizons agree.
+fn wait_parity(primary: &mut Client, follower: &mut Client) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let equal = (0..SHARDS).all(|si| {
+            let field = format!("persist_next_seq_shard{si}");
+            primary.stat(&field).unwrap() == follower.stat(&field).unwrap()
+        });
+        if equal {
+            return;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "follower never reached seq parity"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+}
+
+fn assert_serves_exactly(c: &mut Client, acked: &[(usize, CatVector)], every: usize) {
+    for (id, v) in acked.iter().step_by(every.max(1)) {
+        let hits = c.query(v.clone(), 1).expect("query");
+        assert_eq!(hits[0].id, *id, "id {id} lost");
+        assert!(hits[0].dist < 1e-9, "id {id} corrupted (dist {})", hits[0].dist);
+    }
+}
+
+#[test]
+fn replication_follower_survives_kill9_and_promotes_losing_no_acked_insert() {
+    let soak = std::env::var("CABIN_SOAK").ok().as_deref() == Some("1");
+    // soak: 8 threads × 6250 × 2 phases = a 100k-row durable corpus (the
+    // acceptance bar); fast mode keeps the same shape at tier-1 scale
+    let (threads, phase) = if soak { (8, 6_250) } else { (2, 30) };
+    let dir_p = TempDir::new("soak-repl-primary");
+    let dir_f = TempDir::new("soak-repl-follower");
+    let mut primary = ServerProc::spawn(dir_p.path(), &["--commit-window-us", "500"]);
+    let mut acked = acked_ingest(&primary.addr, threads, threads * phase, 7);
+    // simulate a follower killed mid-bootstrap: stray snapshot leftovers
+    // without a MANIFEST must be harmless on the next start
+    std::fs::write(dir_f.path().join("snap-1-shard-0.bin"), b"torn bootstrap").unwrap();
+    let repl_args = ["--replicate-from", primary.addr.as_str()];
+    let mut follower = ServerProc::spawn(dir_f.path(), &repl_args);
+    // kill the follower mid-catch-up; the restart must resume cleanly
+    follower.kill9();
+    let follower = ServerProc::spawn(dir_f.path(), &repl_args);
+    // keep ingesting while the follower races to catch up
+    acked.extend(acked_ingest(&primary.addr, threads, threads * phase, 1_000));
+    let mut pc = Client::connect(&primary.addr).expect("connect primary");
+    let mut fc = Client::connect(&follower.addr).expect("connect follower");
+    wait_parity(&mut pc, &mut fc);
+    assert_eq!(fc.stat("repl_role").unwrap(), 1.0);
+    assert_eq!(fc.stat("repl_diverged").unwrap(), 0.0);
+    // the primary dies hard; the caught-up follower takes over
+    primary.kill9();
+    let applied = fc.promote().expect("promote");
+    assert_eq!(applied.len(), SHARDS);
+    assert_eq!(fc.stat("repl_role").unwrap(), 2.0);
+    // LOSES NOTHING: every insert the dead primary ever acked answers
+    // exactly on the promoted follower (sampled in soak mode for time)
+    let every = if soak { 97 } else { 1 };
+    assert_serves_exactly(&mut fc, &acked, every);
+    // and the promoted follower is a real primary now: writes flow and
+    // continue the id line
+    let mut rng = Xoshiro256::new(2);
+    let v = CatVector::random(DIM, 50, 8, &mut rng);
+    let id = fc.insert(v.clone()).expect("insert on promoted follower");
+    assert_eq!(id, acked.len(), "promoted id line must continue the primary's");
+    let _ = fc.shutdown();
+}
+
+#[test]
+fn replication_primary_kill9_mid_ship_leaves_a_consistent_resumable_prefix() {
+    let soak = std::env::var("CABIN_SOAK").ok().as_deref() == Some("1");
+    let (threads, phase) = if soak { (8, 1_200) } else { (2, 30) };
+    let dir_p = TempDir::new("soak-repl-midship-primary");
+    let dir_f = TempDir::new("soak-repl-midship-follower");
+    let mut primary = ServerProc::spawn(dir_p.path(), &[]);
+    let primary_addr = primary.addr.clone();
+    let follower = ServerProc::spawn(dir_f.path(), &["--replicate-from", &primary_addr]);
+    // ingest and kill the primary immediately — shipping is mid-flight
+    let acked = acked_ingest(&primary_addr, threads, threads * phase, 21);
+    primary.kill9();
+    // the follower keeps serving its consistent prefix: stats answer and
+    // any vector it returns at distance 0 is the exact acked one
+    let mut fc = Client::connect(&follower.addr).expect("connect follower");
+    assert_eq!(fc.stat("repl_role").unwrap(), 1.0);
+    assert_eq!(fc.stat("repl_diverged").unwrap(), 0.0);
+    let applied: f64 = (0..SHARDS)
+        .map(|si| fc.stat(&format!("persist_next_seq_shard{si}")).unwrap())
+        .sum();
+    assert!(applied <= acked.len() as f64, "follower ahead of acked history");
+    // the primary restarts on the SAME address (recovery from its WAL);
+    // the follower's retry loop reconnects and finishes catch-up
+    let primary = ServerProc::spawn_at(dir_p.path(), &primary_addr, &[]);
+    assert_eq!(primary.addr, primary_addr, "primary must rebind its port");
+    let mut pc = Client::connect(&primary.addr).expect("connect restarted primary");
+    wait_parity(&mut pc, &mut fc);
+    // every acked insert now answers identically on both processes
+    let every = if soak { 31 } else { 1 };
+    assert_serves_exactly(&mut pc, &acked, every);
+    assert_serves_exactly(&mut fc, &acked, every);
+    // and batched top-k is bit-identical primary vs replica
+    let probes: Vec<CatVector> = acked
+        .iter()
+        .step_by(every * 3 + 1)
+        .map(|(_, v)| v.clone())
+        .collect();
+    let from_primary = pc.query_batch(probes.clone(), 5).expect("primary query_batch");
+    let from_follower = fc.query_batch(probes, 5).expect("follower query_batch");
+    assert_eq!(from_primary, from_follower, "replica top-k diverged from primary");
+    for (id, _) in acked.iter().step_by(13) {
+        assert_eq!(pc.distance(*id, *id).unwrap(), fc.distance(*id, *id).unwrap());
+    }
+    let _ = fc.shutdown();
+    let _ = pc.shutdown();
 }

@@ -1,0 +1,192 @@
+//! Mutable-corpus benchmarks: what a delete (swap-remove + index patch)
+//! and an upsert (re-sketch + in-place overwrite) cost at steady state,
+//! what the WAL adds to a mixed mutation stream, how fast recovery
+//! replays a delete-heavy log, and what the compaction fold — an
+//! ordinary snapshot rotation over the survivors — pauses for.
+
+use cabin::bench::{black_box, Bench};
+use cabin::coordinator::store::ShardedStore;
+use cabin::coordinator::ExecutorConfig;
+use cabin::index::{IndexConfig, IndexMode};
+use cabin::persist::{Fingerprint, FsyncPolicy, PersistConfig, PersistCounters, PersistMode};
+use cabin::sketch::BitVec;
+use cabin::testing::TempDir;
+use cabin::util::rng::Xoshiro256;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+const DIM: usize = 1024;
+const SHARDS: usize = 4;
+
+fn corpus(n: usize) -> Vec<BitVec> {
+    let mut rng = Xoshiro256::new(7);
+    (0..n)
+        .map(|_| BitVec::from_indices(DIM, rng.sample_indices(DIM, 128)))
+        .collect()
+}
+
+fn no_index() -> IndexConfig {
+    IndexConfig {
+        mode: IndexMode::Off,
+        ..Default::default()
+    }
+}
+
+fn fingerprint() -> Fingerprint {
+    Fingerprint {
+        sketch_dim: DIM,
+        seed: 7,
+        num_shards: SHARDS,
+        input_dim: 4 * DIM,
+        num_categories: 64,
+    }
+}
+
+fn durable_cfg(dir: &TempDir, mode: PersistMode) -> PersistConfig {
+    PersistConfig {
+        mode,
+        data_dir: Some(dir.path().to_path_buf()),
+        fsync: FsyncPolicy::Never,
+        snapshot_every: 0, // rotations only where a lane forces them
+        commit_window_us: 0,
+        wal_max_bytes: 0,
+        compact_dead_frames: 0,
+    }
+}
+
+fn open(cfg: &PersistConfig) -> ShardedStore {
+    ShardedStore::open_durable(
+        fingerprint(),
+        &no_index(),
+        cfg,
+        Arc::new(PersistCounters::default()),
+        &ExecutorConfig::default(),
+    )
+    .map(|(store, _)| store)
+    .unwrap()
+}
+
+/// Ingest, then retire every third row and overwrite every fifth — the
+/// delete-heavy history the recovery and compaction lanes replay.
+fn mixed_history(store: &ShardedStore, pts: &[BitVec]) -> usize {
+    let ids = store.insert_batch(pts.to_vec());
+    let mut live = ids.len();
+    for (i, id) in ids.iter().enumerate() {
+        if i % 3 == 0 {
+            store.delete(*id).unwrap();
+            live -= 1;
+        } else if i % 5 == 0 {
+            store.upsert(*id, pts[(i + 1) % pts.len()].clone(), 0).unwrap();
+        }
+    }
+    live
+}
+
+fn main() {
+    let mut b = Bench::from_env("mutation");
+    let fast = std::env::var("CABIN_BENCH_FAST").ok().as_deref() == Some("1");
+    let n: usize = if fast { 2_000 } else { 20_000 };
+    let pts = corpus(n);
+    println!("[bench_mutation] {n}-sketch corpus, d={DIM}, {SHARDS} shards");
+
+    // steady-state churn: delete the oldest row, insert a fresh one —
+    // the swap-remove + id-index patch + placement cost per replaced
+    // row, with the LSH index both off and on (the indexed lane adds the
+    // O(L) bucket removals/appends under the same shard lock)
+    for (label, mode) in [("scan", IndexMode::Off), ("indexed", IndexMode::On)] {
+        let cfg = IndexConfig {
+            mode,
+            ..Default::default()
+        };
+        let store = ShardedStore::with_index(SHARDS, DIM, &cfg, 7);
+        let mut live: VecDeque<usize> = store.insert_batch(pts.clone()).into();
+        let mut next = 0usize;
+        let ops = n / 4;
+        b.bench_with_throughput(
+            &format!("churn/delete+insert/{label}/{ops}"),
+            Some(ops as f64),
+            || {
+                for _ in 0..ops {
+                    let id = live.pop_front().unwrap();
+                    store.delete(id).unwrap();
+                    live.push_back(store.insert_batch(vec![pts[next % n].clone()])[0]);
+                    next += 1;
+                }
+                black_box(store.live_len());
+            },
+        );
+    }
+
+    // steady-state upsert: same id, new row — re-sketching is the
+    // caller's cost here, so this isolates overwrite + weight + index
+    // maintenance
+    {
+        let store = ShardedStore::with_index(SHARDS, DIM, &no_index(), 7);
+        let ids = store.insert_batch(pts.clone());
+        let ops = n / 4;
+        let mut round = 0usize;
+        b.bench_with_throughput(
+            &format!("upsert/in-place/{ops}"),
+            Some(ops as f64),
+            || {
+                for (i, id) in ids.iter().take(ops).enumerate() {
+                    store
+                        .upsert(*id, pts[(i + round + 1) % n].clone(), 0)
+                        .unwrap();
+                }
+                round += 1;
+                black_box(store.live_len());
+            },
+        );
+    }
+
+    // the WAL tax on a mixed mutation stream (fresh dir per iteration so
+    // recovery never pollutes the measurement)
+    b.bench_with_throughput(
+        &format!("ingest-mixed/wal-fsync-never/{n}"),
+        Some(n as f64),
+        || {
+            let dir = TempDir::new("bench-mut-wal");
+            let store = open(&durable_cfg(&dir, PersistMode::Wal));
+            black_box(mixed_history(&store, &pts));
+        },
+    );
+
+    // recovery of the mixed log — replaying deletes and upserts record
+    // by record — then the compaction fold (a snapshot rotation over the
+    // survivors) and recovery from the folded generation
+    {
+        let dir = TempDir::new("bench-mut-recover");
+        let cfg = durable_cfg(&dir, PersistMode::WalSnapshot);
+        let live = {
+            let store = open(&cfg);
+            mixed_history(&store, &pts)
+        };
+        b.bench_with_throughput(&format!("recover/mixed-wal/{n}"), Some(n as f64), || {
+            let store = open(&cfg);
+            assert_eq!(store.live_len(), live);
+            black_box(store.live_len());
+        });
+
+        let store = open(&cfg);
+        b.bench_with_throughput(
+            &format!("compact/fold-rotation/{live}"),
+            Some(live as f64),
+            || {
+                black_box(store.persist_snapshot().unwrap());
+            },
+        );
+        drop(store);
+        b.bench_with_throughput(
+            &format!("recover/compacted/{live}"),
+            Some(live as f64),
+            || {
+                let store = open(&cfg);
+                assert_eq!(store.live_len(), live);
+                black_box(store.live_len());
+            },
+        );
+    }
+
+    b.finish();
+}

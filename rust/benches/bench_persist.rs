@@ -53,6 +53,7 @@ fn durable_cfg(dir: &TempDir, mode: PersistMode, fsync: FsyncPolicy, every: u64)
         // own window explicitly so the two policies are benched apart
         commit_window_us: 0,
         wal_max_bytes: 0,
+        compact_dead_frames: 0,
     }
 }
 

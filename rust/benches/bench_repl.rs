@@ -45,6 +45,7 @@ fn config(dir: &TempDir) -> CoordinatorConfig {
             snapshot_every: 0, // rotations only where the bench forces them
             commit_window_us: 0,
             wal_max_bytes: 0,
+            compact_dead_frames: 0,
         },
         ..Default::default()
     }

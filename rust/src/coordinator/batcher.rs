@@ -1,5 +1,16 @@
 //! Dynamic batcher: the serving-path component that turns a stream of
-//! single-vector inserts into sketching batches.
+//! single-vector writes into sketching batches.
+//!
+//! All mutating ops — insert, insert-with-TTL, delete, upsert — flow
+//! through the *same* bounded queue. That is what keeps per-client write
+//! order: a client's `insert x; delete x` lands in queue order, flushes
+//! in queue order, and is acked in queue order. A batch that is pure
+//! untimed inserts takes the blocked fast path
+//! (`begin_insert_batch`); any batch containing a delete, upsert, or TTL
+//! insert goes through the general mutation path
+//! (`begin_mutation_batch`), which preserves intra-batch op order. Both
+//! share the group-commit window, so mixed write streams still coalesce
+//! their fsyncs.
 //!
 //! Flush policy (vLLM-style): a batch is dispatched when it reaches
 //! `max_batch` items OR the oldest queued item has waited `max_delay`.
@@ -25,7 +36,7 @@
 //! native fused sketcher.
 
 use super::metrics::Metrics;
-use super::store::{InsertTicket, ShardedStore};
+use super::store::{InsertTicket, MutationOp, MutationResult, MutationTicket, ShardedStore};
 use crate::data::CatVector;
 use crate::runtime::XlaHandle;
 use crate::sketch::{BitVec, CabinSketcher};
@@ -95,13 +106,25 @@ impl SketchBackend {
     }
 }
 
-/// A submitted insert's reply: the assigned id, or the durability error
-/// that prevented the ack (WAL commit failure — the rows may be in memory
+/// A submitted write's reply: the affected id (assigned for inserts,
+/// echoed for delete/upsert), or the error that prevented the ack —
+/// either a per-op failure (delete of an id the store does not hold) or
+/// a durability failure (WAL commit error — the rows may be in memory
 /// but were NOT committed, so the client must not be told they are safe).
 pub type InsertReply = Result<usize, String>;
 
+/// One queued write. Everything flows through the same queue so replies
+/// keep per-client submission order across op kinds.
+enum PendingOp {
+    /// `deadline` is an absolute unix-millis expiry, 0 = none (the server
+    /// converts the wire's relative `ttl_ms` before submitting).
+    Insert { vec: CatVector, deadline: u64 },
+    Delete { id: usize },
+    Upsert { id: usize, vec: CatVector, deadline: u64 },
+}
+
 struct Pending {
-    vec: CatVector,
+    op: PendingOp,
     enqueued: Instant,
     reply: SyncSender<InsertReply>,
 }
@@ -113,14 +136,11 @@ pub struct BatchSubmitter {
 }
 
 impl BatchSubmitter {
-    /// Blocking submit; returns the assigned global id once the batch the
-    /// item landed in has been flushed *and* (on durable stores) its WAL
-    /// commit landed. A durability failure comes back as `Err`, not an id.
-    pub fn insert(&self, vec: CatVector) -> anyhow::Result<usize> {
+    fn submit(&self, op: PendingOp) -> anyhow::Result<usize> {
         let (reply_tx, reply_rx) = sync_channel(1);
         self.tx
             .send(Pending {
-                vec,
+                op,
                 enqueued: Instant::now(),
                 reply: reply_tx,
             })
@@ -131,27 +151,64 @@ impl BatchSubmitter {
             .map_err(|msg| anyhow::anyhow!(msg))
     }
 
+    /// Blocking submit; returns the assigned global id once the batch the
+    /// item landed in has been flushed *and* (on durable stores) its WAL
+    /// commit landed. A durability failure comes back as `Err`, not an id.
+    pub fn insert(&self, vec: CatVector) -> anyhow::Result<usize> {
+        self.submit(PendingOp::Insert { vec, deadline: 0 })
+    }
+
+    /// Insert with an absolute unix-millis expiry deadline (0 = none).
+    pub fn insert_with_deadline(&self, vec: CatVector, deadline: u64) -> anyhow::Result<usize> {
+        self.submit(PendingOp::Insert { vec, deadline })
+    }
+
+    /// Delete a live id; the reply echoes the id. Deleting an id the
+    /// store does not hold is a per-op error, not a batch failure.
+    pub fn delete(&self, id: usize) -> anyhow::Result<usize> {
+        self.submit(PendingOp::Delete { id })
+    }
+
+    /// Replace the vector behind `id` (or resurrect a deleted id), with
+    /// an absolute expiry deadline (0 = clear any expiry).
+    pub fn upsert(&self, id: usize, vec: CatVector, deadline: u64) -> anyhow::Result<usize> {
+        self.submit(PendingOp::Upsert { id, vec, deadline })
+    }
+
     /// Non-blocking submit (used by load generators to observe
     /// backpressure). Err(vec) when the queue is full.
     pub fn try_insert_nowait(&self, vec: CatVector) -> Result<Receiver<InsertReply>, CatVector> {
         let (reply_tx, reply_rx) = sync_channel(1);
         match self.tx.try_send(Pending {
-            vec,
+            op: PendingOp::Insert { vec, deadline: 0 },
             enqueued: Instant::now(),
             reply: reply_tx,
         }) {
             Ok(()) => Ok(reply_rx),
-            Err(TrySendError::Full(p)) | Err(TrySendError::Disconnected(p)) => Err(p.vec),
+            Err(TrySendError::Full(p)) | Err(TrySendError::Disconnected(p)) => match p.op {
+                PendingOp::Insert { vec, .. } => Err(vec),
+                _ => unreachable!("try_insert_nowait only queues inserts"),
+            },
         }
     }
 }
 
+/// The durability ticket behind a placed batch: the blocked insert fast
+/// path and the general mutation path settle through different store
+/// calls.
+enum AckTicket {
+    Insert(InsertTicket),
+    Mutation(MutationTicket),
+}
+
 /// A placed batch awaiting its durability wait + client replies, handed
-/// from the batcher thread to the completion thread.
+/// from the batcher thread to the completion thread. `outcomes[i]` is
+/// item i's placement result (id, or a per-op error such as deleting an
+/// unheld id); the ticket's commit error, if any, supersedes the ids.
 struct AckJob {
     items: Vec<Pending>,
-    ids: Vec<usize>,
-    ticket: InsertTicket,
+    outcomes: Vec<InsertReply>,
+    ticket: AckTicket,
 }
 
 /// The batcher worker. Owns the backend and writes into the store.
@@ -258,6 +315,10 @@ fn run_loop(
 /// (the channel is FIFO and [`ack_loop`] settles jobs in order), and the
 /// batcher is free to sketch the next batch while this one's commit
 /// window is still in flight.
+///
+/// A batch of pure untimed inserts takes the blocked placement fast
+/// path; anything containing a delete, upsert, or TTL deadline goes
+/// through the general mutation path, which applies ops in batch order.
 fn flush(
     backend: &SketchBackend,
     store: &ShardedStore,
@@ -268,16 +329,70 @@ fn flush(
     if pending.is_empty() {
         return;
     }
-    let batch: Vec<CatVector> = pending.iter().map(|p| p.vec.clone()).collect();
-    let sketches = backend.sketch_batch(&batch, metrics);
     metrics.batches_flushed.fetch_add(1, Ordering::Relaxed);
     metrics
         .batch_items
         .fetch_add(pending.len() as u64, Ordering::Relaxed);
-    let (ids, ticket) = store.begin_insert_batch(sketches);
+    let plain_inserts = pending
+        .iter()
+        .all(|p| matches!(p.op, PendingOp::Insert { deadline: 0, .. }));
+    let (outcomes, ticket) = if plain_inserts {
+        let batch: Vec<CatVector> = pending
+            .iter()
+            .map(|p| match &p.op {
+                PendingOp::Insert { vec, .. } => vec.clone(),
+                _ => unreachable!(),
+            })
+            .collect();
+        let sketches = backend.sketch_batch(&batch, metrics);
+        let (ids, ticket) = store.begin_insert_batch(sketches);
+        (ids.into_iter().map(Ok).collect(), AckTicket::Insert(ticket))
+    } else {
+        // one backend call sketches every vector-carrying op in the batch
+        // (deletes carry none), then the sketches are zipped back in order
+        let to_sketch: Vec<CatVector> = pending
+            .iter()
+            .filter_map(|p| match &p.op {
+                PendingOp::Insert { vec, .. } | PendingOp::Upsert { vec, .. } => Some(vec.clone()),
+                PendingOp::Delete { .. } => None,
+            })
+            .collect();
+        let mut sketches = if to_sketch.is_empty() {
+            Vec::new()
+        } else {
+            backend.sketch_batch(&to_sketch, metrics)
+        }
+        .into_iter();
+        let ops: Vec<MutationOp> = pending
+            .iter()
+            .map(|p| match &p.op {
+                PendingOp::Insert { deadline, .. } => MutationOp::Insert {
+                    sketch: sketches.next().unwrap(),
+                    deadline: *deadline,
+                },
+                PendingOp::Delete { id } => MutationOp::Delete { id: *id },
+                PendingOp::Upsert { id, deadline, .. } => MutationOp::Upsert {
+                    id: *id,
+                    sketch: sketches.next().unwrap(),
+                    deadline: *deadline,
+                },
+            })
+            .collect();
+        let (results, ticket) = store.begin_mutation_batch(ops);
+        let outcomes = results
+            .into_iter()
+            .map(|r| match r {
+                MutationResult::Inserted { id }
+                | MutationResult::Deleted { id }
+                | MutationResult::Upserted { id } => Ok(id),
+                MutationResult::Failed { error } => Err(error),
+            })
+            .collect();
+        (outcomes, AckTicket::Mutation(ticket))
+    };
     let job = AckJob {
         items: std::mem::take(pending),
-        ids,
+        outcomes,
         ticket,
     };
     if let Err(std::sync::mpsc::SendError(job)) = ack_tx.send(job) {
@@ -301,20 +416,31 @@ fn ack_loop(store: Arc<ShardedStore>, metrics: Arc<Metrics>, rx: Receiver<AckJob
 /// scannable in memory, but telling the client "inserted" would promise
 /// crash-durability that was not met.
 fn settle(store: &ShardedStore, metrics: &Metrics, job: AckJob) {
-    match store.finish_insert_batch(job.ticket) {
+    let committed = match job.ticket {
+        AckTicket::Insert(t) => store.finish_insert_batch(t),
+        AckTicket::Mutation(t) => store.finish_mutation_batch(t),
+    };
+    match committed {
         Ok(()) => {
-            for (p, id) in job.items.into_iter().zip(job.ids) {
-                metrics.record_insert_latency(p.enqueued.elapsed().as_secs_f64());
-                let _ = p.reply.send(Ok(id));
+            for (p, outcome) in job.items.into_iter().zip(job.outcomes) {
+                if outcome.is_ok() {
+                    metrics.record_insert_latency(p.enqueued.elapsed().as_secs_f64());
+                }
+                let _ = p.reply.send(outcome);
             }
         }
         Err(e) => {
             let e = e.context(
-                "insert placed in memory but its WAL commit failed — not acknowledged as durable",
+                "write placed in memory but its WAL commit failed — not acknowledged as durable",
             );
             let msg = format!("{e:#}");
-            for p in job.items {
-                let _ = p.reply.send(Err(msg.clone()));
+            for (p, outcome) in job.items.into_iter().zip(job.outcomes) {
+                // ops that already failed at placement keep their own
+                // error; the commit failure covers the placed ones
+                let _ = p.reply.send(match outcome {
+                    Ok(_) => Err(msg.clone()),
+                    err => err,
+                });
             }
         }
     }
@@ -423,6 +549,7 @@ mod tests {
             snapshot_every: 0,
             commit_window_us: 2_000,
             wal_max_bytes: 0,
+            compact_dead_frames: 0,
         };
         let open = || {
             let (store, _) = ShardedStore::open_durable(
@@ -476,6 +603,45 @@ mod tests {
         // acked ⇒ recoverable, through the pipelined window path too
         let back = open();
         assert_eq!(back.len(), 30);
+    }
+
+    #[test]
+    fn mixed_mutations_keep_submission_order_and_settle_per_op() {
+        // blocking submits serialise: each op acks before the next is
+        // queued, so the delete/upsert always observe the earlier inserts
+        // (intra-batch op order is covered by the store's own tests)
+        let (mut b, store, _m) = setup(64, 1);
+        let mut rng = Xoshiro256::new(9);
+        let sk = CabinSketcher::from_config(SketchConfig::new(500, 8, 128, 7));
+        let vs: Vec<CatVector> = (0..3).map(|_| CatVector::random(500, 20, 8, &mut rng)).collect();
+        let replacement = CatVector::random(500, 20, 8, &mut rng);
+        let sub = b.submitter.clone();
+        let (v0, v1, v2, rep) = (
+            vs[0].clone(),
+            vs[1].clone(),
+            vs[2].clone(),
+            replacement.clone(),
+        );
+        let h = std::thread::spawn(move || {
+            let a = sub.insert(v0).unwrap();
+            let bb = sub.insert(v1).unwrap();
+            let c = sub.insert_with_deadline(v2, u64::MAX).unwrap();
+            let del = sub.delete(a).unwrap();
+            let up = sub.upsert(bb, rep, 0).unwrap();
+            (a, bb, c, del, up)
+        });
+        let (a, bb, c, del, up) = h.join().unwrap();
+        assert_eq!(del, a);
+        assert_eq!(up, bb);
+        assert_eq!(store.get(a), None, "deleted in the same batch");
+        assert_eq!(store.get(bb), Some(sk.sketch(&replacement)));
+        assert!(store.get(c).is_some());
+        assert_eq!(store.live_len(), 2);
+        // a per-op failure (unheld id) errors that op only
+        let err = b.submitter.delete(a).unwrap_err();
+        assert!(err.to_string().contains("does not hold"), "{err:#}");
+        assert!(b.submitter.insert(vs[0].clone()).is_ok());
+        b.shutdown();
     }
 
     #[test]

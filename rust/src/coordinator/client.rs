@@ -40,6 +40,41 @@ impl Client {
         }
     }
 
+    /// Insert with a relative time-to-live: the primary stamps the
+    /// absolute deadline and its background sweep deletes the row once it
+    /// passes (with sweep-interval granularity).
+    pub fn insert_ttl(&mut self, vec: CatVector, ttl_ms: u64) -> Result<usize> {
+        let req = match ttl_ms {
+            0 => Request::Insert { vec },
+            _ => Request::InsertTtl { vec, ttl_ms },
+        };
+        match self.call(&req)? {
+            Response::Inserted { id } => Ok(id),
+            Response::Error { message } => bail!("insert failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Delete a live id from the corpus (primary only; replicated to
+    /// followers like any other write).
+    pub fn delete(&mut self, id: usize) -> Result<()> {
+        match self.call(&Request::Delete { id })? {
+            Response::Deleted { .. } => Ok(()),
+            Response::Error { message } => bail!("delete failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Replace the vector behind `id` in place (or resurrect a deleted
+    /// id). `ttl_ms == 0` clears any previous expiry on the id.
+    pub fn upsert(&mut self, id: usize, vec: CatVector, ttl_ms: u64) -> Result<()> {
+        match self.call(&Request::Upsert { id, vec, ttl_ms })? {
+            Response::Upserted { .. } => Ok(()),
+            Response::Error { message } => bail!("upsert failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
     pub fn query(&mut self, vec: CatVector, k: usize) -> Result<Vec<Hit>> {
         match self.call(&Request::Query { vec, k })? {
             Response::Hits { hits } => Ok(hits),

@@ -48,6 +48,12 @@ pub struct IndexCounters {
 #[derive(Default)]
 pub struct Metrics {
     pub inserts: AtomicU64,
+    /// Wire deletes served (not TTL expirations — those count separately).
+    pub deletes: AtomicU64,
+    /// Wire upserts served (in-place and resurrecting alike).
+    pub upserts: AtomicU64,
+    /// Rows removed by the background TTL sweep.
+    pub ttl_expirations: AtomicU64,
     pub queries: AtomicU64,
     pub query_batches: AtomicU64,
     pub distances: AtomicU64,
@@ -102,6 +108,12 @@ impl Metrics {
     pub fn snapshot(&self) -> Vec<(String, f64)> {
         let mut out: Vec<(String, f64)> = vec![
             ("inserts".into(), self.inserts.load(Ordering::Relaxed) as f64),
+            ("deletes".into(), self.deletes.load(Ordering::Relaxed) as f64),
+            ("upserts".into(), self.upserts.load(Ordering::Relaxed) as f64),
+            (
+                "ttl_expirations".into(),
+                self.ttl_expirations.load(Ordering::Relaxed) as f64,
+            ),
             ("queries".into(), self.queries.load(Ordering::Relaxed) as f64),
             (
                 "query_batches".into(),
@@ -192,6 +204,14 @@ impl Metrics {
                 "persist_group_commits".into(),
                 self.persist.group_commits.load(Ordering::Relaxed) as f64,
             ),
+            (
+                "persist_wal_dead_frames".into(),
+                self.persist.wal_dead_frames.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "persist_compactions".into(),
+                self.persist.compactions.load(Ordering::Relaxed) as f64,
+            ),
         ];
         out.extend(self.repl.stats_fields());
         let ins = self.insert_latency.lock().unwrap().summary();
@@ -274,6 +294,8 @@ mod tests {
         m.persist.recovery_ms.store(57, Ordering::Relaxed);
         m.persist.generation.store(2, Ordering::Relaxed);
         m.persist.group_commits.fetch_add(5, Ordering::Relaxed);
+        m.persist.wal_dead_frames.fetch_add(6, Ordering::Relaxed);
+        m.persist.compactions.fetch_add(1, Ordering::Relaxed);
         let snap = m.snapshot();
         assert_eq!(stats_field(&snap, "persist_wal_records"), Some(12.0));
         assert_eq!(stats_field(&snap, "persist_wal_bytes"), Some(4096.0));
@@ -281,6 +303,20 @@ mod tests {
         assert_eq!(stats_field(&snap, "persist_recovery_ms"), Some(57.0));
         assert_eq!(stats_field(&snap, "persist_generation"), Some(2.0));
         assert_eq!(stats_field(&snap, "persist_group_commits"), Some(5.0));
+        assert_eq!(stats_field(&snap, "persist_wal_dead_frames"), Some(6.0));
+        assert_eq!(stats_field(&snap, "persist_compactions"), Some(1.0));
+    }
+
+    #[test]
+    fn mutation_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.deletes.fetch_add(4, Ordering::Relaxed);
+        m.upserts.fetch_add(2, Ordering::Relaxed);
+        m.ttl_expirations.fetch_add(9, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert_eq!(stats_field(&snap, "deletes"), Some(4.0));
+        assert_eq!(stats_field(&snap, "upserts"), Some(2.0));
+        assert_eq!(stats_field(&snap, "ttl_expirations"), Some(9.0));
     }
 
     #[test]

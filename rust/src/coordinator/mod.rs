@@ -1,13 +1,17 @@
 //! L3 coordinator — a streaming *sketch service* around the Cabin/Cham
-//! pipeline, shaped like a serving system: requests arrive over TCP as
-//! line-delimited JSON, inserts flow through a deadline/size dynamic
-//! batcher into the sketching backend (AOT/XLA when artifacts match the
-//! dataset configuration, native bit-packed otherwise), sketches land in
-//! point-balanced shard **arenas** (least-loaded by atomically reserved
-//! size), and queries — single or batched — scatter/gather across shards
-//! for top-k by estimated Hamming distance, either by full arena scan or
-//! sublinearly through per-shard multi-probe Hamming-LSH candidate
-//! indexes ([`crate::index`]).
+//! pipeline, shaped like a serving system over a **mutable corpus**:
+//! requests arrive over TCP as line-delimited JSON, writes — inserts
+//! (optionally with a TTL), deletes and upserts — flow through a
+//! deadline/size dynamic batcher (one FIFO queue per client, so a
+//! client's writes apply in submission order) into the sketching backend
+//! (AOT/XLA when artifacts match the dataset configuration, native
+//! bit-packed otherwise), sketches land in point-balanced shard
+//! **arenas** (least-loaded by atomically reserved size; deletes
+//! swap-remove, in-shard upserts overwrite in place), and queries —
+//! single or batched — scatter/gather across shards for top-k by
+//! estimated Hamming distance, either by full arena scan or sublinearly
+//! through per-shard multi-probe Hamming-LSH candidate indexes
+//! ([`crate::index`]) maintained incrementally through every mutation.
 //!
 //! ```text
 //!  TCP conn ─┐                        ┌─ shard 0 ─ worker 0 ─ SketchMatrix arena ┐
@@ -22,7 +26,14 @@
 //!
 //! Storage layout: each shard owns a [`crate::sketch::SketchMatrix`] — one
 //! contiguous row-major `u64` arena plus a cached per-row Hamming weight —
-//! so a shard scan is a linear walk over one allocation. The per-shard
+//! so a shard scan is a linear walk over one allocation. The arena is
+//! mutable: `delete` swap-removes a row (the last row slides into the
+//! hole; the id index and LSH index are patched under the same shard
+//! write lock, so readers never observe a half-applied move), `upsert`
+//! re-sketches and overwrites in place when the id stays on its shard
+//! (delete + fresh placement otherwise), and each row carries an optional
+//! absolute expiry deadline swept by a primary-side background task that
+//! emits ordinary replicated deletes. The per-shard
 //! top-k runs on the bounded max-heap in [`topk`] (one comparison per
 //! candidate against the current k-th best, no per-candidate allocation),
 //! and a dense global id index resolves `get`/`distance` lookups in O(1).
@@ -44,8 +55,10 @@
 //! `auto` once a shard is large enough), each shard also carries an
 //! [`crate::index::LshIndex`] — `L` bands of `b` sampled sketch-bit
 //! positions hashed into bucket tables, maintained incrementally under
-//! the same shard lock: inserts append, and every rebalance move mirrors
-//! its trailing-row pop/append into the two indexes (O(L)). The router
+//! the same shard lock: inserts append, deletes mirror the swap-remove,
+//! in-place upserts rehash the changed row, and every rebalance move
+//! mirrors its trailing-row pop/append into the two indexes (O(L)). The
+//! router
 //! gathers bucket candidates (multi-probing the lowest-confidence bits),
 //! reranks them with the exact Cham estimate on borrowed arena rows, and
 //! falls back to the full heap scan whenever the candidate set cannot
@@ -59,21 +72,28 @@
 //! backed by an append-only WAL — length-prefixed, checksummed records
 //! appended *under the same shard write lock that mutates the arena*, so
 //! log order equals mutation order and every shard recovers independently
-//! — plus periodic stop-the-world snapshot rotations (full arena + id
-//! column + cached weights per shard, committed by an atomic `MANIFEST`
-//! rename, old generation GC'd after). The WAL batch is committed before
-//! the batcher acknowledges an insert: with `fsync = always`, an
-//! acknowledged insert survives `kill -9`. With a group-commit window
+//! — the log records *mutations* (insert, insert-with-TTL, delete,
+//! upsert, rebalance move), not just appends — plus periodic
+//! stop-the-world snapshot rotations (full arena + id column + cached
+//! weights + expiry column per shard, committed by an atomic `MANIFEST`
+//! rename, old generation GC'd after). Deletes and in-place upserts
+//! leave *dead frames* behind; `--compact-dead-frames` makes their count
+//! a third rotation trigger, so compaction is just an ordinary snapshot
+//! cut that starts the log empty (`persist_wal_dead_frames` /
+//! `persist_compactions` stats). The WAL batch is committed before
+//! the batcher acknowledges a write: with `fsync = always`, an
+//! acknowledged write survives `kill -9`. With a group-commit window
 //! configured (`--commit-window-us`, default 1 ms; engaged under
 //! `--fsync always`, where there is an fsync to amortise) the fsync
 //! itself moves off the ack critical path: appends still happen under
 //! the shard lock,
 //! but a dedicated group-commit thread coalesces every batch landing in
 //! the same window into one fsync per touched shard, and each
-//! `insert_batch` blocks until its window's commit lands — same
-//! "acked ⇒ survives kill -9" contract, amortised fsyncs. A WAL commit
-//! *failure* is propagated through the batcher to the client as an insert
-//! error on the wire (never a logged-warning-plus-ack). Recovery
+//! batch — insert-only or mixed-mutation alike — blocks until its
+//! window's commit lands — same "acked ⇒ survives kill -9" contract,
+//! amortised fsyncs. A WAL commit *failure* is propagated through the
+//! batcher to the client as a write error on the wire (never a
+//! logged-warning-plus-ack). Recovery
 //! invariants: the configuration fingerprint (`input_dim`/
 //! `num_categories`/`sketch_dim`/`seed`/`num_shards`) must match or
 //! startup hard-errors (foreign sketches would corrupt every Cham
@@ -89,18 +109,22 @@
 //! because every arena mutation is a WAL frame appended under its
 //! shard's lock, the log *is* the corpus — so read scale-out is log
 //! shipping. Frames carry implicit monotonic per-shard sequence numbers
-//! (position + the manifest-v3 per-shard `base_seqs`); a primary serves
+//! (position + the manifest-v4 per-shard `base_seqs`); a primary serves
 //! `repl_snapshot` (verbatim snapshot arenas + seq anchoring) and
 //! `repl_wal_tail{shard, from_seq}` (checksummed raw frame ranges) on
 //! the same TCP protocol, retaining each rotated-out WAL segment for one
 //! generation so followers can lag across a rotation. A follower
 //! bootstraps those files into its own data dir, recovers through the
-//! ordinary persistence path, applies the live tail continuously
-//! (mirroring the frames into its own WAL before advancing its cursor),
-//! serves single/batched queries bit-identically to the primary from its
-//! own arenas + LSH indexes, rejects `insert` with a redirect, and is
-//! flipped writable by the `promote` op — after which inserts continue
-//! the primary's id/sequence line. Catch-up is observable as
+//! ordinary persistence path, applies the live tail of mutations
+//! continuously (a feasibility pre-pass rejects a chunk before any
+//! mutation lands; frames are mirrored into its own WAL before the
+//! cursor advances; paired cross-shard move frames apply destination
+//! before source), serves single/batched queries bit-identically to the
+//! primary from its own arenas + LSH indexes, rejects writes (`insert`,
+//! `delete`, `upsert`) with a redirect, and is flipped writable by the
+//! `promote` op — after which writes continue the primary's id/sequence
+//! line and the TTL-sweep duty moves with the promotion. Catch-up is
+//! observable as
 //! `repl_*` stats (per-shard applied seq + lag, caught-up/diverged
 //! gauges) and comparable across nodes via `persist_next_seq_shard{i}`.
 //!
@@ -124,9 +148,11 @@
 //! Benches: `bench_coordinator` (ingest policies, single + batched query
 //! scatter/gather), `bench_topk` (arena+heap shard scan vs the seed's
 //! `Vec<BitVec>` insertion-sort scan), `bench_router` (executor vs
-//! scoped-spawn scatter, blocked vs scalar batch scoring) and
+//! scoped-spawn scatter, blocked vs scalar batch scoring),
 //! `bench_persist` (WAL/fsync ingest tax, group-commit coalescing,
-//! snapshot rotation, WAL-vs-snapshot recovery time).
+//! snapshot rotation, WAL-vs-snapshot recovery time) and
+//! `bench_mutation` (delete/upsert throughput, mixed-mutation ingest,
+//! compaction-rotation pause).
 
 pub mod batcher;
 pub mod client;

@@ -4,6 +4,13 @@
 //! ```text
 //! {"op":"insert",  "vec":[0,3,0,…]}             → {"ok":true,"id":17}
 //! {"op":"insert_sparse","dim":4096,"idx":[…],"val":[…]}
+//!   (both insert forms take an optional "ttl_ms": a *relative*
+//!    time-to-live in milliseconds; the primary stamps the absolute
+//!    deadline at apply time and sweeps expired rows in the background)
+//! {"op":"delete",  "id":17}                     → {"ok":true,"deleted":17}
+//! {"op":"upsert",  "id":17, "vec":[…]}          → {"ok":true,"upserted":17}
+//!   (upsert replaces a live id in place or resurrects a deleted one;
+//!    also takes vec/sparse forms and the optional "ttl_ms")
 //! {"op":"query",   "vec":[…], "k":5}            → {"ok":true,"hits":[{"id":3,"dist":41.2},…]}
 //! {"op":"query_batch","k":5,"dim":4096,          ("dim" optional: validated
 //!  "queries":[{"idx":[…],"val":[…]} | {"vec":[…]},…]}  when present)
@@ -43,6 +50,17 @@ use anyhow::{bail, Result};
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Insert { vec: CatVector },
+    /// Insert with a relative time-to-live. Wire form is plain
+    /// `"op":"insert"` plus a nonzero `"ttl_ms"` — a separate variant so
+    /// the untimed fast path stays a one-field struct everywhere it is
+    /// constructed.
+    InsertTtl { vec: CatVector, ttl_ms: u64 },
+    /// Remove a live id from the corpus (primary only; replicated).
+    Delete { id: usize },
+    /// Replace the sketch behind a live id in place, or resurrect a
+    /// deleted id. `ttl_ms == 0` means no expiry (and *clears* any
+    /// previous deadline on the id).
+    Upsert { id: usize, vec: CatVector, ttl_ms: u64 },
     Query { vec: CatVector, k: usize },
     QueryBatch { vecs: Vec<CatVector>, k: usize },
     Distance { a: usize, b: usize },
@@ -68,6 +86,10 @@ pub struct Hit {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
     Inserted { id: usize },
+    /// The id's row was removed from the corpus.
+    Deleted { id: usize },
+    /// The id's sketch was replaced (in place or by resurrection).
+    Upserted { id: usize },
     Hits { hits: Vec<Hit> },
     HitsBatch { results: Vec<Vec<Hit>> },
     Distance { dist: f64 },
@@ -129,6 +151,11 @@ fn parse_vec(obj: &Json, expected_dim: usize) -> Result<CatVector> {
     parse_sparse_pairs(obj, dim)
 }
 
+/// Optional `"ttl_ms"` field: absent or 0 means "no expiry".
+fn parse_ttl(obj: &Json) -> u64 {
+    obj.get("ttl_ms").and_then(|v| v.as_usize()).unwrap_or(0) as u64
+}
+
 /// Parse and validate the `k` field (default 10, must be ≥ 1).
 fn parse_k(obj: &Json) -> Result<usize> {
     let k = obj.get("k").and_then(|k| k.as_usize()).unwrap_or(10);
@@ -143,8 +170,20 @@ impl Request {
         let obj = crate::util::json::parse(line)?;
         let op = obj.req_str("op")?;
         Ok(match op {
-            "insert" | "insert_sparse" => Request::Insert {
+            "insert" | "insert_sparse" => {
+                let vec = parse_vec(&obj, expected_dim)?;
+                match parse_ttl(&obj) {
+                    0 => Request::Insert { vec },
+                    ttl_ms => Request::InsertTtl { vec, ttl_ms },
+                }
+            }
+            "delete" => Request::Delete {
+                id: obj.req_usize("id")?,
+            },
+            "upsert" => Request::Upsert {
+                id: obj.req_usize("id")?,
                 vec: parse_vec(&obj, expected_dim)?,
+                ttl_ms: parse_ttl(&obj),
             },
             "query" => Request::Query {
                 vec: parse_vec(&obj, expected_dim)?,
@@ -211,6 +250,42 @@ impl Request {
                 ])
                 .to_string()
             }
+            Request::InsertTtl { vec, ttl_ms } => {
+                let (idx, val): (Vec<f64>, Vec<f64>) = vec
+                    .entries()
+                    .iter()
+                    .map(|&(i, v)| (i as f64, v as f64))
+                    .unzip();
+                Json::obj(vec![
+                    ("op", Json::Str("insert_sparse".into())),
+                    ("dim", Json::Num(vec.dim() as f64)),
+                    ("idx", Json::from_f64s(&idx)),
+                    ("val", Json::from_f64s(&val)),
+                    ("ttl_ms", Json::Num(*ttl_ms as f64)),
+                ])
+                .to_string()
+            }
+            Request::Delete { id } => Json::obj(vec![
+                ("op", Json::Str("delete".into())),
+                ("id", Json::Num(*id as f64)),
+            ])
+            .to_string(),
+            Request::Upsert { id, vec, ttl_ms } => {
+                let (idx, val): (Vec<f64>, Vec<f64>) = vec
+                    .entries()
+                    .iter()
+                    .map(|&(i, v)| (i as f64, v as f64))
+                    .unzip();
+                Json::obj(vec![
+                    ("op", Json::Str("upsert".into())),
+                    ("id", Json::Num(*id as f64)),
+                    ("dim", Json::Num(vec.dim() as f64)),
+                    ("idx", Json::from_f64s(&idx)),
+                    ("val", Json::from_f64s(&val)),
+                    ("ttl_ms", Json::Num(*ttl_ms as f64)),
+                ])
+                .to_string()
+            }
             Request::Query { vec, k } => {
                 let (idx, val): (Vec<f64>, Vec<f64>) = vec
                     .entries()
@@ -273,6 +348,16 @@ impl Response {
             Response::Inserted { id } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("id", Json::Num(*id as f64)),
+            ])
+            .to_string(),
+            Response::Deleted { id } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("deleted", Json::Num(*id as f64)),
+            ])
+            .to_string(),
+            Response::Upserted { id } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("upserted", Json::Num(*id as f64)),
             ])
             .to_string(),
             Response::Hits { hits } => {
@@ -429,8 +514,14 @@ impl Response {
                 .collect();
             return Ok(Response::Promoted { applied_seqs });
         }
-        // before the stats fallback: a snapshot reply is itself a numeric
-        // field and would otherwise be swallowed as a one-field Stats
+        // before the stats fallback: these replies are themselves numeric
+        // fields and would otherwise be swallowed as one-field Stats
+        if let Some(id) = obj.get("deleted").and_then(|v| v.as_usize()) {
+            return Ok(Response::Deleted { id });
+        }
+        if let Some(id) = obj.get("upserted").and_then(|v| v.as_usize()) {
+            return Ok(Response::Upserted { id });
+        }
         if let Some(generation) = obj.get("snapshot_generation").and_then(|v| v.as_usize()) {
             return Ok(Response::Snapshotted {
                 generation: generation as u64,
@@ -462,6 +553,42 @@ mod tests {
         let line = req.to_json_line();
         let back = Request::from_json_line(&line, 5).unwrap();
         assert_eq!(back, req);
+    }
+
+    #[test]
+    fn request_roundtrip_mutations() {
+        let v = CatVector::from_dense(&[0, 3, 0, 0, 9]);
+        for req in [
+            Request::InsertTtl {
+                vec: v.clone(),
+                ttl_ms: 60_000,
+            },
+            Request::Delete { id: 17 },
+            Request::Upsert {
+                id: 17,
+                vec: v.clone(),
+                ttl_ms: 0,
+            },
+            Request::Upsert {
+                id: 4,
+                vec: v,
+                ttl_ms: 250,
+            },
+        ] {
+            let back = Request::from_json_line(&req.to_json_line(), 5).unwrap();
+            assert_eq!(back, req);
+        }
+        // a zero/absent ttl_ms on the insert ops is the plain untimed insert
+        let plain = r#"{"op":"insert","vec":[0,2,0],"ttl_ms":0}"#;
+        assert!(matches!(
+            Request::from_json_line(plain, 3).unwrap(),
+            Request::Insert { .. }
+        ));
+        // upsert validates the vector like insert does
+        let bad = r#"{"op":"upsert","id":3,"vec":[1,2]}"#;
+        assert!(Request::from_json_line(bad, 3).is_err());
+        // delete requires the id
+        assert!(Request::from_json_line(r#"{"op":"delete"}"#, 3).is_err());
     }
 
     #[test]
@@ -587,6 +714,10 @@ mod tests {
     fn response_roundtrips() {
         for resp in [
             Response::Inserted { id: 42 },
+            // like snapshot_generation, these must not be swallowed by
+            // the one-field Stats fallback
+            Response::Deleted { id: 7 },
+            Response::Upserted { id: 0 },
             Response::Hits {
                 hits: vec![
                     Hit { id: 1, dist: 2.5 },

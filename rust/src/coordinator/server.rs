@@ -51,6 +51,13 @@ pub struct CoordinatorConfig {
     pub replicate_from: Option<String>,
     /// Follower poll interval once caught up (`--repl-poll-ms`).
     pub repl_poll_ms: u64,
+    /// TTL sweep interval for `serve` (`--ttl-sweep-ms`, 0 = off). The
+    /// sweep runs on the primary only and deletes rows whose expiry
+    /// deadline has passed, emitting ordinary replicated Delete frames;
+    /// expired-but-unswept rows are still served, so the interval is the
+    /// expiry granularity. Unpromoted replicas never sweep — they mirror
+    /// the primary's sweep deletions from the shipped log.
+    pub ttl_sweep_ms: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -69,8 +76,20 @@ impl Default for CoordinatorConfig {
             executor_queue: 1024,
             replicate_from: None,
             repl_poll_ms: 2,
+            ttl_sweep_ms: 1_000,
         }
     }
+}
+
+/// Wall-clock unix millis — the timebase for TTL deadlines. The wire
+/// carries *relative* `ttl_ms`; only the primary calls this, so every
+/// replica applies the primary's absolute deadlines and the corpus stays
+/// bit-identical across clock-skewed machines.
+pub(crate) fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
 }
 
 /// The running service (in-process handle). `serve` binds a TCP listener;
@@ -244,6 +263,23 @@ impl Coordinator {
         )
     }
 
+    /// Read-replica write gate: every mutating op is redirected to the
+    /// primary until promotion. `Some(response)` means "reject with this".
+    fn write_gate(&self) -> Option<Response> {
+        let r = self.replica.as_ref()?;
+        if r.is_writable() {
+            return None;
+        }
+        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        Some(Response::Error {
+            message: format!(
+                "read-only replica: writes go to the primary at {} \
+                 (or `promote` this replica)",
+                r.primary()
+            ),
+        })
+    }
+
     /// Dispatch one request (thread-safe).
     pub fn handle_request(&self, req: Request) -> Response {
         match req {
@@ -279,18 +315,8 @@ impl Coordinator {
                 }
             },
             Request::Insert { vec } => {
-                // read-replica gate: writes are redirected until promotion
-                if let Some(r) = &self.replica {
-                    if !r.is_writable() {
-                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        return Response::Error {
-                            message: format!(
-                                "read-only replica: writes go to the primary at {} \
-                                 (or `promote` this replica)",
-                                r.primary()
-                            ),
-                        };
-                    }
+                if let Some(resp) = self.write_gate() {
+                    return resp;
                 }
                 let sw = Stopwatch::start();
                 self.metrics.inserts.fetch_add(1, Ordering::Relaxed);
@@ -299,6 +325,59 @@ impl Coordinator {
                         let _ = sw;
                         Response::Inserted { id }
                     }
+                    Err(e) => {
+                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        Response::Error {
+                            message: format!("{e:#}"),
+                        }
+                    }
+                }
+            }
+            Request::InsertTtl { vec, ttl_ms } => {
+                if let Some(resp) = self.write_gate() {
+                    return resp;
+                }
+                self.metrics.inserts.fetch_add(1, Ordering::Relaxed);
+                // the wire's relative TTL becomes an absolute deadline
+                // here, once, on the primary — the WAL and every replica
+                // carry the deadline, not the TTL
+                let deadline = now_ms().saturating_add(ttl_ms);
+                match self.batcher.submitter.insert_with_deadline(vec, deadline) {
+                    Ok(id) => Response::Inserted { id },
+                    Err(e) => {
+                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        Response::Error {
+                            message: format!("{e:#}"),
+                        }
+                    }
+                }
+            }
+            Request::Delete { id } => {
+                if let Some(resp) = self.write_gate() {
+                    return resp;
+                }
+                self.metrics.deletes.fetch_add(1, Ordering::Relaxed);
+                match self.batcher.submitter.delete(id) {
+                    Ok(id) => Response::Deleted { id },
+                    Err(e) => {
+                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        Response::Error {
+                            message: format!("{e:#}"),
+                        }
+                    }
+                }
+            }
+            Request::Upsert { id, vec, ttl_ms } => {
+                if let Some(resp) = self.write_gate() {
+                    return resp;
+                }
+                self.metrics.upserts.fetch_add(1, Ordering::Relaxed);
+                let deadline = match ttl_ms {
+                    0 => 0, // no expiry (clears any previous deadline)
+                    t => now_ms().saturating_add(t),
+                };
+                match self.batcher.submitter.upsert(id, vec, deadline) {
+                    Ok(id) => Response::Upserted { id },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
                         Response::Error {
@@ -424,6 +503,37 @@ impl Coordinator {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         listener.set_nonblocking(true)?;
         on_bound(listener.local_addr()?);
+        // TTL sweep: a primary-side background task that turns passed
+        // deadlines into ordinary (replicated, durable) deletions. An
+        // unpromoted replica skips the tick — it mirrors the primary's
+        // sweep from the shipped log instead — but keeps polling, so a
+        // later promotion picks the sweep duty up automatically.
+        let sweeper = (self.config.ttl_sweep_ms > 0).then(|| {
+            let me = Arc::clone(self);
+            std::thread::spawn(move || {
+                let period = Duration::from_millis(me.config.ttl_sweep_ms);
+                let nap = period.min(Duration::from_millis(50));
+                let mut slept = Duration::ZERO;
+                while !me.is_shutdown() {
+                    // chunked sleep so shutdown never waits a full period
+                    std::thread::sleep(nap);
+                    slept += nap;
+                    if slept < period {
+                        continue;
+                    }
+                    slept = Duration::ZERO;
+                    if me.replica.as_ref().is_some_and(|r| !r.is_writable()) {
+                        continue;
+                    }
+                    let swept = me.store.sweep_expired(now_ms());
+                    if swept > 0 {
+                        me.metrics
+                            .ttl_expirations
+                            .fetch_add(swept as u64, Ordering::Relaxed);
+                    }
+                }
+            })
+        });
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
         while !self.is_shutdown() {
             match listener.accept() {
@@ -444,6 +554,9 @@ impl Coordinator {
         }
         for c in conns {
             let _ = c.join();
+        }
+        if let Some(s) = sweeper {
+            let _ = s.join();
         }
         // belt-and-braces: the Shutdown request already flushed, but late
         // connection work may have appended since
@@ -572,6 +685,85 @@ mod tests {
                 Response::Hits { hits: single } => assert_eq!(&single, hits),
                 other => panic!("{other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn delete_upsert_and_ttl_serve_through_the_request_path() {
+        let c = Coordinator::new(test_config());
+        let mut rng = Xoshiro256::new(51);
+        let vecs: Vec<CatVector> = (0..6)
+            .map(|_| CatVector::random(600, 40, 10, &mut rng))
+            .collect();
+        let mut ids = Vec::new();
+        for v in &vecs {
+            match c.handle_request(Request::Insert { vec: v.clone() }) {
+                Response::Inserted { id } => ids.push(id),
+                other => panic!("{other:?}"),
+            }
+        }
+        // delete: the id must stop appearing in query results
+        match c.handle_request(Request::Delete { id: ids[2] }) {
+            Response::Deleted { id } => assert_eq!(id, ids[2]),
+            other => panic!("{other:?}"),
+        }
+        match c.handle_request(Request::Query {
+            vec: vecs[2].clone(),
+            k: 5,
+        }) {
+            Response::Hits { hits } => {
+                assert!(hits.iter().all(|h| h.id != ids[2]), "{hits:?}")
+            }
+            other => panic!("{other:?}"),
+        }
+        // deleting an unheld id is a client error, not a crash
+        match c.handle_request(Request::Delete { id: ids[2] }) {
+            Response::Error { message } => assert!(message.contains("does not hold"), "{message}"),
+            other => panic!("{other:?}"),
+        }
+        // upsert: the id now answers for the replacement vector
+        match c.handle_request(Request::Upsert {
+            id: ids[4],
+            vec: vecs[0].clone(),
+            ttl_ms: 0,
+        }) {
+            Response::Upserted { id } => assert_eq!(id, ids[4]),
+            other => panic!("{other:?}"),
+        }
+        match c.handle_request(Request::Query {
+            vec: vecs[0].clone(),
+            k: 2,
+        }) {
+            Response::Hits { hits } => {
+                assert!(hits.iter().take(2).any(|h| h.id == ids[4]), "{hits:?}");
+                assert!(hits[0].dist < 1e-9);
+            }
+            other => panic!("{other:?}"),
+        }
+        // TTL insert: expired rows fall to the sweep (driven directly
+        // here; `serve` runs it on a timer)
+        match c.handle_request(Request::InsertTtl {
+            vec: vecs[1].clone(),
+            ttl_ms: 1,
+        }) {
+            Response::Inserted { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        let live_before = c.store.live_len();
+        // deadline = now + 1ms; sweeping "one hour later" must reap it
+        let swept = c.store.sweep_expired(now_ms() + 3_600_000);
+        assert_eq!(swept, 1);
+        assert_eq!(c.store.live_len(), live_before - 1);
+        match c.handle_request(Request::Stats) {
+            Response::Stats { fields } => {
+                let get = |k: &str| {
+                    super::super::metrics::stats_field(&fields, k)
+                        .unwrap_or_else(|| panic!("stats field '{k}' missing"))
+                };
+                assert_eq!(get("deletes"), 1.0);
+                assert_eq!(get("upserts"), 1.0);
+            }
+            other => panic!("{other:?}"),
         }
     }
 

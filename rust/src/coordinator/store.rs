@@ -28,6 +28,25 @@
 //! before the batcher acknowledges the insert: with `fsync = always`,
 //! acknowledged inserts survive `kill -9`.
 //!
+//! Mutation (delete / upsert / TTL): the corpus is *not* append-only. A
+//! delete swap-removes the row from its shard arena (O(1): the trailing
+//! row drops into the hole), mirrors that move into the shard's LSH
+//! index and the global id index under the same write locks, and logs a
+//! `Delete` frame; the id itself is never reused. An upsert overwrites
+//! the row in place when the id is resident (same shard, same row — an
+//! `Upsert` frame) and re-inserts under the original id via least-loaded
+//! placement when the id was previously deleted. Every row carries an
+//! optional absolute TTL deadline (unix millis, 0 = none), persisted in
+//! both WAL frames and snapshots and carried across rebalance moves;
+//! [`ShardedStore::sweep_expired`] turns expired rows into ordinary
+//! deletes (the serving layer runs it on the primary only — followers
+//! see the resulting `Delete` frames on the replication stream and never
+//! sweep themselves, so primary and replica stay bit-identical). Frames
+//! a mutation obsoletes (the delete itself plus the insert it
+//! tombstones; an upsert's overwritten predecessor) are reported to the
+//! persist layer's dead-frame counter, whose threshold folds WAL
+//! compaction into the next snapshot rotation.
+//!
 //! Scan execution: every serving-path scatter runs on the store's
 //! persistent [`ShardExecutor`] — one long-lived worker thread per shard
 //! behind a bounded work queue ([`ShardedStore::scatter_gather`]), spawned
@@ -72,7 +91,7 @@ use crate::persist::{Fingerprint, PersistConfig, PersistCounters, Persistence, R
 use crate::sketch::bitvec::{and_count_words, popcount_words};
 use crate::sketch::{BitVec, SketchMatrix};
 use anyhow::Context;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// `(shard, row)` index entry; `VACANT` marks an id whose batch is still
@@ -94,6 +113,10 @@ fn write_l<T>(lock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
 pub struct Shard {
     pub ids: Vec<usize>,
     pub rows: SketchMatrix,
+    /// Per-row absolute TTL deadline (unix millis, 0 = no expiry),
+    /// parallel to `ids`/`rows` and maintained by every mutation path
+    /// under the shard write lock.
+    pub expiry: Vec<u64>,
     /// Optional per-shard LSH candidate index over `rows` (None when the
     /// store was built without indexing). Guarded by the same shard lock
     /// as the arena, so index and rows can never be observed out of step.
@@ -114,6 +137,11 @@ pub struct ShardedStore {
     /// `rebalance`. Placement heuristic only — `shard_sizes` is truth.
     reserved: Vec<AtomicUsize>,
     sketch_dim: usize,
+    /// Next rebalance move id: every `MoveOut`/`MoveIn` pair is stamped
+    /// with one fresh id so a replication puller can recognise the pair
+    /// and order the destination's apply before the source's. Seeded
+    /// past the highest replayed move id on recovery.
+    move_id: AtomicU64,
     /// WAL + snapshot machinery; `None` for a purely in-memory store.
     persist: Option<Persistence>,
     /// Persistent per-shard scan workers; all serving scatters run here.
@@ -150,6 +178,44 @@ impl InsertTicket {
             sync_err: None,
         }
     }
+}
+
+/// One corpus mutation, as submitted to
+/// [`ShardedStore::begin_mutation_batch`] — the store-level shape of the
+/// wire's `insert`/`delete`/`upsert` ops. `deadline` is an absolute TTL
+/// expiry in unix milliseconds, `0` for no expiry.
+pub enum MutationOp {
+    Insert { sketch: BitVec, deadline: u64 },
+    Delete { id: usize },
+    Upsert { id: usize, sketch: BitVec, deadline: u64 },
+}
+
+/// Per-op outcome of a mutation batch, in submission order. A `Failed`
+/// op (unknown id) affects only itself — the rest of the batch still
+/// applies.
+#[derive(Debug, PartialEq, Eq)]
+pub enum MutationResult {
+    Inserted { id: usize },
+    Deleted { id: usize },
+    Upserted { id: usize },
+    Failed { error: String },
+}
+
+/// The durability half of a mutation batch — the multi-shard analogue of
+/// [`InsertTicket`] (mixed ops fan out: each op lands on its id's shard,
+/// or the least-loaded one, so one batch can touch several WALs).
+/// Produced by [`ShardedStore::begin_mutation_batch`], settled by
+/// [`ShardedStore::finish_mutation_batch`].
+#[must_use = "an unsettled mutation ticket skips the durability wait and the ack gate"]
+pub struct MutationTicket {
+    /// Open group-commit windows still owed a wait: `(shard, epoch)`.
+    windows: Vec<(usize, u64)>,
+    /// WAL frames appended across all touched shards.
+    records: u64,
+    /// WAL bytes appended for those frames.
+    wal_bytes: u64,
+    /// First synchronous-commit failure observed at begin time.
+    sync_err: Option<anyhow::Error>,
 }
 
 impl ShardedStore {
@@ -195,6 +261,7 @@ impl ShardedStore {
                 Arc::new(RwLock::new(Shard {
                     ids: Vec::new(),
                     rows: SketchMatrix::new(sketch_dim),
+                    expiry: Vec::new(),
                     index: index
                         .as_ref()
                         .map(|(cfg, seed)| LshIndex::new(cfg, sketch_dim, *seed)),
@@ -208,6 +275,7 @@ impl ShardedStore {
             next_id: AtomicUsize::new(0),
             reserved: (0..num_shards.max(1)).map(|_| AtomicUsize::new(0)).collect(),
             sketch_dim,
+            move_id: AtomicU64::new(1),
             persist: None,
             executor,
         }
@@ -259,6 +327,7 @@ impl ShardedStore {
             shards.push(Arc::new(RwLock::new(Shard {
                 ids: part.ids,
                 rows: part.rows,
+                expiry: part.expiry,
                 index: lsh,
             })));
         }
@@ -270,6 +339,7 @@ impl ShardedStore {
                 next_id: AtomicUsize::new(next_id),
                 reserved,
                 sketch_dim,
+                move_id: AtomicU64::new(report.max_move_id + 1),
                 persist: Some(persistence),
                 executor,
             },
@@ -290,8 +360,16 @@ impl ShardedStore {
         self.sketch_dim
     }
 
+    /// The id-space high-water mark: the number of ids ever assigned.
+    /// Deletes do not shrink it (ids are never reused) — see
+    /// [`ShardedStore::live_len`] for current occupancy.
     pub fn len(&self) -> usize {
         self.next_id.load(Ordering::Relaxed)
+    }
+
+    /// Number of rows currently resident: the id space minus deletions.
+    pub fn live_len(&self) -> usize {
+        self.shard_sizes().iter().sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -396,6 +474,7 @@ impl ShardedStore {
                 // VACANT — a recovered-from-poison shard stays readable.
                 shard.rows.push(sketch);
                 shard.ids.push(start + offset);
+                shard.expiry.push(0);
                 // mirror the arena append into the LSH index (same write lock)
                 if let Some(ix) = shard.index.as_mut() {
                     ix.insert(row as usize, sketch.words());
@@ -473,6 +552,380 @@ impl ShardedStore {
             None => Ok(()),
             Some(e) => Err(e),
         }
+    }
+
+    /// Apply a batch of mixed mutations in submission order; returns one
+    /// [`MutationResult`] per op plus the durability ticket. Each op
+    /// acquires and releases its own id-index/shard/WAL locks (never two
+    /// shard locks at once, so the global lock order holds trivially),
+    /// and commits are started once per *touched shard* at the end —
+    /// under a commit window the whole batch shares one group-commit
+    /// registration per shard, mirroring the insert fast path. A per-op
+    /// failure (unknown id) yields `Failed` for that op only.
+    pub fn begin_mutation_batch(
+        &self,
+        ops: Vec<MutationOp>,
+    ) -> (Vec<MutationResult>, MutationTicket) {
+        let mut results = Vec::with_capacity(ops.len());
+        let mut touched: Vec<usize> = Vec::new();
+        let mut records = 0u64;
+        let mut wal_bytes = 0u64;
+        for op in ops {
+            let outcome = match op {
+                MutationOp::Insert { sketch, deadline } => {
+                    let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                    let (shard, bytes) = self.place_row(id, &sketch, deadline);
+                    Ok((shard, bytes, MutationResult::Inserted { id }))
+                }
+                MutationOp::Delete { id } => self
+                    .delete_one(id, None)
+                    .map(|placed| {
+                        let (shard, bytes) =
+                            placed.expect("unconditional delete never skips");
+                        (shard, bytes, MutationResult::Deleted { id })
+                    }),
+                MutationOp::Upsert {
+                    id,
+                    sketch,
+                    deadline,
+                } => self
+                    .upsert_one(id, &sketch, deadline)
+                    .map(|(shard, bytes)| (shard, bytes, MutationResult::Upserted { id })),
+            };
+            match outcome {
+                Ok((shard, bytes, res)) => {
+                    if !touched.contains(&shard) {
+                        touched.push(shard);
+                    }
+                    records += 1;
+                    wal_bytes += bytes;
+                    results.push(res);
+                }
+                Err(e) => results.push(MutationResult::Failed {
+                    error: format!("{e:#}"),
+                }),
+            }
+        }
+        touched.sort_unstable();
+        let mut ticket = MutationTicket {
+            windows: Vec::new(),
+            records,
+            wal_bytes,
+            sync_err: None,
+        };
+        if let Some(p) = &self.persist {
+            if records > 0 {
+                if p.group_commit_enabled() {
+                    for &s in &touched {
+                        ticket.windows.push((s, p.group_commit_register(s)));
+                    }
+                } else {
+                    for &s in &touched {
+                        let mut w = p.wal_guard(s);
+                        if let Err(e) = w.commit() {
+                            if ticket.sync_err.is_none() {
+                                ticket.sync_err = Some(
+                                    anyhow::Error::new(e)
+                                        .context(format!("WAL commit for shard {s}")),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (results, ticket)
+    }
+
+    /// Settle a [`ShardedStore::begin_mutation_batch`] ticket: wait for
+    /// every registered commit window, account the WAL traffic, and run
+    /// the auto-snapshot trigger. `Err` means some op's frames are in
+    /// memory but not durable — the caller must not acknowledge those
+    /// ops. Must be called with no store locks held.
+    pub fn finish_mutation_batch(&self, ticket: MutationTicket) -> anyhow::Result<()> {
+        let MutationTicket {
+            windows,
+            records,
+            wal_bytes,
+            sync_err,
+        } = ticket;
+        if records == 0 {
+            return Ok(());
+        }
+        let mut commit_err = sync_err;
+        if let Some(p) = &self.persist {
+            for (shard, epoch) in windows {
+                if let Err(msg) = p.group_commit_wait_epoch(shard, epoch) {
+                    if commit_err.is_none() {
+                        commit_err =
+                            Some(anyhow::anyhow!("group commit for shard {shard}: {msg}"));
+                    }
+                }
+            }
+            p.note_appended(records, wal_bytes);
+            self.maybe_auto_snapshot();
+        }
+        match commit_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Delete one id everywhere — arena (swap-remove), LSH index, global
+    /// id index, WAL (`Delete` frame) — and commit. Errors if the id is
+    /// not resident (never assigned, already deleted, or mid-placement).
+    pub fn delete(&self, id: usize) -> anyhow::Result<()> {
+        let (mut results, ticket) = self.begin_mutation_batch(vec![MutationOp::Delete { id }]);
+        self.finish_mutation_batch(ticket)?;
+        match results.pop() {
+            Some(MutationResult::Failed { error }) => Err(anyhow::anyhow!(error)),
+            _ => Ok(()),
+        }
+    }
+
+    /// Upsert one id and commit: overwrite the row in place when the id
+    /// is resident (same shard, same row — topology untouched), or
+    /// re-insert under the original id when it was previously deleted.
+    /// Errors if the id was never assigned by an insert.
+    pub fn upsert(&self, id: usize, sketch: BitVec, deadline: u64) -> anyhow::Result<()> {
+        let (mut results, ticket) =
+            self.begin_mutation_batch(vec![MutationOp::Upsert { id, sketch, deadline }]);
+        self.finish_mutation_batch(ticket)?;
+        match results.pop() {
+            Some(MutationResult::Failed { error }) => Err(anyhow::anyhow!(error)),
+            _ => Ok(()),
+        }
+    }
+
+    /// Delete every row whose TTL deadline is `<= now_ms` (and nonzero);
+    /// returns how many were swept. Two-phase: a read-locked scan
+    /// collects the expired ids, then each is deleted through the
+    /// ordinary path — re-checking its deadline under the shard lock, so
+    /// an upsert that extended the TTL between scan and delete wins.
+    /// Emits ordinary `Delete` frames: on a replicated primary the sweep
+    /// is just another mutation on the stream, and followers (which
+    /// never sweep) stay bit-identical. Expired-but-unswept rows are
+    /// still served until the sweep reaches them — TTL granularity is
+    /// the sweep interval, by design.
+    pub fn sweep_expired(&self, now_ms: u64) -> usize {
+        let expired: Vec<usize> = {
+            let _index = read_l(&self.index);
+            let mut out = Vec::new();
+            for shard in &self.shards {
+                let s = read_l(shard);
+                out.extend(
+                    s.ids
+                        .iter()
+                        .zip(&s.expiry)
+                        .filter(|&(_, &d)| d != 0 && d <= now_ms)
+                        .map(|(&id, _)| id),
+                );
+            }
+            out
+        };
+        if expired.is_empty() {
+            return 0;
+        }
+        let mut touched: Vec<usize> = Vec::new();
+        let (mut records, mut wal_bytes) = (0u64, 0u64);
+        for id in expired {
+            if let Ok(Some((shard, bytes))) = self.delete_one(id, Some(now_ms)) {
+                if !touched.contains(&shard) {
+                    touched.push(shard);
+                }
+                records += 1;
+                wal_bytes += bytes;
+            }
+        }
+        if records > 0 {
+            if let Some(e) = self.commit_shards(&touched) {
+                eprintln!(
+                    "[persist] TTL sweep WAL commit failed (rows removed in memory; \
+                     the frames stay pending and retry with the next commit): {e:#}"
+                );
+            }
+            if let Some(p) = &self.persist {
+                p.note_appended(records, wal_bytes);
+            }
+            self.maybe_auto_snapshot();
+        }
+        records as usize
+    }
+
+    /// Place one row under an explicit id (a fresh id from the insert
+    /// path, or a deleted id being resurrected by an upsert): least-
+    /// loaded shard, arena + LSH + id index + WAL frame under the write
+    /// locks, no commit — the caller batches commits per touched shard.
+    fn place_row(&self, id: usize, sketch: &BitVec, deadline: u64) -> (usize, u64) {
+        let target = self
+            .reserved
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| r.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        self.reserved[target].fetch_add(1, Ordering::Relaxed);
+        let mut index = write_l(&self.index);
+        if index.len() <= id {
+            index.resize(id + 1, VACANT);
+        }
+        let mut shard = write_l(&self.shards[target]);
+        let mut wal = self.persist.as_ref().map(|p| p.wal_guard(target));
+        let row = shard.rows.len() as u32;
+        shard.rows.push(sketch);
+        shard.ids.push(id);
+        shard.expiry.push(deadline);
+        if let Some(ix) = shard.index.as_mut() {
+            ix.insert(row as usize, sketch.words());
+        }
+        let mut bytes = 0u64;
+        if let Some(w) = wal.as_deref_mut() {
+            bytes = if deadline == 0 {
+                w.append_insert(id as u64, sketch.words())
+            } else {
+                w.append_insert_ttl(id as u64, deadline, sketch.words())
+            } as u64;
+        }
+        index[id] = (target as u32, row);
+        (target, bytes)
+    }
+
+    /// Remove one resident id; the shared inner of [`ShardedStore::delete`]
+    /// and the TTL sweep. With `only_expired_at = Some(now)`, the row's
+    /// deadline is re-checked under the shard lock and a no-longer-expired
+    /// row is skipped (`Ok(None)`). On removal returns the touched shard
+    /// and the appended WAL bytes; the caller commits.
+    fn delete_one(
+        &self,
+        id: usize,
+        only_expired_at: Option<u64>,
+    ) -> anyhow::Result<Option<(usize, u64)>> {
+        let mut index = write_l(&self.index);
+        let (s, r) = match index.get(id) {
+            Some(&slot) if slot != VACANT => (slot.0 as usize, slot.1 as usize),
+            _ => anyhow::bail!("delete of id {id} which the store does not hold"),
+        };
+        let mut guard = write_l(&self.shards[s]);
+        let sh = &mut *guard;
+        if let Some(now) = only_expired_at {
+            let d = sh.expiry[r];
+            if d == 0 || d > now {
+                return Ok(None);
+            }
+        }
+        let mut wal = self.persist.as_ref().map(|p| p.wal_guard(s));
+        let last = sh.rows.len() - 1;
+        let removed: Vec<u64> = sh.rows.row(r).to_vec();
+        sh.rows.swap_remove_row(r);
+        sh.ids.swap_remove(r);
+        sh.expiry.swap_remove(r);
+        if let Some(ix) = sh.index.as_mut() {
+            if r == last {
+                ix.remove_last(&removed);
+            } else {
+                ix.remove_at(r, &removed, sh.rows.row(r));
+            }
+        }
+        let mut bytes = 0u64;
+        if let Some(w) = wal.as_deref_mut() {
+            bytes = w.append_delete(id as u64) as u64;
+        }
+        index[id] = VACANT;
+        if r != last {
+            // the trailing row dropped into the hole: re-home its id
+            let swapped = sh.ids[r];
+            index[swapped] = (s as u32, r as u32);
+        }
+        self.reserved[s].fetch_sub(1, Ordering::Relaxed);
+        drop(wal);
+        drop(guard);
+        drop(index);
+        if let Some(p) = &self.persist {
+            // the row's insert frame and this delete frame both die at
+            // the next rotation
+            p.note_dead_frames(2);
+        }
+        Ok(Some((s, bytes)))
+    }
+
+    /// Overwrite or resurrect one id; the inner of
+    /// [`ShardedStore::upsert`]. Returns the touched shard and the
+    /// appended WAL bytes; the caller commits.
+    fn upsert_one(
+        &self,
+        id: usize,
+        sketch: &BitVec,
+        deadline: u64,
+    ) -> anyhow::Result<(usize, u64)> {
+        anyhow::ensure!(
+            id < self.next_id.load(Ordering::Relaxed),
+            "upsert of id {id} which was never assigned — inserts allocate ids"
+        );
+        let mut index = write_l(&self.index);
+        let slot = index.get(id).copied().unwrap_or(VACANT);
+        if slot == VACANT {
+            // previously deleted (or its placement aborted): re-insert
+            // under the same id — delete + insert, collapsed
+            drop(index);
+            return Ok(self.place_row(id, sketch, deadline));
+        }
+        let (s, r) = (slot.0 as usize, slot.1 as usize);
+        let mut guard = write_l(&self.shards[s]);
+        let sh = &mut *guard;
+        let old: Vec<u64> = sh.rows.row(r).to_vec();
+        let mut wal = self.persist.as_ref().map(|p| p.wal_guard(s));
+        let weight = popcount_words(sketch.words()) as u32;
+        sh.rows.overwrite_row(r, sketch.words(), weight);
+        sh.expiry[r] = deadline;
+        if let Some(ix) = sh.index.as_mut() {
+            ix.update_row(r, &old, sketch.words());
+        }
+        let mut bytes = 0u64;
+        if let Some(w) = wal.as_deref_mut() {
+            bytes = w.append_upsert(id as u64, deadline, sketch.words()) as u64;
+        }
+        drop(wal);
+        drop(guard);
+        drop(index);
+        if let Some(p) = &self.persist {
+            // the row's previous insert/upsert frame dies at the next
+            // rotation
+            p.note_dead_frames(1);
+        }
+        Ok((s, bytes))
+    }
+
+    /// Commit the named shards' WALs — synchronously, or through the
+    /// open group-commit window when one is configured. Returns the
+    /// first error, if any. Must be called with no store locks held.
+    fn commit_shards(&self, touched: &[usize]) -> Option<anyhow::Error> {
+        let p = self.persist.as_ref()?;
+        let mut first_err = None;
+        if p.group_commit_enabled() {
+            let epochs: Vec<(usize, u64)> = touched
+                .iter()
+                .map(|&s| (s, p.group_commit_register(s)))
+                .collect();
+            for (s, e) in epochs {
+                if let Err(msg) = p.group_commit_wait_epoch(s, e) {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!("group commit for shard {s}: {msg}"));
+                    }
+                }
+            }
+        } else {
+            for &s in touched {
+                let mut w = p.wal_guard(s);
+                if let Err(e) = w.commit() {
+                    if first_err.is_none() {
+                        first_err = Some(
+                            anyhow::Error::new(e).context(format!("WAL commit for shard {s}")),
+                        );
+                    }
+                }
+            }
+        }
+        first_err
     }
 
     /// Resolve an id to its current `(shard, row)` in O(1).
@@ -634,9 +1087,9 @@ impl ShardedStore {
             .ok_or_else(|| anyhow::anyhow!("persistence is disabled on this store"))?;
         let _index = read_l(&self.index);
         let guards: Vec<_> = self.shards.iter().map(|s| read_l(s)).collect();
-        let views: Vec<(&[usize], &SketchMatrix)> = guards
+        let views: Vec<(&[usize], &[u64], &SketchMatrix)> = guards
             .iter()
-            .map(|g| (g.ids.as_slice(), &g.rows))
+            .map(|g| (g.ids.as_slice(), g.expiry.as_slice(), &g.rows))
             .collect();
         let mut wals: Vec<_> = (0..self.shards.len()).map(|i| p.wal_guard(i)).collect();
         p.write_snapshot(&views, &mut wals)
@@ -667,25 +1120,27 @@ impl ShardedStore {
     /// position-for-position and an applied chunk survives a follower
     /// restart through the ordinary recovery path.
     ///
-    /// An infeasible chunk (a `MoveOut` against an empty arena — the
+    /// An infeasible chunk (a `MoveOut` against an empty arena, or a
+    /// `Delete`/`Upsert` of an id the shard does not hold — the
     /// signature of divergence, not transfer damage) is rejected *before
-    /// any mutation*, so a failed apply leaves the shard untouched. A WAL
-    /// commit failure leaves the frames writer-pending: they are counted
-    /// by [`Persistence::next_seq`] (so the puller does not re-request
-    /// and double-apply them) and retried by the next chunk's commit.
+    /// any mutation*: the pre-pass simulates the whole chunk against a
+    /// copy of the shard's id column, so a failed apply leaves the shard
+    /// untouched. A WAL commit failure leaves the frames writer-pending:
+    /// they are counted by [`Persistence::next_seq`] (so the puller does
+    /// not re-request and double-apply them) and retried by the next
+    /// chunk's commit.
     ///
-    /// Cross-shard note: a rebalance move ships as independent `MoveIn`
-    /// (destination log) and `MoveOut` (source log) frames, and the two
-    /// shards' streams apply independently — so during catch-up a
-    /// follower may transiently hold a moved row in both shards (MoveIn
-    /// applied first: the duplicate-copies state crash recovery already
-    /// tolerates) or, for up to one poll cycle, in *neither* (MoveOut
-    /// applied first: the row's id resolves VACANT and a replica read in
-    /// that window misses it — a state the primary itself never exposes,
-    /// since it moves rows under both shard locks; see the ROADMAP
-    /// cross-shard-ordering item). The `MoveOut` only clears the
-    /// id-index entry if it still points at the popped row, so the index
-    /// never aliases a wrong row either way.
+    /// Cross-shard note: a rebalance move ships as a `MoveIn`
+    /// (destination log) / `MoveOut` (source log) pair stamped with the
+    /// same move id. The two shards' streams still apply independently,
+    /// but the puller uses the shared id to hold a `MoveOut` back until
+    /// its paired `MoveIn` has been applied (see [`crate::replica`]), so
+    /// a caught-up reader only ever observes the benign
+    /// duplicate-copies state (row transiently in both shards — exactly
+    /// what crash recovery already dedups), never the row absent from
+    /// both. The `MoveOut` only clears the id-index entry if it still
+    /// points at the popped row, so the index never aliases a wrong row
+    /// either way.
     pub fn apply_replicated(
         &self,
         shard: usize,
@@ -703,30 +1158,82 @@ impl ShardedStore {
         let mut index = write_l(&self.index);
         let mut guard = write_l(&self.shards[shard]);
         let sh = &mut *guard;
-        // feasibility pre-pass: reject divergent chunks before mutating
-        let mut simulated = sh.rows.len();
+        // Feasibility pre-pass: simulate the chunk against a copy of the
+        // id column (positions matter — Delete swap-removes) and reject
+        // divergent chunks before any mutation. The positions each
+        // Delete/Upsert resolves to are queued for the apply loop below,
+        // which therefore cannot fail mid-chunk. Also tally the frames
+        // this chunk obsoletes so the follower's own compaction trigger
+        // tracks the primary's.
+        let mut sim: Vec<usize> = sh.ids.clone();
+        let mut at: std::collections::HashMap<usize, usize> =
+            sim.iter().enumerate().map(|(r, &id)| (id, r)).collect();
+        let mut touch_pos = std::collections::VecDeque::new();
+        let mut dead_frames = 0u64;
         for rec in records {
             match rec {
-                WalRecord::Insert { .. } | WalRecord::MoveIn { .. } => simulated += 1,
-                WalRecord::MoveOut => {
-                    anyhow::ensure!(
-                        simulated > 0,
-                        "replicated MoveOut against an empty shard {shard} — \
-                         follower has diverged from the primary's log"
-                    );
-                    simulated -= 1;
+                WalRecord::Insert { id, .. } | WalRecord::MoveIn { id, .. } => {
+                    let id = *id as usize;
+                    at.insert(id, sim.len());
+                    sim.push(id);
+                }
+                WalRecord::MoveOut { .. } => {
+                    let Some(id) = sim.pop() else {
+                        anyhow::bail!(
+                            "replicated MoveOut against an empty shard {shard} — \
+                             follower has diverged from the primary's log"
+                        );
+                    };
+                    at.remove(&id);
+                }
+                WalRecord::Delete { id } => {
+                    let id = *id as usize;
+                    let Some(pos) = at.remove(&id) else {
+                        anyhow::bail!(
+                            "replicated Delete of id {id} which shard {shard} does not \
+                             hold — follower has diverged from the primary's log"
+                        );
+                    };
+                    sim.swap_remove(pos);
+                    if pos < sim.len() {
+                        at.insert(sim[pos], pos);
+                    }
+                    touch_pos.push_back(pos);
+                    dead_frames += 2;
+                }
+                WalRecord::Upsert { id, .. } => {
+                    let id = *id as usize;
+                    let Some(&pos) = at.get(&id) else {
+                        anyhow::bail!(
+                            "replicated Upsert of id {id} which shard {shard} does not \
+                             hold — follower has diverged from the primary's log"
+                        );
+                    };
+                    touch_pos.push_back(pos);
+                    dead_frames += 1;
                 }
             }
         }
         let mut wal = p.wal_guard(shard);
         for rec in records {
             match rec {
-                WalRecord::Insert { id, words } | WalRecord::MoveIn { id, words } => {
+                WalRecord::Insert {
+                    id,
+                    deadline,
+                    words,
+                }
+                | WalRecord::MoveIn {
+                    id,
+                    deadline,
+                    words,
+                    ..
+                } => {
                     let id = *id as usize;
                     let row = sh.rows.len();
                     let weight = popcount_words(words) as u32;
                     sh.rows.push_row(words, weight);
                     sh.ids.push(id);
+                    sh.expiry.push(*deadline);
                     if let Some(ix) = sh.index.as_mut() {
                         ix.insert(row, words);
                     }
@@ -737,8 +1244,9 @@ impl ShardedStore {
                     self.next_id.fetch_max(id + 1, Ordering::Relaxed);
                     self.reserved[shard].fetch_add(1, Ordering::Relaxed);
                 }
-                WalRecord::MoveOut => {
+                WalRecord::MoveOut { .. } => {
                     let id = sh.ids.pop().expect("pre-pass guarantees a non-empty shard");
+                    sh.expiry.pop();
                     let row = sh.rows.len() - 1;
                     if let Some(ix) = sh.index.as_mut() {
                         ix.remove_last(sh.rows.row(row));
@@ -750,7 +1258,55 @@ impl ShardedStore {
                     }
                     self.reserved[shard].fetch_sub(1, Ordering::Relaxed);
                 }
+                WalRecord::Delete { id } => {
+                    let id = *id as usize;
+                    let pos = touch_pos
+                        .pop_front()
+                        .expect("pre-pass resolved every Delete");
+                    let last = sh.rows.len() - 1;
+                    let removed: Vec<u64> = sh.rows.row(pos).to_vec();
+                    sh.rows.swap_remove_row(pos);
+                    sh.ids.swap_remove(pos);
+                    sh.expiry.swap_remove(pos);
+                    if let Some(ix) = sh.index.as_mut() {
+                        if pos == last {
+                            ix.remove_last(&removed);
+                        } else {
+                            ix.remove_at(pos, &removed, sh.rows.row(pos));
+                        }
+                    }
+                    // conditionals mirror MoveOut: in the transient
+                    // duplicate-copies state another shard's copy may
+                    // already own the index entry
+                    if index.get(id) == Some(&(shard as u32, pos as u32)) {
+                        index[id] = VACANT;
+                    }
+                    if pos != last {
+                        let swapped = sh.ids[pos];
+                        if index.get(swapped) == Some(&(shard as u32, last as u32)) {
+                            index[swapped] = (shard as u32, pos as u32);
+                        }
+                    }
+                    self.reserved[shard].fetch_sub(1, Ordering::Relaxed);
+                }
+                WalRecord::Upsert {
+                    deadline, words, ..
+                } => {
+                    let pos = touch_pos
+                        .pop_front()
+                        .expect("pre-pass resolved every Upsert");
+                    let old: Vec<u64> = sh.rows.row(pos).to_vec();
+                    let weight = popcount_words(words) as u32;
+                    sh.rows.overwrite_row(pos, words, weight);
+                    sh.expiry[pos] = *deadline;
+                    if let Some(ix) = sh.index.as_mut() {
+                        ix.update_row(pos, &old, words);
+                    }
+                }
             }
+        }
+        if dead_frames > 0 {
+            p.note_dead_frames(dead_frames);
         }
         wal.append_raw(raw_frames, records.len() as u64);
         // commit outside the shard/index locks (mirroring the primary's
@@ -850,8 +1406,11 @@ impl ShardedStore {
             let mut moved_here = 0;
             for _ in 0..take {
                 let Some(id) = src.ids.pop() else { break };
+                // the TTL deadline travels with the row across the move
+                let deadline = src.expiry.pop().unwrap_or(0);
                 src.rows.move_last_row_to(&mut dst.rows);
                 dst.ids.push(id);
+                dst.expiry.push(deadline);
                 let new_row = dst.rows.len() - 1;
                 let words = dst.rows.row(new_row);
                 if let Some(ix) = src.index.as_mut() {
@@ -861,8 +1420,11 @@ impl ShardedStore {
                     ix.insert(new_row, words);
                 }
                 if let Some((src_w, dst_w)) = wals.as_mut() {
-                    wal_bytes += src_w.append_move_out() as u64;
-                    wal_bytes += dst_w.append_move_in(id as u64, words) as u64;
+                    // one fresh move id stamps the pair so a replication
+                    // puller can match them up across the two shard logs
+                    let mid = self.move_id.fetch_add(1, Ordering::Relaxed);
+                    wal_bytes += src_w.append_move_out(mid) as u64;
+                    wal_bytes += dst_w.append_move_in(mid, id as u64, deadline, words) as u64;
                     wal_records += 2;
                 }
                 index[id] = (min_i as u32, new_row as u32);
@@ -1376,6 +1938,7 @@ mod tests {
             // path (the group-commit tests below opt in explicitly)
             commit_window_us: 0,
             wal_max_bytes: 0,
+            compact_dead_frames: 0,
         }
     }
 
@@ -1410,6 +1973,20 @@ mod tests {
         primary.insert_batch((0..24).map(|_| sk(&mut rng, 128)).collect());
         primary.insert_batch((0..4).map(|_| sk(&mut rng, 128)).collect());
         assert!(primary.rebalance(1) > 0);
+        // the full mutation vocabulary rides the same stream: deletes
+        // (head / middle / tail ids), an in-place upsert, a TTL'd
+        // insert, and a deleted id resurrected with a fresh deadline
+        primary.delete(0).unwrap();
+        primary.delete(13).unwrap();
+        primary.delete(27).unwrap();
+        primary.upsert(5, sk(&mut rng, 128), 0).unwrap();
+        let (res, ticket) = primary.begin_mutation_batch(vec![MutationOp::Insert {
+            sketch: sk(&mut rng, 128),
+            deadline: 7_777,
+        }]);
+        primary.finish_mutation_batch(ticket).unwrap();
+        assert_eq!(res, vec![MutationResult::Inserted { id: 28 }]);
+        primary.upsert(13, sk(&mut rng, 128), 1_234).unwrap();
         let (follower, _) = ShardedStore::open_durable(
             fp(2, 128, 9),
             &on_cfg(),
@@ -1422,10 +1999,12 @@ mod tests {
         for si in 0..2 {
             let path = crate::persist::manifest::wal_path(p_dir.path(), 0, si);
             // ship in two chunks to exercise sequenced application
-            let total = read_wal_tail(&path, wpr, 0, usize::MAX, u64::MAX).unwrap().file_frames;
+            let total = read_wal_tail(&path, wpr, 0, usize::MAX, u64::MAX, None)
+                .unwrap()
+                .file_frames;
             let mut at = 0u64;
             while at < total {
-                let chunk = read_wal_tail(&path, wpr, at, 400, u64::MAX).unwrap();
+                let chunk = read_wal_tail(&path, wpr, at, 400, u64::MAX, None).unwrap();
                 assert!(chunk.frames > 0);
                 let replay = crate::persist::wal::scan_frames(&chunk.bytes, wpr);
                 assert!(!replay.truncated);
@@ -1434,10 +2013,21 @@ mod tests {
             }
             assert_eq!(follower.persistence().unwrap().next_seq(si), total);
         }
-        // bit-identical corpus, shard layout, and O(1) lookups
+        // bit-identical corpus, shard layout, TTL deadlines, and O(1)
+        // lookups
         assert_eq!(follower.snapshot_ordered(), primary.snapshot_ordered());
         assert_eq!(follower.shard_sizes(), primary.shard_sizes());
         assert_eq!(follower.len(), primary.len());
+        let columns = |s: &ShardedStore| {
+            s.map_shards(|sh| {
+                sh.ids
+                    .iter()
+                    .copied()
+                    .zip(sh.expiry.iter().copied())
+                    .collect::<Vec<_>>()
+            })
+        };
+        assert_eq!(columns(&follower), columns(&primary));
         for id in 0..primary.len() {
             assert_eq!(follower.get(id), primary.get(id), "id {id}");
             assert_eq!(follower.locate(id), primary.locate(id), "id {id}");
@@ -1475,16 +2065,41 @@ mod tests {
         let records = vec![
             WalRecord::Insert {
                 id: 0,
+                deadline: 0,
                 words: row.words().to_vec(),
             },
-            WalRecord::MoveOut,
-            WalRecord::MoveOut, // one pop too many
+            WalRecord::MoveOut { move_id: 1 },
+            WalRecord::MoveOut { move_id: 2 }, // one pop too many
         ];
         let err = store.apply_replicated(0, &[], &records).unwrap_err();
         assert!(err.to_string().contains("diverged"), "{err:#}");
         // rejected before any mutation: the shard is untouched
         assert_eq!(store.shard_sizes(), vec![0]);
         assert_eq!(store.persistence().unwrap().next_seq(0), 0);
+        // a Delete (or Upsert) of an id the shard does not hold is the
+        // same divergence signal, rejected just as atomically
+        for bad in [
+            WalRecord::Delete { id: 33 },
+            WalRecord::Upsert {
+                id: 33,
+                deadline: 0,
+                words: row.words().to_vec(),
+            },
+        ] {
+            let records = vec![
+                WalRecord::Insert {
+                    id: 0,
+                    deadline: 0,
+                    words: row.words().to_vec(),
+                },
+                bad,
+            ];
+            let err = store.apply_replicated(0, &[], &records).unwrap_err();
+            assert!(err.to_string().contains("id 33"), "{err:#}");
+            assert!(err.to_string().contains("diverged"), "{err:#}");
+            assert_eq!(store.shard_sizes(), vec![0]);
+            assert_eq!(store.persistence().unwrap().next_seq(0), 0);
+        }
     }
 
     #[test]
@@ -1724,5 +2339,301 @@ mod tests {
         assert!(report.generation >= 1);
         assert!(report.snapshot_rows > 0, "recovery must use the snapshot");
         assert_eq!(store.snapshot_ordered(), before);
+    }
+
+    #[test]
+    fn delete_removes_the_row_everywhere() {
+        let store = ShardedStore::with_index(2, 128, &on_cfg(), 7);
+        let mut rng = Xoshiro256::new(23);
+        let pts: Vec<BitVec> = (0..12).map(|_| sk(&mut rng, 128)).collect();
+        // one batch → one shard, rows in id order: ids[2] exercises the
+        // swap-remove middle path (the trailing row re-homes into the
+        // hole), then ids[10] sits on the last row — the fast path
+        let ids = store.insert_batch(pts.clone());
+        store.delete(ids[2]).unwrap();
+        store.delete(ids[10]).unwrap();
+        assert!(store.get(ids[2]).is_none());
+        assert!(store.locate(ids[10]).is_none());
+        assert!(store.pair_stats(ids[2], ids[3]).is_none());
+        assert_eq!(store.live_len(), 10);
+        assert_eq!(store.len(), 12, "the id space never shrinks");
+        // double delete and an unknown id are described errors
+        let err = store.delete(ids[2]).unwrap_err().to_string();
+        assert!(err.contains("does not hold"), "{err}");
+        assert!(store.delete(999).is_err());
+        let gone = [ids[2], ids[10]];
+        for (id, pt) in ids.iter().zip(&pts) {
+            if gone.contains(id) {
+                continue;
+            }
+            // every survivor still resolves through the O(1) index...
+            assert_eq!(store.get(*id).as_ref(), Some(pt), "id {id}");
+            let (s, r) = store.locate(*id).unwrap();
+            let shard_ids = store.map_shards(|sh| sh.ids.clone());
+            assert_eq!(shard_ids[s][r], *id);
+            // ...and through its shard's LSH index, post-re-key
+            let found = store.map_shards(|sh| {
+                sh.index
+                    .as_ref()
+                    .map(|ix| ix.candidates(pt.words()).0)
+                    .unwrap_or_default()
+            });
+            assert!(
+                found[s].binary_search(&(r as u32)).is_ok(),
+                "id {id} lost from the LSH index"
+            );
+        }
+        for (rows, ix_len, exp_len) in store.map_shards(|s| {
+            (s.ids.len(), s.index.as_ref().map(|ix| ix.len()), s.expiry.len())
+        }) {
+            assert_eq!(ix_len, Some(rows), "LSH index out of step with arena");
+            assert_eq!(exp_len, rows, "expiry column out of step with arena");
+        }
+    }
+
+    #[test]
+    fn upsert_overwrites_in_place_and_resurrects_deleted_ids() {
+        let store = ShardedStore::with_index(2, 128, &on_cfg(), 7);
+        let mut rng = Xoshiro256::new(24);
+        let pts: Vec<BitVec> = (0..8).map(|_| sk(&mut rng, 128)).collect();
+        let ids = store.insert_batch(pts.clone());
+        // in place: same shard, same row, new bits, LSH re-keyed
+        let before = store.locate(ids[3]).unwrap();
+        let fresh = sk(&mut rng, 128);
+        store.upsert(ids[3], fresh.clone(), 0).unwrap();
+        assert_eq!(
+            store.locate(ids[3]).unwrap(),
+            before,
+            "in-place upsert moved the row"
+        );
+        assert_eq!(store.get(ids[3]).unwrap(), fresh);
+        let (s, r) = before;
+        let found = store.map_shards(|sh| {
+            sh.index
+                .as_ref()
+                .map(|ix| ix.candidates(fresh.words()).0)
+                .unwrap_or_default()
+        });
+        assert!(found[s].binary_search(&(r as u32)).is_ok());
+        // the cached weight follows the new bits
+        let (w, _, _) = store.pair_stats(ids[3], ids[0]).unwrap();
+        assert_eq!(w, fresh.count_ones());
+        // resurrection: delete, then upsert the same id back in
+        store.delete(ids[5]).unwrap();
+        assert!(store.get(ids[5]).is_none());
+        let back = sk(&mut rng, 128);
+        store.upsert(ids[5], back.clone(), 0).unwrap();
+        assert_eq!(store.get(ids[5]).unwrap(), back);
+        assert_eq!(store.live_len(), 8);
+        // an id no insert ever assigned is refused
+        let err = store.upsert(99, sk(&mut rng, 128), 0).unwrap_err();
+        assert!(err.to_string().contains("never assigned"), "{err:#}");
+    }
+
+    #[test]
+    fn sweep_expired_honors_deadlines_and_upsert_extensions() {
+        let store = ShardedStore::new(2, 64);
+        let mut rng = Xoshiro256::new(25);
+        let ops = (0..6)
+            .map(|i| MutationOp::Insert {
+                sketch: sk(&mut rng, 64),
+                deadline: match i {
+                    0 | 1 => 1_000, // expired by t=2000
+                    2 => 5_000,     // still alive at t=2000
+                    _ => 0,         // no TTL
+                },
+            })
+            .collect();
+        let (results, ticket) = store.begin_mutation_batch(ops);
+        store.finish_mutation_batch(ticket).unwrap();
+        assert!(results
+            .iter()
+            .all(|r| matches!(r, MutationResult::Inserted { .. })));
+        // extending id 1's deadline before the sweep rescues it: the
+        // sweep re-checks under the shard lock, not just at scan time
+        store.upsert(1, sk(&mut rng, 64), 9_000).unwrap();
+        assert_eq!(store.sweep_expired(2_000), 1);
+        assert!(store.get(0).is_none());
+        assert!(store.get(1).is_some());
+        assert!(store.get(2).is_some());
+        assert_eq!(store.sweep_expired(2_000), 0, "a second sweep finds nothing");
+        assert_eq!(store.sweep_expired(10_000), 2);
+        assert_eq!(store.live_len(), 3);
+    }
+
+    #[test]
+    fn durable_mutations_roundtrip_across_reopen_and_rotation() {
+        let dir = TempDir::new("store-mut-durable");
+        let cfg = durable_cfg(&dir, PersistMode::WalSnapshot, 0);
+        let mut rng = Xoshiro256::new(42);
+        let columns = |s: &ShardedStore| {
+            let mut all: Vec<(usize, u64)> = s
+                .map_shards(|sh| {
+                    sh.ids
+                        .iter()
+                        .copied()
+                        .zip(sh.expiry.iter().copied())
+                        .collect::<Vec<_>>()
+                })
+                .into_iter()
+                .flatten()
+                .collect();
+            all.sort_unstable();
+            all
+        };
+        let open = || {
+            ShardedStore::open_durable(
+                fp(2, 64, 5),
+                &IndexConfig::default(),
+                &cfg,
+                Arc::new(PersistCounters::default()),
+                &ExecutorConfig::default(),
+            )
+        };
+        let (before, before_cols) = {
+            let (store, _) = open().unwrap();
+            store.insert_batch((0..10).map(|_| sk(&mut rng, 64)).collect());
+            let (res, ticket) = store.begin_mutation_batch(vec![
+                MutationOp::Insert {
+                    sketch: sk(&mut rng, 64),
+                    deadline: 9_999,
+                },
+                MutationOp::Delete { id: 3 },
+                MutationOp::Upsert {
+                    id: 7,
+                    sketch: sk(&mut rng, 64),
+                    deadline: 1_234,
+                },
+                MutationOp::Delete { id: 44 }, // fails; the rest still lands
+            ]);
+            store.finish_mutation_batch(ticket).unwrap();
+            assert_eq!(res[0], MutationResult::Inserted { id: 10 });
+            assert_eq!(res[1], MutationResult::Deleted { id: 3 });
+            assert_eq!(res[2], MutationResult::Upserted { id: 7 });
+            assert!(matches!(res[3], MutationResult::Failed { .. }));
+            store.upsert(3, sk(&mut rng, 64), 0).unwrap(); // resurrect
+            (store.snapshot_ordered(), columns(&store))
+        };
+        // WAL replay rebuilds the exact survivor set, deadlines included
+        let (back, _) = open().unwrap();
+        assert_eq!(back.snapshot_ordered(), before);
+        assert_eq!(columns(&back), before_cols);
+        // a rotation folds the mutations into the snapshot; recovery
+        // from it (empty tail) must agree byte-for-byte — the
+        // post-compaction == pre-compaction recovery contract
+        back.persist_snapshot().unwrap();
+        drop(back);
+        let (again, report) = open().unwrap();
+        assert!(report.snapshot_rows > 0);
+        assert_eq!(report.replayed_records, 0, "the tail must be empty");
+        assert_eq!(again.snapshot_ordered(), before);
+        assert_eq!(columns(&again), before_cols);
+        // the id space continues past every assigned id, deleted or not
+        assert_eq!(again.insert_batch(vec![sk(&mut rng, 64)]), vec![11]);
+    }
+
+    #[test]
+    fn dead_frame_threshold_folds_compaction_into_rotation() {
+        let dir = TempDir::new("store-compact");
+        let cfg = PersistConfig {
+            compact_dead_frames: 4,
+            ..durable_cfg(&dir, PersistMode::WalSnapshot, 0)
+        };
+        let counters = Arc::new(PersistCounters::default());
+        let (store, _) = ShardedStore::open_durable(
+            fp(1, 64, 5),
+            &IndexConfig::default(),
+            &cfg,
+            counters.clone(),
+            &ExecutorConfig::default(),
+        )
+        .unwrap();
+        let mut rng = Xoshiro256::new(43);
+        store.insert_batch((0..6).map(|_| sk(&mut rng, 64)).collect());
+        // two deletes = 4 dead frames (each kills its insert and itself):
+        // the threshold crossing rotates on the second delete's settle
+        store.delete(0).unwrap();
+        assert_eq!(counters.snapshots.load(Ordering::Relaxed), 0);
+        store.delete(1).unwrap();
+        assert!(
+            counters.snapshots.load(Ordering::Relaxed) >= 1,
+            "dead-frame trigger never rotated"
+        );
+        assert_eq!(counters.compactions.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            counters.wal_dead_frames.load(Ordering::Relaxed),
+            0,
+            "rotation must reset the dead-frame gauge"
+        );
+        // the rotated snapshot holds only survivors; recovery agrees
+        let before = store.snapshot_ordered();
+        assert_eq!(before.len(), 4);
+        drop(store);
+        let (back, report) = ShardedStore::open_durable(
+            fp(1, 64, 5),
+            &IndexConfig::default(),
+            &cfg,
+            Arc::new(PersistCounters::default()),
+            &ExecutorConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(report.snapshot_rows, 4);
+        assert_eq!(back.snapshot_ordered(), before);
+    }
+
+    #[test]
+    fn rebalance_move_ids_pair_and_reseed_after_reopen() {
+        use crate::persist::wal::{read_wal_tail, scan_frames};
+        let dir = TempDir::new("store-move-ids");
+        let cfg = durable_cfg(&dir, PersistMode::Wal, 0);
+        let mut rng = Xoshiro256::new(44);
+        let move_ids = |si: usize, outs: bool| -> Vec<u64> {
+            let path = crate::persist::manifest::wal_path(dir.path(), 0, si);
+            let tail = read_wal_tail(&path, 1, 0, usize::MAX, u64::MAX, None).unwrap();
+            scan_frames(&tail.bytes, 1)
+                .records
+                .iter()
+                .filter_map(|r| match r {
+                    WalRecord::MoveOut { move_id } if outs => Some(*move_id),
+                    WalRecord::MoveIn { move_id, .. } if !outs => Some(*move_id),
+                    _ => None,
+                })
+                .collect()
+        };
+        let open = || {
+            ShardedStore::open_durable(
+                fp(2, 64, 5),
+                &IndexConfig::default(),
+                &cfg,
+                Arc::new(PersistCounters::default()),
+                &ExecutorConfig::default(),
+            )
+        };
+        let first_max = {
+            let (store, _) = open().unwrap();
+            store.insert_batch((0..16).map(|_| sk(&mut rng, 64)).collect());
+            assert!(store.rebalance(1) > 0);
+            // every MoveOut pairs with exactly one MoveIn stamped with
+            // the same move id, in the other shard's log
+            let mut outs: Vec<u64> = (0..2).flat_map(|si| move_ids(si, true)).collect();
+            let mut ins: Vec<u64> = (0..2).flat_map(|si| move_ids(si, false)).collect();
+            outs.sort_unstable();
+            ins.sort_unstable();
+            assert!(!outs.is_empty());
+            assert_eq!(outs, ins);
+            *outs.last().unwrap()
+        };
+        // reopen: recovery reports the replayed maximum and the counter
+        // reseeds past it, so no move id is ever reused
+        let (store, report) = open().unwrap();
+        assert_eq!(report.max_move_id, first_max);
+        store.insert_batch((0..20).map(|_| sk(&mut rng, 64)).collect());
+        assert!(store.rebalance(1) > 0);
+        let mut outs: Vec<u64> = (0..2).flat_map(|si| move_ids(si, true)).collect();
+        outs.sort_unstable();
+        let n = outs.len();
+        outs.dedup();
+        assert_eq!(outs.len(), n, "a move id was reused after reopen");
+        assert!(*outs.last().unwrap() > first_max);
     }
 }

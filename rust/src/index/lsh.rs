@@ -135,6 +135,78 @@ impl LshIndex {
         self.rows -= 1;
     }
 
+    /// Un-index the row at `pos` of a swap-remove: the row's own entries
+    /// are dropped and, unless `pos` was the trailing row, the former
+    /// trailing row (whose packed words are `last_words`) is re-keyed
+    /// from row number `len() - 1` to `pos` — the index-side mirror of
+    /// [`crate::sketch::SketchMatrix::swap_remove_row`]. O(L) per delete.
+    pub fn remove_at(&mut self, pos: usize, removed_words: &[u64], last_words: &[u64]) {
+        debug_assert!(pos < self.rows, "remove_at past the indexed rows");
+        let last = self.rows - 1;
+        if pos == last {
+            self.remove_last(removed_words);
+            return;
+        }
+        for band in &mut self.bands {
+            // drop the removed row's entry and its bit counts
+            let removed_key = band.sample.key_of_words(removed_words);
+            let mut set = removed_key;
+            while set != 0 {
+                band.ones[set.trailing_zeros() as usize] -= 1;
+                set &= set - 1;
+            }
+            if let Some(bucket) = band.table.get_mut(&removed_key) {
+                if let Some(i) = bucket.iter().rposition(|&r| r == pos as u32) {
+                    bucket.swap_remove(i);
+                }
+                if bucket.is_empty() {
+                    band.table.remove(&removed_key);
+                }
+            }
+            // the trailing row moved into `pos`: same key, new row number
+            let last_key = band.sample.key_of_words(last_words);
+            if let Some(bucket) = band.table.get_mut(&last_key) {
+                if let Some(i) = bucket.iter().rposition(|&r| r == last as u32) {
+                    bucket[i] = pos as u32;
+                }
+            }
+        }
+        self.rows -= 1;
+    }
+
+    /// Re-key row `pos` from `old_words` to `new_words` in place — the
+    /// index-side mirror of [`crate::sketch::SketchMatrix::overwrite_row`]
+    /// (upsert). O(L) per update.
+    pub fn update_row(&mut self, pos: usize, old_words: &[u64], new_words: &[u64]) {
+        debug_assert!(pos < self.rows, "update_row past the indexed rows");
+        for band in &mut self.bands {
+            let old_key = band.sample.key_of_words(old_words);
+            let new_key = band.sample.key_of_words(new_words);
+            let mut cleared = old_key;
+            while cleared != 0 {
+                band.ones[cleared.trailing_zeros() as usize] -= 1;
+                cleared &= cleared - 1;
+            }
+            let mut set = new_key;
+            while set != 0 {
+                band.ones[set.trailing_zeros() as usize] += 1;
+                set &= set - 1;
+            }
+            if old_key == new_key {
+                continue; // bucket membership unchanged
+            }
+            if let Some(bucket) = band.table.get_mut(&old_key) {
+                if let Some(i) = bucket.iter().rposition(|&r| r == pos as u32) {
+                    bucket.swap_remove(i);
+                }
+                if bucket.is_empty() {
+                    band.table.remove(&old_key);
+                }
+            }
+            band.table.entry(new_key).or_default().push(pos as u32);
+        }
+    }
+
     /// Drop every bucket and re-index the arena from scratch (bulk
     /// reconstruction). The band samples are retained, so a rebuilt index
     /// answers queries identically to one grown incrementally over the
@@ -336,6 +408,54 @@ mod tests {
         assert!(full.is_empty());
         full.insert(0, rows[3].words());
         assert_eq!(full.candidates(rows[3].words()).0, vec![0]);
+    }
+
+    #[test]
+    fn remove_at_matches_a_rebuild_over_the_swapped_arena() {
+        let rows = random_rows(11, 50, 30);
+        let mut matrix = SketchMatrix::from_sketches(&rows);
+        let mut ix = LshIndex::new(&cfg(), DIM, 17);
+        ix.rebuild(&matrix);
+        let mut rng = Xoshiro256::new(12);
+        // random interior/head/tail deletes, mirrored into the arena
+        while matrix.len() > 5 {
+            let pos = rng.gen_range(matrix.len() as u64) as usize;
+            let removed: Vec<u64> = matrix.row(pos).to_vec();
+            let last: Vec<u64> = matrix.row(matrix.len() - 1).to_vec();
+            ix.remove_at(pos, &removed, &last);
+            matrix.swap_remove_row(pos);
+            assert_eq!(ix.len(), matrix.len());
+        }
+        let mut rebuilt = LshIndex::new(&cfg(), DIM, 17);
+        rebuilt.rebuild(&matrix);
+        for q in random_rows(13, 8, 30) {
+            assert_eq!(ix.candidates(q.words()), rebuilt.candidates(q.words()));
+        }
+    }
+
+    #[test]
+    fn update_row_matches_a_rebuild_over_the_overwritten_arena() {
+        let rows = random_rows(14, 40, 30);
+        let mut matrix = SketchMatrix::from_sketches(&rows);
+        let mut ix = LshIndex::new(&cfg(), DIM, 19);
+        ix.rebuild(&matrix);
+        let mut rng = Xoshiro256::new(15);
+        let fresh = random_rows(16, 12, 35);
+        for f in &fresh {
+            let pos = rng.gen_range(matrix.len() as u64) as usize;
+            let old: Vec<u64> = matrix.row(pos).to_vec();
+            ix.update_row(pos, &old, f.words());
+            matrix.overwrite_row(pos, f.words(), f.count_ones() as u32);
+        }
+        // self-update is a no-op in effect
+        let same: Vec<u64> = matrix.row(0).to_vec();
+        ix.update_row(0, &same, &same);
+        let mut rebuilt = LshIndex::new(&cfg(), DIM, 19);
+        rebuilt.rebuild(&matrix);
+        assert_eq!(ix.len(), rebuilt.len());
+        for q in random_rows(18, 8, 30) {
+            assert_eq!(ix.candidates(q.words()), rebuilt.candidates(q.words()));
+        }
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! evaluation depends on — eleven baseline dimensionality-reduction methods,
 //! k-mode/k-means clustering with purity/NMI/ARI scoring, RMSE/heatmap/MAE
 //! analysis harnesses, synthetic statistical twins of the paper's six
-//! datasets, and a streaming sketch *service* — dynamic insert batching,
-//! point-balanced sharding over contiguous bit-packed sketch arenas
-//! ([`sketch::SketchMatrix`]) with an O(1) id → (shard, row) index, and
+//! datasets, and a streaming sketch *service* over a **mutable corpus** —
+//! dynamic write batching (insert, delete, upsert and per-row TTL are
+//! first-class operations at every layer), point-balanced sharding over
+//! contiguous bit-packed sketch arenas ([`sketch::SketchMatrix`], with
+//! swap-remove deletes mirrored into the LSH index under the same shard
+//! lock) with an O(1) id → (shard, row) index, and
 //! single or batched top-k routing executed on a persistent shard-executor
 //! runtime ([`coordinator::executor`]: one long-lived worker thread per
 //! shard behind bounded work queues — no per-request thread spawning) with
@@ -21,20 +24,24 @@
 //! hot path can run either natively (bit-packed popcount over borrowed
 //! `&[u64]` arena rows) or through AOT-compiled JAX/Pallas artifacts via
 //! PJRT, and whose corpus can be made crash-durable ([`persist`]:
-//! per-shard checksummed WALs with group-committed fsyncs — one per
-//! commit window per touched shard, acks released when their window
-//! lands, commit failures surfaced to the client as insert errors — plus
-//! snapshot generations and full-fingerprint-checked warm recovery, so a
-//! restart never re-sketches the corpus and never loads one persisted
-//! under a different corpus shape), and whose reads scale out through
+//! per-shard checksummed WALs logging every *mutation* — insert, delete,
+//! upsert, TTL expiry, rebalance move — with group-committed fsyncs (one
+//! per commit window per touched shard, acks released when their window
+//! lands, commit failures surfaced to the client as write errors), plus
+//! snapshot generations, dead-frame-triggered WAL compaction folded into
+//! rotation, and full-fingerprint-checked warm recovery, so a restart
+//! never re-sketches the corpus and never loads one persisted under a
+//! different corpus shape), and whose reads scale out through
 //! log-shipping replication ([`replica`]: every WAL frame carries a
 //! monotonic per-shard sequence anchored by the manifest, a primary
 //! ships snapshot arenas + checksummed frame ranges over the same wire
 //! protocol, and a follower bootstraps through the ordinary recovery
-//! path, applies the tail continuously into its own store + WAL, serves
-//! bit-identical reads while rejecting writes with a redirect, and can
-//! be promoted writable when the primary dies — losing nothing the
-//! primary had acked and shipped).
+//! path, applies the tail of mutations continuously into its own store +
+//! WAL — deletes and upserts mirrored bit-identically, cross-shard moves
+//! applied destination-before-source — serves bit-identical reads while
+//! rejecting writes with a redirect, and can be promoted writable when
+//! the primary dies, losing nothing the primary had acked and shipped;
+//! promotion also adopts the primary-side TTL-sweep duty).
 //!
 //! ## Architecture (three layers)
 //!

@@ -11,6 +11,7 @@
 //!                      [--data-dir DIR] [--persist off|wal|wal+snapshot]
 //!                      [--fsync always|never] [--snapshot-every 50000]
 //!                      [--commit-window-us 1000] [--wal-max-bytes 0]
+//!                      [--compact-dead-frames 0] [--ttl-sweep-ms 1000]
 //!                      [--replicate-from HOST:PORT] [--repl-poll-ms 2]
 //! cabin-sketch sketch  --input docword.txt [--sketch-dim 1000] [--out sketches.bin]
 //! cabin-sketch repro   <table1|table3|table4|fig2..fig12|ablation-*|all> [options]
@@ -57,7 +58,9 @@ fn print_help() {
         "cabin-sketch — Cabin/Cham categorical sketching service\n\
          \n\
          commands:\n\
-           serve    run the sketch service (TCP line-JSON protocol)\n\
+           serve    run the sketch service (TCP line-JSON protocol); the\n\
+                    corpus is mutable — insert, delete, upsert and per-row\n\
+                    TTL are first-class, durable, replicated operations\n\
            sketch   one-shot: sketch a UCI docword file to packed binary\n\
            repro    regenerate a paper table/figure (see DESIGN.md §4)\n\
            info     report artifacts, backend and configuration\n\
@@ -82,12 +85,25 @@ fn print_help() {
                     persist_wal_live_bytes stats gauge; 0 = off; bounds\n\
                     replay and follower-bootstrap cost independently of\n\
                     --snapshot-every)\n\
+                    [--compact-dead-frames N] (WAL compaction: deletes and\n\
+                    in-place upserts leave dead frames behind; once N of\n\
+                    them accumulate the next rotation folds them away by\n\
+                    cutting a fresh snapshot — the persist_wal_dead_frames\n\
+                    and persist_compactions stats track it; 0 = off)\n\
+         serve mutations: delete / upsert wire ops, plus optional ttl_ms on\n\
+                    every insert form (relative; the primary stamps the\n\
+                    absolute deadline)\n\
+                    [--ttl-sweep-ms N] (primary-side TTL sweep interval —\n\
+                    also the expiry granularity; expired rows are removed\n\
+                    by ordinary replicated Delete frames, so replicas just\n\
+                    mirror them; 0 = off; default 1000)\n\
          serve replication: --replicate-from HOST:PORT (+ --data-dir; run as\n\
                     a read replica of that primary: bootstrap from its\n\
                     newest snapshot, apply its WAL stream continuously,\n\
                     serve query/query_batch/distance/stats with results\n\
-                    bit-identical to the primary's, reject inserts with a\n\
-                    redirect; the corpus flags must match the primary's.\n\
+                    bit-identical to the primary's, reject writes (insert,\n\
+                    delete, upsert) with a redirect; the corpus flags must\n\
+                    match the primary's.\n\
                     The `promote` wire op flips a caught-up replica\n\
                     writable — e.g. after killing a dead primary)\n\
                     [--repl-poll-ms N] (idle tail-poll interval)"
@@ -113,6 +129,7 @@ fn coordinator_config(args: &Args) -> CoordinatorConfig {
         executor_queue: args.usize_or("executor-queue", 1024),
         replicate_from: args.str_opt("replicate-from").map(str::to_string),
         repl_poll_ms: args.u64_or("repl-poll-ms", 2),
+        ttl_sweep_ms: args.u64_or("ttl-sweep-ms", 1_000),
     }
 }
 
@@ -146,6 +163,7 @@ fn persist_config(args: &Args) -> PersistConfig {
         snapshot_every: args.u64_or("snapshot-every", defaults.snapshot_every),
         commit_window_us: args.u64_or("commit-window-us", defaults.commit_window_us),
         wal_max_bytes: args.u64_or("wal-max-bytes", defaults.wal_max_bytes),
+        compact_dead_frames: args.u64_or("compact-dead-frames", defaults.compact_dead_frames),
     }
 }
 

@@ -35,16 +35,27 @@
 //! frame count instead of mislabelling sequences. Like the seeds, the
 //! seqs are stored as strings so they roundtrip exactly through the
 //! f64-backed JSON model.
+//!
+//! Version 4 marks the mutable-corpus log format. WAL segments may now
+//! contain `Delete` (kind 4), `Upsert` (kind 5) and `InsertTtl` (kind 6)
+//! frames, `MoveOut`/`MoveIn` pairs carry a shared move id, and snapshot
+//! rows (snapshot format v2) carry a per-row TTL deadline column. A v3
+//! dir's bytes are not interpretable under these rules (a v3 MoveOut has
+//! no move id; a v3 snapshot row has no deadline), so v3 manifests are
+//! refused descriptively like v1/v2 rather than mis-decoded.
 
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
-/// Version 3 added per-shard WAL base sequence numbers. Version 2 (no
-/// `base_seqs`) cannot anchor a follower's catch-up position, and version
-/// 1 cannot even be verified against the live corpus shape — both are
-/// refused with a descriptive error rather than half-loaded.
-const VERSION: u32 = 3;
+/// Version 4 marks the mutable-corpus log format: Delete/Upsert/TTL WAL
+/// frame kinds, move ids on MoveOut/MoveIn pairs, and a per-row TTL
+/// deadline column in snapshots. Version 3 dirs predate all of those,
+/// version 2 (no `base_seqs`) cannot anchor a follower's catch-up
+/// position, and version 1 cannot even be verified against the live
+/// corpus shape — each is refused with a descriptive error rather than
+/// half-loaded.
+const VERSION: u32 = 4;
 
 /// The store configuration a data dir was persisted under.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -232,6 +243,15 @@ impl Manifest {
                 path.display()
             );
         }
+        if version == 3 {
+            bail!(
+                "{}: manifest version 3 predates the mutable-corpus log format \
+                 (no Delete/Upsert/TTL frame kinds, no move ids, no per-row TTL \
+                 deadlines in snapshots), so its WAL and snapshot bytes cannot be \
+                 interpreted by this server — re-ingest into a fresh --data-dir",
+                path.display()
+            );
+        }
         if version != VERSION {
             bail!("{}: unsupported manifest version {version}", path.display());
         }
@@ -378,6 +398,20 @@ mod tests {
         let err = Manifest::load(dir.path()).unwrap_err().to_string();
         assert!(err.contains("version 2"), "{err}");
         assert!(err.contains("base_seqs"), "{err}");
+        assert!(err.contains("fresh --data-dir"), "{err}");
+    }
+
+    #[test]
+    fn version_3_manifest_is_refused_descriptively() {
+        let dir = TempDir::new("manifest-v3");
+        std::fs::write(
+            manifest_path(dir.path()),
+            r#"{"version":3,"generation":2,"sketch_dim":64,"seed":"7","num_shards":2,"input_dim":100,"num_categories":4,"base_seqs":["5","9"]}"#,
+        )
+        .unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("version 3"), "{err}");
+        assert!(err.contains("Delete/Upsert/TTL"), "{err}");
         assert!(err.contains("fresh --data-dir"), "{err}");
     }
 

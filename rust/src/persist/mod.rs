@@ -14,7 +14,11 @@
 //! Write path: the store appends WAL records *under the shard write lock*
 //! (so log order = arena order) and commits once per batch before the
 //! batch is acknowledged; with [`FsyncPolicy::Always`] an acknowledged
-//! insert therefore survives `kill -9`.
+//! mutation therefore survives `kill -9`. The log is a full mutation
+//! stream, not an insert stream: `Insert`/`InsertTtl` push a row,
+//! `Delete` swap-removes one, `Upsert` overwrites one in place, and
+//! `MoveOut`/`MoveIn` pairs (sharing a move id) relocate one across
+//! shards — see [`wal`] for the frame formats.
 //!
 //! Group commit (`commit_window_us > 0` — the default — under
 //! `fsync = always`; with `fsync = never` a commit is a buffered write
@@ -44,10 +48,22 @@
 //! live writers → GC generation `G`. A crash on either side of the
 //! manifest rename recovers a complete generation — never a mix.
 //!
+//! WAL compaction is folded into snapshot rotation rather than run as a
+//! separate rewrite pass: a `Delete` frame makes two frames dead (itself
+//! plus the insert it cancels) and an in-place `Upsert` makes one dead
+//! (the version it shadows), and since a rotation cuts a snapshot that
+//! already *contains* the survivors and starts a fresh empty segment,
+//! rotating IS dropping every dead frame. The store accounts dead frames
+//! as they are written (`persist_wal_dead_frames` gauge, reset by
+//! rotation), `--compact-dead-frames N` arms a third auto-rotation
+//! trigger on that count (alongside `snapshot_every` records and
+//! `--wal-max-bytes`), and each rotation that reclaimed at least one
+//! dead frame counts as a `persist_compactions`.
+//!
 //! Sequence numbers + retention (replication, see [`crate::replica`]):
 //! every WAL frame carries an implicit monotonic per-shard sequence —
 //! frame `j` of `wal-G-shard-i` is sequence `base_seqs[i] + j`, where the
-//! manifest (v3) records each generation's per-shard base. Rotation
+//! manifest (v4) records each generation's per-shard base. Rotation
 //! advances the bases by the frames the cut absorbed, and *retains the
 //! previous generation's WAL segments* for exactly one generation so a
 //! follower that lags across a rotation can still be served the frames
@@ -65,8 +81,8 @@
 //! indexes via the existing [`crate::index::LshIndex::rebuild`] path.
 //!
 //! Known limits (ROADMAP "Open items"): snapshots are stop-the-world and
-//! full, not incremental; there is no background WAL compaction between
-//! snapshots.
+//! full, not incremental; dead frames between rotations are reclaimed
+//! only by the next rotation (there is no in-place segment rewrite).
 
 pub mod manifest;
 pub mod recovery;
@@ -143,6 +159,14 @@ pub struct PersistConfig {
     /// (`snapshot_every`) is independent and either can fire. Only
     /// meaningful under [`PersistMode::WalSnapshot`].
     pub wal_max_bytes: u64,
+    /// Dead-frame-triggered compaction (`--compact-dead-frames`): rotate —
+    /// which drops every frame the new snapshot shadows — once the live
+    /// segments have accumulated this many dead frames (each `Delete`
+    /// deadens two frames, each in-place `Upsert` one). `0` (the default)
+    /// disables the trigger; the record-count and byte-size triggers are
+    /// independent and any of the three can fire. Only meaningful under
+    /// [`PersistMode::WalSnapshot`].
+    pub compact_dead_frames: u64,
 }
 
 impl Default for PersistConfig {
@@ -154,6 +178,7 @@ impl Default for PersistConfig {
             snapshot_every: 50_000,
             commit_window_us: 1_000,
             wal_max_bytes: 0,
+            compact_dead_frames: 0,
         }
     }
 }
@@ -228,6 +253,10 @@ impl PersistConfig {
                 "persist_cfg_wal_max_bytes".into(),
                 self.wal_max_bytes as f64,
             ),
+            (
+                "persist_cfg_compact_dead_frames".into(),
+                self.compact_dead_frames as f64,
+            ),
         ]
     }
 }
@@ -252,6 +281,14 @@ pub struct PersistCounters {
     /// (each window = one write + fsync per dirty shard, shared by every
     /// batch that landed in the window).
     pub group_commits: AtomicU64,
+    /// Dead frames in the live WAL segments: frames the next rotation's
+    /// snapshot will shadow (each `Delete` deadens itself plus the insert
+    /// it cancels; each in-place `Upsert` deadens the version it
+    /// shadows). Reset to 0 by a successful rotation.
+    pub wal_dead_frames: AtomicU64,
+    /// Rotations that reclaimed at least one dead frame — i.e. rotations
+    /// that acted as WAL compactions, however they were triggered.
+    pub compactions: AtomicU64,
 }
 
 /// Poison-recovering mutex lock: a WAL writer is plain buffered-file
@@ -452,6 +489,24 @@ pub struct SeqView {
     pub prev: Option<(u64, Vec<u64>)>,
 }
 
+/// Per-shard memo of the furthest frame boundary a WAL tail scan has
+/// reached in the live segment, so the replication shipper can hand
+/// [`wal::read_wal_tail`] a resume hint instead of rescanning the whole
+/// segment per poll. Keyed by generation — a rotation (including a
+/// compacting one) changes the generation and thereby self-invalidates
+/// the memo. Advances monotonically within a generation: several
+/// followers at different positions share the cache, and only the
+/// furthest boundary is worth remembering (a hint past a slower
+/// follower's `skip` is simply ignored by the reader).
+#[derive(Clone, Copy, Debug, Default)]
+struct TailOffsetCache {
+    generation: u64,
+    /// Frame index within the segment (`seq - base`) of the boundary.
+    frame: u64,
+    /// Byte offset of that boundary in the segment file.
+    offset: u64,
+}
+
 /// The live persistence handle owned by the store: one WAL writer per
 /// shard plus the snapshot/rotation and group-commit machinery.
 pub struct Persistence {
@@ -469,8 +524,17 @@ pub struct Persistence {
     /// it to `wal_max_bytes` alongside the now-empty segments.
     bytes_floor: AtomicU64,
     fingerprint: Fingerprint,
+    /// Dead-frame-count rotation threshold (`0` = off); see
+    /// [`PersistConfig::compact_dead_frames`].
+    compact_dead_frames: u64,
+    /// Dead frames accumulated since the last snapshot cut — the
+    /// compaction trigger's basis (reset on claim and on rotation; the
+    /// `counters.wal_dead_frames` gauge resets on rotation only).
+    dead_since_snapshot: AtomicU64,
     /// Records appended since the last snapshot cut (drives auto-snapshot).
     records_since_snapshot: AtomicU64,
+    /// Shipper tail-scan memo, one per shard (see [`TailOffsetCache`]).
+    tail_offsets: Vec<Mutex<TailOffsetCache>>,
     /// WAL sequence anchoring (see [`SeqView`]).
     seq: Mutex<SeqView>,
     /// Arc-shared with the group-commit thread (it flushes through the
@@ -575,6 +639,14 @@ impl Persistence {
             wal_max_bytes: cfg.wal_max_bytes,
             bytes_floor: AtomicU64::new(cfg.wal_max_bytes),
             fingerprint,
+            compact_dead_frames: cfg.compact_dead_frames,
+            // the dead-frame basis restarts at 0 on reopen — replay cost
+            // across restarts stays bounded by the record-count seeding
+            // below either way
+            dead_since_snapshot: AtomicU64::new(0),
+            tail_offsets: (0..fingerprint.num_shards)
+                .map(|_| Mutex::new(TailOffsetCache::default()))
+                .collect(),
             // a restart with a fat WAL tail counts it toward the next
             // auto-snapshot, so replay cost cannot grow without bound
             // across repeated crashes
@@ -782,17 +854,50 @@ impl Persistence {
             .fetch_add(records, Ordering::Relaxed);
     }
 
+    /// Account frames that just became dead in the live segments (a
+    /// `Delete` deadens 2, an in-place `Upsert` deadens 1) toward the
+    /// `persist_wal_dead_frames` gauge and the compaction trigger.
+    pub fn note_dead_frames(&self, frames: u64) {
+        self.counters.wal_dead_frames.fetch_add(frames, Ordering::Relaxed);
+        self.dead_since_snapshot.fetch_add(frames, Ordering::Relaxed);
+    }
+
+    /// The shipper's tail-scan resume hint for `shard`, valid only for
+    /// `generation` — `(frame index, byte offset)` of the furthest
+    /// boundary scanned, or `None` when the memo is cold or from another
+    /// generation.
+    pub fn tail_hint(&self, shard: usize, generation: u64) -> Option<(u64, u64)> {
+        let c = lock_recover(&self.tail_offsets[shard]);
+        (c.generation == generation && c.frame > 0).then_some((c.frame, c.offset))
+    }
+
+    /// Record the boundary a tail scan of `shard`'s generation-
+    /// `generation` segment ended at. Overwrites a stale-generation memo;
+    /// within a generation it only advances (slower followers must not
+    /// drag the memo backwards under faster ones).
+    pub fn note_tail_offset(&self, shard: usize, generation: u64, frame: u64, offset: u64) {
+        let mut c = lock_recover(&self.tail_offsets[shard]);
+        if c.generation != generation || frame > c.frame {
+            *c = TailOffsetCache { generation, frame, offset };
+        }
+    }
+
     /// Whether an auto-snapshot threshold has been crossed — the record
-    /// count (`snapshot_every`) or the live-segment size
-    /// (`wal_max_bytes`); either can fire independently. Read-only probe;
-    /// the store's trigger path uses
-    /// [`Persistence::try_claim_auto_snapshot`].
+    /// count (`snapshot_every`), the live-segment size (`wal_max_bytes`),
+    /// or the dead-frame count (`compact_dead_frames`); any of the three
+    /// can fire independently. Read-only probe; the store's trigger path
+    /// uses [`Persistence::try_claim_auto_snapshot`].
     pub fn should_auto_snapshot(&self) -> bool {
         if self.mode != PersistMode::WalSnapshot {
             return false;
         }
         if self.snapshot_every > 0
             && self.records_since_snapshot.load(Ordering::Relaxed) >= self.snapshot_every
+        {
+            return true;
+        }
+        if self.compact_dead_frames > 0
+            && self.dead_since_snapshot.load(Ordering::Relaxed) >= self.compact_dead_frames
         {
             return true;
         }
@@ -820,6 +925,16 @@ impl Persistence {
                 .records_since_snapshot
                 .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
                     (v >= self.snapshot_every).then_some(0)
+                })
+                .is_ok()
+        {
+            return true;
+        }
+        if self.compact_dead_frames > 0
+            && self
+                .dead_since_snapshot
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    (v >= self.compact_dead_frames).then_some(0)
                 })
                 .is_ok()
         {
@@ -860,21 +975,27 @@ impl Persistence {
     /// for one generation so a follower that lagged across this rotation
     /// can still be shipped the frames the new snapshot absorbed; the
     /// two-generations-old segments expire instead.
+    ///
+    /// Rotation doubles as WAL compaction: the fresh segments start
+    /// empty, so every dead frame (delete-shadowed or upsert-shadowed) in
+    /// the old generation is dropped from the live log in one move — the
+    /// snapshot holds only the survivors.
     pub fn write_snapshot(
         &self,
-        shards: &[(&[usize], &SketchMatrix)],
+        shards: &[(&[usize], &[u64], &SketchMatrix)],
         wal_guards: &mut [MutexGuard<'_, WalWriter>],
     ) -> Result<u64> {
         assert_eq!(shards.len(), self.wals.len());
         assert_eq!(wal_guards.len(), self.wals.len());
         let old = self.generation();
         let new = old + 1;
-        for (si, (ids, rows)) in shards.iter().enumerate() {
+        for (si, (ids, expiry, rows)) in shards.iter().enumerate() {
             snapshot::write_shard(
                 &snap_path(&self.dir, new, si),
                 self.fingerprint.sketch_dim,
                 si,
                 ids,
+                expiry,
                 rows,
             )
             .with_context(|| format!("snapshotting shard {si} at generation {new}"))?;
@@ -923,6 +1044,10 @@ impl Persistence {
         }
         self.records_since_snapshot.store(0, Ordering::Relaxed);
         self.bytes_floor.store(self.wal_max_bytes, Ordering::Relaxed);
+        self.dead_since_snapshot.store(0, Ordering::Relaxed);
+        if self.counters.wal_dead_frames.swap(0, Ordering::Relaxed) > 0 {
+            self.counters.compactions.fetch_add(1, Ordering::Relaxed);
+        }
         self.counters.snapshots.fetch_add(1, Ordering::Relaxed);
         self.counters.generation.store(new, Ordering::Relaxed);
         for si in 0..self.wals.len() {
@@ -961,6 +1086,7 @@ mod tests {
             snapshot_every: 4,
             commit_window_us: 0, // group-commit tests opt in explicitly
             wal_max_bytes: 0,
+            compact_dead_frames: 0,
         }
     }
 
@@ -1102,7 +1228,8 @@ mod tests {
         }
         let rotate = |p: &Persistence| {
             let empty = SketchMatrix::new(64);
-            let views: Vec<(&[usize], &SketchMatrix)> = vec![(&[], &empty), (&[], &empty)];
+            let views: Vec<(&[usize], &[u64], &SketchMatrix)> =
+                vec![(&[], &[], &empty), (&[], &[], &empty)];
             let mut guards: Vec<_> = (0..2).map(|si| p.wal_guard(si)).collect();
             p.write_snapshot(&views, &mut guards).unwrap()
         };
@@ -1177,12 +1304,74 @@ mod tests {
         assert!(p.try_claim_auto_snapshot());
         // a successful rotation resets the floor with the fresh segments
         let empty = SketchMatrix::new(64);
-        let views: Vec<(&[usize], &SketchMatrix)> = vec![(&[], &empty), (&[], &empty)];
+        let views: Vec<(&[usize], &[u64], &SketchMatrix)> =
+            vec![(&[], &[], &empty), (&[], &[], &empty)];
         let mut guards: Vec<_> = (0..2).map(|si| p.wal_guard(si)).collect();
         p.write_snapshot(&views, &mut guards).unwrap();
         drop(guards);
         assert_eq!(p.wal_live_bytes(), 0);
         assert!(!p.should_auto_snapshot());
+    }
+
+    #[test]
+    fn dead_frame_trigger_claims_and_rotation_counts_a_compaction() {
+        let dir = TempDir::new("persist-dead-trigger");
+        let config = PersistConfig {
+            snapshot_every: 0, // isolate the compaction trigger
+            compact_dead_frames: 3,
+            ..cfg(&dir, PersistMode::WalSnapshot)
+        };
+        let counters = Arc::new(PersistCounters::default());
+        let (p, _, _) = Persistence::open(&config, fp(), counters.clone()).unwrap();
+        assert!(!p.should_auto_snapshot());
+        p.note_dead_frames(2); // one delete
+        assert!(!p.should_auto_snapshot());
+        assert!(!p.try_claim_auto_snapshot());
+        p.note_dead_frames(1); // one in-place upsert
+        assert_eq!(counters.wal_dead_frames.load(Ordering::Relaxed), 3);
+        assert!(p.should_auto_snapshot());
+        // exclusive claim, reset-on-claim, gauge untouched by the claim
+        assert!(p.try_claim_auto_snapshot());
+        assert!(!p.try_claim_auto_snapshot());
+        assert!(!p.should_auto_snapshot());
+        assert_eq!(counters.wal_dead_frames.load(Ordering::Relaxed), 3);
+        // rotation resets the gauge and counts a compaction
+        let empty = SketchMatrix::new(64);
+        let views: Vec<(&[usize], &[u64], &SketchMatrix)> =
+            vec![(&[], &[], &empty), (&[], &[], &empty)];
+        let mut guards: Vec<_> = (0..2).map(|si| p.wal_guard(si)).collect();
+        p.write_snapshot(&views, &mut guards).unwrap();
+        drop(guards);
+        assert_eq!(counters.wal_dead_frames.load(Ordering::Relaxed), 0);
+        assert_eq!(counters.compactions.load(Ordering::Relaxed), 1);
+        // a rotation with no dead frames is not a compaction
+        let mut guards: Vec<_> = (0..2).map(|si| p.wal_guard(si)).collect();
+        p.write_snapshot(&views, &mut guards).unwrap();
+        drop(guards);
+        assert_eq!(counters.compactions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn tail_offset_memo_is_generation_keyed_and_monotonic() {
+        let dir = TempDir::new("persist-tail-memo");
+        let (p, _, _) = Persistence::open(
+            &cfg(&dir, PersistMode::WalSnapshot),
+            fp(),
+            Arc::new(PersistCounters::default()),
+        )
+        .unwrap();
+        assert_eq!(p.tail_hint(0, 0), None, "cold memo serves no hint");
+        p.note_tail_offset(0, 0, 4, 116);
+        assert_eq!(p.tail_hint(0, 0), Some((4, 116)));
+        assert_eq!(p.tail_hint(1, 0), None, "per-shard memo");
+        assert_eq!(p.tail_hint(0, 1), None, "other generation: invalid");
+        // a slower follower's shorter scan must not drag the memo back
+        p.note_tail_offset(0, 0, 2, 58);
+        assert_eq!(p.tail_hint(0, 0), Some((4, 116)));
+        // a rotation's new generation overwrites regardless of frame
+        p.note_tail_offset(0, 1, 1, 29);
+        assert_eq!(p.tail_hint(0, 1), Some((1, 29)));
+        assert_eq!(p.tail_hint(0, 0), None);
     }
 
     #[test]

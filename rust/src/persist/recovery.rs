@@ -2,13 +2,21 @@
 //!
 //! Per shard, recovery is `state = snapshot(generation) ⊕ replay(wal
 //! segment of that generation)`: the snapshot (if the live generation is
-//! > 0) seeds the arena, and the WAL records append/pop it forward in the
-//! exact order the live store mutated it — `Insert`/`MoveIn` push a row,
-//! `MoveOut` pops the trailing row, mirroring the only mutation shapes
-//! [`crate::coordinator::store::ShardedStore`] ever performs. Because
-//! every record was logged under its shard's write lock, no cross-shard
-//! ordering is needed: replaying each shard independently reproduces the
-//! pre-crash `ids`/`rows`/weights/shard-sizes state exactly.
+//! > 0) seeds the arena, and the WAL records mutate it forward in the
+//! exact order the live store mutated it — `Insert` (with or without a
+//! TTL deadline) and `MoveIn` push a row, `MoveOut` pops the trailing
+//! row, `Delete` swap-removes the row holding the named id, and `Upsert`
+//! overwrites it in place — mirroring the exact mutation shapes
+//! [`crate::coordinator::store::ShardedStore`] performs. Replay keeps a
+//! per-shard id → row map (seeded from the snapshot's id column) so
+//! `Delete`/`Upsert` can address rows the way the live store does through
+//! its id index. Because every record was logged under its shard's write
+//! lock, no cross-shard ordering is needed: replaying each shard
+//! independently reproduces the pre-crash
+//! `ids`/`rows`/weights/deadlines/shard-sizes state exactly. A
+//! `Delete`/`Upsert` naming an id the shard does not hold is a hard
+//! error: the live store only logs them in the shard that held the row,
+//! so a miss means the log does not extend the snapshot next to it.
 //!
 //! Failure policy:
 //! * missing manifest → fresh dir: initialise generation 0 and start empty;
@@ -62,6 +70,11 @@ pub struct RecoveryReport {
     /// (`prev_generation`/`prev_base_seqs`); the persistence layer
     /// validates the files against it before the shipper may serve them.
     pub retained_prev: Option<(u64, Vec<u64>)>,
+    /// Highest rebalance move id seen across every shard's replayed
+    /// `MoveOut`/`MoveIn` frames — the store resumes its move-id counter
+    /// at `max_move_id + 1` so restarted primaries never reuse an id a
+    /// follower may still be sequencing on.
+    pub max_move_id: u64,
 }
 
 /// Recover every shard's state from `dir`, initialising the dir on first
@@ -103,6 +116,7 @@ pub fn recover(dir: &Path, expect: &Fingerprint) -> Result<(Vec<ShardState>, Rec
         } else {
             ShardState {
                 ids: Vec::new(),
+                expiry: Vec::new(),
                 rows: crate::sketch::SketchMatrix::new(expect.sketch_dim),
             }
         };
@@ -112,21 +126,67 @@ pub fn recover(dir: &Path, expect: &Fingerprint) -> Result<(Vec<ShardState>, Rec
         if wal_file.exists() {
             let replay = read_wal(&wal_file, words_per_row)
                 .with_context(|| format!("reading WAL {}", wal_file.display()))?;
+            // id → row, maintained through the replay exactly like the
+            // live store's id index (swap-remove re-homes the trailing row)
+            let mut at: std::collections::HashMap<usize, usize> = state
+                .ids
+                .iter()
+                .enumerate()
+                .map(|(row, &id)| (id, row))
+                .collect();
             for rec in &replay.records {
                 match rec {
-                    WalRecord::Insert { id, words } | WalRecord::MoveIn { id, words } => {
+                    WalRecord::Insert { id, deadline, words }
+                    | WalRecord::MoveIn { id, deadline, words, .. } => {
+                        if let WalRecord::MoveIn { move_id, .. } = rec {
+                            report.max_move_id = report.max_move_id.max(*move_id);
+                        }
                         let weight = crate::sketch::bitvec::popcount_words(words) as u32;
+                        at.insert(*id as usize, state.rows.len());
                         state.rows.push_row(words, weight);
                         state.ids.push(*id as usize);
+                        state.expiry.push(*deadline);
                     }
-                    WalRecord::MoveOut => {
-                        if state.ids.pop().is_none() || !state.rows.pop_row() {
-                            bail!(
+                    WalRecord::MoveOut { move_id } => {
+                        report.max_move_id = report.max_move_id.max(*move_id);
+                        match (state.ids.pop(), state.expiry.pop()) {
+                            (Some(id), Some(_)) if state.rows.pop_row() => {
+                                at.remove(&id);
+                            }
+                            _ => bail!(
                                 "WAL {}: MoveOut on an empty shard — log does not \
                                  match the snapshot it extends",
                                 wal_file.display()
-                            );
+                            ),
                         }
+                    }
+                    WalRecord::Delete { id } => {
+                        let Some(pos) = at.remove(&(*id as usize)) else {
+                            bail!(
+                                "WAL {}: Delete of id {id} which the shard does not \
+                                 hold — log does not match the snapshot it extends",
+                                wal_file.display()
+                            );
+                        };
+                        let last = state.ids.len() - 1;
+                        if pos != last {
+                            at.insert(state.ids[last], pos);
+                        }
+                        state.ids.swap_remove(pos);
+                        state.expiry.swap_remove(pos);
+                        state.rows.swap_remove_row(pos);
+                    }
+                    WalRecord::Upsert { id, deadline, words } => {
+                        let Some(&pos) = at.get(&(*id as usize)) else {
+                            bail!(
+                                "WAL {}: Upsert of id {id} which the shard does not \
+                                 hold — log does not match the snapshot it extends",
+                                wal_file.display()
+                            );
+                        };
+                        let weight = crate::sketch::bitvec::popcount_words(words) as u32;
+                        state.rows.overwrite_row(pos, words, weight);
+                        state.expiry[pos] = *deadline;
                     }
                 }
             }
@@ -187,15 +247,17 @@ fn dedup_recovered_ids(shards: &mut [ShardState], sketch_dim: usize, report: &mu
         }
         let kept = fresh.iter().filter(|&&f| f).count();
         let mut ids = Vec::with_capacity(kept);
+        let mut expiry = Vec::with_capacity(kept);
         let mut rows = crate::sketch::SketchMatrix::with_row_capacity(sketch_dim, kept);
         for (row, (&id, &keep)) in state.ids.iter().zip(&fresh).enumerate() {
             if keep {
                 ids.push(id);
+                expiry.push(state.expiry[row]);
                 rows.push_row(state.rows.row(row), state.rows.weight(row) as u32);
             }
         }
         report.duplicate_rows_dropped += state.ids.len() - kept;
-        *state = ShardState { ids, rows };
+        *state = ShardState { ids, expiry, rows };
     }
 }
 
@@ -282,7 +344,7 @@ mod tests {
         recover(dir.path(), &f).unwrap();
         let mut rng = Xoshiro256::new(13);
         let m = SketchMatrix::from_sketches(&[sk(&mut rng)]);
-        snapshot::write_shard(&snap_path(dir.path(), 2, 0), DIM, 0, &[0], &m).unwrap();
+        snapshot::write_shard(&snap_path(dir.path(), 2, 0), DIM, 0, &[0], &[0], &m).unwrap();
         Manifest {
             generation: 2,
             fingerprint: f,
@@ -294,7 +356,7 @@ mod tests {
         for g in [0u64, 1, 2] {
             drop(WalWriter::create(&wal_path(dir.path(), g, 0), FsyncPolicy::Never).unwrap());
         }
-        snapshot::write_shard(&snap_path(dir.path(), 1, 0), DIM, 0, &[0], &m).unwrap();
+        snapshot::write_shard(&snap_path(dir.path(), 1, 0), DIM, 0, &[0], &[0], &m).unwrap();
         recover(dir.path(), &f).unwrap();
         assert!(wal_path(dir.path(), 2, 0).exists(), "live wal swept");
         assert!(wal_path(dir.path(), 1, 0).exists(), "retained wal swept");
@@ -314,23 +376,83 @@ mod tests {
         let mut w0 = WalWriter::create(&wal_path(dir.path(), 0, 0), FsyncPolicy::Never).unwrap();
         w0.append_insert(0, rows[0].words());
         w0.append_insert(1, rows[1].words());
-        w0.append_move_out();
+        w0.append_move_out(4);
         w0.commit().unwrap();
         drop(w0);
         let mut w1 = WalWriter::create(&wal_path(dir.path(), 0, 1), FsyncPolicy::Never).unwrap();
         w1.append_insert(2, rows[2].words());
-        w1.append_move_in(1, rows[1].words());
+        w1.append_move_in(4, 1, 0, rows[1].words());
         w1.commit().unwrap();
         drop(w1);
         let (shards, report) = recover(dir.path(), &f).unwrap();
         assert_eq!(report.replayed_records, 5);
+        assert_eq!(report.max_move_id, 4);
         assert_eq!(shards[0].ids, vec![0]);
         assert_eq!(shards[0].rows.row_bitvec(0), rows[0]);
         assert_eq!(shards[1].ids, vec![2, 1]);
+        assert_eq!(shards[1].expiry, vec![0, 0]);
         assert_eq!(shards[1].rows.row_bitvec(0), rows[2]);
         assert_eq!(shards[1].rows.row_bitvec(1), rows[1]);
         // weights were recomputed correctly on replay
         assert_eq!(shards[1].rows.weight(1), rows[1].count_ones());
+    }
+
+    #[test]
+    fn mixed_mutation_stream_replays_to_the_exact_survivor_set() {
+        // insert a,b,c,d → delete b (swap-remove: d takes b's row) →
+        // upsert c (in place, new words + deadline) → insert-ttl e →
+        // delete a. Survivors: d, c (overwritten), e.
+        let dir = TempDir::new("recover-mixed");
+        let f = fp(1);
+        recover(dir.path(), &f).unwrap();
+        let mut rng = Xoshiro256::new(21);
+        let rows: Vec<BitVec> = (0..6).map(|_| sk(&mut rng)).collect();
+        let path = wal_path(dir.path(), 0, 0);
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        for id in 0..4u64 {
+            w.append_insert(id, rows[id as usize].words());
+        }
+        w.append_delete(1);
+        w.append_upsert(2, 7_000, rows[4].words());
+        w.append_insert_ttl(9, 1_234, rows[5].words());
+        w.append_delete(0);
+        w.commit().unwrap();
+        drop(w);
+        let (shards, report) = recover(dir.path(), &f).unwrap();
+        assert_eq!(report.replayed_records, 8);
+        assert_eq!(report.max_move_id, 0);
+        // delete(1) swapped d (id 3) into row 1; delete(0) swapped the
+        // TTL row (id 9) into row 0
+        assert_eq!(shards[0].ids, vec![9, 3, 2]);
+        assert_eq!(shards[0].expiry, vec![1_234, 0, 7_000]);
+        assert_eq!(shards[0].rows.row_bitvec(0), rows[5]);
+        assert_eq!(shards[0].rows.row_bitvec(1), rows[3]);
+        assert_eq!(shards[0].rows.row_bitvec(2), rows[4]); // upserted words
+        assert_eq!(shards[0].rows.weight(2), rows[4].count_ones());
+    }
+
+    #[test]
+    fn delete_or_upsert_of_an_unheld_id_is_a_hard_error() {
+        for (name, frame) in [("recover-del-miss", 4u8), ("recover-ups-miss", 5u8)] {
+            let dir = TempDir::new(name);
+            let f = fp(1);
+            recover(dir.path(), &f).unwrap();
+            let mut rng = Xoshiro256::new(22);
+            let row = sk(&mut rng);
+            let path = wal_path(dir.path(), 0, 0);
+            let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+            w.append_insert(0, row.words());
+            if frame == 4 {
+                w.append_delete(33);
+            } else {
+                w.append_upsert(33, 0, row.words());
+            }
+            w.commit().unwrap();
+            drop(w);
+            let err = recover(dir.path(), &f).unwrap_err().to_string();
+            assert!(err.contains("id 33"), "{err}");
+            assert!(err.contains("does not match the snapshot"), "{err}");
+        }
     }
 
     #[test]
@@ -390,7 +512,7 @@ mod tests {
         // generation-2 snapshot with ids 10..15, then a WAL insert of id 99
         let m = SketchMatrix::from_sketches(&snap_rows);
         let ids: Vec<usize> = (10..15).collect();
-        snapshot::write_shard(&snap_path(dir.path(), 2, 0), DIM, 0, &ids, &m).unwrap();
+        snapshot::write_shard(&snap_path(dir.path(), 2, 0), DIM, 0, &ids, &[0; 5], &m).unwrap();
         Manifest {
             generation: 2,
             fingerprint: f,
@@ -401,8 +523,8 @@ mod tests {
         .unwrap();
         let mut w = WalWriter::create(&wal_path(dir.path(), 2, 0), FsyncPolicy::Never).unwrap();
         w.append_insert(99, tail_row.words());
-        w.append_move_out();
-        w.append_move_out();
+        w.append_move_out(1);
+        w.append_move_out(2);
         w.commit().unwrap();
         drop(w);
         let (shards, report) = recover(dir.path(), &f).unwrap();
@@ -436,11 +558,13 @@ mod tests {
         drop(w0);
         let mut w1 = WalWriter::create(&wal_path(dir.path(), 0, 1), FsyncPolicy::Never).unwrap();
         w1.append_insert(2, rows[2].words());
-        w1.append_move_in(1, rows[1].words());
+        w1.append_move_in(7, 1, 0, rows[1].words());
         w1.commit().unwrap();
         drop(w1);
         let (shards, report) = recover(dir.path(), &f).unwrap();
         assert_eq!(report.duplicate_rows_dropped, 1);
+        // the orphaned MoveIn's move id still advances the counter seed
+        assert_eq!(report.max_move_id, 7);
         // first occurrence (shard 0) wins; shard 1's copy is dropped
         assert_eq!(shards[0].ids, vec![0, 1]);
         assert_eq!(shards[1].ids, vec![2]);
@@ -457,7 +581,7 @@ mod tests {
         recover(dir.path(), &f).unwrap();
         let mut rng = Xoshiro256::new(12);
         let m = SketchMatrix::from_sketches(&[sk(&mut rng)]);
-        snapshot::write_shard(&snap_path(dir.path(), 1, 0), DIM, 0, &[5], &m).unwrap();
+        snapshot::write_shard(&snap_path(dir.path(), 1, 0), DIM, 0, &[5], &[0], &m).unwrap();
         Manifest {
             generation: 1,
             fingerprint: f,

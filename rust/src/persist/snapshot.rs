@@ -1,14 +1,20 @@
 //! Full per-shard arena snapshots.
 //!
-//! A snapshot file captures one shard completely: its id column plus the
-//! [`SketchMatrix`] rows *with their cached weights*, so loading a
-//! snapshot never re-popcounts the arena. Layout (little-endian):
+//! A snapshot file captures one shard completely: its id column, per-row
+//! TTL deadlines, and the [`SketchMatrix`] rows *with their cached
+//! weights*, so loading a snapshot never re-popcounts the arena. Layout
+//! (little-endian):
 //!
 //! ```text
 //!   "CBSP" [u32 version][u64 sketch_dim][u64 shard_index][u64 row_count]
-//!   row_count × ([u64 id][u32 weight][words_per_row × u64])
+//!   row_count × ([u64 id][u32 weight][u64 deadline][words_per_row × u64])
 //!   [u64 fnv1a64(everything after the magic, before this field)]
 //! ```
+//!
+//! `deadline` is the row's absolute TTL expiry in unix milliseconds, `0`
+//! for rows with no TTL (format version 2; version 1 had no deadline
+//! column and is only ever seen behind a pre-v4 manifest, which recovery
+//! refuses before any snapshot is opened).
 //!
 //! Files are written to a `.tmp` sibling, fsynced, then renamed into
 //! place, so a crash mid-snapshot can never leave a half-written file
@@ -24,14 +30,16 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"CBSP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// One shard's recovered state: the id column and the packed arena. Also
-/// the shape recovery hands back to [`crate::coordinator::store`] for both
+/// One shard's recovered state: the id column, the per-row TTL deadline
+/// column (unix millis, 0 = none) and the packed arena. Also the shape
+/// recovery hands back to [`crate::coordinator::store`] for both
 /// snapshot-loaded and WAL-replayed shards.
 #[derive(Debug, Default)]
 pub struct ShardState {
     pub ids: Vec<usize>,
+    pub expiry: Vec<u64>,
     pub rows: SketchMatrix,
 }
 
@@ -41,12 +49,18 @@ pub fn write_shard(
     sketch_dim: usize,
     shard_index: usize,
     ids: &[usize],
+    expiry: &[u64],
     rows: &SketchMatrix,
 ) -> Result<()> {
     assert_eq!(ids.len(), rows.len(), "id column out of step with arena");
+    assert_eq!(
+        expiry.len(),
+        rows.len(),
+        "expiry column out of step with arena"
+    );
     let words_per_row = rows.words_per_row();
     let mut body =
-        Vec::with_capacity(4 + 8 + 8 + 8 + ids.len() * (12 + words_per_row * 8));
+        Vec::with_capacity(4 + 8 + 8 + 8 + ids.len() * (20 + words_per_row * 8));
     body.extend_from_slice(&VERSION.to_le_bytes());
     body.extend_from_slice(&(sketch_dim as u64).to_le_bytes());
     body.extend_from_slice(&(shard_index as u64).to_le_bytes());
@@ -54,6 +68,7 @@ pub fn write_shard(
     for (row, &id) in ids.iter().enumerate() {
         body.extend_from_slice(&(id as u64).to_le_bytes());
         body.extend_from_slice(&(rows.weight(row) as u32).to_le_bytes());
+        body.extend_from_slice(&expiry[row].to_le_bytes());
         for w in rows.row(row) {
             body.extend_from_slice(&w.to_le_bytes());
         }
@@ -107,7 +122,7 @@ pub fn load_shard(path: &Path, sketch_dim: usize, shard_index: usize) -> Result<
         );
     }
     let words_per_row = sketch_dim.div_ceil(64);
-    let row_bytes = 12 + words_per_row * 8;
+    let row_bytes = 20 + words_per_row * 8;
     if body.len() != 28 + n * row_bytes {
         bail!(
             "snapshot {}: body is {} bytes, expected {} for {n} rows",
@@ -117,18 +132,20 @@ pub fn load_shard(path: &Path, sketch_dim: usize, shard_index: usize) -> Result<
         );
     }
     let mut ids = Vec::with_capacity(n);
+    let mut expiry = Vec::with_capacity(n);
     let mut rows = SketchMatrix::with_row_capacity(sketch_dim, n);
     let mut words = vec![0u64; words_per_row];
     for r in 0..n {
         let at = 28 + r * row_bytes;
         ids.push(u64::from_le_bytes(body[at..at + 8].try_into().unwrap()) as usize);
         let weight = u32::from_le_bytes(body[at + 8..at + 12].try_into().unwrap());
-        for (wi, chunk) in body[at + 12..at + row_bytes].chunks_exact(8).enumerate() {
+        expiry.push(u64::from_le_bytes(body[at + 12..at + 20].try_into().unwrap()));
+        for (wi, chunk) in body[at + 20..at + row_bytes].chunks_exact(8).enumerate() {
             words[wi] = u64::from_le_bytes(chunk.try_into().unwrap());
         }
         rows.push_row(&words, weight);
     }
-    Ok(ShardState { ids, rows })
+    Ok(ShardState { ids, expiry, rows })
 }
 
 #[cfg(test)]
@@ -138,23 +155,29 @@ mod tests {
     use crate::testing::TempDir;
     use crate::util::rng::Xoshiro256;
 
-    fn arena(seed: u64, n: usize, dim: usize) -> (Vec<usize>, SketchMatrix) {
+    fn arena(seed: u64, n: usize, dim: usize) -> (Vec<usize>, Vec<u64>, SketchMatrix) {
         let mut rng = Xoshiro256::new(seed);
         let sketches: Vec<BitVec> = (0..n)
             .map(|_| BitVec::from_indices(dim, rng.sample_indices(dim, dim / 6)))
             .collect();
         let ids = (0..n).map(|i| i * 3 + 1).collect();
-        (ids, SketchMatrix::from_sketches(&sketches))
+        // a mix of TTL'd rows (beyond f64's 2^53 range: must roundtrip
+        // exactly) and deadline-0 (no TTL) rows
+        let expiry = (0..n)
+            .map(|i| if i % 3 == 0 { (1u64 << 55) + i as u64 } else { 0 })
+            .collect();
+        (ids, expiry, SketchMatrix::from_sketches(&sketches))
     }
 
     #[test]
-    fn snapshot_roundtrips_ids_rows_and_weights() {
+    fn snapshot_roundtrips_ids_deadlines_rows_and_weights() {
         let dir = TempDir::new("snap-roundtrip");
         let path = dir.path().join("snap-1-shard-2.bin");
-        let (ids, rows) = arena(1, 13, 130); // non-multiple-of-64 dim
-        write_shard(&path, 130, 2, &ids, &rows).unwrap();
+        let (ids, expiry, rows) = arena(1, 13, 130); // non-multiple-of-64 dim
+        write_shard(&path, 130, 2, &ids, &expiry, &rows).unwrap();
         let loaded = load_shard(&path, 130, 2).unwrap();
         assert_eq!(loaded.ids, ids);
+        assert_eq!(loaded.expiry, expiry);
         assert_eq!(loaded.rows, rows); // rows + cached weights, exactly
     }
 
@@ -162,9 +185,10 @@ mod tests {
     fn empty_shard_roundtrips() {
         let dir = TempDir::new("snap-empty");
         let path = dir.path().join("snap.bin");
-        write_shard(&path, 64, 0, &[], &SketchMatrix::new(64)).unwrap();
+        write_shard(&path, 64, 0, &[], &[], &SketchMatrix::new(64)).unwrap();
         let loaded = load_shard(&path, 64, 0).unwrap();
         assert!(loaded.ids.is_empty());
+        assert!(loaded.expiry.is_empty());
         assert!(loaded.rows.is_empty());
     }
 
@@ -172,8 +196,8 @@ mod tests {
     fn wrong_dim_or_shard_is_a_described_error() {
         let dir = TempDir::new("snap-mismatch");
         let path = dir.path().join("snap.bin");
-        let (ids, rows) = arena(2, 4, 128);
-        write_shard(&path, 128, 1, &ids, &rows).unwrap();
+        let (ids, expiry, rows) = arena(2, 4, 128);
+        write_shard(&path, 128, 1, &ids, &expiry, &rows).unwrap();
         let err = load_shard(&path, 256, 1).unwrap_err();
         assert!(err.to_string().contains("sketch_dim"), "{err:#}");
         let err = load_shard(&path, 128, 0).unwrap_err();
@@ -184,8 +208,8 @@ mod tests {
     fn corruption_is_detected() {
         let dir = TempDir::new("snap-corrupt");
         let path = dir.path().join("snap.bin");
-        let (ids, rows) = arena(3, 6, 64);
-        write_shard(&path, 64, 0, &ids, &rows).unwrap();
+        let (ids, expiry, rows) = arena(3, 6, 64);
+        write_shard(&path, 64, 0, &ids, &expiry, &rows).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0x01;
@@ -198,8 +222,8 @@ mod tests {
     fn no_tmp_file_left_behind() {
         let dir = TempDir::new("snap-tmp");
         let path = dir.path().join("snap.bin");
-        let (ids, rows) = arena(4, 3, 64);
-        write_shard(&path, 64, 0, &ids, &rows).unwrap();
+        let (ids, expiry, rows) = arena(4, 3, 64);
+        write_shard(&path, 64, 0, &ids, &expiry, &rows).unwrap();
         assert!(path.exists());
         assert!(!path.with_extension("tmp").exists());
     }

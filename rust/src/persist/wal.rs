@@ -13,9 +13,22 @@
 //!
 //! ```text
 //!   [u32 payload_len][u64 fnv1a64(payload)][payload]
-//!   payload: [u8 kind]            kind 2 = MoveOut (pop trailing row)
-//!            [u64 id][row words]  kind 1 = Insert, kind 3 = MoveIn
+//!   payload: [u8 1][u64 id][row words]                           Insert
+//!            [u64 2][u64 move_id]                                MoveOut (pop trailing row)
+//!            [u8 3][u64 move_id][u64 id][u64 deadline][words]    MoveIn
+//!            [u8 4][u64 id]                                      Delete (swap-remove by id)
+//!            [u8 5][u64 id][u64 deadline][row words]             Upsert (overwrite in place)
+//!            [u8 6][u64 id][u64 deadline][row words]             InsertTtl
 //! ```
+//!
+//! Kind 1 (`Insert`) keeps the original byte layout so pre-mutation logs
+//! and the original frame-size arithmetic stay valid; rows with a TTL use
+//! kind 6 with an absolute unix-millisecond `deadline` (0 = no expiry —
+//! the decoder folds both kinds into one [`WalRecord::Insert`]). `MoveOut`
+//! / `MoveIn` pairs produced by one rebalance move share a `move_id`, so a
+//! replication follower can recognise the two halves of a cross-shard move
+//! arriving in independent per-shard streams and apply the destination
+//! half first (see [`crate::replica::follower`]).
 //!
 //! The reader stops at the first frame that is short, oversized, or fails
 //! its checksum: a torn tail write (crash mid-append) therefore drops only
@@ -52,6 +65,9 @@ use std::path::{Path, PathBuf};
 const KIND_INSERT: u8 = 1;
 const KIND_MOVE_OUT: u8 = 2;
 const KIND_MOVE_IN: u8 = 3;
+const KIND_DELETE: u8 = 4;
+const KIND_UPSERT: u8 = 5;
+const KIND_INSERT_TTL: u8 = 6;
 
 /// 64-bit FNV-1a — the frame checksum. Not cryptographic; it guards
 /// against torn writes and bit rot, which is all a local WAL needs.
@@ -64,15 +80,34 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// One decoded WAL record (the owned, replay-side view).
+/// One decoded WAL record (the owned, replay-side view). Deadlines are
+/// absolute unix milliseconds; 0 means "never expires".
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum WalRecord {
-    /// Append a row to the shard arena under `id`.
-    Insert { id: u64, words: Vec<u64> },
-    /// Pop the shard arena's trailing row (source side of a rebalance move).
-    MoveOut,
+    /// Append a row to the shard arena under `id` (kinds 1 and 6).
+    Insert {
+        id: u64,
+        deadline: u64,
+        words: Vec<u64>,
+    },
+    /// Pop the shard arena's trailing row (source side of a rebalance
+    /// move); `move_id` pairs it with its destination `MoveIn`.
+    MoveOut { move_id: u64 },
     /// Append a row moved in from another shard (destination side).
-    MoveIn { id: u64, words: Vec<u64> },
+    MoveIn {
+        move_id: u64,
+        id: u64,
+        deadline: u64,
+        words: Vec<u64>,
+    },
+    /// Swap-remove the row holding `id` (delete, or a TTL expiry sweep).
+    Delete { id: u64 },
+    /// Overwrite `id`'s row and deadline in place.
+    Upsert {
+        id: u64,
+        deadline: u64,
+        words: Vec<u64>,
+    },
 }
 
 /// Append handle for one shard's WAL. Uncommitted frames live in
@@ -166,19 +201,19 @@ impl WalWriter {
         &self.path
     }
 
-    fn append(&mut self, kind: u8, id: Option<u64>, words: &[u64]) -> usize {
-        let body = 1 + if id.is_some() { 8 + words.len() * 8 } else { 0 };
+    fn append(&mut self, kind: u8, fields: &[u64], words: &[u64]) -> usize {
+        let body = 1 + fields.len() * 8 + words.len() * 8;
         self.pending.reserve(12 + body);
         self.pending.extend_from_slice(&(body as u32).to_le_bytes());
         let payload_at = self.pending.len() + 8;
         // checksum goes before the payload: reserve its slot, fill below
         self.pending.extend_from_slice(&[0u8; 8]);
         self.pending.push(kind);
-        if let Some(id) = id {
-            self.pending.extend_from_slice(&id.to_le_bytes());
-            for w in words {
-                self.pending.extend_from_slice(&w.to_le_bytes());
-            }
+        for f in fields {
+            self.pending.extend_from_slice(&f.to_le_bytes());
+        }
+        for w in words {
+            self.pending.extend_from_slice(&w.to_le_bytes());
         }
         let checksum = fnv1a64(&self.pending[payload_at..]);
         self.pending[payload_at - 8..payload_at].copy_from_slice(&checksum.to_le_bytes());
@@ -190,17 +225,33 @@ impl WalWriter {
     /// are infallible (they only buffer); I/O errors surface at
     /// [`WalWriter::commit`].
     pub fn append_insert(&mut self, id: u64, words: &[u64]) -> usize {
-        self.append(KIND_INSERT, Some(id), words)
+        self.append(KIND_INSERT, &[id], words)
     }
 
-    /// Append a trailing-row pop (rebalance source side).
-    pub fn append_move_out(&mut self) -> usize {
-        self.append(KIND_MOVE_OUT, None, &[])
+    /// Append an insert carrying a TTL deadline (absolute unix millis).
+    pub fn append_insert_ttl(&mut self, id: u64, deadline: u64, words: &[u64]) -> usize {
+        self.append(KIND_INSERT_TTL, &[id, deadline], words)
+    }
+
+    /// Append a trailing-row pop (rebalance source side); `move_id` pairs
+    /// it with its destination `MoveIn`.
+    pub fn append_move_out(&mut self, move_id: u64) -> usize {
+        self.append(KIND_MOVE_OUT, &[move_id], &[])
     }
 
     /// Append a moved-in row (rebalance destination side).
-    pub fn append_move_in(&mut self, id: u64, words: &[u64]) -> usize {
-        self.append(KIND_MOVE_IN, Some(id), words)
+    pub fn append_move_in(&mut self, move_id: u64, id: u64, deadline: u64, words: &[u64]) -> usize {
+        self.append(KIND_MOVE_IN, &[move_id, id, deadline], words)
+    }
+
+    /// Append a delete-by-id record (explicit delete or TTL expiry).
+    pub fn append_delete(&mut self, id: u64) -> usize {
+        self.append(KIND_DELETE, &[id], &[])
+    }
+
+    /// Append an in-place row overwrite for `id`.
+    pub fn append_upsert(&mut self, id: u64, deadline: u64, words: &[u64]) -> usize {
+        self.append(KIND_UPSERT, &[id, deadline], words)
     }
 
     /// Append `count` pre-encoded frames verbatim (replication: a follower
@@ -384,18 +435,36 @@ pub struct WalReplay {
     /// error instead of silently truncating away valid, acknowledged
     /// records.
     pub valid_frames_beyond_tear: bool,
+    /// Byte offset just past each valid frame (`frame_ends[i]` ends
+    /// `records[i]`; the last entry equals `valid_len`). Lets a consumer
+    /// split a chunk at a frame boundary — the follower uses this to
+    /// apply only the prefix before a not-yet-orderable `MoveOut`.
+    pub frame_ends: Vec<u64>,
+}
+
+/// Expected payload size for a frame kind at `words_per_row` row width,
+/// or `None` for an unknown kind — the per-kind framing truth table.
+fn kind_payload(kind: u8, words_per_row: usize) -> Option<usize> {
+    let row = words_per_row * 8;
+    match kind {
+        KIND_INSERT => Some(1 + 8 + row),
+        KIND_MOVE_OUT | KIND_DELETE => Some(1 + 8),
+        KIND_MOVE_IN => Some(1 + 24 + row),
+        KIND_UPSERT | KIND_INSERT_TTL => Some(1 + 16 + row),
+        _ => None,
+    }
 }
 
 /// Validate the frame at byte offset `at`: complete, a legal payload
-/// size, checksum-valid, and a known kind. Returns its total length
-/// (header + payload) — the single source of frame-validity truth shared
-/// by [`scan_frames`], [`read_wal_tail`] and the mid-file-damage probe.
-fn frame_len_at(buf: &[u8], at: usize, row_payload: usize) -> Option<usize> {
+/// size for its kind, checksum-valid. Returns its total length (header +
+/// payload) — the single source of frame-validity truth shared by
+/// [`scan_frames`], [`read_wal_tail`] and the mid-file-damage probe.
+fn frame_len_at(buf: &[u8], at: usize, words_per_row: usize) -> Option<usize> {
     if at + 12 > buf.len() {
         return None; // torn frame header (or clean EOF when at == len)
     }
     let len = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
-    if (len != 1 && len != row_payload) || at + 12 + len > buf.len() {
+    if len == 0 || len > 25 + words_per_row * 8 || at + 12 + len > buf.len() {
         return None; // impossible payload size, or torn payload
     }
     let payload = &buf[at + 12..at + 12 + len];
@@ -403,11 +472,7 @@ fn frame_len_at(buf: &[u8], at: usize, row_payload: usize) -> Option<usize> {
     if fnv1a64(payload) != want {
         return None; // checksum mismatch
     }
-    matches!(
-        (payload[0], len == row_payload),
-        (KIND_INSERT, true) | (KIND_MOVE_IN, true) | (KIND_MOVE_OUT, false)
-    )
-    .then_some(12 + len)
+    (kind_payload(payload[0], words_per_row) == Some(len)).then_some(12 + len)
 }
 
 /// Decode a frame buffer, stopping (not failing) at the first torn or
@@ -418,40 +483,55 @@ fn frame_len_at(buf: &[u8], at: usize, row_payload: usize) -> Option<usize> {
 /// check, and a short final frame simply stays un-applied and is
 /// re-requested.
 pub fn scan_frames(buf: &[u8], words_per_row: usize) -> WalReplay {
-    let row_payload = 1 + 8 + words_per_row * 8;
     let mut records = Vec::new();
+    let mut frame_ends = Vec::new();
     let mut pos = 0usize;
-    while let Some(frame_len) = frame_len_at(buf, pos, row_payload) {
+    while let Some(frame_len) = frame_len_at(buf, pos, words_per_row) {
         let payload = &buf[pos + 12..pos + frame_len];
-        let decode_row = |payload: &[u8]| {
-            let id = u64::from_le_bytes(payload[1..9].try_into().unwrap());
-            let words = payload[9..]
+        let u64_at = |at: usize| u64::from_le_bytes(payload[at..at + 8].try_into().unwrap());
+        let words_from = |at: usize| -> Vec<u64> {
+            payload[at..]
                 .chunks_exact(8)
                 .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            (id, words)
+                .collect()
         };
-        match payload[0] {
-            KIND_INSERT => {
-                let (id, words) = decode_row(payload);
-                records.push(WalRecord::Insert { id, words });
-            }
-            KIND_MOVE_IN => {
-                let (id, words) = decode_row(payload);
-                records.push(WalRecord::MoveIn { id, words });
-            }
-            _ => records.push(WalRecord::MoveOut),
-        }
+        records.push(match payload[0] {
+            KIND_INSERT => WalRecord::Insert {
+                id: u64_at(1),
+                deadline: 0,
+                words: words_from(9),
+            },
+            KIND_INSERT_TTL => WalRecord::Insert {
+                id: u64_at(1),
+                deadline: u64_at(9),
+                words: words_from(17),
+            },
+            KIND_MOVE_IN => WalRecord::MoveIn {
+                move_id: u64_at(1),
+                id: u64_at(9),
+                deadline: u64_at(17),
+                words: words_from(25),
+            },
+            KIND_UPSERT => WalRecord::Upsert {
+                id: u64_at(1),
+                deadline: u64_at(9),
+                words: words_from(17),
+            },
+            KIND_DELETE => WalRecord::Delete { id: u64_at(1) },
+            _ => WalRecord::MoveOut { move_id: u64_at(1) },
+        });
         pos += frame_len;
+        frame_ends.push(pos as u64);
     }
     let truncated = pos < buf.len();
     let valid_frames_beyond_tear = truncated
-        && (pos + 1..buf.len()).any(|at| frame_len_at(buf, at, row_payload).is_some());
+        && (pos + 1..buf.len()).any(|at| frame_len_at(buf, at, words_per_row).is_some());
     WalReplay {
         records,
         valid_len: pos as u64,
         truncated,
         valid_frames_beyond_tear,
+        frame_ends,
     }
 }
 
@@ -474,6 +554,12 @@ pub struct WalTail {
     /// Total valid frames in the file — `base + file_frames` is the
     /// segment's live sequence horizon.
     pub file_frames: u64,
+    /// Frame index just past the served range (`skip + frames`, clamped to
+    /// the file), paired with `end_offset` — the resume point a caller can
+    /// cache and pass back as `hint` to skip re-scanning the prefix.
+    pub end_frame: u64,
+    /// Byte offset of the frame at index `end_frame`.
+    pub end_offset: u64,
 }
 
 /// Read frames `[skip, …)` of a WAL file, bounded by `max_bytes` (always
@@ -484,24 +570,39 @@ pub struct WalTail {
 /// budgets are exhausted, so the caller can report the file horizon.
 /// Concurrent appends are safe: a frame is either wholly present and
 /// checksum-valid or the scan stops before it.
+///
+/// `hint`, when given, is a `(frame_index, byte_offset)` pair previously
+/// returned as `(end_frame, end_offset)` for the *same* (append-only)
+/// file: scanning starts there instead of at byte 0, making a steady-state
+/// tail request O(chunk) instead of O(segment). A hint past `skip` or past
+/// the file is ignored (full rescan) rather than trusted.
 pub fn read_wal_tail(
     path: &Path,
     words_per_row: usize,
     skip: u64,
     max_bytes: usize,
     max_frames: u64,
+    hint: Option<(u64, u64)>,
 ) -> std::io::Result<WalTail> {
     let mut buf = Vec::new();
     File::open(path)?.read_to_end(&mut buf)?;
-    let row_payload = 1 + 8 + words_per_row * 8;
-    let mut pos = 0usize;
-    let mut file_frames = 0u64;
+    let (mut file_frames, mut pos) = match hint {
+        Some((frame, offset)) if frame <= skip && offset <= buf.len() as u64 => {
+            (frame, offset as usize)
+        }
+        _ => (0, 0),
+    };
     let mut bytes = Vec::new();
     let mut frames = 0u64;
-    while let Some(frame_len) = frame_len_at(&buf, pos, row_payload) {
-        if file_frames >= skip && bytes.len() < max_bytes && frames < max_frames {
+    let (mut end_frame, mut end_offset) = (file_frames, pos as u64);
+    while let Some(frame_len) = frame_len_at(&buf, pos, words_per_row) {
+        if file_frames < skip {
+            // pre-window frame: advance the resume point toward `skip`
+            (end_frame, end_offset) = (file_frames + 1, (pos + frame_len) as u64);
+        } else if bytes.len() < max_bytes && frames < max_frames {
             bytes.extend_from_slice(&buf[pos..pos + frame_len]);
             frames += 1;
+            (end_frame, end_offset) = (file_frames + 1, (pos + frame_len) as u64);
         }
         file_frames += 1;
         pos += frame_len;
@@ -510,6 +611,8 @@ pub fn read_wal_tail(
         bytes,
         frames,
         file_frames,
+        end_frame,
+        end_offset,
     })
 }
 
@@ -523,8 +626,11 @@ mod tests {
         let mut w = WalWriter::create(&path, fsync).unwrap();
         w.append_insert(0, &[0xAB, 0xCD]);
         w.append_insert(1, &[0x11, 0x22]);
-        w.append_move_out();
-        w.append_move_in(7, &[0x33, 0x44]);
+        w.append_move_out(3);
+        w.append_move_in(3, 7, 0, &[0x33, 0x44]);
+        w.append_insert_ttl(8, 1_234, &[0x55, 0x66]);
+        w.append_upsert(1, 9_000, &[0x77, 0x88]);
+        w.append_delete(0);
         w.commit().unwrap();
         read_wal(&path, 2).unwrap()
     }
@@ -539,17 +645,32 @@ mod tests {
             vec![
                 WalRecord::Insert {
                     id: 0,
+                    deadline: 0,
                     words: vec![0xAB, 0xCD],
                 },
                 WalRecord::Insert {
                     id: 1,
+                    deadline: 0,
                     words: vec![0x11, 0x22],
                 },
-                WalRecord::MoveOut,
+                WalRecord::MoveOut { move_id: 3 },
                 WalRecord::MoveIn {
+                    move_id: 3,
                     id: 7,
+                    deadline: 0,
                     words: vec![0x33, 0x44],
                 },
+                WalRecord::Insert {
+                    id: 8,
+                    deadline: 1_234,
+                    words: vec![0x55, 0x66],
+                },
+                WalRecord::Upsert {
+                    id: 1,
+                    deadline: 9_000,
+                    words: vec![0x77, 0x88],
+                },
+                WalRecord::Delete { id: 0 },
             ]
         );
     }
@@ -558,7 +679,23 @@ mod tests {
     fn fsync_always_also_roundtrips() {
         let dir = TempDir::new("wal-fsync");
         let replay = roundtrip(&dir, FsyncPolicy::Always);
-        assert_eq!(replay.records.len(), 4);
+        assert_eq!(replay.records.len(), 7);
+    }
+
+    #[test]
+    fn insert_frames_keep_the_pre_mutation_byte_layout() {
+        // kind-1 frames are pinned: 12-byte header + [kind][u64 id][words]
+        let dir = TempDir::new("wal-pinned");
+        let path = dir.path().join("shard-0.wal");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        let frame = w.append_insert(5, &[0xDEAD, 0xBEEF]);
+        assert_eq!(frame, 12 + 1 + 8 + 16);
+        w.commit().unwrap();
+        drop(w);
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len(), 12 + 1 + 8 + 16);
+        assert_eq!(bytes[12], 1, "kind byte");
+        assert_eq!(u64::from_le_bytes(bytes[13..21].try_into().unwrap()), 5);
     }
 
     #[test]
@@ -673,8 +810,8 @@ mod tests {
         let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
         w.append_insert(0, &[7, 8]); // concurrent batch's acked-pending frame
         let mark = w.pending_watermark();
-        w.append_move_out();
-        w.append_move_out();
+        w.append_move_out(1);
+        w.append_move_out(2);
         w.rewind_pending_to(mark);
         w.commit().unwrap();
         drop(w);
@@ -683,6 +820,7 @@ mod tests {
             replay.records,
             vec![WalRecord::Insert {
                 id: 0,
+                deadline: 0,
                 words: vec![7, 8],
             }]
         );
@@ -724,14 +862,14 @@ mod tests {
         let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
         assert_eq!((w.file_frames(), w.pending_frames()), (0, 0));
         w.append_insert(0, &[1, 2]);
-        w.append_move_out();
+        w.append_move_out(1);
         assert_eq!((w.file_frames(), w.pending_frames()), (0, 2));
         w.commit().unwrap();
         assert_eq!((w.file_frames(), w.pending_frames()), (2, 0));
         assert_eq!(w.file_len(), std::fs::metadata(&path).unwrap().len());
         w.append_insert(1, &[3, 4]);
         let mark = w.pending_watermark();
-        w.append_move_out();
+        w.append_move_out(2);
         w.rewind_pending_to(mark);
         assert_eq!(w.pending_frames(), 1);
         w.commit().unwrap();
@@ -776,7 +914,7 @@ mod tests {
         }
         w.commit().unwrap();
         drop(w);
-        let tail = read_wal_tail(&path, 1, 1, usize::MAX, 2).unwrap();
+        let tail = read_wal_tail(&path, 1, 1, usize::MAX, 2, None).unwrap();
         assert_eq!((tail.frames, tail.file_frames), (2, 4));
         let replay = scan_frames(&tail.bytes, 1);
         assert_eq!(replay.records.len(), 2);
@@ -784,10 +922,11 @@ mod tests {
             replay.records[0],
             WalRecord::Insert {
                 id: 1,
+                deadline: 0,
                 words: vec![1],
             }
         );
-        let tail = read_wal_tail(&path, 1, 0, usize::MAX, 0).unwrap();
+        let tail = read_wal_tail(&path, 1, 0, usize::MAX, 0, None).unwrap();
         assert_eq!((tail.frames, tail.file_frames), (0, 4));
     }
 
@@ -799,10 +938,10 @@ mod tests {
         let primary = dir.path().join("primary.wal");
         let mut w = WalWriter::create(&primary, FsyncPolicy::Never).unwrap();
         w.append_insert(3, &[0xAA, 0xBB]);
-        w.append_move_out();
+        w.append_move_out(11);
         w.commit().unwrap();
         drop(w);
-        let tail = read_wal_tail(&primary, 2, 0, usize::MAX, u64::MAX).unwrap();
+        let tail = read_wal_tail(&primary, 2, 0, usize::MAX, u64::MAX, None).unwrap();
         assert_eq!(tail.frames, 2);
         assert_eq!(tail.file_frames, 2);
         let follower = dir.path().join("follower.wal");
@@ -832,30 +971,68 @@ mod tests {
         drop(w);
         let frame = 12 + 1 + 8 + 8;
         // skip 2, unbounded: frames 2..5
-        let tail = read_wal_tail(&path, 1, 2, usize::MAX, u64::MAX).unwrap();
+        let tail = read_wal_tail(&path, 1, 2, usize::MAX, u64::MAX, None).unwrap();
         assert_eq!((tail.frames, tail.file_frames), (3, 5));
+        assert_eq!((tail.end_frame, tail.end_offset), (5, 5 * frame as u64));
         let replay = scan_frames(&tail.bytes, 1);
         assert!(!replay.truncated);
         assert_eq!(
             replay.records[0],
             WalRecord::Insert {
                 id: 2,
+                deadline: 0,
                 words: vec![3],
             }
         );
         // a 1-byte budget still serves exactly one whole frame
-        let tail = read_wal_tail(&path, 1, 0, 1, u64::MAX).unwrap();
+        let tail = read_wal_tail(&path, 1, 0, 1, u64::MAX, None).unwrap();
         assert_eq!(tail.frames, 1);
         assert_eq!(tail.bytes.len(), frame);
         assert_eq!(tail.file_frames, 5, "budget must not hide the horizon");
+        assert_eq!((tail.end_frame, tail.end_offset), (1, frame as u64));
         // a budget of two frames serves two
-        let tail = read_wal_tail(&path, 1, 1, 2 * frame, u64::MAX).unwrap();
+        let tail = read_wal_tail(&path, 1, 1, 2 * frame, u64::MAX, None).unwrap();
         assert_eq!(tail.frames, 2);
         // skip at/past the end: nothing to serve, horizon still reported
-        let tail = read_wal_tail(&path, 1, 5, usize::MAX, u64::MAX).unwrap();
+        let tail = read_wal_tail(&path, 1, 5, usize::MAX, u64::MAX, None).unwrap();
         assert_eq!((tail.frames, tail.file_frames), (0, 5));
-        let tail = read_wal_tail(&path, 1, 99, usize::MAX, u64::MAX).unwrap();
+        let tail = read_wal_tail(&path, 1, 99, usize::MAX, u64::MAX, None).unwrap();
         assert_eq!((tail.frames, tail.file_frames), (0, 5));
+    }
+
+    #[test]
+    fn read_wal_tail_resumes_from_a_cached_offset() {
+        let dir = TempDir::new("wal-tail-hint");
+        let path = dir.path().join("shard-0.wal");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        for id in 0..6u64 {
+            w.append_insert(id, &[id + 1]);
+        }
+        w.commit().unwrap();
+        drop(w);
+        let frame = (12 + 1 + 8 + 8) as u64;
+        // first pull: frames [0, 3) — returns the resume point
+        let first = read_wal_tail(&path, 1, 0, 3 * frame as usize, u64::MAX, None).unwrap();
+        assert_eq!(first.frames, 3);
+        assert_eq!((first.end_frame, first.end_offset), (3, 3 * frame));
+        // second pull continues from the hint: identical to a full rescan
+        let hint = Some((first.end_frame, first.end_offset));
+        let hinted = read_wal_tail(&path, 1, 3, usize::MAX, u64::MAX, hint).unwrap();
+        let scanned = read_wal_tail(&path, 1, 3, usize::MAX, u64::MAX, None).unwrap();
+        assert_eq!(hinted.bytes, scanned.bytes);
+        assert_eq!(hinted.frames, 3);
+        assert_eq!(hinted.file_frames, scanned.file_frames);
+        assert_eq!((hinted.end_frame, hinted.end_offset), (6, 6 * frame));
+        // a hint past the requested skip is ignored, not trusted
+        let back = read_wal_tail(&path, 1, 1, usize::MAX, u64::MAX, hint).unwrap();
+        assert_eq!(back.frames, 5);
+        assert_eq!(back.bytes, read_wal_tail(&path, 1, 1, usize::MAX, u64::MAX, None).unwrap().bytes);
+        // a hint past the file end is ignored too
+        let bogus = read_wal_tail(&path, 1, 0, usize::MAX, u64::MAX, Some((0, 1 << 30))).unwrap();
+        assert_eq!(bogus.frames, 6);
+        // caught-up: hint at EOF serves nothing and stays put
+        let eof = read_wal_tail(&path, 1, 6, usize::MAX, u64::MAX, Some((6, 6 * frame))).unwrap();
+        assert_eq!((eof.frames, eof.end_frame, eof.end_offset), (0, 6, 6 * frame));
     }
 
     #[test]
@@ -869,7 +1046,7 @@ mod tests {
         w.append_insert(1, &[8]);
         w.commit().unwrap();
         drop(w);
-        let tail = read_wal_tail(&path, 1, 0, usize::MAX, u64::MAX).unwrap();
+        let tail = read_wal_tail(&path, 1, 0, usize::MAX, u64::MAX, None).unwrap();
         let cut = &tail.bytes[..tail.bytes.len() - 4];
         let replay = scan_frames(cut, 1);
         assert!(replay.truncated);

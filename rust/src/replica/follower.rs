@@ -14,16 +14,27 @@
 use super::{seq_field, ReplCounters, ReplicaConfig};
 use crate::coordinator::store::ShardedStore;
 use crate::persist::manifest::{snap_path, sync_dir, wal_path, Manifest};
-use crate::persist::wal::scan_frames;
+use crate::persist::wal::{scan_frames, WalRecord};
 use crate::persist::{snapshot, Fingerprint, FsyncPolicy};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Consecutive deferrals of one shard's stream at an unordered `MoveOut`
+/// before the safety valve applies the chunk anyway. The primary commits
+/// a move's destination frame before its source frame, so an unpaired
+/// `MoveOut` normally resolves within a sweep or two; the valve exists
+/// for streams whose pairing state is unknowable (e.g. the `MoveIn` was
+/// applied before a follower restart) — there the deferral degrades to
+/// the pre-ordering behaviour (a transiently missing row) instead of
+/// wedging replication.
+const MOVE_DEFER_LIMIT: u32 = 64;
 
 /// Per-syscall socket timeout for the replication client. A silently
 /// dead primary (host power-off, network partition — no FIN/RST ever
@@ -411,6 +422,12 @@ fn puller_loop(
     let wpr = p.words_per_row();
     let min_wait = cfg.poll.max(Duration::from_millis(10));
     let mut reconnect_wait = min_wait;
+    // Cross-shard move ordering: move ids whose MoveIn this runtime has
+    // applied but whose paired MoveOut it has not yet seen. A MoveOut
+    // removes its id on apply (move ids are never reused), so the set is
+    // bounded by the number of in-flight moves.
+    let mut seen_move_ins: HashSet<u64> = HashSet::new();
+    let mut defers_by_shard = vec![0u32; num_shards];
     while !stop.load(Ordering::Relaxed) {
         let mut client = match ReplClient::connect(&cfg.primary) {
             Ok(c) => {
@@ -441,29 +458,75 @@ fn puller_loop(
                     }) => {
                         if frames > 0 {
                             let replay = scan_frames(&bytes, wpr);
-                            let valid = &bytes[..replay.valid_len as usize];
                             if replay.records.is_empty() {
                                 // nothing whole arrived; re-request later
                                 counters.stalls.fetch_add(1, Ordering::Relaxed);
                             } else {
-                                let n = replay.records.len() as u64;
-                                match store.apply_replicated(shard, valid, &replay.records) {
-                                    Ok(()) => {
-                                        counters.frames_applied.fetch_add(n, Ordering::Relaxed);
-                                        let b = valid.len() as u64;
-                                        counters.bytes_applied.fetch_add(b, Ordering::Relaxed);
-                                        progressed = true;
+                                // dst-before-src move ordering: stop this
+                                // chunk before a MoveOut whose paired
+                                // MoveIn has not been applied yet — the
+                                // unapplied suffix is re-requested (the
+                                // cursor only advances past what applies)
+                                let mut take = replay.records.len();
+                                for (i, r) in replay.records.iter().enumerate() {
+                                    if let WalRecord::MoveOut { move_id } = r {
+                                        if !seen_move_ins.contains(move_id) {
+                                            take = i;
+                                            break;
+                                        }
                                     }
-                                    Err(e) => {
-                                        // commit-side failures are retried by the
-                                        // next chunk's commit (next_seq counts the
-                                        // pending frames); infeasible chunks keep
-                                        // erroring visibly here
-                                        eprintln!(
-                                            "[replica] applying shard {shard} frames at seq \
-                                             {from} failed: {e:#}"
-                                        );
-                                        counters.stalls.fetch_add(1, Ordering::Relaxed);
+                                }
+                                if take < replay.records.len() {
+                                    defers_by_shard[shard] += 1;
+                                    counters.move_defers.fetch_add(1, Ordering::Relaxed);
+                                    if defers_by_shard[shard] > MOVE_DEFER_LIMIT {
+                                        take = replay.records.len(); // safety valve
+                                    }
+                                } else {
+                                    defers_by_shard[shard] = 0;
+                                }
+                                let valid = match take {
+                                    0 => &[][..],
+                                    t => &bytes[..replay.frame_ends[t - 1] as usize],
+                                };
+                                // take == 0: the whole chunk is blocked —
+                                // skip it; later shards in this sweep may
+                                // apply the pairing MoveIn
+                                let recs = &replay.records[..take];
+                                if !recs.is_empty() {
+                                    match store.apply_replicated(shard, valid, recs) {
+                                        Ok(()) => {
+                                            for r in recs {
+                                                match r {
+                                                    WalRecord::MoveIn { move_id, .. } => {
+                                                        seen_move_ins.insert(*move_id);
+                                                    }
+                                                    WalRecord::MoveOut { move_id } => {
+                                                        seen_move_ins.remove(move_id);
+                                                    }
+                                                    _ => {}
+                                                }
+                                            }
+                                            if take == replay.records.len() {
+                                                defers_by_shard[shard] = 0;
+                                            }
+                                            let n = recs.len() as u64;
+                                            counters.frames_applied.fetch_add(n, Ordering::Relaxed);
+                                            let b = valid.len() as u64;
+                                            counters.bytes_applied.fetch_add(b, Ordering::Relaxed);
+                                            progressed = true;
+                                        }
+                                        Err(e) => {
+                                            // commit-side failures are retried by the
+                                            // next chunk's commit (next_seq counts the
+                                            // pending frames); infeasible chunks keep
+                                            // erroring visibly here
+                                            eprintln!(
+                                                "[replica] applying shard {shard} frames at seq \
+                                                 {from} failed: {e:#}"
+                                            );
+                                            counters.stalls.fetch_add(1, Ordering::Relaxed);
+                                        }
                                     }
                                 }
                             }

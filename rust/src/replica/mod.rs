@@ -2,12 +2,15 @@
 //! serving — the multi-node layer over the [`crate::persist`] stack.
 //!
 //! The observation (ROADMAP, and the streaming-sketch literature): once
-//! the sketch corpus is an append-only per-shard log, scaling reads is
-//! *log shipping*, not re-sketching. A follower that holds the same
-//! snapshot + WAL prefix as the primary holds the same arenas
-//! byte-for-byte, so it answers `query`/`query_batch`/`distance` with
-//! results bit-identical to the primary's — the serving tier fans out
-//! without the corpus ever being sketched twice.
+//! the sketch corpus is a per-shard log of *mutations* — inserts,
+//! deletes, upserts, rebalance moves — scaling reads is *log shipping*,
+//! not re-sketching. A follower that holds the same snapshot + WAL
+//! prefix as the primary holds the same arenas byte-for-byte (the log
+//! replays deterministically: swap-remove deletes, in-place upserts, and
+//! TTL deadlines all carry their exact effect in the frame), so it
+//! answers `query`/`query_batch`/`distance` with results bit-identical
+//! to the primary's — the serving tier fans out without the corpus ever
+//! being sketched twice.
 //!
 //! ```text
 //!   primary (serve --data-dir A)                follower (serve --data-dir B
@@ -17,7 +20,7 @@
 //!   │   repl_* wire ops from the │  snapshot arenas  │ snap/wal/MANIFEST,    │
 //!   │   same TCP protocol]       │                   │ recover via the       │
 //!   │                            │  repl_wal_tail    │ ordinary persist path │
-//!   │ seq anchoring: manifest v3 │ {shard,from_seq}  │ [puller thread:       │
+//!   │ seq anchoring: manifest v4 │ {shard,from_seq}  │ [puller thread:       │
 //!   │ base_seqs + implicit frame │ ───────────────►  │  apply frames, mirror │
 //!   │ position = per-shard seq   │  checksummed raw  │  into own WAL, track  │
 //!   └────────────────────────────┘  frame bytes      │  applied seq/lag]     │
@@ -27,7 +30,7 @@
 //!
 //! **Sequence numbers.** Every WAL frame has an implicit monotonic
 //! per-shard sequence: its position in the shard's total frame history.
-//! The manifest (v3) anchors each generation with per-shard `base_seqs`
+//! The manifest (v4) anchors each generation with per-shard `base_seqs`
 //! (frames absorbed into the snapshot cut), so frame `j` of
 //! `wal-G-shard-i` is sequence `base_seqs[i] + j` — the on-disk frame
 //! format is unchanged, and a follower's catch-up position is just a
@@ -74,11 +77,19 @@
 //! replica writable — inserts then continue the id/seq line the primary
 //! established. Promotion is local: it asserts nothing about the
 //! (possibly dead) primary beyond what was already applied, which is
-//! exactly the durable prefix the primary acked and shipped. During
-//! catch-up (not after parity) a cross-shard rebalance move can be
-//! transiently visible as a duplicated — or, for one poll cycle, a
-//! missing — row on the replica, since its two frames travel in
-//! independent per-shard streams (ROADMAP item).
+//! exactly the durable prefix the primary acked and shipped.
+//!
+//! **Cross-shard move ordering.** A rebalance move's two frames —
+//! `MoveOut` on the source shard, `MoveIn` on the destination — travel
+//! in independent per-shard streams but carry a shared move id. The
+//! puller defers a chunk at a `MoveOut` whose move id it has not yet
+//! seen arrive as a `MoveIn` (applying the already-valid prefix before
+//! it), so during catch-up a moved row is at worst transiently
+//! *duplicated* for a poll cycle — never missing. The primary commits
+//! the destination frame before the source frame, so the deferral always
+//! resolves; a safety valve (`repl_move_defers` counts it) applies
+//! anyway after ~64 consecutive deferrals rather than wedging on a
+//! corrupt stream.
 //!
 //! Observability: `repl_*` stats fields (shipped frames/bytes on the
 //! primary; applied frames/bytes, per-shard applied seq and lag, and
@@ -155,6 +166,10 @@ pub struct ReplCounters {
     /// errors, connection failures) — a rising value with zero lag
     /// movement is the "operator, look here" signal.
     pub stalls: AtomicU64,
+    /// Follower side: chunks deferred at a `MoveOut` whose paired
+    /// `MoveIn` had not yet arrived on the destination shard's stream
+    /// (dst-before-src ordering during catch-up).
+    pub move_defers: AtomicU64,
     /// Follower side gauge: 1 once divergence was detected (replication
     /// halts; reads keep serving the last consistent prefix).
     pub diverged: AtomicU64,
@@ -214,6 +229,10 @@ impl ReplCounters {
             (
                 "repl_stalls".into(),
                 self.stalls.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "repl_move_defers".into(),
+                self.move_defers.load(Ordering::Relaxed) as f64,
             ),
             (
                 "repl_diverged".into(),

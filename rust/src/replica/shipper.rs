@@ -16,6 +16,17 @@
 //! files it addresses, and retries when the live generation moved —
 //! never blocking rotation, never serving a generation's file against
 //! another generation's bases.
+//!
+//! Tail-offset cache: serving a tail means translating a frame index
+//! into a byte offset inside a variable-length-frame file. Instead of
+//! walking the segment from byte 0 on every poll (O(file) per request —
+//! quadratic over a follower's catch-up), the shipper stores each
+//! reply's end position back into the persistence layer's per-shard
+//! `(generation, frame, offset)` memo and passes it as the next read's
+//! starting hint, making steady-state polls O(chunk). The memo is
+//! invalidated by generation (rotation and compaction both cut a new
+//! one), and a stale or too-far hint is simply ignored by
+//! [`read_wal_tail`] — correctness never depends on the cache.
 
 use super::{seq_field, ReplCounters};
 use crate::coordinator::store::ShardedStore;
@@ -128,12 +139,17 @@ pub fn wal_tail(p: &Persistence, shard: usize, from_seq: u64, max_bytes: usize) 
             }
             let path = wal_path(p.data_dir(), view.generation, shard);
             let budget = durable_seq - from_seq;
-            let Ok(tail) = read_wal_tail(&path, wpr, from_seq - base, max_bytes, budget) else {
+            let hint = p.tail_hint(shard, view.generation);
+            let Ok(tail) = read_wal_tail(&path, wpr, from_seq - base, max_bytes, budget, hint)
+            else {
                 continue; // rotation swapped the live segment under us
             };
             if p.generation() != view.generation {
                 continue;
             }
+            // memoise where this reply ended so the follower's next poll
+            // seeks instead of re-walking the segment from byte 0
+            p.note_tail_offset(shard, view.generation, tail.end_frame, tail.end_offset);
             return Ok(Tail::Frames {
                 from_seq,
                 frames: tail.frames,
@@ -148,8 +164,10 @@ pub fn wal_tail(p: &Persistence, shard: usize, from_seq: u64, max_bytes: usize) 
                 // fsynced by the rotation that retired it, so every frame
                 // is within the durable horizon and no re-check is needed;
                 // it may expire under us, which downgrades to re-seed
+                // frozen segment, read rarely (one catch-up pass per
+                // lagging follower): no offset memo, hintless walk
                 let path = wal_path(p.data_dir(), *prev_gen, shard);
-                match read_wal_tail(&path, wpr, from_seq - prev_base, max_bytes, u64::MAX) {
+                match read_wal_tail(&path, wpr, from_seq - prev_base, max_bytes, u64::MAX, None) {
                     Ok(tail) if tail.frames > 0 => {
                         return Ok(Tail::Frames {
                             from_seq,

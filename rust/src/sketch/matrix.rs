@@ -157,6 +157,40 @@ impl SketchMatrix {
         true
     }
 
+    /// Remove row `i` by moving the last row into its slot — the arena
+    /// delete primitive. O(words_per_row), order of the surviving rows is
+    /// unchanged except that the former last row now lives at `i` (the
+    /// caller mirrors the same swap into its id and index structures).
+    /// Panics if `i` is out of bounds.
+    pub fn swap_remove_row(&mut self, i: usize) {
+        let last = self.len() - 1;
+        assert!(i <= last, "row {i} out of bounds for {} rows", last + 1);
+        if i != last {
+            let (head, tail) = self.words.split_at_mut(last * self.words_per_row);
+            head[i * self.words_per_row..(i + 1) * self.words_per_row]
+                .copy_from_slice(&tail[..self.words_per_row]);
+        }
+        self.words.truncate(last * self.words_per_row);
+        self.weights.swap_remove(i);
+    }
+
+    /// Overwrite row `i` in place with a packed word slice and its
+    /// precomputed weight — the arena upsert primitive. The caller
+    /// guarantees `weight` is the slice's true Hamming weight and the
+    /// tail bits beyond `bits` are zero. Panics on width mismatch or if
+    /// `i` is out of bounds.
+    pub fn overwrite_row(&mut self, i: usize, words: &[u64], weight: u32) {
+        assert_eq!(
+            words.len(),
+            self.words_per_row,
+            "row has {} words, arena rows have {}",
+            words.len(),
+            self.words_per_row
+        );
+        self.words[i * self.words_per_row..(i + 1) * self.words_per_row].copy_from_slice(words);
+        self.weights[i] = weight;
+    }
+
     /// Arena memory footprint in bytes (words + weight cache).
     pub fn memory_bytes(&self) -> usize {
         self.words.len() * 8 + self.weights.len() * 4
@@ -352,6 +386,54 @@ mod tests {
         assert!(m.pop_row());
         assert!(!m.pop_row());
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn swap_remove_row_mirrors_vec_swap_remove() {
+        let mut rng = Xoshiro256::new(12);
+        let d = 130; // ragged tail word
+        let rows: Vec<BitVec> = (0..9).map(|_| sk(&mut rng, d, 25)).collect();
+        let mut m = SketchMatrix::from_sketches(&rows);
+        let mut model = rows.clone();
+        // interior, head, and tail removals, interleaved
+        for i in [3usize, 0, 6, 5, 0] {
+            m.swap_remove_row(i);
+            model.swap_remove(i);
+            assert_eq!(m.len(), model.len());
+            for (r, s) in model.iter().enumerate() {
+                assert_eq!(m.row_bitvec(r), *s, "row {r} after removing {i}");
+                assert_eq!(m.weight(r), s.count_ones());
+            }
+        }
+        // drain to empty via the last-row path
+        while !m.is_empty() {
+            m.swap_remove_row(m.len() - 1);
+            model.pop();
+        }
+        assert_eq!(m.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn overwrite_row_replaces_words_and_weight() {
+        let mut rng = Xoshiro256::new(13);
+        let d = 200;
+        let rows: Vec<BitVec> = (0..4).map(|_| sk(&mut rng, d, 30)).collect();
+        let mut m = SketchMatrix::from_sketches(&rows);
+        let fresh = sk(&mut rng, d, 45);
+        m.overwrite_row(2, fresh.words(), fresh.count_ones() as u32);
+        assert_eq!(m.row_bitvec(2), fresh);
+        assert_eq!(m.weight(2), fresh.count_ones());
+        // neighbours untouched
+        assert_eq!(m.row_bitvec(1), rows[1]);
+        assert_eq!(m.row_bitvec(3), rows[3]);
+        assert_eq!(m.len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arena rows have")]
+    fn overwrite_row_rejects_wrong_width() {
+        let mut m = SketchMatrix::from_sketches(&[BitVec::zeros(128)]);
+        m.overwrite_row(0, &[0u64], 0);
     }
 
     #[test]

@@ -36,6 +36,7 @@ fn persist_cfg(dir: &TempDir, mode: PersistMode, snapshot_every: u64) -> Persist
         // and the store/persist unit tests)
         commit_window_us: 0,
         wal_max_bytes: 0,
+        compact_dead_frames: 0,
     }
 }
 
@@ -247,6 +248,7 @@ fn wire_level_restart_serves_the_recovered_corpus() {
             snapshot_every: 0,
             commit_window_us: 1_000,
             wal_max_bytes: 0,
+            compact_dead_frames: 0,
         },
         ..Default::default()
     };
@@ -295,6 +297,111 @@ fn wire_level_restart_serves_the_recovered_corpus() {
     assert!(c.stat("persist_recovery_ms").unwrap() >= 0.0);
     // snapshot works in the second life too and bumps the generation
     assert_eq!(c.snapshot().unwrap(), 2);
+    c.shutdown().unwrap();
+    server.join().unwrap();
+}
+
+/// The acceptance bar for WAL compaction: recovering *after* a rotation
+/// folded the dead frames away must produce the same corpus as
+/// recovering *before* it, when the mixed mutation stream was replayed
+/// record by record. Three lives of one data dir: write a mixed stream
+/// (life 1), recover by replay and capture what the service answers
+/// (life 2, pre-compaction), fold with `snapshot`, recover from the
+/// folded generation and require identical answers (life 3).
+#[test]
+fn compaction_rotation_preserves_recovery_exactly() {
+    use cabin::data::{synth::SynthSpec, CatVector};
+
+    let dir = TempDir::new("persist-compact-wire");
+    let mut spec = SynthSpec::small_demo();
+    spec.dim = 600;
+    spec.num_categories = 16;
+    spec.num_points = 26;
+    let pts: Vec<CatVector> = spec.generate(9).points;
+
+    let config = || CoordinatorConfig {
+        input_dim: 600,
+        num_categories: 16,
+        sketch_dim: 128,
+        seed: 5,
+        num_shards: 2,
+        use_xla: false,
+        persist: PersistConfig {
+            mode: PersistMode::WalSnapshot,
+            data_dir: Some(dir.path().to_path_buf()),
+            fsync: FsyncPolicy::Never,
+            snapshot_every: 0,
+            commit_window_us: 0,
+            wal_max_bytes: 0,
+            compact_dead_frames: 0, // manual `snapshot` op is the fold
+        },
+        ..Default::default()
+    };
+    let serve = |config: CoordinatorConfig| {
+        let coordinator = Arc::new(Coordinator::try_new(config).unwrap());
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        let server = Arc::clone(&coordinator);
+        let handle = std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", |addr| {
+                    let _ = tx.send(addr);
+                })
+                .unwrap();
+        });
+        (rx.recv().unwrap(), handle)
+    };
+    let probes = || pts[..6].to_vec();
+
+    // life 1: a mixed mutation stream, all of it living only in the WAL
+    let ids = {
+        let (addr, server) = serve(config());
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let mut ids = Vec::new();
+        for p in &pts[..20] {
+            ids.push(c.insert(p.clone()).unwrap());
+        }
+        c.delete(ids[3]).unwrap();
+        c.delete(ids[11]).unwrap();
+        c.upsert(ids[7], pts[20].clone(), 0).unwrap();
+        c.upsert(ids[15], pts[21].clone(), 0).unwrap();
+        for p in &pts[22..24] {
+            ids.push(c.insert(p.clone()).unwrap());
+        }
+        c.flush().unwrap();
+        c.shutdown().unwrap();
+        server.join().unwrap();
+        ids
+    };
+
+    // life 2: pre-compaction recovery — replays insert/delete/upsert
+    // frames one by one. Capture the service's answers, then fold.
+    let (pre_hits, pre_up) = {
+        let (addr, server) = serve(config());
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        assert_eq!(c.stat("persist_generation").unwrap(), 0.0);
+        let hits = c.query_batch(probes(), 5).unwrap();
+        let up = c.query(pts[20].clone(), 1).unwrap();
+        assert_eq!(up[0].id, ids[7], "upsert replayed into place");
+        assert!(c.distance(ids[3], ids[0]).is_err(), "deleted id stays gone");
+        assert_eq!(c.snapshot().unwrap(), 1); // the fold
+        c.shutdown().unwrap();
+        server.join().unwrap();
+        (hits, up)
+    };
+
+    // life 3: post-compaction recovery — loads the folded snapshot (the
+    // dead frames are gone) and must answer identically.
+    let (addr, server) = serve(config());
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    assert_eq!(c.stat("persist_generation").unwrap(), 1.0);
+    assert_eq!(c.query_batch(probes(), 5).unwrap(), pre_hits);
+    assert_eq!(c.query(pts[20].clone(), 1).unwrap(), pre_up);
+    assert!(c.distance(ids[3], ids[0]).is_err());
+    assert!(c.distance(ids[11], ids[0]).is_err());
+    assert_eq!(c.distance(ids[7], ids[7]).unwrap(), 0.0);
+    // writes keep flowing on the folded generation
+    let next = c.insert(pts[24].clone()).unwrap();
+    assert!(next > ids[21]);
     c.shutdown().unwrap();
     server.join().unwrap();
 }

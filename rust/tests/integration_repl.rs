@@ -39,6 +39,7 @@ fn base_config(dir: &TempDir) -> CoordinatorConfig {
             snapshot_every: 0, // rotations only where a test forces them
             commit_window_us: 0,
             wal_max_bytes: 0,
+            compact_dead_frames: 0,
         },
         ..Default::default()
     }
@@ -142,6 +143,87 @@ fn follower_bootstraps_catches_up_and_serves_identical_reads() {
         let hits = fc.query(v.clone(), 1).unwrap();
         assert_eq!(hits[0].id, *id);
         assert!(hits[0].dist < 1e-9);
+    }
+    fc.shutdown().unwrap();
+    f_handle.join().unwrap();
+    drop(follower);
+    pc.shutdown().unwrap();
+    p_handle.join().unwrap();
+}
+
+/// The mutable-corpus acceptance bar: a follower replaying a stream that
+/// mixes inserts, deletes, upserts, a TTL expiry and rebalance moves must
+/// end bit-identical to the primary — same shard layout (swap-remove
+/// order mirrored), same `query_batch` answers — and its write redirect
+/// must cover the new ops.
+#[test]
+fn follower_mirrors_mixed_mutation_stream_bit_identically() {
+    let p_dir = TempDir::new("repl-mixed-primary");
+    let f_dir = TempDir::new("repl-mixed-follower");
+    // ttl_sweep_ms: 0 — this test expires the TTL row deterministically
+    // through the store, not the timer
+    let (p_addr, primary, p_handle) = serve(CoordinatorConfig {
+        ttl_sweep_ms: 0,
+        ..base_config(&p_dir)
+    });
+    let mut pc = Client::connect(&p_addr.to_string()).unwrap();
+    let pts = vectors(7, 40);
+    let mut ids = Vec::new();
+    for v in &pts[..24] {
+        ids.push(pc.insert(v.clone()).unwrap());
+    }
+    assert_eq!(pc.snapshot().unwrap(), 1); // follower bootstraps from here
+    let (f_addr, follower, f_handle) = serve(CoordinatorConfig {
+        ttl_sweep_ms: 0,
+        ..follower_config(&f_dir, p_addr)
+    });
+    let mut fc = Client::connect(&f_addr.to_string()).unwrap();
+    // the live tail is a mixed mutation stream
+    pc.delete(ids[2]).unwrap();
+    pc.delete(ids[13]).unwrap();
+    pc.upsert(ids[5], pts[24].clone(), 0).unwrap();
+    pc.upsert(ids[17], pts[25].clone(), 0).unwrap();
+    let ttl_id = pc.insert_ttl(pts[26].clone(), 1).unwrap();
+    for v in &pts[27..33] {
+        pc.insert(v.clone()).unwrap();
+    }
+    primary.store.rebalance(1); // MoveOut/MoveIn pairs ride the stream
+    assert_eq!(primary.store.sweep_expired(u64::MAX), 1); // → Delete frame
+    wait_for_parity(&mut pc, &mut fc);
+    // bit-identical arenas: ids, rows, cached weights and TTL deadlines,
+    // shard by shard (swap-remove ordering mirrored exactly)
+    let image = |s: &cabin::coordinator::store::Shard| {
+        (s.ids.clone(), s.rows.clone(), s.expiry.clone())
+    };
+    assert_eq!(
+        primary.store.map_shards(image),
+        follower.store.map_shards(image),
+        "follower arenas diverge from the primary's"
+    );
+    // bit-identical batched reads over the surviving corpus
+    let probes: Vec<CatVector> = pts[6..14].to_vec();
+    assert_eq!(
+        pc.query_batch(probes.clone(), 5).unwrap(),
+        fc.query_batch(probes, 5).unwrap()
+    );
+    // deleted and expired ids resolve on neither side
+    for gone in [ids[2], ids[13], ttl_id] {
+        assert!(pc.distance(gone, ids[0]).is_err(), "id {gone} on primary");
+        assert!(fc.distance(gone, ids[0]).is_err(), "id {gone} on follower");
+    }
+    // the upserted rows answer with their replacement vectors
+    for (id, replacement) in [(ids[5], &pts[24]), (ids[17], &pts[25])] {
+        let hits = fc.query(replacement.clone(), 1).unwrap();
+        assert_eq!(hits[0].id, id);
+        assert!(hits[0].dist < 1e-9);
+    }
+    // the read-only redirect covers every write op
+    for err in [
+        fc.delete(ids[0]).unwrap_err().to_string(),
+        fc.upsert(ids[0], pts[27].clone(), 0).unwrap_err().to_string(),
+        fc.insert_ttl(pts[27].clone(), 5_000).unwrap_err().to_string(),
+    ] {
+        assert!(err.contains("read-only replica"), "{err}");
     }
     fc.shutdown().unwrap();
     f_handle.join().unwrap();

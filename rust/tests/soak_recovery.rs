@@ -174,6 +174,99 @@ fn kill9_with_group_commit_recovers_every_acked_insert() {
     });
 }
 
+/// The mutable-corpus durability contract under `kill -9`: a workload
+/// mixing inserts, deletes, upserts and short-TTL inserts — with the TTL
+/// sweeper and dead-frame compaction armed — must recover every
+/// acknowledged write exactly. Acked deletes stay gone forever, acked
+/// upserts answer with their replacement vector, and TTL rows are
+/// (eventually) swept by the next life's sweeper even when the process
+/// that inserted them died before their deadline.
+#[test]
+fn kill9_mid_mixed_mutation_stream_recovers_every_acked_write() {
+    use std::collections::BTreeMap;
+    let soak = std::env::var("CABIN_SOAK").ok().as_deref() == Some("1");
+    let (rounds, per_round) = if soak { (4, 105) } else { (1, 35) };
+    let dir = TempDir::new("soak-mutations");
+    let args = [
+        "--commit-window-us",
+        "500",
+        "--ttl-sweep-ms",
+        "50",
+        "--compact-dead-frames",
+        "64",
+    ];
+    let mut rng = Xoshiro256::new(77);
+    // the acked model: id → expected vector for live rows, plus the ids
+    // whose delete was acked (must never come back) and the TTL ids
+    // (must eventually be swept, in whichever life the sweeper catches up)
+    let mut live: BTreeMap<usize, CatVector> = BTreeMap::new();
+    let mut dead: Vec<usize> = Vec::new();
+    let mut ttl_ids: Vec<usize> = Vec::new();
+
+    for round in 0..=rounds {
+        let mut server = ServerProc::spawn(dir.path(), &args);
+        let mut c = Client::connect(&server.addr).expect("connect");
+        // every acked write must be back exactly as acknowledged
+        for (id, v) in &live {
+            let hits = c.query(v.clone(), 1).expect("query recovered corpus");
+            assert_eq!(hits[0].id, *id, "round {round}: id {id} lost after kill -9");
+            assert!(
+                hits[0].dist < 1e-9,
+                "round {round}: id {id} answers a stale vector (dist {})",
+                hits[0].dist
+            );
+        }
+        for id in &dead {
+            assert!(
+                c.distance(*id, *id).is_err(),
+                "round {round}: acked delete of id {id} resurrected by recovery"
+            );
+        }
+        if round == rounds {
+            // final life: the CLI flags really reached the config...
+            assert_eq!(c.stat("persist_cfg_compact_dead_frames").unwrap(), 64.0);
+            // ...and every TTL row is swept once this life's sweeper
+            // catches up with the (long-past) deadlines
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+            for id in &ttl_ids {
+                while c.distance(*id, *id).is_ok() {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "ttl id {id} never expired"
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(25));
+                }
+            }
+            let _ = c.shutdown();
+            let _ = server.child.wait();
+            return;
+        }
+        // this round's mixed stream; each op is acked before the model
+        // records it, so a mid-stream kill can only lose unacked work
+        for i in 0..per_round {
+            let v = CatVector::random(DIM, 50, 8, &mut rng);
+            if i % 7 == 3 && !live.is_empty() {
+                let &id = live.keys().next().unwrap();
+                c.delete(id).expect("delete");
+                live.remove(&id);
+                dead.push(id);
+            } else if i % 7 == 5 && !live.is_empty() {
+                let &id = live.keys().next_back().unwrap();
+                c.upsert(id, v.clone(), 0).expect("upsert");
+                live.insert(id, v);
+            } else if i % 7 == 6 {
+                ttl_ids.push(c.insert_ttl(v, 1).expect("insert_ttl"));
+            } else {
+                let id = c.insert(v.clone()).expect("insert");
+                live.insert(id, v);
+            }
+        }
+        // mid-stream hard stop — the sweeper and compaction may be
+        // mid-flight; neither may damage acked history
+        server.kill9();
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Two-process replication lanes: a real follower process replicating a
 // real primary process, with kill -9 on both sides.

@@ -1,0 +1,108 @@
+//! Observability overhead benchmarks — the cost of watching the serving
+//! path must stay negligible.
+//!
+//! * **Histogram recording**: raw [`cabin::obs::ObsHistogram::record_us`]
+//!   throughput — four relaxed atomic RMWs per sample, the unit cost
+//!   every instrumented stage pays.
+//! * **Routed query tax** (the acceptance lane): `routed_query/baseline`
+//!   runs the production batched read path with no observer attached;
+//!   `routed_query/instrumented` attaches the full stage-histogram set
+//!   plus a per-request [`cabin::obs::ReadSpan`] — exactly what the
+//!   server does per query. The instrumented p50 must stay within 5% of
+//!   baseline (the gate in `tools/bench_gate.py` holds each lane to its
+//!   own history; the ratio printed here makes the tax visible in one
+//!   run).
+
+use cabin::bench::{black_box, Bench};
+use cabin::coordinator::router::{self, QueryOpts};
+use cabin::coordinator::store::ShardedStore;
+use cabin::obs::{ObsHistogram, ReadSpan, Stages};
+use cabin::sketch::BitVec;
+use cabin::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+const DIM: usize = 1024;
+const SHARDS: usize = 4;
+const Q: usize = 64;
+
+fn corpus(n: usize) -> Vec<BitVec> {
+    let mut rng = Xoshiro256::new(11);
+    (0..n)
+        .map(|_| BitVec::from_indices(DIM, rng.sample_indices(DIM, 128)))
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::from_env("obs");
+    let fast = std::env::var("CABIN_BENCH_FAST").ok().as_deref() == Some("1");
+
+    // ---- unit cost: one histogram sample ----
+    let hist = ObsHistogram::new();
+    let mut us = 1u64;
+    b.bench_with_throughput("histogram/record_us", Some(1.0), || {
+        // stride through the bucket range so the branchy index path is
+        // exercised, not one hot bucket
+        us = us.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+        hist.record_us(black_box(us >> 44));
+    });
+
+    // ---- serving-path tax: observed vs unobserved routed queries ----
+    let n = if fast { 20_000 } else { 200_000 };
+    let pts = corpus(n);
+    let store = ShardedStore::new(SHARDS, DIM);
+    for chunk in pts.chunks(1024) {
+        store.insert_batch(chunk.to_vec());
+    }
+    drop(pts);
+    let mut rng = Xoshiro256::new(5);
+    let queries: Vec<BitVec> = (0..Q)
+        .map(|_| BitVec::from_indices(DIM, rng.sample_indices(DIM, 128)))
+        .collect();
+    let k = 10usize;
+    println!("[bench_obs] corpus {n} x {DIM} bits, {SHARDS} shards, Q={Q}, k={k}");
+
+    let plain = QueryOpts::full_scan();
+    let stages = Arc::new(Stages::new());
+    // observation must never change results
+    assert_eq!(
+        router::topk_batch_with(&store, &queries, k, &plain),
+        router::topk_batch_with(
+            &store,
+            &queries,
+            k,
+            &QueryOpts::full_scan()
+                .with_observer(Arc::clone(&stages), Some(Arc::new(ReadSpan::default())))
+        ),
+        "instrumented path diverged from baseline"
+    );
+
+    let base_mean = b.bench_with_throughput(
+        &format!("routed_query/baseline/{n}"),
+        Some((n * Q) as f64),
+        || {
+            black_box(router::topk_batch_with(&store, &queries, k, &plain));
+        },
+    );
+    let inst_mean = b.bench_with_throughput(
+        &format!("routed_query/instrumented/{n}"),
+        Some((n * Q) as f64),
+        || {
+            let opts = QueryOpts::full_scan()
+                .with_observer(Arc::clone(&stages), Some(Arc::new(ReadSpan::default())));
+            black_box(router::topk_batch_with(&store, &queries, k, &opts));
+        },
+    );
+    let overhead_pct = (inst_mean / base_mean - 1.0) * 100.0;
+    println!(
+        "[bench_obs] instrumentation overhead: {overhead_pct:+.2}% \
+         (baseline {base_mean:.6}s, instrumented {inst_mean:.6}s; budget 5%)"
+    );
+    println!(
+        "[bench_obs] stage samples recorded: read_queue={} read_scan={} read_gather={}",
+        stages.read_queue.count(),
+        stages.read_scan.count(),
+        stages.read_gather.count()
+    );
+
+    b.finish();
+}

@@ -34,10 +34,19 @@
 //! The backend is pluggable: the XLA engine (fixed-batch AOT artifact,
 //! padded) when the corpus configuration matches the artifacts, else the
 //! native fused sketcher.
+//!
+//! Observability: every flush records the write-path stage histograms
+//! (`stage_write_queue` per item; `stage_write_sketch`/`_place`/`_wal`/
+//! `_fsync`/`_reply` per batch — the latter three inside the store and
+//! the settle path), all lock-free ([`crate::obs::Stages`]). Items
+//! breaching `--slow-op-ms` emit one structured `batcher/slow_op` event
+//! carrying the trace id the server stamped on the ticket and the full
+//! stage breakdown.
 
 use super::metrics::Metrics;
 use super::store::{InsertTicket, MutationOp, MutationResult, MutationTicket, ShardedStore};
 use crate::data::CatVector;
+use crate::obs::{self, log as obs_log};
 use crate::runtime::XlaHandle;
 use crate::sketch::{BitVec, CabinSketcher};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -89,7 +98,11 @@ impl SketchBackend {
                             metrics.xla_batches.fetch_add(1, Ordering::Relaxed);
                             return s;
                         }
-                        Err(e) => eprintln!("[batcher] xla failed, native fallback: {e:#}"),
+                        Err(e) => obs_log::warn(
+                            "batcher",
+                            "xla_fallback",
+                            &[("error", obs_log::V::s(format!("{e:#}")))],
+                        ),
                     }
                 }
                 metrics.native_batches.fetch_add(1, Ordering::Relaxed);
@@ -123,9 +136,24 @@ enum PendingOp {
     Upsert { id: usize, vec: CatVector, deadline: u64 },
 }
 
+impl PendingOp {
+    /// Op kind for slow-op records.
+    fn kind(&self) -> &'static str {
+        match self {
+            PendingOp::Insert { .. } => "insert",
+            PendingOp::Delete { .. } => "delete",
+            PendingOp::Upsert { .. } => "upsert",
+        }
+    }
+}
+
 struct Pending {
     op: PendingOp,
     enqueued: Instant,
+    /// Connection-scoped trace id stamped by the server (0 = untraced —
+    /// library callers and benches). Flows into slow-op records so a
+    /// breach can be matched back to its connection and request.
+    trace: u64,
     reply: SyncSender<InsertReply>,
 }
 
@@ -136,12 +164,13 @@ pub struct BatchSubmitter {
 }
 
 impl BatchSubmitter {
-    fn submit(&self, op: PendingOp) -> anyhow::Result<usize> {
+    fn submit(&self, op: PendingOp, trace: u64) -> anyhow::Result<usize> {
         let (reply_tx, reply_rx) = sync_channel(1);
         self.tx
             .send(Pending {
                 op,
                 enqueued: Instant::now(),
+                trace,
                 reply: reply_tx,
             })
             .map_err(|_| anyhow::anyhow!("batcher stopped"))?;
@@ -155,24 +184,55 @@ impl BatchSubmitter {
     /// item landed in has been flushed *and* (on durable stores) its WAL
     /// commit landed. A durability failure comes back as `Err`, not an id.
     pub fn insert(&self, vec: CatVector) -> anyhow::Result<usize> {
-        self.submit(PendingOp::Insert { vec, deadline: 0 })
+        self.submit(PendingOp::Insert { vec, deadline: 0 }, 0)
+    }
+
+    /// As [`BatchSubmitter::insert`], carrying the server's trace id.
+    pub fn insert_traced(&self, vec: CatVector, trace: u64) -> anyhow::Result<usize> {
+        self.submit(PendingOp::Insert { vec, deadline: 0 }, trace)
     }
 
     /// Insert with an absolute unix-millis expiry deadline (0 = none).
     pub fn insert_with_deadline(&self, vec: CatVector, deadline: u64) -> anyhow::Result<usize> {
-        self.submit(PendingOp::Insert { vec, deadline })
+        self.submit(PendingOp::Insert { vec, deadline }, 0)
+    }
+
+    /// As [`BatchSubmitter::insert_with_deadline`], with a trace id.
+    pub fn insert_with_deadline_traced(
+        &self,
+        vec: CatVector,
+        deadline: u64,
+        trace: u64,
+    ) -> anyhow::Result<usize> {
+        self.submit(PendingOp::Insert { vec, deadline }, trace)
     }
 
     /// Delete a live id; the reply echoes the id. Deleting an id the
     /// store does not hold is a per-op error, not a batch failure.
     pub fn delete(&self, id: usize) -> anyhow::Result<usize> {
-        self.submit(PendingOp::Delete { id })
+        self.submit(PendingOp::Delete { id }, 0)
+    }
+
+    /// As [`BatchSubmitter::delete`], with a trace id.
+    pub fn delete_traced(&self, id: usize, trace: u64) -> anyhow::Result<usize> {
+        self.submit(PendingOp::Delete { id }, trace)
     }
 
     /// Replace the vector behind `id` (or resurrect a deleted id), with
     /// an absolute expiry deadline (0 = clear any expiry).
     pub fn upsert(&self, id: usize, vec: CatVector, deadline: u64) -> anyhow::Result<usize> {
-        self.submit(PendingOp::Upsert { id, vec, deadline })
+        self.submit(PendingOp::Upsert { id, vec, deadline }, 0)
+    }
+
+    /// As [`BatchSubmitter::upsert`], with a trace id.
+    pub fn upsert_traced(
+        &self,
+        id: usize,
+        vec: CatVector,
+        deadline: u64,
+        trace: u64,
+    ) -> anyhow::Result<usize> {
+        self.submit(PendingOp::Upsert { id, vec, deadline }, trace)
     }
 
     /// Non-blocking submit (used by load generators to observe
@@ -182,6 +242,7 @@ impl BatchSubmitter {
         match self.tx.try_send(Pending {
             op: PendingOp::Insert { vec, deadline: 0 },
             enqueued: Instant::now(),
+            trace: 0,
             reply: reply_tx,
         }) {
             Ok(()) => Ok(reply_rx),
@@ -201,6 +262,16 @@ enum AckTicket {
     Mutation(MutationTicket),
 }
 
+/// Batch-granular stage durations measured on the batcher thread,
+/// carried to the completion thread for slow-op records. The shared
+/// stages of a batch (sketch/place) are inherently per-batch; only the
+/// queue wait is per-item.
+#[derive(Clone, Copy, Default)]
+struct BatchTiming {
+    sketch_s: f64,
+    place_s: f64,
+}
+
 /// A placed batch awaiting its durability wait + client replies, handed
 /// from the batcher thread to the completion thread. `outcomes[i]` is
 /// item i's placement result (id, or a per-op error such as deleting an
@@ -209,6 +280,7 @@ struct AckJob {
     items: Vec<Pending>,
     outcomes: Vec<InsertReply>,
     ticket: AckTicket,
+    timing: BatchTiming,
 }
 
 /// The batcher worker. Owns the backend and writes into the store.
@@ -333,6 +405,15 @@ fn flush(
     metrics
         .batch_items
         .fetch_add(pending.len() as u64, Ordering::Relaxed);
+    // stage: queue wait, enqueue → this pickup (per item; lock-free)
+    for p in pending.iter() {
+        metrics
+            .stages
+            .write_queue
+            .record_us(obs::elapsed_us(p.enqueued));
+    }
+    let mut timing = BatchTiming::default();
+    let sketch_start = Instant::now();
     let plain_inserts = pending
         .iter()
         .all(|p| matches!(p.op, PendingOp::Insert { deadline: 0, .. }));
@@ -345,7 +426,11 @@ fn flush(
             })
             .collect();
         let sketches = backend.sketch_batch(&batch, metrics);
+        timing.sketch_s = sketch_start.elapsed().as_secs_f64();
+        metrics.stages.write_sketch.record_secs(timing.sketch_s);
+        let place_start = Instant::now();
         let (ids, ticket) = store.begin_insert_batch(sketches);
+        timing.place_s = place_start.elapsed().as_secs_f64();
         (ids.into_iter().map(Ok).collect(), AckTicket::Insert(ticket))
     } else {
         // one backend call sketches every vector-carrying op in the batch
@@ -363,6 +448,9 @@ fn flush(
             backend.sketch_batch(&to_sketch, metrics)
         }
         .into_iter();
+        timing.sketch_s = sketch_start.elapsed().as_secs_f64();
+        metrics.stages.write_sketch.record_secs(timing.sketch_s);
+        let place_start = Instant::now();
         let ops: Vec<MutationOp> = pending
             .iter()
             .map(|p| match &p.op {
@@ -379,6 +467,7 @@ fn flush(
             })
             .collect();
         let (results, ticket) = store.begin_mutation_batch(ops);
+        timing.place_s = place_start.elapsed().as_secs_f64();
         let outcomes = results
             .into_iter()
             .map(|r| match r {
@@ -394,6 +483,7 @@ fn flush(
         items: std::mem::take(pending),
         outcomes,
         ticket,
+        timing,
     };
     if let Err(std::sync::mpsc::SendError(job)) = ack_tx.send(job) {
         // completion thread gone (shutdown race): settle inline so no
@@ -416,16 +506,25 @@ fn ack_loop(store: Arc<ShardedStore>, metrics: Arc<Metrics>, rx: Receiver<AckJob
 /// scannable in memory, but telling the client "inserted" would promise
 /// crash-durability that was not met.
 fn settle(store: &ShardedStore, metrics: &Metrics, job: AckJob) {
+    let fsync_start = Instant::now();
     let committed = match job.ticket {
         AckTicket::Insert(t) => store.finish_insert_batch(t),
         AckTicket::Mutation(t) => store.finish_mutation_batch(t),
     };
+    // batch-level fsync-wait view for the slow-op record (the store's
+    // `write_fsync` stage histogram times the window wait itself)
+    let fsync_s = fsync_start.elapsed().as_secs_f64();
+    let batch_len = job.items.len();
+    let timing = job.timing;
+    let reply_start = Instant::now();
     match committed {
         Ok(()) => {
             for (p, outcome) in job.items.into_iter().zip(job.outcomes) {
+                let total_s = p.enqueued.elapsed().as_secs_f64();
                 if outcome.is_ok() {
-                    metrics.record_insert_latency(p.enqueued.elapsed().as_secs_f64());
+                    metrics.record_insert_latency(total_s);
                 }
+                note_slow_write(&p, total_s, timing, fsync_s, batch_len);
                 let _ = p.reply.send(outcome);
             }
         }
@@ -435,6 +534,7 @@ fn settle(store: &ShardedStore, metrics: &Metrics, job: AckJob) {
             );
             let msg = format!("{e:#}");
             for (p, outcome) in job.items.into_iter().zip(job.outcomes) {
+                note_slow_write(&p, p.enqueued.elapsed().as_secs_f64(), timing, fsync_s, batch_len);
                 // ops that already failed at placement keep their own
                 // error; the commit failure covers the placed ones
                 let _ = p.reply.send(match outcome {
@@ -444,6 +544,37 @@ fn settle(store: &ShardedStore, metrics: &Metrics, job: AckJob) {
             }
         }
     }
+    metrics
+        .stages
+        .write_reply
+        .record_us(obs::elapsed_us(reply_start));
+}
+
+/// Emit one structured slow-op record when a write breached
+/// `--slow-op-ms`: total end-to-end time plus the per-stage breakdown —
+/// the item's own queue wait, and its batch's sketch / placement /
+/// fsync-wait durations (those stages are shared by the whole batch).
+fn note_slow_write(p: &Pending, total_s: f64, timing: BatchTiming, fsync_s: f64, batch_len: usize) {
+    let threshold_us = obs::slow_op_us();
+    if threshold_us == 0 || total_s * 1e6 < threshold_us as f64 {
+        return;
+    }
+    let queue_s =
+        total_s - timing.sketch_s - timing.place_s - fsync_s;
+    obs_log::warn(
+        "batcher",
+        "slow_op",
+        &[
+            ("op", obs_log::V::s(p.op.kind())),
+            ("trace", obs_log::V::u(p.trace)),
+            ("total_ms", obs_log::V::f(total_s * 1e3)),
+            ("queue_ms", obs_log::V::f(queue_s.max(0.0) * 1e3)),
+            ("sketch_ms", obs_log::V::f(timing.sketch_s * 1e3)),
+            ("place_ms", obs_log::V::f(timing.place_s * 1e3)),
+            ("fsync_wait_ms", obs_log::V::f(fsync_s * 1e3)),
+            ("batch", obs_log::V::u(batch_len as u64)),
+        ],
+    );
 }
 
 #[cfg(test)]

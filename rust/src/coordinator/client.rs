@@ -4,7 +4,7 @@
 use super::protocol::{Hit, Request, Response};
 use crate::data::CatVector;
 use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
 pub struct Client {
@@ -118,6 +118,31 @@ impl Client {
         let fields = self.stats()?;
         super::metrics::stats_field(&fields, name)
             .ok_or_else(|| anyhow::anyhow!("stats field '{name}' missing from response"))
+    }
+
+    /// Fetch the server's Prometheus text exposition (`metrics_text` wire
+    /// op: every stats field plus full histogram bucket families). Works
+    /// against primaries and followers alike. The reply is a JSON header
+    /// line (`{"ok":true,"bytes":N}`) followed by N raw payload bytes,
+    /// framed like the replication sub-protocol.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        writeln!(self.writer, "{{\"op\":\"metrics_text\"}}")?;
+        let mut header = String::new();
+        let n = self.reader.read_line(&mut header)?;
+        if n == 0 {
+            bail!("server closed connection");
+        }
+        let h = crate::util::json::parse(header.trim()).context("metrics_text header")?;
+        if h.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            bail!(
+                "metrics_text failed: {}",
+                h.get("error").and_then(|e| e.as_str()).unwrap_or("unknown")
+            );
+        }
+        let bytes = h.req_usize("bytes")?;
+        let mut body = vec![0u8; bytes];
+        self.reader.read_exact(&mut body)?;
+        String::from_utf8(body).context("metrics_text payload is not UTF-8")
     }
 
     /// Fsync every shard WAL on the server (durable servers only) — after

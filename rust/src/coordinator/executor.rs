@@ -31,9 +31,12 @@
 //!   with a descriptive message instead of hanging (the pre-executor
 //!   scoped-spawn path propagated panics via `join().unwrap()`; this
 //!   keeps that contract without sacrificing the worker).
-//! * **Observability**: queue depth and busy-worker gauges plus job and
-//!   scatter totals land in [`ExecutorCounters`], surfaced as
-//!   `executor_*` fields of the `stats` response.
+//! * **Observability**: queue depth and busy-worker gauges plus job,
+//!   scatter and contained-panic totals land in [`ExecutorCounters`],
+//!   surfaced as `executor_*` fields of the `stats` response (a nonzero
+//!   `executor_job_panics` means some job crashed and was papered over —
+//!   alert on it). Panics also emit a structured `executor/job_panicked`
+//!   log event.
 //!
 //! Lock discipline: a worker takes exactly one lock — its own shard's
 //! read lock, via the store's poison-recovering `read_l` — and the
@@ -42,6 +45,7 @@
 
 use super::metrics::ExecutorCounters;
 use super::store::Shard;
+use crate::obs::log as obs_log;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
@@ -209,7 +213,15 @@ fn worker_loop(
         counters.busy_workers.fetch_sub(1, Ordering::Relaxed);
         counters.jobs.fetch_add(1, Ordering::Relaxed);
         if outcome.is_err() {
-            eprintln!("[executor] shard {si} job panicked (worker recovered)");
+            counters.job_panics.fetch_add(1, Ordering::Relaxed);
+            obs_log::error(
+                "executor",
+                "job_panicked",
+                &[
+                    ("shard", obs_log::V::u(si as u64)),
+                    ("recovered", obs_log::V::B(true)),
+                ],
+            );
         }
     }
 }
@@ -227,6 +239,7 @@ mod tests {
                 Arc::new(RwLock::new(Shard {
                     ids: Vec::new(),
                     rows: SketchMatrix::new(64),
+                    expiry: Vec::new(),
                     index: None,
                 }))
             })
@@ -277,9 +290,16 @@ mod tests {
             ex.scatter_gather(|_si| Box::new(|_s: &Shard| -> usize { panic!("bad job") }));
         }));
         assert!(poisoned.is_err());
+        // ...count the contained panic...
+        assert_eq!(
+            ex.counters().job_panics.load(Ordering::Relaxed),
+            1,
+            "panicking job must increment executor_job_panics"
+        );
         // ...and the worker must keep serving afterwards
         let out = ex.scatter_gather(|si| Box::new(move |_s: &Shard| si + 7));
         assert_eq!(out, vec![7]);
+        assert_eq!(ex.counters().job_panics.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -1,10 +1,19 @@
-//! Service metrics: lock-free counters + mutex-guarded latency samples.
+//! Service metrics: lock-free counters + lock-free latency histograms.
+//!
+//! Every latency metric here — the request-level insert/query
+//! histograms and the per-stage pipeline histograms in
+//! [`crate::obs::Stages`] — records through
+//! [`crate::obs::ObsHistogram`]: a relaxed atomic bucket increment,
+//! no mutex and no allocation on the hot path, fixed memory forever.
+//! (The old design buffered every sample in a `Mutex<Vec<f64>>`; that
+//! sampler now lives only in offline bench summaries, reservoir-capped
+//! — see [`crate::util::timer::LatencyStats`].)
 
+use crate::obs::{ObsHistogram, Stages};
 use crate::persist::PersistCounters;
 use crate::replica::ReplCounters;
-use crate::util::timer::LatencyStats;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Shard-executor runtime counters, updated by
 /// [`crate::coordinator::executor::ShardExecutor`]. `queue_depth` and
@@ -22,6 +31,10 @@ pub struct ExecutorCounters {
     /// Scatter/gather rounds served since startup (one per routed query
     /// or query batch).
     pub scatters: AtomicU64,
+    /// Jobs that panicked inside a worker (caught; the worker survives).
+    /// Surfaced as `executor_job_panics` — any nonzero value means a bug
+    /// in a kernel or index path that the runtime papered over.
+    pub job_panics: AtomicU64,
 }
 
 /// LSH-index traffic counters, recorded by the router's indexed scan path
@@ -80,8 +93,14 @@ pub struct Metrics {
     /// whichever of the two this server runs (a promoted replica may have
     /// been both).
     pub repl: Arc<ReplCounters>,
-    insert_latency: Mutex<LatencyStats>,
-    query_latency: Mutex<LatencyStats>,
+    /// Per-stage pipeline histograms (`stage_*` fields). Arc-shared with
+    /// the batcher, the store (placement/WAL/fsync stages) and the
+    /// router's executor jobs.
+    pub stages: Arc<Stages>,
+    /// End-to-end insert latency (enqueue → ack released).
+    pub insert_hist: ObsHistogram,
+    /// End-to-end query latency (request decode → reply built).
+    pub query_hist: ObsHistogram,
 }
 
 /// Non-panicking lookup in a `(name, value)` stats snapshot. Use this —
@@ -96,12 +115,14 @@ impl Metrics {
         Self::default()
     }
 
+    /// Record one end-to-end insert latency (lock-free).
     pub fn record_insert_latency(&self, secs: f64) {
-        self.insert_latency.lock().unwrap().record(secs);
+        self.insert_hist.record_secs(secs);
     }
 
+    /// Record one end-to-end query latency (lock-free).
     pub fn record_query_latency(&self, secs: f64) {
-        self.query_latency.lock().unwrap().record(secs);
+        self.query_hist.record_secs(secs);
     }
 
     /// Snapshot as flat (name, value) pairs for the Stats response.
@@ -181,6 +202,10 @@ impl Metrics {
                 self.executor.scatters.load(Ordering::Relaxed) as f64,
             ),
             (
+                "executor_job_panics".into(),
+                self.executor.job_panics.load(Ordering::Relaxed) as f64,
+            ),
+            (
                 "persist_wal_records".into(),
                 self.persist.wal_records.load(Ordering::Relaxed) as f64,
             ),
@@ -214,12 +239,50 @@ impl Metrics {
             ),
         ];
         out.extend(self.repl.stats_fields());
-        let ins = self.insert_latency.lock().unwrap().summary();
-        let q = self.query_latency.lock().unwrap().summary();
-        out.push(("insert_p50_ms".into(), ins.p50 * 1e3));
-        out.push(("insert_p99_ms".into(), ins.p99 * 1e3));
-        out.push(("query_p50_ms".into(), q.p50 * 1e3));
-        out.push(("query_p99_ms".into(), q.p99 * 1e3));
+        // Per-stage pipeline histograms: count, upper-edge quantiles, and
+        // cumulative bucket counts at ~1ms/10ms/100ms/1s (each rounded
+        // down to the nearest exact histogram bucket edge, so counts are
+        // exact — a slight undercount vs the decimal label).
+        for (name, hist) in self.stages.named() {
+            out.push((format!("stage_{name}_count"), hist.count() as f64));
+            out.push((format!("stage_{name}_p50_ms"), hist.p50() * 1e3));
+            out.push((format!("stage_{name}_p99_ms"), hist.p99() * 1e3));
+            out.push((
+                format!("stage_{name}_le_1ms"),
+                hist.count_below_us(1_000) as f64,
+            ));
+            out.push((
+                format!("stage_{name}_le_10ms"),
+                hist.count_below_us(10_000) as f64,
+            ));
+            out.push((
+                format!("stage_{name}_le_100ms"),
+                hist.count_below_us(100_000) as f64,
+            ));
+            out.push((
+                format!("stage_{name}_le_1s"),
+                hist.count_below_us(1_000_000) as f64,
+            ));
+        }
+        out.push(("insert_p50_ms".into(), self.insert_hist.p50() * 1e3));
+        out.push(("insert_p99_ms".into(), self.insert_hist.p99() * 1e3));
+        out.push(("query_p50_ms".into(), self.query_hist.p50() * 1e3));
+        out.push(("query_p99_ms".into(), self.query_hist.p99() * 1e3));
+        out
+    }
+
+    /// Histogram snapshots for the Prometheus exposition: every stage
+    /// plus the end-to-end insert/query histograms, as
+    /// `(base_name, snapshot)` pairs (see [`crate::obs::prom::render`]).
+    pub fn histogram_snapshots(&self) -> Vec<(String, crate::obs::HistogramSnapshot)> {
+        let mut out: Vec<(String, crate::obs::HistogramSnapshot)> = self
+            .stages
+            .named()
+            .iter()
+            .map(|(name, hist)| (format!("stage_{name}"), hist.snapshot()))
+            .collect();
+        out.push(("insert_latency".into(), self.insert_hist.snapshot()));
+        out.push(("query_latency".into(), self.query_hist.snapshot()));
         out
     }
 
@@ -331,6 +394,134 @@ mod tests {
         assert_eq!(stats_field(&snap, "repl_applied_seq_shard0"), Some(4.0));
         assert_eq!(stats_field(&snap, "repl_lag_shard0"), Some(7.0));
         assert_eq!(stats_field(&snap, "repl_caught_up"), Some(0.0));
+    }
+
+    #[test]
+    fn executor_job_panics_surface_in_snapshot() {
+        let m = Metrics::new();
+        assert_eq!(
+            stats_field(&m.snapshot(), "executor_job_panics"),
+            Some(0.0)
+        );
+        m.executor.job_panics.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(
+            stats_field(&m.snapshot(), "executor_job_panics"),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn stage_histograms_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.stages.write_fsync.record_secs(0.002);
+        m.stages.write_fsync.record_secs(0.0001);
+        m.stages.read_queue.record_secs(0.02);
+        let snap = m.snapshot();
+        assert_eq!(stats_field(&snap, "stage_write_fsync_count"), Some(2.0));
+        assert!(stats_field(&snap, "stage_write_fsync_p99_ms").unwrap() >= 2.0);
+        assert_eq!(stats_field(&snap, "stage_write_fsync_le_10ms"), Some(2.0));
+        assert_eq!(stats_field(&snap, "stage_read_queue_count"), Some(1.0));
+        assert_eq!(stats_field(&snap, "stage_read_queue_le_1ms"), Some(0.0));
+        assert_eq!(stats_field(&snap, "stage_write_queue_count"), Some(0.0));
+    }
+
+    /// Golden stats schema: `Metrics::snapshot` field names must be
+    /// unique and stable. `bench_gate` history, client `stats_field`
+    /// lookups and dashboards all key on these names — an accidental
+    /// rename or duplicate must break loudly here, not corrupt data
+    /// silently. If you add a metric, extend this list (append-only for
+    /// renames: keep the old name emitting too, or migrate consumers in
+    /// the same PR).
+    #[test]
+    fn stats_schema_is_stable_and_unique() {
+        let mut expected: Vec<String> = [
+            "inserts",
+            "deletes",
+            "upserts",
+            "ttl_expirations",
+            "queries",
+            "query_batches",
+            "distances",
+            "heatmaps",
+            "batches_flushed",
+            "batch_items",
+            "errors",
+            "xla_batches",
+            "native_batches",
+            "index_probes",
+            "index_candidates",
+            "index_reranked",
+            "index_fallbacks",
+            "index_indexed_scans",
+            "executor_queue_depth",
+            "executor_busy_workers",
+            "executor_jobs",
+            "executor_scatters",
+            "executor_job_panics",
+            "persist_wal_records",
+            "persist_wal_bytes",
+            "persist_snapshots",
+            "persist_recovery_ms",
+            "persist_generation",
+            "persist_group_commits",
+            "persist_wal_dead_frames",
+            "persist_compactions",
+            "repl_snapshots_served",
+            "repl_tails_served",
+            "repl_frames_shipped",
+            "repl_bytes_shipped",
+            "repl_frames_applied",
+            "repl_bytes_applied",
+            "repl_connects",
+            "repl_stalls",
+            "repl_move_defers",
+            "repl_diverged",
+            "repl_caught_up",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        for stage in [
+            "write_queue",
+            "write_sketch",
+            "write_place",
+            "write_wal",
+            "write_fsync",
+            "write_reply",
+            "read_queue",
+            "read_scan",
+            "read_rerank",
+            "read_gather",
+        ] {
+            for suffix in ["count", "p50_ms", "p99_ms", "le_1ms", "le_10ms", "le_100ms", "le_1s"] {
+                expected.push(format!("stage_{stage}_{suffix}"));
+            }
+        }
+        for tail in ["insert_p50_ms", "insert_p99_ms", "query_p50_ms", "query_p99_ms"] {
+            expected.push(tail.to_string());
+        }
+
+        let actual: Vec<String> = Metrics::new()
+            .snapshot()
+            .into_iter()
+            .map(|(n, _)| n)
+            .collect();
+        assert_eq!(actual, expected, "stats schema drifted");
+        let mut dedup = actual.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), actual.len(), "duplicate stats field name");
+    }
+
+    #[test]
+    fn histogram_snapshots_cover_stages_and_request_latencies() {
+        let m = Metrics::new();
+        m.record_query_latency(0.001);
+        let hists = m.histogram_snapshots();
+        assert_eq!(hists.len(), 12); // 10 stages + insert + query
+        assert!(hists.iter().any(|(n, _)| n == "stage_write_fsync"));
+        let q = hists.iter().find(|(n, _)| n == "query_latency").unwrap();
+        assert_eq!(q.1.total, 1);
     }
 
     #[test]

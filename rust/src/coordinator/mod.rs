@@ -145,6 +145,24 @@
 //! Backpressure: the batcher queue is bounded; when full, submitters block
 //! (TCP reads pause → kernel backpressure to clients).
 //!
+//! Observability ([`crate::obs`]): every serving-path latency lands in
+//! lock-free fixed-memory [`crate::obs::ObsHistogram`] buckets — no
+//! mutex, no allocation on the hot path. One histogram per pipeline
+//! stage ([`crate::obs::Stages`], shared via `Metrics`): the write path
+//! records batcher queue wait → sketch encode → placement → WAL append →
+//! group-commit fsync wait → reply, the read path executor queue wait →
+//! scan/kernel → rerank → gather; each surfaces as `stage_*` stats
+//! fields (count, p50/p99 ms, cumulative `le_*` bucket counts). Requests
+//! carry a per-connection trace id through batcher tickets, and
+//! `--slow-op-ms` emits one structured `slow_op` record with the full
+//! per-stage breakdown when a request crosses the threshold. Raw
+//! `eprintln!` diagnostics are replaced by the leveled text/JSONL event
+//! logger (`--log-level`, `--log-json`; [`crate::obs::log`]), and the
+//! whole metric surface — counters, gauges, histogram bucket families —
+//! is exposed in Prometheus text format by the `metrics_text` wire op
+//! ([`crate::obs::prom`], [`client::Client::metrics_text`], `stats
+//! --prom` on the CLI), on primaries and followers alike.
+//!
 //! Benches: `bench_coordinator` (ingest policies, single + batched query
 //! scatter/gather), `bench_topk` (arena+heap shard scan vs the seed's
 //! `Vec<BitVec>` insertion-sort scan), `bench_router` (executor vs

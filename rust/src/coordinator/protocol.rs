@@ -31,11 +31,13 @@
 //! puller and flips the replica writable, returning the per-shard applied
 //! WAL sequences. Errors: `{"ok":false,"error":"…"}`.
 //!
-//! Two further ops — `repl_snapshot` and `repl_wal_tail` — belong to the
-//! replication sub-protocol: their replies are a JSON header line
-//! followed by *raw binary payload bytes*, which this enum cannot
-//! represent, so the server routes them before request parsing (see
-//! [`crate::replica::shipper`]).
+//! Three further ops are routed *before* request parsing because their
+//! replies are a JSON header line followed by raw payload bytes, which
+//! this enum cannot represent: `repl_snapshot` and `repl_wal_tail`
+//! (replication sub-protocol, see [`crate::replica::shipper`]) and
+//! `metrics_text` (Prometheus text exposition — header
+//! `{"ok":true,"bytes":N}`, then N bytes of `text/plain` metrics; see
+//! [`crate::obs::prom`]).
 //!
 //! Validation happens here, before anything reaches the router: `k == 0`
 //! is rejected with an error response (the seed let it through and the

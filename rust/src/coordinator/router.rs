@@ -43,10 +43,12 @@ use super::metrics::IndexCounters;
 use super::store::{Shard, ShardedStore};
 use super::topk::TopK;
 use crate::coordinator::protocol::Hit;
+use crate::obs::{self, ReadSpan, Stages};
 use crate::sketch::cham::binhamming_from_stats;
 use crate::sketch::{BitVec, SketchMatrix};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Per-query routing options: whether (and from what shard size) to use
 /// the shard LSH indexes, and where to record index traffic. Counters are
@@ -63,6 +65,13 @@ pub struct QueryOpts {
     pub min_rows_for_index: usize,
     /// Index counters to record probe/candidate/fallback traffic into.
     pub counters: Option<Arc<IndexCounters>>,
+    /// Read-path stage histograms (`stage_read_*`): executor queue wait,
+    /// scan/kernel, rerank, gather. `None` (library/bench callers) skips
+    /// all stage timing.
+    pub stages: Option<Arc<Stages>>,
+    /// Per-request critical-path span for slow-op records: each read
+    /// stage keeps its max across the parallel shard jobs. `None` skips.
+    pub span: Option<Arc<ReadSpan>>,
 }
 
 impl QueryOpts {
@@ -71,6 +80,8 @@ impl QueryOpts {
         Self {
             min_rows_for_index: usize::MAX,
             counters: None,
+            stages: None,
+            span: None,
         }
     }
 
@@ -80,7 +91,18 @@ impl QueryOpts {
         Self {
             min_rows_for_index: min_rows,
             counters,
+            stages: None,
+            span: None,
         }
+    }
+
+    /// Attach stage histograms and (optionally) a per-request span —
+    /// the server's serving path sets both; benches set only `stages`
+    /// when measuring instrumentation overhead.
+    pub fn with_observer(mut self, stages: Arc<Stages>, span: Option<Arc<ReadSpan>>) -> Self {
+        self.stages = Some(stages);
+        self.span = span;
+        self
     }
 }
 
@@ -157,6 +179,8 @@ fn rerank_candidates(shard: &Shard, ctx: &ScatterCtx, qi: usize, cands: &[u32]) 
 fn shard_topk_batch(shard: &Shard, ctx: &ScatterCtx) -> Vec<Vec<Hit>> {
     let q = ctx.queries.len();
     let rows = shard.ids.len();
+    let scan_start = Instant::now();
+    let mut rerank_us = 0u64;
     let mut results: Vec<Option<Vec<Hit>>> = (0..q).map(|_| None).collect();
     let mut full_scan: Vec<usize> = Vec::new();
     let opts = &ctx.opts;
@@ -176,7 +200,9 @@ fn shard_topk_batch(shard: &Shard, ctx: &ScatterCtx) -> Vec<Vec<Hit>> {
                         c.indexed_scans.fetch_add(1, Ordering::Relaxed);
                         c.reranked.fetch_add(cands.len() as u64, Ordering::Relaxed);
                     }
+                    let rerank_start = Instant::now();
                     results[qi] = Some(rerank_candidates(shard, ctx, qi, &cands));
+                    rerank_us += obs::elapsed_us(rerank_start);
                 } else {
                     if let Some(c) = opts.counters.as_ref() {
                         c.fallbacks.fetch_add(1, Ordering::Relaxed);
@@ -192,6 +218,25 @@ fn shard_topk_batch(shard: &Shard, ctx: &ScatterCtx) -> Vec<Vec<Hit>> {
         blocked_full_scan(shard, ctx, &full_scan, &mut heaps);
         for (&qi, heap) in full_scan.iter().zip(heaps) {
             results[qi] = Some(heap.into_sorted_hits());
+        }
+    }
+    // Stage accounting, once per shard job: scan = this shard visit minus
+    // its rerank time; rerank recorded only when an indexed rerank ran
+    // (so the rerank histogram is not poisoned with zeros from full-scan
+    // shards).
+    if opts.stages.is_some() || opts.span.is_some() {
+        let scan_us = obs::elapsed_us(scan_start).saturating_sub(rerank_us);
+        if let Some(st) = opts.stages.as_ref() {
+            st.read_scan.record_us(scan_us);
+            if rerank_us > 0 {
+                st.read_rerank.record_us(rerank_us);
+            }
+        }
+        if let Some(span) = opts.span.as_ref() {
+            span.note_scan(scan_us);
+            if rerank_us > 0 {
+                span.note_rerank(rerank_us);
+            }
         }
     }
     results
@@ -262,9 +307,24 @@ pub fn topk_batch_with(
     // per_shard[s][q] = shard s's top-k for query q
     let mut per_shard: Vec<Vec<Vec<Hit>>> = store.scatter_gather(|_si| {
         let ctx = Arc::clone(&ctx);
-        Box::new(move |shard: &Shard| shard_topk_batch(shard, &ctx))
+        // Queue wait = submit-to-start gap on the shard worker's bounded
+        // queue; measured per shard job, first thing the job does.
+        let submitted = Instant::now();
+        Box::new(move |shard: &Shard| {
+            if ctx.opts.stages.is_some() || ctx.opts.span.is_some() {
+                let queue_us = obs::elapsed_us(submitted);
+                if let Some(st) = ctx.opts.stages.as_ref() {
+                    st.read_queue.record_us(queue_us);
+                }
+                if let Some(span) = ctx.opts.span.as_ref() {
+                    span.note_queue(queue_us);
+                }
+            }
+            shard_topk_batch(shard, &ctx)
+        })
     });
-    (0..queries.len())
+    let gather_start = Instant::now();
+    let merged = (0..queries.len())
         .map(|qi| {
             // move each shard's partial out rather than cloning it
             merge(
@@ -275,7 +335,17 @@ pub fn topk_batch_with(
                 k,
             )
         })
-        .collect()
+        .collect();
+    if opts.stages.is_some() || opts.span.is_some() {
+        let gather_us = obs::elapsed_us(gather_start);
+        if let Some(st) = opts.stages.as_ref() {
+            st.read_gather.record_us(gather_us);
+        }
+        if let Some(span) = opts.span.as_ref() {
+            span.note_gather(gather_us);
+        }
+    }
+    merged
 }
 
 /// Estimated distance between two stored points — O(1) id resolution via
@@ -413,6 +483,33 @@ mod tests {
             let single = topk(&store, q, 4);
             assert_eq!(&single, batch_hits);
         }
+    }
+
+    #[test]
+    fn observer_records_read_stages_and_span() {
+        let mut rng = Xoshiro256::new(9);
+        let d = 128;
+        let pts: Vec<BitVec> = (0..24)
+            .map(|_| BitVec::from_indices(d, rng.sample_indices(d, 20)))
+            .collect();
+        let store = store_with(&pts);
+        let stages = Arc::new(Stages::new());
+        let span = Arc::new(ReadSpan::default());
+        let opts =
+            QueryOpts::full_scan().with_observer(Arc::clone(&stages), Some(Arc::clone(&span)));
+        let plain = topk_batch(&store, &pts[..3], 4);
+        let observed = topk_batch_with(&store, &pts[..3], 4, &opts);
+        assert_eq!(plain, observed, "observation must not change results");
+        // one queue-wait and one scan sample per shard job, one gather per
+        // request; rerank never ran (full scan)
+        let shards = store.num_shards() as u64;
+        assert_eq!(stages.read_queue.count(), shards);
+        assert_eq!(stages.read_scan.count(), shards);
+        assert_eq!(stages.read_rerank.count(), 0);
+        assert_eq!(stages.read_gather.count(), 1);
+        // the span kept the worst per-stage time for the slow-op record
+        assert!(span.ms(&span.scan_us) >= 0.0);
+        assert_eq!(span.ms(&span.rerank_us), 0.0);
     }
 
     #[test]

@@ -1,5 +1,17 @@
 //! The coordinator service: TCP accept loop, per-connection threads,
 //! request dispatch to batcher/router/store.
+//!
+//! Observability: `serve` initialises the leveled logger
+//! (`--log-level`, `--log-json`) and the global slow-op threshold
+//! (`--slow-op-ms`) once at startup, attaches the shared
+//! [`crate::obs::Stages`] histograms to the store, and stamps every
+//! connection's requests with a trace id (`conn * 1e6 + seq`) that rides
+//! batcher tickets so slow-op records correlate across threads. Queries
+//! additionally carry a per-request [`crate::obs::ReadSpan`] whose
+//! critical-path breakdown lands in the `server/slow_op` record. The
+//! `metrics_text` wire op (Prometheus text format) is routed before
+//! request parsing, like the replication sub-protocol, because its reply
+//! is a header line + raw payload.
 
 use super::batcher::{Batcher, BatcherConfig, SketchBackend};
 use super::executor::ExecutorConfig;
@@ -8,17 +20,17 @@ use super::protocol::{Request, Response};
 use super::router;
 use super::store::ShardedStore;
 use crate::index::IndexConfig;
+use crate::obs::{self, log as obs_log, ReadSpan};
 use crate::persist::{Fingerprint, PersistConfig};
 use crate::replica::{self, ReplicaConfig, ReplicaRuntime};
 use crate::runtime::XlaHandle;
 use crate::sketch::{CabinSketcher, SketchConfig};
-use crate::util::timer::Stopwatch;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -58,6 +70,14 @@ pub struct CoordinatorConfig {
     /// expiry granularity. Unpromoted replicas never sweep — they mirror
     /// the primary's sweep deletions from the shipped log.
     pub ttl_sweep_ms: u64,
+    /// Minimum level for structured log events (`--log-level`:
+    /// debug / info / warn / error).
+    pub log_level: String,
+    /// Emit log events as JSONL instead of human text (`--log-json`).
+    pub log_json: bool,
+    /// Emit one structured `slow_op` record with a per-stage breakdown
+    /// for any request slower than this (`--slow-op-ms`, 0 = off).
+    pub slow_op_ms: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -77,6 +97,9 @@ impl Default for CoordinatorConfig {
             replicate_from: None,
             repl_poll_ms: 2,
             ttl_sweep_ms: 1_000,
+            log_level: "info".into(),
+            log_json: false,
+            slow_op_ms: 0,
         }
     }
 }
@@ -104,6 +127,8 @@ pub struct Coordinator {
     /// promotion and owns the puller thread. `None` on a primary.
     replica: Option<Arc<ReplicaRuntime>>,
     shutdown: Arc<AtomicBool>,
+    /// Connection counter backing the per-request trace ids.
+    next_conn: AtomicU64,
 }
 
 impl Coordinator {
@@ -131,6 +156,13 @@ impl Coordinator {
                 config.persist.mode
             );
         }
+        // Observability first, so everything below (bootstrap, recovery)
+        // already logs through the leveled logger.
+        obs_log::init(
+            obs_log::Level::parse(&config.log_level).unwrap_or(obs_log::Level::Info),
+            config.log_json,
+        );
+        obs::set_slow_op_ms(config.slow_op_ms);
         // Pin the index knobs to what the shards will actually build
         // (band_bits clamps to min(64, sketch_dim), bands to ≥ 1), so the
         // `index_cfg_*` stats fields always describe the live indexes.
@@ -163,7 +195,11 @@ impl Coordinator {
             let dir = config.persist.data_dir.clone().expect("enabled() implies data_dir");
             let boot = replica::bootstrap(primary, &fingerprint, &dir)
                 .with_context(|| format!("bootstrapping replica from {primary}"))?;
-            eprintln!("[coordinator] replica bootstrap: {}", boot.describe());
+            obs_log::info(
+                "coordinator",
+                "replica_bootstrap",
+                &[("detail", obs_log::V::s(boot.describe()))],
+            );
         }
         let store = if config.persist.enabled() {
             let (store, report) = ShardedStore::open_durable(
@@ -173,15 +209,17 @@ impl Coordinator {
                 metrics.persist.clone(),
                 &exec,
             )?;
-            eprintln!(
-                "[coordinator] recovered {} sketches (generation {}, {} snapshot rows + {} \
-                 WAL records, {} torn tail(s) dropped) in {} ms",
-                store.len(),
-                report.generation,
-                report.snapshot_rows,
-                report.replayed_records,
-                report.truncated_tails,
-                report.recovery_ms
+            obs_log::info(
+                "coordinator",
+                "recovered",
+                &[
+                    ("sketches", obs_log::V::u(store.len() as u64)),
+                    ("generation", obs_log::V::u(report.generation)),
+                    ("snapshot_rows", obs_log::V::u(report.snapshot_rows as u64)),
+                    ("wal_records", obs_log::V::u(report.replayed_records as u64)),
+                    ("torn_tails", obs_log::V::u(report.truncated_tails as u64)),
+                    ("recovery_ms", obs_log::V::u(report.recovery_ms)),
+                ],
             );
             Arc::new(store)
         } else {
@@ -193,6 +231,9 @@ impl Coordinator {
                 &exec,
             ))
         };
+        // the store records write_place/write_wal/write_fsync into the
+        // same stage histograms the batcher and router use
+        store.attach_stages(metrics.stages.clone());
         let sk_cfg = SketchConfig::new(
             config.input_dim,
             config.num_categories,
@@ -208,7 +249,7 @@ impl Coordinator {
                         && handle.manifest.d == config.sketch_dim
                         && handle.manifest.seed == config.seed =>
                 {
-                    eprintln!("[coordinator] XLA backend active");
+                    obs_log::info("coordinator", "xla_backend_active", &[]);
                     // π from the sidecar so native fallback is bit-identical
                     let native_xla = handle
                         .native_equivalent()
@@ -216,9 +257,14 @@ impl Coordinator {
                     SketchBackend::Xla(handle, native_xla)
                 }
                 Some(handle) => {
-                    eprintln!(
-                        "[coordinator] artifacts present but config mismatch (artifact n={} d={} seed={}), using native",
-                        handle.manifest.n, handle.manifest.d, handle.manifest.seed
+                    obs_log::warn(
+                        "coordinator",
+                        "xla_config_mismatch",
+                        &[
+                            ("artifact_n", obs_log::V::u(handle.manifest.n as u64)),
+                            ("artifact_d", obs_log::V::u(handle.manifest.d as u64)),
+                            ("artifact_seed", obs_log::V::u(handle.manifest.seed)),
+                        ],
                     );
                     SketchBackend::Native(native.clone())
                 }
@@ -250,6 +296,7 @@ impl Coordinator {
             sketcher,
             replica,
             shutdown: Arc::new(AtomicBool::new(false)),
+            next_conn: AtomicU64::new(0),
         })
     }
 
@@ -280,8 +327,17 @@ impl Coordinator {
         })
     }
 
-    /// Dispatch one request (thread-safe).
+    /// Dispatch one request (thread-safe). Untraced — in-process callers
+    /// (tests, examples, benches) get trace id 0, meaning "no trace".
     pub fn handle_request(&self, req: Request) -> Response {
+        self.handle_request_traced(req, 0)
+    }
+
+    /// Dispatch one request carrying a trace id. The id rides batcher
+    /// tickets (write path) and tags slow-op records (both paths), so a
+    /// slow request's per-stage breakdown can be correlated with its
+    /// connection.
+    pub fn handle_request_traced(&self, req: Request, trace: u64) -> Response {
         match req {
             Request::Ping => Response::Pong,
             Request::Shutdown => {
@@ -290,7 +346,11 @@ impl Coordinator {
                 // drains its own queue on coordinator drop)
                 if self.store.persistence().is_some() {
                     if let Err(e) = self.store.persist_flush() {
-                        eprintln!("[coordinator] shutdown flush failed: {e:#}");
+                        obs_log::error(
+                            "coordinator",
+                            "shutdown_flush_failed",
+                            &[("error", obs_log::V::s(format!("{e:#}")))],
+                        );
                     }
                 }
                 self.shutdown.store(true, Ordering::SeqCst);
@@ -318,13 +378,9 @@ impl Coordinator {
                 if let Some(resp) = self.write_gate() {
                     return resp;
                 }
-                let sw = Stopwatch::start();
                 self.metrics.inserts.fetch_add(1, Ordering::Relaxed);
-                match self.batcher.submitter.insert(vec) {
-                    Ok(id) => {
-                        let _ = sw;
-                        Response::Inserted { id }
-                    }
+                match self.batcher.submitter.insert_traced(vec, trace) {
+                    Ok(id) => Response::Inserted { id },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
                         Response::Error {
@@ -342,7 +398,11 @@ impl Coordinator {
                 // here, once, on the primary — the WAL and every replica
                 // carry the deadline, not the TTL
                 let deadline = now_ms().saturating_add(ttl_ms);
-                match self.batcher.submitter.insert_with_deadline(vec, deadline) {
+                match self
+                    .batcher
+                    .submitter
+                    .insert_with_deadline_traced(vec, deadline, trace)
+                {
                     Ok(id) => Response::Inserted { id },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -357,7 +417,7 @@ impl Coordinator {
                     return resp;
                 }
                 self.metrics.deletes.fetch_add(1, Ordering::Relaxed);
-                match self.batcher.submitter.delete(id) {
+                match self.batcher.submitter.delete_traced(id, trace) {
                     Ok(id) => Response::Deleted { id },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -376,7 +436,7 @@ impl Coordinator {
                     0 => 0, // no expiry (clears any previous deadline)
                     t => now_ms().saturating_add(t),
                 };
-                match self.batcher.submitter.upsert(id, vec, deadline) {
+                match self.batcher.submitter.upsert_traced(id, vec, deadline, trace) {
                     Ok(id) => Response::Upserted { id },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -387,23 +447,34 @@ impl Coordinator {
                 }
             }
             Request::Query { vec, k } => {
-                let sw = Stopwatch::start();
+                let start = Instant::now();
                 self.metrics.queries.fetch_add(1, Ordering::Relaxed);
+                let span = Arc::new(ReadSpan::default());
+                let opts = self
+                    .query_opts()
+                    .with_observer(self.metrics.stages.clone(), Some(Arc::clone(&span)));
                 let q = self.sketcher.sketch(&vec);
-                let hits = router::topk_with(&self.store, &q, k, &self.query_opts());
-                self.metrics.record_query_latency(sw.elapsed_secs());
+                let hits = router::topk_with(&self.store, &q, k, &opts);
+                let total = start.elapsed().as_secs_f64();
+                self.metrics.record_query_latency(total);
+                self.note_slow_read("query", trace, k, total, &span);
                 Response::Hits { hits }
             }
             Request::QueryBatch { vecs, k } => {
-                let sw = Stopwatch::start();
+                let start = Instant::now();
                 let n = vecs.len();
                 self.metrics.queries.fetch_add(n as u64, Ordering::Relaxed);
                 self.metrics.query_batches.fetch_add(1, Ordering::Relaxed);
+                let span = Arc::new(ReadSpan::default());
+                let opts = self
+                    .query_opts()
+                    .with_observer(self.metrics.stages.clone(), Some(Arc::clone(&span)));
                 let qs: Vec<_> = vecs.iter().map(|v| self.sketcher.sketch(v)).collect();
-                let results = router::topk_batch_with(&self.store, &qs, k, &self.query_opts());
+                let results = router::topk_batch_with(&self.store, &qs, k, &opts);
+                let total = start.elapsed().as_secs_f64();
                 // per-query latency, so single and batched queries compare
-                self.metrics
-                    .record_query_latency(sw.elapsed_secs() / n.max(1) as f64);
+                self.metrics.record_query_latency(total / n.max(1) as f64);
+                self.note_slow_read("query_batch", trace, k, total, &span);
                 Response::HitsBatch { results }
             }
             Request::Distance { a, b } => {
@@ -441,8 +512,10 @@ impl Coordinator {
             Request::Promote => match &self.replica {
                 Some(r) => match r.promote() {
                     Ok(applied_seqs) => {
-                        eprintln!(
-                            "[coordinator] promoted to writable at applied seqs {applied_seqs:?}"
+                        obs_log::info(
+                            "coordinator",
+                            "promoted",
+                            &[("applied_seqs", obs_log::V::s(format!("{applied_seqs:?}")))],
                         );
                         Response::Promoted { applied_seqs }
                     }
@@ -462,34 +535,65 @@ impl Coordinator {
                     }
                 }
             },
-            Request::Stats => {
-                // traffic counters plus the (read-only) index and
-                // persistence configuration
-                let mut fields = self.metrics.snapshot();
-                fields.extend(self.config.index.stats_fields());
-                fields.extend(self.config.persist.stats_fields());
-                if let Some(p) = self.store.persistence() {
-                    // live gauges that only the persistence handle knows:
-                    // the size-trigger/operator WAL gauge, and per-shard
-                    // durable seq horizons — the same field a follower
-                    // reports, so "caught up" is one comparison
-                    fields.push(("persist_wal_live_bytes".into(), p.wal_live_bytes() as f64));
-                    for si in 0..self.store.num_shards() {
-                        fields.push((
-                            format!("persist_next_seq_shard{si}"),
-                            p.committed_seq(si) as f64,
-                        ));
-                    }
-                }
-                let role = match &self.replica {
-                    None => 0.0,
-                    Some(r) if !r.is_writable() => 1.0,
-                    Some(_) => 2.0, // promoted
-                };
-                fields.push(("repl_role".into(), role));
-                Response::Stats { fields }
+            Request::Stats => Response::Stats {
+                fields: self.stats_fields(),
+            },
+        }
+    }
+
+    /// The full flat stats field set: traffic counters, stage histogram
+    /// summaries, the (read-only) index and persistence configuration,
+    /// live persistence gauges, and the replica role. Backs both the
+    /// `stats` response and the Prometheus `metrics_text` exposition.
+    fn stats_fields(&self) -> Vec<(String, f64)> {
+        let mut fields = self.metrics.snapshot();
+        fields.extend(self.config.index.stats_fields());
+        fields.extend(self.config.persist.stats_fields());
+        if let Some(p) = self.store.persistence() {
+            // live gauges that only the persistence handle knows:
+            // the size-trigger/operator WAL gauge, and per-shard
+            // durable seq horizons — the same field a follower
+            // reports, so "caught up" is one comparison
+            fields.push(("persist_wal_live_bytes".into(), p.wal_live_bytes() as f64));
+            for si in 0..self.store.num_shards() {
+                fields.push((
+                    format!("persist_next_seq_shard{si}"),
+                    p.committed_seq(si) as f64,
+                ));
             }
         }
+        let role = match &self.replica {
+            None => 0.0,
+            Some(r) if !r.is_writable() => 1.0,
+            Some(_) => 2.0, // promoted
+        };
+        fields.push(("repl_role".into(), role));
+        fields
+    }
+
+    /// Emit one structured slow-op record for a read request that crossed
+    /// `--slow-op-ms`, with the span's critical-path per-stage breakdown
+    /// (max across the parallel shard jobs, the time that actually
+    /// bounded the request).
+    fn note_slow_read(&self, op: &str, trace: u64, k: usize, total_s: f64, span: &ReadSpan) {
+        let threshold = obs::slow_op_us();
+        if threshold == 0 || total_s * 1e6 < threshold as f64 {
+            return;
+        }
+        obs_log::warn(
+            "server",
+            "slow_op",
+            &[
+                ("op", obs_log::V::s(op)),
+                ("trace", obs_log::V::u(trace)),
+                ("k", obs_log::V::u(k as u64)),
+                ("total_ms", obs_log::V::f(total_s * 1e3)),
+                ("queue_ms", obs_log::V::f(span.ms(&span.queue_us))),
+                ("scan_ms", obs_log::V::f(span.ms(&span.scan_us))),
+                ("rerank_ms", obs_log::V::f(span.ms(&span.rerank_us))),
+                ("gather_ms", obs_log::V::f(span.ms(&span.gather_us))),
+            ],
+        );
     }
 
     pub fn is_shutdown(&self) -> bool {
@@ -547,7 +651,11 @@ impl Coordinator {
                     std::thread::sleep(std::time::Duration::from_millis(5));
                 }
                 Err(e) => {
-                    eprintln!("[coordinator] accept error: {e}");
+                    obs_log::error(
+                        "coordinator",
+                        "accept_error",
+                        &[("error", obs_log::V::s(format!("{e}")))],
+                    );
                     break;
                 }
             }
@@ -562,7 +670,11 @@ impl Coordinator {
         // connection work may have appended since
         if self.store.persistence().is_some() {
             if let Err(e) = self.store.persist_flush() {
-                eprintln!("[coordinator] final flush failed: {e:#}");
+                obs_log::error(
+                    "coordinator",
+                    "final_flush_failed",
+                    &[("error", obs_log::V::s(format!("{e:#}")))],
+                );
             }
         }
         Ok(())
@@ -573,6 +685,10 @@ impl Coordinator {
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut writer = stream;
         let mut line = String::new();
+        // trace id: connection number in the millions digit, request
+        // sequence below — unique per request, cheap to correlate by eye
+        let conn = self.next_conn.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut req_seq: u64 = 0;
         loop {
             line.clear();
             let n = reader.read_line(&mut line)?;
@@ -592,10 +708,17 @@ impl Coordinator {
             {
                 continue;
             }
+            // metrics_text (Prometheus exposition) replies the same way:
+            // a JSON header line, then raw payload bytes.
+            if self.try_handle_metrics_text(trimmed, &mut writer)? {
+                continue;
+            }
+            req_seq += 1;
+            let trace = conn.saturating_mul(1_000_000).saturating_add(req_seq);
             let resp = match Request::from_json_line(trimmed, self.config.input_dim) {
                 Ok(req) => {
                     let is_shutdown = matches!(req, Request::Shutdown);
-                    let r = self.handle_request(req);
+                    let r = self.handle_request_traced(req, trace);
                     if is_shutdown {
                         writeln!(writer, "{}", r.to_json_line())?;
                         return Ok(());
@@ -611,6 +734,34 @@ impl Coordinator {
             };
             writeln!(writer, "{}", resp.to_json_line())?;
         }
+    }
+
+    /// Route a `metrics_text` request: Prometheus text exposition of every
+    /// stats field plus full histogram bucket families. Replies with a
+    /// `{"ok":true,"bytes":N}` header line followed by N raw payload
+    /// bytes, mirroring the replication sub-protocol's framing (the text
+    /// body cannot ride the line-JSON `Response` enum). Served by
+    /// primaries and followers alike — scraping must not depend on role.
+    fn try_handle_metrics_text<W: Write>(&self, line: &str, writer: &mut W) -> Result<bool> {
+        // cheap pre-filter before the JSON parse, like the repl ops
+        if !line.contains("\"metrics_text\"") {
+            return Ok(false);
+        }
+        let Ok(obj) = crate::util::json::parse(line) else {
+            return Ok(false); // malformed JSON: let the normal path report it
+        };
+        if obj.get("op").and_then(|o| o.as_str()) != Some("metrics_text") {
+            return Ok(false);
+        }
+        let body = obs::prom::render(&self.stats_fields(), &self.metrics.histogram_snapshots());
+        let header = crate::util::json::Json::obj(vec![
+            ("ok", crate::util::json::Json::Bool(true)),
+            ("bytes", crate::util::json::Json::Num(body.len() as f64)),
+        ]);
+        writeln!(writer, "{header}")?;
+        writer.write_all(body.as_bytes())?;
+        writer.flush()?;
+        Ok(true)
     }
 }
 
@@ -864,6 +1015,42 @@ mod tests {
             m.indexed_scans.load(Relaxed) + m.fallbacks.load(Relaxed),
             5 * c.store.num_shards() as u64
         );
+    }
+
+    #[test]
+    fn metrics_text_routes_pre_parse_and_frames_header_plus_payload() {
+        let c = Coordinator::new(test_config());
+        let mut rng = Xoshiro256::new(13);
+        for _ in 0..4 {
+            c.handle_request(Request::Insert {
+                vec: CatVector::random(600, 40, 10, &mut rng),
+            });
+        }
+        c.handle_request(Request::Query {
+            vec: CatVector::random(600, 40, 10, &mut rng),
+            k: 2,
+        });
+        // non-matching lines fall through to the ordinary request path
+        let mut out = Vec::new();
+        assert!(!c
+            .try_handle_metrics_text(r#"{"op":"ping"}"#, &mut out)
+            .unwrap());
+        assert!(out.is_empty());
+        // a metrics_text line answers header + exactly `bytes` of payload
+        let mut out = Vec::new();
+        assert!(c
+            .try_handle_metrics_text(r#"{"op":"metrics_text"}"#, &mut out)
+            .unwrap());
+        let text = String::from_utf8(out).unwrap();
+        let (header, body) = text.split_once('\n').unwrap();
+        let h = crate::util::json::parse(header).unwrap();
+        assert_eq!(h.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(h.req_usize("bytes").unwrap(), body.len());
+        // the exposition carries counters, stage histograms, and gauges
+        assert!(body.contains("# TYPE cabin_inserts_total counter"), "{body}");
+        assert!(body.contains("cabin_stage_read_scan_seconds_bucket"), "{body}");
+        assert!(body.contains("cabin_query_latency_seconds_count"), "{body}");
+        assert!(body.contains("le=\"+Inf\""), "{body}");
     }
 
     #[test]

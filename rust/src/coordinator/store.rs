@@ -86,13 +86,15 @@
 
 use super::executor::{ExecutorConfig, ShardExecutor};
 use crate::index::{IndexConfig, LshIndex};
+use crate::obs::{self, log as obs_log, Stages};
 use crate::persist::wal::WalRecord;
 use crate::persist::{Fingerprint, PersistConfig, PersistCounters, Persistence, RecoveryReport};
 use crate::sketch::bitvec::{and_count_words, popcount_words};
 use crate::sketch::{BitVec, SketchMatrix};
 use anyhow::Context;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, OnceLock, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Instant;
 
 /// `(shard, row)` index entry; `VACANT` marks an id whose batch is still
 /// being placed (visible only to concurrent readers mid-insert), or whose
@@ -146,6 +148,11 @@ pub struct ShardedStore {
     persist: Option<Persistence>,
     /// Persistent per-shard scan workers; all serving scatters run here.
     executor: ShardExecutor,
+    /// Write-path stage histograms (placement / WAL / fsync-wait),
+    /// attached once by the server after `Metrics` exists. Unset (bench
+    /// and library callers) means stage timing is compiled out of the
+    /// path save for one pointer load.
+    stage_obs: OnceLock<Arc<Stages>>,
 }
 
 /// The durability half of a split insert: produced by
@@ -278,6 +285,7 @@ impl ShardedStore {
             move_id: AtomicU64::new(1),
             persist: None,
             executor,
+            stage_obs: OnceLock::new(),
         }
     }
 
@@ -342,9 +350,23 @@ impl ShardedStore {
                 move_id: AtomicU64::new(report.max_move_id + 1),
                 persist: Some(persistence),
                 executor,
+                stage_obs: OnceLock::new(),
             },
             report,
         ))
+    }
+
+    /// Attach the per-stage histogram set (idempotent — first caller
+    /// wins). The server calls this right after building `Metrics`, so
+    /// the placement / WAL / fsync-wait stages of every write land in
+    /// the same `Stages` the batcher and router record into.
+    pub fn attach_stages(&self, stages: Arc<Stages>) {
+        let _ = self.stage_obs.set(stages);
+    }
+
+    #[inline]
+    fn stages(&self) -> Option<&Arc<Stages>> {
+        self.stage_obs.get()
     }
 
     /// The persistence handle, when this store is durable.
@@ -383,7 +405,14 @@ impl ShardedStore {
     pub fn insert_batch(&self, sketches: Vec<BitVec>) -> Vec<usize> {
         let (ids, commit_err) = self.insert_batch_inner(sketches);
         if let Some(e) = commit_err {
-            eprintln!("[persist] WAL commit failed (rows are in memory but NOT durable): {e:#}");
+            obs_log::error(
+                "store",
+                "wal_commit_failed",
+                &[
+                    ("detail", obs_log::V::s("rows are in memory but NOT durable")),
+                    ("error", obs_log::V::s(format!("{e:#}"))),
+                ],
+            );
         }
         ids
     }
@@ -459,6 +488,7 @@ impl ShardedStore {
         // after the commit.
         // (Readers can observe rows whose batch is not yet committed —
         // read-uncommitted for queries, commit-before-ack for writers.)
+        let place_start = Instant::now();
         let mut wal = {
             let mut index = write_l(&self.index);
             if index.len() < start + k {
@@ -488,6 +518,10 @@ impl ShardedStore {
             }
             wal
         };
+        if let Some(st) = self.stages() {
+            st.write_place.record_us(obs::elapsed_us(place_start));
+        }
+        let wal_start = Instant::now();
         let mut ticket = InsertTicket {
             target,
             records: k as u64,
@@ -517,6 +551,9 @@ impl ShardedStore {
         } else {
             drop(wal);
         }
+        if let Some(st) = self.stages() {
+            st.write_wal.record_us(obs::elapsed_us(wal_start));
+        }
         (ids, ticket)
     }
 
@@ -540,10 +577,14 @@ impl ShardedStore {
         let mut commit_err = sync_err;
         if let Some(p) = &self.persist {
             if let Some(epoch) = window_epoch {
+                let fsync_start = Instant::now();
                 commit_err = p
                     .group_commit_wait_epoch(target, epoch)
                     .err()
                     .map(|msg| anyhow::anyhow!("group commit for shard {target}: {msg}"));
+                if let Some(st) = self.stages() {
+                    st.write_fsync.record_us(obs::elapsed_us(fsync_start));
+                }
             }
             p.note_appended(records, wal_bytes);
             self.maybe_auto_snapshot();
@@ -570,6 +611,7 @@ impl ShardedStore {
         let mut touched: Vec<usize> = Vec::new();
         let mut records = 0u64;
         let mut wal_bytes = 0u64;
+        let place_start = Instant::now();
         for op in ops {
             let outcome = match op {
                 MutationOp::Insert { sketch, deadline } => {
@@ -607,6 +649,10 @@ impl ShardedStore {
             }
         }
         touched.sort_unstable();
+        if let Some(st) = self.stages() {
+            st.write_place.record_us(obs::elapsed_us(place_start));
+        }
+        let wal_start = Instant::now();
         let mut ticket = MutationTicket {
             windows: Vec::new(),
             records,
@@ -632,6 +678,9 @@ impl ShardedStore {
                         }
                     }
                 }
+                if let Some(st) = self.stages() {
+                    st.write_wal.record_us(obs::elapsed_us(wal_start));
+                }
             }
         }
         (results, ticket)
@@ -654,12 +703,18 @@ impl ShardedStore {
         }
         let mut commit_err = sync_err;
         if let Some(p) = &self.persist {
-            for (shard, epoch) in windows {
-                if let Err(msg) = p.group_commit_wait_epoch(shard, epoch) {
-                    if commit_err.is_none() {
-                        commit_err =
-                            Some(anyhow::anyhow!("group commit for shard {shard}: {msg}"));
+            if !windows.is_empty() {
+                let fsync_start = Instant::now();
+                for (shard, epoch) in windows {
+                    if let Err(msg) = p.group_commit_wait_epoch(shard, epoch) {
+                        if commit_err.is_none() {
+                            commit_err =
+                                Some(anyhow::anyhow!("group commit for shard {shard}: {msg}"));
+                        }
                     }
+                }
+                if let Some(st) = self.stages() {
+                    st.write_fsync.record_us(obs::elapsed_us(fsync_start));
                 }
             }
             p.note_appended(records, wal_bytes);
@@ -739,9 +794,19 @@ impl ShardedStore {
         }
         if records > 0 {
             if let Some(e) = self.commit_shards(&touched) {
-                eprintln!(
-                    "[persist] TTL sweep WAL commit failed (rows removed in memory; \
-                     the frames stay pending and retry with the next commit): {e:#}"
+                obs_log::warn(
+                    "store",
+                    "ttl_sweep_commit_failed",
+                    &[
+                        (
+                            "detail",
+                            obs_log::V::s(
+                                "rows removed in memory; frames stay pending and retry \
+                                 with the next commit",
+                            ),
+                        ),
+                        ("error", obs_log::V::s(format!("{e:#}"))),
+                    ],
                 );
             }
             if let Some(p) = &self.persist {
@@ -1332,9 +1397,18 @@ impl ShardedStore {
         if let Some(p) = &self.persist {
             if p.try_claim_auto_snapshot() {
                 if let Err(e) = self.persist_snapshot() {
-                    eprintln!(
-                        "[persist] auto-snapshot failed (retrying after the next interval, \
-                         WAL-only until then): {e:#}"
+                    obs_log::warn(
+                        "store",
+                        "auto_snapshot_failed",
+                        &[
+                            (
+                                "detail",
+                                obs_log::V::s(
+                                    "retrying after the next interval, WAL-only until then",
+                                ),
+                            ),
+                            ("error", obs_log::V::s(format!("{e:#}"))),
+                        ],
                     );
                 }
             }
@@ -1446,17 +1520,30 @@ impl ShardedStore {
                 match dst_w.commit() {
                     Ok(()) => {
                         if let Err(e) = src_w.commit() {
-                            eprintln!("[persist] rebalance source WAL commit failed: {e}");
+                            obs_log::error(
+                                "store",
+                                "rebalance_src_commit_failed",
+                                &[("error", obs_log::V::s(format!("{e}")))],
+                            );
                         }
                     }
                     Err(e) => {
                         if let Some(mark) = src_mark {
                             src_w.rewind_pending_to(mark);
                         }
-                        eprintln!(
-                            "[persist] rebalance destination WAL commit failed \
-                             (paired move-outs discarded; rows recover as duplicates \
-                             at worst): {e}"
+                        obs_log::error(
+                            "store",
+                            "rebalance_dst_commit_failed",
+                            &[
+                                (
+                                    "detail",
+                                    obs_log::V::s(
+                                        "paired move-outs discarded; rows recover as \
+                                         duplicates at worst",
+                                    ),
+                                ),
+                                ("error", obs_log::V::s(format!("{e}"))),
+                            ],
                         );
                     }
                 }

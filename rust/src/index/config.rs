@@ -94,7 +94,15 @@ impl IndexConfig {
     /// server binary and the examples cannot drift in `--index` handling.
     pub fn mode_from_str_or_warn(s: &str, context: &str) -> IndexMode {
         Self::mode_from_str(s).unwrap_or_else(|| {
-            eprintln!("[{context}] unknown --index '{s}' (want auto|on|off), using auto");
+            crate::obs::log::warn(
+                context,
+                "unknown_index_mode",
+                &[
+                    ("value", crate::obs::log::V::s(s)),
+                    ("want", crate::obs::log::V::s("auto|on|off")),
+                    ("using", crate::obs::log::V::s("auto")),
+                ],
+            );
             IndexMode::Auto
         })
     }

@@ -43,6 +43,25 @@
 //! the primary dies, losing nothing the primary had acked and shipped;
 //! promotion also adopts the primary-side TTL-sweep duty).
 //!
+//! ## Observability
+//!
+//! The serving runtime is instrumented end to end by [`obs`]: latency
+//! is recorded into lock-free log-linear atomic-bucket histograms
+//! ([`obs::ObsHistogram`] — fixed memory, mergeable, exact bucket
+//! counts, p50/p95/p99/p999), one per pipeline stage
+//! ([`obs::Stages`]: write path batcher-queue → sketch → placement →
+//! WAL → fsync-wait → reply; read path executor-queue → scan → rerank
+//! → gather), surfaced as `stage_*` fields in `stats` and as native
+//! histogram families in the Prometheus text exposition
+//! ([`obs::prom`], wire op `metrics_text`, CLI `stats --prom`) served
+//! by primaries and followers alike. A per-connection trace id flows
+//! through batcher tickets and executor jobs so requests breaching
+//! `--slow-op-ms` emit one structured slow-op record with the full
+//! per-stage breakdown via the leveled text/JSONL event logger
+//! ([`obs::log`], `--log-level`/`--log-json`). The former
+//! `Mutex<Vec<f64>>` sampler ([`util::timer::LatencyStats`]) survives
+//! only in offline bench summaries, reservoir-capped.
+//!
 //! ## Architecture (three layers)
 //!
 //! * **L3** (this crate): coordinator + native library. See [`coordinator`],
@@ -78,6 +97,7 @@ pub mod coordinator;
 pub mod data;
 pub mod index;
 pub mod linalg;
+pub mod obs;
 pub mod persist;
 pub mod replica;
 pub mod repro;

@@ -13,6 +13,8 @@
 //!                      [--commit-window-us 1000] [--wal-max-bytes 0]
 //!                      [--compact-dead-frames 0] [--ttl-sweep-ms 1000]
 //!                      [--replicate-from HOST:PORT] [--repl-poll-ms 2]
+//!                      [--log-level info] [--log-json] [--slow-op-ms 0]
+//! cabin-sketch stats   [--addr 127.0.0.1:7878] [--prom]
 //! cabin-sketch sketch  --input docword.txt [--sketch-dim 1000] [--out sketches.bin]
 //! cabin-sketch repro   <table1|table3|table4|fig2..fig12|ablation-*|all> [options]
 //! cabin-sketch info    # artifact + environment report
@@ -32,6 +34,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "serve" => cmd_serve(&args),
+        "stats" => cmd_stats(&args),
         "sketch" => cmd_sketch(&args),
         "repro" => cmd_repro(&args),
         "info" => cmd_info(&args),
@@ -61,6 +64,10 @@ fn print_help() {
            serve    run the sketch service (TCP line-JSON protocol); the\n\
                     corpus is mutable — insert, delete, upsert and per-row\n\
                     TTL are first-class, durable, replicated operations\n\
+           stats    fetch a running server's stats (--addr HOST:PORT);\n\
+                    --prom prints the Prometheus text exposition instead\n\
+                    (the metrics_text wire op: counters, gauges, and full\n\
+                    per-stage latency histogram bucket families)\n\
            sketch   one-shot: sketch a UCI docword file to packed binary\n\
            repro    regenerate a paper table/figure (see DESIGN.md §4)\n\
            info     report artifacts, backend and configuration\n\
@@ -106,7 +113,18 @@ fn print_help() {
                     match the primary's.\n\
                     The `promote` wire op flips a caught-up replica\n\
                     writable — e.g. after killing a dead primary)\n\
-                    [--repl-poll-ms N] (idle tail-poll interval)"
+                    [--repl-poll-ms N] (idle tail-poll interval)\n\
+         serve observability: [--log-level debug|info|warn|error] (event\n\
+                    filter, default info) [--log-json] (one JSON object\n\
+                    per event line instead of text — machine-ingestable)\n\
+                    [--slow-op-ms N] (emit one structured slow_op record,\n\
+                    with the request's per-stage latency breakdown and\n\
+                    trace id, for any request slower than N ms; 0 = off).\n\
+                    Per-stage latency histograms (batcher queue wait,\n\
+                    sketch, placement, WAL, fsync wait, reply; executor\n\
+                    queue wait, scan, rerank, gather) ride in stats as\n\
+                    stage_* fields and in `stats --prom` as full\n\
+                    Prometheus histogram families"
     );
 }
 
@@ -130,6 +148,9 @@ fn coordinator_config(args: &Args) -> CoordinatorConfig {
         replicate_from: args.str_opt("replicate-from").map(str::to_string),
         repl_poll_ms: args.u64_or("repl-poll-ms", 2),
         ttl_sweep_ms: args.u64_or("ttl-sweep-ms", 1_000),
+        log_level: args.str_or("log-level", "info"),
+        log_json: args.flag("log-json"),
+        slow_op_ms: args.u64_or("slow-op-ms", 0),
     }
 }
 
@@ -197,6 +218,25 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         println!("[serve] read replica of {primary} — inserts are rejected until `promote`");
     }
     coordinator.serve(&addr, |bound| println!("[serve] bound {bound}"))
+}
+
+/// `stats --addr HOST:PORT [--prom]`: one-shot scrape of a running
+/// server. Default output is the flat `stats` fields (name value per
+/// line); `--prom` asks for the `metrics_text` Prometheus exposition
+/// instead — suitable as a scrape target via
+/// `cabin-sketch stats --addr … --prom > metrics.prom`.
+fn cmd_stats(args: &Args) -> anyhow::Result<()> {
+    use cabin::coordinator::client::Client;
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let mut client = Client::connect(&addr)?;
+    if args.flag("prom") {
+        print!("{}", client.metrics_text()?);
+    } else {
+        for (name, value) in client.stats()? {
+            println!("{name} {value}");
+        }
+    }
+    Ok(())
 }
 
 fn cmd_sketch(args: &Args) -> anyhow::Result<()> {

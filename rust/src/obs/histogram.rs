@@ -1,0 +1,380 @@
+//! Lock-free log-linear latency histograms.
+//!
+//! [`ObsHistogram`] is the serving-path latency recorder: a fixed array
+//! of atomic buckets, so `record` is a handful of relaxed atomic
+//! increments — no mutex, no allocation, no unbounded growth — and the
+//! struct is safely shared across every worker thread behind one `Arc`.
+//! It replaces the old `Mutex<LatencyStats>` pair in
+//! `coordinator::Metrics`, which buffered every sample in a `Vec<f64>`
+//! forever (a memory leak on a long-running server) behind a lock on the
+//! hot path.
+//!
+//! **Bucket scheme** (log-linear, HdrHistogram-style): values are
+//! recorded in integer microseconds. The first 16 buckets are linear
+//! (1 µs wide); above that each power-of-two octave is split into 16
+//! linear sub-buckets, so the relative quantization error is at most
+//! 1/16 ≈ 6.25 % everywhere. The top octave runs to `u64::MAX` µs, so
+//! nothing is ever dropped or clamped. 976 buckets × 8 bytes ≈ 7.6 KiB
+//! per histogram, fixed at construction.
+//!
+//! Quantiles are computed by walking the bucket counts and reporting the
+//! *upper* edge of the bucket containing the target rank — "q of the
+//! samples were at most this" — which is the conservative direction for
+//! latency SLOs. Bucket counts themselves are exact (only the position
+//! within a bucket is quantized), which is what the Prometheus
+//! exposition renders (see [`super::prom`]).
+//!
+//! Histograms are mergeable ([`ObsHistogram::merge_from`]): buckets of
+//! equal index add, so per-worker or per-node histograms can be folded
+//! into a fleet view without losing bucket exactness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Linear buckets below this value (µs); also the sub-buckets per octave.
+const LINEAR: u64 = 16;
+/// log2(LINEAR): octave index shift.
+const SUB_BITS: u32 = 4;
+/// Total bucket count: 16 linear + 60 octaves × 16 sub-buckets
+/// (msb 4..=63 of a u64 microsecond value).
+pub const NUM_BUCKETS: usize = 976;
+
+/// Bucket index for a microsecond value. Total order: every value maps
+/// to exactly one bucket and bucket lower bounds are strictly
+/// increasing with the index.
+#[inline]
+pub fn bucket_index(us: u64) -> usize {
+    if us < LINEAR {
+        us as usize
+    } else {
+        let msb = 63 - us.leading_zeros(); // >= SUB_BITS
+        let shift = msb - SUB_BITS;
+        let sub = ((us >> shift) & (LINEAR - 1)) as usize;
+        (LINEAR as usize) * (msb - SUB_BITS) as usize + sub + LINEAR as usize
+    }
+}
+
+/// Inclusive lower edge (µs) of bucket `i` — the inverse of
+/// [`bucket_index`] on bucket boundaries.
+#[inline]
+pub fn bucket_lower(i: usize) -> u64 {
+    if i < 2 * LINEAR as usize {
+        i as u64
+    } else {
+        let octave = (i - LINEAR as usize) / LINEAR as usize; // msb - SUB_BITS
+        let sub = ((i - LINEAR as usize) % LINEAR as usize) as u64;
+        (LINEAR + sub) << octave
+    }
+}
+
+/// Exclusive upper edge (µs) of bucket `i` (`u64::MAX` for the last).
+#[inline]
+pub fn bucket_upper(i: usize) -> u64 {
+    if i + 1 >= NUM_BUCKETS {
+        u64::MAX
+    } else {
+        bucket_lower(i + 1)
+    }
+}
+
+/// A point-in-time, non-atomic copy of a histogram, for rendering.
+/// `total` is recomputed from the copied buckets (not the live counter),
+/// so cumulative-bucket invariants hold exactly on the snapshot even
+/// while recording continues concurrently.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<u64>,
+    pub total: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+impl HistogramSnapshot {
+    /// Cumulative counts at the given ascending µs edges: entry `j` is
+    /// the number of samples strictly below `edges_us[j]`. Edges that
+    /// are exact bucket boundaries (powers of two ≥ 16, or any value
+    /// ≤ 16) make this exact.
+    pub fn cumulative(&self, edges_us: &[u64]) -> Vec<u64> {
+        let mut out = Vec::with_capacity(edges_us.len());
+        for &edge in edges_us {
+            // samples strictly below `edge`: all buckets whose upper
+            // edge is <= edge, i.e. indexes < bucket_index(edge)
+            let cut = if edge == 0 { 0 } else { bucket_index(edge) };
+            out.push(self.buckets[..cut.min(NUM_BUCKETS)].iter().sum());
+        }
+        out
+    }
+
+    /// Sum of recorded values, in seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_us as f64 / 1e6
+    }
+
+    /// Quantile in seconds (upper bucket edge; 0.0 when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile_us(&self.buckets, self.total, q) as f64 / 1e6
+    }
+}
+
+fn quantile_us(buckets: &[u64], total: u64, q: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+    let mut cum = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return bucket_upper(i);
+        }
+    }
+    bucket_upper(NUM_BUCKETS - 1)
+}
+
+/// Lock-free log-linear histogram (see the module docs). All methods
+/// take `&self`; recording is wait-free (relaxed atomic adds).
+pub struct ObsHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for ObsHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ObsHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency in integer microseconds.
+    #[inline]
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Record one latency in seconds (negative values clamp to 0).
+    #[inline]
+    pub fn record_secs(&self, secs: f64) {
+        self.record_us((secs.max(0.0) * 1e6).round() as u64);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded value, in seconds.
+    pub fn max_secs(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Mean of recorded values, in seconds (0.0 when empty).
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        }
+    }
+
+    /// Quantile in seconds: the upper edge of the bucket holding the
+    /// q-th ranked sample ("q of samples were at most this"). 0.0 when
+    /// empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = buckets.iter().sum();
+        quantile_us(&buckets, total, q) as f64 / 1e6
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.quantile(0.999)
+    }
+
+    /// Samples strictly below `us` (exact when `us` is a bucket edge —
+    /// any power of two ≥ 16, or any value ≤ 16; otherwise rounded down
+    /// to the nearest edge).
+    pub fn count_below_us(&self, us: u64) -> u64 {
+        let cut = if us == 0 { 0 } else { bucket_index(us) };
+        self.buckets[..cut.min(NUM_BUCKETS)]
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Fold another histogram's counts into this one (bucket-exact).
+    pub fn merge_from(&self, other: &ObsHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let v = theirs.load(Ordering::Relaxed);
+            if v > 0 {
+                mine.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us
+            .fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us
+            .fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy for rendering (see [`HistogramSnapshot`]).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total = buckets.iter().sum();
+        HistogramSnapshot {
+            buckets,
+            total,
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_and_edges_are_consistent() {
+        // every bucket's lower edge maps back to that bucket, and edges
+        // strictly increase
+        for i in 0..NUM_BUCKETS {
+            assert_eq!(bucket_index(bucket_lower(i)), i, "bucket {i}");
+            if i + 1 < NUM_BUCKETS {
+                assert!(bucket_lower(i) < bucket_lower(i + 1));
+            }
+        }
+        // spot values land between their bucket's edges
+        for v in [0u64, 1, 15, 16, 17, 31, 32, 63, 999, 1000, 1024, 1 << 20, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(bucket_lower(i) <= v, "v={v} i={i}");
+            if i + 1 < NUM_BUCKETS {
+                assert!(v < bucket_upper(i), "v={v} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_report_upper_bucket_edges() {
+        let h = ObsHistogram::new();
+        assert_eq!(h.p50(), 0.0, "empty histogram");
+        // 100 samples: 1..=100 µs
+        for us in 1..=100u64 {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 100);
+        // p50 = 50th sample = 50 µs -> its bucket [48,56) -> upper 56
+        let p50_us = h.p50() * 1e6;
+        assert!((48.0..=56.0).contains(&p50_us), "p50 {p50_us}");
+        // relative error stays within one sub-bucket (1/16)
+        let p99_us = h.p99() * 1e6;
+        assert!(p99_us >= 99.0 && p99_us <= 99.0 * (1.0 + 1.0 / 16.0) + 8.0);
+        assert!(h.max_secs() >= 100e-6);
+        assert!(h.mean_secs() > 0.0);
+    }
+
+    #[test]
+    fn record_secs_rounds_to_microseconds() {
+        let h = ObsHistogram::new();
+        h.record_secs(0.002); // 2000 µs -> bucket [1984, 2048)
+        assert_eq!(h.count(), 1);
+        let p = h.p50() * 1e6;
+        assert!((1984.0..=2048.0).contains(&p), "p50 {p}");
+        h.record_secs(-1.0); // clamps to 0, never panics
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn merge_adds_bucket_counts() {
+        let a = ObsHistogram::new();
+        let b = ObsHistogram::new();
+        for us in [10u64, 100, 1000] {
+            a.record_us(us);
+            b.record_us(us);
+            b.record_us(us);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 9);
+        let snap = a.snapshot();
+        assert_eq!(snap.total, 9);
+        assert_eq!(snap.buckets[bucket_index(10)], 3);
+    }
+
+    #[test]
+    fn count_below_is_exact_at_power_of_two_edges() {
+        let h = ObsHistogram::new();
+        for us in [1u64, 2, 100, 1023, 1024, 5000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count_below_us(1024), 4); // 1, 2, 100, 1023
+        assert_eq!(h.count_below_us(16), 2);
+        assert_eq!(h.count_below_us(0), 0);
+        assert_eq!(h.count_below_us(1 << 30), 6);
+    }
+
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let h = std::sync::Arc::new(ObsHistogram::new());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record_us((t * 7 + i) % 4096);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 40_000);
+        assert_eq!(h.snapshot().total, 40_000);
+    }
+
+    #[test]
+    fn snapshot_cumulative_matches_count_below() {
+        let h = ObsHistogram::new();
+        for us in 0..2000u64 {
+            h.record_us(us * 3);
+        }
+        let snap = h.snapshot();
+        let edges = [64u64, 1024, 65536];
+        let cum = snap.cumulative(&edges);
+        for (j, &e) in edges.iter().enumerate() {
+            assert_eq!(cum[j], h.count_below_us(e), "edge {e}");
+        }
+        // monotone in the edge
+        assert!(cum[0] <= cum[1] && cum[1] <= cum[2]);
+    }
+}

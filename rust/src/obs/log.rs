@@ -1,0 +1,235 @@
+//! Leveled structured logging for the serving runtime.
+//!
+//! Replaces the raw `eprintln!` sites scattered across
+//! server/store/batcher/executor/replica with one emitter that tags
+//! every event with a level, a component, an event name, and key-value
+//! context. Two output shapes, both one line per event on stderr:
+//!
+//! - text (default): `[component] LEVEL event key=val key="quoted val"`
+//! - JSONL (`--log-json`): `{"ts_ms":…,"level":"warn","component":"store",
+//!   "event":"wal_commit_failed","shard":3,"error":"…"}` — built through
+//!   [`crate::util::json::Json`], so escaping is correct and keys are
+//!   deterministically ordered.
+//!
+//! The level filter and format are process-global atomics set once by
+//! `serve` startup ([`init`]) — call sites are a relaxed load plus an
+//! early-out when filtered, so `debug!`-class events cost nothing in
+//! production. Levels: `debug < info < warn < error` (`--log-level`).
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+
+    /// Parse a level name (case-insensitive); `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static JSON: AtomicBool = AtomicBool::new(false);
+
+/// Configure the global logger (idempotent; last call wins). Called once
+/// from `serve` startup; tests may call it to force a format.
+pub fn init(level: Level, json: bool) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+    JSON.store(json, Ordering::Relaxed);
+}
+
+/// Would an event at `level` currently be emitted?
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+/// A log field value. Constructors keep call sites terse:
+/// `("shard", V::u(si as u64))`, `("error", V::s(format!("{e:#}")))`.
+#[derive(Clone, Debug)]
+pub enum V {
+    S(String),
+    U(u64),
+    I(i64),
+    F(f64),
+    B(bool),
+}
+
+impl V {
+    pub fn s(v: impl Into<String>) -> V {
+        V::S(v.into())
+    }
+
+    pub fn u(v: u64) -> V {
+        V::U(v)
+    }
+
+    pub fn f(v: f64) -> V {
+        V::F(v)
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            V::S(s) => Json::Str(s.clone()),
+            V::U(u) => Json::Num(*u as f64),
+            V::I(i) => Json::Num(*i as f64),
+            V::F(f) => Json::Num(*f),
+            V::B(b) => Json::Bool(*b),
+        }
+    }
+}
+
+impl std::fmt::Display for V {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            V::S(s) => write!(f, "{s}"),
+            V::U(u) => write!(f, "{u}"),
+            V::I(i) => write!(f, "{i}"),
+            V::F(x) => write!(f, "{x:.3}"),
+            V::B(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+pub fn debug(component: &str, event: &str, fields: &[(&str, V)]) {
+    emit(Level::Debug, component, event, fields);
+}
+
+pub fn info(component: &str, event: &str, fields: &[(&str, V)]) {
+    emit(Level::Info, component, event, fields);
+}
+
+pub fn warn(component: &str, event: &str, fields: &[(&str, V)]) {
+    emit(Level::Warn, component, event, fields);
+}
+
+pub fn error(component: &str, event: &str, fields: &[(&str, V)]) {
+    emit(Level::Error, component, event, fields);
+}
+
+fn emit(level: Level, component: &str, event: &str, fields: &[(&str, V)]) {
+    if !enabled(level) {
+        return;
+    }
+    eprintln!(
+        "{}",
+        format_line(level, JSON.load(Ordering::Relaxed), component, event, fields)
+    );
+}
+
+/// Render one event line (pure — unit-testable without capturing stderr).
+pub fn format_line(
+    level: Level,
+    json: bool,
+    component: &str,
+    event: &str,
+    fields: &[(&str, V)],
+) -> String {
+    if json {
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("ts_ms", Json::Num(ts_ms)),
+            ("level", Json::Str(level.name().to_string())),
+            ("component", Json::Str(component.to_string())),
+            ("event", Json::Str(event.to_string())),
+        ];
+        for (k, v) in fields {
+            pairs.push((k, v.to_json()));
+        }
+        Json::obj(pairs).to_string()
+    } else {
+        let mut out = format!("[{component}] {} {event}", level.name().to_uppercase());
+        for (k, v) in fields {
+            let rendered = v.to_string();
+            if rendered.contains(|c: char| c.is_whitespace() || c == '"') {
+                out.push_str(&format!(" {k}={:?}", rendered));
+            } else {
+                out.push_str(&format!(" {k}={rendered}"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_and_order() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Debug < Level::Error);
+    }
+
+    #[test]
+    fn text_format_quotes_spaces() {
+        let line = format_line(
+            Level::Warn,
+            false,
+            "store",
+            "wal_commit_failed",
+            &[("shard", V::u(3)), ("error", V::s("disk full: no space"))],
+        );
+        assert_eq!(
+            line,
+            "[store] WARN wal_commit_failed shard=3 error=\"disk full: no space\""
+        );
+    }
+
+    #[test]
+    fn json_format_is_parseable_with_context() {
+        let line = format_line(
+            Level::Error,
+            true,
+            "replica",
+            "diverged",
+            &[("shard", V::u(1)), ("detail", V::s("checksum \"x\"\nline"))],
+        );
+        let v = crate::util::json::parse(&line).unwrap();
+        assert_eq!(v.req_str("level").unwrap(), "error");
+        assert_eq!(v.req_str("component").unwrap(), "replica");
+        assert_eq!(v.req_str("event").unwrap(), "diverged");
+        assert_eq!(v.req_usize("shard").unwrap(), 1);
+        assert_eq!(v.req_str("detail").unwrap(), "checksum \"x\"\nline");
+        assert!(v.get("ts_ms").is_some());
+    }
+
+    #[test]
+    fn filter_respects_level() {
+        init(Level::Warn, false);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        init(Level::Info, false); // restore default for other tests
+        assert!(enabled(Level::Info));
+    }
+}

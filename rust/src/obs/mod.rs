@@ -1,0 +1,175 @@
+//! Observability: lock-free histograms, stage timing, structured logs,
+//! Prometheus exposition.
+//!
+//! The serving path answers three questions without locks or unbounded
+//! allocation:
+//!
+//! 1. **How slow?** [`ObsHistogram`] — fixed-memory log-linear atomic
+//!    buckets (see [`histogram`]) — backs every latency metric.
+//! 2. **Slow *where*?** [`Stages`] holds one histogram per pipeline
+//!    stage. Write path: batcher queue wait → sketch encode → placement
+//!    → WAL append → group-commit fsync wait → reply. Read path:
+//!    executor queue wait → scan/kernel → rerank → gather. The batcher
+//!    and router record into them via `Arc<Stages>` handles threaded
+//!    through `Metrics`, the store, and `QueryOpts`; per-request
+//!    critical-path copies land in a [`ReadSpan`] so a `--slow-op-ms`
+//!    breach logs one structured record with the full breakdown,
+//!    correlated by the per-connection trace id the server stamps on
+//!    batcher tickets and executor jobs.
+//! 3. **What happened?** [`log`] — leveled text/JSONL events replacing
+//!    raw `eprintln!`; [`prom`] renders everything in Prometheus text
+//!    format for the `metrics_text` wire op.
+
+pub mod histogram;
+pub mod log;
+pub mod prom;
+
+pub use histogram::{HistogramSnapshot, ObsHistogram};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// One histogram per serving-pipeline stage. Shared as `Arc<Stages>`
+/// from `Metrics` into the batcher, store, and router; recording is
+/// lock-free (see [`ObsHistogram::record_us`]).
+#[derive(Default)]
+pub struct Stages {
+    /// Write path: ticket enqueue → batcher pickup.
+    pub write_queue: ObsHistogram,
+    /// Write path: categorical vectors → BinSketch encode (per batch).
+    pub write_sketch: ObsHistogram,
+    /// Write path: shard placement + arena append + LSH insert + WAL
+    /// frame buffering, under the shard locks (per batch).
+    pub write_place: ObsHistogram,
+    /// Write path: WAL commit, or group-commit window registration
+    /// (per batch).
+    pub write_wal: ObsHistogram,
+    /// Write path: wait for the group-commit fsync epoch (per batch).
+    pub write_fsync: ObsHistogram,
+    /// Write path: replying to all tickets in the batch (per batch).
+    pub write_reply: ObsHistogram,
+    /// Read path: job submit → executor worker pickup (per shard job).
+    pub read_queue: ObsHistogram,
+    /// Read path: candidate scan / blocked kernel time (per shard job).
+    pub read_scan: ObsHistogram,
+    /// Read path: exact rerank of LSH candidates (per indexed shard job).
+    pub read_rerank: ObsHistogram,
+    /// Read path: merging per-shard top-k heaps (per query batch).
+    pub read_gather: ObsHistogram,
+}
+
+impl Stages {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stable stage names, in pipeline order — drives both the
+    /// `stage_*` stats fields and the Prometheus families.
+    pub fn named(&self) -> [(&'static str, &ObsHistogram); 10] {
+        [
+            ("write_queue", &self.write_queue),
+            ("write_sketch", &self.write_sketch),
+            ("write_place", &self.write_place),
+            ("write_wal", &self.write_wal),
+            ("write_fsync", &self.write_fsync),
+            ("write_reply", &self.write_reply),
+            ("read_queue", &self.read_queue),
+            ("read_scan", &self.read_scan),
+            ("read_rerank", &self.read_rerank),
+            ("read_gather", &self.read_gather),
+        ]
+    }
+}
+
+/// Per-request critical-path view of the read pipeline. Shard jobs run
+/// in parallel, so each stage keeps the *maximum* across jobs
+/// (`fetch_max`) — the time that actually bounded the request — rather
+/// than a sum that could exceed wall clock. Cheap enough to allocate
+/// per request; dropped with the reply.
+#[derive(Default)]
+pub struct ReadSpan {
+    pub queue_us: AtomicU64,
+    pub scan_us: AtomicU64,
+    pub rerank_us: AtomicU64,
+    pub gather_us: AtomicU64,
+}
+
+impl ReadSpan {
+    pub fn note_queue(&self, us: u64) {
+        self.queue_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn note_scan(&self, us: u64) {
+        self.scan_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn note_rerank(&self, us: u64) {
+        self.rerank_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn note_gather(&self, us: u64) {
+        self.gather_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn ms(&self, field: &AtomicU64) -> f64 {
+        field.load(Ordering::Relaxed) as f64 / 1e3
+    }
+}
+
+/// Global slow-op threshold in µs; 0 = disabled. Set once at `serve`
+/// startup from `--slow-op-ms` (a global, not a config field, so the
+/// batcher/server don't need signature changes at their many
+/// construction sites).
+static SLOW_OP_US: AtomicU64 = AtomicU64::new(0);
+
+pub fn set_slow_op_ms(ms: u64) {
+    SLOW_OP_US.store(ms.saturating_mul(1000), Ordering::Relaxed);
+}
+
+/// Current threshold in µs (0 = disabled).
+#[inline]
+pub fn slow_op_us() -> u64 {
+    SLOW_OP_US.load(Ordering::Relaxed)
+}
+
+/// Elapsed µs since `start`, saturating at u64::MAX.
+#[inline]
+pub fn elapsed_us(start: Instant) -> u64 {
+    let us = start.elapsed().as_micros();
+    us.min(u64::MAX as u128) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_are_unique_and_ordered() {
+        let stages = Stages::new();
+        let names: Vec<&str> = stages.named().iter().map(|(n, _)| *n).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate stage name");
+        assert_eq!(names[0], "write_queue");
+        assert_eq!(names[9], "read_gather");
+    }
+
+    #[test]
+    fn read_span_keeps_max_across_jobs() {
+        let span = ReadSpan::default();
+        span.note_scan(100);
+        span.note_scan(40);
+        span.note_scan(250);
+        assert_eq!(span.scan_us.load(Ordering::Relaxed), 250);
+        assert!((span.ms(&span.scan_us) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slow_op_threshold_roundtrip() {
+        set_slow_op_ms(25);
+        assert_eq!(slow_op_us(), 25_000);
+        set_slow_op_ms(0);
+        assert_eq!(slow_op_us(), 0);
+    }
+}

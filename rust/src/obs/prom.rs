@@ -1,0 +1,182 @@
+//! Prometheus text exposition (format version 0.0.4).
+//!
+//! Renders the flat `stats` fields plus the stage histograms into the
+//! standard text format so off-the-shelf scrapers work against any
+//! node, primary or follower. Conventions:
+//!
+//! - every metric is prefixed `cabin_`;
+//! - monotone counters are suffixed `_total` and typed `counter`;
+//! - point-in-time values (queue depths, lags, config, `*_ms`
+//!   summaries) are typed `gauge` and keep their name;
+//! - histograms render as `cabin_<name>_seconds` families with
+//!   cumulative `_bucket{le="…"}` series at power-of-two microsecond
+//!   edges (which are exact [`ObsHistogram`](super::ObsHistogram)
+//!   bucket boundaries — no re-quantization), plus `_sum` and
+//!   `_count`. The `+Inf` bucket and `_count` are computed from the
+//!   same snapshot total, so cumulativity holds exactly even while the
+//!   server is recording.
+//!
+//! `stage_*` flat fields are skipped here: the same data is exposed in
+//! full fidelity as native histogram families.
+
+use super::histogram::HistogramSnapshot;
+
+/// Cumulative bucket edges for exposition, in µs: powers of 4 from
+/// 64 µs to ~16.8 s. All are powers of two ≥ 16, hence exact
+/// `ObsHistogram` bucket boundaries.
+const EDGES_US: [u64; 10] = [
+    64,
+    256,
+    1024,
+    4096,
+    16_384,
+    65_536,
+    262_144,
+    1_048_576,
+    4_194_304,
+    16_777_216,
+];
+
+/// Substrings/suffixes marking a flat stats field as a gauge rather
+/// than a monotone counter.
+fn is_gauge(name: &str) -> bool {
+    const GAUGE_MARKS: [&str; 12] = [
+        "queue_depth",
+        "busy_workers",
+        "generation",
+        "_lag",
+        "applied_seq",
+        "caught_up",
+        "diverged",
+        "_role",
+        "live_bytes",
+        "next_seq",
+        "dead_frames",
+        "recovery_ms",
+    ];
+    // `cfg_` appears prefixed (`index_cfg_*`, `persist_cfg_*`): configs
+    // are point-in-time values, never monotone
+    name.contains("cfg_")
+        || name.ends_with("_ms")
+        || GAUGE_MARKS.iter().any(|m| name.contains(m))
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn fmt_le(us: u64) -> String {
+    // seconds with enough precision to be exact for our µs edges
+    let secs = us as f64 / 1e6;
+    let s = format!("{secs:.6}");
+    let s = s.trim_end_matches('0');
+    let s = s.trim_end_matches('.');
+    if s.is_empty() {
+        "0".to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+/// Render the exposition. `flat` is `Metrics::snapshot()`-shaped
+/// `(name, value)` pairs; `hists` is `(base_name, snapshot)` pairs
+/// (e.g. `("stage_write_wal", …)`, `("query_latency", …)`).
+pub fn render(flat: &[(String, f64)], hists: &[(String, HistogramSnapshot)]) -> String {
+    let mut out = String::with_capacity(4096 + hists.len() * 1024);
+    for (name, value) in flat {
+        if name.starts_with("stage_") {
+            continue; // exposed as native histogram families below
+        }
+        if is_gauge(name) {
+            out.push_str(&format!("# TYPE cabin_{name} gauge\n"));
+            out.push_str(&format!("cabin_{name} {}\n", fmt_value(*value)));
+        } else {
+            out.push_str(&format!("# TYPE cabin_{name}_total counter\n"));
+            out.push_str(&format!("cabin_{name}_total {}\n", fmt_value(*value)));
+        }
+    }
+    for (base, snap) in hists {
+        let fam = format!("cabin_{base}_seconds");
+        out.push_str(&format!("# TYPE {fam} histogram\n"));
+        let cum = snap.cumulative(&EDGES_US);
+        for (edge, below) in EDGES_US.iter().zip(&cum) {
+            out.push_str(&format!(
+                "{fam}_bucket{{le=\"{}\"}} {below}\n",
+                fmt_le(*edge)
+            ));
+        }
+        out.push_str(&format!("{fam}_bucket{{le=\"+Inf\"}} {}\n", snap.total));
+        out.push_str(&format!("{fam}_sum {}\n", snap.sum_secs()));
+        out.push_str(&format!("{fam}_count {}\n", snap.total));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ObsHistogram;
+
+    #[test]
+    fn counters_get_total_suffix_and_gauges_do_not() {
+        let flat = vec![
+            ("inserts".to_string(), 42.0),
+            ("executor_queue_depth".to_string(), 3.0),
+            ("index_cfg_bands".to_string(), 4.0),
+            ("insert_p50_ms".to_string(), 1.5),
+        ];
+        let text = render(&flat, &[]);
+        assert!(text.contains("# TYPE cabin_inserts_total counter\n"));
+        assert!(text.contains("cabin_inserts_total 42\n"));
+        assert!(text.contains("# TYPE cabin_executor_queue_depth gauge\n"));
+        assert!(text.contains("cabin_executor_queue_depth 3\n"));
+        assert!(text.contains("cabin_index_cfg_bands 4\n"));
+        assert!(text.contains("cabin_insert_p50_ms 1.5\n"));
+        assert!(!text.contains("cabin_insert_p50_ms_total"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_consistent() {
+        let h = ObsHistogram::new();
+        for us in [10u64, 100, 5_000, 500_000, 30_000_000] {
+            h.record_us(us);
+        }
+        let text = render(&[], &[("stage_write_wal".to_string(), h.snapshot())]);
+        assert!(text.contains("# TYPE cabin_stage_write_wal_seconds histogram\n"));
+        // parse bucket counts back out and check monotonicity + count match
+        let mut last = 0u64;
+        let mut inf = None;
+        let mut count = None;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("cabin_stage_write_wal_seconds_bucket{le=\"") {
+                let (le, v) = rest.split_once("\"}").unwrap();
+                let v: u64 = v.trim().parse().unwrap();
+                assert!(v >= last, "bucket not cumulative at le={le}");
+                last = v;
+                if le == "+Inf" {
+                    inf = Some(v);
+                }
+            } else if let Some(v) = line.strip_prefix("cabin_stage_write_wal_seconds_count ") {
+                count = Some(v.trim().parse::<u64>().unwrap());
+            }
+        }
+        assert_eq!(inf, Some(5));
+        assert_eq!(count, Some(5));
+        // 10 and 100 µs fall below the 1024 µs edge
+        assert!(text.contains("_bucket{le=\"0.001024\"} 2\n"));
+        // the 30 s sample exceeds every finite edge but lands in +Inf
+        assert!(text.contains("_bucket{le=\"16.777216\"} 4\n"));
+    }
+
+    #[test]
+    fn le_labels_render_exact_seconds() {
+        assert_eq!(fmt_le(64), "0.000064");
+        assert_eq!(fmt_le(1024), "0.001024");
+        assert_eq!(fmt_le(1_048_576), "1.048576");
+        assert_eq!(fmt_le(16_777_216), "16.777216");
+    }
+}

@@ -203,9 +203,14 @@ impl PersistConfig {
     /// `wal+snapshot` (the safe-and-complete default for a `--data-dir`).
     pub fn mode_from_str_or_warn(s: &str, context: &str) -> PersistMode {
         Self::mode_from_str(s).unwrap_or_else(|| {
-            eprintln!(
-                "[{context}] unknown --persist '{s}' (want off|wal|wal+snapshot), \
-                 using wal+snapshot"
+            crate::obs::log::warn(
+                context,
+                "unknown_persist_mode",
+                &[
+                    ("value", crate::obs::log::V::s(s)),
+                    ("want", crate::obs::log::V::s("off|wal|wal+snapshot")),
+                    ("using", crate::obs::log::V::s("wal+snapshot")),
+                ],
             );
             PersistMode::WalSnapshot
         })
@@ -218,8 +223,14 @@ impl PersistConfig {
             "always" => FsyncPolicy::Always,
             "never" | "off" => FsyncPolicy::Never,
             other => {
-                eprintln!(
-                    "[{context}] unknown --fsync '{other}' (want always|never), using always"
+                crate::obs::log::warn(
+                    context,
+                    "unknown_fsync_policy",
+                    &[
+                        ("value", crate::obs::log::V::s(other)),
+                        ("want", crate::obs::log::V::s("always|never")),
+                        ("using", crate::obs::log::V::s("always")),
+                    ],
                 );
                 FsyncPolicy::Always
             }

@@ -13,6 +13,7 @@
 
 use super::{seq_field, ReplCounters, ReplicaConfig};
 use crate::coordinator::store::ShardedStore;
+use crate::obs::log as obs_log;
 use crate::persist::manifest::{snap_path, sync_dir, wal_path, Manifest};
 use crate::persist::wal::{scan_frames, WalRecord};
 use crate::persist::{snapshot, Fingerprint, FsyncPolicy};
@@ -521,9 +522,14 @@ fn puller_loop(
                                             // next chunk's commit (next_seq counts the
                                             // pending frames); infeasible chunks keep
                                             // erroring visibly here
-                                            eprintln!(
-                                                "[replica] applying shard {shard} frames at seq \
-                                                 {from} failed: {e:#}"
+                                            obs_log::error(
+                                                "replica",
+                                                "apply_failed",
+                                                &[
+                                                    ("shard", obs_log::V::u(shard as u64)),
+                                                    ("from_seq", obs_log::V::u(from)),
+                                                    ("error", obs_log::V::s(format!("{e:#}"))),
+                                                ],
                                             );
                                             counters.stalls.fetch_add(1, Ordering::Relaxed);
                                         }
@@ -541,26 +547,50 @@ fn puller_loop(
                     Ok(TailChunk::SnapshotNeeded) => {
                         all_caught_up = false;
                         counters.stalls.fetch_add(1, Ordering::Relaxed);
-                        eprintln!(
-                            "[replica] shard {shard}: the primary rotated past our position \
-                             (seq {from}); this follower must be re-seeded — restart it \
-                             with a fresh --data-dir"
+                        obs_log::warn(
+                            "replica",
+                            "rotated_past_position",
+                            &[
+                                ("shard", obs_log::V::u(shard as u64)),
+                                ("from_seq", obs_log::V::u(from)),
+                                (
+                                    "action",
+                                    obs_log::V::s(
+                                        "re-seed this follower: restart with a fresh --data-dir",
+                                    ),
+                                ),
+                            ],
                         );
                         sleep_unless_stop(stop, Duration::from_secs(1));
                     }
                     Ok(TailChunk::Diverged { message }) => {
                         counters.diverged.store(1, Ordering::Relaxed);
                         counters.caught_up.store(0, Ordering::Relaxed);
-                        eprintln!(
-                            "[replica] DIVERGED from the primary — replication halted; \
-                             this replica keeps serving its last consistent prefix: \
-                             {message}"
+                        obs_log::error(
+                            "replica",
+                            "diverged",
+                            &[
+                                ("detail", obs_log::V::s(message)),
+                                (
+                                    "action",
+                                    obs_log::V::s(
+                                        "replication halted; serving last consistent prefix",
+                                    ),
+                                ),
+                            ],
                         );
                         return;
                     }
                     Err(e) => {
                         counters.stalls.fetch_add(1, Ordering::Relaxed);
-                        eprintln!("[replica] tail fetch failed (will reconnect): {e:#}");
+                        obs_log::warn(
+                            "replica",
+                            "tail_fetch_failed",
+                            &[
+                                ("error", obs_log::V::s(format!("{e:#}"))),
+                                ("action", obs_log::V::s("will reconnect")),
+                            ],
+                        );
                         break 'session;
                     }
                 }

@@ -62,7 +62,14 @@ impl XlaEngine {
                 match Self::load(dir) {
                     Ok(e) => return Some(e),
                     Err(err) => {
-                        eprintln!("[runtime] artifacts at {dir} unusable: {err:#}");
+                        crate::obs::log::warn(
+                            "runtime",
+                            "artifacts_unusable",
+                            &[
+                                ("dir", crate::obs::log::V::s(dir)),
+                                ("error", crate::obs::log::V::s(format!("{err:#}"))),
+                            ],
+                        );
                         return None;
                     }
                 }

@@ -50,7 +50,14 @@ impl XlaHandle {
                 match Self::spawn(dir) {
                     Ok(h) => return Some(h),
                     Err(e) => {
-                        eprintln!("[runtime] artifacts at {dir} unusable: {e:#}");
+                        crate::obs::log::warn(
+                            "runtime",
+                            "artifacts_unusable",
+                            &[
+                                ("dir", crate::obs::log::V::s(dir)),
+                                ("error", crate::obs::log::V::s(format!("{e:#}"))),
+                            ],
+                        );
                         return None;
                     }
                 }

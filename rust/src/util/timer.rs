@@ -1,6 +1,13 @@
 //! Wall-clock timing + latency summaries (criterion is unavailable offline;
 //! `bench.rs` builds on this module).
+//!
+//! [`LatencyStats`] is an *offline* accumulator for bench summaries —
+//! it keeps a bounded reservoir of samples so percentile math stays
+//! exact-ish at bench scale without unbounded memory. It must never sit
+//! on a serving path: the server records latency into lock-free
+//! [`crate::obs::ObsHistogram`] buckets instead.
 
+use crate::util::rng::Xoshiro256;
 use std::time::Instant;
 
 /// Simple stopwatch.
@@ -26,10 +33,39 @@ impl Stopwatch {
     }
 }
 
-/// Online latency accumulator: stores samples, summarises on demand.
-#[derive(Clone, Debug, Default)]
+/// Reservoir capacity: beyond this many samples, new ones replace a
+/// uniformly random slot (Algorithm R), so the reservoir stays a
+/// uniform sample of everything seen and memory is bounded forever.
+const RESERVOIR_CAP: usize = 8192;
+
+/// Offline latency accumulator: keeps a bounded uniform reservoir of
+/// samples, summarises on demand. `count`, `min`, `max` and the mean
+/// remain exact over *all* recorded samples; percentiles and std-dev
+/// are computed over the reservoir (exact until `RESERVOIR_CAP`
+/// samples, a uniform estimate after).
+#[derive(Clone, Debug)]
 pub struct LatencyStats {
     samples: Vec<f64>,
+    /// Total samples ever recorded (>= samples.len()).
+    seen: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// Deterministic replacement choices — summaries are reproducible.
+    rng: Xoshiro256,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        Self {
+            samples: Vec::new(),
+            seen: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            rng: Xoshiro256::new(0x1a7e_5747),
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -50,15 +86,28 @@ impl LatencyStats {
     }
 
     pub fn record(&mut self, secs: f64) {
-        self.samples.push(secs);
+        self.seen += 1;
+        self.sum += secs;
+        self.min = self.min.min(secs);
+        self.max = self.max.max(secs);
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(secs);
+        } else {
+            // Algorithm R: keep with probability CAP/seen.
+            let j = self.rng.gen_range(self.seen) as usize;
+            if j < RESERVOIR_CAP {
+                self.samples[j] = secs;
+            }
+        }
     }
 
+    /// Total samples recorded (not the reservoir size).
     pub fn len(&self) -> usize {
-        self.samples.len()
+        self.seen as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.seen == 0
     }
 
     pub fn summary(&self) -> Summary {
@@ -67,14 +116,13 @@ impl LatencyStats {
         }
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.total_cmp(b));
-        let n = s.len();
-        let mean = s.iter().sum::<f64>() / n as f64;
-        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mean = self.sum / self.seen as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / s.len() as f64;
         Summary {
-            count: n,
+            count: self.seen as usize,
             mean,
-            min: s[0],
-            max: s[n - 1],
+            min: self.min,
+            max: self.max,
             p50: percentile(&s, 0.50),
             p95: percentile(&s, 0.95),
             p99: percentile(&s, 0.99),
@@ -150,6 +198,25 @@ mod tests {
         let s = LatencyStats::new().summary();
         assert_eq!(s.count, 0);
         assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn reservoir_caps_memory_but_keeps_exact_extremes() {
+        let mut st = LatencyStats::new();
+        let n = RESERVOIR_CAP * 4;
+        for i in 0..n {
+            st.record(i as f64 / 1000.0);
+        }
+        assert_eq!(st.len(), n, "count stays exact");
+        assert_eq!(st.samples.len(), RESERVOIR_CAP, "memory stays bounded");
+        let s = st.summary();
+        assert_eq!(s.count, n);
+        assert_eq!(s.min, 0.0, "min exact despite sampling");
+        assert_eq!(s.max, (n - 1) as f64 / 1000.0, "max exact despite sampling");
+        // mean exact; p50 a uniform-sample estimate of the true median
+        let true_mean = (n - 1) as f64 / 2.0 / 1000.0;
+        assert!((s.mean - true_mean).abs() < 1e-9);
+        assert!((s.p50 - true_mean).abs() < 0.1 * true_mean + 0.01);
     }
 
     #[test]

@@ -10,10 +10,14 @@ Two subcommands, stdlib only:
 
   check   — compare a PR's BENCH_pr.json against the committed
             BENCH_baseline.json and fail (exit 1) on regressions beyond
-            --max-regression (default 25%) on p50 wall time. A baseline
-            marked "provisional": true (or with no benches) records the
-            trajectory without gating, and prints the JSON to commit as
-            the real baseline.
+            --max-regression (default 25%) on p50 wall time. Every
+            failure line names the suite and bench and labels both p50s
+            (baseline_p50_ms / current_p50_ms) so CI logs are
+            self-describing. --emit-md PATH additionally writes the full
+            comparison as a markdown table (for PR comments / job
+            summaries). A baseline marked "provisional": true (or with
+            no benches) records the trajectory without gating, and
+            prints the JSON to commit as the real baseline.
 
 Wall times are compared on p50, not mean, to damp CI runner noise.
 """
@@ -102,21 +106,29 @@ def cmd_check(args: argparse.Namespace) -> int:
         return 0
 
     failures = []
+    rows = []  # (status, suite, name, baseline_ms | None, current_ms | None, ratio | None)
     print(f"[bench_gate] comparing {len(cur)} benches against {len(base)} baseline entries")
     for key in sorted(cur):
+        suite, name = key
         suite_name = "/".join(key)
         if key not in base:
             print(f"  NEW      {suite_name} ({cur[key]['wall_ms']:.3f} ms, no baseline)")
+            rows.append(("new", suite, name, None, cur[key]["wall_ms"], None))
             continue
         b, c = base[key]["wall_ms"], cur[key]["wall_ms"]
         ratio = c / b if b > 0 else float("inf")
         status = "ok"
         if ratio > 1 + args.max_regression:
             status = "REGRESSED"
-            failures.append((suite_name, b, c, ratio))
+            failures.append((suite, name, b, c, ratio))
         print(f"  {status:<8} {suite_name}  {b:.3f} -> {c:.3f} ms  ({ratio - 1:+.1%})")
+        rows.append((status.lower(), suite, name, b, c, ratio))
     for key in sorted(set(base) - set(cur)):
         print(f"  MISSING  {'/'.join(key)} (in baseline, not in this run)")
+        rows.append(("missing", key[0], key[1], base[key]["wall_ms"], None, None))
+
+    if args.emit_md:
+        emit_md(args.emit_md, rows, args.max_regression)
 
     if failures:
         print(
@@ -124,11 +136,39 @@ def cmd_check(args: argparse.Namespace) -> int:
             f"{args.max_regression:.0%} vs {args.baseline}:",
             file=sys.stderr,
         )
-        for name, b, c, ratio in failures:
-            print(f"  {name}: {b:.3f} ms → {c:.3f} ms ({ratio:.2f}x)", file=sys.stderr)
+        for suite, name, b, c, ratio in failures:
+            print(
+                f"  suite={suite} bench={name} "
+                f"baseline_p50_ms={b:.3f} current_p50_ms={c:.3f} ({ratio:.2f}x)",
+                file=sys.stderr,
+            )
         return 1
     print("[bench_gate] OK: no regressions beyond the threshold")
     return 0
+
+
+def emit_md(path: str, rows: list, max_regression: float) -> None:
+    """Write the comparison as a markdown table (PR comment / job summary)."""
+    def ms(v):
+        return f"{v:.3f}" if v is not None else "—"
+
+    def delta(r):
+        return f"{r - 1:+.1%}" if r is not None else "—"
+
+    badge = {"ok": "✅", "regressed": "❌", "new": "🆕", "missing": "⚠️"}
+    lines = [
+        f"### Bench gate (p50 wall time, threshold {max_regression:.0%})",
+        "",
+        "| status | suite | bench | baseline p50 (ms) | current p50 (ms) | delta |",
+        "|---|---|---|---:|---:|---:|",
+    ]
+    for status, suite, name, b, c, ratio in rows:
+        lines.append(
+            f"| {badge.get(status, status)} {status} | {suite} | `{name}` "
+            f"| {ms(b)} | {ms(c)} | {delta(ratio)} |"
+        )
+    Path(path).write_text("\n".join(lines) + "\n")
+    print(f"[bench_gate] wrote markdown summary to {path}")
 
 
 def main() -> int:
@@ -142,6 +182,12 @@ def main() -> int:
     chk.add_argument("--current", default="BENCH_pr.json")
     chk.add_argument("--baseline", default="BENCH_baseline.json")
     chk.add_argument("--max-regression", type=float, default=0.25)
+    chk.add_argument(
+        "--emit-md",
+        default=None,
+        metavar="PATH",
+        help="also write the comparison as a markdown table",
+    )
     chk.set_defaults(fn=cmd_check)
     args = ap.parse_args()
     return args.fn(args)

@@ -1,0 +1,197 @@
+#!/usr/bin/env python3
+"""Validate Prometheus text exposition scraped from `cabin-sketch serve`.
+
+Stdlib only. Usage:
+
+  python3 tools/prom_lint.py primary.txt [follower.txt ...]
+
+Checks, per file:
+
+  * every sample name matches the metric-name grammar
+    ``[a-zA-Z_:][a-zA-Z0-9_:]*``;
+  * every sample family has exactly one ``# TYPE`` line, and it appears
+    before the family's first sample (``x_bucket`` / ``x_sum`` /
+    ``x_count`` samples belong to the base family ``x`` when ``x`` is
+    declared a histogram);
+  * counter sample names end in ``_total``;
+  * histogram families expose ``_bucket`` samples with non-decreasing
+    cumulative counts in ``le`` order, include an ``le="+Inf"`` bucket,
+    and that bucket equals the family's ``_count``; ``_sum`` and
+    ``_count`` must both be present;
+  * no metric name is emitted under two different types.
+
+Exit 0 when every file passes, 1 otherwise; one diagnostic line per
+violation (``file:line: message``).
+"""
+
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)\s*$"
+)
+TYPE_RE = re.compile(r"^# TYPE (?P<name>\S+) (?P<kind>\S+)\s*$")
+LE_RE = re.compile(r'le="(?P<le>[^"]+)"')
+
+
+def parse_le(raw):
+    if raw == "+Inf":
+        return float("inf")
+    try:
+        return float(raw)
+    except ValueError:
+        return None
+
+
+def base_family(name, types):
+    """Map a histogram-series sample name back to its declared family."""
+    for suffix in ("_bucket", "_sum", "_count"):
+        if name.endswith(suffix):
+            base = name[: -len(suffix)]
+            if types.get(base) == "histogram":
+                return base
+    return name
+
+
+def lint_file(path):
+    errors = []
+
+    def err(lineno, msg):
+        errors.append(f"{path}:{lineno}: {msg}")
+
+    try:
+        with open(path, encoding="utf-8") as fh:
+            lines = fh.read().splitlines()
+    except OSError as exc:
+        return [f"{path}: unreadable: {exc}"]
+
+    if not any(ln.strip() and not ln.startswith("#") for ln in lines):
+        return [f"{path}: no samples found"]
+
+    # Pass 1: collect TYPE declarations (needed to resolve histogram
+    # series names in pass 2 regardless of declaration order).
+    types = {}
+    for lineno, line in enumerate(lines, 1):
+        m = TYPE_RE.match(line)
+        if not m:
+            continue
+        name, kind = m.group("name"), m.group("kind")
+        if not NAME_RE.match(name):
+            err(lineno, f"bad metric name in TYPE line: {name!r}")
+        if kind not in ("counter", "gauge", "histogram", "summary", "untyped"):
+            err(lineno, f"unknown type {kind!r} for {name}")
+        if name in types:
+            err(lineno, f"duplicate # TYPE for {name}")
+        else:
+            types[name] = kind
+
+    # Pass 2: walk samples in order.
+    type_seen_at = {}      # family -> lineno of its TYPE line
+    first_sample_at = {}   # family -> lineno of its first sample
+    buckets = {}           # family -> list of (le, value, lineno)
+    sums = {}              # family -> value
+    counts = {}            # family -> (value, lineno)
+    for lineno, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        tm = TYPE_RE.match(line)
+        if tm:
+            type_seen_at.setdefault(tm.group("name"), lineno)
+            continue
+        if line.startswith("#"):
+            continue  # HELP or comment
+        m = SAMPLE_RE.match(line)
+        if not m:
+            err(lineno, f"unparseable sample line: {line!r}")
+            continue
+        name = m.group("name")
+        if not NAME_RE.match(name):
+            err(lineno, f"bad metric name: {name!r}")
+            continue
+        try:
+            value = float(m.group("value"))
+        except ValueError:
+            err(lineno, f"bad sample value {m.group('value')!r} for {name}")
+            continue
+        family = base_family(name, types)
+        first_sample_at.setdefault(family, lineno)
+        kind = types.get(family)
+        if kind is None:
+            err(lineno, f"sample {name} has no # TYPE line for family {family}")
+            continue
+        if kind == "counter" and not name.endswith("_total"):
+            err(lineno, f"counter sample {name} does not end in _total")
+        if kind == "histogram":
+            if name.endswith("_bucket"):
+                lm = LE_RE.search(m.group("labels") or "")
+                if not lm:
+                    err(lineno, f"histogram bucket {name} missing le label")
+                    continue
+                le = parse_le(lm.group("le"))
+                if le is None:
+                    err(lineno, f"unparseable le={lm.group('le')!r} on {name}")
+                    continue
+                buckets.setdefault(family, []).append((le, value, lineno))
+            elif name.endswith("_sum"):
+                sums[family] = value
+            elif name.endswith("_count"):
+                counts[family] = (value, lineno)
+            else:
+                err(lineno, f"histogram family {family} has stray sample {name}")
+
+    for family, lineno in first_sample_at.items():
+        declared = type_seen_at.get(family)
+        if declared is not None and declared > lineno:
+            err(lineno, f"# TYPE for {family} appears after its first sample")
+
+    for family, kind in types.items():
+        if kind != "histogram":
+            continue
+        series = buckets.get(family, [])
+        if not series:
+            err(type_seen_at.get(family, 0), f"histogram {family} has no _bucket samples")
+            continue
+        prev = None
+        for le, value, lineno in series:  # exposition order, as rendered
+            if prev is not None and value < prev:
+                err(lineno, f"histogram {family} bucket le={le} count {value} "
+                            f"decreases from previous bucket {prev}")
+            prev = value
+        les = [le for le, _, _ in series]
+        if les != sorted(les):
+            err(series[0][2], f"histogram {family} buckets not in ascending le order")
+        if not any(le == float("inf") for le in les):
+            err(series[-1][2], f"histogram {family} missing le=\"+Inf\" bucket")
+        if family not in sums:
+            err(series[0][2], f"histogram {family} missing _sum sample")
+        if family not in counts:
+            err(series[0][2], f"histogram {family} missing _count sample")
+        else:
+            count, clineno = counts[family]
+            inf = [v for le, v, _ in series if le == float("inf")]
+            if inf and inf[0] != count:
+                err(clineno, f"histogram {family} le=\"+Inf\" bucket {inf[0]} "
+                             f"!= _count {count}")
+    return errors
+
+
+def main(argv):
+    if len(argv) < 2 or argv[1] in ("-h", "--help"):
+        print(__doc__.strip())
+        return 0 if len(argv) >= 2 else 1
+    failed = False
+    for path in argv[1:]:
+        errors = lint_file(path)
+        if errors:
+            failed = True
+            for e in errors:
+                print(e)
+        else:
+            print(f"{path}: OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -42,6 +42,8 @@ fn main() {
     let centers_n = n / (2 * cluster_size); // half the corpus is clustered
     let mut rng = Xoshiro256::new(7);
 
+    let isa = cabin::sketch::kernels::active().isa.name();
+    println!("[bench_index] kernel_isa={isa}");
     println!("[bench_index] building {n}-sketch corpus (d={DIM}, {centers_n} clusters)");
     let centers: Vec<BitVec> = (0..centers_n).map(|_| random_sketch(&mut rng)).collect();
     let mut corpus: Vec<BitVec> = Vec::with_capacity(n);

@@ -6,20 +6,26 @@
 //!   (`ShardedStore::par_map_shards`, kept exactly for this comparison) —
 //!   the per-request thread-spawn tax, most visible at small k / high QPS.
 //! * **Scoring**: batch-major blocked scanning (one arena pass per shard
-//!   per batch, L1 tiles × 8-way unrolled multi-query popcount) vs the
-//!   scalar per-query heap scan (Q independent arena passes).
+//!   per batch, L1 tiles × the runtime-dispatched multi-query popcount
+//!   kernels) vs the scalar per-query heap scan (Q independent arena
+//!   passes).
 //!
 //! `topk_batch/Q64` at the large corpus is the acceptance lane: it runs
-//! the production path (executor + blocked kernels) against
+//! the production path (executor + blocked + dispatched kernels) against
 //! `scoped-scalar/Q64`, the pre-PR baseline reproduced verbatim below.
+//! The baseline calls [`cabin::sketch::kernels::scalar`] *explicitly* —
+//! the convenience wrappers in `sketch::bitvec` now route through the
+//! dispatch table, so going through them would silently benchmark SIMD
+//! against SIMD. `kernel/` micro-lanes time each usable ISA arm on the
+//! same words so per-arm gains stay visible next to the end-to-end lane.
 
 use cabin::bench::{black_box, Bench};
 use cabin::coordinator::protocol::Hit;
 use cabin::coordinator::router;
 use cabin::coordinator::store::ShardedStore;
 use cabin::coordinator::TopK;
-use cabin::sketch::bitvec::and_count_words;
 use cabin::sketch::cham::binhamming_from_stats;
+use cabin::sketch::kernels::{self, scalar::and_count_words};
 use cabin::sketch::BitVec;
 use cabin::util::rng::Xoshiro256;
 
@@ -35,7 +41,9 @@ fn corpus(n: usize) -> Vec<BitVec> {
 }
 
 /// The pre-executor, pre-blocking serving path, verbatim: scoped-spawn
-/// scatter + scalar per-query heap scan.
+/// scatter + scalar per-query heap scan. Scores with the scalar oracle
+/// kernel directly so the baseline stays scalar no matter which arm the
+/// dispatch table picked for the production path.
 fn scoped_scalar_topk_batch(store: &ShardedStore, queries: &[BitVec], k: usize) -> Vec<Vec<Hit>> {
     let d = store.sketch_dim();
     let wqs: Vec<f64> = queries.iter().map(|q| q.count_ones() as f64).collect();
@@ -69,10 +77,31 @@ fn scoped_scalar_topk_batch(store: &ShardedStore, queries: &[BitVec], k: usize) 
         .collect()
 }
 
+/// Per-arm micro-lanes: every usable ISA on identical words, so the
+/// dispatch win is measurable in isolation from scatter and heap costs.
+fn kernel_micro_lanes(b: &mut Bench) {
+    const WORDS: usize = 1 << 16; // 4 MiB of operand words per side
+    let mut rng = Xoshiro256::new(23);
+    let a: Vec<u64> = (0..WORDS).map(|_| rng.next_u64()).collect();
+    let v: Vec<u64> = (0..WORDS).map(|_| rng.next_u64()).collect();
+    for t in kernels::available() {
+        let name = t.isa.name();
+        b.bench_with_throughput(&format!("kernel/popcount/{name}"), Some(WORDS as f64), || {
+            black_box((t.popcount)(&a));
+        });
+        b.bench_with_throughput(&format!("kernel/and_count/{name}"), Some(WORDS as f64), || {
+            black_box((t.and_count)(&a, &v));
+        });
+    }
+}
+
 fn main() {
     let mut b = Bench::from_env("router");
     let fast = std::env::var("CABIN_BENCH_FAST").ok().as_deref() == Some("1");
     let sizes: &[usize] = if fast { &[20_000] } else { &[100_000, 1_000_000] };
+
+    println!("[bench_router] kernel_isa={}", kernels::active().isa.name());
+    kernel_micro_lanes(&mut b);
 
     for &n in sizes {
         let pts = corpus(n);

@@ -58,6 +58,8 @@ fn main() {
         100_000
     };
     let mut rng = Xoshiro256::new(7);
+    let isa = cabin::sketch::kernels::active().isa.name();
+    println!("[bench_topk] kernel_isa={isa}");
     println!("[bench_topk] building {n}-sketch corpus (d={DIM})");
     let sketches: Vec<BitVec> = (0..n)
         .map(|_| BitVec::from_indices(DIM, rng.sample_indices(DIM, 128)))

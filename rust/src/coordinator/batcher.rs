@@ -44,6 +44,8 @@
 //! stage breakdown.
 
 use super::metrics::Metrics;
+use super::protocol::WriteOpts;
+use super::server::now_ms;
 use super::store::{InsertTicket, MutationOp, MutationResult, MutationTicket, ShardedStore};
 use crate::data::CatVector;
 use crate::obs::{self, log as obs_log};
@@ -157,6 +159,18 @@ struct Pending {
     reply: SyncSender<InsertReply>,
 }
 
+/// One mutation in submission form — the shape every submit entry point
+/// collapses into ([`BatchSubmitter::submit_with`]). Expiry travels in
+/// the accompanying [`WriteOpts`] as a *relative* `ttl_ms`; the submit
+/// path stamps the absolute deadline once, on the primary, so the WAL
+/// and every replica carry deadlines, never TTLs.
+#[derive(Clone, Debug)]
+pub enum WriteOp {
+    Insert { vec: CatVector },
+    Delete { id: usize },
+    Upsert { id: usize, vec: CatVector },
+}
+
 /// Handle used by connection threads to submit inserts.
 #[derive(Clone)]
 pub struct BatchSubmitter {
@@ -180,24 +194,50 @@ impl BatchSubmitter {
             .map_err(|msg| anyhow::anyhow!(msg))
     }
 
-    /// Blocking submit; returns the assigned global id once the batch the
-    /// item landed in has been flushed *and* (on durable stores) its WAL
-    /// commit landed. A durability failure comes back as `Err`, not an id.
+    /// The one blocking submit entry point: queue `op` with per-write
+    /// options and return the affected id once the batch the item landed
+    /// in has been flushed *and* (on durable stores) its WAL commit
+    /// landed. A durability failure comes back as `Err`, not an id.
+    ///
+    /// `opts.ttl_ms` (relative, 0 = none; on upsert, 0 *clears* any
+    /// previous deadline) is stamped into an absolute unix-millis
+    /// deadline here; `opts.trace` rides the ticket into slow-op records.
+    /// `WriteOpts::default()` reproduces the historical plain write.
+    pub fn submit_with(&self, op: WriteOp, opts: &WriteOpts) -> anyhow::Result<usize> {
+        let deadline = match opts.ttl_ms {
+            0 => 0, // no expiry (and on upsert: clear any previous one)
+            t => now_ms().saturating_add(t),
+        };
+        let pending = match op {
+            WriteOp::Insert { vec } => PendingOp::Insert { vec, deadline },
+            WriteOp::Delete { id } => PendingOp::Delete { id },
+            WriteOp::Upsert { id, vec } => PendingOp::Upsert { id, vec, deadline },
+        };
+        self.submit(pending, opts.trace)
+    }
+
+    /// Plain blocking insert. Shim for
+    /// `submit_with(WriteOp::Insert { vec }, &WriteOpts::default())`.
     pub fn insert(&self, vec: CatVector) -> anyhow::Result<usize> {
         self.submit(PendingOp::Insert { vec, deadline: 0 }, 0)
     }
 
-    /// As [`BatchSubmitter::insert`], carrying the server's trace id.
+    /// Deprecated spelling of [`BatchSubmitter::submit_with`] with a bare
+    /// trace id; goes away after one release.
     pub fn insert_traced(&self, vec: CatVector, trace: u64) -> anyhow::Result<usize> {
         self.submit(PendingOp::Insert { vec, deadline: 0 }, trace)
     }
 
-    /// Insert with an absolute unix-millis expiry deadline (0 = none).
+    /// Insert with an already-absolute unix-millis expiry deadline
+    /// (0 = none) — the replica apply path and restarts use this to
+    /// preserve WAL-carried deadlines exactly; wire-facing callers want
+    /// [`BatchSubmitter::submit_with`] and a relative TTL instead.
     pub fn insert_with_deadline(&self, vec: CatVector, deadline: u64) -> anyhow::Result<usize> {
         self.submit(PendingOp::Insert { vec, deadline }, 0)
     }
 
-    /// As [`BatchSubmitter::insert_with_deadline`], with a trace id.
+    /// Deprecated spelling of [`BatchSubmitter::insert_with_deadline`]
+    /// with a trace id; goes away after one release.
     pub fn insert_with_deadline_traced(
         &self,
         vec: CatVector,
@@ -208,23 +248,28 @@ impl BatchSubmitter {
     }
 
     /// Delete a live id; the reply echoes the id. Deleting an id the
-    /// store does not hold is a per-op error, not a batch failure.
+    /// store does not hold is a per-op error, not a batch failure. Shim
+    /// for `submit_with(WriteOp::Delete { id }, &WriteOpts::default())`.
     pub fn delete(&self, id: usize) -> anyhow::Result<usize> {
         self.submit(PendingOp::Delete { id }, 0)
     }
 
-    /// As [`BatchSubmitter::delete`], with a trace id.
+    /// Deprecated spelling of [`BatchSubmitter::submit_with`] with a bare
+    /// trace id; goes away after one release.
     pub fn delete_traced(&self, id: usize, trace: u64) -> anyhow::Result<usize> {
         self.submit(PendingOp::Delete { id }, trace)
     }
 
     /// Replace the vector behind `id` (or resurrect a deleted id), with
-    /// an absolute expiry deadline (0 = clear any expiry).
+    /// an already-absolute expiry deadline (0 = clear any expiry) — see
+    /// [`BatchSubmitter::insert_with_deadline`] for when absolute
+    /// deadlines are the right form.
     pub fn upsert(&self, id: usize, vec: CatVector, deadline: u64) -> anyhow::Result<usize> {
         self.submit(PendingOp::Upsert { id, vec, deadline }, 0)
     }
 
-    /// As [`BatchSubmitter::upsert`], with a trace id.
+    /// Deprecated spelling of [`BatchSubmitter::upsert`] with a trace id;
+    /// goes away after one release.
     pub fn upsert_traced(
         &self,
         id: usize,

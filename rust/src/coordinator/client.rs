@@ -1,7 +1,8 @@
 //! Blocking TCP client for the coordinator — used by the examples, the
 //! end-to-end integration test and the load-generating bench.
 
-use super::protocol::{Hit, Request, Response};
+use super::protocol::{Hit, Request, Response, StreamRequest, WriteOpts};
+use super::stats::Stats;
 use crate::data::CatVector;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -32,27 +33,34 @@ impl Client {
         Response::from_json_line(line.trim())
     }
 
-    pub fn insert(&mut self, vec: CatVector) -> Result<usize> {
-        match self.call(&Request::Insert { vec })? {
-            Response::Inserted { id } => Ok(id),
-            Response::Error { message } => bail!("insert failed: {message}"),
-            other => bail!("unexpected response {other:?}"),
-        }
-    }
-
-    /// Insert with a relative time-to-live: the primary stamps the
-    /// absolute deadline and its background sweep deletes the row once it
-    /// passes (with sweep-interval granularity).
-    pub fn insert_ttl(&mut self, vec: CatVector, ttl_ms: u64) -> Result<usize> {
-        let req = match ttl_ms {
+    /// Insert a vector with per-write options — the one insert entry
+    /// point. `WriteOpts::default()` is a plain durable insert;
+    /// `WriteOpts::ttl(ms)` adds a relative time-to-live (the primary
+    /// stamps the absolute deadline and its background sweep deletes the
+    /// row once it passes, with sweep-interval granularity). The `trace`
+    /// option is server-internal and ignored on the wire.
+    pub fn insert_with(&mut self, vec: CatVector, opts: &WriteOpts) -> Result<usize> {
+        let req = match opts.ttl_ms {
             0 => Request::Insert { vec },
-            _ => Request::InsertTtl { vec, ttl_ms },
+            ttl_ms => Request::InsertTtl { vec, ttl_ms },
         };
         match self.call(&req)? {
             Response::Inserted { id } => Ok(id),
             Response::Error { message } => bail!("insert failed: {message}"),
             other => bail!("unexpected response {other:?}"),
         }
+    }
+
+    /// Plain insert. Shim for `insert_with(vec, &WriteOpts::default())`;
+    /// kept so existing callers compile unchanged.
+    pub fn insert(&mut self, vec: CatVector) -> Result<usize> {
+        self.insert_with(vec, &WriteOpts::default())
+    }
+
+    /// Deprecated spelling of `insert_with(vec, &WriteOpts::ttl(ttl_ms))`
+    /// — prefer that; this shim goes away after one release.
+    pub fn insert_ttl(&mut self, vec: CatVector, ttl_ms: u64) -> Result<usize> {
+        self.insert_with(vec, &WriteOpts::ttl(ttl_ms))
     }
 
     /// Delete a live id from the corpus (primary only; replicated to
@@ -66,13 +74,22 @@ impl Client {
     }
 
     /// Replace the vector behind `id` in place (or resurrect a deleted
-    /// id). `ttl_ms == 0` clears any previous expiry on the id.
-    pub fn upsert(&mut self, id: usize, vec: CatVector, ttl_ms: u64) -> Result<()> {
-        match self.call(&Request::Upsert { id, vec, ttl_ms })? {
+    /// id) — the one upsert entry point. `opts.ttl_ms == 0` clears any
+    /// previous expiry on the id.
+    pub fn upsert_with(&mut self, id: usize, vec: CatVector, opts: &WriteOpts) -> Result<()> {
+        let ttl_ms = opts.ttl_ms;
+        let req = Request::Upsert { id, vec, ttl_ms };
+        match self.call(&req)? {
             Response::Upserted { .. } => Ok(()),
             Response::Error { message } => bail!("upsert failed: {message}"),
             other => bail!("unexpected response {other:?}"),
         }
+    }
+
+    /// Deprecated spelling of `upsert_with` with a bare `ttl_ms` — prefer
+    /// that; this shim goes away after one release.
+    pub fn upsert(&mut self, id: usize, vec: CatVector, ttl_ms: u64) -> Result<()> {
+        self.upsert_with(id, vec, &WriteOpts { ttl_ms, trace: 0 })
     }
 
     pub fn query(&mut self, vec: CatVector, k: usize) -> Result<Vec<Hit>> {
@@ -100,6 +117,9 @@ impl Client {
         }
     }
 
+    /// Raw `stats` fields exactly as the server reported them, in wire
+    /// order. Prefer [`Client::typed_stats`] for field access by name —
+    /// this form survives for callers that iterate or diff snapshots.
     pub fn stats(&mut self) -> Result<Vec<(String, f64)>> {
         match self.call(&Request::Stats)? {
             Response::Stats { fields } => Ok(fields),
@@ -107,26 +127,37 @@ impl Client {
         }
     }
 
+    /// One `stats` round trip, decoded into the typed [`Stats`] view:
+    /// every schema field is a struct member (a typo is a compile error,
+    /// not a silent 0.0), and fields this client build does not know
+    /// (newer servers, dynamic `stage_*`/`repl_shard_lag_*` families) are
+    /// preserved in [`Stats::extra`].
+    pub fn typed_stats(&mut self) -> Result<Stats> {
+        Ok(Stats::from_fields(self.stats()?))
+    }
+
     /// Fetch one named stats field. A field the server did not report is a
     /// protocol-level `Err` — never a panic — so callers can probe for
     /// version-dependent counters safely.
     ///
-    /// Each call is a full `stats` round trip; to read several fields from
-    /// one consistent snapshot, call [`Client::stats`] once and look fields
-    /// up with [`super::metrics::stats_field`].
+    /// Deprecated spelling: prefer [`Client::typed_stats`] (one round trip,
+    /// compile-checked names) — string lookups survive for dynamic field
+    /// families only. Each call is a full `stats` round trip; to read
+    /// several fields from one consistent snapshot, call [`Client::stats`]
+    /// once and look fields up with [`super::metrics::stats_field`].
     pub fn stat(&mut self, name: &str) -> Result<f64> {
         let fields = self.stats()?;
         super::metrics::stats_field(&fields, name)
             .ok_or_else(|| anyhow::anyhow!("stats field '{name}' missing from response"))
     }
 
-    /// Fetch the server's Prometheus text exposition (`metrics_text` wire
-    /// op: every stats field plus full histogram bucket families). Works
-    /// against primaries and followers alike. The reply is a JSON header
-    /// line (`{"ok":true,"bytes":N}`) followed by N raw payload bytes,
-    /// framed like the replication sub-protocol.
+    /// Fetch the server's Prometheus text exposition (`metrics_text`
+    /// stream op: every stats field plus full histogram bucket families).
+    /// Works against primaries and followers alike. The reply is a JSON
+    /// header line (`{"ok":true,"bytes":N}`) followed by N raw payload
+    /// bytes — see `docs/PROTOCOL.md` for the stream framing.
     pub fn metrics_text(&mut self) -> Result<String> {
-        writeln!(self.writer, "{{\"op\":\"metrics_text\"}}")?;
+        writeln!(self.writer, "{}", StreamRequest::MetricsText.to_json_line())?;
         let mut header = String::new();
         let n = self.reader.read_line(&mut header)?;
         if n == 0 {

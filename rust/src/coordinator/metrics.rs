@@ -237,6 +237,13 @@ impl Metrics {
                 "persist_compactions".into(),
                 self.persist.compactions.load(Ordering::Relaxed) as f64,
             ),
+            // Which scoring-kernel arm the dispatch table selected (gauge;
+            // fixed for the process lifetime): 0 = scalar, 1 = avx2,
+            // 2 = avx512, 3 = neon — see `crate::sketch::kernels::Isa`.
+            (
+                "kernel_isa".into(),
+                crate::sketch::kernels::active().isa.code(),
+            ),
         ];
         out.extend(self.repl.stats_fields());
         // Per-stage pipeline histograms: count, upper-edge quantiles, and
@@ -411,6 +418,13 @@ mod tests {
     }
 
     #[test]
+    fn kernel_isa_surfaces_in_snapshot() {
+        let snap = Metrics::new().snapshot();
+        let code = stats_field(&snap, "kernel_isa").expect("kernel_isa missing");
+        assert_eq!(code, crate::sketch::kernels::active().isa.code());
+    }
+
+    #[test]
     fn stage_histograms_surface_in_snapshot() {
         let m = Metrics::new();
         m.stages.write_fsync.record_secs(0.002);
@@ -466,6 +480,7 @@ mod tests {
             "persist_group_commits",
             "persist_wal_dead_frames",
             "persist_compactions",
+            "kernel_isa",
             "repl_snapshots_served",
             "repl_tails_served",
             "repl_frames_shipped",

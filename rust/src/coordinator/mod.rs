@@ -45,8 +45,9 @@
 //! gauges surface as `executor_*` stats fields. Scans are *batch-major*:
 //! a `query_batch` ships the whole query block to each worker, which
 //! walks its arena once in L1-sized row tiles, scoring every query
-//! against each tile via the 8-way unrolled multi-query popcount kernels
-//! ([`crate::sketch::SketchMatrix::tile_and_counts`]) — so a Q-query
+//! against each tile via the runtime-dispatched multi-query popcount
+//! kernels ([`crate::sketch::SketchMatrix::tile_and_counts`], the widest
+//! ISA arm [`crate::sketch::kernels`] detects) — so a Q-query
 //! batch pays one arena pass, one scatter and one `|q̃|` precomputation
 //! instead of Q of each. Single queries are the Q = 1 case of the same
 //! path.
@@ -179,14 +180,16 @@ pub mod metrics;
 pub mod protocol;
 pub mod router;
 pub mod server;
+pub mod stats;
 pub mod store;
 pub mod topk;
 
-pub use batcher::{BatcherConfig, SketchBackend};
+pub use batcher::{BatcherConfig, SketchBackend, WriteOp};
 pub use executor::{ExecutorConfig, ShardExecutor};
 pub use metrics::{stats_field, ExecutorCounters, IndexCounters, Metrics};
-pub use protocol::{Request, Response};
+pub use protocol::{Request, Response, StreamRequest, WriteOpts, WAL_TAIL_DEFAULT_MAX_BYTES};
 pub use server::{Coordinator, CoordinatorConfig};
+pub use stats::Stats;
 pub use topk::TopK;
 
 // The index, persistence and replication knobs travel with the

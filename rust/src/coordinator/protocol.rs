@@ -31,19 +31,50 @@
 //! puller and flips the replica writable, returning the per-shard applied
 //! WAL sequences. Errors: `{"ok":false,"error":"…"}`.
 //!
-//! Three further ops are routed *before* request parsing because their
-//! replies are a JSON header line followed by raw payload bytes, which
-//! this enum cannot represent: `repl_snapshot` and `repl_wal_tail`
-//! (replication sub-protocol, see [`crate::replica::shipper`]) and
-//! `metrics_text` (Prometheus text exposition — header
-//! `{"ok":true,"bytes":N}`, then N bytes of `text/plain` metrics; see
-//! [`crate::obs::prom`]).
+//! ## Stream ops (framed raw payloads)
+//!
+//! Three ops reply with a JSON **header line followed by raw payload
+//! bytes**, which [`Response`] cannot represent. They share one
+//! [`StreamRequest`] envelope — a `"stream"` key instead of `"op"`:
+//!
+//! ```text
+//! {"stream":"repl_snapshot"}                → header {"ok":true,"generation":…,"shard_bytes":[…],…}
+//!                                             + concatenated shard snapshot bytes
+//! {"stream":"repl_wal_tail","shard":0,      → header {"ok":true,"frames":…,"bytes":N,…}
+//!  "from_seq":"812","max_bytes":1048576}      + N bytes of raw WAL frames
+//! {"stream":"metrics_text"}                 → header {"ok":true,"bytes":N}
+//!                                             + N bytes of text/plain Prometheus exposition
+//! ```
+//!
+//! The payload length is always carried by the header (`bytes`, or the
+//! `shard_bytes` array summed), so a reader drains exactly that many
+//! bytes after the newline — see [`crate::replica::shipper`] and
+//! [`crate::obs::prom`] for the payload producers, and `docs/PROTOCOL.md`
+//! for the full framing contract.
+//!
+//! **Deprecated spellings** (PR 5–7 era): the same three ops used to be
+//! hand-routed before request parsing as `{"op":"repl_snapshot"}`,
+//! `{"op":"repl_wal_tail",…}` and `{"op":"metrics_text"}`. Those
+//! spellings still parse — [`StreamRequest::from_json_line`] accepts
+//! both — and answer byte-identically (pinned by
+//! `tests/protocol_compat.rs`), but new clients should send the
+//! `"stream"` envelope; the `"op"` forms will be removed after one
+//! release.
+//!
+//! ## Validation
 //!
 //! Validation happens here, before anything reaches the router: `k == 0`
 //! is rejected with an error response (the seed let it through and the
 //! top-k kernel underflowed `hits[k - 1]`, killing the shard worker — and,
 //! via the scatter/gather `join().unwrap()`, the whole connection), and
 //! `query_batch` elements are dimension-checked individually.
+//!
+//! ## Write options
+//!
+//! The per-write knobs (TTL, trace id) travel as one [`WriteOpts`]
+//! struct through `Client::insert_with`/`upsert_with` and the batcher's
+//! options-based submit path; `WriteOpts::default()` reproduces the
+//! plain untimed, untraced write exactly.
 
 use crate::data::CatVector;
 use crate::util::json::Json;
@@ -107,6 +138,141 @@ pub enum Response {
     Pong,
     ShuttingDown,
     Error { message: String },
+}
+
+/// Per-write options carried by the unified mutation entry points
+/// (`Client::insert_with`/`upsert_with`, the batcher's options-based
+/// submit). `Default` reproduces the historical plain write exactly: no
+/// expiry, no trace stamp.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WriteOpts {
+    /// Relative time-to-live in milliseconds; 0 means "no expiry" (and,
+    /// on upsert, *clears* any previous deadline on the id). The server
+    /// stamps the absolute deadline at apply time.
+    pub ttl_ms: u64,
+    /// Trace id stamped on the write as it flows through batcher tickets
+    /// and slow-op records. Client-side this stays 0 — the server assigns
+    /// per-connection trace ids; the field exists so server-internal
+    /// submitters thread theirs through the same options struct.
+    pub trace: u64,
+}
+
+impl WriteOpts {
+    /// Shorthand for "expire after `ttl_ms`" with everything else default.
+    pub fn ttl(ttl_ms: u64) -> Self {
+        WriteOpts { ttl_ms, ..Default::default() }
+    }
+}
+
+/// Header of a framed stream op: a JSON line whose reply is a JSON
+/// header line **plus raw payload bytes** (see the module docs for the
+/// framing). Parsed before [`Request`] in the connection loop — these
+/// three ops used to be hand-routed ad hoc; this envelope is now the one
+/// routing point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamRequest {
+    /// Full snapshot of the current persisted generation (replication
+    /// bootstrap): header carries the configuration fingerprint,
+    /// per-shard base sequences and `shard_bytes`; the payload is the
+    /// shard snapshot files concatenated in shard order.
+    ReplSnapshot,
+    /// Raw WAL frame range for one shard starting at `from_seq`
+    /// (exclusive): header carries `frames`/`bytes`/`live_seq`; the
+    /// payload is `bytes` of verbatim checksummed frames.
+    ReplWalTail {
+        shard: usize,
+        from_seq: u64,
+        max_bytes: usize,
+    },
+    /// Prometheus text exposition: header `{"ok":true,"bytes":N}`, then
+    /// `N` bytes of `text/plain; version=0.0.4`.
+    MetricsText,
+}
+
+/// Default `max_bytes` for a WAL tail chunk when the request omits it.
+pub const WAL_TAIL_DEFAULT_MAX_BYTES: usize = 1 << 20;
+
+impl StreamRequest {
+    /// Cheap pre-parse sniff: could this line be a stream op (either the
+    /// `"stream"` envelope or one of the deprecated `"op"` spellings)?
+    /// False positives are fine — [`StreamRequest::from_json_line`]
+    /// returns `Ok(None)` for them and the line falls through to
+    /// [`Request`] parsing; the point is that ordinary request lines skip
+    /// the extra parse entirely.
+    pub fn looks_like(line: &str) -> bool {
+        line.contains("\"stream\"") || line.contains("\"repl_") || line.contains("\"metrics_text\"")
+    }
+
+    /// Parse a header line. `Ok(None)` means "not a stream op" (route it
+    /// to [`Request::from_json_line`]); `Err` means it *is* one but
+    /// malformed (answer with an error line). Accepts the `"stream"`
+    /// envelope and, for one release, the deprecated `"op"` spellings.
+    pub fn from_json_line(line: &str) -> Result<Option<StreamRequest>> {
+        let obj = crate::util::json::parse(line)?;
+        let name = match obj.get("stream").and_then(|s| s.as_str()) {
+            Some(s) => s.to_string(),
+            None => match obj.get("op").and_then(|s| s.as_str()) {
+                // deprecated spellings, kept answering for one release
+                Some(op @ ("repl_snapshot" | "repl_wal_tail" | "metrics_text")) => op.to_string(),
+                _ => return Ok(None),
+            },
+        };
+        Ok(Some(match name.as_str() {
+            "repl_snapshot" => StreamRequest::ReplSnapshot,
+            "repl_wal_tail" => {
+                let shard = obj.req_usize("shard")?;
+                let from_seq = parse_seq(&obj, "from_seq")?;
+                let max_bytes = obj
+                    .get("max_bytes")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(WAL_TAIL_DEFAULT_MAX_BYTES)
+                    .max(1);
+                StreamRequest::ReplWalTail { shard, from_seq, max_bytes }
+            }
+            "metrics_text" => StreamRequest::MetricsText,
+            other => bail!("unknown stream op '{other}'"),
+        }))
+    }
+
+    /// Serialise in the canonical `"stream"` envelope (client side).
+    pub fn to_json_line(&self) -> String {
+        match self {
+            StreamRequest::ReplSnapshot => r#"{"stream":"repl_snapshot"}"#.to_string(),
+            StreamRequest::ReplWalTail { shard, from_seq, max_bytes } => Json::obj(vec![
+                ("stream", Json::Str("repl_wal_tail".into())),
+                ("shard", Json::Num(*shard as f64)),
+                // string: seqs are u64 and must roundtrip exactly through
+                // the f64-backed JSON model (like manifest seqs)
+                ("from_seq", Json::Str(from_seq.to_string())),
+                ("max_bytes", Json::Num(*max_bytes as f64)),
+            ])
+            .to_string(),
+            StreamRequest::MetricsText => r#"{"stream":"metrics_text"}"#.to_string(),
+        }
+    }
+
+    /// The op name, for logs and counters.
+    pub fn op(&self) -> &'static str {
+        match self {
+            StreamRequest::ReplSnapshot => "repl_snapshot",
+            StreamRequest::ReplWalTail { .. } => "repl_wal_tail",
+            StreamRequest::MetricsText => "metrics_text",
+        }
+    }
+}
+
+/// Sequence field: accepts the canonical string form (exact u64) and the
+/// numeric form old clients sent for small values. Semantics and error
+/// text match the pre-envelope parser (`replica::seq_field`) so malformed
+/// requests keep drawing the same error lines.
+fn parse_seq(obj: &Json, key: &str) -> Result<u64> {
+    match obj.get(key) {
+        Some(Json::Str(s)) => s
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("field '{key}' is not a u64")),
+        Some(Json::Num(n)) if *n >= 0.0 => Ok(*n as u64),
+        _ => bail!("missing/invalid sequence field '{key}'"),
+    }
 }
 
 /// Dense `"vec": [..]` array → [`CatVector`]; length must equal the corpus
@@ -767,5 +933,87 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn stream_envelope_roundtrips() {
+        for req in [
+            StreamRequest::ReplSnapshot,
+            StreamRequest::ReplWalTail {
+                shard: 2,
+                from_seq: u64::MAX - 1,
+                max_bytes: 4096,
+            },
+            StreamRequest::MetricsText,
+        ] {
+            let line = req.to_json_line();
+            assert!(StreamRequest::looks_like(&line), "sniff missed {line}");
+            let back = StreamRequest::from_json_line(&line).unwrap();
+            assert_eq!(back, Some(req), "line {line}");
+        }
+    }
+
+    #[test]
+    fn stream_accepts_deprecated_op_spellings() {
+        // PR 5–7 era lines, pinned verbatim by tests/protocol_compat.rs
+        let snap = StreamRequest::from_json_line(r#"{"op":"repl_snapshot"}"#).unwrap();
+        assert_eq!(snap, Some(StreamRequest::ReplSnapshot));
+        let tail = r#"{"op":"repl_wal_tail","shard":1,"from_seq":"7"}"#;
+        assert_eq!(
+            StreamRequest::from_json_line(tail).unwrap(),
+            Some(StreamRequest::ReplWalTail {
+                shard: 1,
+                from_seq: 7,
+                max_bytes: WAL_TAIL_DEFAULT_MAX_BYTES,
+            })
+        );
+        let met = StreamRequest::from_json_line(r#"{"op":"metrics_text"}"#).unwrap();
+        assert_eq!(met, Some(StreamRequest::MetricsText));
+    }
+
+    #[test]
+    fn stream_parse_ignores_ordinary_requests() {
+        for line in [
+            r#"{"op":"insert","vec":[0,1,2]}"#,
+            r#"{"op":"stats"}"#,
+            r#"{"op":"query","idx":[0],"val":[1],"dim":3,"k":1}"#,
+        ] {
+            assert_eq!(StreamRequest::from_json_line(line).unwrap(), None, "line {line}");
+        }
+        // the sniff may false-positive (e.g. a query mentioning "repl_"
+        // in a string) — parsing must still fall through cleanly
+        assert!(!StreamRequest::looks_like(r#"{"op":"insert","vec":[0,1,2]}"#));
+    }
+
+    #[test]
+    fn stream_wal_tail_field_forms_and_errors() {
+        // numeric from_seq (old clients) and explicit max_bytes
+        let line = r#"{"stream":"repl_wal_tail","shard":0,"from_seq":12,"max_bytes":64}"#;
+        assert_eq!(
+            StreamRequest::from_json_line(line).unwrap(),
+            Some(StreamRequest::ReplWalTail {
+                shard: 0,
+                from_seq: 12,
+                max_bytes: 64,
+            })
+        );
+        // max_bytes is clamped to at least one byte so a tail always makes
+        // progress
+        let clamped = r#"{"stream":"repl_wal_tail","shard":0,"from_seq":"0","max_bytes":0}"#;
+        match StreamRequest::from_json_line(clamped).unwrap() {
+            Some(StreamRequest::ReplWalTail { max_bytes, .. }) => assert_eq!(max_bytes, 1),
+            other => panic!("{other:?}"),
+        }
+        // malformed stream ops are errors, not pass-throughs
+        assert!(StreamRequest::from_json_line(r#"{"stream":"repl_wal_tail"}"#).is_err());
+        let bad_seq = r#"{"stream":"repl_wal_tail","shard":0,"from_seq":-3}"#;
+        assert!(StreamRequest::from_json_line(bad_seq).is_err());
+        assert!(StreamRequest::from_json_line(r#"{"stream":"no_such_op"}"#).is_err());
+    }
+
+    #[test]
+    fn write_opts_default_matches_plain_write() {
+        assert_eq!(WriteOpts::default(), WriteOpts { ttl_ms: 0, trace: 0 });
+        assert_eq!(WriteOpts::ttl(250), WriteOpts { ttl_ms: 250, trace: 0 });
     }
 }

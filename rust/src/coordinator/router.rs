@@ -13,8 +13,9 @@
 //! * **Blocked full scan** — walk the shard's contiguous arena in tiles
 //!   of [`crate::sketch::SketchMatrix::tile_rows`] rows (sized to keep a
 //!   tile resident in L1), scoring every query of the batch against each
-//!   tile via the 8-way unrolled multi-query kernel
-//!   ([`SketchMatrix::tile_and_counts`]) before moving to the next tile:
+//!   tile via the runtime-dispatched multi-query popcount kernel
+//!   ([`SketchMatrix::tile_and_counts`], the widest ISA arm
+//!   [`crate::sketch::kernels`] detected) before moving to the next tile:
 //!   batch-major, so a Q-query batch streams the arena once instead of Q
 //!   times. Candidates feed the bounded heap in [`super::topk`] (one
 //!   comparison against the current k-th-best per candidate); candidate
@@ -22,7 +23,7 @@
 //! * **Indexed** — when the shard carries an [`crate::index::LshIndex`]
 //!   and holds at least `min_rows_for_index` rows, gather candidate rows
 //!   from the index's banded multi-probe buckets per query and rerank
-//!   only those with the exact Cham estimate, via the same unrolled
+//!   only those with the exact Cham estimate, via the same dispatched
 //!   kernel in its gathered form ([`SketchMatrix::gather_and_counts`]).
 //!   Queries whose candidate set cannot guarantee `min(k, rows)` hits —
 //!   or covers more than half the shard, where reranking would cost more
@@ -30,10 +31,11 @@
 //!   remaining batch, so an indexed query never returns fewer hits than
 //!   an unindexed one.
 //!
-//! Both paths produce bit-for-bit the distances of the scalar
-//! `and_count_words` kernel (integer popcounts; the blocked kernels only
-//! change traversal order per query, not offer order), so indexed rerank,
-//! blocked scan and the pre-blocking scalar scan agree exactly.
+//! Both paths produce bit-for-bit the distances of the scalar oracle
+//! kernel ([`crate::sketch::kernels::scalar`] — integer popcounts; the
+//! SIMD arms and blocked traversal change evaluation order, never the
+//! counts), so indexed rerank, blocked scan and the pre-blocking scalar
+//! scan agree exactly on every ISA.
 //!
 //! [`topk_batch`] amortises the scatter: one executor job per shard and
 //! one arena pass serve a whole batch of queries, with per-query `|q̃|`
@@ -124,7 +126,7 @@ fn cham_dist(wq: f64, weight: usize, ip: usize, d: usize) -> f64 {
 
 /// Blocked batch-major full scan: all `sel` queries of the batch against
 /// every arena row, tile by tile — each tile of rows is pulled into cache
-/// once and scored against the whole query block via the 8-way unrolled
+/// once and scored against the whole query block via the dispatched
 /// multi-query kernel. Appends each query's hits into its heap in arena
 /// row order (the same offer order as a scalar per-query walk, so results
 /// are bit-for-bit identical to the pre-blocking path).
@@ -158,7 +160,7 @@ fn blocked_full_scan(shard: &Shard, ctx: &ScatterCtx, sel: &[usize], heaps: &mut
 }
 
 /// Indexed rerank of one query's candidate rows, via the gathered form of
-/// the same unrolled kernel the blocked scan uses.
+/// the same dispatched kernel the blocked scan uses.
 fn rerank_candidates(shard: &Shard, ctx: &ScatterCtx, qi: usize, cands: &[u32]) -> Vec<Hit> {
     let mut counts = vec![0usize; cands.len()];
     shard

@@ -8,15 +8,16 @@
 //! connection's requests with a trace id (`conn * 1e6 + seq`) that rides
 //! batcher tickets so slow-op records correlate across threads. Queries
 //! additionally carry a per-request [`crate::obs::ReadSpan`] whose
-//! critical-path breakdown lands in the `server/slow_op` record. The
-//! `metrics_text` wire op (Prometheus text format) is routed before
-//! request parsing, like the replication sub-protocol, because its reply
-//! is a header line + raw payload.
+//! critical-path breakdown lands in the `server/slow_op` record. Stream
+//! ops (`repl_snapshot`, `repl_wal_tail`, `metrics_text`) — whose replies
+//! are a JSON header line + raw payload bytes — are parsed as one
+//! [`StreamRequest`] envelope before request parsing and dispatched
+//! through a single `handle_stream` routing point.
 
-use super::batcher::{Batcher, BatcherConfig, SketchBackend};
+use super::batcher::{Batcher, BatcherConfig, SketchBackend, WriteOp};
 use super::executor::ExecutorConfig;
 use super::metrics::Metrics;
-use super::protocol::{Request, Response};
+use super::protocol::{Request, Response, StreamRequest, WriteOpts};
 use super::router;
 use super::store::ShardedStore;
 use crate::index::IndexConfig;
@@ -163,6 +164,15 @@ impl Coordinator {
             config.log_json,
         );
         obs::set_slow_op_ms(config.slow_op_ms);
+        // Scoring-kernel dispatch is decided once per process; record the
+        // selected ISA at startup (also surfaced as the `kernel_isa` gauge
+        // in `stats` / `metrics_text`).
+        let isa = crate::sketch::kernels::active().isa;
+        obs_log::info(
+            "coordinator",
+            "kernel_isa_selected",
+            &[("isa", obs_log::V::s(isa.name().to_string()))],
+        );
         // Pin the index knobs to what the shards will actually build
         // (band_bits clamps to min(64, sketch_dim), bands to ≥ 1), so the
         // `index_cfg_*` stats fields always describe the live indexes.
@@ -329,6 +339,12 @@ impl Coordinator {
 
     /// Dispatch one request (thread-safe). Untraced — in-process callers
     /// (tests, examples, benches) get trace id 0, meaning "no trace".
+    /// The batcher's submit handle — every mutation arm routes through
+    /// its [`BatchSubmitter::submit_with`](super::batcher::BatchSubmitter::submit_with).
+    fn submitter(&self) -> &super::batcher::BatchSubmitter {
+        &self.batcher.submitter
+    }
+
     pub fn handle_request(&self, req: Request) -> Response {
         self.handle_request_traced(req, 0)
     }
@@ -379,7 +395,8 @@ impl Coordinator {
                     return resp;
                 }
                 self.metrics.inserts.fetch_add(1, Ordering::Relaxed);
-                match self.batcher.submitter.insert_traced(vec, trace) {
+                let opts = WriteOpts { ttl_ms: 0, trace };
+                match self.submitter().submit_with(WriteOp::Insert { vec }, &opts) {
                     Ok(id) => Response::Inserted { id },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -395,14 +412,10 @@ impl Coordinator {
                 }
                 self.metrics.inserts.fetch_add(1, Ordering::Relaxed);
                 // the wire's relative TTL becomes an absolute deadline
-                // here, once, on the primary — the WAL and every replica
-                // carry the deadline, not the TTL
-                let deadline = now_ms().saturating_add(ttl_ms);
-                match self
-                    .batcher
-                    .submitter
-                    .insert_with_deadline_traced(vec, deadline, trace)
-                {
+                // inside submit_with, once, on the primary — the WAL and
+                // every replica carry the deadline, not the TTL
+                let opts = WriteOpts { ttl_ms, trace };
+                match self.submitter().submit_with(WriteOp::Insert { vec }, &opts) {
                     Ok(id) => Response::Inserted { id },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -417,7 +430,8 @@ impl Coordinator {
                     return resp;
                 }
                 self.metrics.deletes.fetch_add(1, Ordering::Relaxed);
-                match self.batcher.submitter.delete_traced(id, trace) {
+                let opts = WriteOpts { ttl_ms: 0, trace };
+                match self.submitter().submit_with(WriteOp::Delete { id }, &opts) {
                     Ok(id) => Response::Deleted { id },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -432,11 +446,9 @@ impl Coordinator {
                     return resp;
                 }
                 self.metrics.upserts.fetch_add(1, Ordering::Relaxed);
-                let deadline = match ttl_ms {
-                    0 => 0, // no expiry (clears any previous deadline)
-                    t => now_ms().saturating_add(t),
-                };
-                match self.batcher.submitter.upsert_traced(id, vec, deadline, trace) {
+                // ttl_ms == 0 clears any previous deadline on the id
+                let opts = WriteOpts { ttl_ms, trace };
+                match self.submitter().submit_with(WriteOp::Upsert { id, vec }, &opts) {
                     Ok(id) => Response::Upserted { id },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -699,19 +711,28 @@ impl Coordinator {
             if trimmed.is_empty() {
                 continue;
             }
-            // replication sub-protocol (repl_snapshot / repl_wal_tail):
+            // Stream ops (repl_snapshot / repl_wal_tail / metrics_text):
             // replies are a JSON header line + raw payload bytes, which
-            // the Response enum cannot carry — route them before request
-            // parsing. Any durable server can ship (a follower can feed
-            // further followers); a non-durable one answers an error line.
-            if replica::shipper::try_handle(trimmed, &self.store, &self.metrics.repl, &mut writer)?
-            {
-                continue;
-            }
-            // metrics_text (Prometheus exposition) replies the same way:
-            // a JSON header line, then raw payload bytes.
-            if self.try_handle_metrics_text(trimmed, &mut writer)? {
-                continue;
+            // the Response enum cannot carry — parse the StreamRequest
+            // envelope (canonical `"stream"` key, or the deprecated `"op"`
+            // spellings for one release) before request parsing and route
+            // through the single dispatch point below.
+            if StreamRequest::looks_like(trimmed) {
+                match StreamRequest::from_json_line(trimmed) {
+                    Ok(Some(sreq)) => {
+                        self.handle_stream(&sreq, &mut writer)?;
+                        continue;
+                    }
+                    Ok(None) => {} // ordinary request; fall through
+                    Err(e) => {
+                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let resp = Response::Error {
+                            message: format!("{e:#}"),
+                        };
+                        writeln!(writer, "{}", resp.to_json_line())?;
+                        continue;
+                    }
+                }
             }
             req_seq += 1;
             let trace = conn.saturating_mul(1_000_000).saturating_add(req_seq);
@@ -736,23 +757,40 @@ impl Coordinator {
         }
     }
 
-    /// Route a `metrics_text` request: Prometheus text exposition of every
-    /// stats field plus full histogram bucket families. Replies with a
+    /// The one routing point for parsed stream ops (header line + raw
+    /// payload framing — see [`StreamRequest`] and `docs/PROTOCOL.md`).
+    /// Replication ops are served by any durable node (a follower can
+    /// feed further followers; a non-durable server answers an error
+    /// line); `metrics_text` is served by primaries and followers alike —
+    /// scraping must not depend on role. Transport failures bubble as
+    /// `io::Error` like any connection write.
+    fn handle_stream<W: Write>(&self, req: &StreamRequest, writer: &mut W) -> std::io::Result<()> {
+        match req {
+            StreamRequest::ReplSnapshot => {
+                replica::shipper::serve_snapshot(&self.store, &self.metrics.repl, writer)
+            }
+            StreamRequest::ReplWalTail {
+                shard,
+                from_seq,
+                max_bytes,
+            } => replica::shipper::serve_wal_tail(
+                &self.store,
+                &self.metrics.repl,
+                *shard,
+                *from_seq,
+                *max_bytes,
+                writer,
+            ),
+            StreamRequest::MetricsText => self.serve_metrics_text(writer),
+        }
+    }
+
+    /// Serve `metrics_text`: Prometheus text exposition of every stats
+    /// field plus full histogram bucket families. Replies with a
     /// `{"ok":true,"bytes":N}` header line followed by N raw payload
-    /// bytes, mirroring the replication sub-protocol's framing (the text
-    /// body cannot ride the line-JSON `Response` enum). Served by
-    /// primaries and followers alike — scraping must not depend on role.
-    fn try_handle_metrics_text<W: Write>(&self, line: &str, writer: &mut W) -> Result<bool> {
-        // cheap pre-filter before the JSON parse, like the repl ops
-        if !line.contains("\"metrics_text\"") {
-            return Ok(false);
-        }
-        let Ok(obj) = crate::util::json::parse(line) else {
-            return Ok(false); // malformed JSON: let the normal path report it
-        };
-        if obj.get("op").and_then(|o| o.as_str()) != Some("metrics_text") {
-            return Ok(false);
-        }
+    /// bytes, mirroring the replication stream ops' framing (the text
+    /// body cannot ride the line-JSON `Response` enum).
+    fn serve_metrics_text<W: Write>(&self, writer: &mut W) -> std::io::Result<()> {
         let body = obs::prom::render(&self.stats_fields(), &self.metrics.histogram_snapshots());
         let header = crate::util::json::Json::obj(vec![
             ("ok", crate::util::json::Json::Bool(true)),
@@ -761,7 +799,7 @@ impl Coordinator {
         writeln!(writer, "{header}")?;
         writer.write_all(body.as_bytes())?;
         writer.flush()?;
-        Ok(true)
+        Ok(())
     }
 }
 
@@ -1031,16 +1069,21 @@ mod tests {
             k: 2,
         });
         // non-matching lines fall through to the ordinary request path
+        assert_eq!(
+            StreamRequest::from_json_line(r#"{"op":"ping"}"#).unwrap(),
+            None
+        );
+        // a metrics_text line (canonical envelope or the deprecated `"op"`
+        // spelling) answers header + exactly `bytes` of payload
+        let sreq = StreamRequest::from_json_line(r#"{"op":"metrics_text"}"#)
+            .unwrap()
+            .expect("deprecated spelling still parses");
+        assert_eq!(
+            StreamRequest::from_json_line(r#"{"stream":"metrics_text"}"#).unwrap(),
+            Some(sreq.clone())
+        );
         let mut out = Vec::new();
-        assert!(!c
-            .try_handle_metrics_text(r#"{"op":"ping"}"#, &mut out)
-            .unwrap());
-        assert!(out.is_empty());
-        // a metrics_text line answers header + exactly `bytes` of payload
-        let mut out = Vec::new();
-        assert!(c
-            .try_handle_metrics_text(r#"{"op":"metrics_text"}"#, &mut out)
-            .unwrap());
+        c.handle_stream(&sreq, &mut out).unwrap();
         let text = String::from_utf8(out).unwrap();
         let (header, body) = text.split_once('\n').unwrap();
         let h = crate::util::json::parse(header).unwrap();

@@ -1,0 +1,218 @@
+//! Typed view of the `stats` wire response.
+//!
+//! The wire keeps its shape — `stats` answers a flat JSON object of
+//! numeric fields, decoded as ordered `(name, value)` pairs
+//! ([`Response::Stats`](super::protocol::Response)) — but string-keyed
+//! lookups (`client.stat("queires")`) fail at runtime with a typo'd name
+//! and a silent `Err`. [`Stats`] turns every *schema* field into a
+//! struct member, so the lookup is checked at compile time, while
+//! anything this build does not know — fields added by newer servers,
+//! and the dynamic families (`stage_*`, `repl_applied_seq_shard{i}`,
+//! `repl_lag_shard{i}`, `persist_next_seq_shard{i}`,
+//! `persist_wal_live_bytes`) — is preserved verbatim in
+//! [`Stats::extra`], in arrival order. Nothing is dropped:
+//! [`Stats::to_fields`] reproduces every pair (schema members first, in
+//! schema order, then `extra`).
+//!
+//! The schema member list is generated from one name table by
+//! `stats_struct!`, so the struct, [`Stats::FIELD_NAMES`],
+//! [`Stats::from_fields`], [`Stats::get`] and [`Stats::to_fields`]
+//! cannot drift apart. Wire names are pinned by the golden test in
+//! [`super::metrics`] (`stats_schema_is_stable_and_unique`) plus the
+//! `index_cfg_*`/`persist_cfg_*` config tests — renaming a member here
+//! without those tests failing is impossible, which is the compat
+//! contract: this module may grow fields, never rename them.
+
+/// Generate [`Stats`]: one `pub f64` member per schema field, plus the
+/// `extra` spillover, with the name table shared by every accessor.
+macro_rules! stats_struct {
+    ($($field:ident),+ $(,)?) => {
+        /// One `stats` snapshot with every schema field typed. See the
+        /// module docs for the schema/`extra` split and the compat
+        /// contract; construct with [`Stats::from_fields`] (or
+        /// `Client::typed_stats`).
+        #[derive(Clone, Debug, Default, PartialEq)]
+        pub struct Stats {
+            $(pub $field: f64,)+
+            /// Fields outside the schema, in arrival order: dynamic
+            /// per-shard/per-stage families and anything a newer server
+            /// added. Look up with [`Stats::get`].
+            pub extra: Vec<(String, f64)>,
+        }
+
+        impl Stats {
+            /// Every schema member, in declaration (= wire) order.
+            pub const FIELD_NAMES: &[&str] = &[$(stringify!($field)),+];
+
+            /// Decode a `stats` reply: schema names fill their members,
+            /// everything else lands in [`Stats::extra`]. A schema field
+            /// the server did not send stays 0.0 — exactly what the
+            /// server reports for a counter it has never incremented.
+            pub fn from_fields(fields: Vec<(String, f64)>) -> Stats {
+                let mut s = Stats::default();
+                for (name, value) in fields {
+                    match name.as_str() {
+                        $(stringify!($field) => s.$field = value,)+
+                        _ => s.extra.push((name, value)),
+                    }
+                }
+                s
+            }
+
+            /// Name-based lookup across schema members *and* `extra` —
+            /// for dynamic names built at runtime. Prefer the members
+            /// for schema fields.
+            pub fn get(&self, name: &str) -> Option<f64> {
+                match name {
+                    $(stringify!($field) => Some(self.$field),)+
+                    _ => super::metrics::stats_field(&self.extra, name),
+                }
+            }
+
+            /// Re-encode as `(name, value)` pairs: schema members first
+            /// in schema order, then `extra` in arrival order. Feeds
+            /// anything that consumed `Client::stats` output.
+            pub fn to_fields(&self) -> Vec<(String, f64)> {
+                let mut out = vec![$((stringify!($field).to_string(), self.$field)),+];
+                out.extend(self.extra.iter().cloned());
+                out
+            }
+        }
+    };
+}
+
+stats_struct! {
+    // write/read request counters
+    inserts,
+    deletes,
+    upserts,
+    ttl_expirations,
+    queries,
+    query_batches,
+    distances,
+    heatmaps,
+    batches_flushed,
+    batch_items,
+    errors,
+    // sketching backend
+    xla_batches,
+    native_batches,
+    // LSH index read path
+    index_probes,
+    index_candidates,
+    index_reranked,
+    index_fallbacks,
+    index_indexed_scans,
+    // shard-executor runtime
+    executor_queue_depth,
+    executor_busy_workers,
+    executor_jobs,
+    executor_scatters,
+    executor_job_panics,
+    // persistence
+    persist_wal_records,
+    persist_wal_bytes,
+    persist_snapshots,
+    persist_recovery_ms,
+    persist_generation,
+    persist_group_commits,
+    persist_wal_dead_frames,
+    persist_compactions,
+    // scoring-kernel dispatch (0 scalar / 1 avx2 / 2 avx512 / 3 neon)
+    kernel_isa,
+    // replication
+    repl_snapshots_served,
+    repl_tails_served,
+    repl_frames_shipped,
+    repl_bytes_shipped,
+    repl_frames_applied,
+    repl_bytes_applied,
+    repl_connects,
+    repl_stalls,
+    repl_move_defers,
+    repl_diverged,
+    repl_caught_up,
+    // end-to-end latency summaries
+    insert_p50_ms,
+    insert_p99_ms,
+    query_p50_ms,
+    query_p99_ms,
+    // server-level config echo + role (always present in a server reply)
+    index_cfg_mode,
+    index_cfg_bands,
+    index_cfg_band_bits,
+    index_cfg_probes,
+    index_cfg_auto_min_rows,
+    persist_cfg_mode,
+    persist_cfg_fsync,
+    persist_cfg_snapshot_every,
+    persist_cfg_commit_window_us,
+    persist_cfg_wal_max_bytes,
+    persist_cfg_compact_dead_frames,
+    repl_role,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_names_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for name in Stats::FIELD_NAMES {
+            assert!(seen.insert(*name), "duplicate schema field {name}");
+        }
+    }
+
+    #[test]
+    fn from_fields_routes_schema_and_extra() {
+        let s = Stats::from_fields(vec![
+            ("queries".into(), 7.0),
+            ("stage_read_scan_p99_ms".into(), 1.25),
+            ("kernel_isa".into(), 1.0),
+            ("from_the_future".into(), 42.0),
+        ]);
+        assert_eq!(s.queries, 7.0);
+        assert_eq!(s.kernel_isa, 1.0);
+        assert_eq!(s.inserts, 0.0); // unsent schema field stays zero
+        assert_eq!(
+            s.extra,
+            vec![
+                ("stage_read_scan_p99_ms".to_string(), 1.25),
+                ("from_the_future".to_string(), 42.0),
+            ]
+        );
+        // get() spans both sides of the split
+        assert_eq!(s.get("queries"), Some(7.0));
+        assert_eq!(s.get("stage_read_scan_p99_ms"), Some(1.25));
+        assert_eq!(s.get("nope"), None);
+    }
+
+    #[test]
+    fn to_fields_preserves_every_pair() {
+        let fields = vec![
+            ("inserts".into(), 3.0),
+            ("stage_write_wal_count".into(), 9.0),
+        ];
+        let back = Stats::from_fields(fields).to_fields();
+        assert_eq!(back.len(), Stats::FIELD_NAMES.len() + 1);
+        assert!(back.contains(&("inserts".to_string(), 3.0)));
+        assert!(back.contains(&("stage_write_wal_count".to_string(), 9.0)));
+        // schema members lead, in schema order
+        let names: Vec<&str> = back.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(&names[..Stats::FIELD_NAMES.len()], Stats::FIELD_NAMES);
+    }
+
+    #[test]
+    fn schema_covers_every_static_metrics_field() {
+        // every name Metrics::snapshot emits is either a typed member or
+        // one of the dynamic stage_* family — nothing silently becomes
+        // `extra` on a plain in-memory server
+        for (name, _) in super::super::metrics::Metrics::new().snapshot() {
+            assert!(
+                Stats::FIELD_NAMES.contains(&name.as_str()) || name.starts_with("stage_"),
+                "snapshot field {name} missing from the Stats schema"
+            );
+        }
+    }
+}

@@ -1,3 +1,8 @@
+// The AVX-512 kernel arm uses intrinsics that are unstable at the crate
+// MSRV; the default-off `avx512` cargo feature opts into them (and
+// therefore into a nightly toolchain). Everything else builds on stable.
+#![cfg_attr(feature = "avx512", feature(stdarch_x86_avx512))]
+
 //! # cabin — Efficient Binary Embedding of Categorical Data using BinSketch
 //!
 //! A full reproduction of Verma, Pratap & Bera, *"Efficient Binary Embedding
@@ -16,8 +21,11 @@
 //! single or batched top-k routing executed on a persistent shard-executor
 //! runtime ([`coordinator::executor`]: one long-lived worker thread per
 //! shard behind bounded work queues — no per-request thread spawning) with
-//! batch-major blocked scoring (L1-tiled multi-query 8-way-unrolled
-//! popcount kernels feeding a bounded heap, [`coordinator::TopK`]) or,
+//! batch-major blocked scoring (L1-tiled multi-query popcount kernels
+//! runtime-dispatched to the widest ISA the CPU supports —
+//! AVX2/AVX-512-VPOPCNTDQ/NEON with a property-tested scalar oracle as
+//! fallback, [`sketch::kernels`] — feeding a bounded heap,
+//! [`coordinator::TopK`]) or,
 //! sublinearly, per-shard banded multi-probe Hamming-LSH candidate
 //! generation ([`index::LshIndex`]) with exact Cham reranking through the
 //! same gathered kernel and guaranteed full-scan fallback — whose compute

@@ -40,7 +40,7 @@ const EDGES_US: [u64; 10] = [
 /// Substrings/suffixes marking a flat stats field as a gauge rather
 /// than a monotone counter.
 fn is_gauge(name: &str) -> bool {
-    const GAUGE_MARKS: [&str; 12] = [
+    const GAUGE_MARKS: [&str; 13] = [
         "queue_depth",
         "busy_workers",
         "generation",
@@ -53,6 +53,7 @@ fn is_gauge(name: &str) -> bool {
         "next_seq",
         "dead_frames",
         "recovery_ms",
+        "kernel_isa",
     ];
     // `cfg_` appears prefixed (`index_cfg_*`, `persist_cfg_*`): configs
     // are point-in-time values, never monotone
@@ -128,12 +129,16 @@ mod tests {
             ("executor_queue_depth".to_string(), 3.0),
             ("index_cfg_bands".to_string(), 4.0),
             ("insert_p50_ms".to_string(), 1.5),
+            ("kernel_isa".to_string(), 1.0),
         ];
         let text = render(&flat, &[]);
         assert!(text.contains("# TYPE cabin_inserts_total counter\n"));
         assert!(text.contains("cabin_inserts_total 42\n"));
         assert!(text.contains("# TYPE cabin_executor_queue_depth gauge\n"));
         assert!(text.contains("cabin_executor_queue_depth 3\n"));
+        // the selected kernel ISA is a point-in-time value, never a counter
+        assert!(text.contains("# TYPE cabin_kernel_isa gauge\n"));
+        assert!(text.contains("cabin_kernel_isa 1\n"));
         assert!(text.contains("cabin_index_cfg_bands 4\n"));
         assert!(text.contains("cabin_insert_p50_ms 1.5\n"));
         assert!(!text.contains("cabin_insert_p50_ms_total"));

@@ -12,6 +12,7 @@
 //! with no re-shipping of already-applied history.
 
 use super::{seq_field, ReplCounters, ReplicaConfig};
+use crate::coordinator::protocol::StreamRequest;
 use crate::coordinator::store::ShardedStore;
 use crate::obs::log as obs_log;
 use crate::persist::manifest::{snap_path, sync_dir, wal_path, Manifest};
@@ -117,7 +118,7 @@ impl ReplClient {
 
     /// Fetch the primary's newest snapshot bundle.
     pub fn fetch_snapshot(&mut self) -> Result<SnapshotBundle> {
-        let header = self.round_trip(r#"{"op":"repl_snapshot"}"#)?;
+        let header = self.round_trip(&StreamRequest::ReplSnapshot.to_json_line())?;
         if !header.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
             bail!(
                 "repl_snapshot refused: {}",
@@ -170,13 +171,12 @@ impl ReplClient {
         from_seq: u64,
         max_bytes: usize,
     ) -> Result<TailChunk> {
-        let req = Json::obj(vec![
-            ("op", Json::Str("repl_wal_tail".into())),
-            ("shard", Json::Num(shard as f64)),
-            ("from_seq", Json::Str(from_seq.to_string())),
-            ("max_bytes", Json::Num(max_bytes as f64)),
-        ]);
-        let header = self.round_trip(&req.to_string())?;
+        let req = StreamRequest::ReplWalTail {
+            shard,
+            from_seq,
+            max_bytes,
+        };
+        let header = self.round_trip(&req.to_json_line())?;
         if !header.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
             let message = header
                 .get("error")

@@ -3,8 +3,11 @@
 //!
 //! Both ops reply with a JSON header *line* followed by raw binary
 //! payload bytes (exactly `bytes`/`shard_bytes` long), which the ordinary
-//! `Request`/`Response` enums cannot represent — the server therefore
-//! routes `repl_*` lines here before request parsing. The payloads are
+//! `Request`/`Response` enums cannot represent — they are *stream ops*,
+//! parsed by the unified
+//! [`StreamRequest`](crate::coordinator::protocol::StreamRequest)
+//! envelope and routed by the server into [`serve_snapshot`] /
+//! [`serve_wal_tail`] here. The payloads are
 //! self-checking: snapshot payloads are verbatim snapshot files (magic +
 //! trailing checksum), WAL payloads are verbatim frame bytes
 //! (length-prefixed, per-frame checksums), so transfer integrity needs no
@@ -28,7 +31,7 @@
 //! one), and a stale or too-far hint is simply ignored by
 //! [`read_wal_tail`] — correctness never depends on the cache.
 
-use super::{seq_field, ReplCounters};
+use super::ReplCounters;
 use crate::coordinator::store::ShardedStore;
 use crate::persist::manifest::{snap_path, wal_path};
 use crate::persist::wal::read_wal_tail;
@@ -202,131 +205,131 @@ fn write_error<W: Write>(
     writeln!(writer, "{}", Json::obj(pairs))
 }
 
-/// Route one protocol line if it is a replication op. Returns `Ok(false)`
-/// untouched when it is not (the caller then parses it as an ordinary
-/// request); `Ok(true)` after writing a complete reply (header line +
-/// payload bytes, or an error line). Transport failures bubble as
-/// `io::Error` like any connection write.
-pub fn try_handle<W: Write>(
-    line: &str,
+/// Answer with the shared "serving side is not durable" error line and
+/// return `None` when the store has no persistence layer. Any durable
+/// server can ship (a follower can feed further followers).
+fn persistence_for<'a, W: Write>(
+    store: &'a ShardedStore,
+    writer: &mut W,
+) -> std::io::Result<Option<&'a Persistence>> {
+    match store.persistence() {
+        Some(p) => Ok(Some(p)),
+        None => {
+            write_error(
+                writer,
+                "replication requires persistence on the serving side (start it with --data-dir)",
+                Vec::new(),
+            )?;
+            Ok(None)
+        }
+    }
+}
+
+/// Serve a parsed `repl_snapshot` stream op: header line + the shard
+/// snapshot files concatenated in shard order (or an error line). The
+/// server routes here from the unified
+/// [`StreamRequest`](crate::coordinator::protocol::StreamRequest)
+/// envelope; transport failures bubble as `io::Error` like any
+/// connection write.
+pub fn serve_snapshot<W: Write>(
     store: &ShardedStore,
     counters: &ReplCounters,
     writer: &mut W,
-) -> std::io::Result<bool> {
-    // cheap pre-filter: every repl op value starts with this marker, and
-    // no other protocol field carries a string beginning `repl_`
-    if !line.contains("\"repl_") {
-        return Ok(false);
-    }
-    let Ok(obj) = crate::util::json::parse(line) else {
-        return Ok(false); // malformed JSON: let the normal path report it
+) -> std::io::Result<()> {
+    let Some(p) = persistence_for(store, writer)? else {
+        return Ok(());
     };
-    let op = match obj.get("op").and_then(|o| o.as_str()) {
-        Some(op) if op.starts_with("repl_") => op.to_string(),
-        _ => return Ok(false),
-    };
-    let Some(p) = store.persistence() else {
-        write_error(
-            writer,
-            "replication requires persistence on the serving side (start it with --data-dir)",
-            Vec::new(),
-        )?;
-        return Ok(true);
-    };
-    match op.as_str() {
-        "repl_snapshot" => match snapshot_payload(p) {
-            Ok(payload) => {
-                let fp = p.fingerprint();
-                let shard_bytes: Vec<usize> = payload.shards.iter().map(|b| b.len()).collect();
-                let header = Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("generation", Json::Num(payload.generation as f64)),
-                    ("num_shards", Json::Num(fp.num_shards as f64)),
-                    ("sketch_dim", Json::Num(fp.sketch_dim as f64)),
-                    ("seed", Json::Str(fp.seed.to_string())),
-                    ("input_dim", Json::Num(fp.input_dim as f64)),
-                    ("num_categories", Json::Num(fp.num_categories as f64)),
-                    ("base_seqs", seq_strings(&payload.base_seqs)),
-                    ("shard_bytes", Json::from_usizes(&shard_bytes)),
-                ]);
-                writeln!(writer, "{header}")?;
-                for shard in &payload.shards {
-                    writer.write_all(shard)?;
-                }
-                writer.flush()?;
-                counters.snapshots_served.fetch_add(1, Ordering::Relaxed);
+    match snapshot_payload(p) {
+        Ok(payload) => {
+            let fp = p.fingerprint();
+            let shard_bytes: Vec<usize> = payload.shards.iter().map(|b| b.len()).collect();
+            let header = Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("generation", Json::Num(payload.generation as f64)),
+                ("num_shards", Json::Num(fp.num_shards as f64)),
+                ("sketch_dim", Json::Num(fp.sketch_dim as f64)),
+                ("seed", Json::Str(fp.seed.to_string())),
+                ("input_dim", Json::Num(fp.input_dim as f64)),
+                ("num_categories", Json::Num(fp.num_categories as f64)),
+                ("base_seqs", seq_strings(&payload.base_seqs)),
+                ("shard_bytes", Json::from_usizes(&shard_bytes)),
+            ]);
+            writeln!(writer, "{header}")?;
+            for shard in &payload.shards {
+                writer.write_all(shard)?;
             }
-            Err(e) => write_error(writer, &format!("{e:#}"), Vec::new())?,
-        },
-        "repl_wal_tail" => {
-            let (shard, from_seq) = match (obj.req_usize("shard"), seq_field(&obj, "from_seq")) {
-                (Ok(shard), Ok(from_seq)) => (shard, from_seq),
-                (Err(e), _) | (_, Err(e)) => {
-                    write_error(writer, &format!("{e:#}"), Vec::new())?;
-                    return Ok(true);
-                }
-            };
-            let max_bytes = obj
-                .get("max_bytes")
-                .and_then(|v| v.as_usize())
-                .unwrap_or(1 << 20)
-                .max(1);
-            match wal_tail(p, shard, from_seq, max_bytes) {
-                Ok(Tail::Frames {
-                    from_seq,
-                    frames,
-                    bytes,
-                    live_seq,
-                }) => {
-                    let header = Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("shard", Json::Num(shard as f64)),
-                        ("from_seq", Json::Str(from_seq.to_string())),
-                        ("frames", Json::Num(frames as f64)),
-                        ("bytes", Json::Num(bytes.len() as f64)),
-                        ("live_seq", Json::Str(live_seq.to_string())),
-                    ]);
-                    writeln!(writer, "{header}")?;
-                    writer.write_all(&bytes)?;
-                    writer.flush()?;
-                    counters.tails_served.fetch_add(1, Ordering::Relaxed);
-                    counters.frames_shipped.fetch_add(frames, Ordering::Relaxed);
-                    counters
-                        .bytes_shipped
-                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
-                }
-                Ok(Tail::SnapshotNeeded { base_seq }) => write_error(
-                    writer,
-                    &format!(
-                        "from_seq {from_seq} predates every retained segment of shard \
-                         {shard} (live base {base_seq}); re-seed this follower from a \
-                         fresh repl_snapshot"
-                    ),
-                    vec![
-                        ("snapshot_needed", Json::Bool(true)),
-                        ("base_seq", Json::Str(base_seq.to_string())),
-                    ],
-                )?,
-                Ok(Tail::Diverged { live_seq }) => write_error(
-                    writer,
-                    &format!(
-                        "from_seq {from_seq} is beyond shard {shard}'s durable horizon \
-                         {live_seq} — the follower holds frames this primary never \
-                         wrote (diverged)"
-                    ),
-                    vec![
-                        ("diverged", Json::Bool(true)),
-                        ("live_seq", Json::Str(live_seq.to_string())),
-                    ],
-                )?,
-                Err(e) => write_error(writer, &format!("{e:#}"), Vec::new())?,
-            }
+            writer.flush()?;
+            counters.snapshots_served.fetch_add(1, Ordering::Relaxed);
         }
-        other => write_error(
-            writer,
-            &format!("unknown replication op '{other}'"),
-            Vec::new(),
-        )?,
+        Err(e) => write_error(writer, &format!("{e:#}"), Vec::new())?,
     }
-    Ok(true)
+    Ok(())
+}
+
+/// Serve a parsed `repl_wal_tail` stream op: header line + raw frame
+/// bytes (or an error line carrying the `snapshot_needed`/`diverged`
+/// markers the follower dispatches on). Same routing and error contract
+/// as [`serve_snapshot`].
+pub fn serve_wal_tail<W: Write>(
+    store: &ShardedStore,
+    counters: &ReplCounters,
+    shard: usize,
+    from_seq: u64,
+    max_bytes: usize,
+    writer: &mut W,
+) -> std::io::Result<()> {
+    let Some(p) = persistence_for(store, writer)? else {
+        return Ok(());
+    };
+    match wal_tail(p, shard, from_seq, max_bytes) {
+        Ok(Tail::Frames {
+            from_seq,
+            frames,
+            bytes,
+            live_seq,
+        }) => {
+            let header = Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("shard", Json::Num(shard as f64)),
+                ("from_seq", Json::Str(from_seq.to_string())),
+                ("frames", Json::Num(frames as f64)),
+                ("bytes", Json::Num(bytes.len() as f64)),
+                ("live_seq", Json::Str(live_seq.to_string())),
+            ]);
+            writeln!(writer, "{header}")?;
+            writer.write_all(&bytes)?;
+            writer.flush()?;
+            counters.tails_served.fetch_add(1, Ordering::Relaxed);
+            counters.frames_shipped.fetch_add(frames, Ordering::Relaxed);
+            counters
+                .bytes_shipped
+                .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        }
+        Ok(Tail::SnapshotNeeded { base_seq }) => write_error(
+            writer,
+            &format!(
+                "from_seq {from_seq} predates every retained segment of shard \
+                 {shard} (live base {base_seq}); re-seed this follower from a \
+                 fresh repl_snapshot"
+            ),
+            vec![
+                ("snapshot_needed", Json::Bool(true)),
+                ("base_seq", Json::Str(base_seq.to_string())),
+            ],
+        )?,
+        Ok(Tail::Diverged { live_seq }) => write_error(
+            writer,
+            &format!(
+                "from_seq {from_seq} is beyond shard {shard}'s durable horizon \
+                 {live_seq} — the follower holds frames this primary never \
+                 wrote (diverged)"
+            ),
+            vec![
+                ("diverged", Json::Bool(true)),
+                ("live_seq", Json::Str(live_seq.to_string())),
+            ],
+        )?,
+        Err(e) => write_error(writer, &format!("{e:#}"), Vec::new())?,
+    }
+    Ok(())
 }

@@ -4,17 +4,24 @@
 //! statistics the estimators need — Hamming weight, Hamming distance,
 //! bitwise inner product, union size — are word-parallel popcounts, which is
 //! exactly the "faster bitwise operators" advantage the paper claims for
-//! binary sketches (Section 1). The 4-way unrolled kernels here are the
-//! native hot path measured in EXPERIMENTS.md §Perf.
+//! binary sketches (Section 1). The word-slice reductions themselves now
+//! live in [`crate::sketch::kernels`], which picks the widest
+//! implementation the running CPU supports (AVX2 / AVX-512-VPOPCNTDQ /
+//! NEON, scalar otherwise) once at startup.
 //!
 //! The kernels come in two layers: free functions over raw `&[u64]` word
 //! slices ([`popcount_words`], [`and_count_words`], [`xor_count_words`],
 //! [`or_count_words`]) — these are what arena scans over
 //! [`crate::sketch::matrix::SketchMatrix`] rows call, with no `BitVec`
 //! construction or cloning — and the [`BitVec`] methods, which are thin
-//! wrappers over the same word kernels. Operand word-length mismatches are
+//! wrappers over the same word kernels. Both layers route through the
+//! process-wide dispatch table ([`crate::sketch::kernels::active`]);
+//! every arm is bit-identical to the scalar oracle in
+//! [`crate::sketch::kernels::scalar`]. Operand word-length mismatches are
 //! a hard error in every build profile: truncating to the shorter slice
 //! would silently mask dimension-mismatch bugs.
+
+use super::kernels;
 
 /// A fixed-length packed bit vector.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -181,136 +188,46 @@ impl BitVec {
     }
 }
 
-/// Hamming weight of a word slice (4-way unroll: lets the compiler keep
-/// four popcnt chains in flight).
+/// Hamming weight of a word slice, via the active dispatch arm.
 #[inline]
 pub fn popcount_words(words: &[u64]) -> usize {
-    let mut c0 = 0u64;
-    let mut c1 = 0u64;
-    let mut c2 = 0u64;
-    let mut c3 = 0u64;
-    let chunks = words.chunks_exact(4);
-    let rem = chunks.remainder();
-    for ch in chunks {
-        c0 += ch[0].count_ones() as u64;
-        c1 += ch[1].count_ones() as u64;
-        c2 += ch[2].count_ones() as u64;
-        c3 += ch[3].count_ones() as u64;
-    }
-    let mut total = c0 + c1 + c2 + c3;
-    for w in rem {
-        total += w.count_ones() as u64;
-    }
-    total as usize
+    (kernels::active().popcount)(words)
 }
 
 /// `|a ∧ b|` over raw word slices. Panics on length mismatch.
 #[inline]
 pub fn and_count_words(a: &[u64], b: &[u64]) -> usize {
-    binop_popcount(a, b, |a, b| a & b)
+    (kernels::active().and_count)(a, b)
 }
 
 /// `|a ⊕ b|` over raw word slices. Panics on length mismatch.
 #[inline]
 pub fn xor_count_words(a: &[u64], b: &[u64]) -> usize {
-    binop_popcount(a, b, |a, b| a ^ b)
+    (kernels::active().xor_count)(a, b)
 }
 
 /// `|a ∨ b|` over raw word slices. Panics on length mismatch.
 #[inline]
 pub fn or_count_words(a: &[u64], b: &[u64]) -> usize {
-    binop_popcount(a, b, |a, b| a | b)
+    (kernels::active().or_count)(a, b)
 }
 
-/// `|a ∧ b|`, 8-way unrolled — the per-row inner step of the blocked
-/// batch-scoring kernels in [`crate::sketch::matrix`]. Exactly equal to
-/// [`and_count_words`] on every input (integer popcounts commute with any
-/// unroll order); the wider unroll exists to keep eight popcnt chains in
-/// flight when a query row is replayed against a whole arena tile.
-/// Panics on length mismatch.
+/// `|a ∧ b|` — historical 8-way-unrolled spelling, kept so PR-4-era call
+/// sites keep compiling. Since the dispatch-table redesign both
+/// spellings route to the same arm (which is at least 8-words-wide on
+/// every ISA), so this is exactly [`and_count_words`]. Panics on length
+/// mismatch.
 #[inline]
 pub fn and_count_words8(a: &[u64], b: &[u64]) -> usize {
-    binop_popcount8(a, b, |a, b| a & b)
+    and_count_words(a, b)
 }
 
-/// `|a ⊕ b|`, 8-way unrolled — see [`and_count_words8`]. Exactly equal to
-/// [`xor_count_words`] on every input. Panics on length mismatch.
+/// `|a ⊕ b|` — historical 8-way-unrolled spelling; see
+/// [`and_count_words8`]. Exactly [`xor_count_words`]. Panics on length
+/// mismatch.
 #[inline]
 pub fn xor_count_words8(a: &[u64], b: &[u64]) -> usize {
-    binop_popcount8(a, b, |a, b| a ^ b)
-}
-
-#[inline]
-fn binop_popcount(a: &[u64], b: &[u64], op: fn(u64, u64) -> u64) -> usize {
-    // Length mismatch is a dimension bug at the call site; truncating to
-    // min(len) here would return a plausible-looking count and hide it, so
-    // it is a hard error in release builds too.
-    assert_eq!(
-        a.len(),
-        b.len(),
-        "bitvec word-length mismatch: {} vs {} words — operands come from different dimensions",
-        a.len(),
-        b.len()
-    );
-    let n = a.len();
-    let mut c0 = 0u64;
-    let mut c1 = 0u64;
-    let mut c2 = 0u64;
-    let mut c3 = 0u64;
-    let mut i = 0;
-    while i + 4 <= n {
-        c0 += op(a[i], b[i]).count_ones() as u64;
-        c1 += op(a[i + 1], b[i + 1]).count_ones() as u64;
-        c2 += op(a[i + 2], b[i + 2]).count_ones() as u64;
-        c3 += op(a[i + 3], b[i + 3]).count_ones() as u64;
-        i += 4;
-    }
-    let mut total = c0 + c1 + c2 + c3;
-    while i < n {
-        total += op(a[i], b[i]).count_ones() as u64;
-        i += 1;
-    }
-    total as usize
-}
-
-#[inline]
-fn binop_popcount8(a: &[u64], b: &[u64], op: fn(u64, u64) -> u64) -> usize {
-    // Same hard-error policy as binop_popcount: a length mismatch is a
-    // dimension bug at the call site, never a truncation.
-    assert_eq!(
-        a.len(),
-        b.len(),
-        "bitvec word-length mismatch: {} vs {} words — operands come from different dimensions",
-        a.len(),
-        b.len()
-    );
-    let n = a.len();
-    let mut c0 = 0u64;
-    let mut c1 = 0u64;
-    let mut c2 = 0u64;
-    let mut c3 = 0u64;
-    let mut c4 = 0u64;
-    let mut c5 = 0u64;
-    let mut c6 = 0u64;
-    let mut c7 = 0u64;
-    let mut i = 0;
-    while i + 8 <= n {
-        c0 += op(a[i], b[i]).count_ones() as u64;
-        c1 += op(a[i + 1], b[i + 1]).count_ones() as u64;
-        c2 += op(a[i + 2], b[i + 2]).count_ones() as u64;
-        c3 += op(a[i + 3], b[i + 3]).count_ones() as u64;
-        c4 += op(a[i + 4], b[i + 4]).count_ones() as u64;
-        c5 += op(a[i + 5], b[i + 5]).count_ones() as u64;
-        c6 += op(a[i + 6], b[i + 6]).count_ones() as u64;
-        c7 += op(a[i + 7], b[i + 7]).count_ones() as u64;
-        i += 8;
-    }
-    let mut total = (c0 + c1 + c2 + c3) + (c4 + c5 + c6 + c7);
-    while i < n {
-        total += op(a[i], b[i]).count_ones() as u64;
-        i += 1;
-    }
-    total as usize
+    xor_count_words(a, b)
 }
 
 #[cfg(test)]
@@ -410,23 +327,36 @@ mod tests {
     }
 
     #[test]
-    fn unrolled8_kernels_match_scalar_exactly() {
-        // Word counts straddling every 8-way unroll boundary, including
+    fn dispatched_kernels_match_scalar_oracle_exactly() {
+        // Word counts straddling every unroll/vector boundary, including
         // the ragged tails (1..7 trailing words) and the empty slice.
+        // Whatever arm the dispatch table picked on this machine must be
+        // bit-identical to the scalar oracle (the deep multi-arm property
+        // test lives in tests/prop_kernels.rs).
         let mut rng = Xoshiro256::new(11);
         for bits in [1usize, 63, 64, 65, 7 * 64, 8 * 64, 9 * 64, 511, 513, 1000, 1024] {
             let a = random_bitvec(&mut rng, bits, 0.4);
             let b = random_bitvec(&mut rng, bits, 0.4);
+            let (aw, bw) = (a.words(), b.words());
+            assert_eq!(popcount_words(aw), kernels::scalar::popcount_words(aw), "bits={bits}");
             assert_eq!(
-                and_count_words8(a.words(), b.words()),
-                and_count_words(a.words(), b.words()),
+                and_count_words(aw, bw),
+                kernels::scalar::and_count_words(aw, bw),
                 "bits={bits}"
             );
             assert_eq!(
-                xor_count_words8(a.words(), b.words()),
-                xor_count_words(a.words(), b.words()),
+                xor_count_words(aw, bw),
+                kernels::scalar::xor_count_words(aw, bw),
                 "bits={bits}"
             );
+            assert_eq!(
+                or_count_words(aw, bw),
+                kernels::scalar::or_count_words(aw, bw),
+                "bits={bits}"
+            );
+            // The historical 8-way spellings are the same dispatch arm.
+            assert_eq!(and_count_words8(aw, bw), and_count_words(aw, bw), "bits={bits}");
+            assert_eq!(xor_count_words8(aw, bw), xor_count_words(aw, bw), "bits={bits}");
         }
         assert_eq!(and_count_words8(&[], &[]), 0);
         assert_eq!(xor_count_words8(&[], &[]), 0);

@@ -1,0 +1,115 @@
+//! AVX2 popcount kernels (Muła `vpshufb`-LUT).
+//!
+//! x86-64 has no 256-bit vector popcount below AVX-512; the classic
+//! workaround (Muła/Kurz/Lemire, "Faster population counts using AVX2
+//! instructions") splits each byte into nibbles, looks each nibble's bit
+//! count up in a shuffled 16-entry LUT, and horizontally accumulates the
+//! per-byte counts into the four u64 lanes with `vpsadbw` against zero.
+//! One 256-bit vector covers four sketch words, so the 8-word inner step
+//! of the blocked scoring kernels is exactly two vector loads per
+//! operand — the unroll the scalar kernels were already shaped for.
+//!
+//! Safety: every public function here is safe to *declare* only because
+//! the dispatch table in [`super`] hands this module out strictly after
+//! `is_x86_feature_detected!("avx2")` succeeds. The module is private to
+//! `kernels`; nothing else can reach these entry points.
+
+use core::arch::x86_64::*;
+
+/// Nibble→bit-count lookup table, replicated across both 128-bit lanes
+/// (`vpshufb` shuffles within each lane independently).
+const NIBBLE_LUT: [i8; 32] = [
+    0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+    0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+];
+
+/// Per-byte popcount of a 256-bit vector, widened to u64 lane sums.
+#[target_feature(enable = "avx2")]
+unsafe fn popcount256(v: __m256i) -> __m256i {
+    let lut = _mm256_loadu_si256(NIBBLE_LUT.as_ptr() as *const __m256i);
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let lo = _mm256_and_si256(v, low_mask);
+    let hi = _mm256_and_si256(_mm256_srli_epi32::<4>(v), low_mask);
+    let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+    // Sum of absolute byte differences against zero = per-64-bit-lane sum
+    // of the byte counts; no lane can overflow (max 8 bytes × 8 bits).
+    _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+}
+
+/// Horizontal sum of the four u64 lanes.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi64(v: __m256i) -> u64 {
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn popcount_inner(words: &[u64]) -> usize {
+    let n = words.len();
+    let p = words.as_ptr();
+    let mut acc0 = _mm256_setzero_si256();
+    let mut acc1 = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v0 = _mm256_loadu_si256(p.add(i) as *const __m256i);
+        let v1 = _mm256_loadu_si256(p.add(i + 4) as *const __m256i);
+        acc0 = _mm256_add_epi64(acc0, popcount256(v0));
+        acc1 = _mm256_add_epi64(acc1, popcount256(v1));
+        i += 8;
+    }
+    let mut total = hsum_epi64(acc0) + hsum_epi64(acc1);
+    while i < n {
+        total += words[i].count_ones() as u64;
+        i += 1;
+    }
+    total as usize
+}
+
+/// Hamming weight of a word slice.
+pub(super) fn popcount_words(words: &[u64]) -> usize {
+    unsafe { popcount_inner(words) }
+}
+
+// `#[target_feature]` functions cannot be generic over the combining op
+// at our MSRV, so each binop gets its own generated inner + wrapper. The
+// wrappers repeat the scalar kernels' hard length assert so every
+// dispatch arm rejects mismatched dimensions identically.
+macro_rules! avx2_binop_popcount {
+    ($inner:ident, $name:ident, $vop:ident, $sop:expr) => {
+        #[target_feature(enable = "avx2")]
+        unsafe fn $inner(a: &[u64], b: &[u64]) -> usize {
+            let n = a.len();
+            let pa = a.as_ptr();
+            let pb = b.as_ptr();
+            let mut acc0 = _mm256_setzero_si256();
+            let mut acc1 = _mm256_setzero_si256();
+            let mut i = 0;
+            while i + 8 <= n {
+                let a0 = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+                let b0 = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+                let a1 = _mm256_loadu_si256(pa.add(i + 4) as *const __m256i);
+                let b1 = _mm256_loadu_si256(pb.add(i + 4) as *const __m256i);
+                acc0 = _mm256_add_epi64(acc0, popcount256($vop(a0, b0)));
+                acc1 = _mm256_add_epi64(acc1, popcount256($vop(a1, b1)));
+                i += 8;
+            }
+            let mut total = hsum_epi64(acc0) + hsum_epi64(acc1);
+            let sop: fn(u64, u64) -> u64 = $sop;
+            while i < n {
+                total += sop(a[i], b[i]).count_ones() as u64;
+                i += 1;
+            }
+            total as usize
+        }
+
+        pub(super) fn $name(a: &[u64], b: &[u64]) -> usize {
+            super::assert_same_words(a, b);
+            unsafe { $inner(a, b) }
+        }
+    };
+}
+
+avx2_binop_popcount!(and_inner, and_count_words, _mm256_and_si256, |a, b| a & b);
+avx2_binop_popcount!(xor_inner, xor_count_words, _mm256_xor_si256, |a, b| a ^ b);
+avx2_binop_popcount!(or_inner, or_count_words, _mm256_or_si256, |a, b| a | b);

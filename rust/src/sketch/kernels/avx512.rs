@@ -1,0 +1,82 @@
+//! AVX-512 VPOPCNTDQ kernels — native 512-bit vector popcount.
+//!
+//! `vpopcntq` counts each of the eight u64 lanes of a zmm register in one
+//! instruction, so a binop-popcount is load/load/op/popcnt/add per 8
+//! words. The intrinsics (`_mm512_popcnt_epi64` and friends) are
+//! unstable at the crate MSRV, so this whole module sits behind the
+//! default-off `avx512` cargo feature (which turns on
+//! `feature(stdarch_x86_avx512)` at the crate root and therefore requires
+//! a nightly toolchain). Runtime detection still applies on top: the
+//! dispatch table only selects this arm when
+//! `is_x86_feature_detected!` reports both `avx512f` and
+//! `avx512vpopcntdq`.
+//!
+//! Safety: same contract as the AVX2 module — the functions are reachable
+//! only through the dispatch table, which is constructed strictly after
+//! feature detection succeeds.
+
+use core::arch::x86_64::*;
+
+#[target_feature(enable = "avx512f")]
+#[target_feature(enable = "avx512vpopcntdq")]
+unsafe fn popcount_inner(words: &[u64]) -> usize {
+    let n = words.len();
+    let p = words.as_ptr();
+    let mut acc = _mm512_setzero_si512();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm512_loadu_si512(p.add(i) as *const _);
+        acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(v));
+        i += 8;
+    }
+    let mut total = _mm512_reduce_add_epi64(acc) as u64;
+    while i < n {
+        total += words[i].count_ones() as u64;
+        i += 1;
+    }
+    total as usize
+}
+
+/// Hamming weight of a word slice.
+pub(super) fn popcount_words(words: &[u64]) -> usize {
+    unsafe { popcount_inner(words) }
+}
+
+// Same shape as the AVX2 module: `#[target_feature]` functions cannot be
+// generic over the combining op at our MSRV, so a macro stamps out one
+// inner + wrapper per binop.
+macro_rules! avx512_binop_popcount {
+    ($inner:ident, $name:ident, $vop:ident, $sop:expr) => {
+        #[target_feature(enable = "avx512f")]
+        #[target_feature(enable = "avx512vpopcntdq")]
+        unsafe fn $inner(a: &[u64], b: &[u64]) -> usize {
+            let n = a.len();
+            let pa = a.as_ptr();
+            let pb = b.as_ptr();
+            let mut acc = _mm512_setzero_si512();
+            let mut i = 0;
+            while i + 8 <= n {
+                let va = _mm512_loadu_si512(pa.add(i) as *const _);
+                let vb = _mm512_loadu_si512(pb.add(i) as *const _);
+                acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64($vop(va, vb)));
+                i += 8;
+            }
+            let mut total = _mm512_reduce_add_epi64(acc) as u64;
+            let sop: fn(u64, u64) -> u64 = $sop;
+            while i < n {
+                total += sop(a[i], b[i]).count_ones() as u64;
+                i += 1;
+            }
+            total as usize
+        }
+
+        pub(super) fn $name(a: &[u64], b: &[u64]) -> usize {
+            super::assert_same_words(a, b);
+            unsafe { $inner(a, b) }
+        }
+    };
+}
+
+avx512_binop_popcount!(and_inner, and_count_words, _mm512_and_si512, |a, b| a & b);
+avx512_binop_popcount!(xor_inner, xor_count_words, _mm512_xor_si512, |a, b| a ^ b);
+avx512_binop_popcount!(or_inner, or_count_words, _mm512_or_si512, |a, b| a | b);

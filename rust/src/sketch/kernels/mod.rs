@@ -1,0 +1,308 @@
+//! Runtime-dispatched popcount/scoring kernels.
+//!
+//! Every estimator in the Cabin/Cham family bottoms out in one of four
+//! word-slice reductions — `|u|`, `|u ∧ v|`, `|u ⊕ v|`, `|u ∨ v|` — so
+//! this module owns exactly those four entry points and selects the
+//! widest implementation the running CPU supports, **once**, at first
+//! use:
+//!
+//! | arm      | where                         | how                              |
+//! |----------|-------------------------------|----------------------------------|
+//! | `scalar` | everywhere (oracle, fallback) | 4-/8-way unrolled `count_ones`   |
+//! | `avx2`   | x86-64 with AVX2              | Muła `vpshufb`-LUT + `vpsadbw`   |
+//! | `avx512` | x86-64, nightly `avx512` flag | native `vpopcntq`                |
+//! | `neon`   | aarch64 (baseline)            | `cnt.16b` + `uaddlv`             |
+//!
+//! Selection happens in [`active`] via `is_x86_feature_detected!` behind
+//! a `OnceLock`, so the hot paths pay one relaxed atomic load, never a
+//! re-detection. The chosen arm is surfaced as the `kernel_isa` stats
+//! field (and through the Prometheus exposition) so benches and soaks
+//! record which path actually ran. Set `CABIN_KERNEL_ISA=scalar|avx2|
+//! avx512|neon` to pin the dispatch (an unavailable or unknown name
+//! silently falls back to auto-detection — a serving process must not
+//! refuse to boot over a stale env var).
+//!
+//! Every arm enforces the same hard word-length contract as the original
+//! scalar kernels (see [`scalar`]) and is bit-identical to them on every
+//! input — property-tested over ragged tile shapes, odd word counts and
+//! empty slices in `tests/prop_kernels.rs`. [`table_for`] and
+//! [`available`] expose specific arms (when the CPU has them) so tests
+//! and benches can compare implementations side by side regardless of
+//! which arm [`active`] picked.
+
+use std::sync::OnceLock;
+
+pub mod scalar;
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+mod avx512;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// Instruction-set architecture of a kernel arm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// Portable unrolled `u64::count_ones` loops — always available.
+    Scalar,
+    /// AVX2 `vpshufb`-LUT popcount (x86-64, runtime-detected).
+    Avx2,
+    /// AVX-512 VPOPCNTDQ (x86-64, `avx512` cargo feature + runtime-detected).
+    Avx512,
+    /// NEON `cnt`/`uaddlv` (aarch64 baseline).
+    Neon,
+}
+
+impl Isa {
+    /// Stable lowercase name — used in logs, bench lane labels and docs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Numeric code for the flat `(name, f64)` stats surface:
+    /// 0 = scalar, 1 = avx2, 2 = avx512, 3 = neon (`kernel_isa` field).
+    pub fn code(self) -> f64 {
+        match self {
+            Isa::Scalar => 0.0,
+            Isa::Avx2 => 1.0,
+            Isa::Avx512 => 2.0,
+            Isa::Neon => 3.0,
+        }
+    }
+
+    fn from_name(name: &str) -> Option<Isa> {
+        match name {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" => Some(Isa::Avx512),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Dispatch table: the four word-slice reductions for one ISA arm.
+///
+/// Plain `fn` pointers, not a trait object — the table is a static, the
+/// call is one indirect jump, and the pointers are `'static` so holding
+/// a `&'static Kernels` is free to copy around (shard workers grab it
+/// once per scan, not per row).
+pub struct Kernels {
+    /// Which arm this table is.
+    pub isa: Isa,
+    /// Hamming weight `|u|`.
+    pub popcount: fn(&[u64]) -> usize,
+    /// Bitwise inner product `|u ∧ v|`. Panics on word-length mismatch.
+    pub and_count: fn(&[u64], &[u64]) -> usize,
+    /// Hamming distance `|u ⊕ v|`. Panics on word-length mismatch.
+    pub xor_count: fn(&[u64], &[u64]) -> usize,
+    /// Union size `|u ∨ v|`. Panics on word-length mismatch.
+    pub or_count: fn(&[u64], &[u64]) -> usize,
+}
+
+static SCALAR: Kernels = Kernels {
+    isa: Isa::Scalar,
+    popcount: scalar::popcount_words,
+    and_count: scalar::and_count_words8,
+    xor_count: scalar::xor_count_words8,
+    or_count: scalar::or_count_words8,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    isa: Isa::Avx2,
+    popcount: avx2::popcount_words,
+    and_count: avx2::and_count_words,
+    xor_count: avx2::xor_count_words,
+    or_count: avx2::or_count_words,
+};
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+static AVX512: Kernels = Kernels {
+    isa: Isa::Avx512,
+    popcount: avx512::popcount_words,
+    and_count: avx512::and_count_words,
+    xor_count: avx512::xor_count_words,
+    or_count: avx512::or_count_words,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels {
+    isa: Isa::Neon,
+    popcount: neon::popcount_words,
+    and_count: neon::and_count_words,
+    xor_count: neon::xor_count_words,
+    or_count: neon::or_count_words,
+};
+
+static ACTIVE: OnceLock<&'static Kernels> = OnceLock::new();
+
+/// The dispatch table every serving path routes through — detected once,
+/// cached for the life of the process.
+#[inline]
+pub fn active() -> &'static Kernels {
+    ACTIVE.get_or_init(detect)
+}
+
+fn detect() -> &'static Kernels {
+    if let Ok(want) = std::env::var("CABIN_KERNEL_ISA") {
+        if let Some(t) = Isa::from_name(want.trim()).and_then(table_for) {
+            return t;
+        }
+        // Unknown or unavailable override: fall through to auto-detect —
+        // a stale env var must never stop a serving process from booting.
+    }
+    best_available()
+}
+
+fn best_available() -> &'static Kernels {
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    {
+        if is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512vpopcntdq") {
+            return &AVX512;
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return &AVX2;
+        }
+    }
+    baseline()
+}
+
+/// The widest arm guaranteed by the architecture alone (no detection).
+#[cfg(target_arch = "aarch64")]
+fn baseline() -> &'static Kernels {
+    &NEON
+}
+
+/// The widest arm guaranteed by the architecture alone (no detection).
+#[cfg(not(target_arch = "aarch64"))]
+fn baseline() -> &'static Kernels {
+    &SCALAR
+}
+
+/// The table for a specific ISA, if this build has the arm compiled in
+/// *and* the running CPU supports it. `Scalar` always succeeds. Lets
+/// property tests and benches exercise a specific arm without touching
+/// the process-wide [`active`] selection.
+pub fn table_for(isa: Isa) -> Option<&'static Kernels> {
+    match isa {
+        Isa::Scalar => Some(&SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            if is_x86_feature_detected!("avx2") {
+                Some(&AVX2)
+            } else {
+                None
+            }
+        }
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        Isa::Avx512 => {
+            if is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512vpopcntdq") {
+                Some(&AVX512)
+            } else {
+                None
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => Some(&NEON),
+        #[allow(unreachable_patterns)]
+        _ => None,
+    }
+}
+
+/// Every arm usable on this machine, scalar first. The property tests
+/// iterate this so a CI box without AVX2 still passes (it just has less
+/// to compare) while an AVX2 box proves bit-identity for real.
+pub fn available() -> Vec<&'static Kernels> {
+    let mut out = vec![&SCALAR];
+    for isa in [Isa::Avx2, Isa::Avx512, Isa::Neon] {
+        if let Some(t) = table_for(isa) {
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Shared word-length contract check — identical message across every
+/// arm, pinned by the `should_panic` tests in [`crate::sketch::bitvec`].
+#[inline]
+pub(crate) fn assert_same_words(a: &[u64], b: &[u64]) {
+    assert_eq!(
+        a.len(),
+        b.len(),
+        "bitvec word-length mismatch: {} vs {} words — operands come from different dimensions",
+        a.len(),
+        b.len()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_available() {
+        let arms = available();
+        assert_eq!(arms[0].isa, Isa::Scalar);
+        assert!(table_for(Isa::Scalar).is_some());
+    }
+
+    #[test]
+    fn active_is_one_of_available() {
+        let active = active();
+        assert!(
+            available().iter().any(|t| t.isa == active.isa),
+            "active arm {:?} missing from available()",
+            active.isa
+        );
+    }
+
+    #[test]
+    fn isa_names_and_codes_are_stable() {
+        // The name feeds logs/bench lanes; the code is the wire value of
+        // the `kernel_isa` stats field. Neither may drift.
+        for (isa, name, code) in [
+            (Isa::Scalar, "scalar", 0.0),
+            (Isa::Avx2, "avx2", 1.0),
+            (Isa::Avx512, "avx512", 2.0),
+            (Isa::Neon, "neon", 3.0),
+        ] {
+            assert_eq!(isa.name(), name);
+            assert_eq!(isa.code(), code);
+            assert_eq!(Isa::from_name(name), Some(isa));
+        }
+        assert_eq!(Isa::from_name("sse2"), None);
+    }
+
+    #[test]
+    fn every_available_arm_matches_scalar_on_smoke_input() {
+        // The deep ragged-shape property test lives in
+        // tests/prop_kernels.rs; this is the in-tree smoke version.
+        let mut a = vec![0u64; 37];
+        let mut b = vec![0u64; 37];
+        for i in 0..37u64 {
+            a[i as usize] = i.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            b[i as usize] = i.wrapping_mul(0xbf58_476d_1ce4_e5b9) ^ !0;
+        }
+        for t in available() {
+            let name = t.isa.name();
+            assert_eq!((t.popcount)(&a), scalar::popcount_words(&a), "{name}");
+            assert_eq!((t.and_count)(&a, &b), scalar::and_count_words(&a, &b), "{name}");
+            assert_eq!((t.xor_count)(&a, &b), scalar::xor_count_words(&a, &b), "{name}");
+            assert_eq!((t.or_count)(&a, &b), scalar::or_count_words(&a, &b), "{name}");
+            assert_eq!((t.popcount)(&[]), 0, "{name}");
+            assert_eq!((t.and_count)(&[], &[]), 0, "{name}");
+        }
+    }
+}

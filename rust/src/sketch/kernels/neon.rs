@@ -1,0 +1,85 @@
+//! NEON popcount kernels for aarch64.
+//!
+//! AArch64 has a per-byte vector popcount (`cnt.16b`) in the baseline
+//! instruction set, so the idiom is: load 16 bytes (two sketch words),
+//! `cnt` per byte, widen-sum the sixteen byte counts with `uaddlv`. Two
+//! 128-bit vectors per iteration cover the same 8-word inner step the
+//! scalar and AVX2 arms use.
+//!
+//! NEON is mandatory in the aarch64 baseline (every target this crate
+//! compiles for has it), so unlike the x86 arms there is no runtime
+//! detection step — the dispatch table selects this arm unconditionally
+//! on aarch64. The intrinsics are still `unsafe fn` in `core::arch`;
+//! the wrappers are sound because the feature is architecturally
+//! guaranteed.
+
+use core::arch::aarch64::*;
+
+/// Popcount of one 128-bit vector (16 bytes = 2 sketch words).
+#[inline]
+fn popcount128(v: uint8x16_t) -> u64 {
+    unsafe { vaddlvq_u8(vcntq_u8(v)) as u64 }
+}
+
+/// Hamming weight of a word slice.
+pub(super) fn popcount_words(words: &[u64]) -> usize {
+    let n = words.len();
+    let p = words.as_ptr() as *const u8;
+    let mut total = 0u64;
+    let mut i = 0;
+    while i + 8 <= n {
+        unsafe {
+            let v0 = vld1q_u8(p.add(i * 8));
+            let v1 = vld1q_u8(p.add((i + 2) * 8));
+            let v2 = vld1q_u8(p.add((i + 4) * 8));
+            let v3 = vld1q_u8(p.add((i + 6) * 8));
+            total += popcount128(v0) + popcount128(v1);
+            total += popcount128(v2) + popcount128(v3);
+        }
+        i += 8;
+    }
+    while i < n {
+        total += words[i].count_ones() as u64;
+        i += 1;
+    }
+    total as usize
+}
+
+// One generated inner loop per binop, mirroring the x86 arms.
+macro_rules! neon_binop_popcount {
+    ($name:ident, $vop:ident, $sop:expr) => {
+        pub(super) fn $name(a: &[u64], b: &[u64]) -> usize {
+            super::assert_same_words(a, b);
+            let n = a.len();
+            let pa = a.as_ptr() as *const u8;
+            let pb = b.as_ptr() as *const u8;
+            let mut total = 0u64;
+            let mut i = 0;
+            while i + 8 <= n {
+                unsafe {
+                    let a0 = vld1q_u8(pa.add(i * 8));
+                    let b0 = vld1q_u8(pb.add(i * 8));
+                    let a1 = vld1q_u8(pa.add((i + 2) * 8));
+                    let b1 = vld1q_u8(pb.add((i + 2) * 8));
+                    let a2 = vld1q_u8(pa.add((i + 4) * 8));
+                    let b2 = vld1q_u8(pb.add((i + 4) * 8));
+                    let a3 = vld1q_u8(pa.add((i + 6) * 8));
+                    let b3 = vld1q_u8(pb.add((i + 6) * 8));
+                    total += popcount128($vop(a0, b0)) + popcount128($vop(a1, b1));
+                    total += popcount128($vop(a2, b2)) + popcount128($vop(a3, b3));
+                }
+                i += 8;
+            }
+            let sop: fn(u64, u64) -> u64 = $sop;
+            while i < n {
+                total += sop(a[i], b[i]).count_ones() as u64;
+                i += 1;
+            }
+            total as usize
+        }
+    };
+}
+
+neon_binop_popcount!(and_count_words, vandq_u8, |a, b| a & b);
+neon_binop_popcount!(xor_count_words, veorq_u8, |a, b| a ^ b);
+neon_binop_popcount!(or_count_words, vorrq_u8, |a, b| a | b);

@@ -1,0 +1,143 @@
+//! Portable scalar kernels — the property-tested **oracle** every SIMD
+//! backend is checked against, and the fallback arm of the dispatch table
+//! on machines without usable vector extensions.
+//!
+//! These are the PR-4 blocked-scoring kernels, kept verbatim: a 4-way
+//! unrolled family (one popcnt chain per accumulator; what single-pair
+//! estimator calls used) and an 8-way family (the per-row inner step of
+//! the arena tile kernels in [`crate::sketch::matrix`]). Both unrolls are
+//! exactly equal on every input — integer popcounts commute with any
+//! unroll order — so either may serve as the reference; the property
+//! tests in `tests/prop_kernels.rs` pin every dispatch arm to the 4-way
+//! functions here.
+//!
+//! Operand word-length mismatches are a hard error in every build
+//! profile: truncating to the shorter slice would silently mask
+//! dimension-mismatch bugs.
+
+/// Hamming weight of a word slice (4-way unroll: lets the compiler keep
+/// four popcnt chains in flight).
+#[inline]
+pub fn popcount_words(words: &[u64]) -> usize {
+    let mut c0 = 0u64;
+    let mut c1 = 0u64;
+    let mut c2 = 0u64;
+    let mut c3 = 0u64;
+    let chunks = words.chunks_exact(4);
+    let rem = chunks.remainder();
+    for ch in chunks {
+        c0 += ch[0].count_ones() as u64;
+        c1 += ch[1].count_ones() as u64;
+        c2 += ch[2].count_ones() as u64;
+        c3 += ch[3].count_ones() as u64;
+    }
+    let mut total = c0 + c1 + c2 + c3;
+    for w in rem {
+        total += w.count_ones() as u64;
+    }
+    total as usize
+}
+
+/// `|a ∧ b|` over raw word slices, 4-way unrolled. Panics on length
+/// mismatch.
+#[inline]
+pub fn and_count_words(a: &[u64], b: &[u64]) -> usize {
+    binop_popcount(a, b, |a, b| a & b)
+}
+
+/// `|a ⊕ b|` over raw word slices, 4-way unrolled. Panics on length
+/// mismatch.
+#[inline]
+pub fn xor_count_words(a: &[u64], b: &[u64]) -> usize {
+    binop_popcount(a, b, |a, b| a ^ b)
+}
+
+/// `|a ∨ b|` over raw word slices, 4-way unrolled. Panics on length
+/// mismatch.
+#[inline]
+pub fn or_count_words(a: &[u64], b: &[u64]) -> usize {
+    binop_popcount(a, b, |a, b| a | b)
+}
+
+/// `|a ∧ b|`, 8-way unrolled — the scalar dispatch arm for the blocked
+/// batch-scoring paths. Exactly equal to [`and_count_words`] on every
+/// input. Panics on length mismatch.
+#[inline]
+pub fn and_count_words8(a: &[u64], b: &[u64]) -> usize {
+    binop_popcount8(a, b, |a, b| a & b)
+}
+
+/// `|a ⊕ b|`, 8-way unrolled — see [`and_count_words8`]. Exactly equal to
+/// [`xor_count_words`] on every input. Panics on length mismatch.
+#[inline]
+pub fn xor_count_words8(a: &[u64], b: &[u64]) -> usize {
+    binop_popcount8(a, b, |a, b| a ^ b)
+}
+
+/// `|a ∨ b|`, 8-way unrolled — see [`and_count_words8`]. Exactly equal to
+/// [`or_count_words`] on every input. Panics on length mismatch.
+#[inline]
+pub fn or_count_words8(a: &[u64], b: &[u64]) -> usize {
+    binop_popcount8(a, b, |a, b| a | b)
+}
+
+#[inline]
+fn binop_popcount(a: &[u64], b: &[u64], op: fn(u64, u64) -> u64) -> usize {
+    // Length mismatch is a dimension bug at the call site; truncating to
+    // min(len) here would return a plausible-looking count and hide it, so
+    // it is a hard error in release builds too.
+    super::assert_same_words(a, b);
+    let n = a.len();
+    let mut c0 = 0u64;
+    let mut c1 = 0u64;
+    let mut c2 = 0u64;
+    let mut c3 = 0u64;
+    let mut i = 0;
+    while i + 4 <= n {
+        c0 += op(a[i], b[i]).count_ones() as u64;
+        c1 += op(a[i + 1], b[i + 1]).count_ones() as u64;
+        c2 += op(a[i + 2], b[i + 2]).count_ones() as u64;
+        c3 += op(a[i + 3], b[i + 3]).count_ones() as u64;
+        i += 4;
+    }
+    let mut total = c0 + c1 + c2 + c3;
+    while i < n {
+        total += op(a[i], b[i]).count_ones() as u64;
+        i += 1;
+    }
+    total as usize
+}
+
+#[inline]
+fn binop_popcount8(a: &[u64], b: &[u64], op: fn(u64, u64) -> u64) -> usize {
+    // Same hard-error policy as binop_popcount: a length mismatch is a
+    // dimension bug at the call site, never a truncation.
+    super::assert_same_words(a, b);
+    let n = a.len();
+    let mut c0 = 0u64;
+    let mut c1 = 0u64;
+    let mut c2 = 0u64;
+    let mut c3 = 0u64;
+    let mut c4 = 0u64;
+    let mut c5 = 0u64;
+    let mut c6 = 0u64;
+    let mut c7 = 0u64;
+    let mut i = 0;
+    while i + 8 <= n {
+        c0 += op(a[i], b[i]).count_ones() as u64;
+        c1 += op(a[i + 1], b[i + 1]).count_ones() as u64;
+        c2 += op(a[i + 2], b[i + 2]).count_ones() as u64;
+        c3 += op(a[i + 3], b[i + 3]).count_ones() as u64;
+        c4 += op(a[i + 4], b[i + 4]).count_ones() as u64;
+        c5 += op(a[i + 5], b[i + 5]).count_ones() as u64;
+        c6 += op(a[i + 6], b[i + 6]).count_ones() as u64;
+        c7 += op(a[i + 7], b[i + 7]).count_ones() as u64;
+        i += 8;
+    }
+    let mut total = (c0 + c1 + c2 + c3) + (c4 + c5 + c6 + c7);
+    while i < n {
+        total += op(a[i], b[i]).count_ones() as u64;
+        i += 1;
+    }
+    total as usize
+}

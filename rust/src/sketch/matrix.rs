@@ -13,7 +13,8 @@
 //! Cham estimator needs `|ṽ|` for every candidate, and recomputing it per
 //! query per candidate would double the popcount work of a scan.
 
-use super::bitvec::{and_count_words8, popcount_words, xor_count_words8, BitVec};
+use super::bitvec::{popcount_words, BitVec};
+use super::kernels;
 
 /// Row-major arena of fixed-width packed bit rows with cached row weights.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -200,11 +201,24 @@ impl SketchMatrix {
     /// within ~32 KiB (comfortably inside L1 alongside the query block).
     /// Always ≥ 8 so tiny rows still amortise the per-tile bookkeeping,
     /// and capped at 512 so the per-tile count buffer stays small.
+    ///
+    /// The count is rounded down to a multiple of [`Self::ROW_BLOCK`] —
+    /// the natural block of every dispatch arm (8 words = two AVX2 /
+    /// one AVX-512 vector loads, and the scalar 8-way unroll) — so full
+    /// tiles never end mid-block and row strides stay cache-line
+    /// multiples for the common 512-bit sketch.
     #[inline]
     pub fn tile_rows(&self) -> usize {
         const TILE_BYTES: usize = 32 * 1024;
-        (TILE_BYTES / (self.words_per_row * 8).max(1)).clamp(8, 512)
+        let raw = (TILE_BYTES / (self.words_per_row * 8).max(1)).clamp(8, 512);
+        (raw / Self::ROW_BLOCK) * Self::ROW_BLOCK
     }
+
+    /// Natural row block of the scoring kernels: every dispatch arm's
+    /// inner loop consumes 8 words per step, and the tile loops hand the
+    /// kernels whole rows — keeping tiles in multiples of 8 rows keeps
+    /// the per-tile bookkeeping aligned with the unroll.
+    pub const ROW_BLOCK: usize = 8;
 
     /// Blocked multi-query scoring: `|q ∧ row|` for every query in
     /// `queries` against every arena row in `[row_start, row_end)`,
@@ -212,11 +226,13 @@ impl SketchMatrix {
     /// the tile and `tile_len = row_end - row_start`.
     ///
     /// Row-major over the tile with the queries replayed per row: each row
-    /// is pulled into cache once and scored against all Q queries (the
-    /// 8-way unrolled kernel keeps the popcnt chains busy), instead of Q
-    /// independent passes each streaming the whole arena. Bit-for-bit
-    /// identical to calling [`crate::sketch::bitvec::and_count_words`] per
-    /// (query, row) pair — integer popcounts, no reassociation concerns.
+    /// is pulled into cache once and scored against all Q queries through
+    /// the active dispatch arm ([`crate::sketch::kernels::active`] —
+    /// AVX2/AVX-512/NEON when the CPU has them, the 8-way scalar unroll
+    /// otherwise), instead of Q independent passes each streaming the
+    /// whole arena. Bit-for-bit identical to calling
+    /// [`crate::sketch::bitvec::and_count_words`] per (query, row) pair —
+    /// integer popcounts, no reassociation concerns.
     ///
     /// Panics if any query's word length differs from this arena's row
     /// width, or if `out` is not exactly `queries.len() * tile_len`.
@@ -227,7 +243,7 @@ impl SketchMatrix {
         row_end: usize,
         out: &mut [usize],
     ) {
-        self.tile_counts(queries, row_start, row_end, out, and_count_words8)
+        self.tile_counts(queries, row_start, row_end, out, kernels::active().and_count)
     }
 
     /// Blocked multi-query Hamming kernel: as [`SketchMatrix::tile_and_counts`]
@@ -240,7 +256,7 @@ impl SketchMatrix {
         row_end: usize,
         out: &mut [usize],
     ) {
-        self.tile_counts(queries, row_start, row_end, out, xor_count_words8)
+        self.tile_counts(queries, row_start, row_end, out, kernels::active().xor_count)
     }
 
     #[inline]
@@ -276,7 +292,7 @@ impl SketchMatrix {
 
     /// Gathered single-query scoring: `|q ∧ row|` for each (possibly
     /// non-contiguous) arena row in `rows` — the indexed-rerank shape,
-    /// sharing the same unrolled kernel as the contiguous tiles so the
+    /// sharing the same dispatch arm as the contiguous tiles so the
     /// rerank and full-scan paths cannot drift. Panics if `out` is not
     /// exactly `rows.len()`.
     pub fn gather_and_counts(&self, query: &[u64], rows: &[u32], out: &mut [usize]) {
@@ -287,8 +303,9 @@ impl SketchMatrix {
             out.len(),
             rows.len()
         );
+        let and_count = kernels::active().and_count;
         for (slot, &r) in out.iter_mut().zip(rows) {
-            *slot = and_count_words8(query, self.row(r as usize));
+            *slot = and_count(query, self.row(r as usize));
         }
     }
 }

@@ -22,6 +22,7 @@ pub mod binsketch;
 pub mod bitvec;
 pub mod cabin;
 pub mod cham;
+pub mod kernels;
 pub mod mappings;
 pub mod matrix;
 
@@ -30,6 +31,7 @@ pub use binsketch::BinSketch;
 pub use bitvec::BitVec;
 pub use cabin::{CabinSketcher, SketchConfig};
 pub use cham::{Estimator, estimate_hamming};
+pub use kernels::{Isa, Kernels};
 pub use matrix::SketchMatrix;
 
 /// Recommended sketch dimension from Theorem 2: `d = s·sqrt((s/2)·ln(6/δ))`

@@ -1,0 +1,218 @@
+//! Wire-compatibility replay: canned PR 5–7-era request lines from
+//! `protocol-fixtures/` (repo root) against a live server over real TCP,
+//! asserting byte-stable replies.
+//!
+//! Each fixture file is a self-contained scenario replayed on a fresh
+//! non-durable server, line by line:
+//!
+//! - `# ...` / blank — comment, skipped
+//! - `>> <raw JSON>` — sent to the server verbatim
+//! - `<< <line>` — the reply must equal `<line>` byte for byte
+//! - `<<err <substring>` — the reply must be `ok:false` and its `error`
+//!   text must contain `<substring>` (for store-level messages whose
+//!   exact wording is owned by the store, not the protocol)
+//! - `<<stats <name>=<value> ...` — the reply must be `ok:true` and each
+//!   named field must equal the value (the string-keyed stats read)
+//! - `<<metrics` — a framed stream reply: header `{"bytes":N,"ok":true}`
+//!   (exactly those keys), then `N` bytes of Prometheus text
+//!
+//! The fixture files are the compat contract for the wire surface —
+//! `tools/api_surface.py` fails CI when they change without
+//! `docs/PROTOCOL.md` changing in the same commit. Old spellings they
+//! pin (the raw `"op"` stream forms, the relative `ttl_ms` insert, the
+//! flat string-keyed stats object) must keep answering until the
+//! deprecation window documented there closes.
+
+use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use cabin::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Pinned harness config: every fixture expectation (assigned ids,
+/// exactly-zero duplicate distances, stats counters, `index_cfg_bands`)
+/// is derived under exactly this corpus shape. Changing it invalidates
+/// `protocol-fixtures/` — treat it like the fixtures themselves.
+fn start_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let config = CoordinatorConfig {
+        input_dim: 8,
+        num_categories: 8,
+        sketch_dim: 256,
+        seed: 42,
+        num_shards: 2,
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            queue_cap: 64,
+        },
+        use_xla: false,
+        heatmap_limit: 128,
+        ..Default::default()
+    };
+    let coordinator = Arc::new(Coordinator::new(config));
+    let (tx, rx) = std::sync::mpsc::sync_channel(1);
+    let server = Arc::clone(&coordinator);
+    let handle = std::thread::spawn(move || {
+        server
+            .serve("127.0.0.1:0", |addr| {
+                let _ = tx.send(addr);
+            })
+            .unwrap();
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../protocol-fixtures")
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn connect(addr: &std::net::SocketAddr) -> Conn {
+        let stream = TcpStream::connect(addr).unwrap();
+        // a wedged server fails the test instead of hanging the run
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        Conn {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn send(&mut self, line: &str, ctx: &str) {
+        writeln!(self.writer, "{line}")
+            .unwrap_or_else(|e| panic!("{ctx}: send failed: {e}"));
+    }
+
+    fn read_reply(&mut self, ctx: &str) -> String {
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .unwrap_or_else(|e| panic!("{ctx}: read failed: {e}"));
+        assert!(n > 0, "{ctx}: server closed the connection");
+        line.trim_end_matches(['\r', '\n']).to_string()
+    }
+}
+
+fn parse_reply(reply: &str, ctx: &str) -> Json {
+    json::parse(reply)
+        .unwrap_or_else(|e| panic!("{ctx}: reply {reply:?} is not JSON: {e:#}"))
+}
+
+/// `<<metrics`: framed header + exactly `bytes` of Prometheus payload.
+fn expect_metrics(conn: &mut Conn, ctx: &str) {
+    let header = conn.read_reply(ctx);
+    let obj = parse_reply(&header, ctx);
+    match &obj {
+        Json::Obj(m) => assert_eq!(
+            m.keys().map(|k| k.as_str()).collect::<Vec<_>>(),
+            ["bytes", "ok"],
+            "{ctx}: header {header:?}"
+        ),
+        other => panic!("{ctx}: header {other:?}"),
+    }
+    let ok = obj.get("ok").and_then(|v| v.as_bool());
+    assert_eq!(ok, Some(true), "{ctx}: {header:?}");
+    let bytes = obj.get("bytes").and_then(|v| v.as_usize()).unwrap();
+    assert!(bytes > 0, "{ctx}: empty payload");
+    let mut payload = vec![0u8; bytes];
+    conn.reader
+        .read_exact(&mut payload)
+        .unwrap_or_else(|e| panic!("{ctx}: short payload: {e}"));
+    let text = String::from_utf8(payload).unwrap();
+    assert!(text.ends_with('\n'), "{ctx}: payload must end in a newline");
+    assert!(
+        text.contains("cabin_kernel_isa"),
+        "{ctx}: payload is missing the kernel_isa gauge"
+    );
+}
+
+/// `<<stats n=v ...`: string-keyed lookups into a flat `ok:true` object.
+fn expect_stats(conn: &mut Conn, spec: &str, ctx: &str) {
+    let reply = conn.read_reply(ctx);
+    let obj = parse_reply(&reply, ctx);
+    let ok = obj.get("ok").and_then(|v| v.as_bool());
+    assert_eq!(ok, Some(true), "{ctx}: {reply:?}");
+    for pair in spec.split_whitespace() {
+        let (name, want) = pair
+            .split_once('=')
+            .unwrap_or_else(|| panic!("{ctx}: bad stats spec {pair:?}"));
+        let want: f64 = want.parse().unwrap();
+        let got = obj.get(name).and_then(|v| v.as_f64());
+        assert_eq!(got, Some(want), "{ctx}: field {name}");
+    }
+}
+
+/// `<<err substring`: an `ok:false` reply whose error text contains it.
+fn expect_err(conn: &mut Conn, needle: &str, ctx: &str) {
+    let reply = conn.read_reply(ctx);
+    let obj = parse_reply(&reply, ctx);
+    let ok = obj.get("ok").and_then(|v| v.as_bool());
+    assert_eq!(ok, Some(false), "{ctx}: {reply:?}");
+    let msg = obj.get("error").and_then(|v| v.as_str()).unwrap_or("");
+    assert!(msg.contains(needle), "{ctx}: error {msg:?} lacks {needle:?}");
+}
+
+fn replay(path: &Path) {
+    let (addr, server) = start_server();
+    let mut conn = Conn::connect(&addr);
+    let name = path.file_name().unwrap().to_string_lossy().to_string();
+    let body = std::fs::read_to_string(path).unwrap();
+    let mut outstanding = 0usize;
+    for (ln, line) in body.lines().enumerate() {
+        let ctx = format!("{name}:{}", ln + 1);
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(req) = line.strip_prefix(">> ") {
+            conn.send(req, &ctx);
+            outstanding += 1;
+            continue;
+        }
+        assert!(outstanding > 0, "{ctx}: expectation without a request");
+        outstanding -= 1;
+        if let Some(exact) = line.strip_prefix("<< ") {
+            let reply = conn.read_reply(&ctx);
+            assert_eq!(reply, exact, "{ctx}: reply drifted");
+        } else if let Some(needle) = line.strip_prefix("<<err ") {
+            expect_err(&mut conn, needle, &ctx);
+        } else if let Some(spec) = line.strip_prefix("<<stats ") {
+            expect_stats(&mut conn, spec, &ctx);
+        } else if line == "<<metrics" {
+            expect_metrics(&mut conn, &ctx);
+        } else {
+            panic!("{ctx}: unknown directive {line:?}");
+        }
+    }
+    assert_eq!(outstanding, 0, "{name}: request left without an expectation");
+    conn.send(r#"{"op":"shutdown"}"#, &name);
+    assert_eq!(conn.read_reply(&name), r#"{"ok":true,"shutdown":true}"#);
+    server.join().unwrap();
+}
+
+#[test]
+fn replay_protocol_fixtures() {
+    let dir = fixture_dir();
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("missing {}: {e}", dir.display()))
+        .map(|ent| ent.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|ext| ext == "txt"))
+        .collect();
+    files.sort();
+    assert!(
+        files.len() >= 4,
+        "protocol-fixtures/ lost scenarios: {files:?}"
+    );
+    for file in &files {
+        replay(file);
+    }
+}

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Wire-surface compat gate for CI.
+
+The committed fixtures under protocol-fixtures/ are the byte-level
+contract for the coordinator's wire protocol (replayed by
+rust/tests/protocol_compat.rs). A change to them IS a wire-surface
+change, so it must land with its compat story written down in
+docs/PROTOCOL.md. Two subcommands, stdlib only:
+
+  hash    — print the sha256 of the fixture set (sorted relative path +
+            file bytes), the identity the gate compares. Useful locally
+            to see whether a working tree touches the surface.
+
+  check   — given --base/--head git refs, fail (exit 1) when the diff
+            touches protocol-fixtures/ without touching
+            docs/PROTOCOL.md. An unresolvable base (first push to a
+            branch, shallow clone) degrades to "everything changed",
+            which passes iff the docs changed too — the conservative
+            reading.
+
+The gate is direction-agnostic on purpose: adding, editing or deleting
+a fixture all count. It does not try to judge the *content* of the doc
+change — review does that — only that one exists in the same range.
+"""
+
+import argparse
+import hashlib
+import subprocess
+import sys
+from pathlib import Path
+
+FIXTURE_DIR = "protocol-fixtures"
+PROTOCOL_DOC = "docs/PROTOCOL.md"
+
+
+def repo_root() -> Path:
+    out = subprocess.run(
+        ["git", "rev-parse", "--show-toplevel"],
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    return Path(out.stdout.strip())
+
+
+def fixture_hash(root: Path) -> str:
+    h = hashlib.sha256()
+    fdir = root / FIXTURE_DIR
+    for path in sorted(fdir.rglob("*")):
+        if not path.is_file():
+            continue
+        h.update(str(path.relative_to(root)).encode())
+        h.update(b"\0")
+        h.update(path.read_bytes())
+        h.update(b"\0")
+    return h.hexdigest()
+
+
+def resolve(ref: str) -> str | None:
+    out = subprocess.run(
+        ["git", "rev-parse", "--verify", "--quiet", f"{ref}^{{commit}}"],
+        capture_output=True,
+        text=True,
+    )
+    return out.stdout.strip() if out.returncode == 0 else None
+
+
+def changed_files(base: str, head: str) -> list[str]:
+    out = subprocess.run(
+        ["git", "diff", "--name-only", f"{base}...{head}"],
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    return [line for line in out.stdout.splitlines() if line]
+
+
+def cmd_hash(_args: argparse.Namespace) -> int:
+    print(fixture_hash(repo_root()))
+    return 0
+
+
+def cmd_check(args: argparse.Namespace) -> int:
+    root = repo_root()
+    print(f"fixture surface hash: {fixture_hash(root)}")
+    base = resolve(args.base)
+    head = resolve(args.head)
+    if head is None:
+        print(f"cannot resolve head ref {args.head!r}", file=sys.stderr)
+        return 1
+    if base is None:
+        # e.g. github.event.before on a branch-creation push is the zero
+        # oid — treat every tracked file as changed
+        print(f"base ref {args.base!r} does not resolve; treating all files as changed")
+        out = subprocess.run(
+            ["git", "ls-tree", "-r", "--name-only", head],
+            capture_output=True,
+            text=True,
+            check=True,
+        )
+        changed = [line for line in out.stdout.splitlines() if line]
+    else:
+        changed = changed_files(base, head)
+
+    fixtures = sorted(p for p in changed if p.startswith(FIXTURE_DIR + "/"))
+    doc_changed = PROTOCOL_DOC in changed
+    if not fixtures:
+        print("wire-surface fixtures untouched — gate passes")
+        return 0
+    print("wire-surface fixtures changed:")
+    for p in fixtures:
+        print(f"  {p}")
+    if doc_changed:
+        print(f"{PROTOCOL_DOC} changed in the same range — gate passes")
+        return 0
+    print(
+        f"FAIL: {FIXTURE_DIR}/ changed without {PROTOCOL_DOC}.\n"
+        "A fixture change is a wire-surface change: update the protocol\n"
+        "document (op tables, framing, deprecation window) in the same\n"
+        "commit so the compat story ships with the change.",
+        file=sys.stderr,
+    )
+    return 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("hash", help="print the fixture-set sha256")
+    chk = sub.add_parser("check", help="gate a git range")
+    chk.add_argument("--base", required=True, help="base ref of the range")
+    chk.add_argument("--head", default="HEAD", help="head ref (default HEAD)")
+    args = ap.parse_args()
+    return {"hash": cmd_hash, "check": cmd_check}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

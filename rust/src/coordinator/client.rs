@@ -1,12 +1,89 @@
-//! Blocking TCP client for the coordinator — used by the examples, the
-//! end-to-end integration test and the load-generating bench.
+//! Blocking TCP clients for the coordinator.
+//!
+//! Two layers:
+//!
+//! - [`Client`] — one socket, one server, no policy. Used by the
+//!   examples, the integration tests and the load-generating bench.
+//!   An I/O error is the caller's problem.
+//! - [`MultiClient`] — the resilient layer for deployments that have a
+//!   primary plus replicas. It owns connect/read/write timeouts
+//!   ([`ClientConfig`]), retries transient I/O failures with bounded
+//!   jittered exponential backoff, follows write redirects when it hits
+//!   a read-only replica (parsing the stable `primary at <addr>` prose
+//!   documented in `docs/PROTOCOL.md`), spreads reads round-robin over
+//!   the replica set, and remembers the highest failover epoch it has
+//!   seen so a revived stale primary fences itself on first contact.
 
 use super::protocol::{Hit, Request, Response, StreamRequest, WriteOpts};
 use super::stats::Stats;
 use crate::data::CatVector;
+use crate::util::rng::Xoshiro256;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Socket and retry policy for [`Client::connect_with`] and
+/// [`MultiClient`]. The zero-policy [`Client::connect`] path does not
+/// consult this at all (no timeouts, no retries), matching its
+/// historical behaviour.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// TCP connect budget per endpoint attempt.
+    pub connect_timeout: Duration,
+    /// Per-read socket timeout (`None` = block forever).
+    pub read_timeout: Option<Duration>,
+    /// Per-write socket timeout (`None` = block forever).
+    pub write_timeout: Option<Duration>,
+    /// Extra attempts after the first failure of an operation. Redirects
+    /// to a new primary do not consume retries (they are progress, not
+    /// failure) but are separately capped to break redirect loops.
+    pub retries: u32,
+    /// First backoff sleep; attempt `n` waits `base * 2^(n-1)`, jittered
+    /// down by up to 50% so synchronized clients do not stampede.
+    pub backoff_base: Duration,
+    /// Ceiling on any single backoff sleep.
+    pub backoff_max: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(1),
+            read_timeout: Some(Duration::from_secs(5)),
+            write_timeout: Some(Duration::from_secs(5)),
+            retries: 3,
+            backoff_base: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Backoff for the `attempt`-th retry (1-based): exponential from
+/// `base`, capped at `max`, then jittered to 50–100% of that span.
+fn backoff_delay(cfg: &ClientConfig, attempt: u32, rng: &mut Xoshiro256) -> Duration {
+    let base_ms = cfg.backoff_base.as_millis() as u64;
+    let max_ms = cfg.backoff_max.as_millis() as u64;
+    let exp = attempt.saturating_sub(1).min(16);
+    let full = base_ms.saturating_mul(1u64 << exp).min(max_ms).max(1);
+    let jittered = full / 2 + rng.gen_range(full / 2 + 1);
+    Duration::from_millis(jittered)
+}
+
+/// Extract the primary address from a replica's write-rejection prose.
+/// The server promises the `primary at <addr>` spelling is stable (see
+/// `docs/PROTOCOL.md`); the address token must look like `host:port` so
+/// the *fence* error ("a newer primary at epoch N superseded…") is
+/// never mistaken for a redirect.
+fn parse_redirect(message: &str) -> Option<&str> {
+    let rest = &message[message.find("primary at ")? + "primary at ".len()..];
+    let addr = rest.split_whitespace().next()?;
+    if addr.contains(':') {
+        Some(addr)
+    } else {
+        None
+    }
+}
 
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -16,6 +93,37 @@ pub struct Client {
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Client::from_stream(stream)
+    }
+
+    /// Connect with explicit socket budgets: `connect_timeout` bounds
+    /// each resolved address attempt, and the read/write timeouts stick
+    /// to the socket for the connection's lifetime. A server that
+    /// accepts but never answers turns into a timeout `Err` instead of
+    /// a hang — the property [`MultiClient`] builds on.
+    pub fn connect_with(addr: &str, cfg: &ClientConfig) -> Result<Client> {
+        let addrs: Vec<_> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolve {addr}"))?
+            .collect();
+        let mut last_err = None;
+        for a in &addrs {
+            match TcpStream::connect_timeout(a, cfg.connect_timeout) {
+                Ok(stream) => {
+                    stream.set_read_timeout(cfg.read_timeout)?;
+                    stream.set_write_timeout(cfg.write_timeout)?;
+                    return Client::from_stream(stream);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match last_err {
+            Some(e) => Err(e).with_context(|| format!("connect {addr}")),
+            None => bail!("{addr} resolved to no addresses"),
+        }
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<Client> {
         stream.set_nodelay(true).ok();
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
@@ -45,7 +153,7 @@ impl Client {
             ttl_ms => Request::InsertTtl { vec, ttl_ms },
         };
         match self.call(&req)? {
-            Response::Inserted { id } => Ok(id),
+            Response::Inserted { id, .. } => Ok(id),
             Response::Error { message } => bail!("insert failed: {message}"),
             other => bail!("unexpected response {other:?}"),
         }
@@ -55,12 +163,6 @@ impl Client {
     /// kept so existing callers compile unchanged.
     pub fn insert(&mut self, vec: CatVector) -> Result<usize> {
         self.insert_with(vec, &WriteOpts::default())
-    }
-
-    /// Deprecated spelling of `insert_with(vec, &WriteOpts::ttl(ttl_ms))`
-    /// — prefer that; this shim goes away after one release.
-    pub fn insert_ttl(&mut self, vec: CatVector, ttl_ms: u64) -> Result<usize> {
-        self.insert_with(vec, &WriteOpts::ttl(ttl_ms))
     }
 
     /// Delete a live id from the corpus (primary only; replicated to
@@ -84,12 +186,6 @@ impl Client {
             Response::Error { message } => bail!("upsert failed: {message}"),
             other => bail!("unexpected response {other:?}"),
         }
-    }
-
-    /// Deprecated spelling of `upsert_with` with a bare `ttl_ms` — prefer
-    /// that; this shim goes away after one release.
-    pub fn upsert(&mut self, id: usize, vec: CatVector, ttl_ms: u64) -> Result<()> {
-        self.upsert_with(id, vec, &WriteOpts { ttl_ms, trace: 0 })
     }
 
     pub fn query(&mut self, vec: CatVector, k: usize) -> Result<Vec<Hit>> {
@@ -199,21 +295,45 @@ impl Client {
 
     /// Promote a read-replica to writable (replicas only): stops its
     /// puller and returns the per-shard applied WAL sequences at the
-    /// moment replication stopped. Idempotent — promoting an already
-    /// writable replica just reports its sequences again.
-    pub fn promote(&mut self) -> Result<Vec<u64>> {
+    /// moment replication stopped plus the new failover epoch (0 on
+    /// non-durable replicas). Idempotent — promoting an already writable
+    /// replica reports its sequences and current epoch again without
+    /// bumping anything.
+    pub fn promote(&mut self) -> Result<(Vec<u64>, u64)> {
         match self.call(&Request::Promote)? {
-            Response::Promoted { applied_seqs } => Ok(applied_seqs),
+            Response::Promoted {
+                applied_seqs,
+                epoch,
+            } => Ok((applied_seqs, epoch)),
             Response::Error { message } => bail!("promote failed: {message}"),
             other => bail!("unexpected response {other:?}"),
         }
     }
 
-    pub fn ping(&mut self) -> Result<()> {
-        match self.call(&Request::Ping)? {
-            Response::Pong => Ok(()),
+    /// Fence this server read-only at `max(its own epoch, epoch)` so it
+    /// can be safely pointed at a new primary with `--replicate-from`.
+    /// Durable servers only; returns the epoch the fence was written at.
+    pub fn demote(&mut self, epoch: Option<u64>) -> Result<u64> {
+        match self.call(&Request::Demote { epoch })? {
+            Response::Demoted { epoch } => Ok(epoch),
+            Response::Error { message } => bail!("demote failed: {message}"),
             other => bail!("unexpected response {other:?}"),
         }
+    }
+
+    /// Liveness round trip. Returns the server's failover epoch (`None`
+    /// on non-durable servers). Passing `epoch` gossips the caller's
+    /// highest observed epoch — a durable writable server that learns of
+    /// a newer epoch this way fences itself (see `docs/FAILOVER.md`).
+    pub fn ping_epoch(&mut self, epoch: Option<u64>) -> Result<Option<u64>> {
+        match self.call(&Request::Ping { epoch })? {
+            Response::Pong { epoch } => Ok(epoch),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        self.ping_epoch(None).map(|_| ())
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
@@ -221,5 +341,317 @@ impl Client {
             Response::ShuttingDown => Ok(()),
             other => bail!("unexpected response {other:?}"),
         }
+    }
+}
+
+/// A failover-aware client over one primary and any number of replicas.
+///
+/// Policy, all driven by [`ClientConfig`]:
+///
+/// - **Writes** go to the believed primary. A read-only rejection that
+///   names a different primary (`primary at <addr>`) re-aims the client
+///   and retries immediately — redirects are progress, capped at
+///   [`MultiClient::MAX_REDIRECTS`] per call to break loops. Transient
+///   I/O failures reconnect and retry with jittered exponential backoff.
+/// - **Reads** rotate round-robin across the replica set, falling back
+///   to the primary when no replica answers (or none was given).
+/// - **Epochs**: every ack and pong carrying an epoch raises the
+///   client's high-water mark, and each fresh write connection opens
+///   with a `ping` gossiping it — so a revived stale primary fences
+///   itself before it can accept a single write from this client.
+///
+/// Not thread-safe by design (like [`Client`]); build one `MultiClient`
+/// per worker thread from the same endpoint list.
+pub struct MultiClient {
+    cfg: ClientConfig,
+    primary: String,
+    replicas: Vec<String>,
+    next_read: usize,
+    last_epoch: u64,
+    write_conn: Option<Client>,
+    read_conns: Vec<Option<Client>>,
+    rng: Xoshiro256,
+}
+
+impl MultiClient {
+    /// Redirect-follow cap per write call: enough for any realistic
+    /// promotion chain, small enough to fail fast on a redirect cycle.
+    pub const MAX_REDIRECTS: u32 = 4;
+
+    pub fn new(primary: &str, replicas: &[&str]) -> MultiClient {
+        MultiClient::with_config(primary, replicas, ClientConfig::default())
+    }
+
+    pub fn with_config(primary: &str, replicas: &[&str], cfg: ClientConfig) -> MultiClient {
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x9e3779b97f4a7c15);
+        MultiClient {
+            cfg,
+            primary: primary.to_string(),
+            replicas: replicas.iter().map(|r| r.to_string()).collect(),
+            next_read: 0,
+            last_epoch: 0,
+            write_conn: None,
+            read_conns: replicas.iter().map(|_| None).collect(),
+            rng: Xoshiro256::new(seed),
+        }
+    }
+
+    /// Where this client currently believes writes should go — updated
+    /// in place whenever a redirect is followed.
+    pub fn primary(&self) -> &str {
+        &self.primary
+    }
+
+    /// Highest failover epoch observed on any ack or pong (0 = none).
+    pub fn last_epoch(&self) -> u64 {
+        self.last_epoch
+    }
+
+    fn note_epoch(&mut self, resp: &Response) {
+        let epoch = match resp {
+            Response::Inserted { epoch, .. }
+            | Response::Deleted { epoch, .. }
+            | Response::Upserted { epoch, .. }
+            | Response::Pong { epoch } => *epoch,
+            Response::Promoted { epoch, .. } | Response::Demoted { epoch } => Some(*epoch),
+            _ => None,
+        };
+        if let Some(e) = epoch {
+            self.last_epoch = self.last_epoch.max(e);
+        }
+    }
+
+    /// One request against the believed primary, reconnecting and
+    /// backing off on I/O failure, following redirects on read-only
+    /// rejection. A fresh connection opens with an epoch-gossiping ping.
+    fn write_call(&mut self, req: &Request) -> Result<Response> {
+        let mut redirects = 0u32;
+        let mut attempt = 0u32;
+        loop {
+            let res = (|| -> Result<Response> {
+                if self.write_conn.is_none() {
+                    let mut conn = Client::connect_with(&self.primary, &self.cfg)?;
+                    let gossip = match self.last_epoch {
+                        0 => None,
+                        e => Some(e),
+                    };
+                    if let Some(e) = conn.ping_epoch(gossip)? {
+                        self.last_epoch = self.last_epoch.max(e);
+                    }
+                    self.write_conn = Some(conn);
+                }
+                self.write_conn.as_mut().unwrap().call(req)
+            })();
+            match res {
+                Ok(Response::Error { message }) => {
+                    if let Some(addr) = parse_redirect(&message) {
+                        redirects += 1;
+                        if redirects > MultiClient::MAX_REDIRECTS {
+                            bail!(
+                                "redirect loop: still read-only after \
+                                 {redirects} hops ({message})"
+                            );
+                        }
+                        self.primary = addr.to_string();
+                        self.write_conn = None;
+                        continue;
+                    }
+                    return Ok(Response::Error { message });
+                }
+                Ok(resp) => {
+                    self.note_epoch(&resp);
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    self.write_conn = None;
+                    attempt += 1;
+                    if attempt > self.cfg.retries {
+                        return Err(e.context(format!(
+                            "write to {} failed after {attempt} attempts",
+                            self.primary
+                        )));
+                    }
+                    std::thread::sleep(backoff_delay(&self.cfg, attempt, &mut self.rng));
+                }
+            }
+        }
+    }
+
+    /// One read against the next endpoint in rotation; on failure the
+    /// rotation advances, so retries naturally spread over the fleet,
+    /// and the primary serves as the read of last resort.
+    fn read_call(&mut self, req: &Request) -> Result<Response> {
+        if self.replicas.is_empty() {
+            return self.write_call(req);
+        }
+        let mut attempt = 0u32;
+        loop {
+            let idx = self.next_read % self.replicas.len();
+            self.next_read = self.next_read.wrapping_add(1);
+            let res = (|| -> Result<Response> {
+                if self.read_conns[idx].is_none() {
+                    self.read_conns[idx] =
+                        Some(Client::connect_with(&self.replicas[idx], &self.cfg)?);
+                }
+                self.read_conns[idx].as_mut().unwrap().call(req)
+            })();
+            match res {
+                Ok(resp) => {
+                    self.note_epoch(&resp);
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    self.read_conns[idx] = None;
+                    attempt += 1;
+                    if attempt > self.cfg.retries {
+                        return match self.write_call(req) {
+                            Ok(resp) => Ok(resp),
+                            Err(_) => Err(e.context(format!(
+                                "read failed after {attempt} replica attempts"
+                            ))),
+                        };
+                    }
+                    std::thread::sleep(backoff_delay(&self.cfg, attempt, &mut self.rng));
+                }
+            }
+        }
+    }
+
+    pub fn insert_with(&mut self, vec: CatVector, opts: &WriteOpts) -> Result<usize> {
+        let req = match opts.ttl_ms {
+            0 => Request::Insert { vec },
+            ttl_ms => Request::InsertTtl { vec, ttl_ms },
+        };
+        match self.write_call(&req)? {
+            Response::Inserted { id, .. } => Ok(id),
+            Response::Error { message } => bail!("insert failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn insert(&mut self, vec: CatVector) -> Result<usize> {
+        self.insert_with(vec, &WriteOpts::default())
+    }
+
+    pub fn delete(&mut self, id: usize) -> Result<()> {
+        match self.write_call(&Request::Delete { id })? {
+            Response::Deleted { .. } => Ok(()),
+            Response::Error { message } => bail!("delete failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn upsert_with(&mut self, id: usize, vec: CatVector, opts: &WriteOpts) -> Result<()> {
+        let req = Request::Upsert {
+            id,
+            vec,
+            ttl_ms: opts.ttl_ms,
+        };
+        match self.write_call(&req)? {
+            Response::Upserted { .. } => Ok(()),
+            Response::Error { message } => bail!("upsert failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn query(&mut self, vec: CatVector, k: usize) -> Result<Vec<Hit>> {
+        match self.read_call(&Request::Query { vec, k })? {
+            Response::Hits { hits } => Ok(hits),
+            Response::Error { message } => bail!("query failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn query_batch(&mut self, vecs: Vec<CatVector>, k: usize) -> Result<Vec<Vec<Hit>>> {
+        match self.read_call(&Request::QueryBatch { vecs, k })? {
+            Response::HitsBatch { results } => Ok(results),
+            Response::Error { message } => bail!("query_batch failed: {message}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<Vec<(String, f64)>> {
+        match self.read_call(&Request::Stats)? {
+            Response::Stats { fields } => Ok(fields),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn typed_stats(&mut self) -> Result<Stats> {
+        Ok(Stats::from_fields(self.stats()?))
+    }
+
+    /// Ping the primary, gossiping this client's highest observed epoch.
+    pub fn ping(&mut self) -> Result<()> {
+        let gossip = match self.last_epoch {
+            0 => None,
+            e => Some(e),
+        };
+        match self.write_call(&Request::Ping { epoch: gossip })? {
+            Response::Pong { .. } => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn redirect_parse_accepts_only_addr_shaped_targets() {
+        // the stable replica rejection prose
+        let m = "read-only replica: writes go to the primary at 127.0.0.1:7070 \
+                 (or `promote` this replica)";
+        assert_eq!(parse_redirect(m), Some("127.0.0.1:7070"));
+        // the fence error also says "primary at" — but names an epoch,
+        // not an addr, and must never be followed as a redirect
+        let f = "write fenced: a newer primary at epoch 9 superseded this server \
+                 (own epoch 1); demote and rejoin with --replicate-from";
+        assert_eq!(parse_redirect(f), None);
+        assert_eq!(parse_redirect("some other error"), None);
+        assert_eq!(parse_redirect("primary at "), None);
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_jittered() {
+        let cfg = ClientConfig {
+            backoff_base: Duration::from_millis(100),
+            backoff_max: Duration::from_millis(400),
+            ..ClientConfig::default()
+        };
+        let mut rng = Xoshiro256::new(7);
+        for attempt in 1..=10u32 {
+            let d = backoff_delay(&cfg, attempt, &mut rng);
+            let full = (100u64 << (attempt - 1).min(16)).min(400);
+            assert!(d.as_millis() as u64 >= full / 2, "attempt {attempt}: {d:?}");
+            assert!(d.as_millis() as u64 <= full, "attempt {attempt}: {d:?}");
+        }
+        // attempt 1 never exceeds base, deep attempts never exceed max
+        assert!(backoff_delay(&cfg, 1, &mut rng) <= cfg.backoff_base);
+        assert!(backoff_delay(&cfg, 99, &mut rng) <= cfg.backoff_max);
+    }
+
+    #[test]
+    fn multi_client_tracks_epoch_high_water_mark() {
+        let mut mc = MultiClient::new("127.0.0.1:1", &[]);
+        assert_eq!(mc.last_epoch(), 0);
+        mc.note_epoch(&Response::Inserted {
+            id: 1,
+            epoch: Some(3),
+        });
+        assert_eq!(mc.last_epoch(), 3);
+        mc.note_epoch(&Response::Pong { epoch: Some(2) }); // never regresses
+        assert_eq!(mc.last_epoch(), 3);
+        mc.note_epoch(&Response::Promoted {
+            applied_seqs: vec![],
+            epoch: 5,
+        });
+        assert_eq!(mc.last_epoch(), 5);
+        mc.note_epoch(&Response::Flushed); // epoch-free responses are no-ops
+        assert_eq!(mc.last_epoch(), 5);
     }
 }

@@ -129,6 +129,23 @@
 //! `repl_*` stats (per-shard applied seq + lag, caught-up/diverged
 //! gauges) and comparable across nodes via `persist_next_seq_shard{i}`.
 //!
+//! Failover: promotion is safe to automate. A follower started with
+//! `--auto-promote` probes its primary (`ping`, configurable interval/
+//! timeout/consecutive-failure threshold) and self-promotes once the
+//! primary is *dead* — N straight probes missing the budget — never
+//! merely slow. Every promotion bumps a monotonic durable **epoch**
+//! (manifest v5) that rides mutation acks, pongs and WAL-tail requests;
+//! a revived stale primary that hears a higher epoch fences itself
+//! read-only behind a durable `FENCED` marker (cleared only by
+//! rejoining as a follower via `--replicate-from`), so two writable
+//! primaries can never both acknowledge writes. The `demote` op fences
+//! by hand; [`MultiClient`] rides the whole scheme from the client side
+//! (timeouts, backoff, redirect-following, epoch gossip); and the
+//! deterministic fault-injection registry ([`crate::fault`],
+//! `CABIN_FAILPOINTS`) plus the chaos suite (`tests/chaos_failover.rs`)
+//! exercise partitions, `kill -9` and torn transfers end-to-end. See
+//! `docs/FAILOVER.md` for the operational runbook.
+//!
 //! Ingest pipelining: the batcher *places* a batch (rows + WAL frames +
 //! group-commit registration) and hands the fsync-window wait plus the
 //! client replies to a completion thread, so it sketches batch N+1 while
@@ -185,6 +202,7 @@ pub mod store;
 pub mod topk;
 
 pub use batcher::{BatcherConfig, SketchBackend, WriteOp};
+pub use client::{Client, ClientConfig, MultiClient};
 pub use executor::{ExecutorConfig, ShardExecutor};
 pub use metrics::{stats_field, ExecutorCounters, IndexCounters, Metrics};
 pub use protocol::{Request, Response, StreamRequest, WriteOpts, WAL_TAIL_DEFAULT_MAX_BYTES};
@@ -197,4 +215,4 @@ pub use topk::TopK;
 // import path.
 pub use crate::index::{IndexConfig, IndexMode};
 pub use crate::persist::{FsyncPolicy, PersistConfig, PersistMode};
-pub use crate::replica::{ReplCounters, ReplicaConfig};
+pub use crate::replica::{FailoverCounters, ReplCounters, ReplicaConfig};

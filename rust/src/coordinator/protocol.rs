@@ -20,9 +20,13 @@
 //! {"op":"stats"}                                → {"ok":true, counters…}
 //! {"op":"flush"}                                → {"ok":true,"flushed":true}       (fsync all WALs)
 //! {"op":"snapshot"}                             → {"ok":true,"snapshot_generation":3}
-//! {"op":"promote"}                              → {"ok":true,"promoted":true,
+//! {"op":"promote"}                              → {"ok":true,"promoted":true,"epoch":"2",
 //!                                                  "applied_seqs":["812","790"]}   (replicas only)
-//! {"op":"ping"} / {"op":"shutdown"}
+//! {"op":"demote","epoch":"3"}                   → {"ok":true,"demoted":true,"epoch":"3"}
+//! {"op":"ping","epoch":"2"}                     → {"ok":true,"pong":true,"epoch":"2"}
+//!   ("epoch" optional both ways; durable servers echo theirs, and treat
+//!    a higher peer epoch as evidence of a newer primary — see below)
+//! {"op":"shutdown"}
 //! ```
 //!
 //! `flush` and `snapshot` require the server to run with persistence
@@ -30,6 +34,21 @@
 //! `promote` requires a replica (`serve --replicate-from`): it stops the
 //! puller and flips the replica writable, returning the per-shard applied
 //! WAL sequences. Errors: `{"ok":false,"error":"…"}`.
+//!
+//! ## Epoch fencing
+//!
+//! Durable servers carry a monotonic **failover epoch** (persisted in the
+//! manifest, starting at 1). Promotion bumps it; every durable mutation
+//! ack, `pong`, replication header and `promoted` reply carries the
+//! current value as a string-encoded u64 (non-durable servers omit it).
+//! A server that observes a *higher* epoch than its own — on a `ping`,
+//! `demote`, or `repl_wal_tail` request — concludes a newer primary was
+//! promoted, **fences itself read-only** (persisting the observed epoch
+//! and a fence marker so the decision survives restart) and rejects
+//! writes with an error naming both epochs. `demote` is the explicit
+//! spelling of the same transition, used by operators to turn a fenced
+//! ex-primary back into a follower before restarting it with
+//! `--replicate-from`.
 //!
 //! ## Stream ops (framed raw payloads)
 //!
@@ -41,7 +60,9 @@
 //! {"stream":"repl_snapshot"}                → header {"ok":true,"generation":…,"shard_bytes":[…],…}
 //!                                             + concatenated shard snapshot bytes
 //! {"stream":"repl_wal_tail","shard":0,      → header {"ok":true,"frames":…,"bytes":N,…}
-//!  "from_seq":"812","max_bytes":1048576}      + N bytes of raw WAL frames
+//!  "from_seq":"812","max_bytes":1048576,      + N bytes of raw WAL frames
+//!  "epoch":"2"}                               ("epoch" optional: the follower's
+//!                                              own epoch, for fencing)
 //! {"stream":"metrics_text"}                 → header {"ok":true,"bytes":N}
 //!                                             + N bytes of text/plain Prometheus exposition
 //! ```
@@ -52,14 +73,10 @@
 //! [`crate::obs::prom`] for the payload producers, and `docs/PROTOCOL.md`
 //! for the full framing contract.
 //!
-//! **Deprecated spellings** (PR 5–7 era): the same three ops used to be
-//! hand-routed before request parsing as `{"op":"repl_snapshot"}`,
-//! `{"op":"repl_wal_tail",…}` and `{"op":"metrics_text"}`. Those
-//! spellings still parse — [`StreamRequest::from_json_line`] accepts
-//! both — and answer byte-identically (pinned by
-//! `tests/protocol_compat.rs`), but new clients should send the
-//! `"stream"` envelope; the `"op"` forms will be removed after one
-//! release.
+//! The PR 5–7 era `"op"` spellings of these three ops
+//! (`{"op":"repl_snapshot"}` etc.) were deprecated for one release and
+//! are now **removed**: such lines fall through to [`Request`] parsing
+//! and draw an `unknown op` error (pinned by `tests/protocol_compat.rs`).
 //!
 //! ## Validation
 //!
@@ -104,9 +121,17 @@ pub enum Request {
     /// Force a snapshot rotation now (durable servers only).
     Snapshot,
     /// Flip a caught-up replica writable (replicas only): stop pulling
-    /// from the primary and start accepting inserts.
+    /// from the primary and start accepting inserts. Bumps the durable
+    /// failover epoch on the first promotion.
     Promote,
-    Ping,
+    /// Fence a durable server read-only (the inverse of promote): used
+    /// by operators to step a revived ex-primary down before rejoining
+    /// it as a follower. `epoch`, when present, is the higher epoch to
+    /// adopt (e.g. the new primary's).
+    Demote { epoch: Option<u64> },
+    /// Liveness probe. `epoch`, when present, is the sender's failover
+    /// epoch — durable servers compare it against their own for fencing.
+    Ping { epoch: Option<u64> },
     Shutdown,
 }
 
@@ -118,11 +143,14 @@ pub struct Hit {
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
-    Inserted { id: usize },
+    /// Mutation acks carry the durable failover epoch the write was
+    /// accepted under (`None` on non-durable servers — their wire bytes
+    /// are unchanged from the pre-epoch protocol).
+    Inserted { id: usize, epoch: Option<u64> },
     /// The id's row was removed from the corpus.
-    Deleted { id: usize },
+    Deleted { id: usize, epoch: Option<u64> },
     /// The id's sketch was replaced (in place or by resurrection).
-    Upserted { id: usize },
+    Upserted { id: usize, epoch: Option<u64> },
     Hits { hits: Vec<Hit> },
     HitsBatch { results: Vec<Vec<Hit>> },
     Distance { dist: f64 },
@@ -133,9 +161,14 @@ pub enum Response {
     /// Snapshot rotation completed; the new live generation.
     Snapshotted { generation: u64 },
     /// Replica promoted to writable; per-shard applied WAL sequences at
-    /// the moment the puller stopped.
-    Promoted { applied_seqs: Vec<u64> },
-    Pong,
+    /// the moment the puller stopped, and the (freshly bumped) failover
+    /// epoch the replica now serves writes under.
+    Promoted { applied_seqs: Vec<u64>, epoch: u64 },
+    /// Server fenced read-only; the failover epoch it is fenced at.
+    Demoted { epoch: u64 },
+    /// `epoch` is the durable server's failover epoch (`None` from
+    /// non-durable servers — bytes unchanged from the pre-epoch `pong`).
+    Pong { epoch: Option<u64> },
     ShuttingDown,
     Error { message: String },
 }
@@ -177,12 +210,16 @@ pub enum StreamRequest {
     /// shard snapshot files concatenated in shard order.
     ReplSnapshot,
     /// Raw WAL frame range for one shard starting at `from_seq`
-    /// (exclusive): header carries `frames`/`bytes`/`live_seq`; the
-    /// payload is `bytes` of verbatim checksummed frames.
+    /// (exclusive): header carries `frames`/`bytes`/`live_seq`/`epoch`;
+    /// the payload is `bytes` of verbatim checksummed frames. The
+    /// request-side `epoch` is the follower's own failover epoch — a
+    /// primary that sees a *higher* one fences itself (see the module
+    /// docs) instead of shipping.
     ReplWalTail {
         shard: usize,
         from_seq: u64,
         max_bytes: usize,
+        epoch: Option<u64>,
     },
     /// Prometheus text exposition: header `{"ok":true,"bytes":N}`, then
     /// `N` bytes of `text/plain; version=0.0.4`.
@@ -193,29 +230,26 @@ pub enum StreamRequest {
 pub const WAL_TAIL_DEFAULT_MAX_BYTES: usize = 1 << 20;
 
 impl StreamRequest {
-    /// Cheap pre-parse sniff: could this line be a stream op (either the
-    /// `"stream"` envelope or one of the deprecated `"op"` spellings)?
-    /// False positives are fine — [`StreamRequest::from_json_line`]
-    /// returns `Ok(None)` for them and the line falls through to
-    /// [`Request`] parsing; the point is that ordinary request lines skip
-    /// the extra parse entirely.
+    /// Cheap pre-parse sniff: could this line be a stream op (a
+    /// `"stream"` envelope)? False positives are fine —
+    /// [`StreamRequest::from_json_line`] returns `Ok(None)` for them and
+    /// the line falls through to [`Request`] parsing; the point is that
+    /// ordinary request lines skip the extra parse entirely.
     pub fn looks_like(line: &str) -> bool {
-        line.contains("\"stream\"") || line.contains("\"repl_") || line.contains("\"metrics_text\"")
+        line.contains("\"stream\"")
     }
 
     /// Parse a header line. `Ok(None)` means "not a stream op" (route it
     /// to [`Request::from_json_line`]); `Err` means it *is* one but
-    /// malformed (answer with an error line). Accepts the `"stream"`
-    /// envelope and, for one release, the deprecated `"op"` spellings.
+    /// malformed (answer with an error line). Only the `"stream"`
+    /// envelope parses — the deprecated `"op"` spellings were removed
+    /// after their one-release grace period and now fall through to
+    /// [`Request`] parsing, which rejects them as unknown ops.
     pub fn from_json_line(line: &str) -> Result<Option<StreamRequest>> {
         let obj = crate::util::json::parse(line)?;
         let name = match obj.get("stream").and_then(|s| s.as_str()) {
             Some(s) => s.to_string(),
-            None => match obj.get("op").and_then(|s| s.as_str()) {
-                // deprecated spellings, kept answering for one release
-                Some(op @ ("repl_snapshot" | "repl_wal_tail" | "metrics_text")) => op.to_string(),
-                _ => return Ok(None),
-            },
+            None => return Ok(None),
         };
         Ok(Some(match name.as_str() {
             "repl_snapshot" => StreamRequest::ReplSnapshot,
@@ -227,7 +261,11 @@ impl StreamRequest {
                     .and_then(|v| v.as_usize())
                     .unwrap_or(WAL_TAIL_DEFAULT_MAX_BYTES)
                     .max(1);
-                StreamRequest::ReplWalTail { shard, from_seq, max_bytes }
+                let epoch = match obj.get("epoch") {
+                    Some(_) => Some(parse_seq(&obj, "epoch")?),
+                    None => None,
+                };
+                StreamRequest::ReplWalTail { shard, from_seq, max_bytes, epoch }
             }
             "metrics_text" => StreamRequest::MetricsText,
             other => bail!("unknown stream op '{other}'"),
@@ -238,15 +276,20 @@ impl StreamRequest {
     pub fn to_json_line(&self) -> String {
         match self {
             StreamRequest::ReplSnapshot => r#"{"stream":"repl_snapshot"}"#.to_string(),
-            StreamRequest::ReplWalTail { shard, from_seq, max_bytes } => Json::obj(vec![
-                ("stream", Json::Str("repl_wal_tail".into())),
-                ("shard", Json::Num(*shard as f64)),
-                // string: seqs are u64 and must roundtrip exactly through
-                // the f64-backed JSON model (like manifest seqs)
-                ("from_seq", Json::Str(from_seq.to_string())),
-                ("max_bytes", Json::Num(*max_bytes as f64)),
-            ])
-            .to_string(),
+            StreamRequest::ReplWalTail { shard, from_seq, max_bytes, epoch } => {
+                let mut pairs = vec![
+                    ("stream", Json::Str("repl_wal_tail".into())),
+                    ("shard", Json::Num(*shard as f64)),
+                    // string: seqs are u64 and must roundtrip exactly through
+                    // the f64-backed JSON model (like manifest seqs)
+                    ("from_seq", Json::Str(from_seq.to_string())),
+                    ("max_bytes", Json::Num(*max_bytes as f64)),
+                ];
+                if let Some(e) = epoch {
+                    pairs.push(("epoch", Json::Str(e.to_string())));
+                }
+                Json::obj(pairs).to_string()
+            }
             StreamRequest::MetricsText => r#"{"stream":"metrics_text"}"#.to_string(),
         }
     }
@@ -394,7 +437,18 @@ impl Request {
             "flush" => Request::Flush,
             "snapshot" => Request::Snapshot,
             "promote" => Request::Promote,
-            "ping" => Request::Ping,
+            "demote" => Request::Demote {
+                epoch: match obj.get("epoch") {
+                    Some(_) => Some(parse_seq(&obj, "epoch")?),
+                    None => None,
+                },
+            },
+            "ping" => Request::Ping {
+                epoch: match obj.get("epoch") {
+                    Some(_) => Some(parse_seq(&obj, "epoch")?),
+                    None => None,
+                },
+            },
             "shutdown" => Request::Shutdown,
             other => bail!("unknown op '{other}'"),
         })
@@ -504,7 +558,23 @@ impl Request {
             Request::Flush => r#"{"op":"flush"}"#.to_string(),
             Request::Snapshot => r#"{"op":"snapshot"}"#.to_string(),
             Request::Promote => r#"{"op":"promote"}"#.to_string(),
-            Request::Ping => r#"{"op":"ping"}"#.to_string(),
+            Request::Demote { epoch } => match epoch {
+                None => r#"{"op":"demote"}"#.to_string(),
+                Some(e) => Json::obj(vec![
+                    ("op", Json::Str("demote".into())),
+                    // string: epochs are u64 and must roundtrip exactly
+                    ("epoch", Json::Str(e.to_string())),
+                ])
+                .to_string(),
+            },
+            Request::Ping { epoch } => match epoch {
+                None => r#"{"op":"ping"}"#.to_string(),
+                Some(e) => Json::obj(vec![
+                    ("op", Json::Str("ping".into())),
+                    ("epoch", Json::Str(e.to_string())),
+                ])
+                .to_string(),
+            },
             Request::Shutdown => r#"{"op":"shutdown"}"#.to_string(),
         }
     }
@@ -513,21 +583,37 @@ impl Request {
 impl Response {
     pub fn to_json_line(&self) -> String {
         match self {
-            Response::Inserted { id } => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("id", Json::Num(*id as f64)),
-            ])
-            .to_string(),
-            Response::Deleted { id } => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("deleted", Json::Num(*id as f64)),
-            ])
-            .to_string(),
-            Response::Upserted { id } => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("upserted", Json::Num(*id as f64)),
-            ])
-            .to_string(),
+            Response::Inserted { id, epoch } => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("id", Json::Num(*id as f64)),
+                ];
+                if let Some(e) = epoch {
+                    // string: epochs are u64 and must roundtrip exactly
+                    pairs.push(("epoch", Json::Str(e.to_string())));
+                }
+                Json::obj(pairs).to_string()
+            }
+            Response::Deleted { id, epoch } => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("deleted", Json::Num(*id as f64)),
+                ];
+                if let Some(e) = epoch {
+                    pairs.push(("epoch", Json::Str(e.to_string())));
+                }
+                Json::obj(pairs).to_string()
+            }
+            Response::Upserted { id, epoch } => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("upserted", Json::Num(*id as f64)),
+                ];
+                if let Some(e) = epoch {
+                    pairs.push(("epoch", Json::Str(e.to_string())));
+                }
+                Json::obj(pairs).to_string()
+            }
             Response::Hits { hits } => {
                 let arr = hits
                     .iter()
@@ -589,11 +675,13 @@ impl Response {
                 ("snapshot_generation", Json::Num(*generation as f64)),
             ])
             .to_string(),
-            Response::Promoted { applied_seqs } => Json::obj(vec![
+            Response::Promoted { applied_seqs, epoch } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("promoted", Json::Bool(true)),
-                // strings: seqs are u64 and must roundtrip exactly
-                // through the f64-backed JSON model (like manifest seqs)
+                // strings: seqs and epochs are u64 and must roundtrip
+                // exactly through the f64-backed JSON model (like
+                // manifest seqs)
+                ("epoch", Json::Str(epoch.to_string())),
                 (
                     "applied_seqs",
                     Json::Arr(
@@ -605,7 +693,21 @@ impl Response {
                 ),
             ])
             .to_string(),
-            Response::Pong => r#"{"ok":true,"pong":true}"#.to_string(),
+            Response::Demoted { epoch } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("demoted", Json::Bool(true)),
+                ("epoch", Json::Str(epoch.to_string())),
+            ])
+            .to_string(),
+            Response::Pong { epoch } => match epoch {
+                None => r#"{"ok":true,"pong":true}"#.to_string(),
+                Some(e) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("pong", Json::Bool(true)),
+                    ("epoch", Json::Str(e.to_string())),
+                ])
+                .to_string(),
+            },
             Response::ShuttingDown => r#"{"ok":true,"shutdown":true}"#.to_string(),
             Response::Error { message } => Json::obj(vec![
                 ("ok", Json::Bool(false)),
@@ -627,8 +729,13 @@ impl Response {
                     .to_string(),
             });
         }
+        // string-encoded, like seqs; absent on non-durable replies
+        let epoch = obj
+            .get("epoch")
+            .and_then(|v| v.as_str())
+            .and_then(|s| s.parse::<u64>().ok());
         if let Some(id) = obj.get("id").and_then(|v| v.as_usize()) {
-            return Ok(Response::Inserted { id });
+            return Ok(Response::Inserted { id, epoch });
         }
         let parse_hits = |hits: &[Json]| -> Vec<Hit> {
             hits.iter()
@@ -664,7 +771,7 @@ impl Response {
             });
         }
         if obj.get("pong").is_some() {
-            return Ok(Response::Pong);
+            return Ok(Response::Pong { epoch });
         }
         if obj.get("shutdown").is_some() {
             return Ok(Response::ShuttingDown);
@@ -680,15 +787,24 @@ impl Response {
                 .iter()
                 .filter_map(|s| s.as_str().and_then(|s| s.parse::<u64>().ok()))
                 .collect();
-            return Ok(Response::Promoted { applied_seqs });
+            // pre-epoch servers omitted the field; 0 marks "unknown"
+            return Ok(Response::Promoted {
+                applied_seqs,
+                epoch: epoch.unwrap_or(0),
+            });
+        }
+        if obj.get("demoted").is_some() {
+            return Ok(Response::Demoted {
+                epoch: epoch.unwrap_or(0),
+            });
         }
         // before the stats fallback: these replies are themselves numeric
         // fields and would otherwise be swallowed as one-field Stats
         if let Some(id) = obj.get("deleted").and_then(|v| v.as_usize()) {
-            return Ok(Response::Deleted { id });
+            return Ok(Response::Deleted { id, epoch });
         }
         if let Some(id) = obj.get("upserted").and_then(|v| v.as_usize()) {
-            return Ok(Response::Upserted { id });
+            return Ok(Response::Upserted { id, epoch });
         }
         if let Some(generation) = obj.get("snapshot_generation").and_then(|v| v.as_usize()) {
             return Ok(Response::Snapshotted {
@@ -858,10 +974,24 @@ mod tests {
 
     #[test]
     fn flush_and_snapshot_ops_roundtrip() {
-        for req in [Request::Flush, Request::Snapshot, Request::Promote] {
+        for req in [
+            Request::Flush,
+            Request::Snapshot,
+            Request::Promote,
+            Request::Ping { epoch: None },
+            Request::Ping { epoch: Some((1u64 << 55) + 3) },
+            Request::Demote { epoch: None },
+            Request::Demote { epoch: Some(9) },
+        ] {
             let back = Request::from_json_line(&req.to_json_line(), 3).unwrap();
             assert_eq!(back, req);
         }
+        // the epoch-less ping serialises byte-identically to the
+        // pre-epoch protocol (pinned by tests/protocol_compat.rs)
+        assert_eq!(
+            Request::Ping { epoch: None }.to_json_line(),
+            r#"{"op":"ping"}"#
+        );
         // a snapshot reply must parse as Snapshotted, not a one-field Stats
         let back =
             Response::from_json_line(r#"{"ok":true,"snapshot_generation":9}"#).unwrap();
@@ -873,6 +1003,7 @@ mod tests {
         // beyond f64's 2^53 integer range: the string encoding must hold
         let resp = Response::Promoted {
             applied_seqs: vec![(1u64 << 55) + 1, 0, 42],
+            epoch: (1u64 << 55) + 7,
         };
         let back = Response::from_json_line(&resp.to_json_line()).unwrap();
         assert_eq!(back, resp);
@@ -881,11 +1012,14 @@ mod tests {
     #[test]
     fn response_roundtrips() {
         for resp in [
-            Response::Inserted { id: 42 },
+            Response::Inserted { id: 42, epoch: None },
+            Response::Inserted { id: 42, epoch: Some(2) },
             // like snapshot_generation, these must not be swallowed by
             // the one-field Stats fallback
-            Response::Deleted { id: 7 },
-            Response::Upserted { id: 0 },
+            Response::Deleted { id: 7, epoch: None },
+            Response::Deleted { id: 7, epoch: Some(3) },
+            Response::Upserted { id: 0, epoch: None },
+            Response::Upserted { id: 0, epoch: Some(1) },
             Response::Hits {
                 hits: vec![
                     Hit { id: 1, dist: 2.5 },
@@ -904,8 +1038,11 @@ mod tests {
             Response::Snapshotted { generation: 4 },
             Response::Promoted {
                 applied_seqs: vec![3, 9],
+                epoch: 2,
             },
-            Response::Pong,
+            Response::Demoted { epoch: 4 },
+            Response::Pong { epoch: None },
+            Response::Pong { epoch: Some(5) },
             Response::ShuttingDown,
             Response::Error {
                 message: "nope".into(),
@@ -943,6 +1080,13 @@ mod tests {
                 shard: 2,
                 from_seq: u64::MAX - 1,
                 max_bytes: 4096,
+                epoch: None,
+            },
+            StreamRequest::ReplWalTail {
+                shard: 0,
+                from_seq: 3,
+                max_bytes: 4096,
+                epoch: Some((1u64 << 55) + 9),
             },
             StreamRequest::MetricsText,
         ] {
@@ -954,21 +1098,20 @@ mod tests {
     }
 
     #[test]
-    fn stream_accepts_deprecated_op_spellings() {
-        // PR 5–7 era lines, pinned verbatim by tests/protocol_compat.rs
-        let snap = StreamRequest::from_json_line(r#"{"op":"repl_snapshot"}"#).unwrap();
-        assert_eq!(snap, Some(StreamRequest::ReplSnapshot));
-        let tail = r#"{"op":"repl_wal_tail","shard":1,"from_seq":"7"}"#;
-        assert_eq!(
-            StreamRequest::from_json_line(tail).unwrap(),
-            Some(StreamRequest::ReplWalTail {
-                shard: 1,
-                from_seq: 7,
-                max_bytes: WAL_TAIL_DEFAULT_MAX_BYTES,
-            })
-        );
-        let met = StreamRequest::from_json_line(r#"{"op":"metrics_text"}"#).unwrap();
-        assert_eq!(met, Some(StreamRequest::MetricsText));
+    fn stream_rejects_deprecated_op_spellings() {
+        // The PR 5–7 era `"op"` spellings finished their one-release
+        // deprecation window: they are no longer stream ops (Ok(None) →
+        // fall through to Request parsing, which rejects them as unknown
+        // ops — the error lines are pinned by tests/protocol_compat.rs).
+        for line in [
+            r#"{"op":"repl_snapshot"}"#,
+            r#"{"op":"repl_wal_tail","shard":1,"from_seq":"7"}"#,
+            r#"{"op":"metrics_text"}"#,
+        ] {
+            assert_eq!(StreamRequest::from_json_line(line).unwrap(), None, "line {line}");
+            let err = Request::from_json_line(line, 3).unwrap_err();
+            assert!(err.to_string().contains("unknown op"), "line {line}: {err:#}");
+        }
     }
 
     #[test]
@@ -980,9 +1123,13 @@ mod tests {
         ] {
             assert_eq!(StreamRequest::from_json_line(line).unwrap(), None, "line {line}");
         }
-        // the sniff may false-positive (e.g. a query mentioning "repl_"
-        // in a string) — parsing must still fall through cleanly
+        // the sniff may false-positive (e.g. a string *value* that is
+        // exactly "stream") — parsing must still fall through cleanly;
+        // ordinary request lines don't trip it at all
         assert!(!StreamRequest::looks_like(r#"{"op":"insert","vec":[0,1,2]}"#));
+        let fp = r#"{"note":"stream","op":"x"}"#;
+        assert!(StreamRequest::looks_like(fp));
+        assert_eq!(StreamRequest::from_json_line(fp).unwrap(), None);
     }
 
     #[test]
@@ -995,8 +1142,12 @@ mod tests {
                 shard: 0,
                 from_seq: 12,
                 max_bytes: 64,
+                epoch: None,
             })
         );
+        // a malformed epoch is an error, not silently ignored
+        let bad_epoch = r#"{"stream":"repl_wal_tail","shard":0,"from_seq":"0","epoch":"x"}"#;
+        assert!(StreamRequest::from_json_line(bad_epoch).is_err());
         // max_bytes is clamped to at least one byte so a tail always makes
         // progress
         let clamped = r#"{"stream":"repl_wal_tail","shard":0,"from_seq":"0","max_bytes":0}"#;

@@ -64,6 +64,20 @@ pub struct CoordinatorConfig {
     pub replicate_from: Option<String>,
     /// Follower poll interval once caught up (`--repl-poll-ms`).
     pub repl_poll_ms: u64,
+    /// Health-checked automatic failover (`--auto-promote`, replicas
+    /// only): probe the primary every `probe_interval_ms`; when
+    /// `probe_failures` consecutive probes miss their `probe_timeout_ms`
+    /// budget, promote this replica automatically. A probe that answers
+    /// within budget — however slowly the primary is otherwise serving —
+    /// resets the count: slow is not dead.
+    pub auto_promote: bool,
+    /// Primary liveness probe interval (`--probe-interval-ms`).
+    pub probe_interval_ms: u64,
+    /// Per-probe answer budget (`--probe-timeout-ms`).
+    pub probe_timeout_ms: u64,
+    /// Consecutive budget misses before auto-promotion
+    /// (`--probe-failures`).
+    pub probe_failures: u32,
     /// TTL sweep interval for `serve` (`--ttl-sweep-ms`, 0 = off). The
     /// sweep runs on the primary only and deletes rows whose expiry
     /// deadline has passed, emitting ordinary replicated Delete frames;
@@ -97,6 +111,10 @@ impl Default for CoordinatorConfig {
             executor_queue: 1024,
             replicate_from: None,
             repl_poll_ms: 2,
+            auto_promote: false,
+            probe_interval_ms: 500,
+            probe_timeout_ms: 1_000,
+            probe_failures: 3,
             ttl_sweep_ms: 1_000,
             log_level: "info".into(),
             log_json: false,
@@ -127,6 +145,14 @@ pub struct Coordinator {
     /// Follower runtime (`--replicate-from`): gates inserts until
     /// promotion and owns the puller thread. `None` on a primary.
     replica: Option<Arc<ReplicaRuntime>>,
+    /// Failover instrumentation (probe/promotion/fence counters),
+    /// shared with the replica runtime's probe loop.
+    failover: Arc<replica::FailoverCounters>,
+    /// Epoch fence: 0 = not fenced; otherwise the higher peer epoch this
+    /// server observed. Set durably (marker file + this gauge) on first
+    /// contact from a newer-epoch peer; restored from the marker at
+    /// startup so a fenced ex-primary comes back fenced.
+    fenced: AtomicU64,
     shutdown: Arc<AtomicBool>,
     /// Connection counter backing the per-request trace ids.
     next_conn: AtomicU64,
@@ -203,6 +229,11 @@ impl Coordinator {
                  snapshots live in the replica's own data dir"
             );
             let dir = config.persist.data_dir.clone().expect("enabled() implies data_dir");
+            // Rejoining as an explicit follower supersedes any fence
+            // marker left by a past demotion: the follower role is
+            // read-only by construction, and the puller adopts the new
+            // primary's (higher) epoch from the shipped headers.
+            crate::persist::manifest::clear_fence(&dir)?;
             let boot = replica::bootstrap(primary, &fingerprint, &dir)
                 .with_context(|| format!("bootstrapping replica from {primary}"))?;
             obs_log::info(
@@ -210,6 +241,22 @@ impl Coordinator {
                 "replica_bootstrap",
                 &[("detail", obs_log::V::s(boot.describe()))],
             );
+        }
+        // A durable non-replica restarting over a fenced data dir comes
+        // back fenced: the marker is the durable "a newer primary
+        // superseded this server" bit, and forgetting it across a restart
+        // would reopen the split-brain window the fence closed.
+        let fenced = AtomicU64::new(0);
+        if config.replicate_from.is_none() && config.persist.enabled() {
+            let dir = config.persist.data_dir.as_deref().expect("enabled() implies data_dir");
+            if let Some(epoch) = crate::persist::manifest::read_fence(dir)? {
+                fenced.store(epoch, Ordering::SeqCst);
+                obs_log::warn(
+                    "coordinator",
+                    "fence_restored",
+                    &[("observed_epoch", obs_log::V::u(epoch))],
+                );
+            }
         }
         let store = if config.persist.enabled() {
             let (store, report) = ShardedStore::open_durable(
@@ -287,15 +334,21 @@ impl Coordinator {
         let batcher = Batcher::start(config.batcher, backend, store.clone(), metrics.clone());
         // the puller starts only after the store recovered the
         // bootstrapped state — it resumes from the recovered applied seqs
+        let failover = Arc::new(replica::FailoverCounters::default());
         let replica = config.replicate_from.as_ref().map(|primary| {
             ReplicaRuntime::start(
                 store.clone(),
                 ReplicaConfig {
                     primary: primary.clone(),
                     poll: Duration::from_millis(config.repl_poll_ms.max(1)),
+                    auto_promote: config.auto_promote,
+                    probe_interval: Duration::from_millis(config.probe_interval_ms.max(10)),
+                    probe_timeout: Duration::from_millis(config.probe_timeout_ms.max(10)),
+                    probe_failures: config.probe_failures.max(1),
                     ..ReplicaConfig::default()
                 },
                 metrics.repl.clone(),
+                failover.clone(),
             )
         });
         Ok(Coordinator {
@@ -305,6 +358,8 @@ impl Coordinator {
             batcher,
             sketcher,
             replica,
+            failover,
+            fenced,
             shutdown: Arc::new(AtomicBool::new(false)),
             next_conn: AtomicU64::new(0),
         })
@@ -320,9 +375,78 @@ impl Coordinator {
         )
     }
 
+    /// This server's durable failover epoch (`None` on non-durable
+    /// servers — they carry no epoch and their wire replies omit it).
+    fn current_epoch(&self) -> Option<u64> {
+        self.store.persistence().map(|p| p.epoch())
+    }
+
+    /// The fence rejection for a write (or shipper pull) reaching a
+    /// fenced server. Names both epochs: clients parse neither, but an
+    /// operator reading the error must see exactly how stale this server
+    /// is.
+    fn fence_error(&self, observed: u64) -> Response {
+        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        Response::Error {
+            message: format!(
+                "write fenced: a newer primary at epoch {observed} superseded this \
+                 server (own epoch {}); demote and rejoin with --replicate-from",
+                self.current_epoch().unwrap_or(0)
+            ),
+        }
+    }
+
+    /// Record a peer-reported failover epoch. When the peer's epoch is
+    /// higher than our own and this server currently holds write
+    /// authority (a primary, or a promoted replica), fence: persist the
+    /// marker first, then publish the in-memory gauge — a crash between
+    /// the two re-fences from the marker at restart. Returns the fence
+    /// rejection when this server is (now or already) fenced, `None` when
+    /// the peer epoch is unremarkable. Unpromoted followers never fence —
+    /// they are read-only by construction and adopt higher epochs through
+    /// the puller instead.
+    fn observe_epoch(&self, peer: u64) -> Option<Response> {
+        let p = self.store.persistence()?;
+        if self.replica.as_ref().is_some_and(|r| !r.is_writable()) {
+            return None;
+        }
+        let own = p.epoch();
+        if peer > own && self.fenced.load(Ordering::SeqCst) < peer {
+            if let Err(e) = crate::persist::manifest::write_fence(p.data_dir(), peer) {
+                // a fence we cannot persist still fences this process —
+                // refusing writes now is strictly safer than acking them
+                obs_log::error(
+                    "coordinator",
+                    "fence_persist_failed",
+                    &[("error", obs_log::V::s(format!("{e:#}")))],
+                );
+            }
+            self.fenced.store(peer, Ordering::SeqCst);
+            self.failover.fence_events.fetch_add(1, Ordering::Relaxed);
+            self.failover.last_epoch.store(peer, Ordering::Relaxed);
+            obs_log::warn(
+                "coordinator",
+                "fenced",
+                &[
+                    ("own_epoch", obs_log::V::u(own)),
+                    ("observed_epoch", obs_log::V::u(peer)),
+                ],
+            );
+        }
+        match self.fenced.load(Ordering::SeqCst) {
+            0 => None,
+            observed => Some(self.fence_error(observed)),
+        }
+    }
+
     /// Read-replica write gate: every mutating op is redirected to the
-    /// primary until promotion. `Some(response)` means "reject with this".
+    /// primary until promotion; a fenced ex-primary rejects with the
+    /// fence error instead. `Some(response)` means "reject with this".
     fn write_gate(&self) -> Option<Response> {
+        match self.fenced.load(Ordering::SeqCst) {
+            0 => {}
+            observed => return Some(self.fence_error(observed)),
+        }
         let r = self.replica.as_ref()?;
         if r.is_writable() {
             return None;
@@ -355,7 +479,20 @@ impl Coordinator {
     /// connection.
     pub fn handle_request_traced(&self, req: Request, trace: u64) -> Response {
         match req {
-            Request::Ping => Response::Pong,
+            Request::Ping { epoch } => {
+                // a ping always answers pong — it is the liveness probe,
+                // and probe semantics must not depend on fencing — but a
+                // peer epoch riding on it still fences a stale server as
+                // a side effect (the resilient client pings its known
+                // epoch on connect, which is how a revived old primary
+                // usually learns it was superseded)
+                if let Some(peer) = epoch {
+                    let _ = self.observe_epoch(peer);
+                }
+                Response::Pong {
+                    epoch: self.current_epoch(),
+                }
+            }
             Request::Shutdown => {
                 // graceful-shutdown flush: whatever reached the store is
                 // fsynced before the shutdown is acknowledged (the batcher
@@ -397,7 +534,13 @@ impl Coordinator {
                 self.metrics.inserts.fetch_add(1, Ordering::Relaxed);
                 let opts = WriteOpts { ttl_ms: 0, trace };
                 match self.submitter().submit_with(WriteOp::Insert { vec }, &opts) {
-                    Ok(id) => Response::Inserted { id },
+                    // the ack's epoch is the term the write was accepted
+                    // under — a resilient client compares it across
+                    // endpoints to spot a superseded primary
+                    Ok(id) => Response::Inserted {
+                        id,
+                        epoch: self.current_epoch(),
+                    },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
                         Response::Error {
@@ -416,7 +559,10 @@ impl Coordinator {
                 // every replica carry the deadline, not the TTL
                 let opts = WriteOpts { ttl_ms, trace };
                 match self.submitter().submit_with(WriteOp::Insert { vec }, &opts) {
-                    Ok(id) => Response::Inserted { id },
+                    Ok(id) => Response::Inserted {
+                        id,
+                        epoch: self.current_epoch(),
+                    },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
                         Response::Error {
@@ -432,7 +578,10 @@ impl Coordinator {
                 self.metrics.deletes.fetch_add(1, Ordering::Relaxed);
                 let opts = WriteOpts { ttl_ms: 0, trace };
                 match self.submitter().submit_with(WriteOp::Delete { id }, &opts) {
-                    Ok(id) => Response::Deleted { id },
+                    Ok(id) => Response::Deleted {
+                        id,
+                        epoch: self.current_epoch(),
+                    },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
                         Response::Error {
@@ -449,7 +598,10 @@ impl Coordinator {
                 // ttl_ms == 0 clears any previous deadline on the id
                 let opts = WriteOpts { ttl_ms, trace };
                 match self.submitter().submit_with(WriteOp::Upsert { id, vec }, &opts) {
-                    Ok(id) => Response::Upserted { id },
+                    Ok(id) => Response::Upserted {
+                        id,
+                        epoch: self.current_epoch(),
+                    },
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
                         Response::Error {
@@ -523,13 +675,17 @@ impl Coordinator {
             }
             Request::Promote => match &self.replica {
                 Some(r) => match r.promote() {
-                    Ok(applied_seqs) => {
+                    Ok((applied_seqs, epoch)) => {
+                        self.failover.last_epoch.store(epoch, Ordering::Relaxed);
                         obs_log::info(
                             "coordinator",
                             "promoted",
-                            &[("applied_seqs", obs_log::V::s(format!("{applied_seqs:?}")))],
+                            &[
+                                ("epoch", obs_log::V::u(epoch)),
+                                ("applied_seqs", obs_log::V::s(format!("{applied_seqs:?}"))),
+                            ],
                         );
-                        Response::Promoted { applied_seqs }
+                        Response::Promoted { applied_seqs, epoch }
                     }
                     Err(e) => {
                         self.metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -543,6 +699,47 @@ impl Coordinator {
                     Response::Error {
                         message: "not a replica (this server was started without \
                                   --replicate-from)"
+                            .into(),
+                    }
+                }
+            },
+            Request::Demote { epoch } => match self.store.persistence() {
+                Some(p) => {
+                    // fence at the highest term we know of: our own
+                    // epoch, the operator-supplied one (usually the new
+                    // primary's), and any existing fence — a demote can
+                    // upgrade a fence, never downgrade it
+                    let own = p.epoch();
+                    let fence_at = epoch
+                        .unwrap_or(own)
+                        .max(own)
+                        .max(self.fenced.load(Ordering::SeqCst));
+                    if let Err(e) =
+                        crate::persist::manifest::write_fence(p.data_dir(), fence_at)
+                    {
+                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        return Response::Error {
+                            message: format!("persisting the fence marker: {e:#}"),
+                        };
+                    }
+                    self.fenced.store(fence_at, Ordering::SeqCst);
+                    self.failover.fence_events.fetch_add(1, Ordering::Relaxed);
+                    self.failover.last_epoch.store(fence_at, Ordering::Relaxed);
+                    obs_log::warn(
+                        "coordinator",
+                        "demoted",
+                        &[
+                            ("own_epoch", obs_log::V::u(own)),
+                            ("fenced_at", obs_log::V::u(fence_at)),
+                        ],
+                    );
+                    Response::Demoted { epoch: fence_at }
+                }
+                None => {
+                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    Response::Error {
+                        message: "demote requires persistence (--data-dir): the fence \
+                                  marker must survive a restart to be worth anything"
                             .into(),
                     }
                 }
@@ -580,6 +777,15 @@ impl Coordinator {
             Some(_) => 2.0, // promoted
         };
         fields.push(("repl_role".into(), role));
+        // the failover surface: the durable epoch (0 = non-durable, no
+        // epoch), whether this server is fenced, and the probe/promotion
+        // counters shared with the replica runtime's supervisor
+        fields.push(("repl_epoch".into(), self.current_epoch().unwrap_or(0) as f64));
+        fields.push((
+            "failover_fenced".into(),
+            self.fenced.load(Ordering::SeqCst) as f64,
+        ));
+        fields.extend(self.failover.stats_fields());
         fields
     }
 
@@ -654,6 +860,14 @@ impl Coordinator {
         while !self.is_shutdown() {
             match listener.accept() {
                 Ok((stream, _)) => {
+                    // failpoint: `accept` armed = simulated network
+                    // partition — the connection is dropped on the floor
+                    // (the peer sees an immediate EOF), the serve loop
+                    // stays healthy
+                    if crate::fault::check("accept").is_err() {
+                        drop(stream);
+                        continue;
+                    }
                     let me = Arc::clone(self);
                     conns.push(std::thread::spawn(move || {
                         let _ = me.handle_connection(stream);
@@ -711,12 +925,18 @@ impl Coordinator {
             if trimmed.is_empty() {
                 continue;
             }
+            // failpoint: `conn_read` armed = the connection dies after a
+            // request is read but before it is dispatched (a torn
+            // request from the client's point of view — it sees EOF with
+            // no reply and cannot know whether the write applied)
+            if crate::fault::check("conn_read").is_err() {
+                return Ok(());
+            }
             // Stream ops (repl_snapshot / repl_wal_tail / metrics_text):
             // replies are a JSON header line + raw payload bytes, which
             // the Response enum cannot carry — parse the StreamRequest
-            // envelope (canonical `"stream"` key, or the deprecated `"op"`
-            // spellings for one release) before request parsing and route
-            // through the single dispatch point below.
+            // envelope (the canonical `"stream"` key) before request
+            // parsing and route through the single dispatch point below.
             if StreamRequest::looks_like(trimmed) {
                 match StreamRequest::from_json_line(trimmed) {
                     Ok(Some(sreq)) => {
@@ -753,6 +973,13 @@ impl Coordinator {
                     }
                 }
             };
+            // failpoint: `conn_write` armed = the connection dies after
+            // dispatch but before the reply lands (the op applied
+            // server-side; the client must treat the lost ack as
+            // ambiguous and re-resolve)
+            if crate::fault::check("conn_write").is_err() {
+                return Ok(());
+            }
             writeln!(writer, "{}", resp.to_json_line())?;
         }
     }
@@ -773,14 +1000,28 @@ impl Coordinator {
                 shard,
                 from_seq,
                 max_bytes,
-            } => replica::shipper::serve_wal_tail(
-                &self.store,
-                &self.metrics.repl,
-                *shard,
-                *from_seq,
-                *max_bytes,
-                writer,
-            ),
+                epoch,
+            } => {
+                // Fence check before the shipper (which stays
+                // fence-unaware): a follower whose epoch is higher than
+                // ours was promoted over us — shipping it frames as if we
+                // were still its primary would be exactly the split-brain
+                // the epoch exists to prevent.
+                if let Some(peer) = epoch {
+                    if let Some(resp) = self.observe_epoch(*peer) {
+                        writeln!(writer, "{}", resp.to_json_line())?;
+                        return Ok(());
+                    }
+                }
+                replica::shipper::serve_wal_tail(
+                    &self.store,
+                    &self.metrics.repl,
+                    *shard,
+                    *from_seq,
+                    *max_bytes,
+                    writer,
+                )
+            }
             StreamRequest::MetricsText => self.serve_metrics_text(writer),
         }
     }
@@ -887,13 +1128,13 @@ mod tests {
         let mut ids = Vec::new();
         for v in &vecs {
             match c.handle_request(Request::Insert { vec: v.clone() }) {
-                Response::Inserted { id } => ids.push(id),
+                Response::Inserted { id, .. } => ids.push(id),
                 other => panic!("{other:?}"),
             }
         }
         // delete: the id must stop appearing in query results
         match c.handle_request(Request::Delete { id: ids[2] }) {
-            Response::Deleted { id } => assert_eq!(id, ids[2]),
+            Response::Deleted { id, .. } => assert_eq!(id, ids[2]),
             other => panic!("{other:?}"),
         }
         match c.handle_request(Request::Query {
@@ -916,7 +1157,7 @@ mod tests {
             vec: vecs[0].clone(),
             ttl_ms: 0,
         }) {
-            Response::Upserted { id } => assert_eq!(id, ids[4]),
+            Response::Upserted { id, .. } => assert_eq!(id, ids[4]),
             other => panic!("{other:?}"),
         }
         match c.handle_request(Request::Query {
@@ -977,11 +1218,11 @@ mod tests {
         let a = CatVector::random(600, 40, 10, &mut rng);
         let b = CatVector::random(600, 40, 10, &mut rng);
         let ida = match c.handle_request(Request::Insert { vec: a.clone() }) {
-            Response::Inserted { id } => id,
+            Response::Inserted { id, .. } => id,
             _ => panic!(),
         };
         let idb = match c.handle_request(Request::Insert { vec: b.clone() }) {
-            Response::Inserted { id } => id,
+            Response::Inserted { id, .. } => id,
             _ => panic!(),
         };
         let truth = a.hamming(&b) as f64;
@@ -1026,7 +1267,7 @@ mod tests {
         let mut ids = Vec::new();
         for v in &vecs {
             match c.handle_request(Request::Insert { vec: v.clone() }) {
-                Response::Inserted { id } => ids.push(id),
+                Response::Inserted { id, .. } => ids.push(id),
                 other => panic!("{other:?}"),
             }
         }
@@ -1068,20 +1309,22 @@ mod tests {
             vec: CatVector::random(600, 40, 10, &mut rng),
             k: 2,
         });
-        // non-matching lines fall through to the ordinary request path
+        // non-matching lines fall through to the ordinary request path —
+        // including the removed deprecated `"op"` spelling, which then
+        // draws an unknown-op error from Request parsing
         assert_eq!(
             StreamRequest::from_json_line(r#"{"op":"ping"}"#).unwrap(),
             None
         );
-        // a metrics_text line (canonical envelope or the deprecated `"op"`
-        // spelling) answers header + exactly `bytes` of payload
-        let sreq = StreamRequest::from_json_line(r#"{"op":"metrics_text"}"#)
-            .unwrap()
-            .expect("deprecated spelling still parses");
         assert_eq!(
-            StreamRequest::from_json_line(r#"{"stream":"metrics_text"}"#).unwrap(),
-            Some(sreq.clone())
+            StreamRequest::from_json_line(r#"{"op":"metrics_text"}"#).unwrap(),
+            None
         );
+        // a canonical metrics_text envelope answers header + exactly
+        // `bytes` of payload
+        let sreq = StreamRequest::from_json_line(r#"{"stream":"metrics_text"}"#)
+            .unwrap()
+            .expect("canonical envelope parses");
         let mut out = Vec::new();
         c.handle_stream(&sreq, &mut out).unwrap();
         let text = String::from_utf8(out).unwrap();
@@ -1330,7 +1573,7 @@ mod tests {
             let mut ids = Vec::new();
             for v in &vecs {
                 match c.handle_request(Request::Insert { vec: v.clone() }) {
-                    Response::Inserted { id } => ids.push(id),
+                    Response::Inserted { id, .. } => ids.push(id),
                     other => panic!("{other:?}"),
                 }
             }
@@ -1372,6 +1615,186 @@ mod tests {
                 let get = |k: &str| super::super::metrics::stats_field(&fields, k).unwrap();
                 assert_eq!(get("persist_generation"), 1.0);
                 assert_eq!(get("persist_cfg_mode"), 2.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    fn durable_config(dir: &std::path::Path) -> CoordinatorConfig {
+        use crate::persist::{FsyncPolicy, PersistConfig, PersistMode};
+        CoordinatorConfig {
+            persist: PersistConfig {
+                mode: PersistMode::Wal,
+                data_dir: Some(dir.to_path_buf()),
+                fsync: FsyncPolicy::Never,
+                ..PersistConfig::default()
+            },
+            ..test_config()
+        }
+    }
+
+    #[test]
+    fn durable_acks_and_pong_carry_the_epoch() {
+        use crate::testing::TempDir;
+        let dir = TempDir::new("server-epoch-acks");
+        let c = Coordinator::try_new(durable_config(dir.path())).unwrap();
+        let mut rng = Xoshiro256::new(61);
+        match c.handle_request(Request::Insert {
+            vec: CatVector::random(600, 40, 10, &mut rng),
+        }) {
+            Response::Inserted { epoch, .. } => assert_eq!(epoch, Some(1)),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            c.handle_request(Request::Ping { epoch: None }),
+            Response::Pong { epoch: Some(1) }
+        );
+        // a non-durable server has no epoch: its replies omit the field
+        // (wire bytes unchanged from the pre-epoch protocol)
+        let plain = Coordinator::new(test_config());
+        assert_eq!(
+            plain.handle_request(Request::Ping { epoch: None }),
+            Response::Pong { epoch: None }
+        );
+        match plain.handle_request(Request::Insert {
+            vec: CatVector::random(600, 40, 10, &mut rng),
+        }) {
+            Response::Inserted { epoch, .. } => assert_eq!(epoch, None),
+            other => panic!("{other:?}"),
+        }
+        match plain.handle_request(Request::Stats) {
+            Response::Stats { fields } => {
+                let get = |k: &str| super::super::metrics::stats_field(&fields, k).unwrap();
+                assert_eq!(get("repl_epoch"), 0.0);
+                assert_eq!(get("failover_fenced"), 0.0);
+                assert_eq!(get("failover_probes"), 0.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn higher_peer_epoch_fences_a_durable_primary_across_restarts() {
+        use crate::testing::TempDir;
+        let dir = TempDir::new("server-fence");
+        let mut rng = Xoshiro256::new(62);
+        {
+            let c = Coordinator::try_new(durable_config(dir.path())).unwrap();
+            // the ping itself still answers pong (probe semantics), but
+            // the higher peer epoch riding on it fences the server
+            assert_eq!(
+                c.handle_request(Request::Ping { epoch: Some(9) }),
+                Response::Pong { epoch: Some(1) }
+            );
+            match c.handle_request(Request::Insert {
+                vec: CatVector::random(600, 40, 10, &mut rng),
+            }) {
+                Response::Error { message } => {
+                    assert!(message.contains("fenced"), "{message}");
+                    assert!(message.contains("epoch 9"), "{message}");
+                    assert!(message.contains("own epoch 1"), "{message}");
+                }
+                other => panic!("fenced server must not ack writes: {other:?}"),
+            }
+            match c.handle_request(Request::Stats) {
+                Response::Stats { fields } => {
+                    let get =
+                        |k: &str| super::super::metrics::stats_field(&fields, k).unwrap();
+                    assert_eq!(get("failover_fenced"), 9.0);
+                    assert_eq!(get("failover_fence_events"), 1.0);
+                    assert_eq!(get("failover_last_epoch"), 9.0);
+                    assert_eq!(get("repl_epoch"), 1.0);
+                }
+                other => panic!("{other:?}"),
+            }
+            // reads still serve — fencing is a write fence, not death
+            match c.handle_request(Request::Stats) {
+                Response::Stats { .. } => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        // the marker survives: a restarted ex-primary comes back fenced
+        assert_eq!(
+            crate::persist::manifest::read_fence(dir.path()).unwrap(),
+            Some(9)
+        );
+        let c = Coordinator::try_new(durable_config(dir.path())).unwrap();
+        match c.handle_request(Request::Insert {
+            vec: CatVector::random(600, 40, 10, &mut rng),
+        }) {
+            Response::Error { message } => assert!(message.contains("fenced"), "{message}"),
+            other => panic!("fence must survive restart: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn demote_fences_durable_servers_and_rejects_non_durable() {
+        use crate::testing::TempDir;
+        let c = Coordinator::new(test_config());
+        match c.handle_request(Request::Demote { epoch: None }) {
+            Response::Error { message } => {
+                assert!(message.contains("persistence"), "{message}")
+            }
+            other => panic!("{other:?}"),
+        }
+        let dir = TempDir::new("server-demote");
+        let c = Coordinator::try_new(durable_config(dir.path())).unwrap();
+        // demote with no epoch fences at the server's own term
+        assert_eq!(
+            c.handle_request(Request::Demote { epoch: None }),
+            Response::Demoted { epoch: 1 }
+        );
+        // re-demoting at the new primary's (higher) epoch upgrades the
+        // fence; a lower one cannot downgrade it below our own term
+        assert_eq!(
+            c.handle_request(Request::Demote { epoch: Some(7) }),
+            Response::Demoted { epoch: 7 }
+        );
+        assert_eq!(
+            crate::persist::manifest::read_fence(dir.path()).unwrap(),
+            Some(7)
+        );
+        let mut rng = Xoshiro256::new(63);
+        match c.handle_request(Request::Insert {
+            vec: CatVector::random(600, 40, 10, &mut rng),
+        }) {
+            Response::Error { message } => assert!(message.contains("fenced"), "{message}"),
+            other => panic!("demoted server must not ack writes: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fenced_server_refuses_wal_tail_to_newer_follower() {
+        use crate::testing::TempDir;
+        let dir = TempDir::new("server-fence-tail");
+        let c = Coordinator::try_new(durable_config(dir.path())).unwrap();
+        let mut rng = Xoshiro256::new(64);
+        c.handle_request(Request::Insert {
+            vec: CatVector::random(600, 40, 10, &mut rng),
+        });
+        // a follower at our own epoch is served frames
+        let tail = |epoch| StreamRequest::ReplWalTail {
+            shard: 0,
+            from_seq: 0,
+            max_bytes: 1 << 20,
+            epoch,
+        };
+        let mut out = Vec::new();
+        c.handle_stream(&tail(Some(1)), &mut out).unwrap();
+        let header = String::from_utf8_lossy(&out);
+        let header = header.split('\n').next().unwrap();
+        let h = crate::util::json::parse(header).unwrap();
+        assert_eq!(h.get("ok").and_then(|v| v.as_bool()), Some(true));
+        // a follower reporting a higher epoch was promoted over us: the
+        // tail request draws the fence error, not frames
+        let mut out = Vec::new();
+        c.handle_stream(&tail(Some(4)), &mut out).unwrap();
+        let reply = String::from_utf8(out).unwrap();
+        let resp = Response::from_json_line(reply.trim()).unwrap();
+        match resp {
+            Response::Error { message } => {
+                assert!(message.contains("fenced"), "{message}");
+                assert!(message.contains("epoch 4"), "{message}");
             }
             other => panic!("{other:?}"),
         }

@@ -150,6 +150,16 @@ stats_struct! {
     persist_cfg_wal_max_bytes,
     persist_cfg_compact_dead_frames,
     repl_role,
+    // failover: durable epoch (0 = non-durable), fence gauge (0 = not
+    // fenced, else the observed superseding epoch), probe supervisor
+    repl_epoch,
+    failover_fenced,
+    failover_probes,
+    failover_probe_failures,
+    failover_consecutive_failures,
+    failover_promotions,
+    failover_fence_events,
+    failover_last_epoch,
 }
 
 #[cfg(test)]

@@ -1,0 +1,390 @@
+//! Deterministic fault injection: a process-wide failpoint registry.
+//!
+//! Grown out of `WalWriter::fail_next_commit` (PR 5's single-site,
+//! single-shot injector): the failover work needs *many* sites — socket
+//! accept/read/write, fsync, snapshot rotation, shipper frame
+//! boundaries — armed from *outside* the process (the two-process chaos
+//! soaks partition a live primary by flipping its failpoints at
+//! runtime), so the mechanism becomes a named registry with three
+//! arming paths:
+//!
+//! * **Programmatic** — [`arm`]/[`disarm`] from in-process tests.
+//! * **Environment** — `CABIN_FAILPOINTS="site=action,site=action"`
+//!   parsed once at first [`check`]; fixed for the process lifetime.
+//! * **File** — `CABIN_FAILPOINTS_FILE=/path` names a spec file
+//!   (one `site=action` per line, `#` comments) that is re-read
+//!   whenever its mtime/length changes, letting a test harness
+//!   partition and heal a *running* server by rewriting one file.
+//!
+//! Actions: `err` (fail every hit), `err:N` (fail the next N hits,
+//! then disarm), `sleep:MS` (delay every hit — the "slow, not dead"
+//! simulation), `sleep:MS:N`, `off`.
+//!
+//! **Zero-cost when disabled.** [`check`] is a relaxed atomic load and
+//! a branch unless something is armed; the registry lock, the spec
+//! parse and the file stat are all behind it. Production binaries run
+//! with the flag permanently false unless an operator sets the env
+//! vars, which is the explicit opt-in.
+//!
+//! Sites fail *politely*: a tripped failpoint returns an error the
+//! call site maps onto its ordinary failure path (a dropped
+//! connection, a failed fsync, a torn transfer) — injection explores
+//! real error-handling code, it never introduces new behaviour.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, Once, OnceLock, PoisonError};
+use std::time::{Duration, SystemTime};
+
+/// Fast-path gate: false ⇒ no site is armed and [`check`] returns
+/// immediately. Kept true for the whole process lifetime in file mode
+/// (the file may gain sites at any moment).
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+#[derive(Clone, Debug, PartialEq)]
+enum Kind {
+    /// Return an injected error from the site.
+    Err,
+    /// Delay the site by this many milliseconds, then succeed.
+    Sleep(u64),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+struct Action {
+    kind: Kind,
+    /// `None` = every hit; `Some(n)` = the next `n` hits, then disarm.
+    remaining: Option<u64>,
+}
+
+struct Registry {
+    /// Programmatic + env-armed sites.
+    sites: HashMap<String, Action>,
+    /// File-armed sites, kept apart so a file reload replaces exactly
+    /// what the file armed and never clobbers programmatic arming.
+    file_sites: HashMap<String, Action>,
+    /// `CABIN_FAILPOINTS_FILE` source, with the (mtime, len) stamp of
+    /// the last parse so an unchanged file is never re-read (count
+    /// decrements would otherwise be reset every hit).
+    file: Option<(std::path::PathBuf, Option<(SystemTime, u64)>)>,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| {
+        Mutex::new(Registry {
+            sites: HashMap::new(),
+            file_sites: HashMap::new(),
+            file: None,
+        })
+    })
+}
+
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One-time env arming, run from the first [`check`] of the process.
+fn init_from_env() {
+    static INIT: Once = Once::new();
+    INIT.call_once(|| {
+        let mut reg = lock_recover(registry());
+        if let Ok(spec) = std::env::var("CABIN_FAILPOINTS") {
+            match parse_spec(&spec) {
+                Ok(sites) => reg.sites.extend(sites),
+                Err(e) => eprintln!("[fault] ignoring CABIN_FAILPOINTS: {e}"),
+            }
+        }
+        if let Ok(path) = std::env::var("CABIN_FAILPOINTS_FILE") {
+            if !path.is_empty() {
+                reg.file = Some((path.into(), None));
+            }
+        }
+        if !reg.sites.is_empty() || reg.file.is_some() {
+            ARMED.store(true, Ordering::SeqCst);
+        }
+    });
+}
+
+/// Parse `site=action[,site=action...]` (commas or newlines separate
+/// entries; `#` starts a comment; blank entries ignored).
+fn parse_spec(spec: &str) -> Result<Vec<(String, Action)>, String> {
+    let mut out = Vec::new();
+    for raw in spec.split(|c| c == ',' || c == '\n') {
+        let entry = raw.split('#').next().unwrap_or("").trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (site, action) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("'{entry}' is not site=action"))?;
+        let site = site.trim();
+        if site.is_empty() {
+            return Err(format!("'{entry}' has an empty site name"));
+        }
+        if let Some(action) = parse_action(action.trim())? {
+            out.push((site.to_string(), action));
+        }
+    }
+    Ok(out)
+}
+
+/// Parse one action; `Ok(None)` for `off`.
+fn parse_action(s: &str) -> Result<Option<Action>, String> {
+    let mut parts = s.split(':');
+    let head = parts.next().unwrap_or("");
+    let parse_n = |p: Option<&str>, what: &str| -> Result<Option<u64>, String> {
+        match p {
+            None => Ok(None),
+            Some(n) => n
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| format!("{what} '{n}' is not a u64")),
+        }
+    };
+    let action = match head {
+        "off" => return Ok(None),
+        "err" => Action {
+            kind: Kind::Err,
+            remaining: parse_n(parts.next(), "err count")?,
+        },
+        "sleep" => Action {
+            kind: Kind::Sleep(
+                parse_n(parts.next(), "sleep millis")?
+                    .ok_or_else(|| "sleep needs millis: sleep:MS[:N]".to_string())?,
+            ),
+            remaining: parse_n(parts.next(), "sleep count")?,
+        },
+        other => return Err(format!("unknown failpoint action '{other}'")),
+    };
+    if parts.next().is_some() {
+        return Err(format!("trailing fields in action '{s}'"));
+    }
+    Ok(Some(action))
+}
+
+/// Re-parse the spec file if its stamp moved. Holding the lock across
+/// the stat/read is fine: this only runs while something is armed.
+fn refresh_from_file(reg: &mut Registry) {
+    let Some((path, stamp)) = &mut reg.file else {
+        return;
+    };
+    let new_stamp = std::fs::metadata(&*path)
+        .ok()
+        .and_then(|m| Some((m.modified().ok()?, m.len())));
+    if new_stamp == *stamp {
+        return;
+    }
+    *stamp = new_stamp;
+    // the file owns its own sites: an emptied/removed file heals
+    // every site it armed, and nothing armed another way
+    let text = std::fs::read_to_string(&*path).unwrap_or_default();
+    match parse_spec(&text) {
+        Ok(sites) => reg.file_sites = sites.into_iter().collect(),
+        Err(e) => eprintln!("[fault] ignoring failpoint file: {e}"),
+    }
+}
+
+fn hit_slow(site: &str) -> Result<(), String> {
+    let decision = {
+        let mut reg = lock_recover(registry());
+        refresh_from_file(&mut reg);
+        let from_file = reg.file_sites.contains_key(site);
+        let action = if from_file {
+            reg.file_sites.get_mut(site)
+        } else {
+            reg.sites.get_mut(site)
+        };
+        let Some(action) = action else {
+            return Ok(());
+        };
+        let kind = action.kind.clone();
+        if let Some(n) = &mut action.remaining {
+            *n -= 1;
+            if *n == 0 {
+                if from_file {
+                    reg.file_sites.remove(site);
+                } else {
+                    reg.sites.remove(site);
+                }
+                if reg.sites.is_empty() && reg.file.is_none() {
+                    ARMED.store(false, Ordering::SeqCst);
+                }
+            }
+        }
+        kind
+    }; // lock dropped before any sleep
+    match decision {
+        Kind::Err => Err(format!("failpoint '{site}' injected an error")),
+        Kind::Sleep(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+    }
+}
+
+/// Hit a failpoint site: `Ok` (possibly after an injected delay)
+/// unless the site is armed to fail. The no-failpoints fast path is
+/// one relaxed atomic load.
+pub fn check(site: &str) -> Result<(), String> {
+    init_from_env();
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    hit_slow(site)
+}
+
+/// [`check`] adapted to I/O call sites: an injected failure becomes an
+/// ordinary `io::Error`, taking the same propagation path a real
+/// syscall failure would.
+pub fn check_io(site: &str) -> std::io::Result<()> {
+    check(site).map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e))
+}
+
+/// Programmatically arm `site` with an action spec (`err`, `err:N`,
+/// `sleep:MS`, `sleep:MS:N`, `off`).
+pub fn arm(site: &str, spec: &str) -> Result<(), String> {
+    init_from_env();
+    let action = parse_action(spec)?;
+    let mut reg = lock_recover(registry());
+    match action {
+        Some(a) => {
+            reg.sites.insert(site.to_string(), a);
+            ARMED.store(true, Ordering::SeqCst);
+        }
+        None => {
+            reg.sites.remove(site);
+            if reg.sites.is_empty() && reg.file.is_none() {
+                ARMED.store(false, Ordering::SeqCst);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Disarm `site` (equivalent to `arm(site, "off")`).
+pub fn disarm(site: &str) {
+    let _ = arm(site, "off");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn action_grammar() {
+        assert_eq!(parse_action("off").unwrap(), None);
+        assert_eq!(
+            parse_action("err").unwrap(),
+            Some(Action {
+                kind: Kind::Err,
+                remaining: None
+            })
+        );
+        assert_eq!(
+            parse_action("err:3").unwrap(),
+            Some(Action {
+                kind: Kind::Err,
+                remaining: Some(3)
+            })
+        );
+        assert_eq!(
+            parse_action("sleep:25").unwrap(),
+            Some(Action {
+                kind: Kind::Sleep(25),
+                remaining: None
+            })
+        );
+        assert_eq!(
+            parse_action("sleep:25:2").unwrap(),
+            Some(Action {
+                kind: Kind::Sleep(25),
+                remaining: Some(2)
+            })
+        );
+        assert!(parse_action("sleep").unwrap_err().contains("needs millis"));
+        assert!(parse_action("explode").unwrap_err().contains("unknown"));
+        assert!(parse_action("err:x").unwrap_err().contains("not a u64"));
+        assert!(parse_action("err:1:2:3").unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn spec_grammar_commas_newlines_comments() {
+        let sites = parse_spec("a=err:1, b=sleep:5\n# partition\nc=err\n\n").unwrap();
+        assert_eq!(sites.len(), 3);
+        assert_eq!(sites[0].0, "a");
+        assert_eq!(sites[2].1.kind, Kind::Err);
+        assert!(parse_spec("nope").is_err());
+        assert!(parse_spec("=err").is_err());
+        // `off` entries parse and arm nothing
+        assert_eq!(parse_spec("a=off").unwrap().len(), 0);
+    }
+
+    // Registry tests use unique site names: the registry is process
+    // global and the test harness runs tests concurrently.
+
+    #[test]
+    fn unarmed_site_is_ok() {
+        assert!(check("test_unarmed_site_never_used").is_ok());
+    }
+
+    #[test]
+    fn err_countdown_disarms_itself() {
+        arm("test_fault_countdown", "err:2").unwrap();
+        assert!(check("test_fault_countdown").is_err());
+        assert!(check("test_fault_countdown").is_err());
+        assert!(check("test_fault_countdown").is_ok(), "count exhausted");
+    }
+
+    #[test]
+    fn persistent_err_until_disarmed() {
+        arm("test_fault_persistent", "err").unwrap();
+        for _ in 0..5 {
+            assert!(check("test_fault_persistent").is_err());
+        }
+        disarm("test_fault_persistent");
+        assert!(check("test_fault_persistent").is_ok());
+    }
+
+    #[test]
+    fn sleep_delays_and_succeeds() {
+        arm("test_fault_sleep", "sleep:30:1").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(check("test_fault_sleep").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(25), "delay injected");
+        let t0 = std::time::Instant::now();
+        assert!(check("test_fault_sleep").is_ok());
+        assert!(t0.elapsed() < Duration::from_millis(25), "count exhausted");
+    }
+
+    #[test]
+    fn check_io_maps_to_io_error() {
+        arm("test_fault_io", "err:1").unwrap();
+        let e = check_io("test_fault_io").unwrap_err();
+        assert!(e.to_string().contains("failpoint 'test_fault_io'"));
+        assert!(check_io("test_fault_io").is_ok());
+    }
+
+    #[test]
+    fn file_source_rearms_on_change() {
+        let dir = crate::testing::TempDir::new("fault-file");
+        let path = dir.path().join("failpoints");
+        std::fs::write(&path, "test_fault_file=err\n").unwrap();
+        {
+            let mut reg = lock_recover(registry());
+            reg.file = Some((path.clone(), None));
+        }
+        ARMED.store(true, Ordering::SeqCst);
+        assert!(check("test_fault_file").is_err());
+        // rewrite → heal; each rewrite changes the length, so the
+        // (mtime, len) stamp flips even within mtime granularity
+        std::fs::write(&path, "").unwrap();
+        assert!(check("test_fault_file").is_ok());
+        std::fs::write(&path, "test_fault_file=err:1\n").unwrap();
+        assert!(check("test_fault_file").is_err());
+        {
+            let mut reg = lock_recover(registry());
+            reg.file = None;
+            reg.file_sites.clear();
+        }
+    }
+}

@@ -103,6 +103,7 @@ pub mod bench;
 pub mod cluster;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod index;
 pub mod linalg;
 pub mod obs;

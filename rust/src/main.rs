@@ -13,8 +13,12 @@
 //!                      [--commit-window-us 1000] [--wal-max-bytes 0]
 //!                      [--compact-dead-frames 0] [--ttl-sweep-ms 1000]
 //!                      [--replicate-from HOST:PORT] [--repl-poll-ms 2]
+//!                      [--auto-promote] [--probe-interval-ms 500]
+//!                      [--probe-timeout-ms 1000] [--probe-failures 3]
 //!                      [--log-level info] [--log-json] [--slow-op-ms 0]
 //! cabin-sketch stats   [--addr 127.0.0.1:7878] [--prom]
+//! cabin-sketch promote [--addr 127.0.0.1:7878]
+//! cabin-sketch demote  [--addr 127.0.0.1:7878] [--epoch N]
 //! cabin-sketch sketch  --input docword.txt [--sketch-dim 1000] [--out sketches.bin]
 //! cabin-sketch repro   <table1|table3|table4|fig2..fig12|ablation-*|all> [options]
 //! cabin-sketch info    # artifact + environment report
@@ -35,6 +39,8 @@ fn main() {
     let code = match cmd {
         "serve" => cmd_serve(&args),
         "stats" => cmd_stats(&args),
+        "promote" => cmd_promote(&args),
+        "demote" => cmd_demote(&args),
         "sketch" => cmd_sketch(&args),
         "repro" => cmd_repro(&args),
         "info" => cmd_info(&args),
@@ -68,6 +74,12 @@ fn print_help() {
                     --prom prints the Prometheus text exposition instead\n\
                     (the metrics_text wire op: counters, gauges, and full\n\
                     per-stage latency histogram bucket families)\n\
+           promote  flip a read replica writable now (--addr HOST:PORT);\n\
+                    prints the per-shard applied sequences and the new\n\
+                    failover epoch\n\
+           demote   fence a server read-only (--addr HOST:PORT); optional\n\
+                    --epoch N fences at an explicit epoch — see\n\
+                    docs/FAILOVER.md for when to reach for this\n\
            sketch   one-shot: sketch a UCI docword file to packed binary\n\
            repro    regenerate a paper table/figure (see DESIGN.md §4)\n\
            info     report artifacts, backend and configuration\n\
@@ -114,6 +126,17 @@ fn print_help() {
                     The `promote` wire op flips a caught-up replica\n\
                     writable — e.g. after killing a dead primary)\n\
                     [--repl-poll-ms N] (idle tail-poll interval)\n\
+         serve failover: [--auto-promote] (replica-side health probing: the\n\
+                    follower pings its primary every --probe-interval-ms\n\
+                    (default 500) with a --probe-timeout-ms budget (default\n\
+                    1000) and self-promotes after --probe-failures (default\n\
+                    3) consecutive misses — a slow primary that answers\n\
+                    within the budget is never promoted over, only a dead\n\
+                    one; requires --replicate-from and --data-dir). Every\n\
+                    promotion bumps a durable monotonic epoch; a revived\n\
+                    stale primary fences itself read-only on first contact\n\
+                    with the newer epoch (failover_* stats; see\n\
+                    docs/FAILOVER.md)\n\
          serve observability: [--log-level debug|info|warn|error] (event\n\
                     filter, default info) [--log-json] (one JSON object\n\
                     per event line instead of text — machine-ingestable)\n\
@@ -147,6 +170,10 @@ fn coordinator_config(args: &Args) -> CoordinatorConfig {
         executor_queue: args.usize_or("executor-queue", 1024),
         replicate_from: args.str_opt("replicate-from").map(str::to_string),
         repl_poll_ms: args.u64_or("repl-poll-ms", 2),
+        auto_promote: args.flag("auto-promote"),
+        probe_interval_ms: args.u64_or("probe-interval-ms", 500),
+        probe_timeout_ms: args.u64_or("probe-timeout-ms", 1_000),
+        probe_failures: args.u64_or("probe-failures", 3) as u32,
         ttl_sweep_ms: args.u64_or("ttl-sweep-ms", 1_000),
         log_level: args.str_or("log-level", "info"),
         log_json: args.flag("log-json"),
@@ -216,6 +243,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(primary) = &coordinator.config.replicate_from {
         println!("[serve] read replica of {primary} — inserts are rejected until `promote`");
+        if coordinator.config.auto_promote {
+            println!(
+                "[serve] auto-promote armed: probe every {}ms, {}ms budget, \
+                 promote after {} consecutive failures",
+                coordinator.config.probe_interval_ms,
+                coordinator.config.probe_timeout_ms,
+                coordinator.config.probe_failures
+            );
+        }
     }
     coordinator.serve(&addr, |bound| println!("[serve] bound {bound}"))
 }
@@ -236,6 +272,31 @@ fn cmd_stats(args: &Args) -> anyhow::Result<()> {
             println!("{name} {value}");
         }
     }
+    Ok(())
+}
+
+/// `promote --addr HOST:PORT`: flip a read replica writable now, from
+/// the operator's shell — the manual half of failover (the automatic
+/// half is `serve --auto-promote`).
+fn cmd_promote(args: &Args) -> anyhow::Result<()> {
+    use cabin::coordinator::client::Client;
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let mut client = Client::connect(&addr)?;
+    let (applied_seqs, epoch) = client.promote()?;
+    println!("[promote] {addr} writable at epoch {epoch}, applied seqs {applied_seqs:?}");
+    Ok(())
+}
+
+/// `demote --addr HOST:PORT [--epoch N]`: fence a server read-only so it
+/// can be pointed at the new primary with `--replicate-from`. Without
+/// `--epoch` it fences at the server's own epoch; with it, at
+/// `max(own, N)` — a demote can raise a fence, never lower one.
+fn cmd_demote(args: &Args) -> anyhow::Result<()> {
+    use cabin::coordinator::client::Client;
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let mut client = Client::connect(&addr)?;
+    let epoch = client.demote(args.str_opt("epoch").and_then(|e| e.parse().ok()))?;
+    println!("[demote] {addr} fenced read-only at epoch {epoch} — rejoin with --replicate-from");
     Ok(())
 }
 

@@ -43,19 +43,29 @@
 //! dir's bytes are not interpretable under these rules (a v3 MoveOut has
 //! no move id; a v3 snapshot row has no deadline), so v3 manifests are
 //! refused descriptively like v1/v2 rather than mis-decoded.
+//!
+//! Version 5 adds `epoch`: the monotonic write-authority term of the
+//! replicated pair (see [`crate::replica`]). A fresh primary starts at
+//! epoch 1; `promote` persists `primary_epoch + 1` before flipping the
+//! replica writable; a server that observes a higher epoch than its own
+//! (on a shipper request or a fenced write) knows a newer primary exists
+//! and fences itself read-only. Like the seed and the seqs, the epoch is
+//! stored as a string so it roundtrips exactly through the f64-backed
+//! JSON model. A v4 dir has no epoch, so the old primary of a failed-over
+//! pair could not be fenced — refused descriptively like v1/v2/v3.
 
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
-/// Version 4 marks the mutable-corpus log format: Delete/Upsert/TTL WAL
-/// frame kinds, move ids on MoveOut/MoveIn pairs, and a per-row TTL
-/// deadline column in snapshots. Version 3 dirs predate all of those,
+/// Version 5 adds the monotonic failover `epoch` (write-authority term).
+/// Version 4 dirs predate epoch fencing (a revived old primary could not
+/// be fenced), version 3 dirs predate the mutable-corpus log format,
 /// version 2 (no `base_seqs`) cannot anchor a follower's catch-up
 /// position, and version 1 cannot even be verified against the live
 /// corpus shape — each is refused with a descriptive error rather than
 /// half-loaded.
-const VERSION: u32 = 4;
+const VERSION: u32 = 5;
 
 /// The store configuration a data dir was persisted under.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,6 +132,11 @@ impl Fingerprint {
 pub struct Manifest {
     pub generation: u64,
     pub fingerprint: Fingerprint,
+    /// Monotonic write-authority term. Bumped (and persisted) by
+    /// `promote` before the replica flips writable; a server observing a
+    /// higher epoch than its own fences itself read-only. Starts at 1 on
+    /// a fresh primary; a follower bootstraps with its primary's epoch.
+    pub epoch: u64,
     /// Per-shard WAL sequence of this generation's first frame (frames
     /// absorbed into the snapshot cut). Length == `num_shards`.
     pub base_seqs: Vec<u64>,
@@ -168,6 +183,7 @@ impl Manifest {
         let mut pairs = vec![
             ("version", Json::Num(VERSION as f64)),
             ("generation", Json::Num(self.generation as f64)),
+            ("epoch", Json::Str(self.epoch.to_string())),
             (
                 "sketch_dim",
                 Json::Num(self.fingerprint.sketch_dim as f64),
@@ -252,6 +268,14 @@ impl Manifest {
                 path.display()
             );
         }
+        if version == 4 {
+            bail!(
+                "{}: manifest version 4 predates epoch fencing (no failover epoch), \
+                 so a revived old primary of this data dir could not be fenced against \
+                 a promoted replica — re-ingest into a fresh --data-dir",
+                path.display()
+            );
+        }
         if version != VERSION {
             bail!("{}: unsupported manifest version {version}", path.display());
         }
@@ -286,6 +310,10 @@ impl Manifest {
             }
             Ok(seqs)
         };
+        let epoch: u64 = obj
+            .req_str("epoch")?
+            .parse()
+            .with_context(|| format!("{}: epoch is not a u64", path.display()))?;
         let base_seqs = seq_vec("base_seqs")?;
         let prev = match obj.get("prev_generation").and_then(|v| v.as_usize()) {
             Some(prev_generation) => Some((prev_generation as u64, seq_vec("prev_base_seqs")?)),
@@ -294,6 +322,7 @@ impl Manifest {
         Ok(Some(Manifest {
             generation: obj.req_usize("generation")? as u64,
             fingerprint,
+            epoch,
             base_seqs,
             prev,
         }))
@@ -304,6 +333,65 @@ impl Manifest {
 pub fn sync_dir(dir: &Path) {
     if let Ok(d) = std::fs::File::open(dir) {
         let _ = d.sync_all();
+    }
+}
+
+/// The fence marker: a one-line file naming the higher epoch this server
+/// observed. Its *presence* is the durable "I am not the primary any
+/// more" bit — a fenced ex-primary that crashes and restarts must come
+/// back fenced, not writable, or the split-brain the fence closed would
+/// reopen across the restart.
+pub fn fence_path(dir: &Path) -> PathBuf {
+    dir.join("FENCED")
+}
+
+/// Persist the fence marker (tmp + rename + dir sync, like the manifest —
+/// the fence must never surface half-written).
+pub fn write_fence(dir: &Path, epoch: u64) -> Result<()> {
+    let path = fence_path(dir);
+    let tmp = dir.join("FENCED.tmp");
+    {
+        use std::io::Write;
+        let mut f =
+            std::fs::File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(epoch.to_string().as_bytes())
+            .with_context(|| format!("write {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("rename fence marker into place: {}", path.display()))?;
+    sync_dir(dir);
+    Ok(())
+}
+
+/// Read the fence marker: `None` when the server is not fenced. A marker
+/// that exists but cannot be parsed is a hard error — guessing "not
+/// fenced" on a corrupt marker would reopen the split-brain window.
+pub fn read_fence(dir: &Path) -> Result<Option<u64>> {
+    let path = fence_path(dir);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("read {}", path.display())),
+    };
+    let epoch = text.trim().parse::<u64>().with_context(|| {
+        format!("{}: fence marker is not a u64 epoch", path.display())
+    })?;
+    Ok(Some(epoch))
+}
+
+/// Remove the fence marker (rejoining as an explicit follower via
+/// `--replicate-from` supersedes it: the follower role is read-only by
+/// construction). Missing markers are fine.
+pub fn clear_fence(dir: &Path) -> Result<()> {
+    match std::fs::remove_file(fence_path(dir)) {
+        Ok(()) => {
+            sync_dir(dir);
+            Ok(())
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+        Err(e) => Err(e).with_context(|| format!("remove {}", fence_path(dir).display())),
     }
 }
 
@@ -330,6 +418,7 @@ mod tests {
             generation: 7,
             fingerprint: fp(),
             // beyond f64's 2^53 integer range: must roundtrip exactly
+            epoch: (1u64 << 57) + 5,
             base_seqs: vec![0, 41, (1u64 << 55) + 9, 7],
             prev: None,
         };
@@ -416,11 +505,26 @@ mod tests {
     }
 
     #[test]
+    fn version_4_manifest_is_refused_descriptively() {
+        let dir = TempDir::new("manifest-v4");
+        std::fs::write(
+            manifest_path(dir.path()),
+            r#"{"version":4,"generation":2,"sketch_dim":64,"seed":"7","num_shards":2,"input_dim":100,"num_categories":4,"base_seqs":["5","9"]}"#,
+        )
+        .unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("version 4"), "{err}");
+        assert!(err.contains("epoch"), "{err}");
+        assert!(err.contains("fresh --data-dir"), "{err}");
+    }
+
+    #[test]
     fn base_seqs_arity_mismatch_is_refused() {
         let dir = TempDir::new("manifest-arity");
         let mut m = Manifest {
             generation: 1,
             fingerprint: fp(), // 4 shards
+            epoch: 1,
             base_seqs: vec![1, 2, 3, 4],
             prev: None,
         };
@@ -438,6 +542,26 @@ mod tests {
             let _ = m.save(dir.path());
         }));
         assert!(panicked.is_err(), "saving a malformed manifest must assert");
+    }
+
+    #[test]
+    fn fence_marker_roundtrips_and_clears() {
+        let dir = TempDir::new("manifest-fence");
+        assert_eq!(read_fence(dir.path()).unwrap(), None);
+        write_fence(dir.path(), (1u64 << 54) + 11).unwrap();
+        assert_eq!(read_fence(dir.path()).unwrap(), Some((1u64 << 54) + 11));
+        assert!(!dir.path().join("FENCED.tmp").exists());
+        // re-fencing at a later epoch overwrites
+        write_fence(dir.path(), (1u64 << 54) + 12).unwrap();
+        assert_eq!(read_fence(dir.path()).unwrap(), Some((1u64 << 54) + 12));
+        clear_fence(dir.path()).unwrap();
+        assert_eq!(read_fence(dir.path()).unwrap(), None);
+        // clearing twice is fine (idempotent rejoin paths)
+        clear_fence(dir.path()).unwrap();
+        // a corrupt marker is refused, not treated as "not fenced"
+        std::fs::write(fence_path(dir.path()), "what").unwrap();
+        let err = read_fence(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("not a u64 epoch"), "{err}");
     }
 
     #[test]

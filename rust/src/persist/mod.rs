@@ -63,7 +63,10 @@
 //! Sequence numbers + retention (replication, see [`crate::replica`]):
 //! every WAL frame carries an implicit monotonic per-shard sequence —
 //! frame `j` of `wal-G-shard-i` is sequence `base_seqs[i] + j`, where the
-//! manifest (v4) records each generation's per-shard base. Rotation
+//! manifest (v5) records each generation's per-shard base. The manifest
+//! also records the failover `epoch` — the monotonic write-authority
+//! term that fences a revived old primary after a promotion (see
+//! [`Persistence::set_epoch`] and [`crate::replica`]). Rotation
 //! advances the bases by the frames the cut absorbed, and *retains the
 //! previous generation's WAL segments* for exactly one generation so a
 //! follower that lags across a rotation can still be served the frames
@@ -544,6 +547,11 @@ pub struct Persistence {
     dead_since_snapshot: AtomicU64,
     /// Records appended since the last snapshot cut (drives auto-snapshot).
     records_since_snapshot: AtomicU64,
+    /// Failover epoch (write-authority term) — always mirrors the value
+    /// persisted in the manifest; advanced only through
+    /// [`Persistence::set_epoch`], which fsyncs the manifest *before*
+    /// publishing the new value here.
+    epoch: AtomicU64,
     /// Shipper tail-scan memo, one per shard (see [`TailOffsetCache`]).
     tail_offsets: Vec<Mutex<TailOffsetCache>>,
     /// WAL sequence anchoring (see [`SeqView`]).
@@ -655,6 +663,7 @@ impl Persistence {
             // across restarts stays bounded by the record-count seeding
             // below either way
             dead_since_snapshot: AtomicU64::new(0),
+            epoch: AtomicU64::new(report.epoch),
             tail_offsets: (0..fingerprint.num_shards)
                 .map(|_| Mutex::new(TailOffsetCache::default()))
                 .collect(),
@@ -756,6 +765,44 @@ impl Persistence {
     /// Live snapshot generation.
     pub fn generation(&self) -> u64 {
         self.counters.generation.load(Ordering::Relaxed)
+    }
+
+    /// Current failover epoch (write-authority term). Starts at 1 on a
+    /// fresh dir; see [`Persistence::set_epoch`] for how it advances.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Durably advance the failover epoch: rewrite the manifest (same
+    /// generation/bases) carrying `epoch`, fsync it, and only then
+    /// publish the value in memory — so an ack gated on the new epoch
+    /// can never be issued under a term a crash would roll back.
+    /// `promote` calls this with `primary_epoch + 1` *before* flipping
+    /// the replica writable; a fenced old primary calls it with the
+    /// higher epoch it just observed, so the fence survives a restart.
+    /// Strictly monotonic: a stale or equal epoch is refused.
+    ///
+    /// The seq lock is held across the save, which serialises this
+    /// against [`Persistence::write_snapshot`]'s manifest save (also
+    /// under the seq lock) — two manifest writers interleaving could
+    /// otherwise publish a regressed generation or epoch.
+    pub fn set_epoch(&self, epoch: u64) -> Result<()> {
+        let s = lock_recover(&self.seq);
+        let current = self.epoch.load(Ordering::Relaxed);
+        anyhow::ensure!(
+            epoch > current,
+            "failover epoch must advance: requested {epoch}, already at {current}"
+        );
+        Manifest {
+            generation: s.generation,
+            fingerprint: self.fingerprint,
+            epoch,
+            base_seqs: s.base_seqs.clone(),
+            prev: s.prev.clone(),
+        }
+        .save(&self.dir)?;
+        self.epoch.store(epoch, Ordering::Relaxed);
+        Ok(())
     }
 
     /// The configuration fingerprint this data dir is anchored to.
@@ -966,6 +1013,7 @@ impl Persistence {
     /// Flush + fsync every shard WAL (regardless of fsync policy) — the
     /// `flush` wire op and graceful shutdown.
     pub fn flush_all(&self) -> Result<()> {
+        crate::fault::check_io("fsync").context("flushing WALs")?;
         for (si, wal) in self.wals.iter().enumerate() {
             lock_recover(wal)
                 .sync()
@@ -998,6 +1046,7 @@ impl Persistence {
     ) -> Result<u64> {
         assert_eq!(shards.len(), self.wals.len());
         assert_eq!(wal_guards.len(), self.wals.len());
+        crate::fault::check_io("snapshot_rotate").context("rotating snapshot")?;
         let old = self.generation();
         let new = old + 1;
         for (si, (ids, expiry, rows)) in shards.iter().enumerate() {
@@ -1022,29 +1071,32 @@ impl Persistence {
         // The new bases absorb every frame the cut captured. The caller
         // holds every shard lock and every WAL guard, so no frame can
         // land anywhere between the `commit()` above and this read.
-        let old_bases: Vec<u64> = {
-            let s = lock_recover(&self.seq);
-            s.base_seqs.clone()
-        };
-        let new_bases: Vec<u64> = old_bases
-            .iter()
-            .zip(wal_guards.iter())
-            .map(|(base, guard)| base + guard.file_frames())
-            .collect();
-        Manifest {
-            generation: new,
-            fingerprint: self.fingerprint,
-            base_seqs: new_bases.clone(),
-            prev: Some((old, old_bases.clone())),
-        }
-        .save(&self.dir)?;
-        // Commit point passed: publish the new seq anchoring (one lock —
-        // the shipper can never see `new` paired with the old bases),
-        // swap the live writers (retiring the old ones so their Drop
-        // skips a pointless fsync of a now-frozen retained segment), then
-        // GC (best-effort — leftovers are swept by the next recovery).
+        // The manifest save and the seq publish happen under one seq-lock
+        // hold: the shipper can never see `new` paired with the old
+        // bases, and [`Persistence::set_epoch`] (the other manifest
+        // writer, same lock) can never interleave its save with this one
+        // and leave a regressed generation or epoch on disk.
         {
             let mut s = lock_recover(&self.seq);
+            let old_bases = s.base_seqs.clone();
+            let new_bases: Vec<u64> = old_bases
+                .iter()
+                .zip(wal_guards.iter())
+                .map(|(base, guard)| base + guard.file_frames())
+                .collect();
+            Manifest {
+                generation: new,
+                fingerprint: self.fingerprint,
+                epoch: self.epoch.load(Ordering::Relaxed),
+                base_seqs: new_bases.clone(),
+                prev: Some((old, old_bases.clone())),
+            }
+            .save(&self.dir)?;
+            // Commit point passed: publish the new seq anchoring, then
+            // (below) swap the live writers (retiring the old ones so
+            // their Drop skips a pointless fsync of a now-frozen retained
+            // segment) and GC (best-effort — leftovers are swept by the
+            // next recovery).
             s.prev = Some((old, old_bases));
             s.base_seqs = new_bases;
             s.generation = new;
@@ -1275,6 +1327,39 @@ mod tests {
         assert!(!wal_path(dir.path(), 0, 0).exists(), "gen-0 wal must expire");
         assert!(wal_path(dir.path(), 1, 0).exists(), "gen-1 wal retained");
         assert_eq!(p.seq_view().prev, Some((1, vec![2, 1])));
+    }
+
+    #[test]
+    fn epoch_is_durable_monotonic_and_survives_rotation() {
+        let dir = TempDir::new("persist-epoch");
+        let open = || {
+            Persistence::open(
+                &cfg(&dir, PersistMode::WalSnapshot),
+                fp(),
+                Arc::new(PersistCounters::default()),
+            )
+        };
+        let (p, _, report) = open().unwrap();
+        assert_eq!(report.epoch, 1, "a fresh dir is its own authority: epoch 1");
+        assert_eq!(p.epoch(), 1);
+        p.set_epoch(3).unwrap();
+        assert_eq!(p.epoch(), 3);
+        // strictly monotonic: stale and equal terms are refused
+        let err = p.set_epoch(3).unwrap_err();
+        assert!(err.to_string().contains("must advance"), "{err:#}");
+        assert!(p.set_epoch(2).is_err());
+        assert_eq!(p.epoch(), 3);
+        // rotation re-writes the manifest carrying the current epoch
+        let empty = SketchMatrix::new(64);
+        let views: Vec<(&[usize], &[u64], &SketchMatrix)> =
+            vec![(&[], &[], &empty), (&[], &[], &empty)];
+        let mut guards: Vec<_> = (0..2).map(|si| p.wal_guard(si)).collect();
+        p.write_snapshot(&views, &mut guards).unwrap();
+        drop(guards);
+        drop(p);
+        let (p, _, report) = open().unwrap();
+        assert_eq!(report.epoch, 3, "epoch must survive rotation + restart");
+        assert_eq!(p.epoch(), 3);
     }
 
     #[test]

@@ -46,6 +46,9 @@ use std::path::Path;
 pub struct RecoveryReport {
     /// Live snapshot generation after recovery.
     pub generation: u64,
+    /// Failover epoch (write-authority term) recorded by the manifest
+    /// (v5); a fresh dir initialises it to 1.
+    pub epoch: u64,
     /// Rows loaded from snapshot files.
     pub snapshot_rows: usize,
     /// WAL records replayed on top of the snapshots.
@@ -91,6 +94,8 @@ pub fn recover(dir: &Path, expect: &Fingerprint) -> Result<(Vec<ShardState>, Rec
             let m = Manifest {
                 generation: 0,
                 fingerprint: *expect,
+                // a fresh dir is its own write authority: epoch term 1
+                epoch: 1,
                 base_seqs: vec![0; expect.num_shards],
                 prev: None,
             };
@@ -102,6 +107,7 @@ pub fn recover(dir: &Path, expect: &Fingerprint) -> Result<(Vec<ShardState>, Rec
     let words_per_row = expect.sketch_dim.div_ceil(64);
     let mut report = RecoveryReport {
         generation,
+        epoch: manifest.epoch,
         base_seqs: manifest.base_seqs.clone(),
         retained_prev: manifest.prev.clone(),
         ..Default::default()
@@ -327,6 +333,7 @@ mod tests {
         assert_eq!(shards.len(), 3);
         assert!(shards.iter().all(|s| s.ids.is_empty()));
         assert_eq!(report.generation, 0);
+        assert_eq!(report.epoch, 1, "a fresh dir starts at epoch 1");
         assert_eq!(report.replayed_records, 0);
         assert_eq!(report.base_seqs, vec![0, 0, 0]);
         assert_eq!(report.wal_frames, vec![0, 0, 0]);
@@ -348,6 +355,7 @@ mod tests {
         Manifest {
             generation: 2,
             fingerprint: f,
+            epoch: 1,
             base_seqs: vec![1],
             prev: None,
         }
@@ -516,6 +524,7 @@ mod tests {
         Manifest {
             generation: 2,
             fingerprint: f,
+            epoch: 1,
             base_seqs: vec![5],
             prev: None,
         }
@@ -585,6 +594,7 @@ mod tests {
         Manifest {
             generation: 1,
             fingerprint: f,
+            epoch: 1,
             base_seqs: vec![1],
             prev: None,
         }
@@ -656,6 +666,7 @@ mod tests {
         Manifest {
             generation: 3,
             fingerprint: f,
+            epoch: 1,
             base_seqs: vec![0],
             prev: None,
         }

@@ -10,6 +10,13 @@
 //! applied chunk is mirrored into the follower's own WAL before its
 //! cursor advances, so follower restarts resume from a consistent prefix
 //! with no re-shipping of already-applied history.
+//!
+//! Under `--auto-promote` the runtime also runs a probe supervisor
+//! ([`probe_loop`]): ping the primary every `probe_interval`, and after
+//! `probe_failures` *consecutive* probes that miss the `probe_timeout`
+//! budget, drive [`ReplicaRuntime::promote`] unattended — which bumps
+//! the durable failover epoch before the first write can be acked, so a
+//! revived old primary is fenceable (see [`crate::persist::Persistence::set_epoch`]).
 
 use super::{seq_field, ReplCounters, ReplicaConfig};
 use crate::coordinator::protocol::StreamRequest;
@@ -54,23 +61,30 @@ pub struct ReplClient {
     writer: TcpStream,
 }
 
-/// A fetched `repl_snapshot`: the primary's seq anchoring plus verbatim
-/// snapshot-file bytes per shard (empty at generation 0).
-pub struct SnapshotBundle {
+/// A `repl_snapshot` header: the primary's seq/epoch anchoring plus the
+/// per-shard payload sizes still waiting on the connection. The shard
+/// bytes themselves are *streamed* (see [`ReplClient::read_payload_into`])
+/// straight to disk — bootstrap never buffers a corpus image.
+pub struct SnapshotMeta {
     pub generation: u64,
+    /// The primary's failover epoch at the cut; the follower's manifest
+    /// adopts it so a later `promote` provably exceeds the primary's term.
+    pub epoch: u64,
     pub base_seqs: Vec<u64>,
     pub fingerprint: Fingerprint,
-    pub shards: Vec<Vec<u8>>,
+    pub shard_bytes: Vec<usize>,
 }
 
 /// A fetched `repl_wal_tail` answer.
 pub enum TailChunk {
     /// Raw frame bytes (re-validated locally frame-by-frame) plus the
-    /// primary's durable horizon for lag accounting.
+    /// primary's durable horizon for lag accounting and its current
+    /// failover epoch (0 from a pre-epoch server).
     Frames {
         bytes: Vec<u8>,
         frames: u64,
         live_seq: u64,
+        epoch: u64,
     },
     /// The primary rotated past our position: only a fresh snapshot can
     /// re-seed this follower.
@@ -116,8 +130,26 @@ impl ReplClient {
         Ok(buf)
     }
 
-    /// Fetch the primary's newest snapshot bundle.
-    pub fn fetch_snapshot(&mut self) -> Result<SnapshotBundle> {
+    /// Stream `len` payload bytes into `out` in bounded chunks, never
+    /// holding more than one chunk in memory.
+    pub fn read_payload_into<W: Write>(&mut self, len: usize, out: &mut W) -> Result<()> {
+        let mut chunk = vec![0u8; len.clamp(1, 256 << 10)];
+        let mut left = len;
+        while left > 0 {
+            let want = left.min(chunk.len());
+            self.reader
+                .read_exact(&mut chunk[..want])
+                .context("reading replication payload")?;
+            out.write_all(&chunk[..want])
+                .context("spilling replication payload")?;
+            left -= want;
+        }
+        Ok(())
+    }
+
+    /// Fetch the primary's newest snapshot header; the caller then
+    /// drains `shard_bytes[i]` payload bytes per shard, in shard order.
+    pub fn fetch_snapshot_meta(&mut self) -> Result<SnapshotMeta> {
         let header = self.round_trip(&StreamRequest::ReplSnapshot.to_json_line())?;
         if !header.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
             bail!(
@@ -152,29 +184,35 @@ impl ReplClient {
         if sizes.len() != fingerprint.num_shards || base_seqs.len() != fingerprint.num_shards {
             bail!("repl_snapshot header arity does not match num_shards");
         }
-        let mut shards = Vec::with_capacity(sizes.len());
-        for len in sizes {
-            shards.push(self.read_payload(len)?);
-        }
-        Ok(SnapshotBundle {
+        Ok(SnapshotMeta {
             generation: header.req_usize("generation")? as u64,
+            // absent from a pre-epoch (manifest ≤ v4) primary: term 1
+            epoch: match header.get("epoch") {
+                Some(_) => seq_field(&header, "epoch")?,
+                None => 1,
+            },
             base_seqs,
             fingerprint,
-            shards,
+            shard_bytes: sizes,
         })
     }
 
-    /// Fetch a shard's WAL tail starting at `from_seq`.
+    /// Fetch a shard's WAL tail starting at `from_seq`. `epoch` is this
+    /// follower's own failover epoch — a primary serving a request that
+    /// names a higher epoch than its own knows it has been superseded
+    /// and fences itself (`None` omits the field).
     pub fn fetch_tail(
         &mut self,
         shard: usize,
         from_seq: u64,
         max_bytes: usize,
+        epoch: Option<u64>,
     ) -> Result<TailChunk> {
         let req = StreamRequest::ReplWalTail {
             shard,
             from_seq,
             max_bytes,
+            epoch,
         };
         let header = self.round_trip(&req.to_json_line())?;
         if !header.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
@@ -192,11 +230,17 @@ impl ReplClient {
             bail!("repl_wal_tail refused: {message}");
         }
         let frames = header.req_usize("frames")? as u64;
+        let live_seq = seq_field(&header, "live_seq")?;
+        let epoch = match header.get("epoch") {
+            Some(_) => seq_field(&header, "epoch")?,
+            None => 0,
+        };
         let bytes = self.read_payload(header.req_usize("bytes")?)?;
         Ok(TailChunk::Frames {
             bytes,
             frames,
-            live_seq: seq_field(&header, "live_seq")?,
+            live_seq,
+            epoch,
         })
     }
 }
@@ -262,43 +306,61 @@ pub fn bootstrap(primary: &str, expect: &Fingerprint, data_dir: &Path) -> Result
     }
     let mut client = ReplClient::connect(primary)
         .with_context(|| format!("connecting to replication primary {primary}"))?;
-    let bundle = client.fetch_snapshot()?;
-    bundle
-        .fingerprint
+    let meta = client.fetch_snapshot_meta()?;
+    meta.fingerprint
         .check(expect)
         .context("primary's corpus configuration does not match this replica's flags")?;
-    if bundle.shards.len() != expect.num_shards {
+    if meta.shard_bytes.len() != expect.num_shards {
         bail!(
             "primary shipped {} snapshot shards for {} configured shards",
-            bundle.shards.len(),
+            meta.shard_bytes.len(),
             expect.num_shards
         );
     }
     let mut snapshot_bytes = 0u64;
-    if bundle.generation > 0 {
-        for (si, bytes) in bundle.shards.iter().enumerate() {
-            let path = snap_path(data_dir, bundle.generation, si);
-            write_atomic(&path, bytes)?;
-            // validate BEFORE committing the manifest: a damaged transfer
-            // must re-bootstrap on the next start, not wedge recovery
+    if meta.generation > 0 {
+        for (si, len) in meta.shard_bytes.iter().copied().enumerate() {
+            // stream the shard payload straight to its tmp file (tmp +
+            // fsync + rename, like write_atomic, without a buffered
+            // corpus image), then validate BEFORE committing the
+            // manifest: a damaged transfer must re-bootstrap on the
+            // next start, not wedge recovery
+            let path = snap_path(data_dir, meta.generation, si);
+            let tmp = path.with_extension("tmp");
+            {
+                let f = std::fs::File::create(&tmp)
+                    .with_context(|| format!("create {}", tmp.display()))?;
+                let mut w = std::io::BufWriter::new(f);
+                client
+                    .read_payload_into(len, &mut w)
+                    .with_context(|| format!("shipping snapshot shard {si}"))?;
+                let f = w
+                    .into_inner()
+                    .map_err(|e| anyhow::anyhow!("flushing {}: {}", tmp.display(), e.error()))?;
+                f.sync_all()?;
+            }
+            std::fs::rename(&tmp, &path)
+                .with_context(|| format!("rename {} into place", path.display()))?;
             snapshot::load_shard(&path, expect.sketch_dim, si)
                 .with_context(|| format!("validating shipped snapshot for shard {si}"))?;
-            snapshot_bytes += bytes.len() as u64;
+            snapshot_bytes += len as u64;
         }
         for si in 0..expect.num_shards {
             // recovery at generation > 0 requires the live segment to
             // exist; it starts empty and the puller fills it
             crate::persist::wal::WalWriter::create(
-                &wal_path(data_dir, bundle.generation, si),
+                &wal_path(data_dir, meta.generation, si),
                 FsyncPolicy::Never,
             )
             .with_context(|| format!("creating empty WAL segment for shard {si}"))?;
         }
     }
     Manifest {
-        generation: bundle.generation,
+        generation: meta.generation,
         fingerprint: *expect,
-        base_seqs: bundle.base_seqs,
+        // adopt the primary's failover epoch: promotion bumps past it
+        epoch: meta.epoch,
+        base_seqs: meta.base_seqs,
         // no retained segment: a fresh follower bootstraps at the cut
         prev: None,
     }
@@ -306,28 +368,75 @@ pub fn bootstrap(primary: &str, expect: &Fingerprint, data_dir: &Path) -> Result
     sync_dir(data_dir);
     Ok(BootstrapReport {
         resumed: false,
-        generation: bundle.generation,
+        generation: meta.generation,
         snapshot_bytes,
     })
 }
 
-/// The live follower runtime: the puller thread plus the writable flag
-/// the server's insert gate reads. Dropping it stops and joins the
-/// puller.
+/// Sidecar file persisting the puller's `seen_move_ins` set (one move
+/// id per line). Without it, a follower restart forgets which `MoveIn`
+/// frames it already applied, so the next unpaired `MoveOut` rides the
+/// 64-deferral valve and a moved row reads as transiently missing; with
+/// it, the pairing state survives restarts. Loss of the file is safe —
+/// it only re-opens the pre-persistence window.
+const MOVE_INS_FILE: &str = "MOVE_INS";
+
+fn load_move_ins(dir: &Path) -> HashSet<u64> {
+    let mut out = HashSet::new();
+    if let Ok(text) = std::fs::read_to_string(dir.join(MOVE_INS_FILE)) {
+        for line in text.lines() {
+            if let Ok(id) = line.trim().parse::<u64>() {
+                out.insert(id);
+            }
+        }
+    }
+    out
+}
+
+/// Best-effort atomic rewrite (the set is bounded by in-flight moves,
+/// so this is a handful of lines); a write failure only degrades back
+/// to the pre-persistence deferral behaviour, so it warns, not errors.
+fn save_move_ins(dir: &Path, set: &HashSet<u64>) {
+    let mut ids: Vec<u64> = set.iter().copied().collect();
+    ids.sort_unstable();
+    let mut text = String::new();
+    for id in ids {
+        text.push_str(&id.to_string());
+        text.push('\n');
+    }
+    if let Err(e) = write_atomic(&dir.join(MOVE_INS_FILE), text.as_bytes()) {
+        obs_log::warn(
+            "replica",
+            "move_ins_persist_failed",
+            &[("error", obs_log::V::s(format!("{e:#}")))],
+        );
+    }
+}
+
+/// The live follower runtime: the puller thread, the optional probe
+/// supervisor (`--auto-promote`), and the writable flag the server's
+/// insert gate reads. Dropping it stops and joins both threads.
 pub struct ReplicaRuntime {
     primary: String,
     writable: AtomicBool,
     stop: Arc<AtomicBool>,
     store: Arc<ShardedStore>,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    probe_handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Serialises [`ReplicaRuntime::promote`] callers (manual op racing
+    /// the supervisor): the second caller must observe the first one's
+    /// writable flip, not race it to a second epoch bump.
+    promote_lock: Mutex<()>,
 }
 
 impl ReplicaRuntime {
-    /// Spawn the puller over an already-recovered (bootstrapped) store.
+    /// Spawn the puller (and, under `cfg.auto_promote`, the probe
+    /// supervisor) over an already-recovered (bootstrapped) store.
     pub fn start(
         store: Arc<ShardedStore>,
         cfg: ReplicaConfig,
         counters: Arc<ReplCounters>,
+        failover: Arc<super::FailoverCounters>,
     ) -> Arc<ReplicaRuntime> {
         assert!(
             store.persistence().is_some(),
@@ -337,17 +446,32 @@ impl ReplicaRuntime {
         let primary = cfg.primary.clone();
         let thread_store = store.clone();
         let thread_stop = stop.clone();
+        let thread_cfg = cfg.clone();
         let handle = std::thread::Builder::new()
             .name("cabin-replica-pull".into())
-            .spawn(move || puller_loop(&thread_store, &cfg, &counters, &thread_stop))
+            .spawn(move || puller_loop(&thread_store, &thread_cfg, &counters, &thread_stop))
             .expect("spawn replica puller");
-        Arc::new(ReplicaRuntime {
+        let rt = Arc::new(ReplicaRuntime {
             primary,
             writable: AtomicBool::new(false),
             stop,
             store,
             handle: Mutex::new(Some(handle)),
-        })
+            probe_handle: Mutex::new(None),
+            promote_lock: Mutex::new(()),
+        });
+        if cfg.auto_promote {
+            // the supervisor holds only a Weak: a strong clone would
+            // keep the runtime (and its threads) alive past the server
+            let weak = Arc::downgrade(&rt);
+            let probe_stop = rt.stop.clone();
+            let probe = std::thread::Builder::new()
+                .name("cabin-replica-probe".into())
+                .spawn(move || probe_loop(&weak, &cfg, &failover, &probe_stop))
+                .expect("spawn failover probe");
+            *super::lock_recover(&rt.probe_handle) = Some(probe);
+        }
+        rt
     }
 
     /// The primary this replica follows (used by the insert redirect).
@@ -360,15 +484,18 @@ impl ReplicaRuntime {
         self.writable.load(Ordering::SeqCst)
     }
 
-    /// Stop replication, flush every applied frame durable, and flip
-    /// writable; returns the per-shard applied (now durable) sequences.
-    /// A flush failure is an `Err` and leaves the replica READ-ONLY —
-    /// promoting would otherwise report sequences a crash could revoke,
-    /// silently breaking the "promoted node loses no acked insert"
-    /// contract. The operator can retry `promote` once the disk recovers.
-    /// Idempotent on success — a second promote just reports the
-    /// sequences again.
-    pub fn promote(&self) -> anyhow::Result<Vec<u64>> {
+    /// Stop replication, flush every applied frame durable, persist the
+    /// bumped failover epoch, and flip writable; returns the per-shard
+    /// applied (now durable) sequences and the new epoch. A flush or
+    /// epoch-persist failure is an `Err` and leaves the replica
+    /// READ-ONLY — promoting would otherwise report sequences a crash
+    /// could revoke (or ack writes under a term a crash would roll
+    /// back), silently breaking the "promoted node loses no acked
+    /// insert" contract. The operator can retry `promote` once the disk
+    /// recovers. Idempotent on success — a second promote just reports
+    /// the sequences and epoch again without bumping twice.
+    pub fn promote(&self) -> anyhow::Result<(Vec<u64>, u64)> {
+        let _g = super::lock_recover(&self.promote_lock);
         self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = super::lock_recover(&self.handle).take() {
             let _ = h.join();
@@ -380,8 +507,16 @@ impl ReplicaRuntime {
         p.flush_all()
             .context("flushing applied frames before promotion; replica remains read-only")?;
         let seqs = (0..self.store.num_shards()).map(|si| p.committed_seq(si)).collect();
+        if !self.writable.load(Ordering::SeqCst) {
+            // the epoch lands durably BEFORE the first write can be
+            // acked: the old primary's manifest tops out at the epoch
+            // this follower adopted while pulling, so the bump makes
+            // this side's term strictly the highest that ever acked
+            p.set_epoch(p.epoch() + 1)
+                .context("persisting the bumped failover epoch; replica remains read-only")?;
+        }
         self.writable.store(true, Ordering::SeqCst);
-        Ok(seqs)
+        Ok((seqs, p.epoch()))
     }
 }
 
@@ -390,6 +525,147 @@ impl Drop for ReplicaRuntime {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = super::lock_recover(&self.handle).take() {
             let _ = h.join();
+        }
+        if let Some(h) = super::lock_recover(&self.probe_handle).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One health probe: TCP connect + `ping` round trip, each bounded by
+/// `timeout`. Returns the observed round-trip time. The probe's verdict
+/// is deliberately binary — *answered within the budget* or not: a slow
+/// primary that still answers inside `probe_timeout` is healthy (and
+/// never promoted over), while "dead" requires `probe_failures`
+/// *consecutive* budget misses, so a single GC pause or dropped packet
+/// cannot trigger failover.
+fn probe_primary(addr: &str, timeout: Duration) -> Result<Duration> {
+    use std::net::ToSocketAddrs;
+    let start = std::time::Instant::now();
+    let target = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolve {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("{addr} resolved to no address"))?;
+    let stream = TcpStream::connect_timeout(&target, timeout).context("connect")?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout)).ok();
+    stream.set_write_timeout(Some(timeout)).ok();
+    let mut writer = stream.try_clone().context("clone probe socket")?;
+    writeln!(
+        writer,
+        "{}",
+        crate::coordinator::protocol::Request::Ping { epoch: None }.to_json_line()
+    )
+    .context("send ping")?;
+    let mut line = String::new();
+    BufReader::new(stream)
+        .read_line(&mut line)
+        .context("read pong")?;
+    let reply = crate::util::json::parse(line.trim()).context("parse pong")?;
+    if reply.get("pong").and_then(|b| b.as_bool()) != Some(true) {
+        bail!("primary answered, but not with a pong");
+    }
+    Ok(start.elapsed())
+}
+
+/// The failover supervisor (`--auto-promote`): probe the primary every
+/// `probe_interval`; after `probe_failures` consecutive failed probes,
+/// drive [`ReplicaRuntime::promote`] and exit. A failed promotion
+/// (e.g. the local disk refused the flush) resets the count and keeps
+/// probing — the replica stays read-only rather than overstating what
+/// it holds.
+fn probe_loop(
+    rt: &std::sync::Weak<ReplicaRuntime>,
+    cfg: &ReplicaConfig,
+    failover: &super::FailoverCounters,
+    stop: &AtomicBool,
+) {
+    let mut consecutive: u32 = 0;
+    while !stop.load(Ordering::Relaxed) {
+        sleep_unless_stop(stop, cfg.probe_interval);
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        failover.probes.fetch_add(1, Ordering::Relaxed);
+        match probe_primary(&cfg.primary, cfg.probe_timeout) {
+            Ok(_rtt) => {
+                consecutive = 0;
+                failover.consecutive_failures.store(0, Ordering::Relaxed);
+            }
+            Err(e) => {
+                consecutive += 1;
+                failover.probe_failures.fetch_add(1, Ordering::Relaxed);
+                failover
+                    .consecutive_failures
+                    .store(consecutive as u64, Ordering::Relaxed);
+                obs_log::warn(
+                    "failover",
+                    "probe_failed",
+                    &[
+                        ("primary", obs_log::V::s(cfg.primary.clone())),
+                        ("consecutive", obs_log::V::u(consecutive as u64)),
+                        ("threshold", obs_log::V::u(cfg.probe_failures as u64)),
+                        ("error", obs_log::V::s(format!("{e:#}"))),
+                    ],
+                );
+            }
+        }
+        if consecutive < cfg.probe_failures {
+            continue;
+        }
+        let Some(rt) = rt.upgrade() else {
+            return; // runtime dropped under us: server is going down
+        };
+        if rt.is_writable() {
+            return; // already promoted (manually, or a prior pass)
+        }
+        match rt.promote() {
+            Ok((applied_seqs, epoch)) => {
+                failover.promotions.fetch_add(1, Ordering::Relaxed);
+                failover.last_epoch.store(epoch, Ordering::Relaxed);
+                // the structured `failover` record: one line an operator
+                // (or a postmortem) can key on
+                obs_log::info(
+                    "failover",
+                    "auto_promoted",
+                    &[
+                        ("primary", obs_log::V::s(cfg.primary.clone())),
+                        ("probe_failures", obs_log::V::u(consecutive as u64)),
+                        (
+                            "probe_interval_ms",
+                            obs_log::V::u(cfg.probe_interval.as_millis() as u64),
+                        ),
+                        (
+                            "probe_timeout_ms",
+                            obs_log::V::u(cfg.probe_timeout.as_millis() as u64),
+                        ),
+                        ("epoch", obs_log::V::u(epoch)),
+                        (
+                            "applied_seqs",
+                            obs_log::V::s(
+                                applied_seqs
+                                    .iter()
+                                    .map(|s| s.to_string())
+                                    .collect::<Vec<_>>()
+                                    .join(","),
+                            ),
+                        ),
+                    ],
+                );
+                return; // we are the primary now; nothing left to probe
+            }
+            Err(e) => {
+                obs_log::error(
+                    "failover",
+                    "auto_promote_failed",
+                    &[
+                        ("error", obs_log::V::s(format!("{e:#}"))),
+                        ("action", obs_log::V::s("replica stays read-only; re-probing")),
+                    ],
+                );
+                consecutive = 0;
+            }
         }
     }
 }
@@ -426,8 +702,10 @@ fn puller_loop(
     // Cross-shard move ordering: move ids whose MoveIn this runtime has
     // applied but whose paired MoveOut it has not yet seen. A MoveOut
     // removes its id on apply (move ids are never reused), so the set is
-    // bounded by the number of in-flight moves.
-    let mut seen_move_ins: HashSet<u64> = HashSet::new();
+    // bounded by the number of in-flight moves. Persisted in a sidecar
+    // file so a follower restart keeps its pairing state instead of
+    // riding the deferral valve (transiently missing rows).
+    let mut seen_move_ins: HashSet<u64> = load_move_ins(p.data_dir());
     let mut defers_by_shard = vec![0u32; num_shards];
     while !stop.load(Ordering::Relaxed) {
         let mut client = match ReplClient::connect(&cfg.primary) {
@@ -451,12 +729,25 @@ fn puller_loop(
                     return;
                 }
                 let from = p.next_seq(shard);
-                match client.fetch_tail(shard, from, cfg.max_bytes) {
+                match client.fetch_tail(shard, from, cfg.max_bytes, Some(p.epoch())) {
                     Ok(TailChunk::Frames {
                         bytes,
                         frames,
                         live_seq,
+                        epoch,
                     }) => {
+                        // adopt the primary's (strictly newer) failover
+                        // epoch durably, so our own later promotion
+                        // provably exceeds every term the primary acked
+                        if epoch > p.epoch() {
+                            if let Err(e) = p.set_epoch(epoch) {
+                                obs_log::warn(
+                                    "replica",
+                                    "epoch_adopt_failed",
+                                    &[("error", obs_log::V::s(format!("{e:#}")))],
+                                );
+                            }
+                        }
                         if frames > 0 {
                             let replay = scan_frames(&bytes, wpr);
                             if replay.records.is_empty() {
@@ -497,16 +788,22 @@ fn puller_loop(
                                 if !recs.is_empty() {
                                     match store.apply_replicated(shard, valid, recs) {
                                         Ok(()) => {
+                                            let mut moves_changed = false;
                                             for r in recs {
                                                 match r {
                                                     WalRecord::MoveIn { move_id, .. } => {
-                                                        seen_move_ins.insert(*move_id);
+                                                        moves_changed |=
+                                                            seen_move_ins.insert(*move_id);
                                                     }
                                                     WalRecord::MoveOut { move_id } => {
-                                                        seen_move_ins.remove(move_id);
+                                                        moves_changed |=
+                                                            seen_move_ins.remove(move_id);
                                                     }
                                                     _ => {}
                                                 }
+                                            }
+                                            if moves_changed {
+                                                save_move_ins(p.data_dir(), &seen_move_ins);
                                             }
                                             if take == replay.records.len() {
                                                 defers_by_shard[shard] = 0;
@@ -602,5 +899,43 @@ fn puller_loop(
                 sleep_unless_stop(stop, cfg.poll);
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn move_ins_sidecar_roundtrips_and_tolerates_absence() {
+        let dir = crate::testing::TempDir::new("move-ins");
+        assert!(load_move_ins(dir.path()).is_empty(), "no file yet");
+        let mut set = HashSet::new();
+        set.insert(7u64);
+        set.insert(u64::MAX);
+        set.insert(0);
+        save_move_ins(dir.path(), &set);
+        assert_eq!(load_move_ins(dir.path()), set);
+        // shrink: the rewrite replaces, not appends
+        set.remove(&7);
+        save_move_ins(dir.path(), &set);
+        assert_eq!(load_move_ins(dir.path()), set);
+        // garbage lines are skipped, valid ones still load
+        std::fs::write(dir.path().join(MOVE_INS_FILE), "12\nnope\n\n9\n").unwrap();
+        let loaded = load_move_ins(dir.path());
+        assert_eq!(loaded, [12u64, 9].into_iter().collect());
+    }
+
+    #[test]
+    fn probe_against_nothing_fails_within_budget() {
+        // an unroutable/refused port must come back as a probe failure,
+        // not a hang — promote() joins threads that depend on this
+        let t0 = std::time::Instant::now();
+        let err = probe_primary("127.0.0.1:1", Duration::from_millis(400));
+        assert!(err.is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "probe must respect its timeout budget"
+        );
     }
 }

@@ -20,7 +20,7 @@
 //!   │   repl_* wire ops from the │  snapshot arenas  │ snap/wal/MANIFEST,    │
 //!   │   same TCP protocol]       │                   │ recover via the       │
 //!   │                            │  repl_wal_tail    │ ordinary persist path │
-//!   │ seq anchoring: manifest v4 │ {shard,from_seq}  │ [puller thread:       │
+//!   │ seq anchoring: manifest v5 │ {shard,from_seq}  │ [puller thread:       │
 //!   │ base_seqs + implicit frame │ ───────────────►  │  apply frames, mirror │
 //!   │ position = per-shard seq   │  checksummed raw  │  into own WAL, track  │
 //!   └────────────────────────────┘  frame bytes      │  applied seq/lag]     │
@@ -30,7 +30,7 @@
 //!
 //! **Sequence numbers.** Every WAL frame has an implicit monotonic
 //! per-shard sequence: its position in the shard's total frame history.
-//! The manifest (v4) anchors each generation with per-shard `base_seqs`
+//! The manifest (v5) anchors each generation with per-shard `base_seqs`
 //! (frames absorbed into the snapshot cut), so frame `j` of
 //! `wal-G-shard-i` is sequence `base_seqs[i] + j` — the on-disk frame
 //! format is unchanged, and a follower's catch-up position is just a
@@ -73,11 +73,22 @@
 //! `ShardedStore` + LSH indexes and rejects `insert` with a descriptive
 //! redirect to the primary. `promote` stops the puller, flushes every
 //! applied frame durable (a flush failure errors and leaves the replica
-//! read-only rather than overstating its durable state), and flips the
+//! read-only rather than overstating its durable state), durably bumps
+//! the failover **epoch** past the primary's term, and flips the
 //! replica writable — inserts then continue the id/seq line the primary
 //! established. Promotion is local: it asserts nothing about the
 //! (possibly dead) primary beyond what was already applied, which is
 //! exactly the durable prefix the primary acked and shipped.
+//!
+//! **Failover and fencing.** Under `--auto-promote` a probe supervisor
+//! ([`follower::ReplicaRuntime`]) drives `promote` unattended after a
+//! configurable run of consecutive failed health probes, counted in
+//! [`FailoverCounters`]. The bumped epoch rides every shipped tail
+//! header and mutation ack; a revived old primary learns of the higher
+//! term on first contact (a client `ping`/write naming it, or a
+//! follower's `repl_wal_tail` carrying it) and fences itself read-only
+//! — two writable primaries can never both ack (see
+//! `coordinator::server` for the fence gate and the `demote` op).
 //!
 //! **Cross-shard move ordering.** A rebalance move's two frames —
 //! `MoveOut` on the source shard, `MoveIn` on the destination — travel
@@ -130,6 +141,17 @@ pub struct ReplicaConfig {
     /// Per-tail-request byte budget; the primary always serves at least
     /// one frame, so this bounds chunk memory without stalling.
     pub max_bytes: usize,
+    /// Run the failover probe supervisor (`--auto-promote`).
+    pub auto_promote: bool,
+    /// Health-probe cadence (`--probe-interval-ms`).
+    pub probe_interval: Duration,
+    /// Per-probe connect/roundtrip budget (`--probe-timeout-ms`). A
+    /// primary that answers within this budget is *slow, not dead* and
+    /// is never promoted over.
+    pub probe_timeout: Duration,
+    /// Consecutive failed probes before auto-promotion fires
+    /// (`--probe-failures`).
+    pub probe_failures: u32,
 }
 
 impl Default for ReplicaConfig {
@@ -138,7 +160,66 @@ impl Default for ReplicaConfig {
             primary: String::new(),
             poll: Duration::from_millis(2),
             max_bytes: 1 << 20,
+            auto_promote: false,
+            probe_interval: Duration::from_millis(500),
+            probe_timeout: Duration::from_millis(1_000),
+            probe_failures: 3,
         }
+    }
+}
+
+/// Failover/fencing counters, surfaced as server-level `failover_*`
+/// stats fields (and thence Prometheus gauges) on every server — zero
+/// everywhere except the side they describe: probe counters move on a
+/// supervised replica, `failover_fence_events` on a fenced ex-primary.
+/// Kept separate from [`ReplCounters`] because they are written by the
+/// probe supervisor and the server's fence gate, not the shipping path.
+#[derive(Debug, Default)]
+pub struct FailoverCounters {
+    /// Health probes sent by the supervisor.
+    pub probes: AtomicU64,
+    /// Probes that missed their budget (connect/roundtrip failure).
+    pub probe_failures: AtomicU64,
+    /// Gauge: current run of consecutive failed probes.
+    pub consecutive_failures: AtomicU64,
+    /// Auto-promotions driven by the supervisor (0 or 1).
+    pub promotions: AtomicU64,
+    /// Times this server fenced itself on observing a higher epoch.
+    pub fence_events: AtomicU64,
+    /// Gauge: the epoch after the last promotion/fence event (0 = none).
+    pub last_epoch: AtomicU64,
+}
+
+impl FailoverCounters {
+    /// Flat `failover_*` stats fields, merged into the `stats` response
+    /// by `coordinator::Coordinator::stats_fields`.
+    pub fn stats_fields(&self) -> Vec<(String, f64)> {
+        vec![
+            (
+                "failover_probes".into(),
+                self.probes.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "failover_probe_failures".into(),
+                self.probe_failures.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "failover_consecutive_failures".into(),
+                self.consecutive_failures.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "failover_promotions".into(),
+                self.promotions.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "failover_fence_events".into(),
+                self.fence_events.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "failover_last_epoch".into(),
+                self.last_epoch.load(Ordering::Relaxed) as f64,
+            ),
+        ]
     }
 }
 
@@ -282,5 +363,21 @@ mod tests {
             .unwrap()
             .1;
         assert_eq!(lag, 0.0);
+    }
+
+    #[test]
+    fn failover_counters_surface_failover_prefixed_fields() {
+        let f = FailoverCounters::default();
+        f.probes.fetch_add(9, Ordering::Relaxed);
+        f.promotions.fetch_add(1, Ordering::Relaxed);
+        f.last_epoch.store(4, Ordering::Relaxed);
+        let fields = f.stats_fields();
+        assert!(fields.iter().all(|(n, _)| n.starts_with("failover_")));
+        let get = |k: &str| fields.iter().find(|(n, _)| n == k).unwrap().1;
+        assert_eq!(get("failover_probes"), 9.0);
+        assert_eq!(get("failover_promotions"), 1.0);
+        assert_eq!(get("failover_last_epoch"), 4.0);
+        assert_eq!(get("failover_fence_events"), 0.0);
+        assert_eq!(fields.len(), 6);
     }
 }

@@ -15,10 +15,20 @@
 //!
 //! Rotation races: a snapshot rotation can slide under a shipping request
 //! (its files GC'd mid-read, its bases re-anchored). Every serve path
-//! therefore captures one consistent [`Persistence::seq_view`], reads the
+//! therefore captures one consistent [`Persistence::seq_view`], opens the
 //! files it addresses, and retries when the live generation moved —
 //! never blocking rotation, never serving a generation's file against
-//! another generation's bases.
+//! another generation's bases. Snapshot payloads then *stream* from the
+//! open handles in bounded chunks (an unlinked open file keeps its
+//! immutable contents), so a bootstrap of any corpus size costs one
+//! [`SNAPSHOT_CHUNK`] of primary memory, not a corpus image.
+//!
+//! Both headers carry the serving side's failover `epoch` (see
+//! [`crate::persist::Persistence::set_epoch`]): a follower adopts it so
+//! that its own `promote` provably exceeds the primary's term, and the
+//! server routing these ops fences itself when a *request* names a
+//! higher epoch than its own (epoch checks live in
+//! `coordinator::server`, which owns the fence state).
 //!
 //! Tail-offset cache: serving a tail means translating a frame index
 //! into a byte offset inside a variable-length-frame file. Instead of
@@ -38,7 +48,7 @@ use crate::persist::wal::read_wal_tail;
 use crate::persist::Persistence;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
-use std::io::Write;
+use std::io::{Read, Write};
 use std::sync::atomic::Ordering;
 
 /// Retries against a rotation sliding under a serve path. Rotations take
@@ -47,33 +57,46 @@ use std::sync::atomic::Ordering;
 /// rewriting the data dir under us and we should error out.
 const ROTATION_RACE_RETRIES: usize = 8;
 
-/// A consistent snapshot bundle: the generation's arenas plus the seq
-/// anchoring a follower needs to start pulling the tail.
-pub struct SnapshotPayload {
+/// Copy-buffer size for streaming snapshot shards to the wire — the
+/// whole resident cost of serving a bootstrap, however large the corpus.
+const SNAPSHOT_CHUNK: usize = 256 << 10;
+
+/// A consistent snapshot *source*: open file handles on the
+/// generation's arenas plus the seq/epoch anchoring a follower needs to
+/// start pulling the tail. Holding open handles (rather than buffered
+/// bytes) is what makes serving O(chunk) in memory: a rotation may
+/// unlink these files mid-transfer, but an unlinked open file keeps its
+/// (immutable, fully-fsynced) contents until the handle drops.
+pub struct SnapshotStream {
     pub generation: u64,
+    pub epoch: u64,
     pub base_seqs: Vec<u64>,
-    /// Verbatim `snap-G-shard-i.bin` file bytes (empty at generation 0 —
-    /// a fresh primary has no snapshot and the follower starts empty).
-    pub shards: Vec<Vec<u8>>,
+    /// Per-shard `snap-G-shard-i.bin` handles with their byte sizes
+    /// (`None`/0 at generation 0 — a fresh primary has no snapshot and
+    /// the follower starts empty).
+    files: Vec<Option<std::fs::File>>,
+    sizes: Vec<u64>,
 }
 
-/// Assemble a consistent [`SnapshotPayload`] from the live data dir.
-///
-/// The whole payload is buffered in memory so the generation re-check
-/// can reject a mid-read rotation before a single byte reaches the wire;
-/// at very large corpora that is one full corpus image per concurrent
-/// bootstrap, and streaming shard-by-shard (sizes first, re-check last)
-/// is the known follow-on (ROADMAP).
-pub fn snapshot_payload(p: &Persistence) -> Result<SnapshotPayload> {
+/// Open a consistent [`SnapshotStream`] over the live data dir. The
+/// generation re-check after the opens rejects a mid-open rotation
+/// before the header commits to any sizes; once the handles exist the
+/// transfer cannot race anything (see [`SnapshotStream`]).
+fn snapshot_stream(p: &Persistence) -> Result<SnapshotStream> {
     let num_shards = p.num_shards();
     for _ in 0..ROTATION_RACE_RETRIES {
         let view = p.seq_view();
-        let mut shards = Vec::with_capacity(num_shards);
+        let mut files = Vec::with_capacity(num_shards);
+        let mut sizes = Vec::with_capacity(num_shards);
         if view.generation > 0 {
             let mut raced = false;
             for si in 0..num_shards {
-                match std::fs::read(snap_path(p.data_dir(), view.generation, si)) {
-                    Ok(bytes) => shards.push(bytes),
+                match std::fs::File::open(snap_path(p.data_dir(), view.generation, si)) {
+                    Ok(f) => {
+                        let len = f.metadata().map(|m| m.len()).unwrap_or(0);
+                        files.push(Some(f));
+                        sizes.push(len);
+                    }
                     Err(_) => {
                         raced = true; // rotation GC'd this generation
                         break;
@@ -84,17 +107,20 @@ pub fn snapshot_payload(p: &Persistence) -> Result<SnapshotPayload> {
                 continue;
             }
         } else {
-            shards = vec![Vec::new(); num_shards];
+            files = (0..num_shards).map(|_| None).collect();
+            sizes = vec![0; num_shards];
         }
         if p.generation() == view.generation {
-            return Ok(SnapshotPayload {
+            return Ok(SnapshotStream {
                 generation: view.generation,
+                epoch: p.epoch(),
                 base_seqs: view.base_seqs,
-                shards,
+                files,
+                sizes,
             });
         }
     }
-    bail!("snapshot payload raced repeated rotations; ask again")
+    bail!("snapshot stream raced repeated rotations; ask again")
 }
 
 /// One `repl_wal_tail` answer.
@@ -239,24 +265,38 @@ pub fn serve_snapshot<W: Write>(
     let Some(p) = persistence_for(store, writer)? else {
         return Ok(());
     };
-    match snapshot_payload(p) {
-        Ok(payload) => {
+    match snapshot_stream(p) {
+        Ok(mut stream) => {
             let fp = p.fingerprint();
-            let shard_bytes: Vec<usize> = payload.shards.iter().map(|b| b.len()).collect();
+            let shard_bytes: Vec<usize> = stream.sizes.iter().map(|b| *b as usize).collect();
             let header = Json::obj(vec![
                 ("ok", Json::Bool(true)),
-                ("generation", Json::Num(payload.generation as f64)),
+                ("generation", Json::Num(stream.generation as f64)),
+                ("epoch", Json::Str(stream.epoch.to_string())),
                 ("num_shards", Json::Num(fp.num_shards as f64)),
                 ("sketch_dim", Json::Num(fp.sketch_dim as f64)),
                 ("seed", Json::Str(fp.seed.to_string())),
                 ("input_dim", Json::Num(fp.input_dim as f64)),
                 ("num_categories", Json::Num(fp.num_categories as f64)),
-                ("base_seqs", seq_strings(&payload.base_seqs)),
+                ("base_seqs", seq_strings(&stream.base_seqs)),
                 ("shard_bytes", Json::from_usizes(&shard_bytes)),
             ]);
             writeln!(writer, "{header}")?;
-            for shard in &payload.shards {
-                writer.write_all(shard)?;
+            // stream shard-by-shard in bounded chunks: resident cost is
+            // one chunk, not one corpus image per concurrent bootstrap
+            let mut chunk = vec![0u8; SNAPSHOT_CHUNK];
+            for (si, file) in stream.files.iter_mut().enumerate() {
+                // chaos site: a torn snapshot transfer — die between
+                // shards, after the header promised all their sizes
+                crate::fault::check_io("ship_snapshot_shard")?;
+                let Some(f) = file else { continue };
+                let mut left = stream.sizes[si] as usize;
+                while left > 0 {
+                    let want = left.min(chunk.len());
+                    f.read_exact(&mut chunk[..want])?;
+                    writer.write_all(&chunk[..want])?;
+                    left -= want;
+                }
             }
             writer.flush()?;
             counters.snapshots_served.fetch_add(1, Ordering::Relaxed);
@@ -295,8 +335,17 @@ pub fn serve_wal_tail<W: Write>(
                 ("frames", Json::Num(frames as f64)),
                 ("bytes", Json::Num(bytes.len() as f64)),
                 ("live_seq", Json::Str(live_seq.to_string())),
+                ("epoch", Json::Str(p.epoch().to_string())),
             ]);
             writeln!(writer, "{header}")?;
+            // chaos site: a torn frame transfer — ship half the
+            // promised bytes, then die. The follower applies only the
+            // whole frames it can checksum and re-requests the rest.
+            if let Err(e) = crate::fault::check("ship_frames") {
+                writer.write_all(&bytes[..bytes.len() / 2])?;
+                writer.flush()?;
+                return Err(std::io::Error::new(std::io::ErrorKind::Other, e));
+            }
             writer.write_all(&bytes)?;
             writer.flush()?;
             counters.tails_served.fetch_add(1, Ordering::Relaxed);

@@ -1,0 +1,368 @@
+//! Chaos failover lanes: two real processes, deterministic fault
+//! injection, and the epoch-fencing contract under partitions, torn
+//! transfers and `kill -9`.
+//!
+//! Every test here is gated on `CABIN_CHAOS=1` (the scheduled CI chaos
+//! lane sets it; `cargo test` tier-1 skips them in milliseconds) because
+//! each one spawns the release binary, drives real TCP, and waits on
+//! real probe timers.
+//!
+//! Fault injection uses [`cabin::fault`]'s external arming paths:
+//! `CABIN_FAILPOINTS` (fixed for the child's lifetime — torn transfers,
+//! slow sockets) and `CABIN_FAILPOINTS_FILE` (re-read on change — the
+//! partition/heal lever: rewriting the file partitions a *running*
+//! primary, truncating it heals).
+//!
+//! The scenarios:
+//!
+//! 1. **Split brain**: partition a primary under an `--auto-promote`
+//!    follower; the follower self-promotes at a bumped epoch; the healed
+//!    old primary fences itself on the first epoch-gossiping contact and
+//!    rejoins as a follower. Two writable primaries never both ack.
+//! 2. **Torn transfer**: inject shipper failures mid-snapshot and
+//!    mid-tail; the follower retries through them to bit-identical
+//!    convergence.
+//! 3. **Slow ≠ dead**: a primary answering within the probe budget —
+//!    slowly — is never promoted over.
+//! 4. **Kill -9 + auto-promote**: hard-kill the primary; the follower
+//!    self-promotes losing no acknowledged insert.
+
+use cabin::coordinator::client::{Client, MultiClient};
+use cabin::data::CatVector;
+use cabin::testing::TempDir;
+use cabin::util::rng::Xoshiro256;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+const DIM: usize = 400;
+const SHARDS: usize = 2;
+
+fn chaos_enabled() -> bool {
+    if std::env::var("CABIN_CHAOS").ok().as_deref() == Some("1") {
+        return true;
+    }
+    eprintln!("chaos lane skipped (set CABIN_CHAOS=1 to run)");
+    false
+}
+
+/// Kills the child on drop so a failing assert can't leak a server.
+struct ServerProc {
+    child: Child,
+    pub addr: String,
+}
+
+impl ServerProc {
+    /// Spawn the real binary with the pinned corpus shape, extra args,
+    /// and extra environment (the failpoint arming channel).
+    fn spawn(
+        data_dir: &std::path::Path,
+        extra_args: &[&str],
+        envs: &[(&str, &str)],
+    ) -> ServerProc {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_cabin"));
+        cmd.args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--dim",
+            "400",
+            "--categories",
+            "8",
+            "--sketch-dim",
+            "128",
+            "--seed",
+            "3",
+            "--shards",
+            "2",
+            "--no-xla=true",
+            "--max-delay-ms",
+            "1",
+            "--fsync",
+            "never",
+        ])
+        .args(extra_args)
+        .arg("--data-dir")
+        .arg(data_dir)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null());
+        for (k, v) in envs {
+            cmd.env(k, v);
+        }
+        let mut child = cmd.spawn().expect("spawn cabin serve");
+        let stdout = child.stdout.take().expect("child stdout");
+        let mut lines = BufReader::new(stdout).lines();
+        let addr = loop {
+            let line = lines
+                .next()
+                .expect("server exited before binding")
+                .expect("read server stdout");
+            if let Some(bound) = line.strip_prefix("[serve] bound ") {
+                break bound.trim().to_string();
+            }
+        };
+        std::thread::spawn(move || for _ in lines {});
+        ServerProc { child, addr }
+    }
+
+    /// Hard stop: SIGKILL, no shutdown request, no flush.
+    fn kill9(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        self.kill9();
+    }
+}
+
+/// Aggressive-but-realistic probe settings: dead in ~300 ms, while a
+/// probe answering inside 2 s still counts as healthy.
+const AUTO_PROMOTE: &[&str] = &[
+    "--auto-promote",
+    "--probe-interval-ms",
+    "100",
+    "--probe-timeout-ms",
+    "2000",
+    "--probe-failures",
+    "3",
+];
+
+fn vectors(seed: u64, n: usize) -> Vec<CatVector> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| CatVector::random(DIM, 50, 8, &mut rng)).collect()
+}
+
+fn ingest(c: &mut Client, pts: &[CatVector]) -> Vec<(usize, CatVector)> {
+    pts.iter()
+        .map(|v| (c.insert(v.clone()).expect("insert"), v.clone()))
+        .collect()
+}
+
+fn assert_serves_exactly(c: &mut Client, acked: &[(usize, CatVector)]) {
+    for (id, v) in acked {
+        let hits = c.query(v.clone(), 1).expect("query");
+        assert_eq!(hits[0].id, *id, "id {id} lost");
+        assert!(hits[0].dist < 1e-9, "id {id} corrupted (dist {})", hits[0].dist);
+    }
+}
+
+/// Poll one stats field until `pred` holds (chaos-scale 60 s deadline).
+fn wait_stat(c: &mut Client, field: &str, pred: impl Fn(f64) -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let v = c.stat(field).unwrap_or(f64::NAN);
+        if pred(v) {
+            return;
+        }
+        assert!(Instant::now() < deadline, "{what}: {field} stuck at {v}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Poll both processes until their per-shard durable seq horizons agree.
+fn wait_parity(a: &mut Client, b: &mut Client) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let equal = (0..SHARDS).all(|si| {
+            let field = format!("persist_next_seq_shard{si}");
+            a.stat(&field).unwrap() == b.stat(&field).unwrap()
+        });
+        if equal {
+            return;
+        }
+        assert!(Instant::now() < deadline, "seq parity never reached");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[test]
+fn split_brain_partition_promotes_fences_and_rejoins() {
+    if !chaos_enabled() {
+        return;
+    }
+    let dir_p = TempDir::new("chaos-split-primary");
+    let dir_f = TempDir::new("chaos-split-follower");
+    // the partition lever: a failpoint file the test rewrites while the
+    // primary runs
+    let fp_file = dir_p.path().join("failpoints.txt");
+    std::fs::write(&fp_file, "").unwrap();
+    let mut primary = ServerProc::spawn(
+        dir_p.path(),
+        &[],
+        &[("CABIN_FAILPOINTS_FILE", fp_file.to_str().unwrap())],
+    );
+    let mut pc = Client::connect(&primary.addr).expect("connect primary");
+    let pts = vectors(11, 24);
+    let mut acked = ingest(&mut pc, &pts);
+
+    let mut follower_args = vec!["--replicate-from", primary.addr.as_str()];
+    follower_args.extend_from_slice(AUTO_PROMOTE);
+    let follower = ServerProc::spawn(dir_f.path(), &follower_args, &[]);
+    let mut fc = Client::connect(&follower.addr).expect("connect follower");
+    wait_parity(&mut pc, &mut fc);
+    assert_eq!(fc.stat("repl_role").unwrap(), 1.0);
+
+    // the resilient client follows the replica's write redirect to the
+    // primary and learns the epoch from the ack
+    let mut mc = MultiClient::new(&follower.addr, &[]);
+    let extra = vectors(12, 2);
+    for v in &extra {
+        acked.push((mc.insert(v.clone()).expect("redirected insert"), v.clone()));
+    }
+    assert_eq!(mc.primary(), primary.addr, "redirect must re-aim the client");
+    assert_eq!(mc.last_epoch(), 1, "acks carry the primary's epoch");
+    wait_parity(&mut pc, &mut fc);
+
+    // PARTITION: the primary refuses new connections and tears existing
+    // ones — dead from the prober's point of view
+    std::fs::write(&fp_file, "accept=err\nconn_read=err\n").unwrap();
+    wait_stat(&mut fc, "repl_role", |v| v == 2.0, "auto-promote after partition");
+    assert_eq!(fc.stat("repl_epoch").unwrap(), 2.0, "promotion bumps the epoch");
+    assert_eq!(fc.stat("failover_promotions").unwrap(), 1.0);
+    assert!(fc.stat("failover_probe_failures").unwrap() >= 3.0);
+
+    // the new primary acks writes, continuing the id line
+    let next = vectors(13, 3);
+    for v in &next {
+        acked.push((fc.insert(v.clone()).expect("insert on new primary"), v.clone()));
+    }
+    assert_eq!(acked.last().unwrap().0, acked.len() - 1, "id line continued");
+
+    // HEAL. The old primary revives un-fenced — until the first contact
+    // carrying the newer epoch, after which it must reject every write,
+    // durably, across its own restarts.
+    std::fs::write(&fp_file, "").unwrap();
+    let mut pc2 = Client::connect(&primary.addr).expect("reconnect old primary");
+    assert_eq!(pc2.ping_epoch(Some(2)).expect("gossip ping"), Some(1));
+    let err = pc2.insert(pts[0].clone()).unwrap_err().to_string();
+    assert!(err.contains("fenced"), "{err}");
+    assert!(err.contains("epoch 2"), "{err}");
+    assert_eq!(pc2.stat("failover_fenced").unwrap(), 2.0);
+    assert_eq!(pc2.stat("failover_fence_events").unwrap(), 1.0);
+
+    // REJOIN: restart the fenced ex-primary as a follower of the new
+    // primary — the fence clears, the epoch is adopted from the stream,
+    // and it converges to the post-failover corpus
+    primary.kill9();
+    let mut rejoin_args = vec!["--replicate-from", follower.addr.as_str()];
+    rejoin_args.extend_from_slice(&["--repl-poll-ms", "2"]);
+    let rejoined = ServerProc::spawn(dir_p.path(), &rejoin_args, &[]);
+    let mut rc = Client::connect(&rejoined.addr).expect("connect rejoined");
+    wait_parity(&mut fc, &mut rc);
+    assert_eq!(rc.stat("repl_role").unwrap(), 1.0);
+    wait_stat(&mut rc, "repl_epoch", |v| v == 2.0, "epoch adopted on rejoin");
+    assert_eq!(rc.stat("failover_fenced").unwrap(), 0.0, "fence cleared by rejoin");
+
+    // nothing acked was lost, anywhere, and reads agree bit-identically
+    assert_serves_exactly(&mut fc, &acked);
+    assert_serves_exactly(&mut rc, &acked);
+    let probes: Vec<CatVector> = acked.iter().step_by(5).map(|(_, v)| v.clone()).collect();
+    assert_eq!(
+        fc.query_batch(probes.clone(), 5).unwrap(),
+        rc.query_batch(probes, 5).unwrap(),
+        "rejoined follower diverges from the new primary"
+    );
+    let _ = fc.shutdown();
+}
+
+#[test]
+fn torn_transfers_retry_to_bit_identical_convergence() {
+    if !chaos_enabled() {
+        return;
+    }
+    let dir_p = TempDir::new("chaos-torn-primary");
+    let dir_f = TempDir::new("chaos-torn-follower");
+    // the primary tears the first snapshot shard stream and the next two
+    // frame ships; the follower must retry through all three
+    let mut primary = ServerProc::spawn(
+        dir_p.path(),
+        &[],
+        &[("CABIN_FAILPOINTS", "ship_snapshot_shard=err:1,ship_frames=err:2")],
+    );
+    let mut pc = Client::connect(&primary.addr).expect("connect primary");
+    let acked = ingest(&mut pc, &vectors(21, 30));
+    let follower = ServerProc::spawn(
+        dir_f.path(),
+        &["--replicate-from", primary.addr.as_str()],
+        &[],
+    );
+    let mut fc = Client::connect(&follower.addr).expect("connect follower");
+    wait_parity(&mut pc, &mut fc);
+    assert_eq!(fc.stat("repl_diverged").unwrap(), 0.0);
+    assert_serves_exactly(&mut fc, &acked);
+    let probes: Vec<CatVector> = acked.iter().step_by(3).map(|(_, v)| v.clone()).collect();
+    assert_eq!(
+        pc.query_batch(probes.clone(), 5).unwrap(),
+        fc.query_batch(probes, 5).unwrap(),
+        "post-tear follower diverges from the primary"
+    );
+    let _ = fc.shutdown();
+    let _ = pc.shutdown();
+    primary.kill9();
+}
+
+#[test]
+fn slow_primary_is_never_promoted_over() {
+    if !chaos_enabled() {
+        return;
+    }
+    let dir_p = TempDir::new("chaos-slow-primary");
+    let dir_f = TempDir::new("chaos-slow-follower");
+    // every request read on the primary dawdles 300 ms — far over any
+    // healthy latency, far under the 2 s probe budget
+    let mut primary = ServerProc::spawn(
+        dir_p.path(),
+        &[],
+        &[("CABIN_FAILPOINTS", "conn_read=sleep:300")],
+    );
+    let mut pc = Client::connect(&primary.addr).expect("connect primary");
+    ingest(&mut pc, &vectors(31, 4));
+    let mut follower_args = vec!["--replicate-from", primary.addr.as_str()];
+    follower_args.extend_from_slice(AUTO_PROMOTE);
+    let follower = ServerProc::spawn(dir_f.path(), &follower_args, &[]);
+    let mut fc = Client::connect(&follower.addr).expect("connect follower");
+    // let a good number of slow probes land
+    wait_stat(&mut fc, "failover_probes", |v| v >= 8.0, "probes under slowness");
+    assert_eq!(
+        fc.stat("failover_promotions").unwrap(),
+        0.0,
+        "a slow primary answering within the budget must never be promoted over"
+    );
+    assert_eq!(fc.stat("failover_probe_failures").unwrap(), 0.0);
+    assert_eq!(fc.stat("repl_role").unwrap(), 1.0);
+    primary.kill9();
+}
+
+#[test]
+fn kill9_primary_auto_promotes_losing_no_acked_insert() {
+    if !chaos_enabled() {
+        return;
+    }
+    let dir_p = TempDir::new("chaos-kill9-primary");
+    let dir_f = TempDir::new("chaos-kill9-follower");
+    let mut primary = ServerProc::spawn(dir_p.path(), &[], &[]);
+    let mut pc = Client::connect(&primary.addr).expect("connect primary");
+    let mut acked = ingest(&mut pc, &vectors(41, 40));
+    let mut follower_args = vec!["--replicate-from", primary.addr.as_str()];
+    follower_args.extend_from_slice(AUTO_PROMOTE);
+    let follower = ServerProc::spawn(dir_f.path(), &follower_args, &[]);
+    let mut fc = Client::connect(&follower.addr).expect("connect follower");
+    wait_parity(&mut pc, &mut fc);
+    // the primary dies with no teardown whatsoever
+    primary.kill9();
+    wait_stat(&mut fc, "repl_role", |v| v == 2.0, "auto-promote after kill -9");
+    assert_eq!(fc.stat("repl_epoch").unwrap(), 2.0);
+    assert_eq!(fc.stat("failover_promotions").unwrap(), 1.0);
+    // LOSES NOTHING: every insert the dead primary acked answers exactly
+    assert_serves_exactly(&mut fc, &acked);
+    // and the id line continues on the survivor
+    let v = vectors(42, 1).pop().unwrap();
+    let id = fc.insert(v.clone()).expect("insert on survivor");
+    assert_eq!(id, acked.len());
+    acked.push((id, v));
+    assert_serves_exactly(&mut fc, &acked);
+    let _ = fc.shutdown();
+}

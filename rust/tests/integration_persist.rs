@@ -10,7 +10,7 @@
 use cabin::coordinator::client::Client;
 use cabin::coordinator::router::{self, QueryOpts};
 use cabin::coordinator::store::ShardedStore;
-use cabin::coordinator::{Coordinator, CoordinatorConfig, ExecutorConfig};
+use cabin::coordinator::{Coordinator, CoordinatorConfig, ExecutorConfig, WriteOpts};
 use cabin::index::{IndexConfig, IndexMode};
 use cabin::persist::manifest::wal_path;
 use cabin::persist::{Fingerprint, FsyncPolicy, PersistConfig, PersistCounters, PersistMode};
@@ -362,8 +362,8 @@ fn compaction_rotation_preserves_recovery_exactly() {
         }
         c.delete(ids[3]).unwrap();
         c.delete(ids[11]).unwrap();
-        c.upsert(ids[7], pts[20].clone(), 0).unwrap();
-        c.upsert(ids[15], pts[21].clone(), 0).unwrap();
+        c.upsert_with(ids[7], pts[20].clone(), &WriteOpts::default()).unwrap();
+        c.upsert_with(ids[15], pts[21].clone(), &WriteOpts::default()).unwrap();
         for p in &pts[22..24] {
             ids.push(c.insert(p.clone()).unwrap());
         }

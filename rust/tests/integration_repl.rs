@@ -10,7 +10,7 @@
 //! live in `soak_recovery.rs`.
 
 use cabin::coordinator::client::Client;
-use cabin::coordinator::{Coordinator, CoordinatorConfig};
+use cabin::coordinator::{Coordinator, CoordinatorConfig, WriteOpts};
 use cabin::data::CatVector;
 use cabin::persist::{FsyncPolicy, PersistConfig, PersistMode};
 use cabin::replica::shipper::{self, Tail};
@@ -181,9 +181,9 @@ fn follower_mirrors_mixed_mutation_stream_bit_identically() {
     // the live tail is a mixed mutation stream
     pc.delete(ids[2]).unwrap();
     pc.delete(ids[13]).unwrap();
-    pc.upsert(ids[5], pts[24].clone(), 0).unwrap();
-    pc.upsert(ids[17], pts[25].clone(), 0).unwrap();
-    let ttl_id = pc.insert_ttl(pts[26].clone(), 1).unwrap();
+    pc.upsert_with(ids[5], pts[24].clone(), &WriteOpts::default()).unwrap();
+    pc.upsert_with(ids[17], pts[25].clone(), &WriteOpts::default()).unwrap();
+    let ttl_id = pc.insert_with(pts[26].clone(), &WriteOpts::ttl(1)).unwrap();
     for v in &pts[27..33] {
         pc.insert(v.clone()).unwrap();
     }
@@ -220,8 +220,12 @@ fn follower_mirrors_mixed_mutation_stream_bit_identically() {
     // the read-only redirect covers every write op
     for err in [
         fc.delete(ids[0]).unwrap_err().to_string(),
-        fc.upsert(ids[0], pts[27].clone(), 0).unwrap_err().to_string(),
-        fc.insert_ttl(pts[27].clone(), 5_000).unwrap_err().to_string(),
+        fc.upsert_with(ids[0], pts[27].clone(), &WriteOpts::default())
+            .unwrap_err()
+            .to_string(),
+        fc.insert_with(pts[27].clone(), &WriteOpts::ttl(5_000))
+            .unwrap_err()
+            .to_string(),
     ] {
         assert!(err.contains("read-only replica"), "{err}");
     }
@@ -264,10 +268,12 @@ fn follower_restart_resumes_and_promotion_flips_writable() {
         1.0,
         "a resumed follower must not re-bootstrap"
     );
-    let applied = fc.promote().unwrap();
+    let (applied, epoch) = fc.promote().unwrap();
     assert_eq!(applied.len(), SHARDS);
     assert_eq!(applied.iter().sum::<u64>(), 30, "30 insert frames applied");
+    assert_eq!(epoch, 2, "promotion bumps past the primary's epoch 1");
     assert_eq!(fc.stat("repl_role").unwrap(), 2.0);
+    assert_eq!(fc.stat("repl_epoch").unwrap(), 2.0);
     // promoted: inserts continue the primary's id line
     let novel = vectors(4, 3);
     let id = fc.insert(novel[0].clone()).unwrap();
@@ -275,8 +281,10 @@ fn follower_restart_resumes_and_promotion_flips_writable() {
     let hits = fc.query(novel[0].clone(), 1).unwrap();
     assert_eq!(hits[0].id, id);
     assert!(hits[0].dist < 1e-9);
-    // promote is idempotent
-    assert_eq!(fc.promote().unwrap().len(), SHARDS);
+    // promote is idempotent — and does not bump the epoch twice
+    let (again, epoch_again) = fc.promote().unwrap();
+    assert_eq!(again.len(), SHARDS);
+    assert_eq!(epoch_again, epoch, "re-promoting must not bump the epoch");
     // pre-promotion corpus still served exactly
     for (i, v) in pts.iter().enumerate() {
         let hits = fc.query(v.clone(), 1).unwrap();
@@ -352,9 +360,9 @@ fn repl_ops_and_replicas_fail_descriptively_without_persistence() {
     };
     let (addr, _c, handle) = serve(cfg);
     let mut rc = cabin::replica::follower::ReplClient::connect(&addr.to_string()).unwrap();
-    let err = rc.fetch_snapshot().unwrap_err().to_string();
+    let err = rc.fetch_snapshot_meta().unwrap_err().to_string();
     assert!(err.contains("--data-dir"), "{err}");
-    let err = rc.fetch_tail(0, 0, 4096).unwrap_err().to_string();
+    let err = rc.fetch_tail(0, 0, 4096, None).unwrap_err().to_string();
     assert!(err.contains("--data-dir"), "{err}");
     // a mismatched replica configuration is refused at bootstrap with the
     // offending fields named

@@ -18,10 +18,12 @@
 //!
 //! The fixture files are the compat contract for the wire surface —
 //! `tools/api_surface.py` fails CI when they change without
-//! `docs/PROTOCOL.md` changing in the same commit. Old spellings they
-//! pin (the raw `"op"` stream forms, the relative `ttl_ms` insert, the
-//! flat string-keyed stats object) must keep answering until the
-//! deprecation window documented there closes.
+//! `docs/PROTOCOL.md` changing in the same commit. Living old spellings
+//! they pin (the relative `ttl_ms` insert, the flat string-keyed stats
+//! object) must keep answering until the deprecation window documented
+//! there closes; the raw `"op"` stream forms' window closed in PR 9, so
+//! the fixtures now pin their `unknown op` rejection instead — and pin
+//! that pre-epoch acks/pongs stay byte-identical on non-durable servers.
 
 use cabin::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
 use cabin::util::json::{self, Json};

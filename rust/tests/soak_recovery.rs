@@ -12,6 +12,7 @@
 //! sets `CABIN_SOAK=1` for more rounds with a larger corpus.
 
 use cabin::coordinator::client::Client;
+use cabin::coordinator::WriteOpts;
 use cabin::data::CatVector;
 use cabin::testing::TempDir;
 use cabin::util::rng::Xoshiro256;
@@ -252,10 +253,10 @@ fn kill9_mid_mixed_mutation_stream_recovers_every_acked_write() {
                 dead.push(id);
             } else if i % 7 == 5 && !live.is_empty() {
                 let &id = live.keys().next_back().unwrap();
-                c.upsert(id, v.clone(), 0).expect("upsert");
+                c.upsert_with(id, v.clone(), &WriteOpts::default()).expect("upsert");
                 live.insert(id, v);
             } else if i % 7 == 6 {
-                ttl_ids.push(c.insert_ttl(v, 1).expect("insert_ttl"));
+                ttl_ids.push(c.insert_with(v, &WriteOpts::ttl(1)).expect("insert_ttl"));
             } else {
                 let id = c.insert(v.clone()).expect("insert");
                 live.insert(id, v);
@@ -348,8 +349,9 @@ fn replication_follower_survives_kill9_and_promotes_losing_no_acked_insert() {
     assert_eq!(fc.stat("repl_diverged").unwrap(), 0.0);
     // the primary dies hard; the caught-up follower takes over
     primary.kill9();
-    let applied = fc.promote().expect("promote");
+    let (applied, epoch) = fc.promote().expect("promote");
     assert_eq!(applied.len(), SHARDS);
+    assert_eq!(epoch, 2, "promotion must bump past the dead primary's epoch");
     assert_eq!(fc.stat("repl_role").unwrap(), 2.0);
     // LOSES NOTHING: every insert the dead primary ever acked answers
     // exactly on the promoted follower (sampled in soak mode for time)

@@ -446,6 +446,14 @@ fn flush(
     if pending.is_empty() {
         return;
     }
+    // Failpoint (after the empty-check so shutdown's drain flush of an
+    // empty queue never trips it): an injected error *defers* the flush —
+    // the items stay queued and the caller's loop retries, modelling a
+    // transient stall without dropping replies. A `sleep` kind delays
+    // inline, the way a slow sketching backend would.
+    if crate::fault::check("batcher_flush").is_err() {
+        return;
+    }
     metrics.batches_flushed.fetch_add(1, Ordering::Relaxed);
     metrics
         .batch_items
@@ -618,6 +626,18 @@ fn note_slow_write(p: &Pending, total_s: f64, timing: BatchTiming, fsync_s: f64,
             ("place_ms", obs_log::V::f(timing.place_s * 1e3)),
             ("fsync_wait_ms", obs_log::V::f(fsync_s * 1e3)),
             ("batch", obs_log::V::u(batch_len as u64)),
+        ],
+    );
+    // Flight-recorder copy: the ring survives log scraping gaps and is
+    // dumpable post-hoc over the wire (`events`), so a slow write is
+    // findable by trace id even after stderr rotated away.
+    crate::obs::journal::record(
+        "batcher",
+        "slow_op",
+        &[
+            ("op", obs_log::V::s(p.op.kind())),
+            ("trace", obs_log::V::u(p.trace)),
+            ("total_ms", obs_log::V::f(total_s * 1e3)),
         ],
     );
 }

@@ -88,6 +88,12 @@ fn parse_redirect(message: &str) -> Option<&str> {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Trace id attached to every request this connection sends (0 =
+    /// none: requests stay byte-identical to the trace-less wire and the
+    /// server stamps its own id). Set one to correlate this client's ops
+    /// across the server's JSONL logs — and, for replicated writes,
+    /// across the follower's logs too.
+    trace: u64,
 }
 
 impl Client {
@@ -128,11 +134,26 @@ impl Client {
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
+            trace: 0,
         })
     }
 
+    /// Builder form of [`Client::set_trace`]:
+    /// `Client::connect(addr)?.with_trace(id)`.
+    pub fn with_trace(mut self, trace: u64) -> Client {
+        self.trace = trace;
+        self
+    }
+
+    /// Attach `trace` to every subsequent request (0 clears it). The
+    /// server logs ops under this id instead of stamping its own, so one
+    /// grep finds this client's story — see `docs/OBSERVABILITY.md`.
+    pub fn set_trace(&mut self, trace: u64) {
+        self.trace = trace;
+    }
+
     pub fn call(&mut self, req: &Request) -> Result<Response> {
-        writeln!(self.writer, "{}", req.to_json_line())?;
+        writeln!(self.writer, "{}", req.to_json_line_with(self.trace))?;
         let mut line = String::new();
         let n = self.reader.read_line(&mut line)?;
         if n == 0 {
@@ -272,6 +293,31 @@ impl Client {
         String::from_utf8(body).context("metrics_text payload is not UTF-8")
     }
 
+    /// Dump the server's flight-recorder event journal (`events` stream
+    /// op): one JSON object per line, oldest first — startup, promote,
+    /// fence, slow-op and failure lifecycle events with their seqs and
+    /// wall-clock stamps. Same header-then-payload framing as
+    /// [`Client::metrics_text`].
+    pub fn events(&mut self) -> Result<String> {
+        writeln!(self.writer, "{}", StreamRequest::Events.to_json_line())?;
+        let mut header = String::new();
+        let n = self.reader.read_line(&mut header)?;
+        if n == 0 {
+            bail!("server closed connection");
+        }
+        let h = crate::util::json::parse(header.trim()).context("events header")?;
+        if h.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            bail!(
+                "events failed: {}",
+                h.get("error").and_then(|e| e.as_str()).unwrap_or("unknown")
+            );
+        }
+        let bytes = h.req_usize("bytes")?;
+        let mut body = vec![0u8; bytes];
+        self.reader.read_exact(&mut body)?;
+        String::from_utf8(body).context("events payload is not UTF-8")
+    }
+
     /// Fsync every shard WAL on the server (durable servers only) — after
     /// this returns, every acknowledged insert is on disk even under
     /// `--fsync never`.
@@ -371,6 +417,11 @@ pub struct MultiClient {
     write_conn: Option<Client>,
     read_conns: Vec<Option<Client>>,
     rng: Xoshiro256,
+    /// Trace id inherited by every connection this client opens — which
+    /// is what keeps the id stable across retries, reconnects and
+    /// redirect hops: the op that finally lands on the new primary logs
+    /// under the same trace as the attempt that was redirected.
+    trace: u64,
 }
 
 impl MultiClient {
@@ -396,6 +447,26 @@ impl MultiClient {
             write_conn: None,
             read_conns: replicas.iter().map(|_| None).collect(),
             rng: Xoshiro256::new(seed),
+            trace: 0,
+        }
+    }
+
+    /// Builder form of [`MultiClient::set_trace`].
+    pub fn with_trace(mut self, trace: u64) -> MultiClient {
+        self.trace = trace;
+        self
+    }
+
+    /// Attach `trace` to every subsequent request, surviving retries,
+    /// reconnects and redirect hops (0 clears it). Existing connections
+    /// pick it up immediately.
+    pub fn set_trace(&mut self, trace: u64) {
+        self.trace = trace;
+        if let Some(c) = &mut self.write_conn {
+            c.set_trace(trace);
+        }
+        for c in self.read_conns.iter_mut().flatten() {
+            c.set_trace(trace);
         }
     }
 
@@ -433,7 +504,8 @@ impl MultiClient {
         loop {
             let res = (|| -> Result<Response> {
                 if self.write_conn.is_none() {
-                    let mut conn = Client::connect_with(&self.primary, &self.cfg)?;
+                    let mut conn =
+                        Client::connect_with(&self.primary, &self.cfg)?.with_trace(self.trace);
                     let gossip = match self.last_epoch {
                         0 => None,
                         e => Some(e),
@@ -493,8 +565,10 @@ impl MultiClient {
             self.next_read = self.next_read.wrapping_add(1);
             let res = (|| -> Result<Response> {
                 if self.read_conns[idx].is_none() {
-                    self.read_conns[idx] =
-                        Some(Client::connect_with(&self.replicas[idx], &self.cfg)?);
+                    self.read_conns[idx] = Some(
+                        Client::connect_with(&self.replicas[idx], &self.cfg)?
+                            .with_trace(self.trace),
+                    );
                 }
                 self.read_conns[idx].as_mut().unwrap().call(req)
             })();

@@ -35,8 +35,13 @@
 //!   scatter and contained-panic totals land in [`ExecutorCounters`],
 //!   surfaced as `executor_*` fields of the `stats` response (a nonzero
 //!   `executor_job_panics` means some job crashed and was papered over —
-//!   alert on it). Panics also emit a structured `executor/job_panicked`
-//!   log event.
+//!   alert on it). Per-shard queue depth and its high-water mark are
+//!   tracked for the first `TRACKED_SHARDS` shards
+//!   (`executor_queue_hwm_shard{i}` — the hot-shard signal). Panics also
+//!   emit a structured `executor/job_panicked` log event.
+//! * **Fault injection**: `submit` passes the delay-only
+//!   `executor_submit` failpoint (see [`crate::fault`]), so tests can
+//!   stall the scatter path and assert it surfaces as a slow op.
 //!
 //! Lock discipline: a worker takes exactly one lock — its own shard's
 //! read lock, via the store's poison-recovering `read_l` — and the
@@ -124,13 +129,19 @@ impl ShardExecutor {
     /// full (backpressure). Panics if the worker is gone, which can only
     /// happen after the executor started shutting down.
     pub fn submit(&self, si: usize, job: ShardJob) {
+        // Delay-only failpoint: an injected sleep here stalls the submit
+        // path the way a saturated queue would; an `Err` kind is ignored
+        // (there is no error return to surface it through).
+        let _ = crate::fault::check("executor_submit");
         let tx = self.workers[si]
             .tx
             .as_ref()
             .expect("executor is shutting down");
         self.counters.queue_depth.fetch_add(1, Ordering::Relaxed);
+        self.counters.note_enqueue(si);
         if tx.send(job).is_err() {
             self.counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            self.counters.note_dequeue(si);
             panic!("shard {si} worker exited with jobs outstanding");
         }
     }
@@ -205,6 +216,7 @@ fn worker_loop(
     // this loop IS the graceful drain.
     while let Ok(job) = rx.recv() {
         counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        counters.note_dequeue(si);
         counters.busy_workers.fetch_add(1, Ordering::Relaxed);
         let outcome = catch_unwind(AssertUnwindSafe(|| {
             let guard = shard.read().unwrap_or_else(PoisonError::into_inner);
@@ -219,7 +231,7 @@ fn worker_loop(
                 "job_panicked",
                 &[
                     ("shard", obs_log::V::u(si as u64)),
-                    ("recovered", obs_log::V::B(true)),
+                    ("recovered", obs_log::V::b(true)),
                 ],
             );
         }
@@ -256,6 +268,11 @@ mod tests {
         assert_eq!(ex.counters().jobs.load(Ordering::Relaxed), 4);
         assert_eq!(ex.counters().queue_depth.load(Ordering::Relaxed), 0);
         assert_eq!(ex.counters().busy_workers.load(Ordering::Relaxed), 0);
+        // per-shard gauges drained, high-water mark retained
+        for si in 0..4 {
+            assert_eq!(ex.counters().per_shard_depth[si].load(Ordering::Relaxed), 0);
+            assert!(ex.counters().per_shard_hwm[si].load(Ordering::Relaxed) >= 1);
+        }
     }
 
     #[test]

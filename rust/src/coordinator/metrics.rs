@@ -15,12 +15,17 @@ use crate::replica::ReplCounters;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+/// Number of shards covered by the per-shard executor queue gauges.
+/// Shards at or beyond this index still execute normally — they just
+/// fold into the aggregate `queue_depth` gauge only.
+pub const TRACKED_SHARDS: usize = 64;
+
 /// Shard-executor runtime counters, updated by
 /// [`crate::coordinator::executor::ShardExecutor`]. `queue_depth` and
 /// `busy_workers` are gauges (current values), the rest are monotone.
 /// Arc-shared between [`Metrics`] and the store's executor, mirroring the
 /// [`PersistCounters`] pattern.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ExecutorCounters {
     /// Jobs currently sitting in shard work queues (gauge).
     pub queue_depth: AtomicU64,
@@ -35,6 +40,49 @@ pub struct ExecutorCounters {
     /// Surfaced as `executor_job_panics` — any nonzero value means a bug
     /// in a kernel or index path that the runtime papered over.
     pub job_panics: AtomicU64,
+    /// Jobs currently queued per shard (gauge, first [`TRACKED_SHARDS`]
+    /// shards).
+    pub per_shard_depth: [AtomicU64; TRACKED_SHARDS],
+    /// High-water mark of each shard's queue depth since startup. A
+    /// persistently high mark on one shard while the rest stay near zero
+    /// is the hot-shard signal. Surfaced as
+    /// `executor_queue_hwm_shard<i>` only once nonzero, so the flat
+    /// stats schema stays grow-only on a fresh process.
+    pub per_shard_hwm: [AtomicU64; TRACKED_SHARDS],
+}
+
+impl Default for ExecutorCounters {
+    // Manual impl: `[AtomicU64; 64]` is past the 32-element ceiling of
+    // the derived array `Default`.
+    fn default() -> Self {
+        Self {
+            queue_depth: AtomicU64::new(0),
+            busy_workers: AtomicU64::new(0),
+            jobs: AtomicU64::new(0),
+            scatters: AtomicU64::new(0),
+            job_panics: AtomicU64::new(0),
+            per_shard_depth: std::array::from_fn(|_| AtomicU64::new(0)),
+            per_shard_hwm: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl ExecutorCounters {
+    /// Note a job enqueued on `shard`: bumps its depth gauge and folds
+    /// the new depth into the shard's high-water mark.
+    pub fn note_enqueue(&self, shard: usize) {
+        if let Some(d) = self.per_shard_depth.get(shard) {
+            let depth = d.fetch_add(1, Ordering::Relaxed) + 1;
+            self.per_shard_hwm[shard].fetch_max(depth, Ordering::Relaxed);
+        }
+    }
+
+    /// Note a job picked up off `shard`'s queue.
+    pub fn note_dequeue(&self, shard: usize) {
+        if let Some(d) = self.per_shard_depth.get(shard) {
+            d.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
 }
 
 /// LSH-index traffic counters, recorded by the router's indexed scan path
@@ -245,6 +293,15 @@ impl Metrics {
                 crate::sketch::kernels::active().isa.code(),
             ),
         ];
+        // Per-shard executor queue high-water marks: dynamic, grow-only
+        // families — a shard's gauge appears only once its queue has ever
+        // been nonempty, so the fresh-process golden schema stays fixed.
+        for (si, hwm) in self.executor.per_shard_hwm.iter().enumerate() {
+            let v = hwm.load(Ordering::Relaxed);
+            if v > 0 {
+                out.push((format!("executor_queue_hwm_shard{si}"), v as f64));
+            }
+        }
         out.extend(self.repl.stats_fields());
         // Per-stage pipeline histograms: count, upper-edge quantiles, and
         // cumulative bucket counts at ~1ms/10ms/100ms/1s (each rounded
@@ -290,6 +347,10 @@ impl Metrics {
             .collect();
         out.push(("insert_latency".into(), self.insert_hist.snapshot()));
         out.push(("query_latency".into(), self.query_hist.snapshot()));
+        out.push((
+            "repl_visibility_lag".into(),
+            self.repl.visibility_lag.snapshot(),
+        ));
         out
     }
 
@@ -404,6 +465,36 @@ mod tests {
     }
 
     #[test]
+    fn per_shard_queue_hwm_surfaces_only_when_nonzero() {
+        let m = Metrics::new();
+        assert_eq!(stats_field(&m.snapshot(), "executor_queue_hwm_shard3"), None);
+        m.executor.note_enqueue(3);
+        m.executor.note_enqueue(3);
+        m.executor.note_dequeue(3);
+        let snap = m.snapshot();
+        assert_eq!(stats_field(&snap, "executor_queue_hwm_shard3"), Some(2.0));
+        assert_eq!(
+            m.executor.per_shard_depth[3].load(Ordering::Relaxed),
+            1,
+            "dequeue must drop the live depth gauge"
+        );
+        // Out-of-range shards fold into the aggregate only — no panic.
+        m.executor.note_enqueue(TRACKED_SHARDS + 1);
+        m.executor.note_dequeue(TRACKED_SHARDS + 1);
+    }
+
+    #[test]
+    fn visibility_lag_surfaces_in_snapshot() {
+        let m = Metrics::new();
+        m.repl.record_visibility(1, 40);
+        let snap = m.snapshot();
+        assert_eq!(stats_field(&snap, "repl_visibility_lag_count"), Some(1.0));
+        assert!(stats_field(&snap, "repl_visibility_lag_p99_ms").unwrap() >= 40.0);
+        assert_eq!(stats_field(&snap, "repl_visibility_age_ms_shard0"), Some(0.0));
+        assert_eq!(stats_field(&snap, "repl_visibility_age_ms_shard1"), Some(40.0));
+    }
+
+    #[test]
     fn executor_job_panics_surface_in_snapshot() {
         let m = Metrics::new();
         assert_eq!(
@@ -492,6 +583,9 @@ mod tests {
             "repl_move_defers",
             "repl_diverged",
             "repl_caught_up",
+            "repl_visibility_lag_count",
+            "repl_visibility_lag_p50_ms",
+            "repl_visibility_lag_p99_ms",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -533,7 +627,7 @@ mod tests {
         let m = Metrics::new();
         m.record_query_latency(0.001);
         let hists = m.histogram_snapshots();
-        assert_eq!(hists.len(), 12); // 10 stages + insert + query
+        assert_eq!(hists.len(), 13); // 10 stages + insert + query + repl visibility
         assert!(hists.iter().any(|(n, _)| n == "stage_write_fsync"));
         let q = hists.iter().find(|(n, _)| n == "query_latency").unwrap();
         assert_eq!(q.1.total, 1);

@@ -52,7 +52,7 @@
 //!
 //! ## Stream ops (framed raw payloads)
 //!
-//! Three ops reply with a JSON **header line followed by raw payload
+//! Four ops reply with a JSON **header line followed by raw payload
 //! bytes**, which [`Response`] cannot represent. They share one
 //! [`StreamRequest`] envelope — a `"stream"` key instead of `"op"`:
 //!
@@ -65,6 +65,8 @@
 //!                                              own epoch, for fencing)
 //! {"stream":"metrics_text"}                 → header {"ok":true,"bytes":N}
 //!                                             + N bytes of text/plain Prometheus exposition
+//! {"stream":"events"}                       → header {"ok":true,"bytes":N}
+//!                                             + N bytes of flight-recorder JSONL (obs::journal)
 //! ```
 //!
 //! The payload length is always carried by the header (`bytes`, or the
@@ -92,6 +94,18 @@
 //! struct through `Client::insert_with`/`upsert_with` and the batcher's
 //! options-based submit path; `WriteOpts::default()` reproduces the
 //! plain untimed, untraced write exactly.
+//!
+//! ## Trace propagation
+//!
+//! Every request line — ordinary and stream envelope alike — accepts an
+//! optional top-level `"trace"` field: a client-chosen u64 (string or
+//! numeric form, like seqs) that the server adopts instead of stamping
+//! its own per-connection trace id. The id rides batcher tickets,
+//! executor jobs, slow-op records and the structured log on whichever
+//! node handles the request, so one grep joins a request's story across
+//! primary and follower. Trace-less lines parse and answer exactly as
+//! before ([`Request::parse_with_trace`] returns `None` and the server
+//! stamps); replies never carry the field.
 
 use crate::data::CatVector;
 use crate::util::json::Json;
@@ -207,23 +221,31 @@ pub enum StreamRequest {
     /// Full snapshot of the current persisted generation (replication
     /// bootstrap): header carries the configuration fingerprint,
     /// per-shard base sequences and `shard_bytes`; the payload is the
-    /// shard snapshot files concatenated in shard order.
-    ReplSnapshot,
+    /// shard snapshot files concatenated in shard order. `trace` is the
+    /// requesting follower's session trace id, logged on the serving
+    /// side so a bootstrap is join-able across both nodes' logs.
+    ReplSnapshot { trace: Option<u64> },
     /// Raw WAL frame range for one shard starting at `from_seq`
-    /// (exclusive): header carries `frames`/`bytes`/`live_seq`/`epoch`;
-    /// the payload is `bytes` of verbatim checksummed frames. The
-    /// request-side `epoch` is the follower's own failover epoch — a
-    /// primary that sees a *higher* one fences itself (see the module
-    /// docs) instead of shipping.
+    /// (exclusive): header carries `frames`/`bytes`/`live_seq`/`epoch`/
+    /// `commit_ms`; the payload is `bytes` of verbatim checksummed
+    /// frames. The request-side `epoch` is the follower's own failover
+    /// epoch — a primary that sees a *higher* one fences itself (see
+    /// the module docs) instead of shipping. `trace` is the follower's
+    /// session trace id (see [`StreamRequest::ReplSnapshot`]).
     ReplWalTail {
         shard: usize,
         from_seq: u64,
         max_bytes: usize,
         epoch: Option<u64>,
+        trace: Option<u64>,
     },
     /// Prometheus text exposition: header `{"ok":true,"bytes":N}`, then
     /// `N` bytes of `text/plain; version=0.0.4`.
     MetricsText,
+    /// Flight-recorder dump: header `{"bytes":N,"ok":true}`, then `N`
+    /// bytes of JSONL — one journal event per line, oldest first (see
+    /// [`crate::obs::journal`]). Served by primaries and followers.
+    Events,
 }
 
 /// Default `max_bytes` for a WAL tail chunk when the request omits it.
@@ -252,7 +274,9 @@ impl StreamRequest {
             None => return Ok(None),
         };
         Ok(Some(match name.as_str() {
-            "repl_snapshot" => StreamRequest::ReplSnapshot,
+            "repl_snapshot" => StreamRequest::ReplSnapshot {
+                trace: parse_opt_seq(&obj, "trace")?,
+            },
             "repl_wal_tail" => {
                 let shard = obj.req_usize("shard")?;
                 let from_seq = parse_seq(&obj, "from_seq")?;
@@ -261,13 +285,12 @@ impl StreamRequest {
                     .and_then(|v| v.as_usize())
                     .unwrap_or(WAL_TAIL_DEFAULT_MAX_BYTES)
                     .max(1);
-                let epoch = match obj.get("epoch") {
-                    Some(_) => Some(parse_seq(&obj, "epoch")?),
-                    None => None,
-                };
-                StreamRequest::ReplWalTail { shard, from_seq, max_bytes, epoch }
+                let epoch = parse_opt_seq(&obj, "epoch")?;
+                let trace = parse_opt_seq(&obj, "trace")?;
+                StreamRequest::ReplWalTail { shard, from_seq, max_bytes, epoch, trace }
             }
             "metrics_text" => StreamRequest::MetricsText,
+            "events" => StreamRequest::Events,
             other => bail!("unknown stream op '{other}'"),
         }))
     }
@@ -275,8 +298,17 @@ impl StreamRequest {
     /// Serialise in the canonical `"stream"` envelope (client side).
     pub fn to_json_line(&self) -> String {
         match self {
-            StreamRequest::ReplSnapshot => r#"{"stream":"repl_snapshot"}"#.to_string(),
-            StreamRequest::ReplWalTail { shard, from_seq, max_bytes, epoch } => {
+            StreamRequest::ReplSnapshot { trace } => match trace {
+                // trace-less form is byte-identical to the pre-trace wire
+                None => r#"{"stream":"repl_snapshot"}"#.to_string(),
+                Some(t) => Json::obj(vec![
+                    ("stream", Json::Str("repl_snapshot".into())),
+                    // string: trace ids are u64 and must roundtrip exactly
+                    ("trace", Json::Str(t.to_string())),
+                ])
+                .to_string(),
+            },
+            StreamRequest::ReplWalTail { shard, from_seq, max_bytes, epoch, trace } => {
                 let mut pairs = vec![
                     ("stream", Json::Str("repl_wal_tail".into())),
                     ("shard", Json::Num(*shard as f64)),
@@ -288,18 +320,23 @@ impl StreamRequest {
                 if let Some(e) = epoch {
                     pairs.push(("epoch", Json::Str(e.to_string())));
                 }
+                if let Some(t) = trace {
+                    pairs.push(("trace", Json::Str(t.to_string())));
+                }
                 Json::obj(pairs).to_string()
             }
             StreamRequest::MetricsText => r#"{"stream":"metrics_text"}"#.to_string(),
+            StreamRequest::Events => r#"{"stream":"events"}"#.to_string(),
         }
     }
 
     /// The op name, for logs and counters.
     pub fn op(&self) -> &'static str {
         match self {
-            StreamRequest::ReplSnapshot => "repl_snapshot",
+            StreamRequest::ReplSnapshot { .. } => "repl_snapshot",
             StreamRequest::ReplWalTail { .. } => "repl_wal_tail",
             StreamRequest::MetricsText => "metrics_text",
+            StreamRequest::Events => "events",
         }
     }
 }
@@ -315,6 +352,15 @@ fn parse_seq(obj: &Json, key: &str) -> Result<u64> {
             .map_err(|_| anyhow::anyhow!("field '{key}' is not a u64")),
         Some(Json::Num(n)) if *n >= 0.0 => Ok(*n as u64),
         _ => bail!("missing/invalid sequence field '{key}'"),
+    }
+}
+
+/// Optional sequence-shaped field (`epoch`, `trace`): absent is `None`;
+/// present-but-malformed is an error, never silently ignored.
+fn parse_opt_seq(obj: &Json, key: &str) -> Result<Option<u64>> {
+    match obj.get(key) {
+        Some(_) => Ok(Some(parse_seq(obj, key)?)),
+        None => Ok(None),
     }
 }
 
@@ -378,12 +424,26 @@ fn parse_k(obj: &Json) -> Result<usize> {
 
 impl Request {
     pub fn from_json_line(line: &str, expected_dim: usize) -> Result<Request> {
+        Ok(Request::parse_with_trace(line, expected_dim)?.0)
+    }
+
+    /// Parse a request line together with its optional top-level
+    /// `"trace"` field (string or numeric u64, like seqs). `None` means
+    /// the line carried no trace — the server stamps its own
+    /// per-connection id and the reply bytes are unchanged; a malformed
+    /// trace is an error, never silently ignored.
+    pub fn parse_with_trace(line: &str, expected_dim: usize) -> Result<(Request, Option<u64>)> {
         let obj = crate::util::json::parse(line)?;
+        let trace = parse_opt_seq(&obj, "trace")?;
+        Ok((Request::from_obj(&obj, expected_dim)?, trace))
+    }
+
+    fn from_obj(obj: &Json, expected_dim: usize) -> Result<Request> {
         let op = obj.req_str("op")?;
         Ok(match op {
             "insert" | "insert_sparse" => {
-                let vec = parse_vec(&obj, expected_dim)?;
-                match parse_ttl(&obj) {
+                let vec = parse_vec(obj, expected_dim)?;
+                match parse_ttl(obj) {
                     0 => Request::Insert { vec },
                     ttl_ms => Request::InsertTtl { vec, ttl_ms },
                 }
@@ -393,15 +453,15 @@ impl Request {
             },
             "upsert" => Request::Upsert {
                 id: obj.req_usize("id")?,
-                vec: parse_vec(&obj, expected_dim)?,
-                ttl_ms: parse_ttl(&obj),
+                vec: parse_vec(obj, expected_dim)?,
+                ttl_ms: parse_ttl(obj),
             },
             "query" => Request::Query {
-                vec: parse_vec(&obj, expected_dim)?,
-                k: parse_k(&obj)?,
+                vec: parse_vec(obj, expected_dim)?,
+                k: parse_k(obj)?,
             },
             "query_batch" => {
-                let k = parse_k(&obj)?;
+                let k = parse_k(obj)?;
                 let queries = obj.req_arr("queries")?;
                 // the top-level `dim` is advisory — sparse elements are
                 // corpus-dimensional by definition, dense elements carry
@@ -438,16 +498,10 @@ impl Request {
             "snapshot" => Request::Snapshot,
             "promote" => Request::Promote,
             "demote" => Request::Demote {
-                epoch: match obj.get("epoch") {
-                    Some(_) => Some(parse_seq(&obj, "epoch")?),
-                    None => None,
-                },
+                epoch: parse_opt_seq(obj, "epoch")?,
             },
             "ping" => Request::Ping {
-                epoch: match obj.get("epoch") {
-                    Some(_) => Some(parse_seq(&obj, "epoch")?),
-                    None => None,
-                },
+                epoch: parse_opt_seq(obj, "epoch")?,
             },
             "shutdown" => Request::Shutdown,
             other => bail!("unknown op '{other}'"),
@@ -576,6 +630,47 @@ impl Request {
                 .to_string(),
             },
             Request::Shutdown => r#"{"op":"shutdown"}"#.to_string(),
+        }
+    }
+
+    /// Serialise with an explicit trace id (`Client::with_trace`).
+    /// `trace == 0` reproduces [`Request::to_json_line`] byte-for-byte;
+    /// otherwise the canonical line gains a string-encoded `"trace"`
+    /// field in its lexicographic key position.
+    pub fn to_json_line_with(&self, trace: u64) -> String {
+        let line = self.to_json_line();
+        if trace == 0 {
+            return line;
+        }
+        match crate::util::json::parse(&line) {
+            Ok(Json::Obj(mut m)) => {
+                m.insert("trace".to_string(), Json::Str(trace.to_string()));
+                Json::Obj(m).to_string()
+            }
+            // unreachable: every request serialises as a JSON object
+            _ => line,
+        }
+    }
+
+    /// The canonical wire `"op"` value — used by trace-correlation logs
+    /// (`server/traced_op`) so a grep for a trace id also says what the
+    /// request was.
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Request::Insert { .. } | Request::InsertTtl { .. } => "insert",
+            Request::Delete { .. } => "delete",
+            Request::Upsert { .. } => "upsert",
+            Request::Query { .. } => "query",
+            Request::QueryBatch { .. } => "query_batch",
+            Request::Distance { .. } => "distance",
+            Request::Heatmap => "heatmap",
+            Request::Stats => "stats",
+            Request::Flush => "flush",
+            Request::Snapshot => "snapshot",
+            Request::Promote => "promote",
+            Request::Demote { .. } => "demote",
+            Request::Ping { .. } => "ping",
+            Request::Shutdown => "shutdown",
         }
     }
 }
@@ -1075,20 +1170,24 @@ mod tests {
     #[test]
     fn stream_envelope_roundtrips() {
         for req in [
-            StreamRequest::ReplSnapshot,
+            StreamRequest::ReplSnapshot { trace: None },
+            StreamRequest::ReplSnapshot { trace: Some(77) },
             StreamRequest::ReplWalTail {
                 shard: 2,
                 from_seq: u64::MAX - 1,
                 max_bytes: 4096,
                 epoch: None,
+                trace: None,
             },
             StreamRequest::ReplWalTail {
                 shard: 0,
                 from_seq: 3,
                 max_bytes: 4096,
                 epoch: Some((1u64 << 55) + 9),
+                trace: Some((1u64 << 55) + 1),
             },
             StreamRequest::MetricsText,
+            StreamRequest::Events,
         ] {
             let line = req.to_json_line();
             assert!(StreamRequest::looks_like(&line), "sniff missed {line}");
@@ -1143,6 +1242,7 @@ mod tests {
                 from_seq: 12,
                 max_bytes: 64,
                 epoch: None,
+                trace: None,
             })
         );
         // a malformed epoch is an error, not silently ignored
@@ -1160,6 +1260,63 @@ mod tests {
         let bad_seq = r#"{"stream":"repl_wal_tail","shard":0,"from_seq":-3}"#;
         assert!(StreamRequest::from_json_line(bad_seq).is_err());
         assert!(StreamRequest::from_json_line(r#"{"stream":"no_such_op"}"#).is_err());
+    }
+
+    #[test]
+    fn trace_field_parses_on_every_request_shape() {
+        // string and numeric forms, like seqs
+        let (req, trace) =
+            Request::parse_with_trace(r#"{"op":"ping","trace":"12000007"}"#, 3).unwrap();
+        assert_eq!(req, Request::Ping { epoch: None });
+        assert_eq!(trace, Some(12_000_007));
+        let (_, trace) = Request::parse_with_trace(r#"{"op":"stats","trace":42}"#, 3).unwrap();
+        assert_eq!(trace, Some(42));
+        // exact u64 round-trip through the string form
+        let big = u64::MAX - 3;
+        let line = format!(r#"{{"op":"heatmap","trace":"{big}"}}"#);
+        assert_eq!(Request::parse_with_trace(&line, 3).unwrap().1, Some(big));
+        // trace-less lines answer None — the server stamps its own
+        let (req, trace) = Request::parse_with_trace(r#"{"op":"ping"}"#, 3).unwrap();
+        assert_eq!(req, Request::Ping { epoch: None });
+        assert_eq!(trace, None);
+        // a malformed trace is an error, not silently dropped
+        let err = Request::parse_with_trace(r#"{"op":"ping","trace":"x"}"#, 3).unwrap_err();
+        assert!(err.to_string().contains("field 'trace' is not a u64"), "{err:#}");
+        // writes carry it too
+        let (req, trace) = Request::parse_with_trace(
+            r#"{"op":"insert","trace":"9","vec":[0,2,0]}"#,
+            3,
+        )
+        .unwrap();
+        assert!(matches!(req, Request::Insert { .. }));
+        assert_eq!(trace, Some(9));
+    }
+
+    #[test]
+    fn to_json_line_with_trace_is_additive() {
+        // trace 0 reproduces the canonical line byte-for-byte
+        let req = Request::Ping { epoch: None };
+        assert_eq!(req.to_json_line_with(0), req.to_json_line());
+        // nonzero trace lands in lexicographic key position and parses back
+        assert_eq!(req.to_json_line_with(7), r#"{"op":"ping","trace":"7"}"#);
+        let q = Request::Query {
+            vec: CatVector::from_dense(&[1, 0, 2]),
+            k: 3,
+        };
+        let line = q.to_json_line_with(55);
+        let (back, trace) = Request::parse_with_trace(&line, 3).unwrap();
+        assert_eq!(back, q);
+        assert_eq!(trace, Some(55));
+        // stream envelopes: the trace-less spelling is byte-stable
+        assert_eq!(
+            StreamRequest::ReplSnapshot { trace: None }.to_json_line(),
+            r#"{"stream":"repl_snapshot"}"#
+        );
+        assert_eq!(StreamRequest::Events.to_json_line(), r#"{"stream":"events"}"#);
+        assert_eq!(
+            StreamRequest::ReplSnapshot { trace: Some(3) }.to_json_line(),
+            r#"{"stream":"repl_snapshot","trace":"3"}"#
+        );
     }
 
     #[test]

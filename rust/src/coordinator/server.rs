@@ -8,10 +8,14 @@
 //! connection's requests with a trace id (`conn * 1e6 + seq`) that rides
 //! batcher tickets so slow-op records correlate across threads. Queries
 //! additionally carry a per-request [`crate::obs::ReadSpan`] whose
-//! critical-path breakdown lands in the `server/slow_op` record. Stream
-//! ops (`repl_snapshot`, `repl_wal_tail`, `metrics_text`) — whose replies
-//! are a JSON header line + raw payload bytes — are parsed as one
-//! [`StreamRequest`] envelope before request parsing and dispatched
+//! critical-path breakdown lands in the `server/slow_op` record. A
+//! wire-supplied `"trace"` field overrides the stamped id, so one id can
+//! follow a request across nodes (client → follower redirect → primary,
+//! or primary → replication pull); lifecycle transitions additionally
+//! land in the [`crate::obs::journal`] flight recorder. Stream ops
+//! (`repl_snapshot`, `repl_wal_tail`, `metrics_text`, `events`) — whose
+//! replies are a JSON header line + raw payload bytes — are parsed as
+//! one [`StreamRequest`] envelope before request parsing and dispatched
 //! through a single `handle_stream` routing point.
 
 use super::batcher::{Batcher, BatcherConfig, SketchBackend, WriteOp};
@@ -93,6 +97,12 @@ pub struct CoordinatorConfig {
     /// Emit one structured `slow_op` record with a per-stage breakdown
     /// for any request slower than this (`--slow-op-ms`, 0 = off).
     pub slow_op_ms: u64,
+    /// Advisory read-staleness budget (`--max-read-staleness-ms`,
+    /// 0 = unset). Not enforced — surfaced as the
+    /// `cfg_max_read_staleness_ms` gauge next to the follower's
+    /// `repl_visibility_age_ms_shard*` gauges, so one scrape says both
+    /// what the operator promised and what the node is delivering.
+    pub max_read_staleness_ms: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -119,6 +129,7 @@ impl Default for CoordinatorConfig {
             log_level: "info".into(),
             log_json: false,
             slow_op_ms: 0,
+            max_read_staleness_ms: 0,
         }
     }
 }
@@ -190,6 +201,18 @@ impl Coordinator {
             config.log_json,
         );
         obs::set_slow_op_ms(config.slow_op_ms);
+        // Flight recorder: from here on, lifecycle transitions land in
+        // the in-process ring; a panic dumps the recent timeline to
+        // stderr even when nobody was tailing the logs.
+        obs::journal::install_panic_hook();
+        obs::journal::record(
+            "coordinator",
+            "startup",
+            &[
+                ("shards", obs_log::V::u(config.num_shards.max(1) as u64)),
+                ("replica", obs_log::V::b(config.replicate_from.is_some())),
+            ],
+        );
         // Scoring-kernel dispatch is decided once per process; record the
         // selected ISA at startup (also surfaced as the `kernel_isa` gauge
         // in `stats` / `metrics_text`).
@@ -252,6 +275,11 @@ impl Coordinator {
             if let Some(epoch) = crate::persist::manifest::read_fence(dir)? {
                 fenced.store(epoch, Ordering::SeqCst);
                 obs_log::warn(
+                    "coordinator",
+                    "fence_restored",
+                    &[("observed_epoch", obs_log::V::u(epoch))],
+                );
+                obs::journal::record(
                     "coordinator",
                     "fence_restored",
                     &[("observed_epoch", obs_log::V::u(epoch))],
@@ -427,6 +455,14 @@ impl Coordinator {
             obs_log::warn(
                 "coordinator",
                 "fenced",
+                &[
+                    ("own_epoch", obs_log::V::u(own)),
+                    ("observed_epoch", obs_log::V::u(peer)),
+                ],
+            );
+            obs::journal::record(
+                "coordinator",
+                "fence_raised",
                 &[
                     ("own_epoch", obs_log::V::u(own)),
                     ("observed_epoch", obs_log::V::u(peer)),
@@ -733,6 +769,14 @@ impl Coordinator {
                             ("fenced_at", obs_log::V::u(fence_at)),
                         ],
                     );
+                    obs::journal::record(
+                        "coordinator",
+                        "demoted",
+                        &[
+                            ("own_epoch", obs_log::V::u(own)),
+                            ("fenced_at", obs_log::V::u(fence_at)),
+                        ],
+                    );
                     Response::Demoted { epoch: fence_at }
                 }
                 None => {
@@ -786,6 +830,14 @@ impl Coordinator {
             self.fenced.load(Ordering::SeqCst) as f64,
         ));
         fields.extend(self.failover.stats_fields());
+        // the operator's advisory staleness budget (0 = unset) and the
+        // flight-recorder fill level
+        fields.push((
+            "cfg_max_read_staleness_ms".into(),
+            self.config.max_read_staleness_ms as f64,
+        ));
+        fields.push(("journal_events".into(), obs::journal::events() as f64));
+        fields.push(("journal_dropped".into(), obs::journal::dropped() as f64));
         fields
     }
 
@@ -810,6 +862,15 @@ impl Coordinator {
                 ("scan_ms", obs_log::V::f(span.ms(&span.scan_us))),
                 ("rerank_ms", obs_log::V::f(span.ms(&span.rerank_us))),
                 ("gather_ms", obs_log::V::f(span.ms(&span.gather_us))),
+            ],
+        );
+        obs::journal::record(
+            "server",
+            "slow_op",
+            &[
+                ("op", obs_log::V::s(op)),
+                ("trace", obs_log::V::u(trace)),
+                ("total_ms", obs_log::V::f(total_s * 1e3)),
             ],
         );
     }
@@ -845,6 +906,12 @@ impl Coordinator {
                     }
                     slept = Duration::ZERO;
                     if me.replica.as_ref().is_some_and(|r| !r.is_writable()) {
+                        continue;
+                    }
+                    // failpoint: `ttl_sweep` armed = the tick is skipped
+                    // (Err) or stalled (sleep), freezing expiry reaping
+                    // without touching any clock
+                    if crate::fault::check("ttl_sweep").is_err() {
                         continue;
                     }
                     let swept = me.store.sweep_expired(now_ms());
@@ -955,9 +1022,24 @@ impl Coordinator {
                 }
             }
             req_seq += 1;
-            let trace = conn.saturating_mul(1_000_000).saturating_add(req_seq);
-            let resp = match Request::from_json_line(trimmed, self.config.input_dim) {
-                Ok(req) => {
+            let stamped = conn.saturating_mul(1_000_000).saturating_add(req_seq);
+            let resp = match Request::parse_with_trace(trimmed, self.config.input_dim) {
+                Ok((req, wire_trace)) => {
+                    // a wire-supplied trace id wins over the stamped one:
+                    // that is what lets one id follow a request across
+                    // nodes (the MultiClient re-sends its trace on every
+                    // redirect/retry hop)
+                    let trace = wire_trace.unwrap_or(stamped);
+                    if wire_trace.is_some() {
+                        obs_log::info(
+                            "server",
+                            "traced_op",
+                            &[
+                                ("op", obs_log::V::s(req.op_name())),
+                                ("trace", obs_log::V::u(trace)),
+                            ],
+                        );
+                    }
                     let is_shutdown = matches!(req, Request::Shutdown);
                     let r = self.handle_request_traced(req, trace);
                     if is_shutdown {
@@ -993,14 +1075,18 @@ impl Coordinator {
     /// `io::Error` like any connection write.
     fn handle_stream<W: Write>(&self, req: &StreamRequest, writer: &mut W) -> std::io::Result<()> {
         match req {
-            StreamRequest::ReplSnapshot => {
-                replica::shipper::serve_snapshot(&self.store, &self.metrics.repl, writer)
-            }
+            StreamRequest::ReplSnapshot { trace } => replica::shipper::serve_snapshot(
+                &self.store,
+                &self.metrics.repl,
+                trace.unwrap_or(0),
+                writer,
+            ),
             StreamRequest::ReplWalTail {
                 shard,
                 from_seq,
                 max_bytes,
                 epoch,
+                trace,
             } => {
                 // Fence check before the shipper (which stays
                 // fence-unaware): a follower whose epoch is higher than
@@ -1019,10 +1105,12 @@ impl Coordinator {
                     *shard,
                     *from_seq,
                     *max_bytes,
+                    trace.unwrap_or(0),
                     writer,
                 )
             }
             StreamRequest::MetricsText => self.serve_metrics_text(writer),
+            StreamRequest::Events => self.serve_events(writer),
         }
     }
 
@@ -1033,6 +1121,22 @@ impl Coordinator {
     /// body cannot ride the line-JSON `Response` enum).
     fn serve_metrics_text<W: Write>(&self, writer: &mut W) -> std::io::Result<()> {
         let body = obs::prom::render(&self.stats_fields(), &self.metrics.histogram_snapshots());
+        let header = crate::util::json::Json::obj(vec![
+            ("ok", crate::util::json::Json::Bool(true)),
+            ("bytes", crate::util::json::Json::Num(body.len() as f64)),
+        ]);
+        writeln!(writer, "{header}")?;
+        writer.write_all(body.as_bytes())?;
+        writer.flush()?;
+        Ok(())
+    }
+
+    /// Serve `events`: the flight-recorder journal as JSONL, framed like
+    /// `metrics_text` (`{"ok":true,"bytes":N}` header + N payload bytes).
+    /// The journal is process-global, so any node answers with its own
+    /// local timeline.
+    fn serve_events<W: Write>(&self, writer: &mut W) -> std::io::Result<()> {
+        let body = obs::journal::render_jsonl();
         let header = crate::util::json::Json::obj(vec![
             ("ok", crate::util::json::Json::Bool(true)),
             ("bytes", crate::util::json::Json::Num(body.len() as f64)),
@@ -1778,6 +1882,7 @@ mod tests {
             from_seq: 0,
             max_bytes: 1 << 20,
             epoch,
+            trace: None,
         };
         let mut out = Vec::new();
         c.handle_stream(&tail(Some(1)), &mut out).unwrap();

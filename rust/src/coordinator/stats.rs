@@ -8,7 +8,8 @@
 //! struct member, so the lookup is checked at compile time, while
 //! anything this build does not know — fields added by newer servers,
 //! and the dynamic families (`stage_*`, `repl_applied_seq_shard{i}`,
-//! `repl_lag_shard{i}`, `persist_next_seq_shard{i}`,
+//! `repl_lag_shard{i}`, `repl_visibility_age_ms_shard{i}`,
+//! `executor_queue_hwm_shard{i}`, `persist_next_seq_shard{i}`,
 //! `persist_wal_live_bytes`) — is preserved verbatim in
 //! [`Stats::extra`], in arrival order. Nothing is dropped:
 //! [`Stats::to_fields`] reproduces every pair (schema members first, in
@@ -132,6 +133,11 @@ stats_struct! {
     repl_move_defers,
     repl_diverged,
     repl_caught_up,
+    // wall-clock replication visibility lag (follower side): time from a
+    // frame's primary commit stamp to its local apply
+    repl_visibility_lag_count,
+    repl_visibility_lag_p50_ms,
+    repl_visibility_lag_p99_ms,
     // end-to-end latency summaries
     insert_p50_ms,
     insert_p99_ms,
@@ -160,6 +166,12 @@ stats_struct! {
     failover_promotions,
     failover_fence_events,
     failover_last_epoch,
+    // observability: the advisory read-staleness budget this server was
+    // started with (0 = unset) and the flight-recorder event journal
+    // (events recorded / events overwritten by ring wraparound)
+    cfg_max_read_staleness_ms,
+    journal_events,
+    journal_dropped,
 }
 
 #[cfg(test)]

@@ -413,6 +413,11 @@ impl ShardedStore {
                     ("error", obs_log::V::s(format!("{e:#}"))),
                 ],
             );
+            crate::obs::journal::record(
+                "store",
+                "wal_commit_failed",
+                &[("error", obs_log::V::s(format!("{e:#}")))],
+            );
         }
         ids
     }
@@ -807,6 +812,11 @@ impl ShardedStore {
                         ),
                         ("error", obs_log::V::s(format!("{e:#}"))),
                     ],
+                );
+                crate::obs::journal::record(
+                    "store",
+                    "ttl_sweep_commit_failed",
+                    &[("error", obs_log::V::s(format!("{e:#}")))],
                 );
             }
             if let Some(p) = &self.persist {
@@ -1409,6 +1419,11 @@ impl ShardedStore {
                             ),
                             ("error", obs_log::V::s(format!("{e:#}"))),
                         ],
+                    );
+                    crate::obs::journal::record(
+                        "store",
+                        "auto_snapshot_failed",
+                        &[("error", obs_log::V::s(format!("{e:#}")))],
                     );
                 }
             }

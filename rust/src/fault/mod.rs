@@ -20,6 +20,12 @@
 //! then disarm), `sleep:MS` (delay every hit — the "slow, not dead"
 //! simulation), `sleep:MS:N`, `off`.
 //!
+//! Registered sites: `accept`, `conn_read`, `conn_write` (server socket
+//! seams), `fsync`, `snapshot_rotate` (persistence), `ship_frames`,
+//! `ship_snapshot_shard` (replication shipper), `ttl_sweep` (skip one
+//! sweep pass), `executor_submit` (delay-only — stall the scatter
+//! path), `batcher_flush` (defer one batch flush to the next tick).
+//!
 //! **Zero-cost when disabled.** [`check`] is a relaxed atomic load and
 //! a branch unless something is armed; the registry lock, the spec
 //! parse and the file stat are all behind it. Production binaries run

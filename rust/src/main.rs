@@ -16,7 +16,9 @@
 //!                      [--auto-promote] [--probe-interval-ms 500]
 //!                      [--probe-timeout-ms 1000] [--probe-failures 3]
 //!                      [--log-level info] [--log-json] [--slow-op-ms 0]
+//!                      [--max-read-staleness-ms 0]
 //! cabin-sketch stats   [--addr 127.0.0.1:7878] [--prom]
+//! cabin-sketch events  [--addr 127.0.0.1:7878]
 //! cabin-sketch promote [--addr 127.0.0.1:7878]
 //! cabin-sketch demote  [--addr 127.0.0.1:7878] [--epoch N]
 //! cabin-sketch sketch  --input docword.txt [--sketch-dim 1000] [--out sketches.bin]
@@ -39,6 +41,7 @@ fn main() {
     let code = match cmd {
         "serve" => cmd_serve(&args),
         "stats" => cmd_stats(&args),
+        "events" => cmd_events(&args),
         "promote" => cmd_promote(&args),
         "demote" => cmd_demote(&args),
         "sketch" => cmd_sketch(&args),
@@ -74,6 +77,11 @@ fn print_help() {
                     --prom prints the Prometheus text exposition instead\n\
                     (the metrics_text wire op: counters, gauges, and full\n\
                     per-stage latency histogram bucket families)\n\
+           events   dump a running server's flight-recorder journal\n\
+                    (--addr HOST:PORT): the last 256 lifecycle events —\n\
+                    startup, promote, fence, slow ops, commit failures —\n\
+                    as JSONL, oldest first; survives log rotation and is\n\
+                    the first stop in a failover post-mortem\n\
            promote  flip a read replica writable now (--addr HOST:PORT);\n\
                     prints the per-shard applied sequences and the new\n\
                     failover epoch\n\
@@ -147,7 +155,16 @@ fn print_help() {
                     sketch, placement, WAL, fsync wait, reply; executor\n\
                     queue wait, scan, rerank, gather) ride in stats as\n\
                     stage_* fields and in `stats --prom` as full\n\
-                    Prometheus histogram families"
+                    Prometheus histogram families.\n\
+                    Requests may carry a client-set \"trace\" id that the\n\
+                    server logs instead of stamping its own — replicated\n\
+                    writes surface it on the follower too, so one grep\n\
+                    tells a request's cross-node story\n\
+                    [--max-read-staleness-ms N] (advisory replica-read\n\
+                    staleness budget: exported as the\n\
+                    cfg_max_read_staleness_ms gauge so dashboards can\n\
+                    alert when repl_visibility_lag_p99_ms breaches it;\n\
+                    0 = unset; does not gate reads)"
     );
 }
 
@@ -178,6 +195,7 @@ fn coordinator_config(args: &Args) -> CoordinatorConfig {
         log_level: args.str_or("log-level", "info"),
         log_json: args.flag("log-json"),
         slow_op_ms: args.u64_or("slow-op-ms", 0),
+        max_read_staleness_ms: args.u64_or("max-read-staleness-ms", 0),
     }
 }
 
@@ -272,6 +290,18 @@ fn cmd_stats(args: &Args) -> anyhow::Result<()> {
             println!("{name} {value}");
         }
     }
+    Ok(())
+}
+
+/// `events --addr HOST:PORT`: dump a running server's flight-recorder
+/// journal as JSONL, oldest event first (`events` stream op). Pipe into
+/// `jq`/`grep` — e.g. `cabin-sketch events --addr … | grep '"promoted"'`
+/// finds exactly when and why a replica took over.
+fn cmd_events(args: &Args) -> anyhow::Result<()> {
+    use cabin::coordinator::client::Client;
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let mut client = Client::connect(&addr)?;
+    print!("{}", client.events()?);
     Ok(())
 }
 

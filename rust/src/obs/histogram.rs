@@ -145,6 +145,18 @@ impl Default for ObsHistogram {
     }
 }
 
+// Terse by hand — deriving would dump every bucket into the output of
+// any containing struct's `{:?}`.
+impl std::fmt::Debug for ObsHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsHistogram")
+            .field("count", &self.count.load(Ordering::Relaxed))
+            .field("sum_us", &self.sum_us.load(Ordering::Relaxed))
+            .field("max_us", &self.max_us.load(Ordering::Relaxed))
+            .finish_non_exhaustive()
+    }
+}
+
 impl ObsHistogram {
     pub fn new() -> Self {
         Self {

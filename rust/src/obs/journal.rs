@@ -1,0 +1,275 @@
+//! Flight recorder: a fixed-size ring of structured lifecycle events.
+//!
+//! The structured log answers "what is happening" while someone is
+//! watching stderr; the journal answers "what happened" after the
+//! fact. Every notable lifecycle transition — promotion, fence raised,
+//! epoch observed, probe streaks, snapshot rotation, compaction,
+//! divergence, WAL commit failure, executor panic, slow ops — records
+//! one event into a process-global ring of [`JOURNAL_CAPACITY`] slots
+//! with a monotonic sequence number, so the last few hundred events
+//! survive in memory regardless of log level and can be dumped:
+//!
+//! - over the wire via the `{"stream":"events"}` op (JSONL payload),
+//! - from the CLI via `cabin-sketch events --addr`,
+//! - to stderr by the panic hook ([`install_panic_hook`]).
+//!
+//! Events are rendered to their final JSONL form at record time, one
+//! line per event: `{"seq":N,"ts_ms":M,"component":"...","event":"...",
+//! ...fields}`. Unlike the f64-backed [`crate::util::json::Json`]
+//! model, `seq`, `ts_ms` and `u64`/`i64` fields are written as exact
+//! integers — sequence numbers and trace ids must round-trip.
+//!
+//! Recording is cheap and non-blocking in practice: one relaxed
+//! `fetch_add` to reserve a sequence number, the line render, and one
+//! uncontended per-slot mutex (contention requires two threads landing
+//! on the same slot modulo the capacity at the same instant). The ring
+//! never allocates after construction beyond the event lines
+//! themselves. Ordering is total: `seq` is the authority, and
+//! [`Journal::render_jsonl`] emits slots sorted by it, so tests can
+//! assert timelines ("probe-fail happened before promote") instead of
+//! polling counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::obs::log::V;
+use crate::util::json::Json;
+
+/// Slots in the process-global ring. 256 events comfortably covers a
+/// failover story (probe streak + promote + fence + rejoin) plus the
+/// surrounding snapshot/compaction chatter.
+pub const JOURNAL_CAPACITY: usize = 256;
+
+struct Slot {
+    seq: u64,
+    line: String,
+}
+
+/// A fixed-size event ring. Most callers use the process-global
+/// instance via the free functions ([`record`], [`render_jsonl`],
+/// [`events`], [`dropped`]); tests construct their own.
+pub struct Journal {
+    next_seq: AtomicU64,
+    slots: Vec<Mutex<Option<Slot>>>,
+}
+
+impl Journal {
+    pub fn new(capacity: usize) -> Journal {
+        Journal {
+            next_seq: AtomicU64::new(0),
+            slots: (0..capacity.max(1)).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Record one event; returns its sequence number. Field order is
+    /// preserved as given (journal lines are their own surface — they
+    /// do not promise the lexicographic key order of wire replies).
+    pub fn record(&self, component: &str, event: &str, fields: &[(&str, V)]) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let line = render_event(seq, now_ms(), component, event, fields);
+        let slot = &self.slots[(seq % self.slots.len() as u64) as usize];
+        let mut guard = slot.lock().unwrap_or_else(|e| e.into_inner());
+        // Two threads can race for the same slot one capacity apart;
+        // keep the newer event.
+        if guard.as_ref().map_or(true, |s| s.seq < seq) {
+            *guard = Some(Slot { seq, line });
+        }
+        seq
+    }
+
+    /// Total events ever recorded (== the next sequence number).
+    pub fn events(&self) -> u64 {
+        self.next_seq.load(Ordering::Relaxed)
+    }
+
+    /// Events overwritten by newer ones (ring wrap).
+    pub fn dropped(&self) -> u64 {
+        self.events().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Dump the surviving events as JSONL, oldest first, trailing
+    /// newline included (empty string when nothing was recorded).
+    pub fn render_jsonl(&self) -> String {
+        let mut entries: Vec<(u64, String)> = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let guard = slot.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(s) = guard.as_ref() {
+                entries.push((s.seq, s.line.clone()));
+            }
+        }
+        entries.sort_unstable_by_key(|&(seq, _)| seq);
+        let mut out = String::new();
+        for (_, line) in entries {
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis().min(u64::MAX as u128) as u64)
+        .unwrap_or(0)
+}
+
+/// Render one event line. `u64`/`i64` fields are written as exact
+/// integers (the f64-backed `Json` model would round trace ids and
+/// sequence numbers above 2^53); strings go through `Json::Str` so
+/// escaping is correct.
+fn render_event(seq: u64, ts_ms: u64, component: &str, event: &str, fields: &[(&str, V)]) -> String {
+    let mut out = format!(
+        "{{\"seq\":{seq},\"ts_ms\":{ts_ms},\"component\":{},\"event\":{}",
+        Json::Str(component.to_string()),
+        Json::Str(event.to_string())
+    );
+    for (k, v) in fields {
+        out.push(',');
+        out.push_str(&Json::Str((*k).to_string()).to_string());
+        out.push(':');
+        match v {
+            V::S(s) => out.push_str(&Json::Str(s.clone()).to_string()),
+            V::U(u) => out.push_str(&u.to_string()),
+            V::I(i) => out.push_str(&i.to_string()),
+            V::F(f) => out.push_str(&Json::Num(*f).to_string()),
+            V::B(b) => out.push_str(if *b { "true" } else { "false" }),
+        }
+    }
+    out.push('}');
+    out
+}
+
+static GLOBAL: OnceLock<Journal> = OnceLock::new();
+
+/// The process-global journal (created on first use).
+pub fn global() -> &'static Journal {
+    GLOBAL.get_or_init(|| Journal::new(JOURNAL_CAPACITY))
+}
+
+/// Record one event into the process-global journal.
+pub fn record(component: &str, event: &str, fields: &[(&str, V)]) -> u64 {
+    global().record(component, event, fields)
+}
+
+/// Dump the process-global journal as JSONL (see
+/// [`Journal::render_jsonl`]).
+pub fn render_jsonl() -> String {
+    global().render_jsonl()
+}
+
+/// Total events recorded process-wide (`journal_events` in stats).
+pub fn events() -> u64 {
+    global().events()
+}
+
+/// Events lost to ring wrap (`journal_dropped` in stats).
+pub fn dropped() -> u64 {
+    global().dropped()
+}
+
+static HOOK: OnceLock<()> = OnceLock::new();
+
+/// Install a panic hook (once per process) that records the panic as a
+/// journal event and flushes the journal to stderr, chaining to the
+/// previously installed hook first. Caught panics (the executor's
+/// per-job `catch_unwind`) also trigger the hook — by design: a worker
+/// panic is exactly the moment the recent-event timeline matters.
+pub fn install_panic_hook() {
+    HOOK.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            prev(info);
+            let message = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| info.payload().downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "<non-string panic payload>".to_string());
+            let location = info
+                .location()
+                .map(|l| format!("{}:{}", l.file(), l.line()))
+                .unwrap_or_else(|| "<unknown>".to_string());
+            record(
+                "process",
+                "panic",
+                &[("message", V::s(message)), ("location", V::s(location))],
+            );
+            eprintln!(
+                "--- flight recorder: {} event(s) recorded, {} dropped ---",
+                events(),
+                dropped()
+            );
+            eprint!("{}", render_jsonl());
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seqs_are_monotonic_and_lines_parse() {
+        let j = Journal::new(8);
+        let a = j.record("test", "first", &[("shard", V::u(3))]);
+        let b = j.record("test", "second", &[("ok", V::b(true)), ("n", V::i(-2))]);
+        assert!(b > a);
+        let dump = j.render_jsonl();
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(first.req_str("event").unwrap(), "first");
+        assert_eq!(first.req_str("component").unwrap(), "test");
+        assert_eq!(first.req_usize("shard").unwrap(), 3);
+        assert!(first.get("ts_ms").is_some());
+        let second = crate::util::json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(second.get("n").unwrap().as_f64(), Some(-2.0));
+    }
+
+    #[test]
+    fn ring_keeps_the_latest_capacity_events() {
+        let j = Journal::new(4);
+        for i in 0..10u64 {
+            j.record("test", "tick", &[("i", V::u(i))]);
+        }
+        assert_eq!(j.events(), 10);
+        assert_eq!(j.dropped(), 6);
+        let dump = j.render_jsonl();
+        let seqs: Vec<u64> = dump
+            .lines()
+            .map(|l| {
+                crate::util::json::parse(l).unwrap().req_usize("seq").unwrap() as u64
+            })
+            .collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "oldest events evicted, order kept");
+    }
+
+    #[test]
+    fn u64_fields_render_exactly() {
+        let j = Journal::new(2);
+        j.record("test", "big", &[("trace", V::u(u64::MAX))]);
+        let dump = j.render_jsonl();
+        assert!(
+            dump.contains(&format!("\"trace\":{}", u64::MAX)),
+            "exact integer rendering, got: {dump}"
+        );
+    }
+
+    #[test]
+    fn empty_journal_renders_empty() {
+        let j = Journal::new(4);
+        assert_eq!(j.render_jsonl(), "");
+        assert_eq!(j.events(), 0);
+        assert_eq!(j.dropped(), 0);
+    }
+
+    #[test]
+    fn global_journal_accumulates() {
+        let seq = record("test", "global_probe", &[("marker", V::u(42))]);
+        assert!(events() > seq);
+        assert!(render_jsonl().contains("\"event\":\"global_probe\""));
+    }
+}

@@ -87,8 +87,16 @@ impl V {
         V::U(v)
     }
 
+    pub fn i(v: i64) -> V {
+        V::I(v)
+    }
+
     pub fn f(v: f64) -> V {
         V::F(v)
+    }
+
+    pub fn b(v: bool) -> V {
+        V::B(v)
     }
 
     fn to_json(&self) -> Json {
@@ -221,6 +229,24 @@ mod tests {
         assert_eq!(v.req_usize("shard").unwrap(), 1);
         assert_eq!(v.req_str("detail").unwrap(), "checksum \"x\"\nline");
         assert!(v.get("ts_ms").is_some());
+    }
+
+    #[test]
+    fn terse_constructors_cover_every_variant() {
+        let line = format_line(
+            Level::Info,
+            false,
+            "test",
+            "ctor",
+            &[
+                ("s", V::s("x")),
+                ("u", V::u(7)),
+                ("i", V::i(-5)),
+                ("f", V::f(1.5)),
+                ("b", V::b(true)),
+            ],
+        );
+        assert_eq!(line, "[test] INFO ctor s=x u=7 i=-5 f=1.500 b=true");
     }
 
     #[test]

@@ -19,8 +19,14 @@
 //! 3. **What happened?** [`log`] — leveled text/JSONL events replacing
 //!    raw `eprintln!`; [`prom`] renders everything in Prometheus text
 //!    format for the `metrics_text` wire op.
+//! 4. **What happened *before it broke*?** [`journal`] — a fixed-size
+//!    flight-recorder ring of lifecycle events with monotonic seqs,
+//!    dumped via the `events` wire op / CLI and flushed to stderr by
+//!    the panic hook, so failover timelines are reconstructible after
+//!    the fact.
 
 pub mod histogram;
+pub mod journal;
 pub mod log;
 pub mod prom;
 

@@ -8,6 +8,11 @@
 //! - monotone counters are suffixed `_total` and typed `counter`;
 //! - point-in-time values (queue depths, lags, config, `*_ms`
 //!   summaries) are typed `gauge` and keep their name;
+//! - per-shard flat families (`<base>_shard<i>` in `stats`) render as
+//!   one labeled family — `cabin_repl_lag{shard="3"}`,
+//!   `cabin_executor_queue_hwm{shard="0"}` — instead of name-suffixed
+//!   scalars. Only the exposition changes shape: the flat `stats` wire
+//!   names stay grow-only for compat;
 //! - histograms render as `cabin_<name>_seconds` families with
 //!   cumulative `_bucket{le="…"}` series at power-of-two microsecond
 //!   edges (which are exact [`ObsHistogram`](super::ObsHistogram)
@@ -40,8 +45,9 @@ const EDGES_US: [u64; 10] = [
 /// Substrings/suffixes marking a flat stats field as a gauge rather
 /// than a monotone counter.
 fn is_gauge(name: &str) -> bool {
-    const GAUGE_MARKS: [&str; 13] = [
+    const GAUGE_MARKS: [&str; 14] = [
         "queue_depth",
+        "queue_hwm",
         "busy_workers",
         "generation",
         "_lag",
@@ -83,14 +89,49 @@ fn fmt_le(us: u64) -> String {
     }
 }
 
+/// Split a per-shard flat stats name (`<base>_shard<i>`, the grow-only
+/// wire spelling) into its family base and shard index.
+fn shard_family(name: &str) -> Option<(&str, u64)> {
+    let (base, idx) = name.rsplit_once("_shard")?;
+    if base.is_empty() || idx.is_empty() || !idx.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    Some((base, idx.parse().ok()?))
+}
+
 /// Render the exposition. `flat` is `Metrics::snapshot()`-shaped
 /// `(name, value)` pairs; `hists` is `(base_name, snapshot)` pairs
 /// (e.g. `("stage_write_wal", …)`, `("query_latency", …)`).
 pub fn render(flat: &[(String, f64)], hists: &[(String, HistogramSnapshot)]) -> String {
     let mut out = String::with_capacity(4096 + hists.len() * 1024);
+    let mut emitted_families = std::collections::BTreeSet::new();
     for (name, value) in flat {
         if name.starts_with("stage_") {
             continue; // exposed as native histogram families below
+        }
+        if let Some((base, _)) = shard_family(name) {
+            if !emitted_families.insert(base.to_string()) {
+                continue; // family already rendered in full
+            }
+            // Emit the whole family at the first member: one TYPE line,
+            // then every shard's sample sorted by index.
+            let mut members: Vec<(u64, f64)> = flat
+                .iter()
+                .filter_map(|(n, v)| {
+                    shard_family(n).filter(|(b, _)| *b == base).map(|(_, si)| (si, *v))
+                })
+                .collect();
+            members.sort_unstable_by_key(|&(si, _)| si);
+            let (fam, kind) = if is_gauge(base) {
+                (format!("cabin_{base}"), "gauge")
+            } else {
+                (format!("cabin_{base}_total"), "counter")
+            };
+            out.push_str(&format!("# TYPE {fam} {kind}\n"));
+            for (si, v) in members {
+                out.push_str(&format!("{fam}{{shard=\"{si}\"}} {}\n", fmt_value(v)));
+            }
+            continue;
         }
         if is_gauge(name) {
             out.push_str(&format!("# TYPE cabin_{name} gauge\n"));
@@ -175,6 +216,44 @@ mod tests {
         assert!(text.contains("_bucket{le=\"0.001024\"} 2\n"));
         // the 30 s sample exceeds every finite edge but lands in +Inf
         assert!(text.contains("_bucket{le=\"16.777216\"} 4\n"));
+    }
+
+    #[test]
+    fn per_shard_families_render_with_labels() {
+        let flat = vec![
+            ("repl_lag_shard0".to_string(), 5.0),
+            ("repl_lag_shard10".to_string(), 2.0),
+            ("repl_lag_shard2".to_string(), 0.0),
+            ("executor_queue_hwm_shard1".to_string(), 7.0),
+            ("inserts".to_string(), 1.0),
+        ];
+        let text = render(&flat, &[]);
+        // one TYPE line per family; samples sorted numerically by shard
+        assert_eq!(text.matches("# TYPE cabin_repl_lag gauge\n").count(), 1);
+        let at = |s: &str| text.find(s).unwrap_or_else(|| panic!("missing {s:?} in:\n{text}"));
+        assert!(at("cabin_repl_lag{shard=\"0\"} 5\n") < at("cabin_repl_lag{shard=\"2\"} 0\n"));
+        assert!(at("cabin_repl_lag{shard=\"2\"} 0\n") < at("cabin_repl_lag{shard=\"10\"} 2\n"));
+        // the name-suffixed scalar spelling is gone from the exposition
+        assert!(!text.contains("cabin_repl_lag_shard0"));
+        // queue high-water is a point-in-time value, not a counter
+        assert!(text.contains("# TYPE cabin_executor_queue_hwm gauge\n"));
+        assert!(text.contains("cabin_executor_queue_hwm{shard=\"1\"} 7\n"));
+        assert!(!text.contains("executor_queue_hwm_total"));
+        // unlabeled scalars are untouched
+        assert!(text.contains("cabin_inserts_total 1\n"));
+    }
+
+    #[test]
+    fn shard_family_parsing_is_strict() {
+        assert_eq!(shard_family("repl_lag_shard3"), Some(("repl_lag", 3)));
+        assert_eq!(
+            shard_family("repl_visibility_age_ms_shard12"),
+            Some(("repl_visibility_age_ms", 12))
+        );
+        assert_eq!(shard_family("num_shards"), None);
+        assert_eq!(shard_family("repl_lag"), None);
+        assert_eq!(shard_family("_shard5"), None);
+        assert_eq!(shard_family("persist_wal_live_bytes"), None);
     }
 
     #[test]

@@ -21,7 +21,7 @@
 use super::{seq_field, ReplCounters, ReplicaConfig};
 use crate::coordinator::protocol::StreamRequest;
 use crate::coordinator::store::ShardedStore;
-use crate::obs::log as obs_log;
+use crate::obs::{journal, log as obs_log};
 use crate::persist::manifest::{snap_path, sync_dir, wal_path, Manifest};
 use crate::persist::wal::{scan_frames, WalRecord};
 use crate::persist::{snapshot, Fingerprint, FsyncPolicy};
@@ -59,6 +59,10 @@ const IO_TIMEOUT: Duration = Duration::from_secs(5);
 pub struct ReplClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Session trace id attached to every request this client sends
+    /// (0 = untraced). The serving side logs it, so one grep joins a
+    /// replication session across both nodes' logs.
+    trace: u64,
 }
 
 /// A `repl_snapshot` header: the primary's seq/epoch anchoring plus the
@@ -85,6 +89,10 @@ pub enum TailChunk {
         frames: u64,
         live_seq: u64,
         epoch: u64,
+        /// The primary's wall clock as the frames left it (0 from a
+        /// pre-`commit_ms` server) — the minuend of the follower's
+        /// `repl_visibility_lag` measurement.
+        commit_ms: u64,
     },
     /// The primary rotated past our position: only a fresh snapshot can
     /// re-seed this follower.
@@ -109,7 +117,17 @@ impl ReplClient {
         Ok(ReplClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
+            trace: 0,
         })
+    }
+
+    /// Attach a session trace id to every subsequent request (0 clears).
+    pub fn set_trace(&mut self, trace: u64) {
+        self.trace = trace;
+    }
+
+    fn opt_trace(&self) -> Option<u64> {
+        (self.trace != 0).then_some(self.trace)
     }
 
     /// Send one request line, read one header line.
@@ -150,7 +168,10 @@ impl ReplClient {
     /// Fetch the primary's newest snapshot header; the caller then
     /// drains `shard_bytes[i]` payload bytes per shard, in shard order.
     pub fn fetch_snapshot_meta(&mut self) -> Result<SnapshotMeta> {
-        let header = self.round_trip(&StreamRequest::ReplSnapshot.to_json_line())?;
+        let req = StreamRequest::ReplSnapshot {
+            trace: self.opt_trace(),
+        };
+        let header = self.round_trip(&req.to_json_line())?;
         if !header.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
             bail!(
                 "repl_snapshot refused: {}",
@@ -213,6 +234,7 @@ impl ReplClient {
             from_seq,
             max_bytes,
             epoch,
+            trace: self.opt_trace(),
         };
         let header = self.round_trip(&req.to_json_line())?;
         if !header.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
@@ -235,12 +257,17 @@ impl ReplClient {
             Some(_) => seq_field(&header, "epoch")?,
             None => 0,
         };
+        let commit_ms = match header.get("commit_ms") {
+            Some(_) => seq_field(&header, "commit_ms")?,
+            None => 0,
+        };
         let bytes = self.read_payload(header.req_usize("bytes")?)?;
         Ok(TailChunk::Frames {
             bytes,
             frames,
             live_seq,
             epoch,
+            commit_ms,
         })
     }
 }
@@ -306,6 +333,19 @@ pub fn bootstrap(primary: &str, expect: &Fingerprint, data_dir: &Path) -> Result
     }
     let mut client = ReplClient::connect(primary)
         .with_context(|| format!("connecting to replication primary {primary}"))?;
+    // bootstrap session trace: rides the snapshot request, so the
+    // primary's `snapshot_served` log line and this follower's
+    // `repl_bootstrap` line below join on one grep
+    let session_trace = crate::coordinator::server::now_ms();
+    client.set_trace(session_trace);
+    obs_log::info(
+        "replica",
+        "repl_bootstrap",
+        &[
+            ("primary", obs_log::V::s(primary.to_string())),
+            ("trace", obs_log::V::u(session_trace)),
+        ],
+    );
     let meta = client.fetch_snapshot_meta()?;
     meta.fingerprint
         .check(expect)
@@ -507,7 +547,8 @@ impl ReplicaRuntime {
         p.flush_all()
             .context("flushing applied frames before promotion; replica remains read-only")?;
         let seqs = (0..self.store.num_shards()).map(|si| p.committed_seq(si)).collect();
-        if !self.writable.load(Ordering::SeqCst) {
+        let first = !self.writable.load(Ordering::SeqCst);
+        if first {
             // the epoch lands durably BEFORE the first write can be
             // acked: the old primary's manifest tops out at the epoch
             // this follower adopted while pulling, so the bump makes
@@ -516,6 +557,11 @@ impl ReplicaRuntime {
                 .context("persisting the bumped failover epoch; replica remains read-only")?;
         }
         self.writable.store(true, Ordering::SeqCst);
+        if first {
+            // one canonical journal event per actual promotion (manual
+            // and auto both land here; the idempotent re-promote does not)
+            journal::record("replica", "promoted", &[("epoch", obs_log::V::u(p.epoch()))]);
+        }
         Ok((seqs, p.epoch()))
     }
 }
@@ -609,6 +655,14 @@ fn probe_loop(
                         ("error", obs_log::V::s(format!("{e:#}"))),
                     ],
                 );
+                journal::record(
+                    "failover",
+                    "probe_failed",
+                    &[
+                        ("consecutive", obs_log::V::u(consecutive as u64)),
+                        ("threshold", obs_log::V::u(cfg.probe_failures as u64)),
+                    ],
+                );
             }
         }
         if consecutive < cfg.probe_failures {
@@ -651,6 +705,14 @@ fn probe_loop(
                                     .join(","),
                             ),
                         ),
+                    ],
+                );
+                journal::record(
+                    "failover",
+                    "auto_promoted",
+                    &[
+                        ("epoch", obs_log::V::u(epoch)),
+                        ("probe_failures", obs_log::V::u(consecutive as u64)),
                     ],
                 );
                 return; // we are the primary now; nothing left to probe
@@ -709,9 +771,22 @@ fn puller_loop(
     let mut defers_by_shard = vec![0u32; num_shards];
     while !stop.load(Ordering::Relaxed) {
         let mut client = match ReplClient::connect(&cfg.primary) {
-            Ok(c) => {
+            Ok(mut c) => {
                 counters.connects.fetch_add(1, Ordering::Relaxed);
                 reconnect_wait = min_wait;
+                // session trace: rides every pull this session sends, so
+                // the primary's shipper logs carry an id greppable in
+                // this follower's own log line below
+                let session_trace = crate::coordinator::server::now_ms();
+                c.set_trace(session_trace);
+                obs_log::info(
+                    "replica",
+                    "repl_session",
+                    &[
+                        ("primary", obs_log::V::s(cfg.primary.clone())),
+                        ("trace", obs_log::V::u(session_trace)),
+                    ],
+                );
                 c
             }
             Err(_) => {
@@ -735,11 +810,20 @@ fn puller_loop(
                         frames,
                         live_seq,
                         epoch,
+                        commit_ms,
                     }) => {
                         // adopt the primary's (strictly newer) failover
                         // epoch durably, so our own later promotion
                         // provably exceeds every term the primary acked
                         if epoch > p.epoch() {
+                            journal::record(
+                                "replica",
+                                "epoch_observed",
+                                &[
+                                    ("own_epoch", obs_log::V::u(p.epoch())),
+                                    ("primary_epoch", obs_log::V::u(epoch)),
+                                ],
+                            );
                             if let Err(e) = p.set_epoch(epoch) {
                                 obs_log::warn(
                                     "replica",
@@ -812,6 +896,16 @@ fn puller_loop(
                                             counters.frames_applied.fetch_add(n, Ordering::Relaxed);
                                             let b = valid.len() as u64;
                                             counters.bytes_applied.fetch_add(b, Ordering::Relaxed);
+                                            // wall-clock visibility lag:
+                                            // apply time minus the
+                                            // primary's commit_ms stamp
+                                            // (clock skew and all — that
+                                            // is the operator's question)
+                                            if commit_ms > 0 {
+                                                let age_ms = crate::coordinator::server::now_ms()
+                                                    .saturating_sub(commit_ms);
+                                                counters.record_visibility(shard, age_ms);
+                                            }
                                             progressed = true;
                                         }
                                         Err(e) => {
@@ -863,6 +957,11 @@ fn puller_loop(
                     Ok(TailChunk::Diverged { message }) => {
                         counters.diverged.store(1, Ordering::Relaxed);
                         counters.caught_up.store(0, Ordering::Relaxed);
+                        journal::record(
+                            "replica",
+                            "diverged",
+                            &[("shard", obs_log::V::u(shard as u64))],
+                        );
                         obs_log::error(
                             "replica",
                             "diverged",

@@ -257,8 +257,18 @@ pub struct ReplCounters {
     /// Follower side gauge: 1 while the last full sweep found every shard
     /// at zero lag.
     pub caught_up: AtomicU64,
+    /// Follower side: wall-clock visibility lag — apply time minus the
+    /// primary's `commit_ms` tail-header stamp, recorded per applied
+    /// chunk. Frame-count lag says how far behind the follower is in
+    /// *work*; this says how stale its reads are in *time*, which is the
+    /// question `--max-read-staleness-ms` budgets answer to.
+    pub visibility_lag: crate::obs::ObsHistogram,
     /// Per-shard `(applied_seq, lag)` gauges, sized on first update.
     per_shard: Mutex<Vec<(u64, u64)>>,
+    /// Per-shard last-observed visibility age in ms (gauge), sized on
+    /// first update — the labeled `repl_visibility_age_ms` Prometheus
+    /// family.
+    per_shard_age_ms: Mutex<Vec<u64>>,
 }
 
 fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
@@ -273,6 +283,18 @@ impl ReplCounters {
             g.resize(shard + 1, (0, 0));
         }
         g[shard] = (applied_seq, lag);
+    }
+
+    /// Record one applied chunk's wall-clock visibility age (follower
+    /// side): into the `repl_visibility_lag` histogram and shard `i`'s
+    /// last-observed age gauge.
+    pub fn record_visibility(&self, shard: usize, age_ms: u64) {
+        self.visibility_lag.record_us(age_ms.saturating_mul(1_000));
+        let mut g = lock_recover(&self.per_shard_age_ms);
+        if g.len() <= shard {
+            g.resize(shard + 1, 0);
+        }
+        g[shard] = age_ms;
     }
 
     /// Flat `repl_*` stats fields, merged into the `stats` response by
@@ -323,10 +345,25 @@ impl ReplCounters {
                 "repl_caught_up".into(),
                 self.caught_up.load(Ordering::Relaxed) as f64,
             ),
+            (
+                "repl_visibility_lag_count".into(),
+                self.visibility_lag.count() as f64,
+            ),
+            (
+                "repl_visibility_lag_p50_ms".into(),
+                self.visibility_lag.quantile(0.50) * 1e3,
+            ),
+            (
+                "repl_visibility_lag_p99_ms".into(),
+                self.visibility_lag.quantile(0.99) * 1e3,
+            ),
         ];
         for (si, (applied, lag)) in lock_recover(&self.per_shard).iter().enumerate() {
             out.push((format!("repl_applied_seq_shard{si}"), *applied as f64));
             out.push((format!("repl_lag_shard{si}"), *lag as f64));
+        }
+        for (si, age) in lock_recover(&self.per_shard_age_ms).iter().enumerate() {
+            out.push((format!("repl_visibility_age_ms_shard{si}"), *age as f64));
         }
         out
     }

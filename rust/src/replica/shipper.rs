@@ -28,7 +28,12 @@
 //! that its own `promote` provably exceeds the primary's term, and the
 //! server routing these ops fences itself when a *request* names a
 //! higher epoch than its own (epoch checks live in
-//! `coordinator::server`, which owns the fence state).
+//! `coordinator::server`, which owns the fence state). Tail headers
+//! additionally stamp `commit_ms` — the primary's wall clock at serve
+//! time — which the follower subtracts from its own apply time to get
+//! the wall-clock visibility lag (`repl_visibility_lag`). Requests may
+//! carry the follower's session `trace` id, logged on the serving side
+//! so one grep correlates a pull across both nodes.
 //!
 //! Tail-offset cache: serving a tail means translating a frame index
 //! into a byte offset inside a variable-length-frame file. Instead of
@@ -43,6 +48,7 @@
 
 use super::ReplCounters;
 use crate::coordinator::store::ShardedStore;
+use crate::obs::log as obs_log;
 use crate::persist::manifest::{snap_path, wal_path};
 use crate::persist::wal::read_wal_tail;
 use crate::persist::Persistence;
@@ -260,11 +266,17 @@ fn persistence_for<'a, W: Write>(
 pub fn serve_snapshot<W: Write>(
     store: &ShardedStore,
     counters: &ReplCounters,
+    trace: u64,
     writer: &mut W,
 ) -> std::io::Result<()> {
     let Some(p) = persistence_for(store, writer)? else {
         return Ok(());
     };
+    if trace != 0 {
+        // the follower's session trace id rode the request: one grep for
+        // it now finds the bootstrap on both sides of the wire
+        obs_log::info("shipper", "snapshot_served", &[("trace", obs_log::V::u(trace))]);
+    }
     match snapshot_stream(p) {
         Ok(mut stream) => {
             let fp = p.fingerprint();
@@ -316,6 +328,7 @@ pub fn serve_wal_tail<W: Write>(
     shard: usize,
     from_seq: u64,
     max_bytes: usize,
+    trace: u64,
     writer: &mut W,
 ) -> std::io::Result<()> {
     let Some(p) = persistence_for(store, writer)? else {
@@ -328,6 +341,24 @@ pub fn serve_wal_tail<W: Write>(
             bytes,
             live_seq,
         }) => {
+            if trace != 0 && frames > 0 {
+                // steady-state polls are frequent: log traced pulls only
+                // when they actually ship frames, and at debug
+                obs_log::debug(
+                    "shipper",
+                    "tail_served",
+                    &[
+                        ("trace", obs_log::V::u(trace)),
+                        ("shard", obs_log::V::u(shard as u64)),
+                        ("frames", obs_log::V::u(frames)),
+                    ],
+                );
+            }
+            // `commit_ms`: the primary's wall clock as these frames leave
+            // for the follower — the minuend of the follower's
+            // `repl_visibility_lag` (apply-time − commit-time). Stamped
+            // here, not in the WAL, so the frame format is unchanged and
+            // the lag measures the full ship→apply pipeline.
             let header = Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("shard", Json::Num(shard as f64)),
@@ -336,6 +367,10 @@ pub fn serve_wal_tail<W: Write>(
                 ("bytes", Json::Num(bytes.len() as f64)),
                 ("live_seq", Json::Str(live_seq.to_string())),
                 ("epoch", Json::Str(p.epoch().to_string())),
+                (
+                    "commit_ms",
+                    Json::Str(crate::coordinator::server::now_ms().to_string()),
+                ),
             ]);
             writeln!(writer, "{header}")?;
             // chaos site: a torn frame transfer — ship half the

@@ -26,6 +26,11 @@
 //!    slowly — is never promoted over.
 //! 4. **Kill -9 + auto-promote**: hard-kill the primary; the follower
 //!    self-promotes losing no acknowledged insert.
+//!
+//! Failover timelines are additionally asserted from each node's
+//! flight-recorder journal (the `events` wire op): probe failures must
+//! hold strictly smaller journal seqs than the promotion they caused,
+//! and a fenced ex-primary's journal holds its `fence_raised` event.
 
 use cabin::coordinator::client::{Client, MultiClient};
 use cabin::data::CatVector;
@@ -149,6 +154,17 @@ fn assert_serves_exactly(c: &mut Client, acked: &[(usize, CatVector)]) {
     }
 }
 
+/// Journal timeline helper: the `seq` of the first event named `event`
+/// in a `Client::events` dump, if any. Each server process has its own
+/// journal, so chaos timelines are deterministic per node.
+fn event_seq(dump: &str, event: &str) -> Option<u64> {
+    let needle = format!("\"event\":\"{event}\"");
+    dump.lines().find(|l| l.contains(&needle)).and_then(|l| {
+        let obj = cabin::util::json::parse(l).ok()?;
+        obj.get("seq")?.as_f64().map(|v| v as u64)
+    })
+}
+
 /// Poll one stats field until `pred` holds (chaos-scale 60 s deadline).
 fn wait_stat(c: &mut Client, field: &str, pred: impl Fn(f64) -> bool, what: &str) {
     let deadline = Instant::now() + Duration::from_secs(60);
@@ -224,6 +240,18 @@ fn split_brain_partition_promotes_fences_and_rejoins() {
     assert_eq!(fc.stat("failover_promotions").unwrap(), 1.0);
     assert!(fc.stat("failover_probe_failures").unwrap() >= 3.0);
 
+    // FLIGHT RECORDER: the promoted follower's journal tells the story
+    // in causal order — probes failed strictly before the auto-promote
+    let dump = fc.events().expect("events dump");
+    let first_fail =
+        event_seq(&dump, "probe_failed").expect("probe_failed missing from journal");
+    let promoted =
+        event_seq(&dump, "auto_promoted").expect("auto_promoted missing from journal");
+    assert!(
+        first_fail < promoted,
+        "journal out of order: probe_failed seq {first_fail} !< auto_promoted seq {promoted}"
+    );
+
     // the new primary acks writes, continuing the id line
     let next = vectors(13, 3);
     for v in &next {
@@ -242,6 +270,12 @@ fn split_brain_partition_promotes_fences_and_rejoins() {
     assert!(err.contains("epoch 2"), "{err}");
     assert_eq!(pc2.stat("failover_fenced").unwrap(), 2.0);
     assert_eq!(pc2.stat("failover_fence_events").unwrap(), 1.0);
+    // and its own flight recorder holds the fence event for post-mortems
+    let dump = pc2.events().expect("events dump");
+    assert!(
+        event_seq(&dump, "fence_raised").is_some(),
+        "fence_raised missing from the old primary's journal:\n{dump}"
+    );
 
     // REJOIN: restart the fenced ex-primary as a follower of the new
     // primary — the fence clears, the epoch is adopted from the stream,
@@ -356,6 +390,19 @@ fn kill9_primary_auto_promotes_losing_no_acked_insert() {
     wait_stat(&mut fc, "repl_role", |v| v == 2.0, "auto-promote after kill -9");
     assert_eq!(fc.stat("repl_epoch").unwrap(), 2.0);
     assert_eq!(fc.stat("failover_promotions").unwrap(), 1.0);
+    // the survivor's journal must reconstruct the failover: at least the
+    // configured 3 probe failures, all strictly before the promotion
+    let dump = fc.events().expect("events dump");
+    let fails = dump.matches("\"event\":\"probe_failed\"").count();
+    assert!(fails >= 3, "expected ≥3 probe_failed journal events, saw {fails}");
+    let first_fail =
+        event_seq(&dump, "probe_failed").expect("probe_failed missing from journal");
+    let promoted =
+        event_seq(&dump, "auto_promoted").expect("auto_promoted missing from journal");
+    assert!(
+        first_fail < promoted,
+        "journal out of order: probe_failed seq {first_fail} !< auto_promoted seq {promoted}"
+    );
     // LOSES NOTHING: every insert the dead primary acked answers exactly
     assert_serves_exactly(&mut fc, &acked);
     // and the id line continues on the survivor

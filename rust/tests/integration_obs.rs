@@ -214,3 +214,69 @@ fn metrics_text_exposes_lintable_prometheus_families() {
     assert!(again.contains("cabin_inserts_total"));
     client.ping().unwrap();
 }
+
+#[test]
+fn events_dump_reports_lifecycle_journal() {
+    let dir = TempDir::new("obs-events");
+    let (addr, _coordinator) = serve(config(&dir));
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    let events = client.events().unwrap();
+    // The journal is process-global, so alongside this server's startup
+    // event there may be events from concurrently running tests — assert
+    // shape, not exact content.
+    assert!(
+        events.lines().any(|l| l.contains("\"event\":\"startup\"")),
+        "startup event missing from journal:\n{events}"
+    );
+    for line in events.lines() {
+        let obj = cabin::util::json::parse(line)
+            .unwrap_or_else(|e| panic!("journal line is not JSON ({e}): {line}"));
+        assert!(obj.get("seq").is_some(), "journal line missing seq: {line}");
+        assert!(obj.get("ts_ms").is_some(), "journal line missing ts_ms: {line}");
+        obj.req_str("component").unwrap();
+        obj.req_str("event").unwrap();
+    }
+    // Repeat dumps stay framed on one connection; ordinary ops still work.
+    let again = client.events().unwrap();
+    assert!(again.contains("\"event\":\"startup\""));
+    client.ping().unwrap();
+}
+
+#[test]
+fn stalled_executor_job_surfaces_as_traced_slow_op() {
+    const TRACE: u64 = 777_000_111;
+    let dir = TempDir::new("obs-slowop");
+    let mut cfg = config(&dir);
+    cfg.slow_op_ms = 10;
+    let (addr, _coordinator) = serve(cfg);
+    let mut client = Client::connect(&addr.to_string())
+        .unwrap()
+        .with_trace(TRACE);
+    drive(&mut client, 8, 0);
+    let mut rng = Xoshiro256::new(77);
+    // The slow-op threshold and the failpoint registry are both
+    // process-global: a concurrently constructed coordinator resets the
+    // threshold, and another test's query can consume the armed sleeps.
+    // Reassert both and retry instead of flaking.
+    let mut found = false;
+    for _ in 0..10 {
+        cabin::obs::set_slow_op_ms(10);
+        // both shard submits sleep 20 ms → the query breaches 10 ms
+        cabin::fault::arm("executor_submit", "sleep:20:2").unwrap();
+        client
+            .query(CatVector::random(DIM, 24, CATS, &mut rng), 3)
+            .unwrap();
+        let events = client.events().unwrap();
+        if events.lines().any(|l| {
+            l.contains("\"event\":\"slow_op\"") && l.contains(&format!("\"trace\":{TRACE}"))
+        }) {
+            found = true;
+            break;
+        }
+    }
+    cabin::fault::disarm("executor_submit");
+    assert!(
+        found,
+        "stalled query never surfaced as a slow_op journal event with trace {TRACE}"
+    );
+}

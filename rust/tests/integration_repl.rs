@@ -120,6 +120,13 @@ fn follower_bootstraps_catches_up_and_serves_identical_reads() {
     assert_eq!(fc.stat("repl_diverged").unwrap(), 0.0);
     assert!(pc.stat("repl_frames_shipped").unwrap() >= 20.0);
     assert!(pc.stat("repl_snapshots_served").unwrap() >= 1.0);
+    // wall-clock visibility lag: every tail-applied frame batch carries
+    // the primary's commit_ms stamp, so the follower has recorded lag
+    // samples and per-shard apply-age gauges by parity time
+    assert!(fc.stat("repl_visibility_lag_count").unwrap() >= 1.0);
+    assert!(fc.stat("repl_visibility_lag_p99_ms").unwrap() >= 0.0);
+    assert!(fc.stat("repl_visibility_age_ms_shard0").unwrap() >= 0.0);
+    assert!(fc.stat("repl_visibility_age_ms_shard1").unwrap() >= 0.0);
     // batched reads are bit-identical to the primary's
     let probes: Vec<CatVector> = pts[..8].to_vec();
     let from_primary = pc.query_batch(probes.clone(), 5).unwrap();

@@ -15,6 +15,8 @@
 //!   named field must equal the value (the string-keyed stats read)
 //! - `<<metrics` — a framed stream reply: header `{"bytes":N,"ok":true}`
 //!   (exactly those keys), then `N` bytes of Prometheus text
+//! - `<<events` — the same framing, `N` bytes of flight-recorder JSONL;
+//!   the journal is process-global so only the envelope shape is pinned
 //!
 //! The fixture files are the compat contract for the wire surface —
 //! `tools/api_surface.py` fails CI when they change without
@@ -137,6 +139,46 @@ fn expect_metrics(conn: &mut Conn, ctx: &str) {
     );
 }
 
+/// `<<events`: framed header + exactly `bytes` of flight-recorder JSONL.
+/// Journal content is process-global (other tests in this binary may have
+/// recorded events), so each line is shape-checked against the journal
+/// envelope rather than compared byte-for-byte.
+fn expect_events(conn: &mut Conn, ctx: &str) {
+    let header = conn.read_reply(ctx);
+    let obj = parse_reply(&header, ctx);
+    match &obj {
+        Json::Obj(m) => assert_eq!(
+            m.keys().map(|k| k.as_str()).collect::<Vec<_>>(),
+            ["bytes", "ok"],
+            "{ctx}: header {header:?}"
+        ),
+        other => panic!("{ctx}: header {other:?}"),
+    }
+    let ok = obj.get("ok").and_then(|v| v.as_bool());
+    assert_eq!(ok, Some(true), "{ctx}: {header:?}");
+    let bytes = obj.get("bytes").and_then(|v| v.as_usize()).unwrap();
+    assert!(bytes > 0, "{ctx}: empty journal payload");
+    let mut payload = vec![0u8; bytes];
+    conn.reader
+        .read_exact(&mut payload)
+        .unwrap_or_else(|e| panic!("{ctx}: short payload: {e}"));
+    let text = String::from_utf8(payload).unwrap();
+    assert!(text.ends_with('\n'), "{ctx}: payload must end in a newline");
+    for line in text.lines() {
+        let ev = parse_reply(line, ctx);
+        for key in ["seq", "ts_ms", "component", "event"] {
+            assert!(
+                ev.get(key).is_some(),
+                "{ctx}: journal line missing {key:?}: {line}"
+            );
+        }
+    }
+    assert!(
+        text.lines().any(|l| l.contains("\"event\":\"startup\"")),
+        "{ctx}: no startup event in journal dump"
+    );
+}
+
 /// `<<stats n=v ...`: string-keyed lookups into a flat `ok:true` object.
 fn expect_stats(conn: &mut Conn, spec: &str, ctx: &str) {
     let reply = conn.read_reply(ctx);
@@ -191,6 +233,8 @@ fn replay(path: &Path) {
             expect_stats(&mut conn, spec, &ctx);
         } else if line == "<<metrics" {
             expect_metrics(&mut conn, &ctx);
+        } else if line == "<<events" {
+            expect_events(&mut conn, &ctx);
         } else {
             panic!("{ctx}: unknown directive {line:?}");
         }
@@ -211,7 +255,7 @@ fn replay_protocol_fixtures() {
         .collect();
     files.sort();
     assert!(
-        files.len() >= 4,
+        files.len() >= 5,
         "protocol-fixtures/ lost scenarios: {files:?}"
     );
     for file in &files {

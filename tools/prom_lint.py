@@ -14,6 +14,11 @@ Checks, per file:
     ``x_count`` samples belong to the base family ``x`` when ``x`` is
     declared a histogram);
   * counter sample names end in ``_total``;
+  * label blocks parse in full under the label grammar
+    ``name="value"(,name="value")*`` (label names ``[a-zA-Z_][a-zA-Z0-9_]*``,
+    values with ``\\``-escapes), label names within one sample are unique
+    and sorted, and no two samples share the same (name, labelset) —
+    the labeled-family invariants behind ``cabin_repl_lag{shard="3"}``;
   * histogram families expose ``_bucket`` samples with non-decreasing
     cumulative counts in ``le`` order, include an ``le="+Inf"`` bucket,
     and that bucket equals the family's ``_count``; ``_sum`` and
@@ -34,6 +39,26 @@ SAMPLE_RE = re.compile(
 )
 TYPE_RE = re.compile(r"^# TYPE (?P<name>\S+) (?P<kind>\S+)\s*$")
 LE_RE = re.compile(r'le="(?P<le>[^"]+)"')
+# One label pair; values may contain backslash escapes (\" \\ \n).
+LABEL_PAIR_RE = re.compile(r'(?P<name>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<value>(?:[^"\\]|\\.)*)"')
+LABELS_RE = re.compile(
+    r'^[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'
+    r'(?:,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*")*,?$'
+)
+
+
+def parse_labels(raw):
+    """Parse a label block body into ordered (name, value) pairs.
+
+    Returns None when the block does not full-match the label grammar —
+    a partial regex hit (e.g. a malformed pair hiding between valid
+    ones) must fail the sample, not silently drop labels.
+    """
+    if raw is None or raw == "":
+        return []
+    if not LABELS_RE.match(raw):
+        return None
+    return [(m.group("name"), m.group("value")) for m in LABEL_PAIR_RE.finditer(raw)]
 
 
 def parse_le(raw):
@@ -93,6 +118,7 @@ def lint_file(path):
     buckets = {}           # family -> list of (le, value, lineno)
     sums = {}              # family -> value
     counts = {}            # family -> (value, lineno)
+    seen_series = {}       # (name, labelset) -> lineno of first sample
     for lineno, line in enumerate(lines, 1):
         if not line.strip():
             continue
@@ -115,6 +141,20 @@ def lint_file(path):
         except ValueError:
             err(lineno, f"bad sample value {m.group('value')!r} for {name}")
             continue
+        labels = parse_labels(m.group("labels"))
+        if labels is None:
+            err(lineno, f"bad label block on {name}: {m.group('labels')!r}")
+            continue
+        label_names = [ln for ln, _ in labels]
+        if len(set(label_names)) != len(label_names):
+            err(lineno, f"duplicate label name on {name}: {label_names}")
+        elif label_names != sorted(label_names):
+            err(lineno, f"label names on {name} not sorted: {label_names}")
+        series_key = (name, tuple(sorted(labels)))
+        dup = seen_series.setdefault(series_key, lineno)
+        if dup != lineno:
+            err(lineno, f"duplicate series {name}{dict(labels)} "
+                        f"(first at line {dup})")
         family = base_family(name, types)
         first_sample_at.setdefault(family, lineno)
         kind = types.get(family)
